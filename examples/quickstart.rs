@@ -1,0 +1,77 @@
+//! Quickstart: the paper's core object in five steps.
+//!
+//! 1. Build a `(k,l)`-partition diagram.
+//! 2. `Factor` it (Algorithm 1 step 1) and look at the planar layout.
+//! 3. Multiply a tensor by its spanning matrix — fast vs naïve.
+//! 4. Assemble an equivariant layer from the full spanning set.
+//! 5. Check equivariance under a random permutation.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use equidiag::diagram::{factor, Diagram};
+use equidiag::fastmult::{matrix_mult, Group};
+use equidiag::functor::naive_apply;
+use equidiag::groups;
+use equidiag::layer::{EquivariantLinear, Init};
+use equidiag::tensor::Tensor;
+use equidiag::util::Rng;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A (5,4)-partition diagram in the spirit of the paper's Figure 1.
+    let d = Diagram::from_blocks(
+        4,
+        5,
+        vec![vec![0], vec![1, 3], vec![2, 6, 7], vec![4, 5, 8]],
+    )?;
+    println!("diagram:        {d}");
+
+    // 2. Factor = σ_l ∘ planar ∘ σ_k.
+    let f = factor(&d);
+    println!("planar middle:  {}", f.planar);
+    println!(
+        "layout: {} top blocks, {} cross, {} bottom (sizes {:?})",
+        f.layout.t(),
+        f.layout.d(),
+        f.layout.b(),
+        f.layout.bottom_blocks
+    );
+
+    // 3. Fast vs naïve multiplication.
+    let n = 6;
+    let mut rng = Rng::new(1);
+    let v = Tensor::random(n, 5, &mut rng);
+    let t0 = Instant::now();
+    let fast = matrix_mult(Group::Symmetric, &d, &v)?;
+    let t_fast = t0.elapsed();
+    let t0 = Instant::now();
+    let slow = naive_apply(Group::Symmetric, &d, &v)?;
+    let t_slow = t0.elapsed();
+    println!(
+        "fast {:?} vs naive {:?}  (agree to {:.2e})",
+        t_fast,
+        t_slow,
+        fast.max_abs_diff(&slow)
+    );
+
+    // 4. A full equivariant layer (R^n)^{⊗2} -> (R^n)^{⊗2}: 15 diagrams.
+    let layer = EquivariantLinear::new(Group::Symmetric, n, 2, 2, Init::ScaledNormal, &mut rng)?;
+    println!(
+        "layer: {} spanning diagrams, {} parameters",
+        layer.diagrams().count(),
+        layer.num_params()
+    );
+
+    // 5. Equivariance under a random permutation.
+    let x = Tensor::random(n, 2, &mut rng);
+    let g = groups::sample(Group::Symmetric, n, &mut rng)?;
+    let lhs = layer.forward(&groups::rho(&g, &x))?;
+    let rhs = groups::rho(&g, &layer.forward(&x)?);
+    println!(
+        "equivariance:   |W(g·x) - g·W(x)| = {:.2e}",
+        lhs.max_abs_diff(&rhs)
+    );
+    assert!(lhs.allclose(&rhs, 1e-8));
+    println!("quickstart OK");
+    Ok(())
+}

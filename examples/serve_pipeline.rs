@@ -1,0 +1,114 @@
+//! The serving pipeline end to end: native diagram layers AND the
+//! AOT-compiled JAX/Pallas artifact behind one batching coordinator, driven
+//! by concurrent clients, with latency/throughput metrics.
+//!
+//! Requires `make artifacts` for the HLO route (skipped gracefully if
+//! absent). Run: `cargo run --release --example serve_pipeline`
+
+use equidiag::config::ServerConfig;
+use equidiag::coordinator::{Coordinator, ModelKind};
+use equidiag::fastmult::Group;
+use equidiag::layer::Init;
+use equidiag::nn::{Activation, EquivariantNet};
+use equidiag::runtime::HloService;
+use equidiag::tensor::Tensor;
+use equidiag::util::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let n = 8;
+    let mut rng = Rng::new(99);
+    println!("== equidiag serving pipeline ==");
+
+    // Native route: a 2-layer S_n-equivariant network on order-2 tensors.
+    let net = EquivariantNet::new(
+        Group::Symmetric,
+        n,
+        &[2, 2],
+        Activation::Relu,
+        Init::ScaledNormal,
+        &mut rng,
+    )?;
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 4,
+        max_batch: 16,
+        batch_window: Duration::from_micros(200),
+        queue_capacity: 2048,
+    });
+    coord.register("diagram-net", ModelKind::net(net));
+
+    // PJRT route: the AOT pallas pair-trace kernel, if built.
+    let have_hlo = std::path::Path::new("artifacts/pair_trace.hlo.txt").exists();
+    let hlo_service = if have_hlo {
+        let svc = HloService::spawn("artifacts/pair_trace.hlo.txt")?;
+        println!("PJRT route up: artifact '{}'", svc.name());
+        Some(svc)
+    } else {
+        println!("(artifacts missing — run `make artifacts` to add the PJRT route)");
+        None
+    };
+
+    let handle = Arc::new(coord.start());
+
+    // Concurrent clients hammer the native route.
+    let clients = 4;
+    let per_client = 250;
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + c as u64);
+            for _ in 0..per_client {
+                let v = Tensor::random(n, 2, &mut rng);
+                h.infer("diagram-net", v).expect("inference failed");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall = t0.elapsed();
+    let total = clients * per_client;
+    let snap = handle.metrics();
+    println!(
+        "\nnative route: {total} requests in {:.2?}  ({:.0} req/s)",
+        wall,
+        total as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "  batches {}  mean batch {:.2}  mean latency {:.0} us  max {:.0} us",
+        snap.batches,
+        snap.mean_batch_size,
+        snap.mean_latency_s * 1e6,
+        snap.max_latency_s * 1e6
+    );
+
+    // PJRT route: direct batched executions of the pallas kernel.
+    if let Some(svc) = hlo_service {
+        let batch = 4usize;
+        let reps = 200;
+        let t0 = Instant::now();
+        for r in 0..reps {
+            let data = vec![r as f32 * 0.01; batch * n * n];
+            let outs = svc.run_f32(vec![(data, vec![batch, n, n])])?;
+            assert_eq!(outs[0].len(), batch);
+        }
+        let wall = t0.elapsed();
+        println!(
+            "PJRT route: {} kernel executions ({} matrices) in {:.2?}  ({:.0} exec/s)",
+            reps,
+            reps * batch,
+            wall,
+            reps as f64 / wall.as_secs_f64()
+        );
+    }
+
+    match Arc::try_unwrap(handle) {
+        Ok(h) => h.shutdown(),
+        Err(_) => unreachable!("all clients joined"),
+    }
+    println!("serve_pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,2 @@
+"""Build-time compile package: L2 jax model + L1 pallas kernels + AOT
+lowering. Never imported at serving time — rust loads the HLO artifacts."""

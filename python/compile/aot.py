@@ -1,0 +1,122 @@
+"""AOT lowering: jax → HLO **text** artifacts the rust runtime loads.
+
+Usage (normally via ``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts/model.hlo.txt
+
+Emits:
+
+- ``model.hlo.txt``       — the 2-layer S_n-equivariant model,
+  signature ``(flat_params[34], x[B, N, N]) → (y[B, N, N],)``.
+- ``pair_trace.hlo.txt``  — the standalone L1 contraction kernel,
+  ``(x[B, N, N],) → (y[B],)`` (the coordinator can serve it directly).
+- ``manifest.txt``        — shapes/dtypes of each artifact, for humans.
+
+HLO *text* is the interchange format, not ``lowered.compiler_ir("hlo")
+.as_serialized_hlo_module_proto()``: jax ≥ 0.5 emits protos with 64-bit
+instruction ids which the runtime's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels import planar
+
+# Artifact-level static shapes: the rust coordinator compiles one executable
+# per (batch, n) variant; these are the defaults `make artifacts` builds.
+DEFAULT_N = 8
+DEFAULT_BATCH = 4
+NUM_FLAT_PARAMS = 34  # 2 layers x (15 lambdas + 2 biases)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(batch: int, n: int) -> str:
+    """Lower the 2-layer equivariant model with a flat parameter vector."""
+
+    def fn(flat_params, x):
+        return (model_mod.model_flat(flat_params, x),)
+
+    params_spec = jax.ShapeDtypeStruct((NUM_FLAT_PARAMS,), jnp.float32)
+    x_spec = jax.ShapeDtypeStruct((batch, n, n), jnp.float32)
+    lowered = jax.jit(fn).lower(params_spec, x_spec)
+    return to_hlo_text(lowered)
+
+
+def lower_pair_trace(batch: int, n: int) -> str:
+    """Lower the standalone pair-trace kernel."""
+
+    def fn(x):
+        return (planar.pair_trace(x),)
+
+    x_spec = jax.ShapeDtypeStruct((batch, n, n), jnp.float32)
+    lowered = jax.jit(fn).lower(x_spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    ap.add_argument("--n", type=int, default=DEFAULT_N)
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    model_text = lower_model(args.batch, args.n)
+    with open(args.out, "w") as f:
+        f.write(model_text)
+    print(f"wrote {len(model_text)} chars to {args.out}")
+
+    pt_path = os.path.join(out_dir, "pair_trace.hlo.txt")
+    pt_text = lower_pair_trace(args.batch, args.n)
+    with open(pt_path, "w") as f:
+        f.write(pt_text)
+    print(f"wrote {len(pt_text)} chars to {pt_path}")
+
+    # Numeric check fixture for the rust integration test: deterministic
+    # params/input and the jax-computed expected output, whitespace-
+    # separated floats (params / input / output, one line each).
+    check_path = os.path.join(out_dir, "model_check.txt")
+    key = jax.random.PRNGKey(2024)
+    flat = jax.random.normal(key, (NUM_FLAT_PARAMS,), dtype=jnp.float32)
+    x = jax.random.normal(
+        jax.random.fold_in(key, 1), (args.batch, args.n, args.n), jnp.float32
+    )
+    y = model_mod.model_flat(flat, x)
+    with open(check_path, "w") as f:
+        for arr in (flat, x, y):
+            f.write(" ".join(repr(float(v)) for v in jnp.ravel(arr)) + "\n")
+    print(f"wrote {check_path}")
+
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write(
+            "equidiag AOT artifacts\n"
+            f"model.hlo.txt:      (flat_params[{NUM_FLAT_PARAMS}] f32, "
+            f"x[{args.batch},{args.n},{args.n}] f32) -> (y[{args.batch},{args.n},{args.n}] f32,)\n"
+            f"pair_trace.hlo.txt: (x[{args.batch},{args.n},{args.n}] f32,) "
+            f"-> (y[{args.batch}] f32,)\n"
+        )
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (``planar``) and their pure-jnp oracles (``ref``)."""
+
+from . import planar, ref  # noqa: F401

@@ -1,0 +1,193 @@
+"""L1 Pallas kernels for the PlanarMult hot spots (build-time only).
+
+Each kernel is one of the indecomposable operations Algorithm 1 factors a
+spanning-diagram matvec into (paper §5.2):
+
+- ``pair_trace``       — S_n/O(n)/SO(n) Step 1: trace the two trailing axes
+                         (eq. 122), ``out[b] = Σ_j x[b, j, j]``.
+- ``diag_contract``    — S_n Step 1 general block (eq. 98):
+                         ``out[b] = Σ_j x[b, j, j, …, j]``.
+- ``eps_pair_trace``   — Sp(n) Step 1 (eq. 138): ε-weighted trace with the
+                         interleaved symplectic form.
+- ``diag_extract``     — S_n Step 2 transfer (eq. 101): read the diagonal,
+                         ``out[b, j] = x[b, j, j]``.
+- ``diag_embed``       — S_n/O(n) Step 3 copy (eq. 103/125): write onto the
+                         diagonal, ``out[b, i, j] = δ_ij x[b, i]``.
+
+All kernels run under ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see DESIGN.md
+§Hardware-Adaptation for the VMEM/BlockSpec schedule on actual TPUs).
+
+TPU adaptation notes: these are bandwidth-bound VPU ops, not MXU matmuls.
+The batch axis ``b`` is the natural BlockSpec grid dimension; each grid step
+pulls one ``(TILE_B, n, n)`` (or ``(TILE_B, n^m)``) slab HBM→VMEM, reduces
+it in-register, and writes ``TILE_B`` outputs — the input is read exactly
+once, which is precisely the paper's claim that the fast path touches each
+of the ``n^k`` inputs O(1) times instead of ``n^l`` times.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch-axis tile: one grid step processes TILE_B batch rows.
+TILE_B = 8
+
+
+def _grid_for(batch: int) -> tuple[int, int]:
+    """Pick (tile, grid) so tile * grid == padded batch."""
+    tile = min(TILE_B, batch)
+    grid = (batch + tile - 1) // tile
+    return tile, grid
+
+
+# ---------------------------------------------------------------------------
+# pair_trace: (B, n, n) -> (B,)
+# ---------------------------------------------------------------------------
+
+
+def _pair_trace_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (tile, n, n)
+    n = x.shape[-1]
+    eye = jnp.eye(n, dtype=x.dtype)
+    o_ref[...] = jnp.sum(x * eye[None, :, :], axis=(1, 2))
+
+
+def pair_trace(x: jax.Array) -> jax.Array:
+    """O(n)/S_n pair contraction: ``out[b] = Σ_j x[b, j, j]``."""
+    batch, n, n2 = x.shape
+    assert n == n2, "pair_trace expects trailing square axes"
+    tile, grid = _grid_for(batch)
+    return pl.pallas_call(
+        _pair_trace_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch,), x.dtype),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile, n, n), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        interpret=True,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# diag_contract: (B, n^m as m axes) -> (B,)
+# ---------------------------------------------------------------------------
+
+
+def _diag_contract_kernel(x_ref, o_ref, *, n: int, m: int):
+    x = x_ref[...]  # (tile, n^m) flattened trailing block
+    # Diagonal stride 1 + n + … + n^{m-1}.
+    stride = sum(n**a for a in range(m))
+    idx = jnp.arange(n) * stride
+    o_ref[...] = jnp.sum(x[:, idx], axis=1)
+
+
+def diag_contract(x: jax.Array, m: int) -> jax.Array:
+    """S_n bottom-block contraction over the trailing ``m`` axes
+    (``out[b] = Σ_j x[b, j, …, j]``). ``x`` has shape ``(B, n, …, n)``."""
+    batch = x.shape[0]
+    n = x.shape[1]
+    assert x.ndim == m + 1 and all(s == n for s in x.shape[1:])
+    flat = x.reshape(batch, n**m)
+    tile, grid = _grid_for(batch)
+    kernel = functools.partial(_diag_contract_kernel, n=n, m=m)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((batch,), x.dtype),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile, n**m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        interpret=True,
+    )(flat)
+
+
+# ---------------------------------------------------------------------------
+# eps_pair_trace: (B, n, n) -> (B,)   (n even)
+# ---------------------------------------------------------------------------
+
+
+def _eps_form(n: int, dtype) -> jax.Array:
+    """The interleaved symplectic form: ε[2i, 2i+1] = 1 = -ε[2i+1, 2i]."""
+    eps = jnp.zeros((n, n), dtype=dtype)
+    i = jnp.arange(n // 2)
+    eps = eps.at[2 * i, 2 * i + 1].set(1.0)
+    eps = eps.at[2 * i + 1, 2 * i].set(-1.0)
+    return eps
+
+
+def _eps_pair_trace_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (tile, n, n)
+    n = x.shape[-1]
+    eps = _eps_form(n, x.dtype)
+    o_ref[...] = jnp.sum(x * eps[None, :, :], axis=(1, 2))
+
+
+def eps_pair_trace(x: jax.Array) -> jax.Array:
+    """Sp(n) pair contraction: ``out[b] = Σ_{j1 j2} ε_{j1 j2} x[b, j1, j2]``."""
+    batch, n, n2 = x.shape
+    assert n == n2 and n % 2 == 0, "eps_pair_trace expects trailing square even axes"
+    tile, grid = _grid_for(batch)
+    return pl.pallas_call(
+        _eps_pair_trace_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch,), x.dtype),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile, n, n), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        interpret=True,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# diag_extract: (B, n, n) -> (B, n)
+# ---------------------------------------------------------------------------
+
+
+def _diag_extract_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    n = x.shape[-1]
+    idx = jnp.arange(n)
+    o_ref[...] = x[:, idx, idx]
+
+
+def diag_extract(x: jax.Array) -> jax.Array:
+    """Transfer (S_n Step 2): ``out[b, j] = x[b, j, j]``."""
+    batch, n, n2 = x.shape
+    assert n == n2
+    tile, grid = _grid_for(batch)
+    return pl.pallas_call(
+        _diag_extract_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, n), x.dtype),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile, n, n), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# diag_embed: (B, n) -> (B, n, n)
+# ---------------------------------------------------------------------------
+
+
+def _diag_embed_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (tile, n)
+    n = x.shape[-1]
+    eye = jnp.eye(n, dtype=x.dtype)
+    o_ref[...] = x[:, :, None] * eye[None, :, :]
+
+
+def diag_embed(x: jax.Array) -> jax.Array:
+    """Copy (S_n Step 3): ``out[b, i, j] = δ_ij x[b, i]``."""
+    batch, n = x.shape
+    tile, grid = _grid_for(batch)
+    return pl.pallas_call(
+        _diag_embed_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, n, n), x.dtype),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, n, n), lambda i: (i, 0, 0)),
+        interpret=True,
+    )(x)

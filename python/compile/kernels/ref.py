@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the L1 Pallas kernels — the correctness ground
+truth pytest compares against (no pallas anywhere in this file)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pair_trace(x: jax.Array) -> jax.Array:
+    """``out[b] = Σ_j x[b, j, j]``."""
+    return jnp.trace(x, axis1=-2, axis2=-1)
+
+
+def diag_contract(x: jax.Array, m: int) -> jax.Array:
+    """``out[b] = Σ_j x[b, j, j, …, j]`` over ``m`` trailing axes."""
+    batch = x.shape[0]
+    n = x.shape[1]
+    flat = x.reshape(batch, -1)
+    stride = sum(n**a for a in range(m))
+    idx = jnp.arange(n) * stride
+    return flat[:, idx].sum(axis=1)
+
+
+def eps_form(n: int, dtype=jnp.float32) -> jax.Array:
+    """Interleaved symplectic form matrix."""
+    eps = jnp.zeros((n, n), dtype=dtype)
+    i = jnp.arange(n // 2)
+    eps = eps.at[2 * i, 2 * i + 1].set(1.0)
+    eps = eps.at[2 * i + 1, 2 * i].set(-1.0)
+    return eps
+
+
+def eps_pair_trace(x: jax.Array) -> jax.Array:
+    """``out[b] = Σ_{j1 j2} ε_{j1 j2} x[b, j1, j2]``."""
+    n = x.shape[-1]
+    return jnp.einsum("bij,ij->b", x, eps_form(n, x.dtype))
+
+
+def diag_extract(x: jax.Array) -> jax.Array:
+    """``out[b, j] = x[b, j, j]``."""
+    return jnp.diagonal(x, axis1=-2, axis2=-1)
+
+
+def diag_embed(x: jax.Array) -> jax.Array:
+    """``out[b, i, j] = δ_ij x[b, i]``."""
+    n = x.shape[-1]
+    return x[:, :, None] * jnp.eye(n, dtype=x.dtype)[None, :, :]

@@ -1,0 +1,132 @@
+"""L2: the S_n-equivariant model whose linear layers are the paper's
+diagram basis, computed **as the factored Algorithm-1 steps** (contract →
+transfer → copy) rather than as materialised weight matrices.
+
+For order-2 layers ``(R^n)^{⊗2} → (R^n)^{⊗2}`` the S_n diagram basis has
+``B(4, n) = 15`` elements for ``n ≥ 4`` (Theorem 5, the Maron et al. basis).
+Each basis matvec ``D_π x`` is computed in ``O(n^2)`` via the planar steps —
+never the naive ``O(n^4)`` — and the layer output is the learned linear
+combination plus the 2-element equivariant bias.
+
+The hot-spot contractions call the L1 Pallas kernels from
+``kernels.planar`` so that the whole model lowers into a single HLO module
+with the kernels inlined (interpret mode lowers them to plain HLO ops the
+rust CPU runtime can execute).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import planar
+
+
+def basis_matvecs_order2(x: jax.Array) -> list[jax.Array]:
+    """The 15 diagram-basis matvecs ``D_π x`` for ``k = l = 2``.
+
+    ``x`` has shape ``(B, n, n)``; every output does too. The 15 set
+    partitions of {i1, i2, j1, j2} (paper vertex labels: top i1 i2, bottom
+    j1 j2) are enumerated with their factored implementations; comments give
+    the partition.
+    """
+    b, n, _ = x.shape
+    ones2 = jnp.ones((n, n), dtype=x.dtype)
+
+    # Planar-step primitives (L1 kernels where the shapes allow).
+    total = planar.diag_contract(x.reshape(b, n, n), 2)  # Σ_{j1 j2} x  ... no:
+    # diag_contract sums the diagonal; the full sum is a separate reduce:
+    full_sum = jnp.sum(x, axis=(1, 2))  # Σ_{j1,j2} x[j1,j2]
+    diag_sum = planar.pair_trace(x)  # Σ_j x[j,j]
+    row_sum = jnp.sum(x, axis=2)  # (B, n): Σ_{j2} x[j1, j2]
+    col_sum = jnp.sum(x, axis=1)  # (B, n): Σ_{j1} x[j1, j2]
+    diag = planar.diag_extract(x)  # (B, n): x[j, j]
+    _ = total  # diag_contract(x, 2) == pair_trace(x); both exercised in tests
+
+    def bcast_scalar(s):  # (B,) -> (B, n, n): {i1}{i2} copies
+        return s[:, None, None] * ones2[None]
+
+    def embed_diag_scalar(s):  # (B,) -> diagonal: {i1 i2} block
+        return planar.diag_embed(jnp.broadcast_to(s[:, None], (b, n)))
+
+    def bcast_rows(v):  # (B, n) -> out[i1, i2] = v[i2]
+        return jnp.broadcast_to(v[:, None, :], (b, n, n))
+
+    def bcast_cols(v):  # (B, n) -> out[i1, i2] = v[i1]
+        return jnp.broadcast_to(v[:, :, None], (b, n, n))
+
+    outs = [
+        # -- both top vertices free of bottom (copies of contractions) ----
+        bcast_scalar(full_sum),            # {i1}{i2}{j1}{j2}
+        bcast_scalar(diag_sum),            # {i1}{i2}{j1 j2}
+        embed_diag_scalar(full_sum),       # {i1 i2}{j1}{j2}
+        embed_diag_scalar(diag_sum),       # {i1 i2}{j1 j2}
+        # -- one cross block, one free bottom ------------------------------
+        bcast_cols(row_sum),               # {i1 j1}{i2}{j2}: out[a,b]=Σ_c x[a,c]
+        bcast_cols(col_sum),               # {i1 j2}{i2}{j1}
+        bcast_rows(row_sum),               # {i2 j1}{i1}{j2}
+        bcast_rows(col_sum),               # {i2 j2}{i1}{j1}
+        # -- one cross block with both bottoms / diagonal variants ---------
+        bcast_cols(diag),                  # {i1 j1 j2}{i2}
+        bcast_rows(diag),                  # {i2 j1 j2}{i1}
+        planar.diag_embed(row_sum),        # {i1 i2 j1}{j2}
+        planar.diag_embed(col_sum),        # {i1 i2 j2}{j1}
+        # -- two cross blocks ----------------------------------------------
+        x,                                  # {i1 j1}{i2 j2}: identity
+        jnp.swapaxes(x, 1, 2),              # {i1 j2}{i2 j1}: transpose
+        planar.diag_embed(diag),            # {i1 i2 j1 j2}: diag -> diag
+    ]
+    return outs
+
+
+def equivariant_layer(params: dict, x: jax.Array) -> jax.Array:
+    """One S_n-equivariant linear layer ``(B, n, n) → (B, n, n)``:
+    ``Σ_π λ_π D_π x + bias`` with the 2-element equivariant bias
+    (identity-diagonal and all-ones patterns, the (0,2) diagrams)."""
+    b, n, _ = x.shape
+    outs = basis_matvecs_order2(x)
+    lam = params["lambda"]  # (15,)
+    acc = jnp.zeros_like(x)
+    for i, o in enumerate(outs):
+        acc = acc + lam[i] * o
+    eye = jnp.eye(n, dtype=x.dtype)
+    acc = acc + params["bias_diag"] * eye[None] + params["bias_all"] * jnp.ones((n, n), x.dtype)[None]
+    return acc
+
+
+def init_params(key: jax.Array, num_layers: int) -> list[dict]:
+    """Initialise layer parameters (scaled normal over the 15 coefficients)."""
+    params = []
+    for i in range(num_layers):
+        k = jax.random.fold_in(key, i)
+        params.append(
+            {
+                "lambda": jax.random.normal(k, (15,)) / jnp.sqrt(15.0),
+                "bias_diag": jnp.zeros(()),
+                "bias_all": jnp.zeros(()),
+            }
+        )
+    return params
+
+
+def model(params: list[dict], x: jax.Array) -> jax.Array:
+    """The L2 model: two equivariant layers with a ReLU between (pointwise,
+    hence S_n-equivariant), returning an order-2 output."""
+    h = equivariant_layer(params[0], x)
+    h = jax.nn.relu(h)
+    return equivariant_layer(params[1], h)
+
+
+def model_flat(flat_params: jax.Array, x: jax.Array) -> jax.Array:
+    """Same model with parameters packed in one flat vector of length
+    2·17 = 34 — the signature the AOT artifact exposes to rust (rust feeds
+    trained coefficients as a plain buffer)."""
+    params = []
+    off = 0
+    for _ in range(2):
+        lam = jax.lax.dynamic_slice(flat_params, (off,), (15,))
+        bias_diag = flat_params[off + 15]
+        bias_all = flat_params[off + 16]
+        params.append({"lambda": lam, "bias_diag": bias_diag, "bias_all": bias_all})
+        off += 17
+    return model(params, x)

@@ -1,0 +1,71 @@
+"""AOT shape variants: the artifact builder must lower cleanly for the
+(batch, n) grid a deployment would compile, and kernels must stay correct
+inside the jitted model at every size."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as model_mod
+from compile.kernels import planar, ref
+
+
+@pytest.mark.parametrize("batch,n", [(1, 2), (2, 4), (4, 8), (3, 5)])
+def test_model_lowering_grid(batch, n):
+    text = aot.lower_model(batch=batch, n=n)
+    assert "HloModule" in text
+    assert f"f32[{batch},{n},{n}]" in text
+
+
+@pytest.mark.parametrize("batch,n", [(1, 2), (4, 8), (7, 3)])
+def test_pair_trace_lowering_grid(batch, n):
+    text = aot.lower_pair_trace(batch=batch, n=n)
+    assert "HloModule" in text
+    assert f"f32[{batch}]" in text
+
+
+def test_all_kernels_jit_inside_composite():
+    """All kernels fused into one jitted function (as in the model) stay
+    correct — the configuration the artifact actually ships."""
+
+    @jax.jit
+    def composite(x):
+        a = planar.pair_trace(x)                # (B,)
+        b = planar.diag_extract(x)              # (B, n)
+        c = planar.diag_embed(b)                # (B, n, n)
+        d = planar.eps_pair_trace(x)            # (B,)
+        e = planar.diag_contract(x, 2)          # (B,)
+        return a + d + e, c
+
+    x = jax.random.normal(jax.random.PRNGKey(5), (3, 4, 4))
+    scalars, emb = composite(x)
+    want = ref.pair_trace(x) + ref.eps_pair_trace(x) + ref.diag_contract(x, 2)
+    np.testing.assert_allclose(scalars, want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(emb, ref.diag_embed(ref.diag_extract(x)), rtol=1e-5)
+
+
+def test_model_is_linear_in_params_per_layer():
+    """The artifact is inference-only (pallas interpret kernels define no
+    VJP; training happens on the rust side). Verify the inference-side
+    contract instead: with the second layer fixed, the model is *affine* in
+    the first layer's coefficients — the linearity of Corollary 6 that the
+    rust trainer exploits."""
+    n = 4
+    key = jax.random.PRNGKey(9)
+    flat = jax.random.normal(key, (aot.NUM_FLAT_PARAMS,))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, n, n))
+    # Perturb only layer-2 coefficients (indices 17..34): the outer layer is
+    # linear, so model(p + t·e) - model(p) must be exactly t · direction.
+    e = jnp.zeros_like(flat).at[20].set(1.0)
+    y0 = model_mod.model_flat(flat, x)
+    y1 = model_mod.model_flat(flat + 1.0 * e, x)
+    y2 = model_mod.model_flat(flat + 2.0 * e, x)
+    np.testing.assert_allclose(y2 - y1, y1 - y0, rtol=1e-4, atol=1e-5)
+
+
+def test_num_flat_params_consistent_with_model():
+    params = model_mod.init_params(jax.random.PRNGKey(0), 2)
+    total = sum(p["lambda"].size + 2 for p in params)
+    assert total == aot.NUM_FLAT_PARAMS

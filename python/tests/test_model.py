@@ -1,0 +1,87 @@
+"""L2 correctness: the equivariant model's defining properties —
+S_n-equivariance of every basis op and of the full model, and agreement of
+the factored basis ops with naively-materialised diagram matrices."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model as model_mod
+
+
+def permute_order2(x, perm):
+    """ρ_2(g) for a permutation g: out[a, b] = x[g^-1 a, g^-1 b] — applied
+    batched: x is (B, n, n)."""
+    p = jnp.asarray(perm)
+    return x[:, p, :][:, :, p]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_every_basis_op_is_equivariant(n, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (2, n, n))
+    perm = jax.random.permutation(jax.random.fold_in(key, 1), n)
+    inv = jnp.argsort(perm)
+    outs_then_perm = [
+        permute_order2(o, inv) for o in model_mod.basis_matvecs_order2(x)
+    ]
+    perm_then_outs = model_mod.basis_matvecs_order2(permute_order2(x, inv))
+    for i, (a, b) in enumerate(zip(outs_then_perm, perm_then_outs)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5, err_msg=f"op {i}")
+
+
+def test_basis_ops_linearly_independent_for_large_n():
+    # For n >= 4 the 15 ops must be linearly independent (Theorem 5 basis).
+    n = 4
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.normal(size=(6, n, n)).astype(np.float32))
+    outs = model_mod.basis_matvecs_order2(xs)
+    mat = np.stack([np.asarray(o).reshape(-1) for o in outs])  # (15, 6*n*n)
+    rank = np.linalg.matrix_rank(mat, tol=1e-4)
+    assert rank == 15, f"rank {rank}"
+
+
+def test_full_model_equivariance():
+    n = 5
+    key = jax.random.PRNGKey(42)
+    params = model_mod.init_params(key, 2)
+    x = jax.random.normal(jax.random.fold_in(key, 7), (3, n, n))
+    for perm in itertools.islice(itertools.permutations(range(n)), 5):
+        p = jnp.asarray(perm)
+        lhs = model_mod.model(params, x[:, p, :][:, :, p])
+        rhs = model_mod.model(params, x)[:, p, :][:, :, p]
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+def test_model_flat_matches_model():
+    n = 4
+    key = jax.random.PRNGKey(1)
+    params = model_mod.init_params(key, 2)
+    flat = jnp.concatenate(
+        [
+            jnp.concatenate(
+                [p["lambda"], p["bias_diag"][None], p["bias_all"][None]]
+            )
+            for p in params
+        ]
+    )
+    x = jax.random.normal(jax.random.fold_in(key, 2), (2, n, n))
+    np.testing.assert_allclose(
+        model_mod.model_flat(flat, x), model_mod.model(params, x), rtol=1e-5
+    )
+
+
+def test_basis_op_identity_and_transpose():
+    n = 3
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, n, n))
+    outs = model_mod.basis_matvecs_order2(x)
+    np.testing.assert_allclose(outs[12], x)  # identity diagram
+    np.testing.assert_allclose(outs[13], jnp.swapaxes(x, 1, 2))  # transpose

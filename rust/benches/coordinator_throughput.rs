@@ -1,0 +1,115 @@
+//! **E9 — serving-path throughput/latency.**
+//!
+//! The coordinator under closed-loop load: sweep worker count and batching
+//! window, report req/s and latency. The native diagram-net route carries
+//! the load; the PJRT route is exercised separately if artifacts exist.
+
+use equidiag::config::ServerConfig;
+use equidiag::coordinator::{Coordinator, ModelKind};
+use equidiag::fastmult::Group;
+use equidiag::layer::Init;
+use equidiag::nn::{Activation, EquivariantNet};
+use equidiag::runtime::HloService;
+use equidiag::tensor::Tensor;
+use equidiag::util::{Rng, Table};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn run_load(workers: usize, window_us: u64, max_batch: usize, requests: usize) -> (f64, f64, f64) {
+    let n = 8;
+    let mut rng = Rng::new(42);
+    let net = EquivariantNet::new(
+        Group::Symmetric,
+        n,
+        &[2, 2],
+        Activation::Relu,
+        Init::ScaledNormal,
+        &mut rng,
+    )
+    .unwrap();
+    let mut coord = Coordinator::new(ServerConfig {
+        workers,
+        max_batch,
+        batch_window: Duration::from_micros(window_us),
+        queue_capacity: 4096,
+    });
+    coord.register("m", ModelKind::net(net));
+    let handle = Arc::new(coord.start());
+    let clients = 8;
+    let per_client = requests / clients;
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + c as u64);
+            for _ in 0..per_client {
+                let v = Tensor::random(8, 2, &mut rng);
+                h.infer("m", v).unwrap();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = handle.metrics();
+    let out = (
+        (clients * per_client) as f64 / wall,
+        snap.mean_latency_s * 1e6,
+        snap.mean_batch_size,
+    );
+    match Arc::try_unwrap(handle) {
+        Ok(h) => h.shutdown(),
+        Err(_) => unreachable!(),
+    }
+    out
+}
+
+fn main() {
+    println!("== E9: coordinator throughput (closed-loop, 8 clients) ==\n");
+    let requests = 2000;
+    let mut table = Table::new(vec![
+        "workers",
+        "window",
+        "max batch",
+        "req/s",
+        "mean latency",
+        "mean batch",
+    ]);
+    for &workers in &[1usize, 2, 4, 8] {
+        for &(window_us, max_batch) in &[(0u64, 1usize), (200, 16), (1000, 64)] {
+            let (rps, lat_us, mb) = run_load(workers, window_us, max_batch, requests);
+            table.row(vec![
+                format!("{workers}"),
+                format!("{window_us} us"),
+                format!("{max_batch}"),
+                format!("{rps:.0}"),
+                format!("{lat_us:.0} us"),
+                format!("{mb:.2}"),
+            ]);
+        }
+    }
+    table.print();
+
+    // PJRT route (single-owner-thread service).
+    if std::path::Path::new("artifacts/pair_trace.hlo.txt").exists() {
+        let svc = HloService::spawn("artifacts/pair_trace.hlo.txt").unwrap();
+        let batch = 4usize;
+        let n = 8usize;
+        let reps = 500;
+        let t0 = Instant::now();
+        for r in 0..reps {
+            let data = vec![r as f32; batch * n * n];
+            let _ = svc.run_f32(vec![(data, vec![batch, n, n])]).unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "\nPJRT pallas-kernel route: {:.0} exec/s ({:.0} matrices/s)",
+            reps as f64 / wall,
+            (reps * batch) as f64 / wall
+        );
+    } else {
+        println!("\n(artifacts missing — `make artifacts` enables the PJRT row)");
+    }
+}

@@ -1,0 +1,100 @@
+//! **E2 — §5.2.2 time complexity for O(n).**
+//!
+//! Claim: a Brauer-diagram matvec costs `O(n^{k-1})` via the fast path
+//! (eq. 134/135) vs `O(n^{l+k})` naïve — and the Step-2 transfer being the
+//! *identity* means cross-only diagrams are pure memory moves. Fixed
+//! `(k, l) = (4, 4)`, sweep n, fit slopes.
+
+use equidiag::diagram::Diagram;
+use equidiag::fastmult::{Group, MultPlan};
+use equidiag::functor::naive_apply;
+use equidiag::tensor::Tensor;
+use equidiag::util::timing::loglog_slope;
+use equidiag::util::{bench_median, Rng, Table};
+use std::time::Duration;
+
+const K: usize = 4;
+const L: usize = 4;
+
+/// b = 2 bottom pairs, t = 2 top pairs: maximal contraction work.
+fn contracting() -> Diagram {
+    Diagram::from_blocks(
+        L,
+        K,
+        vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]],
+    )
+    .unwrap()
+}
+
+/// b = 1, d = 2, t = 1: mixed.
+fn mixed() -> Diagram {
+    Diagram::from_blocks(
+        L,
+        K,
+        vec![vec![0, 1], vec![2, 4], vec![3, 5], vec![6, 7]],
+    )
+    .unwrap()
+}
+
+/// d = 4: pure cross (identity transfer — free).
+fn cross_only() -> Diagram {
+    Diagram::from_blocks(
+        L,
+        K,
+        vec![vec![0, 4], vec![1, 5], vec![2, 6], vec![3, 7]],
+    )
+    .unwrap()
+}
+
+fn main() {
+    let budget = Duration::from_millis(200);
+    let ns: Vec<usize> = vec![2, 3, 4, 6, 8, 10, 12, 14];
+    let naive_cap = 6; // naive is O(n^8)
+
+    println!("== E2: O(n) scaling, (k, l) = ({K}, {L}) ==\n");
+    let mut rng = Rng::new(2);
+
+    for (label, d, predicted_fast) in [
+        ("contracting (b = 2)", contracting(), (K - 1) as f64),
+        ("mixed (b = 1, d = 2)", mixed(), (K - 1) as f64),
+        ("cross-only (d = 4, identity transfer)", cross_only(), 0.0),
+    ] {
+        let mut table = Table::new(vec!["n", "fast", "naive", "speedup"]);
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        let (mut nxs, mut nys) = (Vec::new(), Vec::new());
+        for &n in &ns {
+            let plan = MultPlan::new(Group::Orthogonal, &d, n).unwrap();
+            let v = Tensor::random(n, K, &mut rng);
+            let fast = bench_median(budget, || {
+                let _ = plan.apply(&v).unwrap();
+            });
+            xs.push(n as f64);
+            ys.push(fast.median_s);
+            let cell = if n <= naive_cap {
+                let nv = bench_median(budget, || {
+                    let _ = naive_apply(Group::Orthogonal, &d, &v).unwrap();
+                });
+                nxs.push(n as f64);
+                nys.push(nv.median_s);
+                (nv.pretty(), format!("{:.1}x", nv.median_s / fast.median_s))
+            } else {
+                ("-".into(), "-".into())
+            };
+            table.row(vec![format!("{n}"), fast.pretty(), cell.0, cell.1]);
+        }
+        let h = xs.len() / 2;
+        let fast_slope = loglog_slope(&xs[h..], &ys[h..]);
+        let nh = nxs.len() / 2;
+        let naive_slope = loglog_slope(&nxs[nh..], &nys[nh..]);
+        println!("{label}  [diagram {d}]");
+        table.print();
+        // Wall-clock includes the O(n^max(k,l)) memory traffic the paper's
+        // model (Remark 37) counts as free.
+        let wallclock_bound = predicted_fast.max(K.max(L) as f64);
+        println!(
+            "measured fast slope {fast_slope:.2} (paper arithmetic: <= {predicted_fast}, \
+             + memory: <= {wallclock_bound}), naive slope {naive_slope:.2} (paper: {})\n",
+            K + L
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! **E1 — §5.2.1 time complexity for S_n.**
+//!
+//! The paper claims the fast algorithm costs `O(n^k)` in the worst case
+//! (smallest bottom block of size 1), `O(n)` when the only bottom block has
+//! size k, and is effectively free when there are no bottom blocks — vs
+//! `O(n^{l+k})` naïve. We measure all three diagram families at fixed
+//! `(k, l) = (3, 3)` over a sweep of `n` and report the fitted log–log
+//! slopes next to the predicted exponents.
+
+use equidiag::diagram::Diagram;
+use equidiag::fastmult::{Group, MultPlan};
+use equidiag::functor::naive_apply;
+use equidiag::tensor::Tensor;
+use equidiag::util::timing::loglog_slope;
+use equidiag::util::{bench_median, Rng, Table};
+use std::time::Duration;
+
+const K: usize = 3;
+const L: usize = 3;
+
+/// Worst case: bottom blocks of size 1 (plus cross blocks): cost O(n^k).
+fn worst_case() -> Diagram {
+    // top: cross uppers {0},{1},{2}? need l=3: one cross + 2 top-only;
+    // bottom: one cross lower + 2 singleton bottom blocks.
+    Diagram::from_blocks(
+        L,
+        K,
+        vec![vec![0, 1], vec![2, 3], vec![4], vec![5]],
+    )
+    .unwrap()
+}
+
+/// Best contracting case: a single bottom block of size k: cost O(n).
+fn best_case() -> Diagram {
+    Diagram::from_blocks(L, K, vec![vec![0, 1, 2], vec![3, 4, 5]]).unwrap()
+}
+
+/// Free case: no bottom-only blocks (pure cross): memory moves only.
+fn free_case() -> Diagram {
+    Diagram::from_blocks(L, K, vec![vec![0, 3], vec![1, 4], vec![2, 5]]).unwrap()
+}
+
+fn main() {
+    let budget = Duration::from_millis(200);
+    let ns: Vec<usize> = vec![2, 3, 4, 6, 8, 10, 12];
+    let naive_cap = 8; // n^{l+k} = n^6 beyond this is too slow to sweep
+
+    println!("== E1: S_n scaling, (k, l) = ({K}, {L}) ==\n");
+    let mut rng = Rng::new(1);
+
+    for (label, d, predicted_fast) in [
+        ("worst case (|B_b| = 1)", worst_case(), K as f64),
+        ("best case (one block of size k)", best_case(), 1.0),
+        ("free case (b = 0)", free_case(), 0.0),
+    ] {
+        let mut table = Table::new(vec!["n", "fast", "naive", "speedup"]);
+        let mut xs = Vec::new();
+        let mut fast_ys = Vec::new();
+        let mut naive_xs = Vec::new();
+        let mut naive_ys = Vec::new();
+        for &n in &ns {
+            let plan = MultPlan::new(Group::Symmetric, &d, n).unwrap();
+            let v = Tensor::random(n, K, &mut rng);
+            let fast = bench_median(budget, || {
+                let _ = plan.apply(&v).unwrap();
+            });
+            xs.push(n as f64);
+            fast_ys.push(fast.median_s);
+            let naive_cell = if n <= naive_cap {
+                let nv = bench_median(budget, || {
+                    let _ = naive_apply(Group::Symmetric, &d, &v).unwrap();
+                });
+                naive_xs.push(n as f64);
+                naive_ys.push(nv.median_s);
+                (nv.pretty(), format!("{:.1}x", nv.median_s / fast.median_s))
+            } else {
+                ("-".to_string(), "-".to_string())
+            };
+            table.row(vec![
+                format!("{n}"),
+                fast.pretty(),
+                naive_cell.0,
+                naive_cell.1,
+            ]);
+        }
+        // Fit slopes on the larger-n half (asymptotic regime).
+        let h = xs.len() / 2;
+        let fast_slope = loglog_slope(&xs[h..], &fast_ys[h..]);
+        let nh = naive_xs.len() / 2;
+        let naive_slope = loglog_slope(&naive_xs[nh..], &naive_ys[nh..]);
+        println!("{label}  [diagram {d}]");
+        table.print();
+        // The paper's cost model (Remark 37) counts memory moves as free;
+        // wall-clock additionally pays O(n^max(k,l)) input reads / output
+        // writes, so the measured slope is bounded by
+        // max(arithmetic exponent, k, l).
+        let wallclock_bound = predicted_fast.max(K.max(L) as f64);
+        println!(
+            "measured fast slope {fast_slope:.2} (paper arithmetic: <= {predicted_fast}, \
+             + memory: <= {wallclock_bound}), naive slope {naive_slope:.2} (paper: {})\n",
+            K + L
+        );
+    }
+}

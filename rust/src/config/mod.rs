@@ -1,0 +1,13 @@
+//! Configuration system: a minimal TOML-subset parser plus the typed
+//! schemas the launcher consumes.
+//!
+//! Neither `serde` nor `toml` is available in the offline registry (see
+//! DESIGN.md §3), so [`toml_lite`] implements the subset we use: `[section]`
+//! headers, `key = value` with strings, integers, floats, booleans and flat
+//! arrays, and `#` comments.
+
+pub mod schema;
+pub mod toml_lite;
+
+pub use schema::{AppConfig, NetworkConfig, ServerConfig, TrainingConfig};
+pub use toml_lite::{parse, Value};

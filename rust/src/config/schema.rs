@@ -1,0 +1,283 @@
+//! Typed configuration schemas built on [`super::toml_lite`].
+
+use super::toml_lite::{parse, Value};
+use crate::error::{Error, Result};
+use crate::fastmult::Group;
+use crate::nn::Activation;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Network architecture section (`[network]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkConfig {
+    /// Which group the layers are equivariant to.
+    pub group: Group,
+    /// Representation dimension `n`.
+    pub n: usize,
+    /// Tensor orders per layer boundary, e.g. `[2, 2, 1, 0]`.
+    pub orders: Vec<usize>,
+    /// Hidden activation.
+    pub activation: Activation,
+    /// Initialisation standard deviation (0 means `ScaledNormal`).
+    pub init_std: f64,
+    /// Weight-init RNG seed.
+    pub seed: u64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig {
+            group: Group::Symmetric,
+            n: 5,
+            orders: vec![2, 2, 0],
+            activation: Activation::Relu,
+            init_std: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+/// Training section (`[training]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainingConfig {
+    /// Optimisation steps.
+    pub steps: usize,
+    /// Minibatch size.
+    pub batch_size: usize,
+    /// Learning rate.
+    pub lr: f64,
+    /// `"adam"` or `"sgd"`.
+    pub optimizer: String,
+    /// Momentum for SGD.
+    pub momentum: f64,
+    /// Log cadence (0 disables).
+    pub log_every: usize,
+}
+
+impl Default for TrainingConfig {
+    fn default() -> Self {
+        TrainingConfig {
+            steps: 300,
+            batch_size: 8,
+            lr: 0.01,
+            optimizer: "adam".into(),
+            momentum: 0.9,
+            log_every: 50,
+        }
+    }
+}
+
+/// Serving section (`[server]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    /// Worker thread count.
+    pub workers: usize,
+    /// Maximum requests batched together.
+    pub max_batch: usize,
+    /// Batching window.
+    pub batch_window: Duration,
+    /// Bounded request-queue capacity (backpressure).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 4,
+            max_batch: 16,
+            batch_window: Duration::from_micros(200),
+            queue_capacity: 1024,
+        }
+    }
+}
+
+/// Whole-application config.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AppConfig {
+    /// `[network]`.
+    pub network: NetworkConfig,
+    /// `[training]`.
+    pub training: TrainingConfig,
+    /// `[server]`.
+    pub server: ServerConfig,
+    /// Optional HLO artifact to serve (`artifact = "…"` at top level).
+    pub artifact: Option<String>,
+}
+
+fn get_usize(m: &BTreeMap<String, Value>, key: &str, default: usize) -> Result<usize> {
+    match m.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_int()
+            .and_then(|i| usize::try_from(i).ok())
+            .ok_or_else(|| Error::Config(format!("{key} must be a non-negative integer"))),
+    }
+}
+
+fn get_f64(m: &BTreeMap<String, Value>, key: &str, default: f64) -> Result<f64> {
+    match m.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_float()
+            .ok_or_else(|| Error::Config(format!("{key} must be a number"))),
+    }
+}
+
+fn get_str(m: &BTreeMap<String, Value>, key: &str, default: &str) -> Result<String> {
+    match m.get(key) {
+        None => Ok(default.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| Error::Config(format!("{key} must be a string"))),
+    }
+}
+
+impl AppConfig {
+    /// Parse from config text.
+    pub fn from_text(text: &str) -> Result<Self> {
+        let m = parse(text)?;
+        let d = AppConfig::default();
+
+        let group = match m.get("network.group") {
+            None => d.network.group,
+            Some(v) => Group::parse(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("network.group must be a string".into()))?,
+            )?,
+        };
+        let orders = match m.get("network.orders") {
+            None => d.network.orders.clone(),
+            Some(v) => v
+                .as_usize_array()
+                .ok_or_else(|| Error::Config("network.orders must be an int array".into()))?,
+        };
+        if orders.len() < 2 {
+            return Err(Error::Config(
+                "network.orders needs at least two entries".into(),
+            ));
+        }
+        let activation = {
+            let s = get_str(&m, "network.activation", "relu")?;
+            Activation::parse(&s)
+                .ok_or_else(|| Error::Config(format!("unknown activation '{s}'")))?
+        };
+        let network = NetworkConfig {
+            group,
+            n: get_usize(&m, "network.n", d.network.n)?,
+            orders,
+            activation,
+            init_std: get_f64(&m, "network.init_std", d.network.init_std)?,
+            seed: get_usize(&m, "network.seed", d.network.seed as usize)? as u64,
+        };
+
+        let training = TrainingConfig {
+            steps: get_usize(&m, "training.steps", d.training.steps)?,
+            batch_size: get_usize(&m, "training.batch_size", d.training.batch_size)?.max(1),
+            lr: get_f64(&m, "training.lr", d.training.lr)?,
+            optimizer: get_str(&m, "training.optimizer", &d.training.optimizer)?,
+            momentum: get_f64(&m, "training.momentum", d.training.momentum)?,
+            log_every: get_usize(&m, "training.log_every", d.training.log_every)?,
+        };
+        if training.optimizer != "adam" && training.optimizer != "sgd" {
+            return Err(Error::Config(format!(
+                "training.optimizer must be adam|sgd, got '{}'",
+                training.optimizer
+            )));
+        }
+
+        let server = ServerConfig {
+            workers: get_usize(&m, "server.workers", d.server.workers)?.max(1),
+            max_batch: get_usize(&m, "server.max_batch", d.server.max_batch)?.max(1),
+            batch_window: Duration::from_micros(get_usize(
+                &m,
+                "server.batch_window_us",
+                d.server.batch_window.as_micros() as usize,
+            )? as u64),
+            queue_capacity: get_usize(&m, "server.queue_capacity", d.server.queue_capacity)?
+                .max(1),
+        };
+
+        let artifact = m
+            .get("artifact")
+            .map(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Config("artifact must be a string".into()))
+            })
+            .transpose()?;
+
+        Ok(AppConfig {
+            network,
+            training,
+            server,
+            artifact,
+        })
+    }
+
+    /// Parse from a file path.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("read {path}: {e}")))?;
+        Self::from_text(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_when_empty() {
+        let c = AppConfig::from_text("").unwrap();
+        assert_eq!(c, AppConfig::default());
+    }
+
+    #[test]
+    fn full_document() {
+        let c = AppConfig::from_text(
+            r#"
+artifact = "artifacts/model.hlo.txt"
+
+[network]
+group = "o"
+n = 4
+orders = [2, 2]
+activation = "identity"
+init_std = 0.5
+seed = 7
+
+[training]
+steps = 10
+batch_size = 2
+lr = 0.1
+optimizer = "sgd"
+momentum = 0.8
+log_every = 5
+
+[server]
+workers = 2
+max_batch = 8
+batch_window_us = 500
+queue_capacity = 64
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.network.group, Group::Orthogonal);
+        assert_eq!(c.network.n, 4);
+        assert_eq!(c.network.orders, vec![2, 2]);
+        assert_eq!(c.network.activation, Activation::Identity);
+        assert_eq!(c.training.optimizer, "sgd");
+        assert_eq!(c.server.batch_window, Duration::from_micros(500));
+        assert_eq!(c.artifact.as_deref(), Some("artifacts/model.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(AppConfig::from_text("[network]\ngroup = \"u(n)\"").is_err());
+        assert!(AppConfig::from_text("[network]\norders = [2]").is_err());
+        assert!(AppConfig::from_text("[training]\noptimizer = \"lbfgs\"").is_err());
+        assert!(AppConfig::from_text("[network]\nactivation = \"swish\"").is_err());
+        assert!(AppConfig::from_text("[network]\nn = \"five\"").is_err());
+    }
+}

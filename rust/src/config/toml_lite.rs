@@ -1,0 +1,258 @@
+//! A hand-rolled TOML-subset parser (serde/toml substitute).
+//!
+//! Supported grammar:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! string_key = "value"
+//! int_key = 42
+//! float_key = 3.5
+//! bool_key = true
+//! array_key = [2, 3, 4]
+//! ```
+//!
+//! Keys are flattened as `section.key`. Nested tables, dates, multi-line
+//! strings and inline tables are intentionally unsupported.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Flat array of values.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// As string, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// As integer (accepts `Int` only).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// As float (accepts `Float` or `Int`).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    /// As a vec of usize (for order lists etc.).
+    pub fn as_usize_array(&self) -> Option<Vec<usize>> {
+        match self {
+            Value::Array(xs) => xs
+                .iter()
+                .map(|x| x.as_int().and_then(|i| usize::try_from(i).ok()))
+                .collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a config document into a flat `section.key → value` map.
+pub fn parse(text: &str) -> Result<BTreeMap<String, Value>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(err(lineno, "unterminated section header"));
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            if section.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.insert(full_key, value);
+    }
+    Ok(out)
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {msg}", lineno + 1))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside a quoted string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if s.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(err(lineno, "unterminated string"));
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(err(lineno, "unterminated array"));
+        }
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>> = split_top_level(inner)
+            .into_iter()
+            .map(|item| parse_value(item.trim(), lineno))
+            .collect();
+        return Ok(Value::Array(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(lineno, &format!("cannot parse value '{s}'")))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    // Arrays are flat (no nesting), so a plain comma split outside strings
+    // suffices.
+    let mut parts = Vec::new();
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_types() {
+        let doc = r#"
+# top comment
+name = "equidiag"   # trailing comment
+n = 5
+lr = 0.01
+verbose = true
+orders = [2, 2, 1, 0]
+
+[server]
+workers = 4
+"#;
+        let m = parse(doc).unwrap();
+        assert_eq!(m["name"].as_str(), Some("equidiag"));
+        assert_eq!(m["n"].as_int(), Some(5));
+        assert_eq!(m["lr"].as_float(), Some(0.01));
+        assert_eq!(m["verbose"].as_bool(), Some(true));
+        assert_eq!(m["orders"].as_usize_array(), Some(vec![2, 2, 1, 0]));
+        assert_eq!(m["server.workers"].as_int(), Some(4));
+    }
+
+    #[test]
+    fn int_coerces_to_float_not_vice_versa() {
+        let m = parse("x = 3").unwrap();
+        assert_eq!(m["x"].as_float(), Some(3.0));
+        let m2 = parse("y = 3.5").unwrap();
+        assert_eq!(m2["y"].as_int(), None);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let m = parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(m["k"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let e = parse("\n\nbad line").unwrap_err().to_string();
+        assert!(e.contains("line 3"), "{e}");
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = [1, 2").is_err());
+        assert!(parse("k = what").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let m = parse("a = []").unwrap();
+        assert_eq!(m["a"], Value::Array(vec![]));
+    }
+
+    #[test]
+    fn string_array() {
+        let m = parse(r#"a = ["x", "y"]"#).unwrap();
+        match &m["a"] {
+            Value::Array(xs) => {
+                assert_eq!(xs[0].as_str(), Some("x"));
+                assert_eq!(xs[1].as_str(), Some("y"));
+            }
+            _ => panic!(),
+        }
+    }
+}

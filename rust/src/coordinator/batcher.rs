@@ -1,0 +1,163 @@
+//! The batching loop: drain the request queue into per-model batches
+//! bounded by `max_batch` and `batch_window`, then hand batches to the
+//! worker pool.
+
+use super::metrics::Metrics;
+use crate::error::Result;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One enqueued request.
+pub(crate) struct WorkItem {
+    pub model: String,
+    pub input: Tensor,
+    pub enqueued: Instant,
+    pub respond: Sender<Result<Tensor>>,
+}
+
+/// A batch of same-model requests handed to a worker.
+pub(crate) struct Batch {
+    pub model: String,
+    pub items: Vec<WorkItem>,
+}
+
+/// Run the batching loop until the request channel closes. Flushes
+/// per-model groups when either `max_batch` is reached or the oldest item
+/// in the group exceeds `window`.
+pub(crate) fn run(
+    rx: Receiver<WorkItem>,
+    dispatch: Sender<Batch>,
+    metrics: Arc<Metrics>,
+    max_batch: usize,
+    window: Duration,
+) {
+    let mut pending: HashMap<String, Vec<WorkItem>> = HashMap::new();
+    let mut oldest: Option<Instant> = None;
+    loop {
+        // Pick a receive timeout: the remaining window if anything pends.
+        let timeout = match oldest {
+            None => Duration::from_millis(50),
+            Some(t0) => window.saturating_sub(t0.elapsed()),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(item) => {
+                let model = item.model.clone();
+                if oldest.is_none() {
+                    oldest = Some(item.enqueued);
+                }
+                let group = pending.entry(model.clone()).or_default();
+                group.push(item);
+                if group.len() >= max_batch {
+                    let items = pending.remove(&model).unwrap();
+                    metrics.on_batch(items.len());
+                    if dispatch.send(Batch { model, items }).is_err() {
+                        return;
+                    }
+                    if pending.is_empty() {
+                        oldest = None;
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // Window expired (or idle poll): flush everything pending.
+                if !pending.is_empty() {
+                    for (model, items) in pending.drain() {
+                        metrics.on_batch(items.len());
+                        if dispatch.send(Batch { model, items }).is_err() {
+                            return;
+                        }
+                    }
+                    oldest = None;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // Shutdown: flush and exit.
+                for (model, items) in pending.drain() {
+                    metrics.on_batch(items.len());
+                    let _ = dispatch.send(Batch { model, items });
+                }
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+
+    fn item(model: &str) -> (WorkItem, Receiver<Result<Tensor>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            WorkItem {
+                model: model.into(),
+                input: Tensor::zeros(2, 1),
+                enqueued: Instant::now(),
+                respond: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = mpsc::channel::<WorkItem>();
+        let (dtx, drx) = mpsc::channel::<Batch>();
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let h = thread::spawn(move || run(rx, dtx, m2, 2, Duration::from_millis(100)));
+        let (a, _ra) = item("m");
+        let (b, _rb) = item("m");
+        let (c, _rc) = item("m");
+        tx.send(a).unwrap();
+        tx.send(b).unwrap();
+        tx.send(c).unwrap();
+        // First two flush at max_batch = 2.
+        let batch = drx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.items.len(), 2);
+        drop(tx); // shutdown flushes the remainder
+        let tail = drx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(tail.items.len(), 1);
+        h.join().unwrap();
+        assert_eq!(metrics.snapshot().batches, 2);
+    }
+
+    #[test]
+    fn window_flushes_partial_batches() {
+        let (tx, rx) = mpsc::channel::<WorkItem>();
+        let (dtx, drx) = mpsc::channel::<Batch>();
+        let metrics = Arc::new(Metrics::default());
+        let h = thread::spawn(move || run(rx, dtx, metrics, 100, Duration::from_millis(5)));
+        let (a, _ra) = item("m");
+        tx.send(a).unwrap();
+        let batch = drx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.items.len(), 1);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn groups_by_model() {
+        let (tx, rx) = mpsc::channel::<WorkItem>();
+        let (dtx, drx) = mpsc::channel::<Batch>();
+        let metrics = Arc::new(Metrics::default());
+        let h = thread::spawn(move || run(rx, dtx, metrics, 10, Duration::from_millis(5)));
+        let (a, _ra) = item("x");
+        let (b, _rb) = item("y");
+        tx.send(a).unwrap();
+        tx.send(b).unwrap();
+        let b1 = drx.recv_timeout(Duration::from_secs(1)).unwrap();
+        let b2 = drx.recv_timeout(Duration::from_secs(1)).unwrap();
+        let mut models = vec![b1.model, b2.model];
+        models.sort();
+        assert_eq!(models, vec!["x".to_string(), "y".to_string()]);
+        assert_eq!(b1.items.len() + b2.items.len(), 2);
+        drop(tx);
+        h.join().unwrap();
+    }
+}

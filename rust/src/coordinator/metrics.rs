@@ -1,0 +1,126 @@
+//! Serving metrics: counters and latency aggregates.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics sink updated by the batcher and workers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    requests: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    batched_items: AtomicU64,
+    rejected: AtomicU64,
+    latency: Mutex<LatencyAgg>,
+}
+
+#[derive(Debug, Default)]
+struct LatencyAgg {
+    total_s: f64,
+    max_s: f64,
+    count: u64,
+}
+
+/// Point-in-time snapshot of the metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Requests accepted into the queue.
+    pub requests: u64,
+    /// Requests completed successfully.
+    pub completed: u64,
+    /// Requests that returned an error.
+    pub failed: u64,
+    /// Requests rejected by backpressure (queue full).
+    pub rejected: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Mean items per batch.
+    pub mean_batch_size: f64,
+    /// Mean end-to-end latency (seconds).
+    pub mean_latency_s: f64,
+    /// Max end-to-end latency (seconds).
+    pub max_latency_s: f64,
+}
+
+impl Metrics {
+    /// Record an accepted request.
+    pub fn on_accept(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Record a backpressure rejection.
+    pub fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Record a dispatched batch of `size` items.
+    pub fn on_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(size as u64, Ordering::Relaxed);
+    }
+    /// Record a completed request with its end-to-end latency.
+    pub fn on_complete(&self, latency: Duration, ok: bool) {
+        if ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut agg = self.latency.lock().unwrap();
+        let s = latency.as_secs_f64();
+        agg.total_s += s;
+        agg.count += 1;
+        if s > agg.max_s {
+            agg.max_s = s;
+        }
+    }
+
+    /// Take a snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let agg = self.latency.lock().unwrap();
+        let batches = self.batches.load(Ordering::Relaxed);
+        let items = self.batched_items.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches,
+            mean_batch_size: if batches > 0 {
+                items as f64 / batches as f64
+            } else {
+                0.0
+            },
+            mean_latency_s: if agg.count > 0 {
+                agg.total_s / agg.count as f64
+            } else {
+                0.0
+            },
+            max_latency_s: agg.max_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::default();
+        m.on_accept();
+        m.on_accept();
+        m.on_reject();
+        m.on_batch(2);
+        m.on_complete(Duration::from_millis(10), true);
+        m.on_complete(Duration::from_millis(30), false);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_batch_size - 2.0).abs() < 1e-12);
+        assert!((s.mean_latency_s - 0.020).abs() < 1e-6);
+        assert!((s.max_latency_s - 0.030).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,36 @@
+//! L3 coordinator: a threaded, batched inference server over equivariant
+//! models.
+//!
+//! The paper's contribution is an algorithm, so the coordinator is the
+//! serving shell a practitioner would deploy it in: requests enter a
+//! bounded queue (backpressure), a **batcher** groups them per model inside
+//! a time window, a **worker pool** executes batches — native diagram
+//! layers via the fast path, or AOT-compiled JAX/Pallas artifacts via PJRT
+//! — and per-request latency/throughput **metrics** are recorded. Rust owns
+//! the event loop; no python anywhere on this path.
+//!
+//! ```no_run
+//! use equidiag::coordinator::{Coordinator, ModelKind};
+//! use equidiag::config::ServerConfig;
+//! # use equidiag::{fastmult::Group, layer::Init, nn::{Activation, EquivariantNet}};
+//! # use equidiag::tensor::Tensor;
+//! # use equidiag::util::Rng;
+//! let mut rng = Rng::new(1);
+//! let net = EquivariantNet::new(Group::Symmetric, 4, &[2, 2], Activation::Relu,
+//!                               Init::ScaledNormal, &mut rng).unwrap();
+//! let mut coord = Coordinator::new(ServerConfig::default());
+//! coord.register("gnn", ModelKind::net(net));
+//! let handle = coord.start();
+//! let out = handle.infer("gnn", Tensor::random(4, 2, &mut rng)).unwrap();
+//! assert_eq!(out.order, 2);
+//! handle.shutdown();
+//! ```
+
+mod batcher;
+mod metrics;
+mod registry;
+mod server;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use registry::ModelKind;
+pub use server::{Coordinator, CoordinatorHandle};

@@ -1,0 +1,140 @@
+//! Model registry: named inference targets behind one coordinator.
+
+use crate::error::{Error, Result};
+use crate::nn::EquivariantNet;
+use crate::runtime::HloService;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A servable model: a native equivariant network (runs the fast diagram
+/// path) or a compiled HLO artifact (runs through the PJRT owner thread).
+#[derive(Debug, Clone)]
+pub enum ModelKind {
+    /// In-process equivariant network.
+    Net(Arc<EquivariantNet>),
+    /// AOT-compiled JAX/Pallas model (expects/returns the flattened tensor;
+    /// the artifact's first tuple output is used).
+    Hlo(HloService),
+}
+
+impl ModelKind {
+    /// Wrap a network.
+    pub fn net(net: EquivariantNet) -> Self {
+        ModelKind::Net(Arc::new(net))
+    }
+    /// Wrap an HLO service handle.
+    pub fn hlo(service: HloService) -> Self {
+        ModelKind::Hlo(service)
+    }
+
+    /// Run one input through the model.
+    pub fn infer(&self, input: &Tensor) -> Result<Tensor> {
+        match self {
+            ModelKind::Net(net) => {
+                if input.n != net.n() {
+                    return Err(Error::ShapeMismatch {
+                        expected: format!("tensors over R^{}", net.n()),
+                        got: format!("R^{}", input.n),
+                    });
+                }
+                net.forward(input)
+            }
+            ModelKind::Hlo(service) => {
+                // f64 tensor -> f32 PJRT literal, cube shape [n; order].
+                let dims: Vec<usize> = vec![input.n; input.order];
+                let data: Vec<f32> = input.data.iter().map(|&x| x as f32).collect();
+                let outs = service.run_f32(vec![(data, dims)])?;
+                let first = outs
+                    .into_iter()
+                    .next()
+                    .ok_or_else(|| Error::Runtime("artifact returned no outputs".into()))?;
+                // Infer the output order from the element count.
+                let len = first.len();
+                let mut order = 0usize;
+                let mut size = 1usize;
+                while size < len {
+                    size *= input.n;
+                    order += 1;
+                }
+                if size != len {
+                    return Err(Error::Runtime(format!(
+                        "artifact output length {len} is not a power of n={}",
+                        input.n
+                    )));
+                }
+                Tensor::from_vec(input.n, order, first.into_iter().map(f64::from).collect())
+            }
+        }
+    }
+}
+
+/// Named model registry shared across workers.
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    models: HashMap<String, ModelKind>,
+}
+
+impl Registry {
+    /// Register (or replace) a model under `name`.
+    pub fn insert(&mut self, name: &str, model: ModelKind) {
+        self.models.insert(name.to_string(), model);
+    }
+
+    /// Look up a model.
+    pub fn get(&self, name: &str) -> Result<&ModelKind> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::Coordinator(format!("unknown model '{name}'")))
+    }
+
+    /// Registered model names.
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(String::as_str).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastmult::Group;
+    use crate::layer::Init;
+    use crate::nn::Activation;
+    use crate::util::Rng;
+
+    #[test]
+    fn registry_lookup() {
+        let mut rng = Rng::new(401);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[1, 1],
+            Activation::Identity,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let mut reg = Registry::default();
+        reg.insert("m", ModelKind::net(net));
+        assert!(reg.get("m").is_ok());
+        assert!(reg.get("absent").is_err());
+        assert_eq!(reg.names(), vec!["m"]);
+    }
+
+    #[test]
+    fn net_infer_shape_check() {
+        let mut rng = Rng::new(402);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[1, 1],
+            Activation::Identity,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let kind = ModelKind::net(net);
+        assert!(kind.infer(&Tensor::zeros(4, 1)).is_err()); // wrong n
+        assert!(kind.infer(&Tensor::zeros(3, 1)).is_ok());
+    }
+}

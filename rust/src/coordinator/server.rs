@@ -1,0 +1,264 @@
+//! Coordinator assembly: queue → batcher → worker pool, plus the client
+//! handle.
+
+use super::batcher::{self, Batch, WorkItem};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::registry::{ModelKind, Registry};
+use crate::config::ServerConfig;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Builder for the serving engine: register models, then [`Coordinator::start`].
+#[derive(Debug, Default)]
+pub struct Coordinator {
+    config: ServerConfig,
+    registry: Registry,
+}
+
+impl Coordinator {
+    /// New coordinator with the given serving config.
+    pub fn new(config: ServerConfig) -> Self {
+        Coordinator {
+            config,
+            registry: Registry::default(),
+        }
+    }
+
+    /// Register a model under a route name.
+    pub fn register(&mut self, name: &str, model: ModelKind) {
+        self.registry.insert(name, model);
+    }
+
+    /// Registered route names (for startup logging / introspection).
+    pub fn routes(&self) -> Vec<&str> {
+        self.registry.names()
+    }
+
+    /// Spawn the batcher and worker threads; returns the client handle.
+    pub fn start(self) -> CoordinatorHandle {
+        let metrics = Arc::new(Metrics::default());
+        let (req_tx, req_rx) = mpsc::sync_channel::<WorkItem>(self.config.queue_capacity);
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let registry = Arc::new(self.registry);
+
+        let mut threads: Vec<JoinHandle<()>> = Vec::new();
+        {
+            let metrics = metrics.clone();
+            let max_batch = self.config.max_batch;
+            let window = self.config.batch_window;
+            threads.push(std::thread::spawn(move || {
+                batcher::run(req_rx, batch_tx, metrics, max_batch, window)
+            }));
+        }
+        for _ in 0..self.config.workers {
+            let rx = batch_rx.clone();
+            let reg = registry.clone();
+            let metrics = metrics.clone();
+            threads.push(std::thread::spawn(move || worker_loop(rx, reg, metrics)));
+        }
+
+        CoordinatorHandle {
+            sender: Some(req_tx),
+            metrics,
+            threads,
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Batch>>>,
+    registry: Arc<Registry>,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(b) => b,
+                Err(_) => return, // batcher gone: shutdown
+            }
+        };
+        let model = registry.get(&batch.model);
+        for item in batch.items {
+            let result = match &model {
+                Ok(m) => m.infer(&item.input),
+                Err(e) => Err(Error::Coordinator(e.to_string())),
+            };
+            let ok = result.is_ok();
+            metrics.on_complete(item.enqueued.elapsed(), ok);
+            let _ = item.respond.send(result);
+        }
+    }
+}
+
+/// Client handle to a running coordinator.
+pub struct CoordinatorHandle {
+    sender: Option<SyncSender<WorkItem>>,
+    metrics: Arc<Metrics>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl CoordinatorHandle {
+    /// Submit a request; returns a receiver for the response. Fails fast
+    /// with a backpressure error if the queue is full.
+    pub fn submit(&self, model: &str, input: Tensor) -> Result<Receiver<Result<Tensor>>> {
+        let (tx, rx) = mpsc::channel();
+        let item = WorkItem {
+            model: model.to_string(),
+            input,
+            enqueued: Instant::now(),
+            respond: tx,
+        };
+        let sender = self
+            .sender
+            .as_ref()
+            .ok_or_else(|| Error::Coordinator("coordinator is shut down".into()))?;
+        match sender.try_send(item) {
+            Ok(()) => {
+                self.metrics.on_accept();
+                Ok(rx)
+            }
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.on_reject();
+                Err(Error::Coordinator("queue full (backpressure)".into()))
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err(Error::Coordinator("coordinator is shut down".into()))
+            }
+        }
+    }
+
+    /// Blocking inference: submit and wait.
+    pub fn infer(&self, model: &str, input: Tensor) -> Result<Tensor> {
+        let rx = self.submit(model, input)?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("worker dropped the response".into()))?
+    }
+
+    /// Current metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown: close the queue and join all threads.
+    pub fn shutdown(mut self) {
+        self.sender.take(); // close the channel -> batcher + workers exit
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for CoordinatorHandle {
+    fn drop(&mut self) {
+        self.sender.take();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastmult::Group;
+    use crate::layer::Init;
+    use crate::nn::{Activation, EquivariantNet};
+    use crate::util::Rng;
+    use std::time::Duration;
+
+    fn test_net(rng: &mut Rng) -> EquivariantNet {
+        EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 2],
+            Activation::Relu,
+            Init::ScaledNormal,
+            rng,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_requests_correctly() {
+        let mut rng = Rng::new(501);
+        let net = test_net(&mut rng);
+        let reference = net.clone();
+        let mut coord = Coordinator::new(ServerConfig {
+            workers: 2,
+            max_batch: 4,
+            batch_window: Duration::from_micros(100),
+            queue_capacity: 64,
+        });
+        coord.register("m", ModelKind::net(net));
+        let handle = coord.start();
+        for _ in 0..20 {
+            let v = Tensor::random(3, 2, &mut rng);
+            let got = handle.infer("m", v.clone()).unwrap();
+            let want = reference.forward(&v).unwrap();
+            assert!(got.allclose(&want, 1e-12));
+        }
+        let snap = handle.metrics();
+        assert_eq!(snap.completed, 20);
+        assert_eq!(snap.failed, 0);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_fails_cleanly() {
+        let mut rng = Rng::new(502);
+        let mut coord = Coordinator::new(ServerConfig::default());
+        coord.register("m", ModelKind::net(test_net(&mut rng)));
+        let handle = coord.start();
+        let err = handle.infer("nope", Tensor::zeros(3, 2));
+        assert!(err.is_err());
+        assert_eq!(handle.metrics().failed, 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions() {
+        let mut rng = Rng::new(503);
+        let net = test_net(&mut rng);
+        let mut coord = Coordinator::new(ServerConfig {
+            workers: 4,
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+            queue_capacity: 256,
+        });
+        coord.register("m", ModelKind::net(net));
+        let handle = Arc::new(coord.start());
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let h = handle.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(600 + t);
+                for _ in 0..25 {
+                    let v = Tensor::random(3, 2, &mut rng);
+                    h.infer("m", v).unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = handle.metrics();
+        assert_eq!(snap.completed, 100);
+        assert!(snap.batches >= 1);
+        assert!(snap.mean_batch_size >= 1.0);
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let mut rng = Rng::new(504);
+        let mut coord = Coordinator::new(ServerConfig::default());
+        coord.register("m", ModelKind::net(test_net(&mut rng)));
+        let handle = coord.start();
+        handle.shutdown(); // must not hang
+    }
+}

@@ -1,0 +1,287 @@
+//! Categorical operations on partition diagrams.
+//!
+//! - [`compose`] — vertical composition `d2 • d1` (Definition 18): stack,
+//!   merge middle-row connections, drop components stranded in the middle
+//!   and record their count `c` so callers can apply the `n^c` scalar.
+//! - [`tensor_product`] — horizontal composition `d1 ⊗ d2` (Definition 19):
+//!   place side by side.
+//!
+//! Together with [`crate::functor`] these are exercised by the functoriality
+//! tests `Θ(d2 • d1) = Θ(d2)Θ(d1)` and `Θ(d1 ⊗ d2) = Θ(d1) ⊗ Θ(d2)` — the
+//! monoidal-functor laws (Theorem 27) that justify the whole fast algorithm.
+//!
+//! **Scope note**: [`compose`] implements the partition-category
+//! composition of Definition 18, which also covers the Brauer category
+//! (Brauer diagrams compose to a Brauer diagram times `n^c`). The
+//! Brauer–Grood category's *vertical* composition involving free-vertex
+//! `(l+k)\n`-diagrams follows the Lehrer–Zhang rules (extra vanishing
+//! conditions and scalars beyond `n^c`) that the paper itself omits
+//! (Definition 23 is stated "framework only"); we follow the paper and do
+//! not implement it — `H_α` diagrams are only ever *applied* (Algorithm 1)
+//! and tensored, never vertically composed.
+
+use super::Diagram;
+use crate::error::{Error, Result};
+
+/// Result of `d2 • d1`: the concatenated diagram and the number of removed
+/// middle components (the exponent of the `n^c` scalar in Definition 18).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Composed {
+    /// The `(k,m)`-partition diagram `d2 ∘ d1`.
+    pub diagram: Diagram,
+    /// Number of connected components removed from the middle row.
+    pub removed_components: usize,
+}
+
+/// Union-find with path compression.
+struct Dsu {
+    parent: Vec<usize>,
+}
+
+impl Dsu {
+    fn new(n: usize) -> Self {
+        Dsu {
+            parent: (0..n).collect(),
+        }
+    }
+    fn find(&mut self, x: usize) -> usize {
+        if self.parent[x] != x {
+            let r = self.find(self.parent[x]);
+            self.parent[x] = r;
+        }
+        self.parent[x]
+    }
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[ra] = rb;
+        }
+    }
+}
+
+/// Vertical composition `d2 • d1` where `d1 : k → l` and `d2 : l → m`
+/// (Definition 18). Errors if the middle orders disagree.
+pub fn compose(d2: &Diagram, d1: &Diagram) -> Result<Composed> {
+    if d2.k != d1.l {
+        return Err(Error::ShapeMismatch {
+            expected: format!("d2.k == d1.l (middle row), d2.k = {}", d2.k),
+            got: format!("d1.l = {}", d1.l),
+        });
+    }
+    let m = d2.l; // final top
+    let l = d2.k; // middle
+    let k = d1.k; // final bottom
+
+    // Vertex ids in the stacked picture:
+    //   0..m            — final top row (d2's top)
+    //   m..m+l          — middle row (d2's bottom == d1's top)
+    //   m+l..m+l+k      — final bottom row (d1's bottom)
+    let total = m + l + k;
+    let mut dsu = Dsu::new(total);
+
+    for b in d2.blocks() {
+        // d2's own labels: top 0..m, bottom m..m+l — already aligned.
+        for w in b.windows(2) {
+            dsu.union(w[0], w[1]);
+        }
+    }
+    for b in d1.blocks() {
+        // d1's labels: top 0..l -> middle m..m+l; bottom l..l+k -> m+l..
+        let map = |v: usize| if v < l { m + v } else { m + v }; // same shift
+        for w in b.windows(2) {
+            dsu.union(map(w[0]), map(w[1]));
+        }
+        if b.len() == 1 {
+            // singleton: nothing to union, but the vertex exists already
+            let _ = map(b[0]);
+        }
+    }
+
+    // Gather components.
+    let mut comp_members: std::collections::HashMap<usize, Vec<usize>> =
+        std::collections::HashMap::new();
+    for v in 0..total {
+        let r = dsu.find(v);
+        comp_members.entry(r).or_default().push(v);
+    }
+
+    let mut removed = 0usize;
+    let mut blocks: Vec<Vec<usize>> = Vec::new();
+    for (_, members) in comp_members {
+        // Project away the middle row.
+        let projected: Vec<usize> = members
+            .iter()
+            .filter(|&&v| v < m || v >= m + l)
+            .map(|&v| if v < m { v } else { v - l })
+            .collect();
+        if projected.is_empty() {
+            removed += 1;
+        } else {
+            blocks.push(projected);
+        }
+    }
+
+    Ok(Composed {
+        diagram: Diagram::from_blocks(m, k, blocks)?,
+        removed_components: removed,
+    })
+}
+
+/// Horizontal composition `d1 ⊗ d2` (Definition 19): `d1 : k → l` and
+/// `d2 : q → m` side by side give a `(k+q, l+m)`-diagram, `d1` on the left.
+pub fn tensor_product(d1: &Diagram, d2: &Diagram) -> Diagram {
+    let (l, k) = (d1.l, d1.k);
+    let (m, q) = (d2.l, d2.k);
+    let mut blocks: Vec<Vec<usize>> = Vec::new();
+    for b in d1.blocks() {
+        // d1 top stays 0..l; d1 bottom l..l+k shifts past d2's top (m).
+        blocks.push(b.iter().map(|&v| if v < l { v } else { v + m }).collect());
+    }
+    for b in d2.blocks() {
+        // d2 top 0..m -> l..l+m; d2 bottom m..m+q -> l+m+k..l+m+k+q.
+        blocks.push(
+            b.iter()
+                .map(|&v| if v < m { l + v } else { v + l + k })
+                .collect(),
+        );
+    }
+    Diagram::from_blocks(l + m, k + q, blocks).expect("tensor product of valid diagrams is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// The paper's Example 4: composing the (6,4) diagram with the (3,6)
+    /// diagram removes two middle components.
+    #[test]
+    fn example4_removed_components() {
+        // d_pi2: (6,4)-partition diagram from Example 2:
+        //   {1,2,5,7 | 3,4,10 | 6,8 | 9}  (1-based, top 1..4, bottom 5..10)
+        let d2 = Diagram::from_blocks(
+            4,
+            6,
+            vec![vec![0, 1, 4, 6], vec![2, 3, 9], vec![5, 7], vec![8]],
+        )
+        .unwrap();
+        // d_pi1: a (3,6)-partition diagram (the paper's is given as a
+        // picture; this one is chosen so that, as in Example 4, exactly two
+        // connected components sit entirely in the middle after stacking:
+        // d2's bottom blocks {6,8} and {9} meet only d1 singletons).
+        let d1 = Diagram::from_blocks(
+            6,
+            3,
+            vec![vec![1], vec![3], vec![4], vec![0, 6], vec![2, 5], vec![7, 8]],
+        )
+        .unwrap();
+        let c = compose(&d2, &d1).unwrap();
+        assert_eq!(c.diagram.l, 4);
+        assert_eq!(c.diagram.k, 3);
+        assert_eq!(c.removed_components, 2);
+        // The surviving blocks: the big top component picks up bottom vertex
+        // 1 (0-based 4 in the stacked result) and d1's bottom pair survives.
+        let want =
+            Diagram::from_blocks(4, 3, vec![vec![0, 1, 2, 3, 4], vec![5, 6]]).unwrap();
+        assert_eq!(c.diagram, want);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            let d = Diagram::random_partition(3, 4, &mut rng);
+            let left = compose(&Diagram::identity(d.l), &d).unwrap();
+            assert_eq!(left.diagram, d);
+            assert_eq!(left.removed_components, 0);
+            let right = compose(&d, &Diagram::identity(d.k)).unwrap();
+            assert_eq!(right.diagram, d);
+            assert_eq!(right.removed_components, 0);
+        }
+    }
+
+    #[test]
+    fn composition_is_associative_up_to_scalar() {
+        // (d3 • d2) • d1 == d3 • (d2 • d1) and the total scalar agrees.
+        let mut rng = Rng::new(8);
+        for _ in 0..30 {
+            let d1 = Diagram::random_partition(3, 2, &mut rng); // 2 -> 3
+            let d2 = Diagram::random_partition(2, 3, &mut rng); // 3 -> 2
+            let d3 = Diagram::random_partition(3, 2, &mut rng); // 2 -> 3
+            let left_inner = compose(&d3, &d2).unwrap();
+            let left = compose(&left_inner.diagram, &d1).unwrap();
+            let right_inner = compose(&d2, &d1).unwrap();
+            let right = compose(&d3, &right_inner.diagram).unwrap();
+            assert_eq!(left.diagram, right.diagram);
+            assert_eq!(
+                left_inner.removed_components + left.removed_components,
+                right_inner.removed_components + right.removed_components
+            );
+        }
+    }
+
+    #[test]
+    fn compose_shape_mismatch_errors() {
+        let a = Diagram::identity(2);
+        let b = Diagram::identity(3);
+        assert!(compose(&a, &b).is_err());
+    }
+
+    #[test]
+    fn permutation_composition_matches_group_law() {
+        // permutation diagrams compose contravariantly or covariantly —
+        // pin the convention: perm diagram P(σ) has top i joined to bottom
+        // σ(i); stacking P(σ) over P(τ) joins top i → middle σ(i) → bottom
+        // τ(σ(i)), i.e. P(σ) • P(τ) = P(τ ∘ σ).
+        let sigma = vec![1, 2, 0];
+        let tau = vec![2, 0, 1];
+        let comp = compose(&Diagram::permutation(&sigma), &Diagram::permutation(&tau)).unwrap();
+        let want: Vec<usize> = (0..3).map(|i| tau[sigma[i]]).collect();
+        assert_eq!(comp.diagram, Diagram::permutation(&want));
+        assert_eq!(comp.removed_components, 0);
+    }
+
+    #[test]
+    fn tensor_product_example5_shape() {
+        // Example 5: (6,4) ⊗ (3,6) = (9,10)-partition diagram.
+        let d2 = Diagram::from_blocks(
+            4,
+            6,
+            vec![vec![0, 1, 4, 6], vec![2, 3, 9], vec![5, 7], vec![8]],
+        )
+        .unwrap();
+        let d1 = Diagram::from_blocks(
+            6,
+            3,
+            vec![vec![0, 6], vec![1, 2], vec![3], vec![4, 5], vec![7, 8]],
+        )
+        .unwrap();
+        let t = tensor_product(&d1, &d2);
+        assert_eq!(t.l, 6 + 4);
+        assert_eq!(t.k, 3 + 6);
+        assert_eq!(t.num_blocks(), d1.num_blocks() + d2.num_blocks());
+    }
+
+    #[test]
+    fn tensor_product_with_empty_diagram_is_identity_op() {
+        let mut rng = Rng::new(10);
+        let d = Diagram::random_partition(2, 3, &mut rng);
+        let unit = Diagram::from_blocks(0, 0, vec![]).unwrap();
+        assert_eq!(tensor_product(&d, &unit), d);
+        assert_eq!(tensor_product(&unit, &d), d);
+    }
+
+    #[test]
+    fn tensor_product_associative() {
+        let mut rng = Rng::new(12);
+        for _ in 0..20 {
+            let a = Diagram::random_partition(1, 2, &mut rng);
+            let b = Diagram::random_partition(2, 1, &mut rng);
+            let c = Diagram::random_partition(1, 1, &mut rng);
+            assert_eq!(
+                tensor_product(&tensor_product(&a, &b), &c),
+                tensor_product(&a, &tensor_product(&b, &c))
+            );
+        }
+    }
+}

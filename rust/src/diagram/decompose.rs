@@ -1,0 +1,189 @@
+//! Tensor-product decomposition of diagrams (§4.4, implication 3).
+//!
+//! If a `(k,l)`-partition diagram splits as `d = d₁ ⊗ d₂ ⊗ …` then, because
+//! the functors are monoidal, its matrix is the Kronecker product
+//! `F(d) = F(d₁) ⊗ F(d₂) ⊗ …` of smaller equivariant matrices. The maximal
+//! such decomposition cuts the diagram at every *separating column*: a
+//! position where no block spans the cut in either row.
+
+use super::Diagram;
+
+/// Split `d` into its maximal tensor-product factors, left to right.
+/// Always non-empty; a diagram with no separating column returns `[d]`.
+///
+/// A cut after top position `a` and bottom position `b` is valid iff every
+/// block lies entirely left (top < a, bottom < b) or entirely right of it,
+/// and cuts must be consistent: we sweep blocks by their leftmost vertex
+/// and close a factor whenever all blocks seen so far are exhausted.
+pub fn tensor_factors(d: &Diagram) -> Vec<Diagram> {
+    let (l, k) = (d.l, d.k);
+    if d.num_blocks() == 0 {
+        return vec![d.clone()];
+    }
+    // For a candidate cut (a, b): all blocks must avoid straddling.
+    // Enumerate cuts greedily: scan candidate (a, b) pairs in order of
+    // a + b and take every valid cut — valid cuts are nested so greedy
+    // left-to-right works.
+    let mut cuts: Vec<(usize, usize)> = Vec::new(); // (top cut, bottom cut)
+    for a in 0..=l {
+        for b in 0..=k {
+            if (a, b) == (0, 0) || (a, b) == (l, k) {
+                continue;
+            }
+            let valid = d.blocks().iter().all(|blk| {
+                let left = blk
+                    .iter()
+                    .all(|&v| if v < l { v < a } else { v - l < b });
+                let right = blk
+                    .iter()
+                    .all(|&v| if v < l { v >= a } else { v - l >= b });
+                left || right
+            });
+            if valid {
+                cuts.push((a, b));
+            }
+        }
+    }
+    cuts.sort();
+    cuts.dedup();
+    // Valid cuts may be pairwise incomparable (e.g. a lone top vertex next
+    // to a lone bottom vertex admits both (0,1) and (1,0)); keep a maximal
+    // monotone chain — any chain recomposes correctly, greedy-lex picks
+    // one deterministically.
+    let mut chain: Vec<(usize, usize)> = vec![(0, 0)];
+    for &(a, b) in &cuts {
+        let &(pa, pb) = chain.last().unwrap();
+        if a >= pa && b >= pb {
+            chain.push((a, b));
+        }
+    }
+    chain.push((l, k));
+    chain.dedup();
+    let boundaries = chain;
+    let mut factors = Vec::new();
+    for w in boundaries.windows(2) {
+        let (a0, b0) = w[0];
+        let (a1, b1) = w[1];
+        let fl = a1 - a0;
+        let fk = b1 - b0;
+        if fl == 0 && fk == 0 {
+            continue;
+        }
+        let blocks: Vec<Vec<usize>> = d
+            .blocks()
+            .iter()
+            .filter(|blk| {
+                blk.iter().all(|&v| {
+                    if v < l {
+                        v >= a0 && v < a1
+                    } else {
+                        v - l >= b0 && v - l < b1
+                    }
+                })
+            })
+            .map(|blk| {
+                blk.iter()
+                    .map(|&v| {
+                        if v < l {
+                            v - a0
+                        } else {
+                            fl + (v - l - b0)
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        factors.push(
+            Diagram::from_blocks(fl, fk, blocks)
+                .expect("factor blocks partition their interval"),
+        );
+    }
+    if factors.is_empty() {
+        vec![d.clone()]
+    } else {
+        factors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::compose::tensor_product;
+    use super::*;
+    use crate::fastmult::Group;
+    use crate::functor::materialize;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_splits_into_single_strands() {
+        let d = Diagram::identity(4);
+        let f = tensor_factors(&d);
+        assert_eq!(f.len(), 4);
+        for x in &f {
+            assert_eq!(*x, Diagram::identity(1));
+        }
+    }
+
+    #[test]
+    fn indecomposable_diagram_returns_itself() {
+        // A single block spanning everything cannot be cut.
+        let d = Diagram::from_blocks(2, 2, vec![vec![0, 1, 2, 3]]).unwrap();
+        let f = tensor_factors(&d);
+        assert_eq!(f, vec![d]);
+    }
+
+    #[test]
+    fn factors_recompose_to_original() {
+        let mut rng = Rng::new(0xDEC0);
+        for _ in 0..100 {
+            let l = rng.below(5);
+            let k = rng.below(5);
+            let d = Diagram::random_partition(l, k, &mut rng);
+            let factors = tensor_factors(&d);
+            let mut acc = Diagram::from_blocks(0, 0, vec![]).unwrap();
+            for f in &factors {
+                acc = tensor_product(&acc, f);
+            }
+            assert_eq!(acc, d, "recompose failed for {d}");
+        }
+    }
+
+    /// §4.4 implication 3: the matrix of a decomposable diagram is the
+    /// Kronecker product of its factors' matrices.
+    #[test]
+    fn matrix_is_kronecker_of_factors() {
+        let n = 2;
+        // d = ({top pair} over {}) ⊗ identity(1): decomposable by design.
+        let d = Diagram::from_blocks(3, 1, vec![vec![0, 1], vec![2, 3]]).unwrap();
+        let factors = tensor_factors(&d);
+        assert!(factors.len() >= 2, "expected a split, got {factors:?}");
+        let whole = materialize(Group::Symmetric, &d, n).unwrap();
+        // Kron of factor matrices.
+        let mut acc = crate::linalg::Matrix::identity(1);
+        for f in &factors {
+            let m = materialize(Group::Symmetric, f, n).unwrap();
+            let mut next = crate::linalg::Matrix::zeros(acc.rows * m.rows, acc.cols * m.cols);
+            for i in 0..acc.rows {
+                for j in 0..acc.cols {
+                    let v = acc.get(i, j);
+                    if v == 0.0 {
+                        continue;
+                    }
+                    for p in 0..m.rows {
+                        for q in 0..m.cols {
+                            next.set(i * m.rows + p, j * m.cols + q, v * m.get(p, q));
+                        }
+                    }
+                }
+            }
+            acc = next;
+        }
+        assert!(whole.max_abs_diff(&acc) < 1e-12);
+    }
+
+    #[test]
+    fn crossing_blocks_prevent_cuts() {
+        // Cross pattern {0,3},{1,2}: no separating column exists.
+        let d = Diagram::from_blocks(2, 2, vec![vec![0, 3], vec![1, 2]]).unwrap();
+        assert_eq!(tensor_factors(&d).len(), 1);
+    }
+}

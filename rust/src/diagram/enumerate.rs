@@ -1,0 +1,319 @@
+//! Enumeration of the spanning families of Theorems 5, 7, 9 and 11, plus
+//! the combinatorial counting functions used to cross-check them:
+//!
+//! - all `(k,l)`-partition diagrams (optionally with at most `n` blocks) —
+//!   the S_n diagram basis of size `B(l+k, n) = Σ_{t≤n} S(l+k, t)`,
+//! - all `(k,l)`-Brauer diagrams — the O(n)/Sp(n) spanning set of size
+//!   `(l+k-1)!!`,
+//! - all `(l+k)\n`-diagrams — the extra SO(n) spanning elements.
+
+use super::Diagram;
+use crate::error::{Error, Result};
+
+/// Stirling number of the second kind `S(m, t)` — partitions of `m` labelled
+/// elements into exactly `t` non-empty blocks.
+pub fn stirling2(m: usize, t: usize) -> u128 {
+    if m == 0 && t == 0 {
+        return 1;
+    }
+    if m == 0 || t == 0 || t > m {
+        return 0;
+    }
+    // S(m, t) = t·S(m-1, t) + S(m-1, t-1)
+    let mut row: Vec<u128> = vec![0; t + 1];
+    row[0] = 1; // S(0,0)
+    for mi in 1..=m {
+        let hi = t.min(mi);
+        for ti in (1..=hi).rev() {
+            row[ti] = (ti as u128) * row[ti] + row[ti - 1];
+        }
+        row[0] = 0;
+    }
+    row[t]
+}
+
+/// Bounded Bell number `B(m, n) = Σ_{t=1}^{n} S(m, t)` — the size of the
+/// S_n diagram basis for `m = l + k` (Theorem 5). `B(0, n) = 1` (the empty
+/// partition).
+pub fn bell_bounded(m: usize, n: usize) -> u128 {
+    if m == 0 {
+        return 1;
+    }
+    (1..=n.min(m)).map(|t| stirling2(m, t)).sum()
+}
+
+/// Double factorial `(m)!! = m (m-2) (m-4) …` with `0!! = (-1)!! = 1`; the
+/// Brauer spanning set for `l + k = m + 1` even has size `(l+k-1)!!`.
+pub fn double_factorial(m: isize) -> u128 {
+    if m <= 0 {
+        return 1;
+    }
+    let mut acc: u128 = 1;
+    let mut x = m as u128;
+    loop {
+        acc *= x;
+        if x <= 2 {
+            break;
+        }
+        x -= 2;
+    }
+    acc
+}
+
+/// All `(k,l)`-partition diagrams, optionally restricted to at most
+/// `max_blocks` blocks (pass `Some(n)` to get the S_n *basis* of Theorem 5
+/// rather than the full spanning set).
+pub fn all_partition_diagrams(l: usize, k: usize, max_blocks: Option<usize>) -> Vec<Diagram> {
+    let total = l + k;
+    let mut out = Vec::new();
+    if total == 0 {
+        out.push(Diagram::from_blocks(l, k, vec![]).unwrap());
+        return out;
+    }
+    // Enumerate restricted growth strings.
+    let mut assignment = vec![0usize; total];
+    fn rec(
+        v: usize,
+        num_blocks: usize,
+        assignment: &mut Vec<usize>,
+        l: usize,
+        k: usize,
+        cap: usize,
+        out: &mut Vec<Diagram>,
+    ) {
+        let total = l + k;
+        if v == total {
+            let mut blocks: Vec<Vec<usize>> = vec![Vec::new(); num_blocks];
+            for (i, &c) in assignment.iter().enumerate() {
+                blocks[c].push(i);
+            }
+            out.push(Diagram::from_blocks(l, k, blocks).unwrap());
+            return;
+        }
+        let hi = (num_blocks + 1).min(cap);
+        for c in 0..hi {
+            assignment[v] = c;
+            rec(
+                v + 1,
+                num_blocks.max(c + 1),
+                assignment,
+                l,
+                k,
+                cap,
+                out,
+            );
+        }
+    }
+    let cap = max_blocks.unwrap_or(total);
+    rec(1.min(total), 1, &mut assignment, l, k, cap, &mut out);
+    out
+}
+
+/// All `(k,l)`-Brauer diagrams (perfect matchings of `l + k` vertices).
+/// Empty when `l + k` is odd, matching Theorem 7's size-0 case.
+pub fn all_brauer_diagrams(l: usize, k: usize) -> Vec<Diagram> {
+    let total = l + k;
+    if total % 2 != 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut used = vec![false; total];
+    let mut pairs: Vec<Vec<usize>> = Vec::new();
+    fn rec(
+        used: &mut Vec<bool>,
+        pairs: &mut Vec<Vec<usize>>,
+        l: usize,
+        k: usize,
+        out: &mut Vec<Diagram>,
+    ) {
+        let total = l + k;
+        // Find the first unused vertex; pair it with every later unused one.
+        let first = match used.iter().position(|&u| !u) {
+            None => {
+                out.push(Diagram::from_blocks(l, k, pairs.clone()).unwrap());
+                return;
+            }
+            Some(f) => f,
+        };
+        used[first] = true;
+        for p in (first + 1)..total {
+            if used[p] {
+                continue;
+            }
+            used[p] = true;
+            pairs.push(vec![first, p]);
+            rec(used, pairs, l, k, out);
+            pairs.pop();
+            used[p] = false;
+        }
+        used[first] = false;
+    }
+    rec(&mut used, &mut pairs, l, k, &mut out);
+    out
+}
+
+/// All `(l+k)\n`-diagrams: exactly `n` free vertices, the remaining
+/// `l + k - n` perfectly matched. Errors if `l + k - n` is odd or negative.
+pub fn all_jellyfish_diagrams(l: usize, k: usize, n: usize) -> Result<Vec<Diagram>> {
+    let total = l + k;
+    if n > total || (total - n) % 2 != 0 {
+        return Err(Error::DimensionConstraint(format!(
+            "(l+k)\\n-diagrams need l+k-n even and >= 0; l+k={total}, n={n}"
+        )));
+    }
+    let mut out = Vec::new();
+    // Choose the free set, then match the rest.
+    let mut free: Vec<usize> = Vec::new();
+    fn choose(
+        start: usize,
+        remaining: usize,
+        total: usize,
+        free: &mut Vec<usize>,
+        l: usize,
+        k: usize,
+        out: &mut Vec<Diagram>,
+    ) {
+        if remaining == 0 {
+            let freeset: std::collections::HashSet<usize> = free.iter().copied().collect();
+            let rest: Vec<usize> = (0..total).filter(|v| !freeset.contains(v)).collect();
+            let mut pairs: Vec<Vec<usize>> = Vec::new();
+            match_rest(&rest, 0, &mut vec![false; rest.len()], &mut pairs, free, l, k, out);
+            return;
+        }
+        for v in start..=(total - remaining) {
+            free.push(v);
+            choose(v + 1, remaining - 1, total, free, l, k, out);
+            free.pop();
+        }
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn match_rest(
+        rest: &[usize],
+        _from: usize,
+        used: &mut Vec<bool>,
+        pairs: &mut Vec<Vec<usize>>,
+        free: &Vec<usize>,
+        l: usize,
+        k: usize,
+        out: &mut Vec<Diagram>,
+    ) {
+        let first = match used.iter().position(|&u| !u) {
+            None => {
+                let mut blocks: Vec<Vec<usize>> = free.iter().map(|&v| vec![v]).collect();
+                blocks.extend(pairs.iter().cloned());
+                out.push(Diagram::from_blocks(l, k, blocks).unwrap());
+                return;
+            }
+            Some(f) => f,
+        };
+        used[first] = true;
+        for p in (first + 1)..rest.len() {
+            if used[p] {
+                continue;
+            }
+            used[p] = true;
+            pairs.push(vec![rest[first], rest[p]]);
+            match_rest(rest, 0, used, pairs, free, l, k, out);
+            pairs.pop();
+            used[p] = false;
+        }
+        used[first] = false;
+    }
+    choose(0, n, total, &mut free, l, k, &mut out);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stirling_known_values() {
+        assert_eq!(stirling2(0, 0), 1);
+        assert_eq!(stirling2(4, 2), 7);
+        assert_eq!(stirling2(5, 3), 25);
+        assert_eq!(stirling2(3, 5), 0);
+        assert_eq!(stirling2(6, 1), 1);
+        assert_eq!(stirling2(6, 6), 1);
+    }
+
+    #[test]
+    fn bell_bounded_matches_full_bell_when_unbounded() {
+        // Bell numbers: 1, 1, 2, 5, 15, 52, 203, 877
+        let bell = [1u128, 1, 2, 5, 15, 52, 203, 877];
+        for (m, &b) in bell.iter().enumerate() {
+            assert_eq!(bell_bounded(m, m.max(1)), b, "Bell({m})");
+        }
+        // Bounded: B(4, 2) = S(4,1) + S(4,2) = 1 + 7 = 8
+        assert_eq!(bell_bounded(4, 2), 8);
+    }
+
+    #[test]
+    fn double_factorial_values() {
+        assert_eq!(double_factorial(-1), 1);
+        assert_eq!(double_factorial(0), 1);
+        assert_eq!(double_factorial(5), 15);
+        assert_eq!(double_factorial(7), 105);
+        assert_eq!(double_factorial(9), 945);
+    }
+
+    #[test]
+    fn partition_diagram_counts_match_bell() {
+        // Theorem 5: count of (k,l)-partition diagrams with at most n blocks
+        // is B(l+k, n).
+        for (l, k) in [(0usize, 2usize), (1, 2), (2, 2), (1, 3)] {
+            let all = all_partition_diagrams(l, k, None);
+            assert_eq!(all.len() as u128, bell_bounded(l + k, l + k), "({l},{k})");
+            for n in 1..=(l + k) {
+                let bounded = all_partition_diagrams(l, k, Some(n));
+                assert_eq!(bounded.len() as u128, bell_bounded(l + k, n), "n={n}");
+                assert!(bounded.iter().all(|d| d.num_blocks() <= n));
+            }
+        }
+    }
+
+    #[test]
+    fn partition_diagrams_distinct() {
+        let all = all_partition_diagrams(2, 2, None);
+        let set: std::collections::HashSet<_> = all.iter().cloned().collect();
+        assert_eq!(set.len(), all.len());
+    }
+
+    #[test]
+    fn brauer_counts_match_double_factorial() {
+        // Theorem 7: (l+k-1)!! diagrams when l+k even, 0 when odd.
+        assert_eq!(all_brauer_diagrams(1, 2).len(), 0);
+        for (l, k) in [(1usize, 1usize), (2, 2), (3, 1), (3, 3), (2, 4)] {
+            let count = all_brauer_diagrams(l, k).len() as u128;
+            assert_eq!(count, double_factorial((l + k) as isize - 1), "({l},{k})");
+        }
+    }
+
+    #[test]
+    fn brauer_diagrams_are_brauer() {
+        for d in all_brauer_diagrams(2, 2) {
+            assert!(d.is_brauer());
+        }
+    }
+
+    #[test]
+    fn jellyfish_counts() {
+        // count = C(l+k, n) * (l+k-n-1)!!
+        let n = 3;
+        let (l, k) = (2usize, 3usize); // l+k-n = 2, even
+        let all = all_jellyfish_diagrams(l, k, n).unwrap();
+        let choose_5_3 = 10u128;
+        assert_eq!(all.len() as u128, choose_5_3 * double_factorial(1));
+        for d in &all {
+            assert!(d.is_jellyfish(n));
+        }
+        assert!(all_jellyfish_diagrams(2, 2, 3).is_err()); // parity violation
+    }
+
+    #[test]
+    fn empty_diagram_enumeration() {
+        let all = all_partition_diagrams(0, 0, None);
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].num_blocks(), 0);
+    }
+}

@@ -1,0 +1,370 @@
+//! The paper's **Factor** procedure (§5.2, Figures 1, 4, 7).
+//!
+//! `Factor` drags the strings of a `(k,l)`-partition diagram to express it
+//! as `σ_l ∘ d_planar ∘ σ_k`: a permutation of the input axes, an
+//! algorithmically planar middle diagram, and a permutation of the output
+//! axes. The permutations are memory moves (the paper's `Permute`); all
+//! arithmetic happens in the planar middle.
+//!
+//! The returned [`Factored`] carries the two permutations in the exact form
+//! [`crate::tensor::Tensor::permute_axes`] consumes, plus a [`PlanarLayout`]
+//! describing the middle diagram by block sizes only — which is all
+//! `PlanarMult` needs.
+
+use super::{BlockKind, Diagram};
+use crate::error::{Error, Result};
+
+/// Structural description of an algorithmically planar diagram: block sizes
+/// in planar (left→right) order. `PlanarMult` is driven entirely by this.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanarLayout {
+    /// Top row length `l`.
+    pub l: usize,
+    /// Bottom row length `k`.
+    pub k: usize,
+    /// Sizes of top-row-only blocks, planar order (far left of the top row).
+    pub top_blocks: Vec<usize>,
+    /// `(upper size, lower size)` of cross blocks, planar order. For Brauer
+    /// diagrams every entry is `(1, 1)`.
+    pub cross_blocks: Vec<(usize, usize)>,
+    /// Sizes of bottom-row-only blocks, planar order left→right
+    /// (non-decreasing, per Definition 31 — largest block at the far right).
+    pub bottom_blocks: Vec<usize>,
+    /// Number of free vertices at the far right of the top row (`s`);
+    /// zero for non-jellyfish diagrams.
+    pub free_top: usize,
+    /// Number of free vertices at the far right of the bottom row
+    /// (`n - s`); zero for non-jellyfish diagrams.
+    pub free_bottom: usize,
+}
+
+impl PlanarLayout {
+    /// Number of cross blocks `d`.
+    pub fn d(&self) -> usize {
+        self.cross_blocks.len()
+    }
+    /// Number of top-only blocks `t`.
+    pub fn t(&self) -> usize {
+        self.top_blocks.len()
+    }
+    /// Number of bottom-only blocks `b`.
+    pub fn b(&self) -> usize {
+        self.bottom_blocks.len()
+    }
+}
+
+/// Result of `Factor`: `d == σ_l ∘ d_planar ∘ σ_k` (Figure 1).
+#[derive(Debug, Clone)]
+pub struct Factored {
+    /// Input axis permutation: planar bottom axis `q` carries original
+    /// input axis `perm_in[q]`. Apply as `v.permute_axes(&perm_in)` — this
+    /// is `Permute(v, σ_k)`.
+    pub perm_in: Vec<usize>,
+    /// Output axis permutation: final output axis `p` carries planar top
+    /// axis `perm_out[p]`. Apply as `w.permute_axes(&perm_out)` — this is
+    /// `Permute(w, σ_l)`.
+    pub perm_out: Vec<usize>,
+    /// The algorithmically planar middle diagram (kept for verification and
+    /// display; `PlanarMult` uses only `layout`).
+    pub planar: Diagram,
+    /// Block-size description of `planar`.
+    pub layout: PlanarLayout,
+}
+
+/// Factor a `(k,l)`-partition diagram (S_n semantics: singleton blocks are
+/// ordinary one-vertex blocks, not free vertices). Also correct for Brauer
+/// diagrams, where every block has size 2 (O(n) / Sp(n) / SO(n)-E_β cases).
+pub fn factor(d: &Diagram) -> Factored {
+    build(d, None).expect("factor of a partition diagram cannot fail")
+}
+
+/// Factor an `(l+k)\n`-diagram (SO(n)-H_α case, Figure 7): singleton blocks
+/// are free vertices and are pulled to the far right of their rows,
+/// preserving their order.
+pub fn factor_jellyfish(d: &Diagram, n: usize) -> Result<Factored> {
+    if !d.is_jellyfish(n) {
+        return Err(Error::InvalidDiagramForGroup {
+            group: "SO(n)".into(),
+            reason: format!("not an (l+k)\\{n}-diagram"),
+        });
+    }
+    build(d, Some(n))
+}
+
+fn build(d: &Diagram, jellyfish_n: Option<usize>) -> Result<Factored> {
+    let (l, k) = (d.l, d.k);
+
+    // --- Classify blocks -------------------------------------------------
+    let mut top_blocks: Vec<&Vec<usize>> = Vec::new(); // top-row-only
+    let mut cross_blocks: Vec<&Vec<usize>> = Vec::new();
+    let mut bottom_blocks: Vec<&Vec<usize>> = Vec::new();
+    let mut free_top: Vec<usize> = Vec::new();
+    let mut free_bottom: Vec<usize> = Vec::new();
+    for b in d.blocks() {
+        if jellyfish_n.is_some() && b.len() == 1 {
+            let v = b[0];
+            if v < l {
+                free_top.push(v);
+            } else {
+                free_bottom.push(v);
+            }
+            continue;
+        }
+        match d.block_kind(b) {
+            BlockKind::Top => top_blocks.push(b),
+            BlockKind::Bottom => bottom_blocks.push(b),
+            BlockKind::Cross => cross_blocks.push(b),
+        }
+    }
+    free_top.sort_unstable();
+    free_bottom.sort_unstable();
+
+    // Blocks are already ordered by min vertex (Diagram normalisation).
+    // Bottom-only blocks must be re-ordered ascending by size
+    // (|B_1| ≤ … ≤ |B_b| left→right, eq. 92) — stable, so ties keep their
+    // original relative order.
+    bottom_blocks.sort_by_key(|b| b.len());
+
+    // --- Assign planar positions -----------------------------------------
+    // Top row: [T_1 … T_t | D_1^U … D_d^U | TF_1 … TF_s]
+    // Bottom:  [D_1^L … D_d^L | B_1 … B_b | BF_1 … BF_{n-s}]
+    let mut perm_out = vec![usize::MAX; l]; // original top pos -> planar slot
+    let mut perm_in = vec![usize::MAX; k]; // planar bottom slot -> original pos
+    let mut planar_blocks: Vec<Vec<usize>> = Vec::new();
+
+    let mut top_slot = 0usize;
+    for b in &top_blocks {
+        let mut pb = Vec::with_capacity(b.len());
+        for &v in b.iter() {
+            perm_out[v] = top_slot;
+            pb.push(top_slot);
+            top_slot += 1;
+        }
+        planar_blocks.push(pb);
+    }
+    let mut bottom_slot = 0usize;
+    for b in &cross_blocks {
+        let mut pb = Vec::new();
+        for &v in b.iter().filter(|&&v| v < l) {
+            perm_out[v] = top_slot;
+            pb.push(top_slot);
+            top_slot += 1;
+        }
+        for &v in b.iter().filter(|&&v| v >= l) {
+            perm_in[bottom_slot] = v - l;
+            pb.push(l + bottom_slot);
+            bottom_slot += 1;
+        }
+        planar_blocks.push(pb);
+    }
+    for b in &bottom_blocks {
+        let mut pb = Vec::with_capacity(b.len());
+        for &v in b.iter() {
+            perm_in[bottom_slot] = v - l;
+            pb.push(l + bottom_slot);
+            bottom_slot += 1;
+        }
+        planar_blocks.push(pb);
+    }
+    // Free vertices (jellyfish only): far right of each row, order kept.
+    for &v in &free_top {
+        perm_out[v] = top_slot;
+        planar_blocks.push(vec![top_slot]);
+        top_slot += 1;
+    }
+    for &v in &free_bottom {
+        perm_in[bottom_slot] = v - l;
+        planar_blocks.push(vec![l + bottom_slot]);
+        bottom_slot += 1;
+    }
+    debug_assert_eq!(top_slot, l);
+    debug_assert_eq!(bottom_slot, k);
+
+    let planar = Diagram::from_blocks(l, k, planar_blocks)?;
+    let layout = PlanarLayout {
+        l,
+        k,
+        top_blocks: top_blocks.iter().map(|b| b.len()).collect(),
+        cross_blocks: cross_blocks
+            .iter()
+            .map(|b| {
+                let up = b.iter().filter(|&&v| v < l).count();
+                (up, b.len() - up)
+            })
+            .collect(),
+        bottom_blocks: bottom_blocks.iter().map(|b| b.len()).collect(),
+        free_top: free_top.len(),
+        free_bottom: free_bottom.len(),
+    };
+    Ok(Factored {
+        perm_in,
+        perm_out,
+        planar,
+        layout,
+    })
+}
+
+impl Factored {
+    /// Recompose `σ_l • d_planar • σ_k` as diagrams and return the result —
+    /// must equal the original diagram (the Figure 1 identity). Used by the
+    /// verification tests.
+    pub fn recompose(&self) -> Result<Diagram> {
+        use super::compose::compose;
+        // σ_k as a diagram: planar bottom slot q is fed by original input
+        // position perm_in[q], i.e. the (k,k)-diagram with top vertex q
+        // joined to bottom vertex k + perm_in[q].
+        let sigma_k = Diagram::permutation(&self.perm_in);
+        // σ_l: final output position p reads planar top slot perm_out[p].
+        let sigma_l = Diagram::permutation(&self.perm_out);
+        let inner = compose(&self.planar, &sigma_k)?;
+        debug_assert_eq!(inner.removed_components, 0);
+        let outer = compose(&sigma_l, &inner.diagram)?;
+        debug_assert_eq!(outer.removed_components, 0);
+        Ok(outer.diagram)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::planar::{is_algorithmically_planar, is_algorithmically_planar_jellyfish};
+    use super::*;
+    use crate::util::Rng;
+
+    /// Figure 1's (5,4)-partition diagram: we use the diagram from the
+    /// lib.rs quickstart, which matches Example 10's index pattern
+    /// (top: {1},{2,4},{3}-cross, bottom blocks as drawn).
+    fn figure1_diagram() -> Diagram {
+        Diagram::from_blocks(
+            4,
+            5,
+            vec![vec![0], vec![1, 3], vec![2, 6, 7], vec![4, 5, 8]],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn factor_recomposes_to_original() {
+        let d = figure1_diagram();
+        let f = factor(&d);
+        assert_eq!(f.recompose().unwrap(), d);
+    }
+
+    #[test]
+    fn factor_middle_is_algorithmically_planar() {
+        let d = figure1_diagram();
+        let f = factor(&d);
+        assert!(is_algorithmically_planar(&f.planar));
+    }
+
+    #[test]
+    fn factor_layout_counts() {
+        let d = figure1_diagram();
+        let f = factor(&d);
+        // blocks: {0}, {1,3} top-only; {2,6,7} cross (1 up, 2 down);
+        // {4,5,8} bottom-only (vertices >= l = 4), size 3.
+        assert_eq!(f.layout.t(), 2);
+        assert_eq!(f.layout.d(), 1);
+        assert_eq!(f.layout.b(), 1);
+        assert_eq!(f.layout.bottom_blocks, vec![3]);
+        assert_eq!(f.layout.cross_blocks, vec![(1, 2)]);
+    }
+
+    #[test]
+    fn factor_random_partition_diagrams() {
+        let mut rng = Rng::new(77);
+        for _ in 0..200 {
+            let l = rng.below(5);
+            let k = rng.below(5);
+            let d = Diagram::random_partition(l, k, &mut rng);
+            let f = factor(&d);
+            assert!(
+                is_algorithmically_planar(&f.planar),
+                "middle not planar for {d}"
+            );
+            assert_eq!(f.recompose().unwrap(), d, "recompose mismatch for {d}");
+        }
+    }
+
+    #[test]
+    fn factor_random_brauer_diagrams() {
+        let mut rng = Rng::new(78);
+        for _ in 0..200 {
+            let l = rng.below(5);
+            let k = if (l + rng.below(5)) % 2 == 0 {
+                rng.below(5) / 2 * 2 + (l % 2)
+            } else {
+                continue;
+            };
+            if (l + k) % 2 != 0 {
+                continue;
+            }
+            let d = match Diagram::random_brauer(l, k, &mut rng) {
+                Ok(d) => d,
+                Err(_) => continue,
+            };
+            let f = factor(&d);
+            assert!(f.planar.is_brauer());
+            assert!(is_algorithmically_planar(&f.planar));
+            assert_eq!(f.recompose().unwrap(), d);
+        }
+    }
+
+    #[test]
+    fn factor_jellyfish_diagrams() {
+        let mut rng = Rng::new(79);
+        let n = 3;
+        for _ in 0..200 {
+            let l = rng.below(5);
+            let k = rng.below(6);
+            if l + k < n || (l + k - n) % 2 != 0 {
+                continue;
+            }
+            let d = Diagram::random_jellyfish(l, k, n, &mut rng).unwrap();
+            let f = factor_jellyfish(&d, n).unwrap();
+            assert!(
+                is_algorithmically_planar_jellyfish(&f.planar, n),
+                "middle not planar for {d}"
+            );
+            assert_eq!(f.recompose().unwrap(), d);
+            assert_eq!(f.layout.free_top + f.layout.free_bottom, n);
+        }
+    }
+
+    #[test]
+    fn factor_jellyfish_rejects_non_jellyfish() {
+        let d = Diagram::identity(2);
+        assert!(factor_jellyfish(&d, 3).is_err());
+    }
+
+    #[test]
+    fn factor_identity_is_trivial() {
+        let d = Diagram::identity(3);
+        let f = factor(&d);
+        assert_eq!(f.perm_in, vec![0, 1, 2]);
+        assert_eq!(f.perm_out, vec![0, 1, 2]);
+        assert_eq!(f.planar, d);
+    }
+
+    #[test]
+    fn figure4_brauer_factor() {
+        // Figure 4: (5,5)-Brauer diagram with pairs as in Example 11:
+        // bottom pair contracted is original bottom {0,1}; after Permute
+        // with (1524) [paper's cycle notation] the planar diagram has the
+        // bottom pair at the far right. We check structure, not the exact
+        // permutation (any valid factoring is acceptable).
+        // Pairs (0-based; top 0..4, bottom 5..9): top pair {1,3},
+        // cross {0,9}, {2,7}, {4,8}, bottom pair {5,6}.
+        let d = Diagram::from_blocks(
+            5,
+            5,
+            vec![vec![1, 3], vec![0, 9], vec![2, 7], vec![4, 8], vec![5, 6]],
+        )
+        .unwrap();
+        let f = factor(&d);
+        assert_eq!(f.layout.t(), 1);
+        assert_eq!(f.layout.d(), 3);
+        assert_eq!(f.layout.b(), 1);
+        assert!(is_algorithmically_planar(&f.planar));
+        assert_eq!(f.recompose().unwrap(), d);
+    }
+}

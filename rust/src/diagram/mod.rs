@@ -1,0 +1,429 @@
+//! Set partition diagrams and the categorical structure on them.
+//!
+//! A `(k,l)`-partition diagram (Definition 2) has `l` top vertices (labelled
+//! `0..l` here, `1..l` in the paper) and `k` bottom vertices (labelled
+//! `l..l+k`); its blocks are the blocks of a set partition of `[l+k]`.
+//! Sub-families:
+//!
+//! - **Brauer diagrams** (Definition 3): every block has size exactly 2 —
+//!   the spanning diagrams for O(n) and Sp(n).
+//! - **`(l+k)\n`-diagrams** (Definition 3): exactly `n` singleton blocks
+//!   ("free" vertices), all other blocks of size 2 — together with Brauer
+//!   diagrams these span SO(n).
+//!
+//! The categorical operations live in [`compose`] (vertical composition
+//! with the `n^c` scalar of Definition 18, and the tensor product of
+//! Definition 19); spanning-set enumeration in [`enumerate`]; the planarity
+//! notions of Definitions 31–33 in [`planar`]; and the paper's `Factor`
+//! procedure in [`factor`].
+
+pub mod compose;
+pub mod decompose;
+pub mod enumerate;
+pub mod factor;
+pub mod planar;
+
+pub use compose::{compose, tensor_product, Composed};
+pub use decompose::tensor_factors;
+pub use enumerate::{
+    all_brauer_diagrams, all_jellyfish_diagrams, all_partition_diagrams, bell_bounded,
+    double_factorial, stirling2,
+};
+pub use factor::{factor, factor_jellyfish, Factored, PlanarLayout};
+
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+/// A `(k,l)`-partition diagram: a set partition of `l + k` vertices where
+/// `0..l` is the top row and `l..l+k` the bottom row.
+///
+/// Blocks are kept normalised (each block sorted ascending, blocks sorted by
+/// their minimum), so `==` is diagram equality in the sense of the paper's
+/// equivalence classes.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Diagram {
+    /// Number of bottom (input) vertices — the domain order `k`.
+    pub k: usize,
+    /// Number of top (output) vertices — the codomain order `l`.
+    pub l: usize,
+    blocks: Vec<Vec<usize>>,
+}
+
+/// Classification of one block by which rows it touches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockKind {
+    /// All vertices in the top row.
+    Top,
+    /// All vertices in the bottom row.
+    Bottom,
+    /// Vertices in both rows.
+    Cross,
+}
+
+impl Diagram {
+    /// Construct from blocks, validating that they partition `[l+k]`.
+    pub fn from_blocks(l: usize, k: usize, blocks: Vec<Vec<usize>>) -> Result<Self> {
+        let total = l + k;
+        let mut seen = vec![false; total];
+        let mut count = 0usize;
+        for b in &blocks {
+            if b.is_empty() {
+                return Err(Error::InvalidPartition {
+                    expected: total,
+                    reason: "empty block".into(),
+                });
+            }
+            for &v in b {
+                if v >= total {
+                    return Err(Error::InvalidPartition {
+                        expected: total,
+                        reason: format!("vertex {v} out of range"),
+                    });
+                }
+                if seen[v] {
+                    return Err(Error::InvalidPartition {
+                        expected: total,
+                        reason: format!("vertex {v} appears twice"),
+                    });
+                }
+                seen[v] = true;
+                count += 1;
+            }
+        }
+        if count != total {
+            return Err(Error::InvalidPartition {
+                expected: total,
+                reason: format!("covers {count} of {total} vertices"),
+            });
+        }
+        let mut blocks: Vec<Vec<usize>> = blocks
+            .into_iter()
+            .map(|mut b| {
+                b.sort_unstable();
+                b
+            })
+            .collect();
+        blocks.sort_by_key(|b| b[0]);
+        Ok(Diagram { k, l, blocks })
+    }
+
+    /// The identity `(k,k)`-diagram (eq. 73): vertex `i` on top joined to
+    /// vertex `i` on the bottom.
+    pub fn identity(k: usize) -> Self {
+        let blocks = (0..k).map(|i| vec![i, k + i]).collect();
+        Diagram::from_blocks(k, k, blocks).expect("identity diagram is valid")
+    }
+
+    /// The `(m,m)`-diagram of a permutation `σ` (one-line notation over
+    /// `0..m`): top vertex `i` is joined to bottom vertex `m + σ(i)`.
+    pub fn permutation(sigma: &[usize]) -> Self {
+        let m = sigma.len();
+        let blocks = (0..m).map(|i| vec![i, m + sigma[i]]).collect();
+        Diagram::from_blocks(m, m, blocks).expect("permutation diagram is valid")
+    }
+
+    /// Normalised blocks (sorted members, sorted by min).
+    pub fn blocks(&self) -> &[Vec<usize>] {
+        &self.blocks
+    }
+
+    /// Number of blocks.
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Classify one block.
+    pub fn block_kind(&self, block: &[usize]) -> BlockKind {
+        let has_top = block.iter().any(|&v| v < self.l);
+        let has_bottom = block.iter().any(|&v| v >= self.l);
+        match (has_top, has_bottom) {
+            (true, true) => BlockKind::Cross,
+            (true, false) => BlockKind::Top,
+            (false, true) => BlockKind::Bottom,
+            (false, false) => unreachable!("blocks are non-empty"),
+        }
+    }
+
+    /// True iff every block has size exactly 2 (a Brauer diagram).
+    pub fn is_brauer(&self) -> bool {
+        self.blocks.iter().all(|b| b.len() == 2)
+    }
+
+    /// The singleton ("free") vertices — non-empty only for
+    /// `(l+k)\n`-diagrams.
+    pub fn free_vertices(&self) -> Vec<usize> {
+        self.blocks
+            .iter()
+            .filter(|b| b.len() == 1)
+            .map(|b| b[0])
+            .collect()
+    }
+
+    /// True iff this is an `(l+k)\n`-diagram for the given `n`: exactly `n`
+    /// singleton blocks and every other block of size 2.
+    pub fn is_jellyfish(&self, n: usize) -> bool {
+        let singles = self.blocks.iter().filter(|b| b.len() == 1).count();
+        singles == n && self.blocks.iter().all(|b| b.len() == 1 || b.len() == 2)
+    }
+
+    /// Transpose: swap the rows, giving the `(l,k)`-diagram whose matrix
+    /// (under Θ/Φ/Ψ) is the matrix transpose of this one's. Used for the
+    /// backward pass.
+    pub fn transpose(&self) -> Diagram {
+        let (l, k) = (self.l, self.k);
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|b| {
+                b.iter()
+                    .map(|&v| if v < l { k + v } else { v - l })
+                    .collect()
+            })
+            .collect();
+        Diagram::from_blocks(k, l, blocks).expect("transpose of valid diagram is valid")
+    }
+
+    /// Block id for each vertex (for delta tests): `membership()[v]` is the
+    /// index into `blocks()` of the block containing `v`.
+    pub fn membership(&self) -> Vec<usize> {
+        let mut m = vec![usize::MAX; self.l + self.k];
+        for (bi, b) in self.blocks.iter().enumerate() {
+            for &v in b {
+                m[v] = bi;
+            }
+        }
+        m
+    }
+
+    /// A uniformly random `(k,l)`-partition diagram, via a random restricted
+    /// growth string. (Uniform over RGS, which is uniform over partitions.)
+    pub fn random_partition(l: usize, k: usize, rng: &mut Rng) -> Self {
+        let total = l + k;
+        let mut assignment = vec![0usize; total];
+        let mut num_blocks = if total > 0 { 1 } else { 0 };
+        for v in 1..total {
+            // RGS step: join an existing block or open a new one.
+            let c = rng.below(num_blocks + 1);
+            assignment[v] = c;
+            if c == num_blocks {
+                num_blocks += 1;
+            }
+        }
+        let mut blocks: Vec<Vec<usize>> = vec![Vec::new(); num_blocks];
+        for (v, &c) in assignment.iter().enumerate() {
+            blocks[c].push(v);
+        }
+        Diagram::from_blocks(l, k, blocks).expect("RGS yields a valid partition")
+    }
+
+    /// A random `(k,l)`-Brauer diagram (uniform perfect matching).
+    /// Requires `l + k` even.
+    pub fn random_brauer(l: usize, k: usize, rng: &mut Rng) -> Result<Self> {
+        let total = l + k;
+        if total % 2 != 0 {
+            return Err(Error::DimensionConstraint(format!(
+                "Brauer diagram needs l+k even, got {total}"
+            )));
+        }
+        let mut verts: Vec<usize> = (0..total).collect();
+        rng.shuffle(&mut verts);
+        let blocks = verts.chunks(2).map(|c| c.to_vec()).collect();
+        Diagram::from_blocks(l, k, blocks)
+    }
+
+    /// A random `(l+k)\n`-diagram: choose `n` free vertices uniformly, match
+    /// the rest. Requires `l + k - n` even and non-negative.
+    pub fn random_jellyfish(l: usize, k: usize, n: usize, rng: &mut Rng) -> Result<Self> {
+        let total = l + k;
+        if n > total || (total - n) % 2 != 0 {
+            return Err(Error::DimensionConstraint(format!(
+                "(l+k)\\n-diagram needs l+k-n even and >= 0; l+k={total}, n={n}"
+            )));
+        }
+        let mut verts: Vec<usize> = (0..total).collect();
+        rng.shuffle(&mut verts);
+        let mut blocks: Vec<Vec<usize>> = verts[..n].iter().map(|&v| vec![v]).collect();
+        for c in verts[n..].chunks(2) {
+            blocks.push(c.to_vec());
+        }
+        Diagram::from_blocks(l, k, blocks)
+    }
+
+    /// Validate this diagram for a group's spanning family.
+    pub fn validate_for(&self, group: crate::fastmult::Group, n: usize) -> Result<()> {
+        use crate::fastmult::Group;
+        match group {
+            Group::Symmetric => Ok(()),
+            Group::Orthogonal => {
+                if self.is_brauer() {
+                    Ok(())
+                } else {
+                    Err(Error::InvalidDiagramForGroup {
+                        group: "O(n)".into(),
+                        reason: "not a Brauer diagram".into(),
+                    })
+                }
+            }
+            Group::Symplectic => {
+                if n % 2 != 0 {
+                    Err(Error::DimensionConstraint("Sp(n) needs even n".into()))
+                } else if self.is_brauer() {
+                    Ok(())
+                } else {
+                    Err(Error::InvalidDiagramForGroup {
+                        group: "Sp(n)".into(),
+                        reason: "not a Brauer diagram".into(),
+                    })
+                }
+            }
+            Group::SpecialOrthogonal => {
+                if self.is_brauer() || self.is_jellyfish(n) {
+                    Ok(())
+                } else {
+                    Err(Error::InvalidDiagramForGroup {
+                        group: "SO(n)".into(),
+                        reason: format!("neither Brauer nor (l+k)\\{n}-diagram"),
+                    })
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Diagram {
+    /// Paper-style notation, e.g. `{1, 2, 5, 7 | 3, 4, 10 | 6, 8 | 9}` with
+    /// 1-based labels (Example 1).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({},{})-diagram {{", self.k, self.l)?;
+        for (i, b) in self.blocks.iter().enumerate() {
+            if i > 0 {
+                write!(f, " | ")?;
+            }
+            for (j, v) in b.iter().enumerate() {
+                if j > 0 {
+                    write!(f, ", ")?;
+                }
+                write!(f, "{}", v + 1)?;
+            }
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastmult::Group;
+
+    #[test]
+    fn example1_paper_partition() {
+        // Example 1: {1,2,5,7 | 3,4,10 | 6,8 | 9} over [4+6] (1-based).
+        let d = Diagram::from_blocks(
+            4,
+            6,
+            vec![vec![0, 1, 4, 6], vec![2, 3, 9], vec![5, 7], vec![8]],
+        )
+        .unwrap();
+        assert_eq!(d.num_blocks(), 4);
+        assert_eq!(d.l, 4);
+        assert_eq!(d.k, 6);
+    }
+
+    #[test]
+    fn rejects_bad_partitions() {
+        assert!(Diagram::from_blocks(1, 1, vec![vec![0]]).is_err()); // misses 1
+        assert!(Diagram::from_blocks(1, 1, vec![vec![0, 0], vec![1]]).is_err()); // dup
+        assert!(Diagram::from_blocks(1, 1, vec![vec![0, 2], vec![1]]).is_err()); // range
+        assert!(Diagram::from_blocks(1, 1, vec![vec![0, 1], vec![]]).is_err()); // empty
+    }
+
+    #[test]
+    fn normalisation_makes_equality_structural() {
+        let a = Diagram::from_blocks(2, 2, vec![vec![3, 0], vec![2, 1]]).unwrap();
+        let b = Diagram::from_blocks(2, 2, vec![vec![1, 2], vec![0, 3]]).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn identity_shape() {
+        let d = Diagram::identity(3);
+        assert_eq!(d.num_blocks(), 3);
+        assert!(d.is_brauer());
+        assert_eq!(d.blocks()[0], vec![0, 3]);
+    }
+
+    #[test]
+    fn permutation_diagram() {
+        // sigma = (0 1) swap on 2 points
+        let d = Diagram::permutation(&[1, 0]);
+        assert_eq!(d.blocks()[0], vec![0, 3]);
+        assert_eq!(d.blocks()[1], vec![1, 2]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let d = Diagram::random_partition(3, 4, &mut rng);
+            assert_eq!(d.transpose().transpose(), d);
+            assert_eq!(d.transpose().l, d.k);
+            assert_eq!(d.transpose().k, d.l);
+        }
+    }
+
+    #[test]
+    fn block_kind_classification() {
+        let d = Diagram::from_blocks(2, 2, vec![vec![0, 1], vec![2, 3]]).unwrap();
+        assert_eq!(d.block_kind(&d.blocks()[0]), BlockKind::Top);
+        assert_eq!(d.block_kind(&d.blocks()[1]), BlockKind::Bottom);
+        let id = Diagram::identity(2);
+        assert_eq!(id.block_kind(&id.blocks()[0]), BlockKind::Cross);
+    }
+
+    #[test]
+    fn brauer_and_jellyfish_predicates() {
+        let mut rng = Rng::new(7);
+        let b = Diagram::random_brauer(3, 3, &mut rng).unwrap();
+        assert!(b.is_brauer());
+        assert!(!b.is_jellyfish(2));
+        let j = Diagram::random_jellyfish(3, 4, 3, &mut rng).unwrap();
+        assert!(j.is_jellyfish(3));
+        assert_eq!(j.free_vertices().len(), 3);
+        assert!(Diagram::random_brauer(2, 1, &mut rng).is_err());
+        assert!(Diagram::random_jellyfish(2, 2, 3, &mut rng).is_err());
+    }
+
+    #[test]
+    fn validate_for_groups() {
+        let mut rng = Rng::new(9);
+        let part = Diagram::from_blocks(2, 2, vec![vec![0, 1, 2], vec![3]]).unwrap();
+        assert!(part.validate_for(Group::Symmetric, 3).is_ok());
+        assert!(part.validate_for(Group::Orthogonal, 3).is_err());
+        let b = Diagram::random_brauer(2, 2, &mut rng).unwrap();
+        assert!(b.validate_for(Group::Orthogonal, 3).is_ok());
+        assert!(b.validate_for(Group::Symplectic, 4).is_ok());
+        assert!(b.validate_for(Group::Symplectic, 3).is_err());
+        assert!(b.validate_for(Group::SpecialOrthogonal, 3).is_ok());
+        let j = Diagram::random_jellyfish(2, 3, 3, &mut rng).unwrap();
+        assert!(j.validate_for(Group::SpecialOrthogonal, 3).is_ok());
+        assert!(j.validate_for(Group::Orthogonal, 3).is_err());
+    }
+
+    #[test]
+    fn display_is_one_based() {
+        let d = Diagram::from_blocks(1, 1, vec![vec![0, 1]]).unwrap();
+        assert_eq!(format!("{d}"), "(1,1)-diagram {1, 2}");
+    }
+
+    #[test]
+    fn random_partition_valid_and_varied() {
+        let mut rng = Rng::new(11);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..50 {
+            let d = Diagram::random_partition(2, 3, &mut rng);
+            assert_eq!(d.l + d.k, 5);
+            seen.insert(d);
+        }
+        assert!(seen.len() > 10, "should sample many distinct partitions");
+    }
+}

@@ -1,0 +1,366 @@
+//! Planarity and *algorithmic planarity* (Definitions 31–33).
+//!
+//! `Factor` promises an algorithmically planar middle diagram; the
+//! predicates here verify that promise (and encode the paper's Examples
+//! 7–9 as tests).
+
+use super::{BlockKind, Diagram};
+
+/// True iff the diagram is planar: no two blocks cross when the vertices
+/// are read around the rectangle boundary (top row left→right, then bottom
+/// row right→left) — Remark 34's notion.
+pub fn is_planar(d: &Diagram) -> bool {
+    // Map each vertex to its boundary-cycle position.
+    let (l, k) = (d.l, d.k);
+    let cycle_pos = |v: usize| -> usize {
+        if v < l {
+            v
+        } else {
+            // bottom position p = v - l, traversed right to left
+            l + (k - 1 - (v - l))
+        }
+    };
+    // Two blocks cross iff, in the cyclic order, they interleave:
+    // a1 < b1 < a2 < b2 for some members. For blocks on a line (we can cut
+    // the cycle at position 0 since it is a boundary circle and all blocks
+    // are drawn inside), interleaving on the line implies crossing.
+    let blocks: Vec<Vec<usize>> = d
+        .blocks()
+        .iter()
+        .map(|b| {
+            let mut c: Vec<usize> = b.iter().map(|&v| cycle_pos(v)).collect();
+            c.sort_unstable();
+            c
+        })
+        .collect();
+    for i in 0..blocks.len() {
+        for j in (i + 1)..blocks.len() {
+            if interleaves(&blocks[i], &blocks[j]) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Do two sorted position sets interleave (i.e. cross on a line)?
+fn interleaves(a: &[usize], b: &[usize]) -> bool {
+    // They interleave iff neither is contained in a single "gap" of the
+    // other. Merge-walk: count alternations; > 2 switches means crossing.
+    let mut switches = 0;
+    let mut last: Option<bool> = None; // true = from a
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() || j < b.len() {
+        let take_a = match (i < a.len(), j < b.len()) {
+            (true, true) => a[i] < b[j],
+            (true, false) => true,
+            (false, true) => false,
+            (false, false) => unreachable!(),
+        };
+        if last != Some(take_a) {
+            switches += 1;
+            last = Some(take_a);
+        }
+        if take_a {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    switches > 3
+}
+
+/// True iff `d` is an **algorithmically planar** `(k,l)`-partition diagram
+/// (Definition 31):
+///
+/// 1. bottom-row-only blocks sit consecutively at the far right of the
+///    bottom row, sizes non-decreasing left→right (largest at the far
+///    right),
+/// 2. top-row-only blocks sit consecutively at the far left of the top row,
+/// 3. cross blocks do not cross each other (and each one's vertices are
+///    consecutive within each row, as in the diagrams `Factor` builds).
+pub fn is_algorithmically_planar(d: &Diagram) -> bool {
+    let (l, k) = (d.l, d.k);
+    let mut top_only: Vec<&Vec<usize>> = Vec::new();
+    let mut bottom_only: Vec<&Vec<usize>> = Vec::new();
+    let mut cross: Vec<&Vec<usize>> = Vec::new();
+    for b in d.blocks() {
+        match d.block_kind(b) {
+            BlockKind::Top => top_only.push(b),
+            BlockKind::Bottom => bottom_only.push(b),
+            BlockKind::Cross => cross.push(b),
+        }
+    }
+
+    // Condition 2: top-only blocks fill positions 0.. consecutively, each
+    // block contiguous.
+    {
+        let mut covered: Vec<&Vec<usize>> = top_only.clone();
+        covered.sort_by_key(|b| b[0]);
+        let mut next = 0usize;
+        for b in covered {
+            if b[0] != next || !contiguous(b) {
+                return false;
+            }
+            next += b.len();
+        }
+        // they must start at the far left: enforced by next starting at 0.
+    }
+
+    // Condition 1: bottom-only blocks fill the far right of the bottom row,
+    // contiguous, sizes ascending left→right.
+    {
+        let mut covered: Vec<&Vec<usize>> = bottom_only.clone();
+        covered.sort_by_key(|b| b[0]);
+        let total: usize = covered.iter().map(|b| b.len()).sum();
+        let mut next = l + k - total;
+        let mut prev_size = 0usize;
+        for b in covered {
+            if b[0] != next || !contiguous(b) {
+                return false;
+            }
+            if b.len() < prev_size {
+                return false; // must be non-decreasing left→right
+            }
+            prev_size = b.len();
+            next += b.len();
+        }
+    }
+
+    // Condition 3: cross blocks pairwise non-crossing — same relative order
+    // on both rows, no interleaving.
+    for i in 0..cross.len() {
+        for j in (i + 1)..cross.len() {
+            if cross_blocks_cross(cross[i], cross[j], l) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// True iff `d` is an algorithmically planar `(l+k)\n`-diagram
+/// (Definition 33): free vertices at the far right of each row (in order),
+/// bottom pairs immediately left of the bottom free vertices, top pairs at
+/// the far left, cross pairs non-crossing.
+pub fn is_algorithmically_planar_jellyfish(d: &Diagram, n: usize) -> bool {
+    if !d.is_jellyfish(n) {
+        return false;
+    }
+    let (l, k) = (d.l, d.k);
+    let free: Vec<usize> = d.free_vertices();
+    let free_top: Vec<usize> = free.iter().copied().filter(|&v| v < l).collect();
+    let free_bottom: Vec<usize> = free.iter().copied().filter(|&v| v >= l).collect();
+    let s = free_top.len();
+    // Free vertices are at the far right of each row.
+    for (i, &v) in free_top.iter().enumerate() {
+        if v != l - s + i {
+            return false;
+        }
+    }
+    for (i, &v) in free_bottom.iter().enumerate() {
+        if v != l + k - (n - s) + i {
+            return false;
+        }
+    }
+    // The paired part must be algorithmically planar once the free
+    // vertices are removed; removing them keeps indices of the pairs left
+    // of the free zone intact, so reuse the partition predicate on the
+    // restriction.
+    let pairs: Vec<Vec<usize>> = d
+        .blocks()
+        .iter()
+        .filter(|b| b.len() == 2)
+        .cloned()
+        .collect();
+    let sub = match Diagram::from_blocks_loose(l - s, k - (n - s), pairs, l) {
+        Some(x) => x,
+        None => return false,
+    };
+    is_algorithmically_planar(&sub)
+}
+
+impl Diagram {
+    /// Internal helper: reinterpret pair blocks of a jellyfish diagram as a
+    /// smaller diagram after dropping the trailing free vertices of each
+    /// row. `orig_l` is the original top-row length. Returns `None` if any
+    /// pair touches the free zone (which would make the layout invalid).
+    fn from_blocks_loose(
+        new_l: usize,
+        new_k: usize,
+        pairs: Vec<Vec<usize>>,
+        orig_l: usize,
+    ) -> Option<Diagram> {
+        let mut blocks = Vec::new();
+        for b in pairs {
+            let mut nb = Vec::new();
+            for v in b {
+                if v < orig_l {
+                    if v >= new_l {
+                        return None; // pair inside the top free zone
+                    }
+                    nb.push(v);
+                } else {
+                    let p = v - orig_l;
+                    if p >= new_k {
+                        return None; // pair inside the bottom free zone
+                    }
+                    nb.push(new_l + p);
+                }
+            }
+            blocks.push(nb);
+        }
+        Diagram::from_blocks(new_l, new_k, blocks).ok()
+    }
+}
+
+fn contiguous(sorted_block: &[usize]) -> bool {
+    sorted_block
+        .windows(2)
+        .all(|w| w[1] == w[0] + 1)
+}
+
+/// Two cross blocks cross iff their top parts or bottom parts interleave,
+/// or their relative order differs between rows.
+fn cross_blocks_cross(a: &[usize], b: &[usize], l: usize) -> bool {
+    let part = |blk: &[usize], top: bool| -> Vec<usize> {
+        blk.iter()
+            .copied()
+            .filter(|&v| (v < l) == top)
+            .collect()
+    };
+    let (at, ab) = (part(a, true), part(a, false));
+    let (bt, bb) = (part(b, true), part(b, false));
+    let before = |x: &[usize], y: &[usize]| x.last().unwrap() < y.first().unwrap();
+    let top_ab = before(&at, &bt);
+    let top_ba = before(&bt, &at);
+    let bot_ab = before(&ab, &bb);
+    let bot_ba = before(&bb, &ab);
+    if !(top_ab || top_ba) || !(bot_ab || bot_ba) {
+        return true; // interleaved within a row
+    }
+    top_ab != bot_ab // order flips between rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Example 7, first diagram: algorithmically planar (6,5)-partition
+    /// diagram. We reconstruct a diagram with the stated structure: top-only
+    /// blocks far left, cross blocks nested, bottom-only blocks far right.
+    #[test]
+    fn algorithmically_planar_accepts_factor_shape() {
+        // top row: block {0,1} (top-only), cross uppers {2,3}, {4,5};
+        // bottom row: cross lowers {0},{1} then bottom blocks {2}, {3,4}.
+        let d = Diagram::from_blocks(
+            6,
+            5,
+            vec![
+                vec![0, 1],
+                vec![2, 3, 6],
+                vec![4, 5, 7],
+                vec![8],
+                vec![9, 10],
+            ],
+        )
+        .unwrap();
+        assert!(is_algorithmically_planar(&d));
+        assert!(is_planar(&d));
+    }
+
+    /// Example 7, second diagram: a lone bottom block NOT at the far right
+    /// relative to the other bottom blocks breaks condition 1 — model the
+    /// spirit: bottom-only blocks in decreasing size left→right is invalid.
+    #[test]
+    fn wrong_bottom_order_rejected() {
+        // bottom-only blocks {2,3} then {4}: sizes 2 then 1 — decreasing,
+        // must be rejected.
+        let d = Diagram::from_blocks(
+            2,
+            5,
+            vec![vec![0, 1, 2, 3], vec![4, 5], vec![6]],
+        )
+        .unwrap();
+        assert!(!is_algorithmically_planar(&d));
+    }
+
+    /// Example 7, third diagram: non-consecutive vertices in a bottom block.
+    #[test]
+    fn non_consecutive_block_rejected() {
+        // bottom block {1,3} (positions 1 and 3) is not contiguous.
+        let d = Diagram::from_blocks(
+            1,
+            4,
+            vec![vec![0, 1], vec![2, 4], vec![3]],
+        )
+        .unwrap();
+        assert!(!is_algorithmically_planar(&d));
+    }
+
+    #[test]
+    fn crossing_cross_blocks_rejected() {
+        // Two cross pairs that swap order between rows: 0-bottom1, 1-bottom0.
+        let d = Diagram::from_blocks(2, 2, vec![vec![0, 3], vec![1, 2]]).unwrap();
+        assert!(!is_algorithmically_planar(&d));
+        assert!(!is_planar(&d));
+    }
+
+    #[test]
+    fn identity_is_algorithmically_planar() {
+        for k in 0..5 {
+            assert!(is_algorithmically_planar(&Diagram::identity(k)));
+        }
+    }
+
+    /// Example 9 shape: an algorithmically planar (5+6)\3-diagram has its
+    /// free vertices at the far right of both rows.
+    #[test]
+    fn jellyfish_planarity() {
+        // l = 5, k = 6, n = 3, s = 1 free on top, 2 free on bottom.
+        // top: pair {0,1}, cross uppers {2}, {3}, free {4}
+        // bottom: cross lowers {5+0},{5+1}, pair {5+2,5+3}, free {5+4},{5+5}
+        let d = Diagram::from_blocks(
+            5,
+            6,
+            vec![
+                vec![0, 1],
+                vec![2, 5],
+                vec![3, 6],
+                vec![4],
+                vec![7, 8],
+                vec![9],
+                vec![10],
+            ],
+        )
+        .unwrap();
+        assert!(is_algorithmically_planar_jellyfish(&d, 3));
+        // Move the top free vertex away from the far right: invalid
+        // (Example 9's second diagram).
+        let bad = Diagram::from_blocks(
+            5,
+            6,
+            vec![
+                vec![0],
+                vec![1, 2],
+                vec![3, 5],
+                vec![4, 6],
+                vec![7, 8],
+                vec![9],
+                vec![10],
+            ],
+        )
+        .unwrap();
+        assert!(!is_algorithmically_planar_jellyfish(&bad, 3));
+    }
+
+    #[test]
+    fn planar_nested_brauer_ok() {
+        // nested top pairs {0,3},{1,2} do not cross
+        let d = Diagram::from_blocks(4, 0, vec![vec![0, 3], vec![1, 2]]).unwrap();
+        assert!(is_planar(&d));
+        // interleaved top pairs {0,2},{1,3} cross
+        let x = Diagram::from_blocks(4, 0, vec![vec![0, 2], vec![1, 3]]).unwrap();
+        assert!(!is_planar(&x));
+    }
+}

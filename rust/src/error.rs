@@ -1,0 +1,47 @@
+//! Error types for the equidiag library.
+
+use thiserror::Error;
+
+/// Errors produced by diagram construction, the fast multiplication
+/// algorithm, layers, the coordinator and the PJRT runtime.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// A set partition did not cover `[l+k]` exactly once.
+    #[error("invalid set partition over [{expected}]: {reason}")]
+    InvalidPartition { expected: usize, reason: String },
+
+    /// A diagram was used with a group it is not valid for
+    /// (e.g. a general partition diagram fed to the O(n) path).
+    #[error("diagram not valid for group {group}: {reason}")]
+    InvalidDiagramForGroup { group: String, reason: String },
+
+    /// Tensor shape mismatch.
+    #[error("shape mismatch: expected {expected}, got {got}")]
+    ShapeMismatch { expected: String, got: String },
+
+    /// Dimension constraint violated (e.g. Sp(n) needs even n,
+    /// an (l+k)\n-diagram needs l+k-n even and non-negative).
+    #[error("dimension constraint violated: {0}")]
+    DimensionConstraint(String),
+
+    /// Configuration file / CLI errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Coordinator / serving errors.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// PJRT runtime errors (wraps the xla crate's error).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,183 @@
+//! **Algorithm 1 (`MatrixMult`)** — the paper's fast multiplication of a
+//! spanning-set matrix by a vector, per group:
+//!
+//! 1. `Factor` the diagram as `σ_l ∘ d_planar ∘ σ_k`
+//!    ([`crate::diagram::factor`]),
+//! 2. `Permute` the input axes by `σ_k` (a memory move),
+//! 3. `PlanarMult` the algorithmically planar middle — contractions
+//!    right-to-left, then transfers, then copies (the per-group modules
+//!    [`sn`], [`on`], [`sp`], [`so`]),
+//! 4. `Permute` the output axes by `σ_l`.
+//!
+//! Complexities (paper §5.2): S_n `O(n^k)` worst case vs naïve
+//! `O(n^{l+k})`; O(n)/Sp(n) `O(n^{k-1})`; SO(n) free-vertex diagrams
+//! `O(n^{k-(n-s)}(n! + n^{s-1}))`.
+
+pub mod on;
+pub mod plan;
+pub mod sn;
+pub mod so;
+pub mod sp;
+
+pub use plan::MultPlan;
+
+use crate::diagram::Diagram;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// The four groups whose equivariant weight matrices the paper
+/// characterises.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Group {
+    /// The symmetric group S_n — spanning diagrams: all `(k,l)`-partition
+    /// diagrams (with at most `n` blocks for a basis).
+    Symmetric,
+    /// The orthogonal group O(n) — spanning diagrams: Brauer diagrams.
+    Orthogonal,
+    /// The special orthogonal group SO(n) — Brauer plus `(l+k)\n`-diagrams.
+    SpecialOrthogonal,
+    /// The symplectic group Sp(n), `n = 2m` — Brauer diagrams under the
+    /// functor X.
+    Symplectic,
+}
+
+impl Group {
+    /// Short display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Group::Symmetric => "S_n",
+            Group::Orthogonal => "O(n)",
+            Group::SpecialOrthogonal => "SO(n)",
+            Group::Symplectic => "Sp(n)",
+        }
+    }
+
+    /// Parse from a config/CLI string.
+    pub fn parse(s: &str) -> Result<Group> {
+        match s.to_ascii_lowercase().as_str() {
+            "sn" | "s_n" | "symmetric" => Ok(Group::Symmetric),
+            "on" | "o(n)" | "o" | "orthogonal" => Ok(Group::Orthogonal),
+            "son" | "so(n)" | "so" | "special_orthogonal" => Ok(Group::SpecialOrthogonal),
+            "spn" | "sp(n)" | "sp" | "symplectic" => Ok(Group::Symplectic),
+            other => Err(Error::Config(format!("unknown group '{other}'"))),
+        }
+    }
+}
+
+impl std::fmt::Display for Group {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Algorithm 1: multiply the spanning matrix of `d` (under the functor for
+/// `group`) by `v ∈ (R^n)^{⊗k}` without materialising the matrix.
+///
+/// Equals [`crate::functor::naive_apply`] to floating-point accuracy but
+/// runs exponentially faster (see module docs).
+pub fn matrix_mult(group: Group, d: &Diagram, v: &Tensor) -> Result<Tensor> {
+    // One-shot path: factor and apply. Callers with a stable diagram should
+    // hold a [`MultPlan`] instead, which amortises `Factor` (and detects
+    // pure-permutation diagrams) once.
+    MultPlan::new(group, d, v.n)?.apply(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagram::{
+        all_brauer_diagrams, all_jellyfish_diagrams, all_partition_diagrams,
+    };
+    use crate::functor::naive_apply;
+    use crate::util::Rng;
+
+    fn check_all(group: Group, diagrams: &[Diagram], n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        for d in diagrams {
+            let v = Tensor::random(n, d.k, &mut rng);
+            let fast = matrix_mult(group, d, &v).unwrap();
+            let slow = naive_apply(group, d, &v).unwrap();
+            assert!(
+                fast.allclose(&slow, 1e-9),
+                "group {group} diagram {d}: max diff {}",
+                fast.max_abs_diff(&slow)
+            );
+        }
+    }
+
+    #[test]
+    fn sn_exhaustive_small() {
+        for (l, k) in [(0usize, 2usize), (1, 1), (2, 1), (1, 2), (2, 2), (3, 2)] {
+            let ds = all_partition_diagrams(l, k, None);
+            check_all(Group::Symmetric, &ds, 3, 0xA0 + (l * 10 + k) as u64);
+        }
+    }
+
+    #[test]
+    fn on_exhaustive_small() {
+        for (l, k) in [(1usize, 1usize), (2, 2), (0, 2), (2, 0), (3, 1), (1, 3), (3, 3)] {
+            let ds = all_brauer_diagrams(l, k);
+            check_all(Group::Orthogonal, &ds, 3, 0xB0 + (l * 10 + k) as u64);
+        }
+    }
+
+    #[test]
+    fn sp_exhaustive_small() {
+        for (l, k) in [(1usize, 1usize), (2, 2), (0, 2), (2, 0), (3, 1), (1, 3), (3, 3)] {
+            let ds = all_brauer_diagrams(l, k);
+            check_all(Group::Symplectic, &ds, 4, 0xC0 + (l * 10 + k) as u64);
+        }
+    }
+
+    #[test]
+    fn so_brauer_exhaustive_small() {
+        for (l, k) in [(1usize, 1usize), (2, 2), (1, 3)] {
+            let ds = all_brauer_diagrams(l, k);
+            check_all(Group::SpecialOrthogonal, &ds, 3, 0xD0 + (l * 10 + k) as u64);
+        }
+    }
+
+    #[test]
+    fn so_jellyfish_exhaustive_small() {
+        let n = 3;
+        for (l, k) in [(2usize, 1usize), (1, 2), (2, 3), (3, 2), (1, 4)] {
+            if (l + k) < n || (l + k - n) % 2 != 0 {
+                continue;
+            }
+            let ds = all_jellyfish_diagrams(l, k, n).unwrap();
+            check_all(Group::SpecialOrthogonal, &ds, n, 0xE0 + (l * 10 + k) as u64);
+        }
+    }
+
+    #[test]
+    fn so_jellyfish_n2() {
+        let n = 2;
+        for (l, k) in [(1usize, 1usize), (2, 2), (0, 2), (2, 0), (3, 1)] {
+            if (l + k) < n || (l + k - n) % 2 != 0 {
+                continue;
+            }
+            let ds = all_jellyfish_diagrams(l, k, n).unwrap();
+            check_all(Group::SpecialOrthogonal, &ds, n, 0xF0 + (l * 10 + k) as u64);
+        }
+    }
+
+    #[test]
+    fn group_parse_roundtrip() {
+        for g in [
+            Group::Symmetric,
+            Group::Orthogonal,
+            Group::SpecialOrthogonal,
+            Group::Symplectic,
+        ] {
+            assert_eq!(Group::parse(g.name()).unwrap(), g);
+        }
+        assert!(Group::parse("U(n)").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_input_order() {
+        let d = Diagram::identity(2);
+        let v = Tensor::zeros(3, 1);
+        assert!(matrix_mult(Group::Symmetric, &d, &v).is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! `PlanarMult` for the orthogonal group O(n) (§5.2.2).
+//!
+//! Input axes in the planar bottom layout `[D_1^L … D_d^L | B_1 … B_b]`
+//! where every `B_i` is a pair. Steps:
+//!
+//! 1. **Contractions** (eq. 122): trace each trailing bottom pair —
+//!    `Σ_i n^{k-2(b-i)-2} · n` flops (eq. 134), total `O(n^{k-1})`.
+//! 2. **Transfer** (eq. 123): the cross-pair middle diagram is the
+//!    *identity* for O(n) — no work at all (this is the paper's key
+//!    observation distinguishing O(n) from S_n).
+//! 3. **Copies** (eq. 125): each top pair broadcasts a repeated index
+//!    `e_m ⊗ e_m` — pure memory writes.
+
+use crate::diagram::PlanarLayout;
+use crate::tensor::Tensor;
+
+/// Apply the planar middle Brauer diagram to `v` (axes already in planar
+/// bottom layout). Output is in planar top layout
+/// `[T_1 … T_t | D_1^U … D_d^U]`, order `l = 2t + d`.
+pub fn planar_mult(layout: &PlanarLayout, v: &Tensor) -> Tensor {
+    let (w, lead, tail) = planar_compact(layout, v);
+    // Step 3: fused broadcast of top pairs (diagonal e_m ⊗ e_m) + pass-
+    // through of the d cross uppers — one scatter.
+    w.scatter_broadcast_diagonals(&lead, &tail)
+}
+
+/// Steps 1–2 only (see [`super::sn::planar_compact`]): the pair-traced
+/// compact form plus the Step-3 groups `(lead = [2; t], tail = [1; d])`.
+pub(crate) fn planar_compact<'a>(
+    layout: &PlanarLayout,
+    v: &'a Tensor,
+) -> (std::borrow::Cow<'a, Tensor>, Vec<usize>, Vec<usize>) {
+    use std::borrow::Cow;
+    debug_assert_eq!(layout.free_top, 0);
+    debug_assert_eq!(layout.free_bottom, 0);
+    debug_assert!(layout.bottom_blocks.iter().all(|&s| s == 2));
+    debug_assert!(layout.cross_blocks.iter().all(|&c| c == (1, 1)));
+    debug_assert_eq!(v.order, layout.k);
+
+    // Step 1: trace out bottom pairs, rightmost first (first trace reads
+    // `v` directly). Step 2: transfer = identity for O(n).
+    let mut t: Option<Tensor> = None;
+    for _ in 0..layout.b() {
+        let src = t.as_ref().unwrap_or(v);
+        t = Some(src.trace_trailing_pair());
+    }
+    let w = match t {
+        Some(x) => Cow::Owned(x),
+        None => Cow::Borrowed(v),
+    };
+    (w, vec![2; layout.t()], vec![1; layout.d()])
+}
+
+/// Exact Step-1 flop count (eq. 134 + 135) for the benches.
+pub fn step1_flops(layout: &PlanarLayout, n: usize) -> u128 {
+    let k = layout.k;
+    let b = layout.b();
+    let mut total: u128 = 0;
+    for i in 1..=b {
+        // contracting B_i maps order k-2(b-i) to k-2(b-i)-2:
+        // n^{k-2(b-i)-2} outputs, n mults + (n-1) adds each.
+        let e = (k - 2 * (b - i)) as u32 - 2;
+        total += (n as u128).pow(e) * (2 * n as u128 - 1);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagram::{factor, Diagram};
+    use crate::fastmult::Group;
+    use crate::functor::naive_apply;
+    use crate::util::Rng;
+
+    /// Example 11: the (5,5)-Brauer diagram of Figure 4 applied to v gives
+    /// eq. (133): out = Σ_j v[j,j,l3,l4,l5] on basis
+    /// e_{l5} ⊗ e_m ⊗ e_{l4} ⊗ e_m ⊗ e_{l3}.
+    #[test]
+    fn example11_worked() {
+        let n = 3;
+        // Figure 4 (0-based): the factored output in the paper permutes
+        // input axes by (1524) and output by (1342); the diagram consistent
+        // with eqs. (128)–(133): top pairs {1,3} (repeated index m); cross
+        // pairs connecting top 0↔bottom l5-slot, top 2↔l4, top 4↔l3;
+        // bottom pair {0,1} (contracted).
+        // From eq. (133) the output at (a,b,c,d,e) is nonzero iff b == d
+        // (the top pair) and equals Σ_j v[j,j,e,c,a].
+        let d = Diagram::from_blocks(
+            5,
+            5,
+            vec![vec![1, 3], vec![0, 9], vec![2, 8], vec![4, 7], vec![5, 6]],
+        )
+        .unwrap();
+        let mut rng = Rng::new(11);
+        let v = Tensor::random(n, 5, &mut rng);
+        let f = factor(&d);
+        let got = planar_mult(&f.layout, &v.permute_axes(&f.perm_in)).permute_axes(&f.perm_out);
+        // Direct check of eq. (133) pattern:
+        let mut want = Tensor::zeros(n, 5);
+        for a in 0..n {
+            for b in 0..n {
+                for c in 0..n {
+                    for e in 0..n {
+                        let mut s = 0.0;
+                        for j in 0..n {
+                            s += v.get(&[j, j, e, c, a]);
+                        }
+                        want.set(&[a, b, c, b, e], s);
+                    }
+                }
+            }
+        }
+        assert!(
+            got.allclose(&want, 1e-10),
+            "diff {}",
+            got.max_abs_diff(&want)
+        );
+        // And against the naive functor.
+        let naive = naive_apply(Group::Orthogonal, &d, &v).unwrap();
+        assert!(got.allclose(&naive, 1e-10));
+    }
+
+    #[test]
+    fn pure_trace_diagram() {
+        // All-bottom pairs, l = 0: out is the full pairwise trace.
+        let d = Diagram::from_blocks(0, 4, vec![vec![0, 1], vec![2, 3]]).unwrap();
+        let n = 4;
+        let mut rng = Rng::new(12);
+        let v = Tensor::random(n, 4, &mut rng);
+        let f = factor(&d);
+        let got = planar_mult(&f.layout, &v.permute_axes(&f.perm_in));
+        let mut want = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                want += v.get(&[i, i, j, j]);
+            }
+        }
+        assert!((got.data[0] - want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn pure_copy_diagram() {
+        // All-top pairs, k = 0: scalar in, sum of e_m ⊗ e_m out.
+        let d = Diagram::from_blocks(2, 0, vec![vec![0, 1]]).unwrap();
+        let n = 3;
+        let v = Tensor::from_vec(n, 0, vec![2.5]).unwrap();
+        let f = factor(&d);
+        let got = planar_mult(&f.layout, &v);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 2.5 } else { 0.0 };
+                assert_eq!(got.get(&[i, j]), want);
+            }
+        }
+    }
+
+    #[test]
+    fn step1_flops_positive_only_with_bottom_pairs() {
+        let f = factor(&Diagram::identity(3));
+        assert_eq!(step1_flops(&f.layout, 5), 0);
+        let d = Diagram::from_blocks(0, 2, vec![vec![0, 1]]).unwrap();
+        let f2 = factor(&d);
+        assert_eq!(step1_flops(&f2.layout, 5), 9); // 5 mults + 4 adds
+    }
+}

@@ -1,0 +1,303 @@
+//! Pre-factored multiplication plans.
+//!
+//! `Factor` is pure bookkeeping, but layers apply the same spanning
+//! diagrams at every forward/backward pass; a [`MultPlan`] runs `Factor`
+//! once at construction and replays only `Permute → PlanarMult → Permute`
+//! per call. This is the hot-path entry point used by
+//! [`crate::layer::EquivariantLinear`].
+
+use super::{on, sn, so, sp, Group};
+use crate::diagram::{factor, factor_jellyfish, Diagram, Factored};
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Is `perm` the identity permutation?
+#[inline]
+fn is_identity(perm: &[usize]) -> bool {
+    perm.iter().enumerate().all(|(i, &p)| i == p)
+}
+
+/// A reusable, pre-factored `MatrixMult` for one diagram under one group.
+#[derive(Debug, Clone)]
+pub struct MultPlan {
+    group: Group,
+    n: usize,
+    k: usize,
+    l: usize,
+    factored: Factored,
+    jellyfish: bool,
+    /// When the diagram is a pure permutation (cross-only, every block a
+    /// (1,1) pair, no free vertices), the whole of Algorithm 1 collapses to
+    /// one axis permutation: `out axis p ← input axis fused[p]`. This is
+    /// the σ_l ∘ 1 ∘ σ_k composition done once at plan time.
+    fused_perm: Option<Vec<usize>>,
+}
+
+impl MultPlan {
+    /// Factor `d` for `group` at representation dimension `n`.
+    pub fn new(group: Group, d: &Diagram, n: usize) -> Result<Self> {
+        d.validate_for(group, n)?;
+        let jellyfish = group == Group::SpecialOrthogonal && !d.is_brauer();
+        let factored = if jellyfish {
+            factor_jellyfish(d, n)?
+        } else {
+            factor(d)
+        };
+        // Pure-permutation fast path: t = b = 0, every cross block (1,1).
+        let layout = &factored.layout;
+        let fused_perm = if !jellyfish
+            && layout.t() == 0
+            && layout.b() == 0
+            && layout.free_top == 0
+            && layout.free_bottom == 0
+            && layout.cross_blocks.iter().all(|&c| c == (1, 1))
+        {
+            // planar top slot q connects to planar bottom slot q, so
+            // out axis p ← planar slot perm_out[p] ← input axis
+            // perm_in[perm_out[p]].
+            Some(
+                factored
+                    .perm_out
+                    .iter()
+                    .map(|&q| factored.perm_in[q])
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        Ok(MultPlan {
+            group,
+            n,
+            k: d.k,
+            l: d.l,
+            factored,
+            jellyfish,
+            fused_perm,
+        })
+    }
+
+    /// Input tensor order `k`.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output tensor order `l`.
+    pub fn l(&self) -> usize {
+        self.l
+    }
+
+    /// Representation dimension `n` the plan was built for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The group this plan multiplies under.
+    pub fn group(&self) -> Group {
+        self.group
+    }
+
+    /// Apply the plan: `Permute → PlanarMult → Permute` (Algorithm 1 with
+    /// the `Factor` step amortised away). Identity permutations are elided
+    /// entirely (no copy).
+    pub fn apply(&self, v: &Tensor) -> Result<Tensor> {
+        if let Some(fused) = &self.fused_perm {
+            self.check_input(v)?;
+            return Ok(v.permute_axes(fused)); // single pass, no zeros
+        }
+        let w = self.planar_forward(v)?;
+        if is_identity(&self.factored.perm_out) {
+            Ok(w)
+        } else {
+            Ok(w.permute_axes(&self.factored.perm_out))
+        }
+    }
+
+    /// Fused λ-weighted apply: `out += coeff · (Algorithm 1)(v)` without
+    /// materialising the permuted output — the layer hot path.
+    pub fn apply_accumulate(&self, v: &Tensor, coeff: f64, out: &mut Tensor) -> Result<()> {
+        if out.order != self.l || out.n != self.n {
+            return Err(Error::ShapeMismatch {
+                expected: format!("order {} output over R^{}", self.l, self.n),
+                got: format!("order {} over R^{}", out.order, out.n),
+            });
+        }
+        if let Some(fused) = &self.fused_perm {
+            self.check_input(v)?;
+            v.axpy_permuted_into(coeff, fused, out); // zero intermediates
+            return Ok(());
+        }
+        self.check_input(v)?;
+        let vp_owned;
+        let vp: &Tensor = if is_identity(&self.factored.perm_in) {
+            v
+        } else {
+            vp_owned = v.permute_axes(&self.factored.perm_in);
+            &vp_owned
+        };
+        let layout = &self.factored.layout;
+        match (self.group, self.jellyfish) {
+            // Deep fusion: scatter the compact Steps-1/2 form straight into
+            // `out` through σ_l, touching only the diagonal support.
+            (Group::Symmetric, _) => {
+                let (x, lead, tail) = sn::planar_compact(layout, vp);
+                x.scatter_broadcast_diagonals_axpy(
+                    &lead,
+                    &tail,
+                    &self.factored.perm_out,
+                    coeff,
+                    out,
+                );
+            }
+            (Group::Orthogonal, _) | (Group::SpecialOrthogonal, false) => {
+                let (x, lead, tail) = on::planar_compact(layout, vp);
+                x.scatter_broadcast_diagonals_axpy(
+                    &lead,
+                    &tail,
+                    &self.factored.perm_out,
+                    coeff,
+                    out,
+                );
+            }
+            (Group::SpecialOrthogonal, true) => {
+                let (x, lead, tail) = so::planar_compact(layout, vp);
+                x.scatter_broadcast_diagonals_axpy(
+                    &lead,
+                    &tail,
+                    &self.factored.perm_out,
+                    coeff,
+                    out,
+                );
+            }
+            // Sp(n)'s ε-signed top expansion keeps the two-step path.
+            (Group::Symplectic, _) => {
+                let w = sp::planar_mult(layout, vp);
+                w.axpy_permuted_into(coeff, &self.factored.perm_out, out);
+            }
+        }
+        Ok(())
+    }
+
+    fn check_input(&self, v: &Tensor) -> Result<()> {
+        if v.order != self.k || v.n != self.n {
+            return Err(Error::ShapeMismatch {
+                expected: format!("order {} tensor over R^{}", self.k, self.n),
+                got: format!("order {} over R^{}", v.order, v.n),
+            });
+        }
+        Ok(())
+    }
+
+    /// `Permute(σ_k)` (elided if trivial) followed by the per-group
+    /// `PlanarMult`; the result is in the planar top layout.
+    fn planar_forward(&self, v: &Tensor) -> Result<Tensor> {
+        self.check_input(v)?;
+        let vp_owned;
+        let vp: &Tensor = if is_identity(&self.factored.perm_in) {
+            v
+        } else {
+            vp_owned = v.permute_axes(&self.factored.perm_in);
+            &vp_owned
+        };
+        Ok(match (self.group, self.jellyfish) {
+            (Group::Symmetric, _) => sn::planar_mult(&self.factored.layout, vp),
+            (Group::Orthogonal, _) => on::planar_mult(&self.factored.layout, vp),
+            (Group::Symplectic, _) => sp::planar_mult(&self.factored.layout, vp),
+            (Group::SpecialOrthogonal, false) => on::planar_mult(&self.factored.layout, vp),
+            (Group::SpecialOrthogonal, true) => so::planar_mult(&self.factored.layout, vp),
+        })
+    }
+
+    /// Arithmetic cost (flops) of one `apply` under the paper's cost model
+    /// (memory moves free, only Step-1/2 contractions counted).
+    pub fn flops(&self) -> u128 {
+        match (self.group, self.jellyfish) {
+            (Group::Symmetric, _) => sn::step1_flops(&self.factored.layout, self.n),
+            (Group::Orthogonal, _) | (Group::SpecialOrthogonal, false) => {
+                on::step1_flops(&self.factored.layout, self.n)
+            }
+            (Group::Symplectic, _) => on::step1_flops(&self.factored.layout, self.n),
+            (Group::SpecialOrthogonal, true) => so::step12_flops(&self.factored.layout, self.n),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastmult::matrix_mult;
+    use crate::util::Rng;
+
+    #[test]
+    fn plan_matches_matrix_mult() {
+        let mut rng = Rng::new(55);
+        let n = 3;
+        for _ in 0..50 {
+            let l = rng.below(4);
+            let k = rng.below(4);
+            let d = Diagram::random_partition(l, k, &mut rng);
+            let plan = MultPlan::new(Group::Symmetric, &d, n).unwrap();
+            let v = Tensor::random(n, k, &mut rng);
+            let a = plan.apply(&v).unwrap();
+            let b = matrix_mult(Group::Symmetric, &d, &v).unwrap();
+            assert!(a.allclose(&b, 0.0));
+        }
+    }
+
+    #[test]
+    fn plan_reusable_across_inputs() {
+        let mut rng = Rng::new(56);
+        let d = Diagram::random_brauer(2, 2, &mut rng).unwrap();
+        let plan = MultPlan::new(Group::Orthogonal, &d, 4).unwrap();
+        for _ in 0..10 {
+            let v = Tensor::random(4, 2, &mut rng);
+            let a = plan.apply(&v).unwrap();
+            let b = matrix_mult(Group::Orthogonal, &d, &v).unwrap();
+            assert!(a.allclose(&b, 0.0));
+        }
+    }
+
+    #[test]
+    fn plan_shape_checks() {
+        let d = Diagram::identity(2);
+        let plan = MultPlan::new(Group::Symmetric, &d, 3).unwrap();
+        assert!(plan.apply(&Tensor::zeros(3, 1)).is_err());
+        assert!(plan.apply(&Tensor::zeros(2, 2)).is_err());
+        assert_eq!(plan.k(), 2);
+        assert_eq!(plan.l(), 2);
+    }
+
+    #[test]
+    fn apply_accumulate_matches_apply() {
+        let mut rng = Rng::new(58);
+        for _ in 0..30 {
+            let l = rng.below(4);
+            let k = rng.below(4);
+            let d = Diagram::random_partition(l, k, &mut rng);
+            let plan = MultPlan::new(Group::Symmetric, &d, 3).unwrap();
+            let v = Tensor::random(3, k, &mut rng);
+            let mut out = Tensor::random(3, l, &mut rng);
+            let mut want = out.clone();
+            want.axpy(0.35, &plan.apply(&v).unwrap());
+            plan.apply_accumulate(&v, 0.35, &mut out).unwrap();
+            assert!(out.allclose(&want, 1e-12));
+        }
+        // shape check
+        let d = Diagram::identity(2);
+        let plan = MultPlan::new(Group::Symmetric, &d, 3).unwrap();
+        let v = Tensor::zeros(3, 2);
+        let mut bad = Tensor::zeros(3, 1);
+        assert!(plan.apply_accumulate(&v, 1.0, &mut bad).is_err());
+    }
+
+    #[test]
+    fn plan_jellyfish_dispatch() {
+        let mut rng = Rng::new(57);
+        let n = 3;
+        let d = Diagram::random_jellyfish(2, 3, n, &mut rng).unwrap();
+        let plan = MultPlan::new(Group::SpecialOrthogonal, &d, n).unwrap();
+        let v = Tensor::random(n, 3, &mut rng);
+        let a = plan.apply(&v).unwrap();
+        let b = matrix_mult(Group::SpecialOrthogonal, &d, &v).unwrap();
+        assert!(a.allclose(&b, 0.0));
+    }
+}

@@ -1,0 +1,186 @@
+//! `PlanarMult` for the symmetric group S_n (§5.2.1).
+//!
+//! Input: a tensor whose axes are in the planar bottom layout
+//! `[D_1^L … D_d^L | B_1 … B_b]` (cross-block lower parts, then bottom-only
+//! blocks in ascending size order). Steps:
+//!
+//! 1. **Contractions** (eq. 98): for `i = b → 1`, sum the generalised
+//!    diagonal of the trailing `|B_i|` axes — the only arithmetic in the
+//!    whole algorithm, `Σ_i n^{k - Σ_{j>i}|B_j|} · n` flops (eq. 115).
+//! 2. **Transfer** (eq. 101): read the per-cross-block diagonals into a
+//!    compact order-`d` tensor (pure indexing).
+//! 3. **Copies** (eq. 103): broadcast the top-only block indices and embed
+//!    everything back onto the block diagonals of the order-`l` output
+//!    (pure memory writes).
+
+use crate::diagram::PlanarLayout;
+use crate::tensor::Tensor;
+
+/// Apply the planar middle diagram to `v` (axes already permuted into the
+/// planar bottom layout). Returns the planar-top-layout output of order `l`.
+pub fn planar_mult(layout: &PlanarLayout, v: &Tensor) -> Tensor {
+    let (x, lead, tail) = planar_compact(layout, v);
+    // Step 3: copies — fused broadcast of the top-only block indices +
+    // diagonal embedding of [T_1 … T_t | D_1^U … D_d^U] (one scatter,
+    // no intermediate).
+    x.scatter_broadcast_diagonals(&lead, &tail)
+}
+
+/// Steps 1–2 only: the contraction + transfer *compact form* of the planar
+/// output, together with the Step-3 group structure
+/// `(lead = top-only block sizes, tail = cross upper sizes)`. Exposed so
+/// the layer hot path can fuse Step 3 with the λ-weighted accumulation.
+pub(crate) fn planar_compact<'a>(
+    layout: &PlanarLayout,
+    v: &'a Tensor,
+) -> (std::borrow::Cow<'a, Tensor>, Vec<usize>, Vec<usize>) {
+    use std::borrow::Cow;
+    debug_assert_eq!(layout.free_top, 0);
+    debug_assert_eq!(layout.free_bottom, 0);
+    debug_assert_eq!(v.order, layout.k);
+
+    // Step 1: contract bottom-only blocks, largest (rightmost) first. The
+    // first contraction reads `v` in place (no defensive clone).
+    let mut t: Option<Tensor> = None;
+    for &size in layout.bottom_blocks.iter().rev() {
+        let src = t.as_ref().unwrap_or(v);
+        t = Some(src.contract_trailing_diagonal(size));
+    }
+
+    // Step 2: transfer — compact diagonal of each cross block's lower
+    // part. Skipped entirely when every lower part is a single axis (the
+    // compact form IS the tensor).
+    let lower_sizes: Vec<usize> = layout.cross_blocks.iter().map(|c| c.1).collect();
+    let upper_sizes: Vec<usize> = layout.cross_blocks.iter().map(|c| c.0).collect();
+    let lead = layout.top_blocks.clone();
+    let x: Cow<'a, Tensor> = if lower_sizes.iter().all(|&s| s == 1) {
+        match t {
+            Some(x) => Cow::Owned(x),
+            None => Cow::Borrowed(v),
+        }
+    } else {
+        let contracted = t.as_ref().unwrap_or(v);
+        debug_assert_eq!(contracted.order, lower_sizes.iter().sum::<usize>());
+        Cow::Owned(contracted.extract_group_diagonals(&lower_sizes))
+    };
+    (x, lead, upper_sizes)
+}
+
+/// Exact flop count of Step 1 for a given layout and `n` — the paper's
+/// eq. (115) + (116). Used by the benches to overlay predicted vs measured
+/// cost.
+pub fn step1_flops(layout: &PlanarLayout, n: usize) -> u128 {
+    let k = layout.k;
+    let sizes = &layout.bottom_blocks;
+    let b = sizes.len();
+    let mut total: u128 = 0;
+    // After contracting the i rightmost blocks the tensor has order
+    // k - Σ_{j>b-i} |B_j|; contracting the next block costs (order n sum per
+    // output element) n · n^{remaining order after contraction}.
+    let mut remaining = k;
+    for i in (0..b).rev() {
+        remaining -= sizes[i];
+        // multiplications: n^{remaining} * n ; additions: n^{remaining}*(n-1)
+        total += (n as u128).pow(remaining as u32) * (2 * n as u128 - 1);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagram::{factor, Diagram};
+    use crate::functor::naive_apply;
+    use crate::fastmult::Group;
+    use crate::util::Rng;
+
+    /// Example 10 end-to-end: the (5,4)-partition diagram of Figure 1
+    /// applied to a generic v — the output must satisfy eq. (114):
+    /// z[l4, l3, l3, m] = Σ_j v[j, j, l3, l4, j] at basis
+    /// (e_{l4} ⊗ e_{l3} ⊗ e_{l3} ⊗ e_m), zero elsewhere off-pattern.
+    #[test]
+    fn example10_worked() {
+        let n = 2;
+        // Figure 1 diagram (1-based): top {1},{2,4},{3–…}; blocks as in the
+        // paper: {1}, {2,4}, {3,7,8}, {5,6,9}, {10}  → 0-based:
+        let d = Diagram::from_blocks(
+            4,
+            5,
+            vec![vec![0], vec![1, 3], vec![2, 6, 7], vec![4, 5, 8]],
+        )
+        .unwrap();
+        let mut rng = Rng::new(42);
+        let v = Tensor::random(n, 5, &mut rng);
+        let f = factor(&d);
+        let vp = v.permute_axes(&f.perm_in);
+        let w = planar_mult(&f.layout, &vp);
+        let z = w.permute_axes(&f.perm_out);
+        // eq. (114): z_{i1 i2 i3 i4} = Σ_j v_{j j i2 i1 j} · δ_{i2 i3}
+        // (component {3,7,8} joins top 3 with bottom 2,3; {2,4} joins tops
+        // 2 and 4; {5,6,9} contracts bottoms 1,2,5; {1} and {10} are free
+        // copies/sums — translate: top vertices (1-based) 2 and 4 equal,
+        // top 3 equals bottoms 3 and 4 … we just compare with naive.)
+        let want = naive_apply(Group::Symmetric, &d, &v).unwrap();
+        assert!(z.allclose(&want, 1e-10), "diff {}", z.max_abs_diff(&want));
+        // And the worked identity from eq. (113)/(114): entry (m, a, a, c)
+        // in planar-top order — verify one concrete entry against a direct
+        // sum. Use the naive result as the oracle for the index pattern:
+        // every entry with i2 != i3 is zero is NOT generally true for this
+        // diagram; rely on the full comparison above instead.
+    }
+
+    #[test]
+    fn b_equals_zero_is_pure_copy() {
+        // Diagram with no bottom-only blocks: identity-like cross diagram
+        // plus one top-only block — Step 1 must not run (the "free" case).
+        let d = Diagram::from_blocks(3, 2, vec![vec![0], vec![1, 3], vec![2, 4]]).unwrap();
+        let n = 3;
+        let mut rng = Rng::new(7);
+        let v = Tensor::random(n, 2, &mut rng);
+        let f = factor(&d);
+        assert_eq!(f.layout.b(), 0);
+        let got = planar_mult(&f.layout, &v.permute_axes(&f.perm_in)).permute_axes(&f.perm_out);
+        let want = naive_apply(Group::Symmetric, &d, &v).unwrap();
+        assert!(got.allclose(&want, 1e-10));
+    }
+
+    #[test]
+    fn single_bottom_block_best_case() {
+        // One bottom block of size k: cost O(n) (paper's best case).
+        let k = 4;
+        let d = Diagram::from_blocks(0, k, vec![(0..k).collect()]).unwrap();
+        let n = 3;
+        let mut rng = Rng::new(8);
+        let v = Tensor::random(n, k, &mut rng);
+        let f = factor(&d);
+        let got = planar_mult(&f.layout, &v.permute_axes(&f.perm_in));
+        assert_eq!(got.order, 0);
+        // Direct: sum of diagonal entries.
+        let mut want = 0.0;
+        for j in 0..n {
+            want += v.get(&[j; 4]);
+        }
+        assert!((got.data[0] - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step1_flops_ordering_prefers_large_blocks_last() {
+        // eq. (115): ascending block order (largest rightmost/contracted
+        // first) never costs more than descending.
+        let asc = PlanarLayout {
+            l: 0,
+            k: 5,
+            top_blocks: vec![],
+            cross_blocks: vec![],
+            bottom_blocks: vec![1, 4],
+            free_top: 0,
+            free_bottom: 0,
+        };
+        let desc = PlanarLayout {
+            bottom_blocks: vec![4, 1],
+            ..asc.clone()
+        };
+        let n = 10;
+        assert!(step1_flops(&asc, n) < step1_flops(&desc, n));
+    }
+}

@@ -1,0 +1,210 @@
+//! `PlanarMult` for the special orthogonal group SO(n), free-vertex case
+//! (§5.2.4).
+//!
+//! A spanning element of SO(n) is either a Brauer diagram — handled by the
+//! O(n) path — or an `(l+k)\n`-diagram `H_α`, handled here. Input axes in
+//! the planar bottom layout `[D_1^L … D_d^L | B_1 … B_b | BF_1 … BF_{n-s}]`:
+//!
+//! 1. **Determinant step** (eq. 157): contract the trailing `n-s` free
+//!    bottom axes against the Levi-Civita symbol, producing `s` new free
+//!    top axes — `O(n^{k-(n-s)} · n!)` (eq. 168).
+//! 2. **Pair contractions**: trace the bottom pairs, as for O(n) —
+//!    `O(n^{k+s-(n-s)-1})`.
+//! 3. **Transfer**: identity.
+//! 4. **Copies**: top pairs broadcast `e_m ⊗ e_m`, as for O(n).
+//!
+//! Output in planar top layout `[T_1 … T_t | D_1^U … D_d^U | TF_1 … TF_s]`.
+
+use crate::diagram::PlanarLayout;
+use crate::tensor::Tensor;
+
+/// Apply the planar middle `(l+k)\n`-diagram under Ψ. Input in planar
+/// bottom layout; output in planar top layout, order `l = 2t + d + s`.
+pub fn planar_mult(layout: &PlanarLayout, v: &Tensor) -> Tensor {
+    let (x, lead, tail) = planar_compact(layout, v);
+    x.scatter_broadcast_diagonals(&lead, &tail)
+}
+
+/// Steps 1–3 only (see [`super::sn::planar_compact`]): the determinant-
+/// contracted, pair-traced compact form `[D(d), TF(s)]` plus the Step-4
+/// groups `(lead = [2; t], tail = [1; d + s])`.
+pub(crate) fn planar_compact<'a>(
+    layout: &PlanarLayout,
+    v: &'a Tensor,
+) -> (std::borrow::Cow<'a, Tensor>, Vec<usize>, Vec<usize>) {
+    use std::borrow::Cow;
+    let n = v.n;
+    let s = layout.free_top;
+    debug_assert_eq!(layout.free_bottom, n - s);
+    debug_assert_eq!(v.order, layout.k);
+    let d = layout.d();
+    let b = layout.b();
+
+    // Step 1: Levi-Civita contraction of the trailing n-s free axes;
+    // appends s new trailing axes: [D(d), B(2b), TF(s)].
+    let t1 = v.levi_civita_contract_trailing(s);
+
+    // Step 2 needs the bottom pairs trailing: rotate TF axes to the front:
+    // [TF(s), D(d), B(2b)].
+    let order1 = s + d + 2 * b;
+    debug_assert_eq!(t1.order, order1);
+    let mut axes: Vec<usize> = Vec::with_capacity(order1);
+    axes.extend((d + 2 * b)..order1); // TF axes
+    axes.extend(0..(d + 2 * b)); // D then B
+    let mut t2 = t1.permute_axes(&axes);
+    for _ in 0..b {
+        t2 = t2.trace_trailing_pair();
+    }
+    // t2: [TF(s), D(d)].
+
+    // Step 3: identity transfer.
+
+    // Step 4 prep: output layout is [T pairs (2t), D(d), TF(s)] — rotate
+    // the compact form to [D, TF].
+    let mut axes2: Vec<usize> = Vec::with_capacity(s + d);
+    axes2.extend(s..(s + d)); // D
+    axes2.extend(0..s); // TF
+    let t3 = t2.permute_axes(&axes2);
+    (Cow::Owned(t3), vec![2; layout.t()], vec![1; d + s])
+}
+
+/// Flop count of Steps 1–2 (eqs. 168 and the O(n) pair costs) for the
+/// benches: `n^{k-(n-s)}·n!` for the determinant step plus the pair-trace
+/// terms.
+pub fn step12_flops(layout: &PlanarLayout, n: usize) -> u128 {
+    let s = layout.free_top;
+    let k = layout.k;
+    let b = layout.b();
+    let d = layout.d();
+    let factorial: u128 = (1..=n as u128).product();
+    // Step 1: n^{2b+d} outputs… the paper counts n^{k-(n-s)} n! total ops.
+    let mut total = (n as u128).pow((k - (n - s)) as u32) * factorial;
+    // Step 2: contracting pair i maps order s+d+2i -> s+d+2i-2.
+    for i in 1..=b {
+        total += (n as u128).pow((s + d + 2 * i - 2) as u32) * (2 * n as u128 - 1);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagram::{factor_jellyfish, Diagram};
+    use crate::fastmult::Group;
+    use crate::functor::naive_apply;
+    use crate::util::Rng;
+
+    /// Example 13: the (4+5)\3-diagram of Figure 7 applied to v ∈ (R^3)^{⊗5}
+    /// gives eq. (167): out = Σ v[l1,l2,l3,j,j] det(e_{t1},e_{l1},e_{l2})
+    /// on basis e_{t1} ⊗ e_m ⊗ e_m ⊗ e_{l3}.
+    #[test]
+    fn example13_worked() {
+        let n = 3;
+        // Diagram consistent with eq. (167) (0-based, top 0..3, bottom
+        // 4..8): top free vertex {0} (t1), top pair {1,2} (m,m), cross
+        // {3, 4+2} (l3), bottom free {4+0}, {4+1} (l1, l2), bottom pair
+        // {4+3, 4+4} (j,j contracted).
+        let d = Diagram::from_blocks(
+            4,
+            5,
+            vec![vec![0], vec![1, 2], vec![3, 6], vec![4], vec![5], vec![7, 8]],
+        )
+        .unwrap();
+        assert!(d.is_jellyfish(n));
+        let mut rng = Rng::new(33);
+        let v = Tensor::random(n, 5, &mut rng);
+        let f = factor_jellyfish(&d, n).unwrap();
+        let got = planar_mult(&f.layout, &v.permute_axes(&f.perm_in)).permute_axes(&f.perm_out);
+        // Direct eq. (167):
+        let mut want = Tensor::zeros(n, 4);
+        for t1 in 0..n {
+            for m in 0..n {
+                for l3 in 0..n {
+                    let mut s = 0.0;
+                    for l1 in 0..n {
+                        for l2 in 0..n {
+                            let det = crate::functor::levi_civita(&[t1, l1, l2]);
+                            if det == 0.0 {
+                                continue;
+                            }
+                            for j in 0..n {
+                                s += det * v.get(&[l1, l2, l3, j, j]);
+                            }
+                        }
+                    }
+                    want.set(&[t1, m, m, l3], s);
+                }
+            }
+        }
+        assert!(
+            got.allclose(&want, 1e-9),
+            "diff {}",
+            got.max_abs_diff(&want)
+        );
+        let naive = naive_apply(Group::SpecialOrthogonal, &d, &v).unwrap();
+        assert!(got.allclose(&naive, 1e-9));
+    }
+
+    /// All-free diagram for n = l + k: the pure determinant map.
+    #[test]
+    fn pure_determinant_diagram() {
+        let n = 3;
+        // l = 1, k = 2, all three vertices free.
+        let d = Diagram::from_blocks(1, 2, vec![vec![0], vec![1], vec![2]]).unwrap();
+        let mut rng = Rng::new(35);
+        let v = Tensor::random(n, 2, &mut rng);
+        let f = factor_jellyfish(&d, n).unwrap();
+        let got = planar_mult(&f.layout, &v.permute_axes(&f.perm_in)).permute_axes(&f.perm_out);
+        let mut want = Tensor::zeros(n, 1);
+        for t in 0..n {
+            let mut s = 0.0;
+            for b1 in 0..n {
+                for b2 in 0..n {
+                    s += crate::functor::levi_civita(&[t, b1, b2]) * v.get(&[b1, b2]);
+                }
+            }
+            want.set(&[t], s);
+        }
+        assert!(got.allclose(&want, 1e-10));
+    }
+
+    /// s = 0: all free vertices on the bottom — output has no free axes.
+    #[test]
+    fn all_free_on_bottom() {
+        let n = 2;
+        let d = Diagram::from_blocks(0, 2, vec![vec![0], vec![1]]).unwrap();
+        let mut rng = Rng::new(36);
+        let v = Tensor::random(n, 2, &mut rng);
+        let f = factor_jellyfish(&d, n).unwrap();
+        let got = planar_mult(&f.layout, &v.permute_axes(&f.perm_in));
+        // out = Σ ε_{b1 b2} v[b1,b2] = v[0,1] - v[1,0]
+        let want = v.get(&[0, 1]) - v.get(&[1, 0]);
+        assert!((got.data[0] - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step12_flops_grows_with_fewer_free_tops() {
+        // More bottom-free vertices (smaller s) means more of the n!
+        // determinant work lands on larger remaining tensors.
+        let base = PlanarLayout {
+            l: 2,
+            k: 4,
+            top_blocks: vec![],
+            cross_blocks: vec![],
+            bottom_blocks: vec![2],
+            free_top: 2,
+            free_bottom: 1,
+        };
+        let fewer_free_top = PlanarLayout {
+            l: 0,
+            k: 5,
+            top_blocks: vec![],
+            cross_blocks: vec![],
+            bottom_blocks: vec![2],
+            free_top: 0,
+            free_bottom: 3,
+        };
+        let n = 3;
+        assert!(step12_flops(&fewer_free_top, n) < step12_flops(&base, n) * 10);
+    }
+}

@@ -1,0 +1,189 @@
+//! `PlanarMult` for the symplectic group Sp(n), n = 2m (§5.2.3).
+//!
+//! Identical factoring and layout to O(n); the functor X replaces `δ` with
+//! the symplectic form `ε` on same-row pairs:
+//!
+//! 1. **Contractions** (eq. 138): `out[M] = Σ_{j1 j2} ε_{j1 j2} w[M,j1,j2]`
+//!    per trailing bottom pair — still `O(n^{k-1})` because ε has only `n`
+//!    non-zero entries.
+//! 2. **Transfer**: identity, exactly as for O(n) (cross pairs use `δ`,
+//!    eq. 23).
+//! 3. **Copies** (eq. 141): each top pair writes `ε_{m1 m2} · x` at
+//!    `(m1, m2)` — `n` non-zero positions per pair, signed.
+
+use crate::diagram::PlanarLayout;
+use crate::tensor::Tensor;
+
+/// Apply the planar middle Brauer diagram under the functor X. Input in
+/// planar bottom layout; output in planar top layout, order `l = 2t + d`.
+pub fn planar_mult(layout: &PlanarLayout, v: &Tensor) -> Tensor {
+    debug_assert_eq!(layout.free_top, 0);
+    debug_assert_eq!(layout.free_bottom, 0);
+    debug_assert_eq!(v.n % 2, 0, "Sp(n) requires even n");
+    debug_assert_eq!(v.order, layout.k);
+
+    // Step 1: ε-trace bottom pairs, rightmost first (no defensive clone).
+    let mut t: Option<Tensor> = None;
+    for _ in 0..layout.b() {
+        let src = t.as_ref().unwrap_or(v);
+        t = Some(src.trace_trailing_pair_eps());
+    }
+    let w: &Tensor = t.as_ref().unwrap_or(v);
+
+    // Step 2: identity.
+
+    // Step 3: ε-weighted top-pair expansion.
+    eps_top_expand(w, layout.t())
+}
+
+/// Expand with `t` leading ε-pairs: `out[a_1 b_1, …, a_t b_t, J] =
+/// (Π_i ε_{a_i b_i}) x[J]`. Only the `n` non-zero ε positions per pair are
+/// visited, so this writes `n^t · |x|` values.
+fn eps_top_expand(x: &Tensor, t: usize) -> Tensor {
+    if t == 0 {
+        return x.clone();
+    }
+    let n = x.n;
+    let mut out = Tensor::zeros(n, x.order + 2 * t);
+    let tail = x.data.len(); // contiguous block per prefix
+    // Each pair has n signed choices: c in 0..n selects pair index
+    // i = c / 2 and orientation c % 2: even → (2i, 2i+1) sign +1,
+    // odd → (2i+1, 2i) sign −1.
+    let mut choice = vec![0usize; t];
+    loop {
+        // Compute prefix offset and sign for this choice vector.
+        let mut sign = 1.0;
+        let mut prefix = 0usize;
+        for &c in &choice {
+            let i = c / 2;
+            let (a, b, s) = if c % 2 == 0 {
+                (2 * i, 2 * i + 1, 1.0)
+            } else {
+                (2 * i + 1, 2 * i, -1.0)
+            };
+            sign *= s;
+            prefix = ((prefix * n) + a) * n + b;
+        }
+        let base = prefix * tail;
+        if sign > 0.0 {
+            out.data[base..base + tail].copy_from_slice(&x.data);
+        } else {
+            for (o, &xv) in out.data[base..base + tail].iter_mut().zip(&x.data) {
+                *o = -xv;
+            }
+        }
+        // Odometer over choices.
+        let mut p = t;
+        loop {
+            if p == 0 {
+                return out;
+            }
+            p -= 1;
+            choice[p] += 1;
+            if choice[p] < n {
+                break;
+            }
+            choice[p] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagram::{factor, Diagram};
+    use crate::fastmult::Group;
+    use crate::functor::{eps_symplectic, naive_apply};
+    use crate::util::Rng;
+
+    /// Example 12: same (5,5)-Brauer diagram as Example 11, under X.
+    /// eq. (151): out = Σ ε_{m1 m2} ε_{j1 j2} v[j1,j2,l3,l4,l5] on basis
+    /// e_{l5} ⊗ e_{m1} ⊗ e_{l4} ⊗ e_{m2} ⊗ e_{l3}.
+    #[test]
+    fn example12_worked() {
+        let n = 4;
+        let d = Diagram::from_blocks(
+            5,
+            5,
+            vec![vec![1, 3], vec![0, 9], vec![2, 8], vec![4, 7], vec![5, 6]],
+        )
+        .unwrap();
+        let mut rng = Rng::new(21);
+        let v = Tensor::random(n, 5, &mut rng);
+        let f = factor(&d);
+        let got = planar_mult(&f.layout, &v.permute_axes(&f.perm_in)).permute_axes(&f.perm_out);
+        let mut want = Tensor::zeros(n, 5);
+        for a in 0..n {
+            for m1 in 0..n {
+                for c in 0..n {
+                    for m2 in 0..n {
+                        for e in 0..n {
+                            let em = eps_symplectic(m1, m2);
+                            if em == 0.0 {
+                                continue;
+                            }
+                            let mut s = 0.0;
+                            for j1 in 0..n {
+                                for j2 in 0..n {
+                                    let ej = eps_symplectic(j1, j2);
+                                    if ej != 0.0 {
+                                        s += ej * v.get(&[j1, j2, e, c, a]);
+                                    }
+                                }
+                            }
+                            want.set(&[a, m1, c, m2, e], em * s);
+                        }
+                    }
+                }
+            }
+        }
+        assert!(
+            got.allclose(&want, 1e-10),
+            "diff {}",
+            got.max_abs_diff(&want)
+        );
+        let naive = naive_apply(Group::Symplectic, &d, &v).unwrap();
+        assert!(got.allclose(&naive, 1e-10));
+    }
+
+    #[test]
+    fn eps_contraction_of_form_itself_gives_n() {
+        // Σ ε_{ij} ε_{ij} … the ε-trace of the ε tensor is Σ_{ij} ε² = n.
+        let n = 4;
+        let mut t = Tensor::zeros(n, 2);
+        for i in 0..n {
+            for j in 0..n {
+                t.set(&[i, j], eps_symplectic(i, j));
+            }
+        }
+        let c = t.trace_trailing_pair_eps();
+        // Σ_{pairs} t[2i,2i+1] - t[2i+1,2i] = Σ (1 - (-1)) = n/2 * 2 = n
+        assert_eq!(c.data[0], n as f64);
+    }
+
+    #[test]
+    fn eps_top_expand_single_pair() {
+        let n = 2;
+        let x = Tensor::from_vec(n, 0, vec![3.0]).unwrap();
+        let out = eps_top_expand(&x, 1);
+        assert_eq!(out.get(&[0, 1]), 3.0);
+        assert_eq!(out.get(&[1, 0]), -3.0);
+        assert_eq!(out.get(&[0, 0]), 0.0);
+        assert_eq!(out.get(&[1, 1]), 0.0);
+    }
+
+    #[test]
+    fn cross_only_diagram_is_permutation() {
+        // All cross pairs: X acts as an index permutation (δ factors only).
+        let d = Diagram::from_blocks(3, 3, vec![vec![0, 4], vec![1, 5], vec![2, 3]]).unwrap();
+        let n = 2;
+        let mut rng = Rng::new(23);
+        let v = Tensor::random(n, 3, &mut rng);
+        let f = factor(&d);
+        let got = planar_mult(&f.layout, &v.permute_axes(&f.perm_in)).permute_axes(&f.perm_out);
+        let naive = naive_apply(Group::Symplectic, &d, &v).unwrap();
+        assert!(got.allclose(&naive, 1e-12));
+        // Norm is preserved by a pure index permutation.
+        assert!((got.norm() - v.norm()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,194 @@
+//! Matrix-entry coefficient functions for the four monoidal functors.
+
+use crate::diagram::{BlockKind, Diagram};
+use crate::fastmult::Group;
+
+/// Symplectic form `ε` in the interleaved symplectic basis
+/// `1, 1', 2, 2', …, m, m'` (0-based: `2i ↔ i+1`, `2i+1 ↔ (i+1)'`):
+/// `ε_{α,β'} = δ_{α,β}`, `ε_{α',β} = -δ_{α,β}`, `ε_{α,β} = ε_{α',β'} = 0`
+/// (eqs. 24–25).
+#[inline]
+pub fn eps_symplectic(a: usize, b: usize) -> f64 {
+    if a / 2 != b / 2 {
+        0.0
+    } else if a % 2 == 0 && b == a + 1 {
+        1.0
+    } else if a % 2 == 1 && b + 1 == a {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Levi-Civita symbol of an index tuple: the sign of the permutation if the
+/// entries are a permutation of `0..len`, 0 otherwise. For a tuple of basis
+/// indices `(t_1…t_s, b_1…b_{n-s})` this equals `det(e_T, e_B)` (eq. 32).
+pub fn levi_civita(idx: &[usize]) -> f64 {
+    let n = idx.len();
+    let mut seen = vec![false; n];
+    for &i in idx {
+        if i >= n || seen[i] {
+            return 0.0;
+        }
+        seen[i] = true;
+    }
+    // Count inversions (n is small — the free-vertex count equals the
+    // representation dimension, so this is at most ~8 in practice).
+    let mut sign = 1.0;
+    for a in 0..n {
+        for b in (a + 1)..n {
+            if idx[a] > idx[b] {
+                sign = -sign;
+            }
+        }
+    }
+    sign
+}
+
+/// The combined index of vertex `v`: top vertices read `I`, bottom read `J`.
+#[inline]
+fn vertex_index(d: &Diagram, i_idx: &[usize], j_idx: &[usize], v: usize) -> usize {
+    if v < d.l {
+        i_idx[v]
+    } else {
+        j_idx[v - d.l]
+    }
+}
+
+/// Matrix entry of the spanning matrix of `d` at `(I, J)` for `group`.
+///
+/// `membership` must be `d.membership()` (hoisted by the callers since it
+/// is shared across all `(I, J)`).
+pub fn diagram_coeff(
+    group: Group,
+    d: &Diagram,
+    membership: &[usize],
+    i_idx: &[usize],
+    j_idx: &[usize],
+    n: usize,
+) -> f64 {
+    match group {
+        Group::Symmetric | Group::Orthogonal => {
+            // δ_{π,(I,J)} (eq. 13): constant on every block.
+            let _ = membership;
+            for b in d.blocks() {
+                let first = vertex_index(d, i_idx, j_idx, b[0]);
+                for &v in &b[1..] {
+                    if vertex_index(d, i_idx, j_idx, v) != first {
+                        return 0.0;
+                    }
+                }
+            }
+            1.0
+        }
+        Group::Symplectic => {
+            // Product of γ factors per pair (eq. 23), left-to-right order
+            // within same-row pairs.
+            let mut prod = 1.0;
+            for b in d.blocks() {
+                debug_assert_eq!(b.len(), 2);
+                let (x, y) = (b[0], b[1]);
+                let (ix, iy) = (
+                    vertex_index(d, i_idx, j_idx, x),
+                    vertex_index(d, i_idx, j_idx, y),
+                );
+                let gamma = match d.block_kind(b) {
+                    BlockKind::Cross => {
+                        if ix == iy {
+                            1.0
+                        } else {
+                            0.0
+                        }
+                    }
+                    BlockKind::Top | BlockKind::Bottom => eps_symplectic(ix, iy),
+                };
+                if gamma == 0.0 {
+                    return 0.0;
+                }
+                prod *= gamma;
+            }
+            prod
+        }
+        Group::SpecialOrthogonal => {
+            if d.is_brauer() {
+                // E_β: same as Φ.
+                return diagram_coeff(Group::Orthogonal, d, membership, i_idx, j_idx, n);
+            }
+            // H_α (eq. 31): det(e_T, e_B) over the free indices times δ on
+            // the pairs. T = free top vertices left→right, B = free bottom
+            // vertices left→right.
+            let mut free_idx: Vec<usize> = Vec::new();
+            let mut free_top: Vec<usize> = Vec::new();
+            let mut free_bottom: Vec<usize> = Vec::new();
+            for b in d.blocks() {
+                if b.len() == 1 {
+                    if b[0] < d.l {
+                        free_top.push(b[0]);
+                    } else {
+                        free_bottom.push(b[0]);
+                    }
+                } else {
+                    let first = vertex_index(d, i_idx, j_idx, b[0]);
+                    if vertex_index(d, i_idx, j_idx, b[1]) != first {
+                        return 0.0;
+                    }
+                }
+            }
+            free_top.sort_unstable();
+            free_bottom.sort_unstable();
+            for &v in free_top.iter().chain(free_bottom.iter()) {
+                free_idx.push(vertex_index(d, i_idx, j_idx, v));
+            }
+            debug_assert_eq!(free_idx.len(), n);
+            levi_civita(&free_idx)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eps_values() {
+        // n = 4 (m = 2): pairs (0,1) and (2,3).
+        assert_eq!(eps_symplectic(0, 1), 1.0);
+        assert_eq!(eps_symplectic(1, 0), -1.0);
+        assert_eq!(eps_symplectic(2, 3), 1.0);
+        assert_eq!(eps_symplectic(3, 2), -1.0);
+        assert_eq!(eps_symplectic(0, 2), 0.0);
+        assert_eq!(eps_symplectic(0, 0), 0.0);
+        assert_eq!(eps_symplectic(1, 3), 0.0);
+    }
+
+    #[test]
+    fn eps_antisymmetric() {
+        for a in 0..6 {
+            for b in 0..6 {
+                assert_eq!(eps_symplectic(a, b), -eps_symplectic(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn levi_civita_values() {
+        assert_eq!(levi_civita(&[0, 1, 2]), 1.0);
+        assert_eq!(levi_civita(&[1, 0, 2]), -1.0);
+        assert_eq!(levi_civita(&[2, 0, 1]), 1.0);
+        assert_eq!(levi_civita(&[0, 0, 1]), 0.0);
+        assert_eq!(levi_civita(&[]), 1.0);
+    }
+
+    #[test]
+    fn levi_civita_matches_det_of_permutation_matrix() {
+        use crate::linalg::Matrix;
+        let perms: [Vec<usize>; 3] = [vec![0, 1, 2, 3], vec![3, 1, 2, 0], vec![1, 2, 3, 0]];
+        for p in perms {
+            let mut m = Matrix::zeros(4, 4);
+            for (col, &row) in p.iter().enumerate() {
+                m.set(row, col, 1.0);
+            }
+            assert!((levi_civita(&p) - m.det()).abs() < 1e-12, "{p:?}");
+        }
+    }
+}

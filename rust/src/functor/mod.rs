@@ -1,0 +1,217 @@
+//! The monoidal functors Θ, Φ, X, Ψ materialised as explicit matrices —
+//! the **naïve baseline** of the paper (`O(n^{l+k})` per matvec) and the
+//! ground truth that every fast-path test compares against.
+//!
+//! For a `(k,l)`-diagram `d` and group `G(n)` the spanning matrix entry at
+//! `(I, J)`, `I ∈ [n]^l`, `J ∈ [n]^k`, is:
+//!
+//! - **Θ (S_n, Theorem 5)** — `δ_{π,(I,J)}`: 1 iff the combined index is
+//!   constant on every block of the partition.
+//! - **Φ (O(n), Theorem 7)** — the same formula restricted to Brauer
+//!   diagrams (every block a pair).
+//! - **X (Sp(n), Theorem 9)** — a product of `γ` factors per pair: `δ` for
+//!   cross-row pairs, the symplectic form `ε` (eqs. 24–25) for same-row
+//!   pairs, read left-to-right within the pair.
+//! - **Ψ (SO(n), Theorem 11)** — `Φ` on Brauer diagrams; on
+//!   `(l+k)\n`-diagrams the entry is `det(e_T, e_B) · δ(pairs)` (eq. 31),
+//!   the determinant being a Levi-Civita symbol over the free indices.
+
+mod coeff;
+pub mod orbit;
+
+pub use coeff::{diagram_coeff, eps_symplectic, levi_civita};
+pub use orbit::{orbit_apply_fast, orbit_to_diagram, OrbitPlan};
+
+use crate::diagram::Diagram;
+use crate::error::{Error, Result};
+use crate::fastmult::Group;
+use crate::linalg::Matrix;
+use crate::tensor::{MultiIndexIter, Tensor};
+
+/// Apply the spanning matrix of `d` to `v` by direct summation over all
+/// `(I, J)` pairs — `O(n^{l+k})`, the paper's naïve baseline.
+pub fn naive_apply(group: Group, d: &Diagram, v: &Tensor) -> Result<Tensor> {
+    let n = v.n;
+    d.validate_for(group, n)?;
+    if v.order != d.k {
+        return Err(Error::ShapeMismatch {
+            expected: format!("input order {}", d.k),
+            got: format!("{}", v.order),
+        });
+    }
+    let mut out = Tensor::zeros(n, d.l);
+    let membership = d.membership();
+    let mut it_i = MultiIndexIter::new(n, d.l);
+    let mut fi = 0usize;
+    while let Some(i_idx) = it_i.next_index() {
+        let i_idx = i_idx.to_vec();
+        let mut acc = 0.0;
+        let mut it_j = MultiIndexIter::new(n, d.k);
+        let mut fj = 0usize;
+        while let Some(j_idx) = it_j.next_index() {
+            let c = diagram_coeff(group, d, &membership, &i_idx, j_idx, n);
+            if c != 0.0 {
+                acc += c * v.data[fj];
+            }
+            fj += 1;
+        }
+        out.data[fi] = acc;
+        fi += 1;
+    }
+    Ok(out)
+}
+
+/// Materialise the full `n^l × n^k` spanning matrix of `d` under the
+/// functor for `group`. Used by the functoriality / monoidality tests and
+/// the layer-level naïve baseline.
+pub fn materialize(group: Group, d: &Diagram, n: usize) -> Result<Matrix> {
+    d.validate_for(group, n)?;
+    let rows = n.pow(d.l as u32);
+    let cols = n.pow(d.k as u32);
+    let membership = d.membership();
+    let mut m = Matrix::zeros(rows, cols);
+    let mut it_i = MultiIndexIter::new(n, d.l);
+    let mut r = 0usize;
+    while let Some(i_idx) = it_i.next_index() {
+        let i_idx = i_idx.to_vec();
+        let mut it_j = MultiIndexIter::new(n, d.k);
+        let mut c = 0usize;
+        while let Some(j_idx) = it_j.next_index() {
+            let v = diagram_coeff(group, d, &membership, &i_idx, j_idx, n);
+            if v != 0.0 {
+                m.set(r, c, v);
+            }
+            c += 1;
+        }
+        r += 1;
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagram::{all_brauer_diagrams, all_partition_diagrams, compose, tensor_product};
+    use crate::util::Rng;
+
+    /// Functoriality (Theorem 27 Step 1): Θ(d2 • d1) = Θ(d2) Θ(d1), with
+    /// the n^c scalar from the removed middle components.
+    #[test]
+    fn theta_functoriality_random() {
+        let mut rng = Rng::new(101);
+        let n = 2;
+        for _ in 0..40 {
+            let d1 = Diagram::random_partition(2, 2, &mut rng); // 2 -> 2
+            let d2 = Diagram::random_partition(2, 2, &mut rng); // 2 -> 2
+            let m1 = materialize(Group::Symmetric, &d1, n).unwrap();
+            let m2 = materialize(Group::Symmetric, &d2, n).unwrap();
+            let prod = m2.matmul(&m1).unwrap();
+            let c = compose(&d2, &d1).unwrap();
+            let mut want = materialize(Group::Symmetric, &c.diagram, n).unwrap();
+            let scale = (n as f64).powi(c.removed_components as i32);
+            for x in &mut want.data {
+                *x *= scale;
+            }
+            assert!(
+                prod.max_abs_diff(&want) < 1e-9,
+                "functoriality failed: {d2} • {d1}"
+            );
+        }
+    }
+
+    /// Monoidality (Theorem 27 Step 3): Θ(d1 ⊗ d2) = Θ(d1) ⊗ Θ(d2).
+    #[test]
+    fn theta_monoidality_random() {
+        let mut rng = Rng::new(102);
+        let n = 2;
+        for _ in 0..20 {
+            let d1 = Diagram::random_partition(1, 2, &mut rng);
+            let d2 = Diagram::random_partition(2, 1, &mut rng);
+            let m1 = materialize(Group::Symmetric, &d1, n).unwrap();
+            let m2 = materialize(Group::Symmetric, &d2, n).unwrap();
+            let t = tensor_product(&d1, &d2);
+            let mt = materialize(Group::Symmetric, &t, n).unwrap();
+            // Kronecker product check, entry by entry.
+            let (r1, c1) = (m1.rows, m1.cols);
+            let (r2, c2) = (m2.rows, m2.cols);
+            assert_eq!(mt.rows, r1 * r2);
+            assert_eq!(mt.cols, c1 * c2);
+            for a in 0..r1 {
+                for b in 0..r2 {
+                    for c in 0..c1 {
+                        for e in 0..c2 {
+                            let want = m1.get(a, c) * m2.get(b, e);
+                            let got = mt.get(a * r2 + b, c * c2 + e);
+                            assert!(
+                                (want - got).abs() < 1e-12,
+                                "kron mismatch at ({a},{b},{c},{e})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Φ functoriality on Brauer diagrams: Φ(d2 • d1) = Φ(d2) Φ(d1).
+    #[test]
+    fn phi_functoriality_brauer() {
+        let n = 2;
+        for d1 in all_brauer_diagrams(2, 2) {
+            for d2 in all_brauer_diagrams(2, 2) {
+                let m1 = materialize(Group::Orthogonal, &d1, n).unwrap();
+                let m2 = materialize(Group::Orthogonal, &d2, n).unwrap();
+                let prod = m2.matmul(&m1).unwrap();
+                let c = compose(&d2, &d1).unwrap();
+                // Composition of Brauer diagrams is Brauer again.
+                let mut want = materialize(Group::Orthogonal, &c.diagram, n).unwrap();
+                let scale = (n as f64).powi(c.removed_components as i32);
+                for x in &mut want.data {
+                    *x *= scale;
+                }
+                assert!(prod.max_abs_diff(&want) < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_diagram_is_identity_matrix() {
+        for group in [Group::Symmetric, Group::Orthogonal] {
+            let d = Diagram::identity(2);
+            let m = materialize(group, &d, 3).unwrap();
+            assert!(m.max_abs_diff(&Matrix::identity(9)) < 1e-14);
+        }
+        // Sp identity: cross pairs are δ, so also the identity matrix.
+        let d = Diagram::identity(2);
+        let m = materialize(Group::Symplectic, &d, 2).unwrap();
+        assert!(m.max_abs_diff(&Matrix::identity(4)) < 1e-14);
+    }
+
+    #[test]
+    fn naive_apply_matches_materialized_matvec() {
+        let mut rng = Rng::new(103);
+        let n = 3;
+        for d in all_partition_diagrams(2, 2, None) {
+            let v = Tensor::random(n, 2, &mut rng);
+            let fast = naive_apply(Group::Symmetric, &d, &v).unwrap();
+            let m = materialize(Group::Symmetric, &d, n).unwrap();
+            let mv = m.matvec(&v.data).unwrap();
+            assert!(fast
+                .data
+                .iter()
+                .zip(&mv)
+                .all(|(a, b)| (a - b).abs() < 1e-10));
+        }
+    }
+
+    #[test]
+    fn shape_validation() {
+        let d = Diagram::identity(2);
+        let v = Tensor::zeros(3, 3); // wrong order
+        assert!(naive_apply(Group::Symmetric, &d, &v).is_err());
+        // non-Brauer diagram for O(n)
+        let p = Diagram::from_blocks(1, 1, vec![vec![0], vec![1]]).unwrap();
+        let v1 = Tensor::zeros(3, 1);
+        assert!(naive_apply(Group::Orthogonal, &p, &v1).is_err());
+    }
+}

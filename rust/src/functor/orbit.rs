@@ -1,0 +1,339 @@
+//! The **orbit basis** for S_n (Maron et al. 2019) and its change of basis
+//! to the paper's diagram basis.
+//!
+//! The orbit matrix `O_π` has a 1 at `(I, J)` iff the equality pattern of
+//! the combined index is *exactly* the partition `π` (indices equal ⟺ same
+//! block), whereas the diagram matrix `D_π` (Theorem 5) only requires
+//! "equal *within* blocks". Hence
+//!
+//! `D_π = Σ_{σ ⪰ π} O_σ`            (sum over coarsenings of π)
+//!
+//! and by Möbius inversion on the partition lattice
+//!
+//! `O_π = Σ_{σ ⪰ π} μ(π, σ) D_σ`,   `μ(π, σ) = Π_{B ∈ σ} (−1)^{m_B−1}(m_B−1)!`
+//!
+//! where `m_B` counts the blocks of `π` merged into block `B` of `σ`.
+//!
+//! This module provides both bases, the conversion in both directions, and
+//! — the practical payoff — [`orbit_apply_fast`]: multiplying by an
+//! orbit-basis element at Algorithm-1 speed by expanding it over diagram
+//! plans. Networks parameterised in the Maron orbit basis (the common
+//! convention) can therefore run on the fast path unchanged.
+
+use crate::diagram::Diagram;
+use crate::error::Result;
+use crate::fastmult::{Group, MultPlan};
+use crate::linalg::Matrix;
+use crate::tensor::{MultiIndexIter, Tensor};
+
+/// All coarsenings of the partition underlying `d` (as diagrams with the
+/// same `(k, l)` shape), including `d` itself.
+///
+/// A coarsening merges blocks; we enumerate set partitions of the *block
+/// set* and flatten. Exponential in the block count — fine for the layer
+/// shapes the basis is used at (`l + k ≤ 6`).
+pub fn coarsenings(d: &Diagram) -> Vec<Diagram> {
+    let blocks = d.blocks().to_vec();
+    let b = blocks.len();
+    let mut out = Vec::new();
+    // Enumerate restricted growth strings over the b blocks.
+    let mut assignment = vec![0usize; b];
+    fn rec(
+        i: usize,
+        num_groups: usize,
+        assignment: &mut Vec<usize>,
+        blocks: &[Vec<usize>],
+        d: &Diagram,
+        out: &mut Vec<Diagram>,
+    ) {
+        if i == blocks.len() {
+            let mut merged: Vec<Vec<usize>> = vec![Vec::new(); num_groups];
+            for (bi, &g) in assignment.iter().enumerate() {
+                merged[g].extend(blocks[bi].iter().copied());
+            }
+            out.push(
+                Diagram::from_blocks(d.l, d.k, merged).expect("merged blocks partition [l+k]"),
+            );
+            return;
+        }
+        for g in 0..=num_groups.min(i) {
+            assignment[i] = g;
+            rec(
+                i + 1,
+                num_groups.max(g + 1),
+                assignment,
+                blocks,
+                d,
+                out,
+            );
+        }
+    }
+    if b == 0 {
+        out.push(d.clone());
+        return out;
+    }
+    rec(0, 0, &mut assignment, &blocks, d, &mut out);
+    out
+}
+
+/// Möbius function `μ(π, σ)` of the partition lattice for `π ⪯ σ`
+/// (σ a coarsening of π): `Π_{B ∈ σ} (−1)^{m_B−1} (m_B−1)!`.
+pub fn mobius(fine: &Diagram, coarse: &Diagram) -> f64 {
+    let fine_membership = fine.membership();
+    let mut mu = 1.0;
+    for block in coarse.blocks() {
+        // Count distinct fine blocks inside this coarse block.
+        let mut seen = std::collections::HashSet::new();
+        for &v in block {
+            seen.insert(fine_membership[v]);
+        }
+        let m = seen.len();
+        // (−1)^{m−1} (m−1)!
+        let mut term = 1.0;
+        for i in 1..m {
+            term *= -(i as f64);
+        }
+        mu *= term;
+    }
+    mu
+}
+
+/// Orbit matrix entry at `(I, J)`: 1 iff the equality pattern is exactly
+/// the partition of `d`.
+pub fn orbit_coeff(d: &Diagram, i_idx: &[usize], j_idx: &[usize]) -> f64 {
+    let l = d.l;
+    let at = |v: usize| if v < l { i_idx[v] } else { j_idx[v - l] };
+    let blocks = d.blocks();
+    // Equal within blocks…
+    for b in blocks {
+        let first = at(b[0]);
+        for &v in &b[1..] {
+            if at(v) != first {
+                return 0.0;
+            }
+        }
+    }
+    // …and different across blocks.
+    for a in 0..blocks.len() {
+        for b in (a + 1)..blocks.len() {
+            if at(blocks[a][0]) == at(blocks[b][0]) {
+                return 0.0;
+            }
+        }
+    }
+    1.0
+}
+
+/// Materialise the orbit matrix `O_π` (naïve; test/baseline use).
+pub fn materialize_orbit(d: &Diagram, n: usize) -> Matrix {
+    let rows = n.pow(d.l as u32);
+    let cols = n.pow(d.k as u32);
+    let mut m = Matrix::zeros(rows, cols);
+    let mut it_i = MultiIndexIter::new(n, d.l);
+    let mut r = 0usize;
+    while let Some(i_idx) = it_i.next_index() {
+        let i_idx = i_idx.to_vec();
+        let mut it_j = MultiIndexIter::new(n, d.k);
+        let mut c = 0usize;
+        while let Some(j_idx) = it_j.next_index() {
+            let v = orbit_coeff(d, &i_idx, j_idx);
+            if v != 0.0 {
+                m.set(r, c, v);
+            }
+            c += 1;
+        }
+        r += 1;
+    }
+    m
+}
+
+/// Expand one orbit element over the diagram basis:
+/// `O_π = Σ_{σ ⪰ π} μ(π, σ) D_σ`. Returns `(diagram, coefficient)` pairs.
+pub fn orbit_to_diagram(d: &Diagram) -> Vec<(Diagram, f64)> {
+    coarsenings(d)
+        .into_iter()
+        .map(|sigma| {
+            let mu = mobius(d, &sigma);
+            (sigma, mu)
+        })
+        .collect()
+}
+
+/// A pre-factored fast multiplier for one *orbit* basis element: the
+/// Möbius expansion over diagram plans, applied term by term on the fast
+/// path (each term `O(n^k)` instead of the naïve `O(n^{l+k})`).
+#[derive(Debug, Clone)]
+pub struct OrbitPlan {
+    terms: Vec<(MultPlan, f64)>,
+    l: usize,
+    n: usize,
+}
+
+impl OrbitPlan {
+    /// Build the plan for orbit element `d` over `R^n` (S_n only — the
+    /// orbit basis is specific to the partition category).
+    pub fn new(d: &Diagram, n: usize) -> Result<Self> {
+        let mut terms = Vec::new();
+        for (sigma, mu) in orbit_to_diagram(d) {
+            // Coarsenings with more than n blocks have zero image under Θ
+            // only if the original had ≤ n blocks… keep all terms; the
+            // functor handles them correctly regardless.
+            terms.push((MultPlan::new(Group::Symmetric, &sigma, n)?, mu));
+        }
+        Ok(OrbitPlan {
+            terms,
+            l: d.l,
+            n,
+        })
+    }
+
+    /// `O_π · v` on the fast path.
+    pub fn apply(&self, v: &Tensor) -> Result<Tensor> {
+        let mut out = Tensor::zeros(self.n, self.l);
+        for (plan, mu) in &self.terms {
+            plan.apply_accumulate(v, *mu, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    /// Number of diagram terms in the Möbius expansion.
+    pub fn num_terms(&self) -> usize {
+        self.terms.len()
+    }
+}
+
+/// Naïve orbit matvec (baseline).
+pub fn orbit_apply_naive(d: &Diagram, v: &Tensor) -> Tensor {
+    let n = v.n;
+    let mut out = Tensor::zeros(n, d.l);
+    let mut it_i = MultiIndexIter::new(n, d.l);
+    let mut fi = 0usize;
+    while let Some(i_idx) = it_i.next_index() {
+        let i_idx = i_idx.to_vec();
+        let mut acc = 0.0;
+        let mut it_j = MultiIndexIter::new(n, d.k);
+        let mut fj = 0usize;
+        while let Some(j_idx) = it_j.next_index() {
+            let c = orbit_coeff(d, &i_idx, j_idx);
+            if c != 0.0 {
+                acc += c * v.data[fj];
+            }
+            fj += 1;
+        }
+        out.data[fi] = acc;
+        fi += 1;
+    }
+    out
+}
+
+/// Fast orbit matvec through the Möbius expansion (one-shot convenience;
+/// hold an [`OrbitPlan`] to amortise).
+pub fn orbit_apply_fast(d: &Diagram, v: &Tensor) -> Result<Tensor> {
+    OrbitPlan::new(d, v.n)?.apply(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagram::{all_partition_diagrams, bell_bounded};
+    use crate::functor::materialize;
+    use crate::util::Rng;
+
+    #[test]
+    fn coarsening_counts_are_bell_numbers() {
+        // A partition with b singleton blocks has Bell(b) coarsenings.
+        let d = Diagram::from_blocks(2, 1, vec![vec![0], vec![1], vec![2]]).unwrap();
+        assert_eq!(coarsenings(&d).len() as u128, bell_bounded(3, 3)); // 5
+        let id = Diagram::identity(2); // 2 blocks
+        assert_eq!(coarsenings(&id).len(), 2);
+    }
+
+    #[test]
+    fn mobius_known_values() {
+        // μ(π, π) = 1; merging two blocks gives −1; merging three gives 2.
+        let fine = Diagram::from_blocks(2, 1, vec![vec![0], vec![1], vec![2]]).unwrap();
+        assert_eq!(mobius(&fine, &fine), 1.0);
+        let two = Diagram::from_blocks(2, 1, vec![vec![0, 1], vec![2]]).unwrap();
+        assert_eq!(mobius(&fine, &two), -1.0);
+        let one = Diagram::from_blocks(2, 1, vec![vec![0, 1, 2]]).unwrap();
+        assert_eq!(mobius(&fine, &one), 2.0); // (−1)^2 · 2!
+    }
+
+    /// The defining identity: D_π = Σ_{σ ⪰ π} O_σ as matrices.
+    #[test]
+    fn diagram_is_sum_of_orbit_coarsenings() {
+        let n = 3;
+        for d in all_partition_diagrams(2, 2, None) {
+            let dm = materialize(Group::Symmetric, &d, n).unwrap();
+            let mut acc = Matrix::zeros(dm.rows, dm.cols);
+            for sigma in coarsenings(&d) {
+                let om = materialize_orbit(&sigma, n);
+                for (a, b) in acc.data.iter_mut().zip(&om.data) {
+                    *a += b;
+                }
+            }
+            assert!(dm.max_abs_diff(&acc) < 1e-12, "failed for {d}");
+        }
+    }
+
+    /// Möbius inversion: O_π = Σ μ(π,σ) D_σ as matrices.
+    #[test]
+    fn orbit_is_mobius_sum_of_diagrams() {
+        let n = 3;
+        for d in all_partition_diagrams(1, 2, None) {
+            let om = materialize_orbit(&d, n);
+            let mut acc = Matrix::zeros(om.rows, om.cols);
+            for (sigma, mu) in orbit_to_diagram(&d) {
+                let dm = materialize(Group::Symmetric, &sigma, n).unwrap();
+                for (a, b) in acc.data.iter_mut().zip(&dm.data) {
+                    *a += mu * b;
+                }
+            }
+            assert!(om.max_abs_diff(&acc) < 1e-12, "failed for {d}");
+        }
+    }
+
+    /// The payoff: orbit matvec on the fast path equals the naïve orbit
+    /// matvec.
+    #[test]
+    fn orbit_fast_equals_naive() {
+        let mut rng = Rng::new(0x0B17);
+        let n = 3;
+        for d in all_partition_diagrams(2, 2, None) {
+            let v = Tensor::random(n, 2, &mut rng);
+            let fast = orbit_apply_fast(&d, &v).unwrap();
+            let slow = orbit_apply_naive(&d, &v);
+            assert!(
+                fast.allclose(&slow, 1e-9),
+                "orbit mismatch for {d}: {}",
+                fast.max_abs_diff(&slow)
+            );
+        }
+    }
+
+    /// Orbit basis elements are disjoint: for fixed (I, J) exactly one
+    /// orbit matrix is non-zero, and summing all of them gives the all-ones
+    /// matrix.
+    #[test]
+    fn orbit_elements_partition_index_space() {
+        let n = 2;
+        let all = all_partition_diagrams(1, 2, None);
+        let mut sum = Matrix::zeros(n, n * n);
+        for d in &all {
+            let m = materialize_orbit(d, n);
+            for (a, b) in sum.data.iter_mut().zip(&m.data) {
+                *a += b;
+            }
+        }
+        for &x in &sum.data {
+            assert_eq!(x, 1.0);
+        }
+    }
+
+    #[test]
+    fn orbit_plan_reports_terms() {
+        let d = Diagram::from_blocks(1, 1, vec![vec![0], vec![1]]).unwrap();
+        let plan = OrbitPlan::new(&d, 3).unwrap();
+        assert_eq!(plan.num_terms(), 2); // {0}{1} and {0,1}
+    }
+}

@@ -1,0 +1,235 @@
+//! Samplers for elements of S_n, O(n), SO(n) and Sp(n) (as `n×n` matrices
+//! in the standard / symplectic basis), plus the diagonal tensor-power
+//! action `ρ_k` (eq. 2).
+//!
+//! These exist to *test* the equivariance property (eq. 3)
+//! `W ρ_k(g) v = ρ_l(g) W v` for every spanning matrix `W` — the
+//! theorem-level validation that our functors and fast multiplication
+//! implement the right maps.
+
+use crate::error::{Error, Result};
+use crate::fastmult::Group;
+use crate::linalg::Matrix;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Sample a group element of `G(n)` as a row-major `n×n` matrix.
+pub fn sample(group: Group, n: usize, rng: &mut Rng) -> Result<Matrix> {
+    match group {
+        Group::Symmetric => Ok(permutation_matrix(&rng.permutation(n))),
+        Group::Orthogonal => {
+            let q = random_orthogonal(n, rng);
+            Ok(q)
+        }
+        Group::SpecialOrthogonal => {
+            let mut q = random_orthogonal(n, rng);
+            if q.det() < 0.0 {
+                // Flip one column to land in SO(n).
+                for r in 0..n {
+                    let v = -q.get(r, 0);
+                    q.set(r, 0, v);
+                }
+            }
+            Ok(q)
+        }
+        Group::Symplectic => {
+            if n % 2 != 0 {
+                return Err(Error::DimensionConstraint(
+                    "Sp(n) requires even n".into(),
+                ));
+            }
+            Ok(random_symplectic(n, rng))
+        }
+    }
+}
+
+/// Permutation matrix: column `j` is `e_{σ(j)}` so that `M e_j = e_{σ(j)}`.
+pub fn permutation_matrix(sigma: &[usize]) -> Matrix {
+    let n = sigma.len();
+    let mut m = Matrix::zeros(n, n);
+    for (j, &i) in sigma.iter().enumerate() {
+        m.set(i, j, 1.0);
+    }
+    m
+}
+
+/// Haar-ish random orthogonal matrix: Gram–Schmidt of a Gaussian matrix
+/// (retries on the measure-zero rank-deficient case).
+pub fn random_orthogonal(n: usize, rng: &mut Rng) -> Matrix {
+    loop {
+        let g = Matrix::gaussian(n, n, rng);
+        if let Some(q) = g.gram_schmidt() {
+            return q;
+        }
+    }
+}
+
+/// Random symplectic matrix w.r.t. the interleaved form
+/// `ε_{2i,2i+1} = 1 = -ε_{2i+1,2i}` (the basis `1,1',…,m,m'`).
+///
+/// Built from the standard generators in the block basis
+/// `(x_1…x_m, y_1…y_m)` — `diag(A, A^{-T})`, `[[I,B],[0,I]]` with `B`
+/// symmetric, `[[I,0],[C,I]]` with `C` symmetric — then conjugated into the
+/// interleaved ordering.
+pub fn random_symplectic(n: usize, rng: &mut Rng) -> Matrix {
+    let m = n / 2;
+    // A invertible, well conditioned: use an orthogonal matrix, so
+    // A^{-T} = A.
+    let a = random_orthogonal(m, rng);
+    let mut block = Matrix::zeros(n, n);
+    for r in 0..m {
+        for c in 0..m {
+            block.set(r, c, a.get(r, c));
+            block.set(m + r, m + c, a.get(r, c)); // A^{-T} = A (orthogonal)
+        }
+    }
+    // Right-multiply by [[I, B], [0, I]] and [[I, 0], [C, I]] with small
+    // symmetric B, C to leave the "trivial" subgroup.
+    let b = small_symmetric(m, rng);
+    let c = small_symmetric(m, rng);
+    let upper = block_upper(&b);
+    let lower = block_lower(&c);
+    let g_block = block.matmul(&upper).unwrap().matmul(&lower).unwrap();
+    // Conjugate into the interleaved basis: interleaved index 2i ↔ block i,
+    // 2i+1 ↔ block m+i.
+    let mut s = Matrix::zeros(n, n);
+    for i in 0..m {
+        s.set(2 * i, i, 1.0);
+        s.set(2 * i + 1, m + i, 1.0);
+    }
+    s.matmul(&g_block).unwrap().matmul(&s.transpose()).unwrap()
+}
+
+fn small_symmetric(m: usize, rng: &mut Rng) -> Matrix {
+    let mut b = Matrix::zeros(m, m);
+    for r in 0..m {
+        for c in r..m {
+            let v = 0.3 * rng.gaussian();
+            b.set(r, c, v);
+            b.set(c, r, v);
+        }
+    }
+    b
+}
+
+fn block_upper(b: &Matrix) -> Matrix {
+    let m = b.rows;
+    let mut u = Matrix::identity(2 * m);
+    for r in 0..m {
+        for c in 0..m {
+            u.set(r, m + c, b.get(r, c));
+        }
+    }
+    u
+}
+
+fn block_lower(c: &Matrix) -> Matrix {
+    let m = c.rows;
+    let mut l = Matrix::identity(2 * m);
+    for r in 0..m {
+        for cc in 0..m {
+            l.set(m + r, cc, c.get(r, cc));
+        }
+    }
+    l
+}
+
+/// The symplectic form as a matrix in the interleaved basis.
+pub fn symplectic_form(n: usize) -> Matrix {
+    let mut j = Matrix::zeros(n, n);
+    for i in 0..n / 2 {
+        j.set(2 * i, 2 * i + 1, 1.0);
+        j.set(2 * i + 1, 2 * i, -1.0);
+    }
+    j
+}
+
+/// Apply `ρ_k(g)` to a tensor: `g` along every axis (eq. 2).
+pub fn rho(g: &Matrix, v: &Tensor) -> Tensor {
+    debug_assert_eq!(g.rows, v.n);
+    debug_assert_eq!(g.cols, v.n);
+    v.rho_apply(&g.data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permutation_matrix_action() {
+        let m = permutation_matrix(&[2, 0, 1]);
+        // M e_0 = e_2
+        let v = m.matvec(&[1.0, 0.0, 0.0]).unwrap();
+        assert_eq!(v, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn orthogonal_is_orthogonal() {
+        let mut rng = Rng::new(61);
+        for _ in 0..5 {
+            let q = random_orthogonal(5, &mut rng);
+            let qtq = q.transpose().matmul(&q).unwrap();
+            assert!(qtq.max_abs_diff(&Matrix::identity(5)) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn special_orthogonal_has_unit_det() {
+        let mut rng = Rng::new(62);
+        for _ in 0..10 {
+            let q = sample(Group::SpecialOrthogonal, 4, &mut rng).unwrap();
+            assert!((q.det() - 1.0).abs() < 1e-8, "det {}", q.det());
+            let qtq = q.transpose().matmul(&q).unwrap();
+            assert!(qtq.max_abs_diff(&Matrix::identity(4)) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn symplectic_preserves_form() {
+        let mut rng = Rng::new(63);
+        for n in [2usize, 4, 6] {
+            for _ in 0..5 {
+                let g = random_symplectic(n, &mut rng);
+                let j = symplectic_form(n);
+                let gtjg = g.transpose().matmul(&j).unwrap().matmul(&g).unwrap();
+                assert!(
+                    gtjg.max_abs_diff(&j) < 1e-8,
+                    "n={n}: form not preserved, diff {}",
+                    gtjg.max_abs_diff(&j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn symplectic_rejects_odd_n() {
+        let mut rng = Rng::new(64);
+        assert!(sample(Group::Symplectic, 3, &mut rng).is_err());
+    }
+
+    #[test]
+    fn rho_is_multiplicative() {
+        // ρ_k(g h) = ρ_k(g) ρ_k(h)
+        let mut rng = Rng::new(65);
+        let g = random_orthogonal(3, &mut rng);
+        let h = random_orthogonal(3, &mut rng);
+        let gh = g.matmul(&h).unwrap();
+        let v = Tensor::random(3, 3, &mut rng);
+        let a = rho(&gh, &v);
+        let b = rho(&g, &rho(&h, &v));
+        assert!(a.allclose(&b, 1e-9));
+    }
+
+    #[test]
+    fn symmetric_sample_is_permutation() {
+        let mut rng = Rng::new(66);
+        let g = sample(Group::Symmetric, 5, &mut rng).unwrap();
+        // Exactly one 1 per row and column.
+        for r in 0..5 {
+            let ones = (0..5).filter(|&c| g.get(r, c) == 1.0).count();
+            let zeros = (0..5).filter(|&c| g.get(r, c) == 0.0).count();
+            assert_eq!(ones, 1);
+            assert_eq!(zeros, 4);
+        }
+    }
+}

@@ -1,0 +1,418 @@
+//! Multi-channel equivariant linear layers.
+//!
+//! Practical equivariant networks (Maron et al. 2019 and descendants) use
+//! feature channels: the layer maps
+//! `(R^n)^{⊗k} ⊗ R^{c_in} → (R^n)^{⊗l} ⊗ R^{c_out}` and equivariance
+//! constrains only the tensor-power part, so the weight is one learned
+//! `c_out × c_in` matrix **per spanning diagram**:
+//!
+//! `out[o] = Σ_d F(d) · ( Σ_i λ_d[o, i] · in[i] )  +  bias`.
+//!
+//! The implementation mixes channels *before* the diagram multiplication
+//! (one fast `F(d)` application per diagram per output channel, never per
+//! input channel pair), keeping the cost at
+//! `O(#diagrams · c_out · (c_in·n^k + fastmult))`.
+
+use super::linear::spanning_diagrams;
+use crate::diagram::Diagram;
+use crate::error::{Error, Result};
+use crate::fastmult::{Group, MultPlan};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// One spanning term with its per-channel coefficient matrix.
+#[derive(Debug, Clone)]
+struct ChannelTerm {
+    #[allow(dead_code)]
+    diagram: Diagram,
+    forward: MultPlan,
+    backward: MultPlan,
+    adjoint_sign: f64,
+    /// `c_out × c_in`, row-major.
+    weights: Vec<f64>,
+}
+
+/// A multi-channel equivariant linear layer.
+#[derive(Debug, Clone)]
+pub struct ChannelEquivariantLinear {
+    group: Group,
+    n: usize,
+    k: usize,
+    l: usize,
+    c_in: usize,
+    c_out: usize,
+    terms: Vec<ChannelTerm>,
+    /// Per-bias-diagram, per-output-channel coefficients (`c_out` each).
+    bias_terms: Vec<(MultPlan, Vec<f64>)>,
+}
+
+impl ChannelEquivariantLinear {
+    /// Build with the full spanning set; weights iid normal scaled by
+    /// `1/sqrt(#diagrams · c_in)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        group: Group,
+        n: usize,
+        k: usize,
+        l: usize,
+        c_in: usize,
+        c_out: usize,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        assert!(c_in >= 1 && c_out >= 1);
+        let diagrams = spanning_diagrams(group, n, k, l)?;
+        let scale = 1.0 / ((diagrams.len().max(1) * c_in) as f64).sqrt();
+        let mut terms = Vec::with_capacity(diagrams.len());
+        for d in diagrams {
+            let forward = MultPlan::new(group, &d, n)?;
+            let backward = MultPlan::new(group, &d.transpose(), n)?;
+            let adjoint_sign = super::linear::transpose_sign(group, &d, n);
+            let weights = (0..c_out * c_in).map(|_| scale * rng.gaussian()).collect();
+            terms.push(ChannelTerm {
+                diagram: d,
+                forward,
+                backward,
+                adjoint_sign,
+                weights,
+            });
+        }
+        let bias_diagrams = spanning_diagrams(group, n, 0, l)?;
+        let mut bias_terms = Vec::with_capacity(bias_diagrams.len());
+        for d in bias_diagrams {
+            let plan = MultPlan::new(group, &d, n)?;
+            bias_terms.push((plan, vec![0.0; c_out]));
+        }
+        Ok(ChannelEquivariantLinear {
+            group,
+            n,
+            k,
+            l,
+            c_in,
+            c_out,
+            terms,
+            bias_terms,
+        })
+    }
+
+    /// Input channel count.
+    pub fn c_in(&self) -> usize {
+        self.c_in
+    }
+    /// Output channel count.
+    pub fn c_out(&self) -> usize {
+        self.c_out
+    }
+    /// Total learnable parameters.
+    pub fn num_params(&self) -> usize {
+        self.terms.len() * self.c_out * self.c_in + self.bias_terms.len() * self.c_out
+    }
+    /// The group.
+    pub fn group(&self) -> Group {
+        self.group
+    }
+
+    fn check_channels(&self, x: &[Tensor]) -> Result<()> {
+        if x.len() != self.c_in {
+            return Err(Error::ShapeMismatch {
+                expected: format!("{} input channels", self.c_in),
+                got: format!("{}", x.len()),
+            });
+        }
+        for t in x {
+            if t.order != self.k || t.n != self.n {
+                return Err(Error::ShapeMismatch {
+                    expected: format!("order-{} tensors over R^{}", self.k, self.n),
+                    got: format!("order {} over R^{}", t.order, t.n),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Forward: `out[o] = Σ_d F(d)(Σ_i λ_d[o,i] x[i]) + Σ_b μ_b[o] F(b)(1)`.
+    pub fn forward(&self, x: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.check_channels(x)?;
+        let mut out: Vec<Tensor> = (0..self.c_out)
+            .map(|_| Tensor::zeros(self.n, self.l))
+            .collect();
+        let mut mixed = Tensor::zeros(self.n, self.k);
+        for term in &self.terms {
+            for (o, out_t) in out.iter_mut().enumerate() {
+                // Mix input channels with this diagram's o-th weight row.
+                for v in &mut mixed.data {
+                    *v = 0.0;
+                }
+                let mut any = false;
+                for (i, x_t) in x.iter().enumerate() {
+                    let w = term.weights[o * self.c_in + i];
+                    if w != 0.0 {
+                        mixed.axpy(w, x_t);
+                        any = true;
+                    }
+                }
+                if any {
+                    term.forward.apply_accumulate(&mixed, 1.0, out_t)?;
+                }
+            }
+        }
+        let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+        for (plan, mus) in &self.bias_terms {
+            for (o, out_t) in out.iter_mut().enumerate() {
+                if mus[o] != 0.0 {
+                    plan.apply_accumulate(&one, mus[o], out_t)?;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Backward: returns `∂L/∂x` and accumulates parameter gradients.
+    pub fn backward(
+        &self,
+        x: &[Tensor],
+        grad_out: &[Tensor],
+        grads: &mut ChannelGrads,
+    ) -> Result<Vec<Tensor>> {
+        self.check_channels(x)?;
+        assert_eq!(grad_out.len(), self.c_out);
+        let mut grad_x: Vec<Tensor> = (0..self.c_in)
+            .map(|_| Tensor::zeros(self.n, self.k))
+            .collect();
+        for (ti, term) in self.terms.iter().enumerate() {
+            for (o, g) in grad_out.iter().enumerate() {
+                // bt = sign · F(dᵀ) g — shared across input channels.
+                let bt = term.backward.apply(g)?;
+                for (i, x_t) in x.iter().enumerate() {
+                    let w = term.weights[o * self.c_in + i];
+                    // ∂L/∂λ_d[o,i] = sign · ⟨F(dᵀ) g, x[i]⟩
+                    grads.terms[ti][o * self.c_in + i] += term.adjoint_sign * bt.dot(x_t);
+                    if w != 0.0 {
+                        grad_x[i].axpy(w * term.adjoint_sign, &bt);
+                    }
+                }
+            }
+        }
+        let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+        for (bi, (plan, _)) in self.bias_terms.iter().enumerate() {
+            // Reuse the fast path via the transposed bias diagram? Bias
+            // diagrams have k = 0; their adjoint maps order-l to order-0:
+            // ⟨F(b)(1), g⟩ per output channel.
+            let basis = plan.apply(&one)?;
+            for (o, g) in grad_out.iter().enumerate() {
+                grads.bias[bi][o] += basis.dot(g);
+            }
+        }
+        Ok(grad_x)
+    }
+
+    /// Zeroed gradient buffers.
+    pub fn zero_grads(&self) -> ChannelGrads {
+        ChannelGrads {
+            terms: self
+                .terms
+                .iter()
+                .map(|t| vec![0.0; t.weights.len()])
+                .collect(),
+            bias: self
+                .bias_terms
+                .iter()
+                .map(|(_, m)| vec![0.0; m.len()])
+                .collect(),
+        }
+    }
+
+    /// Flat parameter access (for optimisers).
+    pub fn params_flat(&self) -> Vec<f64> {
+        let mut p = Vec::new();
+        for t in &self.terms {
+            p.extend_from_slice(&t.weights);
+        }
+        for (_, m) in &self.bias_terms {
+            p.extend_from_slice(m);
+        }
+        p
+    }
+
+    /// Write back a flat parameter vector.
+    pub fn set_params_flat(&mut self, flat: &[f64]) {
+        let mut off = 0;
+        for t in &mut self.terms {
+            let n = t.weights.len();
+            t.weights.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        for (_, m) in &mut self.bias_terms {
+            let n = m.len();
+            m.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        debug_assert_eq!(off, flat.len());
+    }
+
+    /// Flatten gradients to match [`Self::params_flat`].
+    pub fn grads_flat(&self, grads: &ChannelGrads) -> Vec<f64> {
+        let mut g = Vec::new();
+        for t in &grads.terms {
+            g.extend_from_slice(t);
+        }
+        for b in &grads.bias {
+            g.extend_from_slice(b);
+        }
+        g
+    }
+}
+
+/// Gradient buffers for one channel layer.
+#[derive(Debug, Clone)]
+pub struct ChannelGrads {
+    /// Per-term `c_out × c_in` gradient matrices.
+    pub terms: Vec<Vec<f64>>,
+    /// Per-bias-diagram, per-output-channel gradients.
+    pub bias: Vec<Vec<f64>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::groups;
+
+    fn rand_channels(n: usize, k: usize, c: usize, rng: &mut Rng) -> Vec<Tensor> {
+        (0..c).map(|_| Tensor::random(n, k, rng)).collect()
+    }
+
+    #[test]
+    fn shapes_and_param_counts() {
+        let mut rng = Rng::new(811);
+        let layer =
+            ChannelEquivariantLinear::new(Group::Symmetric, 3, 2, 2, 4, 5, &mut rng).unwrap();
+        assert_eq!(layer.c_in(), 4);
+        assert_eq!(layer.c_out(), 5);
+        // 15 diagrams (n=3 → B(4,3)=14? n=3: B(4,3)=S(4,1)+S(4,2)+S(4,3)=1+7+6=14)
+        let terms = layer.terms.len();
+        assert_eq!(
+            layer.num_params(),
+            terms * 20 + layer.bias_terms.len() * 5
+        );
+        let x = rand_channels(3, 2, 4, &mut rng);
+        let y = layer.forward(&x).unwrap();
+        assert_eq!(y.len(), 5);
+        assert_eq!(y[0].order, 2);
+    }
+
+    #[test]
+    fn channelwise_equivariance() {
+        let mut rng = Rng::new(812);
+        for group in [Group::Symmetric, Group::Orthogonal, Group::Symplectic] {
+            let n = if group == Group::Symplectic { 4 } else { 3 };
+            let layer = ChannelEquivariantLinear::new(group, n, 2, 2, 2, 3, &mut rng).unwrap();
+            let x = rand_channels(n, 2, 2, &mut rng);
+            let g = groups::sample(group, n, &mut rng).unwrap();
+            let gx: Vec<Tensor> = x.iter().map(|t| groups::rho(&g, t)).collect();
+            let lhs = layer.forward(&gx).unwrap();
+            let rhs: Vec<Tensor> = layer
+                .forward(&x)
+                .unwrap()
+                .iter()
+                .map(|t| groups::rho(&g, t))
+                .collect();
+            for (a, b) in lhs.iter().zip(&rhs) {
+                assert!(a.allclose(b, 1e-7), "{group}: {}", a.max_abs_diff(b));
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_check() {
+        let mut rng = Rng::new(813);
+        let mut layer =
+            ChannelEquivariantLinear::new(Group::Symmetric, 2, 1, 1, 2, 2, &mut rng).unwrap();
+        // give biases non-zero values so their gradients are exercised
+        let mut p = layer.params_flat();
+        for v in &mut p {
+            if *v == 0.0 {
+                *v = 0.05;
+            }
+        }
+        layer.set_params_flat(&p);
+        let x = rand_channels(2, 1, 2, &mut rng);
+        let loss = |layer: &ChannelEquivariantLinear, x: &[Tensor]| -> f64 {
+            layer
+                .forward(x)
+                .unwrap()
+                .iter()
+                .map(|t| 0.5 * t.data.iter().map(|v| v * v).sum::<f64>())
+                .sum()
+        };
+        let out = layer.forward(&x).unwrap();
+        let mut grads = layer.zero_grads();
+        let grad_x = layer.backward(&x, &out, &mut grads).unwrap();
+        let flat_g = layer.grads_flat(&grads);
+        let flat_p = layer.params_flat();
+        let eps = 1e-6;
+        for i in 0..flat_p.len() {
+            let mut lp = layer.clone();
+            let mut pp = flat_p.clone();
+            pp[i] += eps;
+            lp.set_params_flat(&pp);
+            let mut lm = layer.clone();
+            let mut pm = flat_p.clone();
+            pm[i] -= eps;
+            lm.set_params_flat(&pm);
+            let fd = (loss(&lp, &x) - loss(&lm, &x)) / (2.0 * eps);
+            assert!(
+                (fd - flat_g[i]).abs() < 1e-5,
+                "param {i}: fd {fd} vs {}",
+                flat_g[i]
+            );
+        }
+        // Input gradients.
+        for (ci, xt) in x.iter().enumerate() {
+            for f in 0..xt.len() {
+                let mut xp: Vec<Tensor> = x.clone();
+                xp[ci].data[f] += eps;
+                let mut xm: Vec<Tensor> = x.clone();
+                xm[ci].data[f] -= eps;
+                let fd = (loss(&layer, &xp) - loss(&layer, &xm)) / (2.0 * eps);
+                assert!(
+                    (fd - grad_x[ci].data[f]).abs() < 1e-5,
+                    "input ({ci},{f}): fd {fd} vs {}",
+                    grad_x[ci].data[f]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_channel_matches_equivariant_linear() {
+        // c_in = c_out = 1 must reproduce the single-channel layer given
+        // the same coefficients.
+        use crate::layer::{EquivariantLinear, Init};
+        let mut rng = Rng::new(814);
+        let mut ch =
+            ChannelEquivariantLinear::new(Group::Orthogonal, 3, 2, 2, 1, 1, &mut rng).unwrap();
+        let mut single =
+            EquivariantLinear::new(Group::Orthogonal, 3, 2, 2, Init::Zeros, &mut rng).unwrap();
+        // Copy channel weights into the single-channel layer's coeffs.
+        let w: Vec<f64> = ch.terms.iter().map(|t| t.weights[0]).collect();
+        single.coeffs.copy_from_slice(&w);
+        // zero biases in both (single starts at Zeros; ch bias starts 0)
+        for (_, m) in &mut ch.bias_terms {
+            m[0] = 0.0;
+        }
+        let x = Tensor::random(3, 2, &mut rng);
+        let a = ch.forward(std::slice::from_ref(&x)).unwrap();
+        let b = single.forward(&x).unwrap();
+        assert!(a[0].allclose(&b, 1e-12));
+    }
+
+    #[test]
+    fn channel_count_validation() {
+        let mut rng = Rng::new(815);
+        let layer =
+            ChannelEquivariantLinear::new(Group::Symmetric, 3, 1, 1, 2, 2, &mut rng).unwrap();
+        let too_few = vec![Tensor::zeros(3, 1)];
+        assert!(layer.forward(&too_few).is_err());
+        let wrong_order = vec![Tensor::zeros(3, 2), Tensor::zeros(3, 2)];
+        assert!(layer.forward(&wrong_order).is_err());
+    }
+}

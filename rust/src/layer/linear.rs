@@ -1,0 +1,440 @@
+//! The equivariant linear layer.
+
+use crate::diagram::{
+    all_brauer_diagrams, all_jellyfish_diagrams, all_partition_diagrams, Diagram,
+};
+use crate::error::{Error, Result};
+use crate::fastmult::{Group, MultPlan};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Weight initialisation schemes for the diagram coefficients.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Init {
+    /// All coefficients zero (useful for testing).
+    Zeros,
+    /// iid normal with the given standard deviation.
+    Normal(f64),
+    /// Scaled by `1/sqrt(#terms)` — keeps output variance bounded as the
+    /// spanning set grows (the layer analogue of Xavier initialisation).
+    ScaledNormal,
+}
+
+/// Adjoint sign of a spanning diagram: `F(d)ᵀ = sign · F(dᵀ)`.
+///
+/// 1 for S_n / O(n) / Sp(n) and SO(n) Brauer diagrams; `(-1)^{s(n-s)}` for
+/// SO(n) `(l+k)\n`-diagrams with `s` free top vertices.
+pub fn transpose_sign(group: Group, d: &Diagram, n: usize) -> f64 {
+    if group == Group::SpecialOrthogonal && !d.is_brauer() {
+        let s = d.free_vertices().iter().filter(|&&v| v < d.l).count();
+        if (s * (n - s)) % 2 == 1 {
+            return -1.0;
+        }
+    }
+    1.0
+}
+
+/// One spanning term: the diagram, its forward plan, its transposed plan
+/// and the adjoint sign.
+#[derive(Debug, Clone)]
+struct Term {
+    diagram: Diagram,
+    forward: MultPlan,
+    backward: MultPlan,
+    adjoint_sign: f64,
+}
+
+/// An equivariant linear layer `(R^n)^{⊗k} → (R^n)^{⊗l}` with learned
+/// coefficients over the full spanning set, plus an equivariant bias
+/// (spanning diagrams of `Hom((R^n)^{⊗0}, (R^n)^{⊗l})`).
+#[derive(Debug, Clone)]
+pub struct EquivariantLinear {
+    group: Group,
+    n: usize,
+    k: usize,
+    l: usize,
+    terms: Vec<Term>,
+    bias_terms: Vec<Term>,
+    /// Learnable coefficient per weight diagram.
+    pub coeffs: Vec<f64>,
+    /// Learnable coefficient per bias diagram.
+    pub bias_coeffs: Vec<f64>,
+}
+
+/// The spanning diagrams for `Hom_G((R^n)^{⊗k}, (R^n)^{⊗l})`.
+pub(crate) fn spanning_diagrams(
+    group: Group,
+    n: usize,
+    k: usize,
+    l: usize,
+) -> Result<Vec<Diagram>> {
+    match group {
+        Group::Symmetric => Ok(all_partition_diagrams(l, k, Some(n))),
+        Group::Orthogonal => Ok(all_brauer_diagrams(l, k)),
+        Group::Symplectic => {
+            if n % 2 != 0 {
+                return Err(Error::DimensionConstraint("Sp(n) needs even n".into()));
+            }
+            Ok(all_brauer_diagrams(l, k))
+        }
+        Group::SpecialOrthogonal => {
+            let mut ds = all_brauer_diagrams(l, k);
+            if l + k >= n && (l + k - n) % 2 == 0 {
+                ds.extend(all_jellyfish_diagrams(l, k, n)?);
+            }
+            Ok(ds)
+        }
+    }
+}
+
+impl EquivariantLinear {
+    /// Build the layer with the full spanning set and the given
+    /// initialisation.
+    pub fn new(
+        group: Group,
+        n: usize,
+        k: usize,
+        l: usize,
+        init: Init,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        let weight_diagrams = spanning_diagrams(group, n, k, l)?;
+        let bias_diagrams = spanning_diagrams(group, n, 0, l)?;
+        let make_terms = |ds: Vec<Diagram>| -> Result<Vec<Term>> {
+            ds.into_iter()
+                .map(|d| {
+                    let forward = MultPlan::new(group, &d, n)?;
+                    let dt = d.transpose();
+                    let backward = MultPlan::new(group, &dt, n)?;
+                    let adjoint_sign = transpose_sign(group, &d, n);
+                    Ok(Term {
+                        diagram: d,
+                        forward,
+                        backward,
+                        adjoint_sign,
+                    })
+                })
+                .collect()
+        };
+        let terms = make_terms(weight_diagrams)?;
+        let bias_terms = make_terms(bias_diagrams)?;
+        let draw = |count: usize, rng: &mut Rng| -> Vec<f64> {
+            match init {
+                Init::Zeros => vec![0.0; count],
+                Init::Normal(sd) => (0..count).map(|_| sd * rng.gaussian()).collect(),
+                Init::ScaledNormal => {
+                    let sd = 1.0 / (count.max(1) as f64).sqrt();
+                    (0..count).map(|_| sd * rng.gaussian()).collect()
+                }
+            }
+        };
+        let coeffs = draw(terms.len(), rng);
+        let bias_coeffs = draw(bias_terms.len(), rng);
+        Ok(EquivariantLinear {
+            group,
+            n,
+            k,
+            l,
+            terms,
+            bias_terms,
+            coeffs,
+            bias_coeffs,
+        })
+    }
+
+    /// Group of the layer.
+    pub fn group(&self) -> Group {
+        self.group
+    }
+    /// Representation dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    /// Input order.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+    /// Output order.
+    pub fn l(&self) -> usize {
+        self.l
+    }
+    /// Spanning diagrams of the weight.
+    pub fn diagrams(&self) -> impl Iterator<Item = &Diagram> {
+        self.terms.iter().map(|t| &t.diagram)
+    }
+    /// Number of learnable parameters.
+    pub fn num_params(&self) -> usize {
+        self.coeffs.len() + self.bias_coeffs.len()
+    }
+
+    /// Forward pass: `W v + bias` via the fast algorithm, one spanning term
+    /// at a time (the linearity + parallelism observation of §5).
+    pub fn forward(&self, v: &Tensor) -> Result<Tensor> {
+        let mut out = Tensor::zeros(self.n, self.l);
+        for (term, &lambda) in self.terms.iter().zip(&self.coeffs) {
+            if lambda == 0.0 {
+                continue;
+            }
+            term.forward.apply_accumulate(v, lambda, &mut out)?;
+        }
+        if !self.bias_terms.is_empty() {
+            let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+            for (term, &mu) in self.bias_terms.iter().zip(&self.bias_coeffs) {
+                if mu == 0.0 {
+                    continue;
+                }
+                term.forward.apply_accumulate(&one, mu, &mut out)?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Backward pass. Given the upstream gradient `g = ∂L/∂out`, returns
+    /// `∂L/∂v` and accumulates `∂L/∂λ`, `∂L/∂bias` into `grads`.
+    ///
+    /// `∂L/∂v = Σ λ_d · F(d)ᵀ g = Σ λ_d · sign(d) · F(dᵀ) g` and
+    /// `∂L/∂λ_d = ⟨g, F(d) v⟩ = ⟨F(dᵀ) g · sign(d), v⟩` — both computed with
+    /// the fast path only.
+    pub fn backward(&self, v: &Tensor, g: &Tensor, grads: &mut LayerGrads) -> Result<Tensor> {
+        let mut grad_v = Tensor::zeros(self.n, self.k);
+        for (i, (term, &lambda)) in self.terms.iter().zip(&self.coeffs).enumerate() {
+            let bt = term.backward.apply(g)?; // F(dᵀ) g
+            let signed = term.adjoint_sign;
+            // ∂L/∂λ_i = sign · ⟨F(dᵀ) g, v⟩
+            grads.coeffs[i] += signed * bt.dot(v);
+            if lambda != 0.0 {
+                grad_v.axpy(lambda * signed, &bt);
+            }
+        }
+        let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+        for (j, term) in self.bias_terms.iter().enumerate() {
+            let bt = term.backward.apply(g)?; // order-0 scalar
+            grads.bias_coeffs[j] += term.adjoint_sign * bt.dot(&one);
+        }
+        Ok(grad_v)
+    }
+
+    /// Fresh zeroed gradient buffers for this layer.
+    pub fn zero_grads(&self) -> LayerGrads {
+        LayerGrads {
+            coeffs: vec![0.0; self.coeffs.len()],
+            bias_coeffs: vec![0.0; self.bias_coeffs.len()],
+        }
+    }
+
+    /// Materialise the full weight matrix (naïve baseline, for tests and
+    /// benchmark comparisons): `Σ λ_d F(d)` as an `n^l × n^k` matrix.
+    pub fn materialize_weight(&self) -> Result<crate::linalg::Matrix> {
+        let mut w = crate::linalg::Matrix::zeros(self.n.pow(self.l as u32), self.n.pow(self.k as u32));
+        for (term, &lambda) in self.terms.iter().zip(&self.coeffs) {
+            let m = crate::functor::materialize(self.group, &term.diagram, self.n)?;
+            for (a, b) in w.data.iter_mut().zip(&m.data) {
+                *a += lambda * b;
+            }
+        }
+        Ok(w)
+    }
+
+    /// Materialise the bias vector.
+    pub fn materialize_bias(&self) -> Result<Tensor> {
+        let mut out = Tensor::zeros(self.n, self.l);
+        let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+        for (term, &mu) in self.bias_terms.iter().zip(&self.bias_coeffs) {
+            let t = term.forward.apply(&one)?;
+            out.axpy(mu, &t);
+        }
+        Ok(out)
+    }
+}
+
+/// Gradient buffers for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerGrads {
+    /// `∂L/∂λ` per weight diagram.
+    pub coeffs: Vec<f64>,
+    /// `∂L/∂bias` per bias diagram.
+    pub bias_coeffs: Vec<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functor::materialize;
+    use crate::groups;
+
+    /// Adjoint identity: F(d)ᵀ == sign · F(dᵀ) as matrices, all groups.
+    #[test]
+    fn transpose_identity_all_groups() {
+        let mut rng = Rng::new(71);
+        let cases: Vec<(Group, usize, Diagram)> = {
+            let mut v = Vec::new();
+            for _ in 0..20 {
+                let l = rng.below(3);
+                let k = rng.below(3);
+                v.push((Group::Symmetric, 2, Diagram::random_partition(l, k, &mut rng)));
+            }
+            for _ in 0..20 {
+                let l = rng.below(3);
+                let k = 4 - l.min(3); // keep l+k even-ish; skip invalid below
+                if (l + k) % 2 == 0 {
+                    if let Ok(d) = Diagram::random_brauer(l, k, &mut rng) {
+                        v.push((Group::Orthogonal, 3, d.clone()));
+                        v.push((Group::Symplectic, 2, d));
+                    }
+                }
+            }
+            let n = 3;
+            for (l, k) in [(2usize, 1usize), (1, 2), (2, 3), (3, 2)] {
+                if l + k >= n && (l + k - n) % 2 == 0 {
+                    let d = Diagram::random_jellyfish(l, k, n, &mut rng).unwrap();
+                    v.push((Group::SpecialOrthogonal, n, d));
+                }
+            }
+            v
+        };
+        for (group, n, d) in cases {
+            let m = materialize(group, &d, n).unwrap();
+            let mt = materialize(group, &d.transpose(), n).unwrap();
+            let sign = transpose_sign(group, &d, n);
+            let direct = m.transpose();
+            let mut scaled = mt.clone();
+            for x in &mut scaled.data {
+                *x *= sign;
+            }
+            assert!(
+                direct.max_abs_diff(&scaled) < 1e-12,
+                "group {group}, diagram {d}: adjoint sign wrong"
+            );
+        }
+    }
+
+    /// The layer equals its materialised weight matrix.
+    #[test]
+    fn forward_matches_materialized() {
+        let mut rng = Rng::new(72);
+        for group in [Group::Symmetric, Group::Orthogonal, Group::Symplectic] {
+            let n = if group == Group::Symplectic { 4 } else { 3 };
+            let layer =
+                EquivariantLinear::new(group, n, 2, 2, Init::Normal(0.5), &mut rng).unwrap();
+            let v = Tensor::random(n, 2, &mut rng);
+            let got = layer.forward(&v).unwrap();
+            let w = layer.materialize_weight().unwrap();
+            let bias = layer.materialize_bias().unwrap();
+            let mv = w.matvec(&v.data).unwrap();
+            let want: Vec<f64> = mv.iter().zip(&bias.data).map(|(a, b)| a + b).collect();
+            for (a, b) in got.data.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-9, "group {group}");
+            }
+        }
+    }
+
+    /// Layer is equivariant: forward(ρ_k(g) v) == ρ_l(g) forward(v).
+    #[test]
+    fn layer_equivariance() {
+        let mut rng = Rng::new(73);
+        for group in [
+            Group::Symmetric,
+            Group::Orthogonal,
+            Group::SpecialOrthogonal,
+            Group::Symplectic,
+        ] {
+            let n = if group == Group::Symplectic { 4 } else { 3 };
+            let layer =
+                EquivariantLinear::new(group, n, 2, 2, Init::Normal(0.5), &mut rng).unwrap();
+            let v = Tensor::random(n, 2, &mut rng);
+            let g = groups::sample(group, n, &mut rng).unwrap();
+            let lhs = layer.forward(&groups::rho(&g, &v)).unwrap();
+            let rhs = groups::rho(&g, &layer.forward(&v).unwrap());
+            assert!(
+                lhs.allclose(&rhs, 1e-7),
+                "group {group}: equivariance violated, diff {}",
+                lhs.max_abs_diff(&rhs)
+            );
+        }
+    }
+
+    /// Gradient check against finite differences (coefficients and input).
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = Rng::new(74);
+        let n = 2;
+        let layer =
+            EquivariantLinear::new(Group::Symmetric, n, 2, 1, Init::Normal(0.4), &mut rng)
+                .unwrap();
+        let v = Tensor::random(n, 2, &mut rng);
+        // Loss L = 0.5 ||forward(v)||².
+        let out = layer.forward(&v).unwrap();
+        let g = out.clone(); // dL/dout = out
+        let mut grads = layer.zero_grads();
+        let grad_v = layer.backward(&v, &g, &mut grads).unwrap();
+        let loss = |layer: &EquivariantLinear, v: &Tensor| -> f64 {
+            let o = layer.forward(v).unwrap();
+            0.5 * o.data.iter().map(|x| x * x).sum::<f64>()
+        };
+        let eps = 1e-6;
+        // Coefficient gradients.
+        for i in 0..layer.coeffs.len() {
+            let mut lp = layer.clone();
+            lp.coeffs[i] += eps;
+            let mut lm = layer.clone();
+            lm.coeffs[i] -= eps;
+            let fd = (loss(&lp, &v) - loss(&lm, &v)) / (2.0 * eps);
+            assert!(
+                (fd - grads.coeffs[i]).abs() < 1e-5,
+                "coeff {i}: fd {fd} vs {0}",
+                grads.coeffs[i]
+            );
+        }
+        // Bias gradients.
+        for j in 0..layer.bias_coeffs.len() {
+            let mut lp = layer.clone();
+            lp.bias_coeffs[j] += eps;
+            let mut lm = layer.clone();
+            lm.bias_coeffs[j] -= eps;
+            let fd = (loss(&lp, &v) - loss(&lm, &v)) / (2.0 * eps);
+            assert!(
+                (fd - grads.bias_coeffs[j]).abs() < 1e-5,
+                "bias {j}: fd {fd} vs {0}",
+                grads.bias_coeffs[j]
+            );
+        }
+        // Input gradient.
+        for f in 0..v.len() {
+            let mut vp = v.clone();
+            vp.data[f] += eps;
+            let mut vm = v.clone();
+            vm.data[f] -= eps;
+            let fd = (loss(&layer, &vp) - loss(&layer, &vm)) / (2.0 * eps);
+            assert!(
+                (fd - grad_v.data[f]).abs() < 1e-5,
+                "input {f}: fd {fd} vs {0}",
+                grad_v.data[f]
+            );
+        }
+    }
+
+    #[test]
+    fn spanning_set_sizes_match_theory() {
+        // S_n basis size = B(l+k, n); Brauer = (l+k-1)!!.
+        use crate::diagram::{bell_bounded, double_factorial};
+        let mut rng = Rng::new(75);
+        let l = EquivariantLinear::new(Group::Symmetric, 2, 2, 2, Init::Zeros, &mut rng).unwrap();
+        assert_eq!(l.coeffs.len() as u128, bell_bounded(4, 2));
+        let o = EquivariantLinear::new(Group::Orthogonal, 3, 2, 2, Init::Zeros, &mut rng).unwrap();
+        assert_eq!(o.coeffs.len() as u128, double_factorial(3));
+        // Odd l+k for O(n): no weight diagrams at all.
+        let o2 =
+            EquivariantLinear::new(Group::Orthogonal, 3, 2, 1, Init::Zeros, &mut rng).unwrap();
+        assert_eq!(o2.coeffs.len(), 0);
+    }
+
+    #[test]
+    fn zero_init_gives_zero_output() {
+        let mut rng = Rng::new(76);
+        let layer =
+            EquivariantLinear::new(Group::Symmetric, 3, 2, 2, Init::Zeros, &mut rng).unwrap();
+        let v = Tensor::random(3, 2, &mut rng);
+        let out = layer.forward(&v).unwrap();
+        assert_eq!(out.norm(), 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Equivariant linear layers (Corollaries 6, 8, 10, 12).
+//!
+//! An equivariant weight matrix `W : (R^n)^{⊗k} → (R^n)^{⊗l}` is a linear
+//! combination `W = Σ_d λ_d · F(d)` over the group's spanning diagrams,
+//! with the `λ_d` learned. [`EquivariantLinear`] stores one pre-factored
+//! [`MultPlan`] per diagram (plus one for its transpose, for the backward
+//! pass) and never materialises `W` — every forward/backward runs the
+//! paper's fast algorithm per spanning term and sums.
+//!
+//! Backward-pass identity: the adjoint of `F(d)` is `sign(d) · F(dᵀ)`
+//! where `dᵀ` swaps the diagram's rows. The sign is 1 for Θ, Φ and X (the
+//! Sp(n) γ-factors are preserved verbatim under row swap), and
+//! `(-1)^{s(n-s)}` for SO(n) free-vertex diagrams (moving the `s` free top
+//! indices past the `n-s` free bottom indices inside the Levi-Civita
+//! symbol).
+
+mod channels;
+mod linear;
+
+pub use channels::{ChannelEquivariantLinear, ChannelGrads};
+pub use linear::{transpose_sign, EquivariantLinear, Init, LayerGrads};

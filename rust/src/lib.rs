@@ -1,0 +1,75 @@
+//! # equidiag
+//!
+//! A production implementation of *"A Diagrammatic Approach to Improve
+//! Computational Efficiency in Group Equivariant Neural Networks"*
+//! (Pearce-Crump & Knottenbelt, 2024).
+//!
+//! The paper characterises the weight matrices of group equivariant neural
+//! networks whose layers are tensor power spaces `(R^n)^{⊗k}`: every
+//! equivariant weight matrix `W : (R^n)^{⊗k} → (R^n)^{⊗l}` is a linear
+//! combination of *spanning-set matrices*, each the image of a **set
+//! partition diagram** under a monoidal functor. It then gives a fast
+//! multiplication algorithm (**Algorithm 1, `MatrixMult`**) that factors
+//! each diagram as `σ_l ∘ d_planar ∘ σ_k` and applies the planar middle as a
+//! Kronecker product of indecomposable pieces, reducing the cost of `W·v`
+//! from `O(n^{l+k})` to `O(n^k)` (S_n, worst case), `O(n^{k-1})` (O(n),
+//! Sp(n)), and `O(n^{k-(n-s)}(n! + n^{s-1}))` (SO(n), free-vertex diagrams).
+//!
+//! This crate provides:
+//!
+//! - [`diagram`] — set partition / Brauer / Brauer–Grood diagrams with the
+//!   categorical operations (composition with the `n^c` scalar, tensor
+//!   product, transpose), enumeration of spanning sets, algorithmic
+//!   planarity (Definitions 31–33) and the constructive `Factor` procedure.
+//! - [`tensor`] — the dense `(R^n)^{⊗k}` substrate with the axis
+//!   permutation / contraction / scatter primitives the algorithm needs.
+//! - [`functor`] — the monoidal functors Θ, Φ, X, Ψ materialised as (sparse
+//!   or dense) matrices; the exact-but-slow baseline the paper compares
+//!   against.
+//! - [`fastmult`] — Algorithm 1 itself, per group, plus reusable
+//!   pre-factored plans for the layer hot path.
+//! - [`groups`] — samplers for S_n, O(n), SO(n), Sp(n) elements and the
+//!   diagonal tensor-power action `ρ_k`, used to *test* equivariance.
+//! - [`layer`] / [`nn`] — equivariant linear layers with learned
+//!   coefficients and a complete training stack (forward, backward,
+//!   optimisers) running the fast path end to end.
+//! - [`coordinator`] / [`runtime`] — a batched inference server that owns
+//!   the event loop and serves both native diagram layers and AOT-compiled
+//!   JAX/Pallas models through PJRT.
+//! - [`config`] — the launcher's config-file layer.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use equidiag::diagram::Diagram;
+//! use equidiag::fastmult::{matrix_mult, Group};
+//! use equidiag::functor::naive_apply;
+//! use equidiag::tensor::Tensor;
+//!
+//! // A (5,4)-partition diagram in the spirit of the paper's Figure 1:
+//! // top-only blocks, a cross block, and a bottom-only block.
+//! let d = Diagram::from_blocks(4, 5, vec![
+//!     vec![0], vec![1, 3], vec![2, 6, 7], vec![4, 5, 8],
+//! ]).unwrap();
+//! let n = 3;
+//! let v = Tensor::linspace(n, 5);
+//! let fast = matrix_mult(Group::Symmetric, &d, &v).unwrap();
+//! let slow = naive_apply(Group::Symmetric, &d, &v).unwrap();
+//! assert!(fast.allclose(&slow, 1e-10));
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod diagram;
+pub mod error;
+pub mod fastmult;
+pub mod functor;
+pub mod groups;
+pub mod layer;
+pub mod linalg;
+pub mod nn;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use error::{Error, Result};

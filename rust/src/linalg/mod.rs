@@ -1,0 +1,331 @@
+//! Small dense linear algebra substrate: `Matrix` with LU decomposition,
+//! determinant, inverse, Gram–Schmidt orthonormalisation and matmul.
+//!
+//! This exists to *sample group elements* (O(n), SO(n), Sp(n)) for the
+//! equivariance test suite — the hot path of the library never touches it.
+
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+/// Row-major dense `rows x cols` matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row-major data, `data[r * cols + c]`.
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major vec.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::ShapeMismatch {
+                expected: format!("{rows}x{cols} = {}", rows * cols),
+                got: format!("{}", data.len()),
+            });
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Matrix with iid standard-normal entries.
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: rng.gaussian_vec(rows * cols),
+        }
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Element assignment.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Matrix product `self * other`.
+    pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.rows {
+            return Err(Error::ShapeMismatch {
+                expected: format!("inner dims equal, lhs {}x{}", self.rows, self.cols),
+                got: format!("rhs {}x{}", other.rows, other.cols),
+            });
+        }
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.data[i * other.cols + j] += a * other.get(k, j);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(c, r, self.get(r, c));
+            }
+        }
+        out
+    }
+
+    /// LU decomposition with partial pivoting. Returns `(lu, perm, sign)`
+    /// where `lu` packs L (unit diagonal) and U, `perm` is the row
+    /// permutation, and `sign` is the permutation parity (+1/-1), or `None`
+    /// if the matrix is singular to working precision.
+    pub fn lu(&self) -> Option<(Matrix, Vec<usize>, f64)> {
+        assert_eq!(self.rows, self.cols, "LU requires a square matrix");
+        let n = self.rows;
+        let mut lu = self.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for col in 0..n {
+            // Pivot selection.
+            let mut pivot = col;
+            let mut max = lu.get(col, col).abs();
+            for r in (col + 1)..n {
+                let v = lu.get(r, col).abs();
+                if v > max {
+                    max = v;
+                    pivot = r;
+                }
+            }
+            if max < 1e-300 {
+                return None;
+            }
+            if pivot != col {
+                for c in 0..n {
+                    let tmp = lu.get(col, c);
+                    lu.set(col, c, lu.get(pivot, c));
+                    lu.set(pivot, c, tmp);
+                }
+                perm.swap(col, pivot);
+                sign = -sign;
+            }
+            let d = lu.get(col, col);
+            for r in (col + 1)..n {
+                let f = lu.get(r, col) / d;
+                lu.set(r, col, f);
+                for c in (col + 1)..n {
+                    let v = lu.get(r, c) - f * lu.get(col, c);
+                    lu.set(r, c, v);
+                }
+            }
+        }
+        Some((lu, perm, sign))
+    }
+
+    /// Determinant via LU.
+    pub fn det(&self) -> f64 {
+        match self.lu() {
+            None => 0.0,
+            Some((lu, _, sign)) => {
+                let mut d = sign;
+                for i in 0..self.rows {
+                    d *= lu.get(i, i);
+                }
+                d
+            }
+        }
+    }
+
+    /// Inverse via LU; `None` if singular.
+    pub fn inverse(&self) -> Option<Matrix> {
+        let n = self.rows;
+        let (lu, perm, _) = self.lu()?;
+        let mut inv = Matrix::zeros(n, n);
+        // Solve A x = e_j for each unit vector, using PA = LU.
+        for j in 0..n {
+            // b = P e_j
+            let mut y = vec![0.0; n];
+            for (i, &pi) in perm.iter().enumerate() {
+                y[i] = if pi == j { 1.0 } else { 0.0 };
+            }
+            // Forward solve L y' = y (L unit lower).
+            for i in 0..n {
+                for k in 0..i {
+                    y[i] -= lu.get(i, k) * y[k];
+                }
+            }
+            // Back solve U x = y'.
+            for i in (0..n).rev() {
+                for k in (i + 1)..n {
+                    y[i] -= lu.get(i, k) * y[k];
+                }
+                y[i] /= lu.get(i, i);
+            }
+            for i in 0..n {
+                inv.set(i, j, y[i]);
+            }
+        }
+        Some(inv)
+    }
+
+    /// Gram–Schmidt orthonormalisation of the columns (modified GS for
+    /// stability). Requires full column rank; retries are the caller's job.
+    pub fn gram_schmidt(&self) -> Option<Matrix> {
+        let mut q = self.clone();
+        let (n, m) = (q.rows, q.cols);
+        for j in 0..m {
+            for i in 0..j {
+                // proj of col j on col i
+                let mut dot = 0.0;
+                for r in 0..n {
+                    dot += q.get(r, i) * q.get(r, j);
+                }
+                for r in 0..n {
+                    let v = q.get(r, j) - dot * q.get(r, i);
+                    q.set(r, j, v);
+                }
+            }
+            let mut norm = 0.0;
+            for r in 0..n {
+                norm += q.get(r, j) * q.get(r, j);
+            }
+            let norm = norm.sqrt();
+            if norm < 1e-10 {
+                return None;
+            }
+            for r in 0..n {
+                let v = q.get(r, j) / norm;
+                q.set(r, j, v);
+            }
+        }
+        Some(q)
+    }
+
+    /// Max absolute elementwise difference.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
+        if v.len() != self.cols {
+            return Err(Error::ShapeMismatch {
+                expected: format!("{}", self.cols),
+                got: format!("{}", v.len()),
+            });
+        }
+        let mut out = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            out[r] = row.iter().zip(v).map(|(a, b)| a * b).sum();
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matmul() {
+        let i = Matrix::identity(4);
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(4, 4, &mut rng);
+        let b = i.matmul(&a).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-14);
+    }
+
+    #[test]
+    fn det_of_known_matrix() {
+        // det([[1,2],[3,4]]) = -2
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert!((a.det() + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn det_of_permutation_is_sign() {
+        // row swap of identity has det -1
+        let a = Matrix::from_vec(3, 3, vec![0.0, 1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0]).unwrap();
+        assert!((a.det() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng::new(9);
+        for _ in 0..10 {
+            let a = Matrix::gaussian(5, 5, &mut rng);
+            if let Some(inv) = a.inverse() {
+                let prod = a.matmul(&inv).unwrap();
+                assert!(prod.max_abs_diff(&Matrix::identity(5)) < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_schmidt_orthonormal() {
+        let mut rng = Rng::new(13);
+        let a = Matrix::gaussian(6, 6, &mut rng);
+        let q = a.gram_schmidt().unwrap();
+        let qtq = q.transpose().matmul(&q).unwrap();
+        assert!(qtq.max_abs_diff(&Matrix::identity(6)) < 1e-10);
+    }
+
+    #[test]
+    fn singular_matrix_has_no_inverse() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]).unwrap();
+        assert!(a.inverse().is_none());
+        assert_eq!(a.det(), 0.0);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(21);
+        let a = Matrix::gaussian(3, 4, &mut rng);
+        let v: Vec<f64> = rng.gaussian_vec(4);
+        let got = a.matvec(&v).unwrap();
+        let vm = Matrix::from_vec(4, 1, v).unwrap();
+        let want = a.matmul(&vm).unwrap();
+        for r in 0..3 {
+            assert!((got[r] - want.get(r, 0)).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Pointwise activations.
+//!
+//! Pointwise nonlinearities are S_n-equivariant (they commute with index
+//! permutation) but **not** O(n)/SO(n)/Sp(n)-equivariant; for those groups
+//! use [`Activation::Identity`] between linear layers (as is standard for
+//! Brauer-category networks) or accept the approximation deliberately.
+
+use crate::tensor::Tensor;
+
+/// Elementwise activation functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    /// Identity (no-op) — the only exactly equivariant choice for the
+    /// continuous groups.
+    Identity,
+    /// Rectified linear unit.
+    Relu,
+    /// Hyperbolic tangent.
+    Tanh,
+    /// GELU (tanh approximation).
+    Gelu,
+}
+
+impl Activation {
+    /// Apply elementwise.
+    pub fn forward(&self, v: &Tensor) -> Tensor {
+        let mut out = v.clone();
+        match self {
+            Activation::Identity => {}
+            Activation::Relu => {
+                for x in &mut out.data {
+                    if *x < 0.0 {
+                        *x = 0.0;
+                    }
+                }
+            }
+            Activation::Tanh => {
+                for x in &mut out.data {
+                    *x = x.tanh();
+                }
+            }
+            Activation::Gelu => {
+                for x in &mut out.data {
+                    let c = (2.0 / std::f64::consts::PI).sqrt();
+                    let t = (c * (*x + 0.044715 * x.powi(3))).tanh();
+                    *x = 0.5 * *x * (1.0 + t);
+                }
+            }
+        }
+        out
+    }
+
+    /// Elementwise derivative evaluated at the *pre-activation* input,
+    /// multiplied into the upstream gradient.
+    pub fn backward(&self, pre: &Tensor, grad_out: &Tensor) -> Tensor {
+        let mut g = grad_out.clone();
+        match self {
+            Activation::Identity => {}
+            Activation::Relu => {
+                for (gx, &x) in g.data.iter_mut().zip(&pre.data) {
+                    if x <= 0.0 {
+                        *gx = 0.0;
+                    }
+                }
+            }
+            Activation::Tanh => {
+                for (gx, &x) in g.data.iter_mut().zip(&pre.data) {
+                    let t = x.tanh();
+                    *gx *= 1.0 - t * t;
+                }
+            }
+            Activation::Gelu => {
+                for (gx, &x) in g.data.iter_mut().zip(&pre.data) {
+                    // numerical derivative of the tanh approximation
+                    let c = (2.0 / std::f64::consts::PI).sqrt();
+                    let u = c * (x + 0.044715 * x.powi(3));
+                    let t = u.tanh();
+                    let du = c * (1.0 + 3.0 * 0.044715 * x * x);
+                    *gx *= 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du;
+                }
+            }
+        }
+        g
+    }
+
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Option<Activation> {
+        match s.to_ascii_lowercase().as_str() {
+            "identity" | "id" | "none" => Some(Activation::Identity),
+            "relu" => Some(Activation::Relu),
+            "tanh" => Some(Activation::Tanh),
+            "gelu" => Some(Activation::Gelu),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn relu_clamps() {
+        let v = Tensor::from_vec(2, 1, vec![-1.0, 2.0]).unwrap();
+        let o = Activation::Relu.forward(&v);
+        assert_eq!(o.data, vec![0.0, 2.0]);
+    }
+
+    #[test]
+    fn derivatives_match_finite_differences() {
+        let mut rng = Rng::new(91);
+        let v = Tensor::random(3, 2, &mut rng);
+        let ones = Tensor::from_vec(3, 2, vec![1.0; 9]).unwrap();
+        let eps = 1e-6;
+        for act in [Activation::Relu, Activation::Tanh, Activation::Gelu] {
+            let g = act.backward(&v, &ones);
+            for f in 0..v.len() {
+                let mut vp = v.clone();
+                vp.data[f] += eps;
+                let mut vm = v.clone();
+                vm.data[f] -= eps;
+                let fd = (act.forward(&vp).data[f] - act.forward(&vm).data[f]) / (2.0 * eps);
+                assert!(
+                    (fd - g.data[f]).abs() < 1e-5,
+                    "{act:?} at {f}: fd {fd} vs {}",
+                    g.data[f]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn identity_passthrough() {
+        let mut rng = Rng::new(92);
+        let v = Tensor::random(2, 3, &mut rng);
+        assert!(Activation::Identity.forward(&v).allclose(&v, 0.0));
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Activation::parse("ReLU"), Some(Activation::Relu));
+        assert_eq!(Activation::parse("none"), Some(Activation::Identity));
+        assert_eq!(Activation::parse("swish"), None);
+    }
+}

@@ -1,0 +1,97 @@
+//! Loss functions.
+
+use crate::tensor::Tensor;
+
+/// Supported losses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loss {
+    /// Mean squared error, averaged over coefficients.
+    Mse,
+    /// Huber loss with δ = 1 (smooth L1).
+    Huber,
+}
+
+impl Loss {
+    /// Loss value for a prediction/target pair.
+    pub fn value(&self, pred: &Tensor, target: &Tensor) -> f64 {
+        assert_eq!(pred.len(), target.len());
+        let m = pred.len() as f64;
+        match self {
+            Loss::Mse => {
+                pred.data
+                    .iter()
+                    .zip(&target.data)
+                    .map(|(p, t)| (p - t) * (p - t))
+                    .sum::<f64>()
+                    / m
+            }
+            Loss::Huber => {
+                pred.data
+                    .iter()
+                    .zip(&target.data)
+                    .map(|(p, t)| {
+                        let e = (p - t).abs();
+                        if e <= 1.0 {
+                            0.5 * e * e
+                        } else {
+                            e - 0.5
+                        }
+                    })
+                    .sum::<f64>()
+                    / m
+            }
+        }
+    }
+
+    /// Gradient of the loss w.r.t. the prediction.
+    pub fn grad(&self, pred: &Tensor, target: &Tensor) -> Tensor {
+        let m = pred.len() as f64;
+        let mut g = pred.clone();
+        match self {
+            Loss::Mse => {
+                for (gx, &t) in g.data.iter_mut().zip(&target.data) {
+                    *gx = 2.0 * (*gx - t) / m;
+                }
+            }
+            Loss::Huber => {
+                for (gx, &t) in g.data.iter_mut().zip(&target.data) {
+                    let e = *gx - t;
+                    *gx = if e.abs() <= 1.0 { e } else { e.signum() } / m;
+                }
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn mse_zero_on_equal() {
+        let mut rng = Rng::new(81);
+        let v = Tensor::random(3, 2, &mut rng);
+        assert_eq!(Loss::Mse.value(&v, &v), 0.0);
+    }
+
+    #[test]
+    fn grads_match_finite_differences() {
+        let mut rng = Rng::new(82);
+        let p = Tensor::random(2, 2, &mut rng);
+        let t = Tensor::random(2, 2, &mut rng);
+        let eps = 1e-6;
+        for loss in [Loss::Mse, Loss::Huber] {
+            let g = loss.grad(&p, &t);
+            for f in 0..p.len() {
+                let mut pp = p.clone();
+                pp.data[f] += eps;
+                let mut pm = p.clone();
+                pm.data[f] -= eps;
+                let fd = (loss.value(&pp, &t) - loss.value(&pm, &t)) / (2.0 * eps);
+                assert!((fd - g.data[f]).abs() < 1e-5, "{loss:?} at {f}");
+            }
+        }
+    }
+}

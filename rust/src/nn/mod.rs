@@ -1,0 +1,17 @@
+//! A complete training stack over equivariant layers: activations, losses,
+//! optimisers, a sequential model and a training loop — everything runs on
+//! the fast diagram path (no weight matrix is ever materialised).
+
+mod activation;
+mod loss;
+mod model;
+mod optim;
+mod serialize;
+mod train;
+
+pub use activation::Activation;
+pub use loss::Loss;
+pub use model::{EquivariantNet, NetGrads};
+pub use optim::{Adam, Optimizer, Sgd};
+pub use serialize::{load as load_checkpoint, save as save_checkpoint};
+pub use train::{train, TrainConfig, TrainReport};

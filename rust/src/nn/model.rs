@@ -1,0 +1,305 @@
+//! Sequential equivariant network: alternating equivariant linear layers
+//! and pointwise activations, with manual reverse-mode differentiation.
+
+use crate::error::Result;
+use crate::fastmult::Group;
+use crate::layer::{EquivariantLinear, Init, LayerGrads};
+use crate::nn::activation::Activation;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// A stack of equivariant linear layers with activations between them.
+///
+/// Orders flow `orders[0] → orders[1] → … → orders[L]`; layer `i` maps
+/// `(R^n)^{⊗orders[i]} → (R^n)^{⊗orders[i+1]}`.
+#[derive(Debug, Clone)]
+pub struct EquivariantNet {
+    group: Group,
+    n: usize,
+    /// The linear layers.
+    pub layers: Vec<EquivariantLinear>,
+    /// Activation after each layer (same length as `layers`; the last is
+    /// typically `Identity`).
+    pub activations: Vec<Activation>,
+}
+
+/// Per-layer gradient buffers for one backward pass.
+#[derive(Debug, Clone)]
+pub struct NetGrads {
+    /// One `LayerGrads` per linear layer.
+    pub layers: Vec<LayerGrads>,
+}
+
+impl NetGrads {
+    /// Accumulate another gradient set (for minibatch averaging).
+    pub fn add(&mut self, other: &NetGrads) {
+        for (a, b) in self.layers.iter_mut().zip(&other.layers) {
+            for (x, y) in a.coeffs.iter_mut().zip(&b.coeffs) {
+                *x += y;
+            }
+            for (x, y) in a.bias_coeffs.iter_mut().zip(&b.bias_coeffs) {
+                *x += y;
+            }
+        }
+    }
+
+    /// Scale all gradients (e.g. by 1/batch).
+    pub fn scale(&mut self, s: f64) {
+        for g in &mut self.layers {
+            for x in &mut g.coeffs {
+                *x *= s;
+            }
+            for x in &mut g.bias_coeffs {
+                *x *= s;
+            }
+        }
+    }
+}
+
+impl EquivariantNet {
+    /// Build a network with the given tensor orders and one activation per
+    /// layer (the final activation is forced to `Identity` if `activations`
+    /// is shorter than the layer count).
+    pub fn new(
+        group: Group,
+        n: usize,
+        orders: &[usize],
+        hidden_activation: Activation,
+        init: Init,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        assert!(orders.len() >= 2, "need at least input and output orders");
+        let mut layers = Vec::new();
+        let mut activations = Vec::new();
+        for w in orders.windows(2) {
+            layers.push(EquivariantLinear::new(group, n, w[0], w[1], init, rng)?);
+            activations.push(hidden_activation);
+        }
+        // Output layer: no nonlinearity.
+        *activations.last_mut().unwrap() = Activation::Identity;
+        Ok(EquivariantNet {
+            group,
+            n,
+            layers,
+            activations,
+        })
+    }
+
+    /// Group of the network.
+    pub fn group(&self) -> Group {
+        self.group
+    }
+
+    /// Representation dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Total learnable parameter count.
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.num_params()).sum()
+    }
+
+    /// Forward pass.
+    pub fn forward(&self, v: &Tensor) -> Result<Tensor> {
+        let mut x = v.clone();
+        for (layer, act) in self.layers.iter().zip(&self.activations) {
+            x = act.forward(&layer.forward(&x)?);
+        }
+        Ok(x)
+    }
+
+    /// Forward pass retaining intermediates for backprop: returns
+    /// `(per-layer (input, pre-activation), output)`.
+    pub fn forward_trace(&self, v: &Tensor) -> Result<(Vec<(Tensor, Tensor)>, Tensor)> {
+        let mut trace = Vec::with_capacity(self.layers.len());
+        let mut x = v.clone();
+        for (layer, act) in self.layers.iter().zip(&self.activations) {
+            let pre = layer.forward(&x)?;
+            let post = act.forward(&pre);
+            trace.push((x, pre));
+            x = post;
+        }
+        Ok((trace, x))
+    }
+
+    /// Backward pass from `grad_out` (gradient at the network output) using
+    /// a trace from [`EquivariantNet::forward_trace`]. Returns parameter
+    /// gradients and the input gradient.
+    pub fn backward(
+        &self,
+        trace: &[(Tensor, Tensor)],
+        grad_out: &Tensor,
+    ) -> Result<(NetGrads, Tensor)> {
+        let mut grads = NetGrads {
+            layers: self.layers.iter().map(|l| l.zero_grads()).collect(),
+        };
+        let mut g = grad_out.clone();
+        for i in (0..self.layers.len()).rev() {
+            let (input, pre) = &trace[i];
+            g = self.activations[i].backward(pre, &g);
+            g = self.layers[i].backward(input, &g, &mut grads.layers[i])?;
+        }
+        Ok((grads, g))
+    }
+
+    /// Flatten parameters into one vector (for the optimisers).
+    pub fn params_flat(&self) -> Vec<f64> {
+        let mut p = Vec::new();
+        for l in &self.layers {
+            p.extend_from_slice(&l.coeffs);
+            p.extend_from_slice(&l.bias_coeffs);
+        }
+        p
+    }
+
+    /// Write a flat parameter vector back into the layers.
+    pub fn set_params_flat(&mut self, flat: &[f64]) {
+        let mut off = 0usize;
+        for l in &mut self.layers {
+            let nc = l.coeffs.len();
+            l.coeffs.copy_from_slice(&flat[off..off + nc]);
+            off += nc;
+            let nb = l.bias_coeffs.len();
+            l.bias_coeffs.copy_from_slice(&flat[off..off + nb]);
+            off += nb;
+        }
+        debug_assert_eq!(off, flat.len());
+    }
+
+    /// Flatten gradients to match [`EquivariantNet::params_flat`].
+    pub fn grads_flat(&self, grads: &NetGrads) -> Vec<f64> {
+        let mut g = Vec::new();
+        for lg in &grads.layers {
+            g.extend_from_slice(&lg.coeffs);
+            g.extend_from_slice(&lg.bias_coeffs);
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::groups;
+    use crate::nn::loss::Loss;
+
+    #[test]
+    fn network_shapes() {
+        let mut rng = Rng::new(201);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 2, 1, 0],
+            Activation::Relu,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let v = Tensor::random(3, 2, &mut rng);
+        let out = net.forward(&v).unwrap();
+        assert_eq!(out.order, 0);
+        assert!(net.num_params() > 0);
+    }
+
+    #[test]
+    fn network_equivariance_with_relu_sn() {
+        // ReLU is pointwise, hence S_n-equivariant; the whole net must be.
+        let mut rng = Rng::new(202);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 2, 2],
+            Activation::Relu,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let v = Tensor::random(3, 2, &mut rng);
+        let g = groups::sample(Group::Symmetric, 3, &mut rng).unwrap();
+        let lhs = net.forward(&groups::rho(&g, &v)).unwrap();
+        let rhs = groups::rho(&g, &net.forward(&v).unwrap());
+        assert!(lhs.allclose(&rhs, 1e-8), "diff {}", lhs.max_abs_diff(&rhs));
+    }
+
+    #[test]
+    fn network_invariance_to_scalar_output() {
+        // orders ending in 0 give an S_n-invariant scalar.
+        let mut rng = Rng::new(203);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            4,
+            &[2, 1, 0],
+            Activation::Tanh,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let v = Tensor::random(4, 2, &mut rng);
+        let g = groups::sample(Group::Symmetric, 4, &mut rng).unwrap();
+        let a = net.forward(&v).unwrap();
+        let b = net.forward(&groups::rho(&g, &v)).unwrap();
+        assert!((a.data[0] - b.data[0]).abs() < 1e-8);
+    }
+
+    #[test]
+    fn full_network_gradient_check() {
+        let mut rng = Rng::new(204);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            2,
+            &[2, 1, 0],
+            Activation::Tanh,
+            Init::Normal(0.5),
+            &mut rng,
+        )
+        .unwrap();
+        let v = Tensor::random(2, 2, &mut rng);
+        let target = Tensor::from_vec(2, 0, vec![0.7]).unwrap();
+        let (trace, out) = net.forward_trace(&v).unwrap();
+        let gout = Loss::Mse.grad(&out, &target);
+        let (grads, _) = net.backward(&trace, &gout).unwrap();
+        let flat_g = net.grads_flat(&grads);
+        let flat_p = net.params_flat();
+        let eps = 1e-6;
+        for i in 0..flat_p.len() {
+            let mut pp = flat_p.clone();
+            pp[i] += eps;
+            let mut netp = net.clone();
+            netp.set_params_flat(&pp);
+            let lp = Loss::Mse.value(&netp.forward(&v).unwrap(), &target);
+            let mut pm = flat_p.clone();
+            pm[i] -= eps;
+            let mut netm = net.clone();
+            netm.set_params_flat(&pm);
+            let lm = Loss::Mse.value(&netm.forward(&v).unwrap(), &target);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - flat_g[i]).abs() < 1e-5,
+                "param {i}: fd {fd} vs {}",
+                flat_g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn params_flat_roundtrip() {
+        let mut rng = Rng::new(205);
+        let mut net = EquivariantNet::new(
+            Group::Orthogonal,
+            3,
+            &[2, 2],
+            Activation::Identity,
+            Init::Normal(1.0),
+            &mut rng,
+        )
+        .unwrap();
+        let p = net.params_flat();
+        let mut q = p.clone();
+        for x in &mut q {
+            *x += 1.0;
+        }
+        net.set_params_flat(&q);
+        assert_eq!(net.params_flat(), q);
+    }
+}

@@ -1,0 +1,123 @@
+//! First-order optimisers over flat parameter vectors.
+
+/// Interface: update a flat parameter slice in place from its gradient.
+pub trait Optimizer {
+    /// One update step. `params` and `grads` must have equal lengths,
+    /// stable across calls.
+    fn step(&mut self, params: &mut [f64], grads: &[f64]);
+}
+
+/// SGD with optional momentum.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    /// Learning rate.
+    pub lr: f64,
+    /// Momentum coefficient (0 disables).
+    pub momentum: f64,
+    velocity: Vec<f64>,
+}
+
+impl Sgd {
+    /// New SGD optimiser.
+    pub fn new(lr: f64, momentum: f64) -> Self {
+        Sgd {
+            lr,
+            momentum,
+            velocity: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f64], grads: &[f64]) {
+        assert_eq!(params.len(), grads.len());
+        if self.velocity.len() != params.len() {
+            self.velocity = vec![0.0; params.len()];
+        }
+        for i in 0..params.len() {
+            self.velocity[i] = self.momentum * self.velocity[i] - self.lr * grads[i];
+            params[i] += self.velocity[i];
+        }
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    /// Learning rate.
+    pub lr: f64,
+    /// First-moment decay.
+    pub beta1: f64,
+    /// Second-moment decay.
+    pub beta2: f64,
+    /// Numerical floor.
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    /// Adam with the standard hyperparameters for a given learning rate.
+    pub fn new(lr: f64) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f64], grads: &[f64]) {
+        assert_eq!(params.len(), grads.len());
+        if self.m.len() != params.len() {
+            self.m = vec![0.0; params.len()];
+            self.v = vec![0.0; params.len()];
+            self.t = 0;
+        }
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grads[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grads[i] * grads[i];
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Both optimisers minimise a simple quadratic.
+    #[test]
+    fn minimise_quadratic() {
+        for mut opt in [
+            Box::new(Sgd::new(0.1, 0.9)) as Box<dyn Optimizer>,
+            Box::new(Adam::new(0.1)) as Box<dyn Optimizer>,
+        ] {
+            let mut p = vec![5.0, -3.0];
+            for _ in 0..300 {
+                let g: Vec<f64> = p.iter().map(|x| 2.0 * x).collect(); // ∇(x²+y²)
+                opt.step(&mut p, &g);
+            }
+            assert!(p.iter().all(|x| x.abs() < 1e-2), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn sgd_plain_step() {
+        let mut opt = Sgd::new(0.5, 0.0);
+        let mut p = vec![1.0];
+        opt.step(&mut p, &[1.0]);
+        assert!((p[0] - 0.5).abs() < 1e-12);
+    }
+}

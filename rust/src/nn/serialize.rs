@@ -1,0 +1,174 @@
+//! Checkpoint format: save/load trained coefficient vectors.
+//!
+//! Plain-text, versioned, self-describing — one header line with the
+//! architecture, one line of whitespace-separated parameters. The
+//! architecture in the file must match the network it is loaded into
+//! (diagram coefficients are only meaningful for the same spanning set).
+
+use crate::error::{Error, Result};
+use crate::nn::model::EquivariantNet;
+use std::path::Path;
+
+const MAGIC: &str = "equidiag-checkpoint-v1";
+
+/// Serialise the architecture signature (group, n, per-layer shapes).
+fn signature(net: &EquivariantNet) -> String {
+    let shapes: Vec<String> = net
+        .layers
+        .iter()
+        .map(|l| format!("{}:{}:{}:{}", l.k(), l.l(), l.coeffs.len(), l.bias_coeffs.len()))
+        .collect();
+    format!(
+        "{} group={} n={} layers={}",
+        MAGIC,
+        net.group().name(),
+        net.n(),
+        shapes.join(",")
+    )
+}
+
+/// Save the network's parameters to `path`.
+pub fn save(net: &EquivariantNet, path: &Path) -> Result<()> {
+    let params = net.params_flat();
+    let body: Vec<String> = params.iter().map(|p| format!("{p:?}")).collect();
+    let text = format!("{}\n{}\n", signature(net), body.join(" "));
+    std::fs::write(path, text)
+        .map_err(|e| Error::Config(format!("write checkpoint {}: {e}", path.display())))
+}
+
+/// Load parameters from `path` into a network with a matching architecture.
+pub fn load(net: &mut EquivariantNet, path: &Path) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("read checkpoint {}: {e}", path.display())))?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Config("empty checkpoint".into()))?;
+    let expect = signature(net);
+    if header != expect {
+        return Err(Error::Config(format!(
+            "checkpoint architecture mismatch:\n  file: {header}\n  net:  {expect}"
+        )));
+    }
+    let body = lines
+        .next()
+        .ok_or_else(|| Error::Config("checkpoint missing parameter line".into()))?;
+    let params: std::result::Result<Vec<f64>, _> =
+        body.split_whitespace().map(str::parse::<f64>).collect();
+    let params = params.map_err(|e| Error::Config(format!("bad parameter token: {e}")))?;
+    let want = net.params_flat().len();
+    if params.len() != want {
+        return Err(Error::Config(format!(
+            "checkpoint has {} parameters, network needs {want}",
+            params.len()
+        )));
+    }
+    net.set_params_flat(&params);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastmult::Group;
+    use crate::layer::Init;
+    use crate::nn::{Activation, EquivariantNet};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("equidiag-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_preserves_predictions() {
+        let mut rng = Rng::new(601);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 1, 0],
+            Activation::Tanh,
+            Init::Normal(0.5),
+            &mut rng,
+        )
+        .unwrap();
+        let path = tmpfile("roundtrip.ckpt");
+        save(&net, &path).unwrap();
+        let mut other = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 1, 0],
+            Activation::Tanh,
+            Init::Zeros,
+            &mut rng,
+        )
+        .unwrap();
+        load(&mut other, &path).unwrap();
+        let v = Tensor::random(3, 2, &mut rng);
+        let a = net.forward(&v).unwrap();
+        let b = other.forward(&v).unwrap();
+        assert!(a.allclose(&b, 0.0), "bit-exact round trip expected");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn architecture_mismatch_rejected() {
+        let mut rng = Rng::new(602);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 0],
+            Activation::Relu,
+            Init::Normal(0.1),
+            &mut rng,
+        )
+        .unwrap();
+        let path = tmpfile("mismatch.ckpt");
+        save(&net, &path).unwrap();
+        // Different n.
+        let mut other = EquivariantNet::new(
+            Group::Symmetric,
+            4,
+            &[2, 0],
+            Activation::Relu,
+            Init::Zeros,
+            &mut rng,
+        )
+        .unwrap();
+        assert!(load(&mut other, &path).is_err());
+        // Different group.
+        let mut other2 = EquivariantNet::new(
+            Group::Orthogonal,
+            3,
+            &[2, 0],
+            Activation::Relu,
+            Init::Zeros,
+            &mut rng,
+        )
+        .unwrap();
+        assert!(load(&mut other2, &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_files_rejected() {
+        let path = tmpfile("corrupt.ckpt");
+        std::fs::write(&path, "not a checkpoint\n1 2 3\n").unwrap();
+        let mut rng = Rng::new(603);
+        let mut net = EquivariantNet::new(
+            Group::Symmetric,
+            2,
+            &[1, 0],
+            Activation::Identity,
+            Init::Zeros,
+            &mut rng,
+        )
+        .unwrap();
+        assert!(load(&mut net, &path).is_err());
+        std::fs::write(&path, format!("{}\n1 2 nope\n", super::signature(&net))).unwrap();
+        assert!(load(&mut net, &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,221 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! rust request path.
+//!
+//! The build-time python pipeline (`make artifacts`) lowers the L2 JAX
+//! model — whose hot spots are the L1 Pallas kernels — to **HLO text**
+//! (`artifacts/*.hlo.txt`). This module wraps the `xla` crate:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`. Compilation happens once per artifact; execution is cheap and
+//! python-free.
+//!
+//! HLO *text* (not serialized protos) is the interchange format: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// A PJRT client (CPU) that compiles and owns loaded executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PjrtRuntime({})", self.client.platform_name())
+    }
+}
+
+impl PjrtRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtRuntime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    /// Platform name reported by PJRT (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it to an executable.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<LoadedModel> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            Error::Runtime(format!("parse {} failed: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(LoadedModel {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "model".into()),
+        })
+    }
+}
+
+/// One compiled HLO executable.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl std::fmt::Debug for LoadedModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "LoadedModel({})", self.name)
+    }
+}
+
+impl LoadedModel {
+    /// Artifact name (file stem).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute on f32 inputs given as `(data, dims)` pairs; returns the
+    /// flattened f32 outputs (the lowered jax function returns a tuple —
+    /// one vec per tuple element).
+    pub fn run_f32(&self, inputs: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let expect: usize = dims.iter().product();
+            if data.len() != expect {
+                return Err(Error::ShapeMismatch {
+                    expected: format!("{dims:?} = {expect} elements"),
+                    got: format!("{}", data.len()),
+                });
+            }
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims_i64)?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Runtime("empty execution result".into()))?;
+        let lit = first.to_literal_sync()?;
+        // jax lowers with return_tuple=True: unpack the tuple.
+        let parts = lit.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// A PJRT executable hosted on its own owner thread.
+///
+/// The `xla` crate's client and executable types are `!Send` (they hold raw
+/// PJRT pointers and `Rc`s), so they cannot live inside the multi-threaded
+/// coordinator directly. [`HloService::spawn`] starts a dedicated thread
+/// that loads and owns the executable; the returned handle is cheaply
+/// cloneable and thread-safe, funnelling jobs over a channel. Execution is
+/// serialised per artifact — matching PJRT-CPU semantics, where a loaded
+/// executable runs one computation at a time anyway.
+#[derive(Debug, Clone)]
+pub struct HloService {
+    tx: std::sync::Arc<std::sync::Mutex<std::sync::mpsc::Sender<HloJob>>>,
+    name: String,
+}
+
+struct HloJob {
+    inputs: Vec<(Vec<f32>, Vec<usize>)>,
+    respond: std::sync::mpsc::Sender<Result<Vec<Vec<f32>>>>,
+}
+
+impl HloService {
+    /// Spawn the owner thread: create a CPU client, load `path`, then serve
+    /// jobs until every handle is dropped.
+    pub fn spawn<P: AsRef<Path>>(path: P) -> Result<HloService> {
+        let path = path.as_ref().to_path_buf();
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "model".into());
+        let (tx, rx) = std::sync::mpsc::channel::<HloJob>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name(format!("hlo-{name}"))
+            .spawn(move || {
+                let model = match PjrtRuntime::cpu().and_then(|rt| rt.load_hlo_text(&path)) {
+                    Ok(m) => {
+                        let _ = ready_tx.send(Ok(()));
+                        m
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    let result = model.run_f32(&job.inputs);
+                    let _ = job.respond.send(result);
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn hlo thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("hlo owner thread died during load".into()))??;
+        Ok(HloService {
+            tx: std::sync::Arc::new(std::sync::Mutex::new(tx)),
+            name,
+        })
+    }
+
+    /// Artifact name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute (blocking round-trip to the owner thread).
+    pub fn run_f32(&self, inputs: Vec<(Vec<f32>, Vec<usize>)>) -> Result<Vec<Vec<f32>>> {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(HloJob {
+                inputs,
+                respond: rtx,
+            })
+            .map_err(|_| Error::Runtime("hlo owner thread is gone".into()))?;
+        }
+        rrx.recv()
+            .map_err(|_| Error::Runtime("hlo owner thread dropped the job".into()))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(rt.load_hlo_text("/nonexistent/model.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        // Build a trivial computation through the builder API so the test
+        // has no artifact dependency, then feed wrong-sized input.
+        let rt = PjrtRuntime::cpu().unwrap();
+        // Reuse the reference artifact if present; otherwise skip.
+        let path = "/tmp/fn_hlo.txt";
+        if !std::path::Path::new(path).exists() {
+            return;
+        }
+        let model = rt.load_hlo_text(path).unwrap();
+        let bad = model.run_f32(&[(vec![1.0f32; 3], vec![2, 2])]);
+        assert!(bad.is_err());
+    }
+}

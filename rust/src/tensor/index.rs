@@ -1,0 +1,103 @@
+//! Multi-index ↔ flat offset conversion and iteration for cube tensors.
+
+/// Row-major flat offset of `idx` in a cube of side `n`
+/// (axis 0 slowest-varying).
+#[inline]
+pub fn flat_index(n: usize, idx: &[usize]) -> usize {
+    let mut f = 0usize;
+    for &i in idx {
+        debug_assert!(i < n);
+        f = f * n + i;
+    }
+    f
+}
+
+/// Inverse of [`flat_index`]: decode `flat` into `order` digits base `n`.
+pub fn unflat_index(n: usize, order: usize, mut flat: usize) -> Vec<usize> {
+    let mut idx = vec![0usize; order];
+    for a in (0..order).rev() {
+        idx[a] = flat % n;
+        flat /= n;
+    }
+    idx
+}
+
+/// Iterator over all multi-indices of a cube tensor, in row-major order.
+pub struct MultiIndexIter {
+    n: usize,
+    idx: Vec<usize>,
+    started: bool,
+    done: bool,
+}
+
+impl MultiIndexIter {
+    /// All indices of an `order`-dimensional cube of side `n`.
+    pub fn new(n: usize, order: usize) -> Self {
+        MultiIndexIter {
+            n,
+            idx: vec![0; order],
+            started: false,
+            done: n == 0 && order > 0,
+        }
+    }
+
+    /// Advance and return the next multi-index (borrowed).
+    pub fn next_index(&mut self) -> Option<&[usize]> {
+        if self.done {
+            return None;
+        }
+        if !self.started {
+            self.started = true;
+            return Some(&self.idx);
+        }
+        // Odometer increment from the last axis.
+        let order = self.idx.len();
+        let mut a = order;
+        loop {
+            if a == 0 {
+                self.done = true;
+                return None;
+            }
+            a -= 1;
+            self.idx[a] += 1;
+            if self.idx[a] < self.n {
+                break;
+            }
+            self.idx[a] = 0;
+        }
+        Some(&self.idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_roundtrip() {
+        let n: usize = 3;
+        let order = 4;
+        for f in 0..n.pow(order as u32) {
+            let idx = unflat_index(n, order, f);
+            assert_eq!(flat_index(n, &idx), f);
+        }
+    }
+
+    #[test]
+    fn iter_covers_all_in_order() {
+        let mut it = MultiIndexIter::new(2, 3);
+        let mut count = 0usize;
+        while let Some(idx) = it.next_index() {
+            assert_eq!(flat_index(2, idx), count);
+            count += 1;
+        }
+        assert_eq!(count, 8);
+    }
+
+    #[test]
+    fn iter_order_zero_yields_one_empty_index() {
+        let mut it = MultiIndexIter::new(4, 0);
+        assert_eq!(it.next_index(), Some(&[][..]));
+        assert!(it.next_index().is_none());
+    }
+}

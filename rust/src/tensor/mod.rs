@@ -1,0 +1,208 @@
+//! Dense tensor substrate for `(R^n)^{⊗k}`.
+//!
+//! Every layer space in the paper is a tensor power of `R^n`, so a tensor
+//! here is a cube: `order` axes, each of extent `n`, stored row-major. The
+//! module provides exactly the primitives Algorithm 1 needs:
+//!
+//! - axis permutation ([`Tensor::permute_axes`]) — the `Permute` procedure,
+//! - trailing diagonal contraction ([`Tensor::contract_trailing_diagonal`])
+//!   — S_n Step 1 (eq. 98),
+//! - trailing pair trace ([`Tensor::trace_trailing_pair`]) — O(n)/SO(n)
+//!   Step 1 (eq. 122),
+//! - ε-weighted pair trace ([`Tensor::trace_trailing_pair_eps`]) — Sp(n)
+//!   Step 1 (eq. 138),
+//! - Levi-Civita contraction ([`Tensor::levi_civita_contract_trailing`]) —
+//!   SO(n) free-vertex Step 1 (eq. 157),
+//! - group-diagonal extraction ([`Tensor::extract_group_diagonals`]) — S_n
+//!   Step 2 transfer (eq. 101),
+//! - mode product ([`Tensor::mode_apply`]) — the group action `ρ_k(g)` used
+//!   by the equivariance tests.
+
+mod index;
+mod ops;
+
+pub use index::{flat_index, unflat_index, MultiIndexIter};
+
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+/// A dense element of `(R^n)^{⊗order}` stored row-major
+/// (axis 0 is the slowest-varying index).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    /// Extent of every axis.
+    pub n: usize,
+    /// Number of axes `k` (the tensor power order). `order == 0` is the
+    /// scalar space `R`.
+    pub order: usize,
+    /// Row-major coefficients, `len == n.pow(order)`.
+    pub data: Vec<f64>,
+}
+
+impl Tensor {
+    /// All-zeros tensor.
+    pub fn zeros(n: usize, order: usize) -> Self {
+        Tensor {
+            n,
+            order,
+            data: vec![0.0; n.pow(order as u32)],
+        }
+    }
+
+    /// Tensor filled with `0, 1, 2, ...` scaled to `[0, 1]` — deterministic
+    /// test data with all-distinct entries.
+    pub fn linspace(n: usize, order: usize) -> Self {
+        let len = n.pow(order as u32);
+        let denom = (len.max(2) - 1) as f64;
+        Tensor {
+            n,
+            order,
+            data: (0..len).map(|i| i as f64 / denom).collect(),
+        }
+    }
+
+    /// Tensor with iid standard-normal entries.
+    pub fn random(n: usize, order: usize, rng: &mut Rng) -> Self {
+        let len = n.pow(order as u32);
+        Tensor {
+            n,
+            order,
+            data: rng.gaussian_vec(len),
+        }
+    }
+
+    /// Wrap an existing buffer.
+    pub fn from_vec(n: usize, order: usize, data: Vec<f64>) -> Result<Self> {
+        let expect = n.pow(order as u32);
+        if data.len() != expect {
+            return Err(Error::ShapeMismatch {
+                expected: format!("n^order = {expect}"),
+                got: format!("{}", data.len()),
+            });
+        }
+        Ok(Tensor { n, order, data })
+    }
+
+    /// Number of coefficients, `n^order`.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when `order == 0` would still hold one scalar; tensors are
+    /// never empty unless `n == 0`.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Coefficient at a multi-index.
+    #[inline]
+    pub fn get(&self, idx: &[usize]) -> f64 {
+        self.data[flat_index(self.n, idx)]
+    }
+
+    /// Assign the coefficient at a multi-index.
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: f64) {
+        let f = flat_index(self.n, idx);
+        self.data[f] = v;
+    }
+
+    /// Iterator over all multi-indices of this tensor.
+    pub fn indices(&self) -> MultiIndexIter {
+        MultiIndexIter::new(self.n, self.order)
+    }
+
+    /// Max absolute difference against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.n, other.n);
+        assert_eq!(self.order, other.order);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Approximate equality within `tol` (absolute, entrywise).
+    pub fn allclose(&self, other: &Tensor, tol: f64) -> bool {
+        self.n == other.n && self.order == other.order && self.max_abs_diff(other) <= tol
+    }
+
+    /// Euclidean norm of the coefficient vector.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// `self += alpha * other` (shapes must match).
+    pub fn axpy(&mut self, alpha: f64, other: &Tensor) {
+        assert_eq!(self.n, other.n);
+        assert_eq!(self.order, other.order);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Inner product of coefficient vectors.
+    pub fn dot(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.len(), other.len());
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_len() {
+        let t = Tensor::zeros(3, 4);
+        assert_eq!(t.len(), 81);
+        assert_eq!(t.order, 4);
+    }
+
+    #[test]
+    fn order_zero_is_scalar() {
+        let t = Tensor::zeros(5, 0);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut t = Tensor::zeros(3, 3);
+        t.set(&[1, 2, 0], 7.5);
+        assert_eq!(t.get(&[1, 2, 0]), 7.5);
+        assert_eq!(t.get(&[0, 2, 1]), 0.0);
+    }
+
+    #[test]
+    fn linspace_distinct() {
+        let t = Tensor::linspace(2, 3);
+        let mut sorted = t.data.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.dedup();
+        assert_eq!(sorted.len(), 8);
+    }
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(Tensor::from_vec(2, 2, vec![0.0; 4]).is_ok());
+        assert!(Tensor::from_vec(2, 2, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn axpy_and_norm() {
+        let mut a = Tensor::zeros(2, 1);
+        let b = Tensor::from_vec(2, 1, vec![3.0, 4.0]).unwrap();
+        a.axpy(2.0, &b);
+        assert_eq!(a.data, vec![6.0, 8.0]);
+        assert!((a.norm() - 10.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,756 @@
+//! Tensor operations backing Algorithm 1 and the equivariance tests.
+//!
+//! The contraction primitives all act on *trailing* axes: `Factor` already
+//! permutes the input so the axes to be consumed sit at the end, which makes
+//! every inner loop here a contiguous or constant-stride sweep — this is the
+//! optimisation the paper's "algorithmically planar" layout buys.
+
+use super::index::flat_index;
+use super::Tensor;
+
+impl Tensor {
+    /// Axis permutation (the paper's `Permute`, eq. 90, as a memory move).
+    ///
+    /// numpy `transpose` semantics: output axis `q` carries input axis
+    /// `axes[q]`, i.e. `out[I] = self[J]` where `J[axes[q]] = I[q]`.
+    pub fn permute_axes(&self, axes: &[usize]) -> Tensor {
+        assert_eq!(axes.len(), self.order, "axes arity must match order");
+        debug_assert!({
+            let mut seen = vec![false; self.order];
+            axes.iter().all(|&a| {
+                let fresh = !seen[a];
+                seen[a] = true;
+                fresh
+            })
+        });
+        // Identity fast path — common when Factor finds the diagram already
+        // planar (e.g. every cross-only Brauer diagram).
+        if axes.iter().enumerate().all(|(i, &a)| i == a) {
+            return self.clone();
+        }
+        let n = self.n;
+        let order = self.order;
+        let mut out = Tensor::zeros(n, order);
+        if order == 0 {
+            out.data[0] = self.data[0];
+            return out;
+        }
+        // Strides of the input axes as seen from the output's odometer:
+        // moving output axis a by 1 moves input axis axes[a] by its stride.
+        let mut in_stride = vec![0usize; order];
+        {
+            let mut s = 1usize;
+            let mut strides = vec![0usize; order];
+            for a in (0..order).rev() {
+                strides[a] = s;
+                s *= n;
+            }
+            for a in 0..order {
+                in_stride[a] = strides[axes[a]];
+            }
+        }
+        let mut idx = vec![0usize; order];
+        let mut src = 0usize;
+        for dst in 0..out.data.len() {
+            out.data[dst] = self.data[src];
+            // odometer increment with incremental source offset update
+            let mut a = order;
+            loop {
+                if a == 0 {
+                    break;
+                }
+                a -= 1;
+                idx[a] += 1;
+                src += in_stride[a];
+                if idx[a] < n {
+                    break;
+                }
+                idx[a] = 0;
+                src -= n * in_stride[a];
+            }
+        }
+        out
+    }
+
+    /// S_n Step-1 contraction (eq. 98): sum the generalised diagonal of the
+    /// trailing `m` axes. `out[M] = Σ_j self[M, j, j, …, j]`.
+    ///
+    /// Cost: `n^{order-m} · n` multiplications-equivalents — the paper's
+    /// eq. (115) term for one bottom-row block of size `m`.
+    pub fn contract_trailing_diagonal(&self, m: usize) -> Tensor {
+        assert!(m >= 1 && m <= self.order);
+        let n = self.n;
+        let keep = self.order - m;
+        let mut out = Tensor::zeros(n, keep);
+        let block = n.pow(m as u32);
+        // Diagonal stride within the trailing block: 1 + n + … + n^{m-1}.
+        let dstride: usize = (0..m).map(|a| n.pow(a as u32)).sum();
+        for o in 0..out.data.len() {
+            let base = o * block;
+            let mut s = 0.0;
+            let mut off = base;
+            for _ in 0..n {
+                s += self.data[off];
+                off += dstride;
+            }
+            out.data[o] = s;
+        }
+        out
+    }
+
+    /// O(n)/SO(n) Step-1 pair contraction (eq. 122): trace over the two
+    /// trailing axes. `out[M] = Σ_j self[M, j, j]`.
+    pub fn trace_trailing_pair(&self) -> Tensor {
+        self.contract_trailing_diagonal(2)
+    }
+
+    /// Sp(n) Step-1 pair contraction (eq. 138): ε-weighted trace over the
+    /// two trailing axes, `out[M] = Σ_{j1 j2} ε_{j1 j2} self[M, j1, j2]`,
+    /// with the symplectic form in the interleaved basis
+    /// `1, 1', 2, 2', …, m, m'`: `ε_{2i, 2i+1} = +1`, `ε_{2i+1, 2i} = -1`.
+    pub fn trace_trailing_pair_eps(&self) -> Tensor {
+        assert!(self.order >= 2);
+        let n = self.n;
+        assert_eq!(n % 2, 0, "Sp(n) requires even n");
+        let keep = self.order - 2;
+        let mut out = Tensor::zeros(n, keep);
+        let block = n * n;
+        for o in 0..out.data.len() {
+            let base = o * block;
+            let mut s = 0.0;
+            for i in 0..n / 2 {
+                let a = 2 * i;
+                let b = 2 * i + 1;
+                s += self.data[base + a * n + b] - self.data[base + b * n + a];
+            }
+            out.data[o] = s;
+        }
+        out
+    }
+
+    /// SO(n) free-vertex Step-1 (eq. 157): contract the trailing `n - s`
+    /// axes against the Levi-Civita symbol, producing `s` new trailing axes:
+    ///
+    /// `out[M, t_1…t_s] = Σ_{b_1…b_{n-s}} ε_{t_1…t_s b_1…b_{n-s}}
+    ///                     self[M, b_1…b_{n-s}]`
+    ///
+    /// Implemented by iterating the `n!` permutations of `[n]` with their
+    /// signs — exactly the `n!/(n-s)!` valid `T`-tuples × `(n-s)!` terms the
+    /// paper counts in eq. (168).
+    pub fn levi_civita_contract_trailing(&self, s: usize) -> Tensor {
+        let n = self.n;
+        assert!(s <= n);
+        let nb = n - s; // bottom free axes consumed
+        assert!(nb <= self.order);
+        let keep = self.order - nb;
+        let mut out = Tensor::zeros(n, keep + s);
+        let in_block = n.pow(nb as u32);
+        let out_block = n.pow(s as u32);
+        let perms = signed_permutations(n);
+        for o in 0..n.pow(keep as u32) {
+            let in_base = o * in_block;
+            let out_base = o * out_block;
+            for (perm, sign) in &perms {
+                // T = perm[0..s] indexes the new trailing axes,
+                // B = perm[s..n] indexes the consumed input axes.
+                let t_off = flat_index(n, &perm[..s]);
+                let b_off = flat_index(n, &perm[s..]);
+                out.data[out_base + t_off] += *sign * self.data[in_base + b_off];
+            }
+        }
+        out
+    }
+
+    /// S_n Step-2 transfer, compact form (eq. 101): given trailing axis
+    /// groups of sizes `groups[0], …, groups[d-1]` (summing to `order`),
+    /// read the per-group diagonals: `out[j_1…j_d] = self[j_1 rep g_1, …]`.
+    pub fn extract_group_diagonals(&self, groups: &[usize]) -> Tensor {
+        let total: usize = groups.iter().sum();
+        assert_eq!(total, self.order, "groups must cover all axes");
+        let n = self.n;
+        let d = groups.len();
+        let mut out = Tensor::zeros(n, d);
+        // Stride of group g's repeated index in the input flat offset.
+        let mut gstride = vec![0usize; d];
+        {
+            let mut axis_stride = vec![0usize; self.order];
+            let mut s = 1usize;
+            for a in (0..self.order).rev() {
+                axis_stride[a] = s;
+                s *= n;
+            }
+            let mut a = 0usize;
+            for (g, &size) in groups.iter().enumerate() {
+                for _ in 0..size {
+                    gstride[g] += axis_stride[a];
+                    a += 1;
+                }
+            }
+        }
+        let mut idx = vec![0usize; d];
+        let mut src = 0usize;
+        for dst in 0..out.data.len() {
+            out.data[dst] = self.data[src];
+            let mut g = d;
+            loop {
+                if g == 0 {
+                    break;
+                }
+                g -= 1;
+                idx[g] += 1;
+                src += gstride[g];
+                if idx[g] < n {
+                    break;
+                }
+                idx[g] = 0;
+                src -= n * gstride[g];
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`Tensor::extract_group_diagonals`]: embed a compact
+    /// order-`d` tensor onto the per-group diagonals of an order-`total`
+    /// tensor (zero elsewhere). This is the S_n Step-2/3 expand used when a
+    /// caller needs the *materialised* output (eq. 100/104).
+    pub fn embed_group_diagonals(&self, groups: &[usize]) -> Tensor {
+        assert_eq!(groups.len(), self.order, "one group per compact axis");
+        let n = self.n;
+        let total: usize = groups.iter().sum();
+        let mut out = Tensor::zeros(n, total);
+        let d = self.order;
+        let mut gstride = vec![0usize; d];
+        {
+            let mut axis_stride = vec![0usize; total];
+            let mut s = 1usize;
+            for a in (0..total).rev() {
+                axis_stride[a] = s;
+                s *= n;
+            }
+            let mut a = 0usize;
+            for (g, &size) in groups.iter().enumerate() {
+                for _ in 0..size {
+                    gstride[g] += axis_stride[a];
+                    a += 1;
+                }
+            }
+        }
+        let mut idx = vec![0usize; d];
+        let mut dst = 0usize;
+        for src in 0..self.data.len() {
+            out.data[dst] = self.data[src];
+            let mut g = d;
+            loop {
+                if g == 0 {
+                    break;
+                }
+                g -= 1;
+                idx[g] += 1;
+                dst += gstride[g];
+                if idx[g] < n {
+                    break;
+                }
+                idx[g] = 0;
+                dst -= n * gstride[g];
+            }
+        }
+        out
+    }
+
+    /// `out += alpha · permute_axes(self, axes)` without materialising the
+    /// permuted tensor — the fused final step of a spanning-term apply
+    /// (Algorithm 1's closing `Permute` + the layer's λ-weighted sum).
+    pub fn axpy_permuted_into(&self, alpha: f64, axes: &[usize], out: &mut Tensor) {
+        assert_eq!(axes.len(), self.order);
+        assert_eq!(out.order, self.order);
+        assert_eq!(out.n, self.n);
+        let n = self.n;
+        let order = self.order;
+        if order == 0 {
+            out.data[0] += alpha * self.data[0];
+            return;
+        }
+        // Identity fast path.
+        if axes.iter().enumerate().all(|(i, &a)| i == a) {
+            for (o, &x) in out.data.iter_mut().zip(&self.data) {
+                *o += alpha * x;
+            }
+            return;
+        }
+        let mut in_stride = vec![0usize; order];
+        {
+            let mut strides = vec![0usize; order];
+            let mut s = 1usize;
+            for a in (0..order).rev() {
+                strides[a] = s;
+                s *= n;
+            }
+            for a in 0..order {
+                in_stride[a] = strides[axes[a]];
+            }
+        }
+        let mut idx = vec![0usize; order];
+        let mut src = 0usize;
+        for dst in 0..out.data.len() {
+            out.data[dst] += alpha * self.data[src];
+            let mut a = order;
+            loop {
+                if a == 0 {
+                    break;
+                }
+                a -= 1;
+                idx[a] += 1;
+                src += in_stride[a];
+                if idx[a] < n {
+                    break;
+                }
+                idx[a] = 0;
+                src -= n * in_stride[a];
+            }
+        }
+    }
+
+    /// Fused S_n/O(n)/SO(n) Step-3: broadcast `lead_groups.len()` free
+    /// leading block indices AND embed the compact tensor on the per-group
+    /// diagonals, in one allocation and one scatter:
+    ///
+    /// `out[diag(i_1,g_1), …, diag(i_t,g_t), diag(j_1,h_1), …] = self[j_1…]`
+    ///
+    /// where `lead_groups = [g_1…g_t]` are the broadcast block sizes (the
+    /// `i` indices are free) and `tail_groups = [h_1…h_d]` are the diagonal
+    /// embeddings of `self`'s axes. Replaces
+    /// `self.broadcast_leading(t).embed_group_diagonals(groups)` without
+    /// the `n^t·|self|` intermediate.
+    pub fn scatter_broadcast_diagonals(
+        &self,
+        lead_groups: &[usize],
+        tail_groups: &[usize],
+    ) -> Tensor {
+        assert_eq!(tail_groups.len(), self.order);
+        let n = self.n;
+        let total: usize = lead_groups.iter().sum::<usize>() + tail_groups.iter().sum::<usize>();
+        let mut out = Tensor::zeros(n, total);
+        let t = lead_groups.len();
+        let d = tail_groups.len();
+        // Per-compact-axis strides in the output (diagonal strides).
+        let mut gstride = vec![0usize; t + d];
+        {
+            let mut axis_stride = vec![0usize; total];
+            let mut s = 1usize;
+            for a in (0..total).rev() {
+                axis_stride[a] = s;
+                s *= n;
+            }
+            let mut a = 0usize;
+            for (g, &size) in lead_groups.iter().chain(tail_groups.iter()).enumerate() {
+                for _ in 0..size {
+                    gstride[g] += axis_stride[a];
+                    a += 1;
+                }
+            }
+        }
+        // Odometer over (lead indices, compact indices): the source offset
+        // advances only with the tail digits.
+        let reps = n.pow(t as u32);
+        let tail_len = self.data.len();
+        let mut lead_idx = vec![0usize; t];
+        let mut lead_off = 0usize;
+        for _ in 0..reps {
+            // inner: walk the compact tensor
+            let mut tail_idx = vec![0usize; d];
+            let mut dst = lead_off;
+            for src in 0..tail_len {
+                out.data[dst] = self.data[src];
+                let mut g = d;
+                loop {
+                    if g == 0 {
+                        break;
+                    }
+                    g -= 1;
+                    tail_idx[g] += 1;
+                    dst += gstride[t + g];
+                    if tail_idx[g] < n {
+                        break;
+                    }
+                    tail_idx[g] = 0;
+                    dst -= n * gstride[t + g];
+                }
+            }
+            // advance lead odometer
+            let mut g = t;
+            loop {
+                if g == 0 {
+                    break;
+                }
+                g -= 1;
+                lead_idx[g] += 1;
+                lead_off += gstride[g];
+                if lead_idx[g] < n {
+                    break;
+                }
+                lead_idx[g] = 0;
+                lead_off -= n * gstride[g];
+            }
+        }
+        out
+    }
+
+    /// Deep-fused spanning-term tail: equivalent to
+    /// `out += alpha · permute_axes(self.scatter_broadcast_diagonals(lead,
+    /// tail), axes)` but touching only the `n^{t+d}` diagonal-support
+    /// entries of `out` — skipping the `O(n^l)` zero-fill, write-back and
+    /// re-read of the materialised Step-3 output entirely. The layer
+    /// hot path (`MultPlan::apply_accumulate`) lives on this.
+    pub fn scatter_broadcast_diagonals_axpy(
+        &self,
+        lead_groups: &[usize],
+        tail_groups: &[usize],
+        axes: &[usize],
+        alpha: f64,
+        out: &mut Tensor,
+    ) {
+        assert_eq!(tail_groups.len(), self.order);
+        let n = self.n;
+        let total: usize = lead_groups.iter().sum::<usize>() + tail_groups.iter().sum::<usize>();
+        assert_eq!(axes.len(), total);
+        assert_eq!(out.order, total);
+        assert_eq!(out.n, n);
+        let t = lead_groups.len();
+        let d = tail_groups.len();
+        // Planar axis a feeds output axis p where axes[p] == a; its stride
+        // in `out` is the output stride of axis p.
+        let mut planar_out_stride = vec![0usize; total];
+        {
+            let mut out_stride = vec![0usize; total];
+            let mut s = 1usize;
+            for p in (0..total).rev() {
+                out_stride[p] = s;
+                s *= n;
+            }
+            for (p, &a) in axes.iter().enumerate() {
+                planar_out_stride[a] = out_stride[p];
+            }
+        }
+        // Per-compact-axis strides: sum the (permuted) strides of the
+        // planar axes in each group.
+        let mut gstride = vec![0usize; t + d];
+        {
+            let mut a = 0usize;
+            for (g, &size) in lead_groups.iter().chain(tail_groups.iter()).enumerate() {
+                for _ in 0..size {
+                    gstride[g] += planar_out_stride[a];
+                    a += 1;
+                }
+            }
+        }
+        let reps = n.pow(t as u32);
+        let tail_len = self.data.len();
+        let mut lead_idx = vec![0usize; t];
+        let mut lead_off = 0usize;
+        for _ in 0..reps {
+            let mut tail_idx = vec![0usize; d];
+            let mut dst = lead_off;
+            for src in 0..tail_len {
+                out.data[dst] += alpha * self.data[src];
+                let mut g = d;
+                loop {
+                    if g == 0 {
+                        break;
+                    }
+                    g -= 1;
+                    tail_idx[g] += 1;
+                    dst += gstride[t + g];
+                    if tail_idx[g] < n {
+                        break;
+                    }
+                    tail_idx[g] = 0;
+                    dst -= n * gstride[t + g];
+                }
+            }
+            let mut g = t;
+            loop {
+                if g == 0 {
+                    break;
+                }
+                g -= 1;
+                lead_idx[g] += 1;
+                lead_off += gstride[g];
+                if lead_idx[g] < n {
+                    break;
+                }
+                lead_idx[g] = 0;
+                lead_off -= n * gstride[g];
+            }
+        }
+    }
+
+    /// Prepend `m` broadcast axes: `out[i_1…i_m, J] = self[J]` for every
+    /// choice of the leading indices — the "copy" half of S_n Step 3
+    /// (eq. 103) before the diagonal embedding.
+    pub fn broadcast_leading(&self, m: usize) -> Tensor {
+        let n = self.n;
+        let reps = n.pow(m as u32);
+        let mut data = Vec::with_capacity(reps * self.data.len());
+        for _ in 0..reps {
+            data.extend_from_slice(&self.data);
+        }
+        Tensor {
+            n,
+            order: self.order + m,
+            data,
+        }
+    }
+
+    /// Mode product: apply an `n×n` matrix `g` along one axis,
+    /// `out[…, i, …] = Σ_j g[i,j] self[…, j, …]`. Composed over all axes it
+    /// realises the diagonal action `ρ_k(g)` of eq. (2).
+    pub fn mode_apply(&self, g: &[f64], axis: usize) -> Tensor {
+        let n = self.n;
+        assert_eq!(g.len(), n * n);
+        assert!(axis < self.order);
+        let mut out = Tensor::zeros(n, self.order);
+        // Split flat index as (outer, axis, inner).
+        let inner: usize = n.pow((self.order - 1 - axis) as u32);
+        let outer: usize = n.pow(axis as u32);
+        for o in 0..outer {
+            for i in 0..n {
+                let obase = (o * n + i) * inner;
+                for j in 0..n {
+                    let gij = g[i * n + j];
+                    if gij == 0.0 {
+                        continue;
+                    }
+                    let ibase = (o * n + j) * inner;
+                    for t in 0..inner {
+                        out.data[obase + t] += gij * self.data[ibase + t];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The full tensor-power action `ρ_k(g)` (eq. 2): `g` applied along
+    /// every axis.
+    pub fn rho_apply(&self, g: &[f64]) -> Tensor {
+        let mut t = self.clone();
+        for a in 0..self.order {
+            t = t.mode_apply(g, a);
+        }
+        t
+    }
+}
+
+/// All permutations of `0..n` with their signs, generated by Heap's
+/// algorithm (each successive permutation differs by one transposition, so
+/// the sign alternates).
+pub fn signed_permutations(n: usize) -> Vec<(Vec<usize>, f64)> {
+    let mut out = Vec::with_capacity((1..=n).product::<usize>());
+    let mut a: Vec<usize> = (0..n).collect();
+    let mut c = vec![0usize; n];
+    let mut sign = 1.0;
+    out.push((a.clone(), sign));
+    let mut i = 0usize;
+    while i < n {
+        if c[i] < i {
+            if i % 2 == 0 {
+                a.swap(0, i);
+            } else {
+                a.swap(c[i], i);
+            }
+            sign = -sign;
+            out.push((a.clone(), sign));
+            c[i] += 1;
+            i = 0;
+        } else {
+            c[i] = 0;
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::index::unflat_index;
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn permute_axes_identity() {
+        let t = Tensor::linspace(3, 3);
+        let p = t.permute_axes(&[0, 1, 2]);
+        assert_eq!(t, p);
+    }
+
+    #[test]
+    fn permute_axes_matches_pointwise() {
+        let t = Tensor::linspace(3, 4);
+        let axes = [2, 0, 3, 1];
+        let p = t.permute_axes(&axes);
+        for f in 0..p.len() {
+            let idx = unflat_index(3, 4, f);
+            // out axis q carries input axis axes[q]: J[axes[q]] = I[q].
+            let mut src = vec![0usize; 4];
+            for (q, &a) in axes.iter().enumerate() {
+                src[a] = idx[q];
+            }
+            assert_eq!(p.data[f], t.get(&src), "at {idx:?}");
+        }
+    }
+
+    #[test]
+    fn permute_axes_inverse_roundtrip() {
+        let mut rng = Rng::new(31);
+        let t = Tensor::random(3, 5, &mut rng);
+        let axes = [4, 2, 0, 1, 3];
+        let mut inv = [0usize; 5];
+        for (i, &a) in axes.iter().enumerate() {
+            inv[a] = i;
+        }
+        let back = t.permute_axes(&axes).permute_axes(&inv);
+        assert!(t.allclose(&back, 0.0));
+    }
+
+    #[test]
+    fn contract_trailing_diagonal_small() {
+        // order-2, contract both axes: trace.
+        let t = Tensor::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let c = t.contract_trailing_diagonal(2);
+        assert_eq!(c.order, 0);
+        assert_eq!(c.data[0], 5.0); // 1 + 4
+    }
+
+    #[test]
+    fn contract_trailing_diagonal_keeps_leading() {
+        let mut t = Tensor::zeros(2, 3);
+        // out[m] = t[m,0,0] + t[m,1,1]
+        t.set(&[0, 0, 0], 1.0);
+        t.set(&[0, 1, 1], 2.0);
+        t.set(&[1, 0, 0], 5.0);
+        t.set(&[1, 1, 0], 100.0); // off-diagonal, ignored
+        let c = t.contract_trailing_diagonal(2);
+        assert_eq!(c.data, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn eps_trace_antisymmetry() {
+        // For n = 2: out = t[0,1] - t[1,0].
+        let t = Tensor::from_vec(2, 2, vec![9.0, 3.0, 7.0, 9.0]).unwrap();
+        let c = t.trace_trailing_pair_eps();
+        assert_eq!(c.data[0], 3.0 - 7.0);
+    }
+
+    #[test]
+    fn levi_civita_full_contraction_is_det() {
+        // Contracting an order-n tensor v ⊗ … against ε with s = 0 gives
+        // Σ_p sign(p) t[p] — for t = a⊗b⊗c this is det[a b c].
+        let n = 3;
+        let mut rng = Rng::new(17);
+        let a: Vec<f64> = rng.gaussian_vec(n);
+        let b: Vec<f64> = rng.gaussian_vec(n);
+        let c: Vec<f64> = rng.gaussian_vec(n);
+        let mut t = Tensor::zeros(n, 3);
+        let mut it = t.indices();
+        let mut flat = 0usize;
+        while let Some(idx) = it.next_index() {
+            t.data[flat] = a[idx[0]] * b[idx[1]] * c[idx[2]];
+            flat += 1;
+        }
+        let out = t.levi_civita_contract_trailing(0);
+        assert_eq!(out.order, 0);
+        let det = a[0] * (b[1] * c[2] - b[2] * c[1]) - a[1] * (b[0] * c[2] - b[2] * c[0])
+            + a[2] * (b[0] * c[1] - b[1] * c[0]);
+        // ε_{ijk} t_{ijk} = det of the matrix with *rows* a, b, c
+        assert!((out.data[0] - det).abs() < 1e-12, "{} vs {det}", out.data[0]);
+    }
+
+    #[test]
+    fn group_diagonals_roundtrip() {
+        let mut rng = Rng::new(23);
+        let compact = Tensor::random(3, 2, &mut rng);
+        let groups = [2usize, 3usize];
+        let big = compact.embed_group_diagonals(&groups);
+        assert_eq!(big.order, 5);
+        let back = big.extract_group_diagonals(&groups);
+        assert!(compact.allclose(&back, 0.0));
+        // Off-diagonal entries are zero.
+        assert_eq!(big.get(&[0, 1, 0, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn mode_apply_identity() {
+        let t = Tensor::linspace(3, 3);
+        let id: Vec<f64> = {
+            let mut m = vec![0.0; 9];
+            for i in 0..3 {
+                m[i * 3 + i] = 1.0;
+            }
+            m
+        };
+        for axis in 0..3 {
+            assert!(t.mode_apply(&id, axis).allclose(&t, 0.0));
+        }
+    }
+
+    #[test]
+    fn rho_apply_scales_by_power() {
+        // g = 2·I ⇒ ρ_k(g) v = 2^k v.
+        let t = Tensor::linspace(2, 3);
+        let g = vec![2.0, 0.0, 0.0, 2.0];
+        let r = t.rho_apply(&g);
+        let mut want = t.clone();
+        want.scale(8.0);
+        assert!(r.allclose(&want, 1e-12));
+    }
+
+    #[test]
+    fn axpy_permuted_matches_permute_then_axpy() {
+        let mut rng = Rng::new(41);
+        let t = Tensor::random(3, 4, &mut rng);
+        let axes = [2, 0, 3, 1];
+        let mut a = Tensor::random(3, 4, &mut rng);
+        let mut b = a.clone();
+        a.axpy(0.7, &t.permute_axes(&axes));
+        t.axpy_permuted_into(0.7, &axes, &mut b);
+        assert!(a.allclose(&b, 1e-14));
+        // identity fast path
+        let mut c = Tensor::zeros(3, 4);
+        t.axpy_permuted_into(2.0, &[0, 1, 2, 3], &mut c);
+        let mut want = t.clone();
+        want.scale(2.0);
+        assert!(c.allclose(&want, 0.0));
+    }
+
+    #[test]
+    fn scatter_broadcast_matches_broadcast_then_embed() {
+        let mut rng = Rng::new(43);
+        for (lead, tail) in [
+            (vec![2usize, 1], vec![1usize, 2]),
+            (vec![], vec![2, 2]),
+            (vec![3], vec![]),
+            (vec![], vec![]),
+        ] {
+            let n = 2;
+            let x = Tensor::random(n, tail.len(), &mut rng);
+            let mut groups = lead.clone();
+            groups.extend(tail.iter().copied());
+            let want = x
+                .broadcast_leading(lead.len())
+                .embed_group_diagonals(&groups);
+            let got = x.scatter_broadcast_diagonals(&lead, &tail);
+            assert!(got.allclose(&want, 0.0), "lead {lead:?} tail {tail:?}");
+        }
+    }
+
+    #[test]
+    fn signed_permutations_count_and_signs() {
+        let ps = signed_permutations(4);
+        assert_eq!(ps.len(), 24);
+        let plus = ps.iter().filter(|(_, s)| *s > 0.0).count();
+        assert_eq!(plus, 12);
+        // identity has sign +1
+        let id = ps.iter().find(|(p, _)| p == &vec![0, 1, 2, 3]).unwrap();
+        assert_eq!(id.1, 1.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Shared utilities: deterministic PRNG, timing, table printing and the
+//! in-house property-testing harness.
+//!
+//! The offline crate registry for this build ships neither `rand` nor
+//! `proptest` nor `criterion`; these small substrates replace exactly the
+//! parts of each that the rest of the crate needs (see DESIGN.md §3).
+
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod timing;
+
+pub use rng::Rng;
+pub use table::Table;
+pub use timing::{bench_median, BenchResult};

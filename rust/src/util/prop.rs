@@ -1,0 +1,109 @@
+//! In-house property-testing harness (proptest substitute, see DESIGN.md §3).
+//!
+//! A property is a closure from a seeded [`Rng`] to `Result<(), String>`.
+//! The runner executes `cases` independent cases with derived seeds and, on
+//! failure, reports the failing seed so the case replays deterministically:
+//!
+//! ```
+//! use equidiag::util::prop::{check, Config};
+//! check(Config::default().cases(64), "addition commutes", |rng| {
+//!     let a = rng.uniform();
+//!     let b = rng.uniform();
+//!     if (a + b - (b + a)).abs() < 1e-15 { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Property-run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Master seed; case `i` runs with seed `splitmix(seed, i)`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 128,
+            seed: 0xE1_D1A6_2024,
+        }
+    }
+}
+
+impl Config {
+    /// Override the number of cases.
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Override the master seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+fn splitmix(seed: u64, i: u64) -> u64 {
+    let mut z = seed.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Run `prop` over `cfg.cases` random cases; panic with the failing seed and
+/// message on the first failure.
+pub fn check<F>(cfg: Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for i in 0..cfg.cases {
+        let case_seed = splitmix(cfg.seed, i as u64);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {i}/{} (replay seed {case_seed:#x}): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Replay a single case with an explicit seed (for debugging failures).
+pub fn replay<F>(seed: u64, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' replay (seed {seed:#x}) failed: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Config::default().cases(16), "tautology", |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "always fails")]
+    fn failing_property_reports() {
+        check(Config::default().cases(4), "always fails", |_| {
+            Err("always fails".into())
+        });
+    }
+
+    #[test]
+    fn seeds_differ_across_cases() {
+        let a = splitmix(1, 0);
+        let b = splitmix(1, 1);
+        assert_ne!(a, b);
+    }
+}

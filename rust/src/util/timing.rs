@@ -1,0 +1,129 @@
+//! Minimal benchmark timer used by `rust/benches/*` (criterion substitute).
+//!
+//! Semantics: warm up, run the closure repeatedly in timed batches until a
+//! time budget is met, report the median per-iteration time. All bench
+//! tables in EXPERIMENTS.md come from this.
+
+use std::time::{Duration, Instant};
+
+/// Result of timing one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Median wall time per iteration, seconds.
+    pub median_s: f64,
+    /// Minimum observed per-iteration time, seconds.
+    pub min_s: f64,
+    /// Total iterations executed in the measurement phase.
+    pub iters: u64,
+}
+
+impl BenchResult {
+    /// Human-readable time with unit scaling.
+    pub fn pretty(&self) -> String {
+        format_seconds(self.median_s)
+    }
+}
+
+/// Format a duration in seconds with an appropriate unit.
+pub fn format_seconds(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Time `f`, returning the median per-iteration time.
+///
+/// Runs a warmup phase (~10% of budget) to stabilise caches and the
+/// allocator, then measures in batches sized so each sample takes ~1ms,
+/// collecting at least 5 samples.
+pub fn bench_median<F: FnMut()>(budget: Duration, mut f: F) -> BenchResult {
+    // Warmup + batch size calibration.
+    let warmup_deadline = Instant::now() + budget.mul_f64(0.1).max(Duration::from_millis(5));
+    let mut calib_iters: u64 = 0;
+    let calib_start = Instant::now();
+    loop {
+        f();
+        calib_iters += 1;
+        if Instant::now() >= warmup_deadline {
+            break;
+        }
+    }
+    let per_iter = calib_start.elapsed().as_secs_f64() / calib_iters as f64;
+    let batch = ((1e-3 / per_iter.max(1e-12)).ceil() as u64).clamp(1, 1_000_000);
+
+    // Measurement phase.
+    let mut samples: Vec<f64> = Vec::new();
+    let mut total_iters = 0u64;
+    let deadline = Instant::now() + budget;
+    while Instant::now() < deadline || samples.len() < 5 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64() / batch as f64;
+        samples.push(dt);
+        total_iters += batch;
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let min = samples[0];
+    BenchResult {
+        median_s: median,
+        min_s: min,
+        iters: total_iters,
+    }
+}
+
+/// Ordinary least-squares slope of `log(y)` against `log(x)` — the measured
+/// complexity exponent used by the scaling benches.
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    let mx = lx.iter().sum::<f64>() / lx.len() as f64;
+    let my = ly.iter().sum::<f64>() / ly.len() as f64;
+    let num: f64 = lx.iter().zip(&ly).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = lx.iter().map(|x| (x - mx) * (x - mx)).sum();
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slope_of_cubic_is_three() {
+        let xs = [2.0, 4.0, 8.0, 16.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 0.5 * x * x * x).collect();
+        let s = loglog_slope(&xs, &ys);
+        assert!((s - 3.0).abs() < 1e-9, "slope {s}");
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut acc = 0u64;
+        let r = bench_median(Duration::from_millis(20), || {
+            acc = acc.wrapping_add(1);
+        });
+        assert!(r.iters > 0);
+        assert!(r.median_s >= 0.0);
+    }
+
+    #[test]
+    fn format_units() {
+        assert!(format_seconds(2.0).ends_with(" s"));
+        assert!(format_seconds(2e-3).ends_with(" ms"));
+        assert!(format_seconds(2e-6).ends_with(" us"));
+        assert!(format_seconds(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,158 @@
+//! The monoidal-functor laws of Section 4 as executable properties:
+//! functoriality (Θ(d₂ • d₁) = Θ(d₂)Θ(d₁) with the n^c scalar),
+//! monoidality (Θ(d₁ ⊗ d₂) = Θ(d₁) ⊗ Θ(d₂)), the interchange law
+//! (eq. 43), and strictness of the unit.
+
+use equidiag::diagram::{compose, tensor_product, Diagram};
+use equidiag::fastmult::Group;
+use equidiag::functor::materialize;
+use equidiag::linalg::Matrix;
+use equidiag::util::prop::{check, Config};
+
+fn kron(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(a.rows * b.rows, a.cols * b.cols);
+    for i in 0..a.rows {
+        for j in 0..a.cols {
+            let v = a.get(i, j);
+            if v == 0.0 {
+                continue;
+            }
+            for p in 0..b.rows {
+                for q in 0..b.cols {
+                    out.set(i * b.rows + p, j * b.cols + q, v * b.get(p, q));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn scaled(m: &Matrix, s: f64) -> Matrix {
+    let mut out = m.clone();
+    for x in &mut out.data {
+        *x *= s;
+    }
+    out
+}
+
+#[test]
+fn theta_functoriality_property() {
+    check(Config::default().cases(80), "Θ functorial", |rng| {
+        let n = 2 + rng.below(2);
+        let k = rng.below(3);
+        let l = rng.below(3);
+        let m = rng.below(3);
+        let d1 = Diagram::random_partition(l, k, rng); // k -> l
+        let d2 = Diagram::random_partition(m, l, rng); // l -> m
+        let m1 = materialize(Group::Symmetric, &d1, n).map_err(|e| e.to_string())?;
+        let m2 = materialize(Group::Symmetric, &d2, n).map_err(|e| e.to_string())?;
+        let prod = m2.matmul(&m1).map_err(|e| e.to_string())?;
+        let c = compose(&d2, &d1).map_err(|e| e.to_string())?;
+        let mc =
+            materialize(Group::Symmetric, &c.diagram, n).map_err(|e| e.to_string())?;
+        let want = scaled(&mc, (n as f64).powi(c.removed_components as i32));
+        if prod.max_abs_diff(&want) < 1e-9 {
+            Ok(())
+        } else {
+            Err(format!("Θ({d2} • {d1}) != Θ(d2)Θ(d1)"))
+        }
+    });
+}
+
+#[test]
+fn theta_monoidality_property() {
+    check(Config::default().cases(60), "Θ monoidal", |rng| {
+        let n = 2;
+        let d1 = Diagram::random_partition(rng.below(3), rng.below(3), rng);
+        let d2 = Diagram::random_partition(rng.below(3), rng.below(3), rng);
+        let m1 = materialize(Group::Symmetric, &d1, n).map_err(|e| e.to_string())?;
+        let m2 = materialize(Group::Symmetric, &d2, n).map_err(|e| e.to_string())?;
+        let t = tensor_product(&d1, &d2);
+        let mt = materialize(Group::Symmetric, &t, n).map_err(|e| e.to_string())?;
+        let want = kron(&m1, &m2);
+        if mt.max_abs_diff(&want) < 1e-12 {
+            Ok(())
+        } else {
+            Err(format!("Θ({d1} ⊗ {d2}) != Θ(d1) ⊗ Θ(d2)"))
+        }
+    });
+}
+
+#[test]
+fn x_functor_monoidality_on_brauer() {
+    check(Config::default().cases(40), "X monoidal", |rng| {
+        let n = 2;
+        let mk = |rng: &mut equidiag::util::Rng| {
+            let l = rng.below(3);
+            let k = if l % 2 == 0 { 2 * rng.below(2) } else { 1 + 2 * rng.below(1) };
+            Diagram::random_brauer(l, k, rng)
+        };
+        let (d1, d2) = match (mk(rng), mk(rng)) {
+            (Ok(a), Ok(b)) => (a, b),
+            _ => return Ok(()),
+        };
+        let m1 = materialize(Group::Symplectic, &d1, n).map_err(|e| e.to_string())?;
+        let m2 = materialize(Group::Symplectic, &d2, n).map_err(|e| e.to_string())?;
+        let t = tensor_product(&d1, &d2);
+        let mt = materialize(Group::Symplectic, &t, n).map_err(|e| e.to_string())?;
+        let want = kron(&m1, &m2);
+        if mt.max_abs_diff(&want) < 1e-12 {
+            Ok(())
+        } else {
+            Err(format!("X({d1} ⊗ {d2}) != X(d1) ⊗ X(d2)"))
+        }
+    });
+}
+
+/// The interchange law (eq. 43) at the diagram level:
+/// (1 ⊗ g) • (f ⊗ 1) = f ⊗ g for composable shapes.
+#[test]
+fn interchange_law() {
+    check(Config::default().cases(60), "interchange", |rng| {
+        let f = Diagram::random_partition(rng.below(3), rng.below(3), rng); // a -> b
+        let g = Diagram::random_partition(rng.below(3), rng.below(3), rng); // c -> d
+        let id_b = Diagram::identity(f.l);
+        let id_c = Diagram::identity(g.k);
+        // top: 1_b ⊗ g : b + c -> b + d ; bottom: f ⊗ 1_c : a + c -> b + c
+        let top = tensor_product(&id_b, &g);
+        let bottom = tensor_product(&f, &id_c);
+        let lhs = compose(&top, &bottom).map_err(|e| e.to_string())?;
+        let want = tensor_product(&f, &g);
+        if lhs.removed_components == 0 && lhs.diagram == want {
+            Ok(())
+        } else {
+            Err(format!("interchange failed for f={f}, g={g}"))
+        }
+    });
+}
+
+/// The unit object is strict: tensoring with the empty diagram is identity.
+#[test]
+fn unit_strictness() {
+    check(Config::default().cases(40), "unit", |rng| {
+        let d = Diagram::random_partition(rng.below(4), rng.below(4), rng);
+        let unit = Diagram::from_blocks(0, 0, vec![]).map_err(|e| e.to_string())?;
+        if tensor_product(&d, &unit) == d && tensor_product(&unit, &d) == d {
+            Ok(())
+        } else {
+            Err(format!("unit not strict for {d}"))
+        }
+    });
+}
+
+/// Composing with permutation diagrams only permutes rows/columns; the n^c
+/// scalar never appears (no closed middle components).
+#[test]
+fn permutations_compose_freely() {
+    check(Config::default().cases(60), "perm compose", |rng| {
+        let k = 1 + rng.below(4);
+        let d = Diagram::random_partition(1 + rng.below(3), k, rng);
+        let sigma = Diagram::permutation(&rng.permutation(k));
+        let c = compose(&d, &sigma).map_err(|e| e.to_string())?;
+        if c.removed_components == 0 {
+            Ok(())
+        } else {
+            Err("permutation composition created middle components".into())
+        }
+    });
+}

@@ -1,0 +1,144 @@
+//! Launcher integration: drive the `equidiag` binary end to end — train
+//! with a config file, save a checkpoint, serve with it loaded, inspect
+//! basis counts — the full workflow a user runs.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_equidiag"))
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("equidiag-cli-{}-{name}", std::process::id()));
+    p
+}
+
+#[test]
+fn help_and_unknown_command() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let bad = bin().arg("frobnicate").output().unwrap();
+    assert!(!bad.status.success());
+}
+
+#[test]
+fn basis_prints_closed_forms() {
+    let out = bin()
+        .args(["basis", "--group", "sn", "--n", "2", "--k", "2", "--l", "2"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("spanning-set size: 8"), "{text}");
+    assert!(text.contains("B(l+k, n) = 8"), "{text}");
+}
+
+#[test]
+fn bench_command_runs() {
+    let out = bin()
+        .args(["bench", "--group", "on", "--n", "4", "--k", "2", "--l", "2"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fast (Algorithm 1)"), "{text}");
+    assert!(text.contains("results agree"), "{text}");
+}
+
+#[test]
+fn train_save_then_serve_load() {
+    let cfg = tmp("train.toml");
+    std::fs::write(
+        &cfg,
+        r#"
+[network]
+group = "sn"
+n = 4
+orders = [2, 0]
+activation = "identity"
+seed = 3
+
+[training]
+steps = 30
+batch_size = 4
+lr = 0.05
+optimizer = "adam"
+log_every = 0
+
+[server]
+workers = 2
+max_batch = 4
+batch_window_us = 100
+queue_capacity = 64
+"#,
+    )
+    .unwrap();
+    let ckpt = tmp("model.ckpt");
+    let out = bin()
+        .args([
+            "train",
+            "--config",
+            cfg.to_str().unwrap(),
+            "--save",
+            ckpt.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "train failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(ckpt.exists());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("final loss"), "{text}");
+
+    let out = bin()
+        .args([
+            "serve",
+            "--config",
+            cfg.to_str().unwrap(),
+            "--load",
+            ckpt.to_str().unwrap(),
+            "--requests",
+            "20",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "serve failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("loaded checkpoint"), "{text}");
+    assert!(text.contains("completed 20"), "{text}");
+    std::fs::remove_file(&cfg).ok();
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn bad_config_fails_cleanly() {
+    let cfg = tmp("bad.toml");
+    std::fs::write(&cfg, "[network]\ngroup = \"u(1)\"\n").unwrap();
+    let out = bin()
+        .args(["train", "--config", cfg.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown group"), "{err}");
+    std::fs::remove_file(&cfg).ok();
+}
+
+#[test]
+fn repo_configs_parse() {
+    // The shipped configs must stay loadable.
+    for name in ["sn_graph.toml", "serve.toml", "on_covariance.toml"] {
+        let path = format!("{}/configs/{name}", env!("CARGO_MANIFEST_DIR"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        equidiag::config::AppConfig::from_text(&text)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}

@@ -1,0 +1,120 @@
+//! Coordinator failure-mode and stress tests: backpressure, mixed
+//! success/failure traffic, saturation, shutdown under load.
+
+use equidiag::config::ServerConfig;
+use equidiag::coordinator::{Coordinator, ModelKind};
+use equidiag::fastmult::Group;
+use equidiag::layer::Init;
+use equidiag::nn::{Activation, EquivariantNet};
+use equidiag::tensor::Tensor;
+use equidiag::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn slow_net(rng: &mut Rng) -> EquivariantNet {
+    // A deeper net so each inference takes a non-trivial time.
+    EquivariantNet::new(
+        Group::Symmetric,
+        6,
+        &[2, 2, 2],
+        Activation::Relu,
+        Init::ScaledNormal,
+        rng,
+    )
+    .unwrap()
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    let mut rng = Rng::new(701);
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 1,
+        max_batch: 1,
+        batch_window: Duration::from_millis(50), // slow drain
+        queue_capacity: 2,
+    });
+    coord.register("m", ModelKind::net(slow_net(&mut rng)));
+    let handle = coord.start();
+    // Fire-and-forget submissions until the bounded queue overflows.
+    let mut receivers = Vec::new();
+    let mut rejected = 0;
+    for _ in 0..50 {
+        match handle.submit("m", Tensor::random(6, 2, &mut rng)) {
+            Ok(rx) => receivers.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "expected backpressure rejections");
+    assert_eq!(handle.metrics().rejected, rejected as u64);
+    // Everything accepted must still complete.
+    for rx in receivers {
+        rx.recv().unwrap().unwrap();
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn mixed_traffic_failures_do_not_poison_the_pool() {
+    let mut rng = Rng::new(702);
+    let mut coord = Coordinator::new(ServerConfig::default());
+    coord.register("good", ModelKind::net(slow_net(&mut rng)));
+    let handle = Arc::new(coord.start());
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(800 + t);
+            let mut ok = 0;
+            let mut err = 0;
+            for i in 0..50 {
+                let route = if i % 5 == 0 { "missing" } else { "good" };
+                match h.infer(route, Tensor::random(6, 2, &mut rng)) {
+                    Ok(_) => ok += 1,
+                    Err(_) => err += 1,
+                }
+            }
+            (ok, err)
+        }));
+    }
+    let mut total_ok = 0;
+    let mut total_err = 0;
+    for j in joins {
+        let (ok, err) = j.join().unwrap();
+        total_ok += ok;
+        total_err += err;
+    }
+    assert_eq!(total_ok, 160);
+    assert_eq!(total_err, 40);
+    let snap = handle.metrics();
+    assert_eq!(snap.completed, 160);
+    assert_eq!(snap.failed, 40);
+    match Arc::try_unwrap(handle) {
+        Ok(h) => h.shutdown(),
+        Err(_) => unreachable!(),
+    }
+}
+
+#[test]
+fn shutdown_under_load_completes_accepted_requests() {
+    let mut rng = Rng::new(703);
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_window: Duration::from_micros(100),
+        queue_capacity: 256,
+    });
+    coord.register("m", ModelKind::net(slow_net(&mut rng)));
+    let handle = coord.start();
+    let mut receivers = Vec::new();
+    for _ in 0..64 {
+        receivers.push(handle.submit("m", Tensor::random(6, 2, &mut rng)).unwrap());
+    }
+    handle.shutdown(); // drains the queue before joining
+    let mut completed = 0;
+    for rx in receivers {
+        if let Ok(Ok(_)) = rx.recv() {
+            completed += 1;
+        }
+    }
+    assert_eq!(completed, 64, "accepted requests must complete on shutdown");
+}

@@ -1,0 +1,138 @@
+//! The theorem-level property: every spanning matrix (hence every layer and
+//! every network) satisfies eq. (3), `F(d) ρ_k(g) v = ρ_l(g) F(d) v`, for
+//! random group elements — per group, via the *fast* path. This validates
+//! simultaneously that the functors produce equivariant maps and that
+//! Algorithm 1 implements the functors.
+
+use equidiag::diagram::Diagram;
+use equidiag::fastmult::{matrix_mult, Group};
+use equidiag::groups;
+use equidiag::tensor::Tensor;
+use equidiag::util::prop::{check, Config};
+use equidiag::util::Rng;
+
+fn equivariance_case(
+    group: Group,
+    n: usize,
+    diagram: &Diagram,
+    rng: &mut Rng,
+    tol: f64,
+) -> Result<(), String> {
+    let v = Tensor::random(n, diagram.k, rng);
+    let g = groups::sample(group, n, rng).map_err(|e| e.to_string())?;
+    let lhs = matrix_mult(group, diagram, &groups::rho(&g, &v)).map_err(|e| e.to_string())?;
+    let rhs = groups::rho(&g, &matrix_mult(group, diagram, &v).map_err(|e| e.to_string())?);
+    if lhs.allclose(&rhs, tol) {
+        Ok(())
+    } else {
+        Err(format!(
+            "equivariance violated for {group} on {diagram}: diff {}",
+            lhs.max_abs_diff(&rhs)
+        ))
+    }
+}
+
+#[test]
+fn sn_spanning_matrices_are_equivariant() {
+    check(Config::default().cases(100), "S_n equivariance", |rng| {
+        let n = 2 + rng.below(3);
+        let l = rng.below(4);
+        let k = rng.below(4);
+        let d = Diagram::random_partition(l, k, rng);
+        equivariance_case(Group::Symmetric, n, &d, rng, 1e-8)
+    });
+}
+
+#[test]
+fn on_spanning_matrices_are_equivariant() {
+    check(Config::default().cases(100), "O(n) equivariance", |rng| {
+        let n = 2 + rng.below(3);
+        let l = rng.below(4);
+        let k = if (l + rng.below(4)) % 2 == 0 { l % 2 } else { 2 - l % 2 };
+        let k = k + 2 * rng.below(2);
+        if (l + k) % 2 != 0 {
+            return Ok(());
+        }
+        let d = Diagram::random_brauer(l, k, rng).map_err(|e| e.to_string())?;
+        equivariance_case(Group::Orthogonal, n, &d, rng, 1e-7)
+    });
+}
+
+#[test]
+fn sp_spanning_matrices_are_equivariant() {
+    check(Config::default().cases(100), "Sp(n) equivariance", |rng| {
+        let n = 2 + 2 * rng.below(2); // 2 or 4
+        let l = rng.below(4);
+        let k = (l % 2) + 2 * rng.below(2);
+        if (l + k) % 2 != 0 {
+            return Ok(());
+        }
+        let d = Diagram::random_brauer(l, k, rng).map_err(|e| e.to_string())?;
+        // Symplectic sampling builds non-orthogonal matrices; tolerance
+        // scales with the tensor order.
+        equivariance_case(Group::Symplectic, n, &d, rng, 1e-5)
+    });
+}
+
+#[test]
+fn so_jellyfish_matrices_are_equivariant() {
+    check(Config::default().cases(60), "SO(n) equivariance", |rng| {
+        let n = 2 + rng.below(2); // 2 or 3
+        let l = rng.below(4);
+        let k = rng.below(4);
+        if l + k < n || (l + k - n) % 2 != 0 {
+            return Ok(());
+        }
+        let d = Diagram::random_jellyfish(l, k, n, rng).map_err(|e| e.to_string())?;
+        equivariance_case(Group::SpecialOrthogonal, n, &d, rng, 1e-7)
+    });
+}
+
+/// Negative control: H_α is SO(n)-equivariant but NOT O(n)-equivariant —
+/// a reflection (det = -1) flips its sign. If this test ever passes with
+/// equality, the determinant step has degenerated.
+#[test]
+fn so_jellyfish_breaks_under_reflection() {
+    let n = 3;
+    let mut rng = Rng::new(0xDEAD);
+    // All-free diagram: the pure Levi-Civita map, l = 1, k = 2.
+    let d = Diagram::from_blocks(1, 2, vec![vec![0], vec![1], vec![2]]).unwrap();
+    let v = Tensor::random(n, 2, &mut rng);
+    // A reflection: diag(-1, 1, 1).
+    let mut refl = equidiag::linalg::Matrix::identity(n);
+    refl.set(0, 0, -1.0);
+    let lhs = matrix_mult(Group::SpecialOrthogonal, &d, &groups::rho(&refl, &v)).unwrap();
+    let rhs = groups::rho(&refl, &matrix_mult(Group::SpecialOrthogonal, &d, &v).unwrap());
+    // det(refl) = -1: lhs must equal -rhs (and be nonzero).
+    let mut neg = rhs.clone();
+    neg.scale(-1.0);
+    assert!(lhs.allclose(&neg, 1e-9));
+    assert!(lhs.norm() > 1e-6);
+}
+
+/// Equivariance survives linear combination: a whole layer is equivariant.
+#[test]
+fn random_layer_combination_is_equivariant() {
+    use equidiag::layer::{EquivariantLinear, Init};
+    let mut rng = Rng::new(0xBEEF);
+    for group in [
+        Group::Symmetric,
+        Group::Orthogonal,
+        Group::SpecialOrthogonal,
+        Group::Symplectic,
+    ] {
+        let n = if group == Group::Symplectic { 4 } else { 3 };
+        let layer = EquivariantLinear::new(group, n, 2, 2, Init::Normal(0.7), &mut rng).unwrap();
+        for _ in 0..5 {
+            let v = Tensor::random(n, 2, &mut rng);
+            let g = groups::sample(group, n, &mut rng).unwrap();
+            let lhs = layer.forward(&groups::rho(&g, &v)).unwrap();
+            let rhs = groups::rho(&g, &layer.forward(&v).unwrap());
+            assert!(
+                lhs.allclose(&rhs, 1e-6),
+                "{group}: diff {}",
+                lhs.max_abs_diff(&rhs)
+            );
+        }
+    }
+}

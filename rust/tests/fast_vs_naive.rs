@@ -1,0 +1,153 @@
+//! The headline correctness property: Algorithm 1 (`matrix_mult` /
+//! `MultPlan`) agrees with the naïve `O(n^{l+k})` functor application for
+//! random diagrams, shapes and dimensions — all four groups, including the
+//! degenerate shapes (k = 0, l = 0, order-0 scalars).
+
+use equidiag::diagram::Diagram;
+use equidiag::fastmult::{matrix_mult, Group, MultPlan};
+use equidiag::functor::naive_apply;
+use equidiag::tensor::Tensor;
+use equidiag::util::prop::{check, Config};
+
+#[test]
+fn sn_random_diagrams() {
+    check(Config::default().cases(200), "S_n fast == naive", |rng| {
+        let n = 2 + rng.below(3);
+        let l = rng.below(5);
+        let k = rng.below(5);
+        let d = Diagram::random_partition(l, k, rng);
+        let v = Tensor::random(n, k, rng);
+        let fast = matrix_mult(Group::Symmetric, &d, &v).map_err(|e| e.to_string())?;
+        let slow = naive_apply(Group::Symmetric, &d, &v).map_err(|e| e.to_string())?;
+        if fast.allclose(&slow, 1e-8) {
+            Ok(())
+        } else {
+            Err(format!("{d}: diff {}", fast.max_abs_diff(&slow)))
+        }
+    });
+}
+
+#[test]
+fn on_random_diagrams() {
+    check(Config::default().cases(200), "O(n) fast == naive", |rng| {
+        let n = 2 + rng.below(3);
+        let l = rng.below(5);
+        let k = l % 2 + 2 * rng.below(3);
+        let d = match Diagram::random_brauer(l, k, rng) {
+            Ok(d) => d,
+            Err(_) => return Ok(()),
+        };
+        let v = Tensor::random(n, k, rng);
+        let fast = matrix_mult(Group::Orthogonal, &d, &v).map_err(|e| e.to_string())?;
+        let slow = naive_apply(Group::Orthogonal, &d, &v).map_err(|e| e.to_string())?;
+        if fast.allclose(&slow, 1e-8) {
+            Ok(())
+        } else {
+            Err(format!("{d}: diff {}", fast.max_abs_diff(&slow)))
+        }
+    });
+}
+
+#[test]
+fn sp_random_diagrams() {
+    check(Config::default().cases(200), "Sp(n) fast == naive", |rng| {
+        let n = 2 + 2 * rng.below(2);
+        let l = rng.below(5);
+        let k = l % 2 + 2 * rng.below(3);
+        let d = match Diagram::random_brauer(l, k, rng) {
+            Ok(d) => d,
+            Err(_) => return Ok(()),
+        };
+        let v = Tensor::random(n, k, rng);
+        let fast = matrix_mult(Group::Symplectic, &d, &v).map_err(|e| e.to_string())?;
+        let slow = naive_apply(Group::Symplectic, &d, &v).map_err(|e| e.to_string())?;
+        if fast.allclose(&slow, 1e-8) {
+            Ok(())
+        } else {
+            Err(format!("{d}: diff {}", fast.max_abs_diff(&slow)))
+        }
+    });
+}
+
+#[test]
+fn so_random_diagrams_brauer_and_jellyfish() {
+    check(Config::default().cases(150), "SO(n) fast == naive", |rng| {
+        let n = 2 + rng.below(2);
+        let l = rng.below(4);
+        let k = rng.below(5);
+        // Alternate between Brauer and jellyfish depending on parity.
+        let d = if (l + k) % 2 == 0 && rng.below(2) == 0 {
+            match Diagram::random_brauer(l, k, rng) {
+                Ok(d) => d,
+                Err(_) => return Ok(()),
+            }
+        } else if l + k >= n && (l + k - n) % 2 == 0 {
+            Diagram::random_jellyfish(l, k, n, rng).map_err(|e| e.to_string())?
+        } else {
+            return Ok(());
+        };
+        let v = Tensor::random(n, k, rng);
+        let fast =
+            matrix_mult(Group::SpecialOrthogonal, &d, &v).map_err(|e| e.to_string())?;
+        let slow =
+            naive_apply(Group::SpecialOrthogonal, &d, &v).map_err(|e| e.to_string())?;
+        if fast.allclose(&slow, 1e-7) {
+            Ok(())
+        } else {
+            Err(format!("{d}: diff {}", fast.max_abs_diff(&slow)))
+        }
+    });
+}
+
+#[test]
+fn plans_are_linear() {
+    // F(d)(a v + b w) == a F(d) v + b F(d) w — the property §5 uses to
+    // extend the per-diagram algorithm to whole weight matrices.
+    check(Config::default().cases(100), "linearity", |rng| {
+        let n = 3;
+        let d = Diagram::random_partition(rng.below(4), rng.below(4), rng);
+        let plan = MultPlan::new(Group::Symmetric, &d, n).map_err(|e| e.to_string())?;
+        let v = Tensor::random(n, d.k, rng);
+        let w = Tensor::random(n, d.k, rng);
+        let (a, b) = (rng.uniform_in(-2.0, 2.0), rng.uniform_in(-2.0, 2.0));
+        let mut lin = v.clone();
+        lin.scale(a);
+        lin.axpy(b, &w);
+        let lhs = plan.apply(&lin).map_err(|e| e.to_string())?;
+        let mut rhs = plan.apply(&v).map_err(|e| e.to_string())?;
+        rhs.scale(a);
+        rhs.axpy(b, &plan.apply(&w).map_err(|e| e.to_string())?);
+        if lhs.allclose(&rhs, 1e-8) {
+            Ok(())
+        } else {
+            Err(format!("not linear on {d}"))
+        }
+    });
+}
+
+#[test]
+fn larger_shapes_spot_checks() {
+    // A few big-shape cases that the exhaustive unit tests cannot cover.
+    let mut rng = equidiag::util::Rng::new(0xFEED);
+    for (group, n, l, k) in [
+        (Group::Symmetric, 4usize, 3usize, 4usize),
+        (Group::Symmetric, 2, 5, 4),
+        (Group::Orthogonal, 5, 3, 5),
+        (Group::Symplectic, 4, 4, 4),
+        (Group::SpecialOrthogonal, 3, 4, 3),
+    ] {
+        let d = match group {
+            Group::Symmetric => Diagram::random_partition(l, k, &mut rng),
+            Group::SpecialOrthogonal => Diagram::random_jellyfish(l, k, n, &mut rng).unwrap(),
+            _ => Diagram::random_brauer(l, k, &mut rng).unwrap(),
+        };
+        let v = Tensor::random(n, k, &mut rng);
+        let fast = matrix_mult(group, &d, &v).unwrap();
+        let slow = naive_apply(group, &d, &v).unwrap();
+        assert!(
+            fast.allclose(&slow, 1e-7),
+            "{group} {d}: diff {}",
+            fast.max_abs_diff(&slow)
+        );
+    }
+}

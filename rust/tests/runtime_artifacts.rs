@@ -1,0 +1,134 @@
+//! Integration: the rust PJRT runtime executes the AOT jax/pallas
+//! artifacts and reproduces jax's numerics exactly (within f32 tolerance).
+//!
+//! Requires `make artifacts`. Tests skip (pass vacuously, with a note on
+//! stderr) when the artifacts are absent so `cargo test` works standalone.
+
+use equidiag::coordinator::{Coordinator, ModelKind};
+use equidiag::config::ServerConfig;
+use equidiag::runtime::{HloService, PjrtRuntime};
+use equidiag::tensor::Tensor;
+
+const MODEL: &str = "artifacts/model.hlo.txt";
+const PAIR_TRACE: &str = "artifacts/pair_trace.hlo.txt";
+const CHECK: &str = "artifacts/model_check.txt";
+
+fn artifacts_present() -> bool {
+    let ok = std::path::Path::new(MODEL).exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+fn read_check() -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let text = std::fs::read_to_string(CHECK).expect("model_check.txt");
+    let mut lines = text.lines().map(|l| {
+        l.split_whitespace()
+            .map(|t| t.parse::<f32>().expect("float token"))
+            .collect::<Vec<f32>>()
+    });
+    let params = lines.next().expect("params line");
+    let input = lines.next().expect("input line");
+    let output = lines.next().expect("output line");
+    (params, input, output)
+}
+
+#[test]
+fn model_artifact_matches_jax_numerics() {
+    if !artifacts_present() {
+        return;
+    }
+    let (params, input, expected) = read_check();
+    let batch = 4usize;
+    let n = 8usize;
+    assert_eq!(input.len(), batch * n * n);
+    let rt = PjrtRuntime::cpu().unwrap();
+    let model = rt.load_hlo_text(MODEL).unwrap();
+    let outs = model
+        .run_f32(&[
+            (params, vec![34]),
+            (input, vec![batch, n, n]),
+        ])
+        .unwrap();
+    assert_eq!(outs.len(), 1, "model returns a 1-tuple");
+    assert_eq!(outs[0].len(), expected.len());
+    let max_diff = outs[0]
+        .iter()
+        .zip(&expected)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    // f32 with different accumulation order between xla_extension 0.5.1
+    // and the jax-bundled XLA: allow ~1e-3 absolute on O(1)-magnitude
+    // outputs.
+    assert!(
+        max_diff < 1e-3,
+        "rust PJRT output deviates from jax by {max_diff}"
+    );
+}
+
+#[test]
+fn pair_trace_artifact_is_a_trace() {
+    if !artifacts_present() {
+        return;
+    }
+    let batch = 4usize;
+    let n = 8usize;
+    let rt = PjrtRuntime::cpu().unwrap();
+    let model = rt.load_hlo_text(PAIR_TRACE).unwrap();
+    // Deterministic input; expected = per-matrix trace.
+    let mut data = vec![0f32; batch * n * n];
+    for (i, x) in data.iter_mut().enumerate() {
+        *x = (i % 13) as f32 - 6.0;
+    }
+    let mut expected = vec![0f32; batch];
+    for b in 0..batch {
+        for j in 0..n {
+            expected[b] += data[b * n * n + j * n + j];
+        }
+    }
+    let outs = model.run_f32(&[(data, vec![batch, n, n])]).unwrap();
+    for (a, b) in outs[0].iter().zip(&expected) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn hlo_service_serves_from_coordinator() {
+    if !artifacts_present() {
+        return;
+    }
+    // The pallas pair-trace kernel as a coordinator route: order-2 input
+    // over R^n with a leading batch axis is not the coordinator Tensor
+    // shape, so serve the model artifact is also awkward; instead exercise
+    // HloService directly under concurrency.
+    let service = HloService::spawn(PAIR_TRACE).unwrap();
+    assert_eq!(service.name(), "pair_trace.hlo");
+    let mut joins = Vec::new();
+    for t in 0..4 {
+        let s = service.clone();
+        joins.push(std::thread::spawn(move || {
+            let batch = 4usize;
+            let n = 8usize;
+            let data = vec![t as f32; batch * n * n];
+            let outs = s.run_f32(vec![(data, vec![batch, n, n])]).unwrap();
+            for &v in &outs[0] {
+                assert!((v - (t as f32) * n as f32).abs() < 1e-4);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // And through the coordinator with a native model alongside.
+    let mut coord = Coordinator::new(ServerConfig::default());
+    coord.register("kernel", ModelKind::hlo(service));
+    let handle = coord.start();
+    // The registry path expects cube tensors; the pair_trace artifact's
+    // input is (4, 8, 8) which is not n^k for a single n — submitting a
+    // mismatched tensor must fail cleanly, not crash the server.
+    let bad = handle.infer("kernel", Tensor::zeros(8, 2));
+    assert!(bad.is_err());
+    assert_eq!(handle.metrics().failed, 1);
+    handle.shutdown();
+}
