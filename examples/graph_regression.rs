@@ -50,7 +50,7 @@ fn soft_high_degree(a: &Tensor, tau: f64) -> f64 {
     acc
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> equidiag::Result<()> {
     let n = 8;
     let tau = 1.0;
     let train_size = 256;

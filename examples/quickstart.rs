@@ -17,7 +17,7 @@ use equidiag::tensor::Tensor;
 use equidiag::util::Rng;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> equidiag::Result<()> {
     // 1. A (5,4)-partition diagram in the spirit of the paper's Figure 1.
     let d = Diagram::from_blocks(
         4,

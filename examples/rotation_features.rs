@@ -57,7 +57,7 @@ fn shrinkage(c: &Tensor, alpha: f64) -> Tensor {
     out
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> equidiag::Result<()> {
     let n = 4;
     let alpha = 0.3;
     let mut rng = Rng::new(77);

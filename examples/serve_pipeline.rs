@@ -16,7 +16,7 @@ use equidiag::util::Rng;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> equidiag::Result<()> {
     let n = 8;
     let mut rng = Rng::new(99);
     println!("== equidiag serving pipeline ==");
@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
         max_batch: 16,
         batch_window: Duration::from_micros(200),
         queue_capacity: 2048,
+        ..ServerConfig::default()
     });
     coord.register("diagram-net", ModelKind::net(net));
 

@@ -48,7 +48,7 @@ fn phase_features(n: usize, rng: &mut Rng) -> Tensor {
     f
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> equidiag::Result<()> {
     let n = 4; // m = 2 oscillators
     let mut rng = Rng::new(11);
     println!("== Sp(n)-equivariant phase-space maps (n = {n}, m = {}) ==", n / 2);

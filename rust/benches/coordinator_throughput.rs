@@ -3,10 +3,14 @@
 //! The coordinator under closed-loop load: sweep worker count and batching
 //! window, report req/s and latency. The native diagram-net route carries
 //! the load; the PJRT route is exercised separately if artifacts exist.
+//!
+//! Emits `BENCH_throughput.json` (requests/sec, plan-cache hit rate,
+//! batched-vs-sequential speedup) so the perf trajectory is machine-
+//! readable from PR 1 onward.
 
 use equidiag::config::ServerConfig;
-use equidiag::coordinator::{Coordinator, ModelKind};
-use equidiag::fastmult::Group;
+use equidiag::coordinator::{Coordinator, MetricsSnapshot, ModelKind};
+use equidiag::fastmult::{factor_runs, Group, PlanCache};
 use equidiag::layer::Init;
 use equidiag::nn::{Activation, EquivariantNet};
 use equidiag::runtime::HloService;
@@ -15,25 +19,36 @@ use equidiag::util::{Rng, Table};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-fn run_load(workers: usize, window_us: u64, max_batch: usize, requests: usize) -> (f64, f64, f64) {
-    let n = 8;
+const N: usize = 8;
+
+fn test_net() -> EquivariantNet {
+    // Same seed every time: every run after the first hits the plan cache.
     let mut rng = Rng::new(42);
-    let net = EquivariantNet::new(
+    EquivariantNet::new(
         Group::Symmetric,
-        n,
+        N,
         &[2, 2],
         Activation::Relu,
         Init::ScaledNormal,
         &mut rng,
     )
-    .unwrap();
+    .unwrap()
+}
+
+struct LoadResult {
+    rps: f64,
+    snapshot: MetricsSnapshot,
+}
+
+fn run_load(workers: usize, window_us: u64, max_batch: usize, requests: usize) -> LoadResult {
     let mut coord = Coordinator::new(ServerConfig {
         workers,
         max_batch,
         batch_window: Duration::from_micros(window_us),
         queue_capacity: 4096,
+        ..ServerConfig::default()
     });
-    coord.register("m", ModelKind::net(net));
+    coord.register("m", ModelKind::net(test_net()));
     let handle = Arc::new(coord.start());
     let clients = 8;
     let per_client = requests / clients;
@@ -44,7 +59,7 @@ fn run_load(workers: usize, window_us: u64, max_batch: usize, requests: usize) -
         joins.push(std::thread::spawn(move || {
             let mut rng = Rng::new(100 + c as u64);
             for _ in 0..per_client {
-                let v = Tensor::random(8, 2, &mut rng);
+                let v = Tensor::random(N, 2, &mut rng);
                 h.infer("m", v).unwrap();
             }
         }));
@@ -53,21 +68,129 @@ fn run_load(workers: usize, window_us: u64, max_batch: usize, requests: usize) -
         j.join().unwrap();
     }
     let wall = t0.elapsed().as_secs_f64();
-    let snap = handle.metrics();
-    let out = (
-        (clients * per_client) as f64 / wall,
-        snap.mean_latency_s * 1e6,
-        snap.mean_batch_size,
-    );
+    let snapshot = handle.metrics();
+    let rps = (clients * per_client) as f64 / wall;
     match Arc::try_unwrap(handle) {
         Ok(h) => h.shutdown(),
         Err(_) => unreachable!(),
     }
-    out
+    LoadResult { rps, snapshot }
+}
+
+/// Plan-cache behaviour the serving stack relies on, measured explicitly:
+/// the first model build factors every diagram (misses), every later build
+/// of the same architecture is all hits, and serving requests never
+/// re-factors.
+struct CacheReport {
+    first_model_misses: u64,
+    second_model_hit_rate: f64,
+    second_request_misses: u64,
+    /// `Factor` executions during the second request, counted at the
+    /// `MultPlan::new` level — catches re-factoring even if a regression
+    /// bypasses the cache (cache-miss counters cannot see that).
+    second_request_factor_runs: u64,
+}
+
+fn measure_cache() -> CacheReport {
+    let cache = PlanCache::global();
+    let before = cache.stats();
+    let net = test_net();
+    let after_first = cache.stats();
+    let first_model_misses = after_first.misses - before.misses;
+
+    let _replica = test_net();
+    let after_second = cache.stats();
+    let second_build_hits = after_second.hits - after_first.hits;
+    let second_build_misses = after_second.misses - after_first.misses;
+    let second_model_hit_rate = if second_build_hits + second_build_misses == 0 {
+        0.0
+    } else {
+        second_build_hits as f64 / (second_build_hits + second_build_misses) as f64
+    };
+
+    // Serve two requests through a coordinator; the second (and any later)
+    // request must not add a single miss.
+    let mut coord = Coordinator::new(ServerConfig::default());
+    coord.register("m", ModelKind::net(net));
+    let handle = coord.start();
+    let mut rng = Rng::new(7);
+    handle.infer("m", Tensor::random(N, 2, &mut rng)).unwrap();
+    let before_second = cache.stats();
+    let factor_before = factor_runs();
+    handle.infer("m", Tensor::random(N, 2, &mut rng)).unwrap();
+    let after_requests = cache.stats();
+    let factor_after = factor_runs();
+    handle.shutdown();
+
+    CacheReport {
+        first_model_misses,
+        second_model_hit_rate,
+        second_request_misses: after_requests.misses - before_second.misses,
+        second_request_factor_runs: factor_after - factor_before,
+    }
+}
+
+fn write_json(
+    path: &str,
+    best_rps: f64,
+    seq_rps: f64,
+    batched_rps: f64,
+    batched_snapshot: &MetricsSnapshot,
+    cache: &CacheReport,
+) {
+    let stats = PlanCache::global().stats();
+    let json = format!(
+        "{{\n  \"bench\": \"coordinator_throughput\",\n  \"n\": {N},\n  \
+         \"requests_per_sec_best\": {best_rps:.1},\n  \
+         \"requests_per_sec_sequential\": {seq_rps:.1},\n  \
+         \"requests_per_sec_batched\": {batched_rps:.1},\n  \
+         \"batched_vs_sequential_speedup\": {speedup:.3},\n  \
+         \"mean_batch_size\": {mean_batch:.3},\n  \
+         \"mean_batch_exec_us\": {exec_us:.1},\n  \
+         \"plan_cache\": {{\n    \"hits\": {hits},\n    \"misses\": {misses},\n    \
+         \"hit_rate\": {hit_rate:.4},\n    \
+         \"first_model_misses\": {fmm},\n    \
+         \"second_model_hit_rate\": {smhr:.4},\n    \
+         \"second_request_misses\": {srm},\n    \
+         \"second_request_factor_runs\": {srf}\n  }}\n}}\n",
+        speedup = batched_rps / seq_rps,
+        mean_batch = batched_snapshot.mean_batch_size,
+        exec_us = batched_snapshot.mean_batch_exec_s * 1e6,
+        hits = stats.hits,
+        misses = stats.misses,
+        hit_rate = stats.hit_rate(),
+        fmm = cache.first_model_misses,
+        smhr = cache.second_model_hit_rate,
+        srm = cache.second_request_misses,
+        srf = cache.second_request_factor_runs,
+    );
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }
 
 fn main() {
     println!("== E9: coordinator throughput (closed-loop, 8 clients) ==\n");
+
+    let cache = measure_cache();
+    println!(
+        "plan cache: first model build ran Factor {} times; an identical \
+         replica hit the cache {:.0}% of the time; the second request added \
+         {} misses",
+        cache.first_model_misses,
+        cache.second_model_hit_rate * 100.0,
+        cache.second_request_misses
+    );
+    assert_eq!(
+        cache.second_request_misses, 0,
+        "serving must never miss on a cached plan"
+    );
+    assert_eq!(
+        cache.second_request_factor_runs, 0,
+        "serving must never run Factor at all (even bypassing the cache)"
+    );
+
     let requests = 2000;
     let mut table = Table::new(vec![
         "workers",
@@ -76,39 +199,75 @@ fn main() {
         "req/s",
         "mean latency",
         "mean batch",
+        "batch exec",
     ]);
+    let mut best_rps = 0f64;
+    let mut seq_rps = 0f64;
+    let mut batched_rps = 0f64;
+    let mut batched_snapshot: Option<MetricsSnapshot> = None;
     for &workers in &[1usize, 2, 4, 8] {
         for &(window_us, max_batch) in &[(0u64, 1usize), (200, 16), (1000, 64)] {
-            let (rps, lat_us, mb) = run_load(workers, window_us, max_batch, requests);
+            let r = run_load(workers, window_us, max_batch, requests);
+            if r.rps > best_rps {
+                best_rps = r.rps;
+            }
+            // The fixed-worker comparison pair for the JSON: batched
+            // (64-deep window) vs sequential (max_batch = 1) at 4 workers.
+            if workers == 4 && max_batch == 1 {
+                seq_rps = r.rps;
+            }
+            if workers == 4 && max_batch == 64 {
+                batched_rps = r.rps;
+                batched_snapshot = Some(r.snapshot.clone());
+            }
             table.row(vec![
                 format!("{workers}"),
                 format!("{window_us} us"),
                 format!("{max_batch}"),
-                format!("{rps:.0}"),
-                format!("{lat_us:.0} us"),
-                format!("{mb:.2}"),
+                format!("{:.0}", r.rps),
+                format!("{:.0} us", r.snapshot.mean_latency_s * 1e6),
+                format!("{:.2}", r.snapshot.mean_batch_size),
+                format!("{:.0} us", r.snapshot.mean_batch_exec_s * 1e6),
             ]);
         }
     }
     table.print();
+    println!(
+        "\nbatched (4 workers, max batch 64) vs sequential (4 workers, max \
+         batch 1): {:.2}x",
+        batched_rps / seq_rps
+    );
+
+    write_json(
+        "BENCH_throughput.json",
+        best_rps,
+        seq_rps,
+        batched_rps,
+        batched_snapshot.as_ref().expect("4-worker batched run"),
+        &cache,
+    );
 
     // PJRT route (single-owner-thread service).
     if std::path::Path::new("artifacts/pair_trace.hlo.txt").exists() {
-        let svc = HloService::spawn("artifacts/pair_trace.hlo.txt").unwrap();
-        let batch = 4usize;
-        let n = 8usize;
-        let reps = 500;
-        let t0 = Instant::now();
-        for r in 0..reps {
-            let data = vec![r as f32; batch * n * n];
-            let _ = svc.run_f32(vec![(data, vec![batch, n, n])]).unwrap();
+        match HloService::spawn("artifacts/pair_trace.hlo.txt") {
+            Ok(svc) => {
+                let batch = 4usize;
+                let n = 8usize;
+                let reps = 500;
+                let t0 = Instant::now();
+                for r in 0..reps {
+                    let data = vec![r as f32; batch * n * n];
+                    let _ = svc.run_f32(vec![(data, vec![batch, n, n])]).unwrap();
+                }
+                let wall = t0.elapsed().as_secs_f64();
+                println!(
+                    "\nPJRT pallas-kernel route: {:.0} exec/s ({:.0} matrices/s)",
+                    reps as f64 / wall,
+                    (reps * batch) as f64 / wall
+                );
+            }
+            Err(e) => println!("\n(PJRT route unavailable: {e})"),
         }
-        let wall = t0.elapsed().as_secs_f64();
-        println!(
-            "\nPJRT pallas-kernel route: {:.0} exec/s ({:.0} matrices/s)",
-            reps as f64 / wall,
-            (reps * batch) as f64 / wall
-        );
     } else {
         println!("\n(artifacts missing — `make artifacts` enables the PJRT row)");
     }

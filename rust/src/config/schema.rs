@@ -78,6 +78,12 @@ pub struct ServerConfig {
     pub batch_window: Duration,
     /// Bounded request-queue capacity (backpressure).
     pub queue_capacity: usize,
+    /// Explicit bound on the process-wide [`crate::fastmult::PlanCache`]
+    /// (number of pre-factored plans kept; `0` = unbounded). `None` (the
+    /// default) leaves the global cache's bound untouched — the cache is
+    /// shared by every coordinator in the process, so only an explicitly
+    /// configured value is applied at start.
+    pub plan_cache_capacity: Option<usize>,
 }
 
 impl Default for ServerConfig {
@@ -87,6 +93,7 @@ impl Default for ServerConfig {
             max_batch: 16,
             batch_window: Duration::from_micros(200),
             queue_capacity: 1024,
+            plan_cache_capacity: None,
         }
     }
 }
@@ -196,6 +203,16 @@ impl AppConfig {
             )? as u64),
             queue_capacity: get_usize(&m, "server.queue_capacity", d.server.queue_capacity)?
                 .max(1),
+            plan_cache_capacity: match m.get("server.plan_cache_capacity") {
+                None => None,
+                Some(v) => Some(v.as_int().and_then(|i| usize::try_from(i).ok()).ok_or_else(
+                    || {
+                        Error::Config(
+                            "server.plan_cache_capacity must be a non-negative integer".into(),
+                        )
+                    },
+                )?),
+            },
         };
 
         let artifact = m
@@ -260,6 +277,7 @@ workers = 2
 max_batch = 8
 batch_window_us = 500
 queue_capacity = 64
+plan_cache_capacity = 128
 "#,
         )
         .unwrap();
@@ -269,6 +287,7 @@ queue_capacity = 64
         assert_eq!(c.network.activation, Activation::Identity);
         assert_eq!(c.training.optimizer, "sgd");
         assert_eq!(c.server.batch_window, Duration::from_micros(500));
+        assert_eq!(c.server.plan_cache_capacity, Some(128));
         assert_eq!(c.artifact.as_deref(), Some("artifacts/model.hlo.txt"));
     }
 
@@ -279,5 +298,7 @@ queue_capacity = 64
         assert!(AppConfig::from_text("[training]\noptimizer = \"lbfgs\"").is_err());
         assert!(AppConfig::from_text("[network]\nactivation = \"swish\"").is_err());
         assert!(AppConfig::from_text("[network]\nn = \"five\"").is_err());
+        assert!(AppConfig::from_text("[server]\nplan_cache_capacity = \"big\"").is_err());
+        assert!(AppConfig::from_text("[server]\nplan_cache_capacity = -1").is_err());
     }
 }

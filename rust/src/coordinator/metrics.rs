@@ -1,5 +1,7 @@
-//! Serving metrics: counters and latency aggregates.
+//! Serving metrics: counters, latency aggregates, per-batch execution
+//! latency and plan-cache effectiveness.
 
+use crate::fastmult::PlanCache;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -14,6 +16,9 @@ pub struct Metrics {
     batched_items: AtomicU64,
     rejected: AtomicU64,
     latency: Mutex<LatencyAgg>,
+    /// Wall time of whole-batch model executions (the batched fast path),
+    /// as opposed to `latency` which is per-request end-to-end.
+    batch_exec: Mutex<LatencyAgg>,
 }
 
 #[derive(Debug, Default)]
@@ -42,6 +47,19 @@ pub struct MetricsSnapshot {
     pub mean_latency_s: f64,
     /// Max end-to-end latency (seconds).
     pub max_latency_s: f64,
+    /// Batches executed by workers (the batched model path).
+    pub batch_execs: u64,
+    /// Mean wall time of one whole-batch execution (seconds).
+    pub mean_batch_exec_s: f64,
+    /// Max wall time of one whole-batch execution (seconds).
+    pub max_batch_exec_s: f64,
+    /// Global plan-cache hits (process-wide, see
+    /// [`crate::fastmult::PlanCache`]).
+    pub plan_cache_hits: u64,
+    /// Global plan-cache misses (`Factor` runs).
+    pub plan_cache_misses: u64,
+    /// Fraction of plan lookups served from the cache.
+    pub plan_cache_hit_rate: f64,
 }
 
 impl Metrics {
@@ -57,6 +75,16 @@ impl Metrics {
     pub fn on_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(size as u64, Ordering::Relaxed);
+    }
+    /// Record one whole-batch model execution taking `elapsed`.
+    pub fn on_batch_executed(&self, elapsed: Duration) {
+        let mut agg = self.batch_exec.lock().unwrap();
+        let s = elapsed.as_secs_f64();
+        agg.total_s += s;
+        agg.count += 1;
+        if s > agg.max_s {
+            agg.max_s = s;
+        }
     }
     /// Record a completed request with its end-to-end latency.
     pub fn on_complete(&self, latency: Duration, ok: bool) {
@@ -74,11 +102,34 @@ impl Metrics {
         }
     }
 
-    /// Take a snapshot.
+    /// Take a snapshot (includes the process-wide plan-cache counters).
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let agg = self.latency.lock().unwrap();
+        let (latency_mean, latency_max) = {
+            let agg = self.latency.lock().unwrap();
+            (
+                if agg.count > 0 {
+                    agg.total_s / agg.count as f64
+                } else {
+                    0.0
+                },
+                agg.max_s,
+            )
+        };
+        let (exec_count, exec_mean, exec_max) = {
+            let agg = self.batch_exec.lock().unwrap();
+            (
+                agg.count,
+                if agg.count > 0 {
+                    agg.total_s / agg.count as f64
+                } else {
+                    0.0
+                },
+                agg.max_s,
+            )
+        };
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batched_items.load(Ordering::Relaxed);
+        let cache = PlanCache::global().stats();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -90,12 +141,14 @@ impl Metrics {
             } else {
                 0.0
             },
-            mean_latency_s: if agg.count > 0 {
-                agg.total_s / agg.count as f64
-            } else {
-                0.0
-            },
-            max_latency_s: agg.max_s,
+            mean_latency_s: latency_mean,
+            max_latency_s: latency_max,
+            batch_execs: exec_count,
+            mean_batch_exec_s: exec_mean,
+            max_batch_exec_s: exec_max,
+            plan_cache_hits: cache.hits,
+            plan_cache_misses: cache.misses,
+            plan_cache_hit_rate: cache.hit_rate(),
         }
     }
 }
@@ -103,6 +156,8 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::diagram::Diagram;
+    use crate::fastmult::Group;
 
     #[test]
     fn snapshot_aggregates() {
@@ -113,6 +168,8 @@ mod tests {
         m.on_batch(2);
         m.on_complete(Duration::from_millis(10), true);
         m.on_complete(Duration::from_millis(30), false);
+        m.on_batch_executed(Duration::from_millis(4));
+        m.on_batch_executed(Duration::from_millis(8));
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.rejected, 1);
@@ -122,5 +179,19 @@ mod tests {
         assert!((s.mean_batch_size - 2.0).abs() < 1e-12);
         assert!((s.mean_latency_s - 0.020).abs() < 1e-6);
         assert!((s.max_latency_s - 0.030).abs() < 1e-6);
+        assert_eq!(s.batch_execs, 2);
+        assert!((s.mean_batch_exec_s - 0.006).abs() < 1e-6);
+        assert!((s.max_batch_exec_s - 0.008).abs() < 1e-6);
+        // Plan-cache counters come from the process-wide cache. Force at
+        // least one miss and one hit, then assert the snapshot sees them
+        // (counters are monotonic, so >= holds under concurrent tests).
+        let cache = PlanCache::global();
+        let d = Diagram::identity(2);
+        cache.get_or_build(Group::Symmetric, &d, 9).unwrap();
+        cache.get_or_build(Group::Symmetric, &d, 9).unwrap();
+        let s = m.snapshot();
+        assert!(s.plan_cache_misses >= 1, "miss not plumbed through");
+        assert!(s.plan_cache_hits >= 1, "hit not plumbed through");
+        assert!(s.plan_cache_hit_rate > 0.0 && s.plan_cache_hit_rate <= 1.0);
     }
 }

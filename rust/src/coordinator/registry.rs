@@ -28,6 +28,19 @@ impl ModelKind {
         ModelKind::Hlo(service)
     }
 
+    /// Run a whole batch through the model: one result per input, in
+    /// order. Native networks take the batched parallel path
+    /// ([`EquivariantNet::forward_batch_results`]), which already keeps
+    /// shape errors per-item (malformed batches fall back to per-item
+    /// forwards); HLO models run through their owner thread one by one
+    /// (PJRT-CPU serialises executions anyway).
+    pub fn infer_batch(&self, inputs: &[&Tensor]) -> Vec<Result<Tensor>> {
+        match self {
+            ModelKind::Net(net) => net.forward_batch_results(inputs),
+            ModelKind::Hlo(_) => inputs.iter().map(|t| self.infer(t)).collect(),
+        }
+    }
+
     /// Run one input through the model.
     pub fn infer(&self, input: &Tensor) -> Result<Tensor> {
         match self {

@@ -6,6 +6,7 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::registry::{ModelKind, Registry};
 use crate::config::ServerConfig;
 use crate::error::{Error, Result};
+use crate::fastmult::PlanCache;
 use crate::tensor::Tensor;
 use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -40,6 +41,22 @@ impl Coordinator {
 
     /// Spawn the batcher and worker threads; returns the client handle.
     pub fn start(self) -> CoordinatorHandle {
+        // The plan cache is process-wide, so only an explicitly configured
+        // bound is applied — a coordinator started with defaults must not
+        // clobber a bound another embedder chose.
+        if let Some(capacity) = self.config.plan_cache_capacity {
+            PlanCache::global().set_capacity(capacity);
+        }
+        // Workers fan batches out via parallel_map; budget the per-call
+        // fan-out so `workers × fan-out` stays at one thread per core.
+        // (Raw hardware parallelism, NOT max_threads(): the latter already
+        // applies any budget a previous coordinator set.) The prior budget
+        // is restored when the handle shuts down.
+        let prior_thread_budget = crate::util::parallel::thread_budget();
+        let hw = std::thread::available_parallelism()
+            .map(std::num::NonZeroUsize::get)
+            .unwrap_or(1);
+        crate::util::parallel::set_thread_budget((hw / self.config.workers.max(1)).max(1));
         let metrics = Arc::new(Metrics::default());
         let (req_tx, req_rx) = mpsc::sync_channel::<WorkItem>(self.config.queue_capacity);
         let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
@@ -66,6 +83,7 @@ impl Coordinator {
             sender: Some(req_tx),
             metrics,
             threads,
+            prior_thread_budget,
         }
     }
 }
@@ -84,11 +102,23 @@ fn worker_loop(
             }
         };
         let model = registry.get(&batch.model);
-        for item in batch.items {
-            let result = match &model {
-                Ok(m) => m.infer(&item.input),
-                Err(e) => Err(Error::Coordinator(e.to_string())),
-            };
+        // One plan, many inputs: the whole batch goes through the model's
+        // batched path in a single call (per-item errors stay per-item).
+        let results: Vec<Result<Tensor>> = match &model {
+            Ok(m) => {
+                let t0 = Instant::now();
+                let inputs: Vec<&Tensor> = batch.items.iter().map(|it| &it.input).collect();
+                let results = m.infer_batch(&inputs);
+                metrics.on_batch_executed(t0.elapsed());
+                results
+            }
+            Err(e) => batch
+                .items
+                .iter()
+                .map(|_| Err(Error::Coordinator(e.to_string())))
+                .collect(),
+        };
+        for (item, result) in batch.items.into_iter().zip(results) {
             let ok = result.is_ok();
             metrics.on_complete(item.enqueued.elapsed(), ok);
             let _ = item.respond.send(result);
@@ -101,6 +131,9 @@ pub struct CoordinatorHandle {
     sender: Option<SyncSender<WorkItem>>,
     metrics: Arc<Metrics>,
     threads: Vec<JoinHandle<()>>,
+    /// Fan-out cap in force before this coordinator started; restored on
+    /// drop so the process regains whatever parallelism policy it had.
+    prior_thread_budget: usize,
 }
 
 impl CoordinatorHandle {
@@ -160,6 +193,12 @@ impl Drop for CoordinatorHandle {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+        // Restore the fan-out cap that was in force before this
+        // coordinator started, so later work in the process (training,
+        // standalone forward_batch, an embedder-set cap) regains its prior
+        // parallelism policy. (With overlapping coordinators the last
+        // change wins — the budget is process-global by design.)
+        crate::util::parallel::set_thread_budget(self.prior_thread_budget);
     }
 }
 
@@ -194,6 +233,7 @@ mod tests {
             max_batch: 4,
             batch_window: Duration::from_micros(100),
             queue_capacity: 64,
+            ..ServerConfig::default()
         });
         coord.register("m", ModelKind::net(net));
         let handle = coord.start();
@@ -230,6 +270,7 @@ mod tests {
             max_batch: 8,
             batch_window: Duration::from_micros(200),
             queue_capacity: 256,
+            ..ServerConfig::default()
         });
         coord.register("m", ModelKind::net(net));
         let handle = Arc::new(coord.start());
@@ -251,6 +292,9 @@ mod tests {
         assert_eq!(snap.completed, 100);
         assert!(snap.batches >= 1);
         assert!(snap.mean_batch_size >= 1.0);
+        // Every batch went through the batched execution path.
+        assert!(snap.batch_execs >= 1);
+        assert!(snap.mean_batch_exec_s >= 0.0);
     }
 
     #[test]

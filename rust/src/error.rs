@@ -1,42 +1,84 @@
 //! Error types for the equidiag library.
+//!
+//! Hand-implemented `Display`/`Error` (the offline build environment has no
+//! `thiserror`), with the same variant set and message formats.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by diagram construction, the fast multiplication
 /// algorithm, layers, the coordinator and the PJRT runtime.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// A set partition did not cover `[l+k]` exactly once.
-    #[error("invalid set partition over [{expected}]: {reason}")]
-    InvalidPartition { expected: usize, reason: String },
+    InvalidPartition {
+        /// Size of the vertex set the partition should cover.
+        expected: usize,
+        /// What went wrong.
+        reason: String,
+    },
 
     /// A diagram was used with a group it is not valid for
     /// (e.g. a general partition diagram fed to the O(n) path).
-    #[error("diagram not valid for group {group}: {reason}")]
-    InvalidDiagramForGroup { group: String, reason: String },
+    InvalidDiagramForGroup {
+        /// Display name of the group.
+        group: String,
+        /// What went wrong.
+        reason: String,
+    },
 
     /// Tensor shape mismatch.
-    #[error("shape mismatch: expected {expected}, got {got}")]
-    ShapeMismatch { expected: String, got: String },
+    ShapeMismatch {
+        /// What the callee needed.
+        expected: String,
+        /// What it was given.
+        got: String,
+    },
 
     /// Dimension constraint violated (e.g. Sp(n) needs even n,
     /// an (l+k)\n-diagram needs l+k-n even and non-negative).
-    #[error("dimension constraint violated: {0}")]
     DimensionConstraint(String),
 
     /// Configuration file / CLI errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Coordinator / serving errors.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
-    /// PJRT runtime errors (wraps the xla crate's error).
-    #[error("runtime error: {0}")]
+    /// PJRT runtime errors.
     Runtime(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidPartition { expected, reason } => {
+                write!(f, "invalid set partition over [{expected}]: {reason}")
+            }
+            Error::InvalidDiagramForGroup { group, reason } => {
+                write!(f, "diagram not valid for group {group}: {reason}")
+            }
+            Error::ShapeMismatch { expected, got } => {
+                write!(f, "shape mismatch: expected {expected}, got {got}")
+            }
+            Error::DimensionConstraint(msg) => {
+                write!(f, "dimension constraint violated: {msg}")
+            }
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Config(format!("io error: {e}"))
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
@@ -45,3 +87,53 @@ impl From<xla::Error> for Error {
 
 /// Library-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_are_stable() {
+        let e = Error::InvalidPartition {
+            expected: 4,
+            reason: "empty block".into(),
+        };
+        assert_eq!(
+            e.to_string(),
+            "invalid set partition over [4]: empty block"
+        );
+        let e = Error::ShapeMismatch {
+            expected: "a".into(),
+            got: "b".into(),
+        };
+        assert_eq!(e.to_string(), "shape mismatch: expected a, got b");
+        assert_eq!(
+            Error::Config("x".into()).to_string(),
+            "config error: x"
+        );
+        assert_eq!(
+            Error::Coordinator("x".into()).to_string(),
+            "coordinator error: x"
+        );
+        assert_eq!(Error::Runtime("x".into()).to_string(), "runtime error: x");
+        assert_eq!(
+            Error::DimensionConstraint("x".into()).to_string(),
+            "dimension constraint violated: x"
+        );
+        assert_eq!(
+            Error::InvalidDiagramForGroup {
+                group: "O(n)".into(),
+                reason: "odd block".into()
+            }
+            .to_string(),
+            "diagram not valid for group O(n): odd block"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+    }
+}

@@ -1,0 +1,300 @@
+//! Process-wide cache of pre-factored [`MultPlan`]s.
+//!
+//! The paper's Algorithm 1 wins by amortising the `Factor` step, but the
+//! amortisation only happens if somebody holds on to the factored plan.
+//! Layers do ([`crate::layer::EquivariantLinear`] stores one plan per
+//! spanning term), yet every *new* layer, model replica or serving route
+//! re-runs `Factor` for the same `(group, diagram, n)` triples. The
+//! [`PlanCache`] closes that gap: a thread-safe, bounded, LRU-evicting map
+//! from `(Group, Diagram, n)` to [`Arc<MultPlan>`], so the `Factor` step
+//! runs **once per distinct diagram across the whole process**.
+//!
+//! Knobs (see `docs/plan_cache.md`):
+//! - capacity: maximum number of cached plans; `0` means unbounded.
+//!   Adjustable at runtime via [`PlanCache::set_capacity`], wired to the
+//!   `[server] plan_cache_capacity` config key by the coordinator.
+//! - counters: hits / misses / evictions, surfaced through
+//!   [`PlanCache::stats`] and the coordinator's metrics snapshot.
+
+use super::{Group, MultPlan};
+use crate::diagram::Diagram;
+use crate::error::Result;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default bound on the number of cached plans. Plans are small (a few
+/// hundred bytes of permutations and block sizes), so the default is
+/// generous; serving stacks with many models can raise it, memory-tight
+/// embedders can lower it.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// Cache key: a diagram is only reusable for the same group at the same
+/// representation dimension (`validate_for` and the jellyfish dispatch both
+/// depend on `(group, n)`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    group: Group,
+    diagram: Diagram,
+    n: usize,
+}
+
+/// One cached plan plus its LRU stamp.
+#[derive(Debug)]
+struct Slot {
+    plan: Arc<MultPlan>,
+    stamp: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    map: HashMap<PlanKey, Slot>,
+    tick: u64,
+}
+
+/// Thread-safe, bounded, LRU-evicting cache of pre-factored plans.
+#[derive(Debug)]
+pub struct PlanCache {
+    inner: Mutex<Inner>,
+    capacity: AtomicUsize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// Point-in-time counters for one [`PlanCache`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to run `Factor`.
+    pub misses: u64,
+    /// Plans dropped by the LRU bound.
+    pub evictions: u64,
+    /// Plans currently held.
+    pub entries: usize,
+    /// Current capacity (`0` = unbounded).
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from the cache (0 when none happened).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+static GLOBAL: OnceLock<PlanCache> = OnceLock::new();
+
+impl PlanCache {
+    /// New cache bounded to `capacity` plans (`0` = unbounded).
+    pub fn with_capacity(capacity: usize) -> Self {
+        PlanCache {
+            inner: Mutex::new(Inner::default()),
+            capacity: AtomicUsize::new(capacity),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide cache used by the layer constructors.
+    pub fn global() -> &'static PlanCache {
+        GLOBAL.get_or_init(|| PlanCache::with_capacity(DEFAULT_CAPACITY))
+    }
+
+    /// Current capacity (`0` = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.capacity.load(Ordering::Relaxed)
+    }
+
+    /// Re-bound the cache; evicts LRU entries immediately if the new
+    /// capacity is smaller than the current population.
+    pub fn set_capacity(&self, capacity: usize) {
+        self.capacity.store(capacity, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        self.evict_over_capacity(&mut inner, capacity);
+    }
+
+    /// Look up (or factor and insert) the plan for `d` under `group` at
+    /// representation dimension `n`.
+    ///
+    /// The `Factor` step runs outside the lock, so concurrent misses for
+    /// the same key may factor twice — both arrive at the same map entry
+    /// and the loser's work is dropped; correctness is unaffected and the
+    /// lock is never held across the (potentially expensive) factoring.
+    pub fn get_or_build(&self, group: Group, d: &Diagram, n: usize) -> Result<Arc<MultPlan>> {
+        let key = PlanKey {
+            group,
+            diagram: d.clone(),
+            n,
+        };
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(slot) = inner.map.get_mut(&key) {
+                slot.stamp = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(slot.plan.clone());
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(MultPlan::new(group, d, n)?);
+        let mut inner = self.inner.lock().unwrap();
+        // Read the capacity under the lock: a concurrent `set_capacity`
+        // must not race this insert into exceeding the new bound.
+        let capacity = self.capacity();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let result = match inner.map.entry(key) {
+            Entry::Occupied(mut e) => {
+                // Raced with another builder: keep the existing plan.
+                e.get_mut().stamp = tick;
+                e.get().plan.clone()
+            }
+            Entry::Vacant(v) => v.insert(Slot { plan, stamp: tick }).plan.clone(),
+        };
+        self.evict_over_capacity(&mut inner, capacity);
+        Ok(result)
+    }
+
+    fn evict_over_capacity(&self, inner: &mut Inner, capacity: usize) {
+        if capacity == 0 {
+            return;
+        }
+        while inner.map.len() > capacity {
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, slot)| slot.stamp)
+                .map(|(k, _)| k.clone());
+            match oldest {
+                Some(k) => {
+                    inner.map.remove(&k);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Drop every cached plan (counters are preserved).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().map.clear();
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> CacheStats {
+        let entries = self.inner.lock().unwrap().map.len();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries,
+            capacity: self.capacity(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    #[test]
+    fn hit_then_miss_counting() {
+        let cache = PlanCache::with_capacity(16);
+        let d = Diagram::identity(2);
+        let p1 = cache.get_or_build(Group::Symmetric, &d, 3).unwrap();
+        let p2 = cache.get_or_build(Group::Symmetric, &d, 3).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "hit must return the cached Arc");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        // Same diagram, different n or group: distinct entries.
+        cache.get_or_build(Group::Symmetric, &d, 4).unwrap();
+        cache.get_or_build(Group::Orthogonal, &d, 3).unwrap();
+        assert_eq!(cache.stats().entries, 3);
+    }
+
+    #[test]
+    fn cached_plan_computes_correctly() {
+        let mut rng = Rng::new(91);
+        let cache = PlanCache::with_capacity(8);
+        let d = Diagram::random_partition(2, 2, &mut rng);
+        let v = Tensor::random(3, 2, &mut rng);
+        let direct = MultPlan::new(Group::Symmetric, &d, 3).unwrap();
+        let cached = cache.get_or_build(Group::Symmetric, &d, 3).unwrap();
+        let a = direct.apply(&v).unwrap();
+        let b = cached.apply(&v).unwrap();
+        assert!(a.allclose(&b, 0.0));
+    }
+
+    #[test]
+    fn lru_eviction_keeps_recent() {
+        let cache = PlanCache::with_capacity(2);
+        let d1 = Diagram::identity(1);
+        let d2 = Diagram::identity(2);
+        let d3 = Diagram::identity(3);
+        cache.get_or_build(Group::Symmetric, &d1, 3).unwrap();
+        cache.get_or_build(Group::Symmetric, &d2, 3).unwrap();
+        // Touch d1 so d2 is the LRU entry.
+        cache.get_or_build(Group::Symmetric, &d1, 3).unwrap();
+        cache.get_or_build(Group::Symmetric, &d3, 3).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 1);
+        // d1 must still be cached (a hit), d2 must have been evicted.
+        let before = cache.stats().hits;
+        cache.get_or_build(Group::Symmetric, &d1, 3).unwrap();
+        assert_eq!(cache.stats().hits, before + 1);
+        let misses_before = cache.stats().misses;
+        cache.get_or_build(Group::Symmetric, &d2, 3).unwrap();
+        assert_eq!(cache.stats().misses, misses_before + 1);
+    }
+
+    #[test]
+    fn capacity_zero_is_unbounded() {
+        let cache = PlanCache::with_capacity(0);
+        for k in 1..6 {
+            cache
+                .get_or_build(Group::Symmetric, &Diagram::identity(k), 3)
+                .unwrap();
+        }
+        let s = cache.stats();
+        assert_eq!(s.entries, 5);
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn shrinking_capacity_evicts() {
+        let cache = PlanCache::with_capacity(8);
+        for k in 1..5 {
+            cache
+                .get_or_build(Group::Symmetric, &Diagram::identity(k), 3)
+                .unwrap();
+        }
+        assert_eq!(cache.stats().entries, 4);
+        cache.set_capacity(1);
+        let s = cache.stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.evictions, 3);
+    }
+
+    #[test]
+    fn invalid_diagram_is_not_cached() {
+        let cache = PlanCache::with_capacity(8);
+        // A non-Brauer partition diagram is invalid for O(n).
+        let d = Diagram::from_blocks(1, 2, vec![vec![0, 1, 2]]).unwrap();
+        assert!(cache.get_or_build(Group::Orthogonal, &d, 3).is_err());
+        assert_eq!(cache.stats().entries, 0);
+    }
+}

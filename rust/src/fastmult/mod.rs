@@ -13,13 +13,15 @@
 //! `O(n^{l+k})`; O(n)/Sp(n) `O(n^{k-1})`; SO(n) free-vertex diagrams
 //! `O(n^{k-(n-s)}(n! + n^{s-1}))`.
 
+pub mod cache;
 pub mod on;
 pub mod plan;
 pub mod sn;
 pub mod so;
 pub mod sp;
 
-pub use plan::MultPlan;
+pub use cache::{CacheStats, PlanCache};
+pub use plan::{factor_runs, MultPlan};
 
 use crate::diagram::Diagram;
 use crate::error::{Error, Result};
@@ -42,7 +44,16 @@ pub enum Group {
 }
 
 impl Group {
-    /// Short display name.
+    /// All four groups, in display order.
+    pub const ALL: [Group; 4] = [
+        Group::Symmetric,
+        Group::Orthogonal,
+        Group::SpecialOrthogonal,
+        Group::Symplectic,
+    ];
+
+    /// Short display name. Round-trips through [`Group::parse`]:
+    /// `Group::parse(g.name()) == Ok(g)` for every group.
     pub fn name(&self) -> &'static str {
         match self {
             Group::Symmetric => "S_n",
@@ -52,15 +63,36 @@ impl Group {
         }
     }
 
-    /// Parse from a config/CLI string.
-    pub fn parse(s: &str) -> Result<Group> {
-        match s.to_ascii_lowercase().as_str() {
-            "sn" | "s_n" | "symmetric" => Ok(Group::Symmetric),
-            "on" | "o(n)" | "o" | "orthogonal" => Ok(Group::Orthogonal),
-            "son" | "so(n)" | "so" | "special_orthogonal" => Ok(Group::SpecialOrthogonal),
-            "spn" | "sp(n)" | "sp" | "symplectic" => Ok(Group::Symplectic),
-            other => Err(Error::Config(format!("unknown group '{other}'"))),
+    /// Every accepted spelling (lower-cased) for this group, the canonical
+    /// `name()` form first. Used by config/CLI error messages.
+    pub fn aliases(&self) -> &'static [&'static str] {
+        match self {
+            Group::Symmetric => &["s_n", "sn", "symmetric"],
+            Group::Orthogonal => &["o(n)", "on", "o", "orthogonal"],
+            Group::SpecialOrthogonal => &["so(n)", "son", "so", "special_orthogonal"],
+            Group::Symplectic => &["sp(n)", "spn", "sp", "symplectic"],
         }
+    }
+
+    /// Parse from a config/CLI string (case-insensitive). Accepts the
+    /// canonical display names (`S_n`, `O(n)`, `SO(n)`, `Sp(n)`) and the
+    /// aliases listed by [`Group::aliases`]; unknown names get an error
+    /// that spells out every accepted form.
+    pub fn parse(s: &str) -> Result<Group> {
+        let lower = s.to_ascii_lowercase();
+        for g in Group::ALL {
+            if g.aliases().contains(&lower.as_str()) {
+                return Ok(g);
+            }
+        }
+        let accepted: Vec<String> = Group::ALL
+            .iter()
+            .map(|g| format!("{} ({})", g.name(), g.aliases().join("|")))
+            .collect();
+        Err(Error::Config(format!(
+            "unknown group '{s}' — expected one of: {}",
+            accepted.join(", ")
+        )))
     }
 }
 
@@ -163,15 +195,23 @@ mod tests {
 
     #[test]
     fn group_parse_roundtrip() {
-        for g in [
-            Group::Symmetric,
-            Group::Orthogonal,
-            Group::SpecialOrthogonal,
-            Group::Symplectic,
-        ] {
-            assert_eq!(Group::parse(g.name()).unwrap(), g);
+        for g in Group::ALL {
+            assert_eq!(Group::parse(g.name()).unwrap(), g, "canonical name");
+            for alias in g.aliases() {
+                assert_eq!(Group::parse(alias).unwrap(), g, "alias {alias}");
+                assert_eq!(
+                    Group::parse(&alias.to_ascii_uppercase()).unwrap(),
+                    g,
+                    "upper-cased alias {alias}"
+                );
+            }
         }
-        assert!(Group::parse("U(n)").is_err());
+        let err = Group::parse("U(n)").unwrap_err().to_string();
+        assert!(err.contains("unknown group 'U(n)'"), "{err}");
+        // The error must advertise every group, including SO(n) and Sp(n).
+        for g in Group::ALL {
+            assert!(err.contains(g.name()), "error must list {}: {err}", g.name());
+        }
     }
 
     #[test]

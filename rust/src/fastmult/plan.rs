@@ -10,10 +10,24 @@ use super::{on, sn, so, sp, Group};
 use crate::diagram::{factor, factor_jellyfish, Diagram, Factored};
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Is `perm` the identity permutation?
+/// Process-wide count of `Factor` executions (every successful
+/// [`MultPlan::new`]), *including* ones that bypass the
+/// [`super::PlanCache`]. Serving paths can assert a zero delta to prove
+/// they never re-factor — a stronger guarantee than cache-miss counters,
+/// which a cache-bypassing regression would never touch.
+static FACTOR_RUNS: AtomicU64 = AtomicU64::new(0);
+
+/// Total `Factor` executions ([`MultPlan::new`] calls) in this process.
+pub fn factor_runs() -> u64 {
+    FACTOR_RUNS.load(Ordering::Relaxed)
+}
+
+/// Is `perm` the identity permutation? (Shared with the layer's batched
+/// permutation-grouping path.)
 #[inline]
-fn is_identity(perm: &[usize]) -> bool {
+pub(crate) fn is_identity(perm: &[usize]) -> bool {
     perm.iter().enumerate().all(|(i, &p)| i == p)
 }
 
@@ -37,6 +51,7 @@ impl MultPlan {
     /// Factor `d` for `group` at representation dimension `n`.
     pub fn new(group: Group, d: &Diagram, n: usize) -> Result<Self> {
         d.validate_for(group, n)?;
+        FACTOR_RUNS.fetch_add(1, Ordering::Relaxed);
         let jellyfish = group == Group::SpecialOrthogonal && !d.is_brauer();
         let factored = if jellyfish {
             factor_jellyfish(d, n)?
@@ -115,18 +130,12 @@ impl MultPlan {
     /// Fused λ-weighted apply: `out += coeff · (Algorithm 1)(v)` without
     /// materialising the permuted output — the layer hot path.
     pub fn apply_accumulate(&self, v: &Tensor, coeff: f64, out: &mut Tensor) -> Result<()> {
-        if out.order != self.l || out.n != self.n {
-            return Err(Error::ShapeMismatch {
-                expected: format!("order {} output over R^{}", self.l, self.n),
-                got: format!("order {} over R^{}", out.order, out.n),
-            });
-        }
+        self.check_output(out)?;
+        self.check_input(v)?;
         if let Some(fused) = &self.fused_perm {
-            self.check_input(v)?;
             v.axpy_permuted_into(coeff, fused, out); // zero intermediates
             return Ok(());
         }
-        self.check_input(v)?;
         let vp_owned;
         let vp: &Tensor = if is_identity(&self.factored.perm_in) {
             v
@@ -134,6 +143,41 @@ impl MultPlan {
             vp_owned = v.permute_axes(&self.factored.perm_in);
             &vp_owned
         };
+        self.accumulate_from_permuted(vp, coeff, out);
+        Ok(())
+    }
+
+    /// Input axis permutation `σ_k` of the factored form. Plans whose
+    /// `perm_in` agree can share one `v.permute_axes(perm_in)` result —
+    /// the batched layer path groups its spanning terms by this and calls
+    /// [`MultPlan::apply_accumulate_permuted`], amortising the `Permute`
+    /// step across terms (there are at most `k!` distinct permutations but
+    /// typically far more diagrams).
+    pub fn perm_in(&self) -> &[usize] {
+        &self.factored.perm_in
+    }
+
+    /// Like [`MultPlan::apply_accumulate`], but `vp` must **already** be
+    /// permuted by [`MultPlan::perm_in`] (i.e. `vp = v.permute_axes(
+    /// plan.perm_in())`). Callers that apply many plans sharing one
+    /// `perm_in` to the same input use this to skip the per-term permute.
+    pub fn apply_accumulate_permuted(&self, vp: &Tensor, coeff: f64, out: &mut Tensor) -> Result<()> {
+        self.check_output(out)?;
+        self.check_input(vp)?;
+        self.accumulate_from_permuted(vp, coeff, out);
+        Ok(())
+    }
+
+    /// Steps 2–4 of Algorithm 1 on an input already in planar-bottom
+    /// layout: per-group `PlanarMult`, then scatter through `σ_l` into
+    /// `out`, scaled by `coeff`.
+    fn accumulate_from_permuted(&self, vp: &Tensor, coeff: f64, out: &mut Tensor) {
+        if self.fused_perm.is_some() {
+            // Pure-permutation diagram: the planar middle is the identity,
+            // so only the output permutation remains.
+            vp.axpy_permuted_into(coeff, &self.factored.perm_out, out);
+            return;
+        }
         let layout = &self.factored.layout;
         match (self.group, self.jellyfish) {
             // Deep fusion: scatter the compact Steps-1/2 form straight into
@@ -173,6 +217,15 @@ impl MultPlan {
                 let w = sp::planar_mult(layout, vp);
                 w.axpy_permuted_into(coeff, &self.factored.perm_out, out);
             }
+        }
+    }
+
+    fn check_output(&self, out: &Tensor) -> Result<()> {
+        if out.order != self.l || out.n != self.n {
+            return Err(Error::ShapeMismatch {
+                expected: format!("order {} output over R^{}", self.l, self.n),
+                got: format!("order {} over R^{}", out.order, out.n),
+            });
         }
         Ok(())
     }
@@ -287,6 +340,50 @@ mod tests {
         let v = Tensor::zeros(3, 2);
         let mut bad = Tensor::zeros(3, 1);
         assert!(plan.apply_accumulate(&v, 1.0, &mut bad).is_err());
+    }
+
+    #[test]
+    fn apply_accumulate_permuted_matches() {
+        let mut rng = Rng::new(59);
+        // S_n partition diagrams.
+        for _ in 0..30 {
+            let l = rng.below(4);
+            let k = rng.below(4);
+            let d = Diagram::random_partition(l, k, &mut rng);
+            let plan = MultPlan::new(Group::Symmetric, &d, 3).unwrap();
+            let v = Tensor::random(3, k, &mut rng);
+            let vp = v.permute_axes(plan.perm_in());
+            let mut a = Tensor::zeros(3, l);
+            let mut b = Tensor::zeros(3, l);
+            plan.apply_accumulate(&v, 0.7, &mut a).unwrap();
+            plan.apply_accumulate_permuted(&vp, 0.7, &mut b).unwrap();
+            assert!(a.allclose(&b, 1e-12), "S_n diagram {d}");
+        }
+        // Brauer diagrams under O(n) and Sp(n).
+        for group in [Group::Orthogonal, Group::Symplectic] {
+            for _ in 0..20 {
+                let d = Diagram::random_brauer(2, 2, &mut rng).unwrap();
+                let plan = MultPlan::new(group, &d, 4).unwrap();
+                let v = Tensor::random(4, 2, &mut rng);
+                let vp = v.permute_axes(plan.perm_in());
+                let mut a = Tensor::zeros(4, 2);
+                let mut b = Tensor::zeros(4, 2);
+                plan.apply_accumulate(&v, -1.3, &mut a).unwrap();
+                plan.apply_accumulate_permuted(&vp, -1.3, &mut b).unwrap();
+                assert!(a.allclose(&b, 1e-12), "{group} diagram {d}");
+            }
+        }
+        // SO(n) jellyfish dispatch.
+        let n = 3;
+        let d = Diagram::random_jellyfish(2, 3, n, &mut rng).unwrap();
+        let plan = MultPlan::new(Group::SpecialOrthogonal, &d, n).unwrap();
+        let v = Tensor::random(n, 3, &mut rng);
+        let vp = v.permute_axes(plan.perm_in());
+        let mut a = Tensor::zeros(n, 2);
+        let mut b = Tensor::zeros(n, 2);
+        plan.apply_accumulate(&v, 0.4, &mut a).unwrap();
+        plan.apply_accumulate_permuted(&vp, 0.4, &mut b).unwrap();
+        assert!(a.allclose(&b, 1e-12), "jellyfish {d}");
     }
 
     #[test]

@@ -16,17 +16,19 @@
 use super::linear::spanning_diagrams;
 use crate::diagram::Diagram;
 use crate::error::{Error, Result};
-use crate::fastmult::{Group, MultPlan};
+use crate::fastmult::{Group, MultPlan, PlanCache};
 use crate::tensor::Tensor;
 use crate::util::Rng;
+use std::sync::Arc;
 
-/// One spanning term with its per-channel coefficient matrix.
+/// One spanning term with its per-channel coefficient matrix. Plans are
+/// shared through the global [`PlanCache`].
 #[derive(Debug, Clone)]
 struct ChannelTerm {
     #[allow(dead_code)]
     diagram: Diagram,
-    forward: MultPlan,
-    backward: MultPlan,
+    forward: Arc<MultPlan>,
+    backward: Arc<MultPlan>,
     adjoint_sign: f64,
     /// `c_out × c_in`, row-major.
     weights: Vec<f64>,
@@ -43,7 +45,7 @@ pub struct ChannelEquivariantLinear {
     c_out: usize,
     terms: Vec<ChannelTerm>,
     /// Per-bias-diagram, per-output-channel coefficients (`c_out` each).
-    bias_terms: Vec<(MultPlan, Vec<f64>)>,
+    bias_terms: Vec<(Arc<MultPlan>, Vec<f64>)>,
 }
 
 impl ChannelEquivariantLinear {
@@ -60,12 +62,13 @@ impl ChannelEquivariantLinear {
         rng: &mut Rng,
     ) -> Result<Self> {
         assert!(c_in >= 1 && c_out >= 1);
+        let cache = PlanCache::global();
         let diagrams = spanning_diagrams(group, n, k, l)?;
         let scale = 1.0 / ((diagrams.len().max(1) * c_in) as f64).sqrt();
         let mut terms = Vec::with_capacity(diagrams.len());
         for d in diagrams {
-            let forward = MultPlan::new(group, &d, n)?;
-            let backward = MultPlan::new(group, &d.transpose(), n)?;
+            let forward = cache.get_or_build(group, &d, n)?;
+            let backward = cache.get_or_build(group, &d.transpose(), n)?;
             let adjoint_sign = super::linear::transpose_sign(group, &d, n);
             let weights = (0..c_out * c_in).map(|_| scale * rng.gaussian()).collect();
             terms.push(ChannelTerm {
@@ -79,7 +82,7 @@ impl ChannelEquivariantLinear {
         let bias_diagrams = spanning_diagrams(group, n, 0, l)?;
         let mut bias_terms = Vec::with_capacity(bias_diagrams.len());
         for d in bias_diagrams {
-            let plan = MultPlan::new(group, &d, n)?;
+            let plan = cache.get_or_build(group, &d, n)?;
             bias_terms.push((plan, vec![0.0; c_out]));
         }
         Ok(ChannelEquivariantLinear {

@@ -4,9 +4,12 @@ use crate::diagram::{
     all_brauer_diagrams, all_jellyfish_diagrams, all_partition_diagrams, Diagram,
 };
 use crate::error::{Error, Result};
-use crate::fastmult::{Group, MultPlan};
+use crate::fastmult::plan::is_identity;
+use crate::fastmult::{Group, MultPlan, PlanCache};
 use crate::tensor::Tensor;
+use crate::util::parallel::{max_threads, parallel_map};
 use crate::util::Rng;
+use std::sync::Arc;
 
 /// Weight initialisation schemes for the diagram coefficients.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -35,12 +38,14 @@ pub fn transpose_sign(group: Group, d: &Diagram, n: usize) -> f64 {
 }
 
 /// One spanning term: the diagram, its forward plan, its transposed plan
-/// and the adjoint sign.
+/// and the adjoint sign. Plans come from the global [`PlanCache`], so two
+/// layers (or model replicas) over the same spanning set share the factored
+/// form instead of re-running `Factor`.
 #[derive(Debug, Clone)]
 struct Term {
     diagram: Diagram,
-    forward: MultPlan,
-    backward: MultPlan,
+    forward: Arc<MultPlan>,
+    backward: Arc<MultPlan>,
     adjoint_sign: f64,
 }
 
@@ -55,6 +60,11 @@ pub struct EquivariantLinear {
     l: usize,
     terms: Vec<Term>,
     bias_terms: Vec<Term>,
+    /// Weight-term indices grouped by shared input permutation `σ_k`
+    /// (`(perm_in, term indices)` pairs). The batched forward permutes the
+    /// input once per distinct `σ_k` — at most `k!` permutes per item
+    /// instead of one per spanning term.
+    perm_groups: Vec<(Vec<usize>, Vec<usize>)>,
     /// Learnable coefficient per weight diagram.
     pub coeffs: Vec<f64>,
     /// Learnable coefficient per bias diagram.
@@ -100,12 +110,13 @@ impl EquivariantLinear {
     ) -> Result<Self> {
         let weight_diagrams = spanning_diagrams(group, n, k, l)?;
         let bias_diagrams = spanning_diagrams(group, n, 0, l)?;
+        let cache = PlanCache::global();
         let make_terms = |ds: Vec<Diagram>| -> Result<Vec<Term>> {
             ds.into_iter()
                 .map(|d| {
-                    let forward = MultPlan::new(group, &d, n)?;
+                    let forward = cache.get_or_build(group, &d, n)?;
                     let dt = d.transpose();
-                    let backward = MultPlan::new(group, &dt, n)?;
+                    let backward = cache.get_or_build(group, &dt, n)?;
                     let adjoint_sign = transpose_sign(group, &d, n);
                     Ok(Term {
                         diagram: d,
@@ -118,6 +129,14 @@ impl EquivariantLinear {
         };
         let terms = make_terms(weight_diagrams)?;
         let bias_terms = make_terms(bias_diagrams)?;
+        let mut perm_groups: Vec<(Vec<usize>, Vec<usize>)> = Vec::new();
+        for (i, term) in terms.iter().enumerate() {
+            let p = term.forward.perm_in();
+            match perm_groups.iter_mut().find(|(perm, _)| perm.as_slice() == p) {
+                Some((_, idxs)) => idxs.push(i),
+                None => perm_groups.push((p.to_vec(), vec![i])),
+            }
+        }
         let draw = |count: usize, rng: &mut Rng| -> Vec<f64> {
             match init {
                 Init::Zeros => vec![0.0; count],
@@ -137,6 +156,7 @@ impl EquivariantLinear {
             l,
             terms,
             bias_terms,
+            perm_groups,
             coeffs,
             bias_coeffs,
         })
@@ -170,6 +190,10 @@ impl EquivariantLinear {
     /// Forward pass: `W v + bias` via the fast algorithm, one spanning term
     /// at a time (the linearity + parallelism observation of §5).
     pub fn forward(&self, v: &Tensor) -> Result<Tensor> {
+        // Check the input up front (not per-term): a zero-initialised layer
+        // skips every term, and the batched path must agree with this one
+        // on malformed input.
+        self.check_input(v)?;
         let mut out = Tensor::zeros(self.n, self.l);
         for (term, &lambda) in self.terms.iter().zip(&self.coeffs) {
             if lambda == 0.0 {
@@ -187,6 +211,168 @@ impl EquivariantLinear {
             }
         }
         Ok(out)
+    }
+
+    /// Batched forward pass: apply the layer to every input, parallelised
+    /// across batch items with scoped threads and amortising the shared
+    /// structure across items — the bias tensor is materialised once per
+    /// batch, and each item permutes its input once per distinct `σ_k`
+    /// (see [`MultPlan::apply_accumulate_permuted`]) instead of once per
+    /// spanning term.
+    ///
+    /// Matches per-item [`EquivariantLinear::forward`] to rounding error
+    /// (≤ 1e-9 in the property tests), **not** bit-exactly: the
+    /// permutation grouping and batch-shared bias change the accumulation
+    /// order of the same terms.
+    pub fn forward_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.forward_batch_refs(&refs)
+    }
+
+    /// [`EquivariantLinear::forward_batch`] over borrowed inputs (the
+    /// coordinator batches tensors it does not own contiguously).
+    pub fn forward_batch_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let bias = self.batch_bias()?;
+        let workers = max_threads();
+        // Single item: parallelise across diagram terms instead, clamping
+        // the fan-out so every worker gets at least two terms.
+        let term_workers = workers.min(self.terms.len() / 2);
+        if inputs.len() == 1 && term_workers > 1 {
+            let mut out = self.forward_terms_parallel(inputs[0], term_workers)?;
+            if let Some(b) = &bias {
+                out.axpy(1.0, b);
+            }
+            return Ok(vec![out]);
+        }
+        let results = parallel_map(inputs, workers, |v| -> Result<Tensor> {
+            let mut out = self.forward_weights_grouped(v)?;
+            if let Some(b) = &bias {
+                out.axpy(1.0, b);
+            }
+            Ok(out)
+        });
+        results.into_iter().collect()
+    }
+
+    /// Batched backward pass over `(input, upstream gradient)` pairs,
+    /// parallelised across items; parameter gradients are accumulated into
+    /// `grads` (summed over the batch, matching repeated
+    /// [`EquivariantLinear::backward`] calls) and the per-item input
+    /// gradients are returned in order.
+    pub fn backward_batch(
+        &self,
+        inputs: &[Tensor],
+        grad_outs: &[Tensor],
+        grads: &mut LayerGrads,
+    ) -> Result<Vec<Tensor>> {
+        if inputs.len() != grad_outs.len() {
+            return Err(Error::ShapeMismatch {
+                expected: format!("{} upstream gradients", inputs.len()),
+                got: format!("{}", grad_outs.len()),
+            });
+        }
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let pairs: Vec<(&Tensor, &Tensor)> = inputs.iter().zip(grad_outs).collect();
+        let workers = max_threads().min(pairs.len());
+        let per_item = parallel_map(&pairs, workers, |&(v, g)| -> Result<(Tensor, LayerGrads)> {
+            let mut local = self.zero_grads();
+            let grad_v = self.backward(v, g, &mut local)?;
+            Ok((grad_v, local))
+        });
+        let mut out = Vec::with_capacity(inputs.len());
+        for item in per_item {
+            let (grad_v, local) = item?;
+            for (a, b) in grads.coeffs.iter_mut().zip(&local.coeffs) {
+                *a += b;
+            }
+            for (a, b) in grads.bias_coeffs.iter_mut().zip(&local.bias_coeffs) {
+                *a += b;
+            }
+            out.push(grad_v);
+        }
+        Ok(out)
+    }
+
+    /// Shape guard shared by the per-item and batched forward paths.
+    fn check_input(&self, v: &Tensor) -> Result<()> {
+        if v.order != self.k || v.n != self.n {
+            return Err(Error::ShapeMismatch {
+                expected: format!("order {} tensor over R^{}", self.k, self.n),
+                got: format!("order {} over R^{}", v.order, v.n),
+            });
+        }
+        Ok(())
+    }
+
+    /// Weight part of the forward pass with the input permuted once per
+    /// distinct `σ_k` (no bias).
+    fn forward_weights_grouped(&self, v: &Tensor) -> Result<Tensor> {
+        self.check_input(v)?;
+        let mut out = Tensor::zeros(self.n, self.l);
+        for (perm, idxs) in &self.perm_groups {
+            if idxs.iter().all(|&i| self.coeffs[i] == 0.0) {
+                continue;
+            }
+            let vp_owned;
+            let vp: &Tensor = if is_identity(perm) {
+                v
+            } else {
+                vp_owned = v.permute_axes(perm);
+                &vp_owned
+            };
+            for &i in idxs {
+                let lambda = self.coeffs[i];
+                if lambda == 0.0 {
+                    continue;
+                }
+                self.terms[i]
+                    .forward
+                    .apply_accumulate_permuted(vp, lambda, &mut out)?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Weight part of the forward pass split across `workers` threads by
+    /// contiguous term ranges (the §5 parallelism-across-terms observation);
+    /// partial sums are reduced on the calling thread.
+    fn forward_terms_parallel(&self, v: &Tensor, workers: usize) -> Result<Tensor> {
+        self.check_input(v)?;
+        let idxs: Vec<usize> = (0..self.terms.len()).collect();
+        let chunk = idxs.len().div_ceil(workers.max(1)).max(1);
+        let ranges: Vec<&[usize]> = idxs.chunks(chunk).collect();
+        let partials = parallel_map(&ranges, ranges.len(), |range| -> Result<Tensor> {
+            let mut partial = Tensor::zeros(self.n, self.l);
+            for &i in *range {
+                let lambda = self.coeffs[i];
+                if lambda == 0.0 {
+                    continue;
+                }
+                self.terms[i]
+                    .forward
+                    .apply_accumulate(v, lambda, &mut partial)?;
+            }
+            Ok(partial)
+        });
+        let mut out = Tensor::zeros(self.n, self.l);
+        for p in partials {
+            out.axpy(1.0, &p?);
+        }
+        Ok(out)
+    }
+
+    /// The batch-shared bias tensor `Σ μ_b F(b)(1)`, or `None` when the
+    /// layer has no active bias term.
+    fn batch_bias(&self) -> Result<Option<Tensor>> {
+        if self.bias_terms.is_empty() || self.bias_coeffs.iter().all(|&m| m == 0.0) {
+            return Ok(None);
+        }
+        Ok(Some(self.materialize_bias()?))
     }
 
     /// Backward pass. Given the upstream gradient `g = ∂L/∂out`, returns
@@ -410,6 +596,107 @@ mod tests {
                 "input {f}: fd {fd} vs {0}",
                 grad_v.data[f]
             );
+        }
+    }
+
+    #[test]
+    fn forward_batch_matches_per_item_forward() {
+        let mut rng = Rng::new(77);
+        for group in [
+            Group::Symmetric,
+            Group::Orthogonal,
+            Group::SpecialOrthogonal,
+            Group::Symplectic,
+        ] {
+            let n = if group == Group::Symplectic { 4 } else { 3 };
+            let layer =
+                EquivariantLinear::new(group, n, 2, 2, Init::Normal(0.5), &mut rng).unwrap();
+            let inputs: Vec<Tensor> = (0..7).map(|_| Tensor::random(n, 2, &mut rng)).collect();
+            let batched = layer.forward_batch(&inputs).unwrap();
+            assert_eq!(batched.len(), inputs.len());
+            for (v, b) in inputs.iter().zip(&batched) {
+                let seq = layer.forward(v).unwrap();
+                assert!(
+                    seq.allclose(b, 1e-9),
+                    "group {group}: batch diverges by {}",
+                    seq.max_abs_diff(b)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_single_item_uses_term_parallel_path() {
+        let mut rng = Rng::new(78);
+        let layer =
+            EquivariantLinear::new(Group::Symmetric, 3, 2, 2, Init::Normal(0.5), &mut rng)
+                .unwrap();
+        let v = Tensor::random(3, 2, &mut rng);
+        let batched = layer.forward_batch(std::slice::from_ref(&v)).unwrap();
+        let seq = layer.forward(&v).unwrap();
+        assert_eq!(batched.len(), 1);
+        assert!(seq.allclose(&batched[0], 1e-9));
+    }
+
+    #[test]
+    fn forward_batch_empty_and_bad_shapes() {
+        let mut rng = Rng::new(79);
+        let layer =
+            EquivariantLinear::new(Group::Symmetric, 3, 2, 2, Init::Normal(0.5), &mut rng)
+                .unwrap();
+        assert!(layer.forward_batch(&[]).unwrap().is_empty());
+        let bad = vec![Tensor::zeros(3, 1)];
+        assert!(layer.forward_batch(&bad).is_err());
+    }
+
+    #[test]
+    fn backward_batch_matches_sequential_backward() {
+        let mut rng = Rng::new(80);
+        let layer =
+            EquivariantLinear::new(Group::Symmetric, 2, 2, 1, Init::Normal(0.4), &mut rng)
+                .unwrap();
+        let inputs: Vec<Tensor> = (0..5).map(|_| Tensor::random(2, 2, &mut rng)).collect();
+        let gs: Vec<Tensor> = (0..5).map(|_| Tensor::random(2, 1, &mut rng)).collect();
+        // Sequential reference.
+        let mut want_grads = layer.zero_grads();
+        let mut want_gv = Vec::new();
+        for (v, g) in inputs.iter().zip(&gs) {
+            want_gv.push(layer.backward(v, g, &mut want_grads).unwrap());
+        }
+        // Batched.
+        let mut got_grads = layer.zero_grads();
+        let got_gv = layer.backward_batch(&inputs, &gs, &mut got_grads).unwrap();
+        for (a, b) in want_gv.iter().zip(&got_gv) {
+            assert!(a.allclose(b, 1e-9));
+        }
+        for (a, b) in want_grads.coeffs.iter().zip(&got_grads.coeffs) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        for (a, b) in want_grads.bias_coeffs.iter().zip(&got_grads.bias_coeffs) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        // Length mismatch is rejected.
+        assert!(layer
+            .backward_batch(&inputs, &gs[..3], &mut layer.zero_grads())
+            .is_err());
+    }
+
+    #[test]
+    fn layers_share_plans_through_the_global_cache() {
+        // Two layers over the same spanning set must hold the *same*
+        // factored plans (checked by Arc identity — immune to the counter
+        // races other tests cause on the shared global cache).
+        let mut rng = Rng::new(81);
+        let a = EquivariantLinear::new(Group::Symmetric, 5, 2, 2, Init::Zeros, &mut rng).unwrap();
+        let b = EquivariantLinear::new(Group::Symmetric, 5, 2, 2, Init::Zeros, &mut rng).unwrap();
+        assert_eq!(a.terms.len(), b.terms.len());
+        for (ta, tb) in a.terms.iter().zip(&b.terms) {
+            assert!(
+                Arc::ptr_eq(&ta.forward, &tb.forward),
+                "forward plan for {} was re-factored",
+                ta.diagram
+            );
+            assert!(Arc::ptr_eq(&ta.backward, &tb.backward));
         }
     }
 

@@ -23,6 +23,7 @@ use equidiag::nn::{train, Adam, EquivariantNet, Optimizer, Sgd, TrainConfig};
 use equidiag::runtime::{HloService, PjrtRuntime};
 use equidiag::tensor::Tensor;
 use equidiag::util::{bench_median, Rng, Table};
+use equidiag::Result;
 use std::collections::HashMap;
 use std::time::Duration;
 
@@ -90,7 +91,7 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     m
 }
 
-fn load_config(flags: &HashMap<String, String>) -> anyhow::Result<AppConfig> {
+fn load_config(flags: &HashMap<String, String>) -> Result<AppConfig> {
     match flags.get("config") {
         Some(path) => Ok(AppConfig::from_file(path)?),
         None => Ok(AppConfig::default()),
@@ -103,7 +104,7 @@ fn flag_usize(flags: &HashMap<String, String>, key: &str) -> Option<usize> {
 
 /// Train an equivariant network on the built-in synthetic regression task
 /// (an invariant contraction target — see `synthetic_target`).
-fn cmd_train(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     let mut cfg = load_config(flags)?;
     if let Some(steps) = flag_usize(flags, "steps") {
         cfg.training.steps = steps;
@@ -184,7 +185,7 @@ fn synthetic_target(x: &Tensor, lout: usize) -> Tensor {
 
 /// Serve the configured network (and optionally an HLO artifact) through
 /// the coordinator; drive it with a synthetic client and print metrics.
-fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = load_config(flags)?;
     let net_cfg = &cfg.network;
     let mut rng = Rng::new(net_cfg.seed);
@@ -234,12 +235,20 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         snap.mean_latency_s * 1e6,
         snap.max_latency_s * 1e6
     );
+    println!(
+        "batch execs {}  mean batch exec {:.1} us  plan cache {:.1}% hit ({} hits / {} misses)",
+        snap.batch_execs,
+        snap.mean_batch_exec_s * 1e6,
+        snap.plan_cache_hit_rate * 100.0,
+        snap.plan_cache_hits,
+        snap.plan_cache_misses
+    );
     handle.shutdown();
     Ok(())
 }
 
 /// Quick fast-vs-naïve comparison at one (group, n, k, l).
-fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = load_config(flags)?;
     let group = match flags.get("group") {
         Some(g) => Group::parse(g)?,
@@ -280,7 +289,7 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 }
 
 /// Print spanning-set sizes (Theorems 5/7/9/11) for a layer shape.
-fn cmd_basis(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_basis(flags: &HashMap<String, String>) -> Result<()> {
     let group = match flags.get("group") {
         Some(g) => Group::parse(g)?,
         None => Group::Symmetric,
@@ -308,13 +317,15 @@ fn cmd_basis(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> anyhow::Result<()> {
+fn cmd_info() -> Result<()> {
     println!(
         "equidiag {} — Pearce-Crump & Knottenbelt (2024) reproduction",
         env!("CARGO_PKG_VERSION")
     );
-    let rt = PjrtRuntime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
+    match PjrtRuntime::cpu() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT platform: unavailable ({e})"),
+    }
     println!("groups: S_n, O(n), SO(n), Sp(n)");
     println!(
         "complexities: naive O(n^(l+k)); fast O(n^k) [S_n], O(n^(k-1)) [O(n), Sp(n)], \

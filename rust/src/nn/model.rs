@@ -1,11 +1,12 @@
 //! Sequential equivariant network: alternating equivariant linear layers
 //! and pointwise activations, with manual reverse-mode differentiation.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::fastmult::Group;
 use crate::layer::{EquivariantLinear, Init, LayerGrads};
 use crate::nn::activation::Activation;
 use crate::tensor::Tensor;
+use crate::util::parallel::{max_threads, parallel_map};
 use crate::util::Rng;
 
 /// A stack of equivariant linear layers with activations between them.
@@ -109,6 +110,50 @@ impl EquivariantNet {
         Ok(x)
     }
 
+    /// Batched forward pass: run the whole batch through the network layer
+    /// by layer, each layer using its batched path
+    /// ([`EquivariantLinear::forward_batch_refs`]) — parallel across batch
+    /// items, with the per-layer bias and input-permutation work amortised
+    /// across the batch. Output order matches input order.
+    pub fn forward_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.forward_batch_refs(&refs)
+    }
+
+    /// [`EquivariantNet::forward_batch`] over borrowed inputs.
+    pub fn forward_batch_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut xs: Vec<Tensor> = {
+            let pre = self.layers[0].forward_batch_refs(inputs)?;
+            pre.iter().map(|t| self.activations[0].forward(t)).collect()
+        };
+        for (layer, act) in self.layers.iter().zip(&self.activations).skip(1) {
+            let refs: Vec<&Tensor> = xs.iter().collect();
+            let pre = layer.forward_batch_refs(&refs)?;
+            xs = pre.iter().map(|t| act.forward(t)).collect();
+        }
+        Ok(xs)
+    }
+
+    /// Per-item batched inference for the serving path: one `Result` per
+    /// input, in order. The fast uniform path handles the whole batch at
+    /// once; if any item is malformed the batch falls back to per-item
+    /// forwards (still parallel) so one bad request cannot fail its
+    /// neighbours.
+    pub fn forward_batch_results(&self, inputs: &[&Tensor]) -> Vec<Result<Tensor>> {
+        let uniform = inputs
+            .windows(2)
+            .all(|w| w[0].order == w[1].order && w[0].n == w[1].n);
+        if uniform {
+            if let Ok(outs) = self.forward_batch_refs(inputs) {
+                return outs.into_iter().map(Ok).collect();
+            }
+        }
+        parallel_map(inputs, max_threads(), |v| self.forward(v))
+    }
+
     /// Forward pass retaining intermediates for backprop: returns
     /// `(per-layer (input, pre-activation), output)`.
     pub fn forward_trace(&self, v: &Tensor) -> Result<(Vec<(Tensor, Tensor)>, Tensor)> {
@@ -141,6 +186,54 @@ impl EquivariantNet {
             g = self.layers[i].backward(input, &g, &mut grads.layers[i])?;
         }
         Ok((grads, g))
+    }
+
+    /// Batched [`EquivariantNet::forward_trace`]: traces for a whole batch,
+    /// computed in parallel across items.
+    #[allow(clippy::type_complexity)]
+    pub fn forward_trace_batch(
+        &self,
+        inputs: &[Tensor],
+    ) -> Result<Vec<(Vec<(Tensor, Tensor)>, Tensor)>> {
+        let workers = max_threads().min(inputs.len());
+        parallel_map(inputs, workers, |v| self.forward_trace(v))
+            .into_iter()
+            .collect()
+    }
+
+    /// Batched backward pass: one trace and output-gradient per batch item.
+    /// Parameter gradients are **summed** over the batch (matching repeated
+    /// [`EquivariantNet::backward`] + [`NetGrads::add`]); the per-item
+    /// input gradients are returned in order. Parallel across items.
+    #[allow(clippy::type_complexity)]
+    pub fn backward_batch(
+        &self,
+        traces: &[Vec<(Tensor, Tensor)>],
+        grad_outs: &[Tensor],
+    ) -> Result<(NetGrads, Vec<Tensor>)> {
+        if traces.len() != grad_outs.len() {
+            return Err(Error::ShapeMismatch {
+                expected: format!("{} output gradients", traces.len()),
+                got: format!("{}", grad_outs.len()),
+            });
+        }
+        let mut total = NetGrads {
+            layers: self.layers.iter().map(|l| l.zero_grads()).collect(),
+        };
+        if traces.is_empty() {
+            return Ok((total, Vec::new()));
+        }
+        let pairs: Vec<(&Vec<(Tensor, Tensor)>, &Tensor)> =
+            traces.iter().zip(grad_outs).collect();
+        let workers = max_threads().min(pairs.len());
+        let per_item = parallel_map(&pairs, workers, |&(trace, g)| self.backward(trace, g));
+        let mut grad_inputs = Vec::with_capacity(traces.len());
+        for item in per_item {
+            let (grads, gv) = item?;
+            total.add(&grads);
+            grad_inputs.push(gv);
+        }
+        Ok((total, grad_inputs))
     }
 
     /// Flatten parameters into one vector (for the optimisers).
@@ -280,6 +373,98 @@ mod tests {
                 flat_g[i]
             );
         }
+    }
+
+    #[test]
+    fn forward_batch_matches_per_item() {
+        let mut rng = Rng::new(206);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 2, 1],
+            Activation::Relu,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let inputs: Vec<Tensor> = (0..9).map(|_| Tensor::random(3, 2, &mut rng)).collect();
+        let batched = net.forward_batch(&inputs).unwrap();
+        assert_eq!(batched.len(), 9);
+        for (v, b) in inputs.iter().zip(&batched) {
+            let want = net.forward(v).unwrap();
+            assert!(want.allclose(b, 1e-9), "diff {}", want.max_abs_diff(b));
+        }
+        assert!(net.forward_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn forward_batch_results_isolates_bad_items() {
+        let mut rng = Rng::new(207);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 2],
+            Activation::Relu,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let good = Tensor::random(3, 2, &mut rng);
+        let bad = Tensor::zeros(3, 1); // wrong order
+        let results = net.forward_batch_results(&[&good, &bad, &good]);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+        assert!(results[2].is_ok());
+        let want = net.forward(&good).unwrap();
+        assert!(results[0].as_ref().unwrap().allclose(&want, 1e-9));
+    }
+
+    #[test]
+    fn backward_batch_matches_sequential() {
+        let mut rng = Rng::new(208);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            2,
+            &[2, 1, 0],
+            Activation::Tanh,
+            Init::Normal(0.5),
+            &mut rng,
+        )
+        .unwrap();
+        let inputs: Vec<Tensor> = (0..6).map(|_| Tensor::random(2, 2, &mut rng)).collect();
+        let traced = net.forward_trace_batch(&inputs).unwrap();
+        let gouts: Vec<Tensor> = traced
+            .iter()
+            .map(|(_, out)| out.clone()) // dL/dout = out for L = ||out||²/2
+            .collect();
+        // Sequential reference.
+        let mut want = NetGrads {
+            layers: net.layers.iter().map(|l| l.zero_grads()).collect(),
+        };
+        let mut want_gv = Vec::new();
+        for (v, g) in inputs.iter().zip(&gouts) {
+            let (trace, _) = net.forward_trace(v).unwrap();
+            let (grads, gv) = net.backward(&trace, g).unwrap();
+            want.add(&grads);
+            want_gv.push(gv);
+        }
+        // Batched.
+        let traces: Vec<Vec<(Tensor, Tensor)>> =
+            traced.into_iter().map(|(trace, _)| trace).collect();
+        let (got, got_gv) = net.backward_batch(&traces, &gouts).unwrap();
+        for (lw, lg) in want.layers.iter().zip(&got.layers) {
+            for (a, b) in lw.coeffs.iter().zip(&lg.coeffs) {
+                assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+            }
+            for (a, b) in lw.bias_coeffs.iter().zip(&lg.bias_coeffs) {
+                assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+            }
+        }
+        for (a, b) in want_gv.iter().zip(&got_gv) {
+            assert!(a.allclose(b, 1e-9));
+        }
+        // Length mismatch is rejected.
+        assert!(net.backward_batch(&traces, &gouts[..2]).is_err());
     }
 
     #[test]

@@ -1,0 +1,137 @@
+//! Scoped-thread fan-out helper (rayon substitute, see DESIGN.md §3).
+//!
+//! The batched layer/model/coordinator paths are embarrassingly parallel
+//! across batch items and across diagram terms; [`parallel_map`] is the one
+//! primitive they all share. It slices the input into contiguous chunks,
+//! runs each chunk on a `std::thread::scope` worker and preserves input
+//! order in the output — no work queue, no dependencies, deterministic
+//! results.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide cap on per-call fan-out (`0` = uncapped). Set by the
+/// coordinator so that N serving workers each fanning out batches do not
+/// oversubscribe the machine N-fold.
+static THREAD_BUDGET: AtomicUsize = AtomicUsize::new(0);
+
+/// Cap [`max_threads`] at `budget` threads per `parallel_map` call
+/// (`0` removes the cap). The coordinator sets this to
+/// `available_parallelism / workers` on start so nested parallelism
+/// (worker threads × per-batch fan-out) stays at one thread per core,
+/// and restores the prior value (see [`thread_budget`]) on shutdown.
+pub fn set_thread_budget(budget: usize) {
+    THREAD_BUDGET.store(budget, Ordering::Relaxed);
+}
+
+/// The current fan-out cap (`0` = uncapped) — read it before
+/// [`set_thread_budget`] to restore it afterwards.
+pub fn thread_budget() -> usize {
+    THREAD_BUDGET.load(Ordering::Relaxed)
+}
+
+/// Number of worker threads worth spawning per fan-out on this machine:
+/// the hardware parallelism, capped by [`set_thread_budget`].
+pub fn max_threads() -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(std::num::NonZeroUsize::get)
+        .unwrap_or(1);
+    match THREAD_BUDGET.load(Ordering::Relaxed) {
+        0 => hw,
+        budget => hw.min(budget),
+    }
+}
+
+/// Apply `f` to every item of `items`, fanning contiguous chunks out over
+/// up to `threads` scoped worker threads. Output order matches input order.
+///
+/// With `threads <= 1` (or one item) this degenerates to a plain
+/// sequential map with zero overhead, so callers can pass
+/// `max_threads().min(items.len())` unconditionally.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.min(items.len());
+    if threads <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(items.len());
+    slots.resize_with(items.len(), || None);
+    let chunk = items.len().div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        let mut chunks = items.chunks(chunk).zip(slots.chunks_mut(chunk));
+        // The calling thread is a worker too: it takes the first chunk
+        // itself, so `threads` workers cost only `threads - 1` spawns (and
+        // a nested caller — e.g. a coordinator worker — never goes fully
+        // idle while its helpers run).
+        let own = chunks.next();
+        for (in_chunk, out_chunk) in chunks {
+            s.spawn(move || {
+                for (item, slot) in in_chunk.iter().zip(out_chunk.iter_mut()) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+        if let Some((in_chunk, out_chunk)) = own {
+            for (item, slot) in in_chunk.iter().zip(out_chunk.iter_mut()) {
+                *slot = Some(f(item));
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("scoped worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..97).collect();
+        for threads in [1, 2, 3, 8, 200] {
+            let out = parallel_map(&items, threads, |&x| x * 2);
+            assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let none: Vec<u32> = Vec::new();
+        assert!(parallel_map(&none, 4, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[7u32], 4, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn visits_every_item_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |&x| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+        assert_eq!(out.len(), 1000);
+    }
+
+    #[test]
+    fn max_threads_is_positive() {
+        assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn thread_budget_caps_and_uncaps() {
+        // Note: the budget is process-global; restore 0 before exiting so
+        // concurrently-running tests are not capped afterwards.
+        set_thread_budget(1);
+        assert_eq!(max_threads(), 1);
+        set_thread_budget(0);
+        assert!(max_threads() >= 1);
+    }
+}

@@ -1,0 +1,181 @@
+//! The batched engine end to end: `forward_batch` must be indistinguishable
+//! (to 1e-9) from per-item `forward` for every group, at the layer, the
+//! network and the coordinator level.
+
+use equidiag::config::ServerConfig;
+use equidiag::coordinator::{Coordinator, ModelKind};
+use equidiag::fastmult::Group;
+use equidiag::layer::{EquivariantLinear, Init};
+use equidiag::nn::{Activation, EquivariantNet};
+use equidiag::tensor::Tensor;
+use equidiag::util::prop::{check, Config};
+use equidiag::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Property: for a random layer over a random group and a random batch,
+/// `forward_batch` matches per-item `forward` to 1e-9.
+#[test]
+fn prop_forward_batch_matches_forward_all_groups() {
+    check(
+        Config::default().cases(24).seed(0xBA7C4),
+        "forward_batch == per-item forward",
+        |rng| {
+            let group = match rng.below(4) {
+                0 => Group::Symmetric,
+                1 => Group::Orthogonal,
+                2 => Group::SpecialOrthogonal,
+                _ => Group::Symplectic,
+            };
+            let n = if group == Group::Symplectic {
+                2 * (1 + rng.below(2)) // 2 or 4
+            } else {
+                2 + rng.below(3) // 2..4
+            };
+            let k = 1 + rng.below(2); // 1..2
+            let l = 1 + rng.below(2);
+            let layer = EquivariantLinear::new(group, n, k, l, Init::Normal(0.5), rng)
+                .map_err(|e| e.to_string())?;
+            let batch = 1 + rng.below(9); // 1..9 — exercises both parallel paths
+            let inputs: Vec<Tensor> = (0..batch).map(|_| Tensor::random(n, k, rng)).collect();
+            let batched = layer.forward_batch(&inputs).map_err(|e| e.to_string())?;
+            if batched.len() != inputs.len() {
+                return Err(format!(
+                    "{} outputs for {} inputs",
+                    batched.len(),
+                    inputs.len()
+                ));
+            }
+            for (i, (v, b)) in inputs.iter().zip(&batched).enumerate() {
+                let want = layer.forward(v).map_err(|e| e.to_string())?;
+                if !want.allclose(b, 1e-9) {
+                    return Err(format!(
+                        "group {group} n={n} k={k} l={l} item {i}: diff {}",
+                        want.max_abs_diff(b)
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn net_batch_matches_forward_for_every_group() {
+    let mut rng = Rng::new(0xBEEF);
+    for group in Group::ALL {
+        let n = if group == Group::Symplectic { 4 } else { 3 };
+        let net = EquivariantNet::new(
+            group,
+            n,
+            &[2, 2],
+            Activation::Relu,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let inputs: Vec<Tensor> = (0..16).map(|_| Tensor::random(n, 2, &mut rng)).collect();
+        let batched = net.forward_batch(&inputs).unwrap();
+        for (v, b) in inputs.iter().zip(&batched) {
+            let want = net.forward(v).unwrap();
+            assert!(
+                want.allclose(b, 1e-9),
+                "group {group}: diff {}",
+                want.max_abs_diff(b)
+            );
+        }
+    }
+}
+
+#[test]
+fn coordinator_batched_path_serves_exact_results() {
+    let mut rng = Rng::new(0xC0DE);
+    let net = EquivariantNet::new(
+        Group::Symmetric,
+        4,
+        &[2, 2],
+        Activation::Relu,
+        Init::ScaledNormal,
+        &mut rng,
+    )
+    .unwrap();
+    let reference = net.clone();
+    // A wide window and deep batches so requests actually ride the batched
+    // worker path together.
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 2,
+        max_batch: 32,
+        batch_window: Duration::from_millis(2),
+        queue_capacity: 512,
+        ..ServerConfig::default()
+    });
+    coord.register("m", ModelKind::net(net));
+    let handle = Arc::new(coord.start());
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xD00D + t);
+            let mut pairs = Vec::new();
+            for _ in 0..25 {
+                let v = Tensor::random(4, 2, &mut rng);
+                let out = h.infer("m", v.clone()).unwrap();
+                pairs.push((v, out));
+            }
+            pairs
+        }));
+    }
+    for j in joins {
+        for (v, got) in j.join().unwrap() {
+            let want = reference.forward(&v).unwrap();
+            assert!(
+                want.allclose(&got, 1e-9),
+                "served result diverges by {}",
+                want.max_abs_diff(&got)
+            );
+        }
+    }
+    let snap = handle.metrics();
+    assert_eq!(snap.completed, 100);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.batch_execs >= 1);
+    match Arc::try_unwrap(handle) {
+        Ok(h) => h.shutdown(),
+        Err(_) => unreachable!(),
+    }
+}
+
+#[test]
+fn coordinator_batch_isolates_per_item_shape_errors() {
+    let mut rng = Rng::new(0xF00D);
+    let net = EquivariantNet::new(
+        Group::Symmetric,
+        3,
+        &[2, 2],
+        Activation::Relu,
+        Init::ScaledNormal,
+        &mut rng,
+    )
+    .unwrap();
+    let reference = net.clone();
+    let kind = ModelKind::net(net);
+    let good = Tensor::random(3, 2, &mut rng);
+    let wrong_n = Tensor::zeros(4, 2);
+    let wrong_order = Tensor::zeros(3, 1);
+    let results = kind.infer_batch(&[&good, &wrong_n, &good, &wrong_order]);
+    assert_eq!(results.len(), 4);
+    assert!(results[0].is_ok());
+    assert!(results[1].is_err(), "wrong n must fail");
+    assert!(results[2].is_ok());
+    assert!(results[3].is_err(), "wrong order must fail");
+    // And the good items still computed the right thing.
+    let want = reference.forward(&good).unwrap();
+    for i in [0usize, 2] {
+        let got = results[i].as_ref().unwrap();
+        assert!(
+            want.allclose(got, 1e-9),
+            "item {i} diverges by {}",
+            want.max_abs_diff(got)
+        );
+    }
+}

@@ -32,6 +32,7 @@ fn backpressure_rejects_when_queue_full() {
         max_batch: 1,
         batch_window: Duration::from_millis(50), // slow drain
         queue_capacity: 2,
+        ..ServerConfig::default()
     });
     coord.register("m", ModelKind::net(slow_net(&mut rng)));
     let handle = coord.start();
@@ -102,6 +103,7 @@ fn shutdown_under_load_completes_accepted_requests() {
         max_batch: 8,
         batch_window: Duration::from_micros(100),
         queue_capacity: 256,
+        ..ServerConfig::default()
     });
     coord.register("m", ModelKind::net(slow_net(&mut rng)));
     let handle = coord.start();
