@@ -1,7 +1,7 @@
 //! Serving metrics: counters, latency aggregates, per-batch execution
-//! latency and plan-cache effectiveness.
+//! latency, plan/schedule-cache effectiveness and scratch-arena health.
 
-use crate::fastmult::PlanCache;
+use crate::fastmult::{arena_stats, ops_shared_total, PlanCache};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -60,6 +60,20 @@ pub struct MetricsSnapshot {
     pub plan_cache_misses: u64,
     /// Fraction of plan lookups served from the cache.
     pub plan_cache_hit_rate: f64,
+    /// Compiled-schedule cache hits (one lookup per layer construction).
+    pub schedule_cache_hits: u64,
+    /// Compiled-schedule cache misses (schedule compilations).
+    pub schedule_cache_misses: u64,
+    /// Interior ops elided by schedule prefix sharing (per forward pass,
+    /// summed over every compiled schedule).
+    pub ops_shared: u64,
+    /// Scratch-arena buffers allocated fresh from the heap (stops growing
+    /// once serving reaches steady state — the zero-allocation invariant).
+    pub arena_allocations: u64,
+    /// Scratch-arena acquisitions served by recycling.
+    pub arena_reuses: u64,
+    /// High-water mark of `f64`s held by any single scratch arena.
+    pub arena_high_water_f64s: u64,
 }
 
 impl Metrics {
@@ -130,6 +144,7 @@ impl Metrics {
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batched_items.load(Ordering::Relaxed);
         let cache = PlanCache::global().stats();
+        let arena = arena_stats();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -149,6 +164,12 @@ impl Metrics {
             plan_cache_hits: cache.hits,
             plan_cache_misses: cache.misses,
             plan_cache_hit_rate: cache.hit_rate(),
+            schedule_cache_hits: cache.schedule_hits,
+            schedule_cache_misses: cache.schedule_misses,
+            ops_shared: ops_shared_total(),
+            arena_allocations: arena.allocations,
+            arena_reuses: arena.reuses,
+            arena_high_water_f64s: arena.high_water_f64s as u64,
         }
     }
 }
@@ -193,5 +214,20 @@ mod tests {
         assert!(s.plan_cache_misses >= 1, "miss not plumbed through");
         assert!(s.plan_cache_hits >= 1, "hit not plumbed through");
         assert!(s.plan_cache_hit_rate > 0.0 && s.plan_cache_hit_rate <= 1.0);
+        // Schedule and arena counters are plumbed from the fastmult
+        // globals; run one fused layer forward so they are non-trivial.
+        use crate::layer::{EquivariantLinear, Init};
+        use crate::tensor::Tensor;
+        use crate::util::Rng;
+        let mut rng = Rng::new(9);
+        let layer =
+            EquivariantLinear::new(Group::Symmetric, 3, 2, 2, Init::Normal(0.5), &mut rng)
+                .unwrap();
+        layer.forward(&Tensor::random(3, 2, &mut rng)).unwrap();
+        let s = m.snapshot();
+        assert!(s.schedule_cache_misses >= 1, "schedule compile not counted");
+        assert!(s.ops_shared > 0, "prefix sharing not plumbed through");
+        assert!(s.arena_allocations >= 1, "arena counters not plumbed");
+        assert!(s.arena_high_water_f64s >= 1);
     }
 }

@@ -16,6 +16,7 @@
 //! - counters: hits / misses / evictions, surfaced through
 //!   [`PlanCache::stats`] and the coordinator's metrics snapshot.
 
+use super::schedule::LayerSchedule;
 use super::{Group, MultPlan};
 use crate::diagram::Diagram;
 use crate::error::Result;
@@ -53,14 +54,33 @@ struct Inner {
     tick: u64,
 }
 
-/// Thread-safe, bounded, LRU-evicting cache of pre-factored plans.
+/// Key for one compiled [`LayerSchedule`]: the spanning set (and its
+/// enumeration order) is fully determined by `(group, n, k, l)`, with
+/// `transposed` distinguishing the backward schedule (compiled from the
+/// term-wise transposed plans, which is *not* the same ordering as the
+/// forward schedule of the mirrored shape).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct ScheduleKey {
+    group: Group,
+    n: usize,
+    k: usize,
+    l: usize,
+    transposed: bool,
+}
+
+/// Thread-safe, bounded, LRU-evicting cache of pre-factored plans, plus an
+/// (unbounded — there is one entry per distinct layer shape) cache of
+/// compiled [`LayerSchedule`]s.
 #[derive(Debug)]
 pub struct PlanCache {
     inner: Mutex<Inner>,
+    schedules: Mutex<HashMap<ScheduleKey, Arc<LayerSchedule>>>,
     capacity: AtomicUsize,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    schedule_hits: AtomicU64,
+    schedule_misses: AtomicU64,
 }
 
 /// Point-in-time counters for one [`PlanCache`].
@@ -76,6 +96,12 @@ pub struct CacheStats {
     pub entries: usize,
     /// Current capacity (`0` = unbounded).
     pub capacity: usize,
+    /// Schedule lookups served from the cache.
+    pub schedule_hits: u64,
+    /// Schedule lookups that had to compile.
+    pub schedule_misses: u64,
+    /// Compiled schedules currently held.
+    pub schedule_entries: usize,
 }
 
 impl CacheStats {
@@ -97,10 +123,13 @@ impl PlanCache {
     pub fn with_capacity(capacity: usize) -> Self {
         PlanCache {
             inner: Mutex::new(Inner::default()),
+            schedules: Mutex::new(HashMap::new()),
             capacity: AtomicUsize::new(capacity),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            schedule_hits: AtomicU64::new(0),
+            schedule_misses: AtomicU64::new(0),
         }
     }
 
@@ -185,20 +214,65 @@ impl PlanCache {
         }
     }
 
-    /// Drop every cached plan (counters are preserved).
+    /// Look up (or compile and insert) the [`LayerSchedule`] for a layer
+    /// shape. `plans` must be the spanning plans for `(group, n, k, l)` in
+    /// enumeration order — or, with `transposed`, their term-wise
+    /// transposes (mapping order `l` back to order `k`). Both are fully
+    /// determined by the key, which is what makes the cache sound: every
+    /// caller with the same key passes an identical plan list.
+    pub fn get_or_build_schedule(
+        &self,
+        group: Group,
+        n: usize,
+        k: usize,
+        l: usize,
+        transposed: bool,
+        plans: &[Arc<MultPlan>],
+    ) -> Result<Arc<LayerSchedule>> {
+        let key = ScheduleKey {
+            group,
+            n,
+            k,
+            l,
+            transposed,
+        };
+        if let Some(s) = self.schedules.lock().unwrap().get(&key) {
+            self.schedule_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(s.clone());
+        }
+        self.schedule_misses.fetch_add(1, Ordering::Relaxed);
+        // Compile outside the lock (mirrors `get_or_build`); a racing
+        // compile of the same key keeps the first insert.
+        let (ck, cl) = if transposed { (l, k) } else { (k, l) };
+        let compiled = Arc::new(LayerSchedule::compile(group, n, ck, cl, plans)?);
+        Ok(self
+            .schedules
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert(compiled)
+            .clone())
+    }
+
+    /// Drop every cached plan and schedule (counters are preserved).
     pub fn clear(&self) {
         self.inner.lock().unwrap().map.clear();
+        self.schedules.lock().unwrap().clear();
     }
 
     /// Current counters.
     pub fn stats(&self) -> CacheStats {
         let entries = self.inner.lock().unwrap().map.len();
+        let schedule_entries = self.schedules.lock().unwrap().len();
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             entries,
             capacity: self.capacity(),
+            schedule_hits: self.schedule_hits.load(Ordering::Relaxed),
+            schedule_misses: self.schedule_misses.load(Ordering::Relaxed),
+            schedule_entries,
         }
     }
 }
@@ -287,6 +361,40 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.entries, 1);
         assert_eq!(s.evictions, 3);
+    }
+
+    #[test]
+    fn schedule_cache_hits_and_keys() {
+        use crate::layer::spanning_plans;
+        let cache = PlanCache::with_capacity(64);
+        let plans = spanning_plans(Group::Orthogonal, 3, 2, 2).unwrap();
+        let a = cache
+            .get_or_build_schedule(Group::Orthogonal, 3, 2, 2, false, &plans)
+            .unwrap();
+        let b = cache
+            .get_or_build_schedule(Group::Orthogonal, 3, 2, 2, false, &plans)
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the cached schedule");
+        let s = cache.stats();
+        assert_eq!(
+            (s.schedule_hits, s.schedule_misses, s.schedule_entries),
+            (1, 1, 1)
+        );
+        // The transposed flag keys a distinct entry (here k == l, so the
+        // same plan list passes the compile-time shape check).
+        let t = cache
+            .get_or_build_schedule(Group::Orthogonal, 3, 2, 2, true, &plans)
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a, &t));
+        // A different shape keys a third entry.
+        let plans2 = spanning_plans(Group::Orthogonal, 3, 1, 1).unwrap();
+        cache
+            .get_or_build_schedule(Group::Orthogonal, 3, 1, 1, false, &plans2)
+            .unwrap();
+        assert_eq!(cache.stats().schedule_entries, 3);
+        cache.clear();
+        assert_eq!(cache.stats().schedule_entries, 0);
+        assert_eq!(cache.stats().entries, 0);
     }
 
     #[test]

@@ -16,12 +16,17 @@
 pub mod cache;
 pub mod on;
 pub mod plan;
+pub mod schedule;
 pub mod sn;
 pub mod so;
 pub mod sp;
 
 pub use cache::{CacheStats, PlanCache};
 pub use plan::{factor_runs, MultPlan};
+pub use schedule::{
+    arena_stats, clear_arena_pool, ops_shared_total, ArenaStats, LayerSchedule, PooledArena,
+    ScheduleStats, ScratchArena,
+};
 
 use crate::diagram::Diagram;
 use crate::error::{Error, Result};

@@ -111,6 +111,23 @@ impl MultPlan {
         self.group
     }
 
+    /// The factored form `σ_l ∘ d_planar ∘ σ_k` (for the schedule
+    /// compiler, which re-expresses the same op chain as DAG nodes).
+    pub(crate) fn factored(&self) -> &Factored {
+        &self.factored
+    }
+
+    /// Whether this plan dispatches to the SO(n) free-vertex path.
+    pub(crate) fn is_jellyfish(&self) -> bool {
+        self.jellyfish
+    }
+
+    /// The collapsed single-permutation form, when the diagram is a pure
+    /// permutation.
+    pub(crate) fn fused_perm(&self) -> Option<&[usize]> {
+        self.fused_perm.as_deref()
+    }
+
     /// Apply the plan: `Permute → PlanarMult → Permute` (Algorithm 1 with
     /// the `Factor` step amortised away). Identity permutations are elided
     /// entirely (no copy).
@@ -149,10 +166,11 @@ impl MultPlan {
 
     /// Input axis permutation `σ_k` of the factored form. Plans whose
     /// `perm_in` agree can share one `v.permute_axes(perm_in)` result —
-    /// the batched layer path groups its spanning terms by this and calls
-    /// [`MultPlan::apply_accumulate_permuted`], amortising the `Permute`
-    /// step across terms (there are at most `k!` distinct permutations but
-    /// typically far more diagrams).
+    /// callers applying many plans to one input can pre-permute once and
+    /// use [`MultPlan::apply_accumulate_permuted`] (there are at most `k!`
+    /// distinct permutations but typically far more diagrams). The layer
+    /// hot path goes further: [`super::LayerSchedule`] hash-conses whole
+    /// chains, sharing contraction prefixes as well as the permute.
     pub fn perm_in(&self) -> &[usize] {
         &self.factored.perm_in
     }

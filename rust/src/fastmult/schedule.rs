@@ -1,0 +1,1150 @@
+//! Fused execution schedules for whole diagram sums.
+//!
+//! A layer's equivariant weight is `W = Σ_π λ_π D_π` over the full spanning
+//! set, and [`super::MultPlan`] makes each *term* fast — but the terms are
+//! not independent: many spanning diagrams for the same `(k, l)` share the
+//! same `σ_k` input permutation and the same bottom-row contraction prefix.
+//! A [`LayerSchedule`] hash-conses the per-term op chains (input permute →
+//! contraction steps → transfer → output scatter) into a DAG so every
+//! shared intermediate is computed **once per forward** instead of once per
+//! diagram, and executes that DAG against a reusable [`ScratchArena`] of
+//! size-bucketed buffers so the steady-state forward/backward performs zero
+//! heap allocations for tensor intermediates.
+//!
+//! Structure (see `docs/execution_schedule.md`):
+//!
+//! - **Nodes** are interior ops (`Permute`, `ContractDiagonal`, `TracePair`,
+//!   `TracePairEps`, `LeviCivita`, `ExtractDiagonals`). Node identity is the
+//!   op *plus its source*, so two chains share a node exactly when they
+//!   share the whole prefix up to it — the DAG is a forest rooted at the
+//!   distinct `σ_k` permutations of the input.
+//! - **Sinks** are the per-term λ-weighted accumulations into the output
+//!   (`scatter_broadcast_diagonals_axpy` / `axpy_permuted_into` / the Sp(n)
+//!   ε-expansion). Sinks are never shared: each carries its own coefficient.
+//! - Sinks execute in term order and intermediates are freed after their
+//!   last use, so [`LayerSchedule::execute`] is bitwise identical to the
+//!   per-term reference path and peak scratch memory stays near the deepest
+//!   single chain.
+//!
+//! Schedules are compiled once per layer shape and cached in
+//! [`super::PlanCache`] alongside the `MultPlan`s.
+
+use super::plan::is_identity;
+use super::{sp, Group, MultPlan};
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+// ---------------------------------------------------------------------------
+// Scratch arena
+// ---------------------------------------------------------------------------
+
+static ARENA_ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static ARENA_REUSES: AtomicU64 = AtomicU64::new(0);
+static ARENA_HIGH_WATER: AtomicUsize = AtomicUsize::new(0);
+static OPS_SHARED: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide arena counters (summed over every [`ScratchArena`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Buffers allocated fresh from the heap (cold-start only, in steady
+    /// state this stops growing).
+    pub allocations: u64,
+    /// Acquisitions served by recycling a released buffer.
+    pub reuses: u64,
+    /// Largest number of `f64`s any single arena has held at once.
+    pub high_water_f64s: usize,
+}
+
+/// Snapshot of the process-wide arena counters.
+pub fn arena_stats() -> ArenaStats {
+    ArenaStats {
+        allocations: ARENA_ALLOCATIONS.load(Ordering::Relaxed),
+        reuses: ARENA_REUSES.load(Ordering::Relaxed),
+        high_water_f64s: ARENA_HIGH_WATER.load(Ordering::Relaxed),
+    }
+}
+
+/// Total interior ops elided by prefix sharing across every
+/// [`LayerSchedule::compile`] in this process (cache hits do not re-count).
+pub fn ops_shared_total() -> u64 {
+    OPS_SHARED.load(Ordering::Relaxed)
+}
+
+/// A recycling pool of tensor buffers, bucketed by length. `acquire`
+/// returns a buffer with **stale contents** — callers must pair it with the
+/// write-once `_into` tensor primitives (or zero it themselves) — and
+/// `release` returns it for reuse. After one warm-up pass over a schedule,
+/// every acquisition is a reuse: the per-arena and process-wide counters
+/// make that provable from tests and benches.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    buckets: HashMap<usize, Vec<Vec<f64>>>,
+    allocations: u64,
+    reuses: u64,
+    held_f64s: usize,
+}
+
+impl ScratchArena {
+    /// Fresh, empty arena.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A tensor of shape `(n, order)` backed by a recycled buffer when one
+    /// of the right length is free. Contents are unspecified.
+    pub fn acquire(&mut self, n: usize, order: usize) -> Tensor {
+        let len = n.pow(order as u32);
+        let data = match self.buckets.get_mut(&len).and_then(|b| b.pop()) {
+            Some(buf) => {
+                self.reuses += 1;
+                ARENA_REUSES.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                self.allocations += 1;
+                ARENA_ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+                self.held_f64s += len;
+                ARENA_HIGH_WATER.fetch_max(self.held_f64s, Ordering::Relaxed);
+                vec![0.0; len]
+            }
+        };
+        debug_assert_eq!(data.len(), len);
+        Tensor { n, order, data }
+    }
+
+    /// Return a tensor's buffer to the pool.
+    pub fn release(&mut self, t: Tensor) {
+        self.buckets.entry(t.data.len()).or_default().push(t.data);
+    }
+
+    /// Buffers this arena allocated fresh from the heap.
+    pub fn allocations(&self) -> u64 {
+        self.allocations
+    }
+
+    /// Acquisitions this arena served by recycling.
+    pub fn reuses(&self) -> u64 {
+        self.reuses
+    }
+
+    /// Total `f64`s this arena currently owns (free + checked out).
+    pub fn held_f64s(&self) -> usize {
+        self.held_f64s
+    }
+
+    /// Drop every pooled buffer (counters are preserved, except that
+    /// `held_f64s` resets — buffers currently checked out are untracked
+    /// until released, at which point they re-enter the buckets). Lets
+    /// long-lived servers shed an old working set after a model-shape
+    /// change; see also [`clear_arena_pool`].
+    pub fn clear(&mut self) {
+        self.buckets.clear();
+        self.held_f64s = 0;
+    }
+}
+
+/// Drop every arena currently parked in the process-wide pool (arenas
+/// checked out by in-flight calls are unaffected and return to the pool on
+/// drop). The pool is otherwise unbounded — it holds one arena per peak
+/// concurrent caller, each at its historical working set — so servers that
+/// shrink their model shapes can call this to release the old buffers.
+pub fn clear_arena_pool() {
+    ARENA_POOL.lock().unwrap().clear();
+}
+
+static ARENA_POOL: Mutex<Vec<ScratchArena>> = Mutex::new(Vec::new());
+
+/// A [`ScratchArena`] checked out of the process-wide pool; returned on
+/// drop. Layer hot paths grab one per forward/backward call so steady-state
+/// serving reuses the same warmed buffers regardless of which worker thread
+/// runs the batch.
+#[derive(Debug)]
+pub struct PooledArena(Option<ScratchArena>);
+
+impl PooledArena {
+    /// Check an arena out of the pool (or create one cold).
+    pub fn get() -> PooledArena {
+        let arena = ARENA_POOL.lock().unwrap().pop().unwrap_or_default();
+        PooledArena(Some(arena))
+    }
+}
+
+impl std::ops::Deref for PooledArena {
+    type Target = ScratchArena;
+    fn deref(&self) -> &ScratchArena {
+        self.0.as_ref().expect("arena present until drop")
+    }
+}
+
+impl std::ops::DerefMut for PooledArena {
+    fn deref_mut(&mut self) -> &mut ScratchArena {
+        self.0.as_mut().expect("arena present until drop")
+    }
+}
+
+impl Drop for PooledArena {
+    fn drop(&mut self) {
+        if let Some(arena) = self.0.take() {
+            ARENA_POOL.lock().unwrap().push(arena);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DAG representation
+// ---------------------------------------------------------------------------
+
+/// Where an op reads from: the raw layer input, or another node's output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum Src {
+    Input,
+    Node(usize),
+}
+
+/// Interior op of a term chain. Identity (for hash-consing) includes the
+/// source, so equal ops with equal sources collapse to one node.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum Op {
+    Permute { src: Src, axes: Vec<usize> },
+    ContractDiagonal { src: Src, m: usize },
+    TracePair { src: Src },
+    TracePairEps { src: Src },
+    LeviCivita { src: Src, s: usize },
+    ExtractDiagonals { src: Src, groups: Vec<usize> },
+}
+
+impl Op {
+    fn src(&self) -> Src {
+        match self {
+            Op::Permute { src, .. }
+            | Op::ContractDiagonal { src, .. }
+            | Op::TracePair { src }
+            | Op::TracePairEps { src }
+            | Op::LeviCivita { src, .. }
+            | Op::ExtractDiagonals { src, .. } => *src,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    op: Op,
+    /// Output tensor order (for arena sizing).
+    order: usize,
+}
+
+/// Per-term closing accumulation `out += coeff · (…)`.
+#[derive(Debug, Clone)]
+enum SinkKind {
+    /// `out += c · permute(x, axes)` — pure-permutation diagrams and Sp(n)
+    /// terms without top pairs.
+    AxpyPermuted { axes: Vec<usize> },
+    /// The fused Step-3/4 diagonal scatter of S_n / O(n) / SO(n).
+    ScatterDiagonals {
+        lead: Vec<usize>,
+        tail: Vec<usize>,
+        axes: Vec<usize>,
+    },
+    /// Sp(n) ε-signed top-pair expansion followed by the permuted axpy.
+    EpsExpand { t: usize, axes: Vec<usize> },
+}
+
+#[derive(Debug, Clone)]
+struct Sink {
+    src: Src,
+    kind: SinkKind,
+}
+
+/// Compile-time shape of one schedule: how much work the DAG fused away.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScheduleStats {
+    /// Spanning terms (sinks).
+    pub terms: usize,
+    /// Distinct interior nodes after hash-consing.
+    pub nodes: usize,
+    /// Interior chain ops the per-term path would run (before sharing).
+    pub chain_ops: usize,
+    /// Ops elided by sharing (`chain_ops - nodes`).
+    pub shared_ops: usize,
+}
+
+impl ScheduleStats {
+    /// Fraction of interior ops eliminated by prefix sharing.
+    pub fn sharing_ratio(&self) -> f64 {
+        if self.chain_ops == 0 {
+            0.0
+        } else {
+            self.shared_ops as f64 / self.chain_ops as f64
+        }
+    }
+
+    /// Accumulate another schedule's stats (for per-network aggregates).
+    pub fn merge(&mut self, other: &ScheduleStats) {
+        self.terms += other.terms;
+        self.nodes += other.nodes;
+        self.chain_ops += other.chain_ops;
+        self.shared_ops += other.shared_ops;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Schedule
+// ---------------------------------------------------------------------------
+
+/// A compiled, fused execution schedule for one spanning-diagram sum
+/// `v ↦ Σ_i coeffs[i] · F(d_i)(v)`.
+#[derive(Debug)]
+pub struct LayerSchedule {
+    group: Group,
+    n: usize,
+    k: usize,
+    l: usize,
+    nodes: Vec<Node>,
+    sinks: Vec<Sink>,
+    /// All sink indices, in term order (avoids a per-call index Vec).
+    all_sinks: Vec<usize>,
+    /// Sink indices grouped by DAG root. Distinct roots share no nodes, so
+    /// the groups are independently executable — this is the DAG-level
+    /// re-expression of the old contiguous-term-range parallelism.
+    subtrees: Vec<Vec<usize>>,
+    stats: ScheduleStats,
+}
+
+#[derive(Default)]
+struct Builder {
+    nodes: Vec<Node>,
+    index: HashMap<Op, usize>,
+    chain_ops: usize,
+}
+
+impl Builder {
+    fn node(&mut self, op: Op, order: usize) -> Src {
+        self.chain_ops += 1;
+        if let Some(&i) = self.index.get(&op) {
+            return Src::Node(i);
+        }
+        let i = self.nodes.len();
+        self.nodes.push(Node {
+            op: op.clone(),
+            order,
+        });
+        self.index.insert(op, i);
+        Src::Node(i)
+    }
+}
+
+impl LayerSchedule {
+    /// Compile the schedule for `plans` (one per spanning term, in term
+    /// order — coefficient index `i` in every `execute*` call refers to
+    /// `plans[i]`). All plans must map order `k` to order `l` under `group`
+    /// at dimension `n`; an empty plan list compiles to a no-op schedule.
+    pub fn compile(
+        group: Group,
+        n: usize,
+        k: usize,
+        l: usize,
+        plans: &[Arc<MultPlan>],
+    ) -> Result<LayerSchedule> {
+        let mut b = Builder::default();
+        let mut sinks = Vec::with_capacity(plans.len());
+        for plan in plans {
+            if plan.group() != group || plan.n() != n || plan.k() != k || plan.l() != l {
+                return Err(Error::ShapeMismatch {
+                    expected: format!("{group} plans of shape ({k}, {l}) over R^{n}"),
+                    got: format!(
+                        "{} plan of shape ({}, {}) over R^{}",
+                        plan.group(),
+                        plan.k(),
+                        plan.l(),
+                        plan.n()
+                    ),
+                });
+            }
+            sinks.push(Self::compile_term(&mut b, plan));
+        }
+        // Root of each sink's chain (None for direct-input sinks).
+        let mut subtrees: Vec<(Option<usize>, Vec<usize>)> = Vec::new();
+        for (si, sink) in sinks.iter().enumerate() {
+            let mut cur = sink.src;
+            let mut root = None;
+            while let Src::Node(i) = cur {
+                root = Some(i);
+                cur = b.nodes[i].op.src();
+            }
+            match subtrees.iter_mut().find(|(r, _)| *r == root) {
+                Some((_, group_sinks)) => group_sinks.push(si),
+                None => subtrees.push((root, vec![si])),
+            }
+        }
+        let stats = ScheduleStats {
+            terms: sinks.len(),
+            nodes: b.nodes.len(),
+            chain_ops: b.chain_ops,
+            shared_ops: b.chain_ops - b.nodes.len(),
+        };
+        OPS_SHARED.fetch_add(stats.shared_ops as u64, Ordering::Relaxed);
+        Ok(LayerSchedule {
+            group,
+            n,
+            k,
+            l,
+            nodes: b.nodes,
+            all_sinks: (0..sinks.len()).collect(),
+            subtrees: subtrees.into_iter().map(|(_, s)| s).collect(),
+            sinks,
+            stats,
+        })
+    }
+
+    /// One term's chain + sink, mirroring `MultPlan::apply_accumulate`
+    /// step for step so schedule execution is bitwise identical to the
+    /// per-term reference path.
+    fn compile_term(b: &mut Builder, plan: &MultPlan) -> Sink {
+        // Pure-permutation diagram: single fused axpy, no interior nodes.
+        if let Some(fused) = plan.fused_perm() {
+            return Sink {
+                src: Src::Input,
+                kind: SinkKind::AxpyPermuted {
+                    axes: fused.to_vec(),
+                },
+            };
+        }
+        let f = plan.factored();
+        let layout = &f.layout;
+        let mut src = Src::Input;
+        let mut order = plan.k();
+        if !is_identity(&f.perm_in) {
+            src = b.node(
+                Op::Permute {
+                    src,
+                    axes: f.perm_in.clone(),
+                },
+                order,
+            );
+        }
+        match (plan.group(), plan.is_jellyfish()) {
+            (Group::Symmetric, _) => {
+                for &size in layout.bottom_blocks.iter().rev() {
+                    order -= size;
+                    src = b.node(Op::ContractDiagonal { src, m: size }, order);
+                }
+                let lower: Vec<usize> = layout.cross_blocks.iter().map(|c| c.1).collect();
+                let upper: Vec<usize> = layout.cross_blocks.iter().map(|c| c.0).collect();
+                if !lower.iter().all(|&s| s == 1) {
+                    order = lower.len();
+                    src = b.node(Op::ExtractDiagonals { src, groups: lower }, order);
+                }
+                Sink {
+                    src,
+                    kind: SinkKind::ScatterDiagonals {
+                        lead: layout.top_blocks.clone(),
+                        tail: upper,
+                        axes: f.perm_out.clone(),
+                    },
+                }
+            }
+            (Group::Orthogonal, _) | (Group::SpecialOrthogonal, false) => {
+                for _ in 0..layout.b() {
+                    order -= 2;
+                    src = b.node(Op::TracePair { src }, order);
+                }
+                Sink {
+                    src,
+                    kind: SinkKind::ScatterDiagonals {
+                        lead: vec![2; layout.t()],
+                        tail: vec![1; layout.d()],
+                        axes: f.perm_out.clone(),
+                    },
+                }
+            }
+            (Group::SpecialOrthogonal, true) => {
+                let n = plan.n();
+                let s = layout.free_top;
+                let d = layout.d();
+                let pairs = layout.b();
+                // Step 1: ε-contract the trailing n−s free axes; layout is
+                // now [D(d), B(2b), TF(s)].
+                order = order - (n - s) + s;
+                src = b.node(Op::LeviCivita { src, s }, order);
+                // Rotate TF to the front so the pair traces see the bottom
+                // pairs trailing: [TF(s), D(d), B(2b)].
+                let body = d + 2 * pairs;
+                let rot: Vec<usize> = (body..body + s).chain(0..body).collect();
+                if !is_identity(&rot) {
+                    src = b.node(Op::Permute { src, axes: rot }, order);
+                }
+                for _ in 0..pairs {
+                    order -= 2;
+                    src = b.node(Op::TracePair { src }, order);
+                }
+                // [TF(s), D(d)] → [D(d), TF(s)] for the Step-4 scatter.
+                let rot2: Vec<usize> = (s..s + d).chain(0..s).collect();
+                if !is_identity(&rot2) {
+                    src = b.node(Op::Permute { src, axes: rot2 }, order);
+                }
+                Sink {
+                    src,
+                    kind: SinkKind::ScatterDiagonals {
+                        lead: vec![2; layout.t()],
+                        tail: vec![1; d + s],
+                        axes: f.perm_out.clone(),
+                    },
+                }
+            }
+            (Group::Symplectic, _) => {
+                for _ in 0..layout.b() {
+                    order -= 2;
+                    src = b.node(Op::TracePairEps { src }, order);
+                }
+                let t = layout.t();
+                if t == 0 {
+                    Sink {
+                        src,
+                        kind: SinkKind::AxpyPermuted {
+                            axes: f.perm_out.clone(),
+                        },
+                    }
+                } else {
+                    Sink {
+                        src,
+                        kind: SinkKind::EpsExpand {
+                            t,
+                            axes: f.perm_out.clone(),
+                        },
+                    }
+                }
+            }
+        }
+    }
+
+    /// The group this schedule multiplies under.
+    pub fn group(&self) -> Group {
+        self.group
+    }
+    /// Representation dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    /// Input tensor order.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+    /// Output tensor order.
+    pub fn l(&self) -> usize {
+        self.l
+    }
+    /// Number of spanning terms.
+    pub fn terms(&self) -> usize {
+        self.sinks.len()
+    }
+    /// Compile-time sharing statistics.
+    pub fn stats(&self) -> ScheduleStats {
+        self.stats
+    }
+
+    /// Sink-index groups with pairwise-disjoint node sets (grouped by DAG
+    /// root). Executing each group via [`LayerSchedule::execute_subset`] on
+    /// its own thread with its own arena parallelises the diagram sum with
+    /// no shared mutable state.
+    pub fn subtrees(&self) -> &[Vec<usize>] {
+        &self.subtrees
+    }
+
+    fn check_input(&self, v: &Tensor) -> Result<()> {
+        if v.order != self.k || v.n != self.n {
+            return Err(Error::ShapeMismatch {
+                expected: format!("order {} tensor over R^{}", self.k, self.n),
+                got: format!("order {} over R^{}", v.order, v.n),
+            });
+        }
+        Ok(())
+    }
+
+    fn check_output(&self, out: &Tensor) -> Result<()> {
+        if out.order != self.l || out.n != self.n {
+            return Err(Error::ShapeMismatch {
+                expected: format!("order {} output over R^{}", self.l, self.n),
+                got: format!("order {} over R^{}", out.order, out.n),
+            });
+        }
+        Ok(())
+    }
+
+    fn check_coeffs(&self, coeffs: &[f64]) -> Result<()> {
+        if coeffs.len() != self.sinks.len() {
+            return Err(Error::ShapeMismatch {
+                expected: format!("{} coefficients", self.sinks.len()),
+                got: format!("{}", coeffs.len()),
+            });
+        }
+        Ok(())
+    }
+
+    /// `out += Σ_i coeffs[i] · F(d_i)(v)`, accumulating in term order —
+    /// bitwise identical to looping `MultPlan::apply_accumulate` over the
+    /// terms, but with shared intermediates computed once and all scratch
+    /// tensors drawn from `arena`.
+    pub fn execute(
+        &self,
+        v: &Tensor,
+        coeffs: &[f64],
+        out: &mut Tensor,
+        arena: &mut ScratchArena,
+    ) -> Result<()> {
+        self.execute_subset(v, coeffs, &self.all_sinks, out, arena)
+    }
+
+    /// [`LayerSchedule::execute`] restricted to the given sink indices
+    /// (still reading full-length `coeffs`). Used with
+    /// [`LayerSchedule::subtrees`] for DAG-level parallelism.
+    pub fn execute_subset(
+        &self,
+        v: &Tensor,
+        coeffs: &[f64],
+        sinks: &[usize],
+        out: &mut Tensor,
+        arena: &mut ScratchArena,
+    ) -> Result<()> {
+        self.check_input(v)?;
+        self.check_output(out)?;
+        self.check_coeffs(coeffs)?;
+        let mut refs = vec![0usize; self.nodes.len()];
+        for &si in sinks {
+            if coeffs[si] != 0.0 {
+                self.count_chain(self.sinks[si].src, &mut refs);
+            }
+        }
+        let mut bufs: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
+        for &si in sinks {
+            let coeff = coeffs[si];
+            if coeff == 0.0 {
+                continue;
+            }
+            let sink = &self.sinks[si];
+            self.materialize(sink.src, v, &mut bufs, arena);
+            match &sink.kind {
+                SinkKind::AxpyPermuted { axes } => {
+                    self.resolve(sink.src, v, &bufs)
+                        .axpy_permuted_into(coeff, axes, out);
+                }
+                SinkKind::ScatterDiagonals { lead, tail, axes } => {
+                    self.resolve(sink.src, v, &bufs)
+                        .scatter_broadcast_diagonals_axpy(lead, tail, axes, coeff, out);
+                }
+                SinkKind::EpsExpand { t, axes } => {
+                    let tmp = self.eps_expand(sink.src, *t, v, &bufs, arena);
+                    tmp.axpy_permuted_into(coeff, axes, out);
+                    arena.release(tmp);
+                }
+            }
+            self.release_chain(sink.src, &mut refs, &mut bufs, arena);
+        }
+        self.drain(bufs, arena);
+        Ok(())
+    }
+
+    /// Fan one input out to several coefficient vectors at once:
+    /// `outs[r] += Σ_i coeff_rows[r][i] · F(d_i)(v)` with every interior
+    /// node computed a single time. This is the multi-channel layer's
+    /// forward: one node evaluation per input channel feeds all output
+    /// channels, only the cheap diagonal-support scatters repeat.
+    pub fn execute_multi(
+        &self,
+        v: &Tensor,
+        coeff_rows: &[Vec<f64>],
+        outs: &mut [Tensor],
+        arena: &mut ScratchArena,
+    ) -> Result<()> {
+        if coeff_rows.len() != outs.len() {
+            return Err(Error::ShapeMismatch {
+                expected: format!("{} outputs", coeff_rows.len()),
+                got: format!("{}", outs.len()),
+            });
+        }
+        self.check_input(v)?;
+        for out in outs.iter() {
+            self.check_output(out)?;
+        }
+        for row in coeff_rows {
+            self.check_coeffs(row)?;
+        }
+        let mut refs = vec![0usize; self.nodes.len()];
+        let active: Vec<bool> = (0..self.sinks.len())
+            .map(|si| coeff_rows.iter().any(|r| r[si] != 0.0))
+            .collect();
+        for (si, sink) in self.sinks.iter().enumerate() {
+            if active[si] {
+                self.count_chain(sink.src, &mut refs);
+            }
+        }
+        let mut bufs: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
+        for (si, sink) in self.sinks.iter().enumerate() {
+            if !active[si] {
+                continue;
+            }
+            self.materialize(sink.src, v, &mut bufs, arena);
+            match &sink.kind {
+                SinkKind::EpsExpand { t, axes } => {
+                    // Expand once; only the closing axpy is per-channel.
+                    let tmp = self.eps_expand(sink.src, *t, v, &bufs, arena);
+                    for (row, out) in coeff_rows.iter().zip(outs.iter_mut()) {
+                        if row[si] != 0.0 {
+                            tmp.axpy_permuted_into(row[si], axes, out);
+                        }
+                    }
+                    arena.release(tmp);
+                }
+                kind => {
+                    let x = self.resolve(sink.src, v, &bufs);
+                    for (row, out) in coeff_rows.iter().zip(outs.iter_mut()) {
+                        let coeff = row[si];
+                        if coeff == 0.0 {
+                            continue;
+                        }
+                        match kind {
+                            SinkKind::AxpyPermuted { axes } => {
+                                x.axpy_permuted_into(coeff, axes, out)
+                            }
+                            SinkKind::ScatterDiagonals { lead, tail, axes } => {
+                                x.scatter_broadcast_diagonals_axpy(lead, tail, axes, coeff, out)
+                            }
+                            SinkKind::EpsExpand { .. } => unreachable!("handled above"),
+                        }
+                    }
+                }
+            }
+            self.release_chain(sink.src, &mut refs, &mut bufs, arena);
+        }
+        self.drain(bufs, arena);
+        Ok(())
+    }
+
+    /// Materialise every term's **unweighted** output `F(d_i)(v)` in term
+    /// order and hand each to `f` — the backward-pass workhorse: gradients
+    /// need the per-term tensors (for `∂L/∂λ_i` inner products), but the
+    /// chains still share all their prefixes. The tensor passed to `f` is a
+    /// reused scratch buffer, valid only for the duration of the call.
+    pub fn execute_map<F>(&self, v: &Tensor, arena: &mut ScratchArena, mut f: F) -> Result<()>
+    where
+        F: FnMut(usize, &Tensor) -> Result<()>,
+    {
+        self.check_input(v)?;
+        let mut refs = vec![0usize; self.nodes.len()];
+        for sink in &self.sinks {
+            self.count_chain(sink.src, &mut refs);
+        }
+        let mut bufs: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
+        let mut term_out = arena.acquire(self.n, self.l);
+        let mut result = Ok(());
+        for (si, sink) in self.sinks.iter().enumerate() {
+            self.materialize(sink.src, v, &mut bufs, arena);
+            term_out.data.fill(0.0);
+            match &sink.kind {
+                SinkKind::AxpyPermuted { axes } => {
+                    self.resolve(sink.src, v, &bufs)
+                        .axpy_permuted_into(1.0, axes, &mut term_out);
+                }
+                SinkKind::ScatterDiagonals { lead, tail, axes } => {
+                    self.resolve(sink.src, v, &bufs).scatter_broadcast_diagonals_axpy(
+                        lead,
+                        tail,
+                        axes,
+                        1.0,
+                        &mut term_out,
+                    );
+                }
+                SinkKind::EpsExpand { t, axes } => {
+                    let tmp = self.eps_expand(sink.src, *t, v, &bufs, arena);
+                    tmp.axpy_permuted_into(1.0, axes, &mut term_out);
+                    arena.release(tmp);
+                }
+            }
+            // On a callback error, stop — but still fall through to the
+            // release/drain below so every buffer returns to the arena
+            // (dropping them would skew the zero-allocation counters).
+            if let Err(e) = f(si, &term_out) {
+                result = Err(e);
+                break;
+            }
+            self.release_chain(sink.src, &mut refs, &mut bufs, arena);
+        }
+        arena.release(term_out);
+        self.drain(bufs, arena);
+        result
+    }
+
+    /// Compute (recursively) every not-yet-materialised node on the chain
+    /// ending at `src`, drawing output buffers from the arena and writing
+    /// them with the write-once `_into` primitives.
+    fn materialize(
+        &self,
+        src: Src,
+        v: &Tensor,
+        bufs: &mut [Option<Tensor>],
+        arena: &mut ScratchArena,
+    ) {
+        let Src::Node(i) = src else {
+            return;
+        };
+        if bufs[i].is_some() {
+            return;
+        }
+        let parent_src = self.nodes[i].op.src();
+        self.materialize(parent_src, v, bufs, arena);
+        let mut out = arena.acquire(self.n, self.nodes[i].order);
+        {
+            let parent = self.resolve(parent_src, v, bufs);
+            match &self.nodes[i].op {
+                Op::Permute { axes, .. } => parent.permute_axes_into(axes, &mut out),
+                Op::ContractDiagonal { m, .. } => {
+                    parent.contract_trailing_diagonal_into(*m, &mut out)
+                }
+                Op::TracePair { .. } => parent.trace_trailing_pair_into(&mut out),
+                Op::TracePairEps { .. } => parent.trace_trailing_pair_eps_into(&mut out),
+                Op::LeviCivita { s, .. } => {
+                    parent.levi_civita_contract_trailing_into(*s, &mut out)
+                }
+                Op::ExtractDiagonals { groups, .. } => {
+                    parent.extract_group_diagonals_into(groups, &mut out)
+                }
+            }
+        }
+        bufs[i] = Some(out);
+    }
+
+    fn resolve<'a>(&self, src: Src, v: &'a Tensor, bufs: &'a [Option<Tensor>]) -> &'a Tensor {
+        match src {
+            Src::Input => v,
+            Src::Node(i) => bufs[i].as_ref().expect("node materialised before use"),
+        }
+    }
+
+    /// Sp(n) top-pair expansion of the chain output into a scratch tensor.
+    fn eps_expand(
+        &self,
+        src: Src,
+        t: usize,
+        v: &Tensor,
+        bufs: &[Option<Tensor>],
+        arena: &mut ScratchArena,
+    ) -> Tensor {
+        let x = self.resolve(src, v, bufs);
+        let order = x.order + 2 * t;
+        // Acquire after reading the shape; `resolve` only borrows `bufs`.
+        let n = x.n;
+        let mut tmp = arena.acquire(n, order);
+        sp::eps_top_expand_into(x, t, &mut tmp);
+        tmp
+    }
+
+    fn count_chain(&self, src: Src, refs: &mut [usize]) {
+        let mut cur = src;
+        while let Src::Node(i) = cur {
+            refs[i] += 1;
+            cur = self.nodes[i].op.src();
+        }
+    }
+
+    fn release_chain(
+        &self,
+        src: Src,
+        refs: &mut [usize],
+        bufs: &mut [Option<Tensor>],
+        arena: &mut ScratchArena,
+    ) {
+        let mut cur = src;
+        while let Src::Node(i) = cur {
+            refs[i] -= 1;
+            if refs[i] == 0 {
+                if let Some(t) = bufs[i].take() {
+                    arena.release(t);
+                }
+            }
+            cur = self.nodes[i].op.src();
+        }
+    }
+
+    fn drain(&self, bufs: Vec<Option<Tensor>>, arena: &mut ScratchArena) {
+        for buf in bufs.into_iter().flatten() {
+            arena.release(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagram::Diagram;
+    use crate::fastmult::PlanCache;
+    use crate::layer::spanning_plans;
+    use crate::util::Rng;
+
+    fn reference_sum(plans: &[Arc<MultPlan>], coeffs: &[f64], v: &Tensor, l: usize) -> Tensor {
+        let mut out = Tensor::zeros(v.n, l);
+        for (plan, &c) in plans.iter().zip(coeffs) {
+            if c != 0.0 {
+                plan.apply_accumulate(v, c, &mut out).unwrap();
+            }
+        }
+        out
+    }
+
+    fn random_coeffs(count: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..count).map(|_| rng.gaussian()).collect()
+    }
+
+    #[test]
+    fn execute_matches_per_term_for_all_groups() {
+        let mut rng = Rng::new(901);
+        for (group, n, k, l) in [
+            (Group::Symmetric, 3usize, 2usize, 2usize),
+            (Group::Symmetric, 3, 3, 2),
+            (Group::Orthogonal, 3, 2, 2),
+            (Group::Orthogonal, 3, 3, 1),
+            (Group::Symplectic, 4, 2, 2),
+            (Group::SpecialOrthogonal, 3, 2, 2),
+            (Group::SpecialOrthogonal, 3, 2, 1), // jellyfish-only spanning set
+        ] {
+            let plans = spanning_plans(group, n, k, l).unwrap();
+            let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+            assert_eq!(schedule.terms(), plans.len());
+            let coeffs = random_coeffs(plans.len(), &mut rng);
+            let v = Tensor::random(n, k, &mut rng);
+            let mut got = Tensor::zeros(n, l);
+            let mut arena = ScratchArena::new();
+            schedule.execute(&v, &coeffs, &mut got, &mut arena).unwrap();
+            let want = reference_sum(&plans, &coeffs, &v, l);
+            assert!(
+                got.allclose(&want, 0.0),
+                "{group} ({k},{l}): fused diverges by {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn schedule_shares_prefixes() {
+        // S_n (2,2) at n=4: all 15 spanning terms but far fewer distinct
+        // σ_k permutations and contraction prefixes.
+        let plans = spanning_plans(Group::Symmetric, 4, 2, 2).unwrap();
+        let schedule = LayerSchedule::compile(Group::Symmetric, 4, 2, 2, &plans).unwrap();
+        let stats = schedule.stats();
+        assert_eq!(stats.terms, 15);
+        assert!(
+            stats.shared_ops > 0,
+            "expected prefix sharing, got {stats:?}"
+        );
+        assert!(stats.nodes < stats.chain_ops);
+        assert!(stats.sharing_ratio() > 0.0 && stats.sharing_ratio() < 1.0);
+    }
+
+    #[test]
+    fn subtrees_partition_the_sinks() {
+        for (group, n, k, l) in [
+            (Group::Symmetric, 3usize, 2usize, 2usize),
+            (Group::Symplectic, 4, 2, 2),
+        ] {
+            let plans = spanning_plans(group, n, k, l).unwrap();
+            let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+            let mut seen = vec![false; schedule.terms()];
+            for tree in schedule.subtrees() {
+                for &si in tree {
+                    assert!(!seen[si], "sink {si} appears in two subtrees");
+                    seen[si] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "subtrees must cover every sink");
+            // Executing subtree by subtree equals one full execute.
+            let mut rng = Rng::new(77);
+            let coeffs = random_coeffs(schedule.terms(), &mut rng);
+            let v = Tensor::random(n, k, &mut rng);
+            let mut whole = Tensor::zeros(n, l);
+            let mut arena = ScratchArena::new();
+            schedule
+                .execute(&v, &coeffs, &mut whole, &mut arena)
+                .unwrap();
+            let mut pieced = Tensor::zeros(n, l);
+            for tree in schedule.subtrees() {
+                schedule
+                    .execute_subset(&v, &coeffs, tree, &mut pieced, &mut arena)
+                    .unwrap();
+            }
+            assert!(whole.allclose(&pieced, 1e-12), "{group}");
+        }
+    }
+
+    #[test]
+    fn arena_reaches_zero_allocation_steady_state() {
+        let mut rng = Rng::new(902);
+        let plans = spanning_plans(Group::Symmetric, 3, 3, 2).unwrap();
+        let schedule = LayerSchedule::compile(Group::Symmetric, 3, 3, 2, &plans).unwrap();
+        let coeffs = random_coeffs(plans.len(), &mut rng);
+        let v = Tensor::random(3, 3, &mut rng);
+        let mut arena = ScratchArena::new();
+        let mut out = Tensor::zeros(3, 2);
+        schedule.execute(&v, &coeffs, &mut out, &mut arena).unwrap();
+        let warm_allocs = arena.allocations();
+        assert!(warm_allocs > 0, "cold pass must allocate");
+        for _ in 0..3 {
+            out.data.fill(0.0);
+            schedule.execute(&v, &coeffs, &mut out, &mut arena).unwrap();
+        }
+        assert_eq!(
+            arena.allocations(),
+            warm_allocs,
+            "steady-state execute must not allocate"
+        );
+        assert!(arena.reuses() > 0);
+        assert!(arena.held_f64s() > 0);
+        // The process-wide counters saw this arena's traffic too.
+        let global = arena_stats();
+        assert!(global.allocations >= warm_allocs);
+        assert!(global.high_water_f64s >= arena.held_f64s());
+    }
+
+    #[test]
+    fn execute_map_matches_plan_apply() {
+        let mut rng = Rng::new(903);
+        for (group, n, k, l) in [
+            (Group::Symmetric, 3usize, 2usize, 2usize),
+            (Group::Symplectic, 4, 2, 2),
+            (Group::SpecialOrthogonal, 3, 1, 2), // jellyfish terms present
+        ] {
+            let plans = spanning_plans(group, n, k, l).unwrap();
+            if plans.is_empty() {
+                continue;
+            }
+            let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+            let v = Tensor::random(n, k, &mut rng);
+            let mut arena = ScratchArena::new();
+            schedule
+                .execute_map(&v, &mut arena, |i, term| {
+                    let want = plans[i].apply(&v).unwrap();
+                    assert!(
+                        term.allclose(&want, 0.0),
+                        "{group} term {i} diverges by {}",
+                        term.max_abs_diff(&want)
+                    );
+                    Ok(())
+                })
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn execute_map_error_path_releases_buffers() {
+        let plans = spanning_plans(Group::Symmetric, 3, 2, 2).unwrap();
+        let schedule = LayerSchedule::compile(Group::Symmetric, 3, 2, 2, &plans).unwrap();
+        let mut rng = Rng::new(905);
+        let v = Tensor::random(3, 2, &mut rng);
+        let mut arena = ScratchArena::new();
+        // Warm pass fills the arena buckets.
+        schedule.execute_map(&v, &mut arena, |_, _| Ok(())).unwrap();
+        let warm = arena.allocations();
+        // An erroring callback must still return every buffer to the
+        // arena…
+        let err = schedule.execute_map(&v, &mut arena, |i, _| {
+            if i >= 3 {
+                Err(Error::Config("stop".into()))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(err.is_err());
+        // …so a later full pass allocates nothing new.
+        schedule.execute_map(&v, &mut arena, |_, _| Ok(())).unwrap();
+        assert_eq!(arena.allocations(), warm, "error path dropped buffers");
+    }
+
+    #[test]
+    fn execute_multi_matches_row_by_row() {
+        let mut rng = Rng::new(904);
+        let (group, n, k, l) = (Group::Orthogonal, 3, 2, 2);
+        let plans = spanning_plans(group, n, k, l).unwrap();
+        let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+        let rows: Vec<Vec<f64>> = (0..3)
+            .map(|_| random_coeffs(plans.len(), &mut rng))
+            .collect();
+        let v = Tensor::random(n, k, &mut rng);
+        let mut arena = ScratchArena::new();
+        let mut outs: Vec<Tensor> = (0..3).map(|_| Tensor::zeros(n, l)).collect();
+        schedule
+            .execute_multi(&v, &rows, &mut outs, &mut arena)
+            .unwrap();
+        for (row, got) in rows.iter().zip(&outs) {
+            let mut want = Tensor::zeros(n, l);
+            schedule
+                .execute(&v, row, &mut want, &mut arena)
+                .unwrap();
+            assert!(got.allclose(&want, 0.0));
+        }
+    }
+
+    #[test]
+    fn shape_and_arity_checks() {
+        let plans = spanning_plans(Group::Symmetric, 3, 2, 2).unwrap();
+        let schedule = LayerSchedule::compile(Group::Symmetric, 3, 2, 2, &plans).unwrap();
+        let coeffs = vec![0.0; schedule.terms()];
+        let mut arena = ScratchArena::new();
+        let mut out = Tensor::zeros(3, 2);
+        // Wrong input order.
+        assert!(schedule
+            .execute(&Tensor::zeros(3, 1), &coeffs, &mut out, &mut arena)
+            .is_err());
+        // Wrong output order.
+        assert!(schedule
+            .execute(&Tensor::zeros(3, 2), &coeffs, &mut Tensor::zeros(3, 1), &mut arena)
+            .is_err());
+        // Wrong coefficient arity.
+        assert!(schedule
+            .execute(&Tensor::zeros(3, 2), &coeffs[..1], &mut out, &mut arena)
+            .is_err());
+        // Mismatched plan shape at compile time.
+        let other = PlanCache::global()
+            .get_or_build(Group::Symmetric, &Diagram::identity(1), 3)
+            .unwrap();
+        assert!(LayerSchedule::compile(Group::Symmetric, 3, 2, 2, &[other]).is_err());
+    }
+
+    #[test]
+    fn empty_schedule_is_a_noop() {
+        let schedule = LayerSchedule::compile(Group::Orthogonal, 3, 2, 1, &[]).unwrap();
+        let mut out = Tensor::zeros(3, 1);
+        let mut arena = ScratchArena::new();
+        schedule
+            .execute(&Tensor::zeros(3, 2), &[], &mut out, &mut arena)
+            .unwrap();
+        assert_eq!(out.norm(), 0.0);
+    }
+
+    #[test]
+    fn arena_clear_releases_working_set() {
+        let mut arena = ScratchArena::new();
+        let t = arena.acquire(3, 2);
+        arena.release(t);
+        assert!(arena.held_f64s() > 0);
+        arena.clear();
+        assert_eq!(arena.held_f64s(), 0);
+        // The next acquire allocates fresh again.
+        let before = arena.allocations();
+        let t = arena.acquire(3, 2);
+        assert_eq!(arena.allocations(), before + 1);
+        arena.release(t);
+    }
+
+    #[test]
+    fn pooled_arena_round_trips() {
+        {
+            let mut a = PooledArena::get();
+            let t = a.acquire(3, 2);
+            a.release(t);
+        } // returned to the pool here
+        let b = PooledArena::get();
+        // Either we got the same warmed arena back or another thread's; in
+        // all cases the handle works.
+        assert!(b.allocations() <= arena_stats().allocations);
+    }
+}

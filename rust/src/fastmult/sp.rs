@@ -43,8 +43,23 @@ fn eps_top_expand(x: &Tensor, t: usize) -> Tensor {
     if t == 0 {
         return x.clone();
     }
+    let mut out = Tensor::zeros(x.n, x.order + 2 * t);
+    eps_top_expand_into(x, t, &mut out);
+    out
+}
+
+/// [`eps_top_expand`] into a caller-provided buffer (typically a recycled
+/// [`crate::fastmult::ScratchArena`] tensor). The expansion writes only the
+/// `n^t · |x|` non-zero ε positions, so the buffer is zeroed first.
+pub(crate) fn eps_top_expand_into(x: &Tensor, t: usize, out: &mut Tensor) {
     let n = x.n;
-    let mut out = Tensor::zeros(n, x.order + 2 * t);
+    assert_eq!(out.n, n);
+    assert_eq!(out.order, x.order + 2 * t);
+    out.data.fill(0.0);
+    if t == 0 {
+        out.data.copy_from_slice(&x.data);
+        return;
+    }
     let tail = x.data.len(); // contiguous block per prefix
     // Each pair has n signed choices: c in 0..n selects pair index
     // i = c / 2 and orientation c % 2: even → (2i, 2i+1) sign +1,
@@ -76,7 +91,7 @@ fn eps_top_expand(x: &Tensor, t: usize) -> Tensor {
         let mut p = t;
         loop {
             if p == 0 {
-                return out;
+                return;
             }
             p -= 1;
             choice[p] += 1;

@@ -8,15 +8,18 @@
 //!
 //! `out[o] = Σ_d F(d) · ( Σ_i λ_d[o, i] · in[i] )  +  bias`.
 //!
-//! The implementation mixes channels *before* the diagram multiplication
-//! (one fast `F(d)` application per diagram per output channel, never per
-//! input channel pair), keeping the cost at
-//! `O(#diagrams · c_out · (c_in·n^k + fastmult))`.
+//! The implementation exploits linearity the other way round —
+//! `Σ_i Σ_d λ_d[o,i] · F(d)(in[i])` — so each input channel makes a single
+//! pass over the layer's fused [`LayerSchedule`]
+//! ([`LayerSchedule::execute_multi`]) feeding every output channel at once:
+//! the interior diagram work (permutes, contractions) runs `c_in` times per
+//! forward, with only the cheap per-term diagonal scatters repeating per
+//! output channel.
 
 use super::linear::spanning_diagrams;
 use crate::diagram::Diagram;
 use crate::error::{Error, Result};
-use crate::fastmult::{Group, MultPlan, PlanCache};
+use crate::fastmult::{Group, LayerSchedule, MultPlan, PlanCache, PooledArena};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 use std::sync::Arc;
@@ -46,6 +49,11 @@ pub struct ChannelEquivariantLinear {
     terms: Vec<ChannelTerm>,
     /// Per-bias-diagram, per-output-channel coefficients (`c_out` each).
     bias_terms: Vec<(Arc<MultPlan>, Vec<f64>)>,
+    /// Fused execution schedule over the spanning terms (shared with every
+    /// same-shape layer through the global [`PlanCache`]).
+    schedule: Arc<LayerSchedule>,
+    /// Schedule over the transposed plans, for the backward pass.
+    backward_schedule: Arc<LayerSchedule>,
 }
 
 impl ChannelEquivariantLinear {
@@ -85,6 +93,12 @@ impl ChannelEquivariantLinear {
             let plan = cache.get_or_build(group, &d, n)?;
             bias_terms.push((plan, vec![0.0; c_out]));
         }
+        let forward_plans: Vec<Arc<MultPlan>> = terms.iter().map(|t| t.forward.clone()).collect();
+        let backward_plans: Vec<Arc<MultPlan>> =
+            terms.iter().map(|t| t.backward.clone()).collect();
+        let schedule = cache.get_or_build_schedule(group, n, k, l, false, &forward_plans)?;
+        let backward_schedule =
+            cache.get_or_build_schedule(group, n, k, l, true, &backward_plans)?;
         Ok(ChannelEquivariantLinear {
             group,
             n,
@@ -94,6 +108,8 @@ impl ChannelEquivariantLinear {
             c_out,
             terms,
             bias_terms,
+            schedule,
+            backward_schedule,
         })
     }
 
@@ -132,31 +148,28 @@ impl ChannelEquivariantLinear {
         Ok(())
     }
 
-    /// Forward: `out[o] = Σ_d F(d)(Σ_i λ_d[o,i] x[i]) + Σ_b μ_b[o] F(b)(1)`.
+    /// Forward: `out[o] = Σ_d F(d)(Σ_i λ_d[o,i] x[i]) + Σ_b μ_b[o] F(b)(1)`,
+    /// computed by linearity as `Σ_i Σ_d λ_d[o,i] · F(d)(x[i])`: each input
+    /// channel makes **one** pass over the fused schedule feeding every
+    /// output channel at once ([`LayerSchedule::execute_multi`]), so
+    /// interior DAG work (permutes, contractions) runs `c_in` times per
+    /// forward — not `#diagrams · c_out` times as the old mix-then-apply
+    /// loop did — and only the cheap diagonal-support scatters repeat per
+    /// output channel.
     pub fn forward(&self, x: &[Tensor]) -> Result<Vec<Tensor>> {
         self.check_channels(x)?;
         let mut out: Vec<Tensor> = (0..self.c_out)
             .map(|_| Tensor::zeros(self.n, self.l))
             .collect();
-        let mut mixed = Tensor::zeros(self.n, self.k);
-        for term in &self.terms {
-            for (o, out_t) in out.iter_mut().enumerate() {
-                // Mix input channels with this diagram's o-th weight row.
-                for v in &mut mixed.data {
-                    *v = 0.0;
-                }
-                let mut any = false;
-                for (i, x_t) in x.iter().enumerate() {
-                    let w = term.weights[o * self.c_in + i];
-                    if w != 0.0 {
-                        mixed.axpy(w, x_t);
-                        any = true;
-                    }
-                }
-                if any {
-                    term.forward.apply_accumulate(&mixed, 1.0, out_t)?;
+        let mut arena = PooledArena::get();
+        let mut rows: Vec<Vec<f64>> = vec![vec![0.0; self.terms.len()]; self.c_out];
+        for (i, x_t) in x.iter().enumerate() {
+            for (o, row) in rows.iter_mut().enumerate() {
+                for (slot, term) in row.iter_mut().zip(&self.terms) {
+                    *slot = term.weights[o * self.c_in + i];
                 }
             }
+            self.schedule.execute_multi(x_t, &rows, &mut out, &mut arena)?;
         }
         let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
         for (plan, mus) in &self.bias_terms {
@@ -181,19 +194,24 @@ impl ChannelEquivariantLinear {
         let mut grad_x: Vec<Tensor> = (0..self.c_in)
             .map(|_| Tensor::zeros(self.n, self.k))
             .collect();
-        for (ti, term) in self.terms.iter().enumerate() {
-            for (o, g) in grad_out.iter().enumerate() {
-                // bt = sign · F(dᵀ) g — shared across input channels.
-                let bt = term.backward.apply(g)?;
+        let mut arena = PooledArena::get();
+        for (o, g) in grad_out.iter().enumerate() {
+            // One fused pass over the transposed-term schedule per output
+            // gradient: every bt = F(dᵀ) g shares its permute/contraction
+            // prefix with its neighbours and is handed out of a reused
+            // scratch buffer, then fanned across the input channels.
+            self.backward_schedule.execute_map(g, &mut arena, |ti, bt| {
+                let term = &self.terms[ti];
                 for (i, x_t) in x.iter().enumerate() {
                     let w = term.weights[o * self.c_in + i];
                     // ∂L/∂λ_d[o,i] = sign · ⟨F(dᵀ) g, x[i]⟩
                     grads.terms[ti][o * self.c_in + i] += term.adjoint_sign * bt.dot(x_t);
                     if w != 0.0 {
-                        grad_x[i].axpy(w * term.adjoint_sign, &bt);
+                        grad_x[i].axpy(w * term.adjoint_sign, bt);
                     }
                 }
-            }
+                Ok(())
+            })?;
         }
         let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
         for (bi, (plan, _)) in self.bias_terms.iter().enumerate() {

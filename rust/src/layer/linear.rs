@@ -4,8 +4,7 @@ use crate::diagram::{
     all_brauer_diagrams, all_jellyfish_diagrams, all_partition_diagrams, Diagram,
 };
 use crate::error::{Error, Result};
-use crate::fastmult::plan::is_identity;
-use crate::fastmult::{Group, MultPlan, PlanCache};
+use crate::fastmult::{Group, LayerSchedule, MultPlan, PlanCache, PooledArena, ScheduleStats};
 use crate::tensor::Tensor;
 use crate::util::parallel::{max_threads, parallel_map};
 use crate::util::Rng;
@@ -60,11 +59,14 @@ pub struct EquivariantLinear {
     l: usize,
     terms: Vec<Term>,
     bias_terms: Vec<Term>,
-    /// Weight-term indices grouped by shared input permutation `σ_k`
-    /// (`(perm_in, term indices)` pairs). The batched forward permutes the
-    /// input once per distinct `σ_k` — at most `k!` permutes per item
-    /// instead of one per spanning term.
-    perm_groups: Vec<(Vec<usize>, Vec<usize>)>,
+    /// The fused execution schedule for the weight sum `Σ λ_d F(d)`: the
+    /// per-term op chains hash-consed into a DAG (shared `σ_k` permutes
+    /// and contraction prefixes computed once per forward), executed
+    /// against a recycled scratch arena. Shared across layer clones and —
+    /// through [`PlanCache`] — across every layer of the same shape.
+    schedule: Arc<LayerSchedule>,
+    /// Schedule over the term-wise transposed plans, for the backward pass.
+    backward_schedule: Arc<LayerSchedule>,
     /// Learnable coefficient per weight diagram.
     pub coeffs: Vec<f64>,
     /// Learnable coefficient per bias diagram.
@@ -95,6 +97,18 @@ pub(crate) fn spanning_diagrams(
             Ok(ds)
         }
     }
+}
+
+/// The spanning plans for `Hom_G((R^n)^{⊗k}, (R^n)^{⊗l})` in enumeration
+/// order, built through the global [`PlanCache`]. This is the term order
+/// every [`LayerSchedule`] compiled for this shape uses; exposed for the
+/// schedule property tests and benches.
+pub fn spanning_plans(group: Group, n: usize, k: usize, l: usize) -> Result<Vec<Arc<MultPlan>>> {
+    let cache = PlanCache::global();
+    spanning_diagrams(group, n, k, l)?
+        .iter()
+        .map(|d| cache.get_or_build(group, d, n))
+        .collect()
 }
 
 impl EquivariantLinear {
@@ -129,14 +143,12 @@ impl EquivariantLinear {
         };
         let terms = make_terms(weight_diagrams)?;
         let bias_terms = make_terms(bias_diagrams)?;
-        let mut perm_groups: Vec<(Vec<usize>, Vec<usize>)> = Vec::new();
-        for (i, term) in terms.iter().enumerate() {
-            let p = term.forward.perm_in();
-            match perm_groups.iter_mut().find(|(perm, _)| perm.as_slice() == p) {
-                Some((_, idxs)) => idxs.push(i),
-                None => perm_groups.push((p.to_vec(), vec![i])),
-            }
-        }
+        let forward_plans: Vec<Arc<MultPlan>> = terms.iter().map(|t| t.forward.clone()).collect();
+        let backward_plans: Vec<Arc<MultPlan>> =
+            terms.iter().map(|t| t.backward.clone()).collect();
+        let schedule = cache.get_or_build_schedule(group, n, k, l, false, &forward_plans)?;
+        let backward_schedule =
+            cache.get_or_build_schedule(group, n, k, l, true, &backward_plans)?;
         let draw = |count: usize, rng: &mut Rng| -> Vec<f64> {
             match init {
                 Init::Zeros => vec![0.0; count],
@@ -156,7 +168,8 @@ impl EquivariantLinear {
             l,
             terms,
             bias_terms,
-            perm_groups,
+            schedule,
+            backward_schedule,
             coeffs,
             bias_coeffs,
         })
@@ -187,12 +200,29 @@ impl EquivariantLinear {
         self.coeffs.len() + self.bias_coeffs.len()
     }
 
-    /// Forward pass: `W v + bias` via the fast algorithm, one spanning term
-    /// at a time (the linearity + parallelism observation of §5).
+    /// Forward pass: `W v + bias` via the fused execution schedule — the
+    /// whole diagram sum in one DAG walk, shared intermediates computed
+    /// once, scratch tensors drawn from the pooled arena (zero steady-state
+    /// heap allocations for intermediates). Bitwise identical to
+    /// [`EquivariantLinear::forward_per_term`].
     pub fn forward(&self, v: &Tensor) -> Result<Tensor> {
         // Check the input up front (not per-term): a zero-initialised layer
         // skips every term, and the batched path must agree with this one
         // on malformed input.
+        self.check_input(v)?;
+        let mut out = Tensor::zeros(self.n, self.l);
+        let mut arena = PooledArena::get();
+        self.schedule.execute(v, &self.coeffs, &mut out, &mut arena)?;
+        self.accumulate_bias(&mut out)?;
+        Ok(out)
+    }
+
+    /// Reference forward path: one `MultPlan::apply_accumulate` per
+    /// spanning term, exactly as before schedule fusion (the §5 linearity
+    /// observation, term by term). Kept for the equivalence property tests
+    /// and the fused-vs-per-term benchmark; [`EquivariantLinear::forward`]
+    /// must match it bitwise.
+    pub fn forward_per_term(&self, v: &Tensor) -> Result<Tensor> {
         self.check_input(v)?;
         let mut out = Tensor::zeros(self.n, self.l);
         for (term, &lambda) in self.terms.iter().zip(&self.coeffs) {
@@ -201,29 +231,36 @@ impl EquivariantLinear {
             }
             term.forward.apply_accumulate(v, lambda, &mut out)?;
         }
+        self.accumulate_bias(&mut out)?;
+        Ok(out)
+    }
+
+    /// Shared closing bias accumulation (kept term-by-term: bias spanning
+    /// sets are tiny and their "input" is the scalar 1).
+    fn accumulate_bias(&self, out: &mut Tensor) -> Result<()> {
         if !self.bias_terms.is_empty() {
             let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
             for (term, &mu) in self.bias_terms.iter().zip(&self.bias_coeffs) {
                 if mu == 0.0 {
                     continue;
                 }
-                term.forward.apply_accumulate(&one, mu, &mut out)?;
+                term.forward.apply_accumulate(&one, mu, out)?;
             }
         }
-        Ok(out)
+        Ok(())
     }
 
     /// Batched forward pass: apply the layer to every input, parallelised
     /// across batch items with scoped threads and amortising the shared
     /// structure across items — the bias tensor is materialised once per
-    /// batch, and each item permutes its input once per distinct `σ_k`
-    /// (see [`MultPlan::apply_accumulate_permuted`]) instead of once per
-    /// spanning term.
+    /// batch and each item runs the fused [`LayerSchedule`] (shared `σ_k`
+    /// permutes and contraction prefixes computed once per item, arena-
+    /// recycled scratch).
     ///
     /// Matches per-item [`EquivariantLinear::forward`] to rounding error
-    /// (≤ 1e-9 in the property tests), **not** bit-exactly: the
-    /// permutation grouping and batch-shared bias change the accumulation
-    /// order of the same terms.
+    /// (≤ 1e-9 in the property tests), **not** bit-exactly: the batch-
+    /// shared bias (and, for single-item batches, subtree partial sums)
+    /// change the accumulation order of the same terms.
     pub fn forward_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let refs: Vec<&Tensor> = inputs.iter().collect();
         self.forward_batch_refs(&refs)
@@ -237,18 +274,24 @@ impl EquivariantLinear {
         }
         let bias = self.batch_bias()?;
         let workers = max_threads();
-        // Single item: parallelise across diagram terms instead, clamping
-        // the fan-out so every worker gets at least two terms.
-        let term_workers = workers.min(self.terms.len() / 2);
-        if inputs.len() == 1 && term_workers > 1 {
-            let mut out = self.forward_terms_parallel(inputs[0], term_workers)?;
+        // Single item: parallelise across independent schedule subtrees
+        // instead (the DAG-level form of the old term-range fan-out). The
+        // clamp to ≥ 1 matters: a single-term layer has one subtree and
+        // must fall through to the plain path, not compute with zero
+        // workers (the old `terms / 2` heuristic hit exactly that).
+        let tree_workers = workers.min(self.schedule.subtrees().len()).max(1);
+        if inputs.len() == 1 && tree_workers > 1 {
+            let mut out = self.forward_subtrees_parallel(inputs[0], tree_workers)?;
             if let Some(b) = &bias {
                 out.axpy(1.0, b);
             }
             return Ok(vec![out]);
         }
         let results = parallel_map(inputs, workers, |v| -> Result<Tensor> {
-            let mut out = self.forward_weights_grouped(v)?;
+            self.check_input(v)?;
+            let mut out = Tensor::zeros(self.n, self.l);
+            let mut arena = PooledArena::get();
+            self.schedule.execute(v, &self.coeffs, &mut out, &mut arena)?;
             if let Some(b) = &bias {
                 out.axpy(1.0, b);
             }
@@ -309,53 +352,22 @@ impl EquivariantLinear {
         Ok(())
     }
 
-    /// Weight part of the forward pass with the input permuted once per
-    /// distinct `σ_k` (no bias).
-    fn forward_weights_grouped(&self, v: &Tensor) -> Result<Tensor> {
-        self.check_input(v)?;
-        let mut out = Tensor::zeros(self.n, self.l);
-        for (perm, idxs) in &self.perm_groups {
-            if idxs.iter().all(|&i| self.coeffs[i] == 0.0) {
-                continue;
-            }
-            let vp_owned;
-            let vp: &Tensor = if is_identity(perm) {
-                v
-            } else {
-                vp_owned = v.permute_axes(perm);
-                &vp_owned
-            };
-            for &i in idxs {
-                let lambda = self.coeffs[i];
-                if lambda == 0.0 {
-                    continue;
-                }
-                self.terms[i]
-                    .forward
-                    .apply_accumulate_permuted(vp, lambda, &mut out)?;
-            }
-        }
-        Ok(out)
-    }
-
     /// Weight part of the forward pass split across `workers` threads by
-    /// contiguous term ranges (the §5 parallelism-across-terms observation);
-    /// partial sums are reduced on the calling thread.
-    fn forward_terms_parallel(&self, v: &Tensor, workers: usize) -> Result<Tensor> {
+    /// contiguous runs of schedule subtrees (the §5 parallelism-across-
+    /// terms observation, lifted to the DAG: subtrees share no nodes, so
+    /// each worker keeps full prefix reuse inside its slice with no shared
+    /// mutable state); partial sums are reduced on the calling thread.
+    fn forward_subtrees_parallel(&self, v: &Tensor, workers: usize) -> Result<Tensor> {
         self.check_input(v)?;
-        let idxs: Vec<usize> = (0..self.terms.len()).collect();
-        let chunk = idxs.len().div_ceil(workers.max(1)).max(1);
-        let ranges: Vec<&[usize]> = idxs.chunks(chunk).collect();
-        let partials = parallel_map(&ranges, ranges.len(), |range| -> Result<Tensor> {
+        let subtrees = self.schedule.subtrees();
+        let chunk = subtrees.len().div_ceil(workers.max(1)).max(1);
+        let slices: Vec<&[Vec<usize>]> = subtrees.chunks(chunk).collect();
+        let partials = parallel_map(&slices, slices.len(), |trees| -> Result<Tensor> {
             let mut partial = Tensor::zeros(self.n, self.l);
-            for &i in *range {
-                let lambda = self.coeffs[i];
-                if lambda == 0.0 {
-                    continue;
-                }
-                self.terms[i]
-                    .forward
-                    .apply_accumulate(v, lambda, &mut partial)?;
+            let mut arena = PooledArena::get();
+            for tree in *trees {
+                self.schedule
+                    .execute_subset(v, &self.coeffs, tree, &mut partial, &mut arena)?;
             }
             Ok(partial)
         });
@@ -379,25 +391,42 @@ impl EquivariantLinear {
     /// `∂L/∂v` and accumulates `∂L/∂λ`, `∂L/∂bias` into `grads`.
     ///
     /// `∂L/∂v = Σ λ_d · F(d)ᵀ g = Σ λ_d · sign(d) · F(dᵀ) g` and
-    /// `∂L/∂λ_d = ⟨g, F(d) v⟩ = ⟨F(dᵀ) g · sign(d), v⟩` — both computed with
-    /// the fast path only.
+    /// `∂L/∂λ_d = ⟨g, F(d) v⟩ = ⟨F(dᵀ) g · sign(d), v⟩` — both computed
+    /// with the fast path only, through the transposed-term schedule so
+    /// every `F(dᵀ) g` shares its `σ` permute and contraction prefix with
+    /// its neighbours (and all scratch comes from the pooled arena).
     pub fn backward(&self, v: &Tensor, g: &Tensor, grads: &mut LayerGrads) -> Result<Tensor> {
         let mut grad_v = Tensor::zeros(self.n, self.k);
-        for (i, (term, &lambda)) in self.terms.iter().zip(&self.coeffs).enumerate() {
-            let bt = term.backward.apply(g)?; // F(dᵀ) g
-            let signed = term.adjoint_sign;
+        let mut arena = PooledArena::get();
+        self.backward_schedule.execute_map(g, &mut arena, |i, bt| {
+            // bt = F(dᵀ) g for term i (a reused scratch buffer).
+            let signed = self.terms[i].adjoint_sign;
             // ∂L/∂λ_i = sign · ⟨F(dᵀ) g, v⟩
             grads.coeffs[i] += signed * bt.dot(v);
+            let lambda = self.coeffs[i];
             if lambda != 0.0 {
-                grad_v.axpy(lambda * signed, &bt);
+                grad_v.axpy(lambda * signed, bt);
             }
-        }
+            Ok(())
+        })?;
         let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
         for (j, term) in self.bias_terms.iter().enumerate() {
             let bt = term.backward.apply(g)?; // order-0 scalar
             grads.bias_coeffs[j] += term.adjoint_sign * bt.dot(&one);
         }
         Ok(grad_v)
+    }
+
+    /// Compile-time statistics of the fused forward schedule (prefix-
+    /// sharing ratio, node counts).
+    pub fn schedule_stats(&self) -> ScheduleStats {
+        self.schedule.stats()
+    }
+
+    /// The compiled forward schedule (shared through the global
+    /// [`PlanCache`] with every layer of the same shape).
+    pub fn schedule(&self) -> &Arc<LayerSchedule> {
+        &self.schedule
     }
 
     /// Fresh zeroed gradient buffers for this layer.
@@ -636,6 +665,60 @@ mod tests {
         let seq = layer.forward(&v).unwrap();
         assert_eq!(batched.len(), 1);
         assert!(seq.allclose(&batched[0], 1e-9));
+    }
+
+    #[test]
+    fn forward_matches_per_term_reference_bitwise() {
+        let mut rng = Rng::new(82);
+        for group in [
+            Group::Symmetric,
+            Group::Orthogonal,
+            Group::SpecialOrthogonal,
+            Group::Symplectic,
+        ] {
+            let n = if group == Group::Symplectic { 4 } else { 3 };
+            let layer =
+                EquivariantLinear::new(group, n, 2, 2, Init::Normal(0.5), &mut rng).unwrap();
+            let v = Tensor::random(n, 2, &mut rng);
+            let fused = layer.forward(&v).unwrap();
+            let reference = layer.forward_per_term(&v).unwrap();
+            assert!(
+                fused.allclose(&reference, 0.0),
+                "group {group}: fused forward diverges by {}",
+                fused.max_abs_diff(&reference)
+            );
+        }
+    }
+
+    #[test]
+    fn single_term_layer_batch_of_one() {
+        // Regression: O(n) at (k, l) = (1, 1) has exactly one spanning
+        // diagram; the old single-item fan-out heuristic (`terms / 2`)
+        // computed zero term-workers for it. The batch-of-one path must
+        // both run and agree with the plain forward.
+        let mut rng = Rng::new(83);
+        let layer =
+            EquivariantLinear::new(Group::Orthogonal, 3, 1, 1, Init::Normal(0.5), &mut rng)
+                .unwrap();
+        assert_eq!(layer.coeffs.len(), 1, "test premise: single-term layer");
+        let v = Tensor::random(3, 1, &mut rng);
+        let batched = layer.forward_batch(std::slice::from_ref(&v)).unwrap();
+        assert_eq!(batched.len(), 1);
+        let seq = layer.forward(&v).unwrap();
+        assert!(seq.allclose(&batched[0], 1e-12));
+    }
+
+    #[test]
+    fn layers_share_schedules_through_the_global_cache() {
+        let mut rng = Rng::new(84);
+        let a = EquivariantLinear::new(Group::Symmetric, 5, 2, 2, Init::Zeros, &mut rng).unwrap();
+        let b = EquivariantLinear::new(Group::Symmetric, 5, 2, 2, Init::Zeros, &mut rng).unwrap();
+        assert!(
+            Arc::ptr_eq(a.schedule(), b.schedule()),
+            "same-shape layers must share one compiled schedule"
+        );
+        let stats = a.schedule_stats();
+        assert_eq!(stats.terms, a.coeffs.len());
     }
 
     #[test]

@@ -18,4 +18,4 @@ mod channels;
 mod linear;
 
 pub use channels::{ChannelEquivariantLinear, ChannelGrads};
-pub use linear::{transpose_sign, EquivariantLinear, Init, LayerGrads};
+pub use linear::{spanning_plans, transpose_sign, EquivariantLinear, Init, LayerGrads};

@@ -2,7 +2,7 @@
 //! and pointwise activations, with manual reverse-mode differentiation.
 
 use crate::error::{Error, Result};
-use crate::fastmult::Group;
+use crate::fastmult::{Group, ScheduleStats};
 use crate::layer::{EquivariantLinear, Init, LayerGrads};
 use crate::nn::activation::Activation;
 use crate::tensor::Tensor;
@@ -99,6 +99,17 @@ impl EquivariantNet {
     /// Total learnable parameter count.
     pub fn num_params(&self) -> usize {
         self.layers.iter().map(|l| l.num_params()).sum()
+    }
+
+    /// Aggregate fused-schedule statistics over every layer: how many
+    /// interior ops the DAG compilation shares per forward pass across the
+    /// whole network (reported by the benches and the serving metrics).
+    pub fn schedule_stats(&self) -> ScheduleStats {
+        let mut total = ScheduleStats::default();
+        for layer in &self.layers {
+            total.merge(&layer.schedule_stats());
+        }
+        total
     }
 
     /// Forward pass.

@@ -13,7 +13,46 @@ impl Tensor {
     ///
     /// numpy `transpose` semantics: output axis `q` carries input axis
     /// `axes[q]`, i.e. `out[I] = self[J]` where `J[axes[q]] = I[q]`.
+    ///
+    /// Write-once: the output buffer is filled in destination order with no
+    /// zero-fill pass, and any unmoved trailing axes are copied as whole
+    /// contiguous blocks (the blocked kernel — one `memcpy` per leading
+    /// multi-index instead of an elementwise odometer).
     pub fn permute_axes(&self, axes: &[usize]) -> Tensor {
+        self.check_axes(axes);
+        // Identity fast path — common when Factor finds the diagram already
+        // planar (e.g. every cross-only Brauer diagram).
+        if axes.iter().enumerate().all(|(i, &a)| i == a) {
+            return self.clone();
+        }
+        let mut data = Vec::with_capacity(self.data.len());
+        self.permute_scan(axes, |block| data.extend_from_slice(block));
+        Tensor {
+            n: self.n,
+            order: self.order,
+            data,
+        }
+    }
+
+    /// [`Tensor::permute_axes`] into a caller-provided buffer (typically a
+    /// recycled [`crate::fastmult::ScratchArena`] tensor). Every element of
+    /// `out` is overwritten, so stale contents are fine.
+    pub fn permute_axes_into(&self, axes: &[usize], out: &mut Tensor) {
+        self.check_axes(axes);
+        assert_eq!(out.n, self.n);
+        assert_eq!(out.order, self.order);
+        if axes.iter().enumerate().all(|(i, &a)| i == a) {
+            out.data.copy_from_slice(&self.data);
+            return;
+        }
+        let mut dst = 0usize;
+        self.permute_scan(axes, |block| {
+            out.data[dst..dst + block.len()].copy_from_slice(block);
+            dst += block.len();
+        });
+    }
+
+    fn check_axes(&self, axes: &[usize]) {
         assert_eq!(axes.len(), self.order, "axes arity must match order");
         debug_assert!({
             let mut seen = vec![false; self.order];
@@ -23,53 +62,57 @@ impl Tensor {
                 fresh
             })
         });
-        // Identity fast path — common when Factor finds the diagram already
-        // planar (e.g. every cross-only Brauer diagram).
-        if axes.iter().enumerate().all(|(i, &a)| i == a) {
-            return self.clone();
-        }
+    }
+
+    /// Core of the permute kernel: visit the permuted data in destination
+    /// order, emitting maximal contiguous source blocks. The longest suffix
+    /// of unmoved axes (`axes[q] == q`) forms a contiguous block in both
+    /// layouts, so only the leading axes need the odometer.
+    fn permute_scan(&self, axes: &[usize], mut emit: impl FnMut(&[f64])) {
         let n = self.n;
         let order = self.order;
-        let mut out = Tensor::zeros(n, order);
-        if order == 0 {
-            out.data[0] = self.data[0];
-            return out;
+        let mut tail = 0usize;
+        while tail < order && axes[order - 1 - tail] == order - 1 - tail {
+            tail += 1;
+        }
+        let lead = order - tail;
+        if lead == 0 {
+            emit(&self.data);
+            return;
         }
         // Strides of the input axes as seen from the output's odometer:
         // moving output axis a by 1 moves input axis axes[a] by its stride.
-        let mut in_stride = vec![0usize; order];
+        let mut strides = vec![0usize; order];
         {
             let mut s = 1usize;
-            let mut strides = vec![0usize; order];
             for a in (0..order).rev() {
                 strides[a] = s;
                 s *= n;
             }
-            for a in 0..order {
-                in_stride[a] = strides[axes[a]];
-            }
         }
-        let mut idx = vec![0usize; order];
+        let lead_strides: Vec<usize> = axes[..lead].iter().map(|&a| strides[a]).collect();
+        let block = n.pow(tail as u32);
+        let blocks = n.pow(lead as u32);
+        let mut idx = vec![0usize; lead];
         let mut src = 0usize;
-        for dst in 0..out.data.len() {
-            out.data[dst] = self.data[src];
+        for _ in 0..blocks {
+            emit(&self.data[src..src + block]);
             // odometer increment with incremental source offset update
-            let mut a = order;
+            let mut a = lead;
             loop {
                 if a == 0 {
                     break;
                 }
                 a -= 1;
                 idx[a] += 1;
-                src += in_stride[a];
+                src += lead_strides[a];
                 if idx[a] < n {
                     break;
                 }
                 idx[a] = 0;
-                src -= n * in_stride[a];
+                src -= n * lead_strides[a];
             }
         }
-        out
     }
 
     /// S_n Step-1 contraction (eq. 98): sum the generalised diagonal of the
@@ -78,24 +121,43 @@ impl Tensor {
     /// Cost: `n^{order-m} · n` multiplications-equivalents — the paper's
     /// eq. (115) term for one bottom-row block of size `m`.
     pub fn contract_trailing_diagonal(&self, m: usize) -> Tensor {
+        let keep = self.order.checked_sub(m).expect("m must be <= order");
+        let mut data = Vec::with_capacity(self.n.pow(keep as u32));
+        self.contract_diagonal_scan(m, |s| data.push(s));
+        Tensor {
+            n: self.n,
+            order: keep,
+            data,
+        }
+    }
+
+    /// [`Tensor::contract_trailing_diagonal`] into a caller-provided buffer
+    /// (write-once: every element of `out` is overwritten).
+    pub fn contract_trailing_diagonal_into(&self, m: usize, out: &mut Tensor) {
+        assert_eq!(out.n, self.n);
+        assert_eq!(out.order, self.order - m);
+        let mut slots = out.data.iter_mut();
+        self.contract_diagonal_scan(m, |s| {
+            *slots.next().expect("output sized n^(order-m)") = s;
+        });
+    }
+
+    fn contract_diagonal_scan(&self, m: usize, mut emit: impl FnMut(f64)) {
         assert!(m >= 1 && m <= self.order);
         let n = self.n;
         let keep = self.order - m;
-        let mut out = Tensor::zeros(n, keep);
         let block = n.pow(m as u32);
         // Diagonal stride within the trailing block: 1 + n + … + n^{m-1}.
         let dstride: usize = (0..m).map(|a| n.pow(a as u32)).sum();
-        for o in 0..out.data.len() {
-            let base = o * block;
+        for o in 0..n.pow(keep as u32) {
             let mut s = 0.0;
-            let mut off = base;
+            let mut off = o * block;
             for _ in 0..n {
                 s += self.data[off];
                 off += dstride;
             }
-            out.data[o] = s;
+            emit(s);
         }
-        out
     }
 
     /// O(n)/SO(n) Step-1 pair contraction (eq. 122): trace over the two
@@ -104,18 +166,44 @@ impl Tensor {
         self.contract_trailing_diagonal(2)
     }
 
+    /// [`Tensor::trace_trailing_pair`] into a caller-provided buffer.
+    pub fn trace_trailing_pair_into(&self, out: &mut Tensor) {
+        self.contract_trailing_diagonal_into(2, out)
+    }
+
     /// Sp(n) Step-1 pair contraction (eq. 138): ε-weighted trace over the
     /// two trailing axes, `out[M] = Σ_{j1 j2} ε_{j1 j2} self[M, j1, j2]`,
     /// with the symplectic form in the interleaved basis
     /// `1, 1', 2, 2', …, m, m'`: `ε_{2i, 2i+1} = +1`, `ε_{2i+1, 2i} = -1`.
     pub fn trace_trailing_pair_eps(&self) -> Tensor {
+        let keep = self.order.checked_sub(2).expect("order must be >= 2");
+        let mut data = Vec::with_capacity(self.n.pow(keep as u32));
+        self.trace_eps_scan(|s| data.push(s));
+        Tensor {
+            n: self.n,
+            order: keep,
+            data,
+        }
+    }
+
+    /// [`Tensor::trace_trailing_pair_eps`] into a caller-provided buffer
+    /// (write-once: every element of `out` is overwritten).
+    pub fn trace_trailing_pair_eps_into(&self, out: &mut Tensor) {
+        assert_eq!(out.n, self.n);
+        assert_eq!(out.order, self.order - 2);
+        let mut slots = out.data.iter_mut();
+        self.trace_eps_scan(|s| {
+            *slots.next().expect("output sized n^(order-2)") = s;
+        });
+    }
+
+    fn trace_eps_scan(&self, mut emit: impl FnMut(f64)) {
         assert!(self.order >= 2);
         let n = self.n;
         assert_eq!(n % 2, 0, "Sp(n) requires even n");
         let keep = self.order - 2;
-        let mut out = Tensor::zeros(n, keep);
         let block = n * n;
-        for o in 0..out.data.len() {
+        for o in 0..n.pow(keep as u32) {
             let base = o * block;
             let mut s = 0.0;
             for i in 0..n / 2 {
@@ -123,9 +211,8 @@ impl Tensor {
                 let b = 2 * i + 1;
                 s += self.data[base + a * n + b] - self.data[base + b * n + a];
             }
-            out.data[o] = s;
+            emit(s);
         }
-        out
     }
 
     /// SO(n) free-vertex Step-1 (eq. 157): contract the trailing `n - s`
@@ -140,10 +227,31 @@ impl Tensor {
     pub fn levi_civita_contract_trailing(&self, s: usize) -> Tensor {
         let n = self.n;
         assert!(s <= n);
-        let nb = n - s; // bottom free axes consumed
+        let nb = n - s;
         assert!(nb <= self.order);
+        let mut out = Tensor::zeros(n, self.order - nb + s);
+        self.levi_civita_accumulate(s, &mut out);
+        out
+    }
+
+    /// [`Tensor::levi_civita_contract_trailing`] into a caller-provided
+    /// buffer. Unlike the write-once primitives this op scatters (`+=`)
+    /// into its output, so the buffer is zeroed first.
+    pub fn levi_civita_contract_trailing_into(&self, s: usize, out: &mut Tensor) {
+        let n = self.n;
+        assert!(s <= n);
+        let nb = n - s;
+        assert!(nb <= self.order);
+        assert_eq!(out.n, n);
+        assert_eq!(out.order, self.order - nb + s);
+        out.data.fill(0.0);
+        self.levi_civita_accumulate(s, out);
+    }
+
+    fn levi_civita_accumulate(&self, s: usize, out: &mut Tensor) {
+        let n = self.n;
+        let nb = n - s; // bottom free axes consumed
         let keep = self.order - nb;
-        let mut out = Tensor::zeros(n, keep + s);
         let in_block = n.pow(nb as u32);
         let out_block = n.pow(s as u32);
         let perms = signed_permutations(n);
@@ -158,18 +266,38 @@ impl Tensor {
                 out.data[out_base + t_off] += *sign * self.data[in_base + b_off];
             }
         }
-        out
     }
 
     /// S_n Step-2 transfer, compact form (eq. 101): given trailing axis
     /// groups of sizes `groups[0], …, groups[d-1]` (summing to `order`),
     /// read the per-group diagonals: `out[j_1…j_d] = self[j_1 rep g_1, …]`.
+    /// Write-once: the output is filled in destination order, no zero-fill.
     pub fn extract_group_diagonals(&self, groups: &[usize]) -> Tensor {
+        let mut data = Vec::with_capacity(self.n.pow(groups.len() as u32));
+        self.extract_diagonals_scan(groups, |x| data.push(x));
+        Tensor {
+            n: self.n,
+            order: groups.len(),
+            data,
+        }
+    }
+
+    /// [`Tensor::extract_group_diagonals`] into a caller-provided buffer
+    /// (write-once: every element of `out` is overwritten).
+    pub fn extract_group_diagonals_into(&self, groups: &[usize], out: &mut Tensor) {
+        assert_eq!(out.n, self.n);
+        assert_eq!(out.order, groups.len());
+        let mut slots = out.data.iter_mut();
+        self.extract_diagonals_scan(groups, |x| {
+            *slots.next().expect("output sized n^groups") = x;
+        });
+    }
+
+    fn extract_diagonals_scan(&self, groups: &[usize], mut emit: impl FnMut(f64)) {
         let total: usize = groups.iter().sum();
         assert_eq!(total, self.order, "groups must cover all axes");
         let n = self.n;
         let d = groups.len();
-        let mut out = Tensor::zeros(n, d);
         // Stride of group g's repeated index in the input flat offset.
         let mut gstride = vec![0usize; d];
         {
@@ -189,8 +317,8 @@ impl Tensor {
         }
         let mut idx = vec![0usize; d];
         let mut src = 0usize;
-        for dst in 0..out.data.len() {
-            out.data[dst] = self.data[src];
+        for _ in 0..n.pow(d as u32) {
+            emit(self.data[src]);
             let mut g = d;
             loop {
                 if g == 0 {
@@ -206,7 +334,6 @@ impl Tensor {
                 src -= n * gstride[g];
             }
         }
-        out
     }
 
     /// Inverse of [`Tensor::extract_group_diagonals`]: embed a compact
@@ -741,6 +868,63 @@ mod tests {
             let got = x.scatter_broadcast_diagonals(&lead, &tail);
             assert!(got.allclose(&want, 0.0), "lead {lead:?} tail {tail:?}");
         }
+    }
+
+    #[test]
+    fn permute_axes_blocked_tail_matches_pointwise() {
+        // Trailing axes unmoved: exercises the contiguous-block fast path.
+        let mut rng = Rng::new(44);
+        let t = Tensor::random(3, 4, &mut rng);
+        for axes in [[1usize, 0, 2, 3], [2, 0, 1, 3], [1, 2, 0, 3]] {
+            let p = t.permute_axes(&axes);
+            for f in 0..p.len() {
+                let idx = unflat_index(3, 4, f);
+                let mut src = vec![0usize; 4];
+                for (q, &a) in axes.iter().enumerate() {
+                    src[a] = idx[q];
+                }
+                assert_eq!(p.data[f], t.get(&src), "axes {axes:?} at {idx:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ops() {
+        let mut rng = Rng::new(45);
+        let t = Tensor::random(3, 4, &mut rng);
+        // Stale buffers: the _into ops must fully overwrite (or zero) them.
+        let stale = |order: usize| {
+            let mut s = Tensor::zeros(3, order);
+            s.data.fill(7.25);
+            s
+        };
+        let axes = [2usize, 0, 3, 1];
+        let mut out = stale(4);
+        t.permute_axes_into(&axes, &mut out);
+        assert!(out.allclose(&t.permute_axes(&axes), 0.0));
+        let mut out = stale(4);
+        t.permute_axes_into(&[0, 1, 2, 3], &mut out);
+        assert!(out.allclose(&t, 0.0));
+        let mut out = stale(2);
+        t.contract_trailing_diagonal_into(2, &mut out);
+        assert!(out.allclose(&t.contract_trailing_diagonal(2), 0.0));
+        let mut out = stale(2);
+        t.trace_trailing_pair_into(&mut out);
+        assert!(out.allclose(&t.trace_trailing_pair(), 0.0));
+        let mut out = stale(2);
+        t.extract_group_diagonals_into(&[3, 1], &mut out);
+        assert!(out.allclose(&t.extract_group_diagonals(&[3, 1]), 0.0));
+        // ε-trace needs even n.
+        let t4 = Tensor::random(4, 3, &mut rng);
+        let mut out = Tensor::from_vec(4, 1, vec![9.0; 4]).unwrap();
+        t4.trace_trailing_pair_eps_into(&mut out);
+        assert!(out.allclose(&t4.trace_trailing_pair_eps(), 0.0));
+        // Levi-Civita scatters, so its _into must zero the stale buffer.
+        let t3 = Tensor::random(3, 3, &mut rng);
+        let want = t3.levi_civita_contract_trailing(1);
+        let mut out = stale(want.order);
+        t3.levi_civita_contract_trailing_into(1, &mut out);
+        assert!(out.allclose(&want, 0.0));
     }
 
     #[test]

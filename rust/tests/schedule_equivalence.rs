@@ -1,0 +1,271 @@
+//! Property tests for the fused execution schedule: for all four groups and
+//! random shapes up to the seed test sizes, schedule execution must be
+//! (a) accumulation-order-stable — repeated runs are bitwise identical —
+//! and (b) numerically equal (≤ 1e-12) to the per-term reference path, for
+//! forward and backward, single and batched.
+
+use equidiag::fastmult::{Group, PlanCache, ScratchArena};
+use equidiag::layer::{transpose_sign, EquivariantLinear, Init};
+use equidiag::tensor::Tensor;
+use equidiag::util::prop::{check, Config};
+use equidiag::util::Rng;
+
+fn random_group(rng: &mut Rng) -> Group {
+    match rng.below(4) {
+        0 => Group::Symmetric,
+        1 => Group::Orthogonal,
+        2 => Group::SpecialOrthogonal,
+        _ => Group::Symplectic,
+    }
+}
+
+/// Random `(n, k, l)` within the seed test sizes (k + l bounded so S_n
+/// spanning sets stay enumerable in a property loop).
+fn random_shape(group: Group, rng: &mut Rng) -> (usize, usize, usize) {
+    let n = if group == Group::Symplectic {
+        2 * (1 + rng.below(2)) // 2 or 4
+    } else {
+        2 + rng.below(3) // 2..4
+    };
+    let k = 1 + rng.below(3); // 1..=3
+    let max_l = 3usize.min(5 - k); // keep k + l <= 5
+    let l = 1 + rng.below(max_l);
+    (n, k, l)
+}
+
+/// Property: the fused forward equals the per-term reference **bitwise**
+/// (same accumulation order, same primitive arithmetic), and re-running it
+/// is bitwise stable.
+#[test]
+fn prop_fused_forward_is_bitwise_stable_and_equal_to_per_term() {
+    check(
+        Config::default().cases(32).seed(0x5CED0),
+        "schedule forward == per-term forward (bitwise)",
+        |rng| {
+            let group = random_group(rng);
+            let (n, k, l) = random_shape(group, rng);
+            let layer = EquivariantLinear::new(group, n, k, l, Init::Normal(0.5), rng)
+                .map_err(|e| e.to_string())?;
+            let v = Tensor::random(n, k, rng);
+            let fused = layer.forward(&v).map_err(|e| e.to_string())?;
+            let reference = layer.forward_per_term(&v).map_err(|e| e.to_string())?;
+            if fused.max_abs_diff(&reference) != 0.0 {
+                return Err(format!(
+                    "group {group} n={n} ({k},{l}): fused differs from per-term by {}",
+                    fused.max_abs_diff(&reference)
+                ));
+            }
+            let again = layer.forward(&v).map_err(|e| e.to_string())?;
+            if fused.max_abs_diff(&again) != 0.0 {
+                return Err(format!(
+                    "group {group} n={n} ({k},{l}): forward is not run-to-run stable"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: the batched paths (both the multi-item fan-out and the
+/// single-item subtree-parallel path) stay within 1e-12 of the per-term
+/// reference — only the batch-shared bias and subtree partial sums may
+/// reassociate.
+#[test]
+fn prop_batched_forward_within_1e12_of_per_term() {
+    check(
+        Config::default().cases(24).seed(0x5CED1),
+        "forward_batch within 1e-12 of per-term forward",
+        |rng| {
+            let group = random_group(rng);
+            let (n, k, l) = random_shape(group, rng);
+            let layer = EquivariantLinear::new(group, n, k, l, Init::Normal(0.5), rng)
+                .map_err(|e| e.to_string())?;
+            let batch = 1 + rng.below(5); // 1..5 — exercises both paths
+            let inputs: Vec<Tensor> = (0..batch).map(|_| Tensor::random(n, k, rng)).collect();
+            let batched = layer.forward_batch(&inputs).map_err(|e| e.to_string())?;
+            for (i, (v, b)) in inputs.iter().zip(&batched).enumerate() {
+                let want = layer.forward_per_term(v).map_err(|e| e.to_string())?;
+                if !want.allclose(b, 1e-12) {
+                    return Err(format!(
+                        "group {group} n={n} ({k},{l}) batch={batch} item {i}: diff {}",
+                        want.max_abs_diff(b)
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: the schedule-driven backward matches a per-term reference
+/// (plan-by-plan transposed application) to 1e-12 on both the coefficient
+/// gradients and the input gradient, and is bitwise run-to-run stable.
+#[test]
+fn prop_backward_matches_per_term_reference() {
+    check(
+        Config::default().cases(24).seed(0x5CED2),
+        "schedule backward == per-term backward",
+        |rng| {
+            let group = random_group(rng);
+            let (n, k, l) = random_shape(group, rng);
+            let layer = EquivariantLinear::new(group, n, k, l, Init::Normal(0.5), rng)
+                .map_err(|e| e.to_string())?;
+            let v = Tensor::random(n, k, rng);
+            let g = Tensor::random(n, l, rng);
+            let mut grads = layer.zero_grads();
+            let grad_v = layer.backward(&v, &g, &mut grads).map_err(|e| e.to_string())?;
+            // Per-term reference over the transposed plans (the pre-fusion
+            // path: one plan apply per term). The bias path is unchanged by
+            // fusion, so the weight terms are what we verify here.
+            let cache = PlanCache::global();
+            let mut want_gv = Tensor::zeros(n, k);
+            for (i, d) in layer.diagrams().enumerate() {
+                let plan = cache
+                    .get_or_build(group, &d.transpose(), n)
+                    .map_err(|e| e.to_string())?;
+                let bt = plan.apply(&g).map_err(|e| e.to_string())?;
+                let sign = transpose_sign(group, d, n);
+                let want_coeff = sign * bt.dot(&v);
+                if (grads.coeffs[i] - want_coeff).abs() > 1e-12 {
+                    return Err(format!(
+                        "group {group} n={n} ({k},{l}) coeff {i}: {} vs {want_coeff}",
+                        grads.coeffs[i]
+                    ));
+                }
+                let lambda = layer.coeffs[i];
+                if lambda != 0.0 {
+                    want_gv.axpy(lambda * sign, &bt);
+                }
+            }
+            if !grad_v.allclose(&want_gv, 1e-12) {
+                return Err(format!(
+                    "group {group} n={n} ({k},{l}): grad_v diff {}",
+                    grad_v.max_abs_diff(&want_gv)
+                ));
+            }
+            // Run-to-run stability (accumulation order is deterministic).
+            let mut grads2 = layer.zero_grads();
+            let grad_v2 = layer
+                .backward(&v, &g, &mut grads2)
+                .map_err(|e| e.to_string())?;
+            if grad_v.max_abs_diff(&grad_v2) != 0.0 {
+                return Err("backward is not run-to-run stable".into());
+            }
+            for (a, b) in grads.coeffs.iter().zip(&grads2.coeffs) {
+                if a != b {
+                    return Err("coeff grads are not run-to-run stable".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: batched backward equals repeated single backward (summed
+/// parameter gradients, ordered input gradients) to 1e-12.
+#[test]
+fn prop_backward_batch_matches_sequential() {
+    check(
+        Config::default().cases(16).seed(0x5CED3),
+        "backward_batch == sequential backward",
+        |rng| {
+            let group = random_group(rng);
+            let (n, k, l) = random_shape(group, rng);
+            let layer = EquivariantLinear::new(group, n, k, l, Init::Normal(0.5), rng)
+                .map_err(|e| e.to_string())?;
+            let batch = 1 + rng.below(4);
+            let inputs: Vec<Tensor> = (0..batch).map(|_| Tensor::random(n, k, rng)).collect();
+            let gs: Vec<Tensor> = (0..batch).map(|_| Tensor::random(n, l, rng)).collect();
+            let mut want = layer.zero_grads();
+            let mut want_gv = Vec::new();
+            for (v, g) in inputs.iter().zip(&gs) {
+                want_gv.push(layer.backward(v, g, &mut want).map_err(|e| e.to_string())?);
+            }
+            let mut got = layer.zero_grads();
+            let got_gv = layer
+                .backward_batch(&inputs, &gs, &mut got)
+                .map_err(|e| e.to_string())?;
+            for (a, b) in want_gv.iter().zip(&got_gv) {
+                if !a.allclose(b, 1e-12) {
+                    return Err(format!("grad_v diff {}", a.max_abs_diff(b)));
+                }
+            }
+            for (a, b) in want.coeffs.iter().zip(&got.coeffs) {
+                if (a - b).abs() > 1e-12 {
+                    return Err(format!("coeff grad {a} vs {b}"));
+                }
+            }
+            for (a, b) in want.bias_coeffs.iter().zip(&got.bias_coeffs) {
+                if (a - b).abs() > 1e-12 {
+                    return Err(format!("bias grad {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The acceptance-criterion invariant: once warmed, a forward pass through
+/// the schedule performs zero heap allocations as measured by the arena
+/// counters. Uses a dedicated arena (not the shared pool) so concurrent
+/// tests cannot perturb the count.
+#[test]
+fn steady_state_forward_is_allocation_free() {
+    let mut rng = Rng::new(0x5CED4);
+    for group in Group::ALL {
+        let n = if group == Group::Symplectic { 4 } else { 3 };
+        let mut layer =
+            EquivariantLinear::new(group, n, 2, 2, Init::Normal(0.5), &mut rng).unwrap();
+        // Zero the bias so the schedule output alone is the full forward.
+        for b in &mut layer.bias_coeffs {
+            *b = 0.0;
+        }
+        let v = Tensor::random(n, 2, &mut rng);
+        let mut arena = ScratchArena::new();
+        let mut out = Tensor::zeros(n, 2);
+        // Warm-up pass populates the arena buckets.
+        layer
+            .schedule()
+            .execute(&v, &layer.coeffs, &mut out, &mut arena)
+            .unwrap();
+        let warm = arena.allocations();
+        for _ in 0..5 {
+            out.data.fill(0.0);
+            layer
+                .schedule()
+                .execute(&v, &layer.coeffs, &mut out, &mut arena)
+                .unwrap();
+        }
+        assert_eq!(
+            arena.allocations(),
+            warm,
+            "group {group}: steady-state forward allocated"
+        );
+        // Per-term reference agrees, so the allocation-free path is also
+        // the correct one.
+        let want = layer.forward_per_term(&v).unwrap();
+        assert!(
+            out.allclose(&want, 0.0),
+            "group {group}: diff {}",
+            out.max_abs_diff(&want)
+        );
+    }
+}
+
+/// Schedule compilation is cached: constructing many same-shape layers
+/// compiles once and the schedule-cache hit counter climbs.
+#[test]
+fn schedule_cache_serves_repeat_layer_builds() {
+    let mut rng = Rng::new(0x5CED5);
+    let before = PlanCache::global().stats();
+    let a = EquivariantLinear::new(Group::Orthogonal, 6, 2, 2, Init::Zeros, &mut rng).unwrap();
+    let b = EquivariantLinear::new(Group::Orthogonal, 6, 2, 2, Init::Zeros, &mut rng).unwrap();
+    let after = PlanCache::global().stats();
+    // The second build must be served from the schedule cache (counters are
+    // process-global and monotonic, so >= holds under concurrent tests).
+    assert!(
+        after.schedule_hits >= before.schedule_hits + 2,
+        "second layer build should hit the schedule cache"
+    );
+    assert_eq!(a.schedule_stats(), b.schedule_stats());
+}
