@@ -105,6 +105,7 @@ fn main() -> equidiag::Result<()> {
                 loss: Loss::Mse,
                 log_every: 0,
                 seed: 7 + restart as u64,
+                ..TrainConfig::default()
             },
         )?;
         // Phase 2: fine-tune with decayed lr and a larger batch.
@@ -119,6 +120,7 @@ fn main() -> equidiag::Result<()> {
                 loss: Loss::Mse,
                 log_every: 0,
                 seed: 70 + restart as u64,
+                ..TrainConfig::default()
             },
         )?;
         let fin = r2.final_loss(20);

@@ -91,6 +91,7 @@ fn main() -> equidiag::Result<()> {
             batch_size: 8,
             loss: Loss::Mse,
             log_every: 100,
+            verbose: true,
             seed: 3,
         },
     )?;

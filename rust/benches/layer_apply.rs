@@ -13,14 +13,16 @@
 //!    practitioner would otherwise use).
 //!
 //! Emits `BENCH_fastmult.json` (fused vs per-term medians, arena allocation
-//! counters, prefix-sharing ratios) with a stable schema so the perf
-//! trajectory is machine-readable. Set `BENCH_FAST=1` for the CI smoke
-//! mode: smaller budgets, the fused-vs-per-term section and the JSON only.
+//! counters, prefix-sharing ratios) and `BENCH_batch.json` (batch-axis
+//! fused execution vs the item-parallel and per-term paths) with stable
+//! schemas so the perf trajectory is machine-readable. Set `BENCH_FAST=1`
+//! for the CI smoke mode: smaller budgets, the fused-vs-per-term and
+//! fused-batch sections and the JSONs only.
 
 use equidiag::fastmult::{matrix_mult, Group, ScratchArena};
 use equidiag::layer::{EquivariantLinear, Init};
 use equidiag::tensor::Tensor;
-use equidiag::util::{bench_median, Rng, Table};
+use equidiag::util::{bench_median, max_threads, parallel_map, Rng, Table};
 use std::time::Duration;
 
 fn fast_mode() -> bool {
@@ -153,6 +155,153 @@ fn fused_vs_per_term(budget: Duration, rng: &mut Rng) -> (Vec<FusedRow>, u64, u6
     (rows, steady_allocs, steady_reuses, high_water)
 }
 
+struct BatchRow {
+    group: &'static str,
+    n: usize,
+    k: usize,
+    l: usize,
+    terms: usize,
+    batch: usize,
+    per_term_us: f64,
+    item_parallel_us: f64,
+    fused_batch_us: f64,
+    speedup_vs_item_parallel: f64,
+    speedup_vs_per_term: f64,
+}
+
+/// Batch-axis fusion: one schedule walk per batch (`forward_batch`)
+/// against (a) the PR-1-style item-parallel path — per-item fused
+/// schedule, scoped threads across items — and (b) the sequential
+/// per-term reference. Emits `BENCH_batch.json`.
+fn fused_batch_section(budget: Duration, rng: &mut Rng) -> Vec<BatchRow> {
+    let batch = if fast_mode() { 16usize } else { 64 };
+    println!("\nfused-batch vs item-parallel vs per-term ({batch}-item batch):");
+    let mut table = Table::new(vec![
+        "group",
+        "n",
+        "(k,l)",
+        "terms",
+        "per-term",
+        "item-parallel",
+        "fused-batch",
+        "vs item-par",
+        "vs per-term",
+    ]);
+    let configs: &[(Group, usize, usize, usize)] = if fast_mode() {
+        &[
+            (Group::Symmetric, 5, 2, 2),
+            (Group::Orthogonal, 6, 3, 3),
+            (Group::Symplectic, 6, 2, 2),
+        ]
+    } else {
+        &[
+            (Group::Symmetric, 6, 2, 2),
+            (Group::Symmetric, 5, 3, 3),
+            (Group::Orthogonal, 8, 3, 3),
+            (Group::Orthogonal, 12, 2, 2),
+            (Group::Symplectic, 6, 2, 2),
+            (Group::SpecialOrthogonal, 3, 3, 2),
+        ]
+    };
+    let mut rows = Vec::new();
+    for &(group, n, k, l) in configs {
+        let layer = EquivariantLinear::new(group, n, k, l, Init::Normal(0.5), rng).unwrap();
+        let inputs: Vec<Tensor> = (0..batch).map(|_| Tensor::random(n, k, rng)).collect();
+        // Sanity: fused-batch agrees with per-item forward before timing.
+        let check = layer.forward_batch(&inputs).unwrap();
+        for (v, b) in inputs.iter().zip(&check) {
+            let want = layer.forward(v).unwrap();
+            assert!(
+                want.allclose(b, 1e-12),
+                "fused batch diverges by {}",
+                want.max_abs_diff(b)
+            );
+        }
+        let per_term = bench_median(budget, || {
+            for v in &inputs {
+                let _ = layer.forward_per_term(v).unwrap();
+            }
+        });
+        let item_parallel = bench_median(budget, || {
+            let _ = parallel_map(&inputs, max_threads(), |v| layer.forward(v).unwrap());
+        });
+        let fused = bench_median(budget, || {
+            let _ = layer.forward_batch(&inputs).unwrap();
+        });
+        let vs_item = item_parallel.median_s / fused.median_s;
+        let vs_term = per_term.median_s / fused.median_s;
+        table.row(vec![
+            group.name().to_string(),
+            format!("{n}"),
+            format!("({k},{l})"),
+            format!("{}", layer.diagrams().count()),
+            per_term.pretty(),
+            item_parallel.pretty(),
+            fused.pretty(),
+            format!("{vs_item:.2}x"),
+            format!("{vs_term:.2}x"),
+        ]);
+        rows.push(BatchRow {
+            group: group.name(),
+            n,
+            k,
+            l,
+            terms: layer.diagrams().count(),
+            batch,
+            per_term_us: per_term.median_s * 1e6,
+            item_parallel_us: item_parallel.median_s * 1e6,
+            fused_batch_us: fused.median_s * 1e6,
+            speedup_vs_item_parallel: vs_item,
+            speedup_vs_per_term: vs_term,
+        });
+    }
+    table.print();
+    rows
+}
+
+fn write_batch_json(path: &str, rows: &[BatchRow]) {
+    let best = rows
+        .iter()
+        .map(|r| r.speedup_vs_item_parallel)
+        .fold(f64::MIN, f64::max);
+    let configs: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"group\": \"{}\", \"n\": {}, \"k\": {}, \"l\": {}, \
+                 \"terms\": {}, \"batch\": {}, \"per_term_us\": {:.3}, \
+                 \"item_parallel_us\": {:.3}, \"fused_batch_us\": {:.3}, \
+                 \"speedup_vs_item_parallel\": {:.3}, \
+                 \"speedup_vs_per_term\": {:.3}}}",
+                r.group,
+                r.n,
+                r.k,
+                r.l,
+                r.terms,
+                r.batch,
+                r.per_term_us,
+                r.item_parallel_us,
+                r.fused_batch_us,
+                r.speedup_vs_item_parallel,
+                r.speedup_vs_per_term
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"batch_fused\",\n  \"fast_mode\": {fast},\n  \
+         \"threads\": {threads},\n  \
+         \"configs\": [\n{configs}\n  ],\n  \
+         \"best_speedup_vs_item_parallel\": {best:.3}\n}}\n",
+        fast = fast_mode(),
+        threads = max_threads(),
+        configs = configs.join(",\n"),
+    );
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
 fn write_json(
     path: &str,
     rows: &[FusedRow],
@@ -216,6 +365,9 @@ fn main() {
         steady_reuses,
         high_water,
     );
+
+    let batch_rows = fused_batch_section(budget, &mut rng);
+    write_batch_json("BENCH_batch.json", &batch_rows);
 
     if fast_mode() {
         println!("\n(BENCH_FAST set — skipping the refactor/materialised-W ablations)");

@@ -24,6 +24,44 @@ pub(crate) struct Batch {
     pub items: Vec<WorkItem>,
 }
 
+/// Flush every pending group whose *own* oldest item has waited out the
+/// window — younger models keep accumulating until their turn. A group's
+/// oldest item is found by min, not `first()`: submitters stamp `enqueued`
+/// before sending, so arrival order need not match stamp order. Returns
+/// the recomputed window anchor (min enqueue over what remains pending),
+/// or `None` in the outer `Option` if the dispatch channel closed.
+fn flush_expired(
+    pending: &mut HashMap<String, Vec<WorkItem>>,
+    dispatch: &Sender<Batch>,
+    metrics: &Metrics,
+    window: Duration,
+) -> Option<Option<Instant>> {
+    let expired: Vec<String> = pending
+        .iter()
+        .filter(|(_, g)| {
+            g.iter()
+                .map(|it| it.enqueued)
+                .min()
+                .is_some_and(|t| t.elapsed() >= window)
+        })
+        .map(|(model, _)| model.clone())
+        .collect();
+    for model in expired {
+        if let Some(items) = pending.remove(&model) {
+            metrics.on_batch(items.len());
+            if dispatch.send(Batch { model, items }).is_err() {
+                return None;
+            }
+        }
+    }
+    Some(
+        pending
+            .values()
+            .flat_map(|g| g.iter().map(|it| it.enqueued))
+            .min(),
+    )
+}
+
 /// Run the batching loop until the request channel closes. Flushes
 /// per-model groups when either `max_batch` is reached or the oldest item
 /// in the group exceeds `window`.
@@ -45,9 +83,11 @@ pub(crate) fn run(
         match rx.recv_timeout(timeout) {
             Ok(item) => {
                 let model = item.model.clone();
-                if oldest.is_none() {
-                    oldest = Some(item.enqueued);
-                }
+                // Keep `oldest` = min enqueue over everything pending:
+                // submitters stamp `enqueued` before sending, so an
+                // arriving item can carry an earlier stamp than the
+                // current anchor.
+                oldest = Some(oldest.map_or(item.enqueued, |o| o.min(item.enqueued)));
                 let group = pending.entry(model.clone()).or_default();
                 group.push(item);
                 if group.len() >= max_batch {
@@ -56,21 +96,34 @@ pub(crate) fn run(
                     if dispatch.send(Batch { model, items }).is_err() {
                         return;
                     }
-                    if pending.is_empty() {
-                        oldest = None;
+                    // Recompute the window anchor from what is still
+                    // pending: the flushed group's enqueue times must not
+                    // keep counting down the other models' windows (a
+                    // stale `oldest` fired them early).
+                    oldest = pending
+                        .values()
+                        .flat_map(|g| g.iter().map(|it| it.enqueued))
+                        .min();
+                }
+                // Under sustained traffic `recv_timeout` keeps returning
+                // Ok, so the Timeout arm below may never run — sweep
+                // expired windows here too, or a quiet model's partial
+                // batch would starve behind a busy model's stream.
+                if oldest.is_some_and(|t| t.elapsed() >= window) {
+                    match flush_expired(&mut pending, &dispatch, &metrics, window) {
+                        Some(o) => oldest = o,
+                        None => return,
                     }
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
-                // Window expired (or idle poll): flush everything pending.
-                if !pending.is_empty() {
-                    for (model, items) in pending.drain() {
-                        metrics.on_batch(items.len());
-                        if dispatch.send(Batch { model, items }).is_err() {
-                            return;
-                        }
-                    }
-                    oldest = None;
+                // Window expired (or idle poll): the timeout arm has the
+                // same stale-anchor hazard as the max_batch arm — the
+                // global `oldest` belongs to one group — so only the
+                // groups whose own window expired are flushed.
+                match flush_expired(&mut pending, &dispatch, &metrics, window) {
+                    Some(o) => oldest = o,
+                    None => return,
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
@@ -137,6 +190,78 @@ mod tests {
         tx.send(a).unwrap();
         let batch = drx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(batch.items.len(), 1);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    /// Regression: after a `max_batch` flush of one model, the window
+    /// anchor must be recomputed from the *remaining* pending items. The
+    /// old code left `oldest` pointing at the flushed model's first
+    /// enqueue time, firing other models' windows early.
+    #[test]
+    fn max_batch_flush_resets_window_anchor_for_other_models() {
+        // Margins: a1 ages 450ms of a 900ms window before the flush, so
+        // the stale anchor would fire b ~450ms after its enqueue while the
+        // fix waits the full 900ms — the 675ms probe sits 225ms clear of
+        // both, tolerating CI scheduler jitter.
+        let (tx, rx) = mpsc::channel::<WorkItem>();
+        let (dtx, drx) = mpsc::channel::<Batch>();
+        let metrics = Arc::new(Metrics::default());
+        let h = thread::spawn(move || run(rx, dtx, metrics, 2, Duration::from_millis(900)));
+        // a1 arrives, ages for half the window…
+        let (a1, _r1) = item("a");
+        tx.send(a1).unwrap();
+        thread::sleep(Duration::from_millis(450));
+        // …then b1 (fresh) and a2 (which completes model a's max_batch).
+        let (b1, _r2) = item("b");
+        tx.send(b1).unwrap();
+        let (a2, _r3) = item("a");
+        tx.send(a2).unwrap();
+        let first = drx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(first.model, "a");
+        assert_eq!(first.items.len(), 2);
+        // With the stale anchor, b's window inherited a1's age and fired
+        // ~450ms after b was enqueued; it must wait out its own 900ms.
+        assert!(
+            drx.recv_timeout(Duration::from_millis(675)).is_err(),
+            "model-b batch flushed before its own window expired"
+        );
+        let late = drx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(late.model, "b");
+        assert_eq!(late.items.len(), 1);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    /// The timeout arm must flush only the groups whose own window
+    /// expired — a younger model pending alongside the expiring one keeps
+    /// accumulating until its own deadline.
+    #[test]
+    fn timeout_flushes_only_expired_groups() {
+        let (tx, rx) = mpsc::channel::<WorkItem>();
+        let (dtx, drx) = mpsc::channel::<Batch>();
+        let metrics = Arc::new(Metrics::default());
+        let h = thread::spawn(move || run(rx, dtx, metrics, 100, Duration::from_millis(900)));
+        // a ages for half the window, then b arrives.
+        let (a1, _r1) = item("a");
+        tx.send(a1).unwrap();
+        thread::sleep(Duration::from_millis(450));
+        let (b1, _r2) = item("b");
+        tx.send(b1).unwrap();
+        // a's window expires first: a flushes alone, b stays pending.
+        let first = drx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(first.model, "a");
+        assert_eq!(first.items.len(), 1);
+        // b is ~450ms into its 900ms window at a's flush, so it fires
+        // ~450ms later; the 225ms probe sits 225ms clear of that deadline
+        // (and a buggy full drain would land b's batch inside it).
+        assert!(
+            drx.recv_timeout(Duration::from_millis(225)).is_err(),
+            "model-b flushed on model-a's deadline"
+        );
+        let late = drx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(late.model, "b");
+        assert_eq!(late.items.len(), 1);
         drop(tx);
         h.join().unwrap();
     }

@@ -2,6 +2,7 @@
 //! latency, plan/schedule-cache effectiveness and scratch-arena health.
 
 use crate::fastmult::{arena_stats, ops_shared_total, PlanCache};
+use crate::nn::fused_batch_stats;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -74,6 +75,15 @@ pub struct MetricsSnapshot {
     pub arena_reuses: u64,
     /// High-water mark of `f64`s held by any single scratch arena.
     pub arena_high_water_f64s: u64,
+    /// Whole batches executed through the batched model path — the fused
+    /// `[B, n^k]` walk (one schedule walk per layer per worker span) for
+    /// multi-item batches, the DAG-subtree fan-out for single-item ones
+    /// (process-wide, see [`crate::nn::fused_batch_stats`]).
+    pub fused_batches: u64,
+    /// Items those fused batches contained.
+    pub fused_items: u64,
+    /// Mean items per fused batch.
+    pub mean_fused_batch_size: f64,
 }
 
 impl Metrics {
@@ -145,6 +155,7 @@ impl Metrics {
         let items = self.batched_items.load(Ordering::Relaxed);
         let cache = PlanCache::global().stats();
         let arena = arena_stats();
+        let fused = fused_batch_stats();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -170,6 +181,9 @@ impl Metrics {
             arena_allocations: arena.allocations,
             arena_reuses: arena.reuses,
             arena_high_water_f64s: arena.high_water_f64s as u64,
+            fused_batches: fused.batches,
+            fused_items: fused.items,
+            mean_fused_batch_size: fused.mean_batch_size(),
         }
     }
 }
@@ -229,5 +243,23 @@ mod tests {
         assert!(s.ops_shared > 0, "prefix sharing not plumbed through");
         assert!(s.arena_allocations >= 1, "arena counters not plumbed");
         assert!(s.arena_high_water_f64s >= 1);
+        // Fused-batch counters are plumbed from the nn::model globals; run
+        // one batched network forward so they are non-trivial.
+        use crate::nn::{Activation, EquivariantNet};
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 2],
+            Activation::Relu,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let batch: Vec<Tensor> = (0..4).map(|_| Tensor::random(3, 2, &mut rng)).collect();
+        net.forward_batch(&batch).unwrap();
+        let s = m.snapshot();
+        assert!(s.fused_batches >= 1, "fused-batch counter not plumbed");
+        assert!(s.fused_items >= 4, "fused-item counter not plumbed");
+        assert!(s.mean_fused_batch_size > 0.0);
     }
 }

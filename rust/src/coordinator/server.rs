@@ -102,8 +102,12 @@ fn worker_loop(
             }
         };
         let model = registry.get(&batch.model);
-        // One plan, many inputs: the whole batch goes through the model's
-        // batched path in a single call (per-item errors stay per-item).
+        // One plan, many inputs: the whole batch is packed into contiguous
+        // `[B, n^k]` BatchTensors inside the model's batched path and each
+        // layer schedule is walked once per worker span — per-item errors
+        // stay per-item (malformed batches fall back to per-item
+        // forwards). Fused-execution stats surface in the metrics
+        // snapshot (`fused_batches` / `fused_items`).
         let results: Vec<Result<Tensor>> = match &model {
             Ok(m) => {
                 let t0 = Instant::now();
@@ -292,9 +296,12 @@ mod tests {
         assert_eq!(snap.completed, 100);
         assert!(snap.batches >= 1);
         assert!(snap.mean_batch_size >= 1.0);
-        // Every batch went through the batched execution path.
+        // Every batch went through the batched execution path, and the
+        // uniform batches took the fused `[B, n^k]` walk.
         assert!(snap.batch_execs >= 1);
         assert!(snap.mean_batch_exec_s >= 0.0);
+        assert!(snap.fused_batches >= 1);
+        assert!(snap.fused_items >= 1);
     }
 
     #[test]

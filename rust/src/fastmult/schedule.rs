@@ -28,11 +28,17 @@
 //!
 //! Schedules are compiled once per layer shape and cached in
 //! [`super::PlanCache`] alongside the `MultPlan`s.
+//!
+//! The `execute_batch*` variants walk the same DAG **once per batch** over
+//! a contiguous `[B, n^k]` [`BatchTensor`]: every node is evaluated for all
+//! `B` items before the walk moves on, with the batched tensor kernels
+//! sharing one precomputed index map across the items (see
+//! `docs/batched_execution.md`).
 
 use super::plan::is_identity;
 use super::{sp, Group, MultPlan};
 use crate::error::{Error, Result};
-use crate::tensor::Tensor;
+use crate::tensor::{BatchTensor, Tensor};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -118,6 +124,37 @@ impl ScratchArena {
     /// Return a tensor's buffer to the pool.
     pub fn release(&mut self, t: Tensor) {
         self.buckets.entry(t.data.len()).or_default().push(t.data);
+    }
+
+    /// A batch of `batch` tensors of shape `(n, order)` backed by one
+    /// recycled contiguous buffer (`batch · n^order` f64s). Buckets are
+    /// keyed by total length, so batched and per-item intermediates share
+    /// the same pool — an arena warmed at batch size `B` serves every
+    /// later `B`-item walk with zero heap allocations.
+    pub fn acquire_batch(&mut self, n: usize, order: usize, batch: usize) -> BatchTensor {
+        let len = batch * n.pow(order as u32);
+        let data = match self.buckets.get_mut(&len).and_then(|b| b.pop()) {
+            Some(buf) => {
+                self.reuses += 1;
+                ARENA_REUSES.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                self.allocations += 1;
+                ARENA_ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+                self.held_f64s += len;
+                ARENA_HIGH_WATER.fetch_max(self.held_f64s, Ordering::Relaxed);
+                vec![0.0; len]
+            }
+        };
+        debug_assert_eq!(data.len(), len);
+        BatchTensor::from_raw(n, order, batch, data)
+    }
+
+    /// Return a batch's buffer to the pool.
+    pub fn release_batch(&mut self, t: BatchTensor) {
+        let data = t.into_raw();
+        self.buckets.entry(data.len()).or_default().push(data);
     }
 
     /// Buffers this arena allocated fresh from the heap.
@@ -776,6 +813,334 @@ impl LayerSchedule {
         result
     }
 
+    // -----------------------------------------------------------------
+    // Batch-axis fused execution
+    // -----------------------------------------------------------------
+    //
+    // The batched walk visits each DAG node ONCE PER BATCH: a node's
+    // output is a `[B, n^order]` BatchTensor computed by the batched
+    // tensor kernels, which build their odometer index maps once and
+    // replay them over the items. Per item, the arithmetic (and its
+    // order) is exactly that of the per-item walk, so `execute_batch` is
+    // bitwise identical item-by-item to `execute` — only the schedule
+    // traversal, index computation and λ-scatter bookkeeping are
+    // amortised across the batch. See `docs/batched_execution.md`.
+
+    fn check_batch_input(&self, v: &BatchTensor) -> Result<()> {
+        if v.order() != self.k || v.n() != self.n {
+            return Err(Error::ShapeMismatch {
+                expected: format!("order {} batch over R^{}", self.k, self.n),
+                got: format!("order {} over R^{}", v.order(), v.n()),
+            });
+        }
+        Ok(())
+    }
+
+    fn check_batch_output(&self, out: &BatchTensor, batch: usize) -> Result<()> {
+        if out.order() != self.l || out.n() != self.n || out.batch() != batch {
+            return Err(Error::ShapeMismatch {
+                expected: format!(
+                    "order {} output batch of {} over R^{}",
+                    self.l, batch, self.n
+                ),
+                got: format!(
+                    "order {} batch of {} over R^{}",
+                    out.order(),
+                    out.batch(),
+                    out.n()
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    /// Batched [`LayerSchedule::execute`]:
+    /// `out[b] += Σ_i coeffs[i] · F(d_i)(v[b])` for every item `b`, with
+    /// the whole DAG walked **once per batch**. Shared prefixes now
+    /// amortise across terms *and* items, and each λ-weighted sink is one
+    /// blocked axpy over `B · n^l` contiguous lanes.
+    pub fn execute_batch(
+        &self,
+        v: &BatchTensor,
+        coeffs: &[f64],
+        out: &mut BatchTensor,
+        arena: &mut ScratchArena,
+    ) -> Result<()> {
+        self.execute_batch_subset(v, coeffs, &self.all_sinks, out, arena)
+    }
+
+    /// [`LayerSchedule::execute_batch`] restricted to the given sink
+    /// indices (still reading full-length `coeffs`). Used with
+    /// [`LayerSchedule::subtrees`] for DAG-level parallelism over a whole
+    /// batch.
+    pub fn execute_batch_subset(
+        &self,
+        v: &BatchTensor,
+        coeffs: &[f64],
+        sinks: &[usize],
+        out: &mut BatchTensor,
+        arena: &mut ScratchArena,
+    ) -> Result<()> {
+        self.check_batch_input(v)?;
+        self.check_batch_output(out, v.batch())?;
+        self.check_coeffs(coeffs)?;
+        let mut refs = vec![0usize; self.nodes.len()];
+        for &si in sinks {
+            if coeffs[si] != 0.0 {
+                self.count_chain(self.sinks[si].src, &mut refs);
+            }
+        }
+        let mut bufs: Vec<Option<BatchTensor>> = (0..self.nodes.len()).map(|_| None).collect();
+        for &si in sinks {
+            let coeff = coeffs[si];
+            if coeff == 0.0 {
+                continue;
+            }
+            let sink = &self.sinks[si];
+            self.materialize_batch(sink.src, v, &mut bufs, arena);
+            match &sink.kind {
+                SinkKind::AxpyPermuted { axes } => {
+                    self.resolve_batch(sink.src, v, &bufs)
+                        .axpy_permuted_into(coeff, axes, out);
+                }
+                SinkKind::ScatterDiagonals { lead, tail, axes } => {
+                    self.resolve_batch(sink.src, v, &bufs)
+                        .scatter_broadcast_diagonals_axpy(lead, tail, axes, coeff, out);
+                }
+                SinkKind::EpsExpand { t, axes } => {
+                    let tmp = self.eps_expand_batch(sink.src, *t, v, &bufs, arena);
+                    tmp.axpy_permuted_into(coeff, axes, out);
+                    arena.release_batch(tmp);
+                }
+            }
+            self.release_chain_batch(sink.src, &mut refs, &mut bufs, arena);
+        }
+        self.drain_batch(bufs, arena);
+        Ok(())
+    }
+
+    /// Batched [`LayerSchedule::execute_map`]: every term's unweighted
+    /// output is materialised for the **whole batch** (`[B, n^l]`) in term
+    /// order and handed to `f` — the batched backward walks the transposed
+    /// DAG once per batch and reads per-item gradient contributions out of
+    /// each term's batch. The batch passed to `f` is a reused scratch
+    /// buffer, valid only for the duration of the call.
+    pub fn execute_batch_map<F>(
+        &self,
+        v: &BatchTensor,
+        arena: &mut ScratchArena,
+        mut f: F,
+    ) -> Result<()>
+    where
+        F: FnMut(usize, &BatchTensor) -> Result<()>,
+    {
+        self.check_batch_input(v)?;
+        let mut refs = vec![0usize; self.nodes.len()];
+        for sink in &self.sinks {
+            self.count_chain(sink.src, &mut refs);
+        }
+        let mut bufs: Vec<Option<BatchTensor>> = (0..self.nodes.len()).map(|_| None).collect();
+        let mut term_out = arena.acquire_batch(self.n, self.l, v.batch());
+        let mut result = Ok(());
+        for (si, sink) in self.sinks.iter().enumerate() {
+            self.materialize_batch(sink.src, v, &mut bufs, arena);
+            term_out.data_mut().fill(0.0);
+            match &sink.kind {
+                SinkKind::AxpyPermuted { axes } => {
+                    self.resolve_batch(sink.src, v, &bufs)
+                        .axpy_permuted_into(1.0, axes, &mut term_out);
+                }
+                SinkKind::ScatterDiagonals { lead, tail, axes } => {
+                    self.resolve_batch(sink.src, v, &bufs)
+                        .scatter_broadcast_diagonals_axpy(lead, tail, axes, 1.0, &mut term_out);
+                }
+                SinkKind::EpsExpand { t, axes } => {
+                    let tmp = self.eps_expand_batch(sink.src, *t, v, &bufs, arena);
+                    tmp.axpy_permuted_into(1.0, axes, &mut term_out);
+                    arena.release_batch(tmp);
+                }
+            }
+            // As in `execute_map`: on a callback error, stop but still
+            // fall through so every buffer returns to the arena.
+            if let Err(e) = f(si, &term_out) {
+                result = Err(e);
+                break;
+            }
+            self.release_chain_batch(sink.src, &mut refs, &mut bufs, arena);
+        }
+        arena.release_batch(term_out);
+        self.drain_batch(bufs, arena);
+        result
+    }
+
+    /// Batched [`LayerSchedule::execute_multi`]: one DAG walk per batch
+    /// feeding several coefficient rows at once —
+    /// `outs[r][b] += Σ_i coeff_rows[r][i] · F(d_i)(v[b])`. The channel
+    /// layer's batched forward: interior nodes run once per (input
+    /// channel, batch), only the diagonal-support scatters repeat per
+    /// output channel.
+    pub fn execute_batch_multi(
+        &self,
+        v: &BatchTensor,
+        coeff_rows: &[Vec<f64>],
+        outs: &mut [BatchTensor],
+        arena: &mut ScratchArena,
+    ) -> Result<()> {
+        if coeff_rows.len() != outs.len() {
+            return Err(Error::ShapeMismatch {
+                expected: format!("{} outputs", coeff_rows.len()),
+                got: format!("{}", outs.len()),
+            });
+        }
+        self.check_batch_input(v)?;
+        for out in outs.iter() {
+            self.check_batch_output(out, v.batch())?;
+        }
+        for row in coeff_rows {
+            self.check_coeffs(row)?;
+        }
+        let mut refs = vec![0usize; self.nodes.len()];
+        let active: Vec<bool> = (0..self.sinks.len())
+            .map(|si| coeff_rows.iter().any(|r| r[si] != 0.0))
+            .collect();
+        for (si, sink) in self.sinks.iter().enumerate() {
+            if active[si] {
+                self.count_chain(sink.src, &mut refs);
+            }
+        }
+        let mut bufs: Vec<Option<BatchTensor>> = (0..self.nodes.len()).map(|_| None).collect();
+        for (si, sink) in self.sinks.iter().enumerate() {
+            if !active[si] {
+                continue;
+            }
+            self.materialize_batch(sink.src, v, &mut bufs, arena);
+            match &sink.kind {
+                SinkKind::EpsExpand { t, axes } => {
+                    let tmp = self.eps_expand_batch(sink.src, *t, v, &bufs, arena);
+                    for (row, out) in coeff_rows.iter().zip(outs.iter_mut()) {
+                        if row[si] != 0.0 {
+                            tmp.axpy_permuted_into(row[si], axes, out);
+                        }
+                    }
+                    arena.release_batch(tmp);
+                }
+                kind => {
+                    let x = self.resolve_batch(sink.src, v, &bufs);
+                    for (row, out) in coeff_rows.iter().zip(outs.iter_mut()) {
+                        let coeff = row[si];
+                        if coeff == 0.0 {
+                            continue;
+                        }
+                        match kind {
+                            SinkKind::AxpyPermuted { axes } => {
+                                x.axpy_permuted_into(coeff, axes, out)
+                            }
+                            SinkKind::ScatterDiagonals { lead, tail, axes } => {
+                                x.scatter_broadcast_diagonals_axpy(lead, tail, axes, coeff, out)
+                            }
+                            SinkKind::EpsExpand { .. } => unreachable!("handled above"),
+                        }
+                    }
+                }
+            }
+            self.release_chain_batch(sink.src, &mut refs, &mut bufs, arena);
+        }
+        self.drain_batch(bufs, arena);
+        Ok(())
+    }
+
+    /// Batched twin of `materialize`: every node output is a `[B, …]`
+    /// batch computed by the batched kernels.
+    fn materialize_batch(
+        &self,
+        src: Src,
+        v: &BatchTensor,
+        bufs: &mut [Option<BatchTensor>],
+        arena: &mut ScratchArena,
+    ) {
+        let Src::Node(i) = src else {
+            return;
+        };
+        if bufs[i].is_some() {
+            return;
+        }
+        let parent_src = self.nodes[i].op.src();
+        self.materialize_batch(parent_src, v, bufs, arena);
+        let mut out = arena.acquire_batch(self.n, self.nodes[i].order, v.batch());
+        {
+            let parent = self.resolve_batch(parent_src, v, bufs);
+            match &self.nodes[i].op {
+                Op::Permute { axes, .. } => parent.permute_axes_into(axes, &mut out),
+                Op::ContractDiagonal { m, .. } => {
+                    parent.contract_trailing_diagonal_into(*m, &mut out)
+                }
+                Op::TracePair { .. } => parent.trace_trailing_pair_into(&mut out),
+                Op::TracePairEps { .. } => parent.trace_trailing_pair_eps_into(&mut out),
+                Op::LeviCivita { s, .. } => {
+                    parent.levi_civita_contract_trailing_into(*s, &mut out)
+                }
+                Op::ExtractDiagonals { groups, .. } => {
+                    parent.extract_group_diagonals_into(groups, &mut out)
+                }
+            }
+        }
+        bufs[i] = Some(out);
+    }
+
+    fn resolve_batch<'a>(
+        &self,
+        src: Src,
+        v: &'a BatchTensor,
+        bufs: &'a [Option<BatchTensor>],
+    ) -> &'a BatchTensor {
+        match src {
+            Src::Input => v,
+            Src::Node(i) => bufs[i].as_ref().expect("node materialised before use"),
+        }
+    }
+
+    /// Batched Sp(n) top-pair expansion of the chain output.
+    fn eps_expand_batch(
+        &self,
+        src: Src,
+        t: usize,
+        v: &BatchTensor,
+        bufs: &[Option<BatchTensor>],
+        arena: &mut ScratchArena,
+    ) -> BatchTensor {
+        let x = self.resolve_batch(src, v, bufs);
+        let order = x.order() + 2 * t;
+        let (n, batch) = (x.n(), x.batch());
+        let mut tmp = arena.acquire_batch(n, order, batch);
+        sp::eps_top_expand_batch_into(x, t, &mut tmp);
+        tmp
+    }
+
+    fn release_chain_batch(
+        &self,
+        src: Src,
+        refs: &mut [usize],
+        bufs: &mut [Option<BatchTensor>],
+        arena: &mut ScratchArena,
+    ) {
+        let mut cur = src;
+        while let Src::Node(i) = cur {
+            refs[i] -= 1;
+            if refs[i] == 0 {
+                if let Some(t) = bufs[i].take() {
+                    arena.release_batch(t);
+                }
+            }
+            cur = self.nodes[i].op.src();
+        }
+    }
+
+    fn drain_batch(&self, bufs: Vec<Option<BatchTensor>>, arena: &mut ScratchArena) {
+        for buf in bufs.into_iter().flatten() {
+            arena.release_batch(buf);
+        }
+    }
+
     /// Compute (recursively) every not-yet-materialised node on the chain
     /// ending at `src`, drawing output buffers from the arena and writing
     /// them with the write-once `_into` primitives.
@@ -1081,6 +1446,187 @@ mod tests {
                 .unwrap();
             assert!(got.allclose(&want, 0.0));
         }
+    }
+
+    #[test]
+    fn execute_batch_matches_per_item_execute_bitwise() {
+        let mut rng = Rng::new(906);
+        for (group, n, k, l) in [
+            (Group::Symmetric, 3usize, 2usize, 2usize),
+            (Group::Symmetric, 3, 3, 2),
+            (Group::Orthogonal, 3, 2, 2),
+            (Group::Symplectic, 4, 2, 2),
+            (Group::SpecialOrthogonal, 3, 2, 2),
+            (Group::SpecialOrthogonal, 3, 2, 1), // jellyfish-only spanning set
+        ] {
+            let plans = spanning_plans(group, n, k, l).unwrap();
+            let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+            let coeffs = random_coeffs(plans.len(), &mut rng);
+            let items: Vec<Tensor> = (0..3).map(|_| Tensor::random(n, k, &mut rng)).collect();
+            let vb = BatchTensor::pack(&items).unwrap();
+            let mut got = BatchTensor::zeros(n, l, 3);
+            let mut arena = ScratchArena::new();
+            schedule
+                .execute_batch(&vb, &coeffs, &mut got, &mut arena)
+                .unwrap();
+            for (b, v) in items.iter().enumerate() {
+                let mut want = Tensor::zeros(n, l);
+                schedule.execute(v, &coeffs, &mut want, &mut arena).unwrap();
+                assert!(
+                    got.item_tensor(b).allclose(&want, 0.0),
+                    "{group} ({k},{l}) item {b}: fused batch diverges by {}",
+                    got.item_tensor(b).max_abs_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn execute_batch_subtree_subsets_compose_to_the_whole() {
+        for (group, n, k, l) in [
+            (Group::Symmetric, 3usize, 2usize, 2usize),
+            (Group::Symplectic, 4, 2, 2),
+        ] {
+            let plans = spanning_plans(group, n, k, l).unwrap();
+            let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+            let mut rng = Rng::new(910);
+            let coeffs = random_coeffs(schedule.terms(), &mut rng);
+            let items: Vec<Tensor> = (0..3).map(|_| Tensor::random(n, k, &mut rng)).collect();
+            let vb = BatchTensor::pack(&items).unwrap();
+            let mut arena = ScratchArena::new();
+            let mut whole = BatchTensor::zeros(n, l, 3);
+            schedule
+                .execute_batch(&vb, &coeffs, &mut whole, &mut arena)
+                .unwrap();
+            // Executing subtree by subtree over the batch equals one full
+            // batched execute (subtrees share no nodes).
+            let mut pieced = BatchTensor::zeros(n, l, 3);
+            for tree in schedule.subtrees() {
+                schedule
+                    .execute_batch_subset(&vb, &coeffs, tree, &mut pieced, &mut arena)
+                    .unwrap();
+            }
+            assert!(
+                whole.max_abs_diff(&pieced) <= 1e-12,
+                "{group}: batched subtree subsets diverge"
+            );
+        }
+    }
+
+    #[test]
+    fn execute_batch_map_matches_per_item_terms() {
+        let mut rng = Rng::new(907);
+        for (group, n, k, l) in [
+            (Group::Symmetric, 3usize, 2usize, 2usize),
+            (Group::Symplectic, 4, 2, 2),
+        ] {
+            let plans = spanning_plans(group, n, k, l).unwrap();
+            let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+            let items: Vec<Tensor> = (0..3).map(|_| Tensor::random(n, k, &mut rng)).collect();
+            let vb = BatchTensor::pack(&items).unwrap();
+            let mut arena = ScratchArena::new();
+            schedule
+                .execute_batch_map(&vb, &mut arena, |i, term_batch| {
+                    for (b, v) in items.iter().enumerate() {
+                        let want = plans[i].apply(v).unwrap();
+                        assert!(
+                            term_batch.item_tensor(b).allclose(&want, 0.0),
+                            "{group} term {i} item {b}"
+                        );
+                    }
+                    Ok(())
+                })
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn execute_batch_multi_matches_row_by_row() {
+        let mut rng = Rng::new(908);
+        let (group, n, k, l) = (Group::Orthogonal, 3, 2, 2);
+        let plans = spanning_plans(group, n, k, l).unwrap();
+        let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+        let rows: Vec<Vec<f64>> = (0..3)
+            .map(|_| random_coeffs(plans.len(), &mut rng))
+            .collect();
+        let items: Vec<Tensor> = (0..4).map(|_| Tensor::random(n, k, &mut rng)).collect();
+        let vb = BatchTensor::pack(&items).unwrap();
+        let mut arena = ScratchArena::new();
+        let mut outs: Vec<BatchTensor> = (0..3).map(|_| BatchTensor::zeros(n, l, 4)).collect();
+        schedule
+            .execute_batch_multi(&vb, &rows, &mut outs, &mut arena)
+            .unwrap();
+        for (row, got) in rows.iter().zip(&outs) {
+            let mut want = BatchTensor::zeros(n, l, 4);
+            schedule
+                .execute_batch(&vb, row, &mut want, &mut arena)
+                .unwrap();
+            assert!(got.max_abs_diff(&want) == 0.0);
+        }
+    }
+
+    #[test]
+    fn batched_arena_reaches_zero_allocation_steady_state() {
+        let mut rng = Rng::new(909);
+        let plans = spanning_plans(Group::Symmetric, 3, 3, 2).unwrap();
+        let schedule = LayerSchedule::compile(Group::Symmetric, 3, 3, 2, &plans).unwrap();
+        let coeffs = random_coeffs(plans.len(), &mut rng);
+        let items: Vec<Tensor> = (0..4).map(|_| Tensor::random(3, 3, &mut rng)).collect();
+        let vb = BatchTensor::pack(&items).unwrap();
+        let mut arena = ScratchArena::new();
+        let mut out = BatchTensor::zeros(3, 2, 4);
+        schedule
+            .execute_batch(&vb, &coeffs, &mut out, &mut arena)
+            .unwrap();
+        let warm = arena.allocations();
+        assert!(warm > 0, "cold batched pass must allocate");
+        for _ in 0..3 {
+            out.data_mut().fill(0.0);
+            schedule
+                .execute_batch(&vb, &coeffs, &mut out, &mut arena)
+                .unwrap();
+        }
+        assert_eq!(
+            arena.allocations(),
+            warm,
+            "steady-state execute_batch must not allocate"
+        );
+        assert!(arena.reuses() > 0);
+    }
+
+    #[test]
+    fn execute_batch_shape_checks() {
+        let plans = spanning_plans(Group::Symmetric, 3, 2, 2).unwrap();
+        let schedule = LayerSchedule::compile(Group::Symmetric, 3, 2, 2, &plans).unwrap();
+        let coeffs = vec![0.0; schedule.terms()];
+        let mut arena = ScratchArena::new();
+        // Wrong input order.
+        assert!(schedule
+            .execute_batch(
+                &BatchTensor::zeros(3, 1, 2),
+                &coeffs,
+                &mut BatchTensor::zeros(3, 2, 2),
+                &mut arena
+            )
+            .is_err());
+        // Wrong output order.
+        assert!(schedule
+            .execute_batch(
+                &BatchTensor::zeros(3, 2, 2),
+                &coeffs,
+                &mut BatchTensor::zeros(3, 1, 2),
+                &mut arena
+            )
+            .is_err());
+        // Mismatched batch sizes.
+        assert!(schedule
+            .execute_batch(
+                &BatchTensor::zeros(3, 2, 2),
+                &coeffs,
+                &mut BatchTensor::zeros(3, 2, 3),
+                &mut arena
+            )
+            .is_err());
     }
 
     #[test]

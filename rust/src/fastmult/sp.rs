@@ -12,7 +12,7 @@
 //!    `(m1, m2)` — `n` non-zero positions per pair, signed.
 
 use crate::diagram::PlanarLayout;
-use crate::tensor::Tensor;
+use crate::tensor::{BatchTensor, Tensor};
 
 /// Apply the planar middle Brauer diagram under the functor X. Input in
 /// planar bottom layout; output in planar top layout, order `l = 2t + d`.
@@ -99,6 +99,68 @@ pub(crate) fn eps_top_expand_into(x: &Tensor, t: usize, out: &mut Tensor) {
                 break;
             }
             choice[p] = 0;
+        }
+    }
+}
+
+/// Batched [`eps_top_expand_into`]: the `(prefix offset, sign)` table of
+/// the ε-pair choices is built once and replayed over every item of the
+/// batch, so each item is a sequence of block copies/negations — per item
+/// bitwise identical to the per-item kernel.
+pub(crate) fn eps_top_expand_batch_into(x: &BatchTensor, t: usize, out: &mut BatchTensor) {
+    let n = x.n();
+    assert_eq!(out.n(), n);
+    assert_eq!(out.order(), x.order() + 2 * t);
+    assert_eq!(out.batch(), x.batch());
+    out.data_mut().fill(0.0);
+    let tail = x.item_len();
+    let olen = out.item_len();
+    if t == 0 {
+        out.data_mut().copy_from_slice(x.data());
+        return;
+    }
+    // One pass over the choice odometer collecting (base, sign > 0).
+    let mut bases: Vec<(usize, bool)> = Vec::with_capacity(n.pow(t as u32));
+    let mut choice = vec![0usize; t];
+    'outer: loop {
+        let mut sign = 1.0;
+        let mut prefix = 0usize;
+        for &c in &choice {
+            let i = c / 2;
+            let (a, b, s) = if c % 2 == 0 {
+                (2 * i, 2 * i + 1, 1.0)
+            } else {
+                (2 * i + 1, 2 * i, -1.0)
+            };
+            sign *= s;
+            prefix = ((prefix * n) + a) * n + b;
+        }
+        bases.push((prefix * tail, sign > 0.0));
+        let mut p = t;
+        loop {
+            if p == 0 {
+                break 'outer;
+            }
+            p -= 1;
+            choice[p] += 1;
+            if choice[p] < n {
+                break;
+            }
+            choice[p] = 0;
+        }
+    }
+    for bi in 0..x.batch() {
+        let src = x.item(bi);
+        let dst_base = bi * olen;
+        for &(base, positive) in &bases {
+            let dst = &mut out.data_mut()[dst_base + base..dst_base + base + tail];
+            if positive {
+                dst.copy_from_slice(src);
+            } else {
+                for (o, &xv) in dst.iter_mut().zip(src) {
+                    *o = -xv;
+                }
+            }
         }
     }
 }

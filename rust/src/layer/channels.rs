@@ -20,7 +20,7 @@ use super::linear::spanning_diagrams;
 use crate::diagram::Diagram;
 use crate::error::{Error, Result};
 use crate::fastmult::{Group, LayerSchedule, MultPlan, PlanCache, PooledArena};
-use crate::tensor::Tensor;
+use crate::tensor::{BatchTensor, Tensor};
 use crate::util::Rng;
 use std::sync::Arc;
 
@@ -180,6 +180,136 @@ impl ChannelEquivariantLinear {
             }
         }
         Ok(out)
+    }
+
+    /// Batched forward: one batch item is a `c_in`-channel input, the
+    /// whole batch is packed **per channel** into `[B, n^k]` tensors and
+    /// each input channel makes a single pass over the fused schedule for
+    /// the entire batch ([`LayerSchedule::execute_batch_multi`]): interior
+    /// DAG work runs `c_in` times per batch — not `c_in · B` times — with
+    /// index maps shared across items, and only the cheap diagonal-support
+    /// scatters repeat per output channel. Returns `B` items of `c_out`
+    /// channels each.
+    pub fn forward_batch(&self, x: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        if x.is_empty() {
+            return Ok(Vec::new());
+        }
+        for item in x {
+            self.check_channels(item)?;
+        }
+        let batch = x.len();
+        let mut outs: Vec<BatchTensor> = (0..self.c_out)
+            .map(|_| BatchTensor::zeros(self.n, self.l, batch))
+            .collect();
+        let mut arena = PooledArena::get();
+        let mut rows: Vec<Vec<f64>> = vec![vec![0.0; self.terms.len()]; self.c_out];
+        for i in 0..self.c_in {
+            let channel: Vec<&Tensor> = x.iter().map(|item| &item[i]).collect();
+            let xb = BatchTensor::pack_refs(&channel)?;
+            for (o, row) in rows.iter_mut().enumerate() {
+                for (slot, term) in row.iter_mut().zip(&self.terms) {
+                    *slot = term.weights[o * self.c_in + i];
+                }
+            }
+            self.schedule
+                .execute_batch_multi(&xb, &rows, &mut outs, &mut arena)?;
+        }
+        // Bias: each basis tensor F(b)(1) is materialised once per batch
+        // and broadcast-added to every item.
+        let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+        for (plan, mus) in &self.bias_terms {
+            if mus.iter().all(|&m| m == 0.0) {
+                continue;
+            }
+            let basis = plan.apply(&one)?;
+            for (o, out) in outs.iter_mut().enumerate() {
+                if mus[o] != 0.0 {
+                    out.axpy_broadcast(mus[o], &basis);
+                }
+            }
+        }
+        // outs is channel-major (c_out × B); transpose back to item-major.
+        let mut per_item: Vec<Vec<Tensor>> = (0..batch)
+            .map(|_| Vec::with_capacity(self.c_out))
+            .collect();
+        for out in outs {
+            for (b, t) in out.unpack().into_iter().enumerate() {
+                per_item[b].push(t);
+            }
+        }
+        Ok(per_item)
+    }
+
+    /// Batched backward: per output channel, the upstream gradients are
+    /// packed into one `[B, n^l]` batch and the transposed schedule walked
+    /// **once for the whole batch** ([`LayerSchedule::execute_batch_map`]);
+    /// parameter gradients are summed over the batch (matching repeated
+    /// [`ChannelEquivariantLinear::backward`] calls) and the per-item
+    /// input gradients are returned in order.
+    pub fn backward_batch(
+        &self,
+        x: &[Vec<Tensor>],
+        grad_out: &[Vec<Tensor>],
+        grads: &mut ChannelGrads,
+    ) -> Result<Vec<Vec<Tensor>>> {
+        if x.len() != grad_out.len() {
+            return Err(Error::ShapeMismatch {
+                expected: format!("{} upstream gradients", x.len()),
+                got: format!("{}", grad_out.len()),
+            });
+        }
+        if x.is_empty() {
+            return Ok(Vec::new());
+        }
+        for item in x {
+            self.check_channels(item)?;
+        }
+        for gitem in grad_out {
+            if gitem.len() != self.c_out {
+                return Err(Error::ShapeMismatch {
+                    expected: format!("{} gradient channels", self.c_out),
+                    got: format!("{}", gitem.len()),
+                });
+            }
+        }
+        let batch = x.len();
+        let mut grad_x: Vec<Vec<Tensor>> = (0..batch)
+            .map(|_| (0..self.c_in).map(|_| Tensor::zeros(self.n, self.k)).collect())
+            .collect();
+        let mut arena = PooledArena::get();
+        for o in 0..self.c_out {
+            let channel: Vec<&Tensor> = grad_out.iter().map(|g| &g[o]).collect();
+            let gb = BatchTensor::pack_refs(&channel)?;
+            self.backward_schedule.execute_batch_map(&gb, &mut arena, |ti, bt| {
+                let term = &self.terms[ti];
+                for b in 0..batch {
+                    let t = bt.item(b);
+                    for i in 0..self.c_in {
+                        let w = term.weights[o * self.c_in + i];
+                        // ∂L/∂λ_d[o,i] += sign · ⟨F(dᵀ) g_b, x_b[i]⟩
+                        grads.terms[ti][o * self.c_in + i] += term.adjoint_sign
+                            * t.iter().zip(&x[b][i].data).map(|(a, v)| a * v).sum::<f64>();
+                        if w != 0.0 {
+                            let alpha = w * term.adjoint_sign;
+                            for (gx, &tv) in grad_x[b][i].data.iter_mut().zip(t) {
+                                *gx += alpha * tv;
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            })?;
+        }
+        let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+        for (bi, (plan, _)) in self.bias_terms.iter().enumerate() {
+            let basis = plan.apply(&one)?;
+            for (o, row) in grads.bias[bi].iter_mut().enumerate().take(self.c_out) {
+                for gitem in grad_out {
+                    *row += basis.dot(&gitem[o]);
+                }
+            }
+        }
+        Ok(grad_x)
     }
 
     /// Backward: returns `∂L/∂x` and accumulates parameter gradients.

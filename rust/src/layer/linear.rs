@@ -5,8 +5,8 @@ use crate::diagram::{
 };
 use crate::error::{Error, Result};
 use crate::fastmult::{Group, LayerSchedule, MultPlan, PlanCache, PooledArena, ScheduleStats};
-use crate::tensor::Tensor;
-use crate::util::parallel::{max_threads, parallel_map};
+use crate::tensor::{BatchTensor, Tensor};
+use crate::util::parallel::{max_threads, parallel_map, span_len};
 use crate::util::Rng;
 use std::sync::Arc;
 
@@ -250,15 +250,15 @@ impl EquivariantLinear {
         Ok(())
     }
 
-    /// Batched forward pass: apply the layer to every input, parallelised
-    /// across batch items with scoped threads and amortising the shared
-    /// structure across items — the bias tensor is materialised once per
-    /// batch and each item runs the fused [`LayerSchedule`] (shared `σ_k`
-    /// permutes and contraction prefixes computed once per item, arena-
-    /// recycled scratch).
+    /// Batched forward pass: the fused batch-axis engine. Inputs are packed
+    /// into contiguous `[B, n^k]` spans (one per worker thread) and each
+    /// span runs [`LayerSchedule::execute_batch`] — **one schedule walk per
+    /// span**, every DAG node evaluated for all its items before the walk
+    /// moves on, index maps computed once per node, and the bias tensor
+    /// materialised once per batch.
     ///
     /// Matches per-item [`EquivariantLinear::forward`] to rounding error
-    /// (≤ 1e-9 in the property tests), **not** bit-exactly: the batch-
+    /// (≤ 1e-12 in the property tests), **not** bit-exactly: the batch-
     /// shared bias (and, for single-item batches, subtree partial sums)
     /// change the accumulation order of the same terms.
     pub fn forward_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
@@ -271,6 +271,9 @@ impl EquivariantLinear {
     pub fn forward_batch_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         if inputs.is_empty() {
             return Ok(Vec::new());
+        }
+        for v in inputs {
+            self.check_input(v)?;
         }
         let bias = self.batch_bias()?;
         let workers = max_threads();
@@ -287,22 +290,58 @@ impl EquivariantLinear {
             }
             return Ok(vec![out]);
         }
-        let results = parallel_map(inputs, workers, |v| -> Result<Tensor> {
-            self.check_input(v)?;
-            let mut out = Tensor::zeros(self.n, self.l);
+        // One contiguous span per worker; each span is packed once and the
+        // schedule walked once for all its items.
+        let spans: Vec<&[&Tensor]> = inputs.chunks(span_len(inputs.len())).collect();
+        let span_outs = parallel_map(&spans, spans.len(), |span| -> Result<Vec<Tensor>> {
+            let vb = BatchTensor::pack_refs(span)?;
+            let mut ob = BatchTensor::zeros(self.n, self.l, vb.batch());
             let mut arena = PooledArena::get();
-            self.schedule.execute(v, &self.coeffs, &mut out, &mut arena)?;
+            self.schedule
+                .execute_batch(&vb, &self.coeffs, &mut ob, &mut arena)?;
             if let Some(b) = &bias {
-                out.axpy(1.0, b);
+                ob.axpy_broadcast(1.0, b);
             }
-            Ok(out)
+            Ok(ob.unpack())
         });
-        results.into_iter().collect()
+        let mut out = Vec::with_capacity(inputs.len());
+        for span in span_outs {
+            out.extend(span?);
+        }
+        Ok(out)
     }
 
-    /// Batched backward pass over `(input, upstream gradient)` pairs,
-    /// parallelised across items; parameter gradients are accumulated into
-    /// `grads` (summed over the batch, matching repeated
+    /// Fused forward over an already-packed batch — the building block the
+    /// network plumbing uses to keep activations batched between layers.
+    /// One schedule walk for the whole batch, bias materialised once.
+    pub fn forward_batched(&self, v: &BatchTensor) -> Result<BatchTensor> {
+        let bias = self.batch_bias()?;
+        self.forward_batched_with_bias(v, bias.as_ref())
+    }
+
+    /// [`EquivariantLinear::forward_batched`] with the bias tensor supplied
+    /// by the caller — the net-level span fan-out materialises each
+    /// layer's bias once per batch and shares it across worker spans
+    /// instead of rebuilding it per span.
+    pub(crate) fn forward_batched_with_bias(
+        &self,
+        v: &BatchTensor,
+        bias: Option<&Tensor>,
+    ) -> Result<BatchTensor> {
+        let mut out = BatchTensor::zeros(self.n, self.l, v.batch());
+        let mut arena = PooledArena::get();
+        self.schedule
+            .execute_batch(v, &self.coeffs, &mut out, &mut arena)?;
+        if let Some(b) = bias {
+            out.axpy_broadcast(1.0, b);
+        }
+        Ok(out)
+    }
+
+    /// Batched backward pass over `(input, upstream gradient)` pairs:
+    /// one transposed-schedule walk per worker span
+    /// ([`LayerSchedule::execute_batch_map`]). Parameter gradients are
+    /// accumulated into `grads` (summed over the batch, matching repeated
     /// [`EquivariantLinear::backward`] calls) and the per-item input
     /// gradients are returned in order.
     pub fn backward_batch(
@@ -320,25 +359,104 @@ impl EquivariantLinear {
         if inputs.is_empty() {
             return Ok(Vec::new());
         }
-        let pairs: Vec<(&Tensor, &Tensor)> = inputs.iter().zip(grad_outs).collect();
-        let workers = max_threads().min(pairs.len());
-        let per_item = parallel_map(&pairs, workers, |&(v, g)| -> Result<(Tensor, LayerGrads)> {
-            let mut local = self.zero_grads();
-            let grad_v = self.backward(v, g, &mut local)?;
-            Ok((grad_v, local))
-        });
+        let chunk = span_len(inputs.len());
+        let spans: Vec<(&[Tensor], &[Tensor])> = inputs
+            .chunks(chunk)
+            .zip(grad_outs.chunks(chunk))
+            .collect();
+        let parts = parallel_map(
+            &spans,
+            spans.len(),
+            |&(vs, gs)| -> Result<(BatchTensor, LayerGrads)> {
+                let mut local = self.zero_grads();
+                let vb = BatchTensor::pack(vs)?;
+                let gb = BatchTensor::pack(gs)?;
+                let gv = self.backward_batched(&vb, &gb, &mut local)?;
+                Ok((gv, local))
+            },
+        );
         let mut out = Vec::with_capacity(inputs.len());
-        for item in per_item {
-            let (grad_v, local) = item?;
+        for part in parts {
+            let (gv, local) = part?;
             for (a, b) in grads.coeffs.iter_mut().zip(&local.coeffs) {
                 *a += b;
             }
             for (a, b) in grads.bias_coeffs.iter_mut().zip(&local.bias_coeffs) {
                 *a += b;
             }
-            out.push(grad_v);
+            out.extend(gv.unpack());
         }
         Ok(out)
+    }
+
+    /// Fused backward over already-packed batches: walks the transposed
+    /// schedule **once for the whole batch**; per term, the batched tensor
+    /// `F(dᵀ) g[·]` feeds both the coefficient gradients (one inner
+    /// product per item) and the input gradients (a blocked axpy over
+    /// `B · n^k` lanes). Gradients are summed over the batch.
+    pub fn backward_batched(
+        &self,
+        v: &BatchTensor,
+        g: &BatchTensor,
+        grads: &mut LayerGrads,
+    ) -> Result<BatchTensor> {
+        if v.order() != self.k || v.n() != self.n || v.batch() != g.batch() {
+            return Err(Error::ShapeMismatch {
+                expected: format!(
+                    "order {} input batch of {} over R^{}",
+                    self.k,
+                    g.batch(),
+                    self.n
+                ),
+                got: format!(
+                    "order {} batch of {} over R^{}",
+                    v.order(),
+                    v.batch(),
+                    v.n()
+                ),
+            });
+        }
+        let batch = v.batch();
+        let mut grad_v = BatchTensor::zeros(self.n, self.k, batch);
+        let mut arena = PooledArena::get();
+        self.backward_schedule.execute_batch_map(g, &mut arena, |i, bt| {
+            // bt = F(dᵀ) g for every item of the batch (a reused scratch
+            // buffer).
+            let sign = self.terms[i].adjoint_sign;
+            let alpha = self.coeffs[i] * sign;
+            let mut acc = 0.0;
+            for b in 0..batch {
+                let t = bt.item(b);
+                // ∂L/∂λ_i += sign · Σ_b ⟨F(dᵀ) g_b, v_b⟩
+                acc += t.iter().zip(v.item(b)).map(|(a, x)| a * x).sum::<f64>();
+                if alpha != 0.0 {
+                    for (o, &tv) in grad_v.item_mut(b).iter_mut().zip(t) {
+                        *o += alpha * tv;
+                    }
+                }
+            }
+            grads.coeffs[i] += sign * acc;
+            Ok(())
+        })?;
+        // Bias gradients: ∂L/∂μ_b = Σ_items ⟨g, F(b)(1)⟩ — the basis
+        // tensor is materialised once per term for the whole batch.
+        if !self.bias_terms.is_empty() {
+            let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+            for (j, term) in self.bias_terms.iter().enumerate() {
+                let basis = term.forward.apply(&one)?;
+                let mut acc = 0.0;
+                for b in 0..batch {
+                    acc += basis
+                        .data
+                        .iter()
+                        .zip(g.item(b))
+                        .map(|(a, x)| a * x)
+                        .sum::<f64>();
+                }
+                grads.bias_coeffs[j] += acc;
+            }
+        }
+        Ok(grad_v)
     }
 
     /// Shape guard shared by the per-item and batched forward paths.
@@ -380,7 +498,7 @@ impl EquivariantLinear {
 
     /// The batch-shared bias tensor `Σ μ_b F(b)(1)`, or `None` when the
     /// layer has no active bias term.
-    fn batch_bias(&self) -> Result<Option<Tensor>> {
+    pub(crate) fn batch_bias(&self) -> Result<Option<Tensor>> {
         if self.bias_terms.is_empty() || self.bias_coeffs.iter().all(|&m| m == 0.0) {
             return Ok(None);
         }

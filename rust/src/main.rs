@@ -153,6 +153,9 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
             steps: cfg.training.steps,
             batch_size: cfg.training.batch_size,
             log_every: cfg.training.log_every,
+            // The CLI wants progress lines; library embedders get the
+            // silent `logged` vec instead.
+            verbose: true,
             ..TrainConfig::default()
         },
     )?;

@@ -5,7 +5,7 @@
 //! use [`Activation::Identity`] between linear layers (as is standard for
 //! Brauer-category networks) or accept the approximation deliberately.
 
-use crate::tensor::Tensor;
+use crate::tensor::{BatchTensor, Tensor};
 
 /// Elementwise activation functions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,55 +22,54 @@ pub enum Activation {
 }
 
 impl Activation {
-    /// Apply elementwise.
-    pub fn forward(&self, v: &Tensor) -> Tensor {
-        let mut out = v.clone();
+    /// The elementwise map, applied in place. Pointwise over the flat
+    /// coefficient buffer, so the per-item and batched entry points share
+    /// one implementation (and therefore bitwise-identical arithmetic).
+    fn apply_in_place(&self, data: &mut [f64]) {
         match self {
             Activation::Identity => {}
             Activation::Relu => {
-                for x in &mut out.data {
+                for x in data {
                     if *x < 0.0 {
                         *x = 0.0;
                     }
                 }
             }
             Activation::Tanh => {
-                for x in &mut out.data {
+                for x in data {
                     *x = x.tanh();
                 }
             }
             Activation::Gelu => {
-                for x in &mut out.data {
+                for x in data {
                     let c = (2.0 / std::f64::consts::PI).sqrt();
                     let t = (c * (*x + 0.044715 * x.powi(3))).tanh();
                     *x = 0.5 * *x * (1.0 + t);
                 }
             }
         }
-        out
     }
 
-    /// Elementwise derivative evaluated at the *pre-activation* input,
-    /// multiplied into the upstream gradient.
-    pub fn backward(&self, pre: &Tensor, grad_out: &Tensor) -> Tensor {
-        let mut g = grad_out.clone();
+    /// The elementwise derivative at the pre-activation input, multiplied
+    /// into the upstream gradient in place.
+    fn apply_grad_in_place(&self, grad: &mut [f64], pre: &[f64]) {
         match self {
             Activation::Identity => {}
             Activation::Relu => {
-                for (gx, &x) in g.data.iter_mut().zip(&pre.data) {
+                for (gx, &x) in grad.iter_mut().zip(pre) {
                     if x <= 0.0 {
                         *gx = 0.0;
                     }
                 }
             }
             Activation::Tanh => {
-                for (gx, &x) in g.data.iter_mut().zip(&pre.data) {
+                for (gx, &x) in grad.iter_mut().zip(pre) {
                     let t = x.tanh();
                     *gx *= 1.0 - t * t;
                 }
             }
             Activation::Gelu => {
-                for (gx, &x) in g.data.iter_mut().zip(&pre.data) {
+                for (gx, &x) in grad.iter_mut().zip(pre) {
                     // numerical derivative of the tanh approximation
                     let c = (2.0 / std::f64::consts::PI).sqrt();
                     let u = c * (x + 0.044715 * x.powi(3));
@@ -80,6 +79,43 @@ impl Activation {
                 }
             }
         }
+    }
+
+    /// Apply elementwise.
+    pub fn forward(&self, v: &Tensor) -> Tensor {
+        let mut out = v.clone();
+        self.apply_in_place(&mut out.data);
+        out
+    }
+
+    /// Elementwise derivative evaluated at the *pre-activation* input,
+    /// multiplied into the upstream gradient.
+    pub fn backward(&self, pre: &Tensor, grad_out: &Tensor) -> Tensor {
+        let mut g = grad_out.clone();
+        self.apply_grad_in_place(&mut g.data, &pre.data);
+        g
+    }
+
+    /// Apply elementwise over a whole batch — pointwise activations do not
+    /// care about the batch axis, so this is one sweep over the contiguous
+    /// `[B, n^k]` buffer.
+    pub fn forward_batch(&self, v: &BatchTensor) -> BatchTensor {
+        let mut out = v.clone();
+        self.apply_in_place(out.data_mut());
+        out
+    }
+
+    /// [`Activation::forward_batch`] without the defensive copy, for
+    /// callers that no longer need the pre-activation values (the fused
+    /// forward path; the traced path keeps the borrowing form).
+    pub fn forward_batch_in_place(&self, v: &mut BatchTensor) {
+        self.apply_in_place(v.data_mut());
+    }
+
+    /// Batched [`Activation::backward`] over `[B, n^k]` buffers.
+    pub fn backward_batch(&self, pre: &BatchTensor, grad_out: &BatchTensor) -> BatchTensor {
+        let mut g = grad_out.clone();
+        self.apply_grad_in_place(g.data_mut(), pre.data());
         g
     }
 

@@ -5,9 +5,46 @@ use crate::error::{Error, Result};
 use crate::fastmult::{Group, ScheduleStats};
 use crate::layer::{EquivariantLinear, Init, LayerGrads};
 use crate::nn::activation::Activation;
-use crate::tensor::Tensor;
-use crate::util::parallel::{max_threads, parallel_map};
+use crate::tensor::{BatchTensor, Tensor};
+use crate::util::parallel::{max_threads, parallel_map, span_len};
 use crate::util::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static FUSED_BATCHES: AtomicU64 = AtomicU64::new(0);
+static FUSED_ITEMS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide counters for the batched serving path: how many whole
+/// batches (and items) went through
+/// [`EquivariantNet::forward_batch_refs`] — the packed `[B, n^k]` fused
+/// walk for multi-item batches, the DAG-subtree fan-out for single-item
+/// ones — as opposed to the per-item error-isolation fallback. Reported
+/// by the coordinator metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FusedBatchStats {
+    /// Batches executed through the fused batched path.
+    pub batches: u64,
+    /// Items those batches contained.
+    pub items: u64,
+}
+
+impl FusedBatchStats {
+    /// Mean items per fused batch (0 when none ran).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.items as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Snapshot of the process-wide fused-batch counters.
+pub fn fused_batch_stats() -> FusedBatchStats {
+    FusedBatchStats {
+        batches: FUSED_BATCHES.load(Ordering::Relaxed),
+        items: FUSED_ITEMS.load(Ordering::Relaxed),
+    }
+}
 
 /// A stack of equivariant linear layers with activations between them.
 ///
@@ -121,31 +158,87 @@ impl EquivariantNet {
         Ok(x)
     }
 
-    /// Batched forward pass: run the whole batch through the network layer
-    /// by layer, each layer using its batched path
-    /// ([`EquivariantLinear::forward_batch_refs`]) — parallel across batch
-    /// items, with the per-layer bias and input-permutation work amortised
-    /// across the batch. Output order matches input order.
+    /// Batched forward pass: the whole batch runs through the network as
+    /// contiguous `[B, n^k]` tensors — packed once at the entry, **one
+    /// schedule walk per layer per worker span**, activations applied to
+    /// the batched buffer between layers, unpacked only at the exit.
+    /// Output order matches input order.
     pub fn forward_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let refs: Vec<&Tensor> = inputs.iter().collect();
         self.forward_batch_refs(&refs)
     }
 
-    /// [`EquivariantNet::forward_batch`] over borrowed inputs.
+    /// [`EquivariantNet::forward_batch`] over borrowed inputs. The batch is
+    /// split into one contiguous span per worker thread; each span stays
+    /// packed through every layer ([`EquivariantNet::forward_batched`]).
     pub fn forward_batch_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         if inputs.is_empty() {
             return Ok(Vec::new());
         }
-        let mut xs: Vec<Tensor> = {
-            let pre = self.layers[0].forward_batch_refs(inputs)?;
-            pre.iter().map(|t| self.activations[0].forward(t)).collect()
-        };
-        for (layer, act) in self.layers.iter().zip(&self.activations).skip(1) {
-            let refs: Vec<&Tensor> = xs.iter().collect();
-            let pre = layer.forward_batch_refs(&refs)?;
-            xs = pre.iter().map(|t| act.forward(t)).collect();
+        if inputs.len() == 1 {
+            // Single request: batching buys nothing, so keep the
+            // DAG-subtree fan-out inside each layer
+            // ([`EquivariantLinear::forward_batch_refs`]'s B == 1 branch)
+            // for low-latency serving.
+            let mut xs = vec![inputs[0].clone()];
+            for (layer, act) in self.layers.iter().zip(&self.activations) {
+                let refs: Vec<&Tensor> = xs.iter().collect();
+                let pre = layer.forward_batch_refs(&refs)?;
+                xs = pre.iter().map(|t| act.forward(t)).collect();
+            }
+            FUSED_BATCHES.fetch_add(1, Ordering::Relaxed);
+            FUSED_ITEMS.fetch_add(1, Ordering::Relaxed);
+            return Ok(xs);
         }
-        Ok(xs)
+        // Each layer's bias tensor is materialised once per batch here and
+        // shared read-only across the worker spans.
+        let biases: Vec<Option<Tensor>> = self
+            .layers
+            .iter()
+            .map(|l| l.batch_bias())
+            .collect::<Result<Vec<_>>>()?;
+        let spans: Vec<&[&Tensor]> = inputs.chunks(span_len(inputs.len())).collect();
+        let span_outs = parallel_map(&spans, spans.len(), |span| -> Result<Vec<Tensor>> {
+            let vb = BatchTensor::pack_refs(span)?;
+            Ok(self.forward_batched_shared(&vb, &biases)?.unpack())
+        });
+        let mut out = Vec::with_capacity(inputs.len());
+        for span in span_outs {
+            out.extend(span?);
+        }
+        FUSED_BATCHES.fetch_add(1, Ordering::Relaxed);
+        FUSED_ITEMS.fetch_add(inputs.len() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Fused forward over an already-packed batch: every layer walks its
+    /// schedule once for the whole batch and activations stay batched
+    /// between layers. The first layer reads `v` directly (no defensive
+    /// copy of the input batch).
+    pub fn forward_batched(&self, v: &BatchTensor) -> Result<BatchTensor> {
+        let biases: Vec<Option<Tensor>> = self
+            .layers
+            .iter()
+            .map(|l| l.batch_bias())
+            .collect::<Result<Vec<_>>>()?;
+        self.forward_batched_shared(v, &biases)
+    }
+
+    /// [`EquivariantNet::forward_batched`] over pre-materialised per-layer
+    /// bias tensors (one entry per layer), so span fan-outs build each
+    /// bias once per batch.
+    fn forward_batched_shared(
+        &self,
+        v: &BatchTensor,
+        biases: &[Option<Tensor>],
+    ) -> Result<BatchTensor> {
+        let mut x = self.layers[0].forward_batched_with_bias(v, biases[0].as_ref())?;
+        self.activations[0].forward_batch_in_place(&mut x);
+        for (i, (layer, act)) in self.layers.iter().zip(&self.activations).enumerate().skip(1) {
+            x = layer.forward_batched_with_bias(&x, biases[i].as_ref())?;
+            act.forward_batch_in_place(&mut x);
+        }
+        Ok(x)
     }
 
     /// Per-item batched inference for the serving path: one `Result` per
@@ -245,6 +338,53 @@ impl EquivariantNet {
             grad_inputs.push(gv);
         }
         Ok((total, grad_inputs))
+    }
+
+    /// Batched [`EquivariantNet::forward_trace`] over a packed batch:
+    /// returns per-layer `(input batch, pre-activation batch)` pairs and
+    /// the output batch, with **one schedule walk per layer per batch**.
+    /// This is the training loop's forward: the whole minibatch flows
+    /// through the network as `[B, n^k]` tensors.
+    #[allow(clippy::type_complexity)]
+    pub fn forward_trace_batched(
+        &self,
+        v: &BatchTensor,
+    ) -> Result<(Vec<(BatchTensor, BatchTensor)>, BatchTensor)> {
+        let mut trace = Vec::with_capacity(self.layers.len());
+        let mut x = v.clone();
+        for (layer, act) in self.layers.iter().zip(&self.activations) {
+            let pre = layer.forward_batched(&x)?;
+            let post = act.forward_batch(&pre);
+            trace.push((x, pre));
+            x = post;
+        }
+        Ok((trace, x))
+    }
+
+    /// Batched backward from a [`EquivariantNet::forward_trace_batched`]
+    /// trace: one transposed-schedule walk per layer per batch, parameter
+    /// gradients **summed** over the batch in a single reduction, and the
+    /// input-gradient batch returned packed.
+    pub fn backward_batched(
+        &self,
+        trace: &[(BatchTensor, BatchTensor)],
+        grad_out: &BatchTensor,
+    ) -> Result<(NetGrads, BatchTensor)> {
+        let mut grads = NetGrads {
+            layers: self.layers.iter().map(|l| l.zero_grads()).collect(),
+        };
+        // The last layer reads `grad_out` directly (activation backward
+        // already copies), avoiding a defensive clone of the batch.
+        let last = self.layers.len() - 1;
+        let (input, pre) = &trace[last];
+        let mut g = self.activations[last].backward_batch(pre, grad_out);
+        g = self.layers[last].backward_batched(input, &g, &mut grads.layers[last])?;
+        for i in (0..last).rev() {
+            let (input, pre) = &trace[i];
+            g = self.activations[i].backward_batch(pre, &g);
+            g = self.layers[i].backward_batched(input, &g, &mut grads.layers[i])?;
+        }
+        Ok((grads, g))
     }
 
     /// Flatten parameters into one vector (for the optimisers).

@@ -1,10 +1,18 @@
 //! Minibatch training loop over equivariant networks.
+//!
+//! Each optimisation step is a **true minibatch**: the sampled batch is
+//! packed into one contiguous `[B, n^k]` tensor, the network runs a single
+//! batched forward trace and a single batched backward
+//! ([`EquivariantNet::forward_trace_batched`] /
+//! [`EquivariantNet::backward_batched`]) — every layer schedule is walked
+//! once per step, not once per sample — and the parameter gradients come
+//! back already reduced over the batch.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::nn::loss::Loss;
-use crate::nn::model::{EquivariantNet, NetGrads};
+use crate::nn::model::EquivariantNet;
 use crate::nn::optim::Optimizer;
-use crate::tensor::Tensor;
+use crate::tensor::{BatchTensor, Tensor};
 use crate::util::Rng;
 
 /// Training-loop configuration.
@@ -12,12 +20,16 @@ use crate::util::Rng;
 pub struct TrainConfig {
     /// Number of optimisation steps.
     pub steps: usize,
-    /// Minibatch size.
+    /// Minibatch size (must be ≥ 1; validated by [`train`]).
     pub batch_size: usize,
     /// Loss function.
     pub loss: Loss,
-    /// Log the running loss every `log_every` steps (0 disables logging).
+    /// Record the running loss in [`TrainReport::logged`] every
+    /// `log_every` steps (0 disables logging).
     pub log_every: usize,
+    /// Also print each logged row to stdout. Off by default so embedders
+    /// (the coordinator, tests) get a silent library; the CLI turns it on.
+    pub verbose: bool,
     /// RNG seed for batch sampling.
     pub seed: u64,
 }
@@ -29,6 +41,7 @@ impl Default for TrainConfig {
             batch_size: 8,
             loss: Loss::Mse,
             log_every: 0,
+            verbose: false,
             seed: 0x7EA1,
         }
     }
@@ -44,40 +57,60 @@ pub struct TrainReport {
 }
 
 impl TrainReport {
-    /// Mean loss over the final `w` steps.
+    /// Mean loss over the final `w` steps. Returns `NaN` when there is
+    /// nothing to average (no recorded steps, or `w == 0`) instead of
+    /// dividing by zero.
     pub fn final_loss(&self, w: usize) -> f64 {
         let tail = &self.losses[self.losses.len().saturating_sub(w)..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
         tail.iter().sum::<f64>() / tail.len() as f64
     }
 }
 
 /// Train `net` on a dataset of `(input, target)` tensors with minibatch
 /// SGD-style updates from `opt`.
+///
+/// Each step samples `batch_size` items (with replacement, same RNG stream
+/// as the historical per-sample loop), runs one fused batched
+/// forward/backward, and applies a single optimiser update from the
+/// batch-reduced gradients.
 pub fn train(
     net: &mut EquivariantNet,
     data: &[(Tensor, Tensor)],
     opt: &mut dyn Optimizer,
     cfg: &TrainConfig,
 ) -> Result<TrainReport> {
-    assert!(!data.is_empty(), "empty training set");
+    if data.is_empty() {
+        return Err(Error::Config("train: empty training set".into()));
+    }
+    if cfg.batch_size == 0 {
+        return Err(Error::Config("train: batch_size must be >= 1".into()));
+    }
     let mut rng = Rng::new(cfg.seed);
     let mut losses = Vec::with_capacity(cfg.steps);
     let mut logged = Vec::new();
     for step in 0..cfg.steps {
+        let picks: Vec<usize> = (0..cfg.batch_size)
+            .map(|_| rng.below(data.len()))
+            .collect();
+        let inputs: Vec<&Tensor> = picks.iter().map(|&i| &data[i].0).collect();
+        let vb = BatchTensor::pack_refs(&inputs)?;
+        // One schedule walk per layer for the whole minibatch.
+        let (trace, out) = net.forward_trace_batched(&vb)?;
         let mut batch_loss = 0.0;
-        let mut acc: Option<NetGrads> = None;
-        for _ in 0..cfg.batch_size {
-            let (x, y) = &data[rng.below(data.len())];
-            let (trace, out) = net.forward_trace(x)?;
-            batch_loss += cfg.loss.value(&out, y);
-            let gout = cfg.loss.grad(&out, y);
-            let (grads, _) = net.backward(&trace, &gout)?;
-            match &mut acc {
-                None => acc = Some(grads),
-                Some(a) => a.add(&grads),
-            }
+        let mut gout = BatchTensor::zeros(out.n(), out.order(), out.batch());
+        for (b, &ix) in picks.iter().enumerate() {
+            let target = &data[ix].1;
+            let pred = out.item_tensor(b);
+            batch_loss += cfg.loss.value(&pred, target);
+            let g = cfg.loss.grad(&pred, target);
+            gout.item_mut(b).copy_from_slice(&g.data);
         }
-        let mut grads = acc.expect("batch_size >= 1");
+        // One batched backward; gradients arrive summed over the batch —
+        // a single reduction instead of one accumulate per sample.
+        let (mut grads, _) = net.backward_batched(&trace, &gout)?;
         grads.scale(1.0 / cfg.batch_size as f64);
         batch_loss /= cfg.batch_size as f64;
 
@@ -89,7 +122,9 @@ pub fn train(
         losses.push(batch_loss);
         if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
             logged.push((step, batch_loss));
-            println!("step {step:>5}  loss {batch_loss:.6}");
+            if cfg.verbose {
+                println!("step {step:>5}  loss {batch_loss:.6}");
+            }
         }
     }
     Ok(TrainReport { losses, logged })
@@ -172,5 +207,49 @@ mod tests {
         };
         let report = train(&mut net, &data, &mut opt, &cfg).unwrap();
         assert_eq!(report.losses.len(), 50);
+    }
+
+    #[test]
+    fn rejects_empty_data_and_zero_batch() {
+        let mut rng = Rng::new(303);
+        let mut net = EquivariantNet::new(
+            Group::Symmetric,
+            2,
+            &[1, 0],
+            Activation::Identity,
+            Init::Normal(0.1),
+            &mut rng,
+        )
+        .unwrap();
+        let mut opt = Adam::new(0.1);
+        // Empty training set: an Err, not a panic.
+        let err = train(&mut net, &[], &mut opt, &TrainConfig::default());
+        assert!(err.is_err());
+        // batch_size == 0: an Err, not a divide-by-zero.
+        let data = vec![(
+            Tensor::from_vec(2, 1, vec![1.0, 2.0]).unwrap(),
+            Tensor::from_vec(2, 0, vec![3.0]).unwrap(),
+        )];
+        let cfg = TrainConfig {
+            batch_size: 0,
+            ..TrainConfig::default()
+        };
+        assert!(train(&mut net, &data, &mut opt, &cfg).is_err());
+    }
+
+    #[test]
+    fn final_loss_guards_empty_tail() {
+        let report = TrainReport {
+            losses: vec![],
+            logged: vec![],
+        };
+        assert!(report.final_loss(10).is_nan());
+        let report = TrainReport {
+            losses: vec![1.0, 3.0],
+            logged: vec![],
+        };
+        assert!(report.final_loss(0).is_nan());
+        assert!((report.final_loss(2) - 2.0).abs() < 1e-12);
+        assert!((report.final_loss(100) - 2.0).abs() < 1e-12);
     }
 }

@@ -1,0 +1,523 @@
+//! Contiguous batch layout `[B, n^k]` for batch-axis fused execution.
+//!
+//! The per-item kernels in [`super::ops`] recompute their odometer index
+//! arithmetic on every call; when a layer applies the same schedule node to
+//! every item of a batch, that arithmetic is identical across items. A
+//! [`BatchTensor`] stores `B` same-shape tensors back to back so a batched
+//! kernel can build its index map **once per node** and then sweep the
+//! batch with pure loads/stores:
+//!
+//! - odometer-driven ops (permute, group-diagonal extraction, the
+//!   diagonal-support scatter, Levi-Civita, the Sp(n) ε-expansion) share a
+//!   precomputed offset map across all `B` items,
+//! - constant-stride scans (diagonal contraction, pair traces) keep their
+//!   incremental per-item form — their index math is already O(1) per
+//!   element — and simply loop the items over one precomputed descriptor.
+//!
+//! Every batched kernel applies, per item, **exactly** the arithmetic of
+//! its per-item counterpart in the same order, so batch-fused schedule
+//! execution ([`crate::fastmult::LayerSchedule::execute_batch`]) is bitwise
+//! identical per item to the per-item walk. See
+//! `docs/batched_execution.md`.
+
+use super::index::flat_index;
+use super::ops::{group_diag_offsets, permute_block_map, scatter_diag_dsts, signed_permutations};
+use super::Tensor;
+use crate::error::{Error, Result};
+
+/// `B` tensors of shape `(n, order)` stored contiguously, item-major: item
+/// `b` occupies `data[b * n^order .. (b + 1) * n^order]`, each item
+/// row-major exactly like a [`Tensor`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchTensor {
+    n: usize,
+    order: usize,
+    batch: usize,
+    data: Vec<f64>,
+}
+
+impl BatchTensor {
+    /// All-zeros batch of `batch` tensors of shape `(n, order)`.
+    pub fn zeros(n: usize, order: usize, batch: usize) -> Self {
+        BatchTensor {
+            n,
+            order,
+            batch,
+            data: vec![0.0; batch * n.pow(order as u32)],
+        }
+    }
+
+    /// Wrap an existing buffer (length must be `batch · n^order`). Used by
+    /// the scratch arena, which recycles buffers across shapes.
+    pub(crate) fn from_raw(n: usize, order: usize, batch: usize, data: Vec<f64>) -> Self {
+        debug_assert_eq!(data.len(), batch * n.pow(order as u32));
+        BatchTensor {
+            n,
+            order,
+            batch,
+            data,
+        }
+    }
+
+    /// Give the buffer back (for the scratch arena's recycling buckets).
+    pub(crate) fn into_raw(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Pack owned tensors into one contiguous batch. All items must share
+    /// the same `(n, order)`; an empty slice is rejected (there is no shape
+    /// to infer).
+    pub fn pack(items: &[Tensor]) -> Result<Self> {
+        let refs: Vec<&Tensor> = items.iter().collect();
+        Self::pack_refs(&refs)
+    }
+
+    /// [`BatchTensor::pack`] over borrowed tensors (the coordinator batches
+    /// requests it does not own).
+    pub fn pack_refs(items: &[&Tensor]) -> Result<Self> {
+        let Some(first) = items.first() else {
+            return Err(Error::ShapeMismatch {
+                expected: "a non-empty batch".into(),
+                got: "0 tensors".into(),
+            });
+        };
+        let (n, order) = (first.n, first.order);
+        for t in items {
+            if t.n != n || t.order != order {
+                return Err(Error::ShapeMismatch {
+                    expected: format!("uniform batch of order-{order} tensors over R^{n}"),
+                    got: format!("order {} over R^{}", t.order, t.n),
+                });
+            }
+        }
+        let mut data = Vec::with_capacity(items.len() * first.len());
+        for t in items {
+            data.extend_from_slice(&t.data);
+        }
+        Ok(BatchTensor {
+            n,
+            order,
+            batch: items.len(),
+            data,
+        })
+    }
+
+    /// Split back into per-item tensors, in batch order.
+    pub fn unpack(self) -> Vec<Tensor> {
+        let len = self.item_len();
+        self.data
+            .chunks(len)
+            .map(|chunk| Tensor {
+                n: self.n,
+                order: self.order,
+                data: chunk.to_vec(),
+            })
+            .collect()
+    }
+
+    /// Axis extent.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    /// Tensor-power order of each item.
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.order
+    }
+    /// Number of items.
+    #[inline]
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+    /// Coefficients per item, `n^order`.
+    #[inline]
+    pub fn item_len(&self) -> usize {
+        self.n.pow(self.order as u32)
+    }
+
+    /// The whole `[B, n^order]` buffer (item-major).
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+    /// Mutable access to the whole buffer.
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Item `b`'s coefficients.
+    #[inline]
+    pub fn item(&self, b: usize) -> &[f64] {
+        let len = self.item_len();
+        &self.data[b * len..(b + 1) * len]
+    }
+
+    /// Mutable coefficients of item `b`.
+    #[inline]
+    pub fn item_mut(&mut self, b: usize) -> &mut [f64] {
+        let len = self.item_len();
+        &mut self.data[b * len..(b + 1) * len]
+    }
+
+    /// Item `b` copied out as a standalone [`Tensor`].
+    pub fn item_tensor(&self, b: usize) -> Tensor {
+        Tensor {
+            n: self.n,
+            order: self.order,
+            data: self.item(b).to_vec(),
+        }
+    }
+
+    /// `item_b += alpha * t` for every item — the batch-shared bias add.
+    pub fn axpy_broadcast(&mut self, alpha: f64, t: &Tensor) {
+        assert_eq!(self.n, t.n);
+        assert_eq!(self.order, t.order);
+        let len = self.item_len();
+        for chunk in self.data.chunks_mut(len) {
+            for (a, b) in chunk.iter_mut().zip(&t.data) {
+                *a += alpha * b;
+            }
+        }
+    }
+
+    /// Max absolute difference from a same-shape batch.
+    pub fn max_abs_diff(&self, other: &BatchTensor) -> f64 {
+        assert_eq!(self.n, other.n);
+        assert_eq!(self.order, other.order);
+        assert_eq!(self.batch, other.batch);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    // -----------------------------------------------------------------
+    // Batched kernels (see module docs: per-item arithmetic is bitwise
+    // identical to the ops in `super::ops`, index maps are shared).
+    // -----------------------------------------------------------------
+
+    fn check_like(&self, out: &BatchTensor, order: usize) {
+        assert_eq!(out.n, self.n);
+        assert_eq!(out.order, order);
+        assert_eq!(out.batch, self.batch);
+    }
+
+    /// Batched [`Tensor::permute_axes_into`]: the block map is built once,
+    /// every item is then a sequence of contiguous block copies.
+    pub fn permute_axes_into(&self, axes: &[usize], out: &mut BatchTensor) {
+        self.check_like(out, self.order);
+        let (map, block) = permute_block_map(self.n, self.order, axes);
+        let len = self.item_len();
+        for b in 0..self.batch {
+            let src = &self.data[b * len..(b + 1) * len];
+            let dst = &mut out.data[b * len..(b + 1) * len];
+            let mut d = 0usize;
+            for &s in &map {
+                dst[d..d + block].copy_from_slice(&src[s..s + block]);
+                d += block;
+            }
+        }
+    }
+
+    /// Batched [`Tensor::contract_trailing_diagonal_into`].
+    pub fn contract_trailing_diagonal_into(&self, m: usize, out: &mut BatchTensor) {
+        assert!(m >= 1 && m <= self.order);
+        self.check_like(out, self.order - m);
+        let n = self.n;
+        let keep = self.order - m;
+        let block = n.pow(m as u32);
+        let dstride: usize = (0..m).map(|a| n.pow(a as u32)).sum();
+        let outer = n.pow(keep as u32);
+        let ilen = self.item_len();
+        let olen = out.item_len();
+        for b in 0..self.batch {
+            let src = &self.data[b * ilen..(b + 1) * ilen];
+            let dst = &mut out.data[b * olen..(b + 1) * olen];
+            for (o, slot) in dst.iter_mut().enumerate().take(outer) {
+                let mut s = 0.0;
+                let mut off = o * block;
+                for _ in 0..n {
+                    s += src[off];
+                    off += dstride;
+                }
+                *slot = s;
+            }
+        }
+    }
+
+    /// Batched [`Tensor::trace_trailing_pair_into`].
+    pub fn trace_trailing_pair_into(&self, out: &mut BatchTensor) {
+        self.contract_trailing_diagonal_into(2, out)
+    }
+
+    /// Batched [`Tensor::trace_trailing_pair_eps_into`].
+    pub fn trace_trailing_pair_eps_into(&self, out: &mut BatchTensor) {
+        assert!(self.order >= 2);
+        self.check_like(out, self.order - 2);
+        let n = self.n;
+        assert_eq!(n % 2, 0, "Sp(n) requires even n");
+        let block = n * n;
+        let outer = n.pow((self.order - 2) as u32);
+        let ilen = self.item_len();
+        let olen = out.item_len();
+        for b in 0..self.batch {
+            let src = &self.data[b * ilen..(b + 1) * ilen];
+            let dst = &mut out.data[b * olen..(b + 1) * olen];
+            for (o, slot) in dst.iter_mut().enumerate().take(outer) {
+                let base = o * block;
+                let mut s = 0.0;
+                for i in 0..n / 2 {
+                    let p = 2 * i;
+                    let q = 2 * i + 1;
+                    s += src[base + p * n + q] - src[base + q * n + p];
+                }
+                *slot = s;
+            }
+        }
+    }
+
+    /// Batched [`Tensor::levi_civita_contract_trailing_into`]: the signed
+    /// permutation table and its flat offsets are built once for all items.
+    pub fn levi_civita_contract_trailing_into(&self, s: usize, out: &mut BatchTensor) {
+        let n = self.n;
+        assert!(s <= n);
+        let nb = n - s;
+        assert!(nb <= self.order);
+        self.check_like(out, self.order - nb + s);
+        let keep = self.order - nb;
+        let in_block = n.pow(nb as u32);
+        let out_block = n.pow(s as u32);
+        let entries: Vec<(usize, usize, f64)> = signed_permutations(n)
+            .iter()
+            .map(|(perm, sign)| (flat_index(n, &perm[..s]), flat_index(n, &perm[s..]), *sign))
+            .collect();
+        let outer = n.pow(keep as u32);
+        let ilen = self.item_len();
+        let olen = out.item_len();
+        for b in 0..self.batch {
+            let src = &self.data[b * ilen..(b + 1) * ilen];
+            let dst = &mut out.data[b * olen..(b + 1) * olen];
+            dst.fill(0.0);
+            for o in 0..outer {
+                let in_base = o * in_block;
+                let out_base = o * out_block;
+                for &(t_off, b_off, sign) in &entries {
+                    dst[out_base + t_off] += sign * src[in_base + b_off];
+                }
+            }
+        }
+    }
+
+    /// Batched [`Tensor::extract_group_diagonals_into`]: one gather-offset
+    /// map shared by every item.
+    pub fn extract_group_diagonals_into(&self, groups: &[usize], out: &mut BatchTensor) {
+        self.check_like(out, groups.len());
+        let offs = group_diag_offsets(self.n, self.order, groups);
+        let ilen = self.item_len();
+        let olen = out.item_len();
+        debug_assert_eq!(offs.len(), olen);
+        for b in 0..self.batch {
+            let src = &self.data[b * ilen..(b + 1) * ilen];
+            let dst = &mut out.data[b * olen..(b + 1) * olen];
+            for (slot, &s) in dst.iter_mut().zip(&offs) {
+                *slot = src[s];
+            }
+        }
+    }
+
+    /// Batched [`Tensor::axpy_permuted_into`], via the shared block map.
+    pub fn axpy_permuted_into(&self, alpha: f64, axes: &[usize], out: &mut BatchTensor) {
+        self.check_like(out, self.order);
+        let (map, block) = permute_block_map(self.n, self.order, axes);
+        let len = self.item_len();
+        for b in 0..self.batch {
+            let src = &self.data[b * len..(b + 1) * len];
+            let dst = &mut out.data[b * len..(b + 1) * len];
+            let mut d = 0usize;
+            for &s in &map {
+                for j in 0..block {
+                    dst[d + j] += alpha * src[s + j];
+                }
+                d += block;
+            }
+        }
+    }
+
+    /// Batched [`Tensor::scatter_broadcast_diagonals_axpy`]: the
+    /// diagonal-support destination offsets are computed once; each item is
+    /// then a blocked axpy over `B · n^{t+d}` contiguous source lanes.
+    pub fn scatter_broadcast_diagonals_axpy(
+        &self,
+        lead_groups: &[usize],
+        tail_groups: &[usize],
+        axes: &[usize],
+        alpha: f64,
+        out: &mut BatchTensor,
+    ) {
+        assert_eq!(tail_groups.len(), self.order);
+        let total: usize = lead_groups.iter().sum::<usize>() + tail_groups.iter().sum::<usize>();
+        assert_eq!(axes.len(), total);
+        assert_eq!(out.order, total);
+        assert_eq!(out.n, self.n);
+        assert_eq!(out.batch, self.batch);
+        let dsts = scatter_diag_dsts(self.n, lead_groups, tail_groups, axes);
+        let tail_len = self.item_len();
+        let ilen = tail_len;
+        let olen = out.item_len();
+        for b in 0..self.batch {
+            let src = &self.data[b * ilen..(b + 1) * ilen];
+            let dst = &mut out.data[b * olen..(b + 1) * olen];
+            for rep in dsts.chunks(tail_len) {
+                for (&d, &x) in rep.iter().zip(src) {
+                    dst[d] += alpha * x;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_batch(n: usize, order: usize, b: usize, rng: &mut Rng) -> (Vec<Tensor>, BatchTensor) {
+        let items: Vec<Tensor> = (0..b).map(|_| Tensor::random(n, order, rng)).collect();
+        let packed = BatchTensor::pack(&items).unwrap();
+        (items, packed)
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::new(1001);
+        let (items, packed) = random_batch(3, 2, 5, &mut rng);
+        assert_eq!(packed.batch(), 5);
+        assert_eq!(packed.item_len(), 9);
+        for (b, t) in items.iter().enumerate() {
+            assert_eq!(packed.item(b), t.data.as_slice());
+            assert!(packed.item_tensor(b).allclose(t, 0.0));
+        }
+        let back = packed.unpack();
+        for (a, b) in items.iter().zip(&back) {
+            assert!(a.allclose(b, 0.0));
+        }
+    }
+
+    #[test]
+    fn pack_rejects_mixed_and_empty() {
+        let a = Tensor::zeros(3, 2);
+        let b = Tensor::zeros(3, 1);
+        assert!(BatchTensor::pack(&[a.clone(), b]).is_err());
+        let c = Tensor::zeros(2, 2);
+        assert!(BatchTensor::pack(&[a, c]).is_err());
+        assert!(BatchTensor::pack(&[]).is_err());
+    }
+
+    /// Every batched kernel must match the per-item `_into` op bitwise on
+    /// every item.
+    #[test]
+    fn batched_kernels_match_per_item_bitwise() {
+        let mut rng = Rng::new(1002);
+        let (items, packed) = random_batch(3, 4, 4, &mut rng);
+
+        // permute
+        let axes = [2usize, 0, 3, 1];
+        let mut out = BatchTensor::zeros(3, 4, 4);
+        packed.permute_axes_into(&axes, &mut out);
+        for (b, t) in items.iter().enumerate() {
+            assert_eq!(out.item(b), t.permute_axes(&axes).data.as_slice());
+        }
+        // identity permute fast path
+        let mut out = BatchTensor::zeros(3, 4, 4);
+        packed.permute_axes_into(&[0, 1, 2, 3], &mut out);
+        for (b, t) in items.iter().enumerate() {
+            assert_eq!(out.item(b), t.data.as_slice());
+        }
+
+        // diagonal contraction
+        let mut out = BatchTensor::zeros(3, 2, 4);
+        packed.contract_trailing_diagonal_into(2, &mut out);
+        for (b, t) in items.iter().enumerate() {
+            assert_eq!(out.item(b), t.contract_trailing_diagonal(2).data.as_slice());
+        }
+
+        // pair trace
+        let mut out = BatchTensor::zeros(3, 2, 4);
+        packed.trace_trailing_pair_into(&mut out);
+        for (b, t) in items.iter().enumerate() {
+            assert_eq!(out.item(b), t.trace_trailing_pair().data.as_slice());
+        }
+
+        // ε-trace (even n)
+        let (items4, packed4) = random_batch(4, 3, 3, &mut rng);
+        let mut out = BatchTensor::zeros(4, 1, 3);
+        packed4.trace_trailing_pair_eps_into(&mut out);
+        for (b, t) in items4.iter().enumerate() {
+            assert_eq!(out.item(b), t.trace_trailing_pair_eps().data.as_slice());
+        }
+
+        // Levi-Civita
+        let (items3, packed3) = random_batch(3, 3, 3, &mut rng);
+        let want0 = items3[0].levi_civita_contract_trailing(1);
+        let mut out = BatchTensor::zeros(3, want0.order, 3);
+        packed3.levi_civita_contract_trailing_into(1, &mut out);
+        for (b, t) in items3.iter().enumerate() {
+            assert_eq!(
+                out.item(b),
+                t.levi_civita_contract_trailing(1).data.as_slice()
+            );
+        }
+
+        // group-diagonal extraction
+        let mut out = BatchTensor::zeros(3, 2, 4);
+        packed.extract_group_diagonals_into(&[3, 1], &mut out);
+        for (b, t) in items.iter().enumerate() {
+            assert_eq!(out.item(b), t.extract_group_diagonals(&[3, 1]).data.as_slice());
+        }
+
+        // permuted axpy
+        let mut got = BatchTensor::pack(&items).unwrap();
+        let mut want: Vec<Tensor> = items.clone();
+        packed.axpy_permuted_into(0.75, &axes, &mut got);
+        for (b, w) in want.iter_mut().enumerate() {
+            items[b].axpy_permuted_into(0.75, &axes, w);
+            assert_eq!(got.item(b), w.data.as_slice());
+        }
+    }
+
+    #[test]
+    fn batched_scatter_matches_per_item_bitwise() {
+        let mut rng = Rng::new(1003);
+        for (lead, tail) in [
+            (vec![2usize, 1], vec![1usize, 2]),
+            (vec![], vec![2, 2]),
+            (vec![2], vec![]),
+        ] {
+            let n = 2;
+            let total: usize = lead.iter().sum::<usize>() + tail.iter().sum::<usize>();
+            let axes: Vec<usize> = (0..total).rev().collect(); // a nontrivial σ_l
+            let (items, packed) = random_batch(n, tail.len(), 3, &mut rng);
+            let mut got = BatchTensor::zeros(n, total, 3);
+            packed.scatter_broadcast_diagonals_axpy(&lead, &tail, &axes, 0.5, &mut got);
+            for (b, t) in items.iter().enumerate() {
+                let mut want = Tensor::zeros(n, total);
+                t.scatter_broadcast_diagonals_axpy(&lead, &tail, &axes, 0.5, &mut want);
+                assert_eq!(got.item(b), want.data.as_slice(), "lead {lead:?} tail {tail:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_broadcast_adds_shared_tensor() {
+        let mut rng = Rng::new(1004);
+        let (items, mut packed) = random_batch(3, 2, 3, &mut rng);
+        let bias = Tensor::random(3, 2, &mut rng);
+        packed.axpy_broadcast(2.0, &bias);
+        for (b, t) in items.iter().enumerate() {
+            let mut want = t.clone();
+            want.axpy(2.0, &bias);
+            assert!(packed.item_tensor(b).allclose(&want, 0.0));
+        }
+    }
+}

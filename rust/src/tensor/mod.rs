@@ -16,11 +16,16 @@
 //! - group-diagonal extraction ([`Tensor::extract_group_diagonals`]) — S_n
 //!   Step 2 transfer (eq. 101),
 //! - mode product ([`Tensor::mode_apply`]) — the group action `ρ_k(g)` used
-//!   by the equivariance tests.
+//!   by the equivariance tests,
+//! - the contiguous `[B, n^k]` batch layout ([`BatchTensor`]) with batched
+//!   variants of every kernel above, sharing one precomputed index map
+//!   across all `B` items (see `docs/batched_execution.md`).
 
+mod batch;
 mod index;
 mod ops;
 
+pub use batch::BatchTensor;
 pub use index::{flat_index, unflat_index, MultiIndexIter};
 
 use crate::error::{Error, Result};

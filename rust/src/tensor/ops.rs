@@ -697,6 +697,192 @@ pub fn signed_permutations(n: usize) -> Vec<(Vec<usize>, f64)> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Shared index maps for the batched kernels
+// ---------------------------------------------------------------------------
+//
+// Each function below runs the same odometer as its per-item scan above,
+// exactly once, and returns the visit order as flat offsets. The batched
+// kernels in `super::batch` replay the map over every item of a
+// [`super::BatchTensor`], so the index arithmetic is paid once per schedule
+// node instead of once per batch item. Keeping the odometers here, next to
+// the per-item scans they mirror, is what the bitwise-equivalence unit
+// tests in `batch.rs` lean on.
+
+/// The blocked-permute visit order: source offsets of each maximal
+/// contiguous block, in destination order, plus the block length.
+/// An identity permutation (or `order == 0`) is the single whole-tensor
+/// block `([0], n^order)`.
+pub(crate) fn permute_block_map(n: usize, order: usize, axes: &[usize]) -> (Vec<usize>, usize) {
+    assert_eq!(axes.len(), order, "axes arity must match order");
+    let mut tail = 0usize;
+    while tail < order && axes[order - 1 - tail] == order - 1 - tail {
+        tail += 1;
+    }
+    let lead = order - tail;
+    if lead == 0 {
+        return (vec![0], n.pow(order as u32));
+    }
+    let mut strides = vec![0usize; order];
+    {
+        let mut s = 1usize;
+        for a in (0..order).rev() {
+            strides[a] = s;
+            s *= n;
+        }
+    }
+    let lead_strides: Vec<usize> = axes[..lead].iter().map(|&a| strides[a]).collect();
+    let block = n.pow(tail as u32);
+    let blocks = n.pow(lead as u32);
+    let mut map = Vec::with_capacity(blocks);
+    let mut idx = vec![0usize; lead];
+    let mut src = 0usize;
+    for _ in 0..blocks {
+        map.push(src);
+        let mut a = lead;
+        loop {
+            if a == 0 {
+                break;
+            }
+            a -= 1;
+            idx[a] += 1;
+            src += lead_strides[a];
+            if idx[a] < n {
+                break;
+            }
+            idx[a] = 0;
+            src -= n * lead_strides[a];
+        }
+    }
+    (map, block)
+}
+
+/// The group-diagonal gather order: source offsets visited by
+/// `extract_diagonals_scan`, in destination order (`n^groups.len()`
+/// entries).
+pub(crate) fn group_diag_offsets(n: usize, order: usize, groups: &[usize]) -> Vec<usize> {
+    let total: usize = groups.iter().sum();
+    assert_eq!(total, order, "groups must cover all axes");
+    let d = groups.len();
+    let mut gstride = vec![0usize; d];
+    {
+        let mut axis_stride = vec![0usize; order];
+        let mut s = 1usize;
+        for a in (0..order).rev() {
+            axis_stride[a] = s;
+            s *= n;
+        }
+        let mut a = 0usize;
+        for (g, &size) in groups.iter().enumerate() {
+            for _ in 0..size {
+                gstride[g] += axis_stride[a];
+                a += 1;
+            }
+        }
+    }
+    let count = n.pow(d as u32);
+    let mut offs = Vec::with_capacity(count);
+    let mut idx = vec![0usize; d];
+    let mut src = 0usize;
+    for _ in 0..count {
+        offs.push(src);
+        let mut g = d;
+        loop {
+            if g == 0 {
+                break;
+            }
+            g -= 1;
+            idx[g] += 1;
+            src += gstride[g];
+            if idx[g] < n {
+                break;
+            }
+            idx[g] = 0;
+            src -= n * gstride[g];
+        }
+    }
+    offs
+}
+
+/// The diagonal-support scatter order of
+/// [`Tensor::scatter_broadcast_diagonals_axpy`]: destination offsets in
+/// visit order, rep-major — entry `r · n^d + s` is where compact source
+/// element `s` lands under lead index `r`.
+pub(crate) fn scatter_diag_dsts(
+    n: usize,
+    lead_groups: &[usize],
+    tail_groups: &[usize],
+    axes: &[usize],
+) -> Vec<usize> {
+    let total: usize = lead_groups.iter().sum::<usize>() + tail_groups.iter().sum::<usize>();
+    assert_eq!(axes.len(), total);
+    let t = lead_groups.len();
+    let d = tail_groups.len();
+    let mut planar_out_stride = vec![0usize; total];
+    {
+        let mut out_stride = vec![0usize; total];
+        let mut s = 1usize;
+        for p in (0..total).rev() {
+            out_stride[p] = s;
+            s *= n;
+        }
+        for (p, &a) in axes.iter().enumerate() {
+            planar_out_stride[a] = out_stride[p];
+        }
+    }
+    let mut gstride = vec![0usize; t + d];
+    {
+        let mut a = 0usize;
+        for (g, &size) in lead_groups.iter().chain(tail_groups.iter()).enumerate() {
+            for _ in 0..size {
+                gstride[g] += planar_out_stride[a];
+                a += 1;
+            }
+        }
+    }
+    let reps = n.pow(t as u32);
+    let tail_len = n.pow(d as u32);
+    let mut dsts = Vec::with_capacity(reps * tail_len);
+    let mut lead_idx = vec![0usize; t];
+    let mut lead_off = 0usize;
+    for _ in 0..reps {
+        let mut tail_idx = vec![0usize; d];
+        let mut dst = lead_off;
+        for _ in 0..tail_len {
+            dsts.push(dst);
+            let mut g = d;
+            loop {
+                if g == 0 {
+                    break;
+                }
+                g -= 1;
+                tail_idx[g] += 1;
+                dst += gstride[t + g];
+                if tail_idx[g] < n {
+                    break;
+                }
+                tail_idx[g] = 0;
+                dst -= n * gstride[t + g];
+            }
+        }
+        let mut g = t;
+        loop {
+            if g == 0 {
+                break;
+            }
+            g -= 1;
+            lead_idx[g] += 1;
+            lead_off += gstride[g];
+            if lead_idx[g] < n {
+                break;
+            }
+            lead_idx[g] = 0;
+            lead_off -= n * gstride[g];
+        }
+    }
+    dsts
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::index::unflat_index;

@@ -41,6 +41,17 @@ pub fn max_threads() -> usize {
     }
 }
 
+/// Contiguous-span length that divides `len` items across the available
+/// worker threads — the one chunking rule the batched layer/net/backward
+/// paths share. Spans are floored at `MIN_SPAN` items (when the batch has
+/// that many): a batched schedule walk amortises its per-node index maps
+/// across the span, so degenerating to 1-item spans on many-core machines
+/// would pay map construction per item with nothing amortised.
+pub fn span_len(len: usize) -> usize {
+    const MIN_SPAN: usize = 4;
+    len.div_ceil(max_threads()).max(MIN_SPAN.min(len)).max(1)
+}
+
 /// Apply `f` to every item of `items`, fanning contiguous chunks out over
 /// up to `threads` scoped worker threads. Output order matches input order.
 ///

@@ -1,0 +1,312 @@
+//! Batch-axis fused execution end to end: one schedule walk per batch must
+//! be numerically indistinguishable (≤ 1e-12) from the per-item reference
+//! path — for both layer types, all four groups, ragged (B = 1) batches,
+//! the network plumbing, and the training loop — and must stay
+//! zero-allocation once the scratch arena is warm.
+
+use equidiag::fastmult::{Group, LayerSchedule, ScratchArena};
+use equidiag::layer::{ChannelEquivariantLinear, EquivariantLinear, Init};
+use equidiag::nn::{
+    train, Activation, EquivariantNet, Loss, NetGrads, Optimizer, Sgd, TrainConfig,
+};
+use equidiag::tensor::{BatchTensor, Tensor};
+use equidiag::util::Rng;
+
+const GROUPS: [Group; 4] = [
+    Group::Symmetric,
+    Group::Orthogonal,
+    Group::SpecialOrthogonal,
+    Group::Symplectic,
+];
+
+fn dim_for(group: Group) -> usize {
+    if group == Group::Symplectic {
+        4
+    } else {
+        3
+    }
+}
+
+#[test]
+fn layer_forward_batch_matches_per_item_all_groups() {
+    let mut rng = Rng::new(0xFB01);
+    for group in GROUPS {
+        let n = dim_for(group);
+        let layer = EquivariantLinear::new(group, n, 2, 2, Init::Normal(0.5), &mut rng).unwrap();
+        // Full batch and the ragged single-item tail.
+        for batch in [5usize, 1] {
+            let inputs: Vec<Tensor> = (0..batch).map(|_| Tensor::random(n, 2, &mut rng)).collect();
+            let batched = layer.forward_batch(&inputs).unwrap();
+            assert_eq!(batched.len(), batch);
+            for (v, b) in inputs.iter().zip(&batched) {
+                let want = layer.forward(v).unwrap();
+                assert!(
+                    want.allclose(b, 1e-12),
+                    "{group} B={batch}: fused batch diverges by {}",
+                    want.max_abs_diff(b)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn layer_backward_batch_matches_per_item_all_groups() {
+    let mut rng = Rng::new(0xFB02);
+    for group in GROUPS {
+        let n = dim_for(group);
+        let layer = EquivariantLinear::new(group, n, 2, 2, Init::Normal(0.5), &mut rng).unwrap();
+        for batch in [5usize, 1] {
+            let inputs: Vec<Tensor> = (0..batch).map(|_| Tensor::random(n, 2, &mut rng)).collect();
+            let gouts: Vec<Tensor> = (0..batch).map(|_| Tensor::random(n, 2, &mut rng)).collect();
+            // Sequential per-item reference.
+            let mut want_grads = layer.zero_grads();
+            let mut want_gv = Vec::new();
+            for (v, g) in inputs.iter().zip(&gouts) {
+                want_gv.push(layer.backward(v, g, &mut want_grads).unwrap());
+            }
+            // Fused batched walk.
+            let mut got_grads = layer.zero_grads();
+            let got_gv = layer.backward_batch(&inputs, &gouts, &mut got_grads).unwrap();
+            for (a, b) in want_gv.iter().zip(&got_gv) {
+                assert!(
+                    a.allclose(b, 1e-12),
+                    "{group} B={batch}: input grad diverges by {}",
+                    a.max_abs_diff(b)
+                );
+            }
+            for (a, b) in want_grads.coeffs.iter().zip(&got_grads.coeffs) {
+                assert!((a - b).abs() <= 1e-12, "{group} B={batch}: λ grad {a} vs {b}");
+            }
+            for (a, b) in want_grads.bias_coeffs.iter().zip(&got_grads.bias_coeffs) {
+                assert!(
+                    (a - b).abs() <= 1e-12,
+                    "{group} B={batch}: bias grad {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn channel_layer_batch_matches_per_item() {
+    let mut rng = Rng::new(0xFB03);
+    for group in [Group::Symmetric, Group::Orthogonal, Group::Symplectic] {
+        let n = dim_for(group);
+        let (c_in, c_out) = (2usize, 3usize);
+        let layer = ChannelEquivariantLinear::new(group, n, 2, 2, c_in, c_out, &mut rng).unwrap();
+        for batch in [4usize, 1] {
+            let items: Vec<Vec<Tensor>> = (0..batch)
+                .map(|_| (0..c_in).map(|_| Tensor::random(n, 2, &mut rng)).collect())
+                .collect();
+            // Forward.
+            let batched = layer.forward_batch(&items).unwrap();
+            assert_eq!(batched.len(), batch);
+            for (x, outs) in items.iter().zip(&batched) {
+                let want = layer.forward(x).unwrap();
+                assert_eq!(outs.len(), c_out);
+                for (a, b) in want.iter().zip(outs) {
+                    assert!(
+                        a.allclose(b, 1e-12),
+                        "{group} B={batch}: channel forward diverges by {}",
+                        a.max_abs_diff(b)
+                    );
+                }
+            }
+            // Backward.
+            let gouts: Vec<Vec<Tensor>> = (0..batch)
+                .map(|_| (0..c_out).map(|_| Tensor::random(n, 2, &mut rng)).collect())
+                .collect();
+            let mut want_grads = layer.zero_grads();
+            let mut want_gx = Vec::new();
+            for (x, g) in items.iter().zip(&gouts) {
+                want_gx.push(layer.backward(x, g, &mut want_grads).unwrap());
+            }
+            let mut got_grads = layer.zero_grads();
+            let got_gx = layer.backward_batch(&items, &gouts, &mut got_grads).unwrap();
+            for (wi, gi) in want_gx.iter().zip(&got_gx) {
+                for (a, b) in wi.iter().zip(gi) {
+                    assert!(a.allclose(b, 1e-12), "{group} B={batch}: ∂x diverges");
+                }
+            }
+            for (wt, gt) in want_grads.terms.iter().zip(&got_grads.terms) {
+                for (a, b) in wt.iter().zip(gt) {
+                    assert!((a - b).abs() <= 1e-12, "{group} B={batch}: λ grad {a} vs {b}");
+                }
+            }
+            for (wb, gb) in want_grads.bias.iter().zip(&got_grads.bias) {
+                for (a, b) in wb.iter().zip(gb) {
+                    assert!((a - b).abs() <= 1e-12, "{group} B={batch}: bias grad");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn net_batched_plumbing_matches_per_item() {
+    let mut rng = Rng::new(0xFB04);
+    let net = EquivariantNet::new(
+        Group::Symmetric,
+        3,
+        &[2, 2, 1],
+        Activation::Relu,
+        Init::ScaledNormal,
+        &mut rng,
+    )
+    .unwrap();
+    let inputs: Vec<Tensor> = (0..6).map(|_| Tensor::random(3, 2, &mut rng)).collect();
+    // forward_batch keeps activations batched between layers.
+    let batched = net.forward_batch(&inputs).unwrap();
+    for (v, b) in inputs.iter().zip(&batched) {
+        let want = net.forward(v).unwrap();
+        assert!(want.allclose(b, 1e-12), "diff {}", want.max_abs_diff(b));
+    }
+    // The traced/backward pair against the per-item reference.
+    let vb = BatchTensor::pack(&inputs).unwrap();
+    let (trace, out) = net.forward_trace_batched(&vb).unwrap();
+    let gout = out.clone(); // dL/dout = out for L = ||out||²/2
+    let (got_grads, got_gv) = net.backward_batched(&trace, &gout).unwrap();
+    let mut want_grads = NetGrads {
+        layers: net.layers.iter().map(|l| l.zero_grads()).collect(),
+    };
+    for (b, v) in inputs.iter().enumerate() {
+        let (trace_i, out_i) = net.forward_trace(v).unwrap();
+        assert!(out.item_tensor(b).allclose(&out_i, 1e-12));
+        let (grads_i, gv_i) = net.backward(&trace_i, &out_i).unwrap();
+        want_grads.add(&grads_i);
+        assert!(
+            got_gv.item_tensor(b).allclose(&gv_i, 1e-12),
+            "input grad item {b} diverges by {}",
+            got_gv.item_tensor(b).max_abs_diff(&gv_i)
+        );
+    }
+    for (lw, lg) in want_grads.layers.iter().zip(&got_grads.layers) {
+        for (a, b) in lw.coeffs.iter().zip(&lg.coeffs) {
+            assert!((a - b).abs() <= 1e-11, "{a} vs {b}");
+        }
+        for (a, b) in lw.bias_coeffs.iter().zip(&lg.bias_coeffs) {
+            assert!((a - b).abs() <= 1e-11, "{a} vs {b}");
+        }
+    }
+}
+
+/// The warmed scratch arena serves every batched intermediate by
+/// recycling: steady-state `execute_batch` performs zero heap allocations.
+#[test]
+fn batched_path_is_zero_alloc_when_warm() {
+    let mut rng = Rng::new(0xFB05);
+    let layer =
+        EquivariantLinear::new(Group::Symmetric, 3, 3, 2, Init::Normal(0.5), &mut rng).unwrap();
+    let inputs: Vec<Tensor> = (0..6).map(|_| Tensor::random(3, 3, &mut rng)).collect();
+    let vb = BatchTensor::pack(&inputs).unwrap();
+    let schedule: &LayerSchedule = layer.schedule();
+    let mut arena = ScratchArena::new();
+    let mut out = BatchTensor::zeros(3, 2, 6);
+    schedule
+        .execute_batch(&vb, &layer.coeffs, &mut out, &mut arena)
+        .unwrap();
+    let warm = arena.allocations();
+    assert!(warm > 0, "cold batched pass must allocate");
+    for _ in 0..5 {
+        out.data_mut().fill(0.0);
+        schedule
+            .execute_batch(&vb, &layer.coeffs, &mut out, &mut arena)
+            .unwrap();
+    }
+    assert_eq!(
+        arena.allocations(),
+        warm,
+        "steady-state batched execution must not heap-allocate"
+    );
+    assert!(arena.reuses() > 0);
+}
+
+/// Historical per-sample training loop, reproduced verbatim as the
+/// reference: same RNG stream, per-sample forward/backward, per-sample
+/// gradient accumulation.
+fn train_per_sample_reference(
+    net: &mut EquivariantNet,
+    data: &[(Tensor, Tensor)],
+    opt: &mut dyn Optimizer,
+    cfg: &TrainConfig,
+) -> Vec<f64> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut losses = Vec::with_capacity(cfg.steps);
+    for _ in 0..cfg.steps {
+        let mut batch_loss = 0.0;
+        let mut acc: Option<NetGrads> = None;
+        for _ in 0..cfg.batch_size {
+            let (x, y) = &data[rng.below(data.len())];
+            let (trace, out) = net.forward_trace(x).unwrap();
+            batch_loss += cfg.loss.value(&out, y);
+            let gout = cfg.loss.grad(&out, y);
+            let (grads, _) = net.backward(&trace, &gout).unwrap();
+            match &mut acc {
+                None => acc = Some(grads),
+                Some(a) => a.add(&grads),
+            }
+        }
+        let mut grads = acc.expect("batch_size >= 1");
+        grads.scale(1.0 / cfg.batch_size as f64);
+        batch_loss /= cfg.batch_size as f64;
+        let mut params = net.params_flat();
+        let flat = net.grads_flat(&grads);
+        opt.step(&mut params, &flat);
+        net.set_params_flat(&params);
+        losses.push(batch_loss);
+    }
+    losses
+}
+
+/// `train()` (one fused batched walk per step, single gradient reduction)
+/// must reproduce the per-sample loop's loss trajectory for a fixed seed.
+#[test]
+fn train_matches_per_sample_loss_trajectory() {
+    let n = 3;
+    let mut rng = Rng::new(0xFB06);
+    let net = EquivariantNet::new(
+        Group::Symmetric,
+        n,
+        &[2, 0],
+        Activation::Tanh,
+        Init::Normal(0.2),
+        &mut rng,
+    )
+    .unwrap();
+    let data: Vec<(Tensor, Tensor)> = (0..24)
+        .map(|_| {
+            let x = Tensor::random(n, 2, &mut rng);
+            let mut tr = 0.0;
+            for i in 0..n {
+                tr += x.get(&[i, i]);
+            }
+            (x, Tensor::from_vec(n, 0, vec![tr]).unwrap())
+        })
+        .collect();
+    let cfg = TrainConfig {
+        steps: 40,
+        batch_size: 4,
+        loss: Loss::Mse,
+        log_every: 10,
+        seed: 0x5EED,
+        ..TrainConfig::default()
+    };
+    let mut net_fused = net.clone();
+    let mut opt_fused = Sgd::new(0.05, 0.9);
+    let report = train(&mut net_fused, &data, &mut opt_fused, &cfg).unwrap();
+    let mut net_ref = net.clone();
+    let mut opt_ref = Sgd::new(0.05, 0.9);
+    let want = train_per_sample_reference(&mut net_ref, &data, &mut opt_ref, &cfg);
+    assert_eq!(report.losses.len(), want.len());
+    for (step, (a, b)) in report.losses.iter().zip(&want).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-8 * (1.0 + b.abs()),
+            "step {step}: fused loss {a} vs per-sample {b}"
+        );
+    }
+    // The logged rows follow log_every and never print from the library.
+    assert!(!report.logged.is_empty());
+    assert_eq!(report.logged.first().unwrap().0, 0);
+    assert_eq!(report.logged.last().unwrap().0, cfg.steps - 1);
+}
