@@ -13,14 +13,17 @@
 //!    practitioner would otherwise use).
 //!
 //! Emits `BENCH_fastmult.json` (fused vs per-term medians, arena allocation
-//! counters, prefix-sharing ratios) and `BENCH_batch.json` (batch-axis
-//! fused execution vs the item-parallel and per-term paths) with stable
-//! schemas so the perf trajectory is machine-readable. Set `BENCH_FAST=1`
-//! for the CI smoke mode: smaller budgets, the fused-vs-per-term and
+//! counters, sharing ratios), `BENCH_planner.json` (the folded planner's
+//! executed-node / scatter-pass counts vs the prefix-sharing path, cost
+//! model estimates, fold ratios — with the per-config invariants asserted
+//! before anything is timed) and `BENCH_batch.json` (batch-axis fused
+//! execution vs the item-parallel and per-term paths) with stable schemas
+//! so the perf trajectory is machine-readable. Set `BENCH_FAST=1` for the
+//! CI smoke mode: smaller budgets, the fused-vs-per-term, planner and
 //! fused-batch sections and the JSONs only.
 
-use equidiag::fastmult::{matrix_mult, Group, ScratchArena};
-use equidiag::layer::{EquivariantLinear, Init};
+use equidiag::fastmult::{exec_stats, matrix_mult, Group, ScratchArena};
+use equidiag::layer::{spanning_plans, EquivariantLinear, Init};
 use equidiag::tensor::Tensor;
 use equidiag::util::{bench_median, max_threads, parallel_map, Rng, Table};
 use std::time::Duration;
@@ -88,11 +91,12 @@ fn fused_vs_per_term(budget: Duration, rng: &mut Rng) -> (Vec<FusedRow>, u64, u6
     for (idx, &(group, n, k, l)) in configs.iter().enumerate() {
         let layer = EquivariantLinear::new(group, n, k, l, Init::Normal(0.5), rng).unwrap();
         let v = Tensor::random(n, k, rng);
-        // Sanity: the two paths agree bitwise before we time them.
+        // Sanity: the two paths agree (≤ 1e-12 — the folded class walk
+        // reassociates the per-term additions) before we time them.
         let a = layer.forward(&v).unwrap();
         let b = layer.forward_per_term(&v).unwrap();
         assert!(
-            a.allclose(&b, 0.0),
+            a.allclose(&b, 1e-12),
             "fused and per-term disagree by {}",
             a.max_abs_diff(&b)
         );
@@ -153,6 +157,226 @@ fn fused_vs_per_term(budget: Duration, rng: &mut Rng) -> (Vec<FusedRow>, u64, u6
          ({steady_reuses} reuses, high-water {high_water} f64s)"
     );
     (rows, steady_allocs, steady_reuses, high_water)
+}
+
+struct PlannerRow {
+    group: &'static str,
+    n: usize,
+    k: usize,
+    l: usize,
+    terms: usize,
+    prefix_nodes: usize,
+    nodes: usize,
+    classes: usize,
+    /// Runtime counter delta of one execute — asserted equal to `classes`.
+    measured_scatter_passes: u64,
+    executed_ops_prefix: usize,
+    executed_ops_folded: usize,
+    estimated_flops: u128,
+    estimated_bytes: u128,
+    /// Σ `MultPlan::bytes_moved()` over the spanning terms — what the
+    /// per-term reference path pays, for comparison with the folded
+    /// `estimated_bytes`.
+    per_term_estimated_bytes: u128,
+    sharing_ratio: f64,
+    fold_ratio: f64,
+    per_term_us: f64,
+    fused_us: f64,
+    speedup: f64,
+}
+
+/// The perf-trajectory section: per k,l ≤ 4 config, the planner's
+/// executed-node and scatter-pass counts against the prefix-sharing
+/// (pre-folding) path, the cost model's flops/bytes estimate, and the
+/// measured folded-vs-per-term speedup. Asserts the folding invariants —
+/// classes strictly below terms, folded kernel invocations strictly below
+/// the prefix path, and (single-threaded, so the process-wide counters are
+/// exact) scatter passes per forward == classes, executed nodes per
+/// forward == nodes. Emits `BENCH_planner.json`.
+fn planner_section(budget: Duration, rng: &mut Rng) -> Vec<PlannerRow> {
+    println!("\nfolded planner: executed ops and scatter passes vs the prefix path:");
+    let mut table = Table::new(vec![
+        "group",
+        "n",
+        "(k,l)",
+        "terms",
+        "classes",
+        "nodes (prefix)",
+        "exec ops (prefix)",
+        "est flops",
+        "speedup",
+    ]);
+    let configs: &[(Group, usize, usize, usize)] = if fast_mode() {
+        &[
+            (Group::Symmetric, 4, 2, 2),
+            (Group::Symmetric, 3, 3, 2),
+            (Group::Orthogonal, 5, 3, 3),
+            (Group::Orthogonal, 4, 4, 2),
+            (Group::Symplectic, 4, 2, 2),
+            (Group::SpecialOrthogonal, 3, 2, 2),
+        ]
+    } else {
+        &[
+            (Group::Symmetric, 4, 2, 2),
+            (Group::Symmetric, 3, 3, 2),
+            (Group::Symmetric, 4, 3, 3),
+            (Group::Orthogonal, 5, 3, 3),
+            (Group::Orthogonal, 6, 2, 2),
+            (Group::Orthogonal, 4, 4, 2),
+            (Group::Orthogonal, 4, 4, 4),
+            (Group::Symplectic, 4, 2, 2),
+            (Group::Symplectic, 4, 3, 3),
+            (Group::SpecialOrthogonal, 3, 2, 2),
+        ]
+    };
+    let mut rows = Vec::new();
+    for &(group, n, k, l) in configs {
+        let layer = EquivariantLinear::new(group, n, k, l, Init::Normal(0.5), rng).unwrap();
+        let stats = layer.schedule_stats();
+        // The acceptance invariants, per config.
+        assert!(
+            stats.classes < stats.terms,
+            "{group} ({k},{l}): scatter passes must fold below the term count: {stats:?}"
+        );
+        assert!(
+            stats.nodes <= stats.prefix_nodes,
+            "{group} ({k},{l}): global CSE must not add nodes: {stats:?}"
+        );
+        assert!(
+            stats.executed_ops() < stats.executed_ops_prefix(),
+            "{group} ({k},{l}): folded kernel invocations must beat the prefix path: {stats:?}"
+        );
+        let v = Tensor::random(n, k, rng);
+        // Runtime invariant, measured for EVERY config (single-threaded
+        // here, so the process-wide counters are exact): one execute runs
+        // exactly `classes` scatter passes and materialises exactly
+        // `nodes` intermediates. The measured deltas — not the compile-time
+        // numbers — are what the JSON reports as scatter_passes.
+        let (measured_passes, measured_nodes) = {
+            let mut arena = ScratchArena::new();
+            let mut out = Tensor::zeros(n, l);
+            let before = exec_stats();
+            layer
+                .schedule()
+                .execute(&v, &layer.coeffs, &mut out, &mut arena)
+                .unwrap();
+            let after = exec_stats();
+            (
+                after.scatter_passes - before.scatter_passes,
+                after.executed_nodes - before.executed_nodes,
+            )
+        };
+        assert_eq!(
+            measured_passes, stats.classes as u64,
+            "{group} ({k},{l}): scatter passes per forward must equal the class count"
+        );
+        assert_eq!(
+            measured_nodes, stats.nodes as u64,
+            "{group} ({k},{l}): executed nodes per forward must equal the CSE node count"
+        );
+        // The per-term path's memory-traffic estimate (MultPlan's half of
+        // the cost model), against the folded walk's estimated_bytes.
+        let per_term_bytes: u128 = spanning_plans(group, n, k, l)
+            .unwrap()
+            .iter()
+            .map(|p| p.bytes_moved())
+            .fold(0u128, u128::saturating_add);
+        let per_term = bench_median(budget, || {
+            let _ = layer.forward_per_term(&v).unwrap();
+        });
+        let fused = bench_median(budget, || {
+            let _ = layer.forward(&v).unwrap();
+        });
+        let speedup = per_term.median_s / fused.median_s;
+        table.row(vec![
+            group.name().to_string(),
+            format!("{n}"),
+            format!("({k},{l})"),
+            format!("{}", stats.terms),
+            format!("{}", stats.classes),
+            format!("{} ({})", stats.nodes, stats.prefix_nodes),
+            format!(
+                "{} ({})",
+                stats.executed_ops(),
+                stats.executed_ops_prefix()
+            ),
+            format!("{}", stats.estimated_flops),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(PlannerRow {
+            group: group.name(),
+            n,
+            k,
+            l,
+            terms: stats.terms,
+            prefix_nodes: stats.prefix_nodes,
+            nodes: stats.nodes,
+            classes: stats.classes,
+            measured_scatter_passes: measured_passes,
+            executed_ops_prefix: stats.executed_ops_prefix(),
+            executed_ops_folded: stats.executed_ops(),
+            estimated_flops: stats.estimated_flops,
+            estimated_bytes: stats.estimated_bytes,
+            per_term_estimated_bytes: per_term_bytes,
+            sharing_ratio: stats.sharing_ratio(),
+            fold_ratio: stats.fold_ratio(),
+            per_term_us: per_term.median_s * 1e6,
+            fused_us: fused.median_s * 1e6,
+            speedup,
+        });
+    }
+    table.print();
+    rows
+}
+
+fn write_planner_json(path: &str, rows: &[PlannerRow]) {
+    let best = rows.iter().map(|r| r.speedup).fold(f64::MIN, f64::max);
+    let configs: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"group\": \"{}\", \"n\": {}, \"k\": {}, \"l\": {}, \
+                 \"terms\": {}, \"prefix_nodes\": {}, \"nodes\": {}, \
+                 \"classes\": {}, \"scatter_passes\": {measured}, \
+                 \"executed_ops_prefix\": {}, \"executed_ops_folded\": {}, \
+                 \"estimated_flops\": {}, \"estimated_bytes\": {}, \
+                 \"per_term_estimated_bytes\": {}, \
+                 \"sharing_ratio\": {:.4}, \"fold_ratio\": {:.4}, \
+                 \"per_term_us\": {:.3}, \"fused_us\": {:.3}, \
+                 \"speedup\": {:.3}}}",
+                r.group,
+                r.n,
+                r.k,
+                r.l,
+                r.terms,
+                r.prefix_nodes,
+                r.nodes,
+                r.classes,
+                r.executed_ops_prefix,
+                r.executed_ops_folded,
+                r.estimated_flops,
+                r.estimated_bytes,
+                r.per_term_estimated_bytes,
+                r.sharing_ratio,
+                r.fold_ratio,
+                r.per_term_us,
+                r.fused_us,
+                r.speedup,
+                measured = r.measured_scatter_passes
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"planner\",\n  \"fast_mode\": {fast},\n  \
+         \"configs\": [\n{configs}\n  ],\n  \
+         \"best_speedup\": {best:.3}\n}}\n",
+        fast = fast_mode(),
+        configs = configs.join(",\n"),
+    );
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }
 
 struct BatchRow {
@@ -365,6 +589,9 @@ fn main() {
         steady_reuses,
         high_water,
     );
+
+    let planner_rows = planner_section(budget, &mut rng);
+    write_planner_json("BENCH_planner.json", &planner_rows);
 
     let batch_rows = fused_batch_section(budget, &mut rng);
     write_batch_json("BENCH_batch.json", &batch_rows);

@@ -1,7 +1,7 @@
 //! Serving metrics: counters, latency aggregates, per-batch execution
 //! latency, plan/schedule-cache effectiveness and scratch-arena health.
 
-use crate::fastmult::{arena_stats, ops_shared_total, PlanCache};
+use crate::fastmult::{arena_stats, exec_stats, ops_shared_total, planner_totals, PlanCache};
 use crate::nn::fused_batch_stats;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -65,9 +65,30 @@ pub struct MetricsSnapshot {
     pub schedule_cache_hits: u64,
     /// Compiled-schedule cache misses (schedule compilations).
     pub schedule_cache_misses: u64,
-    /// Interior ops elided by schedule prefix sharing (per forward pass,
-    /// summed over every compiled schedule).
+    /// Interior ops elided by schedule CSE (per forward pass, summed over
+    /// every compiled schedule).
     pub ops_shared: u64,
+    /// Interior DAG nodes actually materialised across all schedule walks
+    /// (process-wide, see [`crate::fastmult::exec_stats`]).
+    pub executed_nodes: u64,
+    /// Folded multi-pattern scatter passes executed across all schedule
+    /// walks — one per active `(node, pattern)` class per forward.
+    pub scatter_passes: u64,
+    /// Compile-time planner totals over every compiled schedule: distinct
+    /// interior nodes after global CSE.
+    pub schedule_nodes: u64,
+    /// Folded `(node, pattern)` classes over every compiled schedule (the
+    /// scatter-pass count of one forward through everything compiled).
+    pub schedule_classes: u64,
+    /// Cost-model flops of one forward walk, summed over compiled
+    /// schedules.
+    pub schedule_estimated_flops: u64,
+    /// Cost-model bytes moved by one forward walk, summed over compiled
+    /// schedules.
+    pub schedule_estimated_bytes: u64,
+    /// Aggregate fraction of interior ops eliminated by CSE across every
+    /// compiled schedule (`1 - nodes / chain_ops`).
+    pub schedule_sharing_ratio: f64,
     /// Scratch-arena buffers allocated fresh from the heap (stops growing
     /// once serving reaches steady state — the zero-allocation invariant).
     pub arena_allocations: u64,
@@ -156,6 +177,8 @@ impl Metrics {
         let cache = PlanCache::global().stats();
         let arena = arena_stats();
         let fused = fused_batch_stats();
+        let exec = exec_stats();
+        let planner = planner_totals();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -178,6 +201,13 @@ impl Metrics {
             schedule_cache_hits: cache.schedule_hits,
             schedule_cache_misses: cache.schedule_misses,
             ops_shared: ops_shared_total(),
+            executed_nodes: exec.executed_nodes,
+            scatter_passes: exec.scatter_passes,
+            schedule_nodes: planner.nodes,
+            schedule_classes: planner.classes,
+            schedule_estimated_flops: planner.estimated_flops,
+            schedule_estimated_bytes: planner.estimated_bytes,
+            schedule_sharing_ratio: planner.sharing_ratio(),
             arena_allocations: arena.allocations,
             arena_reuses: arena.reuses,
             arena_high_water_f64s: arena.high_water_f64s as u64,
@@ -240,9 +270,16 @@ mod tests {
         layer.forward(&Tensor::random(3, 2, &mut rng)).unwrap();
         let s = m.snapshot();
         assert!(s.schedule_cache_misses >= 1, "schedule compile not counted");
-        assert!(s.ops_shared > 0, "prefix sharing not plumbed through");
+        assert!(s.ops_shared > 0, "CSE sharing not plumbed through");
         assert!(s.arena_allocations >= 1, "arena counters not plumbed");
         assert!(s.arena_high_water_f64s >= 1);
+        // Planner and execution counters are plumbed from the schedule
+        // globals (the forward above materialised nodes and ran folded
+        // scatter passes).
+        assert!(s.executed_nodes >= 1, "executed-node counter not plumbed");
+        assert!(s.scatter_passes >= 1, "scatter-pass counter not plumbed");
+        assert!(s.schedule_nodes >= 1 && s.schedule_classes >= 1);
+        assert!(s.schedule_estimated_flops > 0 && s.schedule_estimated_bytes > 0);
         // Fused-batch counters are plumbed from the nn::model globals; run
         // one batched network forward so they are non-trivial.
         use crate::nn::{Activation, EquivariantNet};

@@ -16,7 +16,7 @@
 //! - counters: hits / misses / evictions, surfaced through
 //!   [`PlanCache::stats`] and the coordinator's metrics snapshot.
 
-use super::schedule::LayerSchedule;
+use super::schedule::{exec_stats, LayerSchedule};
 use super::{Group, MultPlan};
 use crate::diagram::Diagram;
 use crate::error::Result;
@@ -102,6 +102,14 @@ pub struct CacheStats {
     pub schedule_misses: u64,
     /// Compiled schedules currently held.
     pub schedule_entries: usize,
+    /// Process-wide folded scatter passes executed (one per active
+    /// `(node, pattern)` class per schedule walk — see
+    /// [`crate::fastmult::exec_stats`]). Per forward this equals the
+    /// number of distinct classes, the invariant the bench smoke asserts.
+    pub scatter_passes: u64,
+    /// Process-wide interior DAG node evaluations (one per distinct
+    /// intermediate per schedule walk).
+    pub executed_nodes: u64,
 }
 
 impl CacheStats {
@@ -260,10 +268,12 @@ impl PlanCache {
         self.schedules.lock().unwrap().clear();
     }
 
-    /// Current counters.
+    /// Current counters (the execution counters are process-wide, shared
+    /// by every cache — they live next to the schedules they instrument).
     pub fn stats(&self) -> CacheStats {
         let entries = self.inner.lock().unwrap().map.len();
         let schedule_entries = self.schedules.lock().unwrap().len();
+        let exec = exec_stats();
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
@@ -273,6 +283,8 @@ impl PlanCache {
             schedule_hits: self.schedule_hits.load(Ordering::Relaxed),
             schedule_misses: self.schedule_misses.load(Ordering::Relaxed),
             schedule_entries,
+            scatter_passes: exec.scatter_passes,
+            executed_nodes: exec.executed_nodes,
         }
     }
 }

@@ -24,8 +24,8 @@ pub mod sp;
 pub use cache::{CacheStats, PlanCache};
 pub use plan::{factor_runs, MultPlan};
 pub use schedule::{
-    arena_stats, clear_arena_pool, ops_shared_total, ArenaStats, LayerSchedule, PooledArena,
-    ScheduleStats, ScratchArena,
+    arena_stats, clear_arena_pool, exec_stats, ops_shared_total, planner_totals, ArenaStats,
+    ExecStats, LayerSchedule, OpCost, PlannerTotals, PooledArena, ScheduleStats, ScratchArena,
 };
 
 use crate::diagram::Diagram;

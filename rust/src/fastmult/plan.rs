@@ -290,6 +290,38 @@ impl MultPlan {
             (Group::SpecialOrthogonal, true) => so::step12_flops(&self.factored.layout, self.n),
         }
     }
+
+    /// Memory-traffic estimate (bytes read + written) of one `apply` — the
+    /// bytes-moved half of the cost model extending [`MultPlan::flops`]
+    /// (which, following the paper, treats memory moves as free). Counts
+    /// the σ_k permute when it is not elided, one read per Step-1/2 flop
+    /// plus the compact write, and the read-modify-write of the output's
+    /// diagonal support. The schedule compiler refines this per op
+    /// (`fastmult::schedule`); this per-plan figure is what the per-term
+    /// reference path pays.
+    pub fn bytes_moved(&self) -> u128 {
+        fn p(n: usize, e: usize) -> u128 {
+            (n as u128).saturating_pow(e as u32)
+        }
+        if self.fused_perm.is_some() {
+            // One fused pass: read the input, touch the output once.
+            return 16 * p(self.n, self.k);
+        }
+        let layout = &self.factored.layout;
+        let mut bytes: u128 = 0;
+        if !is_identity(&self.factored.perm_in) {
+            bytes = bytes.saturating_add(16 * p(self.n, self.k));
+        }
+        bytes = bytes.saturating_add(8u128.saturating_mul(self.flops()));
+        let support = match (self.group, self.jellyfish) {
+            (Group::Symplectic, _) => p(self.n, self.l),
+            (Group::SpecialOrthogonal, true) => {
+                p(self.n, layout.t() + layout.d() + layout.free_top)
+            }
+            _ => p(self.n, layout.t() + layout.d()),
+        };
+        bytes.saturating_add(16 * support)
+    }
 }
 
 #[cfg(test)]
@@ -402,6 +434,25 @@ mod tests {
         plan.apply_accumulate(&v, 0.4, &mut a).unwrap();
         plan.apply_accumulate_permuted(&vp, 0.4, &mut b).unwrap();
         assert!(a.allclose(&b, 1e-12), "jellyfish {d}");
+    }
+
+    #[test]
+    fn bytes_moved_is_positive_and_fused_is_two_passes() {
+        let mut rng = Rng::new(60);
+        // A pure-permutation diagram costs exactly read + write of n^k.
+        let d = Diagram::identity(2);
+        let plan = MultPlan::new(Group::Symmetric, &d, 3).unwrap();
+        assert_eq!(plan.bytes_moved(), 16 * 9);
+        // A contracting diagram moves strictly more than the fused pass.
+        let d = Diagram::from_blocks(2, 2, vec![vec![0, 1], vec![2, 3]]).unwrap();
+        let plan = MultPlan::new(Group::Symmetric, &d, 3).unwrap();
+        assert!(plan.bytes_moved() > 0);
+        // Random diagrams all report nonzero traffic.
+        for _ in 0..10 {
+            let d = Diagram::random_partition(2, 2, &mut rng);
+            let plan = MultPlan::new(Group::Symmetric, &d, 3).unwrap();
+            assert!(plan.bytes_moved() > 0, "diagram {d}");
+        }
     }
 
     #[test]

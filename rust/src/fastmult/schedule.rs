@@ -2,37 +2,57 @@
 //!
 //! A layer's equivariant weight is `W = Σ_π λ_π D_π` over the full spanning
 //! set, and [`super::MultPlan`] makes each *term* fast — but the terms are
-//! not independent: many spanning diagrams for the same `(k, l)` share the
-//! same `σ_k` input permutation and the same bottom-row contraction prefix.
-//! A [`LayerSchedule`] hash-conses the per-term op chains (input permute →
-//! contraction steps → transfer → output scatter) into a DAG so every
-//! shared intermediate is computed **once per forward** instead of once per
-//! diagram, and executes that DAG against a reusable [`ScratchArena`] of
-//! size-bucketed buffers so the steady-state forward/backward performs zero
-//! heap allocations for tensor intermediates.
+//! not independent: many spanning diagrams for the same `(k, l)` produce
+//! bitwise-identical intermediates, and many more write the same
+//! diagonal-support output pattern up to the closing `σ_l` permutation. A
+//! [`LayerSchedule`] compiles the whole sum into a **hash-consed op DAG
+//! with λ-coefficient folding**:
 //!
-//! Structure (see `docs/execution_schedule.md`):
+//! - **Global CSE.** Each term's op chain (input permute → contractions →
+//!   transfer) is first rewritten into a canonical normal form — adjacent
+//!   permutes composed, identity permutes elided, permutation entries
+//!   sorted inside symmetric contraction blocks (with an exact sign flip
+//!   for the antisymmetric Sp(n) ε-trace), block-respecting permutes
+//!   pushed *through* contractions onto the smaller contracted tensor, and
+//!   any chain-trailing permute folded into the sink pattern itself. The
+//!   canonical chains are then hash-consed, so identical intermediates
+//!   merge wherever they occur — interior and suffix nodes included, not
+//!   just shared prefixes — and each distinct intermediate is computed
+//!   **once per forward**. Every rewrite is elementwise exact, so the
+//!   per-term tensors are bitwise unchanged.
+//! - **λ-coefficient folding.** Terms are grouped into **classes** by
+//!   `(post-contraction node, output scatter shape)`: members of a class
+//!   differ only in their closing output permutation and weight. One class
+//!   executes as a *single* multi-pattern scatter pass
+//!   ([`crate::tensor::Tensor::scatter_broadcast_diagonals_multi_axpy`] /
+//!   `axpy_permuted_multi_into`) over the shared source, with the member
+//!   λ-weights gathered fresh from the caller's coefficient slice on every
+//!   call — the class *structure* is weight-independent (and shared across
+//!   layers through [`super::PlanCache`]), the coefficients are a cheap
+//!   per-call gather, so in-place weight updates can never go stale. The
+//!   scatter/transfer phase drops from `O(#terms)` passes to
+//!   `O(#classes)` per forward.
+//! - **Cost model.** Every op carries a FLOP/bytes-moved estimate
+//!   (`Op::cost`). It drives the execution order — a depth-first walk over
+//!   the DAG, heaviest subtree first, classes emitted at their node — so
+//!   node buffers are released as soon as their subtree completes and the
+//!   live scratch footprint in the [`ScratchArena`] stays near one chain,
+//!   and it drives [`LayerSchedule::cost_partitions`], the cost-weighted
+//!   (LPT) split of subtrees across worker threads that replaces the old
+//!   even chunking.
 //!
-//! - **Nodes** are interior ops (`Permute`, `ContractDiagonal`, `TracePair`,
-//!   `TracePairEps`, `LeviCivita`, `ExtractDiagonals`). Node identity is the
-//!   op *plus its source*, so two chains share a node exactly when they
-//!   share the whole prefix up to it — the DAG is a forest rooted at the
-//!   distinct `σ_k` permutations of the input.
-//! - **Sinks** are the per-term λ-weighted accumulations into the output
-//!   (`scatter_broadcast_diagonals_axpy` / `axpy_permuted_into` / the Sp(n)
-//!   ε-expansion). Sinks are never shared: each carries its own coefficient.
-//! - Sinks execute in term order and intermediates are freed after their
-//!   last use, so [`LayerSchedule::execute`] is bitwise identical to the
-//!   per-term reference path and peak scratch memory stays near the deepest
-//!   single chain.
-//!
-//! Schedules are compiled once per layer shape and cached in
-//! [`super::PlanCache`] alongside the `MultPlan`s.
+//! Folded execution accumulates per class rather than per term, so it
+//! matches the per-term reference to ≤ 1e-12 (addition reassociates), while
+//! [`LayerSchedule::execute_map`] — the backward pass, which needs each
+//! term's unweighted tensor — stays **bitwise** identical to
+//! `MultPlan::apply`. Schedules are compiled once per layer shape and
+//! cached in [`super::PlanCache`].
 //!
 //! The `execute_batch*` variants walk the same DAG **once per batch** over
-//! a contiguous `[B, n^k]` [`BatchTensor`]: every node is evaluated for all
-//! `B` items before the walk moves on, with the batched tensor kernels
-//! sharing one precomputed index map across the items (see
+//! a contiguous `[B, n^k]` [`BatchTensor`]; the batched multi-pattern
+//! kernels share one index map per pattern across all items and replay the
+//! per-item arithmetic in the same order, so batched execution is bitwise
+//! identical per item to the per-item folded walk (see
 //! `docs/batched_execution.md`).
 
 use super::plan::is_identity;
@@ -51,6 +71,13 @@ static ARENA_ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
 static ARENA_REUSES: AtomicU64 = AtomicU64::new(0);
 static ARENA_HIGH_WATER: AtomicUsize = AtomicUsize::new(0);
 static OPS_SHARED: AtomicU64 = AtomicU64::new(0);
+static EXECUTED_NODES: AtomicU64 = AtomicU64::new(0);
+static SCATTER_PASSES: AtomicU64 = AtomicU64::new(0);
+static PLANNED_FLOPS: AtomicU64 = AtomicU64::new(0);
+static PLANNED_BYTES: AtomicU64 = AtomicU64::new(0);
+static PLANNED_NODES: AtomicU64 = AtomicU64::new(0);
+static PLANNED_CLASSES: AtomicU64 = AtomicU64::new(0);
+static PLANNED_CHAIN_OPS: AtomicU64 = AtomicU64::new(0);
 
 /// Process-wide arena counters (summed over every [`ScratchArena`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -73,10 +100,84 @@ pub fn arena_stats() -> ArenaStats {
     }
 }
 
-/// Total interior ops elided by prefix sharing across every
+/// Total interior ops elided by CSE across every
 /// [`LayerSchedule::compile`] in this process (cache hits do not re-count).
 pub fn ops_shared_total() -> u64 {
     OPS_SHARED.load(Ordering::Relaxed)
+}
+
+/// Process-wide runtime execution counters: how many interior DAG nodes
+/// were actually materialised and how many folded scatter passes ran.
+/// Scatter passes per forward equal the number of active `(node, pattern)`
+/// classes — the invariant the bench smoke asserts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Interior node evaluations (one per distinct intermediate per walk).
+    pub executed_nodes: u64,
+    /// Folded multi-pattern scatter passes (one per active class per walk).
+    pub scatter_passes: u64,
+}
+
+/// Snapshot of the process-wide execution counters.
+pub fn exec_stats() -> ExecStats {
+    ExecStats {
+        executed_nodes: EXECUTED_NODES.load(Ordering::Relaxed),
+        scatter_passes: SCATTER_PASSES.load(Ordering::Relaxed),
+    }
+}
+
+/// Process-wide compile-time planner totals, summed over every compiled
+/// schedule (cache hits do not re-count). Saturating `u64`s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannerTotals {
+    /// Estimated flops of one forward pass, summed over compiled schedules.
+    pub estimated_flops: u64,
+    /// Estimated bytes moved per forward, summed over compiled schedules.
+    pub estimated_bytes: u64,
+    /// Distinct interior nodes after global CSE, summed.
+    pub nodes: u64,
+    /// Folded `(node, pattern)` classes, summed.
+    pub classes: u64,
+    /// Interior chain ops the per-term path would run, summed — the
+    /// denominator of the aggregate sharing ratio.
+    pub chain_ops: u64,
+}
+
+impl PlannerTotals {
+    /// Aggregate fraction of interior ops eliminated by CSE across every
+    /// compiled schedule (`1 - nodes / chain_ops`).
+    pub fn sharing_ratio(&self) -> f64 {
+        if self.chain_ops == 0 {
+            0.0
+        } else {
+            1.0 - self.nodes as f64 / self.chain_ops as f64
+        }
+    }
+}
+
+/// Saturating accumulate into a monotone diagnostic counter — `fetch_add`
+/// wraps, but a cost estimate clamped to `u64::MAX` per schedule must pin
+/// the process-wide total there, not wrap it back toward zero.
+fn saturating_counter_add(counter: &AtomicU64, delta: u64) {
+    let mut cur = counter.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_add(delta);
+        match counter.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Snapshot of the process-wide planner totals.
+pub fn planner_totals() -> PlannerTotals {
+    PlannerTotals {
+        estimated_flops: PLANNED_FLOPS.load(Ordering::Relaxed),
+        estimated_bytes: PLANNED_BYTES.load(Ordering::Relaxed),
+        nodes: PLANNED_NODES.load(Ordering::Relaxed),
+        classes: PLANNED_CLASSES.load(Ordering::Relaxed),
+        chain_ops: PLANNED_CHAIN_OPS.load(Ordering::Relaxed),
+    }
 }
 
 /// A recycling pool of tensor buffers, bucketed by length. `acquire`
@@ -242,7 +343,9 @@ enum Src {
 }
 
 /// Interior op of a term chain. Identity (for hash-consing) includes the
-/// source, so equal ops with equal sources collapse to one node.
+/// source, so equal ops with equal sources collapse to one node. Chains are
+/// canonicalised *before* interning (see [`canonicalize`]), so the consing
+/// is a global CSE over the canonical forms, not just prefix sharing.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 enum Op {
     Permute { src: Src, axes: Vec<usize> },
@@ -264,6 +367,73 @@ impl Op {
             | Op::ExtractDiagonals { src, .. } => *src,
         }
     }
+
+    /// FLOP / bytes-moved estimate of one evaluation of this op at
+    /// dimension `n`, mapping an order-`in_order` tensor to order
+    /// `out_order`. Memory traffic counts reads + writes at 8 bytes per
+    /// `f64`; permutes and gathers are pure data movement (0 flops).
+    fn cost(&self, n: usize, in_order: usize, out_order: usize) -> OpCost {
+        let ni = powu(n, in_order);
+        let no = powu(n, out_order);
+        let nu = n as u128;
+        match self {
+            Op::Permute { .. } => OpCost {
+                flops: 0,
+                bytes: 8 * (ni + no),
+            },
+            // One output element sums an n-element generalised diagonal.
+            Op::ContractDiagonal { .. } | Op::TracePair { .. } | Op::TracePairEps { .. } => {
+                OpCost {
+                    flops: no * nu,
+                    bytes: 8 * (no * nu + no),
+                }
+            }
+            // n^keep outer positions × n! signed-permutation terms.
+            Op::LeviCivita { s, .. } => {
+                let keep = in_order - (n - s);
+                let terms = powu(n, keep).saturating_mul(factorial(n));
+                OpCost {
+                    flops: terms,
+                    bytes: 8 * (terms + no),
+                }
+            }
+            Op::ExtractDiagonals { .. } => OpCost {
+                flops: 0,
+                bytes: 8 * (2 * no),
+            },
+        }
+    }
+}
+
+fn powu(n: usize, e: usize) -> u128 {
+    (0..e).fold(1u128, |acc, _| acc.saturating_mul(n as u128))
+}
+
+fn factorial(n: usize) -> u128 {
+    (1..=n as u128).fold(1u128, |acc, x| acc.saturating_mul(x))
+}
+
+/// FLOP / bytes-moved estimate for one op or class evaluation — the cost
+/// model driving execution order and worker partitioning.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCost {
+    /// Floating-point operations (multiply-adds count 2).
+    pub flops: u128,
+    /// Bytes read + written.
+    pub bytes: u128,
+}
+
+impl OpCost {
+    /// Scalar work estimate for load balancing: the roofline max of compute
+    /// and memory traffic (bytes expressed as `f64` element moves).
+    pub fn work(&self) -> u128 {
+        self.flops.max(self.bytes / 8)
+    }
+
+    fn accumulate(&mut self, other: OpCost) {
+        self.flops = self.flops.saturating_add(other.flops);
+        self.bytes = self.bytes.saturating_add(other.bytes);
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -271,6 +441,8 @@ struct Node {
     op: Op,
     /// Output tensor order (for arena sizing).
     order: usize,
+    /// Cost estimate of one evaluation.
+    cost: OpCost,
 }
 
 /// Per-term closing accumulation `out += coeff · (…)`.
@@ -289,27 +461,97 @@ enum SinkKind {
     EpsExpand { t: usize, axes: Vec<usize> },
 }
 
+impl SinkKind {
+    /// The weight-and-permutation-independent part of the pattern — the
+    /// class key alongside the source node.
+    fn shape(&self) -> ClassShape {
+        match self {
+            SinkKind::AxpyPermuted { .. } => ClassShape::Axpy,
+            SinkKind::ScatterDiagonals { lead, tail, .. } => ClassShape::Scatter {
+                lead: lead.clone(),
+                tail: tail.clone(),
+            },
+            SinkKind::EpsExpand { t, .. } => ClassShape::Eps { t: *t },
+        }
+    }
+
+    fn axes(&self) -> &[usize] {
+        match self {
+            SinkKind::AxpyPermuted { axes }
+            | SinkKind::ScatterDiagonals { axes, .. }
+            | SinkKind::EpsExpand { axes, .. } => axes,
+        }
+    }
+}
+
+/// One spanning term's closing accumulation. `sign` is the exact ±1 picked
+/// up by chain canonicalisation (an odd ε-trace axis sort), so
+/// `F(d)(v) = sign · kind(chain(v))` bitwise.
 #[derive(Debug, Clone)]
 struct Sink {
     src: Src,
     kind: SinkKind,
+    sign: f64,
 }
 
-/// Compile-time shape of one schedule: how much work the DAG fused away.
+/// Scatter-shape part of a class key: members share `(src, shape)` and
+/// differ only in their output permutation and λ weight.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum ClassShape {
+    Axpy,
+    Scatter { lead: Vec<usize>, tail: Vec<usize> },
+    Eps { t: usize },
+}
+
+/// One term's membership in a folded class.
+#[derive(Debug, Clone)]
+struct Member {
+    /// Term (coefficient) index this pattern belongs to.
+    term: usize,
+    /// Closing output permutation of this member.
+    axes: Vec<usize>,
+    /// Exact canonicalisation sign folded into the coefficient.
+    sign: f64,
+}
+
+/// A folded `(node, pattern)` equivalence class: all terms reading the same
+/// post-contraction node with the same scatter shape, executed as a single
+/// multi-pattern pass with λ-weights gathered per call.
+#[derive(Debug, Clone)]
+struct Class {
+    src: Src,
+    shape: ClassShape,
+    members: Vec<Member>,
+    cost: OpCost,
+}
+
+/// Compile-time shape of one schedule: how much work CSE and λ-folding
+/// removed, plus the cost model's estimate of one forward pass.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ScheduleStats {
-    /// Spanning terms (sinks).
+    /// Spanning terms (per-term sinks).
     pub terms: usize,
-    /// Distinct interior nodes after hash-consing.
+    /// Distinct interior nodes after **global CSE** (canonicalised chains,
+    /// hash-consed) — the per-forward interior evaluation count.
     pub nodes: usize,
-    /// Interior chain ops the per-term path would run (before sharing).
+    /// Interior chain ops the per-term path would run (before any sharing).
     pub chain_ops: usize,
-    /// Ops elided by sharing (`chain_ops - nodes`).
+    /// Ops elided versus the per-term path (`chain_ops - nodes`).
     pub shared_ops: usize,
+    /// Distinct interior nodes under prefix-sharing alone (the pre-folding
+    /// fused path) — what `nodes` was before canonicalisation.
+    pub prefix_nodes: usize,
+    /// Folded `(node, pattern)` classes — the scatter-pass count per
+    /// forward (the per-term path runs `terms` passes).
+    pub classes: usize,
+    /// Cost-model flops of one full forward walk.
+    pub estimated_flops: u128,
+    /// Cost-model bytes moved by one full forward walk.
+    pub estimated_bytes: u128,
 }
 
 impl ScheduleStats {
-    /// Fraction of interior ops eliminated by prefix sharing.
+    /// Fraction of interior ops eliminated by CSE.
     pub fn sharing_ratio(&self) -> f64 {
         if self.chain_ops == 0 {
             0.0
@@ -318,12 +560,273 @@ impl ScheduleStats {
         }
     }
 
+    /// Fraction of scatter passes eliminated by λ-folding
+    /// (`1 - classes / terms`).
+    pub fn fold_ratio(&self) -> f64 {
+        if self.terms == 0 {
+            0.0
+        } else {
+            1.0 - self.classes as f64 / self.terms as f64
+        }
+    }
+
+    /// Kernel invocations per folded forward: node evaluations plus
+    /// class scatter passes.
+    pub fn executed_ops(&self) -> usize {
+        self.nodes + self.classes
+    }
+
+    /// Kernel invocations the prefix-sharing (pre-folding) path ran per
+    /// forward: prefix nodes plus one scatter pass per term.
+    pub fn executed_ops_prefix(&self) -> usize {
+        self.prefix_nodes + self.terms
+    }
+
     /// Accumulate another schedule's stats (for per-network aggregates).
     pub fn merge(&mut self, other: &ScheduleStats) {
         self.terms += other.terms;
         self.nodes += other.nodes;
         self.chain_ops += other.chain_ops;
         self.shared_ops += other.shared_ops;
+        self.prefix_nodes += other.prefix_nodes;
+        self.classes += other.classes;
+        self.estimated_flops = self.estimated_flops.saturating_add(other.estimated_flops);
+        self.estimated_bytes = self.estimated_bytes.saturating_add(other.estimated_bytes);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chain canonicalisation (the "global" in global CSE)
+// ---------------------------------------------------------------------------
+
+/// One interior op of a term chain before interning, without its source
+/// (sources are assigned when the canonical chain is hash-consed).
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum ChainStep {
+    Permute(Vec<usize>),
+    Contract(usize),
+    TracePair,
+    TracePairEps,
+    LeviCivita(usize),
+    Extract(Vec<usize>),
+}
+
+/// Compose two permutes: `permute(permute(x, a), b) == permute(x, c)` with
+/// `c[q] = a[b[q]]` (axis `q` of the result carries intermediate axis
+/// `b[q]`, which carries original axis `a[b[q]]`).
+fn compose(a: &[usize], b: &[usize]) -> Vec<usize> {
+    b.iter().map(|&q| a[q]).collect()
+}
+
+fn is_sorted(xs: &[usize]) -> bool {
+    xs.windows(2).all(|w| w[0] <= w[1])
+}
+
+/// Fold a chain-trailing permute into the sink pattern. For the axpy and
+/// ε-expansion sinks this is plain permutation composition; for the
+/// diagonal scatter the permute acts on *compact* axes, i.e. it reorders
+/// whole tail groups, so the tail sizes are permuted and the planar axes of
+/// `axes` remapped to the new group offsets. All three are exact — the sink
+/// reads the pre-permute tensor directly instead of a materialised copy.
+fn fold_permute_into_sink(p: &[usize], kind: &mut SinkKind) {
+    match kind {
+        SinkKind::AxpyPermuted { axes } => {
+            for a in axes.iter_mut() {
+                *a = p[*a];
+            }
+        }
+        SinkKind::EpsExpand { t, axes } => {
+            // The ε-expansion puts its 2t pair axes *leading* and the chain
+            // output trailing (`sp::eps_top_expand`: out[pairs(2t), J] =
+            // ε·x[J]), so the chain permute acts on expanded axes >= 2t:
+            // expanded(permute(y, p)) axis 2t+q carries expanded(y) axis
+            // 2t+p[q]. The ε-pair axes (< 2t) are untouched.
+            let pairs = 2 * *t;
+            for a in axes.iter_mut() {
+                if *a >= pairs {
+                    *a = pairs + p[*a - pairs];
+                }
+            }
+        }
+        SinkKind::ScatterDiagonals { lead, tail, axes } => {
+            let d = tail.len();
+            debug_assert_eq!(p.len(), d);
+            let mut pinv = vec![0usize; d];
+            for (q, &a) in p.iter().enumerate() {
+                pinv[a] = q;
+            }
+            let new_tail: Vec<usize> = (0..d).map(|a| tail[pinv[a]]).collect();
+            let lead_total: usize = lead.iter().sum();
+            let mut old_off = vec![0usize; d];
+            {
+                let mut acc = lead_total;
+                for q in 0..d {
+                    old_off[q] = acc;
+                    acc += tail[q];
+                }
+            }
+            let mut new_off = vec![0usize; d];
+            {
+                let mut acc = lead_total;
+                for (a, off) in new_off.iter_mut().enumerate() {
+                    *off = acc;
+                    acc += new_tail[a];
+                }
+            }
+            let total = lead_total + tail.iter().sum::<usize>();
+            let mut remap: Vec<usize> = (0..total).collect();
+            for q in 0..d {
+                for j in 0..tail[q] {
+                    remap[old_off[q] + j] = new_off[p[q]] + j;
+                }
+            }
+            for a in axes.iter_mut() {
+                *a = remap[*a];
+            }
+            *tail = new_tail;
+        }
+    }
+}
+
+/// Rewrite a term chain into canonical normal form. Every rule is
+/// elementwise exact (`sign` records the one inexact-looking case — an odd
+/// permutation of ε-traced axes — which is an exact IEEE negation):
+///
+/// 1. identity permutes are removed, adjacent permutes composed;
+/// 2. permutation entries feeding a symmetric contraction block
+///    (generalised diagonal, pair trace) are sorted; an ε-trace swap flips
+///    `sign`;
+/// 3. a permute that fixes the contracted block (`p = p_lead ⊕ id_m`) is
+///    pushed *through* the contraction onto the smaller output;
+/// 4. permutation entries are sorted within each extract group, and a
+///    permute whose groups map to contiguous runs is pushed through the
+///    extraction as a compact-axis permute;
+/// 5. a chain-trailing permute is folded into the sink pattern.
+fn canonicalize(steps: &mut Vec<ChainStep>, kind: &mut SinkKind, sign: &mut f64) {
+    loop {
+        let mut changed = false;
+        let mut i = 0;
+        while i < steps.len() {
+            if let ChainStep::Permute(p) = &steps[i] {
+                if is_identity(p) {
+                    steps.remove(i);
+                    changed = true;
+                    continue;
+                }
+            }
+            if !matches!(&steps[i], ChainStep::Permute(_)) {
+                i += 1;
+                continue;
+            }
+            if i + 1 >= steps.len() {
+                // Rule 5: trailing permute folds into the sink.
+                let Some(ChainStep::Permute(p)) = steps.pop() else {
+                    unreachable!("checked above");
+                };
+                fold_permute_into_sink(&p, kind);
+                changed = true;
+                continue;
+            }
+            match steps[i + 1].clone() {
+                ChainStep::Permute(q) => {
+                    // Rule 1: compose adjacent permutes.
+                    let merged = {
+                        let ChainStep::Permute(p) = &steps[i] else {
+                            unreachable!();
+                        };
+                        compose(p, &q)
+                    };
+                    steps[i] = ChainStep::Permute(merged);
+                    steps.remove(i + 1);
+                    changed = true;
+                    continue;
+                }
+                ChainStep::Contract(_) | ChainStep::TracePair | ChainStep::TracePairEps => {
+                    let (m, eps) = match &steps[i + 1] {
+                        ChainStep::Contract(m) => (*m, false),
+                        ChainStep::TracePair => (2, false),
+                        ChainStep::TracePairEps => (2, true),
+                        _ => unreachable!(),
+                    };
+                    let ChainStep::Permute(p) = &mut steps[i] else {
+                        unreachable!();
+                    };
+                    let ord = p.len();
+                    // Rule 2: the contracted block is symmetric (ε-trace:
+                    // antisymmetric) in its axes — sort its entries.
+                    if !is_sorted(&p[ord - m..]) {
+                        if eps {
+                            *sign = -*sign;
+                        }
+                        p[ord - m..].sort_unstable();
+                        changed = true;
+                    }
+                    // Rule 3: push a block-respecting permute through.
+                    if p[ord - m..].iter().enumerate().all(|(j, &a)| a == ord - m + j) {
+                        let lead: Vec<usize> = p[..ord - m].to_vec();
+                        let contract = steps.remove(i + 1);
+                        steps[i] = contract;
+                        steps.insert(i + 1, ChainStep::Permute(lead));
+                        changed = true;
+                        continue;
+                    }
+                    i += 1;
+                }
+                ChainStep::Extract(groups) => {
+                    let ChainStep::Permute(p) = &mut steps[i] else {
+                        unreachable!();
+                    };
+                    // Rule 4a: each group's diagonal is symmetric in its
+                    // axes — sort entries within each group.
+                    let mut off = 0;
+                    for &size in &groups {
+                        if !is_sorted(&p[off..off + size]) {
+                            p[off..off + size].sort_unstable();
+                            changed = true;
+                        }
+                        off += size;
+                    }
+                    // Rule 4b: if every group's axes form a contiguous
+                    // ascending run, the permute is a whole-group reorder:
+                    // extract the runs in source order and permute the
+                    // compact axes instead (which rule 5 then folds into
+                    // the sink).
+                    let mut starts = Vec::with_capacity(groups.len());
+                    let mut contiguous = true;
+                    let mut off = 0;
+                    for &size in &groups {
+                        let s0 = p[off];
+                        if !(0..size).all(|j| p[off + j] == s0 + j) {
+                            contiguous = false;
+                            break;
+                        }
+                        starts.push(s0);
+                        off += size;
+                    }
+                    if contiguous {
+                        let mut by_start: Vec<usize> = (0..groups.len()).collect();
+                        by_start.sort_by_key(|&g| starts[g]);
+                        let run_sizes: Vec<usize> =
+                            by_start.iter().map(|&g| groups[g]).collect();
+                        let mut rank = vec![0usize; groups.len()];
+                        for (r, &g) in by_start.iter().enumerate() {
+                            rank[g] = r;
+                        }
+                        steps[i] = ChainStep::Extract(run_sizes);
+                        steps[i + 1] = ChainStep::Permute(rank);
+                        changed = true;
+                        continue;
+                    }
+                    i += 1;
+                }
+                ChainStep::LeviCivita(_) => {
+                    i += 1;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
     }
 }
 
@@ -331,7 +834,7 @@ impl ScheduleStats {
 // Schedule
 // ---------------------------------------------------------------------------
 
-/// A compiled, fused execution schedule for one spanning-diagram sum
+/// A compiled, folded execution schedule for one spanning-diagram sum
 /// `v ↦ Σ_i coeffs[i] · F(d_i)(v)`.
 #[derive(Debug)]
 pub struct LayerSchedule {
@@ -340,13 +843,22 @@ pub struct LayerSchedule {
     k: usize,
     l: usize,
     nodes: Vec<Node>,
+    /// Per-term sinks, in term order (for [`LayerSchedule::execute_map`],
+    /// which must hand out exact per-term tensors).
     sinks: Vec<Sink>,
-    /// All sink indices, in term order (avoids a per-call index Vec).
-    all_sinks: Vec<usize>,
-    /// Sink indices grouped by DAG root. Distinct roots share no nodes, so
-    /// the groups are independently executable — this is the DAG-level
-    /// re-expression of the old contiguous-term-range parallelism.
+    /// Folded `(node, pattern)` classes — the forward execution unit.
+    classes: Vec<Class>,
+    /// Class execution order: cost-driven DFS over the DAG (heaviest
+    /// subtree first, classes emitted at their node), so node buffers are
+    /// released as soon as their subtree completes.
+    order: Vec<usize>,
+    /// Class-index groups with pairwise-disjoint node sets (grouped by DAG
+    /// root, classes reading the raw input in their own group). Distinct
+    /// groups share no nodes, so they are independently executable.
     subtrees: Vec<Vec<usize>>,
+    /// Cost-model work per subtree, aligned with `subtrees` (drives
+    /// [`LayerSchedule::cost_partitions`]).
+    subtree_costs: Vec<u128>,
     stats: ScheduleStats,
 }
 
@@ -358,8 +870,44 @@ struct Builder {
 }
 
 impl Builder {
-    fn node(&mut self, op: Op, order: usize) -> Src {
-        self.chain_ops += 1;
+    /// Intern a chain of steps starting at the raw input, returning the
+    /// final source. Equal canonical ops with equal sources collapse to one
+    /// node (global CSE).
+    fn intern_steps(&mut self, steps: &[ChainStep], k: usize, n: usize) -> Src {
+        let mut src = Src::Input;
+        let mut order = k;
+        for step in steps {
+            self.chain_ops += 1;
+            let (op, out_order) = match step {
+                ChainStep::Permute(axes) => (
+                    Op::Permute {
+                        src,
+                        axes: axes.clone(),
+                    },
+                    order,
+                ),
+                ChainStep::Contract(m) => (Op::ContractDiagonal { src, m: *m }, order - m),
+                ChainStep::TracePair => (Op::TracePair { src }, order - 2),
+                ChainStep::TracePairEps => (Op::TracePairEps { src }, order - 2),
+                ChainStep::LeviCivita(s) => {
+                    (Op::LeviCivita { src, s: *s }, order - (n - s) + s)
+                }
+                ChainStep::Extract(groups) => (
+                    Op::ExtractDiagonals {
+                        src,
+                        groups: groups.clone(),
+                    },
+                    groups.len(),
+                ),
+            };
+            let cost = op.cost(n, order, out_order);
+            order = out_order;
+            src = self.node(op, out_order, cost);
+        }
+        src
+    }
+
+    fn node(&mut self, op: Op, order: usize, cost: OpCost) -> Src {
         if let Some(&i) = self.index.get(&op) {
             return Src::Node(i);
         }
@@ -367,6 +915,7 @@ impl Builder {
         self.nodes.push(Node {
             op: op.clone(),
             order,
+            cost,
         });
         self.index.insert(op, i);
         Src::Node(i)
@@ -385,6 +934,9 @@ impl LayerSchedule {
         l: usize,
         plans: &[Arc<MultPlan>],
     ) -> Result<LayerSchedule> {
+        // `raw` interns the uncanonicalised chains — prefix sharing only,
+        // the pre-folding baseline the stats compare against.
+        let mut raw = Builder::default();
         let mut b = Builder::default();
         let mut sinks = Vec::with_capacity(plans.len());
         for plan in plans {
@@ -400,158 +952,275 @@ impl LayerSchedule {
                     ),
                 });
             }
-            sinks.push(Self::compile_term(&mut b, plan));
+            let (mut steps, mut kind) = Self::term_chain(plan);
+            raw.intern_steps(&steps, k, n);
+            let mut sign = 1.0;
+            canonicalize(&mut steps, &mut kind, &mut sign);
+            let src = b.intern_steps(&steps, k, n);
+            sinks.push(Sink { src, kind, sign });
         }
-        // Root of each sink's chain (None for direct-input sinks).
-        let mut subtrees: Vec<(Option<usize>, Vec<usize>)> = Vec::new();
-        for (si, sink) in sinks.iter().enumerate() {
-            let mut cur = sink.src;
-            let mut root = None;
-            while let Src::Node(i) = cur {
-                root = Some(i);
-                cur = b.nodes[i].op.src();
+
+        // Fold terms into (node, pattern-shape) classes, preserving first
+        // appearance order (hash-keyed, so folding stays linear in the
+        // spanning-set size even for thousands of terms).
+        let mut classes: Vec<Class> = Vec::new();
+        let mut class_index: HashMap<(Src, ClassShape), usize> = HashMap::new();
+        for (ti, sink) in sinks.iter().enumerate() {
+            let shape = sink.kind.shape();
+            let member = Member {
+                term: ti,
+                axes: sink.kind.axes().to_vec(),
+                sign: sink.sign,
+            };
+            match class_index.entry((sink.src, shape.clone())) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    classes[*e.get()].members.push(member);
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(classes.len());
+                    classes.push(Class {
+                        src: sink.src,
+                        shape,
+                        members: vec![member],
+                        cost: OpCost::default(),
+                    });
+                }
             }
-            match subtrees.iter_mut().find(|(r, _)| *r == root) {
-                Some((_, group_sinks)) => group_sinks.push(si),
-                None => subtrees.push((root, vec![si])),
+        }
+        for class in &mut classes {
+            let compact = match class.src {
+                Src::Input => k,
+                Src::Node(i) => b.nodes[i].order,
+            };
+            class.cost = Self::class_cost(class, n, compact);
+        }
+
+        // Cost-driven execution order: DFS per root, heaviest subtree
+        // first, classes emitted at their node.
+        let nn = b.nodes.len();
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); nn];
+        let mut roots: Vec<usize> = Vec::new();
+        for (i, node) in b.nodes.iter().enumerate() {
+            match node.op.src() {
+                Src::Input => roots.push(i),
+                Src::Node(p) => children[p].push(i),
             }
+        }
+        let mut classes_at: Vec<Vec<usize>> = vec![Vec::new(); nn];
+        let mut input_classes: Vec<usize> = Vec::new();
+        for (ci, c) in classes.iter().enumerate() {
+            match c.src {
+                Src::Input => input_classes.push(ci),
+                Src::Node(i) => classes_at[i].push(ci),
+            }
+        }
+        let mut work: Vec<u128> = b.nodes.iter().map(|nd| nd.cost.work()).collect();
+        for i in (0..nn).rev() {
+            let mut w = work[i];
+            for &ch in &children[i] {
+                w = w.saturating_add(work[ch]);
+            }
+            for &ci in &classes_at[i] {
+                w = w.saturating_add(classes[ci].cost.work());
+            }
+            work[i] = w;
+        }
+        for ch in &mut children {
+            ch.sort_by(|&x, &y| work[y].cmp(&work[x]).then(x.cmp(&y)));
+        }
+        let mut order = Vec::with_capacity(classes.len());
+        let mut subtrees = Vec::new();
+        let mut subtree_costs = Vec::new();
+        if !input_classes.is_empty() {
+            let cost = input_classes
+                .iter()
+                .fold(0u128, |acc, &ci| acc.saturating_add(classes[ci].cost.work()));
+            order.extend(input_classes.iter().copied());
+            subtree_costs.push(cost);
+            subtrees.push(input_classes);
+        }
+        let mut root_order = roots;
+        root_order.sort_by(|&x, &y| work[y].cmp(&work[x]).then(x.cmp(&y)));
+        for root in root_order {
+            let mut group_classes = Vec::new();
+            let mut stack = vec![root];
+            while let Some(i) = stack.pop() {
+                group_classes.extend(classes_at[i].iter().copied());
+                for &ch in children[i].iter().rev() {
+                    stack.push(ch);
+                }
+            }
+            if group_classes.is_empty() {
+                continue;
+            }
+            order.extend(group_classes.iter().copied());
+            subtree_costs.push(work[root]);
+            subtrees.push(group_classes);
+        }
+        debug_assert_eq!(order.len(), classes.len());
+
+        let mut estimated = OpCost::default();
+        for node in &b.nodes {
+            estimated.accumulate(node.cost);
+        }
+        for class in &classes {
+            estimated.accumulate(class.cost);
         }
         let stats = ScheduleStats {
             terms: sinks.len(),
             nodes: b.nodes.len(),
-            chain_ops: b.chain_ops,
-            shared_ops: b.chain_ops - b.nodes.len(),
+            chain_ops: raw.chain_ops,
+            shared_ops: raw.chain_ops - b.nodes.len(),
+            prefix_nodes: raw.nodes.len(),
+            classes: classes.len(),
+            estimated_flops: estimated.flops,
+            estimated_bytes: estimated.bytes,
         };
         OPS_SHARED.fetch_add(stats.shared_ops as u64, Ordering::Relaxed);
+        saturating_counter_add(
+            &PLANNED_FLOPS,
+            stats.estimated_flops.min(u64::MAX as u128) as u64,
+        );
+        saturating_counter_add(
+            &PLANNED_BYTES,
+            stats.estimated_bytes.min(u64::MAX as u128) as u64,
+        );
+        PLANNED_NODES.fetch_add(stats.nodes as u64, Ordering::Relaxed);
+        PLANNED_CLASSES.fetch_add(stats.classes as u64, Ordering::Relaxed);
+        PLANNED_CHAIN_OPS.fetch_add(stats.chain_ops as u64, Ordering::Relaxed);
         Ok(LayerSchedule {
             group,
             n,
             k,
             l,
             nodes: b.nodes,
-            all_sinks: (0..sinks.len()).collect(),
-            subtrees: subtrees.into_iter().map(|(_, s)| s).collect(),
             sinks,
+            classes,
+            order,
+            subtrees,
+            subtree_costs,
             stats,
         })
     }
 
-    /// One term's chain + sink, mirroring `MultPlan::apply_accumulate`
-    /// step for step so schedule execution is bitwise identical to the
-    /// per-term reference path.
-    fn compile_term(b: &mut Builder, plan: &MultPlan) -> Sink {
+    /// One term's raw chain + sink, mirroring `MultPlan::apply_accumulate`
+    /// step for step (canonicalisation rewrites it afterwards, exactly).
+    fn term_chain(plan: &MultPlan) -> (Vec<ChainStep>, SinkKind) {
         // Pure-permutation diagram: single fused axpy, no interior nodes.
         if let Some(fused) = plan.fused_perm() {
-            return Sink {
-                src: Src::Input,
-                kind: SinkKind::AxpyPermuted {
+            return (
+                Vec::new(),
+                SinkKind::AxpyPermuted {
                     axes: fused.to_vec(),
                 },
-            };
+            );
         }
         let f = plan.factored();
         let layout = &f.layout;
-        let mut src = Src::Input;
-        let mut order = plan.k();
+        let mut steps = Vec::new();
         if !is_identity(&f.perm_in) {
-            src = b.node(
-                Op::Permute {
-                    src,
-                    axes: f.perm_in.clone(),
-                },
-                order,
-            );
+            steps.push(ChainStep::Permute(f.perm_in.clone()));
         }
-        match (plan.group(), plan.is_jellyfish()) {
+        let kind = match (plan.group(), plan.is_jellyfish()) {
             (Group::Symmetric, _) => {
                 for &size in layout.bottom_blocks.iter().rev() {
-                    order -= size;
-                    src = b.node(Op::ContractDiagonal { src, m: size }, order);
+                    steps.push(ChainStep::Contract(size));
                 }
                 let lower: Vec<usize> = layout.cross_blocks.iter().map(|c| c.1).collect();
                 let upper: Vec<usize> = layout.cross_blocks.iter().map(|c| c.0).collect();
                 if !lower.iter().all(|&s| s == 1) {
-                    order = lower.len();
-                    src = b.node(Op::ExtractDiagonals { src, groups: lower }, order);
+                    steps.push(ChainStep::Extract(lower));
                 }
-                Sink {
-                    src,
-                    kind: SinkKind::ScatterDiagonals {
-                        lead: layout.top_blocks.clone(),
-                        tail: upper,
-                        axes: f.perm_out.clone(),
-                    },
+                SinkKind::ScatterDiagonals {
+                    lead: layout.top_blocks.clone(),
+                    tail: upper,
+                    axes: f.perm_out.clone(),
                 }
             }
             (Group::Orthogonal, _) | (Group::SpecialOrthogonal, false) => {
                 for _ in 0..layout.b() {
-                    order -= 2;
-                    src = b.node(Op::TracePair { src }, order);
+                    steps.push(ChainStep::TracePair);
                 }
-                Sink {
-                    src,
-                    kind: SinkKind::ScatterDiagonals {
-                        lead: vec![2; layout.t()],
-                        tail: vec![1; layout.d()],
-                        axes: f.perm_out.clone(),
-                    },
+                SinkKind::ScatterDiagonals {
+                    lead: vec![2; layout.t()],
+                    tail: vec![1; layout.d()],
+                    axes: f.perm_out.clone(),
                 }
             }
             (Group::SpecialOrthogonal, true) => {
-                let n = plan.n();
                 let s = layout.free_top;
                 let d = layout.d();
                 let pairs = layout.b();
                 // Step 1: ε-contract the trailing n−s free axes; layout is
                 // now [D(d), B(2b), TF(s)].
-                order = order - (n - s) + s;
-                src = b.node(Op::LeviCivita { src, s }, order);
+                steps.push(ChainStep::LeviCivita(s));
                 // Rotate TF to the front so the pair traces see the bottom
                 // pairs trailing: [TF(s), D(d), B(2b)].
                 let body = d + 2 * pairs;
                 let rot: Vec<usize> = (body..body + s).chain(0..body).collect();
                 if !is_identity(&rot) {
-                    src = b.node(Op::Permute { src, axes: rot }, order);
+                    steps.push(ChainStep::Permute(rot));
                 }
                 for _ in 0..pairs {
-                    order -= 2;
-                    src = b.node(Op::TracePair { src }, order);
+                    steps.push(ChainStep::TracePair);
                 }
                 // [TF(s), D(d)] → [D(d), TF(s)] for the Step-4 scatter.
                 let rot2: Vec<usize> = (s..s + d).chain(0..s).collect();
                 if !is_identity(&rot2) {
-                    src = b.node(Op::Permute { src, axes: rot2 }, order);
+                    steps.push(ChainStep::Permute(rot2));
                 }
-                Sink {
-                    src,
-                    kind: SinkKind::ScatterDiagonals {
-                        lead: vec![2; layout.t()],
-                        tail: vec![1; d + s],
-                        axes: f.perm_out.clone(),
-                    },
+                SinkKind::ScatterDiagonals {
+                    lead: vec![2; layout.t()],
+                    tail: vec![1; d + s],
+                    axes: f.perm_out.clone(),
                 }
             }
             (Group::Symplectic, _) => {
                 for _ in 0..layout.b() {
-                    order -= 2;
-                    src = b.node(Op::TracePairEps { src }, order);
+                    steps.push(ChainStep::TracePairEps);
                 }
                 let t = layout.t();
                 if t == 0 {
-                    Sink {
-                        src,
-                        kind: SinkKind::AxpyPermuted {
-                            axes: f.perm_out.clone(),
-                        },
+                    SinkKind::AxpyPermuted {
+                        axes: f.perm_out.clone(),
                     }
                 } else {
-                    Sink {
-                        src,
-                        kind: SinkKind::EpsExpand {
-                            t,
-                            axes: f.perm_out.clone(),
-                        },
+                    SinkKind::EpsExpand {
+                        t,
+                        axes: f.perm_out.clone(),
                     }
+                }
+            }
+        };
+        (steps, kind)
+    }
+
+    /// Cost estimate of executing one class: read the compact source once,
+    /// touch each member's diagonal support (a multiply-add per element).
+    fn class_cost(class: &Class, n: usize, compact_order: usize) -> OpCost {
+        let members = class.members.len() as u128;
+        match &class.shape {
+            ClassShape::Axpy => {
+                let touched = powu(n, class.members[0].axes.len());
+                OpCost {
+                    flops: 2 * members * touched,
+                    bytes: 8 * (touched + 2 * members * touched),
+                }
+            }
+            ClassShape::Scatter { lead, tail } => {
+                let touched = powu(n, lead.len() + tail.len());
+                let src = powu(n, tail.len());
+                OpCost {
+                    flops: 2 * members * touched,
+                    bytes: 8 * (src + 2 * members * touched),
+                }
+            }
+            ClassShape::Eps { t } => {
+                let src = powu(n, compact_order);
+                let expanded = powu(n, compact_order + 2 * t);
+                OpCost {
+                    flops: expanded + 2 * members * expanded,
+                    bytes: 8 * (src + expanded + 2 * members * expanded),
                 }
             }
         }
@@ -577,17 +1246,85 @@ impl LayerSchedule {
     pub fn terms(&self) -> usize {
         self.sinks.len()
     }
-    /// Compile-time sharing statistics.
+    /// Number of folded `(node, pattern)` classes — the scatter-pass count
+    /// of one forward walk.
+    pub fn classes(&self) -> usize {
+        self.classes.len()
+    }
+    /// Compile-time sharing/folding statistics and cost estimates.
     pub fn stats(&self) -> ScheduleStats {
         self.stats
     }
 
-    /// Sink-index groups with pairwise-disjoint node sets (grouped by DAG
-    /// root). Executing each group via [`LayerSchedule::execute_subset`] on
-    /// its own thread with its own arena parallelises the diagram sum with
-    /// no shared mutable state.
+    /// Class-index groups with pairwise-disjoint node sets (grouped by DAG
+    /// root; classes reading the raw input form their own group).
+    /// Executing each group via [`LayerSchedule::execute_subset`] on its
+    /// own thread with its own arena parallelises the diagram sum with no
+    /// shared mutable state. For load-balanced splits use
+    /// [`LayerSchedule::cost_partitions`].
     pub fn subtrees(&self) -> &[Vec<usize>] {
         &self.subtrees
+    }
+
+    /// Cost-weighted partition of the subtrees into at most `workers`
+    /// groups of class indices (LPT greedy over the cost-model subtree
+    /// work), replacing the old even chunking: one dominant subtree no
+    /// longer serialises a worker span. Subtrees stay atomic, so each
+    /// worker keeps full node reuse inside its slice; each returned group
+    /// preserves schedule execution order, and together the groups cover
+    /// every class exactly once. For a non-empty schedule every group is
+    /// non-empty; an empty schedule yields one empty group.
+    pub fn cost_partitions(&self, workers: usize) -> Vec<Vec<usize>> {
+        let bins = workers.min(self.subtrees.len()).max(1);
+        if bins <= 1 {
+            return vec![self.order.clone()];
+        }
+        let mut by_cost: Vec<usize> = (0..self.subtrees.len()).collect();
+        by_cost.sort_by(|&x, &y| {
+            self.subtree_costs[y]
+                .cmp(&self.subtree_costs[x])
+                .then(x.cmp(&y))
+        });
+        let mut loads = vec![0u128; bins];
+        let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); bins];
+        for &t in &by_cost {
+            let (bin, _) = loads
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, l)| (*l, i))
+                .expect("bins >= 1");
+            loads[bin] = loads[bin].saturating_add(self.subtree_costs[t]);
+            assigned[bin].push(t);
+        }
+        let mut parts = Vec::with_capacity(bins);
+        for trees in &mut assigned {
+            trees.sort_unstable();
+            let mut part = Vec::new();
+            for &t in trees.iter() {
+                part.extend(self.subtrees[t].iter().copied());
+            }
+            if !part.is_empty() {
+                parts.push(part);
+            }
+        }
+        parts
+    }
+
+    /// [`LayerSchedule::cost_partitions`] mapped down to *term* indices
+    /// (sorted within each group) — the unit [`LayerSchedule::execute_map_subset`]
+    /// takes, for cost-balanced parallel backward passes.
+    pub fn cost_term_partitions(&self, workers: usize) -> Vec<Vec<usize>> {
+        self.cost_partitions(workers)
+            .into_iter()
+            .map(|part| {
+                let mut terms: Vec<usize> = part
+                    .iter()
+                    .flat_map(|&ci| self.classes[ci].members.iter().map(|m| m.term))
+                    .collect();
+                terms.sort_unstable();
+                terms
+            })
+            .collect()
     }
 
     fn check_input(&self, v: &Tensor) -> Result<()> {
@@ -620,10 +1357,39 @@ impl LayerSchedule {
         Ok(())
     }
 
-    /// `out += Σ_i coeffs[i] · F(d_i)(v)`, accumulating in term order —
-    /// bitwise identical to looping `MultPlan::apply_accumulate` over the
-    /// terms, but with shared intermediates computed once and all scratch
-    /// tensors drawn from `arena`.
+    /// Does any member of class `ci` carry a nonzero folded weight?
+    fn class_active(&self, ci: usize, coeffs: &[f64]) -> bool {
+        self.classes[ci]
+            .members
+            .iter()
+            .any(|m| coeffs[m.term] != 0.0)
+    }
+
+    /// Gather the folded per-member weights of class `ci` into `pats`
+    /// (members with a zero coefficient are skipped). This is the per-call
+    /// λ-gather that keeps the class structure weight-independent: mutate
+    /// the layer's coefficients in place and the very next execute sees
+    /// the new values.
+    fn gather<'a>(
+        &'a self,
+        ci: usize,
+        coeffs: &[f64],
+        pats: &mut Vec<(&'a [usize], f64)>,
+    ) {
+        pats.clear();
+        for m in &self.classes[ci].members {
+            let w = coeffs[m.term] * m.sign;
+            if w != 0.0 {
+                pats.push((&m.axes, w));
+            }
+        }
+    }
+
+    /// `out += Σ_i coeffs[i] · F(d_i)(v)` via the folded class walk: one
+    /// multi-pattern scatter pass per active class, shared intermediates
+    /// computed once, all scratch drawn from `arena`. Equal to the per-term
+    /// reference to ≤ 1e-12 (class folding reassociates the additions into
+    /// each output element); deterministic and run-to-run bitwise stable.
     pub fn execute(
         &self,
         v: &Tensor,
@@ -631,17 +1397,18 @@ impl LayerSchedule {
         out: &mut Tensor,
         arena: &mut ScratchArena,
     ) -> Result<()> {
-        self.execute_subset(v, coeffs, &self.all_sinks, out, arena)
+        self.execute_subset(v, coeffs, &self.order, out, arena)
     }
 
-    /// [`LayerSchedule::execute`] restricted to the given sink indices
-    /// (still reading full-length `coeffs`). Used with
-    /// [`LayerSchedule::subtrees`] for DAG-level parallelism.
+    /// [`LayerSchedule::execute`] restricted to the given class indices
+    /// (still reading full-length `coeffs`), executed in the order given.
+    /// Used with [`LayerSchedule::subtrees`] /
+    /// [`LayerSchedule::cost_partitions`] for DAG-level parallelism.
     pub fn execute_subset(
         &self,
         v: &Tensor,
         coeffs: &[f64],
-        sinks: &[usize],
+        classes: &[usize],
         out: &mut Tensor,
         arena: &mut ScratchArena,
     ) -> Result<()> {
@@ -649,35 +1416,37 @@ impl LayerSchedule {
         self.check_output(out)?;
         self.check_coeffs(coeffs)?;
         let mut refs = vec![0usize; self.nodes.len()];
-        for &si in sinks {
-            if coeffs[si] != 0.0 {
-                self.count_chain(self.sinks[si].src, &mut refs);
+        for &ci in classes {
+            if self.class_active(ci, coeffs) {
+                self.count_chain(self.classes[ci].src, &mut refs);
             }
         }
         let mut bufs: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
-        for &si in sinks {
-            let coeff = coeffs[si];
-            if coeff == 0.0 {
+        let mut pats: Vec<(&[usize], f64)> = Vec::new();
+        for &ci in classes {
+            self.gather(ci, coeffs, &mut pats);
+            if pats.is_empty() {
                 continue;
             }
-            let sink = &self.sinks[si];
-            self.materialize(sink.src, v, &mut bufs, arena);
-            match &sink.kind {
-                SinkKind::AxpyPermuted { axes } => {
-                    self.resolve(sink.src, v, &bufs)
-                        .axpy_permuted_into(coeff, axes, out);
+            let class = &self.classes[ci];
+            self.materialize(class.src, v, &mut bufs, arena);
+            match &class.shape {
+                ClassShape::Axpy => {
+                    self.resolve(class.src, v, &bufs)
+                        .axpy_permuted_multi_into(&pats, out);
                 }
-                SinkKind::ScatterDiagonals { lead, tail, axes } => {
-                    self.resolve(sink.src, v, &bufs)
-                        .scatter_broadcast_diagonals_axpy(lead, tail, axes, coeff, out);
+                ClassShape::Scatter { lead, tail } => {
+                    self.resolve(class.src, v, &bufs)
+                        .scatter_broadcast_diagonals_multi_axpy(lead, tail, &pats, out);
                 }
-                SinkKind::EpsExpand { t, axes } => {
-                    let tmp = self.eps_expand(sink.src, *t, v, &bufs, arena);
-                    tmp.axpy_permuted_into(coeff, axes, out);
+                ClassShape::Eps { t } => {
+                    let tmp = self.eps_expand(class.src, *t, v, &bufs, arena);
+                    tmp.axpy_permuted_multi_into(&pats, out);
                     arena.release(tmp);
                 }
             }
-            self.release_chain(sink.src, &mut refs, &mut bufs, arena);
+            SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
+            self.release_chain(class.src, &mut refs, &mut bufs, arena);
         }
         self.drain(bufs, arena);
         Ok(())
@@ -687,7 +1456,9 @@ impl LayerSchedule {
     /// `outs[r] += Σ_i coeff_rows[r][i] · F(d_i)(v)` with every interior
     /// node computed a single time. This is the multi-channel layer's
     /// forward: one node evaluation per input channel feeds all output
-    /// channels, only the cheap diagonal-support scatters repeat.
+    /// channels; per output channel only the folded per-class scatter pass
+    /// repeats (and the Sp(n) ε-expansion runs once per class, not once
+    /// per term or channel).
     pub fn execute_multi(
         &self,
         v: &Tensor,
@@ -709,51 +1480,55 @@ impl LayerSchedule {
             self.check_coeffs(row)?;
         }
         let mut refs = vec![0usize; self.nodes.len()];
-        let active: Vec<bool> = (0..self.sinks.len())
-            .map(|si| coeff_rows.iter().any(|r| r[si] != 0.0))
+        let active: Vec<bool> = (0..self.classes.len())
+            .map(|ci| coeff_rows.iter().any(|row| self.class_active(ci, row)))
             .collect();
-        for (si, sink) in self.sinks.iter().enumerate() {
-            if active[si] {
-                self.count_chain(sink.src, &mut refs);
+        for &ci in &self.order {
+            if active[ci] {
+                self.count_chain(self.classes[ci].src, &mut refs);
             }
         }
         let mut bufs: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
-        for (si, sink) in self.sinks.iter().enumerate() {
-            if !active[si] {
+        let mut pats: Vec<(&[usize], f64)> = Vec::new();
+        for &ci in &self.order {
+            if !active[ci] {
                 continue;
             }
-            self.materialize(sink.src, v, &mut bufs, arena);
-            match &sink.kind {
-                SinkKind::EpsExpand { t, axes } => {
-                    // Expand once; only the closing axpy is per-channel.
-                    let tmp = self.eps_expand(sink.src, *t, v, &bufs, arena);
+            let class = &self.classes[ci];
+            self.materialize(class.src, v, &mut bufs, arena);
+            match &class.shape {
+                ClassShape::Eps { t } => {
+                    // Expand once per class; only the closing multi-axpy is
+                    // per-channel.
+                    let tmp = self.eps_expand(class.src, *t, v, &bufs, arena);
                     for (row, out) in coeff_rows.iter().zip(outs.iter_mut()) {
-                        if row[si] != 0.0 {
-                            tmp.axpy_permuted_into(row[si], axes, out);
+                        self.gather(ci, row, &mut pats);
+                        if !pats.is_empty() {
+                            tmp.axpy_permuted_multi_into(&pats, out);
+                            SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
                         }
                     }
                     arena.release(tmp);
                 }
-                kind => {
-                    let x = self.resolve(sink.src, v, &bufs);
+                shape => {
+                    let x = self.resolve(class.src, v, &bufs);
                     for (row, out) in coeff_rows.iter().zip(outs.iter_mut()) {
-                        let coeff = row[si];
-                        if coeff == 0.0 {
+                        self.gather(ci, row, &mut pats);
+                        if pats.is_empty() {
                             continue;
                         }
-                        match kind {
-                            SinkKind::AxpyPermuted { axes } => {
-                                x.axpy_permuted_into(coeff, axes, out)
+                        match shape {
+                            ClassShape::Axpy => x.axpy_permuted_multi_into(&pats, out),
+                            ClassShape::Scatter { lead, tail } => {
+                                x.scatter_broadcast_diagonals_multi_axpy(lead, tail, &pats, out)
                             }
-                            SinkKind::ScatterDiagonals { lead, tail, axes } => {
-                                x.scatter_broadcast_diagonals_axpy(lead, tail, axes, coeff, out)
-                            }
-                            SinkKind::EpsExpand { .. } => unreachable!("handled above"),
+                            ClassShape::Eps { .. } => unreachable!("handled above"),
                         }
+                        SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
                     }
                 }
             }
-            self.release_chain(sink.src, &mut refs, &mut bufs, arena);
+            self.release_chain(class.src, &mut refs, &mut bufs, arena);
         }
         self.drain(bufs, arena);
         Ok(())
@@ -762,40 +1537,62 @@ impl LayerSchedule {
     /// Materialise every term's **unweighted** output `F(d_i)(v)` in term
     /// order and hand each to `f` — the backward-pass workhorse: gradients
     /// need the per-term tensors (for `∂L/∂λ_i` inner products), but the
-    /// chains still share all their prefixes. The tensor passed to `f` is a
-    /// reused scratch buffer, valid only for the duration of the call.
+    /// chains still share every canonical intermediate. The tensor passed
+    /// to `f` is a reused scratch buffer, valid only for the duration of
+    /// the call; it is **bitwise** equal to `MultPlan::apply` (chain
+    /// canonicalisation is elementwise exact and each term's sink runs
+    /// alone here).
     pub fn execute_map<F>(&self, v: &Tensor, arena: &mut ScratchArena, mut f: F) -> Result<()>
+    where
+        F: FnMut(usize, &Tensor) -> Result<()>,
+    {
+        let all: Vec<usize> = (0..self.sinks.len()).collect();
+        self.execute_map_subset(v, &all, arena, &mut f)
+    }
+
+    /// [`LayerSchedule::execute_map`] restricted to the given *term*
+    /// indices, visited in the order given. Pair with
+    /// [`LayerSchedule::cost_term_partitions`] to fan a backward pass out
+    /// over workers with cost-balanced term sets.
+    pub fn execute_map_subset<F>(
+        &self,
+        v: &Tensor,
+        terms: &[usize],
+        arena: &mut ScratchArena,
+        mut f: F,
+    ) -> Result<()>
     where
         F: FnMut(usize, &Tensor) -> Result<()>,
     {
         self.check_input(v)?;
         let mut refs = vec![0usize; self.nodes.len()];
-        for sink in &self.sinks {
-            self.count_chain(sink.src, &mut refs);
+        for &si in terms {
+            self.count_chain(self.sinks[si].src, &mut refs);
         }
         let mut bufs: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
         let mut term_out = arena.acquire(self.n, self.l);
         let mut result = Ok(());
-        for (si, sink) in self.sinks.iter().enumerate() {
+        for &si in terms {
+            let sink = &self.sinks[si];
             self.materialize(sink.src, v, &mut bufs, arena);
             term_out.data.fill(0.0);
             match &sink.kind {
                 SinkKind::AxpyPermuted { axes } => {
                     self.resolve(sink.src, v, &bufs)
-                        .axpy_permuted_into(1.0, axes, &mut term_out);
+                        .axpy_permuted_into(sink.sign, axes, &mut term_out);
                 }
                 SinkKind::ScatterDiagonals { lead, tail, axes } => {
                     self.resolve(sink.src, v, &bufs).scatter_broadcast_diagonals_axpy(
                         lead,
                         tail,
                         axes,
-                        1.0,
+                        sink.sign,
                         &mut term_out,
                     );
                 }
                 SinkKind::EpsExpand { t, axes } => {
                     let tmp = self.eps_expand(sink.src, *t, v, &bufs, arena);
-                    tmp.axpy_permuted_into(1.0, axes, &mut term_out);
+                    tmp.axpy_permuted_into(sink.sign, axes, &mut term_out);
                     arena.release(tmp);
                 }
             }
@@ -821,10 +1618,11 @@ impl LayerSchedule {
     // output is a `[B, n^order]` BatchTensor computed by the batched
     // tensor kernels, which build their odometer index maps once and
     // replay them over the items. Per item, the arithmetic (and its
-    // order) is exactly that of the per-item walk, so `execute_batch` is
-    // bitwise identical item-by-item to `execute` — only the schedule
-    // traversal, index computation and λ-scatter bookkeeping are
-    // amortised across the batch. See `docs/batched_execution.md`.
+    // order) is exactly that of the per-item folded walk, so
+    // `execute_batch` is bitwise identical item-by-item to `execute` —
+    // only the schedule traversal, index computation and λ-scatter
+    // bookkeeping are amortised across the batch. See
+    // `docs/batched_execution.md`.
 
     fn check_batch_input(&self, v: &BatchTensor) -> Result<()> {
         if v.order() != self.k || v.n() != self.n {
@@ -856,9 +1654,9 @@ impl LayerSchedule {
 
     /// Batched [`LayerSchedule::execute`]:
     /// `out[b] += Σ_i coeffs[i] · F(d_i)(v[b])` for every item `b`, with
-    /// the whole DAG walked **once per batch**. Shared prefixes now
-    /// amortise across terms *and* items, and each λ-weighted sink is one
-    /// blocked axpy over `B · n^l` contiguous lanes.
+    /// the whole DAG walked **once per batch**. Shared intermediates
+    /// amortise across terms *and* items, and each active class is one
+    /// multi-pattern scatter pass over `B` items with shared index maps.
     pub fn execute_batch(
         &self,
         v: &BatchTensor,
@@ -866,18 +1664,19 @@ impl LayerSchedule {
         out: &mut BatchTensor,
         arena: &mut ScratchArena,
     ) -> Result<()> {
-        self.execute_batch_subset(v, coeffs, &self.all_sinks, out, arena)
+        self.execute_batch_subset(v, coeffs, &self.order, out, arena)
     }
 
-    /// [`LayerSchedule::execute_batch`] restricted to the given sink
-    /// indices (still reading full-length `coeffs`). Used with
-    /// [`LayerSchedule::subtrees`] for DAG-level parallelism over a whole
-    /// batch.
+    /// [`LayerSchedule::execute_batch`] restricted to the given class
+    /// indices (still reading full-length `coeffs`), executed in the order
+    /// given. Used with [`LayerSchedule::subtrees`] /
+    /// [`LayerSchedule::cost_partitions`] for DAG-level parallelism over a
+    /// whole batch.
     pub fn execute_batch_subset(
         &self,
         v: &BatchTensor,
         coeffs: &[f64],
-        sinks: &[usize],
+        classes: &[usize],
         out: &mut BatchTensor,
         arena: &mut ScratchArena,
     ) -> Result<()> {
@@ -885,35 +1684,37 @@ impl LayerSchedule {
         self.check_batch_output(out, v.batch())?;
         self.check_coeffs(coeffs)?;
         let mut refs = vec![0usize; self.nodes.len()];
-        for &si in sinks {
-            if coeffs[si] != 0.0 {
-                self.count_chain(self.sinks[si].src, &mut refs);
+        for &ci in classes {
+            if self.class_active(ci, coeffs) {
+                self.count_chain(self.classes[ci].src, &mut refs);
             }
         }
         let mut bufs: Vec<Option<BatchTensor>> = (0..self.nodes.len()).map(|_| None).collect();
-        for &si in sinks {
-            let coeff = coeffs[si];
-            if coeff == 0.0 {
+        let mut pats: Vec<(&[usize], f64)> = Vec::new();
+        for &ci in classes {
+            self.gather(ci, coeffs, &mut pats);
+            if pats.is_empty() {
                 continue;
             }
-            let sink = &self.sinks[si];
-            self.materialize_batch(sink.src, v, &mut bufs, arena);
-            match &sink.kind {
-                SinkKind::AxpyPermuted { axes } => {
-                    self.resolve_batch(sink.src, v, &bufs)
-                        .axpy_permuted_into(coeff, axes, out);
+            let class = &self.classes[ci];
+            self.materialize_batch(class.src, v, &mut bufs, arena);
+            match &class.shape {
+                ClassShape::Axpy => {
+                    self.resolve_batch(class.src, v, &bufs)
+                        .axpy_permuted_multi_into(&pats, out);
                 }
-                SinkKind::ScatterDiagonals { lead, tail, axes } => {
-                    self.resolve_batch(sink.src, v, &bufs)
-                        .scatter_broadcast_diagonals_axpy(lead, tail, axes, coeff, out);
+                ClassShape::Scatter { lead, tail } => {
+                    self.resolve_batch(class.src, v, &bufs)
+                        .scatter_broadcast_diagonals_multi_axpy(lead, tail, &pats, out);
                 }
-                SinkKind::EpsExpand { t, axes } => {
-                    let tmp = self.eps_expand_batch(sink.src, *t, v, &bufs, arena);
-                    tmp.axpy_permuted_into(coeff, axes, out);
+                ClassShape::Eps { t } => {
+                    let tmp = self.eps_expand_batch(class.src, *t, v, &bufs, arena);
+                    tmp.axpy_permuted_multi_into(&pats, out);
                     arena.release_batch(tmp);
                 }
             }
-            self.release_chain_batch(sink.src, &mut refs, &mut bufs, arena);
+            SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
+            self.release_chain_batch(class.src, &mut refs, &mut bufs, arena);
         }
         self.drain_batch(bufs, arena);
         Ok(())
@@ -948,15 +1749,21 @@ impl LayerSchedule {
             match &sink.kind {
                 SinkKind::AxpyPermuted { axes } => {
                     self.resolve_batch(sink.src, v, &bufs)
-                        .axpy_permuted_into(1.0, axes, &mut term_out);
+                        .axpy_permuted_into(sink.sign, axes, &mut term_out);
                 }
                 SinkKind::ScatterDiagonals { lead, tail, axes } => {
                     self.resolve_batch(sink.src, v, &bufs)
-                        .scatter_broadcast_diagonals_axpy(lead, tail, axes, 1.0, &mut term_out);
+                        .scatter_broadcast_diagonals_axpy(
+                            lead,
+                            tail,
+                            axes,
+                            sink.sign,
+                            &mut term_out,
+                        );
                 }
                 SinkKind::EpsExpand { t, axes } => {
                     let tmp = self.eps_expand_batch(sink.src, *t, v, &bufs, arena);
-                    tmp.axpy_permuted_into(1.0, axes, &mut term_out);
+                    tmp.axpy_permuted_into(sink.sign, axes, &mut term_out);
                     arena.release_batch(tmp);
                 }
             }
@@ -977,8 +1784,8 @@ impl LayerSchedule {
     /// feeding several coefficient rows at once —
     /// `outs[r][b] += Σ_i coeff_rows[r][i] · F(d_i)(v[b])`. The channel
     /// layer's batched forward: interior nodes run once per (input
-    /// channel, batch), only the diagonal-support scatters repeat per
-    /// output channel.
+    /// channel, batch); per output channel only the folded per-class
+    /// scatter passes repeat.
     pub fn execute_batch_multi(
         &self,
         v: &BatchTensor,
@@ -1000,50 +1807,53 @@ impl LayerSchedule {
             self.check_coeffs(row)?;
         }
         let mut refs = vec![0usize; self.nodes.len()];
-        let active: Vec<bool> = (0..self.sinks.len())
-            .map(|si| coeff_rows.iter().any(|r| r[si] != 0.0))
+        let active: Vec<bool> = (0..self.classes.len())
+            .map(|ci| coeff_rows.iter().any(|row| self.class_active(ci, row)))
             .collect();
-        for (si, sink) in self.sinks.iter().enumerate() {
-            if active[si] {
-                self.count_chain(sink.src, &mut refs);
+        for &ci in &self.order {
+            if active[ci] {
+                self.count_chain(self.classes[ci].src, &mut refs);
             }
         }
         let mut bufs: Vec<Option<BatchTensor>> = (0..self.nodes.len()).map(|_| None).collect();
-        for (si, sink) in self.sinks.iter().enumerate() {
-            if !active[si] {
+        let mut pats: Vec<(&[usize], f64)> = Vec::new();
+        for &ci in &self.order {
+            if !active[ci] {
                 continue;
             }
-            self.materialize_batch(sink.src, v, &mut bufs, arena);
-            match &sink.kind {
-                SinkKind::EpsExpand { t, axes } => {
-                    let tmp = self.eps_expand_batch(sink.src, *t, v, &bufs, arena);
+            let class = &self.classes[ci];
+            self.materialize_batch(class.src, v, &mut bufs, arena);
+            match &class.shape {
+                ClassShape::Eps { t } => {
+                    let tmp = self.eps_expand_batch(class.src, *t, v, &bufs, arena);
                     for (row, out) in coeff_rows.iter().zip(outs.iter_mut()) {
-                        if row[si] != 0.0 {
-                            tmp.axpy_permuted_into(row[si], axes, out);
+                        self.gather(ci, row, &mut pats);
+                        if !pats.is_empty() {
+                            tmp.axpy_permuted_multi_into(&pats, out);
+                            SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
                         }
                     }
                     arena.release_batch(tmp);
                 }
-                kind => {
-                    let x = self.resolve_batch(sink.src, v, &bufs);
+                shape => {
+                    let x = self.resolve_batch(class.src, v, &bufs);
                     for (row, out) in coeff_rows.iter().zip(outs.iter_mut()) {
-                        let coeff = row[si];
-                        if coeff == 0.0 {
+                        self.gather(ci, row, &mut pats);
+                        if pats.is_empty() {
                             continue;
                         }
-                        match kind {
-                            SinkKind::AxpyPermuted { axes } => {
-                                x.axpy_permuted_into(coeff, axes, out)
+                        match shape {
+                            ClassShape::Axpy => x.axpy_permuted_multi_into(&pats, out),
+                            ClassShape::Scatter { lead, tail } => {
+                                x.scatter_broadcast_diagonals_multi_axpy(lead, tail, &pats, out)
                             }
-                            SinkKind::ScatterDiagonals { lead, tail, axes } => {
-                                x.scatter_broadcast_diagonals_axpy(lead, tail, axes, coeff, out)
-                            }
-                            SinkKind::EpsExpand { .. } => unreachable!("handled above"),
+                            ClassShape::Eps { .. } => unreachable!("handled above"),
                         }
+                        SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
                     }
                 }
             }
-            self.release_chain_batch(sink.src, &mut refs, &mut bufs, arena);
+            self.release_chain_batch(class.src, &mut refs, &mut bufs, arena);
         }
         self.drain_batch(bufs, arena);
         Ok(())
@@ -1084,6 +1894,7 @@ impl LayerSchedule {
                 }
             }
         }
+        EXECUTED_NODES.fetch_add(1, Ordering::Relaxed);
         bufs[i] = Some(out);
     }
 
@@ -1177,6 +1988,7 @@ impl LayerSchedule {
                 }
             }
         }
+        EXECUTED_NODES.fetch_add(1, Ordering::Relaxed);
         bufs[i] = Some(out);
     }
 
@@ -1267,11 +2079,21 @@ mod tests {
         for (group, n, k, l) in [
             (Group::Symmetric, 3usize, 2usize, 2usize),
             (Group::Symmetric, 3, 3, 2),
+            (Group::Symmetric, 4, 2, 3),
             (Group::Orthogonal, 3, 2, 2),
             (Group::Orthogonal, 3, 3, 1),
+            (Group::Orthogonal, 3, 4, 2),
             (Group::Symplectic, 4, 2, 2),
+            (Group::Symplectic, 4, 3, 3),
+            // Crossing propagating pairs whose canonical chains end in a
+            // non-identity permute folded into the ε-expansion sink
+            // (regression: the fold must remap the *chain* axes, which
+            // trail the 2t leading ε-pair axes).
+            (Group::Symplectic, 4, 2, 4),
+            (Group::Symplectic, 4, 4, 4),
             (Group::SpecialOrthogonal, 3, 2, 2),
             (Group::SpecialOrthogonal, 3, 2, 1), // jellyfish-only spanning set
+            (Group::SpecialOrthogonal, 3, 3, 2), // jellyfish present
         ] {
             let plans = spanning_plans(group, n, k, l).unwrap();
             let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
@@ -1283,45 +2105,127 @@ mod tests {
             schedule.execute(&v, &coeffs, &mut got, &mut arena).unwrap();
             let want = reference_sum(&plans, &coeffs, &v, l);
             assert!(
-                got.allclose(&want, 0.0),
-                "{group} ({k},{l}): fused diverges by {}",
+                got.allclose(&want, 1e-12),
+                "{group} ({k},{l}): folded execute diverges by {}",
                 got.max_abs_diff(&want)
             );
+            // Run-to-run bitwise stability (deterministic class order).
+            let mut again = Tensor::zeros(n, l);
+            schedule
+                .execute(&v, &coeffs, &mut again, &mut arena)
+                .unwrap();
+            assert!(got.allclose(&again, 0.0), "{group} ({k},{l}): not stable");
         }
     }
 
     #[test]
-    fn schedule_shares_prefixes() {
+    fn schedule_shares_prefixes_and_folds_classes() {
         // S_n (2,2) at n=4: all 15 spanning terms but far fewer distinct
-        // σ_k permutations and contraction prefixes.
+        // canonical intermediates and scatter classes.
         let plans = spanning_plans(Group::Symmetric, 4, 2, 2).unwrap();
         let schedule = LayerSchedule::compile(Group::Symmetric, 4, 2, 2, &plans).unwrap();
         let stats = schedule.stats();
         assert_eq!(stats.terms, 15);
-        assert!(
-            stats.shared_ops > 0,
-            "expected prefix sharing, got {stats:?}"
-        );
+        assert!(stats.shared_ops > 0, "expected sharing, got {stats:?}");
         assert!(stats.nodes < stats.chain_ops);
         assert!(stats.sharing_ratio() > 0.0 && stats.sharing_ratio() < 1.0);
+        // λ-folding: the two pure-permutation diagrams (identity and swap)
+        // alone fold into one class, so classes < terms strictly.
+        assert!(stats.classes < stats.terms, "no folding: {stats:?}");
+        assert!(stats.fold_ratio() > 0.0);
+        assert!(stats.executed_ops() < stats.executed_ops_prefix());
+        assert!(stats.estimated_flops > 0 && stats.estimated_bytes > 0);
+    }
+
+    /// Global CSE must beat prefix-only sharing where canonicalisation
+    /// merges chains: S_n (3,2) has cross-matching pairs whose σ_k differ
+    /// only by a block-respecting permute pushed through the contraction.
+    #[test]
+    fn canonicalization_beats_prefix_sharing() {
+        let plans = spanning_plans(Group::Symmetric, 3, 3, 2).unwrap();
+        let schedule = LayerSchedule::compile(Group::Symmetric, 3, 3, 2, &plans).unwrap();
+        let stats = schedule.stats();
+        assert!(
+            stats.nodes < stats.prefix_nodes,
+            "global CSE should merge beyond prefixes: {stats:?}"
+        );
+        assert!(stats.classes < stats.terms);
+    }
+
+    /// The executed-op invariant across every group at k,l <= 4 shapes:
+    /// folded kernel invocations strictly below the prefix-sharing path.
+    #[test]
+    fn folded_executed_ops_beat_prefix_path() {
+        for (group, n, k, l) in [
+            (Group::Symmetric, 4usize, 2usize, 2usize),
+            (Group::Symmetric, 3, 3, 2),
+            (Group::Orthogonal, 5, 3, 3),
+            (Group::Orthogonal, 4, 4, 2),
+            (Group::Symplectic, 4, 2, 2),
+            (Group::SpecialOrthogonal, 3, 2, 2),
+        ] {
+            let plans = spanning_plans(group, n, k, l).unwrap();
+            let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+            let stats = schedule.stats();
+            assert!(
+                stats.classes < stats.terms,
+                "{group} ({k},{l}): no class folding: {stats:?}"
+            );
+            assert!(stats.nodes <= stats.prefix_nodes, "{group} ({k},{l})");
+            assert!(
+                stats.executed_ops() < stats.executed_ops_prefix(),
+                "{group} ({k},{l}): folded path not strictly cheaper: {stats:?}"
+            );
+        }
+    }
+
+    /// Scatter passes per forward equal the number of active classes: the
+    /// process-wide counter grows by exactly `classes` per execute (other
+    /// tests run concurrently, so assert a lower bound here; the bench
+    /// asserts exact equality single-threaded).
+    #[test]
+    fn scatter_pass_counter_tracks_classes() {
+        let mut rng = Rng::new(911);
+        let plans = spanning_plans(Group::Orthogonal, 3, 2, 2).unwrap();
+        let schedule = LayerSchedule::compile(Group::Orthogonal, 3, 2, 2, &plans).unwrap();
+        let coeffs = random_coeffs(plans.len(), &mut rng);
+        let v = Tensor::random(3, 2, &mut rng);
+        let mut out = Tensor::zeros(3, 2);
+        let mut arena = ScratchArena::new();
+        let before = exec_stats();
+        schedule.execute(&v, &coeffs, &mut out, &mut arena).unwrap();
+        let after = exec_stats();
+        assert!(
+            after.scatter_passes - before.scatter_passes >= schedule.classes() as u64,
+            "scatter passes must grow by at least the class count"
+        );
+        assert!(
+            after.executed_nodes - before.executed_nodes >= schedule.stats().nodes as u64,
+            "executed nodes must grow by at least the node count"
+        );
+        // Compile-time planner totals saw this schedule.
+        let totals = planner_totals();
+        assert!(totals.nodes >= schedule.stats().nodes as u64);
+        assert!(totals.classes >= schedule.classes() as u64);
+        assert!(totals.estimated_flops > 0);
     }
 
     #[test]
-    fn subtrees_partition_the_sinks() {
+    fn subtrees_partition_the_classes() {
         for (group, n, k, l) in [
             (Group::Symmetric, 3usize, 2usize, 2usize),
             (Group::Symplectic, 4, 2, 2),
         ] {
             let plans = spanning_plans(group, n, k, l).unwrap();
             let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
-            let mut seen = vec![false; schedule.terms()];
+            let mut seen = vec![false; schedule.classes()];
             for tree in schedule.subtrees() {
-                for &si in tree {
-                    assert!(!seen[si], "sink {si} appears in two subtrees");
-                    seen[si] = true;
+                for &ci in tree {
+                    assert!(!seen[ci], "class {ci} appears in two subtrees");
+                    seen[ci] = true;
                 }
             }
-            assert!(seen.iter().all(|&s| s), "subtrees must cover every sink");
+            assert!(seen.iter().all(|&s| s), "subtrees must cover every class");
             // Executing subtree by subtree equals one full execute.
             let mut rng = Rng::new(77);
             let coeffs = random_coeffs(schedule.terms(), &mut rng);
@@ -1338,6 +2242,57 @@ mod tests {
                     .unwrap();
             }
             assert!(whole.allclose(&pieced, 1e-12), "{group}");
+        }
+    }
+
+    /// Cost partitions cover every class exactly once, respect the worker
+    /// bound, and compose to the whole sum.
+    #[test]
+    fn cost_partitions_cover_and_compose() {
+        let mut rng = Rng::new(912);
+        for (group, n, k, l) in [
+            (Group::Symmetric, 4usize, 2usize, 2usize),
+            (Group::Orthogonal, 4, 3, 3),
+        ] {
+            let plans = spanning_plans(group, n, k, l).unwrap();
+            let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+            for workers in [1usize, 2, 3, 16] {
+                let parts = schedule.cost_partitions(workers);
+                assert!(!parts.is_empty() && parts.len() <= workers.max(1));
+                assert!(parts.iter().all(|p| !p.is_empty()));
+                let mut seen = vec![false; schedule.classes()];
+                for part in &parts {
+                    for &ci in part {
+                        assert!(!seen[ci], "{group}: class {ci} in two partitions");
+                        seen[ci] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "{group}: partition missed a class");
+                let coeffs = random_coeffs(schedule.terms(), &mut rng);
+                let v = Tensor::random(n, k, &mut rng);
+                let mut arena = ScratchArena::new();
+                let mut whole = Tensor::zeros(n, l);
+                schedule
+                    .execute(&v, &coeffs, &mut whole, &mut arena)
+                    .unwrap();
+                let mut pieced = Tensor::zeros(n, l);
+                for part in &parts {
+                    schedule
+                        .execute_subset(&v, &coeffs, part, &mut pieced, &mut arena)
+                        .unwrap();
+                }
+                assert!(whole.allclose(&pieced, 1e-12), "{group} workers={workers}");
+            }
+            // Term partitions cover every term exactly once.
+            let tparts = schedule.cost_term_partitions(3);
+            let mut seen = vec![false; schedule.terms()];
+            for part in &tparts {
+                for &ti in part {
+                    assert!(!seen[ti]);
+                    seen[ti] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
         }
     }
 
@@ -1370,12 +2325,17 @@ mod tests {
         assert!(global.high_water_f64s >= arena.held_f64s());
     }
 
+    /// Per-term outputs from the map walk must stay **bitwise** equal to
+    /// `MultPlan::apply` — chain canonicalisation is elementwise exact.
     #[test]
     fn execute_map_matches_plan_apply() {
         let mut rng = Rng::new(903);
         for (group, n, k, l) in [
             (Group::Symmetric, 3usize, 2usize, 2usize),
+            (Group::Symmetric, 3, 3, 2),
             (Group::Symplectic, 4, 2, 2),
+            (Group::Symplectic, 4, 3, 3),
+            (Group::Symplectic, 4, 2, 4), // ε-sink with folded chain permute
             (Group::SpecialOrthogonal, 3, 1, 2), // jellyfish terms present
         ] {
             let plans = spanning_plans(group, n, k, l).unwrap();
@@ -1390,13 +2350,41 @@ mod tests {
                     let want = plans[i].apply(&v).unwrap();
                     assert!(
                         term.allclose(&want, 0.0),
-                        "{group} term {i} diverges by {}",
+                        "{group} ({k},{l}) term {i} diverges by {}",
                         term.max_abs_diff(&want)
                     );
                     Ok(())
                 })
                 .unwrap();
         }
+    }
+
+    /// A subset map walk visits exactly the requested terms with the same
+    /// bitwise outputs as the full walk.
+    #[test]
+    fn execute_map_subset_matches_full_walk() {
+        let mut rng = Rng::new(913);
+        let plans = spanning_plans(Group::Symmetric, 3, 2, 2).unwrap();
+        let schedule = LayerSchedule::compile(Group::Symmetric, 3, 2, 2, &plans).unwrap();
+        let v = Tensor::random(3, 2, &mut rng);
+        let mut arena = ScratchArena::new();
+        let mut full: Vec<Tensor> = Vec::new();
+        schedule
+            .execute_map(&v, &mut arena, |_, t| {
+                full.push(t.clone());
+                Ok(())
+            })
+            .unwrap();
+        let subset: Vec<usize> = (0..schedule.terms()).filter(|i| i % 2 == 0).collect();
+        let mut visited = Vec::new();
+        schedule
+            .execute_map_subset(&v, &subset, &mut arena, |i, t| {
+                visited.push(i);
+                assert!(t.allclose(&full[i], 0.0), "term {i} diverges in subset walk");
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(visited, subset);
     }
 
     #[test]
@@ -1427,24 +2415,26 @@ mod tests {
     #[test]
     fn execute_multi_matches_row_by_row() {
         let mut rng = Rng::new(904);
-        let (group, n, k, l) = (Group::Orthogonal, 3, 2, 2);
-        let plans = spanning_plans(group, n, k, l).unwrap();
-        let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
-        let rows: Vec<Vec<f64>> = (0..3)
-            .map(|_| random_coeffs(plans.len(), &mut rng))
-            .collect();
-        let v = Tensor::random(n, k, &mut rng);
-        let mut arena = ScratchArena::new();
-        let mut outs: Vec<Tensor> = (0..3).map(|_| Tensor::zeros(n, l)).collect();
-        schedule
-            .execute_multi(&v, &rows, &mut outs, &mut arena)
-            .unwrap();
-        for (row, got) in rows.iter().zip(&outs) {
-            let mut want = Tensor::zeros(n, l);
+        for (group, n, k, l) in [
+            (Group::Orthogonal, 3usize, 2usize, 2usize),
+            (Group::Symplectic, 4, 2, 2), // exercises the ε-expansion class
+        ] {
+            let plans = spanning_plans(group, n, k, l).unwrap();
+            let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+            let rows: Vec<Vec<f64>> = (0..3)
+                .map(|_| random_coeffs(plans.len(), &mut rng))
+                .collect();
+            let v = Tensor::random(n, k, &mut rng);
+            let mut arena = ScratchArena::new();
+            let mut outs: Vec<Tensor> = (0..3).map(|_| Tensor::zeros(n, l)).collect();
             schedule
-                .execute(&v, row, &mut want, &mut arena)
+                .execute_multi(&v, &rows, &mut outs, &mut arena)
                 .unwrap();
-            assert!(got.allclose(&want, 0.0));
+            for (row, got) in rows.iter().zip(&outs) {
+                let mut want = Tensor::zeros(n, l);
+                schedule.execute(&v, row, &mut want, &mut arena).unwrap();
+                assert!(got.allclose(&want, 0.0), "{group}");
+            }
         }
     }
 
@@ -1658,12 +2648,96 @@ mod tests {
     #[test]
     fn empty_schedule_is_a_noop() {
         let schedule = LayerSchedule::compile(Group::Orthogonal, 3, 2, 1, &[]).unwrap();
+        assert_eq!(schedule.classes(), 0);
         let mut out = Tensor::zeros(3, 1);
         let mut arena = ScratchArena::new();
         schedule
             .execute(&Tensor::zeros(3, 2), &[], &mut out, &mut arena)
             .unwrap();
         assert_eq!(out.norm(), 0.0);
+        assert_eq!(schedule.cost_partitions(4), vec![Vec::<usize>::new()]);
+    }
+
+    /// The canonicalisation helpers behave as specified on hand-built
+    /// chains (composition, identity elision, push-through, sink folding).
+    #[test]
+    fn canonicalize_rewrites_hand_built_chains() {
+        // [P([1,0,2]), Contract(1)] — trailing entry is already axis 2, so
+        // the permute pushes through and folds into the sink.
+        let mut steps = vec![
+            ChainStep::Permute(vec![1, 0, 2]),
+            ChainStep::Contract(1),
+        ];
+        let mut kind = SinkKind::ScatterDiagonals {
+            lead: vec![],
+            tail: vec![1, 1],
+            axes: vec![0, 1],
+        };
+        let mut sign = 1.0;
+        canonicalize(&mut steps, &mut kind, &mut sign);
+        assert_eq!(steps, vec![ChainStep::Contract(1)]);
+        assert_eq!(sign, 1.0);
+        let SinkKind::ScatterDiagonals { tail, axes, .. } = &kind else {
+            panic!("kind changed variant");
+        };
+        assert_eq!(tail, &vec![1, 1]);
+        assert_eq!(axes, &vec![1, 0], "compact permute folded into σ_l");
+
+        // Sorting inside a symmetric contraction block elides the permute.
+        let mut steps = vec![
+            ChainStep::Permute(vec![0, 2, 1]),
+            ChainStep::Contract(2),
+        ];
+        let mut kind = SinkKind::AxpyPermuted { axes: vec![0] };
+        let mut sign = 1.0;
+        canonicalize(&mut steps, &mut kind, &mut sign);
+        assert_eq!(steps, vec![ChainStep::Contract(2)]);
+        assert_eq!(sign, 1.0);
+
+        // The ε-trace is antisymmetric: the same sort flips the sign.
+        let mut steps = vec![
+            ChainStep::Permute(vec![0, 2, 1]),
+            ChainStep::TracePairEps,
+        ];
+        let mut kind = SinkKind::AxpyPermuted { axes: vec![0] };
+        let mut sign = 1.0;
+        canonicalize(&mut steps, &mut kind, &mut sign);
+        assert_eq!(steps, vec![ChainStep::TracePairEps]);
+        assert_eq!(sign, -1.0);
+
+        // A chain-trailing permute folding into the ε-expansion sink must
+        // remap the *chain* axes (which trail the 2t leading ε-pair axes),
+        // leaving the pair axes alone.
+        let mut steps = vec![ChainStep::Permute(vec![1, 0])];
+        let mut kind = SinkKind::EpsExpand {
+            t: 1,
+            axes: vec![0, 1, 2, 3],
+        };
+        let mut sign = 1.0;
+        canonicalize(&mut steps, &mut kind, &mut sign);
+        assert!(steps.is_empty());
+        let SinkKind::EpsExpand { axes, .. } = &kind else {
+            panic!("kind changed variant");
+        };
+        assert_eq!(axes, &vec![0, 1, 3, 2]);
+
+        // A whole-group reorder pushes through the extraction and folds.
+        let mut steps = vec![
+            ChainStep::Permute(vec![2, 3, 0, 1]),
+            ChainStep::Extract(vec![2, 2]),
+        ];
+        let mut kind = SinkKind::ScatterDiagonals {
+            lead: vec![],
+            tail: vec![1, 1],
+            axes: vec![0, 1],
+        };
+        let mut sign = 1.0;
+        canonicalize(&mut steps, &mut kind, &mut sign);
+        assert_eq!(steps, vec![ChainStep::Extract(vec![2, 2])]);
+        let SinkKind::ScatterDiagonals { axes, .. } = &kind else {
+            panic!("kind changed variant");
+        };
+        assert_eq!(axes, &vec![1, 0]);
     }
 
     #[test]

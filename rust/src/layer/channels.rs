@@ -10,11 +10,13 @@
 //!
 //! The implementation exploits linearity the other way round —
 //! `Σ_i Σ_d λ_d[o,i] · F(d)(in[i])` — so each input channel makes a single
-//! pass over the layer's fused [`LayerSchedule`]
+//! pass over the layer's folded [`LayerSchedule`]
 //! ([`LayerSchedule::execute_multi`]) feeding every output channel at once:
 //! the interior diagram work (permutes, contractions) runs `c_in` times per
-//! forward, with only the cheap per-term diagonal scatters repeating per
-//! output channel.
+//! forward, and per output channel only the folded per-*class* scatter
+//! passes repeat — terms differing only in their closing `σ_l` fold into
+//! one multi-pattern pass with the per-channel λ-weights gathered on the
+//! fly.
 
 use super::linear::spanning_diagrams;
 use crate::diagram::Diagram;

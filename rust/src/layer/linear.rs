@@ -59,11 +59,13 @@ pub struct EquivariantLinear {
     l: usize,
     terms: Vec<Term>,
     bias_terms: Vec<Term>,
-    /// The fused execution schedule for the weight sum `Σ λ_d F(d)`: the
-    /// per-term op chains hash-consed into a DAG (shared `σ_k` permutes
-    /// and contraction prefixes computed once per forward), executed
-    /// against a recycled scratch arena. Shared across layer clones and —
-    /// through [`PlanCache`] — across every layer of the same shape.
+    /// The folded execution schedule for the weight sum `Σ λ_d F(d)`: the
+    /// per-term op chains canonicalised and hash-consed into a globally
+    /// CSE'd DAG, terms folded into `(node, pattern)` scatter classes, all
+    /// executed against a recycled scratch arena. The structure is
+    /// weight-independent — λ coefficients are gathered from this layer's
+    /// `coeffs` on every call — so it is shared across layer clones and,
+    /// through [`PlanCache`], across every layer of the same shape.
     schedule: Arc<LayerSchedule>,
     /// Schedule over the term-wise transposed plans, for the backward pass.
     backward_schedule: Arc<LayerSchedule>,
@@ -200,11 +202,14 @@ impl EquivariantLinear {
         self.coeffs.len() + self.bias_coeffs.len()
     }
 
-    /// Forward pass: `W v + bias` via the fused execution schedule — the
-    /// whole diagram sum in one DAG walk, shared intermediates computed
-    /// once, scratch tensors drawn from the pooled arena (zero steady-state
-    /// heap allocations for intermediates). Bitwise identical to
-    /// [`EquivariantLinear::forward_per_term`].
+    /// Forward pass: `W v + bias` via the folded execution schedule — the
+    /// whole diagram sum in one DAG walk, each distinct intermediate
+    /// computed once (global CSE), one multi-pattern scatter pass per
+    /// `(node, pattern)` class with the λ-weights folded in, scratch
+    /// tensors drawn from the pooled arena (zero steady-state heap
+    /// allocations for intermediates). Matches
+    /// [`EquivariantLinear::forward_per_term`] to ≤ 1e-12 (class folding
+    /// reassociates the per-term additions); deterministic run to run.
     pub fn forward(&self, v: &Tensor) -> Result<Tensor> {
         // Check the input up front (not per-term): a zero-initialised layer
         // skips every term, and the batched path must agree with this one
@@ -221,7 +226,7 @@ impl EquivariantLinear {
     /// spanning term, exactly as before schedule fusion (the §5 linearity
     /// observation, term by term). Kept for the equivalence property tests
     /// and the fused-vs-per-term benchmark; [`EquivariantLinear::forward`]
-    /// must match it bitwise.
+    /// matches it to ≤ 1e-12 (folded classes reassociate the additions).
     pub fn forward_per_term(&self, v: &Tensor) -> Result<Tensor> {
         self.check_input(v)?;
         let mut out = Tensor::zeros(self.n, self.l);
@@ -278,10 +283,11 @@ impl EquivariantLinear {
         let bias = self.batch_bias()?;
         let workers = max_threads();
         // Single item: parallelise across independent schedule subtrees
-        // instead (the DAG-level form of the old term-range fan-out). The
-        // clamp to ≥ 1 matters: a single-term layer has one subtree and
-        // must fall through to the plain path, not compute with zero
-        // workers (the old `terms / 2` heuristic hit exactly that).
+        // instead, split by the cost model rather than evenly (the
+        // DAG-level form of the old term-range fan-out). The clamp to ≥ 1
+        // matters: a single-term layer has one subtree and must fall
+        // through to the plain path, not compute with zero workers (the
+        // old `terms / 2` heuristic hit exactly that).
         let tree_workers = workers.min(self.schedule.subtrees().len()).max(1);
         if inputs.len() == 1 && tree_workers > 1 {
             let mut out = self.forward_subtrees_parallel(inputs[0], tree_workers)?;
@@ -358,6 +364,17 @@ impl EquivariantLinear {
         }
         if inputs.is_empty() {
             return Ok(Vec::new());
+        }
+        // Single item: no batch axis to span — fan the *terms* out instead,
+        // by cost-weighted partitions of the transposed schedule (the
+        // backward mirror of the forward's subtree parallelism).
+        let tree_workers = max_threads()
+            .min(self.backward_schedule.subtrees().len())
+            .max(1);
+        if inputs.len() == 1 && tree_workers > 1 {
+            let gv =
+                self.backward_terms_parallel(&inputs[0], &grad_outs[0], grads, tree_workers)?;
+            return Ok(vec![gv]);
         }
         let chunk = span_len(inputs.len());
         let spans: Vec<(&[Tensor], &[Tensor])> = inputs
@@ -471,22 +488,21 @@ impl EquivariantLinear {
     }
 
     /// Weight part of the forward pass split across `workers` threads by
-    /// contiguous runs of schedule subtrees (the §5 parallelism-across-
-    /// terms observation, lifted to the DAG: subtrees share no nodes, so
-    /// each worker keeps full prefix reuse inside its slice with no shared
-    /// mutable state); partial sums are reduced on the calling thread.
+    /// **cost-weighted** groups of schedule subtrees (the §5 parallelism-
+    /// across-terms observation, lifted to the DAG: subtrees share no
+    /// nodes, so each worker keeps full node reuse inside its slice with no
+    /// shared mutable state). [`LayerSchedule::cost_partitions`] balances
+    /// the cost-model work (LPT over subtree flops/bytes) instead of the
+    /// old even chunking, so one dominant subtree no longer serialises a
+    /// worker span; partial sums are reduced on the calling thread.
     fn forward_subtrees_parallel(&self, v: &Tensor, workers: usize) -> Result<Tensor> {
         self.check_input(v)?;
-        let subtrees = self.schedule.subtrees();
-        let chunk = subtrees.len().div_ceil(workers.max(1)).max(1);
-        let slices: Vec<&[Vec<usize>]> = subtrees.chunks(chunk).collect();
-        let partials = parallel_map(&slices, slices.len(), |trees| -> Result<Tensor> {
+        let parts = self.schedule.cost_partitions(workers);
+        let partials = parallel_map(&parts, parts.len(), |classes| -> Result<Tensor> {
             let mut partial = Tensor::zeros(self.n, self.l);
             let mut arena = PooledArena::get();
-            for tree in *trees {
-                self.schedule
-                    .execute_subset(v, &self.coeffs, tree, &mut partial, &mut arena)?;
-            }
+            self.schedule
+                .execute_subset(v, &self.coeffs, classes, &mut partial, &mut arena)?;
             Ok(partial)
         });
         let mut out = Tensor::zeros(self.n, self.l);
@@ -494,6 +510,65 @@ impl EquivariantLinear {
             out.axpy(1.0, &p?);
         }
         Ok(out)
+    }
+
+    /// Single-item backward fanned out across workers by cost-weighted
+    /// term partitions of the transposed schedule
+    /// ([`LayerSchedule::cost_term_partitions`]): each worker walks its own
+    /// term set with its own pooled arena (full node reuse inside the
+    /// partition), accumulating local coefficient gradients and a local
+    /// input-gradient partial; both are reduced on the calling thread.
+    fn backward_terms_parallel(
+        &self,
+        v: &Tensor,
+        g: &Tensor,
+        grads: &mut LayerGrads,
+        workers: usize,
+    ) -> Result<Tensor> {
+        self.check_input(v)?;
+        let parts = self.backward_schedule.cost_term_partitions(workers);
+        let partials = parallel_map(
+            &parts,
+            parts.len(),
+            |terms| -> Result<(Tensor, Vec<f64>)> {
+                let mut local_gv = Tensor::zeros(self.n, self.k);
+                let mut local_coeffs = vec![0.0; self.coeffs.len()];
+                let mut arena = PooledArena::get();
+                self.backward_schedule
+                    .execute_map_subset(g, terms, &mut arena, |i, bt| {
+                        let sign = self.terms[i].adjoint_sign;
+                        local_coeffs[i] += sign * bt.dot(v);
+                        let lambda = self.coeffs[i];
+                        if lambda != 0.0 {
+                            local_gv.axpy(lambda * sign, bt);
+                        }
+                        Ok(())
+                    })?;
+                Ok((local_gv, local_coeffs))
+            },
+        );
+        let mut grad_v = Tensor::zeros(self.n, self.k);
+        for part in partials {
+            let (gv, coeffs) = part?;
+            grad_v.axpy(1.0, &gv);
+            for (a, b) in grads.coeffs.iter_mut().zip(&coeffs) {
+                *a += b;
+            }
+        }
+        self.accumulate_bias_grads(g, grads)?;
+        Ok(grad_v)
+    }
+
+    /// Bias-diagram gradients `∂L/∂μ_j = sign_j · ⟨F(bᵀ) g, 1⟩`,
+    /// accumulated into `grads` — shared by the sequential and the
+    /// term-parallel backward paths.
+    fn accumulate_bias_grads(&self, g: &Tensor, grads: &mut LayerGrads) -> Result<()> {
+        let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+        for (j, term) in self.bias_terms.iter().enumerate() {
+            let bt = term.backward.apply(g)?; // order-0 scalar
+            grads.bias_coeffs[j] += term.adjoint_sign * bt.dot(&one);
+        }
+        Ok(())
     }
 
     /// The batch-shared bias tensor `Σ μ_b F(b)(1)`, or `None` when the
@@ -527,11 +602,7 @@ impl EquivariantLinear {
             }
             Ok(())
         })?;
-        let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
-        for (j, term) in self.bias_terms.iter().enumerate() {
-            let bt = term.backward.apply(g)?; // order-0 scalar
-            grads.bias_coeffs[j] += term.adjoint_sign * bt.dot(&one);
-        }
+        self.accumulate_bias_grads(g, grads)?;
         Ok(grad_v)
     }
 
@@ -786,7 +857,7 @@ mod tests {
     }
 
     #[test]
-    fn forward_matches_per_term_reference_bitwise() {
+    fn forward_matches_per_term_reference() {
         let mut rng = Rng::new(82);
         for group in [
             Group::Symmetric,
@@ -800,12 +871,30 @@ mod tests {
             let v = Tensor::random(n, 2, &mut rng);
             let fused = layer.forward(&v).unwrap();
             let reference = layer.forward_per_term(&v).unwrap();
+            // ≤ 1e-12, not bitwise: the folded classes reassociate the
+            // per-term additions into each output element.
             assert!(
-                fused.allclose(&reference, 0.0),
-                "group {group}: fused forward diverges by {}",
+                fused.allclose(&reference, 1e-12),
+                "group {group}: folded forward diverges by {}",
                 fused.max_abs_diff(&reference)
             );
+            // …but the folded path itself is run-to-run bitwise stable.
+            let again = layer.forward(&v).unwrap();
+            assert!(fused.allclose(&again, 0.0), "group {group}: unstable");
         }
+    }
+
+    #[test]
+    fn schedule_stats_report_folding() {
+        let mut rng = Rng::new(85);
+        let layer =
+            EquivariantLinear::new(Group::Orthogonal, 4, 3, 3, Init::Normal(0.5), &mut rng)
+                .unwrap();
+        let stats = layer.schedule_stats();
+        assert_eq!(stats.terms, layer.coeffs.len());
+        assert!(stats.classes < stats.terms, "expected λ-folding: {stats:?}");
+        assert!(stats.executed_ops() < stats.executed_ops_prefix());
+        assert!(stats.estimated_flops > 0 && stats.estimated_bytes > 0);
     }
 
     #[test]

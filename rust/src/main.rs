@@ -246,6 +246,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         snap.plan_cache_hits,
         snap.plan_cache_misses
     );
+    println!(
+        "planner: {} nodes / {} classes compiled (est {} flops, {} bytes per forward)  \
+         executed nodes {}  scatter passes {}",
+        snap.schedule_nodes,
+        snap.schedule_classes,
+        snap.schedule_estimated_flops,
+        snap.schedule_estimated_bytes,
+        snap.executed_nodes,
+        snap.scatter_passes
+    );
     handle.shutdown();
     Ok(())
 }

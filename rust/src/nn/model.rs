@@ -138,9 +138,11 @@ impl EquivariantNet {
         self.layers.iter().map(|l| l.num_params()).sum()
     }
 
-    /// Aggregate fused-schedule statistics over every layer: how many
-    /// interior ops the DAG compilation shares per forward pass across the
-    /// whole network (reported by the benches and the serving metrics).
+    /// Aggregate folded-schedule statistics over every layer: interior ops
+    /// shared by global CSE, scatter passes saved by λ-class folding
+    /// (`classes` vs `terms`), and the cost model's flops/bytes estimate of
+    /// one full forward pass across the whole network (reported by the
+    /// benches and the serving metrics).
     pub fn schedule_stats(&self) -> ScheduleStats {
         let mut total = ScheduleStats::default();
         for layer in &self.layers {

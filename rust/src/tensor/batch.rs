@@ -21,7 +21,10 @@
 //! `docs/batched_execution.md`.
 
 use super::index::flat_index;
-use super::ops::{group_diag_offsets, permute_block_map, scatter_diag_dsts, signed_permutations};
+use super::ops::{
+    group_diag_offsets, permute_block_map, permute_dst_map, scatter_diag_dsts,
+    signed_permutations,
+};
 use super::Tensor;
 use crate::error::{Error, Result};
 
@@ -344,6 +347,72 @@ impl BatchTensor {
         }
     }
 
+    /// Batched [`Tensor::axpy_permuted_multi_into`]: one destination map
+    /// per pattern, built once and replayed over every item. Per item the
+    /// arithmetic (source-major, pattern-inner) is exactly that of the
+    /// per-item multi kernel, so batched folded-class execution stays
+    /// bitwise identical per item to the per-item folded walk.
+    pub fn axpy_permuted_multi_into(&self, pats: &[(&[usize], f64)], out: &mut BatchTensor) {
+        self.check_like(out, self.order);
+        if pats.is_empty() {
+            return;
+        }
+        let maps: Vec<Vec<usize>> = pats
+            .iter()
+            .map(|(axes, _)| permute_dst_map(self.n, self.order, axes))
+            .collect();
+        let len = self.item_len();
+        for b in 0..self.batch {
+            let src = &self.data[b * len..(b + 1) * len];
+            let dst = &mut out.data[b * len..(b + 1) * len];
+            for (s, &x) in src.iter().enumerate() {
+                for (map, &(_, alpha)) in maps.iter().zip(pats) {
+                    dst[map[s]] += alpha * x;
+                }
+            }
+        }
+    }
+
+    /// Batched [`Tensor::scatter_broadcast_diagonals_multi_axpy`]: one
+    /// diagonal-support destination map per pattern, shared by every item.
+    /// Per item the visit order (rep-major, source-inner, pattern-inner)
+    /// matches the per-item multi kernel exactly.
+    pub fn scatter_broadcast_diagonals_multi_axpy(
+        &self,
+        lead_groups: &[usize],
+        tail_groups: &[usize],
+        pats: &[(&[usize], f64)],
+        out: &mut BatchTensor,
+    ) {
+        assert_eq!(tail_groups.len(), self.order);
+        if pats.is_empty() {
+            return;
+        }
+        let total: usize = lead_groups.iter().sum::<usize>() + tail_groups.iter().sum::<usize>();
+        assert_eq!(out.order, total);
+        assert_eq!(out.n, self.n);
+        assert_eq!(out.batch, self.batch);
+        let maps: Vec<Vec<usize>> = pats
+            .iter()
+            .map(|(axes, _)| scatter_diag_dsts(self.n, lead_groups, tail_groups, axes))
+            .collect();
+        let tail_len = self.item_len();
+        let reps = maps[0].len() / tail_len;
+        let olen = out.item_len();
+        for b in 0..self.batch {
+            let src = &self.data[b * tail_len..(b + 1) * tail_len];
+            let dst = &mut out.data[b * olen..(b + 1) * olen];
+            for r in 0..reps {
+                let base = r * tail_len;
+                for (s, &x) in src.iter().enumerate() {
+                    for (map, &(_, alpha)) in maps.iter().zip(pats) {
+                        dst[map[base + s]] += alpha * x;
+                    }
+                }
+            }
+        }
+    }
+
     /// Batched [`Tensor::scatter_broadcast_diagonals_axpy`]: the
     /// diagonal-support destination offsets are computed once; each item is
     /// then a blocked axpy over `B · n^{t+d}` contiguous source lanes.
@@ -505,6 +574,39 @@ mod tests {
                 t.scatter_broadcast_diagonals_axpy(&lead, &tail, &axes, 0.5, &mut want);
                 assert_eq!(got.item(b), want.data.as_slice(), "lead {lead:?} tail {tail:?}");
             }
+        }
+    }
+
+    /// The batched multi-pattern kernels must match their per-item multi
+    /// counterparts bitwise on every item (same source-major, pattern-inner
+    /// visit order, shared index maps).
+    #[test]
+    fn batched_multi_kernels_match_per_item_bitwise() {
+        let mut rng = Rng::new(1005);
+        let (items, packed) = random_batch(3, 3, 4, &mut rng);
+        let a1 = vec![2usize, 0, 1];
+        let a2 = vec![1usize, 2, 0];
+        let pats: Vec<(&[usize], f64)> = vec![(&a1, 0.5), (&a2, -1.5)];
+        let mut got = BatchTensor::zeros(3, 3, 4);
+        packed.axpy_permuted_multi_into(&pats, &mut got);
+        for (b, t) in items.iter().enumerate() {
+            let mut want = Tensor::zeros(3, 3);
+            t.axpy_permuted_multi_into(&pats, &mut want);
+            assert_eq!(got.item(b), want.data.as_slice());
+        }
+
+        let (lead, tail) = (vec![2usize], vec![1usize, 1]);
+        let total = 4usize;
+        let s1: Vec<usize> = (0..total).collect();
+        let s2: Vec<usize> = (0..total).rev().collect();
+        let spats: Vec<(&[usize], f64)> = vec![(&s1, 0.25), (&s2, 2.0)];
+        let (sitems, spacked) = random_batch(2, tail.len(), 3, &mut rng);
+        let mut got = BatchTensor::zeros(2, total, 3);
+        spacked.scatter_broadcast_diagonals_multi_axpy(&lead, &tail, &spats, &mut got);
+        for (b, t) in sitems.iter().enumerate() {
+            let mut want = Tensor::zeros(2, total);
+            t.scatter_broadcast_diagonals_multi_axpy(&lead, &tail, &spats, &mut want);
+            assert_eq!(got.item(b), want.data.as_slice(), "item {b}");
         }
     }
 

@@ -437,6 +437,82 @@ impl Tensor {
         }
     }
 
+    /// Multi-pattern [`Tensor::axpy_permuted_into`]: one pass over the
+    /// source applying every `(axes, alpha)` pattern at once —
+    /// `out += Σ_p alpha_p · permute_axes(self, axes_p)`. The folded-class
+    /// closing kernel for pure-permutation spanning terms: the source is
+    /// read once and the odometer digits are shared across the patterns
+    /// (each pattern only carries its own per-axis destination strides), so
+    /// a class of `P` patterns costs one scatter pass, not `P`.
+    ///
+    /// Per destination element the contributions arrive in source order
+    /// (not pattern-major), so a multi-pattern pass may round differently
+    /// from `P` sequential single-pattern passes — equal to ≤ 1e-12, not
+    /// bitwise.
+    pub fn axpy_permuted_multi_into(&self, pats: &[(&[usize], f64)], out: &mut Tensor) {
+        assert_eq!(out.order, self.order);
+        assert_eq!(out.n, self.n);
+        if pats.is_empty() {
+            return;
+        }
+        let n = self.n;
+        let order = self.order;
+        if order == 0 {
+            for &(_, alpha) in pats {
+                out.data[0] += alpha * self.data[0];
+            }
+            return;
+        }
+        // Per pattern: destination stride of each *source* axis. Walking the
+        // source row-major, incrementing source digit `a` moves pattern p's
+        // destination by `pstride[p][a]`.
+        let mut out_stride = vec![0usize; order];
+        {
+            let mut s = 1usize;
+            for q in (0..order).rev() {
+                out_stride[q] = s;
+                s *= n;
+            }
+        }
+        let pstrides: Vec<Vec<usize>> = pats
+            .iter()
+            .map(|(axes, _)| {
+                assert_eq!(axes.len(), order);
+                let mut ps = vec![0usize; order];
+                for (q, &a) in axes.iter().enumerate() {
+                    ps[a] = out_stride[q];
+                }
+                ps
+            })
+            .collect();
+        let mut idx = vec![0usize; order];
+        let mut dsts = vec![0usize; pats.len()];
+        for src in 0..self.data.len() {
+            let x = self.data[src];
+            for (p, &(_, alpha)) in pats.iter().enumerate() {
+                out.data[dsts[p]] += alpha * x;
+            }
+            let mut a = order;
+            loop {
+                if a == 0 {
+                    break;
+                }
+                a -= 1;
+                idx[a] += 1;
+                for (d, ps) in dsts.iter_mut().zip(&pstrides) {
+                    *d += ps[a];
+                }
+                if idx[a] < n {
+                    break;
+                }
+                idx[a] = 0;
+                for (d, ps) in dsts.iter_mut().zip(&pstrides) {
+                    *d -= n * ps[a];
+                }
+            }
+        }
+    }
+
     /// Fused S_n/O(n)/SO(n) Step-3: broadcast `lead_groups.len()` free
     /// leading block indices AND embed the compact tensor on the per-group
     /// diagonals, in one allocation and one scatter:
@@ -607,6 +683,119 @@ impl Tensor {
                 }
                 lead_idx[g] = 0;
                 lead_off -= n * gstride[g];
+            }
+        }
+    }
+
+    /// Multi-pattern [`Tensor::scatter_broadcast_diagonals_axpy`]: apply a
+    /// whole *class* of diagonal-support scatter patterns — same
+    /// `(lead_groups, tail_groups)` shape, different output permutations
+    /// `axes_p` and weights `alpha_p` — in **one** pass over the compact
+    /// source. The shared `(lead, tail)` odometer is walked once; each
+    /// pattern carries only its own per-group destination strides. This is
+    /// the folded-class hot path: `P` spanning terms that differ only in
+    /// `σ_l` cost one scatter pass instead of `P`.
+    ///
+    /// Per destination element the contributions arrive in source order,
+    /// so a class pass may round differently from `P` sequential
+    /// single-pattern passes (≤ 1e-12, not bitwise).
+    pub fn scatter_broadcast_diagonals_multi_axpy(
+        &self,
+        lead_groups: &[usize],
+        tail_groups: &[usize],
+        pats: &[(&[usize], f64)],
+        out: &mut Tensor,
+    ) {
+        assert_eq!(tail_groups.len(), self.order);
+        if pats.is_empty() {
+            return;
+        }
+        let n = self.n;
+        let total: usize = lead_groups.iter().sum::<usize>() + tail_groups.iter().sum::<usize>();
+        assert_eq!(out.order, total);
+        assert_eq!(out.n, n);
+        let t = lead_groups.len();
+        let d = tail_groups.len();
+        let mut out_stride = vec![0usize; total];
+        {
+            let mut s = 1usize;
+            for p in (0..total).rev() {
+                out_stride[p] = s;
+                s *= n;
+            }
+        }
+        // Per pattern: per-compact-axis destination strides (sum of the
+        // permuted output strides of the planar axes in each group).
+        let gstrides: Vec<Vec<usize>> = pats
+            .iter()
+            .map(|(axes, _)| {
+                assert_eq!(axes.len(), total);
+                let mut planar = vec![0usize; total];
+                for (p, &a) in axes.iter().enumerate() {
+                    planar[a] = out_stride[p];
+                }
+                let mut gs = vec![0usize; t + d];
+                let mut a = 0usize;
+                for (g, &size) in lead_groups.iter().chain(tail_groups.iter()).enumerate() {
+                    for _ in 0..size {
+                        gs[g] += planar[a];
+                        a += 1;
+                    }
+                }
+                gs
+            })
+            .collect();
+        let reps = n.pow(t as u32);
+        let tail_len = self.data.len();
+        let np = pats.len();
+        let mut lead_idx = vec![0usize; t];
+        let mut lead_offs = vec![0usize; np];
+        let mut tail_idx = vec![0usize; d];
+        let mut dsts = vec![0usize; np];
+        for _ in 0..reps {
+            tail_idx.fill(0);
+            dsts.copy_from_slice(&lead_offs);
+            for src in 0..tail_len {
+                let x = self.data[src];
+                for (p, &(_, alpha)) in pats.iter().enumerate() {
+                    out.data[dsts[p]] += alpha * x;
+                }
+                let mut g = d;
+                loop {
+                    if g == 0 {
+                        break;
+                    }
+                    g -= 1;
+                    tail_idx[g] += 1;
+                    for (dst, gs) in dsts.iter_mut().zip(&gstrides) {
+                        *dst += gs[t + g];
+                    }
+                    if tail_idx[g] < n {
+                        break;
+                    }
+                    tail_idx[g] = 0;
+                    for (dst, gs) in dsts.iter_mut().zip(&gstrides) {
+                        *dst -= n * gs[t + g];
+                    }
+                }
+            }
+            let mut g = t;
+            loop {
+                if g == 0 {
+                    break;
+                }
+                g -= 1;
+                lead_idx[g] += 1;
+                for (off, gs) in lead_offs.iter_mut().zip(&gstrides) {
+                    *off += gs[g];
+                }
+                if lead_idx[g] < n {
+                    break;
+                }
+                lead_idx[g] = 0;
+                for (off, gs) in lead_offs.iter_mut().zip(&gstrides) {
+                    *off -= n * gs[g];
+                }
             }
         }
     }
@@ -802,6 +991,52 @@ pub(crate) fn group_diag_offsets(n: usize, order: usize, groups: &[usize]) -> Ve
         }
     }
     offs
+}
+
+/// The destination offsets of a permuted axpy in **source** order:
+/// `map[s]` is where source element `s` lands in the output under
+/// `axes` (numpy-transpose semantics, as in [`Tensor::permute_axes`]).
+/// The batched multi-pattern axpy replays this map over every item of a
+/// batch, one map per pattern.
+pub(crate) fn permute_dst_map(n: usize, order: usize, axes: &[usize]) -> Vec<usize> {
+    assert_eq!(axes.len(), order);
+    let len = n.pow(order as u32);
+    if order == 0 {
+        return vec![0];
+    }
+    let mut out_stride = vec![0usize; order];
+    {
+        let mut s = 1usize;
+        for q in (0..order).rev() {
+            out_stride[q] = s;
+            s *= n;
+        }
+    }
+    let mut pstride = vec![0usize; order];
+    for (q, &a) in axes.iter().enumerate() {
+        pstride[a] = out_stride[q];
+    }
+    let mut map = Vec::with_capacity(len);
+    let mut idx = vec![0usize; order];
+    let mut dst = 0usize;
+    for _ in 0..len {
+        map.push(dst);
+        let mut a = order;
+        loop {
+            if a == 0 {
+                break;
+            }
+            a -= 1;
+            idx[a] += 1;
+            dst += pstride[a];
+            if idx[a] < n {
+                break;
+            }
+            idx[a] = 0;
+            dst -= n * pstride[a];
+        }
+    }
+    map
 }
 
 /// The diagonal-support scatter order of
@@ -1111,6 +1346,91 @@ mod tests {
         let mut out = stale(want.order);
         t3.levi_civita_contract_trailing_into(1, &mut out);
         assert!(out.allclose(&want, 0.0));
+    }
+
+    #[test]
+    fn axpy_permuted_multi_matches_sequential_passes() {
+        let mut rng = Rng::new(46);
+        let t = Tensor::random(3, 3, &mut rng);
+        let a1 = vec![2usize, 0, 1];
+        let a2 = vec![1usize, 2, 0];
+        let a3 = vec![0usize, 1, 2];
+        let mut want = Tensor::random(3, 3, &mut rng);
+        let mut got = want.clone();
+        t.axpy_permuted_into(0.5, &a1, &mut want);
+        t.axpy_permuted_into(-1.25, &a2, &mut want);
+        t.axpy_permuted_into(2.0, &a3, &mut want);
+        t.axpy_permuted_multi_into(&[(&a1, 0.5), (&a2, -1.25), (&a3, 2.0)], &mut got);
+        assert!(
+            want.allclose(&got, 1e-12),
+            "multi axpy diverges by {}",
+            want.max_abs_diff(&got)
+        );
+        // A single-pattern class is bitwise identical to the single kernel.
+        let mut a = Tensor::zeros(3, 3);
+        let mut b = Tensor::zeros(3, 3);
+        t.axpy_permuted_into(0.7, &a1, &mut a);
+        t.axpy_permuted_multi_into(&[(&a1, 0.7)], &mut b);
+        assert!(a.allclose(&b, 0.0));
+        // Empty class and order-0 both work.
+        t.axpy_permuted_multi_into(&[], &mut b);
+        assert!(a.allclose(&b, 0.0));
+        let s = Tensor::from_vec(3, 0, vec![2.0]).unwrap();
+        let mut o = Tensor::from_vec(3, 0, vec![1.0]).unwrap();
+        let e: Vec<usize> = Vec::new();
+        s.axpy_permuted_multi_into(&[(&e[..], 3.0), (&e[..], 1.0)], &mut o);
+        assert_eq!(o.data[0], 9.0);
+    }
+
+    #[test]
+    fn scatter_multi_matches_sequential_passes() {
+        let mut rng = Rng::new(47);
+        for (lead, tail) in [
+            (vec![2usize, 1], vec![1usize, 2]),
+            (vec![], vec![2, 2]),
+            (vec![2], vec![]),
+            (vec![], vec![1, 1]),
+        ] {
+            let n = 2;
+            let total: usize = lead.iter().sum::<usize>() + tail.iter().sum::<usize>();
+            let x = Tensor::random(n, tail.len(), &mut rng);
+            let a1: Vec<usize> = (0..total).collect();
+            let a2: Vec<usize> = (0..total).rev().collect();
+            let mut want = Tensor::random(n, total, &mut rng);
+            let mut got = want.clone();
+            x.scatter_broadcast_diagonals_axpy(&lead, &tail, &a1, 0.4, &mut want);
+            x.scatter_broadcast_diagonals_axpy(&lead, &tail, &a2, -0.9, &mut want);
+            x.scatter_broadcast_diagonals_multi_axpy(
+                &lead,
+                &tail,
+                &[(&a1, 0.4), (&a2, -0.9)],
+                &mut got,
+            );
+            assert!(
+                want.allclose(&got, 1e-12),
+                "lead {lead:?} tail {tail:?}: diff {}",
+                want.max_abs_diff(&got)
+            );
+            // Single-pattern class is bitwise identical.
+            let mut a = Tensor::zeros(n, total);
+            let mut b = Tensor::zeros(n, total);
+            x.scatter_broadcast_diagonals_axpy(&lead, &tail, &a2, 1.5, &mut a);
+            x.scatter_broadcast_diagonals_multi_axpy(&lead, &tail, &[(&a2, 1.5)], &mut b);
+            assert!(a.allclose(&b, 0.0), "lead {lead:?} tail {tail:?}");
+        }
+    }
+
+    #[test]
+    fn permute_dst_map_matches_permute() {
+        let mut rng = Rng::new(48);
+        let t = Tensor::random(3, 4, &mut rng);
+        let axes = [2usize, 0, 3, 1];
+        let map = permute_dst_map(3, 4, &axes);
+        let p = t.permute_axes(&axes);
+        for (s, &d) in map.iter().enumerate() {
+            assert_eq!(p.data[d], t.data[s]);
+        }
+        assert_eq!(permute_dst_map(3, 0, &[]), vec![0]);
     }
 
     #[test]

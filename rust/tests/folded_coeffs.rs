@@ -1,0 +1,134 @@
+//! λ-coefficient folding must never go stale: the folded class structure
+//! lives in the shape-keyed `PlanCache` entry (weight-independent), while
+//! the coefficients are gathered from the layer's own `coeffs` on every
+//! execute. These tests mutate weights in place (a real SGD step), re-run
+//! forward/backward, and assert the folded path still matches the per-term
+//! reference to ≤ 1e-12 — and that two same-shape layers sharing one
+//! compiled schedule produce independent, correct outputs. All four groups.
+
+use equidiag::fastmult::Group;
+use equidiag::layer::{transpose_sign, EquivariantLinear, Init};
+use equidiag::tensor::Tensor;
+use equidiag::util::Rng;
+use std::sync::Arc;
+
+const GROUPS: [Group; 4] = [
+    Group::Symmetric,
+    Group::Orthogonal,
+    Group::SpecialOrthogonal,
+    Group::Symplectic,
+];
+
+fn dim_for(group: Group) -> usize {
+    if group == Group::Symplectic {
+        4
+    } else {
+        3
+    }
+}
+
+/// One SGD step on `L = ½‖forward(v)‖²`, mutating the layer's coefficient
+/// buffers in place (exactly what `nn::train` does between forwards).
+fn train_step(layer: &mut EquivariantLinear, v: &Tensor, lr: f64) {
+    let out = layer.forward(v).unwrap();
+    let mut grads = layer.zero_grads();
+    layer.backward(v, &out, &mut grads).unwrap();
+    for (c, g) in layer.coeffs.iter_mut().zip(&grads.coeffs) {
+        *c -= lr * g;
+    }
+    for (c, g) in layer.bias_coeffs.iter_mut().zip(&grads.bias_coeffs) {
+        *c -= lr * g;
+    }
+}
+
+#[test]
+fn folded_path_tracks_in_place_weight_updates() {
+    let mut rng = Rng::new(0xF01D);
+    for group in GROUPS {
+        let n = dim_for(group);
+        let mut layer =
+            EquivariantLinear::new(group, n, 2, 2, Init::Normal(0.5), &mut rng).unwrap();
+        let v = Tensor::random(n, 2, &mut rng);
+        // Pre-update agreement (sanity).
+        let before = layer.forward(&v).unwrap();
+        assert!(before.allclose(&layer.forward_per_term(&v).unwrap(), 1e-12));
+        // Mutate every coefficient in place via a real train step…
+        train_step(&mut layer, &v, 0.05);
+        // …and the folded walk must see the new weights immediately: the
+        // class structure is weight-independent, the λ-gather is per-call.
+        let fused = layer.forward(&v).unwrap();
+        let reference = layer.forward_per_term(&v).unwrap();
+        assert!(
+            fused.allclose(&reference, 1e-12),
+            "{group}: stale folded coefficients after in-place update, diff {}",
+            fused.max_abs_diff(&reference)
+        );
+        assert!(
+            fused.max_abs_diff(&before) > 0.0,
+            "{group}: the train step should have changed the output"
+        );
+        // Backward after the update matches the per-term transposed-plan
+        // reference too.
+        let g = Tensor::random(n, 2, &mut rng);
+        let mut grads = layer.zero_grads();
+        let grad_v = layer.backward(&v, &g, &mut grads).unwrap();
+        let cache = equidiag::fastmult::PlanCache::global();
+        let mut want_gv = Tensor::zeros(n, 2);
+        for (i, d) in layer.diagrams().enumerate() {
+            let plan = cache.get_or_build(group, &d.transpose(), n).unwrap();
+            let bt = plan.apply(&g).unwrap();
+            let sign = transpose_sign(group, d, n);
+            assert!(
+                (grads.coeffs[i] - sign * bt.dot(&v)).abs() <= 1e-12,
+                "{group} coeff {i}: stale backward gradient"
+            );
+            if layer.coeffs[i] != 0.0 {
+                want_gv.axpy(layer.coeffs[i] * sign, &bt);
+            }
+        }
+        assert!(
+            grad_v.allclose(&want_gv, 1e-12),
+            "{group}: input gradient diverges by {}",
+            grad_v.max_abs_diff(&want_gv)
+        );
+    }
+}
+
+#[test]
+fn shared_schedule_layers_keep_independent_weights() {
+    let mut rng = Rng::new(0xF02D);
+    for group in GROUPS {
+        let n = dim_for(group);
+        let a = EquivariantLinear::new(group, n, 2, 2, Init::Normal(0.5), &mut rng).unwrap();
+        let mut b = EquivariantLinear::new(group, n, 2, 2, Init::Normal(0.5), &mut rng).unwrap();
+        // Same shape ⇒ one compiled schedule, shared through the global
+        // PlanCache.
+        assert!(
+            Arc::ptr_eq(a.schedule(), b.schedule()),
+            "{group}: same-shape layers must share one schedule"
+        );
+        // Give b distinctly different weights and check both layers still
+        // match their own per-term references (the shared structure holds
+        // no coefficients).
+        for c in b.coeffs.iter_mut() {
+            *c = -2.0 * *c + 0.125;
+        }
+        let v = Tensor::random(n, 2, &mut rng);
+        let fa = a.forward(&v).unwrap();
+        let fb = b.forward(&v).unwrap();
+        assert!(
+            fa.allclose(&a.forward_per_term(&v).unwrap(), 1e-12),
+            "{group}: layer a diverges from its reference"
+        );
+        assert!(
+            fb.allclose(&b.forward_per_term(&v).unwrap(), 1e-12),
+            "{group}: layer b diverges from its reference"
+        );
+        if a.coeffs.iter().any(|&c| c != 0.0) {
+            assert!(
+                fa.max_abs_diff(&fb) > 0.0,
+                "{group}: different weights must give different outputs"
+            );
+        }
+    }
+}

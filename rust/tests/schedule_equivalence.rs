@@ -1,8 +1,11 @@
-//! Property tests for the fused execution schedule: for all four groups and
-//! random shapes up to the seed test sizes, schedule execution must be
+//! Property tests for the folded execution schedule: for all four groups
+//! and random shapes up to the seed test sizes, schedule execution must be
 //! (a) accumulation-order-stable — repeated runs are bitwise identical —
 //! and (b) numerically equal (≤ 1e-12) to the per-term reference path, for
-//! forward and backward, single and batched.
+//! forward and backward, single and batched. (The folded class walk
+//! reassociates per-term additions, so fused-vs-per-term is a 1e-12 bound,
+//! not bitwise; the per-term tensors of the backward map walk stay
+//! bitwise.)
 
 use equidiag::fastmult::{Group, PlanCache, ScratchArena};
 use equidiag::layer::{transpose_sign, EquivariantLinear, Init};
@@ -33,14 +36,15 @@ fn random_shape(group: Group, rng: &mut Rng) -> (usize, usize, usize) {
     (n, k, l)
 }
 
-/// Property: the fused forward equals the per-term reference **bitwise**
-/// (same accumulation order, same primitive arithmetic), and re-running it
-/// is bitwise stable.
+/// Property: the folded forward equals the per-term reference to ≤ 1e-12
+/// (class folding reassociates additions, nothing more), re-running it is
+/// bitwise stable, and the compile-time stats never regress against the
+/// prefix-sharing baseline.
 #[test]
-fn prop_fused_forward_is_bitwise_stable_and_equal_to_per_term() {
+fn prop_folded_forward_is_stable_and_equal_to_per_term() {
     check(
         Config::default().cases(32).seed(0x5CED0),
-        "schedule forward == per-term forward (bitwise)",
+        "schedule forward == per-term forward (1e-12, bitwise-stable)",
         |rng| {
             let group = random_group(rng);
             let (n, k, l) = random_shape(group, rng);
@@ -49,9 +53,9 @@ fn prop_fused_forward_is_bitwise_stable_and_equal_to_per_term() {
             let v = Tensor::random(n, k, rng);
             let fused = layer.forward(&v).map_err(|e| e.to_string())?;
             let reference = layer.forward_per_term(&v).map_err(|e| e.to_string())?;
-            if fused.max_abs_diff(&reference) != 0.0 {
+            if !fused.allclose(&reference, 1e-12) {
                 return Err(format!(
-                    "group {group} n={n} ({k},{l}): fused differs from per-term by {}",
+                    "group {group} n={n} ({k},{l}): folded differs from per-term by {}",
                     fused.max_abs_diff(&reference)
                 ));
             }
@@ -59,6 +63,18 @@ fn prop_fused_forward_is_bitwise_stable_and_equal_to_per_term() {
             if fused.max_abs_diff(&again) != 0.0 {
                 return Err(format!(
                     "group {group} n={n} ({k},{l}): forward is not run-to-run stable"
+                ));
+            }
+            let stats = layer.schedule_stats();
+            if stats.nodes > stats.prefix_nodes {
+                return Err(format!(
+                    "group {group} n={n} ({k},{l}): global CSE produced more nodes \
+                     than prefix sharing: {stats:?}"
+                ));
+            }
+            if stats.classes > stats.terms {
+                return Err(format!(
+                    "group {group} n={n} ({k},{l}): more classes than terms: {stats:?}"
                 ));
             }
             Ok(())
@@ -241,11 +257,12 @@ fn steady_state_forward_is_allocation_free() {
             warm,
             "group {group}: steady-state forward allocated"
         );
-        // Per-term reference agrees, so the allocation-free path is also
-        // the correct one.
+        // Per-term reference agrees (≤ 1e-12 — the folded walk
+        // reassociates), so the allocation-free path is also the correct
+        // one.
         let want = layer.forward_per_term(&v).unwrap();
         assert!(
-            out.allclose(&want, 0.0),
+            out.allclose(&want, 1e-12),
             "group {group}: diff {}",
             out.max_abs_diff(&want)
         );
