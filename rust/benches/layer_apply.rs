@@ -16,13 +16,16 @@
 //! counters, sharing ratios), `BENCH_planner.json` (the folded planner's
 //! executed-node / scatter-pass counts vs the prefix-sharing path, cost
 //! model estimates, fold ratios — with the per-config invariants asserted
-//! before anything is timed) and `BENCH_batch.json` (batch-axis fused
-//! execution vs the item-parallel and per-term paths) with stable schemas
-//! so the perf trajectory is machine-readable. Set `BENCH_FAST=1` for the
-//! CI smoke mode: smaller budgets, the fused-vs-per-term, planner and
-//! fused-batch sections and the JSONs only.
+//! before anything is timed), `BENCH_fusion.json` (strided fusion:
+//! estimated + measured bytes moved by the fused gather-contract walk vs
+//! the unfused materialized-permute walk, with the ≥ 30% byte-drop and
+//! bitwise-equality invariants asserted) and `BENCH_batch.json` (batch-axis
+//! fused execution vs the item-parallel and per-term paths) with stable
+//! schemas so the perf trajectory is machine-readable. Set `BENCH_FAST=1`
+//! for the CI smoke mode: smaller budgets, the fused-vs-per-term, planner,
+//! fusion and fused-batch sections and the JSONs only.
 
-use equidiag::fastmult::{exec_stats, matrix_mult, Group, ScratchArena};
+use equidiag::fastmult::{exec_stats, matrix_mult, Group, LayerSchedule, ScratchArena};
 use equidiag::layer::{spanning_plans, EquivariantLinear, Init};
 use equidiag::tensor::Tensor;
 use equidiag::util::{bench_median, max_threads, parallel_map, Rng, Table};
@@ -379,6 +382,217 @@ fn write_planner_json(path: &str, rows: &[PlannerRow]) {
     }
 }
 
+struct FusionRow {
+    group: &'static str,
+    n: usize,
+    k: usize,
+    l: usize,
+    terms: usize,
+    fused_nodes: usize,
+    est_bytes_unfused: u128,
+    est_bytes_fused: u128,
+    est_drop: f64,
+    measured_bytes_unfused: u64,
+    measured_bytes_fused: u64,
+    measured_drop: f64,
+    unfused_us: f64,
+    fused_us: f64,
+    speedup: f64,
+}
+
+/// Strided fusion: the fused compile (permutes folded into gather-contract
+/// kernels) against [`LayerSchedule::compile_unfused`] on configs whose
+/// chains contain a non-identity permute feeding a contraction. Asserts,
+/// per config: fusion fired, estimated flops unchanged, estimated *and*
+/// measured bytes moved strictly below the unfused walk (≥ 30% lower —
+/// these shapes are permute-dominated), and the two walks bitwise equal.
+/// Measured deltas come from the process-wide `exec_stats().bytes_moved`
+/// counter (single-threaded here, so exact). Emits `BENCH_fusion.json`.
+fn fusion_section(budget: Duration, rng: &mut Rng) -> Vec<FusionRow> {
+    println!("\nstrided fusion: gather-contract kernels vs materialized permutes:");
+    let mut table = Table::new(vec![
+        "group",
+        "n",
+        "(k,l)",
+        "terms",
+        "fused nodes",
+        "est bytes (unfused)",
+        "measured bytes (unfused)",
+        "speedup",
+    ]);
+    let configs: &[(Group, usize, usize, usize)] = if fast_mode() {
+        &[
+            (Group::Symmetric, 5, 3, 2),
+            (Group::Orthogonal, 5, 4, 2),
+            (Group::Symplectic, 4, 4, 2),
+        ]
+    } else {
+        &[
+            (Group::Symmetric, 5, 3, 2),
+            (Group::Symmetric, 3, 4, 2),
+            (Group::Orthogonal, 5, 4, 2),
+            (Group::Orthogonal, 5, 3, 1),
+            (Group::Symplectic, 4, 4, 2),
+            (Group::SpecialOrthogonal, 3, 3, 1),
+        ]
+    };
+    let mut rows = Vec::new();
+    for &(group, n, k, l) in configs {
+        let plans = spanning_plans(group, n, k, l).unwrap();
+        let fused = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+        let unfused = LayerSchedule::compile_unfused(group, n, k, l, &plans).unwrap();
+        let fs = fused.stats();
+        let us = unfused.stats();
+        assert!(
+            fs.fused_nodes > 0,
+            "{group} ({k},{l}): config must contain a non-identity permute feeding a \
+             contraction: {fs:?}"
+        );
+        assert_eq!(
+            fs.estimated_flops, us.estimated_flops,
+            "{group} ({k},{l}): fusion must not change flops"
+        );
+        assert!(
+            fs.estimated_bytes < us.estimated_bytes,
+            "{group} ({k},{l}): fused bytes must be strictly below unfused"
+        );
+        let coeffs: Vec<f64> = (0..plans.len()).map(|_| rng.gaussian()).collect();
+        let v = Tensor::random(n, k, rng);
+        let mut arena = ScratchArena::new();
+        // Bitwise equality of the two walks before timing anything.
+        let mut a = Tensor::zeros(n, l);
+        let mut b = Tensor::zeros(n, l);
+        fused.execute(&v, &coeffs, &mut a, &mut arena).unwrap();
+        unfused.execute(&v, &coeffs, &mut b, &mut arena).unwrap();
+        assert!(
+            a.allclose(&b, 0.0),
+            "{group} ({k},{l}): fused walk diverges by {}",
+            a.max_abs_diff(&b)
+        );
+        // Measured bytes of one execute each (warm arena, single-threaded
+        // so the process-wide counter delta is exact).
+        let measure = |s: &LayerSchedule, arena: &mut ScratchArena| -> u64 {
+            let mut out = Tensor::zeros(n, l);
+            let before = exec_stats().bytes_moved;
+            s.execute(&v, &coeffs, &mut out, arena).unwrap();
+            exec_stats().bytes_moved - before
+        };
+        let measured_fused = measure(&fused, &mut arena);
+        let measured_unfused = measure(&unfused, &mut arena);
+        assert!(
+            measured_fused < measured_unfused,
+            "{group} ({k},{l}): fused walk must measurably move fewer bytes \
+             ({measured_fused} vs {measured_unfused})"
+        );
+        let est_drop = 1.0 - fs.estimated_bytes as f64 / us.estimated_bytes as f64;
+        let measured_drop = 1.0 - measured_fused as f64 / measured_unfused as f64;
+        assert!(
+            est_drop >= 0.30 && measured_drop >= 0.30,
+            "{group} ({k},{l}): bytes-moved drop below 30% (est {est_drop:.2}, \
+             measured {measured_drop:.2})"
+        );
+        // Time the *warm* path both sides optimise for: one arena per
+        // variant, warmed before the clock starts, reused every iteration
+        // (a cold arena would pay identical allocation costs on both sides
+        // and dilute the measured difference).
+        let mut timing_out = Tensor::zeros(n, l);
+        let mut unfused_arena = ScratchArena::new();
+        unfused
+            .execute(&v, &coeffs, &mut timing_out, &mut unfused_arena)
+            .unwrap();
+        let unfused_t = bench_median(budget, || {
+            timing_out.data.fill(0.0);
+            unfused
+                .execute(&v, &coeffs, &mut timing_out, &mut unfused_arena)
+                .unwrap();
+        });
+        let mut fused_arena = ScratchArena::new();
+        fused
+            .execute(&v, &coeffs, &mut timing_out, &mut fused_arena)
+            .unwrap();
+        let fused_t = bench_median(budget, || {
+            timing_out.data.fill(0.0);
+            fused
+                .execute(&v, &coeffs, &mut timing_out, &mut fused_arena)
+                .unwrap();
+        });
+        let speedup = unfused_t.median_s / fused_t.median_s;
+        table.row(vec![
+            group.name().to_string(),
+            format!("{n}"),
+            format!("({k},{l})"),
+            format!("{}", fs.terms),
+            format!("{}", fs.fused_nodes),
+            format!("{} ({})", fs.estimated_bytes, us.estimated_bytes),
+            format!("{measured_fused} ({measured_unfused})"),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(FusionRow {
+            group: group.name(),
+            n,
+            k,
+            l,
+            terms: fs.terms,
+            fused_nodes: fs.fused_nodes,
+            est_bytes_unfused: us.estimated_bytes,
+            est_bytes_fused: fs.estimated_bytes,
+            est_drop,
+            measured_bytes_unfused: measured_unfused,
+            measured_bytes_fused: measured_fused,
+            measured_drop,
+            unfused_us: unfused_t.median_s * 1e6,
+            fused_us: fused_t.median_s * 1e6,
+            speedup,
+        });
+    }
+    table.print();
+    rows
+}
+
+fn write_fusion_json(path: &str, rows: &[FusionRow]) {
+    let best = rows.iter().map(|r| r.measured_drop).fold(f64::MIN, f64::max);
+    let configs: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"group\": \"{}\", \"n\": {}, \"k\": {}, \"l\": {}, \
+                 \"terms\": {}, \"fused_nodes\": {}, \
+                 \"est_bytes_unfused\": {}, \"est_bytes_fused\": {}, \
+                 \"est_drop\": {:.4}, \
+                 \"measured_bytes_unfused\": {}, \"measured_bytes_fused\": {}, \
+                 \"measured_drop\": {:.4}, \
+                 \"unfused_us\": {:.3}, \"fused_us\": {:.3}, \"speedup\": {:.3}}}",
+                r.group,
+                r.n,
+                r.k,
+                r.l,
+                r.terms,
+                r.fused_nodes,
+                r.est_bytes_unfused,
+                r.est_bytes_fused,
+                r.est_drop,
+                r.measured_bytes_unfused,
+                r.measured_bytes_fused,
+                r.measured_drop,
+                r.unfused_us,
+                r.fused_us,
+                r.speedup
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"strided_fusion\",\n  \"fast_mode\": {fast},\n  \
+         \"configs\": [\n{configs}\n  ],\n  \
+         \"best_bytes_drop\": {best:.4}\n}}\n",
+        fast = fast_mode(),
+        configs = configs.join(",\n"),
+    );
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
 struct BatchRow {
     group: &'static str,
     n: usize,
@@ -592,6 +806,9 @@ fn main() {
 
     let planner_rows = planner_section(budget, &mut rng);
     write_planner_json("BENCH_planner.json", &planner_rows);
+
+    let fusion_rows = fusion_section(budget, &mut rng);
+    write_fusion_json("BENCH_fusion.json", &fusion_rows);
 
     let batch_rows = fused_batch_section(budget, &mut rng);
     write_batch_json("BENCH_batch.json", &batch_rows);

@@ -74,6 +74,11 @@ pub struct MetricsSnapshot {
     /// Folded multi-pattern scatter passes executed across all schedule
     /// walks — one per active `(node, pattern)` class per forward.
     pub scatter_passes: u64,
+    /// **Measured** bytes moved by the schedule kernels across all walks —
+    /// accumulated from actual element counts (active members, real batch
+    /// sizes) at execution time, next to the compile-time
+    /// `schedule_estimated_bytes`. Saturating.
+    pub measured_bytes_moved: u64,
     /// Compile-time planner totals over every compiled schedule: distinct
     /// interior nodes after global CSE.
     pub schedule_nodes: u64,
@@ -96,6 +101,12 @@ pub struct MetricsSnapshot {
     pub arena_reuses: u64,
     /// High-water mark of `f64`s held by any single scratch arena.
     pub arena_high_water_f64s: u64,
+    /// Index-scratch buffers (odometer/ref-count vectors, node-slot
+    /// tables) allocated fresh — stops growing at steady state, the
+    /// index-scratch half of the zero-allocation invariant.
+    pub arena_index_allocations: u64,
+    /// Index-scratch acquisitions served by recycling.
+    pub arena_index_reuses: u64,
     /// Whole batches executed through the batched model path — the fused
     /// `[B, n^k]` walk (one schedule walk per layer per worker span) for
     /// multi-item batches, the DAG-subtree fan-out for single-item ones
@@ -203,6 +214,7 @@ impl Metrics {
             ops_shared: ops_shared_total(),
             executed_nodes: exec.executed_nodes,
             scatter_passes: exec.scatter_passes,
+            measured_bytes_moved: exec.bytes_moved,
             schedule_nodes: planner.nodes,
             schedule_classes: planner.classes,
             schedule_estimated_flops: planner.estimated_flops,
@@ -211,6 +223,8 @@ impl Metrics {
             arena_allocations: arena.allocations,
             arena_reuses: arena.reuses,
             arena_high_water_f64s: arena.high_water_f64s as u64,
+            arena_index_allocations: arena.index_allocations,
+            arena_index_reuses: arena.index_reuses,
             fused_batches: fused.batches,
             fused_items: fused.items,
             mean_fused_batch_size: fused.mean_batch_size(),
@@ -278,6 +292,14 @@ mod tests {
         // scatter passes).
         assert!(s.executed_nodes >= 1, "executed-node counter not plumbed");
         assert!(s.scatter_passes >= 1, "scatter-pass counter not plumbed");
+        assert!(
+            s.measured_bytes_moved >= 1,
+            "measured bytes-moved counter not plumbed"
+        );
+        assert!(
+            s.arena_index_allocations >= 1,
+            "index-scratch counters not plumbed"
+        );
         assert!(s.schedule_nodes >= 1 && s.schedule_classes >= 1);
         assert!(s.schedule_estimated_flops > 0 && s.schedule_estimated_bytes > 0);
         // Fused-batch counters are plumbed from the nn::model globals; run

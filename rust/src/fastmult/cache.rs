@@ -110,6 +110,11 @@ pub struct CacheStats {
     /// Process-wide interior DAG node evaluations (one per distinct
     /// intermediate per schedule walk).
     pub executed_nodes: u64,
+    /// Process-wide **measured** bytes moved by the schedule kernels —
+    /// accumulated at execution time from actual element counts (active
+    /// members and real batch sizes), the runtime counterpart of the
+    /// compile-time byte estimates. Saturating.
+    pub bytes_moved: u64,
 }
 
 impl CacheStats {
@@ -285,6 +290,7 @@ impl PlanCache {
             schedule_entries,
             scatter_passes: exec.scatter_passes,
             executed_nodes: exec.executed_nodes,
+            bytes_moved: exec.bytes_moved,
         }
     }
 }

@@ -23,9 +23,10 @@
 //! - **λ-coefficient folding.** Terms are grouped into **classes** by
 //!   `(post-contraction node, output scatter shape)`: members of a class
 //!   differ only in their closing output permutation and weight. One class
-//!   executes as a *single* multi-pattern scatter pass
-//!   ([`crate::tensor::Tensor::scatter_broadcast_diagonals_multi_axpy`] /
-//!   `axpy_permuted_multi_into`) over the shared source, with the member
+//!   executes as a *single* multi-pattern scatter pass over the shared
+//!   source — each member's destination map precompiled into the kernel
+//!   plan and replayed in the standalone multi-kernel visit order
+//!   (rep-major, source-inner, member-innermost) — with the member
 //!   λ-weights gathered fresh from the caller's coefficient slice on every
 //!   call — the class *structure* is weight-independent (and shared across
 //!   layers through [`super::PlanCache`]), the coefficients are a cheap
@@ -40,6 +41,30 @@
 //!   and it drives [`LayerSchedule::cost_partitions`], the cost-weighted
 //!   (LPT) split of subtrees across worker threads that replaces the old
 //!   even chunking.
+//! - **Strided fusion.** Permutes are pure data movement (`Op::cost`
+//!   reports 0 flops, `8·(n^in + n^out)` bytes), yet the pre-fusion
+//!   pipeline materialised every σ_k permute into a full arena tensor
+//!   before the next contraction read it. The [`fuse_strided`] pass folds
+//!   each `Permute` whose single consumer is a diagonal contraction, pair
+//!   trace, ε-trace or group-diagonal extraction into that consumer as a
+//!   gather op that reads the permute's *source* through remapped per-axis
+//!   strides (`tensor::ops` gather kernels) — same odometer walk, no
+//!   intermediate. Fusion is cost-model-driven (elided permute traffic
+//!   must beat the modelled strided-read overhead) and never touches a
+//!   permute CSE-shared by more than one consumer. The gather kernels
+//!   replay the exact element order of the two-step composition, so the
+//!   fused schedule is **bitwise** equal to [`LayerSchedule::compile_unfused`]
+//!   on every execute path while moving `bytes_saved_estimate` fewer bytes
+//!   per forward.
+//! - **Kernel plans.** Every index table a kernel would otherwise rebuild
+//!   per call — blocked-permute maps, gather offset tables, the `n!`
+//!   Levi-Civita entry table, each class member's scatter destination map —
+//!   is compiled once into the schedule ([`NodeKernel`], `Member::dsts`)
+//!   and replayed on the warm path. Per-call index scratch (ref counts,
+//!   activity masks, λ-weight gathers, node-slot tables) comes from the
+//!   arena's pooled index buckets, so the steady-state walk performs zero
+//!   heap allocations for index scratch as well as tensor buffers
+//!   (`ArenaStats::index_allocations` proves it).
 //!
 //! Folded execution accumulates per class rather than per term, so it
 //! matches the per-term reference to ≤ 1e-12 (addition reassociates), while
@@ -58,7 +83,10 @@
 use super::plan::is_identity;
 use super::{sp, Group, MultPlan};
 use crate::error::{Error, Result};
-use crate::tensor::{BatchTensor, Tensor};
+use crate::tensor::{
+    axis_strides, group_diag_offsets, levi_civita_entries, permute_block_map, permute_dst_map,
+    permuted_gather_base, permuted_group_diag_offsets, scatter_diag_dsts, BatchTensor, Tensor,
+};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -70,9 +98,12 @@ use std::sync::{Arc, Mutex};
 static ARENA_ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
 static ARENA_REUSES: AtomicU64 = AtomicU64::new(0);
 static ARENA_HIGH_WATER: AtomicUsize = AtomicUsize::new(0);
+static ARENA_INDEX_ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static ARENA_INDEX_REUSES: AtomicU64 = AtomicU64::new(0);
 static OPS_SHARED: AtomicU64 = AtomicU64::new(0);
 static EXECUTED_NODES: AtomicU64 = AtomicU64::new(0);
 static SCATTER_PASSES: AtomicU64 = AtomicU64::new(0);
+static MEASURED_BYTES: AtomicU64 = AtomicU64::new(0);
 static PLANNED_FLOPS: AtomicU64 = AtomicU64::new(0);
 static PLANNED_BYTES: AtomicU64 = AtomicU64::new(0);
 static PLANNED_NODES: AtomicU64 = AtomicU64::new(0);
@@ -89,6 +120,12 @@ pub struct ArenaStats {
     pub reuses: u64,
     /// Largest number of `f64`s any single arena has held at once.
     pub high_water_f64s: usize,
+    /// Index-scratch buffers (odometer/ref-count `usize` vecs and node slot
+    /// tables) allocated fresh from the heap — like `allocations`, this
+    /// stops growing once the warm path is reached.
+    pub index_allocations: u64,
+    /// Index-scratch acquisitions served by recycling.
+    pub index_reuses: u64,
 }
 
 /// Snapshot of the process-wide arena counters.
@@ -97,6 +134,8 @@ pub fn arena_stats() -> ArenaStats {
         allocations: ARENA_ALLOCATIONS.load(Ordering::Relaxed),
         reuses: ARENA_REUSES.load(Ordering::Relaxed),
         high_water_f64s: ARENA_HIGH_WATER.load(Ordering::Relaxed),
+        index_allocations: ARENA_INDEX_ALLOCATIONS.load(Ordering::Relaxed),
+        index_reuses: ARENA_INDEX_REUSES.load(Ordering::Relaxed),
     }
 }
 
@@ -116,6 +155,11 @@ pub struct ExecStats {
     pub executed_nodes: u64,
     /// Folded multi-pattern scatter passes (one per active class per walk).
     pub scatter_passes: u64,
+    /// **Measured** bytes moved by the kernels: accumulated at execution
+    /// time from actual element counts (reads + writes at 8 bytes per
+    /// `f64`, active members and real batch sizes only) — the runtime twin
+    /// of the compile-time `estimated_bytes`. Saturating.
+    pub bytes_moved: u64,
 }
 
 /// Snapshot of the process-wide execution counters.
@@ -123,6 +167,7 @@ pub fn exec_stats() -> ExecStats {
     ExecStats {
         executed_nodes: EXECUTED_NODES.load(Ordering::Relaxed),
         scatter_passes: SCATTER_PASSES.load(Ordering::Relaxed),
+        bytes_moved: MEASURED_BYTES.load(Ordering::Relaxed),
     }
 }
 
@@ -169,6 +214,25 @@ fn saturating_counter_add(counter: &AtomicU64, delta: u64) {
     }
 }
 
+/// Measured bytes of one kernel evaluation over `items` batch items (the
+/// cost model's byte figure *is* the kernel's exact element count for
+/// every op shape). Accumulated into a per-walk local and flushed to the
+/// process-wide counter **once per execute** — a contended global atomic
+/// per node would tax exactly the hot path this module optimises.
+fn node_bytes(cost: &OpCost, items: usize) -> u64 {
+    cost.bytes
+        .saturating_mul(items as u128)
+        .min(u64::MAX as u128) as u64
+}
+
+/// Flush a walk's locally accumulated measured bytes to the global
+/// counter (one saturating add per execute call).
+fn flush_measured_bytes(moved: u64) {
+    if moved > 0 {
+        saturating_counter_add(&MEASURED_BYTES, moved);
+    }
+}
+
 /// Snapshot of the process-wide planner totals.
 pub fn planner_totals() -> PlannerTotals {
     PlannerTotals {
@@ -186,11 +250,22 @@ pub fn planner_totals() -> PlannerTotals {
 /// `release` returns it for reuse. After one warm-up pass over a schedule,
 /// every acquisition is a reuse: the per-arena and process-wide counters
 /// make that provable from tests and benches.
+///
+/// Beside the `f64` buckets the arena pools **index scratch**: the `usize`
+/// odometer/ref-count vectors and node-slot tables the schedule walk needs
+/// per call. These have their own counters (`index_allocations` /
+/// `index_reuses`), so the zero-allocation steady-state property covers
+/// index scratch as well as tensor buffers.
 #[derive(Debug, Default)]
 pub struct ScratchArena {
     buckets: HashMap<usize, Vec<Vec<f64>>>,
+    idx_buckets: HashMap<usize, Vec<Vec<usize>>>,
+    tensor_slots: HashMap<usize, Vec<Vec<Option<Tensor>>>>,
+    batch_slots: HashMap<usize, Vec<Vec<Option<BatchTensor>>>>,
     allocations: u64,
     reuses: u64,
+    index_allocations: u64,
+    index_reuses: u64,
     held_f64s: usize,
 }
 
@@ -200,10 +275,10 @@ impl ScratchArena {
         Self::default()
     }
 
-    /// A tensor of shape `(n, order)` backed by a recycled buffer when one
-    /// of the right length is free. Contents are unspecified.
-    pub fn acquire(&mut self, n: usize, order: usize) -> Tensor {
-        let len = n.pow(order as u32);
+    /// A raw `f64` buffer of exactly `len` entries (contents unspecified),
+    /// drawn from the same length-keyed buckets as the tensor buffers —
+    /// the per-call λ-weight gather uses this.
+    pub(crate) fn acquire_raw(&mut self, len: usize) -> Vec<f64> {
         let data = match self.buckets.get_mut(&len).and_then(|b| b.pop()) {
             Some(buf) => {
                 self.reuses += 1;
@@ -219,12 +294,24 @@ impl ScratchArena {
             }
         };
         debug_assert_eq!(data.len(), len);
+        data
+    }
+
+    /// Return a raw buffer to the pool.
+    pub(crate) fn release_raw(&mut self, buf: Vec<f64>) {
+        self.buckets.entry(buf.len()).or_default().push(buf);
+    }
+
+    /// A tensor of shape `(n, order)` backed by a recycled buffer when one
+    /// of the right length is free. Contents are unspecified.
+    pub fn acquire(&mut self, n: usize, order: usize) -> Tensor {
+        let data = self.acquire_raw(n.pow(order as u32));
         Tensor { n, order, data }
     }
 
     /// Return a tensor's buffer to the pool.
     pub fn release(&mut self, t: Tensor) {
-        self.buckets.entry(t.data.len()).or_default().push(t.data);
+        self.release_raw(t.data);
     }
 
     /// A batch of `batch` tensors of shape `(n, order)` backed by one
@@ -233,29 +320,87 @@ impl ScratchArena {
     /// the same pool — an arena warmed at batch size `B` serves every
     /// later `B`-item walk with zero heap allocations.
     pub fn acquire_batch(&mut self, n: usize, order: usize, batch: usize) -> BatchTensor {
-        let len = batch * n.pow(order as u32);
-        let data = match self.buckets.get_mut(&len).and_then(|b| b.pop()) {
-            Some(buf) => {
-                self.reuses += 1;
-                ARENA_REUSES.fetch_add(1, Ordering::Relaxed);
-                buf
-            }
-            None => {
-                self.allocations += 1;
-                ARENA_ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
-                self.held_f64s += len;
-                ARENA_HIGH_WATER.fetch_max(self.held_f64s, Ordering::Relaxed);
-                vec![0.0; len]
-            }
-        };
-        debug_assert_eq!(data.len(), len);
+        let data = self.acquire_raw(batch * n.pow(order as u32));
         BatchTensor::from_raw(n, order, batch, data)
     }
 
     /// Return a batch's buffer to the pool.
     pub fn release_batch(&mut self, t: BatchTensor) {
-        let data = t.into_raw();
-        self.buckets.entry(data.len()).or_default().push(data);
+        self.release_raw(t.into_raw());
+    }
+
+    /// A `usize` scratch vector of exactly `len` entries (contents
+    /// unspecified) from the length-keyed index pool.
+    pub(crate) fn acquire_indices(&mut self, len: usize) -> Vec<usize> {
+        match self.idx_buckets.get_mut(&len).and_then(|b| b.pop()) {
+            Some(buf) => {
+                self.index_reuses += 1;
+                ARENA_INDEX_REUSES.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                self.index_allocations += 1;
+                ARENA_INDEX_ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+                vec![0usize; len]
+            }
+        }
+    }
+
+    /// Return an index scratch vector to the pool.
+    pub(crate) fn release_indices(&mut self, buf: Vec<usize>) {
+        self.idx_buckets.entry(buf.len()).or_default().push(buf);
+    }
+
+    /// A node-slot table of exactly `len` empty slots for the schedule
+    /// walk. Keyed by length like the other pools, so a reuse never hides
+    /// a resize-reallocation from the counters.
+    pub(crate) fn acquire_tensor_slots(&mut self, len: usize) -> Vec<Option<Tensor>> {
+        match self.tensor_slots.get_mut(&len).and_then(|b| b.pop()) {
+            Some(v) => {
+                self.index_reuses += 1;
+                ARENA_INDEX_REUSES.fetch_add(1, Ordering::Relaxed);
+                debug_assert_eq!(v.len(), len);
+                v
+            }
+            None => {
+                self.index_allocations += 1;
+                ARENA_INDEX_ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+                let mut v = Vec::with_capacity(len);
+                v.resize_with(len, || None);
+                v
+            }
+        }
+    }
+
+    /// Return a node-slot table (all slots drained) to the pool.
+    pub(crate) fn release_tensor_slots(&mut self, slots: Vec<Option<Tensor>>) {
+        debug_assert!(slots.iter().all(|s| s.is_none()), "undrained slot table");
+        self.tensor_slots.entry(slots.len()).or_default().push(slots);
+    }
+
+    /// Batched twin of [`ScratchArena::acquire_tensor_slots`].
+    pub(crate) fn acquire_batch_slots(&mut self, len: usize) -> Vec<Option<BatchTensor>> {
+        match self.batch_slots.get_mut(&len).and_then(|b| b.pop()) {
+            Some(v) => {
+                self.index_reuses += 1;
+                ARENA_INDEX_REUSES.fetch_add(1, Ordering::Relaxed);
+                debug_assert_eq!(v.len(), len);
+                v
+            }
+            None => {
+                self.index_allocations += 1;
+                ARENA_INDEX_ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+                let mut v = Vec::with_capacity(len);
+                v.resize_with(len, || None);
+                v
+            }
+        }
+    }
+
+    /// Return a batched node-slot table (all slots drained) to the pool.
+    pub(crate) fn release_batch_slots(&mut self, slots: Vec<Option<BatchTensor>>) {
+        debug_assert!(slots.iter().all(|s| s.is_none()), "undrained slot table");
+        self.batch_slots.entry(slots.len()).or_default().push(slots);
     }
 
     /// Buffers this arena allocated fresh from the heap.
@@ -266,6 +411,18 @@ impl ScratchArena {
     /// Acquisitions this arena served by recycling.
     pub fn reuses(&self) -> u64 {
         self.reuses
+    }
+
+    /// Index-scratch buffers this arena allocated fresh from the heap
+    /// (odometer/ref-count vectors, node-slot tables). Stops growing on
+    /// the warm path, exactly like [`ScratchArena::allocations`].
+    pub fn index_allocations(&self) -> u64 {
+        self.index_allocations
+    }
+
+    /// Index-scratch acquisitions served by recycling.
+    pub fn index_reuses(&self) -> u64 {
+        self.index_reuses
     }
 
     /// Total `f64`s this arena currently owns (free + checked out).
@@ -280,6 +437,9 @@ impl ScratchArena {
     /// change; see also [`clear_arena_pool`].
     pub fn clear(&mut self) {
         self.buckets.clear();
+        self.idx_buckets.clear();
+        self.tensor_slots.clear();
+        self.batch_slots.clear();
         self.held_f64s = 0;
     }
 }
@@ -346,6 +506,15 @@ enum Src {
 /// source, so equal ops with equal sources collapse to one node. Chains are
 /// canonicalised *before* interning (see [`canonicalize`]), so the consing
 /// is a global CSE over the canonical forms, not just prefix sharing.
+///
+/// The `Permuted*` variants are produced by the **strided-fusion pass**
+/// (see [`fuse_strided`]), never by interning: a `Permute` whose only
+/// consumer is a diagonal contraction, pair trace or group-diagonal
+/// extraction is folded into that consumer, which then reads the permute's
+/// *source* through remapped per-axis strides (the gather kernels in
+/// `tensor::ops`) instead of a materialised `n^k` intermediate. The gather
+/// kernels replay the exact element order of the two-step composition, so
+/// fusion is bitwise invisible everywhere downstream.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 enum Op {
     Permute { src: Src, axes: Vec<usize> },
@@ -354,6 +523,13 @@ enum Op {
     TracePairEps { src: Src },
     LeviCivita { src: Src, s: usize },
     ExtractDiagonals { src: Src, groups: Vec<usize> },
+    /// Fused `Permute(axes) → ContractDiagonal(m)` (also absorbs
+    /// `TracePair`, which is the `m = 2` case).
+    PermutedContract { src: Src, axes: Vec<usize>, m: usize },
+    /// Fused `Permute(axes) → TracePairEps`.
+    PermutedTracePairEps { src: Src, axes: Vec<usize> },
+    /// Fused `Permute(axes) → ExtractDiagonals(groups)`.
+    PermutedExtract { src: Src, axes: Vec<usize>, groups: Vec<usize> },
 }
 
 impl Op {
@@ -364,14 +540,35 @@ impl Op {
             | Op::TracePair { src }
             | Op::TracePairEps { src }
             | Op::LeviCivita { src, .. }
-            | Op::ExtractDiagonals { src, .. } => *src,
+            | Op::ExtractDiagonals { src, .. }
+            | Op::PermutedContract { src, .. }
+            | Op::PermutedTracePairEps { src, .. }
+            | Op::PermutedExtract { src, .. } => *src,
+        }
+    }
+
+    fn set_src(&mut self, new: Src) {
+        match self {
+            Op::Permute { src, .. }
+            | Op::ContractDiagonal { src, .. }
+            | Op::TracePair { src }
+            | Op::TracePairEps { src }
+            | Op::LeviCivita { src, .. }
+            | Op::ExtractDiagonals { src, .. }
+            | Op::PermutedContract { src, .. }
+            | Op::PermutedTracePairEps { src, .. }
+            | Op::PermutedExtract { src, .. } => *src = new,
         }
     }
 
     /// FLOP / bytes-moved estimate of one evaluation of this op at
     /// dimension `n`, mapping an order-`in_order` tensor to order
     /// `out_order`. Memory traffic counts reads + writes at 8 bytes per
-    /// `f64`; permutes and gathers are pure data movement (0 flops).
+    /// `f64`; permutes and gathers are pure data movement (0 flops). A
+    /// fused `Permuted*` op costs exactly what its unfused consumer costs —
+    /// same element reads, same reduction — which is why strided fusion
+    /// drops `estimated_bytes` by precisely the elided permute's traffic
+    /// while leaving `estimated_flops` untouched.
     fn cost(&self, n: usize, in_order: usize, out_order: usize) -> OpCost {
         let ni = powu(n, in_order);
         let no = powu(n, out_order);
@@ -382,12 +579,14 @@ impl Op {
                 bytes: 8 * (ni + no),
             },
             // One output element sums an n-element generalised diagonal.
-            Op::ContractDiagonal { .. } | Op::TracePair { .. } | Op::TracePairEps { .. } => {
-                OpCost {
-                    flops: no * nu,
-                    bytes: 8 * (no * nu + no),
-                }
-            }
+            Op::ContractDiagonal { .. }
+            | Op::TracePair { .. }
+            | Op::TracePairEps { .. }
+            | Op::PermutedContract { .. }
+            | Op::PermutedTracePairEps { .. } => OpCost {
+                flops: no * nu,
+                bytes: 8 * (no * nu + no),
+            },
             // n^keep outer positions × n! signed-permutation terms.
             Op::LeviCivita { s, .. } => {
                 let keep = in_order - (n - s);
@@ -397,7 +596,7 @@ impl Op {
                     bytes: 8 * (terms + no),
                 }
             }
-            Op::ExtractDiagonals { .. } => OpCost {
+            Op::ExtractDiagonals { .. } | Op::PermutedExtract { .. } => OpCost {
                 flops: 0,
                 bytes: 8 * (2 * no),
             },
@@ -443,6 +642,13 @@ struct Node {
     order: usize,
     /// Cost estimate of one evaluation.
     cost: OpCost,
+    /// Work absorbed from a fused-away permute, counted **only** when
+    /// ordering the DFS walk and weighting subtrees — never in the byte
+    /// estimates. Keeping the ordering weights identical to the unfused
+    /// compile makes the class execution order invariant under fusion, so
+    /// the fused folded walk stays **bitwise** equal to
+    /// [`LayerSchedule::compile_unfused`]'s (not merely ≤ 1e-12).
+    extra_work: u128,
 }
 
 /// Per-term closing accumulation `out += coeff · (…)`.
@@ -512,6 +718,13 @@ struct Member {
     axes: Vec<usize>,
     /// Exact canonicalisation sign folded into the coefficient.
     sign: f64,
+    /// **Kernel plan**: this member's precompiled destination-offset map —
+    /// `permute_dst_map` for axpy/ε patterns, `scatter_diag_dsts` for
+    /// diagonal-support scatters — built once at compile and replayed by
+    /// every execute (the per-call `vec![…]` stride rebuilds are gone).
+    /// Always a multiple of the class's compact source length; one chunk
+    /// per broadcast rep.
+    dsts: Vec<usize>,
 }
 
 /// A folded `(node, pattern)` equivalence class: all terms reading the same
@@ -523,6 +736,11 @@ struct Class {
     shape: ClassShape,
     members: Vec<Member>,
     cost: OpCost,
+    /// Elements one pass reads from the (possibly ε-expanded) source —
+    /// feeds the measured bytes-moved counter.
+    src_len: u128,
+    /// Destination elements one member's pattern touches per pass.
+    touched: u128,
 }
 
 /// Compile-time shape of one schedule: how much work CSE and λ-folding
@@ -544,6 +762,14 @@ pub struct ScheduleStats {
     /// Folded `(node, pattern)` classes — the scatter-pass count per
     /// forward (the per-term path runs `terms` passes).
     pub classes: usize,
+    /// Permute nodes the strided-fusion pass folded into their consumer's
+    /// gather kernel (each one a materialised `n^k` intermediate that no
+    /// longer exists).
+    pub fused_nodes: usize,
+    /// Cost-model bytes the elided permutes would have moved per forward —
+    /// exactly the gap between this schedule's `estimated_bytes` and the
+    /// unfused compile's. Fusion never changes `estimated_flops`.
+    pub bytes_saved_estimate: u128,
     /// Cost-model flops of one full forward walk.
     pub estimated_flops: u128,
     /// Cost-model bytes moved by one full forward walk.
@@ -590,6 +816,10 @@ impl ScheduleStats {
         self.shared_ops += other.shared_ops;
         self.prefix_nodes += other.prefix_nodes;
         self.classes += other.classes;
+        self.fused_nodes += other.fused_nodes;
+        self.bytes_saved_estimate = self
+            .bytes_saved_estimate
+            .saturating_add(other.bytes_saved_estimate);
         self.estimated_flops = self.estimated_flops.saturating_add(other.estimated_flops);
         self.estimated_bytes = self.estimated_bytes.saturating_add(other.estimated_bytes);
     }
@@ -831,6 +1061,235 @@ fn canonicalize(steps: &mut Vec<ChainStep>, kind: &mut SinkKind, sign: &mut f64)
 }
 
 // ---------------------------------------------------------------------------
+// Strided fusion
+// ---------------------------------------------------------------------------
+
+/// Modelled penalty of replacing a consumer's contiguous reads with strided
+/// gather reads: a quarter of the consumer's memory traffic. Fusion fires
+/// only when the elided permute's full read+write traffic exceeds this —
+/// which it always does for the contraction/extraction shapes we fuse (the
+/// permute touches `n^m`× more data than the contracted output reads), but
+/// the guard keeps the decision explicitly cost-driven.
+fn gather_overhead(consumer: &OpCost) -> u128 {
+    consumer.bytes / 4
+}
+
+/// The strided-fusion pass. Runs after canonicalisation, CSE and interning:
+/// every `Permute` node whose **only** consumer is a diagonal contraction,
+/// pair trace, ε-trace or group-diagonal extraction — and whose elided
+/// traffic beats the modelled gather overhead — is folded into that
+/// consumer as a `Permuted*` gather op reading the permute's source
+/// directly. A permute CSE-shared by more than one consumer is left
+/// materialised (fusing it would recompute the gather per consumer and
+/// break the sharing the DAG exists for). Dead permute nodes are compacted
+/// away and every node/sink source remapped.
+///
+/// Returns `(fused node count, cost-model bytes saved per forward)`. The
+/// gather kernels replay the exact element order of the two-step
+/// composition, so fusion is **bitwise** invisible to every execute path.
+fn fuse_strided(nodes: &mut Vec<Node>, sinks: &mut [Sink]) -> (usize, u128) {
+    let nn = nodes.len();
+    let mut consumers = vec![0usize; nn];
+    for node in nodes.iter() {
+        if let Src::Node(p) = node.op.src() {
+            consumers[p] += 1;
+        }
+    }
+    for sink in sinks.iter() {
+        if let Src::Node(p) = sink.src {
+            consumers[p] += 1;
+        }
+    }
+    let mut dead = vec![false; nn];
+    let mut fused = 0usize;
+    let mut saved: u128 = 0;
+    for j in 0..nn {
+        let Src::Node(i) = nodes[j].op.src() else {
+            continue;
+        };
+        if !matches!(
+            nodes[j].op,
+            Op::ContractDiagonal { .. }
+                | Op::TracePair { .. }
+                | Op::TracePairEps { .. }
+                | Op::ExtractDiagonals { .. }
+        ) {
+            continue;
+        }
+        let (axes, psrc) = match &nodes[i].op {
+            Op::Permute { src, axes } => (axes.clone(), *src),
+            _ => continue,
+        };
+        // Never fuse a CSE-shared permute: its one materialisation feeds
+        // every consumer, which is cheaper than per-consumer gathers.
+        if consumers[i] != 1 {
+            continue;
+        }
+        let savings = nodes[i].cost.bytes;
+        if savings <= gather_overhead(&nodes[j].cost) {
+            continue;
+        }
+        let new_op = match nodes[j].op.clone() {
+            Op::ContractDiagonal { m, .. } => Op::PermutedContract { src: psrc, axes, m },
+            Op::TracePair { .. } => Op::PermutedContract { src: psrc, axes, m: 2 },
+            Op::TracePairEps { .. } => Op::PermutedTracePairEps { src: psrc, axes },
+            Op::ExtractDiagonals { groups, .. } => Op::PermutedExtract { src: psrc, axes, groups },
+            _ => unreachable!("checked fusible above"),
+        };
+        nodes[j].op = new_op;
+        // Preserve the elided permute's *ordering* weight on the consumer
+        // (see `Node::extra_work`) so the DFS class order — and with it
+        // every accumulation order — is identical to the unfused compile.
+        let absorbed = nodes[i].cost.work().saturating_add(nodes[i].extra_work);
+        nodes[j].extra_work = nodes[j].extra_work.saturating_add(absorbed);
+        dead[i] = true;
+        fused += 1;
+        saved = saved.saturating_add(savings);
+    }
+    if fused > 0 {
+        // Compact the node table (every dead node is a permute, so no sink
+        // can point at one — rule 5 folds chain-trailing permutes into the
+        // sinks) and remap the surviving sources.
+        let mut remap = vec![usize::MAX; nn];
+        let mut live = Vec::with_capacity(nn - fused);
+        for (i, node) in std::mem::take(nodes).into_iter().enumerate() {
+            if dead[i] {
+                continue;
+            }
+            remap[i] = live.len();
+            live.push(node);
+        }
+        for node in &mut live {
+            if let Src::Node(p) = node.op.src() {
+                node.op.set_src(Src::Node(remap[p]));
+            }
+        }
+        for sink in sinks.iter_mut() {
+            if let Src::Node(p) = sink.src {
+                sink.src = Src::Node(remap[p]);
+            }
+        }
+        *nodes = live;
+    }
+    (fused, saved)
+}
+
+// ---------------------------------------------------------------------------
+// Kernel plans
+// ---------------------------------------------------------------------------
+
+/// Precompiled per-node kernel state: every index table an op's kernel
+/// would otherwise rebuild with `vec![…]` on each call — blocked-permute
+/// maps, gather offset/stride tables, the `n!` Levi-Civita entry table —
+/// built once at [`LayerSchedule::compile`] and replayed on the warm path.
+/// Ops whose index arithmetic is already O(1) per element (trailing
+/// contractions and traces) carry no table.
+#[derive(Debug)]
+enum NodeKernel {
+    /// No table needed: the op's scan is constant-stride.
+    Direct,
+    /// Blocked permute: contiguous source blocks in destination order.
+    Permute { map: Vec<usize>, block: usize },
+    /// Signed-permutation offsets of the Levi-Civita contraction.
+    LeviCivita { entries: Vec<(usize, usize, f64)> },
+    /// Pure gather (group-diagonal extraction, permuted or not).
+    Gather { offs: Vec<usize> },
+    /// Fused permute→contract: outer base offsets + the summed diagonal
+    /// stride of the traced source axes.
+    GatherContract { base: Vec<usize>, dstride: usize },
+    /// Fused permute→ε-trace: outer base offsets + the two traced source
+    /// axes' strides.
+    GatherTraceEps { base: Vec<usize>, sa: usize, sb: usize },
+}
+
+/// Build the kernel plan of one op reading an order-`in_order` tensor.
+fn node_kernel(op: &Op, n: usize, in_order: usize) -> NodeKernel {
+    match op {
+        Op::Permute { axes, .. } => {
+            let (map, block) = permute_block_map(n, in_order, axes);
+            NodeKernel::Permute { map, block }
+        }
+        Op::ContractDiagonal { .. } | Op::TracePair { .. } | Op::TracePairEps { .. } => {
+            NodeKernel::Direct
+        }
+        Op::LeviCivita { s, .. } => NodeKernel::LeviCivita {
+            entries: levi_civita_entries(n, *s),
+        },
+        Op::ExtractDiagonals { groups, .. } => NodeKernel::Gather {
+            offs: group_diag_offsets(n, in_order, groups),
+        },
+        Op::PermutedContract { axes, m, .. } => {
+            let strides = axis_strides(n, in_order);
+            let dstride: usize = axes[in_order - m..].iter().map(|&a| strides[a]).sum();
+            NodeKernel::GatherContract {
+                base: permuted_gather_base(n, in_order, axes, *m),
+                dstride,
+            }
+        }
+        Op::PermutedTracePairEps { axes, .. } => {
+            let strides = axis_strides(n, in_order);
+            NodeKernel::GatherTraceEps {
+                base: permuted_gather_base(n, in_order, axes, 2),
+                sa: strides[axes[in_order - 2]],
+                sb: strides[axes[in_order - 1]],
+            }
+        }
+        Op::PermutedExtract { axes, groups, .. } => NodeKernel::Gather {
+            offs: permuted_group_diag_offsets(n, in_order, axes, groups),
+        },
+    }
+}
+
+/// One folded multi-pattern scatter pass replayed off the kernel plan:
+/// `out[dsts_m[r·len + s]] += w_m · src[s]`, rep-major, source-inner,
+/// active-member-innermost — exactly the visit order of the standalone
+/// multi-pattern kernels, so folded results are unchanged. A single active
+/// member takes the indirection-free path (bitwise identical: each
+/// destination receives one contribution either way).
+fn replay_class(
+    src: &[f64],
+    members: &[Member],
+    act_idx: &[usize],
+    act_w: &[f64],
+    out: &mut [f64],
+) {
+    let len = src.len();
+    debug_assert_eq!(act_idx.len(), act_w.len());
+    if let ([mi], [w]) = (act_idx, act_w) {
+        for rep in members[*mi].dsts.chunks(len) {
+            for (&d, &x) in rep.iter().zip(src) {
+                out[d] += *w * x;
+            }
+        }
+        return;
+    }
+    let reps = members[act_idx[0]].dsts.len() / len;
+    for r in 0..reps {
+        let base = r * len;
+        for (s, &x) in src.iter().enumerate() {
+            for (&mi, &w) in act_idx.iter().zip(act_w) {
+                out[members[mi].dsts[base + s]] += w * x;
+            }
+        }
+    }
+}
+
+/// Batched [`replay_class`]: the same member maps replayed item by item —
+/// item-outer, then the per-item rep/source/member order, so batched folded
+/// execution stays bitwise identical per item to the per-item walk.
+fn replay_class_batch(
+    src: &BatchTensor,
+    members: &[Member],
+    act_idx: &[usize],
+    act_w: &[f64],
+    out: &mut BatchTensor,
+) {
+    for b in 0..src.batch() {
+        replay_class(src.item(b), members, act_idx, act_w, out.item_mut(b));
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Schedule
 // ---------------------------------------------------------------------------
 
@@ -843,9 +1302,19 @@ pub struct LayerSchedule {
     k: usize,
     l: usize,
     nodes: Vec<Node>,
+    /// Per-node kernel plans, aligned with `nodes` — the precompiled index
+    /// tables the warm path replays instead of rebuilding per call.
+    kernels: Vec<NodeKernel>,
     /// Per-term sinks, in term order (for [`LayerSchedule::execute_map`],
     /// which must hand out exact per-term tensors).
     sinks: Vec<Sink>,
+    /// Term index → `(class, member)` of that term's pattern, so the map
+    /// walk replays the same precompiled destination maps the folded
+    /// classes use.
+    sink_refs: Vec<(usize, usize)>,
+    /// Largest member count of any class (sizes the per-call active-weight
+    /// scratch drawn from the arena).
+    max_members: usize,
     /// Folded `(node, pattern)` classes — the forward execution unit.
     classes: Vec<Class>,
     /// Class execution order: cost-driven DFS over the DAG (heaviest
@@ -916,6 +1385,7 @@ impl Builder {
             op: op.clone(),
             order,
             cost,
+            extra_work: 0,
         });
         self.index.insert(op, i);
         Src::Node(i)
@@ -927,12 +1397,40 @@ impl LayerSchedule {
     /// order — coefficient index `i` in every `execute*` call refers to
     /// `plans[i]`). All plans must map order `k` to order `l` under `group`
     /// at dimension `n`; an empty plan list compiles to a no-op schedule.
+    /// Includes the strided-fusion pass and the kernel plans; see
+    /// [`LayerSchedule::compile_unfused`] for the reference compile.
     pub fn compile(
         group: Group,
         n: usize,
         k: usize,
         l: usize,
         plans: &[Arc<MultPlan>],
+    ) -> Result<LayerSchedule> {
+        Self::compile_with(group, n, k, l, plans, true)
+    }
+
+    /// [`LayerSchedule::compile`] with the strided-fusion pass disabled:
+    /// every permute stays a materialised node, exactly the PR-4 pipeline.
+    /// Kept for the fusion property tests and the fused-vs-unfused bench —
+    /// the fused compile matches this one **bitwise** on every execute
+    /// path, with strictly fewer bytes moved whenever anything fused.
+    pub fn compile_unfused(
+        group: Group,
+        n: usize,
+        k: usize,
+        l: usize,
+        plans: &[Arc<MultPlan>],
+    ) -> Result<LayerSchedule> {
+        Self::compile_with(group, n, k, l, plans, false)
+    }
+
+    fn compile_with(
+        group: Group,
+        n: usize,
+        k: usize,
+        l: usize,
+        plans: &[Arc<MultPlan>],
+        fuse: bool,
     ) -> Result<LayerSchedule> {
         // `raw` interns the uncanonicalised chains — prefix sharing only,
         // the pre-folding baseline the stats compare against.
@@ -959,41 +1457,97 @@ impl LayerSchedule {
             let src = b.intern_steps(&steps, k, n);
             sinks.push(Sink { src, kind, sign });
         }
+        // Interior nodes after global CSE but before fusion — the CSE
+        // sharing baseline the stats report against `chain_ops`.
+        let cse_nodes = b.nodes.len();
+        let (fused_nodes, bytes_saved) = if fuse {
+            fuse_strided(&mut b.nodes, &mut sinks)
+        } else {
+            (0, 0)
+        };
 
         // Fold terms into (node, pattern-shape) classes, preserving first
         // appearance order (hash-keyed, so folding stays linear in the
-        // spanning-set size even for thousands of terms).
+        // spanning-set size even for thousands of terms), and record each
+        // term's (class, member) slot for the map walk.
         let mut classes: Vec<Class> = Vec::new();
         let mut class_index: HashMap<(Src, ClassShape), usize> = HashMap::new();
+        let mut sink_refs = Vec::with_capacity(sinks.len());
         for (ti, sink) in sinks.iter().enumerate() {
             let shape = sink.kind.shape();
             let member = Member {
                 term: ti,
                 axes: sink.kind.axes().to_vec(),
                 sign: sink.sign,
+                dsts: Vec::new(),
             };
             match class_index.entry((sink.src, shape.clone())) {
                 std::collections::hash_map::Entry::Occupied(e) => {
-                    classes[*e.get()].members.push(member);
+                    let ci = *e.get();
+                    sink_refs.push((ci, classes[ci].members.len()));
+                    classes[ci].members.push(member);
                 }
                 std::collections::hash_map::Entry::Vacant(e) => {
                     e.insert(classes.len());
+                    sink_refs.push((classes.len(), 0));
                     classes.push(Class {
                         src: sink.src,
                         shape,
                         members: vec![member],
                         cost: OpCost::default(),
+                        src_len: 0,
+                        touched: 0,
                     });
                 }
             }
         }
+        let mut max_members = 0usize;
         for class in &mut classes {
             let compact = match class.src {
                 Src::Input => k,
                 Src::Node(i) => b.nodes[i].order,
             };
             class.cost = Self::class_cost(class, n, compact);
+            let (src_len, touched) = match &class.shape {
+                ClassShape::Axpy => {
+                    let t = powu(n, class.members[0].axes.len());
+                    (t, t)
+                }
+                ClassShape::Scatter { lead, tail } => {
+                    (powu(n, tail.len()), powu(n, lead.len() + tail.len()))
+                }
+                ClassShape::Eps { t } => {
+                    let e = powu(n, compact + 2 * t);
+                    (e, e)
+                }
+            };
+            class.src_len = src_len;
+            class.touched = touched;
+            max_members = max_members.max(class.members.len());
+            // Kernel plan: each member's destination map, built once.
+            for m in &mut class.members {
+                m.dsts = match &class.shape {
+                    ClassShape::Axpy | ClassShape::Eps { .. } => {
+                        permute_dst_map(n, m.axes.len(), &m.axes)
+                    }
+                    ClassShape::Scatter { lead, tail } => {
+                        scatter_diag_dsts(n, lead, tail, &m.axes)
+                    }
+                };
+            }
         }
+        // Per-node kernel plans.
+        let kernels: Vec<NodeKernel> = b
+            .nodes
+            .iter()
+            .map(|node| {
+                let in_order = match node.op.src() {
+                    Src::Input => k,
+                    Src::Node(p) => b.nodes[p].order,
+                };
+                node_kernel(&node.op, n, in_order)
+            })
+            .collect();
 
         // Cost-driven execution order: DFS per root, heaviest subtree
         // first, classes emitted at their node.
@@ -1014,7 +1568,11 @@ impl LayerSchedule {
                 Src::Node(i) => classes_at[i].push(ci),
             }
         }
-        let mut work: Vec<u128> = b.nodes.iter().map(|nd| nd.cost.work()).collect();
+        let mut work: Vec<u128> = b
+            .nodes
+            .iter()
+            .map(|nd| nd.cost.work().saturating_add(nd.extra_work))
+            .collect();
         for i in (0..nn).rev() {
             let mut w = work[i];
             for &ch in &children[i] {
@@ -1070,9 +1628,12 @@ impl LayerSchedule {
             terms: sinks.len(),
             nodes: b.nodes.len(),
             chain_ops: raw.chain_ops,
-            shared_ops: raw.chain_ops - b.nodes.len(),
+            // CSE's own elision, measured before fusion removed nodes.
+            shared_ops: raw.chain_ops - cse_nodes,
             prefix_nodes: raw.nodes.len(),
             classes: classes.len(),
+            fused_nodes,
+            bytes_saved_estimate: bytes_saved,
             estimated_flops: estimated.flops,
             estimated_bytes: estimated.bytes,
         };
@@ -1094,7 +1655,10 @@ impl LayerSchedule {
             k,
             l,
             nodes: b.nodes,
+            kernels,
             sinks,
+            sink_refs,
+            max_members,
             classes,
             order,
             subtrees,
@@ -1365,24 +1929,45 @@ impl LayerSchedule {
             .any(|m| coeffs[m.term] != 0.0)
     }
 
-    /// Gather the folded per-member weights of class `ci` into `pats`
-    /// (members with a zero coefficient are skipped). This is the per-call
-    /// λ-gather that keeps the class structure weight-independent: mutate
-    /// the layer's coefficients in place and the very next execute sees
-    /// the new values.
-    fn gather<'a>(
-        &'a self,
+    /// Gather the folded per-member weights of class `ci` into the
+    /// caller's (arena-pooled) scratch: `act_idx[..na]` holds the active
+    /// member indices, `act_w[..na]` their `λ·sign` weights (zero
+    /// coefficients skipped, member order preserved — the same filtering
+    /// the pre-plan kernels applied). This is the per-call λ-gather that
+    /// keeps the class structure weight-independent: mutate the layer's
+    /// coefficients in place and the very next execute sees the new
+    /// values.
+    fn gather_active(
+        &self,
         ci: usize,
         coeffs: &[f64],
-        pats: &mut Vec<(&'a [usize], f64)>,
-    ) {
-        pats.clear();
-        for m in &self.classes[ci].members {
+        act_idx: &mut [usize],
+        act_w: &mut [f64],
+    ) -> usize {
+        let mut na = 0usize;
+        for (mi, m) in self.classes[ci].members.iter().enumerate() {
             let w = coeffs[m.term] * m.sign;
             if w != 0.0 {
-                pats.push((&m.axes, w));
+                act_idx[na] = mi;
+                act_w[na] = w;
+                na += 1;
             }
         }
+        na
+    }
+
+    /// Measured bytes of one class pass with `active` members over `items`
+    /// batch items: the source is read once, each active member
+    /// read-modify-writes its touched destinations. Accumulated locally by
+    /// the executors and flushed once per walk.
+    fn class_pass_bytes(&self, ci: usize, active: usize, items: usize) -> u64 {
+        let class = &self.classes[ci];
+        class
+            .src_len
+            .saturating_add(2u128.saturating_mul(active as u128).saturating_mul(class.touched))
+            .saturating_mul(8)
+            .saturating_mul(items as u128)
+            .min(u64::MAX as u128) as u64
     }
 
     /// `out += Σ_i coeffs[i] · F(d_i)(v)` via the folded class walk: one
@@ -1415,39 +2000,55 @@ impl LayerSchedule {
         self.check_input(v)?;
         self.check_output(out)?;
         self.check_coeffs(coeffs)?;
-        let mut refs = vec![0usize; self.nodes.len()];
+        let mut refs = arena.acquire_indices(self.nodes.len());
+        refs.fill(0);
         for &ci in classes {
             if self.class_active(ci, coeffs) {
                 self.count_chain(self.classes[ci].src, &mut refs);
             }
         }
-        let mut bufs: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
-        let mut pats: Vec<(&[usize], f64)> = Vec::new();
+        let mut bufs = arena.acquire_tensor_slots(self.nodes.len());
+        let mut act_idx = arena.acquire_indices(self.max_members);
+        let mut act_w = arena.acquire_raw(self.max_members);
+        let mut moved = 0u64;
         for &ci in classes {
-            self.gather(ci, coeffs, &mut pats);
-            if pats.is_empty() {
+            let na = self.gather_active(ci, coeffs, &mut act_idx, &mut act_w);
+            if na == 0 {
                 continue;
             }
             let class = &self.classes[ci];
-            self.materialize(class.src, v, &mut bufs, arena);
+            self.materialize(class.src, v, &mut bufs, arena, &mut moved);
             match &class.shape {
-                ClassShape::Axpy => {
-                    self.resolve(class.src, v, &bufs)
-                        .axpy_permuted_multi_into(&pats, out);
-                }
-                ClassShape::Scatter { lead, tail } => {
-                    self.resolve(class.src, v, &bufs)
-                        .scatter_broadcast_diagonals_multi_axpy(lead, tail, &pats, out);
-                }
                 ClassShape::Eps { t } => {
-                    let tmp = self.eps_expand(class.src, *t, v, &bufs, arena);
-                    tmp.axpy_permuted_multi_into(&pats, out);
+                    let tmp = self.eps_expand(class.src, *t, v, &bufs, arena, &mut moved);
+                    replay_class(
+                        &tmp.data,
+                        &class.members,
+                        &act_idx[..na],
+                        &act_w[..na],
+                        &mut out.data,
+                    );
                     arena.release(tmp);
+                }
+                _ => {
+                    let x = self.resolve(class.src, v, &bufs);
+                    replay_class(
+                        &x.data,
+                        &class.members,
+                        &act_idx[..na],
+                        &act_w[..na],
+                        &mut out.data,
+                    );
                 }
             }
             SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
+            moved = moved.saturating_add(self.class_pass_bytes(ci, na, 1));
             self.release_chain(class.src, &mut refs, &mut bufs, arena);
         }
+        flush_measured_bytes(moved);
+        arena.release_raw(act_w);
+        arena.release_indices(act_idx);
+        arena.release_indices(refs);
         self.drain(bufs, arena);
         Ok(())
     }
@@ -1479,57 +2080,76 @@ impl LayerSchedule {
         for row in coeff_rows {
             self.check_coeffs(row)?;
         }
-        let mut refs = vec![0usize; self.nodes.len()];
-        let active: Vec<bool> = (0..self.classes.len())
-            .map(|ci| coeff_rows.iter().any(|row| self.class_active(ci, row)))
-            .collect();
+        let mut refs = arena.acquire_indices(self.nodes.len());
+        refs.fill(0);
+        // 0/1 class-activity mask (index scratch, so the warm path stays
+        // allocation-free).
+        let mut active = arena.acquire_indices(self.classes.len());
+        for (ci, slot) in active.iter_mut().enumerate() {
+            *slot = usize::from(coeff_rows.iter().any(|row| self.class_active(ci, row)));
+        }
         for &ci in &self.order {
-            if active[ci] {
+            if active[ci] != 0 {
                 self.count_chain(self.classes[ci].src, &mut refs);
             }
         }
-        let mut bufs: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
-        let mut pats: Vec<(&[usize], f64)> = Vec::new();
+        let mut bufs = arena.acquire_tensor_slots(self.nodes.len());
+        let mut act_idx = arena.acquire_indices(self.max_members);
+        let mut act_w = arena.acquire_raw(self.max_members);
+        let mut moved = 0u64;
         for &ci in &self.order {
-            if !active[ci] {
+            if active[ci] == 0 {
                 continue;
             }
             let class = &self.classes[ci];
-            self.materialize(class.src, v, &mut bufs, arena);
+            self.materialize(class.src, v, &mut bufs, arena, &mut moved);
             match &class.shape {
                 ClassShape::Eps { t } => {
-                    // Expand once per class; only the closing multi-axpy is
+                    // Expand once per class; only the closing replay is
                     // per-channel.
-                    let tmp = self.eps_expand(class.src, *t, v, &bufs, arena);
+                    let tmp = self.eps_expand(class.src, *t, v, &bufs, arena, &mut moved);
                     for (row, out) in coeff_rows.iter().zip(outs.iter_mut()) {
-                        self.gather(ci, row, &mut pats);
-                        if !pats.is_empty() {
-                            tmp.axpy_permuted_multi_into(&pats, out);
+                        let na = self.gather_active(ci, row, &mut act_idx, &mut act_w);
+                        if na > 0 {
+                            replay_class(
+                                &tmp.data,
+                                &class.members,
+                                &act_idx[..na],
+                                &act_w[..na],
+                                &mut out.data,
+                            );
                             SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
+                            moved = moved.saturating_add(self.class_pass_bytes(ci, na, 1));
                         }
                     }
                     arena.release(tmp);
                 }
-                shape => {
+                _ => {
                     let x = self.resolve(class.src, v, &bufs);
                     for (row, out) in coeff_rows.iter().zip(outs.iter_mut()) {
-                        self.gather(ci, row, &mut pats);
-                        if pats.is_empty() {
+                        let na = self.gather_active(ci, row, &mut act_idx, &mut act_w);
+                        if na == 0 {
                             continue;
                         }
-                        match shape {
-                            ClassShape::Axpy => x.axpy_permuted_multi_into(&pats, out),
-                            ClassShape::Scatter { lead, tail } => {
-                                x.scatter_broadcast_diagonals_multi_axpy(lead, tail, &pats, out)
-                            }
-                            ClassShape::Eps { .. } => unreachable!("handled above"),
-                        }
+                        replay_class(
+                            &x.data,
+                            &class.members,
+                            &act_idx[..na],
+                            &act_w[..na],
+                            &mut out.data,
+                        );
                         SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
+                        moved = moved.saturating_add(self.class_pass_bytes(ci, na, 1));
                     }
                 }
             }
             self.release_chain(class.src, &mut refs, &mut bufs, arena);
         }
+        flush_measured_bytes(moved);
+        arena.release_raw(act_w);
+        arena.release_indices(act_idx);
+        arena.release_indices(active);
+        arena.release_indices(refs);
         self.drain(bufs, arena);
         Ok(())
     }
@@ -1565,37 +2185,41 @@ impl LayerSchedule {
         F: FnMut(usize, &Tensor) -> Result<()>,
     {
         self.check_input(v)?;
-        let mut refs = vec![0usize; self.nodes.len()];
+        let mut refs = arena.acquire_indices(self.nodes.len());
+        refs.fill(0);
         for &si in terms {
             self.count_chain(self.sinks[si].src, &mut refs);
         }
-        let mut bufs: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
+        let mut bufs = arena.acquire_tensor_slots(self.nodes.len());
         let mut term_out = arena.acquire(self.n, self.l);
         let mut result = Ok(());
+        let mut moved = 0u64;
         for &si in terms {
             let sink = &self.sinks[si];
-            self.materialize(sink.src, v, &mut bufs, arena);
+            self.materialize(sink.src, v, &mut bufs, arena, &mut moved);
             term_out.data.fill(0.0);
+            // Replay this term's precompiled destination map (shared with
+            // its folded-class membership) with weight `sign`: each
+            // destination receives exactly one contribution onto the
+            // zeroed buffer, so the term tensor stays bitwise equal to
+            // `MultPlan::apply`.
+            let (ci, mi) = self.sink_refs[si];
+            let member = &self.classes[ci].members[mi];
             match &sink.kind {
-                SinkKind::AxpyPermuted { axes } => {
-                    self.resolve(sink.src, v, &bufs)
-                        .axpy_permuted_into(sink.sign, axes, &mut term_out);
+                SinkKind::EpsExpand { t, .. } => {
+                    let tmp = self.eps_expand(sink.src, *t, v, &bufs, arena, &mut moved);
+                    tmp.axpy_dsts_into(&member.dsts, member.sign, &mut term_out);
+                    arena.release(tmp);
                 }
-                SinkKind::ScatterDiagonals { lead, tail, axes } => {
-                    self.resolve(sink.src, v, &bufs).scatter_broadcast_diagonals_axpy(
-                        lead,
-                        tail,
-                        axes,
-                        sink.sign,
+                _ => {
+                    self.resolve(sink.src, v, &bufs).axpy_dsts_into(
+                        &member.dsts,
+                        member.sign,
                         &mut term_out,
                     );
                 }
-                SinkKind::EpsExpand { t, axes } => {
-                    let tmp = self.eps_expand(sink.src, *t, v, &bufs, arena);
-                    tmp.axpy_permuted_into(sink.sign, axes, &mut term_out);
-                    arena.release(tmp);
-                }
             }
+            moved = moved.saturating_add(self.class_pass_bytes(ci, 1, 1));
             // On a callback error, stop — but still fall through to the
             // release/drain below so every buffer returns to the arena
             // (dropping them would skew the zero-allocation counters).
@@ -1605,7 +2229,9 @@ impl LayerSchedule {
             }
             self.release_chain(sink.src, &mut refs, &mut bufs, arena);
         }
+        flush_measured_bytes(moved);
         arena.release(term_out);
+        arena.release_indices(refs);
         self.drain(bufs, arena);
         result
     }
@@ -1683,39 +2309,44 @@ impl LayerSchedule {
         self.check_batch_input(v)?;
         self.check_batch_output(out, v.batch())?;
         self.check_coeffs(coeffs)?;
-        let mut refs = vec![0usize; self.nodes.len()];
+        let mut refs = arena.acquire_indices(self.nodes.len());
+        refs.fill(0);
         for &ci in classes {
             if self.class_active(ci, coeffs) {
                 self.count_chain(self.classes[ci].src, &mut refs);
             }
         }
-        let mut bufs: Vec<Option<BatchTensor>> = (0..self.nodes.len()).map(|_| None).collect();
-        let mut pats: Vec<(&[usize], f64)> = Vec::new();
+        let mut bufs = arena.acquire_batch_slots(self.nodes.len());
+        let mut act_idx = arena.acquire_indices(self.max_members);
+        let mut act_w = arena.acquire_raw(self.max_members);
+        let mut moved = 0u64;
         for &ci in classes {
-            self.gather(ci, coeffs, &mut pats);
-            if pats.is_empty() {
+            let na = self.gather_active(ci, coeffs, &mut act_idx, &mut act_w);
+            if na == 0 {
                 continue;
             }
             let class = &self.classes[ci];
-            self.materialize_batch(class.src, v, &mut bufs, arena);
+            self.materialize_batch(class.src, v, &mut bufs, arena, &mut moved);
             match &class.shape {
-                ClassShape::Axpy => {
-                    self.resolve_batch(class.src, v, &bufs)
-                        .axpy_permuted_multi_into(&pats, out);
-                }
-                ClassShape::Scatter { lead, tail } => {
-                    self.resolve_batch(class.src, v, &bufs)
-                        .scatter_broadcast_diagonals_multi_axpy(lead, tail, &pats, out);
-                }
                 ClassShape::Eps { t } => {
-                    let tmp = self.eps_expand_batch(class.src, *t, v, &bufs, arena);
-                    tmp.axpy_permuted_multi_into(&pats, out);
+                    let tmp =
+                        self.eps_expand_batch(class.src, *t, v, &bufs, arena, &mut moved);
+                    replay_class_batch(&tmp, &class.members, &act_idx[..na], &act_w[..na], out);
                     arena.release_batch(tmp);
+                }
+                _ => {
+                    let x = self.resolve_batch(class.src, v, &bufs);
+                    replay_class_batch(x, &class.members, &act_idx[..na], &act_w[..na], out);
                 }
             }
             SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
+            moved = moved.saturating_add(self.class_pass_bytes(ci, na, v.batch()));
             self.release_chain_batch(class.src, &mut refs, &mut bufs, arena);
         }
+        flush_measured_bytes(moved);
+        arena.release_raw(act_w);
+        arena.release_indices(act_idx);
+        arena.release_indices(refs);
         self.drain_batch(bufs, arena);
         Ok(())
     }
@@ -1736,37 +2367,35 @@ impl LayerSchedule {
         F: FnMut(usize, &BatchTensor) -> Result<()>,
     {
         self.check_batch_input(v)?;
-        let mut refs = vec![0usize; self.nodes.len()];
+        let mut refs = arena.acquire_indices(self.nodes.len());
+        refs.fill(0);
         for sink in &self.sinks {
             self.count_chain(sink.src, &mut refs);
         }
-        let mut bufs: Vec<Option<BatchTensor>> = (0..self.nodes.len()).map(|_| None).collect();
+        let mut bufs = arena.acquire_batch_slots(self.nodes.len());
         let mut term_out = arena.acquire_batch(self.n, self.l, v.batch());
         let mut result = Ok(());
+        let mut moved = 0u64;
         for (si, sink) in self.sinks.iter().enumerate() {
-            self.materialize_batch(sink.src, v, &mut bufs, arena);
+            self.materialize_batch(sink.src, v, &mut bufs, arena, &mut moved);
             term_out.data_mut().fill(0.0);
+            let (ci, mi) = self.sink_refs[si];
+            let member = &self.classes[ci].members[mi];
             match &sink.kind {
-                SinkKind::AxpyPermuted { axes } => {
-                    self.resolve_batch(sink.src, v, &bufs)
-                        .axpy_permuted_into(sink.sign, axes, &mut term_out);
-                }
-                SinkKind::ScatterDiagonals { lead, tail, axes } => {
-                    self.resolve_batch(sink.src, v, &bufs)
-                        .scatter_broadcast_diagonals_axpy(
-                            lead,
-                            tail,
-                            axes,
-                            sink.sign,
-                            &mut term_out,
-                        );
-                }
-                SinkKind::EpsExpand { t, axes } => {
-                    let tmp = self.eps_expand_batch(sink.src, *t, v, &bufs, arena);
-                    tmp.axpy_permuted_into(sink.sign, axes, &mut term_out);
+                SinkKind::EpsExpand { t, .. } => {
+                    let tmp = self.eps_expand_batch(sink.src, *t, v, &bufs, arena, &mut moved);
+                    tmp.axpy_dsts_into(&member.dsts, member.sign, &mut term_out);
                     arena.release_batch(tmp);
                 }
+                _ => {
+                    self.resolve_batch(sink.src, v, &bufs).axpy_dsts_into(
+                        &member.dsts,
+                        member.sign,
+                        &mut term_out,
+                    );
+                }
             }
+            moved = moved.saturating_add(self.class_pass_bytes(ci, 1, v.batch()));
             // As in `execute_map`: on a callback error, stop but still
             // fall through so every buffer returns to the arena.
             if let Err(e) = f(si, &term_out) {
@@ -1775,7 +2404,9 @@ impl LayerSchedule {
             }
             self.release_chain_batch(sink.src, &mut refs, &mut bufs, arena);
         }
+        flush_measured_bytes(moved);
         arena.release_batch(term_out);
+        arena.release_indices(refs);
         self.drain_batch(bufs, arena);
         result
     }
@@ -1806,55 +2437,68 @@ impl LayerSchedule {
         for row in coeff_rows {
             self.check_coeffs(row)?;
         }
-        let mut refs = vec![0usize; self.nodes.len()];
-        let active: Vec<bool> = (0..self.classes.len())
-            .map(|ci| coeff_rows.iter().any(|row| self.class_active(ci, row)))
-            .collect();
+        let mut refs = arena.acquire_indices(self.nodes.len());
+        refs.fill(0);
+        let mut active = arena.acquire_indices(self.classes.len());
+        for (ci, slot) in active.iter_mut().enumerate() {
+            *slot = usize::from(coeff_rows.iter().any(|row| self.class_active(ci, row)));
+        }
         for &ci in &self.order {
-            if active[ci] {
+            if active[ci] != 0 {
                 self.count_chain(self.classes[ci].src, &mut refs);
             }
         }
-        let mut bufs: Vec<Option<BatchTensor>> = (0..self.nodes.len()).map(|_| None).collect();
-        let mut pats: Vec<(&[usize], f64)> = Vec::new();
+        let mut bufs = arena.acquire_batch_slots(self.nodes.len());
+        let mut act_idx = arena.acquire_indices(self.max_members);
+        let mut act_w = arena.acquire_raw(self.max_members);
+        let mut moved = 0u64;
         for &ci in &self.order {
-            if !active[ci] {
+            if active[ci] == 0 {
                 continue;
             }
             let class = &self.classes[ci];
-            self.materialize_batch(class.src, v, &mut bufs, arena);
+            self.materialize_batch(class.src, v, &mut bufs, arena, &mut moved);
             match &class.shape {
                 ClassShape::Eps { t } => {
-                    let tmp = self.eps_expand_batch(class.src, *t, v, &bufs, arena);
+                    let tmp =
+                        self.eps_expand_batch(class.src, *t, v, &bufs, arena, &mut moved);
                     for (row, out) in coeff_rows.iter().zip(outs.iter_mut()) {
-                        self.gather(ci, row, &mut pats);
-                        if !pats.is_empty() {
-                            tmp.axpy_permuted_multi_into(&pats, out);
+                        let na = self.gather_active(ci, row, &mut act_idx, &mut act_w);
+                        if na > 0 {
+                            replay_class_batch(
+                                &tmp,
+                                &class.members,
+                                &act_idx[..na],
+                                &act_w[..na],
+                                out,
+                            );
                             SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
+                            moved =
+                                moved.saturating_add(self.class_pass_bytes(ci, na, v.batch()));
                         }
                     }
                     arena.release_batch(tmp);
                 }
-                shape => {
+                _ => {
                     let x = self.resolve_batch(class.src, v, &bufs);
                     for (row, out) in coeff_rows.iter().zip(outs.iter_mut()) {
-                        self.gather(ci, row, &mut pats);
-                        if pats.is_empty() {
+                        let na = self.gather_active(ci, row, &mut act_idx, &mut act_w);
+                        if na == 0 {
                             continue;
                         }
-                        match shape {
-                            ClassShape::Axpy => x.axpy_permuted_multi_into(&pats, out),
-                            ClassShape::Scatter { lead, tail } => {
-                                x.scatter_broadcast_diagonals_multi_axpy(lead, tail, &pats, out)
-                            }
-                            ClassShape::Eps { .. } => unreachable!("handled above"),
-                        }
+                        replay_class_batch(x, &class.members, &act_idx[..na], &act_w[..na], out);
                         SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
+                        moved = moved.saturating_add(self.class_pass_bytes(ci, na, v.batch()));
                     }
                 }
             }
             self.release_chain_batch(class.src, &mut refs, &mut bufs, arena);
         }
+        flush_measured_bytes(moved);
+        arena.release_raw(act_w);
+        arena.release_indices(act_idx);
+        arena.release_indices(active);
+        arena.release_indices(refs);
         self.drain_batch(bufs, arena);
         Ok(())
     }
@@ -1867,6 +2511,7 @@ impl LayerSchedule {
         v: &BatchTensor,
         bufs: &mut [Option<BatchTensor>],
         arena: &mut ScratchArena,
+        moved: &mut u64,
     ) {
         let Src::Node(i) = src else {
             return;
@@ -1875,26 +2520,38 @@ impl LayerSchedule {
             return;
         }
         let parent_src = self.nodes[i].op.src();
-        self.materialize_batch(parent_src, v, bufs, arena);
+        self.materialize_batch(parent_src, v, bufs, arena, moved);
         let mut out = arena.acquire_batch(self.n, self.nodes[i].order, v.batch());
         {
             let parent = self.resolve_batch(parent_src, v, bufs);
-            match &self.nodes[i].op {
-                Op::Permute { axes, .. } => parent.permute_axes_into(axes, &mut out),
-                Op::ContractDiagonal { m, .. } => {
+            match (&self.nodes[i].op, &self.kernels[i]) {
+                (Op::Permute { .. }, NodeKernel::Permute { map, block }) => {
+                    parent.permute_blocks_into(map, *block, &mut out)
+                }
+                (Op::ContractDiagonal { m, .. }, _) => {
                     parent.contract_trailing_diagonal_into(*m, &mut out)
                 }
-                Op::TracePair { .. } => parent.trace_trailing_pair_into(&mut out),
-                Op::TracePairEps { .. } => parent.trace_trailing_pair_eps_into(&mut out),
-                Op::LeviCivita { s, .. } => {
-                    parent.levi_civita_contract_trailing_into(*s, &mut out)
+                (Op::TracePair { .. }, _) => parent.trace_trailing_pair_into(&mut out),
+                (Op::TracePairEps { .. }, _) => parent.trace_trailing_pair_eps_into(&mut out),
+                (Op::LeviCivita { s, .. }, NodeKernel::LeviCivita { entries }) => {
+                    parent.levi_civita_entries_into(*s, entries, &mut out)
                 }
-                Op::ExtractDiagonals { groups, .. } => {
-                    parent.extract_group_diagonals_into(groups, &mut out)
+                (Op::ExtractDiagonals { .. }, NodeKernel::Gather { offs })
+                | (Op::PermutedExtract { .. }, NodeKernel::Gather { offs }) => {
+                    parent.gather_with(offs, &mut out)
                 }
+                (Op::PermutedContract { .. }, NodeKernel::GatherContract { base, dstride }) => {
+                    parent.gather_contract_with(base, *dstride, &mut out)
+                }
+                (
+                    Op::PermutedTracePairEps { .. },
+                    NodeKernel::GatherTraceEps { base, sa, sb },
+                ) => parent.gather_eps_trace_with(base, *sa, *sb, &mut out),
+                _ => unreachable!("kernel plan out of sync with op table"),
             }
         }
         EXECUTED_NODES.fetch_add(1, Ordering::Relaxed);
+        *moved = moved.saturating_add(node_bytes(&self.nodes[i].cost, v.batch()));
         bufs[i] = Some(out);
     }
 
@@ -1918,12 +2575,20 @@ impl LayerSchedule {
         v: &BatchTensor,
         bufs: &[Option<BatchTensor>],
         arena: &mut ScratchArena,
+        moved: &mut u64,
     ) -> BatchTensor {
         let x = self.resolve_batch(src, v, bufs);
         let order = x.order() + 2 * t;
         let (n, batch) = (x.n(), x.batch());
         let mut tmp = arena.acquire_batch(n, order, batch);
         sp::eps_top_expand_batch_into(x, t, &mut tmp);
+        *moved = moved.saturating_add(node_bytes(
+            &OpCost {
+                flops: 0,
+                bytes: 8 * (x.item_len() as u128 + tmp.item_len() as u128),
+            },
+            batch,
+        ));
         tmp
     }
 
@@ -1946,10 +2611,13 @@ impl LayerSchedule {
         }
     }
 
-    fn drain_batch(&self, bufs: Vec<Option<BatchTensor>>, arena: &mut ScratchArena) {
-        for buf in bufs.into_iter().flatten() {
-            arena.release_batch(buf);
+    fn drain_batch(&self, mut bufs: Vec<Option<BatchTensor>>, arena: &mut ScratchArena) {
+        for slot in bufs.iter_mut() {
+            if let Some(buf) = slot.take() {
+                arena.release_batch(buf);
+            }
         }
+        arena.release_batch_slots(bufs);
     }
 
     /// Compute (recursively) every not-yet-materialised node on the chain
@@ -1961,6 +2629,7 @@ impl LayerSchedule {
         v: &Tensor,
         bufs: &mut [Option<Tensor>],
         arena: &mut ScratchArena,
+        moved: &mut u64,
     ) {
         let Src::Node(i) = src else {
             return;
@@ -1969,26 +2638,38 @@ impl LayerSchedule {
             return;
         }
         let parent_src = self.nodes[i].op.src();
-        self.materialize(parent_src, v, bufs, arena);
+        self.materialize(parent_src, v, bufs, arena, moved);
         let mut out = arena.acquire(self.n, self.nodes[i].order);
         {
             let parent = self.resolve(parent_src, v, bufs);
-            match &self.nodes[i].op {
-                Op::Permute { axes, .. } => parent.permute_axes_into(axes, &mut out),
-                Op::ContractDiagonal { m, .. } => {
+            match (&self.nodes[i].op, &self.kernels[i]) {
+                (Op::Permute { .. }, NodeKernel::Permute { map, block }) => {
+                    parent.permute_blocks_into(map, *block, &mut out)
+                }
+                (Op::ContractDiagonal { m, .. }, _) => {
                     parent.contract_trailing_diagonal_into(*m, &mut out)
                 }
-                Op::TracePair { .. } => parent.trace_trailing_pair_into(&mut out),
-                Op::TracePairEps { .. } => parent.trace_trailing_pair_eps_into(&mut out),
-                Op::LeviCivita { s, .. } => {
-                    parent.levi_civita_contract_trailing_into(*s, &mut out)
+                (Op::TracePair { .. }, _) => parent.trace_trailing_pair_into(&mut out),
+                (Op::TracePairEps { .. }, _) => parent.trace_trailing_pair_eps_into(&mut out),
+                (Op::LeviCivita { s, .. }, NodeKernel::LeviCivita { entries }) => {
+                    parent.levi_civita_entries_into(*s, entries, &mut out)
                 }
-                Op::ExtractDiagonals { groups, .. } => {
-                    parent.extract_group_diagonals_into(groups, &mut out)
+                (Op::ExtractDiagonals { .. }, NodeKernel::Gather { offs })
+                | (Op::PermutedExtract { .. }, NodeKernel::Gather { offs }) => {
+                    parent.gather_with(offs, &mut out)
                 }
+                (Op::PermutedContract { .. }, NodeKernel::GatherContract { base, dstride }) => {
+                    parent.gather_contract_with(base, *dstride, &mut out)
+                }
+                (
+                    Op::PermutedTracePairEps { .. },
+                    NodeKernel::GatherTraceEps { base, sa, sb },
+                ) => parent.gather_eps_trace_with(base, *sa, *sb, &mut out),
+                _ => unreachable!("kernel plan out of sync with op table"),
             }
         }
         EXECUTED_NODES.fetch_add(1, Ordering::Relaxed);
+        *moved = moved.saturating_add(node_bytes(&self.nodes[i].cost, 1));
         bufs[i] = Some(out);
     }
 
@@ -2007,6 +2688,7 @@ impl LayerSchedule {
         v: &Tensor,
         bufs: &[Option<Tensor>],
         arena: &mut ScratchArena,
+        moved: &mut u64,
     ) -> Tensor {
         let x = self.resolve(src, v, bufs);
         let order = x.order + 2 * t;
@@ -2014,6 +2696,13 @@ impl LayerSchedule {
         let n = x.n;
         let mut tmp = arena.acquire(n, order);
         sp::eps_top_expand_into(x, t, &mut tmp);
+        *moved = moved.saturating_add(node_bytes(
+            &OpCost {
+                flops: 0,
+                bytes: 8 * (x.data.len() as u128 + tmp.data.len() as u128),
+            },
+            1,
+        ));
         tmp
     }
 
@@ -2044,10 +2733,13 @@ impl LayerSchedule {
         }
     }
 
-    fn drain(&self, bufs: Vec<Option<Tensor>>, arena: &mut ScratchArena) {
-        for buf in bufs.into_iter().flatten() {
-            arena.release(buf);
+    fn drain(&self, mut bufs: Vec<Option<Tensor>>, arena: &mut ScratchArena) {
+        for slot in bufs.iter_mut() {
+            if let Some(buf) = slot.take() {
+                arena.release(buf);
+            }
         }
+        arena.release_tensor_slots(bufs);
     }
 }
 
@@ -2738,6 +3430,217 @@ mod tests {
             panic!("kind changed variant");
         };
         assert_eq!(axes, &vec![1, 0]);
+    }
+
+    /// Strided fusion must leave every execute path bitwise unchanged
+    /// while strictly reducing the cost model's bytes (never its flops)
+    /// whenever it fires.
+    #[test]
+    fn strided_fusion_is_bitwise_and_reduces_bytes() {
+        let mut rng = Rng::new(914);
+        for (group, n, k, l) in [
+            (Group::Symmetric, 4usize, 3usize, 2usize),
+            (Group::Symmetric, 3, 3, 3),
+            (Group::Orthogonal, 5, 4, 2),
+            (Group::Orthogonal, 4, 3, 3),
+            (Group::Symplectic, 4, 3, 3),
+            (Group::SpecialOrthogonal, 3, 3, 1),
+            (Group::SpecialOrthogonal, 3, 3, 2), // jellyfish present
+        ] {
+            let plans = spanning_plans(group, n, k, l).unwrap();
+            let fused = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+            let unfused = LayerSchedule::compile_unfused(group, n, k, l, &plans).unwrap();
+            let fs = fused.stats();
+            let us = unfused.stats();
+            assert_eq!(us.fused_nodes, 0);
+            assert_eq!(
+                fs.estimated_flops, us.estimated_flops,
+                "{group} ({k},{l}): fusion must not change flops"
+            );
+            assert_eq!(
+                fs.nodes + fs.fused_nodes,
+                us.nodes,
+                "{group} ({k},{l}): each fusion elides exactly one permute node"
+            );
+            assert_eq!(
+                us.estimated_bytes - fs.estimated_bytes,
+                fs.bytes_saved_estimate,
+                "{group} ({k},{l}): bytes saved must equal the estimate gap"
+            );
+            if fs.fused_nodes > 0 {
+                assert!(
+                    fs.estimated_bytes < us.estimated_bytes,
+                    "{group} ({k},{l}): fusion must strictly reduce bytes: {fs:?}"
+                );
+            }
+            // Bitwise equality of the folded walk…
+            let coeffs = random_coeffs(plans.len(), &mut rng);
+            let v = Tensor::random(n, k, &mut rng);
+            let mut arena = ScratchArena::new();
+            let mut a = Tensor::zeros(n, l);
+            let mut b = Tensor::zeros(n, l);
+            fused.execute(&v, &coeffs, &mut a, &mut arena).unwrap();
+            unfused.execute(&v, &coeffs, &mut b, &mut arena).unwrap();
+            assert!(
+                a.allclose(&b, 0.0),
+                "{group} ({k},{l}): fused execute diverges by {}",
+                a.max_abs_diff(&b)
+            );
+            // …and of the per-term map walk against MultPlan::apply.
+            fused
+                .execute_map(&v, &mut arena, |i, term| {
+                    let want = plans[i].apply(&v).unwrap();
+                    assert!(
+                        term.allclose(&want, 0.0),
+                        "{group} ({k},{l}) term {i}: fused map walk diverges by {}",
+                        term.max_abs_diff(&want)
+                    );
+                    Ok(())
+                })
+                .unwrap();
+        }
+    }
+
+    /// Configurations with crossing diagrams must actually fuse something
+    /// (the non-identity σ_k permutes feed contractions single-consumer).
+    #[test]
+    fn fusion_fires_on_crossing_chains() {
+        for (group, n, k, l) in [
+            (Group::Symmetric, 4usize, 3usize, 2usize),
+            (Group::Orthogonal, 5, 4, 2),
+            (Group::Symplectic, 4, 4, 2),
+        ] {
+            let plans = spanning_plans(group, n, k, l).unwrap();
+            let fused = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+            assert!(
+                fused.stats().fused_nodes > 0,
+                "{group} ({k},{l}): expected strided fusion to fire: {:?}",
+                fused.stats()
+            );
+            assert!(fused.stats().bytes_saved_estimate > 0);
+        }
+    }
+
+    /// The kernel-plan replay must stay interchangeable with the
+    /// standalone multi-pattern kernels in `tensor::ops` — the executable
+    /// form of the "same visit order" claim both sides document. Runs over
+    /// the real classes of compiled schedules for three groups (axpy,
+    /// scatter and ε shapes all appear), including single-member classes
+    /// (both sides' P=1 fast paths).
+    #[test]
+    fn replay_matches_standalone_multi_kernels() {
+        let mut rng = Rng::new(917);
+        for (group, n, k, l) in [
+            (Group::Symmetric, 3usize, 2usize, 2usize),
+            (Group::Orthogonal, 3, 2, 2),
+            (Group::Symplectic, 4, 2, 2),
+        ] {
+            let plans = spanning_plans(group, n, k, l).unwrap();
+            let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+            let coeffs = random_coeffs(plans.len(), &mut rng);
+            for (ci, class) in schedule.classes.iter().enumerate() {
+                let mut act_idx = vec![0usize; class.members.len()];
+                let mut act_w = vec![0.0; class.members.len()];
+                let na = schedule.gather_active(ci, &coeffs, &mut act_idx, &mut act_w);
+                if na == 0 {
+                    continue;
+                }
+                let out_order = class.members[0].axes.len();
+                let src_order = match &class.shape {
+                    ClassShape::Scatter { tail, .. } => tail.len(),
+                    // Axpy reads the chain output directly; the ε replay
+                    // reads the already-expanded tensor — both have the
+                    // pattern's own order.
+                    ClassShape::Axpy | ClassShape::Eps { .. } => out_order,
+                };
+                let src = Tensor::random(n, src_order, &mut rng);
+                let mut got = Tensor::random(n, out_order, &mut rng);
+                let mut want = got.clone();
+                replay_class(
+                    &src.data,
+                    &class.members,
+                    &act_idx[..na],
+                    &act_w[..na],
+                    &mut got.data,
+                );
+                let pats: Vec<(&[usize], f64)> = act_idx[..na]
+                    .iter()
+                    .zip(&act_w[..na])
+                    .map(|(&mi, &w)| (class.members[mi].axes.as_slice(), w))
+                    .collect();
+                match &class.shape {
+                    ClassShape::Axpy | ClassShape::Eps { .. } => {
+                        src.axpy_permuted_multi_into(&pats, &mut want)
+                    }
+                    ClassShape::Scatter { lead, tail } => {
+                        src.scatter_broadcast_diagonals_multi_axpy(lead, tail, &pats, &mut want)
+                    }
+                }
+                assert!(
+                    got.allclose(&want, 0.0),
+                    "{group} class {ci} ({} members, {na} active): replay diverges \
+                     from the standalone kernel by {}",
+                    class.members.len(),
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+
+    /// The measured bytes-moved counter grows with every walk (lower bound
+    /// only: other tests run concurrently against the process-wide
+    /// counter; the bench asserts exact deltas single-threaded).
+    #[test]
+    fn measured_bytes_counter_grows() {
+        let mut rng = Rng::new(915);
+        let plans = spanning_plans(Group::Symmetric, 3, 3, 2).unwrap();
+        let schedule = LayerSchedule::compile(Group::Symmetric, 3, 3, 2, &plans).unwrap();
+        let coeffs = random_coeffs(plans.len(), &mut rng);
+        let v = Tensor::random(3, 3, &mut rng);
+        let mut out = Tensor::zeros(3, 2);
+        let mut arena = ScratchArena::new();
+        let before = exec_stats().bytes_moved;
+        schedule.execute(&v, &coeffs, &mut out, &mut arena).unwrap();
+        let after = exec_stats().bytes_moved;
+        assert!(
+            after > before,
+            "execute must accumulate measured bytes moved"
+        );
+    }
+
+    /// The steady-state zero-allocation property now covers index scratch:
+    /// warm ref-count/activity/weight vectors and node-slot tables are all
+    /// recycled from the arena pools.
+    #[test]
+    fn warm_path_is_allocation_free_for_index_scratch() {
+        let mut rng = Rng::new(916);
+        let plans = spanning_plans(Group::Symmetric, 3, 3, 2).unwrap();
+        let schedule = LayerSchedule::compile(Group::Symmetric, 3, 3, 2, &plans).unwrap();
+        let coeffs = random_coeffs(plans.len(), &mut rng);
+        let v = Tensor::random(3, 3, &mut rng);
+        let mut out = Tensor::zeros(3, 2);
+        let mut arena = ScratchArena::new();
+        schedule.execute(&v, &coeffs, &mut out, &mut arena).unwrap();
+        schedule.execute_map(&v, &mut arena, |_, _| Ok(())).unwrap();
+        let warm_tensor = arena.allocations();
+        let warm_index = arena.index_allocations();
+        assert!(warm_index > 0, "cold pass must allocate index scratch");
+        for _ in 0..3 {
+            out.data.fill(0.0);
+            schedule.execute(&v, &coeffs, &mut out, &mut arena).unwrap();
+            schedule.execute_map(&v, &mut arena, |_, _| Ok(())).unwrap();
+        }
+        assert_eq!(arena.allocations(), warm_tensor, "tensor scratch leaked");
+        assert_eq!(
+            arena.index_allocations(),
+            warm_index,
+            "index scratch must be allocation-free when warm"
+        );
+        assert!(arena.index_reuses() > 0);
+        // The process-wide counters saw this arena's index traffic.
+        let global = arena_stats();
+        assert!(global.index_allocations >= warm_index);
+        assert!(global.index_reuses >= arena.index_reuses());
     }
 
     #[test]

@@ -21,7 +21,7 @@
 use super::linear::spanning_diagrams;
 use crate::diagram::Diagram;
 use crate::error::{Error, Result};
-use crate::fastmult::{Group, LayerSchedule, MultPlan, PlanCache, PooledArena};
+use crate::fastmult::{Group, LayerSchedule, MultPlan, PlanCache, PooledArena, ScheduleStats};
 use crate::tensor::{BatchTensor, Tensor};
 use crate::util::Rng;
 use std::sync::Arc;
@@ -130,6 +130,13 @@ impl ChannelEquivariantLinear {
     /// The group.
     pub fn group(&self) -> Group {
         self.group
+    }
+
+    /// Compile-time statistics of the shared forward schedule (CSE node
+    /// counts, folded classes, strided-fusion savings) — the channel-layer
+    /// twin of [`super::EquivariantLinear::schedule_stats`].
+    pub fn schedule_stats(&self) -> ScheduleStats {
+        self.schedule.stats()
     }
 
     fn check_channels(&self, x: &[Tensor]) -> Result<()> {

@@ -204,10 +204,13 @@ impl EquivariantLinear {
 
     /// Forward pass: `W v + bias` via the folded execution schedule — the
     /// whole diagram sum in one DAG walk, each distinct intermediate
-    /// computed once (global CSE), one multi-pattern scatter pass per
-    /// `(node, pattern)` class with the λ-weights folded in, scratch
-    /// tensors drawn from the pooled arena (zero steady-state heap
-    /// allocations for intermediates). Matches
+    /// computed once (global CSE), permutes feeding contractions fused
+    /// into strided gather kernels that never materialise the permuted
+    /// intermediate, one multi-pattern scatter pass per `(node, pattern)`
+    /// class with the λ-weights folded in, every index table precompiled
+    /// into the schedule's kernel plan, and all scratch (tensor buffers
+    /// *and* index scratch) drawn from the pooled arena — zero
+    /// steady-state heap allocations. Matches
     /// [`EquivariantLinear::forward_per_term`] to ≤ 1e-12 (class folding
     /// reassociates the per-term additions); deterministic run to run.
     pub fn forward(&self, v: &Tensor) -> Result<Tensor> {
@@ -607,7 +610,7 @@ impl EquivariantLinear {
     }
 
     /// Compile-time statistics of the fused forward schedule (prefix-
-    /// sharing ratio, node counts).
+    /// sharing ratio, node counts, strided-fusion savings).
     pub fn schedule_stats(&self) -> ScheduleStats {
         self.schedule.stats()
     }

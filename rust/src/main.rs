@@ -256,6 +256,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         snap.executed_nodes,
         snap.scatter_passes
     );
+    println!(
+        "kernels: measured bytes moved {}  index scratch {} allocs / {} reuses",
+        snap.measured_bytes_moved, snap.arena_index_allocations, snap.arena_index_reuses
+    );
     handle.shutdown();
     Ok(())
 }

@@ -20,10 +20,9 @@
 //! identical per item to the per-item walk. See
 //! `docs/batched_execution.md`.
 
-use super::index::flat_index;
 use super::ops::{
-    group_diag_offsets, permute_block_map, permute_dst_map, scatter_diag_dsts,
-    signed_permutations,
+    axis_strides, group_diag_offsets, levi_civita_entries, permute_block_map, permute_dst_map,
+    permuted_gather_base, permuted_group_diag_offsets, scatter_diag_dsts,
 };
 use super::Tensor;
 use crate::error::{Error, Result};
@@ -206,19 +205,180 @@ impl BatchTensor {
         assert_eq!(out.batch, self.batch);
     }
 
+    /// Same validation as the per-item kernels: `axes` must be a
+    /// permutation of the item axes (the fused gather kernels would
+    /// silently read garbage through duplicate strides otherwise).
+    fn check_axes(&self, axes: &[usize]) {
+        assert_eq!(axes.len(), self.order, "axes arity must match order");
+        debug_assert!({
+            let mut seen = vec![false; self.order];
+            axes.iter().all(|&a| {
+                let fresh = !seen[a];
+                seen[a] = true;
+                fresh
+            })
+        });
+    }
+
     /// Batched [`Tensor::permute_axes_into`]: the block map is built once,
     /// every item is then a sequence of contiguous block copies.
     pub fn permute_axes_into(&self, axes: &[usize], out: &mut BatchTensor) {
-        self.check_like(out, self.order);
         let (map, block) = permute_block_map(self.n, self.order, axes);
+        self.permute_blocks_into(&map, block, out);
+    }
+
+    /// Replay of [`BatchTensor::permute_axes_into`] off a precomputed block
+    /// map (built once per kernel plan by `fastmult::schedule`).
+    pub(crate) fn permute_blocks_into(&self, map: &[usize], block: usize, out: &mut BatchTensor) {
+        self.check_like(out, self.order);
         let len = self.item_len();
         for b in 0..self.batch {
             let src = &self.data[b * len..(b + 1) * len];
             let dst = &mut out.data[b * len..(b + 1) * len];
             let mut d = 0usize;
-            for &s in &map {
+            for &s in map {
                 dst[d..d + block].copy_from_slice(&src[s..s + block]);
                 d += block;
+            }
+        }
+    }
+
+    /// Batched [`Tensor::contract_permuted_diagonal_into`]: the fused
+    /// permute-contract gather with one outer-offset table shared by every
+    /// item; per item bitwise identical to the per-item fused kernel (and
+    /// therefore to the materialised permute-then-contract composition).
+    pub fn contract_permuted_diagonal_into(
+        &self,
+        axes: &[usize],
+        m: usize,
+        out: &mut BatchTensor,
+    ) {
+        self.check_axes(axes);
+        assert!(m >= 1 && m <= self.order);
+        self.check_like(out, self.order - m);
+        let strides = axis_strides(self.n, self.order);
+        let dstride: usize = axes[self.order - m..].iter().map(|&a| strides[a]).sum();
+        let base = permuted_gather_base(self.n, self.order, axes, m);
+        self.gather_contract_with(&base, dstride, out);
+    }
+
+    /// Replay of [`BatchTensor::contract_permuted_diagonal_into`] off a
+    /// precomputed outer-offset table.
+    pub(crate) fn gather_contract_with(
+        &self,
+        base: &[usize],
+        dstride: usize,
+        out: &mut BatchTensor,
+    ) {
+        assert_eq!(out.n, self.n);
+        assert_eq!(out.batch, self.batch);
+        let n = self.n;
+        let ilen = self.item_len();
+        let olen = out.item_len();
+        debug_assert_eq!(base.len(), olen);
+        for b in 0..self.batch {
+            let src = &self.data[b * ilen..(b + 1) * ilen];
+            let dst = &mut out.data[b * olen..(b + 1) * olen];
+            for (slot, &bo) in dst.iter_mut().zip(base) {
+                let mut s = 0.0;
+                let mut off = bo;
+                for _ in 0..n {
+                    s += src[off];
+                    off += dstride;
+                }
+                *slot = s;
+            }
+        }
+    }
+
+    /// Batched [`Tensor::trace_permuted_pair_eps_into`].
+    pub fn trace_permuted_pair_eps_into(&self, axes: &[usize], out: &mut BatchTensor) {
+        self.check_axes(axes);
+        assert!(self.order >= 2);
+        assert_eq!(self.n % 2, 0, "Sp(n) requires even n");
+        self.check_like(out, self.order - 2);
+        let strides = axis_strides(self.n, self.order);
+        let sa = strides[axes[self.order - 2]];
+        let sb = strides[axes[self.order - 1]];
+        let base = permuted_gather_base(self.n, self.order, axes, 2);
+        self.gather_eps_trace_with(&base, sa, sb, out);
+    }
+
+    /// Replay of [`BatchTensor::trace_permuted_pair_eps_into`] off a
+    /// precomputed outer-offset table plus the traced axes' strides.
+    pub(crate) fn gather_eps_trace_with(
+        &self,
+        base: &[usize],
+        sa: usize,
+        sb: usize,
+        out: &mut BatchTensor,
+    ) {
+        assert_eq!(out.n, self.n);
+        assert_eq!(out.batch, self.batch);
+        let n = self.n;
+        let ilen = self.item_len();
+        let olen = out.item_len();
+        debug_assert_eq!(base.len(), olen);
+        for b in 0..self.batch {
+            let src = &self.data[b * ilen..(b + 1) * ilen];
+            let dst = &mut out.data[b * olen..(b + 1) * olen];
+            for (slot, &bo) in dst.iter_mut().zip(base) {
+                let mut s = 0.0;
+                for i in 0..n / 2 {
+                    let p = 2 * i;
+                    let q = 2 * i + 1;
+                    s += src[bo + p * sa + q * sb] - src[bo + q * sa + p * sb];
+                }
+                *slot = s;
+            }
+        }
+    }
+
+    /// Batched [`Tensor::extract_permuted_group_diagonals_into`].
+    pub fn extract_permuted_group_diagonals_into(
+        &self,
+        axes: &[usize],
+        groups: &[usize],
+        out: &mut BatchTensor,
+    ) {
+        self.check_axes(axes);
+        self.check_like(out, groups.len());
+        let offs = permuted_group_diag_offsets(self.n, self.order, axes, groups);
+        self.gather_with(&offs, out);
+    }
+
+    /// Pure gather replay, one offset table shared by every item (group-
+    /// diagonal extraction, permuted or not).
+    pub(crate) fn gather_with(&self, offs: &[usize], out: &mut BatchTensor) {
+        assert_eq!(out.n, self.n);
+        assert_eq!(out.batch, self.batch);
+        let ilen = self.item_len();
+        let olen = out.item_len();
+        debug_assert_eq!(offs.len(), olen);
+        for b in 0..self.batch {
+            let src = &self.data[b * ilen..(b + 1) * ilen];
+            let dst = &mut out.data[b * olen..(b + 1) * olen];
+            for (slot, &s) in dst.iter_mut().zip(offs) {
+                *slot = src[s];
+            }
+        }
+    }
+
+    /// Single-pattern sink replay off a precomputed destination map, per
+    /// item: the batched twin of [`Tensor::axpy_dsts_into`].
+    pub(crate) fn axpy_dsts_into(&self, dsts: &[usize], alpha: f64, out: &mut BatchTensor) {
+        assert_eq!(out.n, self.n);
+        assert_eq!(out.batch, self.batch);
+        let ilen = self.item_len();
+        let olen = out.item_len();
+        debug_assert_eq!(dsts.len() % ilen.max(1), 0);
+        for b in 0..self.batch {
+            let src = &self.data[b * ilen..(b + 1) * ilen];
+            let dst = &mut out.data[b * olen..(b + 1) * olen];
+            for rep in dsts.chunks(ilen) {
+                for (&d, &x) in rep.iter().zip(src) {
+                    dst[d] += alpha * x;
+                }
             }
         }
     }
@@ -287,14 +447,25 @@ impl BatchTensor {
         assert!(s <= n);
         let nb = n - s;
         assert!(nb <= self.order);
+        let entries = levi_civita_entries(n, s);
+        self.levi_civita_entries_into(s, &entries, out);
+    }
+
+    /// Replay of [`BatchTensor::levi_civita_contract_trailing_into`] off a
+    /// precomputed signed-permutation offset table (see
+    /// [`levi_civita_entries`]); scatters, so each item is zeroed first.
+    pub(crate) fn levi_civita_entries_into(
+        &self,
+        s: usize,
+        entries: &[(usize, usize, f64)],
+        out: &mut BatchTensor,
+    ) {
+        let n = self.n;
+        let nb = n - s;
         self.check_like(out, self.order - nb + s);
         let keep = self.order - nb;
         let in_block = n.pow(nb as u32);
         let out_block = n.pow(s as u32);
-        let entries: Vec<(usize, usize, f64)> = signed_permutations(n)
-            .iter()
-            .map(|(perm, sign)| (flat_index(n, &perm[..s]), flat_index(n, &perm[s..]), *sign))
-            .collect();
         let outer = n.pow(keep as u32);
         let ilen = self.item_len();
         let olen = out.item_len();
@@ -305,7 +476,7 @@ impl BatchTensor {
             for o in 0..outer {
                 let in_base = o * in_block;
                 let out_base = o * out_block;
-                for &(t_off, b_off, sign) in &entries {
+                for &(t_off, b_off, sign) in entries {
                     dst[out_base + t_off] += sign * src[in_base + b_off];
                 }
             }
@@ -317,16 +488,7 @@ impl BatchTensor {
     pub fn extract_group_diagonals_into(&self, groups: &[usize], out: &mut BatchTensor) {
         self.check_like(out, groups.len());
         let offs = group_diag_offsets(self.n, self.order, groups);
-        let ilen = self.item_len();
-        let olen = out.item_len();
-        debug_assert_eq!(offs.len(), olen);
-        for b in 0..self.batch {
-            let src = &self.data[b * ilen..(b + 1) * ilen];
-            let dst = &mut out.data[b * olen..(b + 1) * olen];
-            for (slot, &s) in dst.iter_mut().zip(&offs) {
-                *slot = src[s];
-            }
-        }
+        self.gather_with(&offs, out);
     }
 
     /// Batched [`Tensor::axpy_permuted_into`], via the shared block map.
@@ -351,11 +513,18 @@ impl BatchTensor {
     /// per pattern, built once and replayed over every item. Per item the
     /// arithmetic (source-major, pattern-inner) is exactly that of the
     /// per-item multi kernel, so batched folded-class execution stays
-    /// bitwise identical per item to the per-item folded walk.
+    /// bitwise identical per item to the per-item folded walk. A
+    /// single-pattern class delegates to the blocked
+    /// [`BatchTensor::axpy_permuted_into`] (bitwise exact — one
+    /// contribution per destination either way), skipping the per-pattern
+    /// map indirection.
     pub fn axpy_permuted_multi_into(&self, pats: &[(&[usize], f64)], out: &mut BatchTensor) {
         self.check_like(out, self.order);
         if pats.is_empty() {
             return;
+        }
+        if let [(axes, alpha)] = pats {
+            return self.axpy_permuted_into(*alpha, axes, out);
         }
         let maps: Vec<Vec<usize>> = pats
             .iter()
@@ -606,6 +775,42 @@ mod tests {
         for (b, t) in sitems.iter().enumerate() {
             let mut want = Tensor::zeros(2, total);
             t.scatter_broadcast_diagonals_multi_axpy(&lead, &tail, &spats, &mut want);
+            assert_eq!(got.item(b), want.data.as_slice(), "item {b}");
+        }
+    }
+
+    /// The batched fused permute-gather kernels match the per-item fused
+    /// kernels bitwise on every item (shared tables, same visit order).
+    #[test]
+    fn batched_fused_gather_kernels_match_per_item_bitwise() {
+        let mut rng = Rng::new(1006);
+        let (items, packed) = random_batch(3, 4, 3, &mut rng);
+        let axes = [2usize, 0, 3, 1];
+        // permuted diagonal contraction
+        let mut got = BatchTensor::zeros(3, 2, 3);
+        packed.contract_permuted_diagonal_into(&axes, 2, &mut got);
+        for (b, t) in items.iter().enumerate() {
+            let mut want = Tensor::zeros(3, 2);
+            t.contract_permuted_diagonal_into(&axes, 2, &mut want);
+            assert_eq!(got.item(b), want.data.as_slice(), "item {b}");
+        }
+        // permuted group-diagonal extraction
+        let groups = [3usize, 1];
+        let mut got = BatchTensor::zeros(3, 2, 3);
+        packed.extract_permuted_group_diagonals_into(&axes, &groups, &mut got);
+        for (b, t) in items.iter().enumerate() {
+            let mut want = Tensor::zeros(3, 2);
+            t.extract_permuted_group_diagonals_into(&axes, &groups, &mut want);
+            assert_eq!(got.item(b), want.data.as_slice(), "item {b}");
+        }
+        // permuted ε-trace (even n)
+        let (items4, packed4) = random_batch(4, 3, 2, &mut rng);
+        let eaxes = [1usize, 2, 0];
+        let mut got = BatchTensor::zeros(4, 1, 2);
+        packed4.trace_permuted_pair_eps_into(&eaxes, &mut got);
+        for (b, t) in items4.iter().enumerate() {
+            let mut want = Tensor::zeros(4, 1);
+            t.trace_permuted_pair_eps_into(&eaxes, &mut want);
             assert_eq!(got.item(b), want.data.as_slice(), "item {b}");
         }
     }

@@ -27,6 +27,13 @@ mod ops;
 
 pub use batch::BatchTensor;
 pub use index::{flat_index, unflat_index, MultiIndexIter};
+// Index-map builders shared with the schedule compiler's kernel plans
+// (`fastmult::schedule` precomputes every table once per compiled schedule
+// and replays it on the warm path).
+pub(crate) use ops::{
+    axis_strides, group_diag_offsets, levi_civita_entries, permute_block_map, permute_dst_map,
+    permuted_gather_base, permuted_group_diag_offsets, scatter_diag_dsts,
+};
 
 use crate::error::{Error, Result};
 use crate::util::Rng;

@@ -336,6 +336,171 @@ impl Tensor {
         }
     }
 
+    // -----------------------------------------------------------------
+    // Strided-fusion gather kernels
+    //
+    // A `Permute` feeding a diagonal contraction, pair trace or group-
+    // diagonal extraction is pure index relabelling: the downstream op can
+    // read the *unpermuted* source through remapped per-axis strides and
+    // never touch the materialised permuted intermediate. Each kernel below
+    // visits its output in exactly the order of the permute-then-op
+    // composition and performs the identical floating-point reduction, so
+    // the results are **bitwise** equal to the two-step path — which is what
+    // lets `fastmult::schedule` fuse freely without perturbing the
+    // schedule-vs-per-term bitwise guarantees.
+    // -----------------------------------------------------------------
+
+    /// Fused `permute_axes(self, axes).contract_trailing_diagonal(m)`
+    /// without materialising the permuted tensor: the generalised diagonal
+    /// of the permuted trailing `m`-block is the set of source axes
+    /// `axes[order-m..]`, so its stride in `self` is the sum of those axes'
+    /// strides and the outer walk reads `self` through the remaining
+    /// remapped strides. Bitwise identical to the composition.
+    pub fn contract_permuted_diagonal_into(&self, axes: &[usize], m: usize, out: &mut Tensor) {
+        self.check_axes(axes);
+        assert!(m >= 1 && m <= self.order);
+        assert_eq!(out.n, self.n);
+        assert_eq!(out.order, self.order - m);
+        let strides = axis_strides(self.n, self.order);
+        let dstride: usize = axes[self.order - m..].iter().map(|&a| strides[a]).sum();
+        let base = permuted_gather_base(self.n, self.order, axes, m);
+        self.gather_contract_with(&base, dstride, out);
+    }
+
+    /// Replay of [`Tensor::contract_permuted_diagonal_into`] off a
+    /// precomputed outer-offset table (`fastmult::schedule` builds it once
+    /// per kernel plan): `out[o] = Σ_j self[base[o] + j·dstride]`.
+    pub(crate) fn gather_contract_with(&self, base: &[usize], dstride: usize, out: &mut Tensor) {
+        let n = self.n;
+        debug_assert_eq!(base.len(), out.data.len());
+        for (slot, &b) in out.data.iter_mut().zip(base) {
+            let mut s = 0.0;
+            let mut off = b;
+            for _ in 0..n {
+                s += self.data[off];
+                off += dstride;
+            }
+            *slot = s;
+        }
+    }
+
+    /// Fused `permute_axes(self, axes).trace_trailing_pair_eps()`: the two
+    /// ε-traced axes are the source axes `axes[order-2..]`, read through
+    /// their own strides. Bitwise identical to the composition.
+    pub fn trace_permuted_pair_eps_into(&self, axes: &[usize], out: &mut Tensor) {
+        self.check_axes(axes);
+        assert!(self.order >= 2);
+        assert_eq!(self.n % 2, 0, "Sp(n) requires even n");
+        assert_eq!(out.n, self.n);
+        assert_eq!(out.order, self.order - 2);
+        let strides = axis_strides(self.n, self.order);
+        let sa = strides[axes[self.order - 2]];
+        let sb = strides[axes[self.order - 1]];
+        let base = permuted_gather_base(self.n, self.order, axes, 2);
+        self.gather_eps_trace_with(&base, sa, sb, out);
+    }
+
+    /// Replay of [`Tensor::trace_permuted_pair_eps_into`] off a precomputed
+    /// outer-offset table plus the two traced axes' strides.
+    pub(crate) fn gather_eps_trace_with(
+        &self,
+        base: &[usize],
+        sa: usize,
+        sb: usize,
+        out: &mut Tensor,
+    ) {
+        let n = self.n;
+        debug_assert_eq!(base.len(), out.data.len());
+        for (slot, &b) in out.data.iter_mut().zip(base) {
+            let mut s = 0.0;
+            for i in 0..n / 2 {
+                let p = 2 * i;
+                let q = 2 * i + 1;
+                s += self.data[b + p * sa + q * sb] - self.data[b + q * sa + p * sb];
+            }
+            *slot = s;
+        }
+    }
+
+    /// Fused `permute_axes(self, axes).extract_group_diagonals(groups)`:
+    /// group `g`'s repeated index steps `self` by the summed strides of the
+    /// source axes feeding that group — a pure gather, bitwise identical to
+    /// the composition.
+    pub fn extract_permuted_group_diagonals_into(
+        &self,
+        axes: &[usize],
+        groups: &[usize],
+        out: &mut Tensor,
+    ) {
+        self.check_axes(axes);
+        assert_eq!(out.n, self.n);
+        assert_eq!(out.order, groups.len());
+        let offs = permuted_group_diag_offsets(self.n, self.order, axes, groups);
+        self.gather_with(&offs, out);
+    }
+
+    /// Pure gather replay: `out[i] = self[offs[i]]` (group-diagonal
+    /// extraction, permuted or not, off a precomputed offset table).
+    pub(crate) fn gather_with(&self, offs: &[usize], out: &mut Tensor) {
+        debug_assert_eq!(offs.len(), out.data.len());
+        for (slot, &s) in out.data.iter_mut().zip(offs) {
+            *slot = self.data[s];
+        }
+    }
+
+    /// Blocked-permute replay off a precomputed block map (see
+    /// [`permute_block_map`]): destination is filled sequentially with the
+    /// maximal contiguous source blocks. Bitwise identical to
+    /// [`Tensor::permute_axes_into`].
+    pub(crate) fn permute_blocks_into(&self, map: &[usize], block: usize, out: &mut Tensor) {
+        debug_assert_eq!(map.len() * block, out.data.len());
+        let mut d = 0usize;
+        for &s in map {
+            out.data[d..d + block].copy_from_slice(&self.data[s..s + block]);
+            d += block;
+        }
+    }
+
+    /// [`Tensor::levi_civita_contract_trailing_into`] replayed off a
+    /// precomputed signed-permutation offset table (see
+    /// [`levi_civita_entries`]); scatters, so the output is zeroed first.
+    pub(crate) fn levi_civita_entries_into(
+        &self,
+        s: usize,
+        entries: &[(usize, usize, f64)],
+        out: &mut Tensor,
+    ) {
+        let n = self.n;
+        let nb = n - s;
+        let keep = self.order - nb;
+        let in_block = n.pow(nb as u32);
+        let out_block = n.pow(s as u32);
+        debug_assert_eq!(out.order, keep + s);
+        out.data.fill(0.0);
+        for o in 0..n.pow(keep as u32) {
+            let in_base = o * in_block;
+            let out_base = o * out_block;
+            for &(t_off, b_off, sign) in entries {
+                out.data[out_base + t_off] += sign * self.data[in_base + b_off];
+            }
+        }
+    }
+
+    /// Single-pattern sink replay off a precomputed destination map:
+    /// `out[dsts[c·len + s]] += alpha · self[s]` over every chunk of
+    /// `self.len()` destinations — one chunk for a permuted axpy, one chunk
+    /// per broadcast rep for the diagonal-support scatter. Each destination
+    /// receives exactly one contribution, so the result is bitwise equal to
+    /// the odometer kernels.
+    pub(crate) fn axpy_dsts_into(&self, dsts: &[usize], alpha: f64, out: &mut Tensor) {
+        debug_assert_eq!(dsts.len() % self.data.len(), 0);
+        for rep in dsts.chunks(self.data.len()) {
+            for (&d, &x) in rep.iter().zip(&self.data) {
+                out.data[d] += alpha * x;
+            }
+        }
+    }
+
     /// Inverse of [`Tensor::extract_group_diagonals`]: embed a compact
     /// order-`d` tensor onto the per-group diagonals of an order-`total`
     /// tensor (zero elsewhere). This is the S_n Step-2/3 expand used when a
@@ -448,12 +613,23 @@ impl Tensor {
     /// Per destination element the contributions arrive in source order
     /// (not pattern-major), so a multi-pattern pass may round differently
     /// from `P` sequential single-pattern passes — equal to ≤ 1e-12, not
-    /// bitwise.
+    /// bitwise. A class with exactly **one** pattern delegates to
+    /// [`Tensor::axpy_permuted_into`] (each destination receives a single
+    /// contribution either way, so the delegation is bitwise exact): P=1
+    /// classes keep the plain kernel's accumulation and skip the
+    /// per-pattern stride indirection entirely.
+    ///
+    /// The schedule's folded walk replays precompiled destination maps in
+    /// this exact visit order (`fastmult::schedule`); this standalone form
+    /// is the reference its equivalence tests assert against.
     pub fn axpy_permuted_multi_into(&self, pats: &[(&[usize], f64)], out: &mut Tensor) {
         assert_eq!(out.order, self.order);
         assert_eq!(out.n, self.n);
         if pats.is_empty() {
             return;
+        }
+        if let [(axes, alpha)] = pats {
+            return self.axpy_permuted_into(*alpha, axes, out);
         }
         let n = self.n;
         let order = self.order;
@@ -698,7 +874,9 @@ impl Tensor {
     ///
     /// Per destination element the contributions arrive in source order,
     /// so a class pass may round differently from `P` sequential
-    /// single-pattern passes (≤ 1e-12, not bitwise).
+    /// single-pattern passes (≤ 1e-12, not bitwise). As with the multi
+    /// axpy, the schedule replays precompiled maps in this visit order;
+    /// this standalone form is the asserted reference.
     pub fn scatter_broadcast_diagonals_multi_axpy(
         &self,
         lead_groups: &[usize],
@@ -948,24 +1126,88 @@ pub(crate) fn permute_block_map(n: usize, order: usize, axes: &[usize]) -> (Vec<
 
 /// The group-diagonal gather order: source offsets visited by
 /// `extract_diagonals_scan`, in destination order (`n^groups.len()`
-/// entries).
+/// entries). The identity-permutation case of
+/// [`permuted_group_diag_offsets`].
 pub(crate) fn group_diag_offsets(n: usize, order: usize, groups: &[usize]) -> Vec<usize> {
+    let ident: Vec<usize> = (0..order).collect();
+    permuted_group_diag_offsets(n, order, &ident, groups)
+}
+
+/// Row-major axis strides of an order-`order` tensor over `R^n`
+/// (`strides[a] = n^(order-1-a)`).
+pub(crate) fn axis_strides(n: usize, order: usize) -> Vec<usize> {
+    let mut strides = vec![0usize; order];
+    let mut s = 1usize;
+    for a in (0..order).rev() {
+        strides[a] = s;
+        s *= n;
+    }
+    strides
+}
+
+/// Outer-offset table of a fused permute-gather: entry `o` is the flat
+/// offset in the *unpermuted* source of the permuted element at row-major
+/// outer index `o` (the leading `order - m` permuted axes) with the
+/// trailing `m` permuted axes at 0 — walking permuted axis `q` steps the
+/// source by `strides[axes[q]]`. `n^(order-m)` entries, in the exact visit
+/// order of the trailing-axis scans.
+pub(crate) fn permuted_gather_base(
+    n: usize,
+    order: usize,
+    axes: &[usize],
+    m: usize,
+) -> Vec<usize> {
+    assert_eq!(axes.len(), order);
+    assert!(m <= order);
+    let strides = axis_strides(n, order);
+    let keep = order - m;
+    let lead_strides: Vec<usize> = axes[..keep].iter().map(|&a| strides[a]).collect();
+    let count = n.pow(keep as u32);
+    let mut base = Vec::with_capacity(count);
+    let mut idx = vec![0usize; keep];
+    let mut off = 0usize;
+    for _ in 0..count {
+        base.push(off);
+        let mut a = keep;
+        loop {
+            if a == 0 {
+                break;
+            }
+            a -= 1;
+            idx[a] += 1;
+            off += lead_strides[a];
+            if idx[a] < n {
+                break;
+            }
+            idx[a] = 0;
+            off -= n * lead_strides[a];
+        }
+    }
+    base
+}
+
+/// The permuted-extract gather order: source offsets of
+/// `permute_axes(x, axes).extract_group_diagonals(groups)` in destination
+/// order — group `g`'s repeated index steps the source by the summed
+/// strides of the source axes `axes[q]` feeding that group.
+pub(crate) fn permuted_group_diag_offsets(
+    n: usize,
+    order: usize,
+    axes: &[usize],
+    groups: &[usize],
+) -> Vec<usize> {
     let total: usize = groups.iter().sum();
     assert_eq!(total, order, "groups must cover all axes");
+    assert_eq!(axes.len(), order);
+    let strides = axis_strides(n, order);
     let d = groups.len();
     let mut gstride = vec![0usize; d];
     {
-        let mut axis_stride = vec![0usize; order];
-        let mut s = 1usize;
-        for a in (0..order).rev() {
-            axis_stride[a] = s;
-            s *= n;
-        }
-        let mut a = 0usize;
+        let mut q = 0usize;
         for (g, &size) in groups.iter().enumerate() {
             for _ in 0..size {
-                gstride[g] += axis_stride[a];
-                a += 1;
+                gstride[g] += strides[axes[q]];
+                q += 1;
             }
         }
     }
@@ -991,6 +1233,17 @@ pub(crate) fn group_diag_offsets(n: usize, order: usize, groups: &[usize]) -> Ve
         }
     }
     offs
+}
+
+/// The Levi-Civita contraction's signed-permutation offsets, in
+/// [`signed_permutations`] order: `(top offset, bottom offset, sign)` per
+/// permutation of `0..n` split at `s`. Built once per kernel plan instead
+/// of once per call (`n!` tuples).
+pub(crate) fn levi_civita_entries(n: usize, s: usize) -> Vec<(usize, usize, f64)> {
+    signed_permutations(n)
+        .iter()
+        .map(|(perm, sign)| (flat_index(n, &perm[..s]), flat_index(n, &perm[s..]), *sign))
+        .collect()
 }
 
 /// The destination offsets of a permuted axpy in **source** order:
@@ -1418,6 +1671,89 @@ mod tests {
             x.scatter_broadcast_diagonals_multi_axpy(&lead, &tail, &[(&a2, 1.5)], &mut b);
             assert!(a.allclose(&b, 0.0), "lead {lead:?} tail {tail:?}");
         }
+    }
+
+    /// Every fused permute-gather kernel must be **bitwise** equal to the
+    /// materialised permute-then-op composition (same element visit order,
+    /// same reduction order).
+    #[test]
+    fn fused_gather_kernels_match_composition_bitwise() {
+        let mut rng = Rng::new(49);
+        // Permuted diagonal contraction, several (order, m, axes) shapes.
+        let t = Tensor::random(3, 4, &mut rng);
+        for (axes, m) in [
+            (vec![2usize, 0, 3, 1], 2usize),
+            (vec![3, 1, 0, 2], 1),
+            (vec![1, 0, 3, 2], 3),
+            (vec![0, 1, 2, 3], 2), // identity permute degenerates to the plain op
+        ] {
+            let want = t.permute_axes(&axes).contract_trailing_diagonal(m);
+            let mut got = Tensor::zeros(3, 4 - m);
+            got.data.fill(7.25); // stale buffer must be fully overwritten
+            t.contract_permuted_diagonal_into(&axes, m, &mut got);
+            assert!(
+                got.allclose(&want, 0.0),
+                "contract axes {axes:?} m {m}: diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+        // Permuted ε-trace (even n).
+        let t4 = Tensor::random(4, 3, &mut rng);
+        for axes in [[2usize, 0, 1], [1, 2, 0], [0, 1, 2]] {
+            let want = t4.permute_axes(&axes).trace_trailing_pair_eps();
+            let mut got = Tensor::from_vec(4, 1, vec![9.0; 4]).unwrap();
+            t4.trace_permuted_pair_eps_into(&axes, &mut got);
+            assert!(got.allclose(&want, 0.0), "eps axes {axes:?}");
+        }
+        // Permuted group-diagonal extraction.
+        for (axes, groups) in [
+            (vec![2usize, 0, 3, 1], vec![3usize, 1]),
+            (vec![1, 3, 0, 2], vec![2, 2]),
+            (vec![3, 2, 1, 0], vec![1, 2, 1]),
+        ] {
+            let want = t.permute_axes(&axes).extract_group_diagonals(&groups);
+            let mut got = Tensor::zeros(3, groups.len());
+            got.data.fill(-3.5);
+            t.extract_permuted_group_diagonals_into(&axes, &groups, &mut got);
+            assert!(got.allclose(&want, 0.0), "extract axes {axes:?} groups {groups:?}");
+        }
+    }
+
+    /// The precomputed-map replay helpers reproduce their building ops.
+    #[test]
+    fn replay_helpers_match_direct_kernels() {
+        let mut rng = Rng::new(50);
+        let t = Tensor::random(3, 3, &mut rng);
+        // Blocked permute replay.
+        let axes = [1usize, 2, 0];
+        let (map, block) = permute_block_map(3, 3, &axes);
+        let mut got = Tensor::zeros(3, 3);
+        t.permute_blocks_into(&map, block, &mut got);
+        assert!(got.allclose(&t.permute_axes(&axes), 0.0));
+        // Levi-Civita replay off precomputed entries.
+        let entries = levi_civita_entries(3, 1);
+        let want = t.levi_civita_contract_trailing(1);
+        let mut got = Tensor::zeros(3, want.order);
+        got.data.fill(4.5);
+        t.levi_civita_entries_into(1, &entries, &mut got);
+        assert!(got.allclose(&want, 0.0));
+        // Single-pattern sink replay: permuted axpy map…
+        let dsts = permute_dst_map(3, 3, &axes);
+        let mut a = Tensor::zeros(3, 3);
+        let mut b = Tensor::zeros(3, 3);
+        t.axpy_permuted_into(0.7, &axes, &mut a);
+        t.axpy_dsts_into(&dsts, 0.7, &mut b);
+        assert!(a.allclose(&b, 0.0));
+        // …and the diagonal-support scatter map (reps > 1).
+        let (lead, tail) = (vec![2usize], vec![1usize, 1]);
+        let x = Tensor::random(2, 2, &mut rng);
+        let saxes: Vec<usize> = (0..4).rev().collect();
+        let sdsts = scatter_diag_dsts(2, &lead, &tail, &saxes);
+        let mut a = Tensor::zeros(2, 4);
+        let mut b = Tensor::zeros(2, 4);
+        x.scatter_broadcast_diagonals_axpy(&lead, &tail, &saxes, 1.5, &mut a);
+        x.axpy_dsts_into(&sdsts, 1.5, &mut b);
+        assert!(a.allclose(&b, 0.0));
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Strided fusion: gather-contract kernels and precompiled kernel plans.
+//!
+//! Three layers of guarantees, all **bitwise** (tolerance 0.0):
+//!
+//! 1. the fused tensor kernels (`contract_permuted_diagonal_into`,
+//!    `trace_permuted_pair_eps_into`, `extract_permuted_group_diagonals_into`
+//!    and their batched twins) equal the materialised permute-then-op
+//!    composition for randomized axes (`util::prop`),
+//! 2. a fused [`LayerSchedule`] equals its unfused compile on every
+//!    execute path — forward (`execute`, `execute_batch`) and backward
+//!    (`execute_map`, `execute_batch_map`) — for all four groups,
+//! 3. the warm path performs zero heap allocations for *index scratch*
+//!    (ref counts, activity masks, λ-weight gathers, node-slot tables) as
+//!    well as tensor buffers.
+//!
+//! Plus the cost-model invariants: fusion never increases
+//! `estimated_flops` and strictly decreases `estimated_bytes` whenever
+//! `fused_nodes > 0`.
+
+use equidiag::fastmult::{exec_stats, Group, LayerSchedule, ScratchArena};
+use equidiag::layer::spanning_plans;
+use equidiag::tensor::{BatchTensor, Tensor};
+use equidiag::util::prop::{check, Config};
+use equidiag::util::Rng;
+
+/// Uniform random permutation of `0..order` (Fisher–Yates).
+fn random_perm(order: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut p: Vec<usize> = (0..order).collect();
+    for i in (1..order).rev() {
+        let j = rng.below(i + 1);
+        p.swap(i, j);
+    }
+    p
+}
+
+/// Shapes covering all four groups, k > l (contraction-heavy, so the
+/// σ_k permutes feed contractions), k == l, and the SO(n) jellyfish path.
+const CONFIGS: &[(Group, usize, usize, usize)] = &[
+    (Group::Symmetric, 4, 3, 2),
+    (Group::Symmetric, 3, 2, 3),
+    (Group::Symmetric, 3, 3, 3),
+    (Group::Orthogonal, 5, 4, 2),
+    (Group::Orthogonal, 3, 3, 3),
+    (Group::SpecialOrthogonal, 3, 3, 1),
+    (Group::SpecialOrthogonal, 3, 3, 2), // jellyfish diagrams present
+    (Group::Symplectic, 4, 2, 2),
+    (Group::Symplectic, 4, 4, 2),
+];
+
+/// Fused gather kernels ≡ permute-then-op, randomized axes, single-item.
+#[test]
+fn fused_kernels_match_composition_randomized() {
+    check(
+        Config::default().cases(64).seed(0xF0_51),
+        "fused gather kernels are bitwise",
+        |rng| {
+            let n = 2 + rng.below(3); // 2..=4
+            let order = 2 + rng.below(3); // 2..=4
+            let t = Tensor::random(n, order, rng);
+            let axes = random_perm(order, rng);
+            // Generalised diagonal contraction over permuted trailing axes.
+            let m = 1 + rng.below(order);
+            let want = t.permute_axes(&axes).contract_trailing_diagonal(m);
+            let mut got = Tensor::zeros(n, order - m);
+            got.data.fill(3.25); // stale scratch must be fully overwritten
+            t.contract_permuted_diagonal_into(&axes, m, &mut got);
+            if !got.allclose(&want, 0.0) {
+                return Err(format!(
+                    "contract n={n} order={order} m={m} axes={axes:?}: diff {}",
+                    got.max_abs_diff(&want)
+                ));
+            }
+            // Permuted group-diagonal extraction (random group split).
+            let mut groups = Vec::new();
+            let mut left = order;
+            while left > 0 {
+                let g = 1 + rng.below(left);
+                groups.push(g);
+                left -= g;
+            }
+            let want = t.permute_axes(&axes).extract_group_diagonals(&groups);
+            let mut got = Tensor::zeros(n, groups.len());
+            got.data.fill(-1.5);
+            t.extract_permuted_group_diagonals_into(&axes, &groups, &mut got);
+            if !got.allclose(&want, 0.0) {
+                return Err(format!(
+                    "extract n={n} order={order} axes={axes:?} groups={groups:?}: diff {}",
+                    got.max_abs_diff(&want)
+                ));
+            }
+            // Permuted ε-trace (even n).
+            let t4 = Tensor::random(4, order, rng);
+            let eaxes = random_perm(order, rng);
+            let want = t4.permute_axes(&eaxes).trace_trailing_pair_eps();
+            let mut got = Tensor::zeros(4, order - 2);
+            got.data.fill(9.0);
+            t4.trace_permuted_pair_eps_into(&eaxes, &mut got);
+            if !got.allclose(&want, 0.0) {
+                return Err(format!("eps order={order} axes={eaxes:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Batched fused kernels ≡ per-item fused kernels, randomized axes.
+#[test]
+fn batched_fused_kernels_match_per_item_randomized() {
+    check(
+        Config::default().cases(32).seed(0xF0_52),
+        "batched fused gather kernels are bitwise per item",
+        |rng| {
+            let n = 2 + rng.below(3);
+            let order = 2 + rng.below(3);
+            let items: Vec<Tensor> = (0..3).map(|_| Tensor::random(n, order, rng)).collect();
+            let packed = BatchTensor::pack(&items).unwrap();
+            let axes = random_perm(order, rng);
+            let m = 1 + rng.below(order);
+            let mut got = BatchTensor::zeros(n, order - m, 3);
+            packed.contract_permuted_diagonal_into(&axes, m, &mut got);
+            for (b, t) in items.iter().enumerate() {
+                let mut want = Tensor::zeros(n, order - m);
+                t.contract_permuted_diagonal_into(&axes, m, &mut want);
+                if got.item(b) != want.data.as_slice() {
+                    return Err(format!("batched contract item {b} axes {axes:?}"));
+                }
+            }
+            let groups = vec![order - 1, 1];
+            let mut got = BatchTensor::zeros(n, groups.len(), 3);
+            packed.extract_permuted_group_diagonals_into(&axes, &groups, &mut got);
+            for (b, t) in items.iter().enumerate() {
+                let mut want = Tensor::zeros(n, groups.len());
+                t.extract_permuted_group_diagonals_into(&axes, &groups, &mut want);
+                if got.item(b) != want.data.as_slice() {
+                    return Err(format!("batched extract item {b} axes {axes:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fused schedules equal unfused schedules **bitwise** on the forward
+/// folded walk and on the per-term (backward) map walk, single + batched,
+/// all four groups.
+#[test]
+fn fused_schedule_matches_unfused_everywhere() {
+    let mut rng = Rng::new(0xF0_53);
+    for &(group, n, k, l) in CONFIGS {
+        let plans = spanning_plans(group, n, k, l).unwrap();
+        if plans.is_empty() {
+            continue;
+        }
+        let fused = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+        let unfused = LayerSchedule::compile_unfused(group, n, k, l, &plans).unwrap();
+        let coeffs: Vec<f64> = (0..plans.len()).map(|_| rng.gaussian()).collect();
+        let v = Tensor::random(n, k, &mut rng);
+        let mut arena = ScratchArena::new();
+        // Forward, single item.
+        let mut a = Tensor::zeros(n, l);
+        let mut b = Tensor::zeros(n, l);
+        fused.execute(&v, &coeffs, &mut a, &mut arena).unwrap();
+        unfused.execute(&v, &coeffs, &mut b, &mut arena).unwrap();
+        assert!(
+            a.allclose(&b, 0.0),
+            "{group} ({k},{l}): fused forward diverges by {}",
+            a.max_abs_diff(&b)
+        );
+        // Backward map walk, single item: per-term tensors bitwise equal
+        // between the two compiles AND to MultPlan::apply.
+        let mut unfused_terms: Vec<Tensor> = Vec::new();
+        unfused
+            .execute_map(&v, &mut arena, |_, t| {
+                unfused_terms.push(t.clone());
+                Ok(())
+            })
+            .unwrap();
+        fused
+            .execute_map(&v, &mut arena, |i, t| {
+                assert!(
+                    t.allclose(&unfused_terms[i], 0.0),
+                    "{group} ({k},{l}) term {i}: fused map walk diverges"
+                );
+                let want = plans[i].apply(&v).unwrap();
+                assert!(
+                    t.allclose(&want, 0.0),
+                    "{group} ({k},{l}) term {i}: diverges from MultPlan::apply"
+                );
+                Ok(())
+            })
+            .unwrap();
+        // Forward + backward, batched: bitwise per item against the
+        // single-item fused walk and against the unfused batched walk.
+        let items: Vec<Tensor> = (0..3).map(|_| Tensor::random(n, k, &mut rng)).collect();
+        let vb = BatchTensor::pack(&items).unwrap();
+        let mut ba = BatchTensor::zeros(n, l, 3);
+        let mut bb = BatchTensor::zeros(n, l, 3);
+        fused.execute_batch(&vb, &coeffs, &mut ba, &mut arena).unwrap();
+        unfused
+            .execute_batch(&vb, &coeffs, &mut bb, &mut arena)
+            .unwrap();
+        assert!(
+            ba.max_abs_diff(&bb) == 0.0,
+            "{group} ({k},{l}): batched fused forward diverges"
+        );
+        for (bi, item) in items.iter().enumerate() {
+            let mut single = Tensor::zeros(n, l);
+            fused.execute(item, &coeffs, &mut single, &mut arena).unwrap();
+            assert!(
+                ba.item_tensor(bi).allclose(&single, 0.0),
+                "{group} ({k},{l}) item {bi}: batch/single divergence"
+            );
+        }
+        fused
+            .execute_batch_map(&vb, &mut arena, |i, tb| {
+                for (bi, item) in items.iter().enumerate() {
+                    let want = plans[i].apply(item).unwrap();
+                    assert!(
+                        tb.item_tensor(bi).allclose(&want, 0.0),
+                        "{group} ({k},{l}) term {i} item {bi}: batched map walk diverges"
+                    );
+                }
+                Ok(())
+            })
+            .unwrap();
+    }
+}
+
+/// Fusion's cost-model invariants: flops unchanged, bytes strictly lower
+/// whenever anything fused, node accounting exact — and the
+/// contraction-heavy shapes must actually fuse.
+#[test]
+fn fusion_cost_invariants() {
+    let mut any_fused = false;
+    for &(group, n, k, l) in CONFIGS {
+        let plans = spanning_plans(group, n, k, l).unwrap();
+        if plans.is_empty() {
+            continue;
+        }
+        let fused = LayerSchedule::compile(group, n, k, l, &plans).unwrap().stats();
+        let unfused = LayerSchedule::compile_unfused(group, n, k, l, &plans)
+            .unwrap()
+            .stats();
+        assert_eq!(
+            fused.estimated_flops, unfused.estimated_flops,
+            "{group} ({k},{l}): fusion must never change estimated flops"
+        );
+        assert_eq!(fused.nodes + fused.fused_nodes, unfused.nodes, "{group} ({k},{l})");
+        assert_eq!(
+            unfused.estimated_bytes - fused.estimated_bytes,
+            fused.bytes_saved_estimate,
+            "{group} ({k},{l}): bytes-saved bookkeeping"
+        );
+        if fused.fused_nodes > 0 {
+            any_fused = true;
+            assert!(
+                fused.estimated_bytes < unfused.estimated_bytes,
+                "{group} ({k},{l}): fusion must strictly decrease estimated bytes"
+            );
+        }
+        assert_eq!(unfused.fused_nodes, 0);
+    }
+    assert!(any_fused, "no config fused anything — the pass is dead");
+    // The k > l shapes specifically must fuse (non-identity σ_k permutes
+    // feeding contractions, single consumer after CSE).
+    for &(group, n, k, l) in &[
+        (Group::Orthogonal, 5usize, 4usize, 2usize),
+        (Group::Symplectic, 4, 4, 2),
+    ] {
+        let plans = spanning_plans(group, n, k, l).unwrap();
+        let stats = LayerSchedule::compile(group, n, k, l, &plans).unwrap().stats();
+        assert!(
+            stats.fused_nodes > 0,
+            "{group} ({k},{l}): expected fusion to fire: {stats:?}"
+        );
+    }
+}
+
+/// Warm-path zero-allocation now covers index scratch on every execute
+/// variant (single, batched, map), and the measured bytes counter moves.
+#[test]
+fn warm_path_zero_alloc_covers_index_scratch() {
+    let mut rng = Rng::new(0xF0_54);
+    let (group, n, k, l) = (Group::Symmetric, 3, 3, 2);
+    let plans = spanning_plans(group, n, k, l).unwrap();
+    let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+    let coeffs: Vec<f64> = (0..plans.len()).map(|_| rng.gaussian()).collect();
+    let v = Tensor::random(n, k, &mut rng);
+    let items: Vec<Tensor> = (0..4).map(|_| Tensor::random(n, k, &mut rng)).collect();
+    let vb = BatchTensor::pack(&items).unwrap();
+    let mut out = Tensor::zeros(n, l);
+    let mut bout = BatchTensor::zeros(n, l, 4);
+    let mut arena = ScratchArena::new();
+    let bytes_before = exec_stats().bytes_moved;
+    // Warm every path once.
+    schedule.execute(&v, &coeffs, &mut out, &mut arena).unwrap();
+    schedule
+        .execute_batch(&vb, &coeffs, &mut bout, &mut arena)
+        .unwrap();
+    schedule.execute_map(&v, &mut arena, |_, _| Ok(())).unwrap();
+    schedule
+        .execute_batch_map(&vb, &mut arena, |_, _| Ok(()))
+        .unwrap();
+    assert!(
+        exec_stats().bytes_moved > bytes_before,
+        "measured bytes-moved counter must accumulate"
+    );
+    let warm_tensor = arena.allocations();
+    let warm_index = arena.index_allocations();
+    assert!(warm_index > 0, "cold passes must allocate index scratch");
+    for _ in 0..3 {
+        out.data.fill(0.0);
+        bout.data_mut().fill(0.0);
+        schedule.execute(&v, &coeffs, &mut out, &mut arena).unwrap();
+        schedule
+            .execute_batch(&vb, &coeffs, &mut bout, &mut arena)
+            .unwrap();
+        schedule.execute_map(&v, &mut arena, |_, _| Ok(())).unwrap();
+        schedule
+            .execute_batch_map(&vb, &mut arena, |_, _| Ok(()))
+            .unwrap();
+    }
+    assert_eq!(
+        arena.allocations(),
+        warm_tensor,
+        "warm tensor scratch must not allocate"
+    );
+    assert_eq!(
+        arena.index_allocations(),
+        warm_index,
+        "warm index scratch must not allocate"
+    );
+    assert!(arena.index_reuses() > 0);
+}
