@@ -161,7 +161,10 @@ fn main() -> equidiag::Result<()> {
     // Held-out evaluation.
     let mut test_mse = 0.0;
     for (x, y) in &test_set {
-        let pred = net.forward(x)?;
+        let pred = net
+            .apply(x)?
+            .into_single()
+            .expect("single input yields single output");
         test_mse += Loss::Mse.value(&pred, y);
     }
     test_mse /= test_size as f64;
@@ -171,8 +174,14 @@ fn main() -> equidiag::Result<()> {
     let mut max_dev: f64 = 0.0;
     for (x, _) in test_set.iter().take(16) {
         let g = groups::sample(Group::Symmetric, n, &mut rng)?;
-        let a = net.forward(x)?;
-        let b = net.forward(&groups::rho(&g, x))?;
+        let a = net
+            .apply(x)?
+            .into_single()
+            .expect("single input yields single output");
+        let b = net
+            .apply(&groups::rho(&g, x))?
+            .into_single()
+            .expect("single input yields single output");
         max_dev = max_dev.max((a.data[0] - b.data[0]).abs());
     }
     println!("permutation-invariance deviation over 16 relabelled graphs: {max_dev:.2e}");

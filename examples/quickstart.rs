@@ -65,8 +65,15 @@ fn main() -> equidiag::Result<()> {
     // 5. Equivariance under a random permutation.
     let x = Tensor::random(n, 2, &mut rng);
     let g = groups::sample(Group::Symmetric, n, &mut rng)?;
-    let lhs = layer.forward(&groups::rho(&g, &x))?;
-    let rhs = groups::rho(&g, &layer.forward(&x)?);
+    let lhs = layer
+        .apply(&groups::rho(&g, &x))?
+        .into_single()
+        .expect("single input yields single output");
+    let wx = layer
+        .apply(&x)?
+        .into_single()
+        .expect("single input yields single output");
+    let rhs = groups::rho(&g, &wx);
     println!(
         "equivariance:   |W(g·x) - g·W(x)| = {:.2e}",
         lhs.max_abs_diff(&rhs)

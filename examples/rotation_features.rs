@@ -108,8 +108,15 @@ fn main() -> equidiag::Result<()> {
             r
         }),
     ] {
-        let lhs = net.forward(&groups::rho(&g, &c))?;
-        let rhs = groups::rho(&g, &net.forward(&c)?);
+        let lhs = net
+            .apply(&groups::rho(&g, &c))?
+            .into_single()
+            .expect("single input yields single output");
+        let fc = net
+            .apply(&c)?
+            .into_single()
+            .expect("single input yields single output");
+        let rhs = groups::rho(&g, &fc);
         println!(
             "{label:>18}: |f(g·C) - g·f(C)| = {:.2e}  (det g = {:+.3})",
             lhs.max_abs_diff(&rhs),

@@ -65,8 +65,15 @@ fn main() -> equidiag::Result<()> {
     // (b) Sp layer commutes with evolution; a generic layer does not.
     let sp_layer = EquivariantLinear::new(Group::Symplectic, n, 2, 2, Init::Normal(0.5), &mut rng)?;
     let x = phase_features(n, &mut rng);
-    let lhs = sp_layer.forward(&groups::rho(&g, &x))?;
-    let rhs = groups::rho(&g, &sp_layer.forward(&x)?);
+    let lhs = sp_layer
+        .apply(&groups::rho(&g, &x))?
+        .into_single()
+        .expect("single input yields single output");
+    let wx = sp_layer
+        .apply(&x)?
+        .into_single()
+        .expect("single input yields single output");
+    let rhs = groups::rho(&g, &wx);
     println!(
         "Sp layer:      |W(g·x) - g·W(x)| = {:.2e}",
         lhs.max_abs_diff(&rhs)
@@ -74,8 +81,15 @@ fn main() -> equidiag::Result<()> {
     assert!(lhs.allclose(&rhs, 1e-8));
     // Generic (S_n) layer of the same shape, as the non-equivariant control:
     let generic = EquivariantLinear::new(Group::Symmetric, n, 2, 2, Init::Normal(0.5), &mut rng)?;
-    let glhs = generic.forward(&groups::rho(&g, &x))?;
-    let grhs = groups::rho(&g, &generic.forward(&x)?);
+    let glhs = generic
+        .apply(&groups::rho(&g, &x))?
+        .into_single()
+        .expect("single input yields single output");
+    let gwx = generic
+        .apply(&x)?
+        .into_single()
+        .expect("single input yields single output");
+    let grhs = groups::rho(&g, &gwx);
     println!(
         "generic layer: |W(g·x) - g·W(x)| = {:.2e}  (breaks, as expected)",
         glhs.max_abs_diff(&grhs)

@@ -25,9 +25,14 @@
 //! for the CI smoke mode: smaller budgets, the fused-vs-per-term, planner,
 //! fusion and fused-batch sections and the JSONs only.
 
-use equidiag::fastmult::{exec_stats, matrix_mult, Group, LayerSchedule, ScratchArena};
+// The legacy forward names stay exercised until their removal.
+#![allow(deprecated)]
+
+use equidiag::fastmult::{
+    exec_stats, matrix_mult, Group, LayerSchedule, ScratchArena, ScratchArenaOf,
+};
 use equidiag::layer::{spanning_plans, EquivariantLinear, Init};
-use equidiag::tensor::Tensor;
+use equidiag::tensor::{Scalar, Tensor, TensorOf};
 use equidiag::util::{bench_median, max_threads, parallel_map, Rng, Table};
 use std::time::Duration;
 
@@ -740,6 +745,179 @@ fn write_batch_json(path: &str, rows: &[BatchRow]) {
     }
 }
 
+struct SimdRow {
+    group: &'static str,
+    n: usize,
+    k: usize,
+    l: usize,
+    terms: usize,
+    f64_us: f64,
+    f32_us: f64,
+    measured_bytes_f64: u64,
+    measured_bytes_f32: u64,
+    bytes_ratio: f64,
+    speedup: f64,
+}
+
+/// Scalar width: the same fused schedule walked at `f64` (the bitwise
+/// reference width) and at `f32`. The kernels, DAG and kernel plans are
+/// identical — only the element width changes — so the `f32` walk must
+/// move ~half the measured bytes, and its output must track the `f64`
+/// reference within the scaled tolerance; both are asserted before
+/// anything is timed. Emits `BENCH_simd.json`.
+fn simd_section(budget: Duration, rng: &mut Rng) -> Vec<SimdRow> {
+    println!("\nscalar width: fused schedule at f64 vs f32:");
+    let mut table = Table::new(vec![
+        "group",
+        "n",
+        "(k,l)",
+        "terms",
+        "bytes f64",
+        "bytes f32",
+        "ratio",
+        "f64",
+        "f32",
+        "speedup",
+    ]);
+    let configs: &[(Group, usize, usize, usize)] = if fast_mode() {
+        &[(Group::Symmetric, 5, 3, 2), (Group::Orthogonal, 5, 4, 2)]
+    } else {
+        &[
+            (Group::Symmetric, 5, 3, 2),
+            (Group::Symmetric, 8, 2, 2),
+            (Group::Orthogonal, 5, 4, 2),
+            (Group::Symplectic, 4, 4, 2),
+            (Group::SpecialOrthogonal, 3, 3, 2),
+        ]
+    };
+    let mut rows = Vec::new();
+    for &(group, n, k, l) in configs {
+        let plans = spanning_plans(group, n, k, l).unwrap();
+        let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+        let terms = schedule.stats().terms;
+        let coeffs: Vec<f64> = (0..plans.len()).map(|_| rng.gaussian()).collect();
+        let v = Tensor::random(n, k, rng);
+        let v32 = v.cast::<f32>();
+        let mut arena = ScratchArena::new();
+        let mut arena32 = ScratchArenaOf::<f32>::new();
+        let mut out = Tensor::zeros(n, l);
+        let mut out32 = TensorOf::<f32>::zeros(n, l);
+        // Accuracy invariant before timing: the f32 walk tracks the f64
+        // reference within the scaled tolerance.
+        schedule.execute(&v, &coeffs, &mut out, &mut arena).unwrap();
+        schedule
+            .execute(&v32, &coeffs, &mut out32, &mut arena32)
+            .unwrap();
+        let scale = out.data.iter().fold(1.0_f64, |m, x| m.max(x.abs()));
+        assert!(
+            out32
+                .cast::<f64>()
+                .allclose(&out, 64.0 * <f32 as Scalar>::TOLERANCE * scale),
+            "{group} ({k},{l}): f32 walk diverges by {}",
+            out32.cast::<f64>().max_abs_diff(&out)
+        );
+        // Measured bytes of one warm execute per width (single-threaded,
+        // so the process-wide counter delta is exact).
+        let measured_bytes_f64 = {
+            let before = exec_stats().bytes_moved;
+            out.data.fill(0.0);
+            schedule.execute(&v, &coeffs, &mut out, &mut arena).unwrap();
+            exec_stats().bytes_moved - before
+        };
+        let measured_bytes_f32 = {
+            let before = exec_stats().bytes_moved;
+            out32.data.fill(0.0);
+            schedule
+                .execute(&v32, &coeffs, &mut out32, &mut arena32)
+                .unwrap();
+            exec_stats().bytes_moved - before
+        };
+        let bytes_ratio = measured_bytes_f32 as f64 / measured_bytes_f64 as f64;
+        assert!(
+            bytes_ratio <= 0.55,
+            "{group} ({k},{l}): f32 must move ~half the measured bytes \
+             ({measured_bytes_f32} vs {measured_bytes_f64}, ratio {bytes_ratio:.3})"
+        );
+        let f64_t = bench_median(budget, || {
+            out.data.fill(0.0);
+            schedule.execute(&v, &coeffs, &mut out, &mut arena).unwrap();
+        });
+        let f32_t = bench_median(budget, || {
+            out32.data.fill(0.0);
+            schedule
+                .execute(&v32, &coeffs, &mut out32, &mut arena32)
+                .unwrap();
+        });
+        let speedup = f64_t.median_s / f32_t.median_s;
+        table.row(vec![
+            group.name().to_string(),
+            format!("{n}"),
+            format!("({k},{l})"),
+            format!("{terms}"),
+            format!("{measured_bytes_f64}"),
+            format!("{measured_bytes_f32}"),
+            format!("{bytes_ratio:.3}"),
+            f64_t.pretty(),
+            f32_t.pretty(),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(SimdRow {
+            group: group.name(),
+            n,
+            k,
+            l,
+            terms,
+            f64_us: f64_t.median_s * 1e6,
+            f32_us: f32_t.median_s * 1e6,
+            measured_bytes_f64,
+            measured_bytes_f32,
+            bytes_ratio,
+            speedup,
+        });
+    }
+    table.print();
+    rows
+}
+
+fn write_simd_json(path: &str, rows: &[SimdRow]) {
+    let worst_ratio = rows.iter().map(|r| r.bytes_ratio).fold(f64::MIN, f64::max);
+    let best = rows.iter().map(|r| r.speedup).fold(f64::MIN, f64::max);
+    let configs: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"group\": \"{}\", \"n\": {}, \"k\": {}, \"l\": {}, \
+                 \"terms\": {}, \"f64_us\": {:.3}, \"f32_us\": {:.3}, \
+                 \"measured_bytes_f64\": {}, \"measured_bytes_f32\": {}, \
+                 \"bytes_ratio\": {:.4}, \"speedup\": {:.3}}}",
+                r.group,
+                r.n,
+                r.k,
+                r.l,
+                r.terms,
+                r.f64_us,
+                r.f32_us,
+                r.measured_bytes_f64,
+                r.measured_bytes_f32,
+                r.bytes_ratio,
+                r.speedup
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"scalar_simd\",\n  \"fast_mode\": {fast},\n  \
+         \"configs\": [\n{configs}\n  ],\n  \
+         \"worst_bytes_ratio\": {worst_ratio:.4},\n  \
+         \"best_speedup\": {best:.3}\n}}\n",
+        fast = fast_mode(),
+        configs = configs.join(",\n"),
+    );
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
 fn write_json(
     path: &str,
     rows: &[FusedRow],
@@ -812,6 +990,9 @@ fn main() {
 
     let batch_rows = fused_batch_section(budget, &mut rng);
     write_batch_json("BENCH_batch.json", &batch_rows);
+
+    let simd_rows = simd_section(budget, &mut rng);
+    write_simd_json("BENCH_simd.json", &simd_rows);
 
     if fast_mode() {
         println!("\n(BENCH_FAST set — skipping the refactor/materialised-W ablations)");

@@ -9,5 +9,5 @@
 pub mod schema;
 pub mod toml_lite;
 
-pub use schema::{AppConfig, NetworkConfig, ServerConfig, TrainingConfig};
+pub use schema::{AppConfig, ModelConfig, NetworkConfig, ServerConfig, TrainingConfig};
 pub use toml_lite::{parse, Value};

@@ -4,6 +4,7 @@ use super::toml_lite::{parse, Value};
 use crate::error::{Error, Result};
 use crate::fastmult::Group;
 use crate::nn::Activation;
+use crate::tensor::Precision;
 use std::collections::BTreeMap;
 use std::time::Duration;
 
@@ -67,6 +68,15 @@ impl Default for TrainingConfig {
     }
 }
 
+/// Model-execution section (`[model]`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ModelConfig {
+    /// Scalar precision the served network executes at: `"f64"` (default;
+    /// bitwise-reference path) or `"f32"` (halved memory traffic). Training
+    /// always runs in `f64`; this only selects the serving precision.
+    pub precision: Precision,
+}
+
 /// Serving section (`[server]`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
@@ -105,6 +115,8 @@ pub struct AppConfig {
     pub network: NetworkConfig,
     /// `[training]`.
     pub training: TrainingConfig,
+    /// `[model]`.
+    pub model: ModelConfig,
     /// `[server]`.
     pub server: ServerConfig,
     /// Optional HLO artifact to serve (`artifact = "…"` at top level).
@@ -193,6 +205,15 @@ impl AppConfig {
             )));
         }
 
+        let model = ModelConfig {
+            precision: {
+                let s = get_str(&m, "model.precision", Precision::default().name())?;
+                Precision::parse(&s).ok_or_else(|| {
+                    Error::Config(format!("model.precision must be f64|f32, got '{s}'"))
+                })?
+            },
+        };
+
         let server = ServerConfig {
             workers: get_usize(&m, "server.workers", d.server.workers)?.max(1),
             max_batch: get_usize(&m, "server.max_batch", d.server.max_batch)?.max(1),
@@ -227,6 +248,7 @@ impl AppConfig {
         Ok(AppConfig {
             network,
             training,
+            model,
             server,
             artifact,
         })
@@ -272,6 +294,9 @@ optimizer = "sgd"
 momentum = 0.8
 log_every = 5
 
+[model]
+precision = "f32"
+
 [server]
 workers = 2
 max_batch = 8
@@ -286,6 +311,7 @@ plan_cache_capacity = 128
         assert_eq!(c.network.orders, vec![2, 2]);
         assert_eq!(c.network.activation, Activation::Identity);
         assert_eq!(c.training.optimizer, "sgd");
+        assert_eq!(c.model.precision, Precision::F32);
         assert_eq!(c.server.batch_window, Duration::from_micros(500));
         assert_eq!(c.server.plan_cache_capacity, Some(128));
         assert_eq!(c.artifact.as_deref(), Some("artifacts/model.hlo.txt"));
@@ -300,5 +326,14 @@ plan_cache_capacity = 128
         assert!(AppConfig::from_text("[network]\nn = \"five\"").is_err());
         assert!(AppConfig::from_text("[server]\nplan_cache_capacity = \"big\"").is_err());
         assert!(AppConfig::from_text("[server]\nplan_cache_capacity = -1").is_err());
+        assert!(AppConfig::from_text("[model]\nprecision = \"f16\"").is_err());
+    }
+
+    #[test]
+    fn precision_defaults_to_f64() {
+        let c = AppConfig::from_text("").unwrap();
+        assert_eq!(c.model.precision, Precision::F64);
+        let c = AppConfig::from_text("[model]\nprecision = \"double\"").unwrap();
+        assert_eq!(c.model.precision, Precision::F64);
     }
 }

@@ -234,6 +234,9 @@ impl Metrics {
 
 #[cfg(test)]
 mod tests {
+    // The legacy forward names stay exercised until their removal.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::diagram::Diagram;
     use crate::fastmult::Group;

@@ -3,7 +3,7 @@
 use crate::error::{Error, Result};
 use crate::nn::EquivariantNet;
 use crate::runtime::HloService;
-use crate::tensor::Tensor;
+use crate::tensor::{Precision, Tensor, TensorOf};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -11,17 +11,26 @@ use std::sync::Arc;
 /// path) or a compiled HLO artifact (runs through the PJRT owner thread).
 #[derive(Debug, Clone)]
 pub enum ModelKind {
-    /// In-process equivariant network.
-    Net(Arc<EquivariantNet>),
+    /// In-process equivariant network, executed at the given precision.
+    /// Requests arrive and return as `f64` tensors either way; with
+    /// [`Precision::F32`] the inputs are narrowed once at the boundary,
+    /// the whole network runs in `f32` (half the memory traffic on the
+    /// bandwidth-bound schedule walks), and the outputs widen back.
+    Net(Arc<EquivariantNet>, Precision),
     /// AOT-compiled JAX/Pallas model (expects/returns the flattened tensor;
     /// the artifact's first tuple output is used).
     Hlo(HloService),
 }
 
 impl ModelKind {
-    /// Wrap a network.
+    /// Wrap a network, serving at the default `f64` precision.
     pub fn net(net: EquivariantNet) -> Self {
-        ModelKind::Net(Arc::new(net))
+        ModelKind::Net(Arc::new(net), Precision::F64)
+    }
+    /// Wrap a network, serving at the given precision
+    /// (`[model] precision` in the config).
+    pub fn net_with_precision(net: EquivariantNet, precision: Precision) -> Self {
+        ModelKind::Net(Arc::new(net), precision)
     }
     /// Wrap an HLO service handle.
     pub fn hlo(service: HloService) -> Self {
@@ -30,13 +39,22 @@ impl ModelKind {
 
     /// Run a whole batch through the model: one result per input, in
     /// order. Native networks take the batched parallel path
-    /// ([`EquivariantNet::forward_batch_results`]), which already keeps
-    /// shape errors per-item (malformed batches fall back to per-item
-    /// forwards); HLO models run through their owner thread one by one
-    /// (PJRT-CPU serialises executions anyway).
+    /// ([`EquivariantNet::apply_results`]), which keeps shape errors
+    /// per-item — malformed batches fall back to per-item forwards with
+    /// each failure wrapped in [`Error::BatchItem`], so errors carry the
+    /// failing input's index; HLO models run through their owner thread
+    /// one by one (PJRT-CPU serialises executions anyway).
     pub fn infer_batch(&self, inputs: &[&Tensor]) -> Vec<Result<Tensor>> {
         match self {
-            ModelKind::Net(net) => net.forward_batch_results(inputs),
+            ModelKind::Net(net, Precision::F64) => net.apply_results(inputs),
+            ModelKind::Net(net, Precision::F32) => {
+                let narrowed: Vec<TensorOf<f32>> = inputs.iter().map(|t| t.cast()).collect();
+                let refs: Vec<&TensorOf<f32>> = narrowed.iter().collect();
+                net.apply_results(&refs)
+                    .into_iter()
+                    .map(|r| r.map(|t| t.cast::<f64>()))
+                    .collect()
+            }
             ModelKind::Hlo(_) => inputs.iter().map(|t| self.infer(t)).collect(),
         }
     }
@@ -44,14 +62,24 @@ impl ModelKind {
     /// Run one input through the model.
     pub fn infer(&self, input: &Tensor) -> Result<Tensor> {
         match self {
-            ModelKind::Net(net) => {
+            ModelKind::Net(net, precision) => {
                 if input.n != net.n() {
                     return Err(Error::ShapeMismatch {
                         expected: format!("tensors over R^{}", net.n()),
                         got: format!("R^{}", input.n),
                     });
                 }
-                net.forward(input)
+                match precision {
+                    Precision::F64 => Ok(net
+                        .apply(input)?
+                        .into_single()
+                        .expect("single input yields single output")),
+                    Precision::F32 => Ok(net
+                        .apply(&input.cast::<f32>())?
+                        .into_single()
+                        .expect("single input yields single output")
+                        .cast::<f64>()),
+                }
             }
             ModelKind::Hlo(service) => {
                 // f64 tensor -> f32 PJRT literal, cube shape [n; order].
@@ -149,5 +177,28 @@ mod tests {
         let kind = ModelKind::net(net);
         assert!(kind.infer(&Tensor::zeros(4, 1)).is_err()); // wrong n
         assert!(kind.infer(&Tensor::zeros(3, 1)).is_ok());
+    }
+
+    #[test]
+    fn f32_precision_serves_within_tolerance() {
+        let mut rng = Rng::new(403);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 1],
+            Activation::Identity,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let v = Tensor::random(3, 2, &mut rng);
+        let f64_kind = ModelKind::net(net.clone());
+        let f32_kind = ModelKind::net_with_precision(net, Precision::F32);
+        let want = f64_kind.infer(&v).unwrap();
+        let got = f32_kind.infer(&v).unwrap();
+        assert!(got.allclose(&want, 1e-4), "diff {}", got.max_abs_diff(&want));
+        // The batched serving path narrows and widens the same way.
+        let results = f32_kind.infer_batch(&[&v]);
+        assert!(results[0].as_ref().unwrap().allclose(&want, 1e-4));
     }
 }

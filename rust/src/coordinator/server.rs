@@ -208,6 +208,9 @@ impl Drop for CoordinatorHandle {
 
 #[cfg(test)]
 mod tests {
+    // The legacy forward names stay exercised until their removal.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::fastmult::Group;
     use crate::layer::Init;

@@ -38,6 +38,16 @@ pub enum Error {
     /// an (l+k)\n-diagram needs l+k-n even and non-negative).
     DimensionConstraint(String),
 
+    /// A batched call failed on one item; carries which item and why, so
+    /// callers fanning a batch out (and the coordinator reporting per-item
+    /// results) keep the failing index.
+    BatchItem {
+        /// Zero-based position of the failing item in the batch.
+        index: usize,
+        /// The underlying failure.
+        source: Box<Error>,
+    },
+
     /// Configuration file / CLI errors.
     Config(String),
 
@@ -63,6 +73,9 @@ impl fmt::Display for Error {
             Error::DimensionConstraint(msg) => {
                 write!(f, "dimension constraint violated: {msg}")
             }
+            Error::BatchItem { index, source } => {
+                write!(f, "batch item {index}: {source}")
+            }
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
@@ -70,7 +83,14 @@ impl fmt::Display for Error {
     }
 }
 
-impl std::error::Error for Error {}
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::BatchItem { source, .. } => Some(source.as_ref()),
+            _ => None,
+        }
+    }
+}
 
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Self {
@@ -127,6 +147,14 @@ mod tests {
             }
             .to_string(),
             "diagram not valid for group O(n): odd block"
+        );
+        assert_eq!(
+            Error::BatchItem {
+                index: 3,
+                source: Box::new(Error::Coordinator("x".into()))
+            }
+            .to_string(),
+            "batch item 3: coordinator error: x"
         );
     }
 

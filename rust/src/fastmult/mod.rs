@@ -25,12 +25,13 @@ pub use cache::{CacheStats, PlanCache};
 pub use plan::{factor_runs, MultPlan};
 pub use schedule::{
     arena_stats, clear_arena_pool, exec_stats, ops_shared_total, planner_totals, ArenaStats,
-    ExecStats, LayerSchedule, OpCost, PlannerTotals, PooledArena, ScheduleStats, ScratchArena,
+    ExecStats, LayerSchedule, OpCost, PlannerTotals, PooledArena, PooledArenaOf, ScheduleStats,
+    ScratchArena, ScratchArenaOf,
 };
 
 use crate::diagram::Diagram;
 use crate::error::{Error, Result};
-use crate::tensor::Tensor;
+use crate::tensor::{Scalar, TensorOf};
 
 /// The four groups whose equivariant weight matrices the paper
 /// characterises.
@@ -112,7 +113,7 @@ impl std::fmt::Display for Group {
 ///
 /// Equals [`crate::functor::naive_apply`] to floating-point accuracy but
 /// runs exponentially faster (see module docs).
-pub fn matrix_mult(group: Group, d: &Diagram, v: &Tensor) -> Result<Tensor> {
+pub fn matrix_mult<S: Scalar>(group: Group, d: &Diagram, v: &TensorOf<S>) -> Result<TensorOf<S>> {
     // One-shot path: factor and apply. Callers with a stable diagram should
     // hold a [`MultPlan`] instead, which amortises `Factor` (and detects
     // pure-permutation diagrams) once.
@@ -126,6 +127,7 @@ mod tests {
         all_brauer_diagrams, all_jellyfish_diagrams, all_partition_diagrams,
     };
     use crate::functor::naive_apply;
+    use crate::tensor::Tensor;
     use crate::util::Rng;
 
     fn check_all(group: Group, diagrams: &[Diagram], n: usize, seed: u64) {

@@ -12,12 +12,12 @@
 //!    `e_m ⊗ e_m` — pure memory writes.
 
 use crate::diagram::PlanarLayout;
-use crate::tensor::Tensor;
+use crate::tensor::{Scalar, TensorOf};
 
 /// Apply the planar middle Brauer diagram to `v` (axes already in planar
 /// bottom layout). Output is in planar top layout
 /// `[T_1 … T_t | D_1^U … D_d^U]`, order `l = 2t + d`.
-pub fn planar_mult(layout: &PlanarLayout, v: &Tensor) -> Tensor {
+pub fn planar_mult<S: Scalar>(layout: &PlanarLayout, v: &TensorOf<S>) -> TensorOf<S> {
     let (w, lead, tail) = planar_compact(layout, v);
     // Step 3: fused broadcast of top pairs (diagonal e_m ⊗ e_m) + pass-
     // through of the d cross uppers — one scatter.
@@ -26,10 +26,10 @@ pub fn planar_mult(layout: &PlanarLayout, v: &Tensor) -> Tensor {
 
 /// Steps 1–2 only (see [`super::sn::planar_compact`]): the pair-traced
 /// compact form plus the Step-3 groups `(lead = [2; t], tail = [1; d])`.
-pub(crate) fn planar_compact<'a>(
+pub(crate) fn planar_compact<'a, S: Scalar>(
     layout: &PlanarLayout,
-    v: &'a Tensor,
-) -> (std::borrow::Cow<'a, Tensor>, Vec<usize>, Vec<usize>) {
+    v: &'a TensorOf<S>,
+) -> (std::borrow::Cow<'a, TensorOf<S>>, Vec<usize>, Vec<usize>) {
     use std::borrow::Cow;
     debug_assert_eq!(layout.free_top, 0);
     debug_assert_eq!(layout.free_bottom, 0);
@@ -39,7 +39,7 @@ pub(crate) fn planar_compact<'a>(
 
     // Step 1: trace out bottom pairs, rightmost first (first trace reads
     // `v` directly). Step 2: transfer = identity for O(n).
-    let mut t: Option<Tensor> = None;
+    let mut t: Option<TensorOf<S>> = None;
     for _ in 0..layout.b() {
         let src = t.as_ref().unwrap_or(v);
         t = Some(src.trace_trailing_pair());
@@ -71,6 +71,7 @@ mod tests {
     use crate::diagram::{factor, Diagram};
     use crate::fastmult::Group;
     use crate::functor::naive_apply;
+    use crate::tensor::Tensor;
     use crate::util::Rng;
 
     /// Example 11: the (5,5)-Brauer diagram of Figure 4 applied to v gives

@@ -9,7 +9,7 @@
 use super::{on, sn, so, sp, Group};
 use crate::diagram::{factor, factor_jellyfish, Diagram, Factored};
 use crate::error::{Error, Result};
-use crate::tensor::Tensor;
+use crate::tensor::{Scalar, TensorOf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Process-wide count of `Factor` executions (every successful
@@ -130,8 +130,9 @@ impl MultPlan {
 
     /// Apply the plan: `Permute → PlanarMult → Permute` (Algorithm 1 with
     /// the `Factor` step amortised away). Identity permutations are elided
-    /// entirely (no copy).
-    pub fn apply(&self, v: &Tensor) -> Result<Tensor> {
+    /// entirely (no copy). Generic over the scalar type; the `f64`
+    /// instantiation is the historical path bit for bit.
+    pub fn apply<S: Scalar>(&self, v: &TensorOf<S>) -> Result<TensorOf<S>> {
         if let Some(fused) = &self.fused_perm {
             self.check_input(v)?;
             return Ok(v.permute_axes(fused)); // single pass, no zeros
@@ -146,7 +147,12 @@ impl MultPlan {
 
     /// Fused λ-weighted apply: `out += coeff · (Algorithm 1)(v)` without
     /// materialising the permuted output — the layer hot path.
-    pub fn apply_accumulate(&self, v: &Tensor, coeff: f64, out: &mut Tensor) -> Result<()> {
+    pub fn apply_accumulate<S: Scalar>(
+        &self,
+        v: &TensorOf<S>,
+        coeff: f64,
+        out: &mut TensorOf<S>,
+    ) -> Result<()> {
         self.check_output(out)?;
         self.check_input(v)?;
         if let Some(fused) = &self.fused_perm {
@@ -154,7 +160,7 @@ impl MultPlan {
             return Ok(());
         }
         let vp_owned;
-        let vp: &Tensor = if is_identity(&self.factored.perm_in) {
+        let vp: &TensorOf<S> = if is_identity(&self.factored.perm_in) {
             v
         } else {
             vp_owned = v.permute_axes(&self.factored.perm_in);
@@ -179,7 +185,12 @@ impl MultPlan {
     /// permuted by [`MultPlan::perm_in`] (i.e. `vp = v.permute_axes(
     /// plan.perm_in())`). Callers that apply many plans sharing one
     /// `perm_in` to the same input use this to skip the per-term permute.
-    pub fn apply_accumulate_permuted(&self, vp: &Tensor, coeff: f64, out: &mut Tensor) -> Result<()> {
+    pub fn apply_accumulate_permuted<S: Scalar>(
+        &self,
+        vp: &TensorOf<S>,
+        coeff: f64,
+        out: &mut TensorOf<S>,
+    ) -> Result<()> {
         self.check_output(out)?;
         self.check_input(vp)?;
         self.accumulate_from_permuted(vp, coeff, out);
@@ -189,7 +200,7 @@ impl MultPlan {
     /// Steps 2–4 of Algorithm 1 on an input already in planar-bottom
     /// layout: per-group `PlanarMult`, then scatter through `σ_l` into
     /// `out`, scaled by `coeff`.
-    fn accumulate_from_permuted(&self, vp: &Tensor, coeff: f64, out: &mut Tensor) {
+    fn accumulate_from_permuted<S: Scalar>(&self, vp: &TensorOf<S>, coeff: f64, out: &mut TensorOf<S>) {
         if self.fused_perm.is_some() {
             // Pure-permutation diagram: the planar middle is the identity,
             // so only the output permutation remains.
@@ -238,7 +249,7 @@ impl MultPlan {
         }
     }
 
-    fn check_output(&self, out: &Tensor) -> Result<()> {
+    fn check_output<S: Scalar>(&self, out: &TensorOf<S>) -> Result<()> {
         if out.order != self.l || out.n != self.n {
             return Err(Error::ShapeMismatch {
                 expected: format!("order {} output over R^{}", self.l, self.n),
@@ -248,7 +259,7 @@ impl MultPlan {
         Ok(())
     }
 
-    fn check_input(&self, v: &Tensor) -> Result<()> {
+    fn check_input<S: Scalar>(&self, v: &TensorOf<S>) -> Result<()> {
         if v.order != self.k || v.n != self.n {
             return Err(Error::ShapeMismatch {
                 expected: format!("order {} tensor over R^{}", self.k, self.n),
@@ -260,10 +271,10 @@ impl MultPlan {
 
     /// `Permute(σ_k)` (elided if trivial) followed by the per-group
     /// `PlanarMult`; the result is in the planar top layout.
-    fn planar_forward(&self, v: &Tensor) -> Result<Tensor> {
+    fn planar_forward<S: Scalar>(&self, v: &TensorOf<S>) -> Result<TensorOf<S>> {
         self.check_input(v)?;
         let vp_owned;
-        let vp: &Tensor = if is_identity(&self.factored.perm_in) {
+        let vp: &TensorOf<S> = if is_identity(&self.factored.perm_in) {
             v
         } else {
             vp_owned = v.permute_axes(&self.factored.perm_in);
@@ -328,6 +339,7 @@ impl MultPlan {
 mod tests {
     use super::*;
     use crate::fastmult::matrix_mult;
+    use crate::tensor::Tensor;
     use crate::util::Rng;
 
     #[test]

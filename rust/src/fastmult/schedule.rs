@@ -84,9 +84,11 @@ use super::plan::is_identity;
 use super::{sp, Group, MultPlan};
 use crate::error::{Error, Result};
 use crate::tensor::{
-    axis_strides, group_diag_offsets, levi_civita_entries, permute_block_map, permute_dst_map,
-    permuted_gather_base, permuted_group_diag_offsets, scatter_diag_dsts, BatchTensor, Tensor,
+    axis_strides, axpy_slice, group_diag_offsets, levi_civita_entries, permute_block_map,
+    permute_dst_map, permuted_gather_base, permuted_group_diag_offsets, ramp_base,
+    scatter_diag_dsts, BatchTensorOf, Scalar, TensorOf,
 };
+use std::any::{Any, TypeId};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -216,11 +218,14 @@ fn saturating_counter_add(counter: &AtomicU64, delta: u64) {
 
 /// Measured bytes of one kernel evaluation over `items` batch items (the
 /// cost model's byte figure *is* the kernel's exact element count for
-/// every op shape). Accumulated into a per-walk local and flushed to the
+/// every op shape, quoted at the 8-byte `f64` reference width — rescaled
+/// here to the executing scalar's width, so an `f32` walk reports half the
+/// traffic). Accumulated into a per-walk local and flushed to the
 /// process-wide counter **once per execute** — a contended global atomic
 /// per node would tax exactly the hot path this module optimises.
-fn node_bytes(cost: &OpCost, items: usize) -> u64 {
-    cost.bytes
+fn node_bytes<S: Scalar>(cost: &OpCost, items: usize) -> u64 {
+    (cost.bytes / 8)
+        .saturating_mul(S::BYTES as u128)
         .saturating_mul(items as u128)
         .min(u64::MAX as u128) as u64
 }
@@ -251,17 +256,23 @@ pub fn planner_totals() -> PlannerTotals {
 /// every acquisition is a reuse: the per-arena and process-wide counters
 /// make that provable from tests and benches.
 ///
-/// Beside the `f64` buckets the arena pools **index scratch**: the `usize`
+/// Beside the scalar buckets the arena pools **index scratch**: the `usize`
 /// odometer/ref-count vectors and node-slot tables the schedule walk needs
 /// per call. These have their own counters (`index_allocations` /
 /// `index_reuses`), so the zero-allocation steady-state property covers
 /// index scratch as well as tensor buffers.
+///
+/// The arena is generic over the executing [`Scalar`]: an arena only ever
+/// pools buffers of its own scalar type, and the process-wide
+/// [`PooledArenaOf`] pool keys parked arenas by that type, so `f32` and
+/// `f64` walks never trade buffers. [`ScratchArena`] aliases the `f64`
+/// instantiation for existing call sites.
 #[derive(Debug, Default)]
-pub struct ScratchArena {
-    buckets: HashMap<usize, Vec<Vec<f64>>>,
+pub struct ScratchArenaOf<S: Scalar> {
+    buckets: HashMap<usize, Vec<Vec<S>>>,
     idx_buckets: HashMap<usize, Vec<Vec<usize>>>,
-    tensor_slots: HashMap<usize, Vec<Vec<Option<Tensor>>>>,
-    batch_slots: HashMap<usize, Vec<Vec<Option<BatchTensor>>>>,
+    tensor_slots: HashMap<usize, Vec<Vec<Option<TensorOf<S>>>>>,
+    batch_slots: HashMap<usize, Vec<Vec<Option<BatchTensorOf<S>>>>>,
     allocations: u64,
     reuses: u64,
     index_allocations: u64,
@@ -269,16 +280,19 @@ pub struct ScratchArena {
     held_f64s: usize,
 }
 
-impl ScratchArena {
+/// The default-precision arena every existing call site uses.
+pub type ScratchArena = ScratchArenaOf<f64>;
+
+impl<S: Scalar> ScratchArenaOf<S> {
     /// Fresh, empty arena.
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// A raw `f64` buffer of exactly `len` entries (contents unspecified),
+    /// A raw scalar buffer of exactly `len` entries (contents unspecified),
     /// drawn from the same length-keyed buckets as the tensor buffers —
     /// the per-call λ-weight gather uses this.
-    pub(crate) fn acquire_raw(&mut self, len: usize) -> Vec<f64> {
+    pub(crate) fn acquire_raw(&mut self, len: usize) -> Vec<S> {
         let data = match self.buckets.get_mut(&len).and_then(|b| b.pop()) {
             Some(buf) => {
                 self.reuses += 1;
@@ -290,7 +304,7 @@ impl ScratchArena {
                 ARENA_ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
                 self.held_f64s += len;
                 ARENA_HIGH_WATER.fetch_max(self.held_f64s, Ordering::Relaxed);
-                vec![0.0; len]
+                vec![S::ZERO; len]
             }
         };
         debug_assert_eq!(data.len(), len);
@@ -298,34 +312,34 @@ impl ScratchArena {
     }
 
     /// Return a raw buffer to the pool.
-    pub(crate) fn release_raw(&mut self, buf: Vec<f64>) {
+    pub(crate) fn release_raw(&mut self, buf: Vec<S>) {
         self.buckets.entry(buf.len()).or_default().push(buf);
     }
 
     /// A tensor of shape `(n, order)` backed by a recycled buffer when one
     /// of the right length is free. Contents are unspecified.
-    pub fn acquire(&mut self, n: usize, order: usize) -> Tensor {
+    pub fn acquire(&mut self, n: usize, order: usize) -> TensorOf<S> {
         let data = self.acquire_raw(n.pow(order as u32));
-        Tensor { n, order, data }
+        TensorOf { n, order, data }
     }
 
     /// Return a tensor's buffer to the pool.
-    pub fn release(&mut self, t: Tensor) {
+    pub fn release(&mut self, t: TensorOf<S>) {
         self.release_raw(t.data);
     }
 
     /// A batch of `batch` tensors of shape `(n, order)` backed by one
-    /// recycled contiguous buffer (`batch · n^order` f64s). Buckets are
+    /// recycled contiguous buffer (`batch · n^order` scalars). Buckets are
     /// keyed by total length, so batched and per-item intermediates share
     /// the same pool — an arena warmed at batch size `B` serves every
     /// later `B`-item walk with zero heap allocations.
-    pub fn acquire_batch(&mut self, n: usize, order: usize, batch: usize) -> BatchTensor {
+    pub fn acquire_batch(&mut self, n: usize, order: usize, batch: usize) -> BatchTensorOf<S> {
         let data = self.acquire_raw(batch * n.pow(order as u32));
-        BatchTensor::from_raw(n, order, batch, data)
+        BatchTensorOf::from_raw(n, order, batch, data)
     }
 
     /// Return a batch's buffer to the pool.
-    pub fn release_batch(&mut self, t: BatchTensor) {
+    pub fn release_batch(&mut self, t: BatchTensorOf<S>) {
         self.release_raw(t.into_raw());
     }
 
@@ -354,7 +368,7 @@ impl ScratchArena {
     /// A node-slot table of exactly `len` empty slots for the schedule
     /// walk. Keyed by length like the other pools, so a reuse never hides
     /// a resize-reallocation from the counters.
-    pub(crate) fn acquire_tensor_slots(&mut self, len: usize) -> Vec<Option<Tensor>> {
+    pub(crate) fn acquire_tensor_slots(&mut self, len: usize) -> Vec<Option<TensorOf<S>>> {
         match self.tensor_slots.get_mut(&len).and_then(|b| b.pop()) {
             Some(v) => {
                 self.index_reuses += 1;
@@ -373,13 +387,13 @@ impl ScratchArena {
     }
 
     /// Return a node-slot table (all slots drained) to the pool.
-    pub(crate) fn release_tensor_slots(&mut self, slots: Vec<Option<Tensor>>) {
+    pub(crate) fn release_tensor_slots(&mut self, slots: Vec<Option<TensorOf<S>>>) {
         debug_assert!(slots.iter().all(|s| s.is_none()), "undrained slot table");
         self.tensor_slots.entry(slots.len()).or_default().push(slots);
     }
 
-    /// Batched twin of [`ScratchArena::acquire_tensor_slots`].
-    pub(crate) fn acquire_batch_slots(&mut self, len: usize) -> Vec<Option<BatchTensor>> {
+    /// Batched twin of [`ScratchArenaOf::acquire_tensor_slots`].
+    pub(crate) fn acquire_batch_slots(&mut self, len: usize) -> Vec<Option<BatchTensorOf<S>>> {
         match self.batch_slots.get_mut(&len).and_then(|b| b.pop()) {
             Some(v) => {
                 self.index_reuses += 1;
@@ -398,7 +412,7 @@ impl ScratchArena {
     }
 
     /// Return a batched node-slot table (all slots drained) to the pool.
-    pub(crate) fn release_batch_slots(&mut self, slots: Vec<Option<BatchTensor>>) {
+    pub(crate) fn release_batch_slots(&mut self, slots: Vec<Option<BatchTensorOf<S>>>) {
         debug_assert!(slots.iter().all(|s| s.is_none()), "undrained slot table");
         self.batch_slots.entry(slots.len()).or_default().push(slots);
     }
@@ -444,49 +458,69 @@ impl ScratchArena {
     }
 }
 
-/// Drop every arena currently parked in the process-wide pool (arenas
-/// checked out by in-flight calls are unaffected and return to the pool on
-/// drop). The pool is otherwise unbounded — it holds one arena per peak
-/// concurrent caller, each at its historical working set — so servers that
-/// shrink their model shapes can call this to release the old buffers.
+/// Drop every arena currently parked in the process-wide pool — both
+/// precisions (arenas checked out by in-flight calls are unaffected and
+/// return to the pool on drop). The pool is otherwise unbounded — it holds
+/// one arena per peak concurrent caller, each at its historical working
+/// set — so servers that shrink their model shapes can call this to
+/// release the old buffers.
 pub fn clear_arena_pool() {
     ARENA_POOL.lock().unwrap().clear();
 }
 
-static ARENA_POOL: Mutex<Vec<ScratchArena>> = Mutex::new(Vec::new());
+/// Parked arenas of every scalar type, tagged by [`TypeId`] so a checkout
+/// only ever resumes an arena of its own precision. The pool stays a flat
+/// vec: it holds at most one arena per peak concurrent caller, so the
+/// linear tag scan is noise next to the lock.
+static ARENA_POOL: Mutex<Vec<(TypeId, Box<dyn Any + Send>)>> = Mutex::new(Vec::new());
 
-/// A [`ScratchArena`] checked out of the process-wide pool; returned on
+/// A [`ScratchArenaOf`] checked out of the process-wide pool; returned on
 /// drop. Layer hot paths grab one per forward/backward call so steady-state
 /// serving reuses the same warmed buffers regardless of which worker thread
-/// runs the batch.
+/// runs the batch. [`PooledArena`] aliases the `f64` instantiation.
 #[derive(Debug)]
-pub struct PooledArena(Option<ScratchArena>);
+pub struct PooledArenaOf<S: Scalar>(Option<ScratchArenaOf<S>>);
 
-impl PooledArena {
-    /// Check an arena out of the pool (or create one cold).
-    pub fn get() -> PooledArena {
-        let arena = ARENA_POOL.lock().unwrap().pop().unwrap_or_default();
-        PooledArena(Some(arena))
+/// The default-precision pooled arena every existing call site uses.
+pub type PooledArena = PooledArenaOf<f64>;
+
+impl<S: Scalar> PooledArenaOf<S> {
+    /// Check an arena of this scalar type out of the pool (or create one
+    /// cold).
+    pub fn get() -> PooledArenaOf<S> {
+        let mut pool = ARENA_POOL.lock().unwrap();
+        let arena = match pool.iter().position(|(tag, _)| *tag == TypeId::of::<S>()) {
+            Some(i) => *pool
+                .swap_remove(i)
+                .1
+                .downcast::<ScratchArenaOf<S>>()
+                .expect("pool entry matches its type tag"),
+            None => ScratchArenaOf::default(),
+        };
+        PooledArenaOf(Some(arena))
     }
 }
 
-impl std::ops::Deref for PooledArena {
-    type Target = ScratchArena;
-    fn deref(&self) -> &ScratchArena {
+impl<S: Scalar> std::ops::Deref for PooledArenaOf<S> {
+    type Target = ScratchArenaOf<S>;
+    fn deref(&self) -> &ScratchArenaOf<S> {
         self.0.as_ref().expect("arena present until drop")
     }
 }
 
-impl std::ops::DerefMut for PooledArena {
-    fn deref_mut(&mut self) -> &mut ScratchArena {
+impl<S: Scalar> std::ops::DerefMut for PooledArenaOf<S> {
+    fn deref_mut(&mut self) -> &mut ScratchArenaOf<S> {
         self.0.as_mut().expect("arena present until drop")
     }
 }
 
-impl Drop for PooledArena {
+impl<S: Scalar> Drop for PooledArenaOf<S> {
     fn drop(&mut self) {
         if let Some(arena) = self.0.take() {
-            ARENA_POOL.lock().unwrap().push(arena);
+            ARENA_POOL
+                .lock()
+                .unwrap()
+                .push((TypeId::of::<S>(), Box::new(arena)));
         }
     }
 }
@@ -1245,20 +1279,28 @@ fn node_kernel(op: &Op, n: usize, in_order: usize) -> NodeKernel {
 /// active-member-innermost — exactly the visit order of the standalone
 /// multi-pattern kernels, so folded results are unchanged. A single active
 /// member takes the indirection-free path (bitwise identical: each
-/// destination receives one contribution either way).
-fn replay_class(
-    src: &[f64],
+/// destination receives one contribution either way); reps whose
+/// destinations form a contiguous ramp additionally route through the
+/// lane-chunked [`axpy_slice`], which keeps the per-element arithmetic and
+/// order unchanged.
+fn replay_class<S: Scalar>(
+    src: &[S],
     members: &[Member],
     act_idx: &[usize],
-    act_w: &[f64],
-    out: &mut [f64],
+    act_w: &[S],
+    out: &mut [S],
 ) {
     let len = src.len();
     debug_assert_eq!(act_idx.len(), act_w.len());
     if let ([mi], [w]) = (act_idx, act_w) {
+        let w = *w;
         for rep in members[*mi].dsts.chunks(len) {
-            for (&d, &x) in rep.iter().zip(src) {
-                out[d] += *w * x;
+            if let Some(d0) = ramp_base(rep) {
+                axpy_slice(w, src, &mut out[d0..d0 + len]);
+            } else {
+                for (&d, &x) in rep.iter().zip(src) {
+                    out[d] += w * x;
+                }
             }
         }
         return;
@@ -1277,12 +1319,12 @@ fn replay_class(
 /// Batched [`replay_class`]: the same member maps replayed item by item —
 /// item-outer, then the per-item rep/source/member order, so batched folded
 /// execution stays bitwise identical per item to the per-item walk.
-fn replay_class_batch(
-    src: &BatchTensor,
+fn replay_class_batch<S: Scalar>(
+    src: &BatchTensorOf<S>,
     members: &[Member],
     act_idx: &[usize],
-    act_w: &[f64],
-    out: &mut BatchTensor,
+    act_w: &[S],
+    out: &mut BatchTensorOf<S>,
 ) {
     for b in 0..src.batch() {
         replay_class(src.item(b), members, act_idx, act_w, out.item_mut(b));
@@ -1891,7 +1933,7 @@ impl LayerSchedule {
             .collect()
     }
 
-    fn check_input(&self, v: &Tensor) -> Result<()> {
+    fn check_input<S: Scalar>(&self, v: &TensorOf<S>) -> Result<()> {
         if v.order != self.k || v.n != self.n {
             return Err(Error::ShapeMismatch {
                 expected: format!("order {} tensor over R^{}", self.k, self.n),
@@ -1901,7 +1943,7 @@ impl LayerSchedule {
         Ok(())
     }
 
-    fn check_output(&self, out: &Tensor) -> Result<()> {
+    fn check_output<S: Scalar>(&self, out: &TensorOf<S>) -> Result<()> {
         if out.order != self.l || out.n != self.n {
             return Err(Error::ShapeMismatch {
                 expected: format!("order {} output over R^{}", self.l, self.n),
@@ -1936,20 +1978,21 @@ impl LayerSchedule {
     /// the pre-plan kernels applied). This is the per-call λ-gather that
     /// keeps the class structure weight-independent: mutate the layer's
     /// coefficients in place and the very next execute sees the new
-    /// values.
-    fn gather_active(
+    /// values. Weights are formed as the exact `f64` product and narrowed
+    /// to the executing scalar once here, never per element.
+    fn gather_active<S: Scalar>(
         &self,
         ci: usize,
         coeffs: &[f64],
         act_idx: &mut [usize],
-        act_w: &mut [f64],
+        act_w: &mut [S],
     ) -> usize {
         let mut na = 0usize;
         for (mi, m) in self.classes[ci].members.iter().enumerate() {
             let w = coeffs[m.term] * m.sign;
             if w != 0.0 {
                 act_idx[na] = mi;
-                act_w[na] = w;
+                act_w[na] = S::from_f64(w);
                 na += 1;
             }
         }
@@ -1958,14 +2001,15 @@ impl LayerSchedule {
 
     /// Measured bytes of one class pass with `active` members over `items`
     /// batch items: the source is read once, each active member
-    /// read-modify-writes its touched destinations. Accumulated locally by
-    /// the executors and flushed once per walk.
-    fn class_pass_bytes(&self, ci: usize, active: usize, items: usize) -> u64 {
+    /// read-modify-writes its touched destinations — at the executing
+    /// scalar's width. Accumulated locally by the executors and flushed
+    /// once per walk.
+    fn class_pass_bytes<S: Scalar>(&self, ci: usize, active: usize, items: usize) -> u64 {
         let class = &self.classes[ci];
         class
             .src_len
             .saturating_add(2u128.saturating_mul(active as u128).saturating_mul(class.touched))
-            .saturating_mul(8)
+            .saturating_mul(S::BYTES as u128)
             .saturating_mul(items as u128)
             .min(u64::MAX as u128) as u64
     }
@@ -1975,12 +2019,16 @@ impl LayerSchedule {
     /// computed once, all scratch drawn from `arena`. Equal to the per-term
     /// reference to ≤ 1e-12 (class folding reassociates the additions into
     /// each output element); deterministic and run-to-run bitwise stable.
-    pub fn execute(
+    ///
+    /// Generic over the executing [`Scalar`]: the `f64` instantiation is
+    /// the reference path, while `f32` runs the identical schedule on
+    /// narrowed inputs (λ-weights are narrowed once per gather).
+    pub fn execute<S: Scalar>(
         &self,
-        v: &Tensor,
+        v: &TensorOf<S>,
         coeffs: &[f64],
-        out: &mut Tensor,
-        arena: &mut ScratchArena,
+        out: &mut TensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
     ) -> Result<()> {
         self.execute_subset(v, coeffs, &self.order, out, arena)
     }
@@ -1989,13 +2037,13 @@ impl LayerSchedule {
     /// (still reading full-length `coeffs`), executed in the order given.
     /// Used with [`LayerSchedule::subtrees`] /
     /// [`LayerSchedule::cost_partitions`] for DAG-level parallelism.
-    pub fn execute_subset(
+    pub fn execute_subset<S: Scalar>(
         &self,
-        v: &Tensor,
+        v: &TensorOf<S>,
         coeffs: &[f64],
         classes: &[usize],
-        out: &mut Tensor,
-        arena: &mut ScratchArena,
+        out: &mut TensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
     ) -> Result<()> {
         self.check_input(v)?;
         self.check_output(out)?;
@@ -2042,7 +2090,7 @@ impl LayerSchedule {
                 }
             }
             SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
-            moved = moved.saturating_add(self.class_pass_bytes(ci, na, 1));
+            moved = moved.saturating_add(self.class_pass_bytes::<S>(ci, na, 1));
             self.release_chain(class.src, &mut refs, &mut bufs, arena);
         }
         flush_measured_bytes(moved);
@@ -2060,12 +2108,12 @@ impl LayerSchedule {
     /// channels; per output channel only the folded per-class scatter pass
     /// repeats (and the Sp(n) ε-expansion runs once per class, not once
     /// per term or channel).
-    pub fn execute_multi(
+    pub fn execute_multi<S: Scalar>(
         &self,
-        v: &Tensor,
+        v: &TensorOf<S>,
         coeff_rows: &[Vec<f64>],
-        outs: &mut [Tensor],
-        arena: &mut ScratchArena,
+        outs: &mut [TensorOf<S>],
+        arena: &mut ScratchArenaOf<S>,
     ) -> Result<()> {
         if coeff_rows.len() != outs.len() {
             return Err(Error::ShapeMismatch {
@@ -2119,7 +2167,7 @@ impl LayerSchedule {
                                 &mut out.data,
                             );
                             SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
-                            moved = moved.saturating_add(self.class_pass_bytes(ci, na, 1));
+                            moved = moved.saturating_add(self.class_pass_bytes::<S>(ci, na, 1));
                         }
                     }
                     arena.release(tmp);
@@ -2139,7 +2187,7 @@ impl LayerSchedule {
                             &mut out.data,
                         );
                         SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
-                        moved = moved.saturating_add(self.class_pass_bytes(ci, na, 1));
+                        moved = moved.saturating_add(self.class_pass_bytes::<S>(ci, na, 1));
                     }
                 }
             }
@@ -2162,9 +2210,14 @@ impl LayerSchedule {
     /// the call; it is **bitwise** equal to `MultPlan::apply` (chain
     /// canonicalisation is elementwise exact and each term's sink runs
     /// alone here).
-    pub fn execute_map<F>(&self, v: &Tensor, arena: &mut ScratchArena, mut f: F) -> Result<()>
+    pub fn execute_map<S: Scalar, F>(
+        &self,
+        v: &TensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
+        mut f: F,
+    ) -> Result<()>
     where
-        F: FnMut(usize, &Tensor) -> Result<()>,
+        F: FnMut(usize, &TensorOf<S>) -> Result<()>,
     {
         let all: Vec<usize> = (0..self.sinks.len()).collect();
         self.execute_map_subset(v, &all, arena, &mut f)
@@ -2174,15 +2227,15 @@ impl LayerSchedule {
     /// indices, visited in the order given. Pair with
     /// [`LayerSchedule::cost_term_partitions`] to fan a backward pass out
     /// over workers with cost-balanced term sets.
-    pub fn execute_map_subset<F>(
+    pub fn execute_map_subset<S: Scalar, F>(
         &self,
-        v: &Tensor,
+        v: &TensorOf<S>,
         terms: &[usize],
-        arena: &mut ScratchArena,
+        arena: &mut ScratchArenaOf<S>,
         mut f: F,
     ) -> Result<()>
     where
-        F: FnMut(usize, &Tensor) -> Result<()>,
+        F: FnMut(usize, &TensorOf<S>) -> Result<()>,
     {
         self.check_input(v)?;
         let mut refs = arena.acquire_indices(self.nodes.len());
@@ -2197,7 +2250,7 @@ impl LayerSchedule {
         for &si in terms {
             let sink = &self.sinks[si];
             self.materialize(sink.src, v, &mut bufs, arena, &mut moved);
-            term_out.data.fill(0.0);
+            term_out.data.fill(S::ZERO);
             // Replay this term's precompiled destination map (shared with
             // its folded-class membership) with weight `sign`: each
             // destination receives exactly one contribution onto the
@@ -2219,7 +2272,7 @@ impl LayerSchedule {
                     );
                 }
             }
-            moved = moved.saturating_add(self.class_pass_bytes(ci, 1, 1));
+            moved = moved.saturating_add(self.class_pass_bytes::<S>(ci, 1, 1));
             // On a callback error, stop — but still fall through to the
             // release/drain below so every buffer returns to the arena
             // (dropping them would skew the zero-allocation counters).
@@ -2250,7 +2303,7 @@ impl LayerSchedule {
     // bookkeeping are amortised across the batch. See
     // `docs/batched_execution.md`.
 
-    fn check_batch_input(&self, v: &BatchTensor) -> Result<()> {
+    fn check_batch_input<S: Scalar>(&self, v: &BatchTensorOf<S>) -> Result<()> {
         if v.order() != self.k || v.n() != self.n {
             return Err(Error::ShapeMismatch {
                 expected: format!("order {} batch over R^{}", self.k, self.n),
@@ -2260,7 +2313,7 @@ impl LayerSchedule {
         Ok(())
     }
 
-    fn check_batch_output(&self, out: &BatchTensor, batch: usize) -> Result<()> {
+    fn check_batch_output<S: Scalar>(&self, out: &BatchTensorOf<S>, batch: usize) -> Result<()> {
         if out.order() != self.l || out.n() != self.n || out.batch() != batch {
             return Err(Error::ShapeMismatch {
                 expected: format!(
@@ -2283,12 +2336,12 @@ impl LayerSchedule {
     /// the whole DAG walked **once per batch**. Shared intermediates
     /// amortise across terms *and* items, and each active class is one
     /// multi-pattern scatter pass over `B` items with shared index maps.
-    pub fn execute_batch(
+    pub fn execute_batch<S: Scalar>(
         &self,
-        v: &BatchTensor,
+        v: &BatchTensorOf<S>,
         coeffs: &[f64],
-        out: &mut BatchTensor,
-        arena: &mut ScratchArena,
+        out: &mut BatchTensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
     ) -> Result<()> {
         self.execute_batch_subset(v, coeffs, &self.order, out, arena)
     }
@@ -2298,13 +2351,13 @@ impl LayerSchedule {
     /// given. Used with [`LayerSchedule::subtrees`] /
     /// [`LayerSchedule::cost_partitions`] for DAG-level parallelism over a
     /// whole batch.
-    pub fn execute_batch_subset(
+    pub fn execute_batch_subset<S: Scalar>(
         &self,
-        v: &BatchTensor,
+        v: &BatchTensorOf<S>,
         coeffs: &[f64],
         classes: &[usize],
-        out: &mut BatchTensor,
-        arena: &mut ScratchArena,
+        out: &mut BatchTensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
     ) -> Result<()> {
         self.check_batch_input(v)?;
         self.check_batch_output(out, v.batch())?;
@@ -2340,7 +2393,7 @@ impl LayerSchedule {
                 }
             }
             SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
-            moved = moved.saturating_add(self.class_pass_bytes(ci, na, v.batch()));
+            moved = moved.saturating_add(self.class_pass_bytes::<S>(ci, na, v.batch()));
             self.release_chain_batch(class.src, &mut refs, &mut bufs, arena);
         }
         flush_measured_bytes(moved);
@@ -2357,14 +2410,14 @@ impl LayerSchedule {
     /// DAG once per batch and reads per-item gradient contributions out of
     /// each term's batch. The batch passed to `f` is a reused scratch
     /// buffer, valid only for the duration of the call.
-    pub fn execute_batch_map<F>(
+    pub fn execute_batch_map<S: Scalar, F>(
         &self,
-        v: &BatchTensor,
-        arena: &mut ScratchArena,
+        v: &BatchTensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
         mut f: F,
     ) -> Result<()>
     where
-        F: FnMut(usize, &BatchTensor) -> Result<()>,
+        F: FnMut(usize, &BatchTensorOf<S>) -> Result<()>,
     {
         self.check_batch_input(v)?;
         let mut refs = arena.acquire_indices(self.nodes.len());
@@ -2378,7 +2431,7 @@ impl LayerSchedule {
         let mut moved = 0u64;
         for (si, sink) in self.sinks.iter().enumerate() {
             self.materialize_batch(sink.src, v, &mut bufs, arena, &mut moved);
-            term_out.data_mut().fill(0.0);
+            term_out.data_mut().fill(S::ZERO);
             let (ci, mi) = self.sink_refs[si];
             let member = &self.classes[ci].members[mi];
             match &sink.kind {
@@ -2395,7 +2448,7 @@ impl LayerSchedule {
                     );
                 }
             }
-            moved = moved.saturating_add(self.class_pass_bytes(ci, 1, v.batch()));
+            moved = moved.saturating_add(self.class_pass_bytes::<S>(ci, 1, v.batch()));
             // As in `execute_map`: on a callback error, stop but still
             // fall through so every buffer returns to the arena.
             if let Err(e) = f(si, &term_out) {
@@ -2417,12 +2470,12 @@ impl LayerSchedule {
     /// layer's batched forward: interior nodes run once per (input
     /// channel, batch); per output channel only the folded per-class
     /// scatter passes repeat.
-    pub fn execute_batch_multi(
+    pub fn execute_batch_multi<S: Scalar>(
         &self,
-        v: &BatchTensor,
+        v: &BatchTensorOf<S>,
         coeff_rows: &[Vec<f64>],
-        outs: &mut [BatchTensor],
-        arena: &mut ScratchArena,
+        outs: &mut [BatchTensorOf<S>],
+        arena: &mut ScratchArenaOf<S>,
     ) -> Result<()> {
         if coeff_rows.len() != outs.len() {
             return Err(Error::ShapeMismatch {
@@ -2474,7 +2527,7 @@ impl LayerSchedule {
                             );
                             SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
                             moved =
-                                moved.saturating_add(self.class_pass_bytes(ci, na, v.batch()));
+                                moved.saturating_add(self.class_pass_bytes::<S>(ci, na, v.batch()));
                         }
                     }
                     arena.release_batch(tmp);
@@ -2488,7 +2541,7 @@ impl LayerSchedule {
                         }
                         replay_class_batch(x, &class.members, &act_idx[..na], &act_w[..na], out);
                         SCATTER_PASSES.fetch_add(1, Ordering::Relaxed);
-                        moved = moved.saturating_add(self.class_pass_bytes(ci, na, v.batch()));
+                        moved = moved.saturating_add(self.class_pass_bytes::<S>(ci, na, v.batch()));
                     }
                 }
             }
@@ -2505,12 +2558,12 @@ impl LayerSchedule {
 
     /// Batched twin of `materialize`: every node output is a `[B, …]`
     /// batch computed by the batched kernels.
-    fn materialize_batch(
+    fn materialize_batch<S: Scalar>(
         &self,
         src: Src,
-        v: &BatchTensor,
-        bufs: &mut [Option<BatchTensor>],
-        arena: &mut ScratchArena,
+        v: &BatchTensorOf<S>,
+        bufs: &mut [Option<BatchTensorOf<S>>],
+        arena: &mut ScratchArenaOf<S>,
         moved: &mut u64,
     ) {
         let Src::Node(i) = src else {
@@ -2551,16 +2604,16 @@ impl LayerSchedule {
             }
         }
         EXECUTED_NODES.fetch_add(1, Ordering::Relaxed);
-        *moved = moved.saturating_add(node_bytes(&self.nodes[i].cost, v.batch()));
+        *moved = moved.saturating_add(node_bytes::<S>(&self.nodes[i].cost, v.batch()));
         bufs[i] = Some(out);
     }
 
-    fn resolve_batch<'a>(
+    fn resolve_batch<'a, S: Scalar>(
         &self,
         src: Src,
-        v: &'a BatchTensor,
-        bufs: &'a [Option<BatchTensor>],
-    ) -> &'a BatchTensor {
+        v: &'a BatchTensorOf<S>,
+        bufs: &'a [Option<BatchTensorOf<S>>],
+    ) -> &'a BatchTensorOf<S> {
         match src {
             Src::Input => v,
             Src::Node(i) => bufs[i].as_ref().expect("node materialised before use"),
@@ -2568,21 +2621,21 @@ impl LayerSchedule {
     }
 
     /// Batched Sp(n) top-pair expansion of the chain output.
-    fn eps_expand_batch(
+    fn eps_expand_batch<S: Scalar>(
         &self,
         src: Src,
         t: usize,
-        v: &BatchTensor,
-        bufs: &[Option<BatchTensor>],
-        arena: &mut ScratchArena,
+        v: &BatchTensorOf<S>,
+        bufs: &[Option<BatchTensorOf<S>>],
+        arena: &mut ScratchArenaOf<S>,
         moved: &mut u64,
-    ) -> BatchTensor {
+    ) -> BatchTensorOf<S> {
         let x = self.resolve_batch(src, v, bufs);
         let order = x.order() + 2 * t;
         let (n, batch) = (x.n(), x.batch());
         let mut tmp = arena.acquire_batch(n, order, batch);
         sp::eps_top_expand_batch_into(x, t, &mut tmp);
-        *moved = moved.saturating_add(node_bytes(
+        *moved = moved.saturating_add(node_bytes::<S>(
             &OpCost {
                 flops: 0,
                 bytes: 8 * (x.item_len() as u128 + tmp.item_len() as u128),
@@ -2592,12 +2645,12 @@ impl LayerSchedule {
         tmp
     }
 
-    fn release_chain_batch(
+    fn release_chain_batch<S: Scalar>(
         &self,
         src: Src,
         refs: &mut [usize],
-        bufs: &mut [Option<BatchTensor>],
-        arena: &mut ScratchArena,
+        bufs: &mut [Option<BatchTensorOf<S>>],
+        arena: &mut ScratchArenaOf<S>,
     ) {
         let mut cur = src;
         while let Src::Node(i) = cur {
@@ -2611,7 +2664,11 @@ impl LayerSchedule {
         }
     }
 
-    fn drain_batch(&self, mut bufs: Vec<Option<BatchTensor>>, arena: &mut ScratchArena) {
+    fn drain_batch<S: Scalar>(
+        &self,
+        mut bufs: Vec<Option<BatchTensorOf<S>>>,
+        arena: &mut ScratchArenaOf<S>,
+    ) {
         for slot in bufs.iter_mut() {
             if let Some(buf) = slot.take() {
                 arena.release_batch(buf);
@@ -2623,12 +2680,12 @@ impl LayerSchedule {
     /// Compute (recursively) every not-yet-materialised node on the chain
     /// ending at `src`, drawing output buffers from the arena and writing
     /// them with the write-once `_into` primitives.
-    fn materialize(
+    fn materialize<S: Scalar>(
         &self,
         src: Src,
-        v: &Tensor,
-        bufs: &mut [Option<Tensor>],
-        arena: &mut ScratchArena,
+        v: &TensorOf<S>,
+        bufs: &mut [Option<TensorOf<S>>],
+        arena: &mut ScratchArenaOf<S>,
         moved: &mut u64,
     ) {
         let Src::Node(i) = src else {
@@ -2669,11 +2726,16 @@ impl LayerSchedule {
             }
         }
         EXECUTED_NODES.fetch_add(1, Ordering::Relaxed);
-        *moved = moved.saturating_add(node_bytes(&self.nodes[i].cost, 1));
+        *moved = moved.saturating_add(node_bytes::<S>(&self.nodes[i].cost, 1));
         bufs[i] = Some(out);
     }
 
-    fn resolve<'a>(&self, src: Src, v: &'a Tensor, bufs: &'a [Option<Tensor>]) -> &'a Tensor {
+    fn resolve<'a, S: Scalar>(
+        &self,
+        src: Src,
+        v: &'a TensorOf<S>,
+        bufs: &'a [Option<TensorOf<S>>],
+    ) -> &'a TensorOf<S> {
         match src {
             Src::Input => v,
             Src::Node(i) => bufs[i].as_ref().expect("node materialised before use"),
@@ -2681,22 +2743,22 @@ impl LayerSchedule {
     }
 
     /// Sp(n) top-pair expansion of the chain output into a scratch tensor.
-    fn eps_expand(
+    fn eps_expand<S: Scalar>(
         &self,
         src: Src,
         t: usize,
-        v: &Tensor,
-        bufs: &[Option<Tensor>],
-        arena: &mut ScratchArena,
+        v: &TensorOf<S>,
+        bufs: &[Option<TensorOf<S>>],
+        arena: &mut ScratchArenaOf<S>,
         moved: &mut u64,
-    ) -> Tensor {
+    ) -> TensorOf<S> {
         let x = self.resolve(src, v, bufs);
         let order = x.order + 2 * t;
         // Acquire after reading the shape; `resolve` only borrows `bufs`.
         let n = x.n;
         let mut tmp = arena.acquire(n, order);
         sp::eps_top_expand_into(x, t, &mut tmp);
-        *moved = moved.saturating_add(node_bytes(
+        *moved = moved.saturating_add(node_bytes::<S>(
             &OpCost {
                 flops: 0,
                 bytes: 8 * (x.data.len() as u128 + tmp.data.len() as u128),
@@ -2714,12 +2776,12 @@ impl LayerSchedule {
         }
     }
 
-    fn release_chain(
+    fn release_chain<S: Scalar>(
         &self,
         src: Src,
         refs: &mut [usize],
-        bufs: &mut [Option<Tensor>],
-        arena: &mut ScratchArena,
+        bufs: &mut [Option<TensorOf<S>>],
+        arena: &mut ScratchArenaOf<S>,
     ) {
         let mut cur = src;
         while let Src::Node(i) = cur {
@@ -2733,7 +2795,7 @@ impl LayerSchedule {
         }
     }
 
-    fn drain(&self, mut bufs: Vec<Option<Tensor>>, arena: &mut ScratchArena) {
+    fn drain<S: Scalar>(&self, mut bufs: Vec<Option<TensorOf<S>>>, arena: &mut ScratchArenaOf<S>) {
         for slot in bufs.iter_mut() {
             if let Some(buf) = slot.take() {
                 arena.release(buf);
@@ -2749,6 +2811,7 @@ mod tests {
     use crate::diagram::Diagram;
     use crate::fastmult::PlanCache;
     use crate::layer::spanning_plans;
+    use crate::tensor::{BatchTensor, Tensor};
     use crate::util::Rng;
 
     fn reference_sum(plans: &[Arc<MultPlan>], coeffs: &[f64], v: &Tensor, l: usize) -> Tensor {

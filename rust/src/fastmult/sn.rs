@@ -14,11 +14,11 @@
 //!    (pure memory writes).
 
 use crate::diagram::PlanarLayout;
-use crate::tensor::Tensor;
+use crate::tensor::{Scalar, TensorOf};
 
 /// Apply the planar middle diagram to `v` (axes already permuted into the
 /// planar bottom layout). Returns the planar-top-layout output of order `l`.
-pub fn planar_mult(layout: &PlanarLayout, v: &Tensor) -> Tensor {
+pub fn planar_mult<S: Scalar>(layout: &PlanarLayout, v: &TensorOf<S>) -> TensorOf<S> {
     let (x, lead, tail) = planar_compact(layout, v);
     // Step 3: copies — fused broadcast of the top-only block indices +
     // diagonal embedding of [T_1 … T_t | D_1^U … D_d^U] (one scatter,
@@ -30,10 +30,10 @@ pub fn planar_mult(layout: &PlanarLayout, v: &Tensor) -> Tensor {
 /// output, together with the Step-3 group structure
 /// `(lead = top-only block sizes, tail = cross upper sizes)`. Exposed so
 /// the layer hot path can fuse Step 3 with the λ-weighted accumulation.
-pub(crate) fn planar_compact<'a>(
+pub(crate) fn planar_compact<'a, S: Scalar>(
     layout: &PlanarLayout,
-    v: &'a Tensor,
-) -> (std::borrow::Cow<'a, Tensor>, Vec<usize>, Vec<usize>) {
+    v: &'a TensorOf<S>,
+) -> (std::borrow::Cow<'a, TensorOf<S>>, Vec<usize>, Vec<usize>) {
     use std::borrow::Cow;
     debug_assert_eq!(layout.free_top, 0);
     debug_assert_eq!(layout.free_bottom, 0);
@@ -41,7 +41,7 @@ pub(crate) fn planar_compact<'a>(
 
     // Step 1: contract bottom-only blocks, largest (rightmost) first. The
     // first contraction reads `v` in place (no defensive clone).
-    let mut t: Option<Tensor> = None;
+    let mut t: Option<TensorOf<S>> = None;
     for &size in layout.bottom_blocks.iter().rev() {
         let src = t.as_ref().unwrap_or(v);
         t = Some(src.contract_trailing_diagonal(size));
@@ -53,7 +53,7 @@ pub(crate) fn planar_compact<'a>(
     let lower_sizes: Vec<usize> = layout.cross_blocks.iter().map(|c| c.1).collect();
     let upper_sizes: Vec<usize> = layout.cross_blocks.iter().map(|c| c.0).collect();
     let lead = layout.top_blocks.clone();
-    let x: Cow<'a, Tensor> = if lower_sizes.iter().all(|&s| s == 1) {
+    let x: Cow<'a, TensorOf<S>> = if lower_sizes.iter().all(|&s| s == 1) {
         match t {
             Some(x) => Cow::Owned(x),
             None => Cow::Borrowed(v),
@@ -92,6 +92,7 @@ mod tests {
     use crate::diagram::{factor, Diagram};
     use crate::functor::naive_apply;
     use crate::fastmult::Group;
+    use crate::tensor::Tensor;
     use crate::util::Rng;
 
     /// Example 10 end-to-end: the (5,4)-partition diagram of Figure 1

@@ -16,11 +16,11 @@
 //! Output in planar top layout `[T_1 … T_t | D_1^U … D_d^U | TF_1 … TF_s]`.
 
 use crate::diagram::PlanarLayout;
-use crate::tensor::Tensor;
+use crate::tensor::{Scalar, TensorOf};
 
 /// Apply the planar middle `(l+k)\n`-diagram under Ψ. Input in planar
 /// bottom layout; output in planar top layout, order `l = 2t + d + s`.
-pub fn planar_mult(layout: &PlanarLayout, v: &Tensor) -> Tensor {
+pub fn planar_mult<S: Scalar>(layout: &PlanarLayout, v: &TensorOf<S>) -> TensorOf<S> {
     let (x, lead, tail) = planar_compact(layout, v);
     x.scatter_broadcast_diagonals(&lead, &tail)
 }
@@ -28,10 +28,10 @@ pub fn planar_mult(layout: &PlanarLayout, v: &Tensor) -> Tensor {
 /// Steps 1–3 only (see [`super::sn::planar_compact`]): the determinant-
 /// contracted, pair-traced compact form `[D(d), TF(s)]` plus the Step-4
 /// groups `(lead = [2; t], tail = [1; d + s])`.
-pub(crate) fn planar_compact<'a>(
+pub(crate) fn planar_compact<'a, S: Scalar>(
     layout: &PlanarLayout,
-    v: &'a Tensor,
-) -> (std::borrow::Cow<'a, Tensor>, Vec<usize>, Vec<usize>) {
+    v: &'a TensorOf<S>,
+) -> (std::borrow::Cow<'a, TensorOf<S>>, Vec<usize>, Vec<usize>) {
     use std::borrow::Cow;
     let n = v.n;
     let s = layout.free_top;
@@ -92,6 +92,7 @@ mod tests {
     use crate::diagram::{factor_jellyfish, Diagram};
     use crate::fastmult::Group;
     use crate::functor::naive_apply;
+    use crate::tensor::Tensor;
     use crate::util::Rng;
 
     /// Example 13: the (4+5)\3-diagram of Figure 7 applied to v ∈ (R^3)^{⊗5}

@@ -12,23 +12,23 @@
 //!    `(m1, m2)` — `n` non-zero positions per pair, signed.
 
 use crate::diagram::PlanarLayout;
-use crate::tensor::{BatchTensor, Tensor};
+use crate::tensor::{BatchTensorOf, Scalar, TensorOf};
 
 /// Apply the planar middle Brauer diagram under the functor X. Input in
 /// planar bottom layout; output in planar top layout, order `l = 2t + d`.
-pub fn planar_mult(layout: &PlanarLayout, v: &Tensor) -> Tensor {
+pub fn planar_mult<S: Scalar>(layout: &PlanarLayout, v: &TensorOf<S>) -> TensorOf<S> {
     debug_assert_eq!(layout.free_top, 0);
     debug_assert_eq!(layout.free_bottom, 0);
     debug_assert_eq!(v.n % 2, 0, "Sp(n) requires even n");
     debug_assert_eq!(v.order, layout.k);
 
     // Step 1: ε-trace bottom pairs, rightmost first (no defensive clone).
-    let mut t: Option<Tensor> = None;
+    let mut t: Option<TensorOf<S>> = None;
     for _ in 0..layout.b() {
         let src = t.as_ref().unwrap_or(v);
         t = Some(src.trace_trailing_pair_eps());
     }
-    let w: &Tensor = t.as_ref().unwrap_or(v);
+    let w: &TensorOf<S> = t.as_ref().unwrap_or(v);
 
     // Step 2: identity.
 
@@ -39,11 +39,11 @@ pub fn planar_mult(layout: &PlanarLayout, v: &Tensor) -> Tensor {
 /// Expand with `t` leading ε-pairs: `out[a_1 b_1, …, a_t b_t, J] =
 /// (Π_i ε_{a_i b_i}) x[J]`. Only the `n` non-zero ε positions per pair are
 /// visited, so this writes `n^t · |x|` values.
-fn eps_top_expand(x: &Tensor, t: usize) -> Tensor {
+fn eps_top_expand<S: Scalar>(x: &TensorOf<S>, t: usize) -> TensorOf<S> {
     if t == 0 {
         return x.clone();
     }
-    let mut out = Tensor::zeros(x.n, x.order + 2 * t);
+    let mut out = TensorOf::zeros(x.n, x.order + 2 * t);
     eps_top_expand_into(x, t, &mut out);
     out
 }
@@ -51,11 +51,11 @@ fn eps_top_expand(x: &Tensor, t: usize) -> Tensor {
 /// [`eps_top_expand`] into a caller-provided buffer (typically a recycled
 /// [`crate::fastmult::ScratchArena`] tensor). The expansion writes only the
 /// `n^t · |x|` non-zero ε positions, so the buffer is zeroed first.
-pub(crate) fn eps_top_expand_into(x: &Tensor, t: usize, out: &mut Tensor) {
+pub(crate) fn eps_top_expand_into<S: Scalar>(x: &TensorOf<S>, t: usize, out: &mut TensorOf<S>) {
     let n = x.n;
     assert_eq!(out.n, n);
     assert_eq!(out.order, x.order + 2 * t);
-    out.data.fill(0.0);
+    out.data.fill(S::ZERO);
     if t == 0 {
         out.data.copy_from_slice(&x.data);
         return;
@@ -107,12 +107,16 @@ pub(crate) fn eps_top_expand_into(x: &Tensor, t: usize, out: &mut Tensor) {
 /// the ε-pair choices is built once and replayed over every item of the
 /// batch, so each item is a sequence of block copies/negations — per item
 /// bitwise identical to the per-item kernel.
-pub(crate) fn eps_top_expand_batch_into(x: &BatchTensor, t: usize, out: &mut BatchTensor) {
+pub(crate) fn eps_top_expand_batch_into<S: Scalar>(
+    x: &BatchTensorOf<S>,
+    t: usize,
+    out: &mut BatchTensorOf<S>,
+) {
     let n = x.n();
     assert_eq!(out.n(), n);
     assert_eq!(out.order(), x.order() + 2 * t);
     assert_eq!(out.batch(), x.batch());
-    out.data_mut().fill(0.0);
+    out.data_mut().fill(S::ZERO);
     let tail = x.item_len();
     let olen = out.item_len();
     if t == 0 {
@@ -171,6 +175,7 @@ mod tests {
     use crate::diagram::{factor, Diagram};
     use crate::fastmult::Group;
     use crate::functor::{eps_symplectic, naive_apply};
+    use crate::tensor::Tensor;
     use crate::util::Rng;
 
     /// Example 12: same (5,5)-Brauer diagram as Example 11, under X.

@@ -18,11 +18,12 @@
 //! one multi-pattern pass with the per-channel λ-weights gathered on the
 //! fly.
 
+use super::input::{ChannelBatchInput, ChannelBatchOutput};
 use super::linear::spanning_diagrams;
 use crate::diagram::Diagram;
 use crate::error::{Error, Result};
-use crate::fastmult::{Group, LayerSchedule, MultPlan, PlanCache, PooledArena, ScheduleStats};
-use crate::tensor::{BatchTensor, Tensor};
+use crate::fastmult::{Group, LayerSchedule, MultPlan, PlanCache, PooledArenaOf, ScheduleStats};
+use crate::tensor::{BatchTensorOf, Scalar, TensorOf};
 use crate::util::Rng;
 use std::sync::Arc;
 
@@ -139,7 +140,7 @@ impl ChannelEquivariantLinear {
         self.schedule.stats()
     }
 
-    fn check_channels(&self, x: &[Tensor]) -> Result<()> {
+    fn check_channels<S: Scalar>(&self, x: &[TensorOf<S>]) -> Result<()> {
         if x.len() != self.c_in {
             return Err(Error::ShapeMismatch {
                 expected: format!("{} input channels", self.c_in),
@@ -157,6 +158,63 @@ impl ChannelEquivariantLinear {
         Ok(())
     }
 
+    /// Unified forward entry point: accepts one multi-channel item
+    /// (`&[TensorOf<S>]`) or a batch of them (`&[Vec<TensorOf<S>>]`) via
+    /// [`ChannelBatchInput`] and returns a [`ChannelBatchOutput`] shaped
+    /// like the input. Replaces the `forward`/`forward_batch` pair.
+    pub fn apply<'a, S: Scalar>(
+        &self,
+        input: impl Into<ChannelBatchInput<'a, S>>,
+    ) -> Result<ChannelBatchOutput<S>> {
+        match input.into() {
+            ChannelBatchInput::Single(x) => {
+                Ok(ChannelBatchOutput::Single(self.forward_channels_core(x)?))
+            }
+            ChannelBatchInput::Batch(x) => {
+                Ok(ChannelBatchOutput::Batch(self.forward_batch_core(x)?))
+            }
+        }
+    }
+
+    /// Unified backward entry point: `input` and `grad_out` must use the
+    /// same packaging ([`ChannelBatchInput::Single`] with `Single`, `Batch`
+    /// with `Batch`). Accumulates parameter gradients into `grads` and
+    /// returns `∂L/∂x` shaped like the input.
+    pub fn apply_grad<'a, S: Scalar>(
+        &self,
+        input: impl Into<ChannelBatchInput<'a, S>>,
+        grad_out: impl Into<ChannelBatchInput<'a, S>>,
+        grads: &mut ChannelGrads,
+    ) -> Result<ChannelBatchOutput<S>> {
+        match (input.into(), grad_out.into()) {
+            (ChannelBatchInput::Single(x), ChannelBatchInput::Single(g)) => {
+                Ok(ChannelBatchOutput::Single(self.backward(x, g, grads)?))
+            }
+            (ChannelBatchInput::Batch(x), ChannelBatchInput::Batch(g)) => {
+                Ok(ChannelBatchOutput::Batch(self.backward_batch(x, g, grads)?))
+            }
+            (v, g) => Err(Error::ShapeMismatch {
+                expected: format!("gradient packaged like the input (`{}`)", v.kind()),
+                got: format!("`{}`", g.kind()),
+            }),
+        }
+    }
+
+    /// Forward one item. Use [`Self::apply`] instead.
+    #[deprecated(note = "use `apply` with a single multi-channel item instead")]
+    pub fn forward<S: Scalar>(&self, x: &[TensorOf<S>]) -> Result<Vec<TensorOf<S>>> {
+        self.forward_channels_core(x)
+    }
+
+    /// Forward a batch. Use [`Self::apply`] instead.
+    #[deprecated(note = "use `apply` with a batch of multi-channel items instead")]
+    pub fn forward_batch<S: Scalar>(
+        &self,
+        x: &[Vec<TensorOf<S>>],
+    ) -> Result<Vec<Vec<TensorOf<S>>>> {
+        self.forward_batch_core(x)
+    }
+
     /// Forward: `out[o] = Σ_d F(d)(Σ_i λ_d[o,i] x[i]) + Σ_b μ_b[o] F(b)(1)`,
     /// computed by linearity as `Σ_i Σ_d λ_d[o,i] · F(d)(x[i])`: each input
     /// channel makes **one** pass over the fused schedule feeding every
@@ -165,12 +223,15 @@ impl ChannelEquivariantLinear {
     /// forward — not `#diagrams · c_out` times as the old mix-then-apply
     /// loop did — and only the cheap diagonal-support scatters repeat per
     /// output channel.
-    pub fn forward(&self, x: &[Tensor]) -> Result<Vec<Tensor>> {
+    pub(crate) fn forward_channels_core<S: Scalar>(
+        &self,
+        x: &[TensorOf<S>],
+    ) -> Result<Vec<TensorOf<S>>> {
         self.check_channels(x)?;
-        let mut out: Vec<Tensor> = (0..self.c_out)
-            .map(|_| Tensor::zeros(self.n, self.l))
+        let mut out: Vec<TensorOf<S>> = (0..self.c_out)
+            .map(|_| TensorOf::zeros(self.n, self.l))
             .collect();
-        let mut arena = PooledArena::get();
+        let mut arena = PooledArenaOf::<S>::get();
         let mut rows: Vec<Vec<f64>> = vec![vec![0.0; self.terms.len()]; self.c_out];
         for (i, x_t) in x.iter().enumerate() {
             for (o, row) in rows.iter_mut().enumerate() {
@@ -180,7 +241,7 @@ impl ChannelEquivariantLinear {
             }
             self.schedule.execute_multi(x_t, &rows, &mut out, &mut arena)?;
         }
-        let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+        let one = TensorOf::from_vec(self.n, 0, vec![S::ONE])?;
         for (plan, mus) in &self.bias_terms {
             for (o, out_t) in out.iter_mut().enumerate() {
                 if mus[o] != 0.0 {
@@ -199,7 +260,10 @@ impl ChannelEquivariantLinear {
     /// index maps shared across items, and only the cheap diagonal-support
     /// scatters repeat per output channel. Returns `B` items of `c_out`
     /// channels each.
-    pub fn forward_batch(&self, x: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+    pub(crate) fn forward_batch_core<S: Scalar>(
+        &self,
+        x: &[Vec<TensorOf<S>>],
+    ) -> Result<Vec<Vec<TensorOf<S>>>> {
         if x.is_empty() {
             return Ok(Vec::new());
         }
@@ -207,14 +271,14 @@ impl ChannelEquivariantLinear {
             self.check_channels(item)?;
         }
         let batch = x.len();
-        let mut outs: Vec<BatchTensor> = (0..self.c_out)
-            .map(|_| BatchTensor::zeros(self.n, self.l, batch))
+        let mut outs: Vec<BatchTensorOf<S>> = (0..self.c_out)
+            .map(|_| BatchTensorOf::zeros(self.n, self.l, batch))
             .collect();
-        let mut arena = PooledArena::get();
+        let mut arena = PooledArenaOf::<S>::get();
         let mut rows: Vec<Vec<f64>> = vec![vec![0.0; self.terms.len()]; self.c_out];
         for i in 0..self.c_in {
-            let channel: Vec<&Tensor> = x.iter().map(|item| &item[i]).collect();
-            let xb = BatchTensor::pack_refs(&channel)?;
+            let channel: Vec<&TensorOf<S>> = x.iter().map(|item| &item[i]).collect();
+            let xb = BatchTensorOf::pack_refs(&channel)?;
             for (o, row) in rows.iter_mut().enumerate() {
                 for (slot, term) in row.iter_mut().zip(&self.terms) {
                     *slot = term.weights[o * self.c_in + i];
@@ -225,7 +289,7 @@ impl ChannelEquivariantLinear {
         }
         // Bias: each basis tensor F(b)(1) is materialised once per batch
         // and broadcast-added to every item.
-        let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+        let one = TensorOf::from_vec(self.n, 0, vec![S::ONE])?;
         for (plan, mus) in &self.bias_terms {
             if mus.iter().all(|&m| m == 0.0) {
                 continue;
@@ -238,7 +302,7 @@ impl ChannelEquivariantLinear {
             }
         }
         // outs is channel-major (c_out × B); transpose back to item-major.
-        let mut per_item: Vec<Vec<Tensor>> = (0..batch)
+        let mut per_item: Vec<Vec<TensorOf<S>>> = (0..batch)
             .map(|_| Vec::with_capacity(self.c_out))
             .collect();
         for out in outs {
@@ -255,12 +319,12 @@ impl ChannelEquivariantLinear {
     /// parameter gradients are summed over the batch (matching repeated
     /// [`ChannelEquivariantLinear::backward`] calls) and the per-item
     /// input gradients are returned in order.
-    pub fn backward_batch(
+    pub fn backward_batch<S: Scalar>(
         &self,
-        x: &[Vec<Tensor>],
-        grad_out: &[Vec<Tensor>],
+        x: &[Vec<TensorOf<S>>],
+        grad_out: &[Vec<TensorOf<S>>],
         grads: &mut ChannelGrads,
-    ) -> Result<Vec<Vec<Tensor>>> {
+    ) -> Result<Vec<Vec<TensorOf<S>>>> {
         if x.len() != grad_out.len() {
             return Err(Error::ShapeMismatch {
                 expected: format!("{} upstream gradients", x.len()),
@@ -282,13 +346,17 @@ impl ChannelEquivariantLinear {
             }
         }
         let batch = x.len();
-        let mut grad_x: Vec<Vec<Tensor>> = (0..batch)
-            .map(|_| (0..self.c_in).map(|_| Tensor::zeros(self.n, self.k)).collect())
+        let mut grad_x: Vec<Vec<TensorOf<S>>> = (0..batch)
+            .map(|_| {
+                (0..self.c_in)
+                    .map(|_| TensorOf::zeros(self.n, self.k))
+                    .collect()
+            })
             .collect();
-        let mut arena = PooledArena::get();
+        let mut arena = PooledArenaOf::<S>::get();
         for o in 0..self.c_out {
-            let channel: Vec<&Tensor> = grad_out.iter().map(|g| &g[o]).collect();
-            let gb = BatchTensor::pack_refs(&channel)?;
+            let channel: Vec<&TensorOf<S>> = grad_out.iter().map(|g| &g[o]).collect();
+            let gb = BatchTensorOf::pack_refs(&channel)?;
             self.backward_schedule.execute_batch_map(&gb, &mut arena, |ti, bt| {
                 let term = &self.terms[ti];
                 for b in 0..batch {
@@ -296,10 +364,16 @@ impl ChannelEquivariantLinear {
                     for i in 0..self.c_in {
                         let w = term.weights[o * self.c_in + i];
                         // ∂L/∂λ_d[o,i] += sign · ⟨F(dᵀ) g_b, x_b[i]⟩
+                        // (inner product accumulated in S, like the rest of
+                        // the kernel stack — identity for S = f64).
                         grads.terms[ti][o * self.c_in + i] += term.adjoint_sign
-                            * t.iter().zip(&x[b][i].data).map(|(a, v)| a * v).sum::<f64>();
+                            * t.iter()
+                                .zip(&x[b][i].data)
+                                .map(|(&a, &v)| a * v)
+                                .sum::<S>()
+                                .to_f64();
                         if w != 0.0 {
-                            let alpha = w * term.adjoint_sign;
+                            let alpha = S::from_f64(w * term.adjoint_sign);
                             for (gx, &tv) in grad_x[b][i].data.iter_mut().zip(t) {
                                 *gx += alpha * tv;
                             }
@@ -309,7 +383,7 @@ impl ChannelEquivariantLinear {
                 Ok(())
             })?;
         }
-        let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+        let one = TensorOf::from_vec(self.n, 0, vec![S::ONE])?;
         for (bi, (plan, _)) in self.bias_terms.iter().enumerate() {
             let basis = plan.apply(&one)?;
             for (o, row) in grads.bias[bi].iter_mut().enumerate().take(self.c_out) {
@@ -322,18 +396,18 @@ impl ChannelEquivariantLinear {
     }
 
     /// Backward: returns `∂L/∂x` and accumulates parameter gradients.
-    pub fn backward(
+    pub fn backward<S: Scalar>(
         &self,
-        x: &[Tensor],
-        grad_out: &[Tensor],
+        x: &[TensorOf<S>],
+        grad_out: &[TensorOf<S>],
         grads: &mut ChannelGrads,
-    ) -> Result<Vec<Tensor>> {
+    ) -> Result<Vec<TensorOf<S>>> {
         self.check_channels(x)?;
         assert_eq!(grad_out.len(), self.c_out);
-        let mut grad_x: Vec<Tensor> = (0..self.c_in)
-            .map(|_| Tensor::zeros(self.n, self.k))
+        let mut grad_x: Vec<TensorOf<S>> = (0..self.c_in)
+            .map(|_| TensorOf::zeros(self.n, self.k))
             .collect();
-        let mut arena = PooledArena::get();
+        let mut arena = PooledArenaOf::<S>::get();
         for (o, g) in grad_out.iter().enumerate() {
             // One fused pass over the transposed-term schedule per output
             // gradient: every bt = F(dᵀ) g shares its permute/contraction
@@ -352,7 +426,7 @@ impl ChannelEquivariantLinear {
                 Ok(())
             })?;
         }
-        let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+        let one = TensorOf::from_vec(self.n, 0, vec![S::ONE])?;
         for (bi, (plan, _)) in self.bias_terms.iter().enumerate() {
             // Reuse the fast path via the transposed bias diagram? Bias
             // diagrams have k = 0; their adjoint maps order-l to order-0:
@@ -433,8 +507,11 @@ pub struct ChannelGrads {
 
 #[cfg(test)]
 mod tests {
+    // The legacy forward names stay exercised until their removal.
+    #![allow(deprecated)]
     use super::*;
     use crate::groups;
+    use crate::tensor::Tensor;
 
     fn rand_channels(n: usize, k: usize, c: usize, rng: &mut Rng) -> Vec<Tensor> {
         (0..c).map(|_| Tensor::random(n, k, rng)).collect()
@@ -563,6 +640,49 @@ mod tests {
         let a = ch.forward(std::slice::from_ref(&x)).unwrap();
         let b = single.forward(&x).unwrap();
         assert!(a[0].allclose(&b, 1e-12));
+    }
+
+    #[test]
+    fn apply_matches_legacy_entry_points() {
+        let mut rng = Rng::new(816);
+        let layer =
+            ChannelEquivariantLinear::new(Group::Symmetric, 3, 2, 2, 2, 3, &mut rng).unwrap();
+        let item = rand_channels(3, 2, 2, &mut rng);
+        let single = layer.apply(item.as_slice()).unwrap().into_single().unwrap();
+        let want = layer.forward(&item).unwrap();
+        for (a, b) in single.iter().zip(&want) {
+            assert!(a.allclose(b, 0.0));
+        }
+        let batch: Vec<Vec<Tensor>> = (0..3).map(|_| rand_channels(3, 2, 2, &mut rng)).collect();
+        let got = layer.apply(batch.as_slice()).unwrap().into_vec();
+        let legacy = layer.forward_batch(&batch).unwrap();
+        for (gi, li) in got.iter().zip(&legacy) {
+            for (a, b) in gi.iter().zip(li) {
+                assert!(a.allclose(b, 0.0));
+            }
+        }
+        // apply_grad mirrors backward_batch, gradients included.
+        let gs: Vec<Vec<Tensor>> = (0..3).map(|_| rand_channels(3, 2, 3, &mut rng)).collect();
+        let mut got_grads = layer.zero_grads();
+        let gx = layer
+            .apply_grad(batch.as_slice(), gs.as_slice(), &mut got_grads)
+            .unwrap()
+            .into_vec();
+        let mut want_grads = layer.zero_grads();
+        let wx = layer.backward_batch(&batch, &gs, &mut want_grads).unwrap();
+        for (gi, wi) in gx.iter().zip(&wx) {
+            for (a, b) in gi.iter().zip(wi) {
+                assert!(a.allclose(b, 0.0));
+            }
+        }
+        assert_eq!(
+            layer.grads_flat(&got_grads),
+            layer.grads_flat(&want_grads)
+        );
+        // Mismatched packagings are rejected.
+        assert!(layer
+            .apply_grad(item.as_slice(), gs.as_slice(), &mut layer.zero_grads())
+            .is_err());
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! Polymorphic inputs and outputs for the unified `apply`/`apply_grad`
+//! entry points.
+//!
+//! The layers and the network historically grew one forward method per
+//! input shape (`forward`, `forward_batch`, `forward_batch_refs`,
+//! `forward_batched`), all computing the same linear map over differently
+//! packaged batches. [`BatchInput`] collapses those shapes into one enum —
+//! a single tensor, a slice of owned tensors, a slice of borrowed tensors,
+//! or an already-packed `[B, n^k]` batch — so every caller goes through
+//! `apply(&self, input: impl Into<BatchInput<S>>)` and the legacy names
+//! survive only as `#[deprecated]` wrappers. [`BatchOutput`] mirrors the
+//! input shape on the way out: `Single` in → `Single` out, slices in →
+//! `Batch` out, `Packed` in → `Packed` out.
+
+use crate::tensor::{BatchTensorOf, Scalar, TensorOf};
+
+/// One forward (or upstream-gradient) argument to the unified layer API,
+/// in whichever packaging the caller already has.
+#[derive(Debug, Clone, Copy)]
+pub enum BatchInput<'a, S: Scalar> {
+    /// One tensor — the low-latency single-request path.
+    Single(&'a TensorOf<S>),
+    /// A batch of owned tensors.
+    Slice(&'a [TensorOf<S>]),
+    /// A batch of borrowed tensors (the coordinator batches requests it
+    /// does not own contiguously).
+    Refs(&'a [&'a TensorOf<S>]),
+    /// An already-packed `[B, n^k]` batch — the zero-repack path the
+    /// network plumbing uses between layers.
+    Packed(&'a BatchTensorOf<S>),
+}
+
+impl<'a, S: Scalar> From<&'a TensorOf<S>> for BatchInput<'a, S> {
+    fn from(v: &'a TensorOf<S>) -> Self {
+        BatchInput::Single(v)
+    }
+}
+
+impl<'a, S: Scalar> From<&'a [TensorOf<S>]> for BatchInput<'a, S> {
+    fn from(vs: &'a [TensorOf<S>]) -> Self {
+        BatchInput::Slice(vs)
+    }
+}
+
+impl<'a, S: Scalar> From<&'a Vec<TensorOf<S>>> for BatchInput<'a, S> {
+    fn from(vs: &'a Vec<TensorOf<S>>) -> Self {
+        BatchInput::Slice(vs)
+    }
+}
+
+impl<'a, S: Scalar> From<&'a [&'a TensorOf<S>]> for BatchInput<'a, S> {
+    fn from(vs: &'a [&'a TensorOf<S>]) -> Self {
+        BatchInput::Refs(vs)
+    }
+}
+
+impl<'a, S: Scalar> From<&'a Vec<&'a TensorOf<S>>> for BatchInput<'a, S> {
+    fn from(vs: &'a Vec<&'a TensorOf<S>>) -> Self {
+        BatchInput::Refs(vs)
+    }
+}
+
+impl<'a, S: Scalar> From<&'a BatchTensorOf<S>> for BatchInput<'a, S> {
+    fn from(vb: &'a BatchTensorOf<S>) -> Self {
+        BatchInput::Packed(vb)
+    }
+}
+
+impl<'a, S: Scalar> BatchInput<'a, S> {
+    /// Short name of the packaging, for shape-mismatch error messages.
+    pub(crate) fn kind(&self) -> &'static str {
+        match self {
+            BatchInput::Single(_) => "single",
+            BatchInput::Slice(_) => "slice",
+            BatchInput::Refs(_) => "refs",
+            BatchInput::Packed(_) => "packed",
+        }
+    }
+}
+
+/// Result of a unified `apply`/`apply_grad` call, shaped like the input
+/// that produced it.
+#[derive(Debug, Clone)]
+pub enum BatchOutput<S: Scalar> {
+    /// Output for a [`BatchInput::Single`] input.
+    Single(TensorOf<S>),
+    /// Per-item outputs for a [`BatchInput::Slice`]/[`BatchInput::Refs`]
+    /// input, in order.
+    Batch(Vec<TensorOf<S>>),
+    /// Packed output for a [`BatchInput::Packed`] input.
+    Packed(BatchTensorOf<S>),
+}
+
+impl<S: Scalar> BatchOutput<S> {
+    /// The single output tensor, if this came from a single input.
+    pub fn into_single(self) -> Option<TensorOf<S>> {
+        match self {
+            BatchOutput::Single(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// The outputs as one owned vector, whatever the packaging: a single
+    /// output becomes a one-element vector, a packed batch is unpacked.
+    pub fn into_vec(self) -> Vec<TensorOf<S>> {
+        match self {
+            BatchOutput::Single(t) => vec![t],
+            BatchOutput::Batch(ts) => ts,
+            BatchOutput::Packed(b) => b.unpack(),
+        }
+    }
+
+    /// The packed output batch, if this came from a packed input.
+    pub fn into_packed(self) -> Option<BatchTensorOf<S>> {
+        match self {
+            BatchOutput::Packed(b) => Some(b),
+            _ => None,
+        }
+    }
+}
+
+/// Input to the unified channel-layer API: one item is a `c_in`-long list
+/// of tensors, a batch is a list of such items.
+#[derive(Debug, Clone, Copy)]
+pub enum ChannelBatchInput<'a, S: Scalar> {
+    /// One multi-channel item (`c_in` tensors).
+    Single(&'a [TensorOf<S>]),
+    /// A batch of multi-channel items.
+    Batch(&'a [Vec<TensorOf<S>>]),
+}
+
+impl<'a, S: Scalar> From<&'a [TensorOf<S>]> for ChannelBatchInput<'a, S> {
+    fn from(x: &'a [TensorOf<S>]) -> Self {
+        ChannelBatchInput::Single(x)
+    }
+}
+
+impl<'a, S: Scalar> From<&'a Vec<TensorOf<S>>> for ChannelBatchInput<'a, S> {
+    fn from(x: &'a Vec<TensorOf<S>>) -> Self {
+        ChannelBatchInput::Single(x)
+    }
+}
+
+impl<'a, S: Scalar> From<&'a [Vec<TensorOf<S>>]> for ChannelBatchInput<'a, S> {
+    fn from(x: &'a [Vec<TensorOf<S>>]) -> Self {
+        ChannelBatchInput::Batch(x)
+    }
+}
+
+impl<'a, S: Scalar> From<&'a Vec<Vec<TensorOf<S>>>> for ChannelBatchInput<'a, S> {
+    fn from(x: &'a Vec<Vec<TensorOf<S>>>) -> Self {
+        ChannelBatchInput::Batch(x)
+    }
+}
+
+impl<'a, S: Scalar> ChannelBatchInput<'a, S> {
+    /// Short name of the packaging, for shape-mismatch error messages.
+    pub(crate) fn kind(&self) -> &'static str {
+        match self {
+            ChannelBatchInput::Single(_) => "single",
+            ChannelBatchInput::Batch(_) => "batch",
+        }
+    }
+}
+
+/// Output of the unified channel-layer API, shaped like its input.
+#[derive(Debug, Clone)]
+pub enum ChannelBatchOutput<S: Scalar> {
+    /// `c_out` output channels for one item.
+    Single(Vec<TensorOf<S>>),
+    /// Per-item `c_out`-channel outputs, in order.
+    Batch(Vec<Vec<TensorOf<S>>>),
+}
+
+impl<S: Scalar> ChannelBatchOutput<S> {
+    /// The single item's channels, if this came from a single input.
+    pub fn into_single(self) -> Option<Vec<TensorOf<S>>> {
+        match self {
+            ChannelBatchOutput::Single(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// The per-item channel lists, whatever the packaging.
+    pub fn into_vec(self) -> Vec<Vec<TensorOf<S>>> {
+        match self {
+            ChannelBatchOutput::Single(t) => vec![t],
+            ChannelBatchOutput::Batch(ts) => ts,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{BatchTensor, Tensor};
+
+    #[test]
+    fn from_impls_pick_the_right_variant() {
+        let t = Tensor::zeros(2, 1);
+        let owned = vec![Tensor::zeros(2, 1), Tensor::zeros(2, 1)];
+        let refs: Vec<&Tensor> = owned.iter().collect();
+        let packed = BatchTensor::pack(&owned).unwrap();
+        assert_eq!(BatchInput::from(&t).kind(), "single");
+        assert_eq!(BatchInput::from(owned.as_slice()).kind(), "slice");
+        assert_eq!(BatchInput::from(&owned).kind(), "slice");
+        assert_eq!(BatchInput::from(refs.as_slice()).kind(), "refs");
+        assert_eq!(BatchInput::from(&packed).kind(), "packed");
+    }
+
+    #[test]
+    fn output_accessors_match_variants() {
+        let t = Tensor::linspace(2, 1);
+        let single = BatchOutput::Single(t.clone());
+        assert!(single.clone().into_single().is_some());
+        assert_eq!(single.into_vec().len(), 1);
+        let owned = vec![Tensor::zeros(2, 1), Tensor::zeros(2, 1)];
+        let packed = BatchOutput::Packed(BatchTensor::pack(&owned).unwrap());
+        assert!(packed.clone().into_single().is_none());
+        assert_eq!(packed.clone().into_vec().len(), 2);
+        assert!(packed.into_packed().is_some());
+        let batch = BatchOutput::Batch(owned);
+        assert!(batch.clone().into_packed().is_none());
+        assert_eq!(batch.into_vec().len(), 2);
+    }
+}

@@ -1,11 +1,14 @@
 //! The equivariant linear layer.
 
+use super::input::{BatchInput, BatchOutput};
 use crate::diagram::{
     all_brauer_diagrams, all_jellyfish_diagrams, all_partition_diagrams, Diagram,
 };
 use crate::error::{Error, Result};
-use crate::fastmult::{Group, LayerSchedule, MultPlan, PlanCache, PooledArena, ScheduleStats};
-use crate::tensor::{BatchTensor, Tensor};
+use crate::fastmult::{
+    Group, LayerSchedule, MultPlan, PlanCache, PooledArenaOf, ScheduleStats,
+};
+use crate::tensor::{BatchTensorOf, Scalar, Tensor, TensorOf};
 use crate::util::parallel::{max_threads, parallel_map, span_len};
 use crate::util::Rng;
 use std::sync::Arc;
@@ -213,16 +216,84 @@ impl EquivariantLinear {
     /// steady-state heap allocations. Matches
     /// [`EquivariantLinear::forward_per_term`] to ≤ 1e-12 (class folding
     /// reassociates the per-term additions); deterministic run to run.
-    pub fn forward(&self, v: &Tensor) -> Result<Tensor> {
+    /// Generic over the scalar type: the `f64` instantiation is the
+    /// historical path bit for bit, `f32` halves the bytes the walk moves.
+    pub(crate) fn forward_one<S: Scalar>(&self, v: &TensorOf<S>) -> Result<TensorOf<S>> {
         // Check the input up front (not per-term): a zero-initialised layer
         // skips every term, and the batched path must agree with this one
         // on malformed input.
         self.check_input(v)?;
-        let mut out = Tensor::zeros(self.n, self.l);
-        let mut arena = PooledArena::get();
+        let mut out = TensorOf::zeros(self.n, self.l);
+        let mut arena = PooledArenaOf::<S>::get();
         self.schedule.execute(v, &self.coeffs, &mut out, &mut arena)?;
         self.accumulate_bias(&mut out)?;
         Ok(out)
+    }
+
+    /// Unified forward entry point: accepts any [`BatchInput`] packaging —
+    /// a single tensor, owned or borrowed slices, or an already-packed
+    /// batch — and returns a [`BatchOutput`] of the matching shape. This
+    /// subsumes the deprecated `forward`/`forward_batch`/
+    /// `forward_batch_refs`/`forward_batched` quartet.
+    pub fn apply<'a, S: Scalar>(
+        &self,
+        input: impl Into<BatchInput<'a, S>>,
+    ) -> Result<BatchOutput<S>> {
+        match input.into() {
+            BatchInput::Single(v) => Ok(BatchOutput::Single(self.forward_one(v)?)),
+            BatchInput::Slice(vs) => {
+                let refs: Vec<&TensorOf<S>> = vs.iter().collect();
+                Ok(BatchOutput::Batch(self.forward_refs_core(&refs)?))
+            }
+            BatchInput::Refs(vs) => Ok(BatchOutput::Batch(self.forward_refs_core(vs)?)),
+            BatchInput::Packed(vb) => Ok(BatchOutput::Packed(self.forward_packed_core(vb)?)),
+        }
+    }
+
+    /// Unified backward entry point, mirroring [`EquivariantLinear::apply`]:
+    /// `input` and `grad_out` must use the same packaging. Parameter
+    /// gradients are accumulated into `grads` (summed over the batch) and
+    /// the input gradients come back shaped like the inputs.
+    pub fn apply_grad<'a, S: Scalar>(
+        &self,
+        input: impl Into<BatchInput<'a, S>>,
+        grad_out: impl Into<BatchInput<'a, S>>,
+        grads: &mut LayerGrads,
+    ) -> Result<BatchOutput<S>> {
+        match (input.into(), grad_out.into()) {
+            (BatchInput::Single(v), BatchInput::Single(g)) => {
+                Ok(BatchOutput::Single(self.backward(v, g, grads)?))
+            }
+            (BatchInput::Slice(vs), BatchInput::Slice(gs)) => {
+                Ok(BatchOutput::Batch(self.backward_batch(vs, gs, grads)?))
+            }
+            (BatchInput::Refs(vs), BatchInput::Refs(gs)) => {
+                if vs.len() != gs.len() {
+                    return Err(Error::ShapeMismatch {
+                        expected: format!("{} upstream gradients", vs.len()),
+                        got: format!("{}", gs.len()),
+                    });
+                }
+                let vb = BatchTensorOf::pack_refs(vs)?;
+                let gb = BatchTensorOf::pack_refs(gs)?;
+                Ok(BatchOutput::Batch(
+                    self.backward_batched(&vb, &gb, grads)?.unpack(),
+                ))
+            }
+            (BatchInput::Packed(vb), BatchInput::Packed(gb)) => {
+                Ok(BatchOutput::Packed(self.backward_batched(vb, gb, grads)?))
+            }
+            (v, g) => Err(Error::ShapeMismatch {
+                expected: format!("gradient packaged like the input (`{}`)", v.kind()),
+                got: format!("`{}`", g.kind()),
+            }),
+        }
+    }
+
+    /// Deprecated spelling of the single-tensor forward.
+    #[deprecated(note = "use `apply` with a single tensor instead")]
+    pub fn forward<S: Scalar>(&self, v: &TensorOf<S>) -> Result<TensorOf<S>> {
+        self.forward_one(v)
     }
 
     /// Reference forward path: one `MultPlan::apply_accumulate` per
@@ -230,9 +301,9 @@ impl EquivariantLinear {
     /// observation, term by term). Kept for the equivalence property tests
     /// and the fused-vs-per-term benchmark; [`EquivariantLinear::forward`]
     /// matches it to ≤ 1e-12 (folded classes reassociate the additions).
-    pub fn forward_per_term(&self, v: &Tensor) -> Result<Tensor> {
+    pub fn forward_per_term<S: Scalar>(&self, v: &TensorOf<S>) -> Result<TensorOf<S>> {
         self.check_input(v)?;
-        let mut out = Tensor::zeros(self.n, self.l);
+        let mut out = TensorOf::zeros(self.n, self.l);
         for (term, &lambda) in self.terms.iter().zip(&self.coeffs) {
             if lambda == 0.0 {
                 continue;
@@ -245,9 +316,9 @@ impl EquivariantLinear {
 
     /// Shared closing bias accumulation (kept term-by-term: bias spanning
     /// sets are tiny and their "input" is the scalar 1).
-    fn accumulate_bias(&self, out: &mut Tensor) -> Result<()> {
+    fn accumulate_bias<S: Scalar>(&self, out: &mut TensorOf<S>) -> Result<()> {
         if !self.bias_terms.is_empty() {
-            let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+            let one = TensorOf::from_vec(self.n, 0, vec![S::ONE])?;
             for (term, &mu) in self.bias_terms.iter().zip(&self.bias_coeffs) {
                 if mu == 0.0 {
                     continue;
@@ -269,21 +340,35 @@ impl EquivariantLinear {
     /// (≤ 1e-12 in the property tests), **not** bit-exactly: the batch-
     /// shared bias (and, for single-item batches, subtree partial sums)
     /// change the accumulation order of the same terms.
-    pub fn forward_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let refs: Vec<&Tensor> = inputs.iter().collect();
-        self.forward_batch_refs(&refs)
+    #[deprecated(note = "use `apply` with a slice of tensors instead")]
+    pub fn forward_batch<S: Scalar>(&self, inputs: &[TensorOf<S>]) -> Result<Vec<TensorOf<S>>> {
+        let refs: Vec<&TensorOf<S>> = inputs.iter().collect();
+        self.forward_refs_core(&refs)
     }
 
-    /// [`EquivariantLinear::forward_batch`] over borrowed inputs (the
-    /// coordinator batches tensors it does not own contiguously).
-    pub fn forward_batch_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    /// Deprecated spelling of the borrowed-batch forward.
+    #[deprecated(note = "use `apply` with a slice of tensor refs instead")]
+    pub fn forward_batch_refs<S: Scalar>(
+        &self,
+        inputs: &[&TensorOf<S>],
+    ) -> Result<Vec<TensorOf<S>>> {
+        self.forward_refs_core(inputs)
+    }
+
+    /// Batched forward over borrowed inputs (the coordinator batches
+    /// tensors it does not own contiguously) — the worker-span fan-out
+    /// described on the deprecated [`EquivariantLinear::forward_batch`].
+    pub(crate) fn forward_refs_core<S: Scalar>(
+        &self,
+        inputs: &[&TensorOf<S>],
+    ) -> Result<Vec<TensorOf<S>>> {
         if inputs.is_empty() {
             return Ok(Vec::new());
         }
         for v in inputs {
             self.check_input(v)?;
         }
-        let bias = self.batch_bias()?;
+        let bias = self.batch_bias::<S>()?;
         let workers = max_threads();
         // Single item: parallelise across independent schedule subtrees
         // instead, split by the cost model rather than evenly (the
@@ -301,11 +386,11 @@ impl EquivariantLinear {
         }
         // One contiguous span per worker; each span is packed once and the
         // schedule walked once for all its items.
-        let spans: Vec<&[&Tensor]> = inputs.chunks(span_len(inputs.len())).collect();
-        let span_outs = parallel_map(&spans, spans.len(), |span| -> Result<Vec<Tensor>> {
-            let vb = BatchTensor::pack_refs(span)?;
-            let mut ob = BatchTensor::zeros(self.n, self.l, vb.batch());
-            let mut arena = PooledArena::get();
+        let spans: Vec<&[&TensorOf<S>]> = inputs.chunks(span_len(inputs.len())).collect();
+        let span_outs = parallel_map(&spans, spans.len(), |span| -> Result<Vec<TensorOf<S>>> {
+            let vb = BatchTensorOf::pack_refs(span)?;
+            let mut ob = BatchTensorOf::zeros(self.n, self.l, vb.batch());
+            let mut arena = PooledArenaOf::<S>::get();
             self.schedule
                 .execute_batch(&vb, &self.coeffs, &mut ob, &mut arena)?;
             if let Some(b) = &bias {
@@ -320,25 +405,34 @@ impl EquivariantLinear {
         Ok(out)
     }
 
+    /// Deprecated spelling of the packed-batch forward.
+    #[deprecated(note = "use `apply` with a packed batch instead")]
+    pub fn forward_batched<S: Scalar>(&self, v: &BatchTensorOf<S>) -> Result<BatchTensorOf<S>> {
+        self.forward_packed_core(v)
+    }
+
     /// Fused forward over an already-packed batch — the building block the
     /// network plumbing uses to keep activations batched between layers.
     /// One schedule walk for the whole batch, bias materialised once.
-    pub fn forward_batched(&self, v: &BatchTensor) -> Result<BatchTensor> {
-        let bias = self.batch_bias()?;
+    pub(crate) fn forward_packed_core<S: Scalar>(
+        &self,
+        v: &BatchTensorOf<S>,
+    ) -> Result<BatchTensorOf<S>> {
+        let bias = self.batch_bias::<S>()?;
         self.forward_batched_with_bias(v, bias.as_ref())
     }
 
-    /// [`EquivariantLinear::forward_batched`] with the bias tensor supplied
-    /// by the caller — the net-level span fan-out materialises each
-    /// layer's bias once per batch and shares it across worker spans
+    /// [`EquivariantLinear::forward_packed_core`] with the bias tensor
+    /// supplied by the caller — the net-level span fan-out materialises
+    /// each layer's bias once per batch and shares it across worker spans
     /// instead of rebuilding it per span.
-    pub(crate) fn forward_batched_with_bias(
+    pub(crate) fn forward_batched_with_bias<S: Scalar>(
         &self,
-        v: &BatchTensor,
-        bias: Option<&Tensor>,
-    ) -> Result<BatchTensor> {
-        let mut out = BatchTensor::zeros(self.n, self.l, v.batch());
-        let mut arena = PooledArena::get();
+        v: &BatchTensorOf<S>,
+        bias: Option<&TensorOf<S>>,
+    ) -> Result<BatchTensorOf<S>> {
+        let mut out = BatchTensorOf::zeros(self.n, self.l, v.batch());
+        let mut arena = PooledArenaOf::<S>::get();
         self.schedule
             .execute_batch(v, &self.coeffs, &mut out, &mut arena)?;
         if let Some(b) = bias {
@@ -353,12 +447,12 @@ impl EquivariantLinear {
     /// accumulated into `grads` (summed over the batch, matching repeated
     /// [`EquivariantLinear::backward`] calls) and the per-item input
     /// gradients are returned in order.
-    pub fn backward_batch(
+    pub fn backward_batch<S: Scalar>(
         &self,
-        inputs: &[Tensor],
-        grad_outs: &[Tensor],
+        inputs: &[TensorOf<S>],
+        grad_outs: &[TensorOf<S>],
         grads: &mut LayerGrads,
-    ) -> Result<Vec<Tensor>> {
+    ) -> Result<Vec<TensorOf<S>>> {
         if inputs.len() != grad_outs.len() {
             return Err(Error::ShapeMismatch {
                 expected: format!("{} upstream gradients", inputs.len()),
@@ -380,17 +474,17 @@ impl EquivariantLinear {
             return Ok(vec![gv]);
         }
         let chunk = span_len(inputs.len());
-        let spans: Vec<(&[Tensor], &[Tensor])> = inputs
+        let spans: Vec<(&[TensorOf<S>], &[TensorOf<S>])> = inputs
             .chunks(chunk)
             .zip(grad_outs.chunks(chunk))
             .collect();
         let parts = parallel_map(
             &spans,
             spans.len(),
-            |&(vs, gs)| -> Result<(BatchTensor, LayerGrads)> {
+            |&(vs, gs)| -> Result<(BatchTensorOf<S>, LayerGrads)> {
                 let mut local = self.zero_grads();
-                let vb = BatchTensor::pack(vs)?;
-                let gb = BatchTensor::pack(gs)?;
+                let vb = BatchTensorOf::pack(vs)?;
+                let gb = BatchTensorOf::pack(gs)?;
                 let gv = self.backward_batched(&vb, &gb, &mut local)?;
                 Ok((gv, local))
             },
@@ -414,12 +508,12 @@ impl EquivariantLinear {
     /// `F(dᵀ) g[·]` feeds both the coefficient gradients (one inner
     /// product per item) and the input gradients (a blocked axpy over
     /// `B · n^k` lanes). Gradients are summed over the batch.
-    pub fn backward_batched(
+    pub fn backward_batched<S: Scalar>(
         &self,
-        v: &BatchTensor,
-        g: &BatchTensor,
+        v: &BatchTensorOf<S>,
+        g: &BatchTensorOf<S>,
         grads: &mut LayerGrads,
-    ) -> Result<BatchTensor> {
+    ) -> Result<BatchTensorOf<S>> {
         if v.order() != self.k || v.n() != self.n || v.batch() != g.batch() {
             return Err(Error::ShapeMismatch {
                 expected: format!(
@@ -437,50 +531,51 @@ impl EquivariantLinear {
             });
         }
         let batch = v.batch();
-        let mut grad_v = BatchTensor::zeros(self.n, self.k, batch);
-        let mut arena = PooledArena::get();
+        let mut grad_v = BatchTensorOf::zeros(self.n, self.k, batch);
+        let mut arena = PooledArenaOf::<S>::get();
         self.backward_schedule.execute_batch_map(g, &mut arena, |i, bt| {
             // bt = F(dᵀ) g for every item of the batch (a reused scratch
             // buffer).
             let sign = self.terms[i].adjoint_sign;
             let alpha = self.coeffs[i] * sign;
-            let mut acc = 0.0;
+            let alpha_s = S::from_f64(alpha);
+            let mut acc = S::ZERO;
             for b in 0..batch {
                 let t = bt.item(b);
                 // ∂L/∂λ_i += sign · Σ_b ⟨F(dᵀ) g_b, v_b⟩
-                acc += t.iter().zip(v.item(b)).map(|(a, x)| a * x).sum::<f64>();
+                acc += t.iter().zip(v.item(b)).map(|(&a, &x)| a * x).sum::<S>();
                 if alpha != 0.0 {
                     for (o, &tv) in grad_v.item_mut(b).iter_mut().zip(t) {
-                        *o += alpha * tv;
+                        *o += alpha_s * tv;
                     }
                 }
             }
-            grads.coeffs[i] += sign * acc;
+            grads.coeffs[i] += sign * acc.to_f64();
             Ok(())
         })?;
         // Bias gradients: ∂L/∂μ_b = Σ_items ⟨g, F(b)(1)⟩ — the basis
         // tensor is materialised once per term for the whole batch.
         if !self.bias_terms.is_empty() {
-            let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+            let one = TensorOf::from_vec(self.n, 0, vec![S::ONE])?;
             for (j, term) in self.bias_terms.iter().enumerate() {
                 let basis = term.forward.apply(&one)?;
-                let mut acc = 0.0;
+                let mut acc = S::ZERO;
                 for b in 0..batch {
                     acc += basis
                         .data
                         .iter()
                         .zip(g.item(b))
-                        .map(|(a, x)| a * x)
-                        .sum::<f64>();
+                        .map(|(&a, &x)| a * x)
+                        .sum::<S>();
                 }
-                grads.bias_coeffs[j] += acc;
+                grads.bias_coeffs[j] += acc.to_f64();
             }
         }
         Ok(grad_v)
     }
 
     /// Shape guard shared by the per-item and batched forward paths.
-    fn check_input(&self, v: &Tensor) -> Result<()> {
+    fn check_input<S: Scalar>(&self, v: &TensorOf<S>) -> Result<()> {
         if v.order != self.k || v.n != self.n {
             return Err(Error::ShapeMismatch {
                 expected: format!("order {} tensor over R^{}", self.k, self.n),
@@ -498,17 +593,21 @@ impl EquivariantLinear {
     /// the cost-model work (LPT over subtree flops/bytes) instead of the
     /// old even chunking, so one dominant subtree no longer serialises a
     /// worker span; partial sums are reduced on the calling thread.
-    fn forward_subtrees_parallel(&self, v: &Tensor, workers: usize) -> Result<Tensor> {
+    fn forward_subtrees_parallel<S: Scalar>(
+        &self,
+        v: &TensorOf<S>,
+        workers: usize,
+    ) -> Result<TensorOf<S>> {
         self.check_input(v)?;
         let parts = self.schedule.cost_partitions(workers);
-        let partials = parallel_map(&parts, parts.len(), |classes| -> Result<Tensor> {
-            let mut partial = Tensor::zeros(self.n, self.l);
-            let mut arena = PooledArena::get();
+        let partials = parallel_map(&parts, parts.len(), |classes| -> Result<TensorOf<S>> {
+            let mut partial = TensorOf::zeros(self.n, self.l);
+            let mut arena = PooledArenaOf::<S>::get();
             self.schedule
                 .execute_subset(v, &self.coeffs, classes, &mut partial, &mut arena)?;
             Ok(partial)
         });
-        let mut out = Tensor::zeros(self.n, self.l);
+        let mut out = TensorOf::zeros(self.n, self.l);
         for p in partials {
             out.axpy(1.0, &p?);
         }
@@ -521,22 +620,22 @@ impl EquivariantLinear {
     /// term set with its own pooled arena (full node reuse inside the
     /// partition), accumulating local coefficient gradients and a local
     /// input-gradient partial; both are reduced on the calling thread.
-    fn backward_terms_parallel(
+    fn backward_terms_parallel<S: Scalar>(
         &self,
-        v: &Tensor,
-        g: &Tensor,
+        v: &TensorOf<S>,
+        g: &TensorOf<S>,
         grads: &mut LayerGrads,
         workers: usize,
-    ) -> Result<Tensor> {
+    ) -> Result<TensorOf<S>> {
         self.check_input(v)?;
         let parts = self.backward_schedule.cost_term_partitions(workers);
         let partials = parallel_map(
             &parts,
             parts.len(),
-            |terms| -> Result<(Tensor, Vec<f64>)> {
-                let mut local_gv = Tensor::zeros(self.n, self.k);
+            |terms| -> Result<(TensorOf<S>, Vec<f64>)> {
+                let mut local_gv = TensorOf::zeros(self.n, self.k);
                 let mut local_coeffs = vec![0.0; self.coeffs.len()];
-                let mut arena = PooledArena::get();
+                let mut arena = PooledArenaOf::<S>::get();
                 self.backward_schedule
                     .execute_map_subset(g, terms, &mut arena, |i, bt| {
                         let sign = self.terms[i].adjoint_sign;
@@ -550,7 +649,7 @@ impl EquivariantLinear {
                 Ok((local_gv, local_coeffs))
             },
         );
-        let mut grad_v = Tensor::zeros(self.n, self.k);
+        let mut grad_v = TensorOf::zeros(self.n, self.k);
         for part in partials {
             let (gv, coeffs) = part?;
             grad_v.axpy(1.0, &gv);
@@ -565,8 +664,8 @@ impl EquivariantLinear {
     /// Bias-diagram gradients `∂L/∂μ_j = sign_j · ⟨F(bᵀ) g, 1⟩`,
     /// accumulated into `grads` — shared by the sequential and the
     /// term-parallel backward paths.
-    fn accumulate_bias_grads(&self, g: &Tensor, grads: &mut LayerGrads) -> Result<()> {
-        let one = Tensor::from_vec(self.n, 0, vec![1.0])?;
+    fn accumulate_bias_grads<S: Scalar>(&self, g: &TensorOf<S>, grads: &mut LayerGrads) -> Result<()> {
+        let one = TensorOf::from_vec(self.n, 0, vec![S::ONE])?;
         for (j, term) in self.bias_terms.iter().enumerate() {
             let bt = term.backward.apply(g)?; // order-0 scalar
             grads.bias_coeffs[j] += term.adjoint_sign * bt.dot(&one);
@@ -575,12 +674,14 @@ impl EquivariantLinear {
     }
 
     /// The batch-shared bias tensor `Σ μ_b F(b)(1)`, or `None` when the
-    /// layer has no active bias term.
-    pub(crate) fn batch_bias(&self) -> Result<Option<Tensor>> {
+    /// layer has no active bias term. Computed against the `f64` master
+    /// coefficients and narrowed once per batch (`S = f64` is a value-
+    /// preserving copy).
+    pub(crate) fn batch_bias<S: Scalar>(&self) -> Result<Option<TensorOf<S>>> {
         if self.bias_terms.is_empty() || self.bias_coeffs.iter().all(|&m| m == 0.0) {
             return Ok(None);
         }
-        Ok(Some(self.materialize_bias()?))
+        Ok(Some(self.materialize_bias()?.cast::<S>()))
     }
 
     /// Backward pass. Given the upstream gradient `g = ∂L/∂out`, returns
@@ -591,9 +692,14 @@ impl EquivariantLinear {
     /// with the fast path only, through the transposed-term schedule so
     /// every `F(dᵀ) g` shares its `σ` permute and contraction prefix with
     /// its neighbours (and all scratch comes from the pooled arena).
-    pub fn backward(&self, v: &Tensor, g: &Tensor, grads: &mut LayerGrads) -> Result<Tensor> {
-        let mut grad_v = Tensor::zeros(self.n, self.k);
-        let mut arena = PooledArena::get();
+    pub fn backward<S: Scalar>(
+        &self,
+        v: &TensorOf<S>,
+        g: &TensorOf<S>,
+        grads: &mut LayerGrads,
+    ) -> Result<TensorOf<S>> {
+        let mut grad_v = TensorOf::zeros(self.n, self.k);
+        let mut arena = PooledArenaOf::<S>::get();
         self.backward_schedule.execute_map(g, &mut arena, |i, bt| {
             // bt = F(dᵀ) g for term i (a reused scratch buffer).
             let signed = self.terms[i].adjoint_sign;
@@ -665,6 +771,10 @@ pub struct LayerGrads {
 
 #[cfg(test)]
 mod tests {
+    // Coverage of the legacy names — the deprecated wrappers must keep
+    // working until downstream callers migrate to `apply`.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::functor::materialize;
     use crate::groups;
@@ -1016,5 +1126,78 @@ mod tests {
         let v = Tensor::random(3, 2, &mut rng);
         let out = layer.forward(&v).unwrap();
         assert_eq!(out.norm(), 0.0);
+    }
+
+    #[test]
+    fn apply_matches_legacy_entry_points() {
+        use crate::tensor::BatchTensor;
+        let mut rng = Rng::new(86);
+        let layer =
+            EquivariantLinear::new(Group::Symmetric, 3, 2, 2, Init::Normal(0.5), &mut rng)
+                .unwrap();
+        let inputs: Vec<Tensor> = (0..4).map(|_| Tensor::random(3, 2, &mut rng)).collect();
+        // Single packaging == legacy forward, bitwise.
+        let single = layer.apply(&inputs[0]).unwrap().into_single().unwrap();
+        assert!(single.allclose(&layer.forward(&inputs[0]).unwrap(), 0.0));
+        // Slice and refs packagings == legacy forward_batch, bitwise.
+        let legacy = layer.forward_batch(&inputs).unwrap();
+        let slice_out = layer.apply(inputs.as_slice()).unwrap().into_vec();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let refs_out = layer.apply(refs.as_slice()).unwrap().into_vec();
+        for (want, (a, b)) in legacy.iter().zip(slice_out.iter().zip(&refs_out)) {
+            assert!(a.allclose(want, 0.0));
+            assert!(b.allclose(want, 0.0));
+        }
+        // Packed packaging == legacy forward_batched, bitwise.
+        let packed = BatchTensor::pack(&inputs).unwrap();
+        let packed_out = layer.apply(&packed).unwrap().into_packed().unwrap();
+        let legacy_packed = layer.forward_batched(&packed).unwrap();
+        assert_eq!(packed_out.max_abs_diff(&legacy_packed), 0.0);
+    }
+
+    #[test]
+    fn apply_grad_matches_backward_batch() {
+        let mut rng = Rng::new(87);
+        let layer =
+            EquivariantLinear::new(Group::Symmetric, 2, 2, 1, Init::Normal(0.4), &mut rng)
+                .unwrap();
+        let inputs: Vec<Tensor> = (0..4).map(|_| Tensor::random(2, 2, &mut rng)).collect();
+        let gs: Vec<Tensor> = (0..4).map(|_| Tensor::random(2, 1, &mut rng)).collect();
+        let mut got_grads = layer.zero_grads();
+        let got = layer
+            .apply_grad(inputs.as_slice(), gs.as_slice(), &mut got_grads)
+            .unwrap()
+            .into_vec();
+        let mut want_grads = layer.zero_grads();
+        let want = layer.backward_batch(&inputs, &gs, &mut want_grads).unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert!(a.allclose(b, 0.0));
+        }
+        assert_eq!(got_grads.coeffs, want_grads.coeffs);
+        assert_eq!(got_grads.bias_coeffs, want_grads.bias_coeffs);
+        // Mismatched packagings are rejected.
+        assert!(layer
+            .apply_grad(&inputs[0], gs.as_slice(), &mut layer.zero_grads())
+            .is_err());
+    }
+
+    #[test]
+    fn f32_forward_tracks_f64_within_tolerance() {
+        let mut rng = Rng::new(88);
+        for group in [Group::Symmetric, Group::Orthogonal] {
+            let layer =
+                EquivariantLinear::new(group, 3, 2, 2, Init::Normal(0.5), &mut rng).unwrap();
+            let v = Tensor::random(3, 2, &mut rng);
+            let want = layer.apply(&v).unwrap().into_single().unwrap();
+            let v32 = v.cast::<f32>();
+            let got = layer.apply(&v32).unwrap().into_single().unwrap();
+            let scale = want.data.iter().fold(1.0_f64, |m, x| m.max(x.abs()));
+            let tol = 64.0 * <f32 as Scalar>::TOLERANCE * scale;
+            assert!(
+                got.cast::<f64>().allclose(&want, tol),
+                "group {group}: f32 diverges by {}",
+                got.cast::<f64>().max_abs_diff(&want)
+            );
+        }
     }
 }

@@ -15,7 +15,9 @@
 //! symbol).
 
 mod channels;
+mod input;
 mod linear;
 
 pub use channels::{ChannelEquivariantLinear, ChannelGrads};
+pub use input::{BatchInput, BatchOutput, ChannelBatchInput, ChannelBatchOutput};
 pub use linear::{spanning_plans, transpose_sign, EquivariantLinear, Init, LayerGrads};

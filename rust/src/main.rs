@@ -205,7 +205,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         println!("loaded checkpoint from {path}");
     }
     let mut coord = Coordinator::new(cfg.server.clone());
-    coord.register("net", ModelKind::net(net));
+    println!("serving precision: {}", cfg.model.precision);
+    coord.register(
+        "net",
+        ModelKind::net_with_precision(net, cfg.model.precision),
+    );
     let artifact = flags
         .get("artifact")
         .cloned()

@@ -5,7 +5,7 @@
 //! use [`Activation::Identity`] between linear layers (as is standard for
 //! Brauer-category networks) or accept the approximation deliberately.
 
-use crate::tensor::{BatchTensor, Tensor};
+use crate::tensor::{BatchTensorOf, Scalar, TensorOf};
 
 /// Elementwise activation functions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -25,13 +25,15 @@ impl Activation {
     /// The elementwise map, applied in place. Pointwise over the flat
     /// coefficient buffer, so the per-item and batched entry points share
     /// one implementation (and therefore bitwise-identical arithmetic).
-    fn apply_in_place(&self, data: &mut [f64]) {
+    /// Constants are `f64` masters narrowed once via [`Scalar::from_f64`],
+    /// and the expression order matches the historical `f64` code exactly.
+    fn apply_in_place<S: Scalar>(&self, data: &mut [S]) {
         match self {
             Activation::Identity => {}
             Activation::Relu => {
                 for x in data {
-                    if *x < 0.0 {
-                        *x = 0.0;
+                    if *x < S::ZERO {
+                        *x = S::ZERO;
                     }
                 }
             }
@@ -41,10 +43,12 @@ impl Activation {
                 }
             }
             Activation::Gelu => {
+                let c = S::from_f64((2.0 / std::f64::consts::PI).sqrt());
+                let a = S::from_f64(0.044715);
+                let half = S::from_f64(0.5);
                 for x in data {
-                    let c = (2.0 / std::f64::consts::PI).sqrt();
-                    let t = (c * (*x + 0.044715 * x.powi(3))).tanh();
-                    *x = 0.5 * *x * (1.0 + t);
+                    let t = (c * (*x + a * x.powi(3))).tanh();
+                    *x = half * *x * (S::ONE + t);
                 }
             }
         }
@@ -52,37 +56,40 @@ impl Activation {
 
     /// The elementwise derivative at the pre-activation input, multiplied
     /// into the upstream gradient in place.
-    fn apply_grad_in_place(&self, grad: &mut [f64], pre: &[f64]) {
+    fn apply_grad_in_place<S: Scalar>(&self, grad: &mut [S], pre: &[S]) {
         match self {
             Activation::Identity => {}
             Activation::Relu => {
                 for (gx, &x) in grad.iter_mut().zip(pre) {
-                    if x <= 0.0 {
-                        *gx = 0.0;
+                    if x <= S::ZERO {
+                        *gx = S::ZERO;
                     }
                 }
             }
             Activation::Tanh => {
                 for (gx, &x) in grad.iter_mut().zip(pre) {
                     let t = x.tanh();
-                    *gx *= 1.0 - t * t;
+                    *gx *= S::ONE - t * t;
                 }
             }
             Activation::Gelu => {
+                // numerical derivative of the tanh approximation
+                let c = S::from_f64((2.0 / std::f64::consts::PI).sqrt());
+                let a = S::from_f64(0.044715);
+                let half = S::from_f64(0.5);
+                let three = S::from_f64(3.0);
                 for (gx, &x) in grad.iter_mut().zip(pre) {
-                    // numerical derivative of the tanh approximation
-                    let c = (2.0 / std::f64::consts::PI).sqrt();
-                    let u = c * (x + 0.044715 * x.powi(3));
+                    let u = c * (x + a * x.powi(3));
                     let t = u.tanh();
-                    let du = c * (1.0 + 3.0 * 0.044715 * x * x);
-                    *gx *= 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du;
+                    let du = c * (S::ONE + three * a * x * x);
+                    *gx *= half * (S::ONE + t) + half * x * (S::ONE - t * t) * du;
                 }
             }
         }
     }
 
     /// Apply elementwise.
-    pub fn forward(&self, v: &Tensor) -> Tensor {
+    pub fn forward<S: Scalar>(&self, v: &TensorOf<S>) -> TensorOf<S> {
         let mut out = v.clone();
         self.apply_in_place(&mut out.data);
         out
@@ -90,7 +97,7 @@ impl Activation {
 
     /// Elementwise derivative evaluated at the *pre-activation* input,
     /// multiplied into the upstream gradient.
-    pub fn backward(&self, pre: &Tensor, grad_out: &Tensor) -> Tensor {
+    pub fn backward<S: Scalar>(&self, pre: &TensorOf<S>, grad_out: &TensorOf<S>) -> TensorOf<S> {
         let mut g = grad_out.clone();
         self.apply_grad_in_place(&mut g.data, &pre.data);
         g
@@ -99,7 +106,7 @@ impl Activation {
     /// Apply elementwise over a whole batch — pointwise activations do not
     /// care about the batch axis, so this is one sweep over the contiguous
     /// `[B, n^k]` buffer.
-    pub fn forward_batch(&self, v: &BatchTensor) -> BatchTensor {
+    pub fn forward_batch<S: Scalar>(&self, v: &BatchTensorOf<S>) -> BatchTensorOf<S> {
         let mut out = v.clone();
         self.apply_in_place(out.data_mut());
         out
@@ -108,12 +115,16 @@ impl Activation {
     /// [`Activation::forward_batch`] without the defensive copy, for
     /// callers that no longer need the pre-activation values (the fused
     /// forward path; the traced path keeps the borrowing form).
-    pub fn forward_batch_in_place(&self, v: &mut BatchTensor) {
+    pub fn forward_batch_in_place<S: Scalar>(&self, v: &mut BatchTensorOf<S>) {
         self.apply_in_place(v.data_mut());
     }
 
     /// Batched [`Activation::backward`] over `[B, n^k]` buffers.
-    pub fn backward_batch(&self, pre: &BatchTensor, grad_out: &BatchTensor) -> BatchTensor {
+    pub fn backward_batch<S: Scalar>(
+        &self,
+        pre: &BatchTensorOf<S>,
+        grad_out: &BatchTensorOf<S>,
+    ) -> BatchTensorOf<S> {
         let mut g = grad_out.clone();
         self.apply_grad_in_place(g.data_mut(), pre.data());
         g
@@ -134,6 +145,7 @@ impl Activation {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Tensor;
     use crate::util::Rng;
 
     #[test]
@@ -171,6 +183,19 @@ mod tests {
         let mut rng = Rng::new(92);
         let v = Tensor::random(2, 3, &mut rng);
         assert!(Activation::Identity.forward(&v).allclose(&v, 0.0));
+    }
+
+    #[test]
+    fn f32_activations_track_f64() {
+        let mut rng = Rng::new(93);
+        let v = Tensor::random(3, 2, &mut rng);
+        let g = Tensor::random(3, 2, &mut rng);
+        for act in [Activation::Relu, Activation::Tanh, Activation::Gelu] {
+            let fwd = act.forward(&v.cast::<f32>()).cast::<f64>();
+            assert!(fwd.allclose(&act.forward(&v), 1e-5));
+            let bwd = act.backward(&v.cast::<f32>(), &g.cast::<f32>()).cast::<f64>();
+            assert!(bwd.allclose(&act.backward(&v, &g), 1e-4));
+        }
     }
 
     #[test]

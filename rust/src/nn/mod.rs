@@ -11,7 +11,7 @@ mod train;
 
 pub use activation::Activation;
 pub use loss::Loss;
-pub use model::{fused_batch_stats, EquivariantNet, FusedBatchStats, NetGrads};
+pub use model::{fused_batch_stats, EquivariantNet, FusedBatchStats, NetGrads, NetTrace};
 pub use optim::{Adam, Optimizer, Sgd};
 pub use serialize::{load as load_checkpoint, save as save_checkpoint};
 pub use train::{train, TrainConfig, TrainReport};

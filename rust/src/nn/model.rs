@@ -3,9 +3,9 @@
 
 use crate::error::{Error, Result};
 use crate::fastmult::{Group, ScheduleStats};
-use crate::layer::{EquivariantLinear, Init, LayerGrads};
+use crate::layer::{BatchInput, BatchOutput, EquivariantLinear, Init, LayerGrads};
 use crate::nn::activation::Activation;
-use crate::tensor::{BatchTensor, Tensor};
+use crate::tensor::{BatchTensorOf, Scalar, TensorOf};
 use crate::util::parallel::{max_threads, parallel_map, span_len};
 use crate::util::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -14,11 +14,11 @@ static FUSED_BATCHES: AtomicU64 = AtomicU64::new(0);
 static FUSED_ITEMS: AtomicU64 = AtomicU64::new(0);
 
 /// Process-wide counters for the batched serving path: how many whole
-/// batches (and items) went through
-/// [`EquivariantNet::forward_batch_refs`] — the packed `[B, n^k]` fused
-/// walk for multi-item batches, the DAG-subtree fan-out for single-item
-/// ones — as opposed to the per-item error-isolation fallback. Reported
-/// by the coordinator metrics.
+/// batches (and items) went through the fused batched walk inside
+/// [`EquivariantNet::apply`] — the packed `[B, n^k]` path for multi-item
+/// batches, the DAG-subtree fan-out for single-item ones — as opposed to
+/// the per-item error-isolation fallback. Reported by the coordinator
+/// metrics.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FusedBatchStats {
     /// Batches executed through the fused batched path.
@@ -94,6 +94,32 @@ impl NetGrads {
     }
 }
 
+/// Backprop intermediates from [`EquivariantNet::apply_trace`], shaped
+/// like the input that produced them. Feed back into
+/// [`EquivariantNet::apply_grad`] together with an output gradient in the
+/// matching packaging.
+#[derive(Debug, Clone)]
+pub enum NetTrace<S: Scalar> {
+    /// Per-layer `(input, pre-activation)` pairs for one item.
+    Single(Vec<(TensorOf<S>, TensorOf<S>)>),
+    /// One per-layer trace per batch item, in order.
+    Batch(Vec<Vec<(TensorOf<S>, TensorOf<S>)>>),
+    /// Per-layer `(input batch, pre-activation batch)` pairs for a packed
+    /// batch.
+    Packed(Vec<(BatchTensorOf<S>, BatchTensorOf<S>)>),
+}
+
+impl<S: Scalar> NetTrace<S> {
+    /// Short name of the packaging, for shape-mismatch error messages.
+    pub(crate) fn kind(&self) -> &'static str {
+        match self {
+            NetTrace::Single(_) => "single",
+            NetTrace::Batch(_) => "batch",
+            NetTrace::Packed(_) => "packed",
+        }
+    }
+}
+
 impl EquivariantNet {
     /// Build a network with the given tensor orders and one activation per
     /// layer (the final activation is forced to `Identity` if `activations`
@@ -151,41 +177,86 @@ impl EquivariantNet {
         total
     }
 
-    /// Forward pass.
-    pub fn forward(&self, v: &Tensor) -> Result<Tensor> {
+    /// Unified forward entry point: accepts any [`BatchInput`] packaging —
+    /// a single tensor, a slice of owned or borrowed tensors, or an
+    /// already-packed `[B, n^k]` batch — and returns a [`BatchOutput`]
+    /// shaped like the input. Replaces the `forward`/`forward_batch`/
+    /// `forward_batch_refs`/`forward_batched` method family.
+    pub fn apply<'a, S: Scalar>(
+        &self,
+        input: impl Into<BatchInput<'a, S>>,
+    ) -> Result<BatchOutput<S>> {
+        match input.into() {
+            BatchInput::Single(v) => Ok(BatchOutput::Single(self.forward_one(v)?)),
+            BatchInput::Slice(vs) => {
+                let refs: Vec<&TensorOf<S>> = vs.iter().collect();
+                Ok(BatchOutput::Batch(self.forward_refs_core(&refs)?))
+            }
+            BatchInput::Refs(vs) => Ok(BatchOutput::Batch(self.forward_refs_core(vs)?)),
+            BatchInput::Packed(vb) => Ok(BatchOutput::Packed(self.forward_packed_core(vb)?)),
+        }
+    }
+
+    /// Forward one tensor. Use [`EquivariantNet::apply`] instead.
+    #[deprecated(note = "use `apply` with a single tensor instead")]
+    pub fn forward<S: Scalar>(&self, v: &TensorOf<S>) -> Result<TensorOf<S>> {
+        self.forward_one(v)
+    }
+
+    /// Forward a batch of owned tensors. Use [`EquivariantNet::apply`]
+    /// instead.
+    #[deprecated(note = "use `apply` with a slice of tensors instead")]
+    pub fn forward_batch<S: Scalar>(&self, inputs: &[TensorOf<S>]) -> Result<Vec<TensorOf<S>>> {
+        let refs: Vec<&TensorOf<S>> = inputs.iter().collect();
+        self.forward_refs_core(&refs)
+    }
+
+    /// Forward a batch of borrowed tensors. Use [`EquivariantNet::apply`]
+    /// instead.
+    #[deprecated(note = "use `apply` with a slice of tensor refs instead")]
+    pub fn forward_batch_refs<S: Scalar>(
+        &self,
+        inputs: &[&TensorOf<S>],
+    ) -> Result<Vec<TensorOf<S>>> {
+        self.forward_refs_core(inputs)
+    }
+
+    /// Forward a packed batch. Use [`EquivariantNet::apply`] instead.
+    #[deprecated(note = "use `apply` with a packed batch instead")]
+    pub fn forward_batched<S: Scalar>(&self, v: &BatchTensorOf<S>) -> Result<BatchTensorOf<S>> {
+        self.forward_packed_core(v)
+    }
+
+    /// Forward pass over one tensor.
+    pub(crate) fn forward_one<S: Scalar>(&self, v: &TensorOf<S>) -> Result<TensorOf<S>> {
         let mut x = v.clone();
         for (layer, act) in self.layers.iter().zip(&self.activations) {
-            x = act.forward(&layer.forward(&x)?);
+            x = act.forward(&layer.forward_one(&x)?);
         }
         Ok(x)
     }
 
-    /// Batched forward pass: the whole batch runs through the network as
-    /// contiguous `[B, n^k]` tensors — packed once at the entry, **one
-    /// schedule walk per layer per worker span**, activations applied to
-    /// the batched buffer between layers, unpacked only at the exit.
-    /// Output order matches input order.
-    pub fn forward_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let refs: Vec<&Tensor> = inputs.iter().collect();
-        self.forward_batch_refs(&refs)
-    }
-
-    /// [`EquivariantNet::forward_batch`] over borrowed inputs. The batch is
-    /// split into one contiguous span per worker thread; each span stays
-    /// packed through every layer ([`EquivariantNet::forward_batched`]).
-    pub fn forward_batch_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    /// Batched forward over borrowed inputs: the batch is split into one
+    /// contiguous span per worker thread; each span is packed once at the
+    /// entry, walks **one schedule per layer**, keeps activations batched
+    /// between layers and unpacks only at the exit. Output order matches
+    /// input order.
+    pub(crate) fn forward_refs_core<S: Scalar>(
+        &self,
+        inputs: &[&TensorOf<S>],
+    ) -> Result<Vec<TensorOf<S>>> {
         if inputs.is_empty() {
             return Ok(Vec::new());
         }
         if inputs.len() == 1 {
             // Single request: batching buys nothing, so keep the
-            // DAG-subtree fan-out inside each layer
-            // ([`EquivariantLinear::forward_batch_refs`]'s B == 1 branch)
-            // for low-latency serving.
+            // DAG-subtree fan-out inside each layer (the B == 1 branch of
+            // [`EquivariantLinear::apply`]'s refs path) for low-latency
+            // serving.
             let mut xs = vec![inputs[0].clone()];
             for (layer, act) in self.layers.iter().zip(&self.activations) {
-                let refs: Vec<&Tensor> = xs.iter().collect();
-                let pre = layer.forward_batch_refs(&refs)?;
+                let refs: Vec<&TensorOf<S>> = xs.iter().collect();
+                let pre = layer.forward_refs_core(&refs)?;
                 xs = pre.iter().map(|t| act.forward(t)).collect();
             }
             FUSED_BATCHES.fetch_add(1, Ordering::Relaxed);
@@ -194,14 +265,14 @@ impl EquivariantNet {
         }
         // Each layer's bias tensor is materialised once per batch here and
         // shared read-only across the worker spans.
-        let biases: Vec<Option<Tensor>> = self
+        let biases: Vec<Option<TensorOf<S>>> = self
             .layers
             .iter()
-            .map(|l| l.batch_bias())
+            .map(|l| l.batch_bias::<S>())
             .collect::<Result<Vec<_>>>()?;
-        let spans: Vec<&[&Tensor]> = inputs.chunks(span_len(inputs.len())).collect();
-        let span_outs = parallel_map(&spans, spans.len(), |span| -> Result<Vec<Tensor>> {
-            let vb = BatchTensor::pack_refs(span)?;
+        let spans: Vec<&[&TensorOf<S>]> = inputs.chunks(span_len(inputs.len())).collect();
+        let span_outs = parallel_map(&spans, spans.len(), |span| -> Result<Vec<TensorOf<S>>> {
+            let vb = BatchTensorOf::pack_refs(span)?;
             Ok(self.forward_batched_shared(&vb, &biases)?.unpack())
         });
         let mut out = Vec::with_capacity(inputs.len());
@@ -217,23 +288,26 @@ impl EquivariantNet {
     /// schedule once for the whole batch and activations stay batched
     /// between layers. The first layer reads `v` directly (no defensive
     /// copy of the input batch).
-    pub fn forward_batched(&self, v: &BatchTensor) -> Result<BatchTensor> {
-        let biases: Vec<Option<Tensor>> = self
+    pub(crate) fn forward_packed_core<S: Scalar>(
+        &self,
+        v: &BatchTensorOf<S>,
+    ) -> Result<BatchTensorOf<S>> {
+        let biases: Vec<Option<TensorOf<S>>> = self
             .layers
             .iter()
-            .map(|l| l.batch_bias())
+            .map(|l| l.batch_bias::<S>())
             .collect::<Result<Vec<_>>>()?;
         self.forward_batched_shared(v, &biases)
     }
 
-    /// [`EquivariantNet::forward_batched`] over pre-materialised per-layer
-    /// bias tensors (one entry per layer), so span fan-outs build each
-    /// bias once per batch.
-    fn forward_batched_shared(
+    /// [`EquivariantNet::forward_packed_core`] over pre-materialised
+    /// per-layer bias tensors (one entry per layer), so span fan-outs build
+    /// each bias once per batch.
+    fn forward_batched_shared<S: Scalar>(
         &self,
-        v: &BatchTensor,
-        biases: &[Option<Tensor>],
-    ) -> Result<BatchTensor> {
+        v: &BatchTensorOf<S>,
+        biases: &[Option<TensorOf<S>>],
+    ) -> Result<BatchTensorOf<S>> {
         let mut x = self.layers[0].forward_batched_with_bias(v, biases[0].as_ref())?;
         self.activations[0].forward_batch_in_place(&mut x);
         for (i, (layer, act)) in self.layers.iter().zip(&self.activations).enumerate().skip(1) {
@@ -247,26 +321,108 @@ impl EquivariantNet {
     /// input, in order. The fast uniform path handles the whole batch at
     /// once; if any item is malformed the batch falls back to per-item
     /// forwards (still parallel) so one bad request cannot fail its
-    /// neighbours.
-    pub fn forward_batch_results(&self, inputs: &[&Tensor]) -> Vec<Result<Tensor>> {
+    /// neighbours. Per-item failures are wrapped in [`Error::BatchItem`],
+    /// so every error carries the index of the input that produced it.
+    pub fn apply_results<S: Scalar>(&self, inputs: &[&TensorOf<S>]) -> Vec<Result<TensorOf<S>>> {
         let uniform = inputs
             .windows(2)
             .all(|w| w[0].order == w[1].order && w[0].n == w[1].n);
         if uniform {
-            if let Ok(outs) = self.forward_batch_refs(inputs) {
+            if let Ok(outs) = self.forward_refs_core(inputs) {
                 return outs.into_iter().map(Ok).collect();
             }
         }
-        parallel_map(inputs, max_threads(), |v| self.forward(v))
+        let indexed: Vec<(usize, &TensorOf<S>)> = inputs.iter().copied().enumerate().collect();
+        parallel_map(&indexed, max_threads(), |&(i, v)| {
+            self.forward_one(v).map_err(|e| Error::BatchItem {
+                index: i,
+                source: Box::new(e),
+            })
+        })
+    }
+
+    /// Per-item batched inference. Use [`EquivariantNet::apply_results`]
+    /// instead.
+    #[deprecated(note = "use `apply_results` instead")]
+    pub fn forward_batch_results<S: Scalar>(
+        &self,
+        inputs: &[&TensorOf<S>],
+    ) -> Vec<Result<TensorOf<S>>> {
+        self.apply_results(inputs)
+    }
+
+    /// Forward pass retaining intermediates for backprop, in whatever
+    /// packaging the caller has: the returned [`NetTrace`] mirrors the
+    /// input shape and pairs with [`EquivariantNet::apply_grad`] — the
+    /// backward half of the unified API.
+    pub fn apply_trace<'a, S: Scalar>(
+        &self,
+        input: impl Into<BatchInput<'a, S>>,
+    ) -> Result<(NetTrace<S>, BatchOutput<S>)> {
+        match input.into() {
+            BatchInput::Single(v) => {
+                let (trace, out) = self.forward_trace(v)?;
+                Ok((NetTrace::Single(trace), BatchOutput::Single(out)))
+            }
+            BatchInput::Slice(vs) => {
+                let traced = self.forward_trace_batch(vs)?;
+                let (traces, outs) = traced.into_iter().unzip();
+                Ok((NetTrace::Batch(traces), BatchOutput::Batch(outs)))
+            }
+            BatchInput::Refs(vs) => {
+                let owned: Vec<TensorOf<S>> = vs.iter().map(|&v| v.clone()).collect();
+                let traced = self.forward_trace_batch(&owned)?;
+                let (traces, outs) = traced.into_iter().unzip();
+                Ok((NetTrace::Batch(traces), BatchOutput::Batch(outs)))
+            }
+            BatchInput::Packed(vb) => {
+                let (trace, out) = self.forward_trace_batched(vb)?;
+                Ok((NetTrace::Packed(trace), BatchOutput::Packed(out)))
+            }
+        }
+    }
+
+    /// Backward half of the unified API: consumes a trace from
+    /// [`EquivariantNet::apply_trace`] and an output gradient packaged
+    /// like the traced input (`Single` with `Single`, `Slice` with
+    /// `Batch`, `Packed` with `Packed`). Returns summed parameter
+    /// gradients and the input gradient shaped like the input.
+    pub fn apply_grad<'a, S: Scalar>(
+        &self,
+        trace: &NetTrace<S>,
+        grad_out: impl Into<BatchInput<'a, S>>,
+    ) -> Result<(NetGrads, BatchOutput<S>)> {
+        match (trace, grad_out.into()) {
+            (NetTrace::Single(trace), BatchInput::Single(g)) => {
+                let (grads, gv) = self.backward(trace, g)?;
+                Ok((grads, BatchOutput::Single(gv)))
+            }
+            (NetTrace::Batch(traces), BatchInput::Slice(gs)) => {
+                let (grads, gvs) = self.backward_batch(traces, gs)?;
+                Ok((grads, BatchOutput::Batch(gvs)))
+            }
+            (NetTrace::Packed(trace), BatchInput::Packed(g)) => {
+                let (grads, gb) = self.backward_batched(trace, g)?;
+                Ok((grads, BatchOutput::Packed(gb)))
+            }
+            (t, g) => Err(Error::ShapeMismatch {
+                expected: format!("gradient packaged like the trace (`{}`)", t.kind()),
+                got: format!("`{}`", g.kind()),
+            }),
+        }
     }
 
     /// Forward pass retaining intermediates for backprop: returns
     /// `(per-layer (input, pre-activation), output)`.
-    pub fn forward_trace(&self, v: &Tensor) -> Result<(Vec<(Tensor, Tensor)>, Tensor)> {
+    #[allow(clippy::type_complexity)]
+    pub fn forward_trace<S: Scalar>(
+        &self,
+        v: &TensorOf<S>,
+    ) -> Result<(Vec<(TensorOf<S>, TensorOf<S>)>, TensorOf<S>)> {
         let mut trace = Vec::with_capacity(self.layers.len());
         let mut x = v.clone();
         for (layer, act) in self.layers.iter().zip(&self.activations) {
-            let pre = layer.forward(&x)?;
+            let pre = layer.forward_one(&x)?;
             let post = act.forward(&pre);
             trace.push((x, pre));
             x = post;
@@ -277,11 +433,11 @@ impl EquivariantNet {
     /// Backward pass from `grad_out` (gradient at the network output) using
     /// a trace from [`EquivariantNet::forward_trace`]. Returns parameter
     /// gradients and the input gradient.
-    pub fn backward(
+    pub fn backward<S: Scalar>(
         &self,
-        trace: &[(Tensor, Tensor)],
-        grad_out: &Tensor,
-    ) -> Result<(NetGrads, Tensor)> {
+        trace: &[(TensorOf<S>, TensorOf<S>)],
+        grad_out: &TensorOf<S>,
+    ) -> Result<(NetGrads, TensorOf<S>)> {
         let mut grads = NetGrads {
             layers: self.layers.iter().map(|l| l.zero_grads()).collect(),
         };
@@ -297,10 +453,10 @@ impl EquivariantNet {
     /// Batched [`EquivariantNet::forward_trace`]: traces for a whole batch,
     /// computed in parallel across items.
     #[allow(clippy::type_complexity)]
-    pub fn forward_trace_batch(
+    pub fn forward_trace_batch<S: Scalar>(
         &self,
-        inputs: &[Tensor],
-    ) -> Result<Vec<(Vec<(Tensor, Tensor)>, Tensor)>> {
+        inputs: &[TensorOf<S>],
+    ) -> Result<Vec<(Vec<(TensorOf<S>, TensorOf<S>)>, TensorOf<S>)>> {
         let workers = max_threads().min(inputs.len());
         parallel_map(inputs, workers, |v| self.forward_trace(v))
             .into_iter()
@@ -312,11 +468,11 @@ impl EquivariantNet {
     /// [`EquivariantNet::backward`] + [`NetGrads::add`]); the per-item
     /// input gradients are returned in order. Parallel across items.
     #[allow(clippy::type_complexity)]
-    pub fn backward_batch(
+    pub fn backward_batch<S: Scalar>(
         &self,
-        traces: &[Vec<(Tensor, Tensor)>],
-        grad_outs: &[Tensor],
-    ) -> Result<(NetGrads, Vec<Tensor>)> {
+        traces: &[Vec<(TensorOf<S>, TensorOf<S>)>],
+        grad_outs: &[TensorOf<S>],
+    ) -> Result<(NetGrads, Vec<TensorOf<S>>)> {
         if traces.len() != grad_outs.len() {
             return Err(Error::ShapeMismatch {
                 expected: format!("{} output gradients", traces.len()),
@@ -329,7 +485,7 @@ impl EquivariantNet {
         if traces.is_empty() {
             return Ok((total, Vec::new()));
         }
-        let pairs: Vec<(&Vec<(Tensor, Tensor)>, &Tensor)> =
+        let pairs: Vec<(&Vec<(TensorOf<S>, TensorOf<S>)>, &TensorOf<S>)> =
             traces.iter().zip(grad_outs).collect();
         let workers = max_threads().min(pairs.len());
         let per_item = parallel_map(&pairs, workers, |&(trace, g)| self.backward(trace, g));
@@ -348,14 +504,14 @@ impl EquivariantNet {
     /// This is the training loop's forward: the whole minibatch flows
     /// through the network as `[B, n^k]` tensors.
     #[allow(clippy::type_complexity)]
-    pub fn forward_trace_batched(
+    pub fn forward_trace_batched<S: Scalar>(
         &self,
-        v: &BatchTensor,
-    ) -> Result<(Vec<(BatchTensor, BatchTensor)>, BatchTensor)> {
+        v: &BatchTensorOf<S>,
+    ) -> Result<(Vec<(BatchTensorOf<S>, BatchTensorOf<S>)>, BatchTensorOf<S>)> {
         let mut trace = Vec::with_capacity(self.layers.len());
         let mut x = v.clone();
         for (layer, act) in self.layers.iter().zip(&self.activations) {
-            let pre = layer.forward_batched(&x)?;
+            let pre = layer.forward_packed_core(&x)?;
             let post = act.forward_batch(&pre);
             trace.push((x, pre));
             x = post;
@@ -367,11 +523,11 @@ impl EquivariantNet {
     /// trace: one transposed-schedule walk per layer per batch, parameter
     /// gradients **summed** over the batch in a single reduction, and the
     /// input-gradient batch returned packed.
-    pub fn backward_batched(
+    pub fn backward_batched<S: Scalar>(
         &self,
-        trace: &[(BatchTensor, BatchTensor)],
-        grad_out: &BatchTensor,
-    ) -> Result<(NetGrads, BatchTensor)> {
+        trace: &[(BatchTensorOf<S>, BatchTensorOf<S>)],
+        grad_out: &BatchTensorOf<S>,
+    ) -> Result<(NetGrads, BatchTensorOf<S>)> {
         let mut grads = NetGrads {
             layers: self.layers.iter().map(|l| l.zero_grads()).collect(),
         };
@@ -426,9 +582,12 @@ impl EquivariantNet {
 
 #[cfg(test)]
 mod tests {
+    // The legacy forward names stay exercised until their removal.
+    #![allow(deprecated)]
     use super::*;
     use crate::groups;
     use crate::nn::loss::Loss;
+    use crate::tensor::Tensor;
 
     #[test]
     fn network_shapes() {
@@ -564,12 +723,22 @@ mod tests {
         .unwrap();
         let good = Tensor::random(3, 2, &mut rng);
         let bad = Tensor::zeros(3, 1); // wrong order
-        let results = net.forward_batch_results(&[&good, &bad, &good]);
+        let results = net.apply_results(&[&good, &bad, &good]);
         assert!(results[0].is_ok());
         assert!(results[1].is_err());
         assert!(results[2].is_ok());
         let want = net.forward(&good).unwrap();
         assert!(results[0].as_ref().unwrap().allclose(&want, 1e-9));
+        // The per-item error carries the index of the failing input.
+        let msg = results[1].as_ref().unwrap_err().to_string();
+        assert!(msg.starts_with("batch item 1:"), "got: {msg}");
+        // The deprecated name routes through the same path.
+        let legacy = net.forward_batch_results(&[&good, &bad]);
+        assert!(legacy[1]
+            .as_ref()
+            .unwrap_err()
+            .to_string()
+            .starts_with("batch item 1:"));
     }
 
     #[test]
@@ -618,6 +787,88 @@ mod tests {
         }
         // Length mismatch is rejected.
         assert!(net.backward_batch(&traces, &gouts[..2]).is_err());
+    }
+
+    #[test]
+    fn apply_matches_legacy_entry_points() {
+        use crate::tensor::BatchTensor;
+        let mut rng = Rng::new(209);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 2, 1],
+            Activation::Relu,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let inputs: Vec<Tensor> = (0..5).map(|_| Tensor::random(3, 2, &mut rng)).collect();
+        let single = net.apply(&inputs[0]).unwrap().into_single().unwrap();
+        assert!(single.allclose(&net.forward(&inputs[0]).unwrap(), 0.0));
+        let legacy = net.forward_batch(&inputs).unwrap();
+        let got = net.apply(inputs.as_slice()).unwrap().into_vec();
+        for (a, b) in got.iter().zip(&legacy) {
+            assert!(a.allclose(b, 0.0));
+        }
+        let packed = BatchTensor::pack(&inputs).unwrap();
+        let got_packed = net.apply(&packed).unwrap().into_packed().unwrap();
+        assert_eq!(
+            got_packed.max_abs_diff(&net.forward_batched(&packed).unwrap()),
+            0.0
+        );
+    }
+
+    #[test]
+    fn apply_trace_and_grad_match_legacy_backward() {
+        let mut rng = Rng::new(210);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            2,
+            &[2, 1, 0],
+            Activation::Tanh,
+            Init::Normal(0.5),
+            &mut rng,
+        )
+        .unwrap();
+        let v = Tensor::random(2, 2, &mut rng);
+        let (trace, out) = net.apply_trace(&v).unwrap();
+        let out = out.into_single().unwrap();
+        assert!(out.allclose(&net.forward(&v).unwrap(), 0.0));
+        let (grads, gv) = net.apply_grad(&trace, &out).unwrap();
+        let gv = gv.into_single().unwrap();
+        let (want_trace, _) = net.forward_trace(&v).unwrap();
+        let (want_grads, want_gv) = net.backward(&want_trace, &out).unwrap();
+        assert!(gv.allclose(&want_gv, 0.0));
+        assert_eq!(net.grads_flat(&grads), net.grads_flat(&want_grads));
+        // Mismatched trace/gradient packagings are rejected.
+        let gs = vec![out];
+        assert!(net.apply_grad(&trace, gs.as_slice()).is_err());
+    }
+
+    #[test]
+    fn f32_net_tracks_f64_within_tolerance() {
+        use crate::tensor::{Scalar, TensorOf};
+        let mut rng = Rng::new(211);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 2, 1],
+            Activation::Relu,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let v = Tensor::random(3, 2, &mut rng);
+        let want = net.apply(&v).unwrap().into_single().unwrap();
+        let v32: TensorOf<f32> = v.cast();
+        let got = net.apply(&v32).unwrap().into_single().unwrap();
+        let scale = want.data.iter().fold(1.0_f64, |m, x| m.max(x.abs()));
+        let tol = 64.0 * <f32 as Scalar>::TOLERANCE * scale;
+        assert!(
+            got.cast::<f64>().allclose(&want, tol),
+            "f32 net diverges by {}",
+            got.cast::<f64>().max_abs_diff(&want)
+        );
     }
 
     #[test]

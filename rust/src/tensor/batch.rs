@@ -3,57 +3,71 @@
 //! The per-item kernels in [`super::ops`] recompute their odometer index
 //! arithmetic on every call; when a layer applies the same schedule node to
 //! every item of a batch, that arithmetic is identical across items. A
-//! [`BatchTensor`] stores `B` same-shape tensors back to back so a batched
-//! kernel can build its index map **once per node** and then sweep the
-//! batch with pure loads/stores:
+//! [`BatchTensorOf`] stores `B` same-shape tensors back to back so a
+//! batched kernel can build its index map **once per node** and then sweep
+//! the batch with pure loads/stores:
 //!
 //! - odometer-driven ops (permute, group-diagonal extraction, the
 //!   diagonal-support scatter, Levi-Civita, the Sp(n) ε-expansion) share a
 //!   precomputed offset map across all `B` items,
 //! - constant-stride scans (diagonal contraction, pair traces) keep their
 //!   incremental per-item form — their index math is already O(1) per
-//!   element — and simply loop the items over one precomputed descriptor.
+//!   element — and simply loop the items over one precomputed descriptor,
+//! - the fused gather-contract kernels additionally tile their outer-offset
+//!   tables in L1-sized chunks and sweep the batch inside each tile, so the
+//!   table stays cache-resident across items.
 //!
 //! Every batched kernel applies, per item, **exactly** the arithmetic of
 //! its per-item counterpart in the same order, so batch-fused schedule
 //! execution ([`crate::fastmult::LayerSchedule::execute_batch`]) is bitwise
-//! identical per item to the per-item walk. See
-//! `docs/batched_execution.md`.
+//! identical per item to the per-item walk — tiling reorders *which output
+//! is computed when*, never the summation order within an output. See
+//! `docs/batched_execution.md` and `docs/scalar_precision.md`.
 
 use super::ops::{
     axis_strides, group_diag_offsets, levi_civita_entries, permute_block_map, permute_dst_map,
     permuted_gather_base, permuted_group_diag_offsets, scatter_diag_dsts,
 };
-use super::Tensor;
+use super::scalar::{axpy_slice, ramp_base, Scalar};
+use super::TensorOf;
 use crate::error::{Error, Result};
 
-/// `B` tensors of shape `(n, order)` stored contiguously, item-major: item
-/// `b` occupies `data[b * n^order .. (b + 1) * n^order]`, each item
-/// row-major exactly like a [`Tensor`].
+/// Output-tile width for the fused gather kernels: how many outer-offset
+/// table entries are processed per batch sweep. 512 `usize` entries ≈ 4 KiB
+/// — comfortably L1-resident alongside the source/destination lines.
+const GATHER_TILE: usize = 512;
+
+/// `B` tensors of shape `(n, order)` over scalar type `S`, stored
+/// contiguously item-major: item `b` occupies
+/// `data[b * n^order .. (b + 1) * n^order]`, each item row-major exactly
+/// like a [`TensorOf`].
 #[derive(Debug, Clone, PartialEq)]
-pub struct BatchTensor {
+pub struct BatchTensorOf<S: Scalar> {
     n: usize,
     order: usize,
     batch: usize,
-    data: Vec<f64>,
+    data: Vec<S>,
 }
 
-impl BatchTensor {
+/// The training-precision batch — the alias pre-existing call sites use.
+pub type BatchTensor = BatchTensorOf<f64>;
+
+impl<S: Scalar> BatchTensorOf<S> {
     /// All-zeros batch of `batch` tensors of shape `(n, order)`.
     pub fn zeros(n: usize, order: usize, batch: usize) -> Self {
-        BatchTensor {
+        BatchTensorOf {
             n,
             order,
             batch,
-            data: vec![0.0; batch * n.pow(order as u32)],
+            data: vec![S::ZERO; batch * n.pow(order as u32)],
         }
     }
 
     /// Wrap an existing buffer (length must be `batch · n^order`). Used by
     /// the scratch arena, which recycles buffers across shapes.
-    pub(crate) fn from_raw(n: usize, order: usize, batch: usize, data: Vec<f64>) -> Self {
+    pub(crate) fn from_raw(n: usize, order: usize, batch: usize, data: Vec<S>) -> Self {
         debug_assert_eq!(data.len(), batch * n.pow(order as u32));
-        BatchTensor {
+        BatchTensorOf {
             n,
             order,
             batch,
@@ -62,21 +76,21 @@ impl BatchTensor {
     }
 
     /// Give the buffer back (for the scratch arena's recycling buckets).
-    pub(crate) fn into_raw(self) -> Vec<f64> {
+    pub(crate) fn into_raw(self) -> Vec<S> {
         self.data
     }
 
     /// Pack owned tensors into one contiguous batch. All items must share
     /// the same `(n, order)`; an empty slice is rejected (there is no shape
     /// to infer).
-    pub fn pack(items: &[Tensor]) -> Result<Self> {
-        let refs: Vec<&Tensor> = items.iter().collect();
+    pub fn pack(items: &[TensorOf<S>]) -> Result<Self> {
+        let refs: Vec<&TensorOf<S>> = items.iter().collect();
         Self::pack_refs(&refs)
     }
 
-    /// [`BatchTensor::pack`] over borrowed tensors (the coordinator batches
-    /// requests it does not own).
-    pub fn pack_refs(items: &[&Tensor]) -> Result<Self> {
+    /// [`BatchTensorOf::pack`] over borrowed tensors (the coordinator
+    /// batches requests it does not own).
+    pub fn pack_refs(items: &[&TensorOf<S>]) -> Result<Self> {
         let Some(first) = items.first() else {
             return Err(Error::ShapeMismatch {
                 expected: "a non-empty batch".into(),
@@ -96,7 +110,7 @@ impl BatchTensor {
         for t in items {
             data.extend_from_slice(&t.data);
         }
-        Ok(BatchTensor {
+        Ok(BatchTensorOf {
             n,
             order,
             batch: items.len(),
@@ -105,11 +119,11 @@ impl BatchTensor {
     }
 
     /// Split back into per-item tensors, in batch order.
-    pub fn unpack(self) -> Vec<Tensor> {
+    pub fn unpack(self) -> Vec<TensorOf<S>> {
         let len = self.item_len();
         self.data
             .chunks(len)
-            .map(|chunk| Tensor {
+            .map(|chunk| TensorOf {
                 n: self.n,
                 order: self.order,
                 data: chunk.to_vec(),
@@ -139,59 +153,61 @@ impl BatchTensor {
     }
 
     /// The whole `[B, n^order]` buffer (item-major).
-    pub fn data(&self) -> &[f64] {
+    pub fn data(&self) -> &[S] {
         &self.data
     }
     /// Mutable access to the whole buffer.
-    pub fn data_mut(&mut self) -> &mut [f64] {
+    pub fn data_mut(&mut self) -> &mut [S] {
         &mut self.data
     }
 
     /// Item `b`'s coefficients.
     #[inline]
-    pub fn item(&self, b: usize) -> &[f64] {
+    pub fn item(&self, b: usize) -> &[S] {
         let len = self.item_len();
         &self.data[b * len..(b + 1) * len]
     }
 
     /// Mutable coefficients of item `b`.
     #[inline]
-    pub fn item_mut(&mut self, b: usize) -> &mut [f64] {
+    pub fn item_mut(&mut self, b: usize) -> &mut [S] {
         let len = self.item_len();
         &mut self.data[b * len..(b + 1) * len]
     }
 
-    /// Item `b` copied out as a standalone [`Tensor`].
-    pub fn item_tensor(&self, b: usize) -> Tensor {
-        Tensor {
+    /// Item `b` copied out as a standalone [`TensorOf`].
+    pub fn item_tensor(&self, b: usize) -> TensorOf<S> {
+        TensorOf {
             n: self.n,
             order: self.order,
             data: self.item(b).to_vec(),
         }
     }
 
-    /// `item_b += alpha * t` for every item — the batch-shared bias add.
-    pub fn axpy_broadcast(&mut self, alpha: f64, t: &Tensor) {
+    /// `item_b += alpha * t` for every item — the batch-shared bias add
+    /// (lane-chunked per item; bitwise equal to the scalar loop).
+    pub fn axpy_broadcast(&mut self, alpha: f64, t: &TensorOf<S>) {
         assert_eq!(self.n, t.n);
         assert_eq!(self.order, t.order);
+        let alpha = S::from_f64(alpha);
         let len = self.item_len();
         for chunk in self.data.chunks_mut(len) {
-            for (a, b) in chunk.iter_mut().zip(&t.data) {
-                *a += alpha * b;
-            }
+            axpy_slice(alpha, &t.data, chunk);
         }
     }
 
-    /// Max absolute difference from a same-shape batch.
-    pub fn max_abs_diff(&self, other: &BatchTensor) -> f64 {
+    /// Max absolute difference from a same-shape batch (computed in `S`,
+    /// reported in `f64`).
+    pub fn max_abs_diff(&self, other: &BatchTensorOf<S>) -> f64 {
         assert_eq!(self.n, other.n);
         assert_eq!(self.order, other.order);
         assert_eq!(self.batch, other.batch);
         self.data
             .iter()
             .zip(&other.data)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0, f64::max)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(S::ZERO, S::max)
+            .to_f64()
     }
 
     // -----------------------------------------------------------------
@@ -199,7 +215,7 @@ impl BatchTensor {
     // identical to the ops in `super::ops`, index maps are shared).
     // -----------------------------------------------------------------
 
-    fn check_like(&self, out: &BatchTensor, order: usize) {
+    fn check_like(&self, out: &BatchTensorOf<S>, order: usize) {
         assert_eq!(out.n, self.n);
         assert_eq!(out.order, order);
         assert_eq!(out.batch, self.batch);
@@ -220,16 +236,21 @@ impl BatchTensor {
         });
     }
 
-    /// Batched [`Tensor::permute_axes_into`]: the block map is built once,
-    /// every item is then a sequence of contiguous block copies.
-    pub fn permute_axes_into(&self, axes: &[usize], out: &mut BatchTensor) {
+    /// Batched [`TensorOf::permute_axes_into`]: the block map is built
+    /// once, every item is then a sequence of contiguous block copies.
+    pub fn permute_axes_into(&self, axes: &[usize], out: &mut BatchTensorOf<S>) {
         let (map, block) = permute_block_map(self.n, self.order, axes);
         self.permute_blocks_into(&map, block, out);
     }
 
-    /// Replay of [`BatchTensor::permute_axes_into`] off a precomputed block
-    /// map (built once per kernel plan by `fastmult::schedule`).
-    pub(crate) fn permute_blocks_into(&self, map: &[usize], block: usize, out: &mut BatchTensor) {
+    /// Replay of [`BatchTensorOf::permute_axes_into`] off a precomputed
+    /// block map (built once per kernel plan by `fastmult::schedule`).
+    pub(crate) fn permute_blocks_into(
+        &self,
+        map: &[usize],
+        block: usize,
+        out: &mut BatchTensorOf<S>,
+    ) {
         self.check_like(out, self.order);
         let len = self.item_len();
         for b in 0..self.batch {
@@ -243,7 +264,7 @@ impl BatchTensor {
         }
     }
 
-    /// Batched [`Tensor::contract_permuted_diagonal_into`]: the fused
+    /// Batched [`TensorOf::contract_permuted_diagonal_into`]: the fused
     /// permute-contract gather with one outer-offset table shared by every
     /// item; per item bitwise identical to the per-item fused kernel (and
     /// therefore to the materialised permute-then-contract composition).
@@ -251,7 +272,7 @@ impl BatchTensor {
         &self,
         axes: &[usize],
         m: usize,
-        out: &mut BatchTensor,
+        out: &mut BatchTensorOf<S>,
     ) {
         self.check_axes(axes);
         assert!(m >= 1 && m <= self.order);
@@ -262,13 +283,17 @@ impl BatchTensor {
         self.gather_contract_with(&base, dstride, out);
     }
 
-    /// Replay of [`BatchTensor::contract_permuted_diagonal_into`] off a
-    /// precomputed outer-offset table.
+    /// Replay of [`BatchTensorOf::contract_permuted_diagonal_into`] off a
+    /// precomputed outer-offset table. The table is swept in
+    /// [`GATHER_TILE`]-sized output tiles with the batch loop inside each
+    /// tile, so the tile stays L1-resident across all `B` items; outputs
+    /// are independent and each keeps its full `n`-term sum order, so
+    /// tiling is bitwise-neutral.
     pub(crate) fn gather_contract_with(
         &self,
         base: &[usize],
         dstride: usize,
-        out: &mut BatchTensor,
+        out: &mut BatchTensorOf<S>,
     ) {
         assert_eq!(out.n, self.n);
         assert_eq!(out.batch, self.batch);
@@ -276,23 +301,27 @@ impl BatchTensor {
         let ilen = self.item_len();
         let olen = out.item_len();
         debug_assert_eq!(base.len(), olen);
-        for b in 0..self.batch {
-            let src = &self.data[b * ilen..(b + 1) * ilen];
-            let dst = &mut out.data[b * olen..(b + 1) * olen];
-            for (slot, &bo) in dst.iter_mut().zip(base) {
-                let mut s = 0.0;
-                let mut off = bo;
-                for _ in 0..n {
-                    s += src[off];
-                    off += dstride;
+        for (t, tile) in base.chunks(GATHER_TILE).enumerate() {
+            let obase = t * GATHER_TILE;
+            for b in 0..self.batch {
+                let src = &self.data[b * ilen..(b + 1) * ilen];
+                let start = b * olen + obase;
+                let dst = &mut out.data[start..start + tile.len()];
+                for (slot, &bo) in dst.iter_mut().zip(tile) {
+                    let mut s = S::ZERO;
+                    let mut off = bo;
+                    for _ in 0..n {
+                        s += src[off];
+                        off += dstride;
+                    }
+                    *slot = s;
                 }
-                *slot = s;
             }
         }
     }
 
-    /// Batched [`Tensor::trace_permuted_pair_eps_into`].
-    pub fn trace_permuted_pair_eps_into(&self, axes: &[usize], out: &mut BatchTensor) {
+    /// Batched [`TensorOf::trace_permuted_pair_eps_into`].
+    pub fn trace_permuted_pair_eps_into(&self, axes: &[usize], out: &mut BatchTensorOf<S>) {
         self.check_axes(axes);
         assert!(self.order >= 2);
         assert_eq!(self.n % 2, 0, "Sp(n) requires even n");
@@ -304,14 +333,15 @@ impl BatchTensor {
         self.gather_eps_trace_with(&base, sa, sb, out);
     }
 
-    /// Replay of [`BatchTensor::trace_permuted_pair_eps_into`] off a
-    /// precomputed outer-offset table plus the traced axes' strides.
+    /// Replay of [`BatchTensorOf::trace_permuted_pair_eps_into`] off a
+    /// precomputed outer-offset table plus the traced axes' strides;
+    /// L1-tiled the same way as [`BatchTensorOf::gather_contract_with`].
     pub(crate) fn gather_eps_trace_with(
         &self,
         base: &[usize],
         sa: usize,
         sb: usize,
-        out: &mut BatchTensor,
+        out: &mut BatchTensorOf<S>,
     ) {
         assert_eq!(out.n, self.n);
         assert_eq!(out.batch, self.batch);
@@ -319,27 +349,31 @@ impl BatchTensor {
         let ilen = self.item_len();
         let olen = out.item_len();
         debug_assert_eq!(base.len(), olen);
-        for b in 0..self.batch {
-            let src = &self.data[b * ilen..(b + 1) * ilen];
-            let dst = &mut out.data[b * olen..(b + 1) * olen];
-            for (slot, &bo) in dst.iter_mut().zip(base) {
-                let mut s = 0.0;
-                for i in 0..n / 2 {
-                    let p = 2 * i;
-                    let q = 2 * i + 1;
-                    s += src[bo + p * sa + q * sb] - src[bo + q * sa + p * sb];
+        for (t, tile) in base.chunks(GATHER_TILE).enumerate() {
+            let obase = t * GATHER_TILE;
+            for b in 0..self.batch {
+                let src = &self.data[b * ilen..(b + 1) * ilen];
+                let start = b * olen + obase;
+                let dst = &mut out.data[start..start + tile.len()];
+                for (slot, &bo) in dst.iter_mut().zip(tile) {
+                    let mut s = S::ZERO;
+                    for i in 0..n / 2 {
+                        let p = 2 * i;
+                        let q = 2 * i + 1;
+                        s += src[bo + p * sa + q * sb] - src[bo + q * sa + p * sb];
+                    }
+                    *slot = s;
                 }
-                *slot = s;
             }
         }
     }
 
-    /// Batched [`Tensor::extract_permuted_group_diagonals_into`].
+    /// Batched [`TensorOf::extract_permuted_group_diagonals_into`].
     pub fn extract_permuted_group_diagonals_into(
         &self,
         axes: &[usize],
         groups: &[usize],
-        out: &mut BatchTensor,
+        out: &mut BatchTensorOf<S>,
     ) {
         self.check_axes(axes);
         self.check_like(out, groups.len());
@@ -349,7 +383,7 @@ impl BatchTensor {
 
     /// Pure gather replay, one offset table shared by every item (group-
     /// diagonal extraction, permuted or not).
-    pub(crate) fn gather_with(&self, offs: &[usize], out: &mut BatchTensor) {
+    pub(crate) fn gather_with(&self, offs: &[usize], out: &mut BatchTensorOf<S>) {
         assert_eq!(out.n, self.n);
         assert_eq!(out.batch, self.batch);
         let ilen = self.item_len();
@@ -365,10 +399,12 @@ impl BatchTensor {
     }
 
     /// Single-pattern sink replay off a precomputed destination map, per
-    /// item: the batched twin of [`Tensor::axpy_dsts_into`].
-    pub(crate) fn axpy_dsts_into(&self, dsts: &[usize], alpha: f64, out: &mut BatchTensor) {
+    /// item: the batched twin of [`TensorOf::axpy_dsts_into`]. Contiguous
+    /// (ramp) destination maps route through the lane-chunked axpy.
+    pub(crate) fn axpy_dsts_into(&self, dsts: &[usize], alpha: f64, out: &mut BatchTensorOf<S>) {
         assert_eq!(out.n, self.n);
         assert_eq!(out.batch, self.batch);
+        let alpha = S::from_f64(alpha);
         let ilen = self.item_len();
         let olen = out.item_len();
         debug_assert_eq!(dsts.len() % ilen.max(1), 0);
@@ -376,15 +412,19 @@ impl BatchTensor {
             let src = &self.data[b * ilen..(b + 1) * ilen];
             let dst = &mut out.data[b * olen..(b + 1) * olen];
             for rep in dsts.chunks(ilen) {
-                for (&d, &x) in rep.iter().zip(src) {
-                    dst[d] += alpha * x;
+                if let Some(d0) = ramp_base(rep) {
+                    axpy_slice(alpha, src, &mut dst[d0..d0 + rep.len()]);
+                } else {
+                    for (&d, &x) in rep.iter().zip(src) {
+                        dst[d] += alpha * x;
+                    }
                 }
             }
         }
     }
 
-    /// Batched [`Tensor::contract_trailing_diagonal_into`].
-    pub fn contract_trailing_diagonal_into(&self, m: usize, out: &mut BatchTensor) {
+    /// Batched [`TensorOf::contract_trailing_diagonal_into`].
+    pub fn contract_trailing_diagonal_into(&self, m: usize, out: &mut BatchTensorOf<S>) {
         assert!(m >= 1 && m <= self.order);
         self.check_like(out, self.order - m);
         let n = self.n;
@@ -398,7 +438,7 @@ impl BatchTensor {
             let src = &self.data[b * ilen..(b + 1) * ilen];
             let dst = &mut out.data[b * olen..(b + 1) * olen];
             for (o, slot) in dst.iter_mut().enumerate().take(outer) {
-                let mut s = 0.0;
+                let mut s = S::ZERO;
                 let mut off = o * block;
                 for _ in 0..n {
                     s += src[off];
@@ -409,13 +449,13 @@ impl BatchTensor {
         }
     }
 
-    /// Batched [`Tensor::trace_trailing_pair_into`].
-    pub fn trace_trailing_pair_into(&self, out: &mut BatchTensor) {
+    /// Batched [`TensorOf::trace_trailing_pair_into`].
+    pub fn trace_trailing_pair_into(&self, out: &mut BatchTensorOf<S>) {
         self.contract_trailing_diagonal_into(2, out)
     }
 
-    /// Batched [`Tensor::trace_trailing_pair_eps_into`].
-    pub fn trace_trailing_pair_eps_into(&self, out: &mut BatchTensor) {
+    /// Batched [`TensorOf::trace_trailing_pair_eps_into`].
+    pub fn trace_trailing_pair_eps_into(&self, out: &mut BatchTensorOf<S>) {
         assert!(self.order >= 2);
         self.check_like(out, self.order - 2);
         let n = self.n;
@@ -429,7 +469,7 @@ impl BatchTensor {
             let dst = &mut out.data[b * olen..(b + 1) * olen];
             for (o, slot) in dst.iter_mut().enumerate().take(outer) {
                 let base = o * block;
-                let mut s = 0.0;
+                let mut s = S::ZERO;
                 for i in 0..n / 2 {
                     let p = 2 * i;
                     let q = 2 * i + 1;
@@ -440,9 +480,10 @@ impl BatchTensor {
         }
     }
 
-    /// Batched [`Tensor::levi_civita_contract_trailing_into`]: the signed
-    /// permutation table and its flat offsets are built once for all items.
-    pub fn levi_civita_contract_trailing_into(&self, s: usize, out: &mut BatchTensor) {
+    /// Batched [`TensorOf::levi_civita_contract_trailing_into`]: the
+    /// signed permutation table and its flat offsets are built once for all
+    /// items.
+    pub fn levi_civita_contract_trailing_into(&self, s: usize, out: &mut BatchTensorOf<S>) {
         let n = self.n;
         assert!(s <= n);
         let nb = n - s;
@@ -451,18 +492,19 @@ impl BatchTensor {
         self.levi_civita_entries_into(s, &entries, out);
     }
 
-    /// Replay of [`BatchTensor::levi_civita_contract_trailing_into`] off a
-    /// precomputed signed-permutation offset table (see
+    /// Replay of [`BatchTensorOf::levi_civita_contract_trailing_into`] off
+    /// a precomputed signed-permutation offset table (see
     /// [`levi_civita_entries`]); scatters, so each item is zeroed first.
     pub(crate) fn levi_civita_entries_into(
         &self,
         s: usize,
         entries: &[(usize, usize, f64)],
-        out: &mut BatchTensor,
+        out: &mut BatchTensorOf<S>,
     ) {
         let n = self.n;
         let nb = n - s;
         self.check_like(out, self.order - nb + s);
+        let signs: Vec<S> = entries.iter().map(|&(_, _, sg)| S::from_f64(sg)).collect();
         let keep = self.order - nb;
         let in_block = n.pow(nb as u32);
         let out_block = n.pow(s as u32);
@@ -472,28 +514,30 @@ impl BatchTensor {
         for b in 0..self.batch {
             let src = &self.data[b * ilen..(b + 1) * ilen];
             let dst = &mut out.data[b * olen..(b + 1) * olen];
-            dst.fill(0.0);
+            dst.fill(S::ZERO);
             for o in 0..outer {
                 let in_base = o * in_block;
                 let out_base = o * out_block;
-                for &(t_off, b_off, sign) in entries {
+                for (&(t_off, b_off, _), &sign) in entries.iter().zip(&signs) {
                     dst[out_base + t_off] += sign * src[in_base + b_off];
                 }
             }
         }
     }
 
-    /// Batched [`Tensor::extract_group_diagonals_into`]: one gather-offset
-    /// map shared by every item.
-    pub fn extract_group_diagonals_into(&self, groups: &[usize], out: &mut BatchTensor) {
+    /// Batched [`TensorOf::extract_group_diagonals_into`]: one gather-
+    /// offset map shared by every item.
+    pub fn extract_group_diagonals_into(&self, groups: &[usize], out: &mut BatchTensorOf<S>) {
         self.check_like(out, groups.len());
         let offs = group_diag_offsets(self.n, self.order, groups);
         self.gather_with(&offs, out);
     }
 
-    /// Batched [`Tensor::axpy_permuted_into`], via the shared block map.
-    pub fn axpy_permuted_into(&self, alpha: f64, axes: &[usize], out: &mut BatchTensor) {
+    /// Batched [`TensorOf::axpy_permuted_into`], via the shared block map;
+    /// each contiguous block tail goes through the lane-chunked axpy.
+    pub fn axpy_permuted_into(&self, alpha: f64, axes: &[usize], out: &mut BatchTensorOf<S>) {
         self.check_like(out, self.order);
+        let alpha = S::from_f64(alpha);
         let (map, block) = permute_block_map(self.n, self.order, axes);
         let len = self.item_len();
         for b in 0..self.batch {
@@ -501,24 +545,22 @@ impl BatchTensor {
             let dst = &mut out.data[b * len..(b + 1) * len];
             let mut d = 0usize;
             for &s in &map {
-                for j in 0..block {
-                    dst[d + j] += alpha * src[s + j];
-                }
+                axpy_slice(alpha, &src[s..s + block], &mut dst[d..d + block]);
                 d += block;
             }
         }
     }
 
-    /// Batched [`Tensor::axpy_permuted_multi_into`]: one destination map
+    /// Batched [`TensorOf::axpy_permuted_multi_into`]: one destination map
     /// per pattern, built once and replayed over every item. Per item the
     /// arithmetic (source-major, pattern-inner) is exactly that of the
     /// per-item multi kernel, so batched folded-class execution stays
     /// bitwise identical per item to the per-item folded walk. A
     /// single-pattern class delegates to the blocked
-    /// [`BatchTensor::axpy_permuted_into`] (bitwise exact — one
+    /// [`BatchTensorOf::axpy_permuted_into`] (bitwise exact — one
     /// contribution per destination either way), skipping the per-pattern
     /// map indirection.
-    pub fn axpy_permuted_multi_into(&self, pats: &[(&[usize], f64)], out: &mut BatchTensor) {
+    pub fn axpy_permuted_multi_into(&self, pats: &[(&[usize], f64)], out: &mut BatchTensorOf<S>) {
         self.check_like(out, self.order);
         if pats.is_empty() {
             return;
@@ -526,6 +568,7 @@ impl BatchTensor {
         if let [(axes, alpha)] = pats {
             return self.axpy_permuted_into(*alpha, axes, out);
         }
+        let ws: Vec<S> = pats.iter().map(|&(_, alpha)| S::from_f64(alpha)).collect();
         let maps: Vec<Vec<usize>> = pats
             .iter()
             .map(|(axes, _)| permute_dst_map(self.n, self.order, axes))
@@ -535,14 +578,14 @@ impl BatchTensor {
             let src = &self.data[b * len..(b + 1) * len];
             let dst = &mut out.data[b * len..(b + 1) * len];
             for (s, &x) in src.iter().enumerate() {
-                for (map, &(_, alpha)) in maps.iter().zip(pats) {
-                    dst[map[s]] += alpha * x;
+                for (map, &w) in maps.iter().zip(&ws) {
+                    dst[map[s]] += w * x;
                 }
             }
         }
     }
 
-    /// Batched [`Tensor::scatter_broadcast_diagonals_multi_axpy`]: one
+    /// Batched [`TensorOf::scatter_broadcast_diagonals_multi_axpy`]: one
     /// diagonal-support destination map per pattern, shared by every item.
     /// Per item the visit order (rep-major, source-inner, pattern-inner)
     /// matches the per-item multi kernel exactly.
@@ -551,7 +594,7 @@ impl BatchTensor {
         lead_groups: &[usize],
         tail_groups: &[usize],
         pats: &[(&[usize], f64)],
-        out: &mut BatchTensor,
+        out: &mut BatchTensorOf<S>,
     ) {
         assert_eq!(tail_groups.len(), self.order);
         if pats.is_empty() {
@@ -561,6 +604,7 @@ impl BatchTensor {
         assert_eq!(out.order, total);
         assert_eq!(out.n, self.n);
         assert_eq!(out.batch, self.batch);
+        let ws: Vec<S> = pats.iter().map(|&(_, alpha)| S::from_f64(alpha)).collect();
         let maps: Vec<Vec<usize>> = pats
             .iter()
             .map(|(axes, _)| scatter_diag_dsts(self.n, lead_groups, tail_groups, axes))
@@ -574,24 +618,25 @@ impl BatchTensor {
             for r in 0..reps {
                 let base = r * tail_len;
                 for (s, &x) in src.iter().enumerate() {
-                    for (map, &(_, alpha)) in maps.iter().zip(pats) {
-                        dst[map[base + s]] += alpha * x;
+                    for (map, &w) in maps.iter().zip(&ws) {
+                        dst[map[base + s]] += w * x;
                     }
                 }
             }
         }
     }
 
-    /// Batched [`Tensor::scatter_broadcast_diagonals_axpy`]: the
+    /// Batched [`TensorOf::scatter_broadcast_diagonals_axpy`]: the
     /// diagonal-support destination offsets are computed once; each item is
-    /// then a blocked axpy over `B · n^{t+d}` contiguous source lanes.
+    /// then a blocked axpy over `B · n^{t+d}` contiguous source lanes, with
+    /// ramp destination maps routed through the lane-chunked axpy.
     pub fn scatter_broadcast_diagonals_axpy(
         &self,
         lead_groups: &[usize],
         tail_groups: &[usize],
         axes: &[usize],
         alpha: f64,
-        out: &mut BatchTensor,
+        out: &mut BatchTensorOf<S>,
     ) {
         assert_eq!(tail_groups.len(), self.order);
         let total: usize = lead_groups.iter().sum::<usize>() + tail_groups.iter().sum::<usize>();
@@ -599,6 +644,7 @@ impl BatchTensor {
         assert_eq!(out.order, total);
         assert_eq!(out.n, self.n);
         assert_eq!(out.batch, self.batch);
+        let alpha = S::from_f64(alpha);
         let dsts = scatter_diag_dsts(self.n, lead_groups, tail_groups, axes);
         let tail_len = self.item_len();
         let ilen = tail_len;
@@ -607,8 +653,12 @@ impl BatchTensor {
             let src = &self.data[b * ilen..(b + 1) * ilen];
             let dst = &mut out.data[b * olen..(b + 1) * olen];
             for rep in dsts.chunks(tail_len) {
-                for (&d, &x) in rep.iter().zip(src) {
-                    dst[d] += alpha * x;
+                if let Some(d0) = ramp_base(rep) {
+                    axpy_slice(alpha, src, &mut dst[d0..d0 + rep.len()]);
+                } else {
+                    for (&d, &x) in rep.iter().zip(src) {
+                        dst[d] += alpha * x;
+                    }
                 }
             }
         }
@@ -618,6 +668,7 @@ impl BatchTensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Tensor;
     use crate::util::Rng;
 
     fn random_batch(n: usize, order: usize, b: usize, rng: &mut Rng) -> (Vec<Tensor>, BatchTensor) {
@@ -825,6 +876,29 @@ mod tests {
             let mut want = t.clone();
             want.axpy(2.0, &bias);
             assert!(packed.item_tensor(b).allclose(&want, 0.0));
+        }
+    }
+
+    /// The generic batch kernels instantiated at `f32` track the `f64`
+    /// reference within the scaled tolerance (same inputs narrowed once).
+    #[test]
+    fn f32_batch_tracks_f64_within_tolerance() {
+        let mut rng = Rng::new(1007);
+        let (_, packed) = random_batch(3, 4, 3, &mut rng);
+        let packed32 = BatchTensorOf::<f32>::from_raw(
+            3,
+            4,
+            3,
+            packed.data().iter().map(|&x| x as f32).collect(),
+        );
+        let axes = [2usize, 0, 3, 1];
+        let mut out64 = BatchTensor::zeros(3, 2, 3);
+        packed.contract_permuted_diagonal_into(&axes, 2, &mut out64);
+        let mut out32 = BatchTensorOf::<f32>::zeros(3, 2, 3);
+        packed32.contract_permuted_diagonal_into(&axes, 2, &mut out32);
+        let tol = <f32 as Scalar>::TOLERANCE * 16.0;
+        for (a, b) in out64.data().iter().zip(out32.data()) {
+            assert!((a - *b as f64).abs() <= tol, "{a} vs {b}");
         }
     }
 }

@@ -4,29 +4,44 @@
 //! here is a cube: `order` axes, each of extent `n`, stored row-major. The
 //! module provides exactly the primitives Algorithm 1 needs:
 //!
-//! - axis permutation ([`Tensor::permute_axes`]) — the `Permute` procedure,
-//! - trailing diagonal contraction ([`Tensor::contract_trailing_diagonal`])
-//!   — S_n Step 1 (eq. 98),
-//! - trailing pair trace ([`Tensor::trace_trailing_pair`]) — O(n)/SO(n)
+//! - axis permutation ([`TensorOf::permute_axes`]) — the `Permute`
+//!   procedure,
+//! - trailing diagonal contraction
+//!   ([`TensorOf::contract_trailing_diagonal`]) — S_n Step 1 (eq. 98),
+//! - trailing pair trace ([`TensorOf::trace_trailing_pair`]) — O(n)/SO(n)
 //!   Step 1 (eq. 122),
-//! - ε-weighted pair trace ([`Tensor::trace_trailing_pair_eps`]) — Sp(n)
+//! - ε-weighted pair trace ([`TensorOf::trace_trailing_pair_eps`]) — Sp(n)
 //!   Step 1 (eq. 138),
-//! - Levi-Civita contraction ([`Tensor::levi_civita_contract_trailing`]) —
-//!   SO(n) free-vertex Step 1 (eq. 157),
-//! - group-diagonal extraction ([`Tensor::extract_group_diagonals`]) — S_n
-//!   Step 2 transfer (eq. 101),
+//! - Levi-Civita contraction
+//!   ([`TensorOf::levi_civita_contract_trailing`]) — SO(n) free-vertex
+//!   Step 1 (eq. 157),
+//! - group-diagonal extraction ([`TensorOf::extract_group_diagonals`]) —
+//!   S_n Step 2 transfer (eq. 101),
 //! - mode product ([`Tensor::mode_apply`]) — the group action `ρ_k(g)` used
 //!   by the equivariance tests,
 //! - the contiguous `[B, n^k]` batch layout ([`BatchTensor`]) with batched
 //!   variants of every kernel above, sharing one precomputed index map
 //!   across all `B` items (see `docs/batched_execution.md`).
+//!
+//! The whole stack is generic over the sealed [`Scalar`] trait (`f64` and
+//! `f32`, see `docs/scalar_precision.md`): [`TensorOf<S>`] is the generic
+//! struct, and the [`Tensor`] / [`BatchTensor`] aliases pin `S = f64` so
+//! existing call sites read unchanged. Weights and coefficients stay `f64`
+//! masters everywhere; kernels convert them once per invocation via
+//! [`Scalar::from_f64`], which for `S = f64` is the identity — the `f64`
+//! instantiation is bitwise identical to the historical hard-coded path.
 
 mod batch;
 mod index;
 mod ops;
+mod scalar;
 
-pub use batch::BatchTensor;
+pub use batch::{BatchTensor, BatchTensorOf};
 pub use index::{flat_index, unflat_index, MultiIndexIter};
+pub use scalar::{Precision, Scalar};
+// Lane-chunked elementwise helpers and the ramp detector, shared with the
+// schedule executor's scatter fast paths.
+pub(crate) use scalar::{axpy_slice, ramp_base, scale_slice};
 // Index-map builders shared with the schedule compiler's kernel plans
 // (`fastmult::schedule` precomputes every table once per compiled schedule
 // and replays it on the warm path).
@@ -38,26 +53,30 @@ pub(crate) use ops::{
 use crate::error::{Error, Result};
 use crate::util::Rng;
 
-/// A dense element of `(R^n)^{⊗order}` stored row-major
-/// (axis 0 is the slowest-varying index).
+/// A dense element of `(R^n)^{⊗order}` over scalar type `S`, stored
+/// row-major (axis 0 is the slowest-varying index).
 #[derive(Debug, Clone, PartialEq)]
-pub struct Tensor {
+pub struct TensorOf<S: Scalar> {
     /// Extent of every axis.
     pub n: usize,
     /// Number of axes `k` (the tensor power order). `order == 0` is the
     /// scalar space `R`.
     pub order: usize,
     /// Row-major coefficients, `len == n.pow(order)`.
-    pub data: Vec<f64>,
+    pub data: Vec<S>,
 }
 
-impl Tensor {
+/// The training-precision tensor — the alias the rest of the crate (and
+/// every pre-existing call site) uses.
+pub type Tensor = TensorOf<f64>;
+
+impl<S: Scalar> TensorOf<S> {
     /// All-zeros tensor.
     pub fn zeros(n: usize, order: usize) -> Self {
-        Tensor {
+        TensorOf {
             n,
             order,
-            data: vec![0.0; n.pow(order as u32)],
+            data: vec![S::ZERO; n.pow(order as u32)],
         }
     }
 
@@ -66,25 +85,27 @@ impl Tensor {
     pub fn linspace(n: usize, order: usize) -> Self {
         let len = n.pow(order as u32);
         let denom = (len.max(2) - 1) as f64;
-        Tensor {
+        TensorOf {
             n,
             order,
-            data: (0..len).map(|i| i as f64 / denom).collect(),
+            data: (0..len).map(|i| S::from_f64(i as f64 / denom)).collect(),
         }
     }
 
-    /// Tensor with iid standard-normal entries.
+    /// Tensor with iid standard-normal entries (drawn in `f64`, then
+    /// narrowed — so an `f32` tensor holds the rounded values of the `f64`
+    /// tensor the same seed produces).
     pub fn random(n: usize, order: usize, rng: &mut Rng) -> Self {
         let len = n.pow(order as u32);
-        Tensor {
+        TensorOf {
             n,
             order,
-            data: rng.gaussian_vec(len),
+            data: rng.gaussian_vec(len).into_iter().map(S::from_f64).collect(),
         }
     }
 
     /// Wrap an existing buffer.
-    pub fn from_vec(n: usize, order: usize, data: Vec<f64>) -> Result<Self> {
+    pub fn from_vec(n: usize, order: usize, data: Vec<S>) -> Result<Self> {
         let expect = n.pow(order as u32);
         if data.len() != expect {
             return Err(Error::ShapeMismatch {
@@ -92,7 +113,21 @@ impl Tensor {
                 got: format!("{}", data.len()),
             });
         }
-        Ok(Tensor { n, order, data })
+        Ok(TensorOf { n, order, data })
+    }
+
+    /// Elementwise narrowing/widening conversion to another scalar type
+    /// (via `f64`, so `f32 → f64` is exact and `f64 → f32` rounds once).
+    pub fn cast<T: Scalar>(&self) -> TensorOf<T> {
+        TensorOf {
+            n: self.n,
+            order: self.order,
+            data: self
+                .data
+                .iter()
+                .map(|&x| T::from_f64(x.to_f64()))
+                .collect(),
+        }
     }
 
     /// Number of coefficients, `n^order`.
@@ -109,13 +144,13 @@ impl Tensor {
 
     /// Coefficient at a multi-index.
     #[inline]
-    pub fn get(&self, idx: &[usize]) -> f64 {
+    pub fn get(&self, idx: &[usize]) -> S {
         self.data[flat_index(self.n, idx)]
     }
 
     /// Assign the coefficient at a multi-index.
     #[inline]
-    pub fn set(&mut self, idx: &[usize], v: f64) {
+    pub fn set(&mut self, idx: &[usize], v: S) {
         let f = flat_index(self.n, idx);
         self.data[f] = v;
     }
@@ -125,47 +160,53 @@ impl Tensor {
         MultiIndexIter::new(self.n, self.order)
     }
 
-    /// Max absolute difference against another tensor of the same shape.
-    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+    /// Max absolute difference against another tensor of the same shape
+    /// (computed in `S`, reported in `f64`).
+    pub fn max_abs_diff(&self, other: &TensorOf<S>) -> f64 {
         assert_eq!(self.n, other.n);
         assert_eq!(self.order, other.order);
         self.data
             .iter()
             .zip(&other.data)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0, f64::max)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(S::ZERO, S::max)
+            .to_f64()
     }
 
     /// Approximate equality within `tol` (absolute, entrywise).
-    pub fn allclose(&self, other: &Tensor, tol: f64) -> bool {
+    pub fn allclose(&self, other: &TensorOf<S>, tol: f64) -> bool {
         self.n == other.n && self.order == other.order && self.max_abs_diff(other) <= tol
     }
 
-    /// Euclidean norm of the coefficient vector.
+    /// Euclidean norm of the coefficient vector (accumulated in `S`, root
+    /// taken in `f64`).
     pub fn norm(&self) -> f64 {
-        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+        self.data.iter().map(|&x| x * x).sum::<S>().to_f64().sqrt()
     }
 
-    /// Scale in place.
+    /// Scale in place (lane-chunked; bitwise equal to the scalar loop).
     pub fn scale(&mut self, s: f64) {
-        for x in &mut self.data {
-            *x *= s;
-        }
+        scale_slice(S::from_f64(s), &mut self.data);
     }
 
-    /// `self += alpha * other` (shapes must match).
-    pub fn axpy(&mut self, alpha: f64, other: &Tensor) {
+    /// `self += alpha * other` (shapes must match; lane-chunked, bitwise
+    /// equal to the scalar loop).
+    pub fn axpy(&mut self, alpha: f64, other: &TensorOf<S>) {
         assert_eq!(self.n, other.n);
         assert_eq!(self.order, other.order);
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += alpha * b;
-        }
+        axpy_slice(S::from_f64(alpha), &other.data, &mut self.data);
     }
 
-    /// Inner product of coefficient vectors.
-    pub fn dot(&self, other: &Tensor) -> f64 {
+    /// Inner product of coefficient vectors (accumulated in `S` in element
+    /// order, reported in `f64`).
+    pub fn dot(&self, other: &TensorOf<S>) -> f64 {
         assert_eq!(self.len(), other.len());
-        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a * b)
+            .sum::<S>()
+            .to_f64()
     }
 }
 
@@ -216,5 +257,32 @@ mod tests {
         a.axpy(2.0, &b);
         assert_eq!(a.data, vec![6.0, 8.0]);
         assert!((a.norm() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_tensor_roundtrips_through_cast() {
+        let a = Tensor::linspace(3, 2);
+        let b: TensorOf<f32> = a.cast();
+        let c: Tensor = b.cast();
+        assert_eq!(b.n, 3);
+        assert_eq!(b.order, 2);
+        // f64 → f32 → f64 keeps every linspace value within f32 tolerance.
+        assert!(a.allclose(&c, f32::TOLERANCE));
+    }
+
+    #[test]
+    fn generic_reductions_match_f64_reference() {
+        let a32: TensorOf<f32> = Tensor::linspace(2, 3).cast();
+        let b32: TensorOf<f32> = {
+            let mut b = Tensor::linspace(2, 3);
+            b.scale(-0.5);
+            b.cast()
+        };
+        let dot = a32.dot(&b32);
+        let mut want = 0.0f32;
+        for (&x, &y) in a32.data.iter().zip(&b32.data) {
+            want += x * y;
+        }
+        assert_eq!(dot, want as f64);
     }
 }

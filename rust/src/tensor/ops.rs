@@ -6,9 +6,10 @@
 //! optimisation the paper's "algorithmically planar" layout buys.
 
 use super::index::flat_index;
-use super::Tensor;
+use super::scalar::{axpy_slice, ramp_base};
+use super::{Scalar, TensorOf};
 
-impl Tensor {
+impl<S: Scalar> TensorOf<S> {
     /// Axis permutation (the paper's `Permute`, eq. 90, as a memory move).
     ///
     /// numpy `transpose` semantics: output axis `q` carries input axis
@@ -18,7 +19,7 @@ impl Tensor {
     /// zero-fill pass, and any unmoved trailing axes are copied as whole
     /// contiguous blocks (the blocked kernel — one `memcpy` per leading
     /// multi-index instead of an elementwise odometer).
-    pub fn permute_axes(&self, axes: &[usize]) -> Tensor {
+    pub fn permute_axes(&self, axes: &[usize]) -> TensorOf<S> {
         self.check_axes(axes);
         // Identity fast path — common when Factor finds the diagram already
         // planar (e.g. every cross-only Brauer diagram).
@@ -27,7 +28,7 @@ impl Tensor {
         }
         let mut data = Vec::with_capacity(self.data.len());
         self.permute_scan(axes, |block| data.extend_from_slice(block));
-        Tensor {
+        TensorOf {
             n: self.n,
             order: self.order,
             data,
@@ -37,7 +38,7 @@ impl Tensor {
     /// [`Tensor::permute_axes`] into a caller-provided buffer (typically a
     /// recycled [`crate::fastmult::ScratchArena`] tensor). Every element of
     /// `out` is overwritten, so stale contents are fine.
-    pub fn permute_axes_into(&self, axes: &[usize], out: &mut Tensor) {
+    pub fn permute_axes_into(&self, axes: &[usize], out: &mut TensorOf<S>) {
         self.check_axes(axes);
         assert_eq!(out.n, self.n);
         assert_eq!(out.order, self.order);
@@ -68,7 +69,7 @@ impl Tensor {
     /// order, emitting maximal contiguous source blocks. The longest suffix
     /// of unmoved axes (`axes[q] == q`) forms a contiguous block in both
     /// layouts, so only the leading axes need the odometer.
-    fn permute_scan(&self, axes: &[usize], mut emit: impl FnMut(&[f64])) {
+    fn permute_scan(&self, axes: &[usize], mut emit: impl FnMut(&[S])) {
         let n = self.n;
         let order = self.order;
         let mut tail = 0usize;
@@ -120,11 +121,11 @@ impl Tensor {
     ///
     /// Cost: `n^{order-m} · n` multiplications-equivalents — the paper's
     /// eq. (115) term for one bottom-row block of size `m`.
-    pub fn contract_trailing_diagonal(&self, m: usize) -> Tensor {
+    pub fn contract_trailing_diagonal(&self, m: usize) -> TensorOf<S> {
         let keep = self.order.checked_sub(m).expect("m must be <= order");
         let mut data = Vec::with_capacity(self.n.pow(keep as u32));
         self.contract_diagonal_scan(m, |s| data.push(s));
-        Tensor {
+        TensorOf {
             n: self.n,
             order: keep,
             data,
@@ -133,7 +134,7 @@ impl Tensor {
 
     /// [`Tensor::contract_trailing_diagonal`] into a caller-provided buffer
     /// (write-once: every element of `out` is overwritten).
-    pub fn contract_trailing_diagonal_into(&self, m: usize, out: &mut Tensor) {
+    pub fn contract_trailing_diagonal_into(&self, m: usize, out: &mut TensorOf<S>) {
         assert_eq!(out.n, self.n);
         assert_eq!(out.order, self.order - m);
         let mut slots = out.data.iter_mut();
@@ -142,7 +143,7 @@ impl Tensor {
         });
     }
 
-    fn contract_diagonal_scan(&self, m: usize, mut emit: impl FnMut(f64)) {
+    fn contract_diagonal_scan(&self, m: usize, mut emit: impl FnMut(S)) {
         assert!(m >= 1 && m <= self.order);
         let n = self.n;
         let keep = self.order - m;
@@ -150,7 +151,7 @@ impl Tensor {
         // Diagonal stride within the trailing block: 1 + n + … + n^{m-1}.
         let dstride: usize = (0..m).map(|a| n.pow(a as u32)).sum();
         for o in 0..n.pow(keep as u32) {
-            let mut s = 0.0;
+            let mut s = S::ZERO;
             let mut off = o * block;
             for _ in 0..n {
                 s += self.data[off];
@@ -162,12 +163,12 @@ impl Tensor {
 
     /// O(n)/SO(n) Step-1 pair contraction (eq. 122): trace over the two
     /// trailing axes. `out[M] = Σ_j self[M, j, j]`.
-    pub fn trace_trailing_pair(&self) -> Tensor {
+    pub fn trace_trailing_pair(&self) -> TensorOf<S> {
         self.contract_trailing_diagonal(2)
     }
 
     /// [`Tensor::trace_trailing_pair`] into a caller-provided buffer.
-    pub fn trace_trailing_pair_into(&self, out: &mut Tensor) {
+    pub fn trace_trailing_pair_into(&self, out: &mut TensorOf<S>) {
         self.contract_trailing_diagonal_into(2, out)
     }
 
@@ -175,11 +176,11 @@ impl Tensor {
     /// two trailing axes, `out[M] = Σ_{j1 j2} ε_{j1 j2} self[M, j1, j2]`,
     /// with the symplectic form in the interleaved basis
     /// `1, 1', 2, 2', …, m, m'`: `ε_{2i, 2i+1} = +1`, `ε_{2i+1, 2i} = -1`.
-    pub fn trace_trailing_pair_eps(&self) -> Tensor {
+    pub fn trace_trailing_pair_eps(&self) -> TensorOf<S> {
         let keep = self.order.checked_sub(2).expect("order must be >= 2");
         let mut data = Vec::with_capacity(self.n.pow(keep as u32));
         self.trace_eps_scan(|s| data.push(s));
-        Tensor {
+        TensorOf {
             n: self.n,
             order: keep,
             data,
@@ -188,7 +189,7 @@ impl Tensor {
 
     /// [`Tensor::trace_trailing_pair_eps`] into a caller-provided buffer
     /// (write-once: every element of `out` is overwritten).
-    pub fn trace_trailing_pair_eps_into(&self, out: &mut Tensor) {
+    pub fn trace_trailing_pair_eps_into(&self, out: &mut TensorOf<S>) {
         assert_eq!(out.n, self.n);
         assert_eq!(out.order, self.order - 2);
         let mut slots = out.data.iter_mut();
@@ -197,7 +198,7 @@ impl Tensor {
         });
     }
 
-    fn trace_eps_scan(&self, mut emit: impl FnMut(f64)) {
+    fn trace_eps_scan(&self, mut emit: impl FnMut(S)) {
         assert!(self.order >= 2);
         let n = self.n;
         assert_eq!(n % 2, 0, "Sp(n) requires even n");
@@ -205,7 +206,7 @@ impl Tensor {
         let block = n * n;
         for o in 0..n.pow(keep as u32) {
             let base = o * block;
-            let mut s = 0.0;
+            let mut s = S::ZERO;
             for i in 0..n / 2 {
                 let a = 2 * i;
                 let b = 2 * i + 1;
@@ -224,12 +225,12 @@ impl Tensor {
     /// Implemented by iterating the `n!` permutations of `[n]` with their
     /// signs — exactly the `n!/(n-s)!` valid `T`-tuples × `(n-s)!` terms the
     /// paper counts in eq. (168).
-    pub fn levi_civita_contract_trailing(&self, s: usize) -> Tensor {
+    pub fn levi_civita_contract_trailing(&self, s: usize) -> TensorOf<S> {
         let n = self.n;
         assert!(s <= n);
         let nb = n - s;
         assert!(nb <= self.order);
-        let mut out = Tensor::zeros(n, self.order - nb + s);
+        let mut out = TensorOf::zeros(n, self.order - nb + s);
         self.levi_civita_accumulate(s, &mut out);
         out
     }
@@ -237,18 +238,18 @@ impl Tensor {
     /// [`Tensor::levi_civita_contract_trailing`] into a caller-provided
     /// buffer. Unlike the write-once primitives this op scatters (`+=`)
     /// into its output, so the buffer is zeroed first.
-    pub fn levi_civita_contract_trailing_into(&self, s: usize, out: &mut Tensor) {
+    pub fn levi_civita_contract_trailing_into(&self, s: usize, out: &mut TensorOf<S>) {
         let n = self.n;
         assert!(s <= n);
         let nb = n - s;
         assert!(nb <= self.order);
         assert_eq!(out.n, n);
         assert_eq!(out.order, self.order - nb + s);
-        out.data.fill(0.0);
+        out.data.fill(S::ZERO);
         self.levi_civita_accumulate(s, out);
     }
 
-    fn levi_civita_accumulate(&self, s: usize, out: &mut Tensor) {
+    fn levi_civita_accumulate(&self, s: usize, out: &mut TensorOf<S>) {
         let n = self.n;
         let nb = n - s; // bottom free axes consumed
         let keep = self.order - nb;
@@ -263,7 +264,7 @@ impl Tensor {
                 // B = perm[s..n] indexes the consumed input axes.
                 let t_off = flat_index(n, &perm[..s]);
                 let b_off = flat_index(n, &perm[s..]);
-                out.data[out_base + t_off] += *sign * self.data[in_base + b_off];
+                out.data[out_base + t_off] += S::from_f64(*sign) * self.data[in_base + b_off];
             }
         }
     }
@@ -272,10 +273,10 @@ impl Tensor {
     /// groups of sizes `groups[0], …, groups[d-1]` (summing to `order`),
     /// read the per-group diagonals: `out[j_1…j_d] = self[j_1 rep g_1, …]`.
     /// Write-once: the output is filled in destination order, no zero-fill.
-    pub fn extract_group_diagonals(&self, groups: &[usize]) -> Tensor {
+    pub fn extract_group_diagonals(&self, groups: &[usize]) -> TensorOf<S> {
         let mut data = Vec::with_capacity(self.n.pow(groups.len() as u32));
         self.extract_diagonals_scan(groups, |x| data.push(x));
-        Tensor {
+        TensorOf {
             n: self.n,
             order: groups.len(),
             data,
@@ -284,7 +285,7 @@ impl Tensor {
 
     /// [`Tensor::extract_group_diagonals`] into a caller-provided buffer
     /// (write-once: every element of `out` is overwritten).
-    pub fn extract_group_diagonals_into(&self, groups: &[usize], out: &mut Tensor) {
+    pub fn extract_group_diagonals_into(&self, groups: &[usize], out: &mut TensorOf<S>) {
         assert_eq!(out.n, self.n);
         assert_eq!(out.order, groups.len());
         let mut slots = out.data.iter_mut();
@@ -293,7 +294,7 @@ impl Tensor {
         });
     }
 
-    fn extract_diagonals_scan(&self, groups: &[usize], mut emit: impl FnMut(f64)) {
+    fn extract_diagonals_scan(&self, groups: &[usize], mut emit: impl FnMut(S)) {
         let total: usize = groups.iter().sum();
         assert_eq!(total, self.order, "groups must cover all axes");
         let n = self.n;
@@ -356,7 +357,7 @@ impl Tensor {
     /// `axes[order-m..]`, so its stride in `self` is the sum of those axes'
     /// strides and the outer walk reads `self` through the remaining
     /// remapped strides. Bitwise identical to the composition.
-    pub fn contract_permuted_diagonal_into(&self, axes: &[usize], m: usize, out: &mut Tensor) {
+    pub fn contract_permuted_diagonal_into(&self, axes: &[usize], m: usize, out: &mut TensorOf<S>) {
         self.check_axes(axes);
         assert!(m >= 1 && m <= self.order);
         assert_eq!(out.n, self.n);
@@ -370,11 +371,11 @@ impl Tensor {
     /// Replay of [`Tensor::contract_permuted_diagonal_into`] off a
     /// precomputed outer-offset table (`fastmult::schedule` builds it once
     /// per kernel plan): `out[o] = Σ_j self[base[o] + j·dstride]`.
-    pub(crate) fn gather_contract_with(&self, base: &[usize], dstride: usize, out: &mut Tensor) {
+    pub(crate) fn gather_contract_with(&self, base: &[usize], dstride: usize, out: &mut TensorOf<S>) {
         let n = self.n;
         debug_assert_eq!(base.len(), out.data.len());
         for (slot, &b) in out.data.iter_mut().zip(base) {
-            let mut s = 0.0;
+            let mut s = S::ZERO;
             let mut off = b;
             for _ in 0..n {
                 s += self.data[off];
@@ -387,7 +388,7 @@ impl Tensor {
     /// Fused `permute_axes(self, axes).trace_trailing_pair_eps()`: the two
     /// ε-traced axes are the source axes `axes[order-2..]`, read through
     /// their own strides. Bitwise identical to the composition.
-    pub fn trace_permuted_pair_eps_into(&self, axes: &[usize], out: &mut Tensor) {
+    pub fn trace_permuted_pair_eps_into(&self, axes: &[usize], out: &mut TensorOf<S>) {
         self.check_axes(axes);
         assert!(self.order >= 2);
         assert_eq!(self.n % 2, 0, "Sp(n) requires even n");
@@ -407,12 +408,12 @@ impl Tensor {
         base: &[usize],
         sa: usize,
         sb: usize,
-        out: &mut Tensor,
+        out: &mut TensorOf<S>,
     ) {
         let n = self.n;
         debug_assert_eq!(base.len(), out.data.len());
         for (slot, &b) in out.data.iter_mut().zip(base) {
-            let mut s = 0.0;
+            let mut s = S::ZERO;
             for i in 0..n / 2 {
                 let p = 2 * i;
                 let q = 2 * i + 1;
@@ -430,7 +431,7 @@ impl Tensor {
         &self,
         axes: &[usize],
         groups: &[usize],
-        out: &mut Tensor,
+        out: &mut TensorOf<S>,
     ) {
         self.check_axes(axes);
         assert_eq!(out.n, self.n);
@@ -441,7 +442,7 @@ impl Tensor {
 
     /// Pure gather replay: `out[i] = self[offs[i]]` (group-diagonal
     /// extraction, permuted or not, off a precomputed offset table).
-    pub(crate) fn gather_with(&self, offs: &[usize], out: &mut Tensor) {
+    pub(crate) fn gather_with(&self, offs: &[usize], out: &mut TensorOf<S>) {
         debug_assert_eq!(offs.len(), out.data.len());
         for (slot, &s) in out.data.iter_mut().zip(offs) {
             *slot = self.data[s];
@@ -452,7 +453,7 @@ impl Tensor {
     /// [`permute_block_map`]): destination is filled sequentially with the
     /// maximal contiguous source blocks. Bitwise identical to
     /// [`Tensor::permute_axes_into`].
-    pub(crate) fn permute_blocks_into(&self, map: &[usize], block: usize, out: &mut Tensor) {
+    pub(crate) fn permute_blocks_into(&self, map: &[usize], block: usize, out: &mut TensorOf<S>) {
         debug_assert_eq!(map.len() * block, out.data.len());
         let mut d = 0usize;
         for &s in map {
@@ -468,7 +469,7 @@ impl Tensor {
         &self,
         s: usize,
         entries: &[(usize, usize, f64)],
-        out: &mut Tensor,
+        out: &mut TensorOf<S>,
     ) {
         let n = self.n;
         let nb = n - s;
@@ -476,12 +477,12 @@ impl Tensor {
         let in_block = n.pow(nb as u32);
         let out_block = n.pow(s as u32);
         debug_assert_eq!(out.order, keep + s);
-        out.data.fill(0.0);
+        out.data.fill(S::ZERO);
         for o in 0..n.pow(keep as u32) {
             let in_base = o * in_block;
             let out_base = o * out_block;
             for &(t_off, b_off, sign) in entries {
-                out.data[out_base + t_off] += sign * self.data[in_base + b_off];
+                out.data[out_base + t_off] += S::from_f64(sign) * self.data[in_base + b_off];
             }
         }
     }
@@ -492,11 +493,20 @@ impl Tensor {
     /// per broadcast rep for the diagonal-support scatter. Each destination
     /// receives exactly one contribution, so the result is bitwise equal to
     /// the odometer kernels.
-    pub(crate) fn axpy_dsts_into(&self, dsts: &[usize], alpha: f64, out: &mut Tensor) {
+    pub(crate) fn axpy_dsts_into(&self, dsts: &[usize], alpha: f64, out: &mut TensorOf<S>) {
         debug_assert_eq!(dsts.len() % self.data.len(), 0);
-        for rep in dsts.chunks(self.data.len()) {
-            for (&d, &x) in rep.iter().zip(&self.data) {
-                out.data[d] += alpha * x;
+        let a = S::from_f64(alpha);
+        let len = self.data.len();
+        for rep in dsts.chunks(len) {
+            // Identity-layout destination runs take the lane-chunked axpy
+            // (bitwise equal to the scalar scatter — each destination still
+            // receives its one contribution in the same order).
+            if let Some(d0) = ramp_base(rep) {
+                axpy_slice(a, &self.data, &mut out.data[d0..d0 + len]);
+            } else {
+                for (&d, &x) in rep.iter().zip(&self.data) {
+                    out.data[d] += a * x;
+                }
             }
         }
     }
@@ -505,11 +515,11 @@ impl Tensor {
     /// order-`d` tensor onto the per-group diagonals of an order-`total`
     /// tensor (zero elsewhere). This is the S_n Step-2/3 expand used when a
     /// caller needs the *materialised* output (eq. 100/104).
-    pub fn embed_group_diagonals(&self, groups: &[usize]) -> Tensor {
+    pub fn embed_group_diagonals(&self, groups: &[usize]) -> TensorOf<S> {
         assert_eq!(groups.len(), self.order, "one group per compact axis");
         let n = self.n;
         let total: usize = groups.iter().sum();
-        let mut out = Tensor::zeros(n, total);
+        let mut out = TensorOf::zeros(n, total);
         let d = self.order;
         let mut gstride = vec![0usize; d];
         {
@@ -552,21 +562,20 @@ impl Tensor {
     /// `out += alpha · permute_axes(self, axes)` without materialising the
     /// permuted tensor — the fused final step of a spanning-term apply
     /// (Algorithm 1's closing `Permute` + the layer's λ-weighted sum).
-    pub fn axpy_permuted_into(&self, alpha: f64, axes: &[usize], out: &mut Tensor) {
+    pub fn axpy_permuted_into(&self, alpha: f64, axes: &[usize], out: &mut TensorOf<S>) {
         assert_eq!(axes.len(), self.order);
         assert_eq!(out.order, self.order);
         assert_eq!(out.n, self.n);
         let n = self.n;
         let order = self.order;
+        let alpha = S::from_f64(alpha);
         if order == 0 {
             out.data[0] += alpha * self.data[0];
             return;
         }
-        // Identity fast path.
+        // Identity fast path (lane-chunked).
         if axes.iter().enumerate().all(|(i, &a)| i == a) {
-            for (o, &x) in out.data.iter_mut().zip(&self.data) {
-                *o += alpha * x;
-            }
+            axpy_slice(alpha, &self.data, &mut out.data);
             return;
         }
         let mut in_stride = vec![0usize; order];
@@ -622,7 +631,7 @@ impl Tensor {
     /// The schedule's folded walk replays precompiled destination maps in
     /// this exact visit order (`fastmult::schedule`); this standalone form
     /// is the reference its equivalence tests assert against.
-    pub fn axpy_permuted_multi_into(&self, pats: &[(&[usize], f64)], out: &mut Tensor) {
+    pub fn axpy_permuted_multi_into(&self, pats: &[(&[usize], f64)], out: &mut TensorOf<S>) {
         assert_eq!(out.order, self.order);
         assert_eq!(out.n, self.n);
         if pats.is_empty() {
@@ -633,9 +642,11 @@ impl Tensor {
         }
         let n = self.n;
         let order = self.order;
+        // Per-pattern weights, narrowed once per invocation.
+        let ws: Vec<S> = pats.iter().map(|&(_, alpha)| S::from_f64(alpha)).collect();
         if order == 0 {
-            for &(_, alpha) in pats {
-                out.data[0] += alpha * self.data[0];
+            for &w in &ws {
+                out.data[0] += w * self.data[0];
             }
             return;
         }
@@ -665,8 +676,8 @@ impl Tensor {
         let mut dsts = vec![0usize; pats.len()];
         for src in 0..self.data.len() {
             let x = self.data[src];
-            for (p, &(_, alpha)) in pats.iter().enumerate() {
-                out.data[dsts[p]] += alpha * x;
+            for (p, &w) in ws.iter().enumerate() {
+                out.data[dsts[p]] += w * x;
             }
             let mut a = order;
             loop {
@@ -704,11 +715,11 @@ impl Tensor {
         &self,
         lead_groups: &[usize],
         tail_groups: &[usize],
-    ) -> Tensor {
+    ) -> TensorOf<S> {
         assert_eq!(tail_groups.len(), self.order);
         let n = self.n;
         let total: usize = lead_groups.iter().sum::<usize>() + tail_groups.iter().sum::<usize>();
-        let mut out = Tensor::zeros(n, total);
+        let mut out = TensorOf::zeros(n, total);
         let t = lead_groups.len();
         let d = tail_groups.len();
         // Per-compact-axis strides in the output (diagonal strides).
@@ -786,9 +797,10 @@ impl Tensor {
         tail_groups: &[usize],
         axes: &[usize],
         alpha: f64,
-        out: &mut Tensor,
+        out: &mut TensorOf<S>,
     ) {
         assert_eq!(tail_groups.len(), self.order);
+        let alpha = S::from_f64(alpha);
         let n = self.n;
         let total: usize = lead_groups.iter().sum::<usize>() + tail_groups.iter().sum::<usize>();
         assert_eq!(axes.len(), total);
@@ -882,12 +894,13 @@ impl Tensor {
         lead_groups: &[usize],
         tail_groups: &[usize],
         pats: &[(&[usize], f64)],
-        out: &mut Tensor,
+        out: &mut TensorOf<S>,
     ) {
         assert_eq!(tail_groups.len(), self.order);
         if pats.is_empty() {
             return;
         }
+        let ws: Vec<S> = pats.iter().map(|&(_, alpha)| S::from_f64(alpha)).collect();
         let n = self.n;
         let total: usize = lead_groups.iter().sum::<usize>() + tail_groups.iter().sum::<usize>();
         assert_eq!(out.order, total);
@@ -935,8 +948,8 @@ impl Tensor {
             dsts.copy_from_slice(&lead_offs);
             for src in 0..tail_len {
                 let x = self.data[src];
-                for (p, &(_, alpha)) in pats.iter().enumerate() {
-                    out.data[dsts[p]] += alpha * x;
+                for (p, &w) in ws.iter().enumerate() {
+                    out.data[dsts[p]] += w * x;
                 }
                 let mut g = d;
                 loop {
@@ -981,14 +994,14 @@ impl Tensor {
     /// Prepend `m` broadcast axes: `out[i_1…i_m, J] = self[J]` for every
     /// choice of the leading indices — the "copy" half of S_n Step 3
     /// (eq. 103) before the diagonal embedding.
-    pub fn broadcast_leading(&self, m: usize) -> Tensor {
+    pub fn broadcast_leading(&self, m: usize) -> TensorOf<S> {
         let n = self.n;
         let reps = n.pow(m as u32);
         let mut data = Vec::with_capacity(reps * self.data.len());
         for _ in 0..reps {
             data.extend_from_slice(&self.data);
         }
-        Tensor {
+        TensorOf {
             n,
             order: self.order + m,
             data,
@@ -998,11 +1011,11 @@ impl Tensor {
     /// Mode product: apply an `n×n` matrix `g` along one axis,
     /// `out[…, i, …] = Σ_j g[i,j] self[…, j, …]`. Composed over all axes it
     /// realises the diagonal action `ρ_k(g)` of eq. (2).
-    pub fn mode_apply(&self, g: &[f64], axis: usize) -> Tensor {
+    pub fn mode_apply(&self, g: &[f64], axis: usize) -> TensorOf<S> {
         let n = self.n;
         assert_eq!(g.len(), n * n);
         assert!(axis < self.order);
-        let mut out = Tensor::zeros(n, self.order);
+        let mut out = TensorOf::zeros(n, self.order);
         // Split flat index as (outer, axis, inner).
         let inner: usize = n.pow((self.order - 1 - axis) as u32);
         let outer: usize = n.pow(axis as u32);
@@ -1014,10 +1027,13 @@ impl Tensor {
                     if gij == 0.0 {
                         continue;
                     }
+                    let gs = S::from_f64(gij);
                     let ibase = (o * n + j) * inner;
-                    for t in 0..inner {
-                        out.data[obase + t] += gij * self.data[ibase + t];
-                    }
+                    axpy_slice(
+                        gs,
+                        &self.data[ibase..ibase + inner],
+                        &mut out.data[obase..obase + inner],
+                    );
                 }
             }
         }
@@ -1026,7 +1042,7 @@ impl Tensor {
 
     /// The full tensor-power action `ρ_k(g)` (eq. 2): `g` applied along
     /// every axis.
-    pub fn rho_apply(&self, g: &[f64]) -> Tensor {
+    pub fn rho_apply(&self, g: &[f64]) -> TensorOf<S> {
         let mut t = self.clone();
         for a in 0..self.order {
             t = t.mode_apply(g, a);
@@ -1375,6 +1391,7 @@ pub(crate) fn scatter_diag_dsts(
 mod tests {
     use super::super::index::unflat_index;
     use super::*;
+    use crate::tensor::Tensor;
     use crate::util::Rng;
 
     #[test]

@@ -1,0 +1,346 @@
+//! The sealed [`Scalar`] trait: the element types the tensor stack is
+//! generic over (`f64` and `f32`).
+//!
+//! Everything numeric in the execution stack — tensors, batches, arena
+//! buffers, kernel inner loops — is parameterised by a `Scalar`. The trait
+//! is **sealed**: exactly two implementations exist, so downstream code can
+//! rely on every `Scalar` being an IEEE-754 float with the usual semantics,
+//! and the crate can add methods without a semver break.
+//!
+//! Design constraints the trait encodes (see `docs/scalar_precision.md`):
+//!
+//! - **Master coefficients stay `f64`.** Layer weights, diagram
+//!   coefficients and signs are stored in `f64` everywhere; generic kernels
+//!   accept `f64` scalars and convert once per kernel invocation via
+//!   [`Scalar::from_f64`]. For `S = f64` that conversion is the identity,
+//!   which is what makes the `f64` instantiation bitwise identical to the
+//!   historical hard-coded-`f64` code path.
+//! - **No FMA in kernels.** [`Scalar::mul_add`] exists for callers that
+//!   want it, but the schedule kernels never use it: contracting `a*b + c`
+//!   into one fused operation changes results at the ULP level and would
+//!   break the bitwise run-to-run and seed-compatibility guarantees.
+//! - **Lane width is a hint, not a SIMD binding.** [`Scalar::LANES`] sizes
+//!   the `chunks_exact` blocks the elementwise kernels use so LLVM's
+//!   autovectorizer sees fixed-width, branch-free inner loops (no `unsafe`,
+//!   no intrinsics). 4×f64 / 8×f32 matches one 256-bit vector register.
+
+use std::fmt::{Debug, Display};
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+mod sealed {
+    /// Prevents downstream `Scalar` impls (the kernels assume IEEE floats).
+    pub trait Sealed {}
+    impl Sealed for f64 {}
+    impl Sealed for f32 {}
+}
+
+/// Element type of the tensor stack: `f64` (training default) or `f32`
+/// (halved memory traffic for inference). Sealed — see the module docs.
+pub trait Scalar:
+    sealed::Sealed
+    + Copy
+    + Default
+    + Debug
+    + Display
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + Sum<Self>
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Comparison tolerance natural to this precision: the scale factor
+    /// equivalence tests multiply into their `f64`-derived bounds. Chosen
+    /// as ~2³ ULP at magnitude 1 (`f64`: 1e-15, `f32`: 1e-6).
+    const TOLERANCE: f64;
+    /// Elementwise-kernel chunk width: how many elements fill one 256-bit
+    /// vector register (4 for `f64`, 8 for `f32`).
+    const LANES: usize;
+    /// `size_of::<Self>()` as a const, for measured-bytes accounting.
+    const BYTES: usize;
+    /// `"f64"` / `"f32"` — used by the precision config and bench rows.
+    const NAME: &'static str;
+
+    /// Narrowing (or identity) conversion from an `f64` master value.
+    fn from_f64(x: f64) -> Self;
+    /// Widening (or identity) conversion to `f64`.
+    fn to_f64(self) -> f64;
+    /// Absolute value.
+    fn abs(self) -> Self;
+    /// Square root.
+    fn sqrt(self) -> Self;
+    /// Hyperbolic tangent (the `Tanh` activation's elementwise op).
+    fn tanh(self) -> Self;
+    /// Integer power.
+    fn powi(self, e: i32) -> Self;
+    /// IEEE maximum of two values.
+    fn max(self, other: Self) -> Self;
+    /// Fused multiply-add `self * a + b`. **Not used by the schedule
+    /// kernels** (it would break bitwise reproducibility); provided for
+    /// callers that explicitly opt into fused rounding.
+    fn mul_add(self, a: Self, b: Self) -> Self;
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const TOLERANCE: f64 = 1e-15;
+    const LANES: usize = 4;
+    const BYTES: usize = 8;
+    const NAME: &'static str = "f64";
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline(always)]
+    fn tanh(self) -> Self {
+        f64::tanh(self)
+    }
+    #[inline(always)]
+    fn powi(self, e: i32) -> Self {
+        f64::powi(self, e)
+    }
+    #[inline(always)]
+    fn max(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+    #[inline(always)]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        f64::mul_add(self, a, b)
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const TOLERANCE: f64 = 1e-6;
+    const LANES: usize = 8;
+    const BYTES: usize = 4;
+    const NAME: &'static str = "f32";
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    #[inline(always)]
+    fn tanh(self) -> Self {
+        f32::tanh(self)
+    }
+    #[inline(always)]
+    fn powi(self, e: i32) -> Self {
+        f32::powi(self, e)
+    }
+    #[inline(always)]
+    fn max(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+    #[inline(always)]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        f32::mul_add(self, a, b)
+    }
+}
+
+/// Runtime selector between the two [`Scalar`] instantiations — the value
+/// form of the type parameter, used where the scalar type is chosen by
+/// configuration (`[model] precision`) rather than at the call site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Execute in `f64` (the training default; bitwise-reference path).
+    #[default]
+    F64,
+    /// Execute in `f32` (halved memory traffic on the bandwidth-bound
+    /// schedule walks; results within the scaled `f32` tolerance).
+    F32,
+}
+
+impl Precision {
+    /// Canonical config spelling (`"f64"` / `"f32"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F64 => f64::NAME,
+            Precision::F32 => f32::NAME,
+        }
+    }
+
+    /// Parse a config string (case-insensitive). Accepts `f64`/`float64`/
+    /// `double` and `f32`/`float32`/`single`.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" | "float64" | "double" => Some(Precision::F64),
+            "f32" | "float32" | "single" => Some(Precision::F32),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Lane-chunked `y[i] += alpha · x[i]` over equal-length slices — the one
+/// elementwise axpy every vectorized kernel funnels through. Each element
+/// is updated by exactly one multiply and one add in the same order as the
+/// plain scalar loop (no reassociation, no FMA), so results are **bitwise
+/// identical** to the naive form; the fixed-width body only lets LLVM emit
+/// vector instructions for it.
+#[inline]
+pub(crate) fn axpy_slice<S: Scalar>(alpha: S, x: &[S], y: &mut [S]) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut xs = x.chunks_exact(S::LANES);
+    let mut ys = y.chunks_exact_mut(S::LANES);
+    for (yc, xc) in (&mut ys).zip(&mut xs) {
+        for j in 0..S::LANES {
+            yc[j] += alpha * xc[j];
+        }
+    }
+    for (yv, xv) in ys.into_remainder().iter_mut().zip(xs.remainder()) {
+        *yv += alpha * *xv;
+    }
+}
+
+/// Lane-chunked `y[i] *= alpha` (see [`axpy_slice`] for the bitwise
+/// argument).
+#[inline]
+pub(crate) fn scale_slice<S: Scalar>(alpha: S, y: &mut [S]) {
+    let mut ys = y.chunks_exact_mut(S::LANES);
+    for yc in &mut ys {
+        for v in yc.iter_mut() {
+            *v *= alpha;
+        }
+    }
+    for v in ys.into_remainder() {
+        *v *= alpha;
+    }
+}
+
+/// Is `rep` the contiguous ramp `base, base+1, …`? Returns the base when
+/// it is — the scatter-axpy kernels use this to route identity-layout
+/// destination maps through the lane-chunked [`axpy_slice`] instead of the
+/// scalar indirect scatter. Early-exits on the first mismatch, so
+/// non-trivial maps pay O(1).
+#[inline]
+pub(crate) fn ramp_base(rep: &[usize]) -> Option<usize> {
+    let &base = rep.first()?;
+    for (j, &d) in rep.iter().enumerate() {
+        if d != base + j {
+            return None;
+        }
+    }
+    Some(base)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_are_consistent() {
+        assert_eq!(<f64 as Scalar>::BYTES, std::mem::size_of::<f64>());
+        assert_eq!(<f32 as Scalar>::BYTES, std::mem::size_of::<f32>());
+        assert_eq!(<f64 as Scalar>::LANES * 8, <f32 as Scalar>::LANES * 4);
+        assert_eq!(<f64 as Scalar>::NAME, "f64");
+        assert_eq!(<f32 as Scalar>::NAME, "f32");
+    }
+
+    #[test]
+    fn from_f64_is_identity_for_f64() {
+        for x in [0.0, -1.5, std::f64::consts::PI, 1e-300, f64::MAX] {
+            assert_eq!(<f64 as Scalar>::from_f64(x).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn axpy_slice_matches_scalar_loop_bitwise() {
+        fn run<S: Scalar>() {
+            let n = 4 * S::LANES + 3; // exercises the remainder
+            let x: Vec<S> = (0..n).map(|i| S::from_f64(0.37 * i as f64 - 1.0)).collect();
+            let mut y: Vec<S> = (0..n).map(|i| S::from_f64(1.0 / (i + 1) as f64)).collect();
+            let mut want = y.clone();
+            let alpha = S::from_f64(-0.625);
+            for (w, &xv) in want.iter_mut().zip(&x) {
+                *w += alpha * xv;
+            }
+            axpy_slice(alpha, &x, &mut y);
+            assert_eq!(y, want);
+        }
+        run::<f64>();
+        run::<f32>();
+    }
+
+    #[test]
+    fn scale_slice_matches_scalar_loop_bitwise() {
+        fn run<S: Scalar>() {
+            let n = 2 * S::LANES + 1;
+            let mut y: Vec<S> = (0..n).map(|i| S::from_f64(0.11 * i as f64)).collect();
+            let mut want = y.clone();
+            let alpha = S::from_f64(3.5);
+            for w in &mut want {
+                *w *= alpha;
+            }
+            scale_slice(alpha, &mut y);
+            assert_eq!(y, want);
+        }
+        run::<f64>();
+        run::<f32>();
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        assert_eq!(Precision::parse("F64"), Some(Precision::F64));
+        assert_eq!(Precision::parse("float32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("half"), None);
+        for p in [Precision::F64, Precision::F32] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    #[test]
+    fn ramp_base_detects_ramps_only() {
+        assert_eq!(ramp_base(&[5, 6, 7, 8]), Some(5));
+        assert_eq!(ramp_base(&[0]), Some(0));
+        assert_eq!(ramp_base(&[]), None);
+        assert_eq!(ramp_base(&[5, 7, 8]), None);
+        assert_eq!(ramp_base(&[3, 2, 1]), None);
+    }
+}

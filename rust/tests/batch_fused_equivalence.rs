@@ -4,6 +4,9 @@
 //! the network plumbing, and the training loop — and must stay
 //! zero-allocation once the scratch arena is warm.
 
+// The legacy forward names stay exercised until their removal.
+#![allow(deprecated)]
+
 use equidiag::fastmult::{Group, LayerSchedule, ScratchArena};
 use equidiag::layer::{ChannelEquivariantLinear, EquivariantLinear, Init};
 use equidiag::nn::{

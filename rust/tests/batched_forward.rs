@@ -2,6 +2,9 @@
 //! (to 1e-9) from per-item `forward` for every group, at the layer, the
 //! network and the coordinator level.
 
+// The legacy forward names stay exercised until their removal.
+#![allow(deprecated)]
+
 use equidiag::config::ServerConfig;
 use equidiag::coordinator::{Coordinator, ModelKind};
 use equidiag::fastmult::Group;

@@ -4,6 +4,9 @@
 //! simultaneously that the functors produce equivariant maps and that
 //! Algorithm 1 implements the functors.
 
+// The legacy forward names stay exercised until their removal.
+#![allow(deprecated)]
+
 use equidiag::diagram::Diagram;
 use equidiag::fastmult::{matrix_mult, Group};
 use equidiag::groups;

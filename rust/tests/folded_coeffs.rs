@@ -6,6 +6,9 @@
 //! reference to ≤ 1e-12 — and that two same-shape layers sharing one
 //! compiled schedule produce independent, correct outputs. All four groups.
 
+// The legacy forward names stay exercised until their removal.
+#![allow(deprecated)]
+
 use equidiag::fastmult::Group;
 use equidiag::layer::{transpose_sign, EquivariantLinear, Init};
 use equidiag::tensor::Tensor;

@@ -5,11 +5,15 @@
 //! forward and backward, single and batched. (The folded class walk
 //! reassociates per-term additions, so fused-vs-per-term is a 1e-12 bound,
 //! not bitwise; the per-term tensors of the backward map walk stay
-//! bitwise.)
+//! bitwise.) The forward paths run through the unified
+//! [`EquivariantLinear::apply`] entry point; the full four-group
+//! forward/backward matrix is additionally pinned under both scalar types
+//! (`f64` bitwise against the legacy names, `f32` within the scaled
+//! [`Scalar::TOLERANCE`]).
 
 use equidiag::fastmult::{Group, PlanCache, ScratchArena};
 use equidiag::layer::{transpose_sign, EquivariantLinear, Init};
-use equidiag::tensor::Tensor;
+use equidiag::tensor::{Scalar, Tensor, TensorOf};
 use equidiag::util::prop::{check, Config};
 use equidiag::util::Rng;
 
@@ -51,7 +55,11 @@ fn prop_folded_forward_is_stable_and_equal_to_per_term() {
             let layer = EquivariantLinear::new(group, n, k, l, Init::Normal(0.5), rng)
                 .map_err(|e| e.to_string())?;
             let v = Tensor::random(n, k, rng);
-            let fused = layer.forward(&v).map_err(|e| e.to_string())?;
+            let fused = layer
+                .apply(&v)
+                .map_err(|e| e.to_string())?
+                .into_single()
+                .expect("single input yields single output");
             let reference = layer.forward_per_term(&v).map_err(|e| e.to_string())?;
             if !fused.allclose(&reference, 1e-12) {
                 return Err(format!(
@@ -59,7 +67,11 @@ fn prop_folded_forward_is_stable_and_equal_to_per_term() {
                     fused.max_abs_diff(&reference)
                 ));
             }
-            let again = layer.forward(&v).map_err(|e| e.to_string())?;
+            let again = layer
+                .apply(&v)
+                .map_err(|e| e.to_string())?
+                .into_single()
+                .expect("single input yields single output");
             if fused.max_abs_diff(&again) != 0.0 {
                 return Err(format!(
                     "group {group} n={n} ({k},{l}): forward is not run-to-run stable"
@@ -98,7 +110,7 @@ fn prop_batched_forward_within_1e12_of_per_term() {
                 .map_err(|e| e.to_string())?;
             let batch = 1 + rng.below(5); // 1..5 — exercises both paths
             let inputs: Vec<Tensor> = (0..batch).map(|_| Tensor::random(n, k, rng)).collect();
-            let batched = layer.forward_batch(&inputs).map_err(|e| e.to_string())?;
+            let batched = layer.apply(&inputs).map_err(|e| e.to_string())?.into_vec();
             for (i, (v, b)) in inputs.iter().zip(&batched).enumerate() {
                 let want = layer.forward_per_term(v).map_err(|e| e.to_string())?;
                 if !want.allclose(b, 1e-12) {
@@ -266,6 +278,109 @@ fn steady_state_forward_is_allocation_free() {
             "group {group}: diff {}",
             out.max_abs_diff(&want)
         );
+    }
+}
+
+/// The full four-group forward/backward matrix under both scalar types:
+/// the unified `apply`/`apply_grad` entry points are bitwise identical to
+/// the legacy names at `f64` (they are the same code path), and the `f32`
+/// instantiation tracks the `f64` reference within the scaled
+/// [`Scalar::TOLERANCE`].
+#[test]
+#[allow(deprecated)] // the legacy names are the bitwise reference here
+fn apply_matrix_all_groups_both_precisions() {
+    let f32_tol = |reference: &Tensor| {
+        let scale = reference.data.iter().fold(1.0_f64, |m, x| m.max(x.abs()));
+        64.0 * <f32 as Scalar>::TOLERANCE * scale
+    };
+    let mut rng = Rng::new(0x5CED6);
+    for group in Group::ALL {
+        let n = if group == Group::Symplectic { 4 } else { 3 };
+        let layer = EquivariantLinear::new(group, n, 2, 2, Init::Normal(0.5), &mut rng).unwrap();
+        let v = Tensor::random(n, 2, &mut rng);
+        let g = Tensor::random(n, 2, &mut rng);
+        let inputs: Vec<Tensor> = (0..3).map(|_| Tensor::random(n, 2, &mut rng)).collect();
+        let gs: Vec<Tensor> = (0..3).map(|_| Tensor::random(n, 2, &mut rng)).collect();
+
+        // f64 forward: `apply` is bitwise the legacy path, single + batched.
+        let want = layer.forward(&v).unwrap();
+        let got = layer.apply(&v).unwrap().into_single().unwrap();
+        assert!(got.allclose(&want, 0.0), "{group}: f64 apply not bitwise");
+        let want_b = layer.forward_batch(&inputs).unwrap();
+        let got_b = layer.apply(&inputs).unwrap().into_vec();
+        for (a, b) in got_b.iter().zip(&want_b) {
+            assert!(a.allclose(b, 0.0), "{group}: f64 batched apply not bitwise");
+        }
+
+        // f64 backward: `apply_grad` is bitwise the legacy path.
+        let mut want_g1 = layer.zero_grads();
+        let want_gv = layer.backward(&v, &g, &mut want_g1).unwrap();
+        let mut got_g1 = layer.zero_grads();
+        let got_gv = layer
+            .apply_grad(&v, &g, &mut got_g1)
+            .unwrap()
+            .into_single()
+            .unwrap();
+        assert!(
+            got_gv.allclose(&want_gv, 0.0),
+            "{group}: f64 apply_grad not bitwise"
+        );
+        assert_eq!(want_g1.coeffs, got_g1.coeffs, "{group}: coeff grads differ");
+        assert_eq!(want_g1.bias_coeffs, got_g1.bias_coeffs);
+
+        let mut want_gb = layer.zero_grads();
+        let want_gvs = layer.backward_batch(&inputs, &gs, &mut want_gb).unwrap();
+        let mut got_gb = layer.zero_grads();
+        let got_gvs = layer
+            .apply_grad(&inputs, gs.as_slice(), &mut got_gb)
+            .unwrap()
+            .into_vec();
+        for (a, b) in got_gvs.iter().zip(&want_gvs) {
+            assert!(
+                a.allclose(b, 0.0),
+                "{group}: f64 batched apply_grad not bitwise"
+            );
+        }
+        assert_eq!(want_gb.coeffs, got_gb.coeffs);
+        assert_eq!(want_gb.bias_coeffs, got_gb.bias_coeffs);
+
+        // f32: the same matrix within the scaled tolerance.
+        let v32 = v.cast::<f32>();
+        let g32 = g.cast::<f32>();
+        let got32 = layer.apply(&v32).unwrap().into_single().unwrap();
+        assert!(
+            got32.cast::<f64>().allclose(&want, f32_tol(&want)),
+            "{group}: f32 forward diverges by {}",
+            got32.cast::<f64>().max_abs_diff(&want)
+        );
+        let inputs32: Vec<TensorOf<f32>> = inputs.iter().map(|t| t.cast()).collect();
+        let got_b32 = layer.apply(&inputs32).unwrap().into_vec();
+        for (a, b) in got_b32.iter().zip(&want_b) {
+            assert!(
+                a.cast::<f64>().allclose(b, f32_tol(b)),
+                "{group}: f32 batched forward diverges by {}",
+                a.cast::<f64>().max_abs_diff(b)
+            );
+        }
+        let mut grads32 = layer.zero_grads();
+        let gv32 = layer
+            .apply_grad(&v32, &g32, &mut grads32)
+            .unwrap()
+            .into_single()
+            .unwrap();
+        assert!(
+            gv32.cast::<f64>().allclose(&want_gv, f32_tol(&want_gv)),
+            "{group}: f32 backward diverges by {}",
+            gv32.cast::<f64>().max_abs_diff(&want_gv)
+        );
+        let coeff_scale = want_g1.coeffs.iter().fold(1.0_f64, |m, x| m.max(x.abs()));
+        let coeff_tol = 64.0 * <f32 as Scalar>::TOLERANCE * coeff_scale;
+        for (i, (a, b)) in grads32.coeffs.iter().zip(&want_g1.coeffs).enumerate() {
+            assert!(
+                (a - b).abs() <= coeff_tol,
+                "{group} coeff {i}: f32 grad {a} vs f64 {b}"
+            );
+        }
     }
 }
 

@@ -16,10 +16,16 @@
 //! Plus the cost-model invariants: fusion never increases
 //! `estimated_flops` and strictly decreases `estimated_bytes` whenever
 //! `fused_nodes > 0`.
+//!
+//! The generic-scalar stack rides the same harness: the schedules
+//! instantiated at `f32` must track the `f64` reference (the seed path)
+//! within the scaled tolerance on every execute path, and the lane-chunked
+//! vectorized kernels are pinned bitwise against plain scalar loops at
+//! both precisions.
 
-use equidiag::fastmult::{exec_stats, Group, LayerSchedule, ScratchArena};
+use equidiag::fastmult::{exec_stats, Group, LayerSchedule, ScratchArena, ScratchArenaOf};
 use equidiag::layer::spanning_plans;
-use equidiag::tensor::{BatchTensor, Tensor};
+use equidiag::tensor::{BatchTensor, BatchTensorOf, Scalar, Tensor, TensorOf};
 use equidiag::util::prop::{check, Config};
 use equidiag::util::Rng;
 
@@ -224,6 +230,136 @@ fn fused_schedule_matches_unfused_everywhere() {
             })
             .unwrap();
     }
+}
+
+/// The fused schedule instantiated at `f32`: every execute path (single,
+/// batched, per-term map walk) across the four-group configs tracks the
+/// `f64` reference within the scaled [`Scalar::TOLERANCE`]. The `f64`
+/// instantiation is the seed path itself, so this is the whole
+/// two-precision schedule matrix.
+#[test]
+fn f32_schedule_tracks_f64_all_groups() {
+    let f32_tol = |reference: &Tensor| {
+        let scale = reference.data.iter().fold(1.0_f64, |m, x| m.max(x.abs()));
+        64.0 * <f32 as Scalar>::TOLERANCE * scale
+    };
+    let mut rng = Rng::new(0xF0_55);
+    for &(group, n, k, l) in CONFIGS {
+        let plans = spanning_plans(group, n, k, l).unwrap();
+        if plans.is_empty() {
+            continue;
+        }
+        let schedule = LayerSchedule::compile(group, n, k, l, &plans).unwrap();
+        let coeffs: Vec<f64> = (0..plans.len()).map(|_| rng.gaussian()).collect();
+        let v = Tensor::random(n, k, &mut rng);
+        let v32 = v.cast::<f32>();
+        let mut arena = ScratchArena::new();
+        let mut arena32 = ScratchArenaOf::<f32>::new();
+        // Forward, single item.
+        let mut want = Tensor::zeros(n, l);
+        let mut got = TensorOf::<f32>::zeros(n, l);
+        schedule.execute(&v, &coeffs, &mut want, &mut arena).unwrap();
+        schedule
+            .execute(&v32, &coeffs, &mut got, &mut arena32)
+            .unwrap();
+        assert!(
+            got.cast::<f64>().allclose(&want, f32_tol(&want)),
+            "{group} ({k},{l}): f32 forward diverges by {}",
+            got.cast::<f64>().max_abs_diff(&want)
+        );
+        // Backward map walk: per-term tensors track per term.
+        let mut terms: Vec<Tensor> = Vec::new();
+        schedule
+            .execute_map(&v, &mut arena, |_, t| {
+                terms.push(t.clone());
+                Ok(())
+            })
+            .unwrap();
+        schedule
+            .execute_map(&v32, &mut arena32, |i, t| {
+                assert!(
+                    t.cast::<f64>().allclose(&terms[i], f32_tol(&terms[i])),
+                    "{group} ({k},{l}) term {i}: f32 map walk diverges by {}",
+                    t.cast::<f64>().max_abs_diff(&terms[i])
+                );
+                Ok(())
+            })
+            .unwrap();
+        // Forward, batched.
+        let items: Vec<Tensor> = (0..3).map(|_| Tensor::random(n, k, &mut rng)).collect();
+        let items32: Vec<TensorOf<f32>> = items.iter().map(|t| t.cast()).collect();
+        let vb = BatchTensor::pack(&items).unwrap();
+        let vb32 = BatchTensorOf::<f32>::pack(&items32).unwrap();
+        let mut bwant = BatchTensor::zeros(n, l, 3);
+        let mut bgot = BatchTensorOf::<f32>::zeros(n, l, 3);
+        schedule
+            .execute_batch(&vb, &coeffs, &mut bwant, &mut arena)
+            .unwrap();
+        schedule
+            .execute_batch(&vb32, &coeffs, &mut bgot, &mut arena32)
+            .unwrap();
+        for bi in 0..3 {
+            let want_item = bwant.item_tensor(bi);
+            assert!(
+                bgot.item_tensor(bi)
+                    .cast::<f64>()
+                    .allclose(&want_item, f32_tol(&want_item)),
+                "{group} ({k},{l}) item {bi}: f32 batched forward diverges"
+            );
+        }
+    }
+}
+
+/// Property: the lane-chunked vectorized kernels behind [`TensorOf::axpy`]
+/// and [`TensorOf::scale`] are bitwise equal to their plain scalar twins at
+/// both precisions — `chunks_exact` changes the instruction schedule, never
+/// the per-element arithmetic (no FMA contraction, no reassociation).
+#[test]
+fn prop_vectorized_kernels_match_scalar_twins() {
+    check(
+        Config::default().cases(64).seed(0xF0_56),
+        "vectorized axpy/scale are bitwise vs scalar loops",
+        |rng| {
+            let n = 2 + rng.below(3); // 2..=4
+            let order = 1 + rng.below(3); // 1..=3
+            let alpha = rng.gaussian();
+            // f64 twins.
+            let x = Tensor::random(n, order, rng);
+            let mut out = Tensor::random(n, order, rng);
+            let mut want = out.data.clone();
+            for (w, &xv) in want.iter_mut().zip(&x.data) {
+                *w += alpha * xv;
+            }
+            out.axpy(alpha, &x);
+            if out.data != want {
+                return Err(format!("f64 axpy diverges from the scalar loop (n={n})"));
+            }
+            let want: Vec<f64> = out.data.iter().map(|&v| v * alpha).collect();
+            out.scale(alpha);
+            if out.data != want {
+                return Err(format!("f64 scale diverges from the scalar loop (n={n})"));
+            }
+            // f32 twins: the kernel narrows alpha once, then runs the same
+            // per-element expression.
+            let a32 = <f32 as Scalar>::from_f64(alpha);
+            let x32 = x.cast::<f32>();
+            let mut out32 = Tensor::random(n, order, rng).cast::<f32>();
+            let mut want = out32.data.clone();
+            for (w, &xv) in want.iter_mut().zip(&x32.data) {
+                *w += a32 * xv;
+            }
+            out32.axpy(alpha, &x32);
+            if out32.data != want {
+                return Err(format!("f32 axpy diverges from the scalar loop (n={n})"));
+            }
+            let want: Vec<f32> = out32.data.iter().map(|&v| v * a32).collect();
+            out32.scale(alpha);
+            if out32.data != want {
+                return Err(format!("f32 scale diverges from the scalar loop (n={n})"));
+            }
+            Ok(())
+        },
+    );
 }
 
 /// Fusion's cost-model invariants: flops unchanged, bytes strictly lower
