@@ -6,16 +6,25 @@
 //!
 //! Emits `BENCH_throughput.json` (requests/sec, plan-cache hit rate,
 //! batched-vs-sequential speedup) so the perf trajectory is machine-
-//! readable from PR 1 onward.
+//! readable from PR 1 onward, and `BENCH_robustness.json` from the
+//! fault-injection section: availability and p99 under seeded chaos
+//! (panics/stalls/errors), shed rates under overload, and worker-restart
+//! counts — with the exactly-one-terminal-outcome invariant asserted.
+//!
+//! Set `BENCH_FAST=1` to shrink the sweep and request counts (CI smoke).
 
 use equidiag::config::ServerConfig;
-use equidiag::coordinator::{Coordinator, MetricsSnapshot, ModelKind};
+use equidiag::coordinator::{
+    ChaosPlan, Coordinator, MetricsSnapshot, ModelKind, CHAOS_PANIC_PREFIX,
+};
+use equidiag::error::Error;
 use equidiag::fastmult::{factor_runs, Group, PlanCache};
 use equidiag::layer::Init;
 use equidiag::nn::{Activation, EquivariantNet};
 use equidiag::runtime::HloService;
 use equidiag::tensor::Tensor;
 use equidiag::util::{Rng, Table};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -170,7 +179,305 @@ fn write_json(
     }
 }
 
+/// Keep expected chaos-injected panics off stderr while real panics
+/// still print through the previous hook.
+fn install_chaos_panic_hook() {
+    let old = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let payload = info.payload();
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        if !msg.starts_with(CHAOS_PANIC_PREFIX) {
+            old(info);
+        }
+    }));
+}
+
+/// Per-route terminal-outcome tally. Every `infer` call lands in exactly
+/// one bucket, so `total()` equals the submitted count iff the
+/// exactly-one-outcome invariant holds (and the call returning at all
+/// certifies the no-hang invariant).
+#[derive(Default)]
+struct Outcomes {
+    ok: AtomicU64,
+    deadline: AtomicU64,
+    overloaded: AtomicU64,
+    typed_error: AtomicU64,
+}
+
+impl Outcomes {
+    fn record(&self, result: &Result<Tensor, Error>) {
+        match result {
+            Ok(_) => &self.ok,
+            Err(Error::DeadlineExceeded) => &self.deadline,
+            Err(Error::Overloaded { .. }) => &self.overloaded,
+            Err(_) => &self.typed_error,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+    fn total(&self) -> u64 {
+        self.ok.load(Ordering::Relaxed)
+            + self.deadline.load(Ordering::Relaxed)
+            + self.overloaded.load(Ordering::Relaxed)
+            + self.typed_error.load(Ordering::Relaxed)
+    }
+    fn availability(&self) -> f64 {
+        if self.total() == 0 {
+            return 0.0;
+        }
+        self.ok.load(Ordering::Relaxed) as f64 / self.total() as f64
+    }
+}
+
+struct ChaosReport {
+    healthy: Outcomes,
+    chaotic: Outcomes,
+    submitted_per_route: u64,
+    snapshot: MetricsSnapshot,
+    injected: (u64, u64, u64),
+    recovered_probes_ok: u64,
+    wall_s: f64,
+}
+
+/// Chaos scenario: one healthy route and one route wrapped in a seeded
+/// fault plan (panics + stalls + errors) share a 4-worker pool under
+/// closed-loop load with a generous request timeout. Asserts the
+/// fault-tolerance invariants and returns the tallies for the JSON.
+fn run_chaos(fast: bool) -> ChaosReport {
+    // Closed-loop with 4 clients per route, so chaotic batches hold ≤ 4
+    // items and the chaotic model sees ≥ per_client model calls — at a
+    // 12% panic rate the chance of a zero-panic run is ≪ 1e-5 even in
+    // fast mode, keeping the `worker_restarts > 0` assertion stable.
+    let per_client = if fast { 100 } else { 200 };
+    let clients_per_route = 4u64;
+    let plan = Arc::new(
+        ChaosPlan::new(42)
+            .with_panics(120)
+            .with_stalls(40, Duration::from_millis(2))
+            .with_errors(40),
+    );
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 4,
+        max_batch: 8,
+        batch_window: Duration::from_micros(200),
+        queue_capacity: 4096,
+        request_timeout: Some(Duration::from_secs(2)),
+        ..ServerConfig::default()
+    });
+    coord.register("healthy", ModelKind::net(test_net()));
+    coord.register("chaotic", ModelKind::chaos(ModelKind::net(test_net()), plan.clone()));
+    let handle = Arc::new(coord.start());
+    let healthy = Arc::new(Outcomes::default());
+    let chaotic = Arc::new(Outcomes::default());
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for (route, tally) in [("healthy", &healthy), ("chaotic", &chaotic)] {
+        for c in 0..clients_per_route {
+            let h = handle.clone();
+            let tally = tally.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(1000 + c);
+                for _ in 0..per_client {
+                    let v = Tensor::random(N, 2, &mut rng);
+                    tally.record(&h.infer(route, v));
+                }
+            }));
+        }
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let snapshot = handle.metrics();
+    // Recovery: after the storm, a respawned pool serves healthy traffic.
+    let mut rng = Rng::new(77);
+    let mut recovered_probes_ok = 0u64;
+    for _ in 0..20 {
+        if handle.infer("healthy", Tensor::random(N, 2, &mut rng)).is_ok() {
+            recovered_probes_ok += 1;
+        }
+    }
+    match Arc::try_unwrap(handle) {
+        Ok(h) => h.shutdown(),
+        Err(_) => unreachable!(),
+    }
+
+    let submitted_per_route = clients_per_route * per_client;
+    let report = ChaosReport {
+        healthy: Arc::try_unwrap(healthy).ok().unwrap(),
+        chaotic: Arc::try_unwrap(chaotic).ok().unwrap(),
+        submitted_per_route,
+        snapshot,
+        injected: plan.injected(),
+        recovered_probes_ok,
+        wall_s,
+    };
+
+    // Invariants (the acceptance gate for the fault-tolerant coordinator).
+    assert_eq!(
+        report.healthy.total(),
+        submitted_per_route,
+        "healthy route lost or duplicated terminal outcomes"
+    );
+    assert_eq!(
+        report.chaotic.total(),
+        submitted_per_route,
+        "chaotic route lost or duplicated terminal outcomes"
+    );
+    assert!(
+        report.healthy.availability() >= 0.99,
+        "healthy-route availability {} < 0.99 under chaos",
+        report.healthy.availability()
+    );
+    assert!(
+        report.snapshot.worker_restarts > 0,
+        "no worker was ever respawned despite injected panics ({:?} injected)",
+        report.injected
+    );
+    assert!(
+        report.snapshot.batch_panics > 0,
+        "no batch panic was caught despite injected panics"
+    );
+    assert_eq!(
+        report.recovered_probes_ok, 20,
+        "pool did not recover after the chaos storm"
+    );
+    report
+}
+
+struct OverloadReport {
+    submitted: u64,
+    outcomes: Outcomes,
+    snapshot: MetricsSnapshot,
+}
+
+/// Overload scenario: a single worker pinned by an always-stalling model,
+/// a 5ms request timeout, and an inflight cap of 2 — a burst of submits
+/// must split cleanly into admission sheds, deadline sheds, and (late)
+/// responses, with both shed counters provably non-zero.
+fn run_overload() -> OverloadReport {
+    let plan = Arc::new(ChaosPlan::new(7).with_stalls(1000, Duration::from_millis(200)));
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 1,
+        max_batch: 1,
+        batch_window: Duration::from_micros(0),
+        queue_capacity: 64,
+        request_timeout: Some(Duration::from_millis(5)),
+        max_inflight_per_model: Some(2),
+        ..ServerConfig::default()
+    });
+    coord.register("stuck", ModelKind::chaos(ModelKind::net(test_net()), plan));
+    let handle = coord.start();
+    let mut rng = Rng::new(11);
+    let submitted = 40u64;
+    let outcomes = Outcomes::default();
+    let mut receivers = Vec::new();
+    for _ in 0..submitted {
+        // submit() (not infer) so the burst outruns the stalled worker:
+        // door rejections are tallied immediately, accepted items' typed
+        // outcomes are collected afterwards.
+        match handle.submit("stuck", Tensor::random(N, 2, &mut rng)) {
+            Ok(rx) => receivers.push(rx),
+            Err(e) => outcomes.record(&Err(e)),
+        }
+    }
+    for rx in receivers {
+        match rx.recv_timeout(Duration::from_secs(5)) {
+            Ok(result) => outcomes.record(&result),
+            Err(_) => outcomes.record(&Err(Error::Coordinator(
+                "no terminal outcome delivered".into(),
+            ))),
+        }
+    }
+    let snapshot = handle.metrics();
+    handle.shutdown();
+
+    assert_eq!(
+        outcomes.total(),
+        submitted,
+        "overload burst lost terminal outcomes"
+    );
+    assert!(
+        snapshot.shed_admission > 0,
+        "inflight cap 2 under a 40-deep burst must shed by admission"
+    );
+    assert!(
+        snapshot.shed_expired > 0,
+        "5ms deadline behind a 200ms stall must shed by expiry"
+    );
+    OverloadReport {
+        submitted,
+        outcomes,
+        snapshot,
+    }
+}
+
+fn write_robustness_json(path: &str, chaos: &ChaosReport, overload: &OverloadReport) {
+    let s = &chaos.snapshot;
+    let json = format!(
+        "{{\n  \"bench\": \"coordinator_robustness\",\n  \"n\": {N},\n  \
+         \"chaos\": {{\n    \
+         \"submitted_per_route\": {spr},\n    \
+         \"availability_healthy\": {ah:.4},\n    \
+         \"availability_chaotic\": {ac:.4},\n    \
+         \"healthy_ok\": {hok},\n    \
+         \"chaotic_ok\": {cok},\n    \
+         \"chaotic_typed_errors\": {cerr},\n    \
+         \"chaotic_deadline\": {cdl},\n    \
+         \"p50_latency_ms\": {p50:.3},\n    \
+         \"p99_latency_ms\": {p99:.3},\n    \
+         \"p99_batch_exec_ms\": {p99e:.3},\n    \
+         \"worker_restarts\": {restarts},\n    \
+         \"batch_panics\": {panics},\n    \
+         \"shed_expired\": {shed},\n    \
+         \"injected_panics\": {ip},\n    \
+         \"injected_stalls\": {is},\n    \
+         \"injected_errors\": {ie},\n    \
+         \"recovered_probes_ok\": {rec},\n    \
+         \"wall_s\": {wall:.2}\n  }},\n  \
+         \"overload\": {{\n    \
+         \"submitted\": {osub},\n    \
+         \"ok\": {ook},\n    \
+         \"overloaded\": {oover},\n    \
+         \"deadline\": {odl},\n    \
+         \"shed_admission\": {oadm},\n    \
+         \"shed_expired\": {oexp}\n  }}\n}}\n",
+        spr = chaos.submitted_per_route,
+        ah = chaos.healthy.availability(),
+        ac = chaos.chaotic.availability(),
+        hok = chaos.healthy.ok.load(Ordering::Relaxed),
+        cok = chaos.chaotic.ok.load(Ordering::Relaxed),
+        cerr = chaos.chaotic.typed_error.load(Ordering::Relaxed),
+        cdl = chaos.chaotic.deadline.load(Ordering::Relaxed),
+        p50 = s.p50_latency_s * 1e3,
+        p99 = s.p99_latency_s * 1e3,
+        p99e = s.p99_batch_exec_s * 1e3,
+        restarts = s.worker_restarts,
+        panics = s.batch_panics,
+        shed = s.shed_expired,
+        ip = chaos.injected.0,
+        is = chaos.injected.1,
+        ie = chaos.injected.2,
+        rec = chaos.recovered_probes_ok,
+        wall = chaos.wall_s,
+        osub = overload.submitted,
+        ook = overload.outcomes.ok.load(Ordering::Relaxed),
+        oover = overload.outcomes.overloaded.load(Ordering::Relaxed),
+        odl = overload.outcomes.deadline.load(Ordering::Relaxed),
+        oadm = overload.snapshot.shed_admission,
+        oexp = overload.snapshot.shed_expired,
+    );
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
+    let fast = std::env::var("BENCH_FAST").is_ok();
     println!("== E9: coordinator throughput (closed-loop, 8 clients) ==\n");
 
     let cache = measure_cache();
@@ -191,7 +498,13 @@ fn main() {
         "serving must never run Factor at all (even bypassing the cache)"
     );
 
-    let requests = 2000;
+    let requests = if fast { 400 } else { 2000 };
+    let worker_counts: &[usize] = if fast { &[4] } else { &[1, 2, 4, 8] };
+    let shapes: &[(u64, usize)] = if fast {
+        &[(0, 1), (1000, 64)]
+    } else {
+        &[(0, 1), (200, 16), (1000, 64)]
+    };
     let mut table = Table::new(vec![
         "workers",
         "window",
@@ -205,8 +518,8 @@ fn main() {
     let mut seq_rps = 0f64;
     let mut batched_rps = 0f64;
     let mut batched_snapshot: Option<MetricsSnapshot> = None;
-    for &workers in &[1usize, 2, 4, 8] {
-        for &(window_us, max_batch) in &[(0u64, 1usize), (200, 16), (1000, 64)] {
+    for &workers in worker_counts {
+        for &(window_us, max_batch) in shapes {
             let r = run_load(workers, window_us, max_batch, requests);
             if r.rps > best_rps {
                 best_rps = r.rps;
@@ -246,6 +559,31 @@ fn main() {
         batched_snapshot.as_ref().expect("4-worker batched run"),
         &cache,
     );
+
+    println!("\n== robustness: seeded chaos + overload ==\n");
+    install_chaos_panic_hook();
+    let chaos = run_chaos(fast);
+    println!(
+        "chaos ({} req/route, injected {:?} panic/stall/error): healthy \
+         availability {:.4}, chaotic availability {:.4}, p99 {:.1} ms, \
+         {} worker restarts, {} batch panics caught, pool recovered",
+        chaos.submitted_per_route,
+        chaos.injected,
+        chaos.healthy.availability(),
+        chaos.chaotic.availability(),
+        chaos.snapshot.p99_latency_s * 1e3,
+        chaos.snapshot.worker_restarts,
+        chaos.snapshot.batch_panics,
+    );
+    let overload = run_overload();
+    println!(
+        "overload (burst {} into stalled 1-worker pool): {} admission sheds, \
+         {} deadline sheds, every request got a terminal outcome",
+        overload.submitted,
+        overload.snapshot.shed_admission,
+        overload.snapshot.shed_expired,
+    );
+    write_robustness_json("BENCH_robustness.json", &chaos, &overload);
 
     // PJRT route (single-owner-thread service).
     if std::path::Path::new("artifacts/pair_trace.hlo.txt").exists() {

@@ -88,6 +88,17 @@ pub struct ServerConfig {
     pub batch_window: Duration,
     /// Bounded request-queue capacity (backpressure).
     pub queue_capacity: usize,
+    /// Per-request deadline (`request_timeout_ms`, `0`/absent = off).
+    /// When set, every accepted request is stamped with a deadline;
+    /// expired items are shed by the batcher before dispatch and by
+    /// workers before execution, and `infer` becomes a bounded wait that
+    /// returns [`crate::Error::DeadlineExceeded`].
+    pub request_timeout: Option<Duration>,
+    /// Per-model admission control (`max_inflight_per_model`, `0`/absent =
+    /// unlimited): a route already carrying this many in-flight requests
+    /// sheds new submissions with [`crate::Error::Overloaded`] instead of
+    /// letting one hot model starve the shared queue.
+    pub max_inflight_per_model: Option<usize>,
     /// Explicit bound on the process-wide [`crate::fastmult::PlanCache`]
     /// (number of pre-factored plans kept; `0` = unbounded). `None` (the
     /// default) leaves the global cache's bound untouched — the cache is
@@ -103,6 +114,8 @@ impl Default for ServerConfig {
             max_batch: 16,
             batch_window: Duration::from_micros(200),
             queue_capacity: 1024,
+            request_timeout: None,
+            max_inflight_per_model: None,
             plan_cache_capacity: None,
         }
     }
@@ -224,6 +237,14 @@ impl AppConfig {
             )? as u64),
             queue_capacity: get_usize(&m, "server.queue_capacity", d.server.queue_capacity)?
                 .max(1),
+            request_timeout: match get_usize(&m, "server.request_timeout_ms", 0)? {
+                0 => None,
+                ms => Some(Duration::from_millis(ms as u64)),
+            },
+            max_inflight_per_model: match get_usize(&m, "server.max_inflight_per_model", 0)? {
+                0 => None,
+                n => Some(n),
+            },
             plan_cache_capacity: match m.get("server.plan_cache_capacity") {
                 None => None,
                 Some(v) => Some(v.as_int().and_then(|i| usize::try_from(i).ok()).ok_or_else(
@@ -302,6 +323,8 @@ workers = 2
 max_batch = 8
 batch_window_us = 500
 queue_capacity = 64
+request_timeout_ms = 250
+max_inflight_per_model = 32
 plan_cache_capacity = 128
 "#,
         )
@@ -313,6 +336,8 @@ plan_cache_capacity = 128
         assert_eq!(c.training.optimizer, "sgd");
         assert_eq!(c.model.precision, Precision::F32);
         assert_eq!(c.server.batch_window, Duration::from_micros(500));
+        assert_eq!(c.server.request_timeout, Some(Duration::from_millis(250)));
+        assert_eq!(c.server.max_inflight_per_model, Some(32));
         assert_eq!(c.server.plan_cache_capacity, Some(128));
         assert_eq!(c.artifact.as_deref(), Some("artifacts/model.hlo.txt"));
     }
@@ -326,7 +351,19 @@ plan_cache_capacity = 128
         assert!(AppConfig::from_text("[network]\nn = \"five\"").is_err());
         assert!(AppConfig::from_text("[server]\nplan_cache_capacity = \"big\"").is_err());
         assert!(AppConfig::from_text("[server]\nplan_cache_capacity = -1").is_err());
+        assert!(AppConfig::from_text("[server]\nrequest_timeout_ms = \"soon\"").is_err());
+        assert!(AppConfig::from_text("[server]\nmax_inflight_per_model = -3").is_err());
         assert!(AppConfig::from_text("[model]\nprecision = \"f16\"").is_err());
+    }
+
+    #[test]
+    fn zero_disables_deadline_and_admission() {
+        let c = AppConfig::from_text(
+            "[server]\nrequest_timeout_ms = 0\nmax_inflight_per_model = 0",
+        )
+        .unwrap();
+        assert_eq!(c.server.request_timeout, None);
+        assert_eq!(c.server.max_inflight_per_model, None);
     }
 
     #[test]

@@ -1,13 +1,21 @@
 //! The batching loop: drain the request queue into per-model batches
 //! bounded by `max_batch` and `batch_window`, then hand batches to the
-//! worker pool.
+//! worker pool through a poison-proof [`BatchQueue`].
+//!
+//! Robustness duties on this thread (see `docs/serving_robustness.md`):
+//! items whose deadline already passed are **shed before dispatch** — the
+//! waiter gets a typed [`Error::DeadlineExceeded`] immediately instead of
+//! wasting a worker's schedule walk — and dispatch goes through a shared
+//! injector queue rather than an `Arc<Mutex<Receiver>>`, so a panicking
+//! worker can never poison the fan-out path for its siblings.
 
 use super::metrics::Metrics;
-use crate::error::Result;
+use super::server::InflightGuard;
+use crate::error::{Error, Result};
 use crate::tensor::Tensor;
-use std::collections::HashMap;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 /// One enqueued request.
@@ -15,7 +23,21 @@ pub(crate) struct WorkItem {
     pub model: String,
     pub input: Tensor,
     pub enqueued: Instant,
-    pub respond: Sender<Result<Tensor>>,
+    /// Absolute deadline stamped at submit (`[server] request_timeout_ms`);
+    /// `None` means the request never expires server-side.
+    pub deadline: Option<Instant>,
+    pub respond: std::sync::mpsc::Sender<Result<Tensor>>,
+    /// Releases the per-model admission slot when the item reaches any
+    /// terminal outcome (response sent, typed error sent, or shed) — the
+    /// guard drops with the item, so no path can leak an inflight count.
+    pub inflight: Option<InflightGuard>,
+}
+
+impl WorkItem {
+    /// Whether the item's deadline has passed as of `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
+    }
 }
 
 /// A batch of same-model requests handed to a worker.
@@ -24,15 +46,157 @@ pub(crate) struct Batch {
     pub items: Vec<WorkItem>,
 }
 
+/// Recover a mutex guard even if a previous holder panicked. The queue's
+/// critical sections never run model code, so the protected state is
+/// always consistent; recovering (instead of unwrapping) means one
+/// panicked thread can never wedge the rest of the pool.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+struct QueueInner {
+    queue: VecDeque<Batch>,
+    closed: bool,
+}
+
+/// Poison-proof multi-consumer batch injector: the batcher pushes, workers
+/// pop. Replaces the old `Arc<Mutex<Receiver<Batch>>>` fan-out whose
+/// poisoning cascaded a single worker panic through the whole pool.
+pub(crate) struct BatchQueue {
+    inner: Mutex<QueueInner>,
+    ready: Condvar,
+}
+
+impl BatchQueue {
+    pub fn new() -> Arc<Self> {
+        Arc::new(BatchQueue {
+            inner: Mutex::new(QueueInner {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        })
+    }
+
+    /// Enqueue a batch; returns `false` if the queue has been closed.
+    pub fn push(&self, batch: Batch) -> bool {
+        let mut g = lock_recover(&self.inner);
+        if g.closed {
+            return false;
+        }
+        g.queue.push_back(batch);
+        drop(g);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Blocking pop; `None` means the queue is closed **and** drained, so
+    /// the worker should exit.
+    pub fn pop(&self) -> Option<Batch> {
+        let mut g = lock_recover(&self.inner);
+        loop {
+            if let Some(b) = g.queue.pop_front() {
+                return Some(b);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self
+                .ready
+                .wait(g)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Pop with a timeout (used by tests); `None` means nothing arrived
+    /// within `timeout` (or the queue is closed and drained).
+    #[cfg(test)]
+    pub fn try_pop_for(&self, timeout: Duration) -> Option<Batch> {
+        let deadline = Instant::now() + timeout;
+        let mut g = lock_recover(&self.inner);
+        loop {
+            if let Some(b) = g.queue.pop_front() {
+                return Some(b);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self
+                .ready
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            g = guard;
+        }
+    }
+
+    /// Close the queue: no further pushes are accepted; blocked poppers
+    /// drain what remains and then see `None`.
+    pub fn close(&self) {
+        let mut g = lock_recover(&self.inner);
+        g.closed = true;
+        drop(g);
+        self.ready.notify_all();
+    }
+
+    /// Closed and empty — nothing will ever come out again. Stable once
+    /// true (closing forbids pushes), which the supervisor relies on when
+    /// deciding whether a dead worker still needs a replacement.
+    pub fn is_drained(&self) -> bool {
+        let g = lock_recover(&self.inner);
+        g.closed && g.queue.is_empty()
+    }
+}
+
+/// Shed every expired item from `items`, delivering the typed
+/// [`Error::DeadlineExceeded`] terminal outcome to each waiter; returns
+/// the still-live remainder in order. Shared by the batcher (shed before
+/// dispatch) and the workers (shed before execution).
+pub(crate) fn shed_expired(
+    items: Vec<WorkItem>,
+    metrics: &Metrics,
+    now: Instant,
+) -> Vec<WorkItem> {
+    let mut live = Vec::with_capacity(items.len());
+    for item in items {
+        if item.expired(now) {
+            metrics.on_shed_expired();
+            let _ = item.respond.send(Err(Error::DeadlineExceeded));
+        } else {
+            live.push(item);
+        }
+    }
+    live
+}
+
+/// Shed expired items, then dispatch whatever remains (skipping batches
+/// shed down to nothing). Returns `false` if the dispatch queue closed.
+fn dispatch_batch(
+    model: String,
+    items: Vec<WorkItem>,
+    dispatch: &BatchQueue,
+    metrics: &Metrics,
+) -> bool {
+    let items = shed_expired(items, metrics, Instant::now());
+    if items.is_empty() {
+        return true;
+    }
+    metrics.on_batch(items.len());
+    dispatch.push(Batch { model, items })
+}
+
 /// Flush every pending group whose *own* oldest item has waited out the
 /// window — younger models keep accumulating until their turn. A group's
 /// oldest item is found by min, not `first()`: submitters stamp `enqueued`
 /// before sending, so arrival order need not match stamp order. Returns
 /// the recomputed window anchor (min enqueue over what remains pending),
-/// or `None` in the outer `Option` if the dispatch channel closed.
+/// or `None` in the outer `Option` if the dispatch queue closed.
 fn flush_expired(
     pending: &mut HashMap<String, Vec<WorkItem>>,
-    dispatch: &Sender<Batch>,
+    dispatch: &BatchQueue,
     metrics: &Metrics,
     window: Duration,
 ) -> Option<Option<Instant>> {
@@ -48,8 +212,7 @@ fn flush_expired(
         .collect();
     for model in expired {
         if let Some(items) = pending.remove(&model) {
-            metrics.on_batch(items.len());
-            if dispatch.send(Batch { model, items }).is_err() {
+            if !dispatch_batch(model, items, dispatch, metrics) {
                 return None;
             }
         }
@@ -62,13 +225,25 @@ fn flush_expired(
     )
 }
 
-/// Run the batching loop until the request channel closes. Flushes
-/// per-model groups when either `max_batch` is reached or the oldest item
-/// in the group exceeds `window`.
+/// Run the batching loop until the request channel closes, then close the
+/// dispatch queue so the worker pool drains and exits. Flushes per-model
+/// groups when either `max_batch` is reached or the oldest item in the
+/// group exceeds `window`.
 pub(crate) fn run(
     rx: Receiver<WorkItem>,
-    dispatch: Sender<Batch>,
+    dispatch: Arc<BatchQueue>,
     metrics: Arc<Metrics>,
+    max_batch: usize,
+    window: Duration,
+) {
+    run_inner(rx, &dispatch, &metrics, max_batch, window);
+    dispatch.close();
+}
+
+fn run_inner(
+    rx: Receiver<WorkItem>,
+    dispatch: &BatchQueue,
+    metrics: &Metrics,
     max_batch: usize,
     window: Duration,
 ) {
@@ -92,8 +267,7 @@ pub(crate) fn run(
                 group.push(item);
                 if group.len() >= max_batch {
                     let items = pending.remove(&model).unwrap();
-                    metrics.on_batch(items.len());
-                    if dispatch.send(Batch { model, items }).is_err() {
+                    if !dispatch_batch(model, items, dispatch, metrics) {
                         return;
                     }
                     // Recompute the window anchor from what is still
@@ -110,7 +284,7 @@ pub(crate) fn run(
                 // expired windows here too, or a quiet model's partial
                 // batch would starve behind a busy model's stream.
                 if oldest.is_some_and(|t| t.elapsed() >= window) {
-                    match flush_expired(&mut pending, &dispatch, &metrics, window) {
+                    match flush_expired(&mut pending, dispatch, metrics, window) {
                         Some(o) => oldest = o,
                         None => return,
                     }
@@ -121,16 +295,18 @@ pub(crate) fn run(
                 // same stale-anchor hazard as the max_batch arm — the
                 // global `oldest` belongs to one group — so only the
                 // groups whose own window expired are flushed.
-                match flush_expired(&mut pending, &dispatch, &metrics, window) {
+                match flush_expired(&mut pending, dispatch, metrics, window) {
                     Some(o) => oldest = o,
                     None => return,
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
-                // Shutdown: flush and exit.
+                // Shutdown: flush and exit (expired items still shed, so
+                // every waiter gets its terminal outcome before the close).
                 for (model, items) in pending.drain() {
-                    metrics.on_batch(items.len());
-                    let _ = dispatch.send(Batch { model, items });
+                    if !dispatch_batch(model, items, dispatch, metrics) {
+                        return;
+                    }
                 }
                 return;
             }
@@ -151,19 +327,28 @@ mod tests {
                 model: model.into(),
                 input: Tensor::zeros(2, 1),
                 enqueued: Instant::now(),
+                deadline: None,
                 respond: tx,
+                inflight: None,
             },
             rx,
         )
     }
 
+    fn expired_item(model: &str) -> (WorkItem, Receiver<Result<Tensor>>) {
+        let (mut it, rx) = item(model);
+        it.deadline = Some(Instant::now() - Duration::from_millis(1));
+        (it, rx)
+    }
+
     #[test]
     fn batches_up_to_max() {
         let (tx, rx) = mpsc::channel::<WorkItem>();
-        let (dtx, drx) = mpsc::channel::<Batch>();
+        let q = BatchQueue::new();
         let metrics = Arc::new(Metrics::default());
         let m2 = metrics.clone();
-        let h = thread::spawn(move || run(rx, dtx, m2, 2, Duration::from_millis(100)));
+        let q2 = q.clone();
+        let h = thread::spawn(move || run(rx, q2, m2, 2, Duration::from_millis(100)));
         let (a, _ra) = item("m");
         let (b, _rb) = item("m");
         let (c, _rc) = item("m");
@@ -171,24 +356,26 @@ mod tests {
         tx.send(b).unwrap();
         tx.send(c).unwrap();
         // First two flush at max_batch = 2.
-        let batch = drx.recv_timeout(Duration::from_secs(1)).unwrap();
+        let batch = q.try_pop_for(Duration::from_secs(1)).unwrap();
         assert_eq!(batch.items.len(), 2);
         drop(tx); // shutdown flushes the remainder
-        let tail = drx.recv_timeout(Duration::from_secs(1)).unwrap();
+        let tail = q.try_pop_for(Duration::from_secs(1)).unwrap();
         assert_eq!(tail.items.len(), 1);
         h.join().unwrap();
         assert_eq!(metrics.snapshot().batches, 2);
+        assert!(q.is_drained(), "batcher must close the queue on exit");
     }
 
     #[test]
     fn window_flushes_partial_batches() {
         let (tx, rx) = mpsc::channel::<WorkItem>();
-        let (dtx, drx) = mpsc::channel::<Batch>();
+        let q = BatchQueue::new();
         let metrics = Arc::new(Metrics::default());
-        let h = thread::spawn(move || run(rx, dtx, metrics, 100, Duration::from_millis(5)));
+        let q2 = q.clone();
+        let h = thread::spawn(move || run(rx, q2, metrics, 100, Duration::from_millis(5)));
         let (a, _ra) = item("m");
         tx.send(a).unwrap();
-        let batch = drx.recv_timeout(Duration::from_secs(1)).unwrap();
+        let batch = q.try_pop_for(Duration::from_secs(1)).unwrap();
         assert_eq!(batch.items.len(), 1);
         drop(tx);
         h.join().unwrap();
@@ -205,9 +392,10 @@ mod tests {
         // fix waits the full 900ms — the 675ms probe sits 225ms clear of
         // both, tolerating CI scheduler jitter.
         let (tx, rx) = mpsc::channel::<WorkItem>();
-        let (dtx, drx) = mpsc::channel::<Batch>();
+        let q = BatchQueue::new();
         let metrics = Arc::new(Metrics::default());
-        let h = thread::spawn(move || run(rx, dtx, metrics, 2, Duration::from_millis(900)));
+        let q2 = q.clone();
+        let h = thread::spawn(move || run(rx, q2, metrics, 2, Duration::from_millis(900)));
         // a1 arrives, ages for half the window…
         let (a1, _r1) = item("a");
         tx.send(a1).unwrap();
@@ -217,16 +405,16 @@ mod tests {
         tx.send(b1).unwrap();
         let (a2, _r3) = item("a");
         tx.send(a2).unwrap();
-        let first = drx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let first = q.try_pop_for(Duration::from_secs(5)).unwrap();
         assert_eq!(first.model, "a");
         assert_eq!(first.items.len(), 2);
         // With the stale anchor, b's window inherited a1's age and fired
         // ~450ms after b was enqueued; it must wait out its own 900ms.
         assert!(
-            drx.recv_timeout(Duration::from_millis(675)).is_err(),
+            q.try_pop_for(Duration::from_millis(675)).is_none(),
             "model-b batch flushed before its own window expired"
         );
-        let late = drx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let late = q.try_pop_for(Duration::from_secs(5)).unwrap();
         assert_eq!(late.model, "b");
         assert_eq!(late.items.len(), 1);
         drop(tx);
@@ -239,9 +427,10 @@ mod tests {
     #[test]
     fn timeout_flushes_only_expired_groups() {
         let (tx, rx) = mpsc::channel::<WorkItem>();
-        let (dtx, drx) = mpsc::channel::<Batch>();
+        let q = BatchQueue::new();
         let metrics = Arc::new(Metrics::default());
-        let h = thread::spawn(move || run(rx, dtx, metrics, 100, Duration::from_millis(900)));
+        let q2 = q.clone();
+        let h = thread::spawn(move || run(rx, q2, metrics, 100, Duration::from_millis(900)));
         // a ages for half the window, then b arrives.
         let (a1, _r1) = item("a");
         tx.send(a1).unwrap();
@@ -249,17 +438,17 @@ mod tests {
         let (b1, _r2) = item("b");
         tx.send(b1).unwrap();
         // a's window expires first: a flushes alone, b stays pending.
-        let first = drx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let first = q.try_pop_for(Duration::from_secs(5)).unwrap();
         assert_eq!(first.model, "a");
         assert_eq!(first.items.len(), 1);
         // b is ~450ms into its 900ms window at a's flush, so it fires
         // ~450ms later; the 225ms probe sits 225ms clear of that deadline
         // (and a buggy full drain would land b's batch inside it).
         assert!(
-            drx.recv_timeout(Duration::from_millis(225)).is_err(),
+            q.try_pop_for(Duration::from_millis(225)).is_none(),
             "model-b flushed on model-a's deadline"
         );
-        let late = drx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let late = q.try_pop_for(Duration::from_secs(5)).unwrap();
         assert_eq!(late.model, "b");
         assert_eq!(late.items.len(), 1);
         drop(tx);
@@ -269,20 +458,101 @@ mod tests {
     #[test]
     fn groups_by_model() {
         let (tx, rx) = mpsc::channel::<WorkItem>();
-        let (dtx, drx) = mpsc::channel::<Batch>();
+        let q = BatchQueue::new();
         let metrics = Arc::new(Metrics::default());
-        let h = thread::spawn(move || run(rx, dtx, metrics, 10, Duration::from_millis(5)));
+        let q2 = q.clone();
+        let h = thread::spawn(move || run(rx, q2, metrics, 10, Duration::from_millis(5)));
         let (a, _ra) = item("x");
         let (b, _rb) = item("y");
         tx.send(a).unwrap();
         tx.send(b).unwrap();
-        let b1 = drx.recv_timeout(Duration::from_secs(1)).unwrap();
-        let b2 = drx.recv_timeout(Duration::from_secs(1)).unwrap();
+        let b1 = q.try_pop_for(Duration::from_secs(1)).unwrap();
+        let b2 = q.try_pop_for(Duration::from_secs(1)).unwrap();
         let mut models = vec![b1.model, b2.model];
         models.sort();
         assert_eq!(models, vec!["x".to_string(), "y".to_string()]);
         assert_eq!(b1.items.len() + b2.items.len(), 2);
         drop(tx);
         h.join().unwrap();
+    }
+
+    /// Expired items are shed before dispatch: the waiter gets the typed
+    /// deadline error, the live batch-mate still flows through, and the
+    /// dispatched batch size (and `mean_batch_size`) excludes the shed
+    /// item.
+    #[test]
+    fn expired_items_are_shed_before_dispatch() {
+        let (tx, rx) = mpsc::channel::<WorkItem>();
+        let q = BatchQueue::new();
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let q2 = q.clone();
+        let h = thread::spawn(move || run(rx, q2, m2, 2, Duration::from_millis(50)));
+        let (dead, dead_rx) = expired_item("m");
+        let (live, _live_rx) = item("m");
+        tx.send(dead).unwrap();
+        tx.send(live).unwrap();
+        let batch = q.try_pop_for(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.items.len(), 1, "expired item must not be dispatched");
+        assert!(matches!(
+            dead_rx.recv_timeout(Duration::from_secs(1)).unwrap(),
+            Err(Error::DeadlineExceeded)
+        ));
+        drop(tx);
+        h.join().unwrap();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.shed_expired, 1);
+        assert_eq!(snap.batches, 1);
+        assert!((snap.mean_batch_size - 1.0).abs() < 1e-12);
+    }
+
+    /// A group shed down to nothing must not dispatch an empty batch.
+    #[test]
+    fn fully_expired_group_dispatches_nothing() {
+        let (tx, rx) = mpsc::channel::<WorkItem>();
+        let q = BatchQueue::new();
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let q2 = q.clone();
+        let h = thread::spawn(move || run(rx, q2, m2, 2, Duration::from_millis(5)));
+        let (d1, r1) = expired_item("m");
+        let (d2, r2) = expired_item("m");
+        tx.send(d1).unwrap();
+        tx.send(d2).unwrap();
+        assert!(q.try_pop_for(Duration::from_millis(200)).is_none());
+        for r in [r1, r2] {
+            assert!(matches!(
+                r.recv_timeout(Duration::from_secs(1)).unwrap(),
+                Err(Error::DeadlineExceeded)
+            ));
+        }
+        drop(tx);
+        h.join().unwrap();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.shed_expired, 2);
+        assert_eq!(snap.batches, 0);
+    }
+
+    /// The queue recovers its mutex even after a panic poisoned it: a
+    /// holder panicking mid-push must not wedge later pushes or pops.
+    #[test]
+    fn batch_queue_survives_poisoning() {
+        let q = BatchQueue::new();
+        let q2 = q.clone();
+        let _ = thread::spawn(move || {
+            let _g = q2.inner.lock().unwrap();
+            panic!("poison the queue mutex");
+        })
+        .join();
+        // The mutex is now poisoned; every operation must still work.
+        let (it, _rx) = item("m");
+        assert!(q.push(Batch {
+            model: "m".into(),
+            items: vec![it],
+        }));
+        assert!(q.try_pop_for(Duration::from_millis(100)).is_some());
+        q.close();
+        assert!(q.pop().is_none());
+        assert!(q.is_drained());
     }
 }

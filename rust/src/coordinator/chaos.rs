@@ -1,0 +1,193 @@
+//! Seeded fault injection for the serving stack ("chaos harness").
+//!
+//! A [`ChaosPlan`] decides, per model call, whether to inject a panic, a
+//! stall, or a typed error — on a schedule that is a pure function of
+//! `(seed, call sequence number)`, so a failing run replays exactly. The
+//! plan is consumed through [`super::ModelKind::chaos`], which wraps any
+//! servable model; faults are injected **at the wrapper**, before the
+//! inner model runs, so an injected panic unwinds through coordinator
+//! code only and can never corrupt the inner model's shared state.
+//!
+//! This is a test/bench harness — the stress suite and
+//! `benches/coordinator_throughput.rs` drive it to certify the
+//! fault-tolerance invariants (`docs/serving_robustness.md`). It has no
+//! place in a production route.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Injected panic payloads start with this prefix so test panic hooks can
+/// keep expected chaos noise off stderr while real panics still print.
+pub const CHAOS_PANIC_PREFIX: &str = "chaos:";
+
+/// What the plan injects for one model call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Execute normally.
+    None,
+    /// Panic before touching the inner model.
+    Panic,
+    /// Sleep for the plan's stall duration, then execute normally —
+    /// models a wedged dependency; with a request timeout configured the
+    /// deadline machinery sheds around it.
+    Stall,
+    /// Return a typed error without executing.
+    Error,
+}
+
+/// A seeded fault schedule shared by every worker serving the wrapped
+/// model. Call-site agnostic: the `k`-th model call (batch or single)
+/// draws the `k`-th roll regardless of which thread makes it, so a given
+/// `(seed, rates)` pair always injects the same fault multiset.
+#[derive(Debug)]
+pub struct ChaosPlan {
+    seed: u64,
+    panic_per_mille: u64,
+    stall_per_mille: u64,
+    error_per_mille: u64,
+    stall_for: Duration,
+    calls: AtomicU64,
+    injected_panics: AtomicU64,
+    injected_stalls: AtomicU64,
+    injected_errors: AtomicU64,
+}
+
+/// SplitMix64 finaliser: a well-mixed bijection on `u64`, enough to turn
+/// `(seed, sequence)` into an independent-looking roll.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl ChaosPlan {
+    /// A plan that injects nothing until rates are added.
+    pub fn new(seed: u64) -> Self {
+        ChaosPlan {
+            seed,
+            panic_per_mille: 0,
+            stall_per_mille: 0,
+            error_per_mille: 0,
+            stall_for: Duration::from_millis(1),
+            calls: AtomicU64::new(0),
+            injected_panics: AtomicU64::new(0),
+            injected_stalls: AtomicU64::new(0),
+            injected_errors: AtomicU64::new(0),
+        }
+    }
+
+    /// Inject a panic on `per_mille`/1000 of calls (clamped to 1000).
+    pub fn with_panics(mut self, per_mille: u64) -> Self {
+        self.panic_per_mille = per_mille.min(1000);
+        self
+    }
+
+    /// Inject a stall of `stall_for` on `per_mille`/1000 of calls.
+    pub fn with_stalls(mut self, per_mille: u64, stall_for: Duration) -> Self {
+        self.stall_per_mille = per_mille.min(1000);
+        self.stall_for = stall_for;
+        self
+    }
+
+    /// Inject a typed error on `per_mille`/1000 of calls.
+    pub fn with_errors(mut self, per_mille: u64) -> Self {
+        self.error_per_mille = per_mille.min(1000);
+        self
+    }
+
+    /// How long an injected stall sleeps.
+    pub fn stall_duration(&self) -> Duration {
+        self.stall_for
+    }
+
+    /// Draw the fault for the next model call. The roll partitions
+    /// `[0, 1000)` into panic | stall | error | healthy bands, so the
+    /// rates are exact long-run frequencies (per mille).
+    pub fn next_fault(&self) -> Fault {
+        let seq = self.calls.fetch_add(1, Ordering::Relaxed);
+        let roll = mix(self.seed ^ seq.wrapping_mul(0xA076_1D64_78BD_642F)) % 1000;
+        if roll < self.panic_per_mille {
+            self.injected_panics.fetch_add(1, Ordering::Relaxed);
+            Fault::Panic
+        } else if roll < self.panic_per_mille + self.stall_per_mille {
+            self.injected_stalls.fetch_add(1, Ordering::Relaxed);
+            Fault::Stall
+        } else if roll < self.panic_per_mille + self.stall_per_mille + self.error_per_mille {
+            self.injected_errors.fetch_add(1, Ordering::Relaxed);
+            Fault::Error
+        } else {
+            Fault::None
+        }
+    }
+
+    /// `(panics, stalls, errors)` injected so far — the harness reports
+    /// these next to the coordinator's own robustness counters.
+    pub fn injected(&self) -> (u64, u64, u64) {
+        (
+            self.injected_panics.load(Ordering::Relaxed),
+            self.injected_stalls.load(Ordering::Relaxed),
+            self.injected_errors.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Model calls observed so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(plan: &ChaosPlan, n: usize) -> Vec<Fault> {
+        (0..n).map(|_| plan.next_fault()).collect()
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let a = ChaosPlan::new(7).with_panics(100).with_errors(100);
+        let b = ChaosPlan::new(7).with_panics(100).with_errors(100);
+        assert_eq!(drain(&a, 500), drain(&b, 500));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = ChaosPlan::new(1).with_panics(500);
+        let b = ChaosPlan::new(2).with_panics(500);
+        assert_ne!(drain(&a, 200), drain(&b, 200));
+    }
+
+    #[test]
+    fn zero_rates_inject_nothing() {
+        let plan = ChaosPlan::new(3);
+        assert!(drain(&plan, 300).iter().all(|f| *f == Fault::None));
+        assert_eq!(plan.injected(), (0, 0, 0));
+        assert_eq!(plan.calls(), 300);
+    }
+
+    #[test]
+    fn full_rate_always_faults() {
+        let plan = ChaosPlan::new(4).with_panics(1000);
+        assert!(drain(&plan, 100).iter().all(|f| *f == Fault::Panic));
+        assert_eq!(plan.injected().0, 100);
+    }
+
+    #[test]
+    fn rates_partition_without_overlap() {
+        let plan = ChaosPlan::new(5)
+            .with_panics(300)
+            .with_stalls(300, Duration::from_millis(1))
+            .with_errors(400);
+        let faults = drain(&plan, 2000);
+        assert!(faults.iter().all(|f| *f != Fault::None), "bands sum to 1000");
+        let (p, s, e) = plan.injected();
+        assert_eq!(p + s + e, 2000);
+        // Each band's empirical frequency lands near its rate.
+        let near = |got: u64, want: f64| (got as f64 / 2000.0 - want).abs() < 0.05;
+        assert!(near(p, 0.3), "panics {p}");
+        assert!(near(s, 0.3), "stalls {s}");
+        assert!(near(e, 0.4), "errors {e}");
+    }
+}

@@ -1,13 +1,141 @@
-//! Serving metrics: counters, latency aggregates, per-batch execution
-//! latency, plan/schedule-cache effectiveness and scratch-arena health.
+//! Serving metrics: counters, lock-free log-bucketed latency histograms
+//! (p50/p95/p99 for request end-to-end and whole-batch execution),
+//! robustness counters (sheds, worker restarts, caught panics), plan/
+//! schedule-cache effectiveness and scratch-arena health.
 
 use crate::fastmult::{arena_stats, exec_stats, ops_shared_total, planner_totals, PlanCache};
 use crate::nn::fused_batch_stats;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
 
-/// Shared metrics sink updated by the batcher and workers.
+/// Sub-bucket resolution of the latency histograms: each power-of-two
+/// octave is split into `2^SUB_BITS` linear sub-buckets, bounding the
+/// relative quantile error at ~`1/2^SUB_BITS` (≈6% here) — the classic
+/// log-linear (HdrHistogram-style) layout, sized so one histogram is a
+/// few KiB of atomics.
+const SUB_BITS: u32 = 3;
+const SUB: usize = 1 << SUB_BITS;
+/// Nanosecond values below this index directly (exact small-value path).
+const LINEAR_MAX: u64 = 2 * SUB as u64;
+/// Octaves above the linear range; covers every representable `u64` ns
+/// (`2^63` ns ≈ 292 years) without saturating a real measurement.
+const OCTAVES: usize = 60;
+const NUM_BUCKETS: usize = LINEAR_MAX as usize + OCTAVES * SUB;
+
+fn bucket_index(ns: u64) -> usize {
+    if ns < LINEAR_MAX {
+        return ns as usize;
+    }
+    let octave = 63 - ns.leading_zeros();
+    let sub = ((ns >> (octave - SUB_BITS)) as usize) & (SUB - 1);
+    let idx = LINEAR_MAX as usize + ((octave - (SUB_BITS + 1)) as usize) * SUB + sub;
+    idx.min(NUM_BUCKETS - 1)
+}
+
+/// Representative value (bucket midpoint) in nanoseconds.
+fn bucket_value_ns(idx: usize) -> f64 {
+    if (idx as u64) < LINEAR_MAX {
+        return idx as f64;
+    }
+    let g = idx - LINEAR_MAX as usize;
+    let octave = SUB_BITS + (g / SUB) as u32 + 1;
+    let sub = (g % SUB) as u64;
+    let width = 1u64 << (octave - SUB_BITS);
+    let lower = (1u64 << octave) + sub * width;
+    lower as f64 + width as f64 / 2.0
+}
+
+/// Lock-free latency histogram: log-bucketed atomic counters plus exact
+/// running mean/max. Recording is a handful of relaxed atomic ops — no
+/// mutex anywhere, so a panicking recorder can never poison an unrelated
+/// thread's metrics path (the old `Mutex<LatencyAgg>` could).
+#[derive(Debug)]
+pub(crate) struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Point-in-time percentile/mean/max readout of one histogram.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencyStats {
+    /// Samples recorded.
+    pub count: u64,
+    /// Exact mean (seconds).
+    pub mean_s: f64,
+    /// Exact max (seconds).
+    pub max_s: f64,
+    /// Median (seconds, bucket midpoint — ≈6% relative resolution).
+    pub p50_s: f64,
+    /// 95th percentile (seconds).
+    pub p95_s: f64,
+    /// 99th percentile (seconds).
+    pub p99_s: f64,
+}
+
+impl LatencyHistogram {
+    fn record(&self, elapsed: Duration) {
+        let ns = elapsed.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    fn stats(&self) -> LatencyStats {
+        let counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        // Sum the snapshot rather than reading `count`: concurrent
+        // recorders may have bumped one but not the other, and the
+        // quantile walk must be consistent with its own totals.
+        let total: u64 = counts.iter().sum();
+        let quantile = |q: f64| -> f64 {
+            if total == 0 {
+                return 0.0;
+            }
+            let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+            let mut cum = 0u64;
+            for (i, &c) in counts.iter().enumerate() {
+                cum += c;
+                if cum >= rank {
+                    return bucket_value_ns(i) * 1e-9;
+                }
+            }
+            bucket_value_ns(NUM_BUCKETS - 1) * 1e-9
+        };
+        let count = self.count.load(Ordering::Relaxed);
+        LatencyStats {
+            count,
+            mean_s: if count > 0 {
+                self.total_ns.load(Ordering::Relaxed) as f64 * 1e-9 / count as f64
+            } else {
+                0.0
+            },
+            max_s: self.max_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            p50_s: quantile(0.50),
+            p95_s: quantile(0.95),
+            p99_s: quantile(0.99),
+        }
+    }
+}
+
+/// Shared metrics sink updated by the batcher, the workers and the
+/// supervisor. Every recording path is atomic — no mutex to poison.
 #[derive(Debug, Default)]
 pub struct Metrics {
     requests: AtomicU64,
@@ -16,17 +144,14 @@ pub struct Metrics {
     batches: AtomicU64,
     batched_items: AtomicU64,
     rejected: AtomicU64,
-    latency: Mutex<LatencyAgg>,
+    shed_expired: AtomicU64,
+    shed_admission: AtomicU64,
+    worker_restarts: AtomicU64,
+    batch_panics: AtomicU64,
+    latency: LatencyHistogram,
     /// Wall time of whole-batch model executions (the batched fast path),
     /// as opposed to `latency` which is per-request end-to-end.
-    batch_exec: Mutex<LatencyAgg>,
-}
-
-#[derive(Debug, Default)]
-struct LatencyAgg {
-    total_s: f64,
-    max_s: f64,
-    count: u64,
+    batch_exec: LatencyHistogram,
 }
 
 /// Point-in-time snapshot of the metrics.
@@ -36,10 +161,22 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     /// Requests completed successfully.
     pub completed: u64,
-    /// Requests that returned an error.
+    /// Requests that returned an error (worker-side failures plus typed
+    /// door rejections: unknown model, bad shape).
     pub failed: u64,
     /// Requests rejected by backpressure (queue full).
     pub rejected: u64,
+    /// Requests shed because their deadline expired before execution
+    /// (batcher pre-dispatch or worker pre-execution shed points).
+    pub shed_expired: u64,
+    /// Requests shed by per-model admission control
+    /// (`max_inflight_per_model`).
+    pub shed_admission: u64,
+    /// Workers respawned by the supervisor after a panic recycled them.
+    pub worker_restarts: u64,
+    /// Batch executions whose panic was caught and fell back to per-item
+    /// execution.
+    pub batch_panics: u64,
     /// Batches dispatched.
     pub batches: u64,
     /// Mean items per batch.
@@ -48,12 +185,24 @@ pub struct MetricsSnapshot {
     pub mean_latency_s: f64,
     /// Max end-to-end latency (seconds).
     pub max_latency_s: f64,
+    /// Median end-to-end latency (seconds; log-bucketed, ≈6% resolution).
+    pub p50_latency_s: f64,
+    /// 95th-percentile end-to-end latency (seconds).
+    pub p95_latency_s: f64,
+    /// 99th-percentile end-to-end latency (seconds).
+    pub p99_latency_s: f64,
     /// Batches executed by workers (the batched model path).
     pub batch_execs: u64,
     /// Mean wall time of one whole-batch execution (seconds).
     pub mean_batch_exec_s: f64,
     /// Max wall time of one whole-batch execution (seconds).
     pub max_batch_exec_s: f64,
+    /// Median whole-batch execution time (seconds).
+    pub p50_batch_exec_s: f64,
+    /// 95th-percentile whole-batch execution time (seconds).
+    pub p95_batch_exec_s: f64,
+    /// 99th-percentile whole-batch execution time (seconds).
+    pub p99_batch_exec_s: f64,
     /// Global plan-cache hits (process-wide, see
     /// [`crate::fastmult::PlanCache`]).
     pub plan_cache_hits: u64,
@@ -127,6 +276,27 @@ impl Metrics {
     pub fn on_reject(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
+    /// Record a typed rejection at the door (unknown model, bad shape):
+    /// the request never entered the queue but did fail.
+    pub fn on_door_reject(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Record a request shed because its deadline expired.
+    pub fn on_shed_expired(&self) {
+        self.shed_expired.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Record a request shed by per-model admission control.
+    pub fn on_shed_admission(&self) {
+        self.shed_admission.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Record a worker respawn (supervisor).
+    pub fn on_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Record a caught batch-execution panic (per-item fallback taken).
+    pub fn on_batch_panic(&self) {
+        self.batch_panics.fetch_add(1, Ordering::Relaxed);
+    }
     /// Record a dispatched batch of `size` items.
     pub fn on_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
@@ -134,13 +304,7 @@ impl Metrics {
     }
     /// Record one whole-batch model execution taking `elapsed`.
     pub fn on_batch_executed(&self, elapsed: Duration) {
-        let mut agg = self.batch_exec.lock().unwrap();
-        let s = elapsed.as_secs_f64();
-        agg.total_s += s;
-        agg.count += 1;
-        if s > agg.max_s {
-            agg.max_s = s;
-        }
+        self.batch_exec.record(elapsed);
     }
     /// Record a completed request with its end-to-end latency.
     pub fn on_complete(&self, latency: Duration, ok: bool) {
@@ -149,72 +313,55 @@ impl Metrics {
         } else {
             self.failed.fetch_add(1, Ordering::Relaxed);
         }
-        let mut agg = self.latency.lock().unwrap();
-        let s = latency.as_secs_f64();
-        agg.total_s += s;
-        agg.count += 1;
-        if s > agg.max_s {
-            agg.max_s = s;
-        }
+        self.latency.record(latency);
     }
 
     /// Take a snapshot (includes the process-wide plan-cache counters).
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let (latency_mean, latency_max) = {
-            let agg = self.latency.lock().unwrap();
-            (
-                if agg.count > 0 {
-                    agg.total_s / agg.count as f64
-                } else {
-                    0.0
-                },
-                agg.max_s,
-            )
-        };
-        let (exec_count, exec_mean, exec_max) = {
-            let agg = self.batch_exec.lock().unwrap();
-            (
-                agg.count,
-                if agg.count > 0 {
-                    agg.total_s / agg.count as f64
-                } else {
-                    0.0
-                },
-                agg.max_s,
-            )
-        };
+        let lat = self.latency.stats();
+        let exec = self.batch_exec.stats();
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batched_items.load(Ordering::Relaxed);
         let cache = PlanCache::global().stats();
         let arena = arena_stats();
         let fused = fused_batch_stats();
-        let exec = exec_stats();
+        let sched_exec = exec_stats();
         let planner = planner_totals();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            shed_expired: self.shed_expired.load(Ordering::Relaxed),
+            shed_admission: self.shed_admission.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            batch_panics: self.batch_panics.load(Ordering::Relaxed),
             batches,
             mean_batch_size: if batches > 0 {
                 items as f64 / batches as f64
             } else {
                 0.0
             },
-            mean_latency_s: latency_mean,
-            max_latency_s: latency_max,
-            batch_execs: exec_count,
-            mean_batch_exec_s: exec_mean,
-            max_batch_exec_s: exec_max,
+            mean_latency_s: lat.mean_s,
+            max_latency_s: lat.max_s,
+            p50_latency_s: lat.p50_s,
+            p95_latency_s: lat.p95_s,
+            p99_latency_s: lat.p99_s,
+            batch_execs: exec.count,
+            mean_batch_exec_s: exec.mean_s,
+            max_batch_exec_s: exec.max_s,
+            p50_batch_exec_s: exec.p50_s,
+            p95_batch_exec_s: exec.p95_s,
+            p99_batch_exec_s: exec.p99_s,
             plan_cache_hits: cache.hits,
             plan_cache_misses: cache.misses,
             plan_cache_hit_rate: cache.hit_rate(),
             schedule_cache_hits: cache.schedule_hits,
             schedule_cache_misses: cache.schedule_misses,
             ops_shared: ops_shared_total(),
-            executed_nodes: exec.executed_nodes,
-            scatter_passes: exec.scatter_passes,
-            measured_bytes_moved: exec.bytes_moved,
+            executed_nodes: sched_exec.executed_nodes,
+            scatter_passes: sched_exec.scatter_passes,
+            measured_bytes_moved: sched_exec.bytes_moved,
             schedule_nodes: planner.nodes,
             schedule_classes: planner.classes,
             schedule_estimated_flops: planner.estimated_flops,
@@ -242,6 +389,69 @@ mod tests {
     use crate::fastmult::Group;
 
     #[test]
+    fn bucket_index_is_monotone_and_contiguous() {
+        let mut prev = bucket_index(0);
+        assert_eq!(prev, 0);
+        let mut jumps = 0;
+        for ns in 1..100_000u64 {
+            let idx = bucket_index(ns);
+            assert!(idx >= prev, "index not monotone at ns={ns}");
+            assert!(idx - prev <= 1, "index skipped a bucket at ns={ns}");
+            if idx > prev {
+                jumps += 1;
+            }
+            prev = idx;
+        }
+        assert!(jumps > 50, "suspiciously few buckets used: {jumps}");
+        // The saturating tail never overruns the array.
+        assert!(bucket_index(u64::MAX) < NUM_BUCKETS);
+    }
+
+    #[test]
+    fn bucket_value_lands_inside_its_bucket() {
+        for ns in [1u64, 15, 16, 100, 1_000, 999_999, 10_000_000, 1 << 40] {
+            let idx = bucket_index(ns);
+            let v = bucket_value_ns(idx);
+            // The representative value maps back to the same bucket.
+            assert_eq!(bucket_index(v as u64), idx, "ns={ns} idx={idx} v={v}");
+            // …and is within the log-linear resolution of the input.
+            let rel = (v - ns as f64).abs() / ns as f64;
+            assert!(rel <= 1.0 / SUB as f64, "ns={ns}: rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_are_ordered_and_accurate() {
+        let h = LatencyHistogram::default();
+        // 100 samples: 1ms ×90, 10ms ×9, 100ms ×1.
+        for _ in 0..90 {
+            h.record(Duration::from_millis(1));
+        }
+        for _ in 0..9 {
+            h.record(Duration::from_millis(10));
+        }
+        h.record(Duration::from_millis(100));
+        let s = h.stats();
+        assert_eq!(s.count, 100);
+        assert!(s.p50_s <= s.p95_s && s.p95_s <= s.p99_s && s.p99_s <= s.max_s * 1.0001);
+        let within = |got: f64, want: f64| (got - want).abs() / want < 0.10;
+        assert!(within(s.p50_s, 1e-3), "p50 {}", s.p50_s);
+        assert!(within(s.p95_s, 10e-3), "p95 {}", s.p95_s);
+        assert!(within(s.p99_s, 100e-3), "p99 {}", s.p99_s);
+        assert!((s.max_s - 0.1).abs() < 1e-6);
+        // Exact mean: (90·1 + 9·10 + 1·100) ms / 100 = 2.8 ms.
+        assert!((s.mean_s - 0.0028).abs() < 1e-9, "mean {}", s.mean_s);
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let s = LatencyHistogram::default().stats();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean_s, 0.0);
+        assert_eq!(s.p99_s, 0.0);
+    }
+
+    #[test]
     fn snapshot_aggregates() {
         let m = Metrics::default();
         m.on_accept();
@@ -252,18 +462,34 @@ mod tests {
         m.on_complete(Duration::from_millis(30), false);
         m.on_batch_executed(Duration::from_millis(4));
         m.on_batch_executed(Duration::from_millis(8));
+        m.on_shed_expired();
+        m.on_shed_admission();
+        m.on_worker_restart();
+        m.on_batch_panic();
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.completed, 1);
         assert_eq!(s.failed, 1);
+        assert_eq!(s.shed_expired, 1);
+        assert_eq!(s.shed_admission, 1);
+        assert_eq!(s.worker_restarts, 1);
+        assert_eq!(s.batch_panics, 1);
         assert_eq!(s.batches, 1);
         assert!((s.mean_batch_size - 2.0).abs() < 1e-12);
         assert!((s.mean_latency_s - 0.020).abs() < 1e-6);
         assert!((s.max_latency_s - 0.030).abs() < 1e-6);
+        // Percentiles come out of the log-bucketed histogram: ordered and
+        // within its ~6% bucket resolution.
+        assert!(s.p50_latency_s <= s.p95_latency_s);
+        assert!(s.p95_latency_s <= s.p99_latency_s);
+        assert!((s.p50_latency_s - 0.010).abs() / 0.010 < 0.10);
+        assert!((s.p99_latency_s - 0.030).abs() / 0.030 < 0.10);
         assert_eq!(s.batch_execs, 2);
         assert!((s.mean_batch_exec_s - 0.006).abs() < 1e-6);
         assert!((s.max_batch_exec_s - 0.008).abs() < 1e-6);
+        assert!(s.p50_batch_exec_s <= s.p99_batch_exec_s);
+        assert!((s.p99_batch_exec_s - 0.008).abs() / 0.008 < 0.10);
         // Plan-cache counters come from the process-wide cache. Force at
         // least one miss and one hit, then assert the snapshot sees them
         // (counters are monotonic, so >= holds under concurrent tests).

@@ -9,6 +9,14 @@
 //! — and per-request latency/throughput **metrics** are recorded. Rust owns
 //! the event loop; no python anywhere on this path.
 //!
+//! The serving layer is fault-tolerant (`docs/serving_robustness.md`):
+//! batch execution is panic-isolated with per-item fallback, a supervisor
+//! respawns crashed workers with capped backoff, requests carry optional
+//! deadlines enforced at three shed points, per-model admission control
+//! caps inflight load, and the metrics expose p50/p95/p99 latency
+//! histograms plus shed/restart counters. A seeded [`ChaosPlan`] fault
+//! injector certifies the invariants under test and bench load.
+//!
 //! ```no_run
 //! use equidiag::coordinator::{Coordinator, ModelKind};
 //! use equidiag::config::ServerConfig;
@@ -27,10 +35,12 @@
 //! ```
 
 mod batcher;
+mod chaos;
 mod metrics;
 mod registry;
 mod server;
 
+pub use chaos::{ChaosPlan, Fault, CHAOS_PANIC_PREFIX};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::ModelKind;
 pub use server::{Coordinator, CoordinatorHandle};

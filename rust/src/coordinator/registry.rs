@@ -1,5 +1,6 @@
 //! Model registry: named inference targets behind one coordinator.
 
+use super::chaos::{ChaosPlan, Fault, CHAOS_PANIC_PREFIX};
 use crate::error::{Error, Result};
 use crate::nn::EquivariantNet;
 use crate::runtime::HloService;
@@ -20,6 +21,12 @@ pub enum ModelKind {
     /// AOT-compiled JAX/Pallas model (expects/returns the flattened tensor;
     /// the artifact's first tuple output is used).
     Hlo(HloService),
+    /// Fault-injection wrapper (tests and benches only): consults the
+    /// seeded [`ChaosPlan`] before every call and panics/stalls/errors on
+    /// its schedule, otherwise delegates to the inner model. Faults fire
+    /// *before* the inner model runs, so an injected panic can never
+    /// corrupt the wrapped model's state.
+    Chaos(Box<ModelKind>, Arc<ChaosPlan>),
 }
 
 impl ModelKind {
@@ -35,6 +42,38 @@ impl ModelKind {
     /// Wrap an HLO service handle.
     pub fn hlo(service: HloService) -> Self {
         ModelKind::Hlo(service)
+    }
+    /// Wrap any model in the fault-injection harness (tests and benches
+    /// only — see [`ChaosPlan`]).
+    pub fn chaos(inner: ModelKind, plan: Arc<ChaosPlan>) -> Self {
+        ModelKind::Chaos(Box::new(inner), plan)
+    }
+
+    /// The exact `(n, k)` input shape this model accepts, when it is
+    /// statically known: native networks expose it (`R^n`, order
+    /// `orders[0]`), HLO artifacts don't declare one. The serving door
+    /// uses this to reject malformed tensors with a typed
+    /// [`Error::BadRequest`] before they enter a packed batch.
+    pub fn expected_shape(&self) -> Option<(usize, usize)> {
+        match self {
+            ModelKind::Net(net, _) => Some((net.n(), net.input_order())),
+            ModelKind::Hlo(_) => None,
+            ModelKind::Chaos(inner, _) => inner.expected_shape(),
+        }
+    }
+
+    /// Act on the chaos plan's next roll; returns the inner model to
+    /// delegate to on the healthy/stall paths, or the injected error.
+    fn chaos_gate<'a>(inner: &'a ModelKind, plan: &ChaosPlan) -> Result<&'a ModelKind> {
+        match plan.next_fault() {
+            Fault::Panic => panic!("{CHAOS_PANIC_PREFIX} injected panic"),
+            Fault::Stall => {
+                std::thread::sleep(plan.stall_duration());
+                Ok(inner)
+            }
+            Fault::Error => Err(Error::Coordinator("chaos: injected error".into())),
+            Fault::None => Ok(inner),
+        }
     }
 
     /// Run a whole batch through the model: one result per input, in
@@ -56,6 +95,22 @@ impl ModelKind {
                     .collect()
             }
             ModelKind::Hlo(_) => inputs.iter().map(|t| self.infer(t)).collect(),
+            ModelKind::Chaos(inner, plan) => match Self::chaos_gate(inner, plan) {
+                // One roll per batch call: a batch-level panic exercises
+                // the worker's per-item fallback, where each retried item
+                // rolls again via `infer`.
+                Ok(m) => m.infer_batch(inputs),
+                Err(e) => {
+                    let msg = match &e {
+                        Error::Coordinator(m) => m.clone(),
+                        other => other.to_string(),
+                    };
+                    inputs
+                        .iter()
+                        .map(|_| Err(Error::Coordinator(msg.clone())))
+                        .collect()
+                }
+            },
         }
     }
 
@@ -106,6 +161,7 @@ impl ModelKind {
                 }
                 Tensor::from_vec(input.n, order, first.into_iter().map(f64::from).collect())
             }
+            ModelKind::Chaos(inner, plan) => Self::chaos_gate(inner, plan)?.infer(input),
         }
     }
 }
@@ -122,11 +178,12 @@ impl Registry {
         self.models.insert(name.to_string(), model);
     }
 
-    /// Look up a model.
+    /// Look up a model; fails with the typed [`Error::ModelNotFound`],
+    /// which the serving path delivers to clients intact.
     pub fn get(&self, name: &str) -> Result<&ModelKind> {
         self.models
             .get(name)
-            .ok_or_else(|| Error::Coordinator(format!("unknown model '{name}'")))
+            .ok_or_else(|| Error::ModelNotFound(name.to_string()))
     }
 
     /// Registered model names.
@@ -158,8 +215,75 @@ mod tests {
         let mut reg = Registry::default();
         reg.insert("m", ModelKind::net(net));
         assert!(reg.get("m").is_ok());
-        assert!(reg.get("absent").is_err());
+        assert!(matches!(
+            reg.get("absent"),
+            Err(Error::ModelNotFound(ref name)) if name == "absent"
+        ));
         assert_eq!(reg.names(), vec!["m"]);
+    }
+
+    #[test]
+    fn expected_shape_reports_net_shape() {
+        let mut rng = Rng::new(404);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 1],
+            Activation::Identity,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let kind = ModelKind::net(net);
+        assert_eq!(kind.expected_shape(), Some((3, 2)));
+        // The chaos wrapper is shape-transparent.
+        let wrapped = ModelKind::chaos(kind, Arc::new(super::ChaosPlan::new(1)));
+        assert_eq!(wrapped.expected_shape(), Some((3, 2)));
+    }
+
+    #[test]
+    fn chaos_wrapper_delegates_and_injects() {
+        let mut rng = Rng::new(405);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[1, 1],
+            Activation::Identity,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let v = Tensor::random(3, 1, &mut rng);
+        let plain = ModelKind::net(net.clone());
+        let want = plain.infer(&v).unwrap();
+        // Zero rates: pure delegation.
+        let healthy = ModelKind::chaos(plain.clone(), Arc::new(super::ChaosPlan::new(2)));
+        assert!(healthy.infer(&v).unwrap().allclose(&want, 1e-12));
+        // Always-error: typed error, inner model untouched.
+        let erroring = ModelKind::chaos(
+            plain.clone(),
+            Arc::new(super::ChaosPlan::new(3).with_errors(1000)),
+        );
+        let err = erroring.infer(&v).unwrap_err();
+        assert!(err.to_string().contains("chaos: injected error"), "{err}");
+        let batch = erroring.infer_batch(&[&v, &v]);
+        assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|r| r.is_err()));
+        // Always-panic: the payload carries the chaos prefix so harness
+        // panic hooks can tell injected noise from real failures.
+        let panicking = ModelKind::chaos(
+            plain,
+            Arc::new(super::ChaosPlan::new(4).with_panics(1000)),
+        );
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            panicking.infer(&v)
+        }))
+        .unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.starts_with(CHAOS_PANIC_PREFIX), "payload: {msg}");
     }
 
     #[test]

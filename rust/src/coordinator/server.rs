@@ -1,17 +1,99 @@
-//! Coordinator assembly: queue → batcher → worker pool, plus the client
-//! handle.
+//! Coordinator assembly: queue → batcher → supervised worker pool, plus
+//! the client handle.
+//!
+//! Fault-tolerance duties live here (see `docs/serving_robustness.md`):
+//! batch execution runs under `catch_unwind` with a per-item fallback so
+//! one poisoned input cannot take down its batch-mates; a panicked worker
+//! recycles itself and the **supervisor** respawns it with capped
+//! exponential backoff; `submit` validates the route and tensor shape at
+//! the door and enforces per-model admission control; `infer` is a
+//! bounded wait whenever a request deadline is configured — no client
+//! ever hangs on a response that will never come.
 
-use super::batcher::{self, Batch, WorkItem};
+use super::batcher::{self, BatchQueue, WorkItem};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::registry::{ModelKind, Registry};
 use crate::config::ServerConfig;
 use crate::error::{Error, Result};
 use crate::fastmult::PlanCache;
 use crate::tensor::Tensor;
-use std::sync::mpsc::{self, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::any::Any;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// First respawn delay after a worker panic; doubles per consecutive
+/// restart of the same slot.
+const BACKOFF_BASE: Duration = Duration::from_millis(5);
+/// Ceiling on the respawn delay.
+const BACKOFF_CAP: Duration = Duration::from_millis(200);
+/// A worker that survives this long resets its slot's backoff.
+const BACKOFF_HEALTHY_RESET: Duration = Duration::from_secs(1);
+/// Backoff sleeps are sliced so shutdown (queue drained) is never stalled
+/// behind a pending respawn.
+const BACKOFF_SLICE: Duration = Duration::from_millis(5);
+/// Extra slack `infer` waits past the request deadline before giving up
+/// client-side: the server sheds on the same clock, so within the grace
+/// window the typed outcome it delivers (response, error, or shed) wins
+/// over a locally synthesised `DeadlineExceeded`.
+const DEADLINE_GRACE: Duration = Duration::from_millis(50);
+
+/// RAII admission slot for one in-flight request on one model: dropping
+/// the guard releases the slot. The guard travels inside the `WorkItem`,
+/// so *every* terminal path — response delivered, typed error delivered,
+/// shed, or the item dropped on the floor during shutdown — releases it
+/// without any path having to remember to.
+pub(crate) struct InflightGuard(Arc<AtomicUsize>);
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Release);
+    }
+}
+
+/// Per-model admission control: at most `limit` requests in flight per
+/// route, so one hot model cannot starve the shared queue.
+struct Admission {
+    limit: usize,
+    inflight: HashMap<String, Arc<AtomicUsize>>,
+}
+
+impl Admission {
+    fn new(limit: usize, routes: &[&str]) -> Self {
+        Admission {
+            limit,
+            inflight: routes
+                .iter()
+                .map(|r| (r.to_string(), Arc::new(AtomicUsize::new(0))))
+                .collect(),
+        }
+    }
+
+    /// Try to take a slot for `model`; `None` means the route is at its
+    /// inflight limit (the caller sheds with [`Error::Overloaded`]).
+    fn try_acquire(&self, model: &str) -> Option<InflightGuard> {
+        let counter = self.inflight.get(model)?;
+        let mut current = counter.load(Ordering::Relaxed);
+        loop {
+            if current >= self.limit {
+                return None;
+            }
+            match counter.compare_exchange_weak(
+                current,
+                current + 1,
+                Ordering::Acquire,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(InflightGuard(counter.clone())),
+                Err(actual) => current = actual,
+            }
+        }
+    }
+}
 
 /// Builder for the serving engine: register models, then [`Coordinator::start`].
 #[derive(Debug, Default)]
@@ -39,7 +121,8 @@ impl Coordinator {
         self.registry.names()
     }
 
-    /// Spawn the batcher and worker threads; returns the client handle.
+    /// Spawn the batcher, worker pool, and supervisor; returns the client
+    /// handle.
     pub fn start(self) -> CoordinatorHandle {
         // The plan cache is process-wide, so only an explicitly configured
         // bound is applied — a coordinator started with defaults must not
@@ -59,81 +142,252 @@ impl Coordinator {
         crate::util::parallel::set_thread_budget((hw / self.config.workers.max(1)).max(1));
         let metrics = Arc::new(Metrics::default());
         let (req_tx, req_rx) = mpsc::sync_channel::<WorkItem>(self.config.queue_capacity);
-        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let dispatch = BatchQueue::new();
         let registry = Arc::new(self.registry);
+        let admission = self
+            .config
+            .max_inflight_per_model
+            .map(|limit| Admission::new(limit, &registry.names()));
 
         let mut threads: Vec<JoinHandle<()>> = Vec::new();
         {
             let metrics = metrics.clone();
+            let dispatch = dispatch.clone();
             let max_batch = self.config.max_batch;
             let window = self.config.batch_window;
             threads.push(std::thread::spawn(move || {
-                batcher::run(req_rx, batch_tx, metrics, max_batch, window)
+                batcher::run(req_rx, dispatch, metrics, max_batch, window)
             }));
         }
-        for _ in 0..self.config.workers {
-            let rx = batch_rx.clone();
+        {
+            let workers = self.config.workers.max(1);
             let reg = registry.clone();
             let metrics = metrics.clone();
-            threads.push(std::thread::spawn(move || worker_loop(rx, reg, metrics)));
+            threads.push(std::thread::spawn(move || {
+                supervisor_loop(dispatch, reg, metrics, workers)
+            }));
         }
 
         CoordinatorHandle {
             sender: Some(req_tx),
             metrics,
+            registry,
+            admission,
+            request_timeout: self.config.request_timeout,
             threads,
             prior_thread_budget,
         }
     }
 }
 
-fn worker_loop(
-    rx: Arc<Mutex<Receiver<Batch>>>,
+/// Why a worker's loop returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WorkerExit {
+    /// The dispatch queue is closed and drained: orderly shutdown, no
+    /// replacement needed.
+    Clean,
+    /// The worker hit a panic (caught at the batch boundary or escaped to
+    /// the thread wrapper) and recycles itself: thread-local state is
+    /// suspect after an unwind through model code, so a fresh thread
+    /// replaces it — the supervisor respawns unless the queue drained.
+    Recycled,
+}
+
+struct WorkerEvent {
+    slot: usize,
+    exit: WorkerExit,
+}
+
+fn spawn_worker(
+    slot: usize,
+    queue: &Arc<BatchQueue>,
+    registry: &Arc<Registry>,
+    metrics: &Arc<Metrics>,
+    events: &mpsc::Sender<WorkerEvent>,
+) -> JoinHandle<()> {
+    let queue = queue.clone();
+    let registry = registry.clone();
+    let metrics = metrics.clone();
+    let events = events.clone();
+    std::thread::spawn(move || {
+        // Belt and braces: worker_loop already catches panics at the batch
+        // boundary; this wrapper catches anything that escapes it so the
+        // supervisor always receives an exit event and the pool never
+        // silently shrinks.
+        let exit = match catch_unwind(AssertUnwindSafe(|| {
+            worker_loop(&queue, &registry, &metrics)
+        })) {
+            Ok(exit) => exit,
+            Err(_) => WorkerExit::Recycled,
+        };
+        let _ = events.send(WorkerEvent { slot, exit });
+    })
+}
+
+/// Supervise the worker pool: spawn the initial workers, then respawn any
+/// worker that recycled after a panic, with capped exponential backoff
+/// per slot (base 5ms, cap 200ms, reset after 1s of health). Exits when
+/// every worker has exited and the drained queue means none needs a
+/// replacement.
+fn supervisor_loop(
+    queue: Arc<BatchQueue>,
     registry: Arc<Registry>,
     metrics: Arc<Metrics>,
+    workers: usize,
 ) {
-    loop {
-        let batch = {
-            let guard = rx.lock().unwrap();
-            match guard.recv() {
-                Ok(b) => b,
-                Err(_) => return, // batcher gone: shutdown
+    let (event_tx, event_rx) = mpsc::channel::<WorkerEvent>();
+    let mut handles: Vec<Option<JoinHandle<()>>> = Vec::with_capacity(workers);
+    let mut restarts = vec![0u32; workers];
+    let mut spawned_at = Vec::with_capacity(workers);
+    for slot in 0..workers {
+        handles.push(Some(spawn_worker(slot, &queue, &registry, &metrics, &event_tx)));
+        spawned_at.push(Instant::now());
+    }
+    let mut alive = workers;
+    while alive > 0 {
+        let event = match event_rx.recv() {
+            Ok(e) => e,
+            Err(_) => break, // unreachable: we hold a sender clone per spawn
+        };
+        if let Some(handle) = handles[event.slot].take() {
+            let _ = handle.join(); // the event is sent last, so this is quick
+        }
+        alive -= 1;
+        if event.exit == WorkerExit::Clean || queue.is_drained() {
+            continue;
+        }
+        // A long-healthy worker's crash is fresh news, not a crash loop.
+        if spawned_at[event.slot].elapsed() >= BACKOFF_HEALTHY_RESET {
+            restarts[event.slot] = 0;
+        }
+        let backoff = BACKOFF_CAP.min(BACKOFF_BASE * 2u32.pow(restarts[event.slot].min(16)));
+        restarts[event.slot] = restarts[event.slot].saturating_add(1);
+        // Sleep in slices so a shutdown arriving mid-backoff is honoured.
+        let t0 = Instant::now();
+        while t0.elapsed() < backoff && !queue.is_drained() {
+            std::thread::sleep(BACKOFF_SLICE.min(backoff));
+        }
+        if queue.is_drained() {
+            continue;
+        }
+        metrics.on_worker_restart();
+        handles[event.slot] = Some(spawn_worker(
+            event.slot,
+            &queue,
+            &registry,
+            &metrics,
+            &event_tx,
+        ));
+        spawned_at[event.slot] = Instant::now();
+        alive += 1;
+    }
+    for handle in handles.into_iter().flatten() {
+        let _ = handle.join();
+    }
+}
+
+/// Registry errors fan out to every item in the batch; `ModelNotFound`
+/// survives intact (it is the one registry lookup error), anything else
+/// flattens with its message preserved.
+fn clone_lookup_error(e: &Error) -> Error {
+    match e {
+        Error::ModelNotFound(name) => Error::ModelNotFound(name.clone()),
+        other => Error::Coordinator(other.to_string()),
+    }
+}
+
+/// Best-effort human-readable panic payload.
+fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Pull batches off the shared queue and execute them until the queue
+/// closes. Shed points and panic isolation:
+/// - expired items are shed **before execution** (no wasted schedule
+///   walks);
+/// - the whole-batch fast path runs under `catch_unwind`; if it panics,
+///   every item re-runs individually (also under `catch_unwind`), so the
+///   one poisoned input gets a typed [`Error::WorkerPanic`] while its
+///   batch-mates still get real responses;
+/// - after a batch-level panic the worker finishes delivering outcomes and
+///   then recycles itself ([`WorkerExit::Recycled`]) — thread state is
+///   suspect after unwinding through model code.
+fn worker_loop(queue: &BatchQueue, registry: &Registry, metrics: &Metrics) -> WorkerExit {
+    while let Some(batch) = queue.pop() {
+        let items = batcher::shed_expired(batch.items, metrics, Instant::now());
+        if items.is_empty() {
+            continue;
+        }
+        let model = match registry.get(&batch.model) {
+            Ok(m) => m,
+            Err(e) => {
+                for item in items {
+                    metrics.on_complete(item.enqueued.elapsed(), false);
+                    let _ = item.respond.send(Err(clone_lookup_error(&e)));
+                }
+                continue;
             }
         };
-        let model = registry.get(&batch.model);
         // One plan, many inputs: the whole batch is packed into contiguous
         // `[B, n^k]` BatchTensors inside the model's batched path and each
         // layer schedule is walked once per worker span — per-item errors
         // stay per-item (malformed batches fall back to per-item
         // forwards). Fused-execution stats surface in the metrics
         // snapshot (`fused_batches` / `fused_items`).
-        let results: Vec<Result<Tensor>> = match &model {
-            Ok(m) => {
-                let t0 = Instant::now();
-                let inputs: Vec<&Tensor> = batch.items.iter().map(|it| &it.input).collect();
-                let results = m.infer_batch(&inputs);
-                metrics.on_batch_executed(t0.elapsed());
-                results
-            }
-            Err(e) => batch
-                .items
-                .iter()
-                .map(|_| Err(Error::Coordinator(e.to_string())))
-                .collect(),
+        let t0 = Instant::now();
+        let outcome = {
+            let inputs: Vec<&Tensor> = items.iter().map(|it| &it.input).collect();
+            catch_unwind(AssertUnwindSafe(|| model.infer_batch(&inputs)))
         };
-        for (item, result) in batch.items.into_iter().zip(results) {
-            let ok = result.is_ok();
-            metrics.on_complete(item.enqueued.elapsed(), ok);
-            let _ = item.respond.send(result);
+        match outcome {
+            Ok(results) => {
+                metrics.on_batch_executed(t0.elapsed());
+                for (item, result) in items.into_iter().zip(results) {
+                    let ok = result.is_ok();
+                    metrics.on_complete(item.enqueued.elapsed(), ok);
+                    let _ = item.respond.send(result);
+                }
+            }
+            Err(_) => {
+                metrics.on_batch_panic();
+                // Per-item fallback: isolate the poisoned input. Deadlines
+                // are re-checked per item — the fallback is serial, so a
+                // generous batch's tail may expire while its head re-runs.
+                for item in items {
+                    if item.expired(Instant::now()) {
+                        metrics.on_shed_expired();
+                        let _ = item.respond.send(Err(Error::DeadlineExceeded));
+                        continue;
+                    }
+                    let result = match catch_unwind(AssertUnwindSafe(|| model.infer(&item.input)))
+                    {
+                        Ok(r) => r,
+                        Err(payload) => Err(Error::WorkerPanic(panic_message(&*payload))),
+                    };
+                    let ok = result.is_ok();
+                    metrics.on_complete(item.enqueued.elapsed(), ok);
+                    let _ = item.respond.send(result);
+                }
+                return WorkerExit::Recycled;
+            }
         }
     }
+    WorkerExit::Clean
 }
 
 /// Client handle to a running coordinator.
 pub struct CoordinatorHandle {
     sender: Option<SyncSender<WorkItem>>,
     metrics: Arc<Metrics>,
+    registry: Arc<Registry>,
+    admission: Option<Admission>,
+    request_timeout: Option<Duration>,
     threads: Vec<JoinHandle<()>>,
     /// Fan-out cap in force before this coordinator started; restored on
     /// drop so the process regains whatever parallelism policy it had.
@@ -141,20 +395,59 @@ pub struct CoordinatorHandle {
 }
 
 impl CoordinatorHandle {
-    /// Submit a request; returns a receiver for the response. Fails fast
-    /// with a backpressure error if the queue is full.
+    /// Submit a request; returns a receiver for the response. Rejections
+    /// happen at the door, each with a typed error: unknown route
+    /// ([`Error::ModelNotFound`]), tensor shape not matching the
+    /// registered model ([`Error::BadRequest`]), route at its inflight
+    /// limit ([`Error::Overloaded`]), or queue full (backpressure). An
+    /// accepted request is stamped with its deadline (when
+    /// `[server] request_timeout_ms` is set) and is guaranteed exactly one
+    /// terminal outcome on the returned receiver — a response, a typed
+    /// error, or a deadline shed.
     pub fn submit(&self, model: &str, input: Tensor) -> Result<Receiver<Result<Tensor>>> {
-        let (tx, rx) = mpsc::channel();
-        let item = WorkItem {
-            model: model.to_string(),
-            input,
-            enqueued: Instant::now(),
-            respond: tx,
-        };
         let sender = self
             .sender
             .as_ref()
             .ok_or_else(|| Error::Coordinator("coordinator is shut down".into()))?;
+        let kind = match self.registry.get(model) {
+            Ok(k) => k,
+            Err(e) => {
+                self.metrics.on_door_reject();
+                return Err(e);
+            }
+        };
+        if let Some((n, k)) = kind.expected_shape() {
+            if input.n != n || input.order != k {
+                self.metrics.on_door_reject();
+                return Err(Error::BadRequest(format!(
+                    "model '{model}' expects order-{k} tensors over R^{n}, \
+                     got order-{} over R^{}",
+                    input.order, input.n
+                )));
+            }
+        }
+        let inflight = match &self.admission {
+            None => None,
+            Some(admission) => match admission.try_acquire(model) {
+                Some(guard) => Some(guard),
+                None => {
+                    self.metrics.on_shed_admission();
+                    return Err(Error::Overloaded {
+                        model: model.to_string(),
+                    });
+                }
+            },
+        };
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        let item = WorkItem {
+            model: model.to_string(),
+            input,
+            enqueued: now,
+            deadline: self.request_timeout.map(|t| now + t),
+            respond: tx,
+            inflight,
+        };
         match sender.try_send(item) {
             Ok(()) => {
                 self.metrics.on_accept();
@@ -170,11 +463,29 @@ impl CoordinatorHandle {
         }
     }
 
-    /// Blocking inference: submit and wait.
+    /// Blocking inference: submit and wait. With a configured request
+    /// timeout this is a **bounded** wait: it waits out the deadline plus
+    /// a small grace (preferring whatever typed outcome the server
+    /// delivers) and then returns [`Error::DeadlineExceeded`] — a client
+    /// can no longer hang on a response that will never come.
     pub fn infer(&self, model: &str, input: Tensor) -> Result<Tensor> {
+        let deadline = self.request_timeout.map(|t| Instant::now() + t);
         let rx = self.submit(model, input)?;
-        rx.recv()
-            .map_err(|_| Error::Coordinator("worker dropped the response".into()))?
+        match deadline {
+            None => rx
+                .recv()
+                .map_err(|_| Error::Coordinator("worker dropped the response".into()))?,
+            Some(d) => {
+                let wait = d.saturating_duration_since(Instant::now()) + DEADLINE_GRACE;
+                match rx.recv_timeout(wait) {
+                    Ok(result) => result,
+                    Err(RecvTimeoutError::Timeout) => Err(Error::DeadlineExceeded),
+                    Err(RecvTimeoutError::Disconnected) => {
+                        Err(Error::Coordinator("worker dropped the response".into()))
+                    }
+                }
+            }
+        }
     }
 
     /// Current metrics.
@@ -216,7 +527,6 @@ mod tests {
     use crate::layer::Init;
     use crate::nn::{Activation, EquivariantNet};
     use crate::util::Rng;
-    use std::time::Duration;
 
     fn test_net(rng: &mut Rng) -> EquivariantNet {
         EquivariantNet::new(
@@ -253,6 +563,10 @@ mod tests {
         let snap = handle.metrics();
         assert_eq!(snap.completed, 20);
         assert_eq!(snap.failed, 0);
+        // End-to-end latency percentiles are live and ordered.
+        assert!(snap.p50_latency_s > 0.0);
+        assert!(snap.p50_latency_s <= snap.p95_latency_s);
+        assert!(snap.p95_latency_s <= snap.p99_latency_s);
         handle.shutdown();
     }
 
@@ -263,8 +577,31 @@ mod tests {
         coord.register("m", ModelKind::net(test_net(&mut rng)));
         let handle = coord.start();
         let err = handle.infer("nope", Tensor::zeros(3, 2));
-        assert!(err.is_err());
-        assert_eq!(handle.metrics().failed, 1);
+        assert!(matches!(err, Err(Error::ModelNotFound(ref name)) if name == "nope"));
+        let snap = handle.metrics();
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.requests, 0, "door rejection must not count as accepted");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn bad_shape_rejected_at_door() {
+        let mut rng = Rng::new(505);
+        let mut coord = Coordinator::new(ServerConfig::default());
+        coord.register("m", ModelKind::net(test_net(&mut rng))); // expects (3, 2)
+        let handle = coord.start();
+        // Wrong order.
+        let err = handle.infer("m", Tensor::zeros(3, 1));
+        assert!(matches!(err, Err(Error::BadRequest(_))), "got {err:?}");
+        // Wrong n.
+        let err = handle.infer("m", Tensor::zeros(4, 2));
+        assert!(matches!(err, Err(Error::BadRequest(_))), "got {err:?}");
+        let snap = handle.metrics();
+        assert_eq!(snap.failed, 2);
+        assert_eq!(snap.requests, 0);
+        // A correctly shaped request still flows.
+        handle.infer("m", Tensor::zeros(3, 2)).unwrap();
+        assert_eq!(handle.metrics().completed, 1);
         handle.shutdown();
     }
 
@@ -314,5 +651,19 @@ mod tests {
         coord.register("m", ModelKind::net(test_net(&mut rng)));
         let handle = coord.start();
         handle.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn admission_guard_releases_slot_on_drop() {
+        let admission = Admission::new(1, &["m"]);
+        let g1 = admission.try_acquire("m").expect("first slot");
+        assert!(admission.try_acquire("m").is_none(), "limit is 1");
+        drop(g1);
+        assert!(
+            admission.try_acquire("m").is_some(),
+            "slot must free on guard drop"
+        );
+        // Unknown routes (never registered) have no slots to give.
+        assert!(admission.try_acquire("ghost").is_none());
     }
 }

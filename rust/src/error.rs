@@ -54,6 +54,30 @@ pub enum Error {
     /// Coordinator / serving errors.
     Coordinator(String),
 
+    /// A request's deadline passed before a worker produced its response.
+    /// Returned by the serving path at any of its shed points (batcher,
+    /// worker pre-execution, client-side bounded wait) — see
+    /// `docs/serving_robustness.md`.
+    DeadlineExceeded,
+
+    /// A request named a route no model is registered under.
+    ModelNotFound(String),
+
+    /// A request was malformed at the door (e.g. its tensor shape does not
+    /// match the registered model), rejected before entering the queue.
+    BadRequest(String),
+
+    /// Per-model admission control shed the request: the route already had
+    /// `max_inflight_per_model` requests in flight.
+    Overloaded {
+        /// The route that was at capacity.
+        model: String,
+    },
+
+    /// Model execution panicked; the panic was caught at the worker so the
+    /// client still gets a typed terminal outcome instead of a hang.
+    WorkerPanic(String),
+
     /// PJRT runtime errors.
     Runtime(String),
 }
@@ -78,6 +102,13 @@ impl fmt::Display for Error {
             }
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            Error::DeadlineExceeded => write!(f, "deadline exceeded"),
+            Error::ModelNotFound(name) => write!(f, "model not found: '{name}'"),
+            Error::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            Error::Overloaded { model } => {
+                write!(f, "overloaded: model '{model}' is at its inflight limit")
+            }
+            Error::WorkerPanic(msg) => write!(f, "worker panicked during execution: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
         }
     }
@@ -136,6 +167,23 @@ mod tests {
             "coordinator error: x"
         );
         assert_eq!(Error::Runtime("x".into()).to_string(), "runtime error: x");
+        assert_eq!(Error::DeadlineExceeded.to_string(), "deadline exceeded");
+        assert_eq!(
+            Error::ModelNotFound("gnn".into()).to_string(),
+            "model not found: 'gnn'"
+        );
+        assert_eq!(
+            Error::BadRequest("x".into()).to_string(),
+            "bad request: x"
+        );
+        assert_eq!(
+            Error::Overloaded { model: "gnn".into() }.to_string(),
+            "overloaded: model 'gnn' is at its inflight limit"
+        );
+        assert_eq!(
+            Error::WorkerPanic("boom".into()).to_string(),
+            "worker panicked during execution: boom"
+        );
         assert_eq!(
             Error::DimensionConstraint("x".into()).to_string(),
             "dimension constraint violated: x"

@@ -243,6 +243,20 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         snap.max_latency_s * 1e6
     );
     println!(
+        "latency p50 {:.1} us  p95 {:.1} us  p99 {:.1} us  \
+         batch exec p50 {:.1} us  p99 {:.1} us",
+        snap.p50_latency_s * 1e6,
+        snap.p95_latency_s * 1e6,
+        snap.p99_latency_s * 1e6,
+        snap.p50_batch_exec_s * 1e6,
+        snap.p99_batch_exec_s * 1e6
+    );
+    println!(
+        "robustness: shed {} expired / {} admission  worker restarts {}  \
+         batch panics caught {}",
+        snap.shed_expired, snap.shed_admission, snap.worker_restarts, snap.batch_panics
+    );
+    println!(
         "batch execs {}  mean batch exec {:.1} us  plan cache {:.1}% hit ({} hits / {} misses)",
         snap.batch_execs,
         snap.mean_batch_exec_s * 1e6,

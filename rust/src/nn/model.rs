@@ -159,6 +159,16 @@ impl EquivariantNet {
         self.n
     }
 
+    /// Tensor order the first layer expects (`orders[0]`): together with
+    /// [`Self::n`] this is the exact input shape, which the serving door
+    /// validates before admitting a request.
+    pub fn input_order(&self) -> usize {
+        self.layers
+            .first()
+            .map(EquivariantLinear::k)
+            .unwrap_or(0)
+    }
+
     /// Total learnable parameter count.
     pub fn num_params(&self) -> usize {
         self.layers.iter().map(|l| l.num_params()).sum()

@@ -1,10 +1,7 @@
-//! Deterministic PRNG built on `rand_core`'s xorshift-style mixing.
+//! Deterministic xorshift64* PRNG, dependency-free.
 //!
 //! All randomness in tests, property checks and samplers flows through
 //! [`Rng`] so every failure is reproducible from its seed.
-
-use rand_core::impls::fill_bytes_via_next;
-use rand_core::{Error as RandError, RngCore, SeedableRng};
 
 /// xorshift64* generator: tiny, fast, and statistically adequate for
 /// sampling test inputs and initialising weights.
@@ -78,29 +75,6 @@ impl Rng {
     /// Vector of iid standard normals.
     pub fn gaussian_vec(&mut self, len: usize) -> Vec<f64> {
         (0..len).map(|_| self.gaussian()).collect()
-    }
-}
-
-impl RngCore for Rng {
-    fn next_u32(&mut self) -> u32 {
-        (self.next_u64_raw() >> 32) as u32
-    }
-    fn next_u64(&mut self) -> u64 {
-        self.next_u64_raw()
-    }
-    fn fill_bytes(&mut self, dest: &mut [u8]) {
-        fill_bytes_via_next(self, dest)
-    }
-    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> std::result::Result<(), RandError> {
-        self.fill_bytes(dest);
-        Ok(())
-    }
-}
-
-impl SeedableRng for Rng {
-    type Seed = [u8; 8];
-    fn from_seed(seed: Self::Seed) -> Self {
-        Rng::new(u64::from_le_bytes(seed))
     }
 }
 

@@ -1,0 +1,279 @@
+//! Fault-injection ("chaos") integration suite: certifies the coordinator's
+//! fault-tolerance invariants under seeded panics, stalls, and errors —
+//! no client hang, exactly one terminal outcome per request, typed errors
+//! end to end, supervisor respawn, deadline shedding at every shed point,
+//! and per-model admission control. Run by name in CI
+//! (`cargo test --test coordinator_chaos`).
+
+use equidiag::config::ServerConfig;
+use equidiag::coordinator::{ChaosPlan, Coordinator, ModelKind, CHAOS_PANIC_PREFIX};
+use equidiag::error::Error;
+use equidiag::fastmult::Group;
+use equidiag::layer::Init;
+use equidiag::nn::{Activation, EquivariantNet};
+use equidiag::tensor::Tensor;
+use equidiag::util::Rng;
+use std::sync::{Arc, Once};
+use std::time::Duration;
+
+fn test_net(rng: &mut Rng) -> EquivariantNet {
+    EquivariantNet::new(
+        Group::Symmetric,
+        4,
+        &[2, 2],
+        Activation::Relu,
+        Init::ScaledNormal,
+        rng,
+    )
+    .unwrap()
+}
+
+/// Keep expected chaos-injected panics off stderr; real panics (test
+/// failures included) still print through the previous hook.
+fn quiet_chaos_panics() {
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        let old = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            if !msg.starts_with(CHAOS_PANIC_PREFIX) {
+                old(info);
+            }
+        }));
+    });
+}
+
+/// An always-panicking model: every request still resolves — to the typed
+/// [`Error::WorkerPanic`] — no client hangs, the supervisor respawns the
+/// recycled workers, and a healthy route on the same pool keeps serving
+/// afterwards (recovery).
+#[test]
+fn panicking_model_yields_typed_errors_and_pool_recovers() {
+    quiet_chaos_panics();
+    let mut rng = Rng::new(901);
+    let plan = Arc::new(ChaosPlan::new(1).with_panics(1000));
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_window: Duration::from_micros(100),
+        queue_capacity: 64,
+        ..ServerConfig::default()
+    });
+    coord.register(
+        "boom",
+        ModelKind::chaos(ModelKind::net(test_net(&mut rng)), plan),
+    );
+    coord.register("ok", ModelKind::net(test_net(&mut rng)));
+    let handle = coord.start();
+    for i in 0..12 {
+        let err = handle
+            .infer("boom", Tensor::random(4, 2, &mut rng))
+            .unwrap_err();
+        // Batch-level panic, then the per-item fallback panics again →
+        // the typed WorkerPanic carries the chaos payload.
+        match err {
+            Error::WorkerPanic(msg) => {
+                assert!(msg.starts_with(CHAOS_PANIC_PREFIX), "request {i}: {msg}")
+            }
+            other => panic!("request {i}: expected WorkerPanic, got {other:?}"),
+        }
+    }
+    let snap = handle.metrics();
+    assert!(snap.batch_panics >= 1, "no batch panic was caught");
+    assert!(
+        snap.worker_restarts >= 1,
+        "supervisor never respawned a recycled worker"
+    );
+    assert_eq!(snap.failed, 12);
+    // Recovery: the respawned pool serves the healthy route.
+    for _ in 0..5 {
+        handle.infer("ok", Tensor::random(4, 2, &mut rng)).unwrap();
+    }
+    assert_eq!(handle.metrics().completed, 5);
+    handle.shutdown();
+}
+
+/// Mixed batch under a batch-level panic: the per-item fallback isolates
+/// the fault per input — with a panic rate under 1000 the retried items
+/// split into real responses and typed panics, and their sum accounts for
+/// every submitted request.
+#[test]
+fn partial_panics_keep_batch_mates_alive() {
+    quiet_chaos_panics();
+    let mut rng = Rng::new(902);
+    let plan = Arc::new(ChaosPlan::new(2).with_panics(400));
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_window: Duration::from_micros(200),
+        queue_capacity: 256,
+        ..ServerConfig::default()
+    });
+    coord.register(
+        "flaky",
+        ModelKind::chaos(ModelKind::net(test_net(&mut rng)), plan),
+    );
+    let handle = Arc::new(coord.start());
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(950 + t);
+            let mut ok = 0u64;
+            let mut typed_err = 0u64;
+            for _ in 0..25 {
+                match h.infer("flaky", Tensor::random(4, 2, &mut rng)) {
+                    Ok(_) => ok += 1,
+                    Err(Error::WorkerPanic(_)) | Err(Error::Coordinator(_)) => typed_err += 1,
+                    Err(other) => panic!("unexpected error kind: {other:?}"),
+                }
+            }
+            (ok, typed_err)
+        }));
+    }
+    let mut ok = 0u64;
+    let mut typed_err = 0u64;
+    for j in joins {
+        let (o, e) = j.join().unwrap();
+        ok += o;
+        typed_err += e;
+    }
+    // Exactly one terminal outcome per request.
+    assert_eq!(ok + typed_err, 100);
+    assert!(ok > 0, "a 40% panic rate must let some requests through");
+    let snap = handle.metrics();
+    assert_eq!(snap.completed, ok);
+    assert_eq!(snap.failed, typed_err);
+    match Arc::try_unwrap(handle) {
+        Ok(h) => h.shutdown(),
+        Err(_) => unreachable!(),
+    }
+}
+
+/// Deadline enforcement around a stalled model: the client's bounded wait
+/// returns the typed [`Error::DeadlineExceeded`] instead of hanging, and
+/// requests queued behind the stall are shed server-side
+/// (`shed_expired`).
+#[test]
+fn stalled_model_sheds_on_deadline() {
+    quiet_chaos_panics();
+    let mut rng = Rng::new(903);
+    let plan = Arc::new(ChaosPlan::new(3).with_stalls(1000, Duration::from_millis(200)));
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 1,
+        max_batch: 1,
+        batch_window: Duration::from_micros(0),
+        queue_capacity: 64,
+        request_timeout: Some(Duration::from_millis(20)),
+        ..ServerConfig::default()
+    });
+    coord.register(
+        "stuck",
+        ModelKind::chaos(ModelKind::net(test_net(&mut rng)), plan),
+    );
+    let handle = coord.start();
+    // Bounded wait: 20ms deadline + grace ≪ the 200ms stall.
+    let err = handle
+        .infer("stuck", Tensor::random(4, 2, &mut rng))
+        .unwrap_err();
+    assert!(matches!(err, Error::DeadlineExceeded), "got {err:?}");
+    // A burst behind the stalled worker: the queued tail expires before
+    // execution and is shed with the same typed error.
+    let mut receivers = Vec::new();
+    for _ in 0..4 {
+        receivers.push(
+            handle
+                .submit("stuck", Tensor::random(4, 2, &mut rng))
+                .unwrap(),
+        );
+    }
+    let mut sheds = 0;
+    for rx in receivers {
+        if let Err(Error::DeadlineExceeded) = rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            sheds += 1;
+        }
+    }
+    assert!(sheds >= 1, "queued requests behind the stall must shed");
+    let snap = handle.metrics();
+    assert!(snap.shed_expired >= 1, "shed counter not recorded");
+    // Tail-latency histograms are live under this traffic.
+    assert!(snap.p50_latency_s <= snap.p95_latency_s);
+    assert!(snap.p95_latency_s <= snap.p99_latency_s);
+    handle.shutdown();
+}
+
+/// Per-model admission control: with an inflight cap of 2 and a stalled
+/// worker, extra submissions shed with the typed [`Error::Overloaded`] and
+/// the slots release once the admitted requests resolve.
+#[test]
+fn admission_cap_sheds_and_releases_slots() {
+    quiet_chaos_panics();
+    let mut rng = Rng::new(904);
+    let plan = Arc::new(ChaosPlan::new(4).with_stalls(1000, Duration::from_millis(100)));
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 1,
+        max_batch: 1,
+        batch_window: Duration::from_micros(0),
+        queue_capacity: 64,
+        max_inflight_per_model: Some(2),
+        ..ServerConfig::default()
+    });
+    coord.register(
+        "capped",
+        ModelKind::chaos(ModelKind::net(test_net(&mut rng)), plan),
+    );
+    let handle = coord.start();
+    let mut admitted = Vec::new();
+    let mut overloaded = 0u64;
+    for _ in 0..5 {
+        match handle.submit("capped", Tensor::random(4, 2, &mut rng)) {
+            Ok(rx) => admitted.push(rx),
+            Err(Error::Overloaded { model }) => {
+                assert_eq!(model, "capped");
+                overloaded += 1;
+            }
+            Err(other) => panic!("unexpected error: {other:?}"),
+        }
+    }
+    assert_eq!(admitted.len(), 2, "cap is 2");
+    assert_eq!(overloaded, 3);
+    assert_eq!(handle.metrics().shed_admission, 3);
+    // The admitted pair resolves (stall then respond) and frees its slots…
+    for rx in admitted {
+        rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+    }
+    // …so the route admits again.
+    let rx = handle
+        .submit("capped", Tensor::random(4, 2, &mut rng))
+        .expect("slot must free after terminal outcomes");
+    rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+    handle.shutdown();
+}
+
+/// Injected typed errors pass through the serving path intact (no
+/// flattening into opaque strings en route).
+#[test]
+fn injected_errors_arrive_typed() {
+    quiet_chaos_panics();
+    let mut rng = Rng::new(905);
+    let plan = Arc::new(ChaosPlan::new(5).with_errors(1000));
+    let mut coord = Coordinator::new(ServerConfig::default());
+    coord.register(
+        "erroring",
+        ModelKind::chaos(ModelKind::net(test_net(&mut rng)), plan),
+    );
+    let handle = coord.start();
+    let err = handle
+        .infer("erroring", Tensor::random(4, 2, &mut rng))
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("chaos: injected error"),
+        "error lost its payload: {err}"
+    );
+    handle.shutdown();
+}

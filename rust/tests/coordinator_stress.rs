@@ -2,7 +2,7 @@
 //! success/failure traffic, saturation, shutdown under load.
 
 use equidiag::config::ServerConfig;
-use equidiag::coordinator::{Coordinator, ModelKind};
+use equidiag::coordinator::{ChaosPlan, Coordinator, ModelKind};
 use equidiag::fastmult::Group;
 use equidiag::layer::Init;
 use equidiag::nn::{Activation, EquivariantNet};
@@ -119,4 +119,80 @@ fn shutdown_under_load_completes_accepted_requests() {
         }
     }
     assert_eq!(completed, 64, "accepted requests must complete on shutdown");
+}
+
+/// Shutdown race: dropping the handle (instead of calling `shutdown`)
+/// with requests still in flight must deliver a terminal outcome to every
+/// accepted waiter — a response, a typed error, or at worst a
+/// disconnected channel; never a receiver stuck forever.
+#[test]
+fn drop_with_inflight_delivers_terminal_outcomes() {
+    let mut rng = Rng::new(704);
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_window: Duration::from_micros(200),
+        queue_capacity: 256,
+        ..ServerConfig::default()
+    });
+    coord.register("m", ModelKind::net(slow_net(&mut rng)));
+    let handle = coord.start();
+    let mut receivers = Vec::new();
+    for _ in 0..32 {
+        receivers.push(handle.submit("m", Tensor::random(6, 2, &mut rng)).unwrap());
+    }
+    drop(handle); // implicit shutdown: close the queue, join everything
+    for (i, rx) in receivers.into_iter().enumerate() {
+        // After drop has joined the pool, the outcome is already in the
+        // channel (or the channel is provably disconnected) — the bounded
+        // recv is a backstop, not a wait.
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(_) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                panic!("waiter {i} got no terminal outcome after drop")
+            }
+        }
+    }
+}
+
+/// Shutdown arriving mid-batch: workers are stalled inside model
+/// execution when the handle shuts down; every waiter (executing and
+/// still-queued alike) must still resolve.
+#[test]
+fn mid_batch_shutdown_resolves_every_waiter() {
+    let mut rng = Rng::new(705);
+    let plan = Arc::new(ChaosPlan::new(9).with_stalls(1000, Duration::from_millis(50)));
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 2,
+        max_batch: 2,
+        batch_window: Duration::from_micros(0),
+        queue_capacity: 64,
+        ..ServerConfig::default()
+    });
+    coord.register(
+        "stall",
+        ModelKind::chaos(ModelKind::net(slow_net(&mut rng)), plan),
+    );
+    let handle = coord.start();
+    let mut receivers = Vec::new();
+    for _ in 0..16 {
+        receivers.push(
+            handle
+                .submit("stall", Tensor::random(6, 2, &mut rng))
+                .unwrap(),
+        );
+    }
+    // Let the workers get pinned inside a stalled batch, then shut down.
+    std::thread::sleep(Duration::from_millis(10));
+    handle.shutdown();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(_) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                panic!("waiter {i} got no terminal outcome across mid-batch shutdown")
+            }
+        }
+    }
 }
