@@ -23,6 +23,7 @@ use equidiag::layer::Init;
 use equidiag::nn::{Activation, EquivariantNet};
 use equidiag::runtime::HloService;
 use equidiag::tensor::Tensor;
+use equidiag::util::executor::hw_threads;
 use equidiag::util::{Rng, Table};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -86,6 +87,116 @@ fn run_load(workers: usize, window_us: u64, max_batch: usize, requests: usize) -
     LoadResult { rps, snapshot }
 }
 
+/// One point of the cores-scaling sweep.
+struct ScalePoint {
+    workers: usize,
+    rps: f64,
+    /// `rps / (workers × rps@1)` — 1.0 is perfect linear scaling.
+    efficiency: f64,
+}
+
+/// Worker counts 1, 2, 4, … up to the hardware thread count (always
+/// included, even when not a power of two).
+fn scaling_worker_counts() -> Vec<usize> {
+    let hw = hw_threads();
+    let mut counts = Vec::new();
+    let mut w = 1usize;
+    while w < hw {
+        counts.push(w);
+        w *= 2;
+    }
+    counts.push(hw);
+    counts.dedup();
+    counts
+}
+
+/// Mixed-model bursty load for the scaling sweep: two routes with
+/// different network depths share the pool, and each client submits
+/// bursts of 8 (4 per route) before draining the responses — closer to a
+/// real serving mix than the single-route closed loop above.
+fn run_mixed_burst(workers: usize, requests: usize) -> f64 {
+    let mut coord = Coordinator::new(ServerConfig {
+        workers,
+        max_batch: 8,
+        batch_window: Duration::from_micros(200),
+        queue_capacity: 4096,
+        ..ServerConfig::default()
+    });
+    coord.register("shallow", ModelKind::net(test_net()));
+    let deep = {
+        let mut rng = Rng::new(43);
+        EquivariantNet::new(
+            Group::Symmetric,
+            N,
+            &[2, 2, 2],
+            Activation::Relu,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap()
+    };
+    coord.register("deep", ModelKind::net(deep));
+    let handle = Arc::new(coord.start());
+    let clients = 8usize;
+    let per_client = requests / clients;
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(300 + c as u64);
+            let mut sent = 0usize;
+            while sent < per_client {
+                let burst = 8.min(per_client - sent);
+                let mut receivers = Vec::with_capacity(burst);
+                for b in 0..burst {
+                    let route = if b % 2 == 0 { "shallow" } else { "deep" };
+                    let v = Tensor::random(N, 2, &mut rng);
+                    receivers.push(h.submit(route, v).unwrap());
+                }
+                for rx in receivers {
+                    rx.recv().unwrap().unwrap();
+                }
+                sent += burst;
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    match Arc::try_unwrap(handle) {
+        Ok(h) => h.shutdown(),
+        Err(_) => unreachable!(),
+    }
+    (clients * per_client) as f64 / wall
+}
+
+/// Sweep worker counts over the mixed bursty harness and report scaling
+/// efficiency against the 1-worker baseline.
+fn run_scaling_sweep(fast: bool) -> Vec<ScalePoint> {
+    let requests = if fast { 320 } else { 1600 };
+    let mut points = Vec::new();
+    let mut base_rps = 0f64;
+    for workers in scaling_worker_counts() {
+        let rps = run_mixed_burst(workers, requests);
+        if workers == 1 {
+            base_rps = rps;
+        }
+        let efficiency = if base_rps > 0.0 {
+            rps / (workers as f64 * base_rps)
+        } else {
+            0.0
+        };
+        points.push(ScalePoint {
+            workers,
+            rps,
+            efficiency,
+        });
+    }
+    points
+}
+
 /// Plan-cache behaviour the serving stack relies on, measured explicitly:
 /// the first model build factors every diagram (misses), every later build
 /// of the same architecture is all hits, and serving requests never
@@ -146,8 +257,37 @@ fn write_json(
     batched_rps: f64,
     batched_snapshot: &MetricsSnapshot,
     cache: &CacheReport,
+    scaling: &[ScalePoint],
 ) {
     let stats = PlanCache::global().stats();
+    let pool = equidiag::util::executor::global_stats();
+    let shard_rates: Vec<String> = PlanCache::global()
+        .shard_stats()
+        .iter()
+        .map(|s| {
+            let lookups = s.hits + s.misses;
+            let rate = if lookups > 0 {
+                s.hits as f64 / lookups as f64
+            } else {
+                0.0
+            };
+            format!("{rate:.4}")
+        })
+        .collect();
+    let points: Vec<String> = scaling
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"workers\": {}, \"requests_per_sec\": {:.1}, \"efficiency\": {:.4}}}",
+                p.workers, p.rps, p.efficiency
+            )
+        })
+        .collect();
+    let half_hw = (hw_threads() / 2).max(1);
+    let eff_half = scaling
+        .iter()
+        .min_by_key(|p| p.workers.abs_diff(half_hw))
+        .map_or(0.0, |p| p.efficiency);
     let json = format!(
         "{{\n  \"bench\": \"coordinator_throughput\",\n  \"n\": {N},\n  \
          \"requests_per_sec_best\": {best_rps:.1},\n  \
@@ -156,6 +296,14 @@ fn write_json(
          \"batched_vs_sequential_speedup\": {speedup:.3},\n  \
          \"mean_batch_size\": {mean_batch:.3},\n  \
          \"mean_batch_exec_us\": {exec_us:.1},\n  \
+         \"scaling\": {{\n    \
+         \"hw_threads\": {hw},\n    \
+         \"efficiency_at_half_hw\": {eff_half:.4},\n    \
+         \"points\": [{points}],\n    \
+         \"executor\": {{\"workers\": {xw}, \"executed\": {xe}, \"steals\": {xs}, \
+         \"parks\": {xp}, \"injector_pushes\": {xi}}},\n    \
+         \"plan_cache_shards\": {shards},\n    \
+         \"shard_hit_rates\": [{rates}]\n  }},\n  \
          \"plan_cache\": {{\n    \"hits\": {hits},\n    \"misses\": {misses},\n    \
          \"hit_rate\": {hit_rate:.4},\n    \
          \"first_model_misses\": {fmm},\n    \
@@ -165,6 +313,15 @@ fn write_json(
         speedup = batched_rps / seq_rps,
         mean_batch = batched_snapshot.mean_batch_size,
         exec_us = batched_snapshot.mean_batch_exec_s * 1e6,
+        hw = hw_threads(),
+        points = points.join(", "),
+        xw = pool.workers,
+        xe = pool.executed,
+        xs = pool.steals,
+        xp = pool.parks,
+        xi = pool.injector_pushes,
+        shards = stats.shards,
+        rates = shard_rates.join(", "),
         hits = stats.hits,
         misses = stats.misses,
         hit_rate = stats.hit_rate(),
@@ -551,6 +708,34 @@ fn main() {
         batched_rps / seq_rps
     );
 
+    println!(
+        "\n== cores scaling: mixed shallow/deep bursty load, workers 1..{} ==\n",
+        hw_threads()
+    );
+    let scaling = run_scaling_sweep(fast);
+    let mut scale_table = Table::new(vec!["workers", "req/s", "speedup", "efficiency"]);
+    for p in &scaling {
+        scale_table.row(vec![
+            format!("{}", p.workers),
+            format!("{:.0}", p.rps),
+            // efficiency = rps / (workers × rps@1), so speedup over the
+            // 1-worker baseline is efficiency × workers.
+            format!("{:.2}x", p.efficiency * p.workers as f64),
+            format!("{:.0}%", p.efficiency * 100.0),
+        ]);
+    }
+    scale_table.print();
+    let half_hw = (hw_threads() / 2).max(1);
+    if let Some(p) = scaling.iter().min_by_key(|p| p.workers.abs_diff(half_hw)) {
+        println!(
+            "\nparallel efficiency at {} workers (nearest half the {} hardware \
+             threads): {:.0}%",
+            p.workers,
+            hw_threads(),
+            p.efficiency * 100.0
+        );
+    }
+
     write_json(
         "BENCH_throughput.json",
         best_rps,
@@ -558,6 +743,7 @@ fn main() {
         batched_rps,
         batched_snapshot.as_ref().expect("4-worker batched run"),
         &cache,
+        &scaling,
     );
 
     println!("\n== robustness: seeded chaos + overload ==\n");

@@ -80,11 +80,15 @@ pub struct ModelConfig {
 /// Serving section (`[server]`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
-    /// Worker thread count.
+    /// Worker count (`workers`). In the config file `0` means "one per
+    /// hardware thread" — resolved at parse time from the cached
+    /// [`crate::util::executor::hw_threads`], so the struct always holds
+    /// the concrete count.
     pub workers: usize,
     /// Maximum requests batched together.
     pub max_batch: usize,
-    /// Batching window.
+    /// Batching window. With `target_p95_ms` set this is the *starting*
+    /// window; the batcher then adapts it against the live p95.
     pub batch_window: Duration,
     /// Bounded request-queue capacity (backpressure).
     pub queue_capacity: usize,
@@ -105,6 +109,13 @@ pub struct ServerConfig {
     /// shared by every coordinator in the process, so only an explicitly
     /// configured value is applied at start.
     pub plan_cache_capacity: Option<usize>,
+    /// SLO target for the end-to-end p95 latency (`target_p95_ms`,
+    /// `0`/absent = off). When set, the batcher adapts its window
+    /// against the live p95 histogram: over target it narrows the
+    /// window (dispatch sooner, cut queueing delay), comfortably under
+    /// target it widens it (batch more, raise throughput). The window
+    /// stays inside `[batch_window / 8, batch_window × 16]`.
+    pub target_p95: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -117,6 +128,7 @@ impl Default for ServerConfig {
             request_timeout: None,
             max_inflight_per_model: None,
             plan_cache_capacity: None,
+            target_p95: None,
         }
     }
 }
@@ -228,7 +240,13 @@ impl AppConfig {
         };
 
         let server = ServerConfig {
-            workers: get_usize(&m, "server.workers", d.server.workers)?.max(1),
+            // `workers = 0` means "one per hardware thread" (the cached
+            // count from the executor module); any explicit value is
+            // taken as-is.
+            workers: match get_usize(&m, "server.workers", d.server.workers)? {
+                0 => crate::util::executor::hw_threads(),
+                n => n,
+            },
             max_batch: get_usize(&m, "server.max_batch", d.server.max_batch)?.max(1),
             batch_window: Duration::from_micros(get_usize(
                 &m,
@@ -254,6 +272,10 @@ impl AppConfig {
                         )
                     },
                 )?),
+            },
+            target_p95: match get_usize(&m, "server.target_p95_ms", 0)? {
+                0 => None,
+                ms => Some(Duration::from_millis(ms as u64)),
             },
         };
 
@@ -326,6 +348,7 @@ queue_capacity = 64
 request_timeout_ms = 250
 max_inflight_per_model = 32
 plan_cache_capacity = 128
+target_p95_ms = 40
 "#,
         )
         .unwrap();
@@ -339,6 +362,7 @@ plan_cache_capacity = 128
         assert_eq!(c.server.request_timeout, Some(Duration::from_millis(250)));
         assert_eq!(c.server.max_inflight_per_model, Some(32));
         assert_eq!(c.server.plan_cache_capacity, Some(128));
+        assert_eq!(c.server.target_p95, Some(Duration::from_millis(40)));
         assert_eq!(c.artifact.as_deref(), Some("artifacts/model.hlo.txt"));
     }
 
@@ -364,6 +388,24 @@ plan_cache_capacity = 128
         .unwrap();
         assert_eq!(c.server.request_timeout, None);
         assert_eq!(c.server.max_inflight_per_model, None);
+    }
+
+    #[test]
+    fn workers_zero_means_hardware_threads() {
+        let c = AppConfig::from_text("[server]\nworkers = 0").unwrap();
+        assert_eq!(c.server.workers, crate::util::executor::hw_threads());
+        let c = AppConfig::from_text("[server]\nworkers = 3").unwrap();
+        assert_eq!(c.server.workers, 3);
+        assert!(AppConfig::from_text("[server]\nworkers = -1").is_err());
+    }
+
+    #[test]
+    fn target_p95_zero_disables_adaptive_window() {
+        let c = AppConfig::from_text("[server]\ntarget_p95_ms = 0").unwrap();
+        assert_eq!(c.server.target_p95, None);
+        let c = AppConfig::from_text("[server]\ntarget_p95_ms = 25").unwrap();
+        assert_eq!(c.server.target_p95, Some(Duration::from_millis(25)));
+        assert!(AppConfig::from_text("[server]\ntarget_p95_ms = \"fast\"").is_err());
     }
 
     #[test]

@@ -46,6 +46,15 @@ pub(crate) struct Batch {
     pub items: Vec<WorkItem>,
 }
 
+/// Outcome of a bounded [`BatchQueue::pop_for`]: workers run as tasks on
+/// the shared executor, so "nothing yet" (yield the pool thread) must be
+/// distinguishable from "closed and drained" (exit the slot).
+pub(crate) enum PopWait {
+    Batch(Batch),
+    Idle,
+    Drained,
+}
+
 /// Recover a mutex guard even if a previous holder panicked. The queue's
 /// critical sections never run model code, so the protected state is
 /// always consistent; recovering (instead of unwrapping) means one
@@ -108,28 +117,38 @@ impl BatchQueue {
         }
     }
 
-    /// Pop with a timeout (used by tests); `None` means nothing arrived
-    /// within `timeout` (or the queue is closed and drained).
-    #[cfg(test)]
-    pub fn try_pop_for(&self, timeout: Duration) -> Option<Batch> {
+    /// Bounded pop for the executor-run workers: a worker slot must not
+    /// camp on a pool thread while the queue is idle, so it pops with a
+    /// timeout and yields its thread on [`PopWait::Idle`].
+    pub fn pop_for(&self, timeout: Duration) -> PopWait {
         let deadline = Instant::now() + timeout;
         let mut g = lock_recover(&self.inner);
         loop {
             if let Some(b) = g.queue.pop_front() {
-                return Some(b);
+                return PopWait::Batch(b);
             }
             if g.closed {
-                return None;
+                return PopWait::Drained;
             }
             let now = Instant::now();
             if now >= deadline {
-                return None;
+                return PopWait::Idle;
             }
             let (guard, _) = self
                 .ready
                 .wait_timeout(g, deadline - now)
                 .unwrap_or_else(PoisonError::into_inner);
             g = guard;
+        }
+    }
+
+    /// Pop with a timeout (used by tests); `None` means nothing arrived
+    /// within `timeout` (or the queue is closed and drained).
+    #[cfg(test)]
+    pub fn try_pop_for(&self, timeout: Duration) -> Option<Batch> {
+        match self.pop_for(timeout) {
+            PopWait::Batch(b) => Some(b),
+            PopWait::Idle | PopWait::Drained => None,
         }
     }
 
@@ -225,18 +244,80 @@ fn flush_expired(
     )
 }
 
+/// SLO feedback controller for the batch window (`[server]
+/// target_p95_ms`). Every `ADJUST_PERIOD` it compares the live p95 against
+/// the target: over target → narrow the window (trade batching efficiency
+/// for latency); under half the target → widen it (recover throughput).
+/// The window is clamped to `[base/8, base×16]` so a transient spike can
+/// never collapse batching entirely or stall requests indefinitely.
+struct AdaptiveWindow {
+    target_s: f64,
+    lo: Duration,
+    hi: Duration,
+    current: Duration,
+    last_adjust: Instant,
+}
+
+impl AdaptiveWindow {
+    const ADJUST_PERIOD: Duration = Duration::from_millis(100);
+
+    fn new(base: Duration, target: Duration) -> AdaptiveWindow {
+        // A zero configured window still needs non-degenerate bounds to
+        // adapt within; 100µs is the documented fallback base.
+        let base = if base.is_zero() {
+            Duration::from_micros(100)
+        } else {
+            base
+        };
+        AdaptiveWindow {
+            target_s: target.as_secs_f64(),
+            lo: (base / 8).max(Duration::from_micros(1)),
+            hi: base * 16,
+            current: base,
+            last_adjust: Instant::now(),
+        }
+    }
+
+    /// Current window, re-evaluated at most once per `ADJUST_PERIOD`.
+    fn window(&mut self, metrics: &Metrics) -> Duration {
+        if self.last_adjust.elapsed() < Self::ADJUST_PERIOD {
+            return self.current;
+        }
+        self.last_adjust = Instant::now();
+        let p95 = metrics.latency_p95_s();
+        if p95 <= 0.0 {
+            return self.current; // no completed requests yet
+        }
+        let next = if p95 > self.target_s {
+            self.current.mul_f64(0.75)
+        } else if p95 < 0.5 * self.target_s {
+            self.current.mul_f64(1.25)
+        } else {
+            self.current
+        };
+        let next = next.clamp(self.lo, self.hi);
+        if next != self.current {
+            self.current = next;
+            metrics.set_batch_window(next);
+        }
+        self.current
+    }
+}
+
 /// Run the batching loop until the request channel closes, then close the
 /// dispatch queue so the worker pool drains and exits. Flushes per-model
 /// groups when either `max_batch` is reached or the oldest item in the
-/// group exceeds `window`.
+/// group exceeds the window (fixed at `window`, or SLO-adaptive around it
+/// when `target_p95` is set).
 pub(crate) fn run(
     rx: Receiver<WorkItem>,
     dispatch: Arc<BatchQueue>,
     metrics: Arc<Metrics>,
     max_batch: usize,
     window: Duration,
+    target_p95: Option<Duration>,
 ) {
-    run_inner(rx, &dispatch, &metrics, max_batch, window);
+    run_inner(rx, &dispatch, &metrics, max_batch, window, target_p95);
     dispatch.close();
 }
 
@@ -245,11 +326,15 @@ fn run_inner(
     dispatch: &BatchQueue,
     metrics: &Metrics,
     max_batch: usize,
-    window: Duration,
+    base_window: Duration,
+    target_p95: Option<Duration>,
 ) {
+    let mut adaptive = target_p95.map(|t| AdaptiveWindow::new(base_window, t));
+    metrics.set_batch_window(adaptive.as_ref().map_or(base_window, |a| a.current));
     let mut pending: HashMap<String, Vec<WorkItem>> = HashMap::new();
     let mut oldest: Option<Instant> = None;
     loop {
+        let window = adaptive.as_mut().map_or(base_window, |a| a.window(metrics));
         // Pick a receive timeout: the remaining window if anything pends.
         let timeout = match oldest {
             None => Duration::from_millis(50),
@@ -348,7 +433,7 @@ mod tests {
         let metrics = Arc::new(Metrics::default());
         let m2 = metrics.clone();
         let q2 = q.clone();
-        let h = thread::spawn(move || run(rx, q2, m2, 2, Duration::from_millis(100)));
+        let h = thread::spawn(move || run(rx, q2, m2, 2, Duration::from_millis(100), None));
         let (a, _ra) = item("m");
         let (b, _rb) = item("m");
         let (c, _rc) = item("m");
@@ -372,7 +457,7 @@ mod tests {
         let q = BatchQueue::new();
         let metrics = Arc::new(Metrics::default());
         let q2 = q.clone();
-        let h = thread::spawn(move || run(rx, q2, metrics, 100, Duration::from_millis(5)));
+        let h = thread::spawn(move || run(rx, q2, metrics, 100, Duration::from_millis(5), None));
         let (a, _ra) = item("m");
         tx.send(a).unwrap();
         let batch = q.try_pop_for(Duration::from_secs(1)).unwrap();
@@ -395,7 +480,7 @@ mod tests {
         let q = BatchQueue::new();
         let metrics = Arc::new(Metrics::default());
         let q2 = q.clone();
-        let h = thread::spawn(move || run(rx, q2, metrics, 2, Duration::from_millis(900)));
+        let h = thread::spawn(move || run(rx, q2, metrics, 2, Duration::from_millis(900), None));
         // a1 arrives, ages for half the window…
         let (a1, _r1) = item("a");
         tx.send(a1).unwrap();
@@ -430,7 +515,7 @@ mod tests {
         let q = BatchQueue::new();
         let metrics = Arc::new(Metrics::default());
         let q2 = q.clone();
-        let h = thread::spawn(move || run(rx, q2, metrics, 100, Duration::from_millis(900)));
+        let h = thread::spawn(move || run(rx, q2, metrics, 100, Duration::from_millis(900), None));
         // a ages for half the window, then b arrives.
         let (a1, _r1) = item("a");
         tx.send(a1).unwrap();
@@ -461,7 +546,7 @@ mod tests {
         let q = BatchQueue::new();
         let metrics = Arc::new(Metrics::default());
         let q2 = q.clone();
-        let h = thread::spawn(move || run(rx, q2, metrics, 10, Duration::from_millis(5)));
+        let h = thread::spawn(move || run(rx, q2, metrics, 10, Duration::from_millis(5), None));
         let (a, _ra) = item("x");
         let (b, _rb) = item("y");
         tx.send(a).unwrap();
@@ -487,7 +572,7 @@ mod tests {
         let metrics = Arc::new(Metrics::default());
         let m2 = metrics.clone();
         let q2 = q.clone();
-        let h = thread::spawn(move || run(rx, q2, m2, 2, Duration::from_millis(50)));
+        let h = thread::spawn(move || run(rx, q2, m2, 2, Duration::from_millis(50), None));
         let (dead, dead_rx) = expired_item("m");
         let (live, _live_rx) = item("m");
         tx.send(dead).unwrap();
@@ -514,7 +599,7 @@ mod tests {
         let metrics = Arc::new(Metrics::default());
         let m2 = metrics.clone();
         let q2 = q.clone();
-        let h = thread::spawn(move || run(rx, q2, m2, 2, Duration::from_millis(5)));
+        let h = thread::spawn(move || run(rx, q2, m2, 2, Duration::from_millis(5), None));
         let (d1, r1) = expired_item("m");
         let (d2, r2) = expired_item("m");
         tx.send(d1).unwrap();

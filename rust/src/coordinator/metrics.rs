@@ -5,6 +5,7 @@
 
 use crate::fastmult::{arena_stats, exec_stats, ops_shared_total, planner_totals, PlanCache};
 use crate::nn::fused_batch_stats;
+use crate::util::executor;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
@@ -152,6 +153,12 @@ pub struct Metrics {
     /// Wall time of whole-batch model executions (the batched fast path),
     /// as opposed to `latency` which is per-request end-to-end.
     batch_exec: LatencyHistogram,
+    /// Current batch window in nanoseconds — a gauge published by the
+    /// batcher (fixed value, or the live value of the SLO-adaptive
+    /// controller when `target_p95_ms` is set).
+    batch_window_ns: AtomicU64,
+    /// Configured p95 target in nanoseconds (`0` = adaptive window off).
+    target_p95_ns: AtomicU64,
 }
 
 /// Point-in-time snapshot of the metrics.
@@ -265,6 +272,31 @@ pub struct MetricsSnapshot {
     pub fused_items: u64,
     /// Mean items per fused batch.
     pub mean_fused_batch_size: f64,
+    /// Current batch window (seconds) — the live value of the SLO-adaptive
+    /// controller, or the fixed configured window.
+    pub batch_window_s: f64,
+    /// Configured p95 target (seconds; `0.0` = adaptive window off).
+    pub target_p95_s: f64,
+    /// Plans dropped by the plan cache's LRU bound.
+    pub plan_cache_evictions: u64,
+    /// Compiled schedules dropped by the schedule cache's LRU bound.
+    pub schedule_cache_evictions: u64,
+    /// Shards the process-wide plan cache splits its key space over.
+    pub plan_cache_shards: u64,
+    /// Per-shard plan hit rate (hits / lookups; `0.0` for an idle shard),
+    /// indexed by shard — skew here means one hot key class is serialising
+    /// on a single shard mutex.
+    pub plan_cache_shard_hit_rates: Vec<f64>,
+    /// Threads in the process-wide work-stealing executor.
+    pub executor_workers: u64,
+    /// Tasks stolen from another worker's deque.
+    pub executor_steals: u64,
+    /// Times an executor worker parked on the idle condvar.
+    pub executor_parks: u64,
+    /// Tasks submitted through the executor's global injector.
+    pub executor_injector_pushes: u64,
+    /// Total tasks the executor ran (workers plus helping callers).
+    pub executor_executed: u64,
 }
 
 impl Metrics {
@@ -315,6 +347,22 @@ impl Metrics {
         }
         self.latency.record(latency);
     }
+    /// Publish the current batch window (batcher gauge).
+    pub fn set_batch_window(&self, window: Duration) {
+        let ns = window.as_nanos().min(u64::MAX as u128) as u64;
+        self.batch_window_ns.store(ns, Ordering::Relaxed);
+    }
+    /// Publish the configured p95 target (coordinator start-up gauge).
+    pub fn set_target_p95(&self, target: Duration) {
+        let ns = target.as_nanos().min(u64::MAX as u128) as u64;
+        self.target_p95_ns.store(ns, Ordering::Relaxed);
+    }
+    /// Live end-to-end p95 in seconds (`0.0` until a request completes).
+    /// Cheap enough for the adaptive-window controller's ~10 Hz polls:
+    /// one pass over a few hundred relaxed atomic loads, no locks.
+    pub(crate) fn latency_p95_s(&self) -> f64 {
+        self.latency.stats().p95_s
+    }
 
     /// Take a snapshot (includes the process-wide plan-cache counters).
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -323,6 +371,19 @@ impl Metrics {
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batched_items.load(Ordering::Relaxed);
         let cache = PlanCache::global().stats();
+        let shard_hit_rates: Vec<f64> = PlanCache::global()
+            .shard_stats()
+            .iter()
+            .map(|s| {
+                let lookups = s.hits + s.misses;
+                if lookups > 0 {
+                    s.hits as f64 / lookups as f64
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let pool = executor::global_stats();
         let arena = arena_stats();
         let fused = fused_batch_stats();
         let sched_exec = exec_stats();
@@ -375,6 +436,17 @@ impl Metrics {
             fused_batches: fused.batches,
             fused_items: fused.items,
             mean_fused_batch_size: fused.mean_batch_size(),
+            batch_window_s: self.batch_window_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            target_p95_s: self.target_p95_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            plan_cache_evictions: cache.evictions,
+            schedule_cache_evictions: cache.schedule_evictions,
+            plan_cache_shards: cache.shards as u64,
+            plan_cache_shard_hit_rates: shard_hit_rates,
+            executor_workers: pool.workers as u64,
+            executor_steals: pool.steals,
+            executor_parks: pool.parks,
+            executor_injector_pushes: pool.injector_pushes,
+            executor_executed: pool.executed,
         }
     }
 }
@@ -549,5 +621,31 @@ mod tests {
         assert!(s.fused_batches >= 1, "fused-batch counter not plumbed");
         assert!(s.fused_items >= 4, "fused-item counter not plumbed");
         assert!(s.mean_fused_batch_size > 0.0);
+        // Gauges: window/target publish through to the snapshot.
+        m.set_batch_window(Duration::from_micros(200));
+        m.set_target_p95(Duration::from_millis(40));
+        let s = m.snapshot();
+        assert!((s.batch_window_s - 200e-6).abs() < 1e-12);
+        assert!((s.target_p95_s - 0.040).abs() < 1e-12);
+        // The cheap p95 accessor agrees with the full snapshot.
+        assert!((m.latency_p95_s() - s.p95_latency_s).abs() < 1e-12);
+        // Sharded-cache and executor counters are plumbed through. The
+        // layer/net forwards above went through `parallel_map`, which spins
+        // up the global executor, and through the global plan cache.
+        assert_eq!(
+            s.plan_cache_shards as usize,
+            PlanCache::global().shards(),
+            "shard count not plumbed"
+        );
+        assert_eq!(
+            s.plan_cache_shard_hit_rates.len(),
+            s.plan_cache_shards as usize
+        );
+        assert!(s
+            .plan_cache_shard_hit_rates
+            .iter()
+            .all(|r| (0.0..=1.0).contains(r)));
+        assert!(s.executor_workers >= 1, "executor stats not plumbed");
+        assert!(s.executor_executed >= 1, "executor task counter stuck");
     }
 }

@@ -10,13 +10,14 @@
 //! bounded wait whenever a request deadline is configured — no client
 //! ever hangs on a response that will never come.
 
-use super::batcher::{self, BatchQueue, WorkItem};
+use super::batcher::{self, Batch, BatchQueue, PopWait, WorkItem};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::registry::{ModelKind, Registry};
 use crate::config::ServerConfig;
 use crate::error::{Error, Result};
 use crate::fastmult::PlanCache;
 use crate::tensor::Tensor;
+use crate::util::executor;
 use std::any::Any;
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -136,11 +137,12 @@ impl Coordinator {
         // applies any budget a previous coordinator set.) The prior budget
         // is restored when the handle shuts down.
         let prior_thread_budget = crate::util::parallel::thread_budget();
-        let hw = std::thread::available_parallelism()
-            .map(std::num::NonZeroUsize::get)
-            .unwrap_or(1);
+        let hw = executor::hw_threads();
         crate::util::parallel::set_thread_budget((hw / self.config.workers.max(1)).max(1));
         let metrics = Arc::new(Metrics::default());
+        if let Some(target) = self.config.target_p95 {
+            metrics.set_target_p95(target);
+        }
         let (req_tx, req_rx) = mpsc::sync_channel::<WorkItem>(self.config.queue_capacity);
         let dispatch = BatchQueue::new();
         let registry = Arc::new(self.registry);
@@ -155,8 +157,9 @@ impl Coordinator {
             let dispatch = dispatch.clone();
             let max_batch = self.config.max_batch;
             let window = self.config.batch_window;
+            let target_p95 = self.config.target_p95;
             threads.push(std::thread::spawn(move || {
-                batcher::run(req_rx, dispatch, metrics, max_batch, window)
+                batcher::run(req_rx, dispatch, metrics, max_batch, window, target_p95)
             }));
         }
         {
@@ -198,37 +201,72 @@ struct WorkerEvent {
     exit: WorkerExit,
 }
 
-fn spawn_worker(
+/// Everything one worker slot needs, cloned into each of its task
+/// incarnations on the shared executor. Cloning is a handful of `Arc`
+/// bumps plus a channel-sender clone.
+#[derive(Clone)]
+struct WorkerCtx {
     slot: usize,
-    queue: &Arc<BatchQueue>,
-    registry: &Arc<Registry>,
-    metrics: &Arc<Metrics>,
-    events: &mpsc::Sender<WorkerEvent>,
-) -> JoinHandle<()> {
-    let queue = queue.clone();
-    let registry = registry.clone();
-    let metrics = metrics.clone();
-    let events = events.clone();
-    std::thread::spawn(move || {
-        // Belt and braces: worker_loop already catches panics at the batch
-        // boundary; this wrapper catches anything that escapes it so the
-        // supervisor always receives an exit event and the pool never
-        // silently shrinks.
-        let exit = match catch_unwind(AssertUnwindSafe(|| {
-            worker_loop(&queue, &registry, &metrics)
-        })) {
-            Ok(exit) => exit,
-            Err(_) => WorkerExit::Recycled,
-        };
-        let _ = events.send(WorkerEvent { slot, exit });
-    })
+    queue: Arc<BatchQueue>,
+    registry: Arc<Registry>,
+    metrics: Arc<Metrics>,
+    events: mpsc::Sender<WorkerEvent>,
 }
 
-/// Supervise the worker pool: spawn the initial workers, then respawn any
-/// worker that recycled after a panic, with capped exponential backoff
-/// per slot (base 5ms, cap 200ms, reset after 1s of health). Exits when
-/// every worker has exited and the drained queue means none needs a
-/// replacement.
+/// Why one executor-task incarnation of a worker slot returned.
+enum WorkerStep {
+    /// The queue was idle for a full slice: re-submit the slot so other
+    /// tasks sharing the executor (other coordinators, `parallel_map`
+    /// fan-outs) get the thread in between.
+    Yield,
+    /// The slot is done (queue drained, or recycling after a panic); the
+    /// supervisor gets the exit event.
+    Exit(WorkerExit),
+}
+
+/// How long an idle worker slot occupies an executor thread before
+/// yielding it. Batch pickup latency is unaffected — the slot sleeps on
+/// the queue condvar inside the slice and wakes the moment a batch lands.
+const WORKER_IDLE_SLICE: Duration = Duration::from_millis(10);
+
+/// Queue one incarnation of a worker slot on the process-wide executor.
+/// Replaces the per-worker `std::thread::spawn`: slots are now tasks on
+/// the shared pool, so a panicked slot's replacement costs a queue push,
+/// not a thread spawn.
+fn spawn_worker(ctx: WorkerCtx) {
+    executor::global().spawn(move || worker_task(ctx));
+}
+
+/// One executor-task incarnation of a worker slot. Belt and braces: the
+/// slice already catches panics at the batch boundary; this wrapper
+/// catches anything that escapes it so the supervisor always receives an
+/// exit event and the pool never silently shrinks.
+fn worker_task(ctx: WorkerCtx) {
+    match catch_unwind(AssertUnwindSafe(|| worker_slice(&ctx))) {
+        Ok(WorkerStep::Yield) => spawn_worker(ctx),
+        Ok(WorkerStep::Exit(exit)) => {
+            let _ = ctx.events.send(WorkerEvent {
+                slot: ctx.slot,
+                exit,
+            });
+        }
+        Err(_) => {
+            let _ = ctx.events.send(WorkerEvent {
+                slot: ctx.slot,
+                exit: WorkerExit::Recycled,
+            });
+        }
+    }
+}
+
+/// Supervise the worker pool: spawn the initial slot tasks, then respawn
+/// any slot that recycled after a panic, with capped exponential backoff
+/// per slot (base 5ms, cap 200ms, reset after 1s of health). Backoff is
+/// tracked as a per-slot **due time** rather than an inline sleep, so one
+/// slot waiting out its backoff never delays another slot's exit event or
+/// respawn — the event channel keeps draining throughout. Exits when
+/// every slot has exited, no respawn pends, and the drained queue means
+/// none needs a replacement.
 fn supervisor_loop(
     queue: Arc<BatchQueue>,
     registry: Arc<Registry>,
@@ -236,53 +274,67 @@ fn supervisor_loop(
     workers: usize,
 ) {
     let (event_tx, event_rx) = mpsc::channel::<WorkerEvent>();
-    let mut handles: Vec<Option<JoinHandle<()>>> = Vec::with_capacity(workers);
+    let ctxs: Vec<WorkerCtx> = (0..workers)
+        .map(|slot| WorkerCtx {
+            slot,
+            queue: queue.clone(),
+            registry: registry.clone(),
+            metrics: metrics.clone(),
+            events: event_tx.clone(),
+        })
+        .collect();
     let mut restarts = vec![0u32; workers];
-    let mut spawned_at = Vec::with_capacity(workers);
-    for slot in 0..workers {
-        handles.push(Some(spawn_worker(slot, &queue, &registry, &metrics, &event_tx)));
+    let mut spawned_at: Vec<Instant> = Vec::with_capacity(workers);
+    let mut respawn_due: Vec<Option<Instant>> = vec![None; workers];
+    for ctx in &ctxs {
+        spawn_worker(ctx.clone());
         spawned_at.push(Instant::now());
     }
     let mut alive = workers;
-    while alive > 0 {
-        let event = match event_rx.recv() {
-            Ok(e) => e,
-            Err(_) => break, // unreachable: we hold a sender clone per spawn
+    while alive > 0 || respawn_due.iter().any(Option::is_some) {
+        // Wait for the next exit event, but never past the earliest due
+        // respawn (sliced so a shutdown arriving mid-backoff is honoured).
+        let timeout = match respawn_due.iter().flatten().min() {
+            None => Duration::from_millis(50),
+            Some(due) => due
+                .saturating_duration_since(Instant::now())
+                .min(BACKOFF_SLICE),
         };
-        if let Some(handle) = handles[event.slot].take() {
-            let _ = handle.join(); // the event is sent last, so this is quick
-        }
-        alive -= 1;
-        if event.exit == WorkerExit::Clean || queue.is_drained() {
-            continue;
-        }
-        // A long-healthy worker's crash is fresh news, not a crash loop.
-        if spawned_at[event.slot].elapsed() >= BACKOFF_HEALTHY_RESET {
-            restarts[event.slot] = 0;
-        }
-        let backoff = BACKOFF_CAP.min(BACKOFF_BASE * 2u32.pow(restarts[event.slot].min(16)));
-        restarts[event.slot] = restarts[event.slot].saturating_add(1);
-        // Sleep in slices so a shutdown arriving mid-backoff is honoured.
-        let t0 = Instant::now();
-        while t0.elapsed() < backoff && !queue.is_drained() {
-            std::thread::sleep(BACKOFF_SLICE.min(backoff));
+        match event_rx.recv_timeout(timeout) {
+            Ok(event) => {
+                alive -= 1;
+                if event.exit != WorkerExit::Clean && !queue.is_drained() {
+                    // A long-healthy worker's crash is fresh news, not a
+                    // crash loop.
+                    if spawned_at[event.slot].elapsed() >= BACKOFF_HEALTHY_RESET {
+                        restarts[event.slot] = 0;
+                    }
+                    let backoff =
+                        BACKOFF_CAP.min(BACKOFF_BASE * 2u32.pow(restarts[event.slot].min(16)));
+                    restarts[event.slot] = restarts[event.slot].saturating_add(1);
+                    respawn_due[event.slot] = Some(Instant::now() + backoff);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break, // unreachable: ctxs hold senders
         }
         if queue.is_drained() {
+            // Shutdown: pending respawns are moot, nothing to execute.
+            for due in &mut respawn_due {
+                *due = None;
+            }
             continue;
         }
-        metrics.on_worker_restart();
-        handles[event.slot] = Some(spawn_worker(
-            event.slot,
-            &queue,
-            &registry,
-            &metrics,
-            &event_tx,
-        ));
-        spawned_at[event.slot] = Instant::now();
-        alive += 1;
-    }
-    for handle in handles.into_iter().flatten() {
-        let _ = handle.join();
+        let now = Instant::now();
+        for slot in 0..workers {
+            if respawn_due[slot].is_some_and(|due| due <= now) {
+                respawn_due[slot] = None;
+                metrics.on_worker_restart();
+                spawn_worker(ctxs[slot].clone());
+                spawned_at[slot] = Instant::now();
+                alive += 1;
+            }
+        }
     }
 }
 
@@ -308,7 +360,8 @@ fn panic_message(payload: &(dyn Any + Send)) -> String {
 }
 
 /// Pull batches off the shared queue and execute them until the queue
-/// closes. Shed points and panic isolation:
+/// goes idle (yield the executor thread), drains (clean exit), or a batch
+/// panics (recycle). Shed points and panic isolation:
 /// - expired items are shed **before execution** (no wasted schedule
 ///   walks);
 /// - the whole-batch fast path runs under `catch_unwind`; if it panics,
@@ -316,69 +369,83 @@ fn panic_message(payload: &(dyn Any + Send)) -> String {
 ///   one poisoned input gets a typed [`Error::WorkerPanic`] while its
 ///   batch-mates still get real responses;
 /// - after a batch-level panic the worker finishes delivering outcomes and
-///   then recycles itself ([`WorkerExit::Recycled`]) — thread state is
-///   suspect after unwinding through model code.
-fn worker_loop(queue: &BatchQueue, registry: &Registry, metrics: &Metrics) -> WorkerExit {
-    while let Some(batch) = queue.pop() {
-        let items = batcher::shed_expired(batch.items, metrics, Instant::now());
-        if items.is_empty() {
-            continue;
-        }
-        let model = match registry.get(&batch.model) {
-            Ok(m) => m,
-            Err(e) => {
-                for item in items {
-                    metrics.on_complete(item.enqueued.elapsed(), false);
-                    let _ = item.respond.send(Err(clone_lookup_error(&e)));
-                }
-                continue;
-            }
+///   then recycles itself ([`WorkerExit::Recycled`]) — a fresh slot task
+///   replaces it, since state is suspect after unwinding through model
+///   code.
+fn worker_slice(ctx: &WorkerCtx) -> WorkerStep {
+    loop {
+        let batch = match ctx.queue.pop_for(WORKER_IDLE_SLICE) {
+            PopWait::Batch(b) => b,
+            PopWait::Idle => return WorkerStep::Yield,
+            PopWait::Drained => return WorkerStep::Exit(WorkerExit::Clean),
         };
-        // One plan, many inputs: the whole batch is packed into contiguous
-        // `[B, n^k]` BatchTensors inside the model's batched path and each
-        // layer schedule is walked once per worker span — per-item errors
-        // stay per-item (malformed batches fall back to per-item
-        // forwards). Fused-execution stats surface in the metrics
-        // snapshot (`fused_batches` / `fused_items`).
-        let t0 = Instant::now();
-        let outcome = {
-            let inputs: Vec<&Tensor> = items.iter().map(|it| &it.input).collect();
-            catch_unwind(AssertUnwindSafe(|| model.infer_batch(&inputs)))
-        };
-        match outcome {
-            Ok(results) => {
-                metrics.on_batch_executed(t0.elapsed());
-                for (item, result) in items.into_iter().zip(results) {
-                    let ok = result.is_ok();
-                    metrics.on_complete(item.enqueued.elapsed(), ok);
-                    let _ = item.respond.send(result);
-                }
-            }
-            Err(_) => {
-                metrics.on_batch_panic();
-                // Per-item fallback: isolate the poisoned input. Deadlines
-                // are re-checked per item — the fallback is serial, so a
-                // generous batch's tail may expire while its head re-runs.
-                for item in items {
-                    if item.expired(Instant::now()) {
-                        metrics.on_shed_expired();
-                        let _ = item.respond.send(Err(Error::DeadlineExceeded));
-                        continue;
-                    }
-                    let result = match catch_unwind(AssertUnwindSafe(|| model.infer(&item.input)))
-                    {
-                        Ok(r) => r,
-                        Err(payload) => Err(Error::WorkerPanic(panic_message(&*payload))),
-                    };
-                    let ok = result.is_ok();
-                    metrics.on_complete(item.enqueued.elapsed(), ok);
-                    let _ = item.respond.send(result);
-                }
-                return WorkerExit::Recycled;
-            }
+        if let Some(exit) = run_batch(batch, &ctx.registry, &ctx.metrics) {
+            return WorkerStep::Exit(exit);
         }
     }
-    WorkerExit::Clean
+}
+
+/// Execute one batch, delivering a terminal outcome to every item.
+/// `Some(exit)` means the slot must stop (recycle after a batch panic);
+/// `None` means it can pull the next batch.
+fn run_batch(batch: Batch, registry: &Registry, metrics: &Metrics) -> Option<WorkerExit> {
+    let items = batcher::shed_expired(batch.items, metrics, Instant::now());
+    if items.is_empty() {
+        return None;
+    }
+    let model = match registry.get(&batch.model) {
+        Ok(m) => m,
+        Err(e) => {
+            for item in items {
+                metrics.on_complete(item.enqueued.elapsed(), false);
+                let _ = item.respond.send(Err(clone_lookup_error(&e)));
+            }
+            return None;
+        }
+    };
+    // One plan, many inputs: the whole batch is packed into contiguous
+    // `[B, n^k]` BatchTensors inside the model's batched path and each
+    // layer schedule is walked once per worker span — per-item errors
+    // stay per-item (malformed batches fall back to per-item
+    // forwards). Fused-execution stats surface in the metrics
+    // snapshot (`fused_batches` / `fused_items`).
+    let t0 = Instant::now();
+    let outcome = {
+        let inputs: Vec<&Tensor> = items.iter().map(|it| &it.input).collect();
+        catch_unwind(AssertUnwindSafe(|| model.infer_batch(&inputs)))
+    };
+    match outcome {
+        Ok(results) => {
+            metrics.on_batch_executed(t0.elapsed());
+            for (item, result) in items.into_iter().zip(results) {
+                let ok = result.is_ok();
+                metrics.on_complete(item.enqueued.elapsed(), ok);
+                let _ = item.respond.send(result);
+            }
+            None
+        }
+        Err(_) => {
+            metrics.on_batch_panic();
+            // Per-item fallback: isolate the poisoned input. Deadlines
+            // are re-checked per item — the fallback is serial, so a
+            // generous batch's tail may expire while its head re-runs.
+            for item in items {
+                if item.expired(Instant::now()) {
+                    metrics.on_shed_expired();
+                    let _ = item.respond.send(Err(Error::DeadlineExceeded));
+                    continue;
+                }
+                let result = match catch_unwind(AssertUnwindSafe(|| model.infer(&item.input))) {
+                    Ok(r) => r,
+                    Err(payload) => Err(Error::WorkerPanic(panic_message(&*payload))),
+                };
+                let ok = result.is_ok();
+                metrics.on_complete(item.enqueued.elapsed(), ok);
+                let _ = item.respond.send(result);
+            }
+            Some(WorkerExit::Recycled)
+        }
+    }
 }
 
 /// Client handle to a running coordinator.

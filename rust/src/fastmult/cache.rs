@@ -9,21 +9,35 @@
 //! from `(Group, Diagram, n)` to [`Arc<MultPlan>`], so the `Factor` step
 //! runs **once per distinct diagram across the whole process**.
 //!
+//! Concurrency: the cache is **sharded by key hash** (shard count = the
+//! next power of two ≥ the hardware thread count), one mutex and one set
+//! of atomic counters per shard, so concurrent serving workers looking up
+//! plans for *different* models never contend on a lock. LRU stamps come
+//! from one process-wide atomic tick, and eviction removes the globally
+//! oldest entry (a cross-shard scan, taken one lock at a time) — so the
+//! observable LRU semantics are identical to the old single-mutex cache;
+//! only the hot hit path got cheaper. The compiled-[`LayerSchedule`] map
+//! is sharded and bounded the same way (it used to be unbounded).
+//!
 //! Knobs (see `docs/plan_cache.md`):
-//! - capacity: maximum number of cached plans; `0` means unbounded.
-//!   Adjustable at runtime via [`PlanCache::set_capacity`], wired to the
+//! - capacity: maximum number of cached plans (and, independently
+//!   accounted, compiled schedules); `0` means unbounded. Adjustable at
+//!   runtime via [`PlanCache::set_capacity`], wired to the
 //!   `[server] plan_cache_capacity` config key by the coordinator.
-//! - counters: hits / misses / evictions, surfaced through
-//!   [`PlanCache::stats`] and the coordinator's metrics snapshot.
+//! - counters: hits / misses / evictions per shard, aggregated through
+//!   [`PlanCache::stats`] and surfaced per shard through
+//!   [`PlanCache::shard_stats`] and the coordinator's metrics snapshot.
 
 use super::schedule::{exec_stats, LayerSchedule};
 use super::{Group, MultPlan};
 use crate::diagram::Diagram;
 use crate::error::Result;
-use std::collections::hash_map::Entry;
+use crate::util::executor::hw_threads;
+use std::collections::hash_map::{DefaultHasher, Entry};
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
 /// Default bound on the number of cached plans. Plans are small (a few
 /// hundred bytes of permutations and block sizes), so the default is
@@ -48,10 +62,12 @@ struct Slot {
     stamp: u64,
 }
 
-#[derive(Debug, Default)]
-struct Inner {
-    map: HashMap<PlanKey, Slot>,
-    tick: u64,
+/// One compiled schedule plus its LRU stamp (the schedules map used to
+/// be unbounded; it now carries the same accounting as the plan map).
+#[derive(Debug)]
+struct SchedSlot {
+    schedule: Arc<LayerSchedule>,
+    stamp: u64,
 }
 
 /// Key for one compiled [`LayerSchedule`]: the spanning set (and its
@@ -68,22 +84,41 @@ struct ScheduleKey {
     transposed: bool,
 }
 
-/// Thread-safe, bounded, LRU-evicting cache of pre-factored plans, plus an
-/// (unbounded — there is one entry per distinct layer shape) cache of
-/// compiled [`LayerSchedule`]s.
-#[derive(Debug)]
-pub struct PlanCache {
-    inner: Mutex<Inner>,
-    schedules: Mutex<HashMap<ScheduleKey, Arc<LayerSchedule>>>,
-    capacity: AtomicUsize,
+/// One cache shard: its slice of both maps plus its own counters, so a
+/// hit touches exactly one mutex and no shared cache line.
+#[derive(Debug, Default)]
+struct Shard {
+    plans: Mutex<HashMap<PlanKey, Slot>>,
+    schedules: Mutex<HashMap<ScheduleKey, SchedSlot>>,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
     schedule_hits: AtomicU64,
     schedule_misses: AtomicU64,
+    schedule_evictions: AtomicU64,
 }
 
-/// Point-in-time counters for one [`PlanCache`].
+/// The cache never panics while holding a lock; recover from a poisoned
+/// mutex (a panicking *caller* thread can still poison one mid-lookup).
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Thread-safe, bounded, LRU-evicting cache of pre-factored plans and
+/// compiled [`LayerSchedule`]s, sharded by key hash.
+#[derive(Debug)]
+pub struct PlanCache {
+    shards: Vec<Shard>,
+    /// Process-monotone LRU clock shared by all shards: stamps are
+    /// comparable across shards, which is what keeps eviction globally
+    /// least-recently-used rather than per-shard approximate.
+    tick: AtomicU64,
+    capacity: AtomicUsize,
+    plan_entries: AtomicUsize,
+    schedule_entries: AtomicUsize,
+}
+
+/// Point-in-time counters for one [`PlanCache`], aggregated over shards.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheStats {
     /// Lookups served from the cache.
@@ -96,10 +131,14 @@ pub struct CacheStats {
     pub entries: usize,
     /// Current capacity (`0` = unbounded).
     pub capacity: usize,
+    /// Number of shards the key space is split over.
+    pub shards: usize,
     /// Schedule lookups served from the cache.
     pub schedule_hits: u64,
     /// Schedule lookups that had to compile.
     pub schedule_misses: u64,
+    /// Compiled schedules dropped by the LRU bound.
+    pub schedule_evictions: u64,
     /// Compiled schedules currently held.
     pub schedule_entries: usize,
     /// Process-wide folded scatter passes executed (one per active
@@ -129,20 +168,60 @@ impl CacheStats {
     }
 }
 
+/// Counters for a single shard (plan + schedule lookups combined give
+/// the shard's traffic share; `hit_rate` covers plan lookups).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Plan lookups served from this shard.
+    pub hits: u64,
+    /// Plan lookups that missed in this shard.
+    pub misses: u64,
+    /// Plans evicted from this shard.
+    pub evictions: u64,
+    /// Plans currently held by this shard.
+    pub entries: usize,
+    /// Schedule lookups served from this shard.
+    pub schedule_hits: u64,
+    /// Schedule lookups that missed in this shard.
+    pub schedule_misses: u64,
+    /// Schedules evicted from this shard.
+    pub schedule_evictions: u64,
+    /// Schedules currently held by this shard.
+    pub schedule_entries: usize,
+}
+
+impl ShardStats {
+    /// Fraction of this shard's plan lookups served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
 static GLOBAL: OnceLock<PlanCache> = OnceLock::new();
 
 impl PlanCache {
-    /// New cache bounded to `capacity` plans (`0` = unbounded).
+    /// New cache bounded to `capacity` plans (`0` = unbounded), sharded
+    /// over the next power of two ≥ the hardware thread count.
     pub fn with_capacity(capacity: usize) -> Self {
+        PlanCache::with_capacity_and_shards(capacity, hw_threads().next_power_of_two())
+    }
+
+    /// New cache with an explicit shard count (rounded up to a power of
+    /// two so the shard index is a mask) — tests use this to pin down
+    /// cross-shard behaviour independently of the host's core count.
+    pub fn with_capacity_and_shards(capacity: usize, shards: usize) -> Self {
+        let shards = shards.max(1).next_power_of_two();
         PlanCache {
-            inner: Mutex::new(Inner::default()),
-            schedules: Mutex::new(HashMap::new()),
+            shards: (0..shards).map(|_| Shard::default()).collect(),
+            tick: AtomicU64::new(0),
             capacity: AtomicUsize::new(capacity),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
-            schedule_hits: AtomicU64::new(0),
-            schedule_misses: AtomicU64::new(0),
+            plan_entries: AtomicUsize::new(0),
+            schedule_entries: AtomicUsize::new(0),
         }
     }
 
@@ -156,12 +235,30 @@ impl PlanCache {
         self.capacity.load(Ordering::Relaxed)
     }
 
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_for<K: Hash>(&self, key: &K) -> &Shard {
+        // SipHash with fixed keys: shard assignment is stable across
+        // runs, which keeps cross-shard tests reproducible.
+        let mut hasher = DefaultHasher::new();
+        key.hash(&mut hasher);
+        let idx = (hasher.finish() as usize) & (self.shards.len() - 1);
+        &self.shards[idx]
+    }
+
+    fn next_stamp(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
     /// Re-bound the cache; evicts LRU entries immediately if the new
     /// capacity is smaller than the current population.
     pub fn set_capacity(&self, capacity: usize) {
         self.capacity.store(capacity, Ordering::Relaxed);
-        let mut inner = self.inner.lock().unwrap();
-        self.evict_over_capacity(&mut inner, capacity);
+        self.evict_plans_over(capacity);
+        self.evict_schedules_over(capacity);
     }
 
     /// Look up (or factor and insert) the plan for `d` under `group` at
@@ -177,52 +274,99 @@ impl PlanCache {
             diagram: d.clone(),
             n,
         };
+        let shard = self.shard_for(&key);
         {
-            let mut inner = self.inner.lock().unwrap();
-            inner.tick += 1;
-            let tick = inner.tick;
-            if let Some(slot) = inner.map.get_mut(&key) {
-                slot.stamp = tick;
-                self.hits.fetch_add(1, Ordering::Relaxed);
+            let mut map = lock_recover(&shard.plans);
+            if let Some(slot) = map.get_mut(&key) {
+                slot.stamp = self.next_stamp();
+                shard.hits.fetch_add(1, Ordering::Relaxed);
                 return Ok(slot.plan.clone());
             }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        shard.misses.fetch_add(1, Ordering::Relaxed);
         let plan = Arc::new(MultPlan::new(group, d, n)?);
-        let mut inner = self.inner.lock().unwrap();
-        // Read the capacity under the lock: a concurrent `set_capacity`
-        // must not race this insert into exceeding the new bound.
-        let capacity = self.capacity();
-        inner.tick += 1;
-        let tick = inner.tick;
-        let result = match inner.map.entry(key) {
-            Entry::Occupied(mut e) => {
-                // Raced with another builder: keep the existing plan.
-                e.get_mut().stamp = tick;
-                e.get().plan.clone()
+        let result = {
+            let mut map = lock_recover(&shard.plans);
+            let stamp = self.next_stamp();
+            match map.entry(key) {
+                Entry::Occupied(mut e) => {
+                    // Raced with another builder: keep the existing plan.
+                    e.get_mut().stamp = stamp;
+                    e.get().plan.clone()
+                }
+                Entry::Vacant(v) => {
+                    self.plan_entries.fetch_add(1, Ordering::Relaxed);
+                    v.insert(Slot { plan, stamp }).plan.clone()
+                }
             }
-            Entry::Vacant(v) => v.insert(Slot { plan, stamp: tick }).plan.clone(),
         };
-        self.evict_over_capacity(&mut inner, capacity);
+        self.evict_plans_over(self.capacity());
         Ok(result)
     }
 
-    fn evict_over_capacity(&self, inner: &mut Inner, capacity: usize) {
+    /// Evict globally-least-recently-used plans until the population is
+    /// within `capacity`. Runs with no lock held on entry and takes one
+    /// shard lock at a time, so it can never deadlock against lookups;
+    /// a stamp re-check makes a concurrent touch win over the eviction.
+    fn evict_plans_over(&self, capacity: usize) {
         if capacity == 0 {
             return;
         }
-        while inner.map.len() > capacity {
-            let oldest = inner
-                .map
-                .iter()
-                .min_by_key(|(_, slot)| slot.stamp)
-                .map(|(k, _)| k.clone());
-            match oldest {
-                Some(k) => {
-                    inner.map.remove(&k);
-                    self.evictions.fetch_add(1, Ordering::Relaxed);
+        while self.plan_entries.load(Ordering::Relaxed) > capacity {
+            let mut oldest: Option<(usize, PlanKey, u64)> = None;
+            for (idx, shard) in self.shards.iter().enumerate() {
+                let map = lock_recover(&shard.plans);
+                if let Some((key, slot)) = map.iter().min_by_key(|(_, slot)| slot.stamp) {
+                    let beats = match &oldest {
+                        None => true,
+                        Some((_, _, stamp)) => slot.stamp < *stamp,
+                    };
+                    if beats {
+                        oldest = Some((idx, key.clone(), slot.stamp));
+                    }
                 }
-                None => break,
+            }
+            let Some((idx, key, stamp)) = oldest else {
+                return;
+            };
+            let shard = &self.shards[idx];
+            let mut map = lock_recover(&shard.plans);
+            if map.get(&key).is_some_and(|slot| slot.stamp == stamp) {
+                map.remove(&key);
+                self.plan_entries.fetch_sub(1, Ordering::Relaxed);
+                shard.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Schedule-map twin of [`PlanCache::evict_plans_over`].
+    fn evict_schedules_over(&self, capacity: usize) {
+        if capacity == 0 {
+            return;
+        }
+        while self.schedule_entries.load(Ordering::Relaxed) > capacity {
+            let mut oldest: Option<(usize, ScheduleKey, u64)> = None;
+            for (idx, shard) in self.shards.iter().enumerate() {
+                let map = lock_recover(&shard.schedules);
+                if let Some((key, slot)) = map.iter().min_by_key(|(_, slot)| slot.stamp) {
+                    let beats = match &oldest {
+                        None => true,
+                        Some((_, _, stamp)) => slot.stamp < *stamp,
+                    };
+                    if beats {
+                        oldest = Some((idx, *key, slot.stamp));
+                    }
+                }
+            }
+            let Some((idx, key, stamp)) = oldest else {
+                return;
+            };
+            let shard = &self.shards[idx];
+            let mut map = lock_recover(&shard.schedules);
+            if map.get(&key).is_some_and(|slot| slot.stamp == stamp) {
+                map.remove(&key);
+                self.schedule_entries.fetch_sub(1, Ordering::Relaxed);
+                shard.schedule_evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -249,49 +393,104 @@ impl PlanCache {
             l,
             transposed,
         };
-        if let Some(s) = self.schedules.lock().unwrap().get(&key) {
-            self.schedule_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(s.clone());
+        let shard = self.shard_for(&key);
+        {
+            let mut map = lock_recover(&shard.schedules);
+            if let Some(slot) = map.get_mut(&key) {
+                slot.stamp = self.next_stamp();
+                shard.schedule_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(slot.schedule.clone());
+            }
         }
-        self.schedule_misses.fetch_add(1, Ordering::Relaxed);
+        shard.schedule_misses.fetch_add(1, Ordering::Relaxed);
         // Compile outside the lock (mirrors `get_or_build`); a racing
         // compile of the same key keeps the first insert.
         let (ck, cl) = if transposed { (l, k) } else { (k, l) };
         let compiled = Arc::new(LayerSchedule::compile(group, n, ck, cl, plans)?);
-        Ok(self
-            .schedules
-            .lock()
-            .unwrap()
-            .entry(key)
-            .or_insert(compiled)
-            .clone())
+        let result = {
+            let mut map = lock_recover(&shard.schedules);
+            let stamp = self.next_stamp();
+            match map.entry(key) {
+                Entry::Occupied(mut e) => {
+                    e.get_mut().stamp = stamp;
+                    e.get().schedule.clone()
+                }
+                Entry::Vacant(v) => {
+                    self.schedule_entries.fetch_add(1, Ordering::Relaxed);
+                    v.insert(SchedSlot {
+                        schedule: compiled,
+                        stamp,
+                    })
+                    .schedule
+                    .clone()
+                }
+            }
+        };
+        self.evict_schedules_over(self.capacity());
+        Ok(result)
     }
 
     /// Drop every cached plan and schedule (counters are preserved).
     pub fn clear(&self) {
-        self.inner.lock().unwrap().map.clear();
-        self.schedules.lock().unwrap().clear();
+        for shard in &self.shards {
+            lock_recover(&shard.plans).clear();
+            lock_recover(&shard.schedules).clear();
+        }
+        self.plan_entries.store(0, Ordering::Relaxed);
+        self.schedule_entries.store(0, Ordering::Relaxed);
     }
 
-    /// Current counters (the execution counters are process-wide, shared
-    /// by every cache — they live next to the schedules they instrument).
+    /// Current counters, aggregated over shards (the execution counters
+    /// are process-wide, shared by every cache — they live next to the
+    /// schedules they instrument).
     pub fn stats(&self) -> CacheStats {
-        let entries = self.inner.lock().unwrap().map.len();
-        let schedule_entries = self.schedules.lock().unwrap().len();
-        let exec = exec_stats();
-        CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
-            entries,
+        let mut stats = CacheStats {
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            entries: 0,
             capacity: self.capacity(),
-            schedule_hits: self.schedule_hits.load(Ordering::Relaxed),
-            schedule_misses: self.schedule_misses.load(Ordering::Relaxed),
-            schedule_entries,
-            scatter_passes: exec.scatter_passes,
-            executed_nodes: exec.executed_nodes,
-            bytes_moved: exec.bytes_moved,
+            shards: self.shards.len(),
+            schedule_hits: 0,
+            schedule_misses: 0,
+            schedule_evictions: 0,
+            schedule_entries: 0,
+            scatter_passes: 0,
+            executed_nodes: 0,
+            bytes_moved: 0,
+        };
+        for shard in self.shard_stats() {
+            stats.hits += shard.hits;
+            stats.misses += shard.misses;
+            stats.evictions += shard.evictions;
+            stats.entries += shard.entries;
+            stats.schedule_hits += shard.schedule_hits;
+            stats.schedule_misses += shard.schedule_misses;
+            stats.schedule_evictions += shard.schedule_evictions;
+            stats.schedule_entries += shard.schedule_entries;
         }
+        let exec = exec_stats();
+        stats.scatter_passes = exec.scatter_passes;
+        stats.executed_nodes = exec.executed_nodes;
+        stats.bytes_moved = exec.bytes_moved;
+        stats
+    }
+
+    /// Per-shard counters, in shard-index order.
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .map(|shard| ShardStats {
+                hits: shard.hits.load(Ordering::Relaxed),
+                misses: shard.misses.load(Ordering::Relaxed),
+                evictions: shard.evictions.load(Ordering::Relaxed),
+                entries: lock_recover(&shard.plans).len(),
+                schedule_hits: shard.schedule_hits.load(Ordering::Relaxed),
+                schedule_misses: shard.schedule_misses.load(Ordering::Relaxed),
+                schedule_evictions: shard.schedule_evictions.load(Ordering::Relaxed),
+                schedule_entries: lock_recover(&shard.schedules).len(),
+            })
+            .collect()
     }
 }
 
@@ -344,7 +543,9 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.entries, 2);
         assert_eq!(s.evictions, 1);
-        // d1 must still be cached (a hit), d2 must have been evicted.
+        // d1 must still be cached (a hit), d2 must have been evicted —
+        // even though the three keys live in arbitrary shards: eviction
+        // is by global LRU stamp, not per-shard.
         let before = cache.stats().hits;
         cache.get_or_build(Group::Symmetric, &d1, 3).unwrap();
         assert_eq!(cache.stats().hits, before + 1);
@@ -413,6 +614,93 @@ mod tests {
         cache.clear();
         assert_eq!(cache.stats().schedule_entries, 0);
         assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn schedule_map_is_bounded_and_evicts_lru() {
+        use crate::layer::spanning_plans;
+        let cache = PlanCache::with_capacity(2);
+        let shapes: [(usize, usize); 3] = [(1, 1), (1, 2), (2, 1)];
+        let mut plan_lists = Vec::new();
+        for &(k, l) in &shapes {
+            plan_lists.push(spanning_plans(Group::Orthogonal, 3, k, l).unwrap());
+        }
+        for (&(k, l), plans) in shapes.iter().zip(&plan_lists) {
+            cache
+                .get_or_build_schedule(Group::Orthogonal, 3, k, l, false, plans)
+                .unwrap();
+        }
+        let s = cache.stats();
+        assert_eq!(s.schedule_entries, 2, "schedules map must be bounded");
+        assert_eq!(s.schedule_evictions, 1);
+        // The oldest shape (1, 1) was evicted; re-requesting it misses.
+        let misses_before = cache.stats().schedule_misses;
+        cache
+            .get_or_build_schedule(Group::Orthogonal, 3, 1, 1, false, &plan_lists[0])
+            .unwrap();
+        assert_eq!(cache.stats().schedule_misses, misses_before + 1);
+        // The newest shape (2, 1) is still resident.
+        let hits_before = cache.stats().schedule_hits;
+        cache
+            .get_or_build_schedule(Group::Orthogonal, 3, 2, 1, false, &plan_lists[2])
+            .unwrap();
+        assert_eq!(cache.stats().schedule_hits, hits_before + 1);
+    }
+
+    #[test]
+    fn shard_stats_aggregate_to_totals() {
+        let cache = PlanCache::with_capacity_and_shards(16, 4);
+        assert_eq!(cache.shards(), 4);
+        for k in 1..6 {
+            let d = Diagram::identity(k);
+            cache.get_or_build(Group::Symmetric, &d, 3).unwrap();
+            cache.get_or_build(Group::Symmetric, &d, 3).unwrap();
+        }
+        let total = cache.stats();
+        let per_shard = cache.shard_stats();
+        assert_eq!(per_shard.len(), 4);
+        assert_eq!(per_shard.iter().map(|s| s.hits).sum::<u64>(), total.hits);
+        assert_eq!(
+            per_shard.iter().map(|s| s.misses).sum::<u64>(),
+            total.misses
+        );
+        assert_eq!(
+            per_shard.iter().map(|s| s.entries).sum::<usize>(),
+            total.entries
+        );
+        assert_eq!((total.hits, total.misses, total.entries), (5, 5, 5));
+    }
+
+    #[test]
+    fn shard_count_rounds_to_power_of_two() {
+        let cache = PlanCache::with_capacity_and_shards(8, 3);
+        assert_eq!(cache.shards(), 4);
+        let single = PlanCache::with_capacity_and_shards(8, 0);
+        assert_eq!(single.shards(), 1);
+        assert!(PlanCache::with_capacity(8).shards().is_power_of_two());
+    }
+
+    #[test]
+    fn concurrent_lookups_across_shards_stay_consistent() {
+        let cache = Arc::new(PlanCache::with_capacity(64));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let cache = Arc::clone(&cache);
+            handles.push(std::thread::spawn(move || {
+                for round in 0..20 {
+                    let k = 1 + ((t as usize + round) % 4);
+                    let d = Diagram::identity(k);
+                    let plan = cache.get_or_build(Group::Symmetric, &d, 3).unwrap();
+                    assert!(plan.apply(&Tensor::zeros(3, k)).is_ok());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = cache.stats();
+        assert_eq!(s.entries, 4);
+        assert_eq!(s.hits + s.misses, 80);
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod sn;
 pub mod so;
 pub mod sp;
 
-pub use cache::{CacheStats, PlanCache};
+pub use cache::{CacheStats, PlanCache, ShardStats};
 pub use plan::{factor_runs, MultPlan};
 pub use schedule::{
     arena_stats, clear_arena_pool, exec_stats, ops_shared_total, planner_totals, ArenaStats,

@@ -278,6 +278,35 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         "kernels: measured bytes moved {}  index scratch {} allocs / {} reuses",
         snap.measured_bytes_moved, snap.arena_index_allocations, snap.arena_index_reuses
     );
+    println!(
+        "executor: {} workers  {} tasks  {} steals  {} parks  {} injector pushes",
+        snap.executor_workers,
+        snap.executor_executed,
+        snap.executor_steals,
+        snap.executor_parks,
+        snap.executor_injector_pushes
+    );
+    let shard_rates = snap
+        .plan_cache_shard_hit_rates
+        .iter()
+        .map(|r| format!("{:.0}%", r * 100.0))
+        .collect::<Vec<_>>()
+        .join(" ");
+    println!(
+        "plan cache shards: {} (per-shard hit rates: {})  evictions {} plans / {} schedules",
+        snap.plan_cache_shards,
+        shard_rates,
+        snap.plan_cache_evictions,
+        snap.schedule_cache_evictions
+    );
+    if snap.target_p95_s > 0.0 {
+        println!(
+            "adaptive window: {:.1} us (target p95 {:.1} ms, live p95 {:.2} ms)",
+            snap.batch_window_s * 1e6,
+            snap.target_p95_s * 1e3,
+            snap.p95_latency_s * 1e3
+        );
+    }
     handle.shutdown();
     Ok(())
 }

@@ -1,0 +1,607 @@
+//! Persistent work-stealing executor (ROADMAP: serving runtime).
+//!
+//! Every parallel fan-out in the crate used to pay a `std::thread::scope`
+//! spawn per call. This module replaces that with one fixed pool of
+//! long-lived workers shared by the whole process: each worker owns a
+//! deque (LIFO local pop for cache locality, FIFO steal so thieves take
+//! the oldest — largest-remaining — work), external threads submit
+//! through a global injector, and idle workers park on a condvar.
+//!
+//! Determinism contract: the executor never decides *what* a task
+//! computes or *where* its result lands — callers pre-assign output
+//! slots and reduce in a fixed order on their own thread (see
+//! [`crate::util::parallel::parallel_map`]). Steal order therefore
+//! affects wall-clock only, never bits.
+//!
+//! The scoped API is [`Executor::join_all`]: the calling thread submits
+//! a batch of borrowing closures, then *helps* — it runs queued tasks
+//! (its own first, then steals) until the batch's latch reaches zero.
+//! Help-while-waiting is what makes nested fan-outs (a coordinator
+//! batch task that itself calls `parallel_map`) deadlock-free: a thread
+//! blocked on a latch only sleeps when every pending task is already
+//! running on some other thread.
+
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+/// Hardware thread count, queried from the OS once per process. The old
+/// helper re-derived `available_parallelism()` on every fan-out; this is
+/// the cached replacement every sizing decision now shares.
+pub fn hw_threads() -> usize {
+    static HW: OnceLock<usize> = OnceLock::new();
+    *HW.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(std::num::NonZeroUsize::get)
+            .unwrap_or(1)
+    })
+}
+
+/// Safety net while a worker parks: bounds the cost of any wakeup race
+/// to one re-scan (the sleep-lock handshake in `submit_batch` should
+/// make lost wakeups impossible on its own).
+const PARK_TIMEOUT: Duration = Duration::from_millis(100);
+
+/// Poll interval while a thread waits on a latch with nothing to help
+/// with: the latch condvar fires on completion, the timeout only lets
+/// the helper notice tasks that arrived for *other* latches.
+const HELP_POLL: Duration = Duration::from_micros(500);
+
+/// A panicking task never unwinds while holding an executor lock (the
+/// payload is caught inside the task wrapper), so a poisoned mutex here
+/// only ever guards consistent state — recover and continue.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+type TaskFn = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// `(pool id, worker index)` when the current thread is a pool
+    /// worker — routes nested submissions to the local deque.
+    static WORKER: std::cell::Cell<Option<(u64, usize)>> =
+        const { std::cell::Cell::new(None) };
+}
+
+fn current_worker(pool_id: u64) -> Option<usize> {
+    WORKER.with(|w| match w.get() {
+        Some((id, idx)) if id == pool_id => Some(idx),
+        _ => None,
+    })
+}
+
+/// Monotonic executor counters (process lifetime, never reset).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecutorStats {
+    /// Pool size (long-lived worker threads).
+    pub workers: usize,
+    /// Tasks taken from another worker's deque (FIFO end).
+    pub steals: u64,
+    /// Times a worker went to sleep on the idle condvar.
+    pub parks: u64,
+    /// Tasks submitted through the global injector (i.e. from threads
+    /// outside the pool; nested submissions go to the local deque).
+    pub injector_pushes: u64,
+    /// Total tasks executed (by workers and by helping callers).
+    pub executed: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    steals: AtomicU64,
+    parks: AtomicU64,
+    injector_pushes: AtomicU64,
+    executed: AtomicU64,
+}
+
+struct Sleep {
+    sleepers: usize,
+    shutdown: bool,
+}
+
+/// Completion latch for one `join_all` batch. Plays the role of the
+/// `thread::scope` join: the submitting thread blocks (helping) until
+/// `pending` reaches zero, which is what makes the borrowed closures
+/// sound. The first panic payload is kept and re-thrown at the caller.
+struct Latch {
+    pending: AtomicUsize,
+    state: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Latch {
+            pending: AtomicUsize::new(count),
+            state: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn record_panic(&self, payload: Box<dyn std::any::Any + Send>) {
+        let mut slot = lock_recover(&self.state);
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+
+    fn complete_one(&self) {
+        if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Take the lock so a waiter between its `pending` check and
+            // its `wait_timeout` cannot miss this notification.
+            let _guard = lock_recover(&self.state);
+            self.cv.notify_all();
+        }
+    }
+
+    fn take_panic(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        lock_recover(&self.state).take()
+    }
+}
+
+struct Shared {
+    pool_id: u64,
+    injector: Mutex<VecDeque<TaskFn>>,
+    deques: Vec<Mutex<VecDeque<TaskFn>>>,
+    sleep: Mutex<Sleep>,
+    wake: Condvar,
+    counters: Counters,
+}
+
+impl Shared {
+    /// Pop the next task: own deque back (LIFO), injector front, then
+    /// steal the front (FIFO) of the other deques in index order.
+    fn find_task(&self, own: Option<usize>) -> Option<TaskFn> {
+        if let Some(idx) = own {
+            if let Some(task) = lock_recover(&self.deques[idx]).pop_back() {
+                return Some(task);
+            }
+        }
+        if let Some(task) = lock_recover(&self.injector).pop_front() {
+            return Some(task);
+        }
+        let n = self.deques.len();
+        let start = own.map_or(0, |idx| idx + 1);
+        for offset in 0..n {
+            let victim = (start + offset) % n;
+            if Some(victim) == own {
+                continue;
+            }
+            if let Some(task) = lock_recover(&self.deques[victim]).pop_front() {
+                self.counters.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(task);
+            }
+        }
+        None
+    }
+
+    fn has_queued_work(&self) -> bool {
+        if !lock_recover(&self.injector).is_empty() {
+            return true;
+        }
+        self.deques
+            .iter()
+            .any(|deque| !lock_recover(deque).is_empty())
+    }
+
+    fn run_task(&self, task: TaskFn) {
+        self.counters.executed.fetch_add(1, Ordering::Relaxed);
+        task();
+    }
+
+    /// Queue a batch: onto the local deque when called from a pool
+    /// worker (nested fan-out), through the injector otherwise. The
+    /// sleep lock is taken *after* the queue push — a parker re-checks
+    /// the queues under that same lock, so a push either lands before
+    /// the re-check or observes `sleepers > 0` and notifies.
+    fn submit_batch(&self, tasks: Vec<TaskFn>) {
+        match current_worker(self.pool_id) {
+            Some(idx) => {
+                lock_recover(&self.deques[idx]).extend(tasks);
+                self.notify_sleepers();
+            }
+            None => self.inject(tasks),
+        }
+    }
+
+    /// Queue through the global injector unconditionally — even from a
+    /// pool worker. Detached slot tasks re-submit themselves this way:
+    /// the injector's FIFO gives round-robin fairness, where the local
+    /// deque's LIFO would let a yielding slot immediately re-pop itself
+    /// and starve other slots on a small pool.
+    fn inject(&self, tasks: Vec<TaskFn>) {
+        self.counters
+            .injector_pushes
+            .fetch_add(tasks.len() as u64, Ordering::Relaxed);
+        lock_recover(&self.injector).extend(tasks);
+        self.notify_sleepers();
+    }
+
+    fn notify_sleepers(&self) {
+        let sleep = lock_recover(&self.sleep);
+        if sleep.sleepers > 0 {
+            self.wake.notify_all();
+        }
+    }
+
+    /// Run tasks until `latch` completes; sleep on the latch condvar
+    /// only when no task is runnable anywhere.
+    fn help_until(&self, latch: &Latch) {
+        let own = current_worker(self.pool_id);
+        loop {
+            if latch.pending.load(Ordering::Acquire) == 0 {
+                return;
+            }
+            if let Some(task) = self.find_task(own) {
+                self.run_task(task);
+                continue;
+            }
+            let guard = lock_recover(&latch.state);
+            if latch.pending.load(Ordering::Acquire) == 0 {
+                return;
+            }
+            match latch.cv.wait_timeout(guard, HELP_POLL) {
+                Ok((guard, _timeout)) => drop(guard),
+                Err(poisoned) => drop(poisoned.into_inner()),
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &Arc<Shared>, idx: usize) {
+    WORKER.with(|w| w.set(Some((shared.pool_id, idx))));
+    loop {
+        if let Some(task) = shared.find_task(Some(idx)) {
+            shared.run_task(task);
+            continue;
+        }
+        let mut sleep = lock_recover(&shared.sleep);
+        if sleep.shutdown {
+            return;
+        }
+        if shared.has_queued_work() {
+            // A task landed between our scan and taking the sleep lock.
+            drop(sleep);
+            continue;
+        }
+        sleep.sleepers += 1;
+        shared.counters.parks.fetch_add(1, Ordering::Relaxed);
+        let mut sleep = match shared.wake.wait_timeout(sleep, PARK_TIMEOUT) {
+            Ok((guard, _timeout)) => guard,
+            Err(poisoned) => poisoned.into_inner().0,
+        };
+        sleep.sleepers -= 1;
+        if sleep.shutdown {
+            return;
+        }
+    }
+}
+
+/// A fixed pool of persistent work-stealing workers. Most code uses the
+/// process-wide [`global`] pool via
+/// [`crate::util::parallel::parallel_map`]; tests construct private
+/// pools of specific sizes to pin down determinism under stealing.
+pub struct Executor {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn a pool of `workers` threads (clamped to at least 1).
+    pub fn new(workers: usize) -> Executor {
+        static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(1);
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            pool_id: NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed),
+            injector: Mutex::new(VecDeque::new()),
+            deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            sleep: Mutex::new(Sleep {
+                sleepers: 0,
+                shutdown: false,
+            }),
+            wake: Condvar::new(),
+            counters: Counters::default(),
+        });
+        let handles = (0..workers)
+            .map(|idx| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("wsx-worker-{idx}"))
+                    .spawn(move || worker_loop(&shared, idx))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Executor { shared, handles }
+    }
+
+    /// Pool size.
+    pub fn workers(&self) -> usize {
+        self.shared.deques.len()
+    }
+
+    /// Run every closure in `tasks` to completion before returning; the
+    /// calling thread helps execute them. A single task runs inline
+    /// with zero queueing. If any task panics, the first payload is
+    /// re-thrown here after all tasks finish — the same contract as
+    /// `std::thread::scope`.
+    pub fn join_all<'scope, F>(&self, tasks: Vec<F>)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        match tasks.len() {
+            0 => return,
+            1 => {
+                for task in tasks {
+                    task();
+                }
+                return;
+            }
+            _ => {}
+        }
+        let latch = Arc::new(Latch::new(tasks.len()));
+        let mut queued: Vec<TaskFn> = Vec::with_capacity(tasks.len());
+        for task in tasks {
+            let latch = Arc::clone(&latch);
+            let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                if let Err(payload) = panic::catch_unwind(AssertUnwindSafe(task)) {
+                    latch.record_panic(payload);
+                }
+                latch.complete_one();
+            });
+            // SAFETY: `join_all` blocks in `help_until` until the latch
+            // reaches zero, i.e. until every wrapped closure has been
+            // consumed — so no borrow inside `task` is used after
+            // 'scope ends. This is the `std::thread::scope` argument
+            // with the latch playing the role of the scope join; the
+            // transmute only erases the lifetime, the layout of the
+            // boxed trait object is unchanged.
+            let wrapped: TaskFn = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, TaskFn>(wrapped)
+            };
+            queued.push(wrapped);
+        }
+        self.shared.submit_batch(queued);
+        self.shared.help_until(&latch);
+        if let Some(payload) = latch.take_panic() {
+            panic::resume_unwind(payload);
+        }
+    }
+
+    /// Queue a detached `'static` task and return immediately — the
+    /// fire-and-forget complement of [`Executor::join_all`], used for
+    /// long-lived slot tasks (the coordinator's worker slots re-submit
+    /// themselves through this to yield their thread between batches).
+    /// A panic inside `f` is caught and dropped so it can never unwind
+    /// a pool worker; callers that care about panics must catch and
+    /// report them inside `f` (the coordinator's slot wrapper does).
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        self.shared.inject(vec![Box::new(move || {
+            let _ = panic::catch_unwind(AssertUnwindSafe(f));
+        })]);
+    }
+
+    /// Snapshot of the monotonic counters.
+    pub fn stats(&self) -> ExecutorStats {
+        let c = &self.shared.counters;
+        ExecutorStats {
+            workers: self.shared.deques.len(),
+            steals: c.steals.load(Ordering::Relaxed),
+            parks: c.parks.load(Ordering::Relaxed),
+            injector_pushes: c.injector_pushes.load(Ordering::Relaxed),
+            executed: c.executed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        {
+            let mut sleep = lock_recover(&self.shared.sleep);
+            sleep.shutdown = true;
+        }
+        self.shared.wake.notify_all();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Executor> = OnceLock::new();
+
+/// The process-wide pool, sized to [`hw_threads`] and created on first
+/// use. Never torn down; its workers park when idle.
+pub fn global() -> &'static Executor {
+    GLOBAL.get_or_init(|| Executor::new(hw_threads()))
+}
+
+/// Counters of the [`global`] pool. Reading stats does not spin the
+/// pool up — before the first fan-out it reports zeros.
+pub fn global_stats() -> ExecutorStats {
+    GLOBAL.get().map(Executor::stats).unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn join_all_runs_every_task() {
+        let exec = Executor::new(4);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..64)
+            .map(|_| {
+                let counter = &counter;
+                move || {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .collect();
+        exec.join_all(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn borrows_are_sound_and_slots_disjoint() {
+        let exec = Executor::new(3);
+        let mut slots = vec![0usize; 40];
+        let tasks: Vec<_> = slots
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| {
+                move || {
+                    *slot = i * i;
+                }
+            })
+            .collect();
+        exec.join_all(tasks);
+        for (i, slot) in slots.iter().enumerate() {
+            assert_eq!(*slot, i * i);
+        }
+    }
+
+    #[test]
+    fn single_task_runs_inline_without_queueing() {
+        let exec = Executor::new(2);
+        let before = exec.stats().executed;
+        let ran = AtomicUsize::new(0);
+        exec.join_all(vec![|| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        }]);
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+        assert_eq!(exec.stats().executed, before);
+    }
+
+    #[test]
+    fn panic_propagates_after_all_tasks_finish() {
+        let exec = Executor::new(2);
+        let finished = Arc::new(AtomicUsize::new(0));
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let finished = Arc::clone(&finished);
+            let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..8)
+                .map(|i| {
+                    let finished = Arc::clone(&finished);
+                    let task: Box<dyn FnOnce() + Send> = Box::new(move || {
+                        if i == 3 {
+                            panic!("task boom");
+                        }
+                        finished.fetch_add(1, Ordering::Relaxed);
+                    });
+                    task
+                })
+                .collect();
+            exec.join_all(tasks);
+        }));
+        assert!(result.is_err(), "panic must re-throw at the caller");
+        assert_eq!(finished.load(Ordering::Relaxed), 7);
+        // The pool survives a panicking batch.
+        let counter = AtomicUsize::new(0);
+        exec.join_all(
+            (0..4)
+                .map(|_| {
+                    let counter = &counter;
+                    move || {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+                .collect(),
+        );
+        assert_eq!(counter.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn nested_join_all_from_worker_does_not_deadlock() {
+        let exec = Arc::new(Executor::new(2));
+        let total = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<_> = (0..4)
+            .map(|_| {
+                let exec = Arc::clone(&exec);
+                let total = Arc::clone(&total);
+                move || {
+                    let inner: Vec<_> = (0..8)
+                        .map(|_| {
+                            let total = Arc::clone(&total);
+                            move || {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            }
+                        })
+                        .collect();
+                    exec.join_all(inner);
+                }
+            })
+            .collect();
+        exec.join_all(tasks);
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn counters_are_monotone_and_injector_counts_external_pushes() {
+        let exec = Executor::new(2);
+        let before = exec.stats();
+        exec.join_all(
+            (0..16)
+                .map(|_| move || std::thread::yield_now())
+                .collect::<Vec<_>>(),
+        );
+        let after = exec.stats();
+        assert_eq!(after.workers, 2);
+        assert!(after.executed >= before.executed + 16);
+        assert!(after.injector_pushes >= before.injector_pushes + 16);
+        assert!(after.steals >= before.steals);
+        assert!(after.parks >= before.parks);
+    }
+
+    #[test]
+    fn spawn_runs_detached_tasks_and_survives_panics() {
+        let exec = Executor::new(2);
+        exec.spawn(|| panic!("detached boom"));
+        let done = Arc::new(AtomicUsize::new(0));
+        let d2 = Arc::clone(&done);
+        exec.spawn(move || {
+            d2.fetch_add(1, Ordering::Relaxed);
+        });
+        // The panicking task must not take a pool worker down with it.
+        for _ in 0..5000 {
+            if done.load(Ordering::Relaxed) == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(done.load(Ordering::Relaxed), 1, "detached task never ran");
+    }
+
+    #[test]
+    fn hw_threads_is_cached_and_positive() {
+        let a = hw_threads();
+        let b = hw_threads();
+        assert!(a >= 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn same_inputs_same_outputs_across_pool_sizes() {
+        // Bitwise determinism: the executor only runs slot-writing
+        // closures, so pool size and steal order cannot change results.
+        let reference: Vec<f64> = (0..33).map(|i| (i as f64).sin()).collect();
+        for workers in [1, 2, hw_threads()] {
+            let exec = Executor::new(workers);
+            let mut out = vec![0.0f64; 33];
+            let tasks: Vec<_> = out
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| {
+                    move || {
+                        *slot = (i as f64).sin();
+                    }
+                })
+                .collect();
+            exec.join_all(tasks);
+            assert_eq!(out, reference, "pool size {workers} changed bits");
+        }
+    }
+}

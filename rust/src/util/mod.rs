@@ -5,13 +5,15 @@
 //! `proptest` nor `criterion`; these small substrates replace exactly the
 //! parts of each that the rest of the crate needs (see DESIGN.md §3).
 
+pub mod executor;
 pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod table;
 pub mod timing;
 
-pub use parallel::{max_threads, parallel_map, set_thread_budget, thread_budget};
+pub use executor::{Executor, ExecutorStats};
+pub use parallel::{max_threads, parallel_map, parallel_map_on, set_thread_budget, thread_budget};
 pub use rng::Rng;
 pub use table::Table;
 pub use timing::{bench_median, BenchResult};

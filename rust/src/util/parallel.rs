@@ -1,12 +1,15 @@
-//! Scoped-thread fan-out helper (rayon substitute, see DESIGN.md §3).
+//! Ordered fan-out helper (rayon substitute, see DESIGN.md §3).
 //!
 //! The batched layer/model/coordinator paths are embarrassingly parallel
-//! across batch items and across diagram terms; [`parallel_map`] is the one
-//! primitive they all share. It slices the input into contiguous chunks,
-//! runs each chunk on a `std::thread::scope` worker and preserves input
-//! order in the output — no work queue, no dependencies, deterministic
-//! results.
+//! across batch items and across diagram terms; [`parallel_map`] is the
+//! one primitive they all share. It slices the input into contiguous
+//! chunks and runs each chunk as a task on the persistent work-stealing
+//! pool ([`crate::util::executor`]) — no per-call thread spawns. Output
+//! order matches input order and every chunk is computed sequentially by
+//! exactly one thread, so results are deterministic regardless of which
+//! worker (or steal order) ran each chunk.
 
+use crate::util::executor::{self, Executor};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Process-wide cap on per-call fan-out (`0` = uncapped). Set by the
@@ -29,12 +32,13 @@ pub fn thread_budget() -> usize {
     THREAD_BUDGET.load(Ordering::Relaxed)
 }
 
-/// Number of worker threads worth spawning per fan-out on this machine:
-/// the hardware parallelism, capped by [`set_thread_budget`].
+/// Number of chunks worth fanning out per call on this machine: the
+/// hardware parallelism (cached once per process, see
+/// [`executor::hw_threads`]), capped by [`set_thread_budget`]. The
+/// budget shapes *chunking*, not the pool — the global pool keeps one
+/// worker per hardware thread and parks the idle ones.
 pub fn max_threads() -> usize {
-    let hw = std::thread::available_parallelism()
-        .map(std::num::NonZeroUsize::get)
-        .unwrap_or(1);
+    let hw = executor::hw_threads();
     match THREAD_BUDGET.load(Ordering::Relaxed) {
         0 => hw,
         budget => hw.min(budget),
@@ -52,13 +56,25 @@ pub fn span_len(len: usize) -> usize {
     len.div_ceil(max_threads()).max(MIN_SPAN.min(len)).max(1)
 }
 
-/// Apply `f` to every item of `items`, fanning contiguous chunks out over
-/// up to `threads` scoped worker threads. Output order matches input order.
+/// Apply `f` to every item of `items`, fanning contiguous chunks out
+/// over the process-wide executor with a concurrency of up to `threads`.
+/// Output order matches input order.
 ///
 /// With `threads <= 1` (or one item) this degenerates to a plain
 /// sequential map with zero overhead, so callers can pass
 /// `max_threads().min(items.len())` unconditionally.
 pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    parallel_map_on(executor::global(), items, threads, f)
+}
+
+/// [`parallel_map`] on an explicit pool — the determinism suites use
+/// this to pin results across pool sizes 1/2/hardware.
+pub fn parallel_map_on<T, R, F>(exec: &Executor, items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
@@ -70,31 +86,26 @@ where
     }
     let mut slots: Vec<Option<R>> = Vec::with_capacity(items.len());
     slots.resize_with(items.len(), || None);
+    // Chunk boundaries depend only on `items.len()` and `threads` —
+    // never on the pool size or steal order — so accumulation inside a
+    // chunk (and the caller's in-order reduction over chunks) is fixed.
     let chunk = items.len().div_ceil(threads);
     let f = &f;
-    std::thread::scope(|s| {
-        let mut chunks = items.chunks(chunk).zip(slots.chunks_mut(chunk));
-        // The calling thread is a worker too: it takes the first chunk
-        // itself, so `threads` workers cost only `threads - 1` spawns (and
-        // a nested caller — e.g. a coordinator worker — never goes fully
-        // idle while its helpers run).
-        let own = chunks.next();
-        for (in_chunk, out_chunk) in chunks {
-            s.spawn(move || {
+    let tasks: Vec<_> = items
+        .chunks(chunk)
+        .zip(slots.chunks_mut(chunk))
+        .map(|(in_chunk, out_chunk)| {
+            move || {
                 for (item, slot) in in_chunk.iter().zip(out_chunk.iter_mut()) {
                     *slot = Some(f(item));
                 }
-            });
-        }
-        if let Some((in_chunk, out_chunk)) = own {
-            for (item, slot) in in_chunk.iter().zip(out_chunk.iter_mut()) {
-                *slot = Some(f(item));
             }
-        }
-    });
+        })
+        .collect();
+    exec.join_all(tasks);
     slots
         .into_iter()
-        .map(|r| r.expect("scoped worker filled every slot"))
+        .map(|r| r.expect("executor ran every chunk"))
         .collect()
 }
 
@@ -144,5 +155,16 @@ mod tests {
         assert_eq!(max_threads(), 1);
         set_thread_budget(0);
         assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn explicit_pools_agree_with_global() {
+        let items: Vec<u64> = (0..257).collect();
+        let reference = parallel_map(&items, 8, |&x| x.wrapping_mul(0x9e37_79b9));
+        for workers in [1, 2, crate::util::executor::hw_threads()] {
+            let exec = Executor::new(workers);
+            let out = parallel_map_on(&exec, &items, 8, |&x| x.wrapping_mul(0x9e37_79b9));
+            assert_eq!(out, reference);
+        }
     }
 }

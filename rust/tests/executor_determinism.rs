@@ -1,0 +1,137 @@
+//! Determinism-under-stealing stress suite: the work-stealing executor
+//! must never change bits. Results are fixed by the chunk partition
+//! (a function of `(len, threads)` only), never by which worker runs or
+//! steals a chunk — so any fixed thread budget must reproduce itself
+//! across repeated runs (different steal interleavings), and explicit
+//! pools of different sizes must agree bitwise for the same budget.
+//! Run by name in CI (`cargo test --test executor_determinism`).
+
+use equidiag::fastmult::Group;
+use equidiag::layer::Init;
+use equidiag::nn::{Activation, EquivariantNet};
+use equidiag::tensor::Tensor;
+use equidiag::util::executor::hw_threads;
+use equidiag::util::{
+    parallel_map, parallel_map_on, set_thread_budget, thread_budget, Executor, Rng,
+};
+
+/// A small net per group (Sp(n) needs even n).
+fn net_for(group: Group, seed: u64) -> EquivariantNet {
+    let n = match group {
+        Group::Symplectic => 4,
+        _ => 3,
+    };
+    let mut rng = Rng::new(seed);
+    EquivariantNet::new(group, n, &[2, 2], Activation::Relu, Init::ScaledNormal, &mut rng)
+        .unwrap()
+}
+
+fn inputs_for(net_n: usize, count: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| Tensor::random(net_n, 2, &mut rng))
+        .collect()
+}
+
+/// One full forward + backward through `net`, returning every output bit:
+/// per-item outputs, summed parameter gradients, per-item input gradients.
+fn fwd_bwd(net: &EquivariantNet, inputs: &[Tensor]) -> (Vec<Vec<f64>>, Vec<f64>, Vec<Vec<f64>>) {
+    let outputs = net.forward_batch(inputs).unwrap();
+    let traced: Vec<_> = net.forward_trace_batch(inputs).unwrap();
+    let traces: Vec<_> = traced.iter().map(|(t, _)| t.clone()).collect();
+    // Use the outputs themselves as output gradients: deterministic and
+    // shape-correct without dragging in a loss.
+    let grad_outs: Vec<Tensor> = traced.into_iter().map(|(_, out)| out).collect();
+    let (grads, grad_inputs) = net.backward_batch(&traces, &grad_outs).unwrap();
+    (
+        outputs.into_iter().map(|t| t.data).collect(),
+        net.grads_flat(&grads),
+        grad_inputs.into_iter().map(|t| t.data).collect(),
+    )
+}
+
+/// The tentpole equivalence: for all four groups, full model forward and
+/// backward passes are **bitwise** identical across thread budgets 1, 2,
+/// and the hardware count, and across repeated runs at each budget (each
+/// run sees a different steal interleaving on the shared pool).
+///
+/// Single test on purpose: the thread budget is process-global, so the
+/// sweep must not interleave with itself.
+#[test]
+fn model_fwd_bwd_bitwise_identical_across_thread_budgets() {
+    let prior = thread_budget();
+    let budgets = [1usize, 2, hw_threads()];
+    for (gi, group) in Group::ALL.into_iter().enumerate() {
+        let net = net_for(group, 4200 + gi as u64);
+        let n = match group {
+            Group::Symplectic => 4,
+            _ => 3,
+        };
+        let inputs = inputs_for(n, 12, 4300 + gi as u64);
+        set_thread_budget(1);
+        let reference = fwd_bwd(&net, &inputs);
+        for &budget in &budgets {
+            set_thread_budget(budget);
+            for run in 0..3 {
+                let got = fwd_bwd(&net, &inputs);
+                assert_eq!(
+                    got, reference,
+                    "group {group}: budget {budget} run {run} changed bits"
+                );
+            }
+        }
+    }
+    set_thread_budget(prior);
+}
+
+/// Explicit pools of size 1, 2 and hw agree bitwise with each other and
+/// with the global pool, for the same requested thread count — the chunk
+/// partition depends on the thread argument, never the pool size.
+#[test]
+fn explicit_pool_sizes_bitwise_identical() {
+    let items: Vec<usize> = (0..257).collect();
+    let f = |&i: &usize| {
+        // Non-associative float accumulation: any ordering change between
+        // runs would move bits.
+        let mut acc = 0.0f64;
+        for j in 0..100 {
+            acc += ((i * 31 + j) as f64).sin() * 1e-3;
+        }
+        acc
+    };
+    for threads in [1usize, 2, 4] {
+        let reference = parallel_map(&items, threads, f);
+        for workers in [1usize, 2, hw_threads()] {
+            let pool = Executor::new(workers);
+            let got = parallel_map_on(&pool, &items, threads, f);
+            assert_eq!(
+                got, reference,
+                "pool size {workers} at {threads} threads changed bits"
+            );
+        }
+    }
+}
+
+/// Stealing stress: many repeated fan-outs on one hardware-sized pool,
+/// with uneven task costs to force steals, stay bitwise stable.
+#[test]
+fn repeated_runs_under_stealing_are_stable() {
+    let pool = Executor::new(hw_threads());
+    let items: Vec<usize> = (0..512).collect();
+    let f = |&i: &usize| {
+        // Skewed cost: early items are ~64x the work of late ones, so
+        // whichever worker draws the head gets robbed by the others.
+        let iters = 16 + (512 - i) / 8;
+        let mut acc = 0.0f64;
+        for j in 0..iters {
+            acc += ((i + j) as f64).cos() * 1e-4;
+        }
+        acc
+    };
+    let threads = hw_threads().max(2);
+    let reference = parallel_map_on(&pool, &items, threads, f);
+    for run in 0..20 {
+        let got = parallel_map_on(&pool, &items, threads, f);
+        assert_eq!(got, reference, "run {run} changed bits under stealing");
+    }
+}

@@ -1,0 +1,163 @@
+//! Supervisor respawn regression suite (run by name in CI:
+//! `cargo test --test supervisor_respawn`).
+//!
+//! The old supervisor slept out a panicked slot's backoff **inline** in
+//! its event loop, so while slot A waited out its (up to 200ms) delay,
+//! slot B's exit event sat unread and B's respawn was serialised behind
+//! A's. The rewritten supervisor tracks a per-slot respawn *due time* and
+//! keeps draining exit events while backoffs pend. These tests pin the
+//! observable consequences: two crash-looping routes both keep getting
+//! respawns (neither starves behind the other's backoff), and a shutdown
+//! arriving mid-backoff is honoured promptly.
+
+use equidiag::config::ServerConfig;
+use equidiag::coordinator::{ChaosPlan, Coordinator, ModelKind, CHAOS_PANIC_PREFIX};
+use equidiag::error::Error;
+use equidiag::fastmult::Group;
+use equidiag::layer::Init;
+use equidiag::nn::{Activation, EquivariantNet};
+use equidiag::tensor::Tensor;
+use equidiag::util::Rng;
+use std::sync::{Arc, Once};
+use std::time::{Duration, Instant};
+
+fn test_net(rng: &mut Rng) -> EquivariantNet {
+    EquivariantNet::new(
+        Group::Symmetric,
+        4,
+        &[2, 2],
+        Activation::Relu,
+        Init::ScaledNormal,
+        rng,
+    )
+    .unwrap()
+}
+
+/// Keep expected chaos-injected panics off stderr; real panics (test
+/// failures included) still print through the previous hook.
+fn quiet_chaos_panics() {
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        let old = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            if !msg.starts_with(CHAOS_PANIC_PREFIX) {
+                old(info);
+            }
+        }));
+    });
+}
+
+/// Two always-panicking models hammered concurrently on a two-slot pool:
+/// every request on **both** routes resolves to the typed
+/// [`Error::WorkerPanic`] — with the old inline backoff, one slot's
+/// crash-loop delay starved the other route's respawns and stalled its
+/// requests. Afterwards the respawned pool still serves a healthy route.
+#[test]
+fn two_crash_looping_models_respawn_independently() {
+    quiet_chaos_panics();
+    let mut rng = Rng::new(911);
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 2,
+        max_batch: 2,
+        batch_window: Duration::from_micros(100),
+        queue_capacity: 64,
+        ..ServerConfig::default()
+    });
+    for (route, seed) in [("boom-a", 11u64), ("boom-b", 12)] {
+        let plan = Arc::new(ChaosPlan::new(seed).with_panics(1000));
+        coord.register(
+            route,
+            ModelKind::chaos(ModelKind::net(test_net(&mut rng)), plan),
+        );
+    }
+    coord.register("ok", ModelKind::net(test_net(&mut rng)));
+    let handle = Arc::new(coord.start());
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for (t, route) in [(0u64, "boom-a"), (1, "boom-b")] {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(920 + t);
+            for i in 0..8 {
+                let err = h.infer(route, Tensor::random(4, 2, &mut rng)).unwrap_err();
+                match err {
+                    Error::WorkerPanic(msg) => {
+                        assert!(msg.starts_with(CHAOS_PANIC_PREFIX), "{route} #{i}: {msg}")
+                    }
+                    other => panic!("{route} #{i}: expected WorkerPanic, got {other:?}"),
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // Both routes crash-looped through 16 requests; even at the 200ms
+    // backoff cap a non-serialising supervisor clears this with a wide
+    // margin (the bound mostly guards against a respawn deadlock).
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "respawns took {:?} — serialised or deadlocked supervisor",
+        t0.elapsed()
+    );
+    let snap = handle.metrics();
+    assert_eq!(snap.failed, 16);
+    assert!(
+        snap.worker_restarts >= 2,
+        "both crash-looping slots must respawn (saw {})",
+        snap.worker_restarts
+    );
+    assert!(snap.batch_panics >= 2);
+    // Recovery: the pool serves the healthy route after the panic storm.
+    for _ in 0..4 {
+        handle.infer("ok", Tensor::random(4, 2, &mut rng)).unwrap();
+    }
+    assert_eq!(handle.metrics().completed, 4);
+    match Arc::try_unwrap(handle) {
+        Ok(h) => h.shutdown(),
+        Err(_) => unreachable!(),
+    }
+}
+
+/// A shutdown arriving while a respawn backoff pends must be honoured:
+/// pending respawns are cancelled against the drained queue and the
+/// supervisor exits instead of spawning into a closed pool.
+#[test]
+fn shutdown_during_pending_backoff_is_prompt() {
+    quiet_chaos_panics();
+    let mut rng = Rng::new(912);
+    let plan = Arc::new(ChaosPlan::new(13).with_panics(1000));
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 1,
+        max_batch: 1,
+        batch_window: Duration::from_micros(0),
+        queue_capacity: 64,
+        ..ServerConfig::default()
+    });
+    coord.register(
+        "boom",
+        ModelKind::chaos(ModelKind::net(test_net(&mut rng)), plan),
+    );
+    let handle = coord.start();
+    // Drive the single slot into a crash loop so its backoff grows.
+    for _ in 0..6 {
+        let err = handle
+            .infer("boom", Tensor::random(4, 2, &mut rng))
+            .unwrap_err();
+        assert!(matches!(err, Error::WorkerPanic(_)), "got {err:?}");
+    }
+    // Shut down immediately after a panic: a respawn is likely pending.
+    let t0 = Instant::now();
+    handle.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shutdown stalled {:?} behind a pending respawn",
+        t0.elapsed()
+    );
+}
