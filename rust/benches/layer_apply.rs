@@ -19,21 +19,28 @@
 //! before anything is timed), `BENCH_fusion.json` (strided fusion:
 //! estimated + measured bytes moved by the fused gather-contract walk vs
 //! the unfused materialized-permute walk, with the ≥ 30% byte-drop and
-//! bitwise-equality invariants asserted) and `BENCH_batch.json` (batch-axis
-//! fused execution vs the item-parallel and per-term paths) with stable
-//! schemas so the perf trajectory is machine-readable. Set `BENCH_FAST=1`
-//! for the CI smoke mode: smaller budgets, the fused-vs-per-term, planner,
-//! fusion and fused-batch sections and the JSONs only.
+//! bitwise-equality invariants asserted), `BENCH_batch.json` (batch-axis
+//! fused execution vs the item-parallel and per-term paths),
+//! `BENCH_simd.json` (the same fused walk at `f64` vs `f32`, ~halved-bytes
+//! invariant asserted) and `BENCH_tiling.json` (the cache-blocked streaming
+//! walk: peak resident arena bytes tiled vs untiled over the feasible-`n`
+//! sweep at `k = 4`, with the ≥ 4x peak drop on over-budget shapes and the
+//! bitwise-identity invariants asserted) with stable schemas so the perf
+//! trajectory is machine-readable. Set `BENCH_FAST=1` for the CI smoke
+//! mode: smaller budgets, the JSON-emitting sections only.
 
 // The legacy forward names stay exercised until their removal.
 #![allow(deprecated)]
 
+use equidiag::diagram::Diagram;
 use equidiag::fastmult::{
-    exec_stats, matrix_mult, Group, LayerSchedule, ScratchArena, ScratchArenaOf,
+    arena_peak_bytes, exec_stats, matrix_mult, reset_arena_peak, Group, LayerSchedule, MultPlan,
+    ScratchArena, ScratchArenaOf,
 };
 use equidiag::layer::{spanning_plans, EquivariantLinear, Init};
 use equidiag::tensor::{Scalar, Tensor, TensorOf};
 use equidiag::util::{bench_median, max_threads, parallel_map, Rng, Table};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn fast_mode() -> bool {
@@ -918,6 +925,197 @@ fn write_simd_json(path: &str, rows: &[SimdRow]) {
     }
 }
 
+struct TilingRow {
+    n: usize,
+    k: usize,
+    l: usize,
+    budget_bytes: usize,
+    over_budget: bool,
+    chains: usize,
+    plan_peak_bytes: u128,
+    untiled_peak_bytes: u64,
+    tiled_peak_bytes: u64,
+    peak_drop: f64,
+    bitwise_equal: bool,
+    untiled_us: f64,
+    tiled_us: f64,
+    speedup: f64,
+}
+
+/// Tiled streaming: a chain-heavy `k = 4` schedule — three singleton
+/// bottom blocks lower to a contraction chain `n^4 → n^3 → n^2 → n` —
+/// walked untiled vs streamed under a 512-byte tile budget across the
+/// feasible-`n` sweep, plus one under-budget control row where the
+/// degenerate skip must leave the walk untouched. Peak resident arena
+/// bytes are bracketed per walk with `reset_arena_peak()`; on every
+/// over-budget shape the streamed peak must sit at least 4x below the
+/// untiled peak, bitwise-identically — all asserted before anything is
+/// timed. Emits `BENCH_tiling.json`.
+fn tiling_section(budget: Duration, rng: &mut Rng) -> Vec<TilingRow> {
+    const TILE_BUDGET: usize = 512;
+    println!("\ntiled streaming: peak arena bytes, cache-blocked chain walk vs untiled:");
+    let mut table = Table::new(vec![
+        "n",
+        "(k,l)",
+        "budget",
+        "chains",
+        "peak untiled",
+        "peak tiled",
+        "drop",
+        "untiled",
+        "tiled",
+        "speedup",
+    ]);
+    let (k, l) = (4usize, 1usize);
+    let ns: &[usize] = if fast_mode() { &[8, 10] } else { &[8, 10, 12, 14] };
+    // The sweep under the tiny budget, then the under-budget control.
+    let mut configs: Vec<(usize, usize)> = ns.iter().map(|&n| (n, TILE_BUDGET)).collect();
+    configs.push((8, 1 << 20));
+    let mut rows = Vec::new();
+    for &(n, tile_budget) in &configs {
+        let d = Diagram::from_blocks(1, k, vec![vec![0, 1], vec![2], vec![3], vec![4]]).unwrap();
+        let plan = Arc::new(MultPlan::new(Group::Symmetric, &d, n).unwrap());
+        let plan_peak = plan.peak_intermediate_bytes();
+        let sched =
+            LayerSchedule::compile_budgeted(Group::Symmetric, n, k, l, &[plan], tile_budget)
+                .unwrap();
+        let chains = sched.stats().tiled_chains;
+        assert!(chains > 0, "n = {n}: the contraction chain must plan a tiled walk");
+        // The largest interior (n^3 f64s) overflows the tiny budget; the
+        // control row fits outright and must skip streaming entirely.
+        let over_budget = n.pow(3) * 8 > tile_budget;
+        let coeffs = vec![rng.gaussian()];
+        let v = Tensor::random(n, k, rng);
+        let mut untiled_arena = ScratchArena::new();
+        let mut tiled_arena = ScratchArena::new();
+        let mut a = Tensor::zeros(n, l);
+        let mut b = Tensor::zeros(n, l);
+        // Bitwise identity (not just allclose), and proof that streaming
+        // engages exactly on the over-budget shapes.
+        let streamed_before = exec_stats().tiled_chains;
+        sched.execute(&v, &coeffs, &mut a, &mut untiled_arena).unwrap();
+        sched
+            .execute_tiled(&v, &coeffs, &mut b, &mut tiled_arena)
+            .unwrap();
+        assert_eq!(a.data, b.data, "n = {n}: tiled walk must diverge nowhere");
+        let streamed = exec_stats().tiled_chains - streamed_before;
+        assert_eq!(
+            streamed > 0, over_budget,
+            "n = {n}: streaming must engage exactly on over-budget shapes (streamed {streamed})"
+        );
+        // Peak resident arena bytes of one warm walk each. The arenas are
+        // warm from the check above and every buffer is returned between
+        // walks, so each bracket starts from zero checked-out bytes.
+        reset_arena_peak();
+        sched.execute(&v, &coeffs, &mut a, &mut untiled_arena).unwrap();
+        let untiled_peak = arena_peak_bytes() as u64;
+        reset_arena_peak();
+        sched
+            .execute_tiled(&v, &coeffs, &mut b, &mut tiled_arena)
+            .unwrap();
+        let tiled_peak = arena_peak_bytes() as u64;
+        if over_budget {
+            assert!(
+                tiled_peak * 4 <= untiled_peak,
+                "n = {n}: streamed peak must sit at least 4x below untiled \
+                 ({tiled_peak} vs {untiled_peak} bytes)"
+            );
+        } else {
+            assert_eq!(
+                tiled_peak, untiled_peak,
+                "n = {n}: under budget the degenerate skip must leave the walk untouched"
+            );
+        }
+        let peak_drop = untiled_peak as f64 / tiled_peak as f64;
+        let untiled_t = bench_median(budget, || {
+            a.data.fill(0.0);
+            sched.execute(&v, &coeffs, &mut a, &mut untiled_arena).unwrap();
+        });
+        let tiled_t = bench_median(budget, || {
+            b.data.fill(0.0);
+            sched
+                .execute_tiled(&v, &coeffs, &mut b, &mut tiled_arena)
+                .unwrap();
+        });
+        let speedup = untiled_t.median_s / tiled_t.median_s;
+        table.row(vec![
+            format!("{n}"),
+            format!("({k},{l})"),
+            format!("{tile_budget}"),
+            format!("{chains}"),
+            format!("{untiled_peak}"),
+            format!("{tiled_peak}"),
+            format!("{peak_drop:.1}x"),
+            untiled_t.pretty(),
+            tiled_t.pretty(),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(TilingRow {
+            n,
+            k,
+            l,
+            budget_bytes: tile_budget,
+            over_budget,
+            chains,
+            plan_peak_bytes: plan_peak,
+            untiled_peak_bytes: untiled_peak,
+            tiled_peak_bytes: tiled_peak,
+            peak_drop,
+            bitwise_equal: true,
+            untiled_us: untiled_t.median_s * 1e6,
+            tiled_us: tiled_t.median_s * 1e6,
+            speedup,
+        });
+    }
+    table.print();
+    rows
+}
+
+fn write_tiling_json(path: &str, rows: &[TilingRow]) {
+    let best = rows
+        .iter()
+        .filter(|r| r.over_budget)
+        .map(|r| r.peak_drop)
+        .fold(f64::MIN, f64::max);
+    let configs: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"n\": {}, \"k\": {}, \"l\": {}, \"budget_bytes\": {}, \
+                 \"over_budget\": {}, \"chains\": {}, \"plan_peak_bytes\": {}, \
+                 \"untiled_peak_bytes\": {}, \"tiled_peak_bytes\": {}, \
+                 \"peak_drop\": {:.3}, \"bitwise_equal\": {}, \
+                 \"untiled_us\": {:.3}, \"tiled_us\": {:.3}, \"speedup\": {:.3}}}",
+                r.n,
+                r.k,
+                r.l,
+                r.budget_bytes,
+                r.over_budget,
+                r.chains,
+                r.plan_peak_bytes,
+                r.untiled_peak_bytes,
+                r.tiled_peak_bytes,
+                r.peak_drop,
+                r.bitwise_equal,
+                r.untiled_us,
+                r.tiled_us,
+                r.speedup
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"tiled_streaming\",\n  \"fast_mode\": {fast},\n  \
+         \"configs\": [\n{configs}\n  ],\n  \
+         \"best_peak_drop\": {best:.3}\n}}\n",
+        fast = fast_mode(),
+        configs = configs.join(",\n"),
+    );
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
 fn write_json(
     path: &str,
     rows: &[FusedRow],
@@ -993,6 +1191,9 @@ fn main() {
 
     let simd_rows = simd_section(budget, &mut rng);
     write_simd_json("BENCH_simd.json", &simd_rows);
+
+    let tiling_rows = tiling_section(budget, &mut rng);
+    write_tiling_json("BENCH_tiling.json", &tiling_rows);
 
     if fast_mode() {
         println!("\n(BENCH_FAST set — skipping the refactor/materialised-W ablations)");

@@ -75,6 +75,11 @@ pub struct ModelConfig {
     /// bitwise-reference path) or `"f32"` (halved memory traffic). Training
     /// always runs in `f64`; this only selects the serving precision.
     pub precision: Precision,
+    /// Cache budget in bytes for the tiled schedule walk (`tile_bytes`,
+    /// see `docs/tiled_execution.md`). `None` (the default) auto-detects
+    /// the L2 data-cache size ([`crate::util::hw::cache_bytes`], which the
+    /// `PALLAS_CACHE_BYTES` env var overrides); `Some(0)` disables tiling.
+    pub tile_bytes: Option<usize>,
 }
 
 /// Serving section (`[server]`).
@@ -237,6 +242,12 @@ impl AppConfig {
                     Error::Config(format!("model.precision must be f64|f32, got '{s}'"))
                 })?
             },
+            tile_bytes: match m.get("model.tile_bytes") {
+                None => None,
+                Some(v) => Some(v.as_int().and_then(|i| usize::try_from(i).ok()).ok_or_else(
+                    || Error::Config("model.tile_bytes must be a non-negative integer".into()),
+                )?),
+            },
         };
 
         let server = ServerConfig {
@@ -339,6 +350,7 @@ log_every = 5
 
 [model]
 precision = "f32"
+tile_bytes = 131072
 
 [server]
 workers = 2
@@ -358,6 +370,7 @@ target_p95_ms = 40
         assert_eq!(c.network.activation, Activation::Identity);
         assert_eq!(c.training.optimizer, "sgd");
         assert_eq!(c.model.precision, Precision::F32);
+        assert_eq!(c.model.tile_bytes, Some(131072));
         assert_eq!(c.server.batch_window, Duration::from_micros(500));
         assert_eq!(c.server.request_timeout, Some(Duration::from_millis(250)));
         assert_eq!(c.server.max_inflight_per_model, Some(32));
@@ -378,6 +391,8 @@ target_p95_ms = 40
         assert!(AppConfig::from_text("[server]\nrequest_timeout_ms = \"soon\"").is_err());
         assert!(AppConfig::from_text("[server]\nmax_inflight_per_model = -3").is_err());
         assert!(AppConfig::from_text("[model]\nprecision = \"f16\"").is_err());
+        assert!(AppConfig::from_text("[model]\ntile_bytes = \"big\"").is_err());
+        assert!(AppConfig::from_text("[model]\ntile_bytes = -1").is_err());
     }
 
     #[test]
@@ -414,5 +429,14 @@ target_p95_ms = 40
         assert_eq!(c.model.precision, Precision::F64);
         let c = AppConfig::from_text("[model]\nprecision = \"double\"").unwrap();
         assert_eq!(c.model.precision, Precision::F64);
+    }
+
+    #[test]
+    fn tile_bytes_defaults_to_auto() {
+        let c = AppConfig::from_text("").unwrap();
+        assert_eq!(c.model.tile_bytes, None, "absent means auto-detect");
+        // 0 is accepted verbatim: it means "tiling off", not "auto".
+        let c = AppConfig::from_text("[model]\ntile_bytes = 0").unwrap();
+        assert_eq!(c.model.tile_bytes, Some(0));
     }
 }

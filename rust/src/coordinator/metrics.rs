@@ -263,6 +263,14 @@ pub struct MetricsSnapshot {
     pub arena_index_allocations: u64,
     /// Index-scratch acquisitions served by recycling.
     pub arena_index_reuses: u64,
+    /// High-water mark of scratch-arena bytes resident at once across all
+    /// threads (see [`crate::fastmult::arena_peak_bytes`]) — the number the
+    /// tiled schedule walk exists to keep near the cache budget instead of
+    /// the full `n^k` intermediate footprint.
+    pub arena_peak_bytes: u64,
+    /// Cache-blocked chains streamed tile-by-tile across all schedule
+    /// walks (process-wide, see [`crate::fastmult::exec_stats`]).
+    pub tiled_chains: u64,
     /// Whole batches executed through the batched model path — the fused
     /// `[B, n^k]` walk (one schedule walk per layer per worker span) for
     /// multi-item batches, the DAG-subtree fan-out for single-item ones
@@ -433,6 +441,8 @@ impl Metrics {
             arena_high_water_f64s: arena.high_water_f64s as u64,
             arena_index_allocations: arena.index_allocations,
             arena_index_reuses: arena.index_reuses,
+            arena_peak_bytes: arena.peak_bytes as u64,
+            tiled_chains: sched_exec.tiled_chains,
             fused_batches: fused.batches,
             fused_items: fused.items,
             mean_fused_batch_size: fused.mean_batch_size(),
@@ -601,6 +611,7 @@ mod tests {
             s.arena_index_allocations >= 1,
             "index-scratch counters not plumbed"
         );
+        assert!(s.arena_peak_bytes >= 1, "arena peak bytes not plumbed");
         assert!(s.schedule_nodes >= 1 && s.schedule_classes >= 1);
         assert!(s.schedule_estimated_flops > 0 && s.schedule_estimated_bytes > 0);
         // Fused-batch counters are plumbed from the nn::model globals; run

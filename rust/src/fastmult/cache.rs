@@ -74,7 +74,10 @@ struct SchedSlot {
 /// enumeration order) is fully determined by `(group, n, k, l)`, with
 /// `transposed` distinguishing the backward schedule (compiled from the
 /// term-wise transposed plans, which is *not* the same ordering as the
-/// forward schedule of the mirrored shape).
+/// forward schedule of the mirrored shape). `tile_budget` is the cache
+/// budget (bytes) baked into the schedule's tiling plans — resolved once
+/// at lookup so a process-level budget change (or a test overriding it)
+/// compiles a fresh schedule instead of mutating a shared one.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct ScheduleKey {
     group: Group,
@@ -82,6 +85,7 @@ struct ScheduleKey {
     k: usize,
     l: usize,
     transposed: bool,
+    tile_budget: usize,
 }
 
 /// One cache shard: its slice of both maps plus its own counters, so a
@@ -392,6 +396,7 @@ impl PlanCache {
             k,
             l,
             transposed,
+            tile_budget: super::schedule::resolve_tile_budget(),
         };
         let shard = self.shard_for(&key);
         {
@@ -406,7 +411,14 @@ impl PlanCache {
         // Compile outside the lock (mirrors `get_or_build`); a racing
         // compile of the same key keeps the first insert.
         let (ck, cl) = if transposed { (l, k) } else { (k, l) };
-        let compiled = Arc::new(LayerSchedule::compile(group, n, ck, cl, plans)?);
+        let compiled = Arc::new(LayerSchedule::compile_budgeted(
+            group,
+            n,
+            ck,
+            cl,
+            plans,
+            key.tile_budget,
+        )?);
         let result = {
             let mut map = lock_recover(&shard.schedules);
             let stamp = self.next_stamp();

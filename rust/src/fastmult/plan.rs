@@ -333,6 +333,18 @@ impl MultPlan {
         };
         bytes.saturating_add(16 * support)
     }
+
+    /// Largest tensor (bytes, at `f64` width) one untiled `apply`
+    /// materialises: the permuted input at order `k`, or the order-`l`
+    /// output when the diagram grows the order. Step-1/2 intermediates
+    /// only ever shrink the order, so this is the full-walk peak that the
+    /// tiled schedule walk (`docs/tiled_execution.md`) avoids holding for
+    /// its streamed interior nodes.
+    pub fn peak_intermediate_bytes(&self) -> u128 {
+        (self.n as u128)
+            .saturating_pow(self.k.max(self.l) as u32)
+            .saturating_mul(8)
+    }
 }
 
 #[cfg(test)]

@@ -84,9 +84,11 @@ use super::plan::is_identity;
 use super::{sp, Group, MultPlan};
 use crate::error::{Error, Result};
 use crate::tensor::{
-    axis_strides, axpy_slice, group_diag_offsets, levi_civita_entries, permute_block_map,
-    permute_dst_map, permuted_gather_base, permuted_group_diag_offsets, ramp_base,
-    scatter_diag_dsts, BatchTensorOf, Scalar, TensorOf,
+    axis_strides, axpy_slice, contract_diag_window, gather_contract_window,
+    gather_eps_trace_window, gather_window, group_diag_offsets, levi_civita_entries,
+    permute_block_map, permute_blocks_window, permute_dst_map, permuted_gather_base,
+    permuted_group_diag_offsets, ramp_base, scatter_diag_dsts, tile_spans, trace_eps_window,
+    BatchTensorOf, Scalar, TensorOf,
 };
 use std::any::{Any, TypeId};
 use std::collections::HashMap;
@@ -100,12 +102,36 @@ use std::sync::{Arc, Mutex};
 static ARENA_ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
 static ARENA_REUSES: AtomicU64 = AtomicU64::new(0);
 static ARENA_HIGH_WATER: AtomicUsize = AtomicUsize::new(0);
+static ARENA_IN_USE_BYTES: AtomicUsize = AtomicUsize::new(0);
+static ARENA_PEAK_BYTES: AtomicUsize = AtomicUsize::new(0);
 static ARENA_INDEX_ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
 static ARENA_INDEX_REUSES: AtomicU64 = AtomicU64::new(0);
 static OPS_SHARED: AtomicU64 = AtomicU64::new(0);
 static EXECUTED_NODES: AtomicU64 = AtomicU64::new(0);
 static SCATTER_PASSES: AtomicU64 = AtomicU64::new(0);
+static TILED_CHAINS: AtomicU64 = AtomicU64::new(0);
 static MEASURED_BYTES: AtomicU64 = AtomicU64::new(0);
+/// Process-wide tile budget override (`usize::MAX` = unset → the probed
+/// [`crate::util::hw::cache_bytes`] is used). Set from `[model] tile_bytes`
+/// by the serving CLI; `0` disables tiling outright.
+static TILE_BUDGET: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// Set (or clear, with `None`) the process-wide tile budget override used
+/// by [`LayerSchedule::compile`] when no explicit budget is passed.
+/// `Some(0)` disables tiling; `None` restores the hardware default.
+pub fn set_tile_budget(bytes: Option<usize>) {
+    TILE_BUDGET.store(bytes.unwrap_or(usize::MAX), Ordering::Relaxed);
+}
+
+/// The tile budget [`LayerSchedule::compile`] will use: the override set
+/// by [`set_tile_budget`] when present, the probed per-core cache size
+/// otherwise.
+pub fn resolve_tile_budget() -> usize {
+    match TILE_BUDGET.load(Ordering::Relaxed) {
+        usize::MAX => crate::util::hw::cache_bytes(),
+        bytes => bytes,
+    }
+}
 static PLANNED_FLOPS: AtomicU64 = AtomicU64::new(0);
 static PLANNED_BYTES: AtomicU64 = AtomicU64::new(0);
 static PLANNED_NODES: AtomicU64 = AtomicU64::new(0);
@@ -128,6 +154,12 @@ pub struct ArenaStats {
     pub index_allocations: u64,
     /// Index-scratch acquisitions served by recycling.
     pub index_reuses: u64,
+    /// Peak bytes simultaneously checked out of any arena since the last
+    /// [`reset_arena_peak`] — the resident-set figure the tiled walk
+    /// shrinks. Unlike `high_water_f64s` (cumulative pool ownership,
+    /// never resettable) this tracks *live* buffers and can be scoped to
+    /// a region of interest.
+    pub peak_bytes: usize,
 }
 
 /// Snapshot of the process-wide arena counters.
@@ -138,7 +170,22 @@ pub fn arena_stats() -> ArenaStats {
         high_water_f64s: ARENA_HIGH_WATER.load(Ordering::Relaxed),
         index_allocations: ARENA_INDEX_ALLOCATIONS.load(Ordering::Relaxed),
         index_reuses: ARENA_INDEX_REUSES.load(Ordering::Relaxed),
+        peak_bytes: ARENA_PEAK_BYTES.load(Ordering::Relaxed),
     }
+}
+
+/// Peak bytes simultaneously checked out of the arenas since the last
+/// [`reset_arena_peak`] (see [`ArenaStats::peak_bytes`]).
+pub fn arena_peak_bytes() -> usize {
+    ARENA_PEAK_BYTES.load(Ordering::Relaxed)
+}
+
+/// Scope the peak-bytes watermark: reset it to the bytes currently checked
+/// out, so the next [`arena_peak_bytes`] reading reflects only activity
+/// after this call. Benches bracket one warm execute with this pair to
+/// measure a single walk's true resident footprint.
+pub fn reset_arena_peak() {
+    ARENA_PEAK_BYTES.store(ARENA_IN_USE_BYTES.load(Ordering::Relaxed), Ordering::Relaxed);
 }
 
 /// Total interior ops elided by CSE across every
@@ -162,6 +209,10 @@ pub struct ExecStats {
     /// `f64`, active members and real batch sizes only) — the runtime twin
     /// of the compile-time `estimated_bytes`. Saturating.
     pub bytes_moved: u64,
+    /// Chains actually streamed tile-by-tile (a tiled execute whose every
+    /// chain fits the budget performs zero of these — the degenerate-skip
+    /// guarantee the tiling tests assert on).
+    pub tiled_chains: u64,
 }
 
 /// Snapshot of the process-wide execution counters.
@@ -170,6 +221,7 @@ pub fn exec_stats() -> ExecStats {
         executed_nodes: EXECUTED_NODES.load(Ordering::Relaxed),
         scatter_passes: SCATTER_PASSES.load(Ordering::Relaxed),
         bytes_moved: MEASURED_BYTES.load(Ordering::Relaxed),
+        tiled_chains: TILED_CHAINS.load(Ordering::Relaxed),
     }
 }
 
@@ -307,12 +359,22 @@ impl<S: Scalar> ScratchArenaOf<S> {
                 vec![S::ZERO; len]
             }
         };
+        // Live-buffer watermark: reused and fresh buffers both count —
+        // what matters for the peak is bytes checked out, not allocated.
+        let in_use = ARENA_IN_USE_BYTES.fetch_add(len * S::BYTES, Ordering::Relaxed)
+            + len * S::BYTES;
+        ARENA_PEAK_BYTES.fetch_max(in_use, Ordering::Relaxed);
         debug_assert_eq!(data.len(), len);
         data
     }
 
     /// Return a raw buffer to the pool.
     pub(crate) fn release_raw(&mut self, buf: Vec<S>) {
+        // Saturating: a buffer released after a watermark reset (or an
+        // arena cleared mid-checkout) must not wrap the live counter.
+        let _ = ARENA_IN_USE_BYTES.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+            Some(cur.saturating_sub(buf.len() * S::BYTES))
+        });
         self.buckets.entry(buf.len()).or_default().push(buf);
     }
 
@@ -808,6 +870,14 @@ pub struct ScheduleStats {
     pub estimated_flops: u128,
     /// Cost-model bytes moved by one full forward walk.
     pub estimated_bytes: u128,
+    /// Chains the tiling planner will stream slab-by-slab when their
+    /// interior buffers exceed the tile budget (0 when every chain is
+    /// degenerate — under budget, too short, or not slab-local).
+    pub tiled_chains: usize,
+    /// Largest single interior buffer the **untiled** walk materialises,
+    /// in bytes at the 8-byte reference width — the per-node resident
+    /// peak that tiling caps at the budget.
+    pub peak_node_bytes: u128,
 }
 
 impl ScheduleStats {
@@ -856,6 +926,10 @@ impl ScheduleStats {
             .saturating_add(other.bytes_saved_estimate);
         self.estimated_flops = self.estimated_flops.saturating_add(other.estimated_flops);
         self.estimated_bytes = self.estimated_bytes.saturating_add(other.estimated_bytes);
+        self.tiled_chains += other.tiled_chains;
+        // Peak resident bytes do not add across layers (buffers are
+        // released between walks) — the network-wide peak is the max.
+        self.peak_node_bytes = self.peak_node_bytes.max(other.peak_node_bytes);
     }
 }
 
@@ -1274,6 +1348,143 @@ fn node_kernel(op: &Op, n: usize, in_order: usize) -> NodeKernel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Tiling planner
+// ---------------------------------------------------------------------------
+
+/// A cache-blocked streaming plan for one maximal op run ending at the
+/// node this plan is stored at (see `docs/tiled_execution.md`). The run's
+/// interior outputs are never materialised: each `[lo, hi)` tile of the
+/// final node's output flows through the whole segment in two ping-ponged
+/// tile-sized stage buffers before the next tile starts, so the walk's
+/// live intermediate footprint is bounded by the byte budget instead of
+/// the largest `n^order` on the chain.
+#[derive(Debug, Clone)]
+struct TilePlan {
+    /// Node indices of the run, pivot first; the last entry is the node
+    /// the plan is stored at, whose full output the streamed tiles fill.
+    /// Every entry after the pivot is a slab-local trailing reduction
+    /// (`ContractDiagonal` / `TracePair` / `TracePairEps`), and every
+    /// entry except the last has exactly one consumer.
+    segment: Vec<usize>,
+    /// Per-stage output widths relative to one element of the final
+    /// node's output: `factors[s] = n^(order(segment[s]) − order(last))`.
+    /// Strictly decreasing; `factors[last] == 1`.
+    factors: Vec<usize>,
+    /// Tile boundaries must be multiples of this (in final-output
+    /// elements): 1 unless the pivot is a blocked permute whose copy
+    /// block exceeds `factors[0]`, in which case whole source blocks must
+    /// stay inside one tile.
+    align: usize,
+    /// The final node's full output length, `n^order(last)`.
+    out_len: usize,
+}
+
+/// Is node `i` a *slab-local* trailing reduction — one whose input window
+/// for an output slab `[lo, hi)` is exactly the contiguous input slab
+/// `[lo·n^m, hi·n^m)`? These are the ops a tiled segment can stream
+/// through a stage buffer; everything else (permutes, gathers,
+/// Levi-Civita) reads its input non-locally and can only sit at the
+/// pivot, where the full input is available.
+fn slab_local(op: &Op) -> bool {
+    matches!(
+        op,
+        Op::ContractDiagonal { .. } | Op::TracePair { .. } | Op::TracePairEps { .. }
+    )
+}
+
+/// Build the per-node tile plans: for every node, walk its parent chain
+/// upward while the current node is slab-local and the parent is an
+/// exclusively-consumed non-Levi-Civita node, then keep the run if it
+/// spans at least two ops. The pivot (run head) may be any op except
+/// `LeviCivita` — its kernel reads the *full* parent through a windowed
+/// slice of its table or input slab — and may itself be CSE-shared or
+/// read the raw input. Runs interior to a longer run are dropped: their
+/// node is never materialised directly, so a plan there is dead weight.
+fn plan_tiling(
+    nodes: &[Node],
+    sinks: &[Sink],
+    kernels: &[NodeKernel],
+    n: usize,
+) -> Vec<Option<TilePlan>> {
+    let nn = nodes.len();
+    let mut consumers = vec![0usize; nn];
+    for node in nodes.iter() {
+        if let Src::Node(p) = node.op.src() {
+            consumers[p] += 1;
+        }
+    }
+    for sink in sinks.iter() {
+        if let Src::Node(p) = sink.src {
+            consumers[p] += 1;
+        }
+    }
+    let mut tiling: Vec<Option<TilePlan>> = vec![None; nn];
+    for x in 0..nn {
+        let mut segment = vec![x];
+        let mut cur = x;
+        // Extend upward: `cur` must be able to consume a windowed stage
+        // buffer (slab-local), and its parent must belong to this run
+        // alone. The loop's final front becomes the pivot: either a
+        // non-local op reading its fully materialised parent, or a
+        // slab-local op whose parent is shared / the raw input.
+        while slab_local(&nodes[cur].op) {
+            let Src::Node(p) = nodes[cur].op.src() else {
+                break;
+            };
+            if consumers[p] != 1 || matches!(nodes[p].op, Op::LeviCivita { .. }) {
+                break;
+            }
+            segment.push(p);
+            cur = p;
+        }
+        segment.reverse();
+        if segment.len() < 2 {
+            continue;
+        }
+        let out_ord = nodes[x].order;
+        let factors: Vec<usize> = segment
+            .iter()
+            .map(|&i| n.pow((nodes[i].order - out_ord) as u32))
+            .collect();
+        let align = match &kernels[segment[0]] {
+            NodeKernel::Permute { block, .. } if *block > factors[0] => block / factors[0],
+            _ => 1,
+        };
+        tiling[x] = Some(TilePlan {
+            segment,
+            factors,
+            align,
+            out_len: n.pow(out_ord as u32),
+        });
+    }
+    // Keep only maximal runs.
+    let mut interior = vec![false; nn];
+    for plan in tiling.iter().flatten() {
+        for &i in &plan.segment[..plan.segment.len() - 1] {
+            interior[i] = true;
+        }
+    }
+    for (i, slot) in tiling.iter_mut().enumerate() {
+        if interior[i] {
+            *slot = None;
+        }
+    }
+    tiling
+}
+
+/// How a walk treats the tile plans: the legacy entry points pass `Off`
+/// (byte-identical to the pre-tiling code path — plans are never even
+/// consulted), the `*_tiled` twins pass `On` (stream over-budget chains
+/// sequentially), and [`LayerSchedule::execute_tiled_parallel`] passes
+/// `Par` (each streamed chain's tiles become work-stealing tasks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TileMode {
+    Off,
+    On,
+    Par,
+}
+
 /// One folded multi-pattern scatter pass replayed off the kernel plan:
 /// `out[dsts_m[r·len + s]] += w_m · src[s]`, rep-major, source-inner,
 /// active-member-innermost — exactly the visit order of the standalone
@@ -1370,6 +1581,15 @@ pub struct LayerSchedule {
     /// Cost-model work per subtree, aligned with `subtrees` (drives
     /// [`LayerSchedule::cost_partitions`]).
     subtree_costs: Vec<u128>,
+    /// Per-node tile plans, aligned with `nodes` — `Some` at every node
+    /// ending a maximal streamable run (see [`plan_tiling`]). Consulted
+    /// only by the `execute*_tiled` walks; the legacy entry points ignore
+    /// them entirely.
+    tiling: Vec<Option<TilePlan>>,
+    /// Byte budget the tiled walks size their streaming tiles to (stage
+    /// buffers of one chain together stay under this). `0` disables
+    /// streaming even through the tiled entry points.
+    tile_budget_bytes: usize,
     stats: ScheduleStats,
 }
 
@@ -1448,7 +1668,25 @@ impl LayerSchedule {
         l: usize,
         plans: &[Arc<MultPlan>],
     ) -> Result<LayerSchedule> {
-        Self::compile_with(group, n, k, l, plans, true)
+        Self::compile_with(group, n, k, l, plans, true, resolve_tile_budget())
+    }
+
+    /// [`LayerSchedule::compile`] with an explicit tile byte budget
+    /// instead of the process-wide [`resolve_tile_budget`] default. The
+    /// budget only affects the `execute*_tiled` walks — it caps the live
+    /// stage-buffer bytes of each streamed chain (see
+    /// `docs/tiled_execution.md`); `0` disables streaming entirely.
+    /// Tiled and untiled execution stay **bitwise** identical at every
+    /// budget.
+    pub fn compile_budgeted(
+        group: Group,
+        n: usize,
+        k: usize,
+        l: usize,
+        plans: &[Arc<MultPlan>],
+        tile_budget_bytes: usize,
+    ) -> Result<LayerSchedule> {
+        Self::compile_with(group, n, k, l, plans, true, tile_budget_bytes)
     }
 
     /// [`LayerSchedule::compile`] with the strided-fusion pass disabled:
@@ -1463,7 +1701,7 @@ impl LayerSchedule {
         l: usize,
         plans: &[Arc<MultPlan>],
     ) -> Result<LayerSchedule> {
-        Self::compile_with(group, n, k, l, plans, false)
+        Self::compile_with(group, n, k, l, plans, false, resolve_tile_budget())
     }
 
     fn compile_with(
@@ -1473,6 +1711,7 @@ impl LayerSchedule {
         l: usize,
         plans: &[Arc<MultPlan>],
         fuse: bool,
+        tile_budget_bytes: usize,
     ) -> Result<LayerSchedule> {
         // `raw` interns the uncanonicalised chains — prefix sharing only,
         // the pre-folding baseline the stats compare against.
@@ -1659,6 +1898,11 @@ impl LayerSchedule {
         }
         debug_assert_eq!(order.len(), classes.len());
 
+        // Tile plans: computed after fusion and kernel planning, so runs
+        // are measured over the ops that will actually execute and the
+        // pivot's alignment comes from its real kernel table.
+        let tiling = plan_tiling(&b.nodes, &sinks, &kernels, n);
+
         let mut estimated = OpCost::default();
         for node in &b.nodes {
             estimated.accumulate(node.cost);
@@ -1666,6 +1910,14 @@ impl LayerSchedule {
         for class in &classes {
             estimated.accumulate(class.cost);
         }
+        // Largest single interior buffer an *untiled* walk materialises —
+        // what the tiled walk's streamed chains avoid holding live.
+        let peak_node_bytes = b
+            .nodes
+            .iter()
+            .map(|node| powu(n, node.order).saturating_mul(8))
+            .max()
+            .unwrap_or(0);
         let stats = ScheduleStats {
             terms: sinks.len(),
             nodes: b.nodes.len(),
@@ -1678,6 +1930,8 @@ impl LayerSchedule {
             bytes_saved_estimate: bytes_saved,
             estimated_flops: estimated.flops,
             estimated_bytes: estimated.bytes,
+            tiled_chains: tiling.iter().filter(|t| t.is_some()).count(),
+            peak_node_bytes,
         };
         OPS_SHARED.fetch_add(stats.shared_ops as u64, Ordering::Relaxed);
         saturating_counter_add(
@@ -1705,6 +1959,8 @@ impl LayerSchedule {
             order,
             subtrees,
             subtree_costs,
+            tiling,
+            tile_budget_bytes,
             stats,
         })
     }
@@ -1860,6 +2116,13 @@ impl LayerSchedule {
     /// Compile-time sharing/folding statistics and cost estimates.
     pub fn stats(&self) -> ScheduleStats {
         self.stats
+    }
+
+    /// Byte budget the `execute*_tiled` walks size their streaming tiles
+    /// to — the explicit [`LayerSchedule::compile_budgeted`] value, or
+    /// the process default ([`resolve_tile_budget`]) at compile time.
+    pub fn tile_budget_bytes(&self) -> usize {
+        self.tile_budget_bytes
     }
 
     /// Class-index groups with pairwise-disjoint node sets (grouped by DAG
@@ -2033,6 +2296,41 @@ impl LayerSchedule {
         self.execute_subset(v, coeffs, &self.order, out, arena)
     }
 
+    /// [`LayerSchedule::execute`] with the cache-blocked streaming walk:
+    /// over-budget chains never materialise their interior `n^order`
+    /// intermediates — each output tile flows through the whole streamed
+    /// run in tile-sized stage buffers (see `docs/tiled_execution.md`).
+    /// **Bitwise** identical to [`LayerSchedule::execute`] at every
+    /// budget; chains under [`LayerSchedule::tile_budget_bytes`] skip the
+    /// tiling machinery entirely and run the plain walk.
+    pub fn execute_tiled<S: Scalar>(
+        &self,
+        v: &TensorOf<S>,
+        coeffs: &[f64],
+        out: &mut TensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
+    ) -> Result<()> {
+        self.execute_subset_with(v, coeffs, &self.order, out, arena, TileMode::On)
+    }
+
+    /// [`LayerSchedule::execute_tiled`] with the tiles of each streamed
+    /// chain fanned out as work-stealing tasks on the process-wide
+    /// [`crate::util::executor`] pool — intra-item parallelism for the
+    /// single-tensor (`B = 1`) forward, where the batch axis offers none.
+    /// Tiles write disjoint output slabs and the closing scatter passes
+    /// stay sequential on the calling thread, so the result remains
+    /// **bitwise** identical to [`LayerSchedule::execute`] and
+    /// deterministic regardless of worker interleaving.
+    pub fn execute_tiled_parallel<S: Scalar>(
+        &self,
+        v: &TensorOf<S>,
+        coeffs: &[f64],
+        out: &mut TensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
+    ) -> Result<()> {
+        self.execute_subset_with(v, coeffs, &self.order, out, arena, TileMode::Par)
+    }
+
     /// [`LayerSchedule::execute`] restricted to the given class indices
     /// (still reading full-length `coeffs`), executed in the order given.
     /// Used with [`LayerSchedule::subtrees`] /
@@ -2044,6 +2342,31 @@ impl LayerSchedule {
         classes: &[usize],
         out: &mut TensorOf<S>,
         arena: &mut ScratchArenaOf<S>,
+    ) -> Result<()> {
+        self.execute_subset_with(v, coeffs, classes, out, arena, TileMode::Off)
+    }
+
+    /// [`LayerSchedule::execute_subset`] on the tiled streaming walk —
+    /// the subset unit the parallel layer forward hands each worker.
+    pub fn execute_subset_tiled<S: Scalar>(
+        &self,
+        v: &TensorOf<S>,
+        coeffs: &[f64],
+        classes: &[usize],
+        out: &mut TensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
+    ) -> Result<()> {
+        self.execute_subset_with(v, coeffs, classes, out, arena, TileMode::On)
+    }
+
+    fn execute_subset_with<S: Scalar>(
+        &self,
+        v: &TensorOf<S>,
+        coeffs: &[f64],
+        classes: &[usize],
+        out: &mut TensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
+        mode: TileMode,
     ) -> Result<()> {
         self.check_input(v)?;
         self.check_output(out)?;
@@ -2065,7 +2388,7 @@ impl LayerSchedule {
                 continue;
             }
             let class = &self.classes[ci];
-            self.materialize(class.src, v, &mut bufs, arena, &mut moved);
+            self.materialize(class.src, v, &mut bufs, arena, &mut moved, mode);
             match &class.shape {
                 ClassShape::Eps { t } => {
                     let tmp = self.eps_expand(class.src, *t, v, &bufs, arena, &mut moved);
@@ -2115,6 +2438,30 @@ impl LayerSchedule {
         outs: &mut [TensorOf<S>],
         arena: &mut ScratchArenaOf<S>,
     ) -> Result<()> {
+        self.execute_multi_with(v, coeff_rows, outs, arena, TileMode::Off)
+    }
+
+    /// [`LayerSchedule::execute_multi`] on the tiled streaming walk —
+    /// the multi-channel forward with over-budget chains streamed
+    /// (bitwise identical; see `docs/tiled_execution.md`).
+    pub fn execute_multi_tiled<S: Scalar>(
+        &self,
+        v: &TensorOf<S>,
+        coeff_rows: &[Vec<f64>],
+        outs: &mut [TensorOf<S>],
+        arena: &mut ScratchArenaOf<S>,
+    ) -> Result<()> {
+        self.execute_multi_with(v, coeff_rows, outs, arena, TileMode::On)
+    }
+
+    fn execute_multi_with<S: Scalar>(
+        &self,
+        v: &TensorOf<S>,
+        coeff_rows: &[Vec<f64>],
+        outs: &mut [TensorOf<S>],
+        arena: &mut ScratchArenaOf<S>,
+        mode: TileMode,
+    ) -> Result<()> {
         if coeff_rows.len() != outs.len() {
             return Err(Error::ShapeMismatch {
                 expected: format!("{} outputs", coeff_rows.len()),
@@ -2150,7 +2497,7 @@ impl LayerSchedule {
                 continue;
             }
             let class = &self.classes[ci];
-            self.materialize(class.src, v, &mut bufs, arena, &mut moved);
+            self.materialize(class.src, v, &mut bufs, arena, &mut moved, mode);
             match &class.shape {
                 ClassShape::Eps { t } => {
                     // Expand once per class; only the closing replay is
@@ -2223,6 +2570,24 @@ impl LayerSchedule {
         self.execute_map_subset(v, &all, arena, &mut f)
     }
 
+    /// [`LayerSchedule::execute_map`] on the tiled streaming walk — the
+    /// backward pass with over-budget chains streamed. Still **bitwise**
+    /// equal to `MultPlan::apply` per term (the streamed run reproduces
+    /// each full kernel's per-element arithmetic exactly; see
+    /// `docs/tiled_execution.md`).
+    pub fn execute_map_tiled<S: Scalar, F>(
+        &self,
+        v: &TensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
+        mut f: F,
+    ) -> Result<()>
+    where
+        F: FnMut(usize, &TensorOf<S>) -> Result<()>,
+    {
+        let all: Vec<usize> = (0..self.sinks.len()).collect();
+        self.execute_map_subset_tiled(v, &all, arena, &mut f)
+    }
+
     /// [`LayerSchedule::execute_map`] restricted to the given *term*
     /// indices, visited in the order given. Pair with
     /// [`LayerSchedule::cost_term_partitions`] to fan a backward pass out
@@ -2233,6 +2598,34 @@ impl LayerSchedule {
         terms: &[usize],
         arena: &mut ScratchArenaOf<S>,
         mut f: F,
+    ) -> Result<()>
+    where
+        F: FnMut(usize, &TensorOf<S>) -> Result<()>,
+    {
+        self.execute_map_subset_with(v, terms, arena, &mut f, TileMode::Off)
+    }
+
+    /// [`LayerSchedule::execute_map_subset`] on the tiled streaming walk.
+    pub fn execute_map_subset_tiled<S: Scalar, F>(
+        &self,
+        v: &TensorOf<S>,
+        terms: &[usize],
+        arena: &mut ScratchArenaOf<S>,
+        mut f: F,
+    ) -> Result<()>
+    where
+        F: FnMut(usize, &TensorOf<S>) -> Result<()>,
+    {
+        self.execute_map_subset_with(v, terms, arena, &mut f, TileMode::On)
+    }
+
+    fn execute_map_subset_with<S: Scalar, F>(
+        &self,
+        v: &TensorOf<S>,
+        terms: &[usize],
+        arena: &mut ScratchArenaOf<S>,
+        mut f: F,
+        mode: TileMode,
     ) -> Result<()>
     where
         F: FnMut(usize, &TensorOf<S>) -> Result<()>,
@@ -2249,7 +2642,7 @@ impl LayerSchedule {
         let mut moved = 0u64;
         for &si in terms {
             let sink = &self.sinks[si];
-            self.materialize(sink.src, v, &mut bufs, arena, &mut moved);
+            self.materialize(sink.src, v, &mut bufs, arena, &mut moved, mode);
             term_out.data.fill(S::ZERO);
             // Replay this term's precompiled destination map (shared with
             // its folded-class membership) with weight `sign`: each
@@ -2346,6 +2739,22 @@ impl LayerSchedule {
         self.execute_batch_subset(v, coeffs, &self.order, out, arena)
     }
 
+    /// [`LayerSchedule::execute_batch`] on the tiled streaming walk:
+    /// streamed chains run item by item through the windowed kernels,
+    /// which replay the exact per-item arithmetic of the batched full
+    /// kernels — so this stays bitwise identical to
+    /// [`LayerSchedule::execute_batch`] (and, item-by-item, to
+    /// [`LayerSchedule::execute`]).
+    pub fn execute_batch_tiled<S: Scalar>(
+        &self,
+        v: &BatchTensorOf<S>,
+        coeffs: &[f64],
+        out: &mut BatchTensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
+    ) -> Result<()> {
+        self.execute_batch_subset_with(v, coeffs, &self.order, out, arena, TileMode::On)
+    }
+
     /// [`LayerSchedule::execute_batch`] restricted to the given class
     /// indices (still reading full-length `coeffs`), executed in the order
     /// given. Used with [`LayerSchedule::subtrees`] /
@@ -2358,6 +2767,18 @@ impl LayerSchedule {
         classes: &[usize],
         out: &mut BatchTensorOf<S>,
         arena: &mut ScratchArenaOf<S>,
+    ) -> Result<()> {
+        self.execute_batch_subset_with(v, coeffs, classes, out, arena, TileMode::Off)
+    }
+
+    fn execute_batch_subset_with<S: Scalar>(
+        &self,
+        v: &BatchTensorOf<S>,
+        coeffs: &[f64],
+        classes: &[usize],
+        out: &mut BatchTensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
+        mode: TileMode,
     ) -> Result<()> {
         self.check_batch_input(v)?;
         self.check_batch_output(out, v.batch())?;
@@ -2379,7 +2800,7 @@ impl LayerSchedule {
                 continue;
             }
             let class = &self.classes[ci];
-            self.materialize_batch(class.src, v, &mut bufs, arena, &mut moved);
+            self.materialize_batch(class.src, v, &mut bufs, arena, &mut moved, mode);
             match &class.shape {
                 ClassShape::Eps { t } => {
                     let tmp =
@@ -2419,6 +2840,34 @@ impl LayerSchedule {
     where
         F: FnMut(usize, &BatchTensorOf<S>) -> Result<()>,
     {
+        self.execute_batch_map_with(v, arena, &mut f, TileMode::Off)
+    }
+
+    /// [`LayerSchedule::execute_batch_map`] on the tiled streaming walk —
+    /// the batched backward with over-budget chains streamed per item
+    /// (bitwise identical per term and item).
+    pub fn execute_batch_map_tiled<S: Scalar, F>(
+        &self,
+        v: &BatchTensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
+        mut f: F,
+    ) -> Result<()>
+    where
+        F: FnMut(usize, &BatchTensorOf<S>) -> Result<()>,
+    {
+        self.execute_batch_map_with(v, arena, &mut f, TileMode::On)
+    }
+
+    fn execute_batch_map_with<S: Scalar, F>(
+        &self,
+        v: &BatchTensorOf<S>,
+        arena: &mut ScratchArenaOf<S>,
+        mut f: F,
+        mode: TileMode,
+    ) -> Result<()>
+    where
+        F: FnMut(usize, &BatchTensorOf<S>) -> Result<()>,
+    {
         self.check_batch_input(v)?;
         let mut refs = arena.acquire_indices(self.nodes.len());
         refs.fill(0);
@@ -2430,7 +2879,7 @@ impl LayerSchedule {
         let mut result = Ok(());
         let mut moved = 0u64;
         for (si, sink) in self.sinks.iter().enumerate() {
-            self.materialize_batch(sink.src, v, &mut bufs, arena, &mut moved);
+            self.materialize_batch(sink.src, v, &mut bufs, arena, &mut moved, mode);
             term_out.data_mut().fill(S::ZERO);
             let (ci, mi) = self.sink_refs[si];
             let member = &self.classes[ci].members[mi];
@@ -2477,6 +2926,30 @@ impl LayerSchedule {
         outs: &mut [BatchTensorOf<S>],
         arena: &mut ScratchArenaOf<S>,
     ) -> Result<()> {
+        self.execute_batch_multi_with(v, coeff_rows, outs, arena, TileMode::Off)
+    }
+
+    /// [`LayerSchedule::execute_batch_multi`] on the tiled streaming
+    /// walk — the channel layer's batched forward with over-budget
+    /// chains streamed per item (bitwise identical).
+    pub fn execute_batch_multi_tiled<S: Scalar>(
+        &self,
+        v: &BatchTensorOf<S>,
+        coeff_rows: &[Vec<f64>],
+        outs: &mut [BatchTensorOf<S>],
+        arena: &mut ScratchArenaOf<S>,
+    ) -> Result<()> {
+        self.execute_batch_multi_with(v, coeff_rows, outs, arena, TileMode::On)
+    }
+
+    fn execute_batch_multi_with<S: Scalar>(
+        &self,
+        v: &BatchTensorOf<S>,
+        coeff_rows: &[Vec<f64>],
+        outs: &mut [BatchTensorOf<S>],
+        arena: &mut ScratchArenaOf<S>,
+        mode: TileMode,
+    ) -> Result<()> {
         if coeff_rows.len() != outs.len() {
             return Err(Error::ShapeMismatch {
                 expected: format!("{} outputs", coeff_rows.len()),
@@ -2510,7 +2983,7 @@ impl LayerSchedule {
                 continue;
             }
             let class = &self.classes[ci];
-            self.materialize_batch(class.src, v, &mut bufs, arena, &mut moved);
+            self.materialize_batch(class.src, v, &mut bufs, arena, &mut moved, mode);
             match &class.shape {
                 ClassShape::Eps { t } => {
                     let tmp =
@@ -2557,7 +3030,11 @@ impl LayerSchedule {
     }
 
     /// Batched twin of `materialize`: every node output is a `[B, …]`
-    /// batch computed by the batched kernels.
+    /// batch computed by the batched kernels. Under a tiled mode,
+    /// over-budget runs stream item by item through the per-item
+    /// windowed kernels — which replay the exact per-item arithmetic of
+    /// the batched full kernels, keeping the batched tiled walk bitwise
+    /// identical per item to every other path.
     fn materialize_batch<S: Scalar>(
         &self,
         src: Src,
@@ -2565,6 +3042,7 @@ impl LayerSchedule {
         bufs: &mut [Option<BatchTensorOf<S>>],
         arena: &mut ScratchArenaOf<S>,
         moved: &mut u64,
+        mode: TileMode,
     ) {
         let Src::Node(i) = src else {
             return;
@@ -2572,8 +3050,46 @@ impl LayerSchedule {
         if bufs[i].is_some() {
             return;
         }
+        if mode != TileMode::Off {
+            if let Some(plan) = &self.tiling[i] {
+                let span = self.tile_span::<S>(plan);
+                if span < plan.out_len {
+                    let pivot_src = self.nodes[plan.segment[0]].op.src();
+                    self.materialize_batch(pivot_src, v, bufs, arena, moved, mode);
+                    let mut out = arena.acquire_batch(self.n, self.nodes[i].order, v.batch());
+                    let mut stage_a = arena.acquire_raw(span * plan.factors[0]);
+                    let mut stage_b = (plan.segment.len() >= 3)
+                        .then(|| arena.acquire_raw(span * plan.factors[1]));
+                    {
+                        let parent = self.resolve_batch(pivot_src, v, bufs);
+                        for b in 0..v.batch() {
+                            self.stream_item(
+                                plan,
+                                span,
+                                parent.item(b),
+                                &mut stage_a,
+                                stage_b.as_deref_mut(),
+                                out.item_mut(b),
+                            );
+                        }
+                    }
+                    if let Some(b) = stage_b {
+                        arena.release_raw(b);
+                    }
+                    arena.release_raw(stage_a);
+                    for &si in &plan.segment {
+                        *moved = moved
+                            .saturating_add(node_bytes::<S>(&self.nodes[si].cost, v.batch()));
+                    }
+                    EXECUTED_NODES.fetch_add(plan.segment.len() as u64, Ordering::Relaxed);
+                    TILED_CHAINS.fetch_add(1, Ordering::Relaxed);
+                    bufs[i] = Some(out);
+                    return;
+                }
+            }
+        }
         let parent_src = self.nodes[i].op.src();
-        self.materialize_batch(parent_src, v, bufs, arena, moved);
+        self.materialize_batch(parent_src, v, bufs, arena, moved, mode);
         let mut out = arena.acquire_batch(self.n, self.nodes[i].order, v.batch());
         {
             let parent = self.resolve_batch(parent_src, v, bufs);
@@ -2677,9 +3193,207 @@ impl LayerSchedule {
         arena.release_batch_slots(bufs);
     }
 
+    /// Tile width (in final-output elements) for one streamed chain at
+    /// scalar `S`: the largest `align`-multiple whose two ping-ponged
+    /// stage buffers together fit the byte budget, floored at one
+    /// alignment unit. A span ≥ `out_len` means the chain fits the
+    /// budget whole — the caller falls through to the plain walk, so
+    /// under-budget shapes pay zero tiling overhead.
+    fn tile_span<S: Scalar>(&self, plan: &TilePlan) -> usize {
+        if self.tile_budget_bytes == 0 {
+            return plan.out_len;
+        }
+        let budget_elems = self.tile_budget_bytes / S::BYTES;
+        let denom = plan.factors[0]
+            + if plan.segment.len() >= 3 {
+                plan.factors[1]
+            } else {
+                0
+            };
+        let raw = budget_elems / denom.max(1);
+        ((raw / plan.align) * plan.align).max(plan.align)
+    }
+
+    /// Stream one chain's tiles for a single item: every `[lo, hi)` slab
+    /// of the final node's output flows through the whole segment before
+    /// the next starts. `parent` is the pivot's (full) input, `out` the
+    /// final node's full output buffer. Interior stage outputs live only
+    /// in the two span-sized scratch buffers.
+    #[allow(clippy::too_many_arguments)]
+    fn stream_item<S: Scalar>(
+        &self,
+        plan: &TilePlan,
+        span: usize,
+        parent: &[S],
+        stage_a: &mut [S],
+        mut stage_b: Option<&mut [S]>,
+        out: &mut [S],
+    ) {
+        for (lo, hi) in tile_spans(plan.out_len, span) {
+            self.stream_tile(
+                plan,
+                lo,
+                hi,
+                parent,
+                stage_a,
+                stage_b.as_deref_mut(),
+                &mut out[lo..hi],
+            );
+        }
+    }
+
+    /// One tile of one streamed chain: the pivot's windowed kernel fills
+    /// stage A from the full parent, each interior reduction consumes the
+    /// previous stage's prefix (ping-ponging A/B), and the final segment
+    /// node writes the `[lo, hi)` output slab directly. Each windowed
+    /// kernel replays the exact per-element loop body of its full kernel,
+    /// so the union of tiles is **bitwise** equal to the untiled node
+    /// outputs.
+    #[allow(clippy::too_many_arguments)]
+    fn stream_tile<S: Scalar>(
+        &self,
+        plan: &TilePlan,
+        lo: usize,
+        hi: usize,
+        parent: &[S],
+        stage_a: &mut [S],
+        mut stage_b: Option<&mut [S]>,
+        out: &mut [S],
+    ) {
+        let seg = &plan.segment;
+        let last = seg.len() - 1;
+        let t = hi - lo;
+        debug_assert!(last >= 1);
+        debug_assert_eq!(out.len(), t);
+        debug_assert_eq!(lo % plan.align, 0);
+        let w0 = t * plan.factors[0];
+        self.pivot_window(seg[0], plan.factors[0], parent, lo, hi, &mut stage_a[..w0]);
+        for s in 1..=last {
+            let in_width = t * plan.factors[s - 1];
+            let out_width = t * plan.factors[s];
+            if s == last {
+                if s % 2 == 1 {
+                    self.local_window(seg[s], &stage_a[..in_width], out);
+                } else {
+                    let sb = stage_b.as_deref().expect("ping-pong stage buffer");
+                    self.local_window(seg[s], &sb[..in_width], out);
+                }
+            } else if s % 2 == 1 {
+                let sb = stage_b.as_deref_mut().expect("ping-pong stage buffer");
+                self.local_window(seg[s], &stage_a[..in_width], &mut sb[..out_width]);
+            } else {
+                let sb = stage_b.as_deref().expect("ping-pong stage buffer");
+                self.local_window(seg[s], &sb[..in_width], &mut stage_a[..out_width]);
+            }
+        }
+    }
+
+    /// The pivot's kernel over one output window `[lo·f0, hi·f0)`: slice
+    /// its precompiled table (or its contiguous input slab) and replay
+    /// the full kernel's loop body over just that window.
+    fn pivot_window<S: Scalar>(
+        &self,
+        pi: usize,
+        f0: usize,
+        parent: &[S],
+        lo: usize,
+        hi: usize,
+        dst: &mut [S],
+    ) {
+        let n = self.n;
+        match (&self.nodes[pi].op, &self.kernels[pi]) {
+            (Op::Permute { .. }, NodeKernel::Permute { map, block }) => {
+                // Tile alignment guarantees whole copy blocks per window.
+                permute_blocks_window(parent, &map[lo * f0 / block..hi * f0 / block], *block, dst)
+            }
+            (Op::ContractDiagonal { m, .. }, NodeKernel::Direct) => {
+                let blk = n.pow(*m as u32);
+                contract_diag_window(&parent[lo * f0 * blk..hi * f0 * blk], n, *m, dst)
+            }
+            (Op::TracePair { .. }, NodeKernel::Direct) => {
+                let blk = n * n;
+                contract_diag_window(&parent[lo * f0 * blk..hi * f0 * blk], n, 2, dst)
+            }
+            (Op::TracePairEps { .. }, NodeKernel::Direct) => {
+                let blk = n * n;
+                trace_eps_window(&parent[lo * f0 * blk..hi * f0 * blk], n, dst)
+            }
+            (Op::ExtractDiagonals { .. }, NodeKernel::Gather { offs })
+            | (Op::PermutedExtract { .. }, NodeKernel::Gather { offs }) => {
+                gather_window(parent, &offs[lo * f0..hi * f0], dst)
+            }
+            (Op::PermutedContract { .. }, NodeKernel::GatherContract { base, dstride }) => {
+                gather_contract_window(parent, n, &base[lo * f0..hi * f0], *dstride, dst)
+            }
+            (Op::PermutedTracePairEps { .. }, NodeKernel::GatherTraceEps { base, sa, sb }) => {
+                gather_eps_trace_window(parent, n, &base[lo * f0..hi * f0], *sa, *sb, dst)
+            }
+            _ => unreachable!("tile plan pivot out of sync with kernel table"),
+        }
+    }
+
+    /// An interior (slab-local) reduction over one stage-buffer window.
+    fn local_window<S: Scalar>(&self, i: usize, src: &[S], dst: &mut [S]) {
+        let n = self.n;
+        match &self.nodes[i].op {
+            Op::ContractDiagonal { m, .. } => contract_diag_window(src, n, *m, dst),
+            Op::TracePair { .. } => contract_diag_window(src, n, 2, dst),
+            Op::TracePairEps { .. } => trace_eps_window(src, n, dst),
+            _ => unreachable!("tile plan interior op must be slab-local"),
+        }
+    }
+
+    /// Parallel twin of [`LayerSchedule::stream_item`]: the tiles become
+    /// work-stealing tasks on the process-wide executor pool, each with
+    /// its own pooled-arena stage buffers. Tiles write disjoint `out`
+    /// slabs and each tile's arithmetic is independent of scheduling, so
+    /// the result is bitwise equal to the sequential stream regardless of
+    /// worker count or interleaving.
+    fn stream_item_par<S: Scalar>(
+        &self,
+        plan: &TilePlan,
+        span: usize,
+        parent: &[S],
+        out: &mut [S],
+    ) {
+        let f0 = plan.factors[0];
+        let f1 = (plan.segment.len() >= 3).then(|| plan.factors[1]);
+        let tasks: Vec<_> = out
+            .chunks_mut(span)
+            .enumerate()
+            .map(|(ti, chunk)| {
+                let lo = ti * span;
+                move || {
+                    let mut arena = PooledArenaOf::<S>::get();
+                    let mut stage_a = arena.acquire_raw(span * f0);
+                    let mut stage_b = f1.map(|f| arena.acquire_raw(span * f));
+                    self.stream_tile(
+                        plan,
+                        lo,
+                        lo + chunk.len(),
+                        parent,
+                        &mut stage_a,
+                        stage_b.as_deref_mut(),
+                        chunk,
+                    );
+                    if let Some(b) = stage_b {
+                        arena.release_raw(b);
+                    }
+                    arena.release_raw(stage_a);
+                }
+            })
+            .collect();
+        crate::util::executor::global().join_all(tasks);
+    }
+
     /// Compute (recursively) every not-yet-materialised node on the chain
     /// ending at `src`, drawing output buffers from the arena and writing
-    /// them with the write-once `_into` primitives.
+    /// them with the write-once `_into` primitives. Under a tiled
+    /// [`TileMode`], a node holding an over-budget [`TilePlan`] is filled
+    /// by streaming its whole segment tile by tile instead — its interior
+    /// run nodes are never materialised (they have no other consumers, so
+    /// `release_chain`'s `take()` on their empty slots stays a no-op and
+    /// the ref-count walk is unchanged).
     fn materialize<S: Scalar>(
         &self,
         src: Src,
@@ -2687,6 +3401,7 @@ impl LayerSchedule {
         bufs: &mut [Option<TensorOf<S>>],
         arena: &mut ScratchArenaOf<S>,
         moved: &mut u64,
+        mode: TileMode,
     ) {
         let Src::Node(i) = src else {
             return;
@@ -2694,8 +3409,51 @@ impl LayerSchedule {
         if bufs[i].is_some() {
             return;
         }
+        if mode != TileMode::Off {
+            if let Some(plan) = &self.tiling[i] {
+                let span = self.tile_span::<S>(plan);
+                if span < plan.out_len {
+                    let pivot_src = self.nodes[plan.segment[0]].op.src();
+                    self.materialize(pivot_src, v, bufs, arena, moved, mode);
+                    let mut out = arena.acquire(self.n, self.nodes[i].order);
+                    if mode == TileMode::Par {
+                        let parent = self.resolve(pivot_src, v, bufs);
+                        self.stream_item_par(plan, span, &parent.data, &mut out.data);
+                    } else {
+                        let mut stage_a = arena.acquire_raw(span * plan.factors[0]);
+                        let mut stage_b = (plan.segment.len() >= 3)
+                            .then(|| arena.acquire_raw(span * plan.factors[1]));
+                        {
+                            let parent = self.resolve(pivot_src, v, bufs);
+                            self.stream_item(
+                                plan,
+                                span,
+                                &parent.data,
+                                &mut stage_a,
+                                stage_b.as_deref_mut(),
+                                &mut out.data,
+                            );
+                        }
+                        if let Some(b) = stage_b {
+                            arena.release_raw(b);
+                        }
+                        arena.release_raw(stage_a);
+                    }
+                    // Accounting parity with the untiled walk: the
+                    // streamed run still executed every segment node and
+                    // moved the same modelled bytes.
+                    for &si in &plan.segment {
+                        *moved = moved.saturating_add(node_bytes::<S>(&self.nodes[si].cost, 1));
+                    }
+                    EXECUTED_NODES.fetch_add(plan.segment.len() as u64, Ordering::Relaxed);
+                    TILED_CHAINS.fetch_add(1, Ordering::Relaxed);
+                    bufs[i] = Some(out);
+                    return;
+                }
+            }
+        }
         let parent_src = self.nodes[i].op.src();
-        self.materialize(parent_src, v, bufs, arena, moved);
+        self.materialize(parent_src, v, bufs, arena, moved, mode);
         let mut out = arena.acquire(self.n, self.nodes[i].order);
         {
             let parent = self.resolve(parent_src, v, bufs);

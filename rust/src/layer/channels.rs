@@ -239,7 +239,8 @@ impl ChannelEquivariantLinear {
                     *slot = term.weights[o * self.c_in + i];
                 }
             }
-            self.schedule.execute_multi(x_t, &rows, &mut out, &mut arena)?;
+            self.schedule
+                .execute_multi_tiled(x_t, &rows, &mut out, &mut arena)?;
         }
         let one = TensorOf::from_vec(self.n, 0, vec![S::ONE])?;
         for (plan, mus) in &self.bias_terms {
@@ -285,7 +286,7 @@ impl ChannelEquivariantLinear {
                 }
             }
             self.schedule
-                .execute_batch_multi(&xb, &rows, &mut outs, &mut arena)?;
+                .execute_batch_multi_tiled(&xb, &rows, &mut outs, &mut arena)?;
         }
         // Bias: each basis tensor F(b)(1) is materialised once per batch
         // and broadcast-added to every item.
@@ -357,7 +358,7 @@ impl ChannelEquivariantLinear {
         for o in 0..self.c_out {
             let channel: Vec<&TensorOf<S>> = grad_out.iter().map(|g| &g[o]).collect();
             let gb = BatchTensorOf::pack_refs(&channel)?;
-            self.backward_schedule.execute_batch_map(&gb, &mut arena, |ti, bt| {
+            self.backward_schedule.execute_batch_map_tiled(&gb, &mut arena, |ti, bt| {
                 let term = &self.terms[ti];
                 for b in 0..batch {
                     let t = bt.item(b);
@@ -413,7 +414,7 @@ impl ChannelEquivariantLinear {
             // gradient: every bt = F(dᵀ) g shares its permute/contraction
             // prefix with its neighbours and is handed out of a reused
             // scratch buffer, then fanned across the input channels.
-            self.backward_schedule.execute_map(g, &mut arena, |ti, bt| {
+            self.backward_schedule.execute_map_tiled(g, &mut arena, |ti, bt| {
                 let term = &self.terms[ti];
                 for (i, x_t) in x.iter().enumerate() {
                     let w = term.weights[o * self.c_in + i];

@@ -225,7 +225,8 @@ impl EquivariantLinear {
         self.check_input(v)?;
         let mut out = TensorOf::zeros(self.n, self.l);
         let mut arena = PooledArenaOf::<S>::get();
-        self.schedule.execute(v, &self.coeffs, &mut out, &mut arena)?;
+        self.schedule
+            .execute_tiled_parallel(v, &self.coeffs, &mut out, &mut arena)?;
         self.accumulate_bias(&mut out)?;
         Ok(out)
     }
@@ -392,7 +393,7 @@ impl EquivariantLinear {
             let mut ob = BatchTensorOf::zeros(self.n, self.l, vb.batch());
             let mut arena = PooledArenaOf::<S>::get();
             self.schedule
-                .execute_batch(&vb, &self.coeffs, &mut ob, &mut arena)?;
+                .execute_batch_tiled(&vb, &self.coeffs, &mut ob, &mut arena)?;
             if let Some(b) = &bias {
                 ob.axpy_broadcast(1.0, b);
             }
@@ -434,7 +435,7 @@ impl EquivariantLinear {
         let mut out = BatchTensorOf::zeros(self.n, self.l, v.batch());
         let mut arena = PooledArenaOf::<S>::get();
         self.schedule
-            .execute_batch(v, &self.coeffs, &mut out, &mut arena)?;
+            .execute_batch_tiled(v, &self.coeffs, &mut out, &mut arena)?;
         if let Some(b) = bias {
             out.axpy_broadcast(1.0, b);
         }
@@ -533,7 +534,7 @@ impl EquivariantLinear {
         let batch = v.batch();
         let mut grad_v = BatchTensorOf::zeros(self.n, self.k, batch);
         let mut arena = PooledArenaOf::<S>::get();
-        self.backward_schedule.execute_batch_map(g, &mut arena, |i, bt| {
+        self.backward_schedule.execute_batch_map_tiled(g, &mut arena, |i, bt| {
             // bt = F(dᵀ) g for every item of the batch (a reused scratch
             // buffer).
             let sign = self.terms[i].adjoint_sign;
@@ -604,7 +605,7 @@ impl EquivariantLinear {
             let mut partial = TensorOf::zeros(self.n, self.l);
             let mut arena = PooledArenaOf::<S>::get();
             self.schedule
-                .execute_subset(v, &self.coeffs, classes, &mut partial, &mut arena)?;
+                .execute_subset_tiled(v, &self.coeffs, classes, &mut partial, &mut arena)?;
             Ok(partial)
         });
         let mut out = TensorOf::zeros(self.n, self.l);
@@ -637,7 +638,7 @@ impl EquivariantLinear {
                 let mut local_coeffs = vec![0.0; self.coeffs.len()];
                 let mut arena = PooledArenaOf::<S>::get();
                 self.backward_schedule
-                    .execute_map_subset(g, terms, &mut arena, |i, bt| {
+                    .execute_map_subset_tiled(g, terms, &mut arena, |i, bt| {
                         let sign = self.terms[i].adjoint_sign;
                         local_coeffs[i] += sign * bt.dot(v);
                         let lambda = self.coeffs[i];
@@ -700,7 +701,7 @@ impl EquivariantLinear {
     ) -> Result<TensorOf<S>> {
         let mut grad_v = TensorOf::zeros(self.n, self.k);
         let mut arena = PooledArenaOf::<S>::get();
-        self.backward_schedule.execute_map(g, &mut arena, |i, bt| {
+        self.backward_schedule.execute_map_tiled(g, &mut arena, |i, bt| {
             // bt = F(dᵀ) g for term i (a reused scratch buffer).
             let signed = self.terms[i].adjoint_sign;
             // ∂L/∂λ_i = sign · ⟨F(dᵀ) g, v⟩

@@ -206,6 +206,21 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     }
     let mut coord = Coordinator::new(cfg.server.clone());
     println!("serving precision: {}", cfg.model.precision);
+    // Fix the tiled-walk cache budget before any schedule compiles: the
+    // plan cache keys schedules by the resolved budget, so setting it
+    // here means every route serves tiling plans sized to it.
+    equidiag::fastmult::set_tile_budget(cfg.model.tile_bytes);
+    match equidiag::fastmult::resolve_tile_budget() {
+        0 => println!("tile budget: off (tile_bytes = 0)"),
+        b => println!(
+            "tile budget: {b} bytes ({})",
+            if cfg.model.tile_bytes.is_some() {
+                "from config"
+            } else {
+                "auto-detected cache size"
+            }
+        ),
+    }
     coord.register(
         "net",
         ModelKind::net_with_precision(net, cfg.model.precision),
@@ -277,6 +292,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     println!(
         "kernels: measured bytes moved {}  index scratch {} allocs / {} reuses",
         snap.measured_bytes_moved, snap.arena_index_allocations, snap.arena_index_reuses
+    );
+    println!(
+        "arena: peak resident {} bytes  tiled chains walked {}",
+        snap.arena_peak_bytes, snap.tiled_chains
     );
     println!(
         "executor: {} workers  {} tasks  {} steals  {} parks  {} injector pushes",

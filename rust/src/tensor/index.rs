@@ -69,9 +69,34 @@ impl MultiIndexIter {
     }
 }
 
+/// Disjoint `[lo, hi)` slabs of width `span` covering `0..len` in order
+/// (the last slab is ragged when `span ∤ len`). The tiled schedule walk
+/// iterates these per chain; pulling the arithmetic into one helper
+/// keeps the walk, its tests and the benches counting identical slabs.
+pub fn tile_spans(len: usize, span: usize) -> impl Iterator<Item = (usize, usize)> {
+    debug_assert!(span >= 1);
+    (0..len).step_by(span.max(1)).map(move |lo| (lo, (lo + span).min(len)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tile_spans_cover_disjointly() {
+        for (len, span) in [(10usize, 3usize), (9, 3), (1, 4), (8, 8), (7, 1)] {
+            let spans: Vec<_> = tile_spans(len, span).collect();
+            let mut expect_lo = 0usize;
+            for &(lo, hi) in &spans {
+                assert_eq!(lo, expect_lo);
+                assert!(hi > lo && hi <= len);
+                assert!(hi - lo <= span);
+                expect_lo = hi;
+            }
+            assert_eq!(expect_lo, len, "slabs must cover 0..{len}");
+        }
+        assert_eq!(tile_spans(0, 4).count(), 0);
+    }
 
     #[test]
     fn flat_roundtrip() {

@@ -37,7 +37,7 @@ mod ops;
 mod scalar;
 
 pub use batch::{BatchTensor, BatchTensorOf};
-pub use index::{flat_index, unflat_index, MultiIndexIter};
+pub use index::{flat_index, tile_spans, unflat_index, MultiIndexIter};
 pub use scalar::{Precision, Scalar};
 // Lane-chunked elementwise helpers and the ramp detector, shared with the
 // schedule executor's scatter fast paths.
@@ -48,6 +48,13 @@ pub(crate) use scalar::{axpy_slice, ramp_base, scale_slice};
 pub(crate) use ops::{
     axis_strides, group_diag_offsets, levi_civita_entries, permute_block_map, permute_dst_map,
     permuted_gather_base, permuted_group_diag_offsets, scatter_diag_dsts,
+};
+// Tile-windowed kernel slabs for the cache-blocked streaming walk (see
+// `docs/tiled_execution.md`): each replays the exact per-element loop body
+// of its full kernel over one `[lo, hi)` output window.
+pub(crate) use ops::{
+    contract_diag_window, gather_contract_window, gather_eps_trace_window, gather_window,
+    permute_blocks_window, trace_eps_window,
 };
 
 use crate::error::{Error, Result};

@@ -1387,6 +1387,126 @@ pub(crate) fn scatter_diag_dsts(
     dsts
 }
 
+// ---------------------------------------------------------------------
+// Tile-windowed kernel variants
+//
+// The tiled schedule walk (`fastmult::schedule`) streams one output slab
+// `[lo, hi)` of a chain at a time through tile-sized scratch buffers.
+// Each windowed kernel below is its full-tensor counterpart restricted
+// to one such slab: the loop body, accumulation order and stride
+// arithmetic are copied verbatim from the full kernel, only the outer
+// iteration range shrinks — so concatenating the slabs reproduces the
+// full output **bitwise**. They operate on raw slices because the
+// slab buffers are plain `ScratchArena` allocations, not `Tensor`s.
+// ---------------------------------------------------------------------
+
+/// Windowed [`Tensor::contract_trailing_diagonal_into`] (covers the pair
+/// trace as `m = 2`): `src` is exactly the output slab's input window —
+/// `src.len() == out.len() · n^m` — and local offsets match the full
+/// kernel's because the contracted block is trailing and contiguous.
+pub(crate) fn contract_diag_window<S: Scalar>(src: &[S], n: usize, m: usize, out: &mut [S]) {
+    let block = n.pow(m as u32);
+    let dstride: usize = (0..m).map(|a| n.pow(a as u32)).sum();
+    debug_assert_eq!(src.len(), out.len() * block);
+    for (o, slot) in out.iter_mut().enumerate() {
+        let mut s = S::ZERO;
+        let mut off = o * block;
+        for _ in 0..n {
+            s += src[off];
+            off += dstride;
+        }
+        *slot = s;
+    }
+}
+
+/// Windowed [`Tensor::trace_trailing_pair_eps_into`]: `src.len() ==
+/// out.len() · n²`, same interleaved ε pairing and summation order.
+pub(crate) fn trace_eps_window<S: Scalar>(src: &[S], n: usize, out: &mut [S]) {
+    debug_assert_eq!(n % 2, 0, "Sp(n) requires even n");
+    let block = n * n;
+    debug_assert_eq!(src.len(), out.len() * block);
+    for (o, slot) in out.iter_mut().enumerate() {
+        let base = o * block;
+        let mut s = S::ZERO;
+        for i in 0..n / 2 {
+            let a = 2 * i;
+            let b = 2 * i + 1;
+            s += src[base + a * n + b] - src[base + b * n + a];
+        }
+        *slot = s;
+    }
+}
+
+/// Windowed blocked-permute replay: fill `out` with the source blocks
+/// named by `map` (a contiguous slice of the full block map; offsets
+/// are absolute into `src`). One `copy_from_slice` per block, exactly
+/// like [`Tensor::permute_blocks_into`].
+pub(crate) fn permute_blocks_window<S: Scalar>(
+    src: &[S],
+    map: &[usize],
+    block: usize,
+    out: &mut [S],
+) {
+    debug_assert_eq!(map.len() * block, out.len());
+    let mut d = 0usize;
+    for &s in map {
+        out[d..d + block].copy_from_slice(&src[s..s + block]);
+        d += block;
+    }
+}
+
+/// Windowed pure-gather replay (`offs` is a contiguous slice of the
+/// full offset table, absolute into `src`).
+pub(crate) fn gather_window<S: Scalar>(src: &[S], offs: &[usize], out: &mut [S]) {
+    debug_assert_eq!(offs.len(), out.len());
+    for (slot, &s) in out.iter_mut().zip(offs) {
+        *slot = src[s];
+    }
+}
+
+/// Windowed [`Tensor::gather_contract_with`] (`base` is a contiguous
+/// slice of the full outer-offset table, absolute into `src`).
+pub(crate) fn gather_contract_window<S: Scalar>(
+    src: &[S],
+    n: usize,
+    base: &[usize],
+    dstride: usize,
+    out: &mut [S],
+) {
+    debug_assert_eq!(base.len(), out.len());
+    for (slot, &b) in out.iter_mut().zip(base) {
+        let mut s = S::ZERO;
+        let mut off = b;
+        for _ in 0..n {
+            s += src[off];
+            off += dstride;
+        }
+        *slot = s;
+    }
+}
+
+/// Windowed [`Tensor::gather_eps_trace_with`] (`base` sliced like
+/// [`gather_contract_window`]).
+pub(crate) fn gather_eps_trace_window<S: Scalar>(
+    src: &[S],
+    n: usize,
+    base: &[usize],
+    sa: usize,
+    sb: usize,
+    out: &mut [S],
+) {
+    debug_assert_eq!(base.len(), out.len());
+    for (slot, &b) in out.iter_mut().zip(base) {
+        let mut s = S::ZERO;
+        for i in 0..n / 2 {
+            let p = 2 * i;
+            let q = 2 * i + 1;
+            s += src[b + p * sa + q * sb] - src[b + q * sa + p * sb];
+        }
+        *slot = s;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::index::unflat_index;
@@ -1795,5 +1915,99 @@ mod tests {
         // identity has sign +1
         let id = ps.iter().find(|(p, _)| p == &vec![0, 1, 2, 3]).unwrap();
         assert_eq!(id.1, 1.0);
+    }
+
+    /// Every windowed kernel, run slab by slab, must reproduce its
+    /// full-tensor counterpart bitwise (slab width deliberately not a
+    /// divisor of the output length to exercise the ragged tail).
+    #[test]
+    fn windowed_kernels_match_full_bitwise() {
+        let n = 3;
+        let mut rng = Rng::new(0x71);
+        let slabs = |len: usize, width: usize| -> Vec<(usize, usize)> {
+            (0..len)
+                .step_by(width)
+                .map(|lo| (lo, (lo + width).min(len)))
+                .collect()
+        };
+
+        // contract_diag_window vs contract_trailing_diagonal (m = 2).
+        let t = Tensor::random(n, 4, &mut rng);
+        let full = t.contract_trailing_diagonal(2);
+        let mut got = vec![0.0f64; full.len()];
+        for (lo, hi) in slabs(full.len(), 4) {
+            let block = n * n;
+            contract_diag_window(
+                &t.data[lo * block..hi * block],
+                n,
+                2,
+                &mut got[lo..hi],
+            );
+        }
+        assert_eq!(got, full.data);
+
+        // trace_eps_window vs trace_trailing_pair_eps (even n).
+        let t = Tensor::random(4, 3, &mut rng);
+        let full = t.trace_trailing_pair_eps();
+        let mut got = vec![0.0f64; full.len()];
+        for (lo, hi) in slabs(full.len(), 3) {
+            trace_eps_window(&t.data[lo * 16..hi * 16], 4, &mut got[lo..hi]);
+        }
+        assert_eq!(got, full.data);
+
+        // permute_blocks_window vs permute_axes via the block map.
+        let t = Tensor::random(n, 4, &mut rng);
+        let axes = [2usize, 0, 1, 3];
+        let (map, block) = permute_block_map(n, 4, &axes);
+        let full = t.permute_axes(&axes);
+        let mut got = vec![0.0f64; full.len()];
+        for (lo, hi) in slabs(map.len(), 5) {
+            permute_blocks_window(
+                &t.data,
+                &map[lo..hi],
+                block,
+                &mut got[lo * block..hi * block],
+            );
+        }
+        assert_eq!(got, full.data);
+
+        // gather_window vs extract_group_diagonals via the offset table.
+        let groups = [2usize, 2];
+        let offs = group_diag_offsets(n, 4, &groups);
+        let full = t.extract_group_diagonals(&groups);
+        let mut got = vec![0.0f64; full.len()];
+        for (lo, hi) in slabs(offs.len(), 4) {
+            gather_window(&t.data, &offs[lo..hi], &mut got[lo..hi]);
+        }
+        assert_eq!(got, full.data);
+
+        // gather_contract_window vs contract_permuted_diagonal_into.
+        let axes = [1usize, 3, 0, 2];
+        let m = 2;
+        let mut full = Tensor::zeros(n, 2);
+        t.contract_permuted_diagonal_into(&axes, m, &mut full);
+        let strides = axis_strides(n, 4);
+        let dstride: usize = axes[4 - m..].iter().map(|&a| strides[a]).sum();
+        let base = permuted_gather_base(n, 4, &axes, m);
+        let mut got = vec![0.0f64; full.len()];
+        for (lo, hi) in slabs(base.len(), 4) {
+            gather_contract_window(&t.data, n, &base[lo..hi], dstride, &mut got[lo..hi]);
+        }
+        assert_eq!(got, full.data);
+
+        // gather_eps_trace_window vs trace_permuted_pair_eps_into.
+        let t = Tensor::random(4, 3, &mut rng);
+        let axes = [2usize, 0, 1];
+        let mut full = Tensor::zeros(4, 1);
+        t.trace_permuted_pair_eps_into(&axes, &mut full);
+        let strides = axis_strides(4, 3);
+        let sa = strides[axes[1]];
+        let sb = strides[axes[2]];
+        let base = permuted_gather_base(4, 3, &axes, 2);
+        let mut got = vec![0.0f64; full.len()];
+        for (lo, hi) in slabs(base.len(), 3) {
+            gather_eps_trace_window(&t.data, 4, &base[lo..hi], sa, sb, &mut got[lo..hi]);
+        }
+        assert_eq!(got, full.data);
     }
 }

@@ -1,0 +1,126 @@
+//! Hardware cache-topology probe.
+//!
+//! The tiled schedule walk (`fastmult::schedule`) sizes its streaming
+//! tiles to the last-level *private* cache so every interior
+//! intermediate of a chain stays resident while the tile flows through
+//! it. That budget comes from here: a once-per-process probe of the
+//! OS-reported cache hierarchy with an environment override for
+//! benchmarking and a conservative compile-time fallback when the
+//! platform exposes nothing.
+//!
+//! Resolution order (first hit wins), cached in a `OnceLock` like
+//! [`crate::util::executor::hw_threads`]:
+//!
+//! 1. `PALLAS_CACHE_BYTES` — explicit byte count (plain integer, or
+//!    with a `K`/`M` suffix); `0` or garbage falls through.
+//! 2. Linux sysfs: `/sys/devices/system/cpu/cpu0/cache/index*/size`,
+//!    preferring the level-2 `Unified`/`Data` cache (the per-core
+//!    private cache on every current x86/ARM server part), falling
+//!    back to the largest data-carrying cache reported.
+//! 3. [`DEFAULT_CACHE_BYTES`] (256 KiB) — small enough to be L2-safe
+//!    on anything made this century, large enough that small shapes
+//!    never tile.
+
+use std::sync::OnceLock;
+
+/// Conservative fallback when the platform reports nothing: 256 KiB,
+/// the smallest per-core L2 on currently common server hardware.
+pub const DEFAULT_CACHE_BYTES: usize = 256 * 1024;
+
+/// Parse a cache size string: a plain byte count, or an integer with a
+/// trailing `K`/`M` (sysfs writes e.g. `512K`, `8M`; the env override
+/// accepts the same forms). Returns `None` for empty/garbage/zero.
+fn parse_size(s: &str) -> Option<usize> {
+    let t = s.trim();
+    if t.is_empty() {
+        return None;
+    }
+    let (digits, mult) = match t.as_bytes()[t.len() - 1] {
+        b'K' | b'k' => (&t[..t.len() - 1], 1024),
+        b'M' | b'm' => (&t[..t.len() - 1], 1024 * 1024),
+        _ => (t, 1),
+    };
+    let v: usize = digits.trim().parse().ok()?;
+    let bytes = v.checked_mul(mult)?;
+    if bytes == 0 {
+        None
+    } else {
+        Some(bytes)
+    }
+}
+
+/// Probe `/sys/devices/system/cpu/cpu0/cache/index*/` for the level-2
+/// unified/data cache size, falling back to the largest data-carrying
+/// cache listed. Returns `None` off Linux or when sysfs is absent.
+fn sysfs_cache_bytes() -> Option<usize> {
+    let base = std::path::Path::new("/sys/devices/system/cpu/cpu0/cache");
+    let entries = std::fs::read_dir(base).ok()?;
+    let mut level2: Option<usize> = None;
+    let mut largest: Option<usize> = None;
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if !path
+            .file_name()
+            .and_then(|f| f.to_str())
+            .is_some_and(|f| f.starts_with("index"))
+        {
+            continue;
+        }
+        let read = |name: &str| std::fs::read_to_string(path.join(name)).ok();
+        // Instruction caches never hold tensor data; skip them.
+        let ctype = read("type").unwrap_or_default();
+        let ctype = ctype.trim();
+        if ctype != "Unified" && ctype != "Data" {
+            continue;
+        }
+        let Some(size) = read("size").and_then(|s| parse_size(&s)) else {
+            continue;
+        };
+        let level = read("level").and_then(|s| s.trim().parse::<usize>().ok());
+        if level == Some(2) {
+            level2 = Some(level2.map_or(size, |c: usize| c.max(size)));
+        }
+        largest = Some(largest.map_or(size, |c: usize| c.max(size)));
+    }
+    level2.or(largest)
+}
+
+/// Per-core cache budget in bytes, queried once per process (see the
+/// module docs for the resolution order). Always ≥ 1.
+pub fn cache_bytes() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        if let Ok(s) = std::env::var("PALLAS_CACHE_BYTES") {
+            if let Some(bytes) = parse_size(&s) {
+                return bytes;
+            }
+        }
+        sysfs_cache_bytes().unwrap_or(DEFAULT_CACHE_BYTES)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_size_forms() {
+        assert_eq!(parse_size("512"), Some(512));
+        assert_eq!(parse_size("512K"), Some(512 * 1024));
+        assert_eq!(parse_size("512k"), Some(512 * 1024));
+        assert_eq!(parse_size("8M"), Some(8 * 1024 * 1024));
+        assert_eq!(parse_size(" 1024K\n"), Some(1024 * 1024));
+        assert_eq!(parse_size(""), None);
+        assert_eq!(parse_size("0"), None);
+        assert_eq!(parse_size("0K"), None);
+        assert_eq!(parse_size("lots"), None);
+    }
+
+    #[test]
+    fn cache_bytes_is_cached_and_positive() {
+        let a = cache_bytes();
+        let b = cache_bytes();
+        assert!(a >= 1);
+        assert_eq!(a, b);
+    }
+}

@@ -6,6 +6,7 @@
 //! parts of each that the rest of the crate needs (see DESIGN.md §3).
 
 pub mod executor;
+pub mod hw;
 pub mod parallel;
 pub mod prop;
 pub mod rng;

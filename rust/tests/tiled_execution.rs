@@ -1,0 +1,377 @@
+//! Tiled streaming execution (`docs/tiled_execution.md`) must be **bitwise
+//! identical** to the untiled schedule walk on every execute variant: the
+//! windowed kernels replay the exact per-element loop bodies of the full
+//! kernels over disjoint output slabs, so no float is ever computed in a
+//! different order. These tests pin that contract across all four groups,
+//! forward and backward (map) walks, single and batched inputs, and both
+//! scalar types, plus the degenerate paths (under-budget shapes and
+//! `tile_bytes = 0`) that must skip tiling entirely.
+
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use equidiag::diagram::Diagram;
+use equidiag::fastmult::{
+    arena_peak_bytes, arena_stats, exec_stats, reset_arena_peak, Group, LayerSchedule, MultPlan,
+    PooledArenaOf,
+};
+use equidiag::layer::spanning_plans;
+use equidiag::tensor::{BatchTensorOf, Scalar, TensorOf};
+use equidiag::util::Rng;
+
+/// Tile-chain and arena counters are process-global; serialise every test
+/// in this binary so deltas are attributable to the walk under test.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Small enough (8 f64s / 16 f32s) that every chain with a non-trivial
+/// stored node walks multiple tiles at the test shapes below.
+const TINY_BUDGET: usize = 64;
+
+/// The shapes exercised by the bitwise sweep: every group, orders deep
+/// enough (`k >= 3`) that strided fusion leaves slab-local chains for the
+/// tiling planner to pick up.
+fn shapes() -> Vec<(Group, usize, usize, usize)> {
+    vec![
+        (Group::Symmetric, 3, 3, 2),
+        (Group::Symmetric, 4, 3, 1),
+        (Group::Orthogonal, 3, 3, 1),
+        (Group::Orthogonal, 3, 2, 2),
+        // l + k >= n with (l + k - n) even: jellyfish diagrams included.
+        (Group::SpecialOrthogonal, 3, 3, 2),
+        (Group::Symplectic, 4, 3, 1),
+    ]
+}
+
+struct Fixture<S: Scalar> {
+    schedule: LayerSchedule,
+    coeffs: Vec<f64>,
+    v: TensorOf<S>,
+    batch: Vec<TensorOf<S>>,
+    l: usize,
+    n: usize,
+}
+
+fn fixture<S: Scalar>(
+    group: Group,
+    n: usize,
+    k: usize,
+    l: usize,
+    budget: usize,
+    seed: u64,
+) -> Fixture<S> {
+    let plans = spanning_plans(group, n, k, l).unwrap();
+    let schedule = LayerSchedule::compile_budgeted(group, n, k, l, &plans, budget).unwrap();
+    let mut rng = Rng::new(seed);
+    let coeffs = rng.gaussian_vec(plans.len());
+    let v = TensorOf::<S>::random(n, k, &mut rng);
+    let batch = (0..3).map(|_| TensorOf::<S>::random(n, k, &mut rng)).collect();
+    Fixture {
+        schedule,
+        coeffs,
+        v,
+        batch,
+        l,
+        n,
+    }
+}
+
+/// Run every untiled/tiled execute pair on one fixture and assert exact
+/// bitwise equality of the outputs (and of every mapped term buffer).
+fn check_bitwise<S: Scalar>(group: Group, n: usize, k: usize, l: usize, seed: u64) {
+    let fx = fixture::<S>(group, n, k, l, TINY_BUDGET, seed);
+    let sched = &fx.schedule;
+    let mut arena = PooledArenaOf::<S>::get();
+    let label = format!("{group} n={n} k={k} l={l}");
+
+    // Forward: sequential and work-stealing tiled walks against untiled.
+    let mut want = TensorOf::<S>::zeros(fx.n, fx.l);
+    sched.execute(&fx.v, &fx.coeffs, &mut want, &mut arena).unwrap();
+    let mut got = TensorOf::<S>::zeros(fx.n, fx.l);
+    sched
+        .execute_tiled(&fx.v, &fx.coeffs, &mut got, &mut arena)
+        .unwrap();
+    assert_eq!(want.data, got.data, "execute_tiled diverged: {label}");
+    let mut got_par = TensorOf::<S>::zeros(fx.n, fx.l);
+    sched
+        .execute_tiled_parallel(&fx.v, &fx.coeffs, &mut got_par, &mut arena)
+        .unwrap();
+    assert_eq!(
+        want.data, got_par.data,
+        "execute_tiled_parallel diverged: {label}"
+    );
+
+    // Subset walks, partition by partition (the parallel-forward split).
+    for classes in sched.cost_partitions(3) {
+        let mut want = TensorOf::<S>::zeros(fx.n, fx.l);
+        sched
+            .execute_subset(&fx.v, &fx.coeffs, &classes, &mut want, &mut arena)
+            .unwrap();
+        let mut got = TensorOf::<S>::zeros(fx.n, fx.l);
+        sched
+            .execute_subset_tiled(&fx.v, &fx.coeffs, &classes, &mut got, &mut arena)
+            .unwrap();
+        assert_eq!(want.data, got.data, "execute_subset_tiled diverged: {label}");
+    }
+
+    // Backward-style map walks: every term's buffer must match exactly.
+    let mut want_terms: Vec<(usize, Vec<S>)> = Vec::new();
+    sched
+        .execute_map(&fx.v, &mut arena, |i, bt| {
+            want_terms.push((i, bt.data.clone()));
+            Ok(())
+        })
+        .unwrap();
+    let mut got_terms: Vec<(usize, Vec<S>)> = Vec::new();
+    sched
+        .execute_map_tiled(&fx.v, &mut arena, |i, bt| {
+            got_terms.push((i, bt.data.clone()));
+            Ok(())
+        })
+        .unwrap();
+    assert_eq!(want_terms, got_terms, "execute_map_tiled diverged: {label}");
+
+    // Multi-row walks (the channel layer's fan-out).
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let rows: Vec<Vec<f64>> = (0..2).map(|_| rng.gaussian_vec(fx.coeffs.len())).collect();
+    let mut want_outs: Vec<TensorOf<S>> =
+        (0..2).map(|_| TensorOf::<S>::zeros(fx.n, fx.l)).collect();
+    sched
+        .execute_multi(&fx.v, &rows, &mut want_outs, &mut arena)
+        .unwrap();
+    let mut got_outs: Vec<TensorOf<S>> =
+        (0..2).map(|_| TensorOf::<S>::zeros(fx.n, fx.l)).collect();
+    sched
+        .execute_multi_tiled(&fx.v, &rows, &mut got_outs, &mut arena)
+        .unwrap();
+    for (w, g) in want_outs.iter().zip(&got_outs) {
+        assert_eq!(w.data, g.data, "execute_multi_tiled diverged: {label}");
+    }
+
+    // Batched walks: pack three items and compare every variant.
+    let refs: Vec<&TensorOf<S>> = fx.batch.iter().collect();
+    let vb = BatchTensorOf::pack_refs(&refs).unwrap();
+    let mut want_b = BatchTensorOf::<S>::zeros(fx.n, fx.l, vb.batch());
+    sched
+        .execute_batch(&vb, &fx.coeffs, &mut want_b, &mut arena)
+        .unwrap();
+    let mut got_b = BatchTensorOf::<S>::zeros(fx.n, fx.l, vb.batch());
+    sched
+        .execute_batch_tiled(&vb, &fx.coeffs, &mut got_b, &mut arena)
+        .unwrap();
+    for b in 0..vb.batch() {
+        assert_eq!(
+            want_b.item(b),
+            got_b.item(b),
+            "execute_batch_tiled diverged: {label} item {b}"
+        );
+    }
+
+    let mut want_bm: Vec<(usize, Vec<S>)> = Vec::new();
+    sched
+        .execute_batch_map(&vb, &mut arena, |i, bt| {
+            for b in 0..bt.batch() {
+                want_bm.push((i, bt.item(b).to_vec()));
+            }
+            Ok(())
+        })
+        .unwrap();
+    let mut got_bm: Vec<(usize, Vec<S>)> = Vec::new();
+    sched
+        .execute_batch_map_tiled(&vb, &mut arena, |i, bt| {
+            for b in 0..bt.batch() {
+                got_bm.push((i, bt.item(b).to_vec()));
+            }
+            Ok(())
+        })
+        .unwrap();
+    assert_eq!(want_bm, got_bm, "execute_batch_map_tiled diverged: {label}");
+
+    let mut want_bo: Vec<BatchTensorOf<S>> = (0..2)
+        .map(|_| BatchTensorOf::<S>::zeros(fx.n, fx.l, vb.batch()))
+        .collect();
+    sched
+        .execute_batch_multi(&vb, &rows, &mut want_bo, &mut arena)
+        .unwrap();
+    let mut got_bo: Vec<BatchTensorOf<S>> = (0..2)
+        .map(|_| BatchTensorOf::<S>::zeros(fx.n, fx.l, vb.batch()))
+        .collect();
+    sched
+        .execute_batch_multi_tiled(&vb, &rows, &mut got_bo, &mut arena)
+        .unwrap();
+    for (w, g) in want_bo.iter().zip(&got_bo) {
+        for b in 0..vb.batch() {
+            assert_eq!(
+                w.item(b),
+                g.item(b),
+                "execute_batch_multi_tiled diverged: {label} item {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tiled_matches_untiled_bitwise_f64() {
+    let _g = lock();
+    for (i, (group, n, k, l)) in shapes().into_iter().enumerate() {
+        check_bitwise::<f64>(group, n, k, l, 0x71AE + i as u64);
+    }
+}
+
+#[test]
+fn tiled_matches_untiled_bitwise_f32() {
+    let _g = lock();
+    for (i, (group, n, k, l)) in shapes().into_iter().enumerate() {
+        check_bitwise::<f32>(group, n, k, l, 0xF32 + i as u64);
+    }
+}
+
+/// A single (1,3)-partition diagram whose Step-1 runs two consecutive
+/// single-axis contractions before the transfer: `{o1,i1}, {i2}, {i3}`.
+/// Compiled alone (no cross-diagram CSE) this is a guaranteed slab-local
+/// chain ending at an order-1 node, so streaming engages deterministically
+/// under a tiny budget.
+fn chain_schedule(n: usize, budget: usize) -> LayerSchedule {
+    let d = Diagram::from_blocks(1, 3, vec![vec![0, 1], vec![2], vec![3]]).unwrap();
+    let plan = Arc::new(MultPlan::new(Group::Symmetric, &d, n).unwrap());
+    LayerSchedule::compile_budgeted(Group::Symmetric, n, 3, 1, &[plan], budget).unwrap()
+}
+
+#[test]
+fn tiny_budget_actually_streams_chains() {
+    let _g = lock();
+    let n = 4;
+    let sched = chain_schedule(n, TINY_BUDGET);
+    assert!(
+        sched.stats().tiled_chains > 0,
+        "the planner must tile a two-contraction chain"
+    );
+    assert_eq!(sched.tile_budget_bytes(), TINY_BUDGET);
+    let mut rng = Rng::new(7);
+    let v = TensorOf::<f64>::random(n, 3, &mut rng);
+    let mut arena = PooledArenaOf::<f64>::get();
+    let mut want = TensorOf::<f64>::zeros(n, 1);
+    sched.execute(&v, &[1.0], &mut want, &mut arena).unwrap();
+    let before = exec_stats().tiled_chains;
+    let mut got = TensorOf::<f64>::zeros(n, 1);
+    sched.execute_tiled(&v, &[1.0], &mut got, &mut arena).unwrap();
+    assert!(
+        exec_stats().tiled_chains > before,
+        "a {TINY_BUDGET}-byte budget must stream the chain tile by tile"
+    );
+    assert_eq!(want.data, got.data, "streamed chain diverged from untiled");
+}
+
+#[test]
+fn under_budget_shapes_skip_tiling_entirely() {
+    let _g = lock();
+    // A 1 MiB budget dwarfs every n=4 k=3 intermediate, so the tiled entry
+    // points must fall through to the plain walk and pay zero overhead.
+    let fx = fixture::<f64>(Group::Symmetric, 4, 3, 2, 1 << 20, 11);
+    let mut arena = PooledArenaOf::<f64>::get();
+    let mut want = TensorOf::<f64>::zeros(fx.n, fx.l);
+    fx.schedule
+        .execute(&fx.v, &fx.coeffs, &mut want, &mut arena)
+        .unwrap();
+    let before = exec_stats().tiled_chains;
+    let mut got = TensorOf::<f64>::zeros(fx.n, fx.l);
+    fx.schedule
+        .execute_tiled(&fx.v, &fx.coeffs, &mut got, &mut arena)
+        .unwrap();
+    assert_eq!(want.data, got.data);
+    assert_eq!(
+        exec_stats().tiled_chains,
+        before,
+        "an under-budget shape must not walk any tiles"
+    );
+}
+
+#[test]
+fn zero_budget_disables_streaming() {
+    let _g = lock();
+    let fx = fixture::<f64>(Group::Symmetric, 4, 3, 2, 0, 13);
+    let mut arena = PooledArenaOf::<f64>::get();
+    let mut want = TensorOf::<f64>::zeros(fx.n, fx.l);
+    fx.schedule
+        .execute(&fx.v, &fx.coeffs, &mut want, &mut arena)
+        .unwrap();
+    let before = exec_stats().tiled_chains;
+    let mut got = TensorOf::<f64>::zeros(fx.n, fx.l);
+    fx.schedule
+        .execute_tiled(&fx.v, &fx.coeffs, &mut got, &mut arena)
+        .unwrap();
+    assert_eq!(want.data, got.data);
+    assert_eq!(exec_stats().tiled_chains, before, "budget 0 must mean off");
+}
+
+#[test]
+fn warm_tiled_walk_allocates_nothing() {
+    let _g = lock();
+    // Use the deterministic streaming chain so the warm path exercises the
+    // stage ping-pong buffers, then a full spanning-set schedule so node
+    // buffers and index scratch are covered too.
+    let chain = chain_schedule(4, TINY_BUDGET);
+    let fx = fixture::<f64>(Group::Symmetric, 4, 3, 2, TINY_BUDGET, 17);
+    let mut arena = PooledArenaOf::<f64>::get();
+    let mut out1 = TensorOf::<f64>::zeros(4, 1);
+    let mut out = TensorOf::<f64>::zeros(fx.n, fx.l);
+    // Warm the arena: stage buffers, node buffers, and index scratch all
+    // reach steady-state capacity within a few walks.
+    for _ in 0..3 {
+        chain.execute_tiled(&fx.v, &[1.0], &mut out1, &mut arena).unwrap();
+        fx.schedule
+            .execute_tiled(&fx.v, &fx.coeffs, &mut out, &mut arena)
+            .unwrap();
+    }
+    let warm = arena_stats();
+    for _ in 0..5 {
+        chain.execute_tiled(&fx.v, &[1.0], &mut out1, &mut arena).unwrap();
+        fx.schedule
+            .execute_tiled(&fx.v, &fx.coeffs, &mut out, &mut arena)
+            .unwrap();
+    }
+    let after = arena_stats();
+    assert_eq!(
+        warm.allocations, after.allocations,
+        "warm tiled walks must reuse every stage/node buffer"
+    );
+    assert_eq!(
+        warm.index_allocations, after.index_allocations,
+        "warm tiled walks must reuse all index scratch"
+    );
+}
+
+#[test]
+fn tiled_peak_arena_at_least_halves_on_chain_heavy_shapes() {
+    let _g = lock();
+    // A three-contraction chain at n=6: the untiled walk must hold the
+    // order-3 (216-element) and order-2 (36-element) intermediates at
+    // once, while the tiled walk holds only span-sized stage slabs plus
+    // the order-1 output.
+    let n = 6;
+    let d = Diagram::from_blocks(1, 4, vec![vec![0, 1], vec![2], vec![3], vec![4]]).unwrap();
+    let plan = Arc::new(MultPlan::new(Group::Symmetric, &d, n).unwrap());
+    let sched =
+        LayerSchedule::compile_budgeted(Group::Symmetric, n, 4, 1, &[plan], 512).unwrap();
+    assert!(sched.stats().tiled_chains > 0, "chain must be tiled");
+    let mut rng = Rng::new(19);
+    let v = TensorOf::<f64>::random(n, 4, &mut rng);
+    let mut arena = PooledArenaOf::<f64>::get();
+    let mut out = TensorOf::<f64>::zeros(n, 1);
+    // Warm both paths first so the peaks measure resident bytes, not
+    // first-touch allocation order.
+    sched.execute(&v, &[1.0], &mut out, &mut arena).unwrap();
+    sched.execute_tiled(&v, &[1.0], &mut out, &mut arena).unwrap();
+    reset_arena_peak();
+    sched.execute(&v, &[1.0], &mut out, &mut arena).unwrap();
+    let peak_untiled = arena_peak_bytes();
+    reset_arena_peak();
+    sched.execute_tiled(&v, &[1.0], &mut out, &mut arena).unwrap();
+    let peak_tiled = arena_peak_bytes();
+    assert!(
+        peak_tiled * 2 <= peak_untiled,
+        "tiled walk peak {peak_tiled} B must be at most half of untiled {peak_untiled} B"
+    );
+}
