@@ -11,6 +11,13 @@
 //! (panics/stalls/errors), shed rates under overload, and worker-restart
 //! counts — with the exactly-one-terminal-outcome invariant asserted.
 //!
+//! The silent-failure section emits `BENCH_integrity.json`: shadow-
+//! verification coverage and detection counts under seeded bit-flips (a
+//! realistic sampled run plus a fully-verified run where every flip must
+//! be caught), zero false positives on clean traffic, watchdog
+//! time-to-recovery for a wedged slot, and a brownout engage/recover
+//! cycle under a tiny arena budget.
+//!
 //! Set `BENCH_FAST=1` to shrink the sweep and request counts (CI smoke).
 
 use equidiag::config::ServerConfig;
@@ -633,6 +640,275 @@ fn write_robustness_json(path: &str, chaos: &ChaosReport, overload: &OverloadRep
     }
 }
 
+/// Poll the coordinator's metrics until `pred` holds or `timeout`
+/// passes (shadow verification and the supervisor sweeps run
+/// asynchronously); returns the last snapshot either way.
+fn wait_metrics(
+    handle: &equidiag::coordinator::CoordinatorHandle,
+    timeout: Duration,
+    pred: impl Fn(&MetricsSnapshot) -> bool,
+) -> MetricsSnapshot {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let snap = handle.metrics();
+        if pred(&snap) || Instant::now() >= deadline {
+            return snap;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+struct IntegrityReport {
+    // Realistic sampling: 5% shadow verification under 1% bit-flips.
+    realistic_served: u64,
+    realistic_flips: u64,
+    realistic_verified: u64,
+    realistic_mismatches: u64,
+    // Full verification under always-on flips: every flip must be caught.
+    full_flips: u64,
+    full_mismatches: u64,
+    full_quarantines: u64,
+    full_recompiles: u64,
+    // Fully-verified clean traffic: zero mismatches allowed.
+    clean_served: u64,
+    clean_mismatches: u64,
+    // Watchdog: wall time from wedged submit to the typed BatchStuck.
+    watchdog_stuck_ms: f64,
+    watchdog_kills: u64,
+    watchdog_probes_ok: u64,
+    // Brownout cycle under a 1-byte budget.
+    brownout_engage_ms: f64,
+    brownout_recover_ms: f64,
+    brownout_engagements: u64,
+    brownout_recoveries: u64,
+}
+
+/// Closed-loop load over a route whose responses are silently bit-flipped
+/// at `flip_per_mille`, with `verify_per_mille` shadow verification;
+/// waits for the async verifier to drain before snapshotting.
+fn run_verified_load(
+    flip_per_mille: u64,
+    verify_per_mille: usize,
+    requests: usize,
+) -> (u64, MetricsSnapshot, MetricsSnapshot) {
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 4,
+        max_batch: 8,
+        batch_window: Duration::from_micros(200),
+        queue_capacity: 4096,
+        verify_per_mille,
+        ..ServerConfig::default()
+    });
+    let plan = Arc::new(ChaosPlan::new(606).with_bit_flips(flip_per_mille));
+    let kind = ModelKind::net(test_net());
+    coord.register(
+        "m",
+        if flip_per_mille > 0 {
+            ModelKind::chaos(kind, plan.clone())
+        } else {
+            kind
+        },
+    );
+    let handle = Arc::new(coord.start());
+    let start = handle.metrics();
+    let clients = 4usize;
+    let per_client = requests / clients;
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(600 + c as u64);
+            for _ in 0..per_client {
+                // Flips are silent: every request still resolves Ok.
+                h.infer("m", Tensor::random(N, 2, &mut rng)).unwrap();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // The Bresenham sampler verifies exactly ⌊served × per_mille / 1000⌋
+    // responses; wait for the spare-capacity verifier to reach that.
+    let served = (clients * per_client) as u64;
+    let expect = served * verify_per_mille as u64 / 1000;
+    let snapshot = wait_metrics(&handle, Duration::from_secs(60), |s| {
+        s.shadow_verifications >= expect
+    });
+    let flips = plan.injected_silent().0;
+    match Arc::try_unwrap(handle) {
+        Ok(h) => h.shutdown(),
+        Err(_) => unreachable!(),
+    }
+    (flips, start, snapshot)
+}
+
+/// Silent-failure defense scenarios: sampled + full shadow verification
+/// under bit-flips, a clean-traffic false-positive check, watchdog
+/// time-to-recovery, and one brownout engage/recover cycle.
+fn run_integrity(fast: bool) -> IntegrityReport {
+    // Realistic operating point: 1% of batches flipped, 5% of responses
+    // shadow-verified. Coverage is exact by construction; detections are
+    // reported, not asserted (they depend on flip/sample alignment).
+    let requests = if fast { 400 } else { 2000 };
+    let (flips_r, _, snap_r) = run_verified_load(10, 50, requests);
+    let realistic_served = requests as u64;
+    let realistic_verified = snap_r.shadow_verifications;
+    assert_eq!(
+        realistic_verified,
+        realistic_served * 50 / 1000,
+        "Bresenham sampling must hit the exact configured fraction"
+    );
+    assert!(
+        snap_r.integrity_mismatches <= realistic_verified,
+        "cannot detect more than was verified"
+    );
+
+    // Certainty point: every batch flipped, every response verified —
+    // each flipped response must be detected, exactly once.
+    let full_requests = if fast { 100 } else { 400 };
+    let (flips_f, start_f, snap_f) = run_verified_load(1000, 1000, full_requests);
+    assert!(flips_f > 0);
+    assert_eq!(
+        snap_f.integrity_mismatches, flips_f,
+        "full verification must catch every injected flip (one per batch)"
+    );
+    assert_eq!(snap_f.degraded_models, 1);
+    let full_quarantines = snap_f.schedule_quarantines - start_f.schedule_quarantines;
+    assert!(full_quarantines >= 1, "mismatches must quarantine schedules");
+
+    // Clean traffic, fully verified: any mismatch is a false positive.
+    let (_, _, snap_c) = run_verified_load(0, 1000, full_requests);
+    assert_eq!(snap_c.shadow_verifications, full_requests as u64);
+    assert_eq!(
+        snap_c.integrity_mismatches, 0,
+        "shadow verification false-positived on clean traffic"
+    );
+
+    // Watchdog: a 30s injected stall behind a 150ms floor; measure the
+    // wall time until the waiter gets the typed BatchStuck, then probe
+    // that the respawned pool still serves.
+    let stall_plan = Arc::new(ChaosPlan::new(13).with_long_stalls(1000, Duration::from_secs(30)));
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 2,
+        max_batch: 1,
+        batch_window: Duration::from_micros(0),
+        queue_capacity: 64,
+        request_timeout: Some(Duration::from_millis(150)),
+        watchdog_factor: 4.0,
+        ..ServerConfig::default()
+    });
+    coord.register("wedged", ModelKind::chaos(ModelKind::net(test_net()), stall_plan));
+    coord.register("ok", ModelKind::net(test_net()));
+    let handle = coord.start();
+    let mut rng = Rng::new(607);
+    let t0 = Instant::now();
+    let rx = handle.submit("wedged", Tensor::random(N, 2, &mut rng)).unwrap();
+    match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+        Err(Error::BatchStuck) => {}
+        other => panic!("expected BatchStuck, got {other:?}"),
+    }
+    let watchdog_stuck_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let mut watchdog_probes_ok = 0u64;
+    for _ in 0..20 {
+        if handle.infer("ok", Tensor::random(N, 2, &mut rng)).is_ok() {
+            watchdog_probes_ok += 1;
+        }
+    }
+    let snap_w = handle.metrics();
+    assert_eq!(snap_w.watchdog_kills, 1);
+    assert_eq!(watchdog_probes_ok, 20, "pool did not survive the reap");
+    handle.shutdown();
+
+    // Brownout: a 1-byte budget engages under any traffic; recovery
+    // follows once the load stops and the under-budget window elapses.
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_window: Duration::from_micros(200),
+        queue_capacity: 4096,
+        arena_budget_bytes: Some(1),
+        ..ServerConfig::default()
+    });
+    coord.register("m", ModelKind::net(test_net()));
+    let handle = coord.start();
+    let t0 = Instant::now();
+    let deadline = t0 + Duration::from_secs(15);
+    while handle.metrics().brownout_state == 0 && Instant::now() < deadline {
+        handle.infer("m", Tensor::random(N, 2, &mut rng)).unwrap();
+    }
+    let brownout_engage_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let snap_b = wait_metrics(&handle, Duration::from_secs(30), |s| {
+        s.brownout_state == 0 && s.brownout_recoveries >= 1
+    });
+    let brownout_recover_ms = t1.elapsed().as_secs_f64() * 1e3;
+    assert!(snap_b.brownout_engagements >= 1, "brownout never engaged");
+    assert!(snap_b.brownout_recoveries >= 1, "brownout never recovered");
+    handle.shutdown();
+
+    IntegrityReport {
+        realistic_served,
+        realistic_flips: flips_r,
+        realistic_verified,
+        realistic_mismatches: snap_r.integrity_mismatches,
+        full_flips: flips_f,
+        full_mismatches: snap_f.integrity_mismatches,
+        full_quarantines,
+        full_recompiles: snap_f.schedule_recompiles,
+        clean_served: full_requests as u64,
+        clean_mismatches: snap_c.integrity_mismatches,
+        watchdog_stuck_ms,
+        watchdog_kills: snap_w.watchdog_kills,
+        watchdog_probes_ok,
+        brownout_engage_ms,
+        brownout_recover_ms,
+        brownout_engagements: snap_b.brownout_engagements,
+        brownout_recoveries: snap_b.brownout_recoveries,
+    }
+}
+
+fn write_integrity_json(path: &str, r: &IntegrityReport) {
+    let json = format!(
+        "{{\n  \"bench\": \"coordinator_integrity\",\n  \"n\": {N},\n  \
+         \"shadow_verification\": {{\n    \
+         \"realistic\": {{\"served\": {rs}, \"flipped_batches\": {rf}, \
+         \"verified\": {rv}, \"mismatches\": {rm}}},\n    \
+         \"full\": {{\"flipped_batches\": {ff}, \"mismatches\": {fm}, \
+         \"quarantines\": {fq}, \"recompiles\": {fr}}},\n    \
+         \"clean\": {{\"served\": {cs}, \"mismatches\": {cm}}}\n  }},\n  \
+         \"watchdog\": {{\n    \
+         \"time_to_batch_stuck_ms\": {ws:.1},\n    \
+         \"kills\": {wk},\n    \
+         \"recovered_probes_ok\": {wp}\n  }},\n  \
+         \"brownout\": {{\n    \
+         \"engage_ms\": {be:.1},\n    \
+         \"recover_ms\": {br:.1},\n    \
+         \"engagements\": {ben},\n    \
+         \"recoveries\": {brc}\n  }}\n}}\n",
+        rs = r.realistic_served,
+        rf = r.realistic_flips,
+        rv = r.realistic_verified,
+        rm = r.realistic_mismatches,
+        ff = r.full_flips,
+        fm = r.full_mismatches,
+        fq = r.full_quarantines,
+        fr = r.full_recompiles,
+        cs = r.clean_served,
+        cm = r.clean_mismatches,
+        ws = r.watchdog_stuck_ms,
+        wk = r.watchdog_kills,
+        wp = r.watchdog_probes_ok,
+        be = r.brownout_engage_ms,
+        br = r.brownout_recover_ms,
+        ben = r.brownout_engagements,
+        brc = r.brownout_recoveries,
+    );
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     let fast = std::env::var("BENCH_FAST").is_ok();
     println!("== E9: coordinator throughput (closed-loop, 8 clients) ==\n");
@@ -770,6 +1046,33 @@ fn main() {
         overload.snapshot.shed_expired,
     );
     write_robustness_json("BENCH_robustness.json", &chaos, &overload);
+
+    println!("\n== integrity: bit-flip shadow detection, watchdog, brownout ==\n");
+    let integrity = run_integrity(fast);
+    println!(
+        "shadow verification: realistic run verified {}/{} responses under \
+         {} flipped batches ({} caught); full run caught {}/{} flips with \
+         {} schedule quarantines; clean run {} false positives",
+        integrity.realistic_verified,
+        integrity.realistic_served,
+        integrity.realistic_flips,
+        integrity.realistic_mismatches,
+        integrity.full_mismatches,
+        integrity.full_flips,
+        integrity.full_quarantines,
+        integrity.clean_mismatches,
+    );
+    println!(
+        "watchdog: wedged waiter freed in {:.0} ms, {} kill(s), all {} \
+         recovery probes served; brownout: engaged in {:.0} ms, recovered \
+         {:.0} ms after load stopped",
+        integrity.watchdog_stuck_ms,
+        integrity.watchdog_kills,
+        integrity.watchdog_probes_ok,
+        integrity.brownout_engage_ms,
+        integrity.brownout_recover_ms,
+    );
+    write_integrity_json("BENCH_integrity.json", &integrity);
 
     // PJRT route (single-owner-thread service).
     if std::path::Path::new("artifacts/pair_trace.hlo.txt").exists() {

@@ -69,7 +69,7 @@ impl Default for TrainingConfig {
 }
 
 /// Model-execution section (`[model]`).
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelConfig {
     /// Scalar precision the served network executes at: `"f64"` (default;
     /// bitwise-reference path) or `"f32"` (halved memory traffic). Training
@@ -80,6 +80,21 @@ pub struct ModelConfig {
     /// the L2 data-cache size ([`crate::util::hw::cache_bytes`], which the
     /// `PALLAS_CACHE_BYTES` env var overrides); `Some(0)` disables tiling.
     pub tile_bytes: Option<usize>,
+    /// Whether the memory-pressure brownout may drop this model to `f32`
+    /// at its deepest level (`brownout_f32`, default `true`). Models whose
+    /// accuracy contract cannot tolerate single precision set this `false`
+    /// and brownout stops at the tiled-f64 level for them.
+    pub brownout_f32: bool,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            precision: Precision::default(),
+            tile_bytes: None,
+            brownout_f32: true,
+        }
+    }
 }
 
 /// Serving section (`[server]`).
@@ -121,6 +136,27 @@ pub struct ServerConfig {
     /// target it widens it (batch more, raise throughput). The window
     /// stays inside `[batch_window / 8, batch_window × 16]`.
     pub target_p95: Option<Duration>,
+    /// Non-finite output canary (`numeric_guard`, default `false`). When
+    /// on, every worker sweeps its outputs for NaN/±inf before responding
+    /// and converts poisoned items into [`crate::Error::NumericFault`]
+    /// instead of shipping silent garbage.
+    pub numeric_guard: bool,
+    /// Shadow-verification sampling rate in requests-per-thousand
+    /// (`verify_per_mille`, `0`/absent = off, clamped to 1000). Sampled
+    /// requests are re-executed through the per-term reference path on
+    /// executor spare capacity and compared against the fused answer; a
+    /// mismatch quarantines + recompiles the cached schedules and flags
+    /// the model degraded.
+    pub verify_per_mille: usize,
+    /// Hung-batch watchdog threshold as a multiple of the live p99 batch
+    /// execution time (`watchdog_factor`, `0`/absent = off). The effective
+    /// threshold never drops below `request_timeout_ms` when that is set.
+    pub watchdog_factor: f64,
+    /// Arena budget for the memory-pressure brownout
+    /// (`arena_budget_bytes`, `0`/absent = off). Sustained arena usage
+    /// above the budget walks `BrownoutState` Normal → Tiled → TiledF32;
+    /// a sustained under-budget window recovers it.
+    pub arena_budget_bytes: Option<usize>,
 }
 
 impl Default for ServerConfig {
@@ -134,6 +170,10 @@ impl Default for ServerConfig {
             max_inflight_per_model: None,
             plan_cache_capacity: None,
             target_p95: None,
+            numeric_guard: false,
+            verify_per_mille: 0,
+            watchdog_factor: 0.0,
+            arena_budget_bytes: None,
         }
     }
 }
@@ -169,6 +209,15 @@ fn get_f64(m: &BTreeMap<String, Value>, key: &str, default: f64) -> Result<f64> 
         Some(v) => v
             .as_float()
             .ok_or_else(|| Error::Config(format!("{key} must be a number"))),
+    }
+}
+
+fn get_bool(m: &BTreeMap<String, Value>, key: &str, default: bool) -> Result<bool> {
+    match m.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| Error::Config(format!("{key} must be true or false"))),
     }
 }
 
@@ -248,6 +297,7 @@ impl AppConfig {
                     || Error::Config("model.tile_bytes must be a non-negative integer".into()),
                 )?),
             },
+            brownout_f32: get_bool(&m, "model.brownout_f32", d.model.brownout_f32)?,
         };
 
         let server = ServerConfig {
@@ -287,6 +337,21 @@ impl AppConfig {
             target_p95: match get_usize(&m, "server.target_p95_ms", 0)? {
                 0 => None,
                 ms => Some(Duration::from_millis(ms as u64)),
+            },
+            numeric_guard: get_bool(&m, "server.numeric_guard", false)?,
+            verify_per_mille: get_usize(&m, "server.verify_per_mille", 0)?.min(1000),
+            watchdog_factor: {
+                let f = get_f64(&m, "server.watchdog_factor", 0.0)?;
+                if f < 0.0 {
+                    return Err(Error::Config(
+                        "server.watchdog_factor must be non-negative".into(),
+                    ));
+                }
+                f
+            },
+            arena_budget_bytes: match get_usize(&m, "server.arena_budget_bytes", 0)? {
+                0 => None,
+                b => Some(b),
             },
         };
 
@@ -351,6 +416,7 @@ log_every = 5
 [model]
 precision = "f32"
 tile_bytes = 131072
+brownout_f32 = false
 
 [server]
 workers = 2
@@ -361,6 +427,10 @@ request_timeout_ms = 250
 max_inflight_per_model = 32
 plan_cache_capacity = 128
 target_p95_ms = 40
+numeric_guard = true
+verify_per_mille = 50
+watchdog_factor = 4.0
+arena_budget_bytes = 1048576
 "#,
         )
         .unwrap();
@@ -376,6 +446,11 @@ target_p95_ms = 40
         assert_eq!(c.server.max_inflight_per_model, Some(32));
         assert_eq!(c.server.plan_cache_capacity, Some(128));
         assert_eq!(c.server.target_p95, Some(Duration::from_millis(40)));
+        assert!(c.server.numeric_guard);
+        assert_eq!(c.server.verify_per_mille, 50);
+        assert_eq!(c.server.watchdog_factor, 4.0);
+        assert_eq!(c.server.arena_budget_bytes, Some(1048576));
+        assert!(!c.model.brownout_f32);
         assert_eq!(c.artifact.as_deref(), Some("artifacts/model.hlo.txt"));
     }
 
@@ -393,6 +468,11 @@ target_p95_ms = 40
         assert!(AppConfig::from_text("[model]\nprecision = \"f16\"").is_err());
         assert!(AppConfig::from_text("[model]\ntile_bytes = \"big\"").is_err());
         assert!(AppConfig::from_text("[model]\ntile_bytes = -1").is_err());
+        assert!(AppConfig::from_text("[server]\nnumeric_guard = \"yes\"").is_err());
+        assert!(AppConfig::from_text("[server]\nverify_per_mille = -1").is_err());
+        assert!(AppConfig::from_text("[server]\nwatchdog_factor = -2.0").is_err());
+        assert!(AppConfig::from_text("[server]\narena_budget_bytes = \"lots\"").is_err());
+        assert!(AppConfig::from_text("[model]\nbrownout_f32 = 1").is_err());
     }
 
     #[test]
@@ -438,5 +518,22 @@ target_p95_ms = 40
         // 0 is accepted verbatim: it means "tiling off", not "auto".
         let c = AppConfig::from_text("[model]\ntile_bytes = 0").unwrap();
         assert_eq!(c.model.tile_bytes, Some(0));
+    }
+
+    #[test]
+    fn integrity_knobs_default_off() {
+        let c = AppConfig::from_text("").unwrap();
+        assert!(!c.server.numeric_guard);
+        assert_eq!(c.server.verify_per_mille, 0);
+        assert_eq!(c.server.watchdog_factor, 0.0);
+        assert_eq!(c.server.arena_budget_bytes, None);
+        assert!(c.model.brownout_f32);
+        // Sampling clamps to the whole population; 0 disables brownout.
+        let c = AppConfig::from_text(
+            "[server]\nverify_per_mille = 5000\narena_budget_bytes = 0",
+        )
+        .unwrap();
+        assert_eq!(c.server.verify_per_mille, 1000);
+        assert_eq!(c.server.arena_budget_bytes, None);
     }
 }

@@ -1,19 +1,21 @@
 //! Seeded fault injection for the serving stack ("chaos harness").
 //!
 //! A [`ChaosPlan`] decides, per model call, whether to inject a panic, a
-//! stall, or a typed error — on a schedule that is a pure function of
-//! `(seed, call sequence number)`, so a failing run replays exactly. The
-//! plan is consumed through [`super::ModelKind::chaos`], which wraps any
-//! servable model; faults are injected **at the wrapper**, before the
-//! inner model runs, so an injected panic unwinds through coordinator
-//! code only and can never corrupt the inner model's shared state.
+//! stall, a typed error, a silent bit-flip, or a long stall — on a
+//! schedule that is a pure function of `(seed, call sequence number)`, so
+//! a failing run replays exactly. The plan is consumed through
+//! [`super::ModelKind::chaos`], which wraps any servable model; faults are
+//! injected **at the wrapper**, before the inner model runs (bit-flips
+//! after, since they corrupt outputs), so an injected panic unwinds
+//! through coordinator code only and can never corrupt the inner model's
+//! shared state.
 //!
 //! This is a test/bench harness — the stress suite and
 //! `benches/coordinator_throughput.rs` drive it to certify the
 //! fault-tolerance invariants (`docs/serving_robustness.md`). It has no
 //! place in a production route.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Injected panic payloads start with this prefix so test panic hooks can
@@ -33,6 +35,14 @@ pub enum Fault {
     Stall,
     /// Return a typed error without executing.
     Error,
+    /// Execute normally, then silently corrupt one element of the output —
+    /// models a wrong-but-plausible answer (stale schedule, memory fault).
+    /// Only the shadow-verification oracle can catch this.
+    BitFlip,
+    /// Sleep for the plan's long-stall duration, then execute normally —
+    /// long enough to trip the hung-batch watchdog rather than merely the
+    /// request deadline.
+    LongStall,
 }
 
 /// A seeded fault schedule shared by every worker serving the wrapped
@@ -45,11 +55,19 @@ pub struct ChaosPlan {
     panic_per_mille: u64,
     stall_per_mille: u64,
     error_per_mille: u64,
+    bit_flip_per_mille: u64,
+    long_stall_per_mille: u64,
     stall_for: Duration,
+    long_stall_for: Duration,
     calls: AtomicU64,
     injected_panics: AtomicU64,
     injected_stalls: AtomicU64,
     injected_errors: AtomicU64,
+    injected_bit_flips: AtomicU64,
+    injected_long_stalls: AtomicU64,
+    /// Set at coordinator shutdown so in-progress injected stalls cut
+    /// their sleep short instead of delaying drop.
+    cancelled: AtomicBool,
 }
 
 /// SplitMix64 finaliser: a well-mixed bijection on `u64`, enough to turn
@@ -69,11 +87,17 @@ impl ChaosPlan {
             panic_per_mille: 0,
             stall_per_mille: 0,
             error_per_mille: 0,
+            bit_flip_per_mille: 0,
+            long_stall_per_mille: 0,
             stall_for: Duration::from_millis(1),
+            long_stall_for: Duration::from_millis(100),
             calls: AtomicU64::new(0),
             injected_panics: AtomicU64::new(0),
             injected_stalls: AtomicU64::new(0),
             injected_errors: AtomicU64::new(0),
+            injected_bit_flips: AtomicU64::new(0),
+            injected_long_stalls: AtomicU64::new(0),
+            cancelled: AtomicBool::new(false),
         }
     }
 
@@ -96,29 +120,75 @@ impl ChaosPlan {
         self
     }
 
+    /// Silently corrupt one output element on `per_mille`/1000 of calls.
+    pub fn with_bit_flips(mut self, per_mille: u64) -> Self {
+        self.bit_flip_per_mille = per_mille.min(1000);
+        self
+    }
+
+    /// Inject a stall of `stall_for` — sized to exceed the watchdog
+    /// threshold — on `per_mille`/1000 of calls.
+    pub fn with_long_stalls(mut self, per_mille: u64, stall_for: Duration) -> Self {
+        self.long_stall_per_mille = per_mille.min(1000);
+        self.long_stall_for = stall_for;
+        self
+    }
+
     /// How long an injected stall sleeps.
     pub fn stall_duration(&self) -> Duration {
         self.stall_for
     }
 
+    /// How long an injected long stall sleeps.
+    pub fn long_stall_duration(&self) -> Duration {
+        self.long_stall_for
+    }
+
+    /// Cut every in-progress and future injected stall short: the sliced
+    /// chaos sleeps poll this between 5ms chunks. Called at coordinator
+    /// shutdown so a wedged injected call cannot delay drop.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether [`ChaosPlan::cancel`] has been called.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
     /// Draw the fault for the next model call. The roll partitions
-    /// `[0, 1000)` into panic | stall | error | healthy bands, so the
-    /// rates are exact long-run frequencies (per mille).
+    /// `[0, 1000)` into panic | stall | error | bit-flip | long-stall |
+    /// healthy bands, so the rates are exact long-run frequencies
+    /// (per mille).
     pub fn next_fault(&self) -> Fault {
         let seq = self.calls.fetch_add(1, Ordering::Relaxed);
         let roll = mix(self.seed ^ seq.wrapping_mul(0xA076_1D64_78BD_642F)) % 1000;
-        if roll < self.panic_per_mille {
+        let mut edge = self.panic_per_mille;
+        if roll < edge {
             self.injected_panics.fetch_add(1, Ordering::Relaxed);
-            Fault::Panic
-        } else if roll < self.panic_per_mille + self.stall_per_mille {
-            self.injected_stalls.fetch_add(1, Ordering::Relaxed);
-            Fault::Stall
-        } else if roll < self.panic_per_mille + self.stall_per_mille + self.error_per_mille {
-            self.injected_errors.fetch_add(1, Ordering::Relaxed);
-            Fault::Error
-        } else {
-            Fault::None
+            return Fault::Panic;
         }
+        edge += self.stall_per_mille;
+        if roll < edge {
+            self.injected_stalls.fetch_add(1, Ordering::Relaxed);
+            return Fault::Stall;
+        }
+        edge += self.error_per_mille;
+        if roll < edge {
+            self.injected_errors.fetch_add(1, Ordering::Relaxed);
+            return Fault::Error;
+        }
+        edge += self.bit_flip_per_mille;
+        if roll < edge {
+            self.injected_bit_flips.fetch_add(1, Ordering::Relaxed);
+            return Fault::BitFlip;
+        }
+        edge += self.long_stall_per_mille;
+        if roll < edge {
+            self.injected_long_stalls.fetch_add(1, Ordering::Relaxed);
+            return Fault::LongStall;
+        }
+        Fault::None
     }
 
     /// `(panics, stalls, errors)` injected so far — the harness reports
@@ -128,6 +198,15 @@ impl ChaosPlan {
             self.injected_panics.load(Ordering::Relaxed),
             self.injected_stalls.load(Ordering::Relaxed),
             self.injected_errors.load(Ordering::Relaxed),
+        )
+    }
+
+    /// `(bit_flips, long_stalls)` injected so far — the silent-failure
+    /// bands, reported by the integrity bench next to detection counts.
+    pub fn injected_silent(&self) -> (u64, u64) {
+        (
+            self.injected_bit_flips.load(Ordering::Relaxed),
+            self.injected_long_stalls.load(Ordering::Relaxed),
         )
     }
 
@@ -164,6 +243,7 @@ mod tests {
         let plan = ChaosPlan::new(3);
         assert!(drain(&plan, 300).iter().all(|f| *f == Fault::None));
         assert_eq!(plan.injected(), (0, 0, 0));
+        assert_eq!(plan.injected_silent(), (0, 0));
         assert_eq!(plan.calls(), 300);
     }
 
@@ -189,5 +269,34 @@ mod tests {
         assert!(near(p, 0.3), "panics {p}");
         assert!(near(s, 0.3), "stalls {s}");
         assert!(near(e, 0.4), "errors {e}");
+    }
+
+    #[test]
+    fn silent_bands_partition_after_loud_ones() {
+        let plan = ChaosPlan::new(6)
+            .with_errors(200)
+            .with_bit_flips(400)
+            .with_long_stalls(400, Duration::from_millis(50));
+        let faults = drain(&plan, 2000);
+        assert!(faults.iter().all(|f| *f != Fault::None), "bands sum to 1000");
+        let (flips, longs) = plan.injected_silent();
+        assert_eq!(flips + longs + plan.injected().2, 2000);
+        let near = |got: u64, want: f64| (got as f64 / 2000.0 - want).abs() < 0.05;
+        assert!(near(flips, 0.4), "bit flips {flips}");
+        assert!(near(longs, 0.4), "long stalls {longs}");
+        // Determinism holds for the new bands too.
+        let twin = ChaosPlan::new(6)
+            .with_errors(200)
+            .with_bit_flips(400)
+            .with_long_stalls(400, Duration::from_millis(50));
+        assert_eq!(faults, drain(&twin, 2000));
+    }
+
+    #[test]
+    fn cancellation_flag_flips_once() {
+        let plan = ChaosPlan::new(8).with_stalls(1000, Duration::from_millis(500));
+        assert!(!plan.is_cancelled());
+        plan.cancel();
+        assert!(plan.is_cancelled());
     }
 }

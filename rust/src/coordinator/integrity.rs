@@ -1,0 +1,662 @@
+//! Silent-failure defenses for the serving path
+//! (`docs/serving_robustness.md`, "Integrity, watchdog & brownout"):
+//!
+//! - **Numeric canaries** (`[server] numeric_guard`): a vectorizable
+//!   is-finite sweep over every response at the output boundary; a NaN/Inf
+//!   answer becomes a typed [`Error::NumericFault`] instead of reaching
+//!   the client, while finite batch-mates are untouched.
+//! - **Sampled shadow verification** (`[server] verify_per_mille`): a
+//!   deterministic fraction of served responses is re-executed through
+//!   the per-term reference path on executor spare capacity and compared
+//!   under a tolerance scaled to the model's serving precision. A
+//!   mismatch quarantines the layer schedules involved (evicting them
+//!   from the [`PlanCache`]), recompiles them from the pre-factored
+//!   plans, re-verifies through the fresh schedules, and flags the model
+//!   degraded in the metrics snapshot.
+//! - **Hung-batch watchdog** (`[server] watchdog_factor`): workers stamp
+//!   a per-slot heartbeat before executing a batch; the supervisor reaps
+//!   slots whose batch has outlived `watchdog_factor × live p99` (floored
+//!   at the request timeout), shedding every waiter with
+//!   [`Error::BatchStuck`] and respawning the slot. The wedged
+//!   incarnation detects its bumped epoch when (if) it returns and goes
+//!   quiet instead of double-delivering.
+//! - **Memory-pressure brownout** (`[server] arena_budget_bytes`): a
+//!   hysteresis-guarded state machine fed the live arena footprint;
+//!   over-budget it degrades execution `Normal → Tiled → TiledF32`
+//!   (shrunken-tile-budget schedule walks, then f32 casting where
+//!   `[model] brownout_f32` allows) and recovers to `Normal` after a
+//!   sustained under-budget window.
+//!
+//! Every hook is off by default; with the knobs off the serving hot path
+//! is untouched — no stamping, no sampling, no extra allocation.
+
+use super::batcher::WorkItem;
+use super::metrics::Metrics;
+use super::registry::ModelKind;
+use crate::error::{Error, Result};
+use crate::fastmult::{resolve_tile_budget, LayerSchedule, PlanCache};
+use crate::layer::spanning_plans;
+use crate::nn::EquivariantNet;
+use crate::tensor::{Precision, Scalar, Tensor};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Recover a mutex guard even if a previous holder panicked: the
+/// protected state here (waiter lists, schedule maps, degraded sets) is
+/// only mutated under short, model-code-free critical sections.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Whether a served tensor contains any non-finite element. The closed
+/// iterator chain compiles to a branch-free sweep; it runs only when
+/// `[server] numeric_guard` is on.
+pub(crate) fn non_finite(t: &Tensor) -> bool {
+    t.data.iter().any(|x| !x.is_finite())
+}
+
+/// Headroom multiplier on the precision's machine tolerance: the fused
+/// schedule walk reassociates the diagram-term sums, so the served and
+/// per-term reference answers legitimately differ by a few ulps times
+/// the summation depth — bitwise comparison would flag healthy traffic.
+/// An injected exponent bit-flip moves one element by ~2×, ten orders of
+/// magnitude outside this band, so detection is unaffected.
+const AGREE_GUARD: f64 = 4096.0;
+
+/// Tolerance-scaled agreement between a served answer and its per-term
+/// reference, at the model's serving precision.
+pub(crate) fn outputs_agree(served: &Tensor, reference: &Tensor, precision: Precision) -> bool {
+    if served.n != reference.n
+        || served.order != reference.order
+        || served.data.len() != reference.data.len()
+    {
+        return false;
+    }
+    let eps = match precision {
+        Precision::F64 => <f64 as Scalar>::TOLERANCE,
+        Precision::F32 => <f32 as Scalar>::TOLERANCE,
+    };
+    let scale = reference
+        .data
+        .iter()
+        .fold(1.0_f64, |m, x| m.max(x.abs()));
+    let tol = AGREE_GUARD * eps * scale;
+    served
+        .data
+        .iter()
+        .zip(&reference.data)
+        .all(|(a, b)| (a - b).abs() <= tol)
+}
+
+/// Sampled shadow verification: deterministic per-mille selection of
+/// served responses, re-executed through [`ModelKind::infer_reference`]
+/// and compared with [`outputs_agree`]. Shared by every worker of one
+/// coordinator.
+pub(crate) struct Verifier {
+    per_mille: u64,
+    seq: AtomicU64,
+    /// Routes that ever failed a shadow comparison; `degraded` is sticky
+    /// so the metrics snapshot keeps reporting a model that silently
+    /// corrupted an answer even after its schedules were recompiled.
+    degraded: Mutex<HashSet<String>>,
+}
+
+impl Verifier {
+    pub fn new(per_mille: usize) -> Self {
+        Verifier {
+            per_mille: (per_mille as u64).min(1000),
+            seq: AtomicU64::new(0),
+            degraded: Mutex::new(HashSet::new()),
+        }
+    }
+
+    /// Deterministic Bresenham-style sampler: response `s` is sampled iff
+    /// the running count `⌊s·rate/1000⌋` steps, which spreads exactly
+    /// `per_mille` samples over every 1000 responses with no RNG and no
+    /// clustering. One atomic increment per served response.
+    pub fn should_sample(&self) -> bool {
+        if self.per_mille == 0 {
+            return false;
+        }
+        let s = self.seq.fetch_add(1, Ordering::Relaxed);
+        (s + 1) * self.per_mille / 1000 > s * self.per_mille / 1000
+    }
+
+    /// Re-execute `input` through the reference path and compare against
+    /// the `served` answer; on mismatch run the quarantine → recompile →
+    /// re-verify protocol. Runs on executor spare capacity, off the
+    /// serving hot path.
+    pub fn verify(
+        &self,
+        route: &str,
+        model: &ModelKind,
+        input: &Tensor,
+        served: &Tensor,
+        metrics: &Metrics,
+    ) {
+        // HLO artifacts have no per-term twin: nothing to verify against.
+        let Ok(reference) = model.infer_reference(input) else {
+            return;
+        };
+        let Some((net, precision)) = model.as_net() else {
+            return;
+        };
+        metrics.on_shadow_verification();
+        if outputs_agree(served, &reference, precision) {
+            return;
+        }
+        metrics.on_integrity_mismatch();
+        if lock_recover(&self.degraded).insert(route.to_string()) {
+            metrics.on_model_degraded();
+        }
+        // Quarantine every schedule the route executes through (both
+        // orientations, every tile budget), then recompile the forward
+        // set from the pre-factored plans and prove the fresh copies
+        // against the same reference before they serve traffic.
+        let cache = PlanCache::global();
+        let mut fresh: Vec<Arc<LayerSchedule>> = Vec::with_capacity(net.layers.len());
+        let mut recompiled = 0u64;
+        for layer in &net.layers {
+            let (g, n, k, l) = (layer.group(), layer.n(), layer.k(), layer.l());
+            cache.quarantine_schedule(g, n, k, l, false);
+            cache.quarantine_schedule(g, n, k, l, true);
+            let rebuilt = spanning_plans(g, n, k, l)
+                .and_then(|plans| cache.get_or_build_schedule(g, n, k, l, false, &plans));
+            match rebuilt {
+                Ok(s) => {
+                    recompiled += 1;
+                    fresh.push(s);
+                }
+                Err(_) => break,
+            }
+        }
+        metrics.on_schedule_recompiles(recompiled);
+        if fresh.len() == net.layers.len() {
+            // Best effort: a re-verification failure would implicate the
+            // plans themselves rather than a stale compiled schedule; the
+            // route stays flagged degraded either way.
+            let _redo_agrees = match precision {
+                Precision::F64 => net
+                    .forward_with_schedules(&fresh, input)
+                    .map(|redo| outputs_agree(&redo, &reference, precision)),
+                Precision::F32 => net
+                    .forward_with_schedules(&fresh, &input.cast::<f32>())
+                    .map(|redo| outputs_agree(&redo.cast::<f64>(), &reference, precision)),
+            };
+        }
+    }
+}
+
+/// Brownout severity, ordered by how much fidelity it trades for memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BrownoutLevel {
+    /// Full-budget execution.
+    Normal = 0,
+    /// Schedule walks forced through shrunken-tile-budget compilations —
+    /// smaller working set per walk at some throughput cost.
+    Tiled = 1,
+    /// Tiled execution with inputs narrowed to `f32` — halves the
+    /// bandwidth and arena footprint; entered only where
+    /// `[model] brownout_f32` allows it.
+    TiledF32 = 2,
+}
+
+impl BrownoutLevel {
+    fn from_u64(v: u64) -> Self {
+        match v {
+            0 => BrownoutLevel::Normal,
+            1 => BrownoutLevel::Tiled,
+            _ => BrownoutLevel::TiledF32,
+        }
+    }
+}
+
+/// Hysteresis-guarded brownout state machine, fed one observation of the
+/// live arena footprint per supervisor tick. Escalates one level after
+/// `engage_ticks` consecutive over-budget observations and snaps back to
+/// `Normal` after `recover_ticks` consecutive under-budget ones, so a
+/// footprint oscillating around the budget cannot flap the serving mode
+/// every tick. Pure and injectable: tests drive it with synthetic byte
+/// counts and tick counts.
+pub(crate) struct Brownout {
+    budget_bytes: usize,
+    allow_f32: bool,
+    engage_ticks: u32,
+    recover_ticks: u32,
+    level: BrownoutLevel,
+    over: u32,
+    under: u32,
+}
+
+/// Consecutive over-budget supervisor ticks (~50ms each) before the
+/// brownout escalates a level.
+const ENGAGE_TICKS: u32 = 2;
+/// Consecutive under-budget ticks before it recovers to `Normal` —
+/// roughly a one-second sustained window at the supervisor cadence.
+const RECOVER_TICKS: u32 = 20;
+
+impl Brownout {
+    pub fn new(budget_bytes: usize, allow_f32: bool) -> Self {
+        Self::with_hysteresis(budget_bytes, allow_f32, ENGAGE_TICKS, RECOVER_TICKS)
+    }
+
+    /// Test hook: explicit hysteresis windows.
+    pub fn with_hysteresis(
+        budget_bytes: usize,
+        allow_f32: bool,
+        engage_ticks: u32,
+        recover_ticks: u32,
+    ) -> Self {
+        Brownout {
+            budget_bytes,
+            allow_f32,
+            engage_ticks: engage_ticks.max(1),
+            recover_ticks: recover_ticks.max(1),
+            level: BrownoutLevel::Normal,
+            over: 0,
+            under: 0,
+        }
+    }
+
+    pub fn level(&self) -> BrownoutLevel {
+        self.level
+    }
+
+    /// Feed one footprint observation; `Some(new_level)` on a transition.
+    pub fn observe(&mut self, in_use_bytes: usize) -> Option<BrownoutLevel> {
+        if in_use_bytes > self.budget_bytes {
+            self.under = 0;
+            self.over += 1;
+            if self.over < self.engage_ticks {
+                return None;
+            }
+            self.over = 0;
+            let next = match self.level {
+                BrownoutLevel::Normal => BrownoutLevel::Tiled,
+                BrownoutLevel::Tiled if self.allow_f32 => BrownoutLevel::TiledF32,
+                held => held,
+            };
+            if next == self.level {
+                return None;
+            }
+            self.level = next;
+            Some(next)
+        } else {
+            self.over = 0;
+            if self.level == BrownoutLevel::Normal {
+                return None;
+            }
+            self.under += 1;
+            if self.under < self.recover_ticks {
+                return None;
+            }
+            self.under = 0;
+            self.level = BrownoutLevel::Normal;
+            Some(BrownoutLevel::Normal)
+        }
+    }
+}
+
+/// Worker-facing side of the brownout: the supervisor publishes the
+/// current level here; workers read it per batch (one relaxed load when
+/// the knob is on) and, when browned out, route native models through
+/// shrunken-tile-budget schedules compiled once per route.
+pub(crate) struct BrownoutCtl {
+    pub budget_bytes: usize,
+    pub allow_f32: bool,
+    level: AtomicU64,
+    schedules: Mutex<HashMap<String, Arc<Vec<Arc<LayerSchedule>>>>>,
+}
+
+impl BrownoutCtl {
+    pub fn new(budget_bytes: usize, allow_f32: bool) -> Self {
+        BrownoutCtl {
+            budget_bytes,
+            allow_f32,
+            level: AtomicU64::new(BrownoutLevel::Normal as u64),
+            schedules: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn level(&self) -> BrownoutLevel {
+        BrownoutLevel::from_u64(self.level.load(Ordering::Relaxed))
+    }
+
+    pub fn set_level(&self, level: BrownoutLevel) {
+        self.level.store(level as u64, Ordering::Relaxed);
+    }
+
+    /// The shrunken tile budget browned-out walks compile under: a
+    /// quarter of the process budget, floored so degenerate probes still
+    /// hold one lane.
+    pub fn tile_budget(&self) -> usize {
+        (resolve_tile_budget() / 4).max(4096)
+    }
+
+    /// The brownout schedule set for one route, compiled on first
+    /// browned-out batch and cached for the coordinator's lifetime (the
+    /// shrunken-budget entries also live in the global [`PlanCache`]
+    /// keyed by their budget, coexisting with the normal ones).
+    pub fn schedules_for(
+        &self,
+        route: &str,
+        net: &EquivariantNet,
+    ) -> Result<Arc<Vec<Arc<LayerSchedule>>>> {
+        if let Some(s) = lock_recover(&self.schedules).get(route) {
+            return Ok(s.clone());
+        }
+        // Compile outside the lock; a racing worker's duplicate compile
+        // resolves to the same cache entries and the first insert wins.
+        let budget = self.tile_budget();
+        let cache = PlanCache::global();
+        let mut built: Vec<Arc<LayerSchedule>> = Vec::with_capacity(net.layers.len());
+        for layer in &net.layers {
+            let (g, n, k, l) = (layer.group(), layer.n(), layer.k(), layer.l());
+            let plans = spanning_plans(g, n, k, l)?;
+            built.push(cache.get_or_build_schedule_budgeted(g, n, k, l, false, &plans, budget)?);
+        }
+        let built = Arc::new(built);
+        Ok(lock_recover(&self.schedules)
+            .entry(route.to_string())
+            .or_insert(built)
+            .clone())
+    }
+}
+
+/// One browned-out forward: tiled walk under the shrunken budget, with
+/// inputs narrowed to `f32` at the deepest level (or when the model
+/// already serves at `f32`).
+pub(crate) fn brownout_infer(
+    net: &EquivariantNet,
+    precision: Precision,
+    level: BrownoutLevel,
+    schedules: &[Arc<LayerSchedule>],
+    input: &Tensor,
+) -> Result<Tensor> {
+    if precision == Precision::F32 || level == BrownoutLevel::TiledF32 {
+        net.forward_with_schedules(schedules, &input.cast::<f32>())
+            .map(|t| t.cast::<f64>())
+    } else {
+        net.forward_with_schedules(schedules, input)
+    }
+}
+
+/// One worker slot's heartbeat: epoch-stamped so a wedged incarnation
+/// can be *superseded* (safe Rust cannot kill its thread) — the watchdog
+/// bumps the epoch, sheds the registered waiters, and respawns the slot;
+/// the zombie compares epochs when it finally returns and goes quiet.
+struct HeartbeatSlot {
+    epoch: AtomicU64,
+    /// 1 while a batch is executing on this slot.
+    busy: AtomicU64,
+    /// Batch start, as nanoseconds since the table's birth.
+    started_ns: AtomicU64,
+    /// Response channels (plus enqueue stamps for latency accounting) of
+    /// the in-flight batch, registered before execution so the watchdog
+    /// can deliver [`Error::BatchStuck`] without touching the items the
+    /// wedged thread owns.
+    waiters: Mutex<Vec<(Sender<Result<Tensor>>, Instant)>>,
+}
+
+/// Per-slot heartbeat table shared by the workers and the supervisor's
+/// watchdog sweep. Allocated once at startup; stamping is two atomic
+/// stores plus one short waiter-list fill per batch, and nothing here
+/// runs at all unless `[server] watchdog_factor` is set.
+pub(crate) struct Heartbeats {
+    birth: Instant,
+    slots: Vec<HeartbeatSlot>,
+}
+
+impl Heartbeats {
+    pub fn new(workers: usize) -> Self {
+        Heartbeats {
+            birth: Instant::now(),
+            slots: (0..workers.max(1))
+                .map(|_| HeartbeatSlot {
+                    epoch: AtomicU64::new(0),
+                    busy: AtomicU64::new(0),
+                    started_ns: AtomicU64::new(0),
+                    waiters: Mutex::new(Vec::new()),
+                })
+                .collect(),
+        }
+    }
+
+    /// Stamp a batch start on `slot` and register its waiters; returns
+    /// the epoch the incarnation must present to [`Heartbeats::finish`].
+    pub fn start(&self, slot: usize, items: &[WorkItem]) -> u64 {
+        let s = &self.slots[slot % self.slots.len()];
+        {
+            let mut w = lock_recover(&s.waiters);
+            w.clear();
+            w.extend(items.iter().map(|it| (it.respond.clone(), it.enqueued)));
+        }
+        s.started_ns
+            .store(self.birth.elapsed().as_nanos() as u64, Ordering::Release);
+        s.busy.store(1, Ordering::Release);
+        s.epoch.load(Ordering::Acquire)
+    }
+
+    /// Clear the stamp after a batch returns. `false` means the slot was
+    /// superseded while the batch ran — its waiters were already shed
+    /// with [`Error::BatchStuck`] and a replacement spawned, so the
+    /// caller must deliver nothing and exit `Superseded`. A superseded
+    /// finish leaves the slot state alone: it belongs to the replacement
+    /// now.
+    pub fn finish(&self, slot: usize, epoch_at_start: u64) -> bool {
+        let s = &self.slots[slot % self.slots.len()];
+        if s.epoch.load(Ordering::Acquire) != epoch_at_start {
+            return false;
+        }
+        s.busy.store(0, Ordering::Release);
+        lock_recover(&s.waiters).clear();
+        true
+    }
+
+    /// Watchdog sweep: supersede every slot whose in-flight batch is
+    /// older than `threshold`, shed its waiters with
+    /// [`Error::BatchStuck`], and return the slot indices so the
+    /// supervisor can spawn replacements. (The race where a batch
+    /// finishes between the staleness read and the epoch bump is benign:
+    /// the finished incarnation already cleared the waiter list, so the
+    /// shed delivers nothing and the respawn briefly over-provisions one
+    /// slot.)
+    pub fn reap(&self, threshold: Duration, metrics: &Metrics) -> Vec<usize> {
+        let now_ns = self.birth.elapsed().as_nanos() as u64;
+        let mut reaped = Vec::new();
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.busy.load(Ordering::Acquire) != 1 {
+                continue;
+            }
+            let age_ns = now_ns.saturating_sub(s.started_ns.load(Ordering::Acquire));
+            if Duration::from_nanos(age_ns) <= threshold {
+                continue;
+            }
+            s.epoch.fetch_add(1, Ordering::AcqRel);
+            s.busy.store(0, Ordering::Release);
+            let shed: Vec<(Sender<Result<Tensor>>, Instant)> =
+                lock_recover(&s.waiters).drain(..).collect();
+            for (respond, enqueued) in shed {
+                metrics.on_complete(enqueued.elapsed(), false);
+                let _ = respond.send(Err(Error::BatchStuck));
+            }
+            metrics.on_watchdog_kill();
+            reaped.push(i);
+        }
+        reaped
+    }
+}
+
+/// The watchdog's staleness threshold for this tick: `factor ×` the live
+/// batch-execution p99, floored at the configured request timeout.
+/// `None` disables the sweep — either the knob is off or there is no
+/// signal yet (no executed batch *and* no timeout to floor on), in which
+/// case killing the first slow batch would be a guess, not a diagnosis.
+pub(crate) fn watchdog_threshold(
+    factor: f64,
+    live_p99_s: f64,
+    floor: Option<Duration>,
+) -> Option<Duration> {
+    if factor <= 0.0 {
+        return None;
+    }
+    let scaled = Duration::from_secs_f64((live_p99_s * factor).max(0.0));
+    let threshold = scaled.max(floor.unwrap_or(Duration::ZERO));
+    (threshold > Duration::ZERO).then_some(threshold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn non_finite_flags_nan_and_inf_only() {
+        let mut t = Tensor::zeros(3, 2);
+        assert!(!non_finite(&t));
+        t.data[4] = f64::NAN;
+        assert!(non_finite(&t));
+        t.data[4] = f64::INFINITY;
+        assert!(non_finite(&t));
+        t.data[4] = 1e308;
+        assert!(!non_finite(&t));
+    }
+
+    #[test]
+    fn agreement_tolerates_reassociation_but_not_flips() {
+        let mut a = Tensor::zeros(3, 2);
+        for (i, x) in a.data.iter_mut().enumerate() {
+            *x = (i as f64 + 1.0) * 0.25;
+        }
+        let mut b = a.clone();
+        // A few-ulp reassociation wobble passes at both precisions.
+        b.data[3] += 4.0 * f64::EPSILON * b.data[3];
+        assert!(outputs_agree(&a, &b, Precision::F64));
+        assert!(outputs_agree(&a, &b, Precision::F32));
+        // An exponent bit-flip (2× one element) fails at both.
+        let mut c = a.clone();
+        c.data[5] = f64::from_bits(c.data[5].to_bits() ^ (1u64 << 52));
+        assert!(!outputs_agree(&c, &a, Precision::F64));
+        assert!(!outputs_agree(&c, &a, Precision::F32));
+        // Shape mismatches never agree.
+        assert!(!outputs_agree(&Tensor::zeros(3, 1), &a, Precision::F64));
+    }
+
+    #[test]
+    fn sampler_hits_exact_fraction_deterministically() {
+        let v = Verifier::new(50);
+        let hits = (0..10_000).filter(|_| v.should_sample()).count();
+        assert_eq!(hits, 500, "50‰ of 10k");
+        let off = Verifier::new(0);
+        assert!((0..1000).all(|_| !off.should_sample()));
+        let all = Verifier::new(1000);
+        assert!((0..1000).all(|_| all.should_sample()));
+    }
+
+    #[test]
+    fn brownout_engages_escalates_and_recovers_with_hysteresis() {
+        let mut b = Brownout::with_hysteresis(1000, true, 2, 3);
+        // One over-budget tick is not enough (hysteresis).
+        assert_eq!(b.observe(2000), None);
+        assert_eq!(b.level(), BrownoutLevel::Normal);
+        assert_eq!(b.observe(2000), Some(BrownoutLevel::Tiled));
+        // Escalation to f32 needs its own sustained window.
+        assert_eq!(b.observe(2000), None);
+        assert_eq!(b.observe(2000), Some(BrownoutLevel::TiledF32));
+        // Held at the deepest level, further pressure is a no-op.
+        assert_eq!(b.observe(2000), None);
+        assert_eq!(b.observe(2000), None);
+        // A dip under budget resets only after the full recover window,
+        // and an interleaved spike restarts the count.
+        assert_eq!(b.observe(500), None);
+        assert_eq!(b.observe(500), None);
+        assert_eq!(b.observe(2000), None);
+        assert_eq!(b.observe(500), None);
+        assert_eq!(b.observe(500), None);
+        assert_eq!(b.observe(500), Some(BrownoutLevel::Normal));
+        assert_eq!(b.level(), BrownoutLevel::Normal);
+    }
+
+    #[test]
+    fn brownout_without_f32_consent_stops_at_tiled() {
+        let mut b = Brownout::with_hysteresis(100, false, 1, 2);
+        assert_eq!(b.observe(200), Some(BrownoutLevel::Tiled));
+        assert_eq!(b.observe(200), None, "f32 stage gated off");
+        assert_eq!(b.level(), BrownoutLevel::Tiled);
+    }
+
+    #[test]
+    fn brownout_ctl_publishes_levels() {
+        let ctl = BrownoutCtl::new(1 << 20, true);
+        assert_eq!(ctl.level(), BrownoutLevel::Normal);
+        ctl.set_level(BrownoutLevel::TiledF32);
+        assert_eq!(ctl.level(), BrownoutLevel::TiledF32);
+        assert!(ctl.tile_budget() >= 4096);
+        assert!(ctl.tile_budget() <= resolve_tile_budget().max(4096));
+    }
+
+    #[test]
+    fn watchdog_threshold_needs_a_signal() {
+        assert_eq!(watchdog_threshold(0.0, 1.0, None), None, "knob off");
+        assert_eq!(watchdog_threshold(4.0, 0.0, None), None, "no signal yet");
+        assert_eq!(
+            watchdog_threshold(4.0, 0.5, None),
+            Some(Duration::from_secs(2))
+        );
+        // The request timeout floors a small p99-derived threshold.
+        assert_eq!(
+            watchdog_threshold(4.0, 0.001, Some(Duration::from_secs(1))),
+            Some(Duration::from_secs(1))
+        );
+        assert_eq!(
+            watchdog_threshold(4.0, 0.0, Some(Duration::from_millis(250))),
+            Some(Duration::from_millis(250))
+        );
+    }
+
+    #[test]
+    fn heartbeats_stamp_reap_and_supersede() {
+        let hb = Heartbeats::new(2);
+        let metrics = Metrics::default();
+        // Nothing in flight: nothing to reap.
+        assert!(hb.reap(Duration::ZERO, &metrics).is_empty());
+        // Stamp a batch on slot 0 and reap it as stale (zero threshold).
+        let (tx, rx) = std::sync::mpsc::channel();
+        let items = vec![WorkItem {
+            model: "m".into(),
+            input: Tensor::zeros(2, 1),
+            enqueued: Instant::now(),
+            deadline: None,
+            respond: tx,
+            inflight: None,
+        }];
+        let epoch = hb.start(0, &items);
+        std::thread::sleep(Duration::from_millis(2));
+        let reaped = hb.reap(Duration::from_millis(1), &metrics);
+        assert_eq!(reaped, vec![0]);
+        // The waiter got a typed shed and the metrics counted the kill.
+        assert!(matches!(rx.try_recv(), Ok(Err(Error::BatchStuck))));
+        let snap = metrics.snapshot();
+        assert_eq!(snap.watchdog_kills, 1);
+        assert_eq!(snap.failed, 1);
+        // The wedged incarnation is superseded: finish refuses, and a
+        // second sweep finds the slot idle.
+        assert!(!hb.finish(0, epoch));
+        assert!(hb.reap(Duration::ZERO, &metrics).is_empty());
+        // A fresh incarnation stamps the bumped epoch and finishes clean.
+        let (tx2, _rx2) = std::sync::mpsc::channel();
+        let items2 = vec![WorkItem {
+            model: "m".into(),
+            input: Tensor::zeros(2, 1),
+            enqueued: Instant::now(),
+            deadline: None,
+            respond: tx2,
+            inflight: None,
+        }];
+        let epoch2 = hb.start(0, &items2);
+        assert_eq!(epoch2, epoch + 1);
+        assert!(hb.finish(0, epoch2));
+    }
+}

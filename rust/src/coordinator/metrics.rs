@@ -159,6 +159,24 @@ pub struct Metrics {
     batch_window_ns: AtomicU64,
     /// Configured p95 target in nanoseconds (`0` = adaptive window off).
     target_p95_ns: AtomicU64,
+    /// Non-finite outputs caught by the `numeric_guard` canary.
+    numeric_faults: AtomicU64,
+    /// Batches shed by the hung-batch watchdog (slot respawned).
+    watchdog_kills: AtomicU64,
+    /// Sampled shadow verifications executed against the reference path.
+    shadow_verifications: AtomicU64,
+    /// Shadow verifications that disagreed with the fused answer.
+    integrity_mismatches: AtomicU64,
+    /// Schedules recompiled (and re-verified) after a quarantine.
+    schedule_recompiles: AtomicU64,
+    /// Brownout level gauge: 0 = Normal, 1 = Tiled, 2 = TiledF32.
+    brownout_state: AtomicU64,
+    /// Times the brownout engaged (left Normal).
+    brownout_engagements: AtomicU64,
+    /// Times the brownout fully recovered back to Normal.
+    brownout_recoveries: AtomicU64,
+    /// Models flagged degraded by the integrity verifier (gauge).
+    degraded_models: AtomicU64,
 }
 
 /// Point-in-time snapshot of the metrics.
@@ -305,6 +323,48 @@ pub struct MetricsSnapshot {
     pub executor_injector_pushes: u64,
     /// Total tasks the executor ran (workers plus helping callers).
     pub executor_executed: u64,
+    /// Non-finite outputs caught by the `numeric_guard` canary (each
+    /// converted into a typed [`crate::Error::NumericFault`] instead of a
+    /// silent wrong answer).
+    pub numeric_faults: u64,
+    /// Batches the hung-batch watchdog shed: waiters got
+    /// [`crate::Error::BatchStuck`] and the pinned worker slot respawned.
+    pub watchdog_kills: u64,
+    /// Sampled requests re-executed through the per-term reference path
+    /// (`verify_per_mille`).
+    pub shadow_verifications: u64,
+    /// Shadow verifications whose reference answer disagreed with the
+    /// fused one — each quarantined the suspect cached schedules.
+    pub integrity_mismatches: u64,
+    /// Compiled schedules evicted by integrity quarantine (process-wide,
+    /// see [`crate::fastmult::CacheStats::schedule_quarantines`]).
+    pub schedule_quarantines: u64,
+    /// Schedules recompiled and re-verified after a quarantine.
+    pub schedule_recompiles: u64,
+    /// Memory-pressure brownout level: 0 = Normal, 1 = Tiled (forced
+    /// shrunken-tile walks), 2 = TiledF32 (plus f32 casting where the
+    /// model's policy allows).
+    pub brownout_state: u64,
+    /// Times the brownout engaged (left Normal).
+    pub brownout_engagements: u64,
+    /// Times the brownout fully recovered back to Normal.
+    pub brownout_recoveries: u64,
+    /// Models currently flagged degraded by the integrity verifier.
+    pub degraded_models: u64,
+    /// Scratch-arena bytes checked out right now (the live figure the
+    /// brownout compares against `arena_budget_bytes`).
+    pub arena_in_use_bytes: u64,
+}
+
+impl MetricsSnapshot {
+    /// Human-readable name of the brownout level gauge.
+    pub fn brownout_state_name(&self) -> &'static str {
+        match self.brownout_state {
+            0 => "normal",
+            1 => "tiled",
+            _ => "tiled-f32",
+        }
+    }
 }
 
 impl Metrics {
@@ -370,6 +430,47 @@ impl Metrics {
     /// one pass over a few hundred relaxed atomic loads, no locks.
     pub(crate) fn latency_p95_s(&self) -> f64 {
         self.latency.stats().p95_s
+    }
+    /// Live p99 of whole-batch execution time in seconds (`0.0` until a
+    /// batch runs) — the base the watchdog threshold multiplies.
+    pub(crate) fn batch_exec_p99_s(&self) -> f64 {
+        self.batch_exec.stats().p99_s
+    }
+    /// Record a non-finite output caught by the numeric guard.
+    pub fn on_numeric_fault(&self) {
+        self.numeric_faults.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Record a batch shed by the hung-batch watchdog.
+    pub fn on_watchdog_kill(&self) {
+        self.watchdog_kills.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Record one sampled shadow verification (clean or not).
+    pub fn on_shadow_verification(&self) {
+        self.shadow_verifications.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Record a shadow-verification mismatch (quarantine trigger).
+    pub fn on_integrity_mismatch(&self) {
+        self.integrity_mismatches.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Record `count` schedules recompiled after a quarantine.
+    pub fn on_schedule_recompiles(&self, count: u64) {
+        self.schedule_recompiles.fetch_add(count, Ordering::Relaxed);
+    }
+    /// Publish the brownout level gauge (0 Normal / 1 Tiled / 2 TiledF32).
+    pub fn set_brownout_state(&self, level: u64) {
+        self.brownout_state.store(level, Ordering::Relaxed);
+    }
+    /// Record a brownout engagement (left Normal).
+    pub fn on_brownout_engaged(&self) {
+        self.brownout_engagements.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Record a full brownout recovery (back to Normal).
+    pub fn on_brownout_recovered(&self) {
+        self.brownout_recoveries.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Record a model newly flagged degraded by the verifier.
+    pub fn on_model_degraded(&self) {
+        self.degraded_models.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Take a snapshot (includes the process-wide plan-cache counters).
@@ -457,6 +558,17 @@ impl Metrics {
             executor_parks: pool.parks,
             executor_injector_pushes: pool.injector_pushes,
             executor_executed: pool.executed,
+            numeric_faults: self.numeric_faults.load(Ordering::Relaxed),
+            watchdog_kills: self.watchdog_kills.load(Ordering::Relaxed),
+            shadow_verifications: self.shadow_verifications.load(Ordering::Relaxed),
+            integrity_mismatches: self.integrity_mismatches.load(Ordering::Relaxed),
+            schedule_quarantines: cache.schedule_quarantines,
+            schedule_recompiles: self.schedule_recompiles.load(Ordering::Relaxed),
+            brownout_state: self.brownout_state.load(Ordering::Relaxed),
+            brownout_engagements: self.brownout_engagements.load(Ordering::Relaxed),
+            brownout_recoveries: self.brownout_recoveries.load(Ordering::Relaxed),
+            degraded_models: self.degraded_models.load(Ordering::Relaxed),
+            arena_in_use_bytes: crate::fastmult::arena_in_use_bytes() as u64,
         }
     }
 }
@@ -658,5 +770,31 @@ mod tests {
             .all(|r| (0.0..=1.0).contains(r)));
         assert!(s.executor_workers >= 1, "executor stats not plumbed");
         assert!(s.executor_executed >= 1, "executor task counter stuck");
+        // Integrity/watchdog/brownout counters are plumbed through.
+        m.on_numeric_fault();
+        m.on_watchdog_kill();
+        m.on_shadow_verification();
+        m.on_shadow_verification();
+        m.on_integrity_mismatch();
+        m.on_schedule_recompiles(3);
+        m.set_brownout_state(2);
+        m.on_brownout_engaged();
+        m.on_brownout_recovered();
+        m.on_model_degraded();
+        let s = m.snapshot();
+        assert_eq!(s.numeric_faults, 1);
+        assert_eq!(s.watchdog_kills, 1);
+        assert_eq!(s.shadow_verifications, 2);
+        assert_eq!(s.integrity_mismatches, 1);
+        assert_eq!(s.schedule_recompiles, 3);
+        assert_eq!(s.brownout_state, 2);
+        assert_eq!(s.brownout_state_name(), "tiled-f32");
+        assert_eq!(s.brownout_engagements, 1);
+        assert_eq!(s.brownout_recoveries, 1);
+        assert_eq!(s.degraded_models, 1);
+        // The batch-exec p99 accessor agrees with the snapshot.
+        assert!((m.batch_exec_p99_s() - s.p99_batch_exec_s).abs() < 1e-12);
+        m.set_brownout_state(0);
+        assert_eq!(m.snapshot().brownout_state_name(), "normal");
     }
 }

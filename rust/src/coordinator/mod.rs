@@ -17,6 +17,15 @@
 //! histograms plus shed/restart counters. A seeded [`ChaosPlan`] fault
 //! injector certifies the invariants under test and bench load.
 //!
+//! On top of the loud-failure machinery sit the **silent-failure
+//! defenses** (all off by default): numeric canaries and sampled shadow
+//! verification against the per-term reference path
+//! (`[server] numeric_guard` / `verify_per_mille`), a hung-batch
+//! watchdog that sheds and respawns wedged slots
+//! (`[server] watchdog_factor`), and a memory-pressure brownout that
+//! degrades execution instead of blowing the arena budget
+//! (`[server] arena_budget_bytes`).
+//!
 //! ```no_run
 //! use equidiag::coordinator::{Coordinator, ModelKind};
 //! use equidiag::config::ServerConfig;
@@ -36,6 +45,7 @@
 
 mod batcher;
 mod chaos;
+mod integrity;
 mod metrics;
 mod registry;
 mod server;

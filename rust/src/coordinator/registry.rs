@@ -62,17 +62,45 @@ impl ModelKind {
         }
     }
 
+    /// The wrapped native network and its serving precision, seen through
+    /// any chaos wrapper. The shadow verifier uses this to reach the
+    /// per-term reference path and the layer shapes it quarantines by;
+    /// HLO artifacts have no reference twin and return `None`.
+    pub fn as_net(&self) -> Option<(&Arc<EquivariantNet>, Precision)> {
+        match self {
+            ModelKind::Net(net, precision) => Some((net, *precision)),
+            ModelKind::Hlo(_) => None,
+            ModelKind::Chaos(inner, _) => inner.as_net(),
+        }
+    }
+
+    /// Cancel any chaos plan wrapped around this model (see
+    /// [`ChaosPlan::cancel`]): in-progress injected stalls cut their sleep
+    /// short. Called by the coordinator at shutdown.
+    pub fn cancel_chaos(&self) {
+        if let ModelKind::Chaos(inner, plan) = self {
+            plan.cancel();
+            inner.cancel_chaos();
+        }
+    }
+
     /// Act on the chaos plan's next roll; returns the inner model to
-    /// delegate to on the healthy/stall paths, or the injected error.
-    fn chaos_gate<'a>(inner: &'a ModelKind, plan: &ChaosPlan) -> Result<&'a ModelKind> {
+    /// delegate to on the healthy/stall paths (plus whether to corrupt
+    /// the output afterwards), or the injected error.
+    fn chaos_gate<'a>(inner: &'a ModelKind, plan: &ChaosPlan) -> Result<(&'a ModelKind, bool)> {
         match plan.next_fault() {
             Fault::Panic => panic!("{CHAOS_PANIC_PREFIX} injected panic"),
             Fault::Stall => {
-                std::thread::sleep(plan.stall_duration());
-                Ok(inner)
+                sliced_sleep(plan.stall_duration(), plan);
+                Ok((inner, false))
+            }
+            Fault::LongStall => {
+                sliced_sleep(plan.long_stall_duration(), plan);
+                Ok((inner, false))
             }
             Fault::Error => Err(Error::Coordinator("chaos: injected error".into())),
-            Fault::None => Ok(inner),
+            Fault::BitFlip => Ok((inner, true)),
+            Fault::None => Ok((inner, false)),
         }
     }
 
@@ -98,8 +126,17 @@ impl ModelKind {
             ModelKind::Chaos(inner, plan) => match Self::chaos_gate(inner, plan) {
                 // One roll per batch call: a batch-level panic exercises
                 // the worker's per-item fallback, where each retried item
-                // rolls again via `infer`.
-                Ok(m) => m.infer_batch(inputs),
+                // rolls again via `infer`. A bit-flip roll corrupts one
+                // element of the first successful item's output.
+                Ok((m, flip)) => {
+                    let mut results = m.infer_batch(inputs);
+                    if flip {
+                        if let Some(out) = results.iter_mut().find_map(|r| r.as_mut().ok()) {
+                            flip_one_element(out);
+                        }
+                    }
+                    results
+                }
                 Err(e) => {
                     let msg = match &e {
                         Error::Coordinator(m) => m.clone(),
@@ -161,9 +198,74 @@ impl ModelKind {
                 }
                 Tensor::from_vec(input.n, order, first.into_iter().map(f64::from).collect())
             }
-            ModelKind::Chaos(inner, plan) => Self::chaos_gate(inner, plan)?.infer(input),
+            ModelKind::Chaos(inner, plan) => {
+                let (m, flip) = Self::chaos_gate(inner, plan)?;
+                let mut out = m.infer(input)?;
+                if flip {
+                    flip_one_element(&mut out);
+                }
+                Ok(out)
+            }
         }
     }
+
+    /// Run one input through the per-term **reference** path — the
+    /// integrity oracle the shadow verifier compares the fused serving
+    /// answer against. Executes at the model's serving precision (so an
+    /// `f32` model is compared against an `f32` reference, isolating
+    /// schedule corruption from precision loss). Chaos wrappers are
+    /// transparent and roll **no** fault: the oracle must stay clean. HLO
+    /// artifacts have no reference twin and report a typed error.
+    pub fn infer_reference(&self, input: &Tensor) -> Result<Tensor> {
+        match self {
+            ModelKind::Net(net, Precision::F64) => net.forward_reference(input),
+            ModelKind::Net(net, Precision::F32) => Ok(net
+                .forward_reference(&input.cast::<f32>())?
+                .cast::<f64>()),
+            ModelKind::Hlo(_) => Err(Error::Coordinator(
+                "no per-term reference path for HLO artifacts".into(),
+            )),
+            ModelKind::Chaos(inner, _) => inner.infer_reference(input),
+        }
+    }
+}
+
+/// Sleep for `total` in shutdown-aware 5ms slices (mirroring the
+/// supervisor's sliced backoff sleeps): a cancelled plan cuts the sleep
+/// short, so a wedged injected stall cannot delay coordinator drop.
+fn sliced_sleep(total: std::time::Duration, plan: &ChaosPlan) {
+    const SLICE: std::time::Duration = std::time::Duration::from_millis(5);
+    let deadline = std::time::Instant::now() + total;
+    while !plan.is_cancelled() {
+        let now = std::time::Instant::now();
+        if now >= deadline {
+            break;
+        }
+        std::thread::sleep(SLICE.min(deadline - now));
+    }
+}
+
+/// Corrupt one element of `t` — the largest-magnitude one — by flipping
+/// the LSB of its exponent (bit 52), doubling or halving it: a
+/// wrong-but-plausible, always-finite answer sized far outside any
+/// legitimate rounding tolerance. All-zero or non-finite outputs get the
+/// first element set to 1.0 instead so the corruption never disappears.
+fn flip_one_element(t: &mut Tensor) {
+    let Some(idx) = t
+        .data
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.abs().total_cmp(&b.1.abs()))
+        .map(|(i, _)| i)
+    else {
+        return;
+    };
+    let v = t.data[idx];
+    t.data[idx] = if v == 0.0 || !v.is_finite() {
+        1.0
+    } else {
+        f64::from_bits(v.to_bits() ^ (1u64 << 52))
+    };
 }
 
 /// Named model registry shared across workers.
@@ -190,6 +292,15 @@ impl Registry {
     pub fn names(&self) -> Vec<&str> {
         self.models.keys().map(String::as_str).collect()
     }
+
+    /// Cancel every registered model's chaos plan (no-op for unwrapped
+    /// models) — called at coordinator shutdown so injected stalls stop
+    /// sleeping promptly.
+    pub fn cancel_chaos(&self) {
+        for model in self.models.values() {
+            model.cancel_chaos();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -199,6 +310,7 @@ mod tests {
     use crate::layer::Init;
     use crate::nn::Activation;
     use crate::util::Rng;
+    use std::time::Duration;
 
     #[test]
     fn registry_lookup() {
@@ -284,6 +396,129 @@ mod tests {
             .cloned()
             .unwrap_or_default();
         assert!(msg.starts_with(CHAOS_PANIC_PREFIX), "payload: {msg}");
+    }
+
+    #[test]
+    fn bit_flip_band_corrupts_exactly_one_element() {
+        let mut rng = Rng::new(406);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[1, 1],
+            Activation::Identity,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let v = Tensor::random(3, 1, &mut rng);
+        let plain = ModelKind::net(net);
+        let want = plain.infer(&v).unwrap();
+        let flipping = ModelKind::chaos(
+            plain,
+            Arc::new(super::ChaosPlan::new(5).with_bit_flips(1000)),
+        );
+        let got = flipping.infer(&v).unwrap();
+        let differing = want
+            .data
+            .iter()
+            .zip(&got.data)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert_eq!(differing, 1, "exactly one element must be corrupted");
+        assert!(got.data.iter().all(|x| x.is_finite()), "flips stay finite");
+        // The corruption lands far outside rounding tolerance.
+        assert!(got.max_abs_diff(&want) > 1e-6);
+        // Batched: one flip per batch call, in the first successful item.
+        let batch = flipping.infer_batch(&[&v, &v]);
+        assert!(batch[0].as_ref().unwrap().max_abs_diff(&want) > 1e-6);
+        assert!(batch[1].as_ref().unwrap().allclose(&want, 0.0));
+    }
+
+    #[test]
+    fn reference_path_sees_through_chaos_and_skips_faults() {
+        let mut rng = Rng::new(407);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 1],
+            Activation::Relu,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let v = Tensor::random(3, 2, &mut rng);
+        let plain = ModelKind::net(net.clone());
+        let want = plain.infer(&v).unwrap();
+        // The oracle agrees with the fused path to rounding error.
+        let oracle = plain.infer_reference(&v).unwrap();
+        assert!(oracle.allclose(&want, 1e-12), "{}", oracle.max_abs_diff(&want));
+        // Through an always-faulting chaos wrapper the oracle stays clean:
+        // no roll is drawn, no corruption applied.
+        let wrapped = ModelKind::chaos(
+            plain,
+            Arc::new(super::ChaosPlan::new(6).with_bit_flips(1000)),
+        );
+        let calls_before = match &wrapped {
+            ModelKind::Chaos(_, plan) => plan.calls(),
+            _ => unreachable!(),
+        };
+        let through = wrapped.infer_reference(&v).unwrap();
+        assert!(through.allclose(&want, 1e-12));
+        if let ModelKind::Chaos(_, plan) = &wrapped {
+            assert_eq!(plan.calls(), calls_before, "oracle must not roll faults");
+        }
+        // as_net is chaos-transparent; precision rides along.
+        let (seen, precision) = wrapped.as_net().unwrap();
+        assert_eq!(seen.n(), 3);
+        assert_eq!(precision, Precision::F64);
+    }
+
+    #[test]
+    fn cancelled_long_stall_returns_promptly() {
+        let mut rng = Rng::new(408);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[1, 1],
+            Activation::Identity,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let v = Tensor::random(3, 1, &mut rng);
+        let plan = Arc::new(
+            super::ChaosPlan::new(7).with_long_stalls(1000, Duration::from_secs(30)),
+        );
+        let wrapped = ModelKind::chaos(ModelKind::net(net), Arc::clone(&plan));
+        // Pre-cancelled: the sliced sleep exits on its first poll instead
+        // of serving the 30s stall.
+        wrapped.cancel_chaos();
+        let t0 = std::time::Instant::now();
+        assert!(wrapped.infer(&v).is_ok());
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "cancelled stall must not sleep out its full duration"
+        );
+        let mut reg = Registry::default();
+        reg.insert("m", ModelKind::chaos(
+            ModelKind::net(
+                EquivariantNet::new(
+                    Group::Symmetric,
+                    3,
+                    &[1, 1],
+                    Activation::Identity,
+                    Init::ScaledNormal,
+                    &mut rng,
+                )
+                .unwrap(),
+            ),
+            Arc::new(super::ChaosPlan::new(9)),
+        ));
+        // Registry-wide cancellation reaches every wrapped plan.
+        reg.cancel_chaos();
+        if let ModelKind::Chaos(_, p) = reg.get("m").unwrap() {
+            assert!(p.is_cancelled());
+        }
     }
 
     #[test]

@@ -9,14 +9,23 @@
 //! the door and enforces per-model admission control; `infer` is a
 //! bounded wait whenever a request deadline is configured — no client
 //! ever hangs on a response that will never come.
+//!
+//! The silent-failure defenses (`super::integrity`) hook in behind
+//! off-by-default config knobs: numeric canaries and sampled shadow
+//! verification screen responses at the output boundary, a hung-batch
+//! watchdog piggybacks on the supervisor tick, and a memory-pressure
+//! brownout degrades execution instead of letting the arena grow past
+//! its budget. With the knobs off the batch path is untouched.
 
 use super::batcher::{self, Batch, BatchQueue, PopWait, WorkItem};
+use super::integrity::{self, Brownout, BrownoutCtl, BrownoutLevel, Heartbeats, Verifier};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::registry::{ModelKind, Registry};
 use crate::config::ServerConfig;
 use crate::error::{Error, Result};
 use crate::fastmult::PlanCache;
-use crate::tensor::Tensor;
+use crate::nn::EquivariantNet;
+use crate::tensor::{Precision, Tensor};
 use crate::util::executor;
 use std::any::Any;
 use std::collections::HashMap;
@@ -97,10 +106,17 @@ impl Admission {
 }
 
 /// Builder for the serving engine: register models, then [`Coordinator::start`].
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Coordinator {
     config: ServerConfig,
     registry: Registry,
+    brownout_f32: bool,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Coordinator::new(ServerConfig::default())
+    }
 }
 
 impl Coordinator {
@@ -109,7 +125,16 @@ impl Coordinator {
         Coordinator {
             config,
             registry: Registry::default(),
+            brownout_f32: true,
         }
+    }
+
+    /// Precision policy for the brownout's deepest stage
+    /// (`[model] brownout_f32`, default on): when `false` the
+    /// memory-pressure brownout stops at shrunken-budget tiled walks and
+    /// never narrows a model's inputs to `f32`.
+    pub fn set_brownout_f32(&mut self, allow: bool) {
+        self.brownout_f32 = allow;
     }
 
     /// Register a model under a route name.
@@ -150,6 +175,23 @@ impl Coordinator {
             .config
             .max_inflight_per_model
             .map(|limit| Admission::new(limit, &registry.names()));
+        let workers = self.config.workers.max(1);
+        // Every defense is `None`/`false` at the default config, so the
+        // knobs-off batch path carries no stamping, sampling, or extra
+        // allocation.
+        let policy = Arc::new(ServingPolicy {
+            numeric_guard: self.config.numeric_guard,
+            verifier: (self.config.verify_per_mille > 0)
+                .then(|| Arc::new(Verifier::new(self.config.verify_per_mille))),
+            heartbeats: (self.config.watchdog_factor > 0.0)
+                .then(|| Arc::new(Heartbeats::new(workers))),
+            watchdog_factor: self.config.watchdog_factor,
+            request_timeout: self.config.request_timeout,
+            brownout: self
+                .config
+                .arena_budget_bytes
+                .map(|budget| Arc::new(BrownoutCtl::new(budget, self.brownout_f32))),
+        });
 
         let mut threads: Vec<JoinHandle<()>> = Vec::new();
         {
@@ -163,11 +205,11 @@ impl Coordinator {
             }));
         }
         {
-            let workers = self.config.workers.max(1);
             let reg = registry.clone();
             let metrics = metrics.clone();
+            let policy = policy.clone();
             threads.push(std::thread::spawn(move || {
-                supervisor_loop(dispatch, reg, metrics, workers)
+                supervisor_loop(dispatch, reg, metrics, workers, policy)
             }));
         }
 
@@ -194,6 +236,72 @@ enum WorkerExit {
     /// suspect after an unwind through model code, so a fresh thread
     /// replaces it — the supervisor respawns unless the queue drained.
     Recycled,
+    /// The hung-batch watchdog superseded this incarnation while its
+    /// batch ran: the waiters were already shed with
+    /// [`Error::BatchStuck`] and a replacement slot task spawned, so the
+    /// supervisor only decrements the live count — respawning again
+    /// would double the slot.
+    Superseded,
+}
+
+/// Off-by-default silent-failure defenses shared by every worker slot of
+/// one coordinator (see `super::integrity`). At the default config every
+/// field is `false`/`None` and `run_batch` behaves exactly as before.
+struct ServingPolicy {
+    numeric_guard: bool,
+    verifier: Option<Arc<Verifier>>,
+    heartbeats: Option<Arc<Heartbeats>>,
+    watchdog_factor: f64,
+    request_timeout: Option<Duration>,
+    brownout: Option<Arc<BrownoutCtl>>,
+}
+
+impl ServingPolicy {
+    /// Output-boundary screening for one served result: the numeric
+    /// canary turns a non-finite answer into a typed
+    /// [`Error::NumericFault`] (its finite batch-mates pass untouched),
+    /// and the shadow sampler re-executes its deterministic fraction of
+    /// the healthy answers on executor spare capacity. `shadow` is
+    /// `false` for browned-out responses — the brownout deliberately
+    /// changes the numerics (shrunken tiles, f32 casts), and spending
+    /// reference forwards while under memory pressure would deepen the
+    /// pressure that triggered it.
+    fn screen(
+        &self,
+        route: &str,
+        model: &ModelKind,
+        input: &Tensor,
+        result: Result<Tensor>,
+        metrics: &Arc<Metrics>,
+        shadow: bool,
+    ) -> Result<Tensor> {
+        let out = match result {
+            Ok(t) => t,
+            err => return err,
+        };
+        if self.numeric_guard && integrity::non_finite(&out) {
+            metrics.on_numeric_fault();
+            return Err(Error::NumericFault(format!(
+                "non-finite element in a '{route}' response"
+            )));
+        }
+        if shadow {
+            if let Some(verifier) = &self.verifier {
+                if verifier.should_sample() {
+                    let verifier = verifier.clone();
+                    let model = model.clone();
+                    let input = input.clone();
+                    let served = out.clone();
+                    let metrics = metrics.clone();
+                    let route = route.to_string();
+                    executor::global().spawn(move || {
+                        verifier.verify(&route, &model, &input, &served, &metrics)
+                    });
+                }
+            }
+        }
+        Ok(out)
+    }
 }
 
 struct WorkerEvent {
@@ -210,6 +318,7 @@ struct WorkerCtx {
     queue: Arc<BatchQueue>,
     registry: Arc<Registry>,
     metrics: Arc<Metrics>,
+    policy: Arc<ServingPolicy>,
     events: mpsc::Sender<WorkerEvent>,
 }
 
@@ -267,11 +376,17 @@ fn worker_task(ctx: WorkerCtx) {
 /// respawn — the event channel keeps draining throughout. Exits when
 /// every slot has exited, no respawn pends, and the drained queue means
 /// none needs a replacement.
+///
+/// The hung-batch watchdog and the memory-pressure brownout piggyback on
+/// this loop's tick (the 50ms event timeout doubles as their sweep
+/// cadence) instead of costing a thread each; both are no-ops unless
+/// their knobs are set.
 fn supervisor_loop(
     queue: Arc<BatchQueue>,
     registry: Arc<Registry>,
     metrics: Arc<Metrics>,
     workers: usize,
+    policy: Arc<ServingPolicy>,
 ) {
     let (event_tx, event_rx) = mpsc::channel::<WorkerEvent>();
     let ctxs: Vec<WorkerCtx> = (0..workers)
@@ -280,9 +395,20 @@ fn supervisor_loop(
             queue: queue.clone(),
             registry: registry.clone(),
             metrics: metrics.clone(),
+            policy: policy.clone(),
             events: event_tx.clone(),
         })
         .collect();
+    // The brownout machine samples the arena's peak-since-last-tick (and
+    // resets the watermark each tick): the in-use figure collapses to ~0
+    // between batches, so the instantaneous reading would race the very
+    // pressure it is supposed to observe. The watermark is only consumed
+    // this way when `[server] arena_budget_bytes` is set.
+    let mut brownout: Option<(Arc<BrownoutCtl>, Brownout)> = policy.brownout.clone().map(|ctl| {
+        crate::fastmult::reset_arena_peak();
+        let machine = Brownout::new(ctl.budget_bytes, ctl.allow_f32);
+        (ctl, machine)
+    });
     let mut restarts = vec![0u32; workers];
     let mut spawned_at: Vec<Instant> = Vec::with_capacity(workers);
     let mut respawn_due: Vec<Option<Instant>> = vec![None; workers];
@@ -303,7 +429,10 @@ fn supervisor_loop(
         match event_rx.recv_timeout(timeout) {
             Ok(event) => {
                 alive -= 1;
-                if event.exit != WorkerExit::Clean && !queue.is_drained() {
+                // `Superseded` slots were already replaced by the
+                // watchdog the moment they were reaped; only a panic
+                // recycle schedules a respawn here.
+                if event.exit == WorkerExit::Recycled && !queue.is_drained() {
                     // A long-healthy worker's crash is fresh news, not a
                     // crash loop.
                     if spawned_at[event.slot].elapsed() >= BACKOFF_HEALTHY_RESET {
@@ -317,6 +446,45 @@ fn supervisor_loop(
             }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break, // unreachable: ctxs hold senders
+        }
+        // Watchdog sweep: supersede slots whose batch outlived the live
+        // threshold, shedding every waiter with a typed `BatchStuck`.
+        // The sweep runs even while the queue drains (a wedged batch
+        // still owes its waiters an answer), but replacements are only
+        // spawned while there is work left to serve.
+        if let Some(hb) = &policy.heartbeats {
+            if let Some(threshold) = integrity::watchdog_threshold(
+                policy.watchdog_factor,
+                metrics.batch_exec_p99_s(),
+                policy.request_timeout,
+            ) {
+                for slot in hb.reap(threshold, &metrics) {
+                    if queue.is_drained() {
+                        continue;
+                    }
+                    metrics.on_worker_restart();
+                    spawn_worker(ctxs[slot].clone());
+                    spawned_at[slot] = Instant::now();
+                    alive += 1;
+                }
+            }
+        }
+        // Brownout tick: feed the hysteresis machine one footprint
+        // observation and publish any transition to the workers and the
+        // metrics gauge. Engagements count Normal → Tiled only; a later
+        // escalation to f32 deepens the same brownout.
+        if let Some((ctl, machine)) = &mut brownout {
+            let footprint = crate::fastmult::arena_peak_bytes();
+            crate::fastmult::reset_arena_peak();
+            if let Some(level) = machine.observe(footprint) {
+                ctl.set_level(level);
+                metrics.set_brownout_state(level as u64);
+                match level {
+                    BrownoutLevel::Normal => metrics.on_brownout_recovered(),
+                    BrownoutLevel::Tiled => metrics.on_brownout_engaged(),
+                    BrownoutLevel::TiledF32 => {}
+                }
+            }
         }
         if queue.is_drained() {
             // Shutdown: pending respawns are moot, nothing to execute.
@@ -379,21 +547,24 @@ fn worker_slice(ctx: &WorkerCtx) -> WorkerStep {
             PopWait::Idle => return WorkerStep::Yield,
             PopWait::Drained => return WorkerStep::Exit(WorkerExit::Clean),
         };
-        if let Some(exit) = run_batch(batch, &ctx.registry, &ctx.metrics) {
+        if let Some(exit) = run_batch(batch, ctx) {
             return WorkerStep::Exit(exit);
         }
     }
 }
 
 /// Execute one batch, delivering a terminal outcome to every item.
-/// `Some(exit)` means the slot must stop (recycle after a batch panic);
-/// `None` means it can pull the next batch.
-fn run_batch(batch: Batch, registry: &Registry, metrics: &Metrics) -> Option<WorkerExit> {
+/// `Some(exit)` means the slot must stop (recycle after a batch panic,
+/// or retire quietly after the watchdog superseded it); `None` means it
+/// can pull the next batch.
+fn run_batch(batch: Batch, ctx: &WorkerCtx) -> Option<WorkerExit> {
+    let metrics = &ctx.metrics;
+    let policy = &ctx.policy;
     let items = batcher::shed_expired(batch.items, metrics, Instant::now());
     if items.is_empty() {
         return None;
     }
-    let model = match registry.get(&batch.model) {
+    let model = match ctx.registry.get(&batch.model) {
         Ok(m) => m,
         Err(e) => {
             for item in items {
@@ -403,6 +574,25 @@ fn run_batch(batch: Batch, registry: &Registry, metrics: &Metrics) -> Option<Wor
             return None;
         }
     };
+    // Brownout detour: under memory pressure, native models run per item
+    // through shrunken-tile-budget schedule walks (narrowed to f32 at
+    // the deepest stage) instead of the fused full-budget path.
+    if let Some(ctl) = &policy.brownout {
+        let level = ctl.level();
+        if level != BrownoutLevel::Normal {
+            if let Some((net, precision)) = model.as_net() {
+                let net = net.clone();
+                return run_brownout_batch(&batch.model, &net, precision, level, ctl, model, items, ctx);
+            }
+        }
+    }
+    // Heartbeat stamp: registers the waiters so the watchdog can shed
+    // them if this batch wedges. One stamp per batch, only when the
+    // watchdog knob is on.
+    let heartbeat = policy
+        .heartbeats
+        .as_ref()
+        .map(|hb| (hb, hb.start(ctx.slot, &items)));
     // One plan, many inputs: the whole batch is packed into contiguous
     // `[B, n^k]` BatchTensors inside the model's batched path and each
     // layer schedule is walked once per worker span — per-item errors
@@ -414,10 +604,20 @@ fn run_batch(batch: Batch, registry: &Registry, metrics: &Metrics) -> Option<Wor
         let inputs: Vec<&Tensor> = items.iter().map(|it| &it.input).collect();
         catch_unwind(AssertUnwindSafe(|| model.infer_batch(&inputs)))
     };
+    if let Some((hb, epoch)) = heartbeat {
+        if !hb.finish(ctx.slot, epoch) {
+            // The watchdog superseded this incarnation mid-batch: the
+            // waiters already received `BatchStuck` and a replacement
+            // slot task is running — deliver nothing, count nothing,
+            // retire quietly.
+            return Some(WorkerExit::Superseded);
+        }
+    }
     match outcome {
         Ok(results) => {
             metrics.on_batch_executed(t0.elapsed());
             for (item, result) in items.into_iter().zip(results) {
+                let result = policy.screen(&batch.model, model, &item.input, result, metrics, true);
                 let ok = result.is_ok();
                 metrics.on_complete(item.enqueued.elapsed(), ok);
                 let _ = item.respond.send(result);
@@ -439,12 +639,72 @@ fn run_batch(batch: Batch, registry: &Registry, metrics: &Metrics) -> Option<Wor
                     Ok(r) => r,
                     Err(payload) => Err(Error::WorkerPanic(panic_message(&*payload))),
                 };
+                let result = policy.screen(&batch.model, model, &item.input, result, metrics, true);
                 let ok = result.is_ok();
                 metrics.on_complete(item.enqueued.elapsed(), ok);
                 let _ = item.respond.send(result);
             }
             Some(WorkerExit::Recycled)
         }
+    }
+}
+
+/// Browned-out execution of one batch: per-item forwards through the
+/// route's shrunken-tile-budget schedules (compiled once, cached on the
+/// [`BrownoutCtl`]), with inputs narrowed to `f32` at the deepest level.
+/// Responses are still canary-screened, but skip shadow verification —
+/// the brownout deliberately changes the numerics, and reference
+/// forwards would deepen the memory pressure that engaged it.
+#[allow(clippy::too_many_arguments)]
+fn run_brownout_batch(
+    route: &str,
+    net: &Arc<EquivariantNet>,
+    precision: Precision,
+    level: BrownoutLevel,
+    ctl: &Arc<BrownoutCtl>,
+    model: &ModelKind,
+    items: Vec<WorkItem>,
+    ctx: &WorkerCtx,
+) -> Option<WorkerExit> {
+    let metrics = &ctx.metrics;
+    let schedules = match ctl.schedules_for(route, net) {
+        Ok(s) => s,
+        Err(e) => {
+            let msg = format!("brownout schedule compile failed: {e}");
+            for item in items {
+                metrics.on_complete(item.enqueued.elapsed(), false);
+                let _ = item.respond.send(Err(Error::Coordinator(msg.clone())));
+            }
+            return None;
+        }
+    };
+    let t0 = Instant::now();
+    let mut panicked = false;
+    for item in items {
+        if item.expired(Instant::now()) {
+            metrics.on_shed_expired();
+            let _ = item.respond.send(Err(Error::DeadlineExceeded));
+            continue;
+        }
+        let result = match catch_unwind(AssertUnwindSafe(|| {
+            integrity::brownout_infer(net, precision, level, &schedules, &item.input)
+        })) {
+            Ok(r) => r,
+            Err(payload) => {
+                panicked = true;
+                Err(Error::WorkerPanic(panic_message(&*payload)))
+            }
+        };
+        let result = ctx.policy.screen(route, model, &item.input, result, metrics, false);
+        let ok = result.is_ok();
+        metrics.on_complete(item.enqueued.elapsed(), ok);
+        let _ = item.respond.send(result);
+    }
+    metrics.on_batch_executed(t0.elapsed());
+    if panicked {
+        Some(WorkerExit::Recycled)
+    } else {
+        None
     }
 }
 
@@ -560,9 +820,13 @@ impl CoordinatorHandle {
         self.metrics.snapshot()
     }
 
-    /// Graceful shutdown: close the queue and join all threads.
+    /// Graceful shutdown: close the queue and join all threads. Any
+    /// chaos plans wrapped around registered models are cancelled first,
+    /// so an in-progress injected stall cuts its sleep short instead of
+    /// delaying the join.
     pub fn shutdown(mut self) {
         self.sender.take(); // close the channel -> batcher + workers exit
+        self.registry.cancel_chaos();
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -572,6 +836,7 @@ impl CoordinatorHandle {
 impl Drop for CoordinatorHandle {
     fn drop(&mut self) {
         self.sender.take();
+        self.registry.cancel_chaos();
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -718,6 +983,32 @@ mod tests {
         coord.register("m", ModelKind::net(test_net(&mut rng)));
         let handle = coord.start();
         handle.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn defense_knobs_default_off() {
+        let mut rng = Rng::new(506);
+        let net = test_net(&mut rng);
+        let mut coord = Coordinator::new(ServerConfig::default());
+        coord.register("m", ModelKind::net(net));
+        let handle = coord.start();
+        for _ in 0..5 {
+            handle.infer("m", Tensor::random(3, 2, &mut rng)).unwrap();
+        }
+        let snap = handle.metrics();
+        assert_eq!(snap.completed, 5);
+        // No knob set: no canary trips, no sampling, no watchdog, and
+        // the brownout gauge stays at its normal level.
+        assert_eq!(snap.numeric_faults, 0);
+        assert_eq!(snap.shadow_verifications, 0);
+        assert_eq!(snap.integrity_mismatches, 0);
+        assert_eq!(snap.watchdog_kills, 0);
+        assert_eq!(snap.schedule_recompiles, 0);
+        assert_eq!(snap.degraded_models, 0);
+        assert_eq!(snap.brownout_state, 0);
+        assert_eq!(snap.brownout_state_name(), "normal");
+        assert_eq!(snap.brownout_engagements, 0);
+        handle.shutdown();
     }
 
     #[test]

@@ -78,6 +78,16 @@ pub enum Error {
     /// client still gets a typed terminal outcome instead of a hang.
     WorkerPanic(String),
 
+    /// A numeric integrity check failed: a non-finite value escaped a
+    /// kernel (the `numeric_guard` canary), the training loss went NaN, or
+    /// a sampled shadow verification disagreed with the per-term reference
+    /// path.
+    NumericFault(String),
+
+    /// The hung-batch watchdog shed this request: the batch it rode in
+    /// exceeded the watchdog threshold and its worker slot was respawned.
+    BatchStuck,
+
     /// PJRT runtime errors.
     Runtime(String),
 }
@@ -109,6 +119,8 @@ impl fmt::Display for Error {
                 write!(f, "overloaded: model '{model}' is at its inflight limit")
             }
             Error::WorkerPanic(msg) => write!(f, "worker panicked during execution: {msg}"),
+            Error::NumericFault(msg) => write!(f, "numeric fault: {msg}"),
+            Error::BatchStuck => write!(f, "batch stuck: shed by the hung-batch watchdog"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
         }
     }
@@ -183,6 +195,14 @@ mod tests {
         assert_eq!(
             Error::WorkerPanic("boom".into()).to_string(),
             "worker panicked during execution: boom"
+        );
+        assert_eq!(
+            Error::NumericFault("non-finite output".into()).to_string(),
+            "numeric fault: non-finite output"
+        );
+        assert_eq!(
+            Error::BatchStuck.to_string(),
+            "batch stuck: shed by the hung-batch watchdog"
         );
         assert_eq!(
             Error::DimensionConstraint("x".into()).to_string(),

@@ -120,6 +120,10 @@ pub struct PlanCache {
     capacity: AtomicUsize,
     plan_entries: AtomicUsize,
     schedule_entries: AtomicUsize,
+    /// Compiled schedules dropped by integrity quarantine (shadow
+    /// verification caught a mismatch and evicted the suspect entries so
+    /// the next lookup recompiles from scratch).
+    schedule_quarantines: AtomicU64,
 }
 
 /// Point-in-time counters for one [`PlanCache`], aggregated over shards.
@@ -145,6 +149,9 @@ pub struct CacheStats {
     pub schedule_evictions: u64,
     /// Compiled schedules currently held.
     pub schedule_entries: usize,
+    /// Compiled schedules evicted by integrity quarantine
+    /// ([`PlanCache::quarantine_schedule`]), counted per entry dropped.
+    pub schedule_quarantines: u64,
     /// Process-wide folded scatter passes executed (one per active
     /// `(node, pattern)` class per schedule walk — see
     /// [`crate::fastmult::exec_stats`]). Per forward this equals the
@@ -226,6 +233,7 @@ impl PlanCache {
             capacity: AtomicUsize::new(capacity),
             plan_entries: AtomicUsize::new(0),
             schedule_entries: AtomicUsize::new(0),
+            schedule_quarantines: AtomicU64::new(0),
         }
     }
 
@@ -390,13 +398,40 @@ impl PlanCache {
         transposed: bool,
         plans: &[Arc<MultPlan>],
     ) -> Result<Arc<LayerSchedule>> {
+        self.get_or_build_schedule_budgeted(
+            group,
+            n,
+            k,
+            l,
+            transposed,
+            plans,
+            super::schedule::resolve_tile_budget(),
+        )
+    }
+
+    /// [`PlanCache::get_or_build_schedule`] with an explicit tile budget
+    /// instead of the process-level one. Schedules compiled under different
+    /// budgets coexist in the cache (the budget is part of the key) — the
+    /// memory-pressure brownout uses this to keep shrunken-budget schedules
+    /// alongside the normal ones without evicting either.
+    #[allow(clippy::too_many_arguments)]
+    pub fn get_or_build_schedule_budgeted(
+        &self,
+        group: Group,
+        n: usize,
+        k: usize,
+        l: usize,
+        transposed: bool,
+        plans: &[Arc<MultPlan>],
+        tile_budget: usize,
+    ) -> Result<Arc<LayerSchedule>> {
         let key = ScheduleKey {
             group,
             n,
             k,
             l,
             transposed,
-            tile_budget: super::schedule::resolve_tile_budget(),
+            tile_budget,
         };
         let shard = self.shard_for(&key);
         {
@@ -442,6 +477,48 @@ impl PlanCache {
         Ok(result)
     }
 
+    /// Evict every compiled schedule for a layer shape, across **all** tile
+    /// budgets (the budget is part of the hashed key, so this scans every
+    /// shard). Called by the integrity verifier when a shadow comparison
+    /// catches a mismatch: the suspect entries are dropped so the next
+    /// lookup recompiles from the pre-factored plans, and the count of
+    /// dropped entries is returned (also accumulated into
+    /// [`CacheStats::schedule_quarantines`]).
+    pub fn quarantine_schedule(
+        &self,
+        group: Group,
+        n: usize,
+        k: usize,
+        l: usize,
+        transposed: bool,
+    ) -> usize {
+        let mut dropped = 0usize;
+        for shard in &self.shards {
+            let mut map = lock_recover(&shard.schedules);
+            let doomed: Vec<ScheduleKey> = map
+                .keys()
+                .filter(|key| {
+                    key.group == group
+                        && key.n == n
+                        && key.k == k
+                        && key.l == l
+                        && key.transposed == transposed
+                })
+                .copied()
+                .collect();
+            for key in doomed {
+                map.remove(&key);
+                dropped += 1;
+            }
+        }
+        if dropped > 0 {
+            self.schedule_entries.fetch_sub(dropped, Ordering::Relaxed);
+            self.schedule_quarantines
+                .fetch_add(dropped as u64, Ordering::Relaxed);
+        }
+        dropped
+    }
+
     /// Drop every cached plan and schedule (counters are preserved).
     pub fn clear(&self) {
         for shard in &self.shards {
@@ -467,6 +544,7 @@ impl PlanCache {
             schedule_misses: 0,
             schedule_evictions: 0,
             schedule_entries: 0,
+            schedule_quarantines: self.schedule_quarantines.load(Ordering::Relaxed),
             scatter_passes: 0,
             executed_nodes: 0,
             bytes_moved: 0,
@@ -713,6 +791,42 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.entries, 4);
         assert_eq!(s.hits + s.misses, 80);
+    }
+
+    #[test]
+    fn quarantine_evicts_all_budgets_for_a_shape() {
+        use crate::layer::spanning_plans;
+        let cache = PlanCache::with_capacity(64);
+        let plans = spanning_plans(Group::Orthogonal, 3, 1, 1).unwrap();
+        // Same shape under two explicit budgets: two distinct entries.
+        cache
+            .get_or_build_schedule_budgeted(Group::Orthogonal, 3, 1, 1, false, &plans, 0)
+            .unwrap();
+        cache
+            .get_or_build_schedule_budgeted(Group::Orthogonal, 3, 1, 1, false, &plans, 4096)
+            .unwrap();
+        // A different shape must survive the quarantine.
+        let other = spanning_plans(Group::Orthogonal, 3, 2, 2).unwrap();
+        cache
+            .get_or_build_schedule_budgeted(Group::Orthogonal, 3, 2, 2, false, &other, 0)
+            .unwrap();
+        assert_eq!(cache.stats().schedule_entries, 3);
+        let dropped = cache.quarantine_schedule(Group::Orthogonal, 3, 1, 1, false);
+        assert_eq!(dropped, 2, "both budgets of the shape must go");
+        let s = cache.stats();
+        assert_eq!(s.schedule_entries, 1);
+        assert_eq!(s.schedule_quarantines, 2);
+        // Re-requesting the quarantined shape recompiles (a miss).
+        let misses_before = cache.stats().schedule_misses;
+        cache
+            .get_or_build_schedule_budgeted(Group::Orthogonal, 3, 1, 1, false, &plans, 0)
+            .unwrap();
+        assert_eq!(cache.stats().schedule_misses, misses_before + 1);
+        // Quarantining a shape with no entries is a no-op.
+        assert_eq!(
+            cache.quarantine_schedule(Group::Symmetric, 9, 1, 1, false),
+            0
+        );
     }
 
     #[test]

@@ -24,7 +24,8 @@ pub mod sp;
 pub use cache::{CacheStats, PlanCache, ShardStats};
 pub use plan::{factor_runs, MultPlan};
 pub use schedule::{
-    arena_peak_bytes, arena_stats, clear_arena_pool, exec_stats, ops_shared_total,
+    arena_in_use_bytes, arena_peak_bytes, arena_stats, clear_arena_pool, exec_stats,
+    ops_shared_total,
     planner_totals, reset_arena_peak, resolve_tile_budget, set_tile_budget, ArenaStats,
     ExecStats, LayerSchedule, OpCost, PlannerTotals, PooledArena, PooledArenaOf, ScheduleStats,
     ScratchArena, ScratchArenaOf,

@@ -180,6 +180,13 @@ pub fn arena_peak_bytes() -> usize {
     ARENA_PEAK_BYTES.load(Ordering::Relaxed)
 }
 
+/// Bytes currently checked out of the arenas across the process — the live
+/// resident figure the memory-pressure brownout compares against its
+/// configured budget (`peak_bytes` is the high-water twin).
+pub fn arena_in_use_bytes() -> usize {
+    ARENA_IN_USE_BYTES.load(Ordering::Relaxed)
+}
+
 /// Scope the peak-bytes watermark: reset it to the bytes currently checked
 /// out, so the next [`arena_peak_bytes`] reading reflects only activity
 /// after this call. Benches bracket one warm execute with this pair to

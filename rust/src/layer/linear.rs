@@ -219,14 +219,28 @@ impl EquivariantLinear {
     /// Generic over the scalar type: the `f64` instantiation is the
     /// historical path bit for bit, `f32` halves the bytes the walk moves.
     pub(crate) fn forward_one<S: Scalar>(&self, v: &TensorOf<S>) -> Result<TensorOf<S>> {
+        self.forward_one_with(&self.schedule, v)
+    }
+
+    /// [`EquivariantLinear::forward_one`] through an explicit schedule
+    /// instead of the layer's own `Arc` (which is fixed at construction).
+    /// The schedule must have been compiled for this layer's shape — the
+    /// integrity verifier uses this to re-verify freshly recompiled
+    /// schedules after a quarantine, and the brownout uses it to route a
+    /// layer through shrunken-tile-budget schedules without touching the
+    /// layer.
+    pub(crate) fn forward_one_with<S: Scalar>(
+        &self,
+        schedule: &LayerSchedule,
+        v: &TensorOf<S>,
+    ) -> Result<TensorOf<S>> {
         // Check the input up front (not per-term): a zero-initialised layer
         // skips every term, and the batched path must agree with this one
         // on malformed input.
         self.check_input(v)?;
         let mut out = TensorOf::zeros(self.n, self.l);
         let mut arena = PooledArenaOf::<S>::get();
-        self.schedule
-            .execute_tiled_parallel(v, &self.coeffs, &mut out, &mut arena)?;
+        schedule.execute_tiled_parallel(v, &self.coeffs, &mut out, &mut arena)?;
         self.accumulate_bias(&mut out)?;
         Ok(out)
     }

@@ -205,7 +205,26 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         println!("loaded checkpoint from {path}");
     }
     let mut coord = Coordinator::new(cfg.server.clone());
+    coord.set_brownout_f32(cfg.model.brownout_f32);
     println!("serving precision: {}", cfg.model.precision);
+    println!(
+        "integrity: numeric guard {}  shadow verification {}‰  watchdog factor {}  \
+         arena budget {}",
+        if cfg.server.numeric_guard { "on" } else { "off" },
+        cfg.server.verify_per_mille,
+        if cfg.server.watchdog_factor > 0.0 {
+            format!("{:.1}x p99", cfg.server.watchdog_factor)
+        } else {
+            "off".to_string()
+        },
+        match cfg.server.arena_budget_bytes {
+            Some(b) => format!(
+                "{b} bytes (brownout may narrow to f32: {})",
+                if cfg.model.brownout_f32 { "yes" } else { "no" }
+            ),
+            None => "off".to_string(),
+        }
+    );
     // Fix the tiled-walk cache budget before any schedule compiles: the
     // plan cache keys schedules by the resolved budget, so setting it
     // here means every route serves tiling plans sized to it.
@@ -270,6 +289,21 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         "robustness: shed {} expired / {} admission  worker restarts {}  \
          batch panics caught {}",
         snap.shed_expired, snap.shed_admission, snap.worker_restarts, snap.batch_panics
+    );
+    println!(
+        "integrity: numeric faults {}  watchdog kills {}  shadow verifications {} \
+         ({} mismatches, {} quarantines, {} recompiles)  degraded models {}  \
+         brownout {} ({} engagements / {} recoveries)",
+        snap.numeric_faults,
+        snap.watchdog_kills,
+        snap.shadow_verifications,
+        snap.integrity_mismatches,
+        snap.schedule_quarantines,
+        snap.schedule_recompiles,
+        snap.degraded_models,
+        snap.brownout_state_name(),
+        snap.brownout_engagements,
+        snap.brownout_recoveries
     );
     println!(
         "batch execs {}  mean batch exec {:.1} us  plan cache {:.1}% hit ({} hits / {} misses)",

@@ -246,6 +246,48 @@ impl EquivariantNet {
         Ok(x)
     }
 
+    /// Reference forward: every layer runs its per-term path
+    /// ([`EquivariantLinear::forward_per_term`], one `MultPlan` apply per
+    /// spanning term — no schedule fusion, no cached `LayerSchedule`).
+    /// This is the integrity oracle the shadow verifier compares the fused
+    /// serving path against: it matches [`EquivariantNet::apply`] to
+    /// rounding error (folded classes reassociate additions), and it
+    /// shares *nothing* with the compiled-schedule machinery a corruption
+    /// could hide in.
+    pub fn forward_reference<S: Scalar>(&self, v: &TensorOf<S>) -> Result<TensorOf<S>> {
+        let mut x = v.clone();
+        for (layer, act) in self.layers.iter().zip(&self.activations) {
+            x = act.forward(&layer.forward_per_term(&x)?);
+        }
+        Ok(x)
+    }
+
+    /// Forward through an explicit per-layer schedule list instead of each
+    /// layer's own `Arc<LayerSchedule>` (fixed at construction). `schedules`
+    /// must hold one forward schedule per layer, compiled for that layer's
+    /// shape. Used by the integrity verifier to re-verify freshly
+    /// recompiled schedules after a quarantine and by the brownout to walk
+    /// shrunken-tile-budget schedules.
+    pub fn forward_with_schedules<S: Scalar>(
+        &self,
+        schedules: &[std::sync::Arc<crate::fastmult::LayerSchedule>],
+        v: &TensorOf<S>,
+    ) -> Result<TensorOf<S>> {
+        if schedules.len() != self.layers.len() {
+            return Err(Error::ShapeMismatch {
+                expected: format!("{} schedules (one per layer)", self.layers.len()),
+                got: format!("{}", schedules.len()),
+            });
+        }
+        let mut x = v.clone();
+        for ((layer, act), schedule) in
+            self.layers.iter().zip(&self.activations).zip(schedules)
+        {
+            x = act.forward(&layer.forward_one_with(schedule, &x)?);
+        }
+        Ok(x)
+    }
+
     /// Batched forward over borrowed inputs: the batch is split into one
     /// contiguous span per worker thread; each span is packed once at the
     /// entry, walks **one schedule per layer**, keeps activations batched
@@ -879,6 +921,53 @@ mod tests {
             "f32 net diverges by {}",
             got.cast::<f64>().max_abs_diff(&want)
         );
+    }
+
+    #[test]
+    fn reference_and_explicit_schedule_forwards_match_apply() {
+        use crate::fastmult::{LayerSchedule, PlanCache};
+        use crate::layer::spanning_plans;
+        use std::sync::Arc;
+        let mut rng = Rng::new(212);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 2, 1],
+            Activation::Relu,
+            Init::ScaledNormal,
+            &mut rng,
+        )
+        .unwrap();
+        let v = Tensor::random(3, 2, &mut rng);
+        let want = net.apply(&v).unwrap().into_single().unwrap();
+        // The per-term oracle agrees to rounding error.
+        let got = net.forward_reference(&v).unwrap();
+        assert!(got.allclose(&want, 1e-12), "diff {}", got.max_abs_diff(&want));
+        // Freshly compiled schedules (same shapes, explicit budget) agree
+        // to rounding error too.
+        let schedules: Vec<Arc<LayerSchedule>> = net
+            .layers
+            .iter()
+            .map(|layer| {
+                let plans =
+                    spanning_plans(net.group(), net.n(), layer.k(), layer.l()).unwrap();
+                PlanCache::global()
+                    .get_or_build_schedule_budgeted(
+                        net.group(),
+                        net.n(),
+                        layer.k(),
+                        layer.l(),
+                        false,
+                        &plans,
+                        0,
+                    )
+                    .unwrap()
+            })
+            .collect();
+        let got = net.forward_with_schedules(&schedules, &v).unwrap();
+        assert!(got.allclose(&want, 1e-12), "diff {}", got.max_abs_diff(&want));
+        // Wrong schedule count is rejected.
+        assert!(net.forward_with_schedules(&schedules[..1], &v).is_err());
     }
 
     #[test]

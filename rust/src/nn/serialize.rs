@@ -1,18 +1,44 @@
 //! Checkpoint format: save/load trained coefficient vectors.
 //!
 //! Plain-text, versioned, self-describing — one header line with the
-//! architecture, one line of whitespace-separated parameters. The
-//! architecture in the file must match the network it is loaded into
-//! (diagram coefficients are only meaningful for the same spanning set).
+//! architecture, one line of whitespace-separated parameters, and (since
+//! v2) one checksum trailer line. The architecture in the file must
+//! match the network it is loaded into (diagram coefficients are only
+//! meaningful for the same spanning set).
+//!
+//! Writes are **crash-safe**: the checkpoint is written to a sibling
+//! temp file, fsynced, and atomically renamed into place, so a crash
+//! mid-save can never leave a half-written file under the checkpoint's
+//! name. Loads verify an FNV-1a checksum over the header and parameter
+//! lines, turning silent truncation or bit-rot into a typed error
+//! instead of a quietly wrong model. v1 checkpoints (no checksum line)
+//! still load.
 
 use crate::error::{Error, Result};
 use crate::nn::model::EquivariantNet;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-const MAGIC: &str = "equidiag-checkpoint-v1";
+const MAGIC: &str = "equidiag-checkpoint-v2";
+/// The pre-checksum format; still accepted by [`load`].
+const MAGIC_V1: &str = "equidiag-checkpoint-v1";
+/// Prefix of the v2 trailer line: `checksum fnv1a <16 hex digits>`.
+const CHECKSUM_TAG: &str = "checksum fnv1a";
 
-/// Serialise the architecture signature (group, n, per-layer shapes).
-fn signature(net: &EquivariantNet) -> String {
+/// FNV-1a 64-bit over the header and parameter lines exactly as written.
+/// Not cryptographic — it guards against truncation and bit-rot, not
+/// tampering.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325_u64;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Serialise the architecture signature (group, n, per-layer shapes)
+/// under the given format magic.
+fn signature_with(net: &EquivariantNet, magic: &str) -> String {
     let shapes: Vec<String> = net
         .layers
         .iter()
@@ -20,23 +46,55 @@ fn signature(net: &EquivariantNet) -> String {
         .collect();
     format!(
         "{} group={} n={} layers={}",
-        MAGIC,
+        magic,
         net.group().name(),
         net.n(),
         shapes.join(",")
     )
 }
 
-/// Save the network's parameters to `path`.
+/// The current (v2) signature for `net`.
+fn signature(net: &EquivariantNet) -> String {
+    signature_with(net, MAGIC)
+}
+
+/// Sibling temp path the save is staged through — same directory, so the
+/// final rename never crosses a filesystem boundary.
+fn staging_path(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "checkpoint".to_string());
+    path.with_file_name(format!("{name}.tmp-{}", std::process::id()))
+}
+
+/// Save the network's parameters to `path`: stage to a temp file, fsync,
+/// and atomically rename into place.
 pub fn save(net: &EquivariantNet, path: &Path) -> Result<()> {
     let params = net.params_flat();
     let body: Vec<String> = params.iter().map(|p| format!("{p:?}")).collect();
-    let text = format!("{}\n{}\n", signature(net), body.join(" "));
-    std::fs::write(path, text)
-        .map_err(|e| Error::Config(format!("write checkpoint {}: {e}", path.display())))
+    let payload = format!("{}\n{}\n", signature(net), body.join(" "));
+    let text = format!(
+        "{payload}{CHECKSUM_TAG} {:016x}\n",
+        fnv1a(payload.as_bytes())
+    );
+    let staging = staging_path(path);
+    let staged = (|| -> std::io::Result<()> {
+        use std::io::Write as _;
+        let mut f = std::fs::File::create(&staging)?;
+        f.write_all(text.as_bytes())?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&staging, path)
+    })();
+    staged.map_err(|e| {
+        std::fs::remove_file(&staging).ok();
+        Error::Config(format!("write checkpoint {}: {e}", path.display()))
+    })
 }
 
-/// Load parameters from `path` into a network with a matching architecture.
+/// Load parameters from `path` into a network with a matching
+/// architecture. v2 files are checksum-verified; v1 files load as-is.
 pub fn load(net: &mut EquivariantNet, path: &Path) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| Error::Config(format!("read checkpoint {}: {e}", path.display())))?;
@@ -45,14 +103,30 @@ pub fn load(net: &mut EquivariantNet, path: &Path) -> Result<()> {
         .next()
         .ok_or_else(|| Error::Config("empty checkpoint".into()))?;
     let expect = signature(net);
-    if header != expect {
+    let verify_checksum = if header == expect {
+        true
+    } else if header == signature_with(net, MAGIC_V1) {
+        false
+    } else {
         return Err(Error::Config(format!(
             "checkpoint architecture mismatch:\n  file: {header}\n  net:  {expect}"
         )));
-    }
+    };
     let body = lines
         .next()
         .ok_or_else(|| Error::Config("checkpoint missing parameter line".into()))?;
+    if verify_checksum {
+        let trailer = lines.next().ok_or_else(|| {
+            Error::Config("checkpoint truncated: missing checksum line".into())
+        })?;
+        let payload = format!("{header}\n{body}\n");
+        let want = format!("{CHECKSUM_TAG} {:016x}", fnv1a(payload.as_bytes()));
+        if trailer != want {
+            return Err(Error::Config(
+                "checkpoint checksum mismatch (truncated or corrupted file)".into(),
+            ));
+        }
+    }
     let params: std::result::Result<Vec<f64>, _> =
         body.split_whitespace().map(str::parse::<f64>).collect();
     let params = params.map_err(|e| Error::Config(format!("bad parameter token: {e}")))?;
@@ -99,6 +173,8 @@ mod tests {
         .unwrap();
         let path = tmpfile("roundtrip.ckpt");
         save(&net, &path).unwrap();
+        // The staging temp file never survives a successful save.
+        assert!(!staging_path(&path).exists());
         let mut other = EquivariantNet::new(
             Group::Symmetric,
             3,
@@ -113,6 +189,9 @@ mod tests {
         let a = net.forward(&v).unwrap();
         let b = other.forward(&v).unwrap();
         assert!(a.allclose(&b, 0.0), "bit-exact round trip expected");
+        // Saving over an existing checkpoint replaces it atomically.
+        save(&other, &path).unwrap();
+        load(&mut other, &path).unwrap();
         std::fs::remove_file(&path).ok();
     }
 
@@ -172,6 +251,90 @@ mod tests {
         assert!(load(&mut net, &path).is_err());
         std::fs::write(&path, format!("{}\n1 2 nope\n", super::signature(&net))).unwrap();
         assert!(load(&mut net, &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_checkpoints_still_load() {
+        let mut rng = Rng::new(604);
+        let net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 1],
+            Activation::Tanh,
+            Init::Normal(0.3),
+            &mut rng,
+        )
+        .unwrap();
+        let path = tmpfile("v1.ckpt");
+        // Reconstruct the pre-checksum v1 layout by hand: v1 header,
+        // parameter line, no trailer.
+        save(&net, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        let header = lines.next().unwrap();
+        let body = lines.next().unwrap();
+        let v1_header = header.replacen(MAGIC, MAGIC_V1, 1);
+        assert_ne!(v1_header, header);
+        std::fs::write(&path, format!("{v1_header}\n{body}\n")).unwrap();
+        let mut other = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 1],
+            Activation::Tanh,
+            Init::Zeros,
+            &mut rng,
+        )
+        .unwrap();
+        load(&mut other, &path).unwrap();
+        let v = Tensor::random(3, 2, &mut rng);
+        let a = net.forward(&v).unwrap();
+        let b = other.forward(&v).unwrap();
+        assert!(a.allclose(&b, 0.0), "v1 load must be bit-exact too");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncation_and_corruption_caught_by_checksum() {
+        let mut rng = Rng::new(605);
+        let mut net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 1],
+            Activation::Relu,
+            Init::Normal(0.2),
+            &mut rng,
+        )
+        .unwrap();
+        let path = tmpfile("damaged.ckpt");
+        save(&net, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // A clean file loads.
+        load(&mut net, &path).unwrap();
+        // Dropping the checksum line reads as truncation.
+        let mut lines = text.lines();
+        let header = lines.next().unwrap();
+        let body = lines.next().unwrap();
+        std::fs::write(&path, format!("{header}\n{body}\n")).unwrap();
+        let err = load(&mut net, &path).unwrap_err().to_string();
+        assert!(err.contains("missing checksum"), "got: {err}");
+        // Cutting the parameter line in half trips the checksum.
+        let trailer = text.lines().nth(2).unwrap();
+        let half_body = &body[..body.len() / 2];
+        std::fs::write(&path, format!("{header}\n{half_body}\n{trailer}\n")).unwrap();
+        let err = load(&mut net, &path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "got: {err}");
+        // Flipping a single digit of the parameter line trips it too,
+        // even though the damaged line still parses as floats.
+        let digit = body.chars().position(|c| c.is_ascii_digit()).unwrap();
+        let old = body.as_bytes()[digit];
+        let new = if old == b'9' { b'1' } else { old + 1 };
+        let mut bytes = body.as_bytes().to_vec();
+        bytes[digit] = new;
+        let damaged = String::from_utf8(bytes).unwrap();
+        std::fs::write(&path, format!("{header}\n{damaged}\n{trailer}\n")).unwrap();
+        let err = load(&mut net, &path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "got: {err}");
         std::fs::remove_file(&path).ok();
     }
 }

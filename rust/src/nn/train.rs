@@ -113,6 +113,16 @@ pub fn train(
         let (mut grads, _) = net.backward_batched(&trace, &gout)?;
         grads.scale(1.0 / cfg.batch_size as f64);
         batch_loss /= cfg.batch_size as f64;
+        // A non-finite minibatch loss means the run has already diverged
+        // (exploding step size, poisoned data): abort with a typed fault
+        // before the update writes NaN into every parameter — the net
+        // still holds the last finite iterate and the report shows the
+        // curve up to the blow-up.
+        if !batch_loss.is_finite() {
+            return Err(Error::NumericFault(format!(
+                "training diverged: non-finite minibatch loss at step {step}"
+            )));
+        }
 
         let mut params = net.params_flat();
         let flat = net.grads_flat(&grads);
@@ -235,6 +245,49 @@ mod tests {
             ..TrainConfig::default()
         };
         assert!(train(&mut net, &data, &mut opt, &cfg).is_err());
+    }
+
+    #[test]
+    fn exploding_lr_aborts_with_numeric_fault() {
+        let mut rng = Rng::new(304);
+        let mut net = EquivariantNet::new(
+            Group::Symmetric,
+            3,
+            &[2, 0],
+            Activation::Identity,
+            Init::Normal(1.0),
+            &mut rng,
+        )
+        .unwrap();
+        let data: Vec<(Tensor, Tensor)> = (0..16)
+            .map(|_| {
+                (
+                    Tensor::random(3, 2, &mut rng),
+                    Tensor::from_vec(3, 0, vec![1.0]).unwrap(),
+                )
+            })
+            .collect();
+        // An absurd step size drives the quadratic loss to overflow in a
+        // handful of steps; the loop must abort with the typed fault
+        // rather than finish with a NaN curve and NaN parameters.
+        let mut opt = crate::nn::optim::Sgd::new(1e12, 0.0);
+        let err = train(
+            &mut net,
+            &data,
+            &mut opt,
+            &TrainConfig {
+                steps: 200,
+                batch_size: 4,
+                ..TrainConfig::default()
+            },
+        )
+        .unwrap_err();
+        assert!(
+            matches!(err, Error::NumericFault(_)),
+            "expected NumericFault, got {err:?}"
+        );
+        // The abort fired before the poisoned update was applied.
+        assert!(net.params_flat().iter().all(|p| p.is_finite()));
     }
 
     #[test]

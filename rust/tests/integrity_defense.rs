@@ -1,0 +1,277 @@
+//! Silent-failure defense integration suite
+//! (`docs/serving_robustness.md`, "Integrity, watchdog & brownout"):
+//! seeded bit-flips are caught by sampled shadow verification and the
+//! suspect schedules quarantined + recompiled; the numeric canary turns a
+//! NaN answer into a typed fault while its batch-mates survive; the
+//! hung-batch watchdog frees a wedged slot (waiters resolve with
+//! [`Error::BatchStuck`], the slot respawns); and the memory-pressure
+//! brownout engages and recovers deterministically under a tiny arena
+//! budget. Run by name in CI (`cargo test --test integrity_defense`).
+
+use equidiag::config::ServerConfig;
+use equidiag::coordinator::{ChaosPlan, Coordinator, CoordinatorHandle, MetricsSnapshot, ModelKind};
+use equidiag::error::Error;
+use equidiag::fastmult::Group;
+use equidiag::layer::Init;
+use equidiag::nn::{Activation, EquivariantNet};
+use equidiag::tensor::{Precision, Tensor};
+use equidiag::util::Rng;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// The defenses poke process-global state (the plan cache's quarantine
+/// counters, arena watermarks, the executor); serialise every test in
+/// this binary so each one's metric deltas are attributable.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn test_net(rng: &mut Rng, act: Activation) -> EquivariantNet {
+    EquivariantNet::new(Group::Symmetric, 4, &[2, 2], act, Init::ScaledNormal, rng).unwrap()
+}
+
+/// Poll the coordinator's metrics until `pred` holds or `timeout`
+/// passes (shadow verification and the supervisor sweeps are
+/// asynchronous); returns the last snapshot either way.
+fn wait_for(
+    handle: &CoordinatorHandle,
+    timeout: Duration,
+    pred: impl Fn(&MetricsSnapshot) -> bool,
+) -> MetricsSnapshot {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let snap = handle.metrics();
+        if pred(&snap) || Instant::now() >= deadline {
+            return snap;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Shadow verification on clean traffic never false-positives — at
+/// either serving precision — and on fully bit-flipped traffic catches
+/// every corrupted response, quarantining and recompiling the route's
+/// schedules and flagging the model degraded.
+#[test]
+fn bit_flips_caught_clean_traffic_untouched() {
+    let _g = lock();
+    let mut rng = Rng::new(911);
+    // Clean phase: every response is verified, none may mismatch.
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_window: Duration::from_micros(100),
+        queue_capacity: 64,
+        verify_per_mille: 1000,
+        ..ServerConfig::default()
+    });
+    coord.register("clean64", ModelKind::net(test_net(&mut rng, Activation::Relu)));
+    coord.register(
+        "clean32",
+        ModelKind::net_with_precision(test_net(&mut rng, Activation::Relu), Precision::F32),
+    );
+    let handle = coord.start();
+    for _ in 0..10 {
+        handle.infer("clean64", Tensor::random(4, 2, &mut rng)).unwrap();
+        handle.infer("clean32", Tensor::random(4, 2, &mut rng)).unwrap();
+    }
+    let snap = wait_for(&handle, Duration::from_secs(30), |s| {
+        s.shadow_verifications >= 20
+    });
+    assert_eq!(snap.shadow_verifications, 20, "every response sampled");
+    assert_eq!(snap.integrity_mismatches, 0, "clean traffic false positive");
+    assert_eq!(snap.degraded_models, 0);
+    handle.shutdown();
+
+    // Corrupt phase: the chaos wrapper silently flips one output element
+    // of every call; the serving path still answers Ok, so only the
+    // shadow oracle can catch it.
+    let plan = Arc::new(ChaosPlan::new(11).with_bit_flips(1000));
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_window: Duration::from_micros(100),
+        queue_capacity: 64,
+        verify_per_mille: 1000,
+        ..ServerConfig::default()
+    });
+    coord.register(
+        "corrupt",
+        ModelKind::chaos(ModelKind::net(test_net(&mut rng, Activation::Relu)), plan.clone()),
+    );
+    let handle = coord.start();
+    const N: u64 = 10;
+    for _ in 0..N {
+        // Silent corruption: the request still resolves Ok.
+        handle.infer("corrupt", Tensor::random(4, 2, &mut rng)).unwrap();
+    }
+    let snap = wait_for(&handle, Duration::from_secs(30), |s| {
+        s.shadow_verifications >= N
+    });
+    let (flips, _) = plan.injected_silent();
+    assert_eq!(flips, N, "one flip per single-item batch");
+    assert_eq!(snap.shadow_verifications, N);
+    assert_eq!(snap.integrity_mismatches, N, "every flip detected");
+    assert!(snap.schedule_quarantines >= 1, "suspect schedules evicted");
+    assert!(
+        snap.schedule_recompiles >= 2,
+        "both layers recompiled after quarantine"
+    );
+    assert_eq!(snap.degraded_models, 1);
+    handle.shutdown();
+}
+
+/// The numeric canary converts a NaN answer into a typed
+/// [`Error::NumericFault`] at the output boundary while the finite
+/// batch-mates still get real responses.
+#[test]
+fn numeric_canary_trips_and_batch_mates_survive() {
+    let _g = lock();
+    let mut rng = Rng::new(912);
+    // Identity activations so the poisoned input's NaN propagates to the
+    // output instead of being absorbed by a max().
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 1,
+        max_batch: 8,
+        batch_window: Duration::from_millis(5),
+        queue_capacity: 64,
+        numeric_guard: true,
+        ..ServerConfig::default()
+    });
+    coord.register("m", ModelKind::net(test_net(&mut rng, Activation::Identity)));
+    let handle = coord.start();
+    let mut poisoned = Tensor::random(4, 2, &mut rng);
+    poisoned.data[0] = f64::NAN;
+    let rx_bad = handle.submit("m", poisoned).unwrap();
+    let healthy: Vec<_> = (0..3)
+        .map(|_| handle.submit("m", Tensor::random(4, 2, &mut rng)).unwrap())
+        .collect();
+    match rx_bad.recv_timeout(Duration::from_secs(5)).unwrap() {
+        Err(Error::NumericFault(msg)) => assert!(msg.contains("'m'"), "{msg}"),
+        other => panic!("expected NumericFault, got {other:?}"),
+    }
+    for rx in healthy {
+        let out = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+    let snap = handle.metrics();
+    assert_eq!(snap.numeric_faults, 1);
+    assert_eq!(snap.completed, 3);
+    assert_eq!(snap.failed, 1);
+    handle.shutdown();
+}
+
+/// A wedged batch (30s injected stall, far past the watchdog threshold)
+/// is reaped: its waiter resolves with the typed [`Error::BatchStuck`]
+/// instead of hanging, the slot is respawned, and the pool keeps serving
+/// a healthy route. Shutdown stays prompt because the chaos sleep is
+/// cancelled and sliced.
+#[test]
+fn watchdog_frees_wedged_slot_and_pool_keeps_serving() {
+    let _g = lock();
+    let mut rng = Rng::new(913);
+    let plan = Arc::new(ChaosPlan::new(13).with_long_stalls(1000, Duration::from_secs(30)));
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 2,
+        max_batch: 1,
+        batch_window: Duration::from_micros(0),
+        queue_capacity: 64,
+        request_timeout: Some(Duration::from_millis(150)),
+        watchdog_factor: 4.0,
+        ..ServerConfig::default()
+    });
+    coord.register(
+        "wedged",
+        ModelKind::chaos(ModelKind::net(test_net(&mut rng, Activation::Relu)), plan),
+    );
+    coord.register("ok", ModelKind::net(test_net(&mut rng, Activation::Relu)));
+    let handle = coord.start();
+    // No batch has executed yet, so the watchdog threshold floors at the
+    // 150ms request timeout — far under the 30s stall.
+    let rx = handle
+        .submit("wedged", Tensor::random(4, 2, &mut rng))
+        .unwrap();
+    match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+        Err(Error::BatchStuck) => {}
+        other => panic!("expected BatchStuck, got {other:?}"),
+    }
+    let snap = wait_for(&handle, Duration::from_secs(5), |s| {
+        s.watchdog_kills >= 1 && s.worker_restarts >= 1
+    });
+    assert_eq!(snap.watchdog_kills, 1);
+    assert!(
+        snap.worker_restarts >= 1,
+        "superseded slot must be respawned"
+    );
+    // The respawned pool still serves the healthy route while the zombie
+    // sleeps out its stall.
+    for _ in 0..5 {
+        handle.infer("ok", Tensor::random(4, 2, &mut rng)).unwrap();
+    }
+    assert_eq!(handle.metrics().completed, 5);
+    let t0 = Instant::now();
+    handle.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "shutdown must cancel the injected stall, not wait it out"
+    );
+}
+
+/// Under a 1-byte arena budget, sustained traffic engages the brownout
+/// (every supervisor tick observes over-budget activity), served answers
+/// stay correct to f32 rounding, and stopping the traffic recovers the
+/// machine to Normal after its sustained under-budget window.
+#[test]
+fn brownout_engages_and_recovers_under_tiny_budget() {
+    let _g = lock();
+    let mut rng = Rng::new(914);
+    let net = test_net(&mut rng, Activation::Relu);
+    let reference = net.clone();
+    let mut coord = Coordinator::new(ServerConfig {
+        workers: 1,
+        max_batch: 4,
+        batch_window: Duration::from_micros(100),
+        queue_capacity: 64,
+        arena_budget_bytes: Some(1),
+        ..ServerConfig::default()
+    });
+    coord.register("m", ModelKind::net(net));
+    let handle = coord.start();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut engaged = None;
+    while Instant::now() < deadline {
+        let v = Tensor::random(4, 2, &mut rng);
+        let got = handle.infer("m", v.clone()).unwrap();
+        let want = reference.forward(&v).unwrap();
+        // Browned-out answers are f32-rounded at worst.
+        assert!(
+            got.allclose(&want, 1e-3),
+            "served answer drifted: {}",
+            got.max_abs_diff(&want)
+        );
+        let snap = handle.metrics();
+        if snap.brownout_state >= 1 {
+            engaged = Some(snap);
+            break;
+        }
+    }
+    let snap = engaged.expect("brownout never engaged under sustained over-budget traffic");
+    assert!(snap.brownout_engagements >= 1);
+    assert!(snap.brownout_state >= 1);
+    assert_ne!(snap.brownout_state_name(), "normal");
+    // Traffic stopped: the arena footprint falls under budget and the
+    // hysteresis recovers to Normal after its sustained window.
+    let snap = wait_for(&handle, Duration::from_secs(30), |s| {
+        s.brownout_state == 0 && s.brownout_recoveries >= 1
+    });
+    assert_eq!(snap.brownout_state, 0);
+    assert_eq!(snap.brownout_state_name(), "normal");
+    assert!(snap.brownout_recoveries >= 1);
+    // Full-fidelity serving resumes.
+    let v = Tensor::random(4, 2, &mut rng);
+    let got = handle.infer("m", v.clone()).unwrap();
+    assert!(got.allclose(&reference.forward(&v).unwrap(), 1e-12));
+    handle.shutdown();
+}
